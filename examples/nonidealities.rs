@@ -1,0 +1,72 @@
+//! Non-ideality robustness sweep (paper Figs 7 and 8).
+//!
+//! Sweeps stuck-at-fault rates, sense-amp Vref variability and input
+//! encoding noise over the paper's three study datasets and prints the
+//! accuracy-loss surfaces. Use `--full` for the paper's complete grid.
+//!
+//! ```sh
+//! cargo run --release --example nonidealities [-- --full]
+//! ```
+
+use dt2cam::report::figures::{fig7, fig8, render_fig7, render_fig8, NonidealGrid};
+use dt2cam::report::workload::Workload;
+use dt2cam::tcam::params::DeviceParams;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let p = DeviceParams::default();
+    let grid = if full {
+        NonidealGrid::default()
+    } else {
+        NonidealGrid {
+            sigma_in: vec![0.0, 0.005, 0.02, 0.1],
+            sigma_sa: vec![0.0, 0.03, 0.05, 0.1],
+            saf_pct: vec![0.0, 0.1, 0.5],
+            tile_sizes: vec![16, 64, 128],
+            trials: 2,
+            max_inputs: 256,
+        }
+    };
+
+    let mut workloads = Vec::new();
+    for name in ["diabetes", "covid", "cancer"] {
+        eprintln!("preparing {name}...");
+        workloads.push(Workload::prepare(name)?);
+    }
+
+    println!("== Fig 7: accuracy loss under non-idealities ==");
+    for w in &workloads {
+        let pts = fig7(w, &p, &grid);
+        print!("{}", render_fig7(&pts));
+
+        // Paper's qualitative findings, verified per dataset:
+        let clean_ok = pts
+            .iter()
+            .filter(|q| q.saf_pct == 0.0 && q.sigma_sa == 0.0 && q.sigma_in == 0.0)
+            .all(|q| q.acc_loss_pp.abs() < 1e-9);
+        println!(
+            "  {}: ideal==golden {} | SAF dominates {}",
+            w.dataset.name,
+            if clean_ok { "yes" } else { "NO" },
+            {
+                let worst_saf = pts
+                    .iter()
+                    .filter(|q| q.saf_pct > 0.0)
+                    .map(|q| q.acc_loss_pp)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let worst_rest = pts
+                    .iter()
+                    .filter(|q| q.saf_pct == 0.0)
+                    .map(|q| q.acc_loss_pp)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if worst_saf >= worst_rest { "yes" } else { "no (this seed)" }
+            }
+        );
+    }
+
+    println!("\n== Fig 8: accuracy loss vs #tiles ==");
+    let wrefs: Vec<&Workload> = workloads.iter().collect();
+    let pts = fig8(&wrefs, &p, &[0.0, 0.1, 0.5], grid.trials);
+    print!("{}", render_fig8(&pts));
+    Ok(())
+}

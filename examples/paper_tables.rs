@@ -1,0 +1,47 @@
+//! Regenerate every paper table (II, IV, V, VI) plus the Fig 9 scatter in
+//! one run. Use `--full` to include the Credit dataset in Table V
+//! (~4 s extra CART training).
+//!
+//! ```sh
+//! cargo run --release --example paper_tables [-- --full]
+//! ```
+
+use dt2cam::report::figures::{fig9, render_fig9};
+use dt2cam::report::tables::{
+    render_table2, render_table4, render_table5, render_table6, table2, table4, table5,
+    table6,
+};
+use dt2cam::report::workload::Workload;
+use dt2cam::tcam::params::DeviceParams;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let p = DeviceParams::default();
+
+    print!("{}", render_table2(&table2()?));
+    println!();
+    print!("{}", render_table4(&table4(&p)));
+    println!("  [paper: 154/128, 86/64, 53/32, 33/32, 21/16]\n");
+
+    let mut names = vec![
+        "iris", "diabetes", "haberman", "car", "cancer", "titanic", "covid",
+    ];
+    if full {
+        names.push("credit");
+    }
+    let mut workloads = Vec::new();
+    for n in &names {
+        eprintln!("preparing {n}...");
+        workloads.push(Workload::prepare(n)?);
+    }
+    let wrefs: Vec<&Workload> = workloads.iter().collect();
+    print!("{}", render_table5(&table5(&wrefs)));
+    println!("  [paper: iris 9x12 | diabetes 120x123 | haberman 93x71 | car 76x20");
+    println!("          cancer 23x52 | credit 8475x3580 | titanic 191x150 | covid 441x146]\n");
+
+    print!("{}", render_table6(&table6(&p)));
+    println!("  [paper DT2CAM_128: 58.8e6 dec/s, 0.098 nJ/dec, 0.07 mm2, FOM 1.22e-19]\n");
+
+    print!("{}", render_fig9(&fig9(&p)));
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT lowering: JAX/Pallas match graph -> HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator loads
+the HLO text through ``xla::HloModuleProto::from_text_file`` and never
+imports Python again.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Artifacts (per tile size S and batch B, plus stacked column-division
+variants for the hot path):
+
+    artifacts/tcam_match_s{S}_b{B}.hlo.txt
+    artifacts/tcam_division_s{S}_b{B}_t{T}.hlo.txt
+    artifacts/manifest.json
+
+Graph signature (lowered with return_tuple=True; the Rust side unwraps the
+tuple): (Q, W, vref, t_opt_over_c) -> (vml, match).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Tile geometries: the paper evaluates S in {16, 32, 64, 128} (Table IV).
+TILE_SIZES = (16, 32, 64, 128)
+# Batch widths: 1 = latency mode, 32 = default serving batch,
+# 256 = throughput mode (§Perf).
+BATCH_SIZES = (1, 32, 256)
+# Stacked row-wise tile counts for single-call column divisions. Covers the
+# paper's Table V grids up to the traffic config (16 row tiles at S=128);
+# larger grids fall back to per-tile calls.
+DIVISION_TILES = (2, 4, 8, 16)
+DIVISION_BATCHES = (32, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tile(s: int, b: int, impl: str = "pallas") -> str:
+    """Lower one tile-match graph.
+
+    impl="pallas": the L1 kernel (interpret=True — the TPU-shaped
+    BlockSpec program, emulated on CPU as a loop nest).
+    impl="jnp": the pure-jnp twin (identical numerics, pytest-enforced)
+    which XLA:CPU fuses into a single matmul+exp — the fast CPU serving
+    variant (EXPERIMENTS.md §Perf).
+    """
+    fn = model.tile_match if impl == "pallas" else model.tile_match_ref
+    args = model.example_args(s, b)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_division(s: int, b: int, t: int, impl: str = "pallas") -> str:
+    fn = (
+        model.division_match
+        if impl == "pallas"
+        else model.division_match_ref
+    )
+    args = model.example_args(s, b, tiles=t)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only lower the s16/b32 smoke geometry (CI fast path)",
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    entries = []
+
+    tile_geoms = [(16, 32, "pallas"), (16, 32, "jnp")] if ns.quick else [
+        (s, b, impl)
+        for s in TILE_SIZES
+        for b in BATCH_SIZES
+        for impl in ("pallas", "jnp")
+    ]
+    for s, b, impl in tile_geoms:
+        name = f"tcam_match_{impl}_s{s}_b{b}"
+        path = os.path.join(ns.out_dir, f"{name}.hlo.txt")
+        text = lower_tile(s, b, impl)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": "tile",
+                "impl": impl,
+                "file": os.path.basename(path),
+                "s": s,
+                "b": b,
+                "tiles": 1,
+                "inputs": [
+                    {"name": "q", "shape": [b, 2 * s]},
+                    {"name": "w", "shape": [2 * s, s]},
+                    {"name": "vref", "shape": [s]},
+                    {"name": "t_opt_over_c", "shape": []},
+                ],
+                "outputs": [
+                    {"name": "vml", "shape": [b, s]},
+                    {"name": "match", "shape": [b, s]},
+                ],
+            }
+        )
+        print(f"lowered {name} ({len(text)} chars)")
+
+    div_geoms = [] if ns.quick else [
+        (s, b, t, impl)
+        for s in TILE_SIZES
+        for b in DIVISION_BATCHES
+        for t in DIVISION_TILES
+        for impl in ("pallas", "jnp")
+    ]
+    for s, b, t, impl in div_geoms:
+        name = f"tcam_division_{impl}_s{s}_b{b}_t{t}"
+        path = os.path.join(ns.out_dir, f"{name}.hlo.txt")
+        text = lower_division(s, b, t, impl)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": "division",
+                "impl": impl,
+                "file": os.path.basename(path),
+                "s": s,
+                "b": b,
+                "tiles": t,
+                "inputs": [
+                    {"name": "q", "shape": [b, 2 * s]},
+                    {"name": "w", "shape": [t, 2 * s, s]},
+                    {"name": "vref", "shape": [t, s]},
+                    {"name": "t_opt_over_c", "shape": []},
+                ],
+                "outputs": [
+                    {"name": "vml", "shape": [t, b, s]},
+                    {"name": "match", "shape": [t, b, s]},
+                ],
+            }
+        )
+        print(f"lowered {name} ({len(text)} chars)")
+
+    manifest = {
+        "format": "hlo-text",
+        "vdd": 1.0,
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} entries to {ns.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

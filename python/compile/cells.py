@@ -1,0 +1,114 @@
+"""Device physics shared by the build path and the python tests.
+
+Mirrors ``rust/src/synth/params.rs`` — Table III of the paper (16 nm
+predictive technology models) plus the derived closed forms (Eqns 6 and 8).
+The Rust side is the single source of truth at runtime; this module exists
+so the kernel tests can construct *physically well-conditioned* W matrices
+and reference voltages, and so aot.py needs no Rust toolchain.
+"""
+
+from __future__ import annotations
+
+import math
+
+# Table III (verbatim).
+R_LRS = 5.0e3  # low resistance state (ohm)
+R_HRS = 2.5e6  # high resistance state (ohm)
+R_ON = 15.0e3  # ON access transistor (ohm)
+R_OFF = 24.25e6  # OFF access transistor (ohm)
+C_IN = 50.0e-15  # ML sensing capacitance (F)
+VDD = 1.0  # supply (V)
+
+# Branch resistances seen from the match line. The query activates one
+# transistor per cell; the *inactive* branch still leaks through R_OFF.
+R_MATCH = R_HRS + R_ON  # activated branch stores HRS -> match
+R_MISMATCH = R_LRS + R_ON  # activated branch stores LRS -> mismatch
+R_INACTIVE_LRS = R_LRS + R_OFF
+R_INACTIVE_HRS = R_HRS + R_OFF
+
+G_MATCH = 1.0 / R_MATCH
+G_MISMATCH = 1.0 / R_MISMATCH
+
+
+def branch_conductances(trit: int) -> tuple[float, float]:
+    """(g_branch0, g_branch1) of a cell storing ``trit``.
+
+    Encoding of Table I: trit 0 -> {HRS, LRS}: query 0 activates branch 0
+    (HRS, match), query 1 activates branch 1 (LRS, mismatch).  trit 1 ->
+    {LRS, HRS}.  trit 2 ('x') -> {HRS, HRS} (always match).  trit 3 is the
+    *masked* don't care (OFF-OFF, dissipates nothing).
+    """
+    if trit == 0:
+        return G_MATCH, G_MISMATCH
+    if trit == 1:
+        return G_MISMATCH, G_MATCH
+    if trit == 2:
+        return G_MATCH, G_MATCH
+    if trit == 3:  # masked: both transistors OFF
+        return 1.0 / (R_HRS + R_OFF), 1.0 / (R_HRS + R_OFF)
+    raise ValueError(f"bad trit {trit}")
+
+
+def r_full_match(n_cells: int) -> float:
+    """Equivalent ML resistance when all n cells match."""
+    return R_MATCH / n_cells
+
+
+def r_one_mismatch(n_cells: int) -> float:
+    """Equivalent ML resistance with exactly one mismatching cell."""
+    g = (n_cells - 1) * G_MATCH + G_MISMATCH
+    return 1.0 / g
+
+
+def t_opt(n_cells: int) -> float:
+    """Eqn 8: optimal ML sensing time for an n-cell row."""
+    rfm = r_full_match(n_cells)
+    r1 = r_one_mismatch(n_cells)
+    return C_IN * math.log(rfm / r1) * (rfm * r1) / (rfm - r1)
+
+
+def dynamic_range(n_cells: int) -> float:
+    """Eqn 6: D_cap at T_opt for an n-cell row."""
+    gamma = r_one_mismatch(n_cells) / r_full_match(n_cells)
+    return VDD * gamma ** (gamma / (1.0 - gamma)) * (1.0 - gamma)
+
+
+def v_at(n_cells_r: float, t: float) -> float:
+    """ML voltage after discharging for t through equivalent resistance."""
+    return VDD * math.exp(-t / (n_cells_r * C_IN))
+
+
+def v_ref(n_cells: int) -> float:
+    """Midpoint SA reference between V_fm(T_opt) and V_1mm(T_opt)."""
+    t = t_opt(n_cells)
+    vfm = v_at(r_full_match(n_cells), t)
+    v1 = v_at(r_one_mismatch(n_cells), t)
+    return 0.5 * (vfm + v1)
+
+
+def w_from_trits(stored) -> "list[list[float]]":
+    """Build the [2S, S] branch-conductance matrix from int trits [S, N].
+
+    ``stored[r][j]`` is the trit of row r, encoded bit j; returns W with
+    W[2j + b][r] = conductance of branch b of cell (r, j).
+    """
+    rows = len(stored)
+    nbits = len(stored[0]) if rows else 0
+    w = [[0.0] * rows for _ in range(2 * nbits)]
+    for r in range(rows):
+        for j in range(nbits):
+            g0, g1 = branch_conductances(stored[r][j])
+            w[2 * j][r] = g0
+            w[2 * j + 1][r] = g1
+    return w
+
+
+def q_from_bits(bits) -> "list[list[float]]":
+    """Build the [B, 2N] one-hot activation matrix from query bits [B, N]."""
+    out = []
+    for row in bits:
+        act = [0.0] * (2 * len(row))
+        for j, b in enumerate(row):
+            act[2 * j + int(b)] = 1.0
+        out.append(act)
+    return out

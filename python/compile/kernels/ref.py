@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the L1 ``tcam_match`` Pallas kernel.
+
+This is the correctness anchor of the whole stack: pytest asserts the
+Pallas kernel against this oracle (python/tests/test_kernel.py), the Rust
+native simulator is asserted against the PJRT-executed artifact (rust
+tests), and the artifact is lowered from the very function the oracle
+checks — so L1 (kernel), L2 (graph) and L3 (coordinator) all agree on one
+set of numerics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+VDD = 1.0
+
+
+def tcam_match_ref(q, w, vref, t_opt_over_c):
+    """Reference semantics of one tile match.
+
+    G = Q @ W;  V_ml = VDD * exp(-(T_opt/C_in) * G);  match = V_ml > V_ref.
+    """
+    g = jnp.dot(q.astype(jnp.float32), w.astype(jnp.float32))
+    vml = VDD * jnp.exp(-jnp.asarray(t_opt_over_c, jnp.float32) * g)
+    match = (vml > vref.reshape(1, -1).astype(jnp.float32)).astype(jnp.float32)
+    return vml, match
+
+
+def digital_match_ref(stored, query):
+    """Digital (ideal) ternary match — ground truth for encoding tests.
+
+    stored: int8[R, S_bits] with 0, 1, 2 (= don't care 'x')
+    query:  int8[B, S_bits] with 0, 1
+    Returns bool[B, R]: row matches iff every stored bit is 'x' or equals
+    the query bit.
+    """
+    st = stored[None, :, :]  # [1, R, N]
+    qu = query[:, None, :]  # [B, 1, N]
+    bit_ok = (st == 2) | (st == qu)
+    return bit_ok.all(axis=-1)

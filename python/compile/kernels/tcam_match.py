@@ -1,0 +1,131 @@
+"""L1 — Pallas kernel for the DT2CAM ternary-match hot spot.
+
+The paper's hot loop is the analog TCAM search: every encoded query is
+compared against every row of an S x S resistive TCAM tile at once; the
+match line (ML) of row ``r`` discharges through the parallel conductance of
+its *activated* cell branches, and a sense amplifier compares the ML voltage
+at the optimal sensing time ``T_opt`` against a per-row reference.
+
+Hardware adaptation (GPU/analog -> TPU, see DESIGN.md §2): a 2T2R cell
+(row r, encoded bit j) exposes two resistive branches; query bit b in {0,1}
+activates branch b.  The per-row active conductance is therefore an MXU
+matmul:
+
+    G[q, r] = sum_j  Q[q, 2j + b_qj] * W[2j + b_qj, r]      (= Q @ W)
+
+followed by the RC-discharge epilogue
+
+    V_ml  = VDD * exp(-(T_opt / C_in) * G)
+    match = V_ml > V_ref[r]
+
+Q is the one-hot branch-activation matrix of the batch (B x 2S), W the
+branch-conductance matrix of the tile (2S x S).  Every hardware
+non-ideality is an input transformation: stuck-at faults rewrite W, sense-
+amp variability rewrites V_ref, input noise rewrites Q.  The kernel never
+changes — exactly like the physical array.
+
+The kernel is BlockSpec-tiled so that one (bm x bk) Q block and one
+(bk x bn) W block are VMEM-resident per grid step; on a real TPU the
+product maps onto the MXU.  We lower with ``interpret=True`` — the CPU
+PJRT client cannot execute Mosaic custom-calls (see /opt/xla-example
+README) — and estimate MXU utilization / VMEM footprint analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Supply voltage is a device constant (Table III); T_opt/C_in is a runtime
+# input because the optimal sensing time depends on the row composition of
+# the column division being searched (masked cells shift R_fm/R_1mm).
+VDD = 1.0
+
+
+def _match_kernel(q_ref, w_ref, vref_ref, toc_ref, vml_ref, match_ref):
+    """One grid step: full-K matmul block + analog epilogue.
+
+    q_ref:    (bm, K)  one-hot branch activations
+    w_ref:    (K, bn)  branch conductances (S)
+    vref_ref: (1, bn)  per-row SA reference voltages (V)
+    toc_ref:  (1, 1)   T_opt / C_in (V/A·s·F⁻¹ -> effectively ohm⁻¹ scale)
+    vml_ref:  (bm, bn) out: ML voltage at T_opt
+    match_ref:(bm, bn) out: 1.0 where V_ml > V_ref else 0.0
+    """
+    g = jnp.dot(q_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    vml = VDD * jnp.exp(-toc_ref[0, 0] * g)
+    vml_ref[...] = vml
+    match_ref[...] = (vml > vref_ref[...]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def tcam_match(q, w, vref, t_opt_over_c, *, block_m=32, block_n=128):
+    """Batched ternary match of encoded queries against one TCAM tile.
+
+    Args:
+      q:    f32[B, 2S] one-hot branch activation of each query lane.
+      w:    f32[2S, S] branch conductances of the stored tile.
+      vref: f32[S]     per-row sense-amplifier reference voltage.
+      t_opt_over_c: f32[] scalar, T_opt / C_in.
+      block_m/block_n: VMEM block shape (K = 2S is kept whole: K <= 256
+        for every paper geometry, so a K-loop would only add grid overhead).
+
+    Returns:
+      (vml, match): f32[B, S] ML voltages and 0/1 match flags.
+    """
+    b, k = q.shape
+    k2, s = w.shape
+    assert k == k2, f"Q/W contraction mismatch: {k} vs {k2}"
+    assert vref.shape == (s,), f"vref must be [{s}], got {vref.shape}"
+
+    bm = min(block_m, b)
+    bn = min(block_n, s)
+    grid = (pl.cdiv(b, bm), pl.cdiv(s, bn))
+
+    vref2 = vref.reshape(1, s).astype(jnp.float32)
+    toc2 = jnp.asarray(t_opt_over_c, jnp.float32).reshape(1, 1)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((b, s), jnp.float32),
+        jax.ShapeDtypeStruct((b, s), jnp.float32),
+    ]
+    vml, match = pl.pallas_call(
+        _match_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # CPU-PJRT target; Mosaic lowering is TPU-only
+    )(q.astype(jnp.float32), w.astype(jnp.float32), vref2, toc2)
+    return vml, match
+
+
+def vmem_bytes(b: int, s: int, block_m: int = 32, block_n: int = 128) -> int:
+    """Analytic VMEM footprint of one grid step (f32), for DESIGN §Perf.
+
+    Q block + W block + vref block + two output blocks, double-buffered
+    inputs (x2) as the Mosaic pipeline would allocate them.
+    """
+    k = 2 * s
+    bm = min(block_m, b)
+    bn = min(block_n, s)
+    in_bytes = (bm * k + k * bn + bn + 1) * 4 * 2  # double buffering
+    out_bytes = 2 * bm * bn * 4
+    return in_bytes + out_bytes
+
+
+def mxu_flops(b: int, s: int) -> int:
+    """MAC count of one tile match (for the utilization estimate)."""
+    return 2 * b * (2 * s) * s

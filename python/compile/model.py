@@ -1,0 +1,75 @@
+"""L2 — the DT2CAM match compute graph (build-time JAX).
+
+The request-path unit of work is *one TCAM tile searched by one batch of
+encoded queries*.  The Rust coordinator owns the paper's system behaviour —
+column-wise sequential staging with selective precharge, row-wise tile
+parallelism, rogue-row gating, class readout — and calls this graph once
+per (tile, batch) through PJRT.
+
+``tile_match`` is the function that is AOT-lowered (aot.py); it calls the
+L1 Pallas kernel so the kernel lowers into the same HLO module.  The
+conductance matrix W, reference-voltage vector and T_opt/C_in scalar are
+runtime inputs: stuck-at faults, SA variability and masked cells are input
+rewrites, never recompiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as kref
+from compile.kernels import tcam_match as kmatch
+
+
+def tile_match(q, w, vref, t_opt_over_c):
+    """One tile search: (vml, match) = f(Q, W, vref, T_opt/C_in).
+
+    Shapes: q f32[B, 2S], w f32[2S, S], vref f32[S], t_opt_over_c f32[].
+    Returns (vml f32[B,S], match f32[B,S]).
+    """
+    return kmatch.tcam_match(q, w, vref, t_opt_over_c)
+
+
+def tile_match_ref(q, w, vref, t_opt_over_c):
+    """Pure-jnp twin of ``tile_match`` (oracle, never lowered)."""
+    return kref.tcam_match_ref(q, w, vref, t_opt_over_c)
+
+
+def division_match(q, w_stack, vref_stack, t_opt_over_c):
+    """One *column division* search: all row-wise tiles at once.
+
+    The paper lets row-wise tiles operate in parallel (Fig 4).  Stacking
+    them into one graph lets the Rust side issue a single PJRT execute per
+    column division instead of N_rwd — the §Perf batching optimization.
+
+    Shapes: q f32[B, 2S], w_stack f32[T, 2S, S], vref_stack f32[T, S].
+    Returns (vml f32[T,B,S], match f32[T,B,S]).
+    """
+    def one(w, vref):
+        return kmatch.tcam_match(q, w, vref, t_opt_over_c)
+
+    return jax.vmap(one)(w_stack, vref_stack)
+
+
+def division_match_ref(q, w_stack, vref_stack, t_opt_over_c):
+    """Pure-jnp twin of ``division_match`` (fast CPU artifact variant)."""
+
+    def one(w, vref):
+        return kref.tcam_match_ref(q, w, vref, t_opt_over_c)
+
+    return jax.vmap(one)(w_stack, vref_stack)
+
+
+def example_args(s: int, b: int, tiles: int | None = None):
+    """ShapeDtypeStructs used by aot.py to lower each geometry."""
+    f32 = jnp.float32
+    q = jax.ShapeDtypeStruct((b, 2 * s), f32)
+    toc = jax.ShapeDtypeStruct((), f32)
+    if tiles is None:
+        w = jax.ShapeDtypeStruct((2 * s, s), f32)
+        vref = jax.ShapeDtypeStruct((s,), f32)
+    else:
+        w = jax.ShapeDtypeStruct((tiles, 2 * s, s), f32)
+        vref = jax.ShapeDtypeStruct((tiles, s), f32)
+    return q, w, vref, toc

@@ -1,0 +1,82 @@
+"""AOT path: lowering produces loadable HLO text with the right signature.
+
+The Rust integration tests re-load these artifacts through PJRT and assert
+numerics against the native simulator; here we validate the python half —
+the text parses back into an XlaComputation and executes on the local CPU
+client with oracle-identical results.
+"""
+
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import aot, cells, model
+from compile.kernels import ref
+
+
+_CLIENT = None
+
+
+def roundtrip_execute(hlo_text, args):
+    """Parse HLO text back and execute it on the CPU client.
+
+    Mirrors what the Rust runtime does with the same bytes
+    (HloModuleProto::from_text_file -> compile -> execute); in this jaxlib
+    the executable path goes HLO text -> HloModule -> XlaComputation ->
+    MLIR -> compile_and_load.
+    """
+    global _CLIENT
+    if _CLIENT is None:
+        _CLIENT = xc.make_cpu_client()
+    client = _CLIENT
+    mod = xc._xla.hlo_module_from_text(hlo_text)
+    comp = xc.XlaComputation(mod.as_serialized_hlo_module_proto())
+    mlir_txt = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    devs = xc.DeviceList(tuple(client.local_devices()))
+    exe = client.compile_and_load(mlir_txt, devs)
+    bufs = [client.buffer_from_pyval(a) for a in args]
+    out = exe.execute(bufs)
+    return [np.asarray(o) for o in out]
+
+
+class TestTileArtifact:
+    def test_hlo_text_structure(self):
+        text = aot.lower_tile(16, 8)
+        assert text.startswith("HloModule")
+        assert "f32[8,32]" in text  # Q
+        assert "f32[32,16]" in text  # W
+
+    def test_roundtrip_numerics(self):
+        s, b = 16, 8
+        text = aot.lower_tile(s, b)
+        rng = np.random.default_rng(0)
+        q = (rng.random((b, 2 * s)) < 0.5).astype(np.float32)
+        w = (rng.random((2 * s, s)) * 5e-5).astype(np.float32)
+        vref = np.full(s, cells.v_ref(s), np.float32)
+        toc = np.float32(cells.t_opt(s) / cells.C_IN)
+
+        got = roundtrip_execute(text, [q, w, vref, toc])
+        want_vml, want_m = ref.tcam_match_ref(q, w, vref, toc)
+        np.testing.assert_allclose(got[0], np.asarray(want_vml), rtol=1e-6)
+        np.testing.assert_array_equal(got[1], np.asarray(want_m))
+
+    def test_division_roundtrip_numerics(self):
+        s, b, t = 16, 8, 3
+        text = aot.lower_division(s, b, t)
+        rng = np.random.default_rng(1)
+        q = (rng.random((b, 2 * s)) < 0.5).astype(np.float32)
+        w = (rng.random((t, 2 * s, s)) * 5e-5).astype(np.float32)
+        vref = rng.uniform(0.1, 0.9, (t, s)).astype(np.float32)
+        toc = np.float32(1.4e4)
+
+        got = roundtrip_execute(text, [q, w, vref, toc])
+        want_vml, want_m = model.division_match(q, w, vref, toc)
+        np.testing.assert_allclose(got[0], np.asarray(want_vml), rtol=1e-6)
+        np.testing.assert_array_equal(got[1], np.asarray(want_m))
+
+
+class TestManifestGeometries:
+    def test_declared_geometries_are_consistent(self):
+        assert set(aot.TILE_SIZES) == {16, 32, 64, 128}
+        assert 1 in aot.BATCH_SIZES and 32 in aot.BATCH_SIZES
+        for t in aot.DIVISION_TILES:
+            assert t >= 2

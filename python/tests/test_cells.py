@@ -1,0 +1,119 @@
+"""Device-physics helpers (cells.py) — the python mirror of
+rust/src/tcam/params.rs. These constants and closed forms must agree with
+the Rust side; the anchored values here are asserted against the same
+numbers the Rust unit tests pin down.
+"""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import cells
+
+
+class TestTableIIIConstants:
+    def test_verbatim_values(self):
+        assert cells.R_LRS == 5.0e3
+        assert cells.R_HRS == 2.5e6
+        assert cells.R_ON == 15.0e3
+        assert cells.R_OFF == 24.25e6
+        assert cells.C_IN == 50.0e-15
+        assert cells.VDD == 1.0
+
+    def test_branch_resistances(self):
+        assert cells.R_MATCH == 2.515e6
+        assert cells.R_MISMATCH == 20.0e3
+
+
+class TestClosedForms:
+    @given(st.integers(min_value=2, max_value=512))
+    @settings(max_examples=50, deadline=None)
+    def test_dynamic_range_in_unit_interval(self, n):
+        d = cells.dynamic_range(n)
+        assert 0.0 < d < 1.0
+
+    def test_dynamic_range_monotone_decreasing(self):
+        prev = 1.0
+        for n in (4, 8, 16, 32, 64, 128, 256):
+            d = cells.dynamic_range(n)
+            assert d < prev
+            prev = d
+
+    def test_table4_anchor_values(self):
+        # Same anchors the Rust tests use (paper Table IV ±15%).
+        for d_limit, paper_max in [(0.2, 154), (0.3, 86), (0.6, 21)]:
+            n = 2
+            while cells.dynamic_range(n + 1) >= d_limit:
+                n += 1
+            assert abs(n - paper_max) / paper_max < 0.15, (d_limit, n)
+
+    def test_t_opt_at_128_matches_rust_anchor(self):
+        t = cells.t_opt(128)
+        assert 0.6e-9 < t < 0.8e-9
+
+    @given(st.integers(min_value=2, max_value=256))
+    @settings(max_examples=30, deadline=None)
+    def test_vref_separates(self, n):
+        t = cells.t_opt(n)
+        vfm = cells.v_at(cells.r_full_match(n), t)
+        v1 = cells.v_at(cells.r_one_mismatch(n), t)
+        vref = cells.v_ref(n)
+        assert v1 < vref < vfm
+        assert math.isclose(vfm - v1, cells.dynamic_range(n), rel_tol=1e-9)
+
+
+class TestMatrixBuilders:
+    @given(
+        st.integers(min_value=1, max_value=12),
+        st.integers(min_value=1, max_value=24),
+        st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_w_shape_and_values(self, rows, nbits, seed):
+        rng = np.random.default_rng(seed)
+        stored = rng.integers(0, 4, (rows, nbits))  # incl masked trit 3
+        w = np.asarray(cells.w_from_trits(stored.tolist()))
+        assert w.shape == (2 * nbits, rows)
+        # Every conductance is one of the four physical values.
+        allowed = {
+            cells.G_MATCH,
+            cells.G_MISMATCH,
+            1.0 / (cells.R_HRS + cells.R_OFF),
+        }
+        for v in np.unique(w):
+            assert any(math.isclose(v, a, rel_tol=1e-12) for a in allowed), v
+
+    @given(
+        st.integers(min_value=1, max_value=8),
+        st.integers(min_value=1, max_value=16),
+        st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_q_one_hot(self, b, nbits, seed):
+        rng = np.random.default_rng(seed)
+        bits = rng.integers(0, 2, (b, nbits))
+        q = np.asarray(cells.q_from_bits(bits.tolist()))
+        assert q.shape == (b, 2 * nbits)
+        # Exactly one branch active per (lane, bit).
+        pair_sums = q.reshape(b, nbits, 2).sum(axis=-1)
+        assert (pair_sums == 1.0).all()
+        # The active branch index equals the bit value.
+        active = q.reshape(b, nbits, 2).argmax(axis=-1)
+        assert (active == bits).all()
+
+    def test_trit_semantics(self):
+        g0, g1 = cells.branch_conductances(0)
+        assert (g0, g1) == (cells.G_MATCH, cells.G_MISMATCH)
+        g0, g1 = cells.branch_conductances(1)
+        assert (g0, g1) == (cells.G_MISMATCH, cells.G_MATCH)
+        g0, g1 = cells.branch_conductances(2)
+        assert g0 == g1 == cells.G_MATCH
+        g0, g1 = cells.branch_conductances(3)
+        assert g0 == g1 < cells.G_MATCH / 10
+
+    def test_bad_trit_raises(self):
+        import pytest
+
+        with pytest.raises(ValueError):
+            cells.branch_conductances(7)

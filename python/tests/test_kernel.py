@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle (CORE signal).
+
+hypothesis sweeps shapes, block sizes and value regimes; the physics tests
+assert that the analog kernel reproduces the *digital* ternary-match
+semantics when driven with Table III conductances and the midpoint sense
+reference — i.e. the kernel is a faithful TCAM, not just a matmul.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import cells, model
+from compile.kernels import ref
+from compile.kernels.tcam_match import mxu_flops, tcam_match, vmem_bytes
+
+
+def run_both(q, w, vref, toc, **kw):
+    vml_k, m_k = tcam_match(q, w, vref, toc, **kw)
+    vml_r, m_r = ref.tcam_match_ref(q, w, vref, toc)
+    return np.asarray(vml_k), np.asarray(m_k), np.asarray(vml_r), np.asarray(m_r)
+
+
+def assert_kernel_matches_ref(q, w, vref, toc, **kw):
+    vml_k, m_k, vml_r, m_r = run_both(q, w, vref, toc, **kw)
+    np.testing.assert_allclose(vml_k, vml_r, rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(m_k, m_r)
+
+
+@st.composite
+def match_problem(draw):
+    b = draw(st.integers(min_value=1, max_value=48))
+    s = draw(st.integers(min_value=1, max_value=96))
+    seed = draw(st.integers(min_value=0, max_value=2**32 - 1))
+    rng = np.random.default_rng(seed)
+    q = (rng.random((b, 2 * s)) < 0.5).astype(np.float32)
+    w = (rng.random((2 * s, s)) * 5e-5).astype(np.float32)
+    vref = rng.uniform(0.05, 0.95, s).astype(np.float32)
+    toc = np.float32(rng.uniform(1e3, 5e4))
+    return q, w, vref, toc
+
+
+class TestKernelVsOracle:
+    @settings(max_examples=40, deadline=None)
+    @given(match_problem())
+    def test_random_problems(self, prob):
+        q, w, vref, toc = prob
+        assert_kernel_matches_ref(q, w, vref, toc)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        match_problem(),
+        st.sampled_from([4, 8, 16, 32]),
+        st.sampled_from([8, 16, 64, 128]),
+    )
+    def test_block_shape_invariance(self, prob, bm, bn):
+        """Output must not depend on the BlockSpec tiling."""
+        q, w, vref, toc = prob
+        assert_kernel_matches_ref(q, w, vref, toc, block_m=bm, block_n=bn)
+
+    @pytest.mark.parametrize("s", [16, 32, 64, 128])
+    @pytest.mark.parametrize("b", [1, 32])
+    def test_paper_geometries(self, s, b):
+        """The exact geometries that are AOT-lowered to artifacts."""
+        rng = np.random.default_rng(s * 1000 + b)
+        q = (rng.random((b, 2 * s)) < 0.5).astype(np.float32)
+        w = (rng.random((2 * s, s)) * 5e-5).astype(np.float32)
+        vref = np.full(s, cells.v_ref(s), np.float32)
+        toc = np.float32(cells.t_opt(s) / cells.C_IN)
+        assert_kernel_matches_ref(q, w, vref, toc)
+
+    def test_zero_conductance_gives_vdd(self):
+        """G = 0 (all masked / inactive lane) leaves the ML at VDD."""
+        q = np.zeros((4, 32), np.float32)
+        w = np.full((32, 16), 1e-5, np.float32)
+        vref = np.full(16, 0.5, np.float32)
+        vml, m = tcam_match(q, w, vref, np.float32(1e4))
+        np.testing.assert_allclose(np.asarray(vml), 1.0)
+        np.testing.assert_array_equal(np.asarray(m), 1.0)
+
+    def test_huge_conductance_discharges(self):
+        q = np.ones((2, 8), np.float32)
+        w = np.full((8, 4), 1e-2, np.float32)
+        vref = np.full(4, 0.01, np.float32)
+        vml, m = tcam_match(q, w, vref, np.float32(1.4e4))
+        assert np.asarray(vml).max() < 1e-6
+        np.testing.assert_array_equal(np.asarray(m), 0.0)
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(7)
+        q = (rng.random((8, 64)) < 0.5).astype(np.float32)
+        w = (rng.random((64, 32)) * 5e-5).astype(np.float32)
+        vref = np.full(32, 0.4, np.float32)
+        a = np.asarray(tcam_match(q, w, vref, np.float32(1.4e4))[0])
+        b = np.asarray(tcam_match(q, w, vref, np.float32(1.4e4))[0])
+        np.testing.assert_array_equal(a, b)
+
+    def test_non_square_batch_tail(self):
+        """B and S not multiples of the block shape (grid tail blocks)."""
+        rng = np.random.default_rng(11)
+        q = (rng.random((33, 2 * 65)) < 0.5).astype(np.float32)
+        w = (rng.random((2 * 65, 65)) * 5e-5).astype(np.float32)
+        vref = rng.uniform(0.1, 0.9, 65).astype(np.float32)
+        assert_kernel_matches_ref(q, w, vref, np.float32(1.2e4))
+
+
+class TestPhysicsFunctionalEquivalence:
+    """Analog kernel == digital ternary match under Table III params."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=24),  # rows
+        st.integers(min_value=2, max_value=64),  # encoded bits per row
+        st.integers(min_value=1, max_value=16),  # batch
+        st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_matches_digital_semantics(self, rows, nbits, b, seed):
+        rng = np.random.default_rng(seed)
+        stored = rng.integers(0, 3, (rows, nbits))  # trits 0/1/x
+        qbits = rng.integers(0, 2, (b, nbits))
+
+        w = np.asarray(cells.w_from_trits(stored.tolist()), np.float32)
+        assert w.shape == (2 * nbits, rows)
+        q = np.asarray(cells.q_from_bits(qbits.tolist()), np.float32)
+
+        toc = np.float32(cells.t_opt(nbits) / cells.C_IN)
+        vref = np.full(rows, cells.v_ref(nbits), np.float32)
+        _, m = tcam_match(q, w, vref, toc)
+
+        want = np.asarray(ref.digital_match_ref(stored, qbits)).T  # [R,B]
+        np.testing.assert_array_equal(np.asarray(m).T, want.astype(np.float32))
+
+    def test_one_mismatch_is_detected_at_every_width(self):
+        """D_cap must stay sensable for every paper row width (Table IV)."""
+        for n in (16, 32, 64, 128):
+            stored = np.zeros((2, n), dtype=int)  # row of trit-0 cells
+            q_match = np.zeros((1, n), dtype=int)
+            q_1mm = np.zeros((1, n), dtype=int)
+            q_1mm[0, 0] = 1  # exactly one mismatching bit
+            w = np.asarray(cells.w_from_trits(stored.tolist()), np.float32)
+            toc = np.float32(cells.t_opt(n) / cells.C_IN)
+            vref = np.full(2, cells.v_ref(n), np.float32)
+            _, m_ok = tcam_match(
+                np.asarray(cells.q_from_bits(q_match.tolist()), np.float32),
+                w, vref, toc)
+            _, m_bad = tcam_match(
+                np.asarray(cells.q_from_bits(q_1mm.tolist()), np.float32),
+                w, vref, toc)
+            assert np.asarray(m_ok).all(), f"full match lost at S={n}"
+            assert not np.asarray(m_bad).any(), f"1-mismatch missed at S={n}"
+
+    def test_masked_cells_do_not_flip_match(self):
+        """Trit 3 (OFF-OFF) must behave as an always-match, near-zero load."""
+        stored = [[0, 1, 3, 3], [1, 0, 3, 3]]
+        # Query 0 matches row 0 on the real bits; query 1 matches row 1.
+        # Masked positions differ from the stored pattern in both queries —
+        # they must not influence the outcome.
+        qbits = [[0, 1, 0, 1], [1, 0, 1, 0]]
+        w = np.asarray(cells.w_from_trits(stored), np.float32)
+        q = np.asarray(cells.q_from_bits(qbits), np.float32)
+        # Sense as a 2-real-cell row: masked cells barely load the ML.
+        toc = np.float32(cells.t_opt(2) / cells.C_IN)
+        vref = np.full(2, cells.v_ref(2), np.float32)
+        _, m = tcam_match(q, w, vref, toc)
+        np.testing.assert_array_equal(
+            np.asarray(m), [[1.0, 0.0], [0.0, 1.0]]
+        )
+
+
+class TestPerfModels:
+    def test_vmem_fits_16mb_for_all_geometries(self):
+        for s in (16, 32, 64, 128):
+            for b in (1, 32, 256):
+                assert vmem_bytes(b, s) < 16 * 2**20
+
+    def test_flop_count(self):
+        assert mxu_flops(32, 128) == 2 * 32 * 256 * 128
+
+    def test_t_opt_reference_values(self):
+        """Eqn 8 at S=128 ~ 0.69 ns (DESIGN §6 calibration anchor)."""
+        t = cells.t_opt(128)
+        assert 0.6e-9 < t < 0.8e-9
+        assert math.isclose(
+            cells.dynamic_range(128), 0.245, rel_tol=0.05
+        ), cells.dynamic_range(128)

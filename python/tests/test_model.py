@@ -1,0 +1,96 @@
+"""L2 graph semantics: division stacking, shape contracts, jit stability."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_tile(rng, s, b):
+    q = (rng.random((b, 2 * s)) < 0.5).astype(np.float32)
+    w = (rng.random((2 * s, s)) * 5e-5).astype(np.float32)
+    vref = rng.uniform(0.1, 0.9, s).astype(np.float32)
+    return q, w, vref
+
+
+class TestDivisionMatch:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=6),  # tiles
+        st.sampled_from([4, 16, 32]),  # s
+        st.integers(min_value=1, max_value=8),  # b
+        st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_division_equals_per_tile(self, t, s, b, seed):
+        """vmap-stacked division == independent per-tile matches."""
+        rng = np.random.default_rng(seed)
+        q = (rng.random((b, 2 * s)) < 0.5).astype(np.float32)
+        w = (rng.random((t, 2 * s, s)) * 5e-5).astype(np.float32)
+        vref = rng.uniform(0.1, 0.9, (t, s)).astype(np.float32)
+        toc = np.float32(1.4e4)
+
+        vml_d, m_d = model.division_match(q, w, vref, toc)
+        for i in range(t):
+            vml_i, m_i = model.tile_match(q, w[i], vref[i], toc)
+            np.testing.assert_allclose(
+                np.asarray(vml_d)[i], np.asarray(vml_i), rtol=1e-6
+            )
+            np.testing.assert_array_equal(np.asarray(m_d)[i], np.asarray(m_i))
+
+    def test_output_shapes(self):
+        rng = np.random.default_rng(3)
+        q, w, vref = rand_tile(rng, 16, 5)
+        vml, m = model.tile_match(q, w, vref, np.float32(1e4))
+        assert vml.shape == (5, 16) and m.shape == (5, 16)
+
+        wst = np.stack([w] * 3)
+        vst = np.stack([vref] * 3)
+        vml, m = model.division_match(q, wst, vst, np.float32(1e4))
+        assert vml.shape == (3, 5, 16) and m.shape == (3, 5, 16)
+
+    def test_tile_match_ref_twin(self):
+        rng = np.random.default_rng(4)
+        q, w, vref = rand_tile(rng, 32, 7)
+        toc = np.float32(1.4e4)
+        a = model.tile_match(q, w, vref, toc)
+        b = model.tile_match_ref(q, w, vref, toc)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+class TestExampleArgs:
+    def test_tile_args(self):
+        q, w, vref, toc = model.example_args(64, 32)
+        assert q.shape == (32, 128)
+        assert w.shape == (128, 64)
+        assert vref.shape == (64,)
+        assert toc.shape == ()
+
+    def test_division_args(self):
+        q, w, vref, toc = model.example_args(16, 8, tiles=4)
+        assert q.shape == (8, 32)
+        assert w.shape == (4, 32, 16)
+        assert vref.shape == (4, 16)
+
+
+class TestDigitalOracle:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=12),
+        st.integers(min_value=1, max_value=24),
+        st.integers(min_value=1, max_value=8),
+        st.integers(min_value=0, max_value=2**32 - 1),
+    )
+    def test_dont_care_always_matches(self, rows, nbits, b, seed):
+        rng = np.random.default_rng(seed)
+        stored = np.full((rows, nbits), 2)  # all 'x'
+        query = rng.integers(0, 2, (b, nbits))
+        assert np.asarray(ref.digital_match_ref(stored, query)).all()
+
+    def test_exact_bit_semantics(self):
+        stored = np.array([[0, 1, 2]])
+        assert np.asarray(ref.digital_match_ref(stored, np.array([[0, 1, 0]])))[0, 0]
+        assert np.asarray(ref.digital_match_ref(stored, np.array([[0, 1, 1]])))[0, 0]
+        assert not np.asarray(ref.digital_match_ref(stored, np.array([[1, 1, 0]])))[0, 0]
+        assert not np.asarray(ref.digital_match_ref(stored, np.array([[0, 0, 0]])))[0, 0]

@@ -1,0 +1,108 @@
+//! Ablation: DT2CAM's ternary-TCAM realization vs the ACAM realization
+//! (paper §V future work / the §IV.C comparator), computed per dataset
+//! from the *same trees* — cells, area, energy, and where each wins.
+//!
+//! Expected shape (paper §IV.C): ACAM rows are much narrower (one cell
+//! per feature) but each analog cell is ~18x larger than a 2T2R bit
+//! (0.299 vs 0.017 µm²/bit), and ACAM has no selective precharge, so
+//! DT2CAM wins area and energy while ACAM wins raw row count.
+
+use dt2cam::acam::{acam_report, AcamArray, AcamParams};
+use dt2cam::report::workload::Workload;
+use dt2cam::synth::area::area;
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+use dt2cam::util::prng::Prng;
+
+fn main() {
+    let p = DeviceParams::default();
+    let ap = AcamParams::default();
+    let mut b = Bench::new("ablation_acam");
+    b.report_line(
+        "dataset     TCAM cells  ACAM cells  TCAM mm2   ACAM mm2   TCAM nJ    ACAM nJ",
+    );
+    for name in ["iris", "diabetes", "haberman", "car", "cancer", "titanic", "covid"] {
+        let w = Workload::prepare(name).unwrap();
+        // TCAM realization @ S chosen by Table IV for D=0.2.
+        let s = 128;
+        let mut rng = Prng::new(1);
+        let m = dt2cam::synth::mapping::MappedArray::from_lut(&w.lut, s, &p, &mut rng);
+        let tcam_area = area(m.n_tiles(), s, m.n_classes, &p);
+        let r = dt2cam::synth::simulate::simulate(
+            &m,
+            &w.lut,
+            &w.test_x,
+            &w.test_y,
+            &w.golden,
+            &m.vref,
+            &p,
+            &dt2cam::synth::simulate::SimOptions {
+                max_inputs: 256,
+                ..Default::default()
+            },
+        );
+
+        // ACAM realization of the same tree.
+        let acam = AcamArray::from_lut(&w.lut);
+        let ar = acam_report(&acam, &ap);
+
+        // Functional equivalence of the two realizations.
+        for x in w.test_x.iter().take(64) {
+            assert_eq!(
+                acam.classify(x),
+                w.lut.classify(x),
+                "{name}: ACAM and TCAM must classify identically"
+            );
+        }
+
+        b.report_line(&format!(
+            "{name:<11} {:>10} {:>11} {:>9.4} {:>10.4} {:>9.4} {:>9.4}",
+            tcam_area.n_cells,
+            ar.n_cells,
+            tcam_area.total_mm2,
+            ar.area_mm2,
+            r.energy_per_dec * 1e9,
+            ar.energy_per_dec * 1e9,
+        ));
+    }
+    b.report_line("[small datasets: ACAM wins — SxS padding dominates the TCAM at S=128;");
+    b.report_line(" pick S from Table IV per deployment. At the paper's traffic scale the");
+    b.report_line(" trade flips (below): 2T2R cells are ~18x smaller and SP + rogue-row");
+    b.report_line(" gating cut energy — the paper's §IV.C headline.]");
+
+    // Traffic-scale comparison from both of our models (Table VI check).
+    let ours = dt2cam::report::sota::dt2cam_traffic_rows(&p);
+    let acam_traffic = dt2cam::acam::AcamArray {
+        cells: vec![dt2cam::acam::AcamCell::always_match(); 2000 * 256],
+        n_rows: 2000,
+        n_features: 256,
+        classes: vec![0; 2000],
+        n_classes: 2,
+    };
+    let ar = acam_report(&acam_traffic, &ap);
+    b.report_value(
+        "traffic energy ratio ACAM/DT2CAM (paper 1.73x)",
+        ar.energy_per_dec / ours[0].energy_per_dec,
+        "x",
+    );
+    b.report_value(
+        "traffic area ratio ACAM-core/DT2CAM",
+        ar.area_mm2 / ours[0].area_mm2.unwrap(),
+        "x",
+    );
+    assert!(
+        ours[0].energy_per_dec < ar.energy_per_dec,
+        "DT2CAM must win energy at traffic scale"
+    );
+
+    let w = Workload::prepare("iris").unwrap();
+    b.case("acam_build_from_lut", || {
+        std::hint::black_box(AcamArray::from_lut(&w.lut));
+    });
+    let acam = AcamArray::from_lut(&w.lut);
+    let x = w.test_x[0].clone();
+    b.case("acam_classify", || {
+        std::hint::black_box(acam.classify(&x));
+    });
+    b.finish();
+}

@@ -1,0 +1,34 @@
+//! Ablation: the paper's *adaptive-precision* ternary encoding vs a
+//! fixed-precision baseline (every feature padded to the widest field).
+//! Quantifies the compactness claim behind §II.A.4 / Eqns 1–2.
+
+use dt2cam::report::workload::Workload;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("ablation_encoding");
+    b.report_line("dataset     adaptive_bits  fixed_bits   savings%    rows  width");
+    for name in [
+        "iris", "diabetes", "haberman", "car", "cancer", "titanic", "covid",
+    ] {
+        let w = Workload::prepare(name).unwrap();
+        let adaptive = w.lut.n_total();
+        let fixed = w.lut.fixed_precision_total_bits();
+        let savings = 100.0 * (1.0 - adaptive as f64 / fixed as f64);
+        b.report_line(&format!(
+            "{name:<11} {adaptive:>13} {fixed:>11} {savings:>9.1} {:>7} {:>6}",
+            w.lut.n_rows(),
+            w.lut.width()
+        ));
+        assert!(
+            adaptive <= fixed,
+            "{name}: adaptive encoding must never be wider"
+        );
+    }
+
+    let w = Workload::prepare("haberman").unwrap();
+    b.case("compile_lut_haberman", || {
+        std::hint::black_box(dt2cam::compiler::compile(&w.tree));
+    });
+    b.finish();
+}

@@ -1,0 +1,96 @@
+//! Extension bench: random-forest ensembles on ReCAM banks (the workload
+//! class of the paper's comparators [15]/[20]). Each tree compiles to its
+//! own LUT bank; banks search in parallel and a digital majority vote
+//! combines them. Reports the ensemble's accuracy / hardware-cost curve
+//! against the single unpruned tree.
+
+use dt2cam::cart::{train_forest, ForestParams, TrainParams};
+use dt2cam::compiler::compile;
+use dt2cam::dataset::catalog;
+use dt2cam::synth::mapping::MappedArray;
+use dt2cam::synth::simulate::{simulate, SimOptions};
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+use dt2cam::util::prng::Prng;
+
+fn main() {
+    let p = DeviceParams::default();
+    let mut b = Bench::new("ablation_forest");
+    b.report_line("dataset    trees  depth  acc      total-leaves  total-tiles  sum nJ/dec");
+
+    for name in ["diabetes", "titanic"] {
+        let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
+        d.normalize();
+        let mut rng = Prng::new(11);
+        let split = d.split(0.9, &mut rng);
+        let (xs, ys) = d.gather(&split.train);
+        let (txs, tys) = d.gather(&split.test);
+
+        for (n_trees, depth) in [(1usize, 0usize), (5, 6), (9, 6), (15, 4)] {
+            let fp = ForestParams {
+                n_trees,
+                sample_fraction: 0.8,
+                max_features: (d.n_features() as f64).sqrt().ceil() as usize,
+                tree: TrainParams {
+                    max_depth: depth,
+                    ..TrainParams::default()
+                },
+            };
+            let forest = train_forest(&xs, &ys, d.n_classes, &fp, &mut rng);
+
+            // Per-bank hardware cost + per-bank CAM classification.
+            let mut total_tiles = 0usize;
+            let mut total_energy = 0.0f64;
+            let mut per_tree_cls: Vec<Vec<usize>> = Vec::new();
+            for (tree, feats) in forest.trees.iter().zip(&forest.feature_sets) {
+                let lut = compile(tree);
+                let m = MappedArray::from_lut(&lut, 64, &p, &mut rng);
+                let ptx: Vec<Vec<f64>> = txs
+                    .iter()
+                    .map(|x| feats.iter().map(|&f| x[f]).collect())
+                    .collect();
+                let golden: Vec<usize> = ptx.iter().map(|x| tree.predict(x)).collect();
+                let r = simulate(
+                    &m, &lut, &ptx, &tys, &golden, &m.vref, &p,
+                    &SimOptions { max_inputs: 256, ..Default::default() },
+                );
+                assert_eq!(r.golden_agreement, 1.0, "{name}: bank must match its tree");
+                total_tiles += m.n_tiles();
+                total_energy += r.energy_per_dec;
+                per_tree_cls.push(golden);
+            }
+            // Majority vote over the banks' surviving-row classes.
+            let n_eval = txs.len().min(256);
+            let correct = (0..n_eval)
+                .filter(|&i| {
+                    let votes: Vec<usize> =
+                        per_tree_cls.iter().map(|c| c[i]).collect();
+                    forest.vote(&votes) == tys[i]
+                })
+                .count();
+            let acc = correct as f64 / n_eval as f64;
+            b.report_line(&format!(
+                "{name:<10} {n_trees:>5} {:>6} {acc:>8.4} {:>13} {:>12} {:>11.4}",
+                if depth == 0 { "inf".into() } else { depth.to_string() },
+                forest.total_leaves(),
+                total_tiles,
+                total_energy * 1e9,
+            ));
+        }
+    }
+    b.report_line("[ensembles of shallow trees reach single-tree accuracy with bounded");
+    b.report_line(" per-bank LUTs; banks are independent CAMs searching in parallel]");
+
+    let mut d = catalog::by_name("haberman", 1).unwrap();
+    d.normalize();
+    let fp = ForestParams {
+        n_trees: 5,
+        tree: TrainParams { max_depth: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let mut rng = Prng::new(3);
+    b.case("train_forest_5x_haberman", || {
+        std::hint::black_box(train_forest(&d.features, &d.labels, d.n_classes, &fp, &mut rng));
+    });
+    b.finish();
+}

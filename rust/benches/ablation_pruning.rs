@@ -1,0 +1,77 @@
+//! Ablation: tree complexity vs hardware cost — the design-space knob the
+//! paper's pipeline implies but does not sweep. Limiting CART depth trades
+//! recognition accuracy against LUT rows/width, tiles, energy and EDP; the
+//! knee tells a deployer how much array to provision.
+
+use dt2cam::cart::{train, TrainParams};
+use dt2cam::compiler::compile;
+use dt2cam::dataset::catalog;
+use dt2cam::synth::mapping::MappedArray;
+use dt2cam::synth::simulate::{simulate, SimOptions};
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+use dt2cam::util::prng::Prng;
+
+fn main() {
+    let p = DeviceParams::default();
+    let mut b = Bench::new("ablation_pruning");
+    b.report_line("dataset    depth  leaves  LUT WxR      tiles  acc     nJ/dec    EDP(J.s)");
+
+    for name in ["diabetes", "covid"] {
+        let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
+        d.normalize();
+        let mut rng = Prng::new(7);
+        let split = d.split(0.9, &mut rng);
+        let (xs, ys) = d.gather(&split.train);
+        let (txs, tys) = d.gather(&split.test);
+
+        let mut prev_acc = 0.0f64;
+        for depth in [2usize, 4, 6, 8, 0] {
+            let params = TrainParams {
+                max_depth: depth,
+                ..TrainParams::default()
+            };
+            let tree = train(&xs, &ys, d.n_classes, &params);
+            let lut = compile(&tree);
+            let golden: Vec<usize> = txs.iter().map(|x| tree.predict(x)).collect();
+            let m = MappedArray::from_lut(&lut, 64, &p, &mut rng);
+            let r = simulate(
+                &m, &lut, &txs, &tys, &golden, &m.vref, &p,
+                &SimOptions { max_inputs: 512, ..Default::default() },
+            );
+            b.report_line(&format!(
+                "{name:<10} {:>5} {:>7} {:>5}x{:<6} {:>5} {:>7.4} {:>9.4} {:>9.3e}",
+                if depth == 0 { "inf".to_string() } else { depth.to_string() },
+                tree.n_leaves(),
+                lut.n_rows(),
+                lut.width(),
+                m.n_tiles(),
+                r.accuracy,
+                r.energy_per_dec * 1e9,
+                r.edp,
+            ));
+            // Ideal hardware always equals this tree's own predictions.
+            assert_eq!(r.golden_agreement, 1.0, "{name} depth {depth}");
+            // Deeper trees cost more hardware.
+            if depth == 0 {
+                assert!(
+                    r.accuracy + 0.02 >= prev_acc,
+                    "{name}: unpruned should be at least as accurate as depth-8"
+                );
+            }
+            prev_acc = r.accuracy;
+        }
+    }
+    b.report_line("[knee: most of the accuracy arrives by depth ~6 at a fraction of the tiles]");
+
+    let mut d = catalog::by_name("haberman", 1).unwrap();
+    d.normalize();
+    let shallow = TrainParams {
+        max_depth: 4,
+        ..TrainParams::default()
+    };
+    b.case("train_depth4_haberman", || {
+        std::hint::black_box(train(&d.features, &d.labels, d.n_classes, &shallow));
+    });
+    b.finish();
+}

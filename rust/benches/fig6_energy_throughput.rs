@@ -1,0 +1,64 @@
+//! Bench/regeneration target for paper Fig 6 (a: energy vs throughput,
+//! b: EDP, c: % EDP reduction from selective precharge), per dataset per
+//! tile size.
+//!
+//! Default covers the seven light datasets; DT2CAM_BENCH_FULL=1 adds
+//! Credit (the paper's biggest point — highest energy, lowest throughput,
+//! ~90% SP reduction).
+
+use dt2cam::report::figures::{fig6, render_fig6};
+use dt2cam::report::workload::Workload;
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let full = std::env::var("DT2CAM_BENCH_FULL").is_ok();
+    let mut names = vec![
+        "iris", "diabetes", "haberman", "car", "cancer", "titanic", "covid",
+    ];
+    if full {
+        names.push("credit");
+    }
+    let p = DeviceParams::default();
+    let mut b = Bench::new("fig6_energy_throughput");
+
+    let mut all = Vec::new();
+    for n in &names {
+        let w = Workload::prepare(n).unwrap();
+        all.extend(fig6(&w, &p));
+    }
+    for line in render_fig6(&all).lines() {
+        b.report_line(line);
+    }
+    b.report_line("[paper trends: energy/throughput grow with dataset size; EDP improves");
+    b.report_line(" with S for all but Iris; SP reduces EDP wherever N_cwd > 1, up to ~90% (Credit)]");
+
+    // Trend assertions (the reproduction's 'shape' checks).
+    let covid16 = all
+        .iter()
+        .find(|q| q.dataset == "covid" && q.s == 16)
+        .unwrap();
+    let covid128 = all
+        .iter()
+        .find(|q| q.dataset == "covid" && q.s == 128)
+        .unwrap();
+    assert!(
+        covid128.throughput > covid16.throughput,
+        "covid throughput must improve with S"
+    );
+    assert!(covid128.edp < covid16.edp, "covid EDP must improve with S");
+    let iris = all
+        .iter()
+        .find(|q| q.dataset == "iris" && q.s == 16)
+        .unwrap();
+    assert!(
+        covid16.energy_nj > iris.energy_nj,
+        "bigger dataset must burn more energy/dec"
+    );
+
+    let w = Workload::prepare("haberman").unwrap();
+    b.case("fig6_haberman_full_sweep", || {
+        std::hint::black_box(fig6(&w, &p));
+    });
+    b.finish();
+}

@@ -1,0 +1,67 @@
+//! Bench/regeneration target for paper Fig 7: % accuracy loss under input
+//! noise, SA variability, and stuck-at faults, for Diabetes / Covid /
+//! Cancer across tile sizes.
+//!
+//! Default uses a reduced grid (same axes, fewer points/trials) so
+//! `cargo bench` stays minutes-scale; DT2CAM_BENCH_FULL=1 runs the paper's
+//! full grid.
+
+use dt2cam::report::figures::{fig7, render_fig7, NonidealGrid};
+use dt2cam::report::workload::Workload;
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let full = std::env::var("DT2CAM_BENCH_FULL").is_ok();
+    let p = DeviceParams::default();
+    let grid = if full {
+        NonidealGrid::default()
+    } else {
+        NonidealGrid {
+            sigma_in: vec![0.0, 0.01, 0.1],
+            sigma_sa: vec![0.0, 0.05, 0.1],
+            saf_pct: vec![0.0, 0.1, 0.5],
+            tile_sizes: vec![16, 64, 128],
+            trials: 2,
+            max_inputs: 256,
+        }
+    };
+
+    let mut b = Bench::new("fig7_nonideal");
+    for name in ["diabetes", "covid", "cancer"] {
+        let w = Workload::prepare(name).unwrap();
+        let pts = fig7(&w, &p, &grid);
+        for line in render_fig7(&pts).lines() {
+            b.report_line(line);
+        }
+
+        // Shape checks (paper §IV.B): clean point == golden; SAF is the
+        // worst offender.
+        let clean = pts
+            .iter()
+            .find(|q| q.sigma_in == 0.0 && q.sigma_sa == 0.0 && q.saf_pct == 0.0)
+            .unwrap();
+        assert!(
+            clean.acc_loss_pp.abs() < 1e-9,
+            "{name}: ideal hardware must match golden accuracy"
+        );
+        let worst_saf = pts
+            .iter()
+            .filter(|q| q.saf_pct >= 0.5 && q.sigma_in == 0.0 && q.sigma_sa == 0.0)
+            .map(|q| q.acc_loss_pp)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let worst_noise = pts
+            .iter()
+            .filter(|q| q.saf_pct == 0.0 && q.sigma_sa == 0.0)
+            .map(|q| q.acc_loss_pp)
+            .fold(f64::NEG_INFINITY, f64::max);
+        b.report_value(&format!("{name}: worst SAF loss"), worst_saf, "pp");
+        b.report_value(&format!("{name}: worst input-noise loss"), worst_noise, "pp");
+    }
+
+    let w = Workload::prepare("cancer").unwrap();
+    b.case("fig7_cancer_quick_grid", || {
+        std::hint::black_box(fig7(&w, &p, &NonidealGrid::quick()));
+    });
+    b.finish();
+}

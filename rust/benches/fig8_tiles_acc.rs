@@ -1,0 +1,47 @@
+//! Bench/regeneration target for paper Fig 8: % accuracy loss versus the
+//! number of TCAM tiles the dataset needs, under stuck-at-fault sweeps.
+
+use dt2cam::report::figures::{fig8, render_fig8};
+use dt2cam::report::workload::Workload;
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let full = std::env::var("DT2CAM_BENCH_FULL").is_ok();
+    let mut names = vec![
+        "iris", "haberman", "cancer", "diabetes", "titanic", "car", "covid",
+    ];
+    if full {
+        names.push("credit");
+    }
+    let p = DeviceParams::default();
+    let mut b = Bench::new("fig8_tiles_acc");
+
+    let mut workloads = Vec::new();
+    for n in &names {
+        workloads.push(Workload::prepare(n).unwrap());
+    }
+    let wrefs: Vec<&Workload> = workloads.iter().collect();
+    let trials = if full { 3 } else { 1 };
+    let pts = fig8(&wrefs, &p, &[0.0, 0.1, 0.5], trials);
+    for line in render_fig8(&pts).lines() {
+        b.report_line(line);
+    }
+    b.report_line("[paper trend: loss grows with SAF rate; more-tile configs expose more devices]");
+
+    // Zero-SAF points must be exactly zero loss (ideal hardware).
+    for q in pts.iter().filter(|q| q.saf_pct == 0.0) {
+        assert!(
+            q.acc_loss_pp.abs() < 1e-9,
+            "{} S={} lost accuracy with no faults",
+            q.dataset,
+            q.s
+        );
+    }
+
+    let iris = Workload::prepare("iris").unwrap();
+    b.case("fig8_iris_sweep", || {
+        std::hint::black_box(fig8(&[&iris], &p, &[0.0, 0.5], 1));
+    });
+    b.finish();
+}

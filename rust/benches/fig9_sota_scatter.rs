@@ -1,0 +1,27 @@
+//! Bench/regeneration target for paper Fig 9: energy vs throughput
+//! scatter of DT2CAM against the SOTA accelerators.
+
+use dt2cam::report::figures::{fig9, render_fig9};
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let p = DeviceParams::default();
+    let mut b = Bench::new("fig9_sota_scatter");
+    let rows = fig9(&p);
+    for line in render_fig9(&rows).lines() {
+        b.report_line(line);
+    }
+    b.report_line("[paper: DT2CAM sits in the lowest-energy / highest-throughput corner]");
+
+    // DT2CAM must dominate on both axes among the 16nm CAM designs.
+    let ours = rows.iter().find(|r| r.name == "DT2CAM_128").unwrap();
+    let acam = rows.iter().find(|r| r.name == "ACAM [15]").unwrap();
+    assert!(ours.energy_per_dec < acam.energy_per_dec);
+    assert!(ours.throughput > acam.throughput);
+
+    b.case("fig9_assembly", || {
+        std::hint::black_box(fig9(&p));
+    });
+    b.finish();
+}

@@ -1,0 +1,38 @@
+//! Bench/regeneration target for paper Table IV: D_cap limit → max cells
+//! per row → chosen tile size S (Eqn 6 sweep).
+
+use dt2cam::synth::range::table4;
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let p = DeviceParams::default();
+    let mut b = Bench::new("table4_dynamic_range");
+
+    // Regenerate the table (paper values in brackets for eyeballing):
+    // 0.2→154/128, 0.3→86/64, 0.4→53/32, 0.5→33/32, 0.6→21/16.
+    let rows = table4(&p);
+    b.report_line("D_limit  max#cells  chosen_S  D(S)      [paper: 154/128, 86/64, 53/32, 33/32, 21/16]");
+    for r in &rows {
+        b.report_line(&format!(
+            "{:<8.1} {:>9} {:>9}  {:.3}",
+            r.d_limit, r.max_cells, r.chosen_s, r.d_at_chosen
+        ));
+    }
+    assert_eq!(
+        rows.iter().map(|r| r.chosen_s).collect::<Vec<_>>(),
+        vec![128, 64, 32, 32, 16],
+        "Table IV S column must match the paper exactly"
+    );
+
+    b.case("table4_full_sweep", || {
+        std::hint::black_box(table4(&p));
+    });
+    b.case("dynamic_range_eqn6_at_128", || {
+        std::hint::black_box(p.dynamic_range(128));
+    });
+    b.case("t_opt_eqn8_at_128", || {
+        std::hint::black_box(p.t_opt(128));
+    });
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! Bench/regeneration target for paper Table V: LUT sizes and tile grids
+//! per dataset per S. Includes the full compile pipeline timing.
+//!
+//! Default runs the seven light datasets; set DT2CAM_BENCH_FULL=1 to also
+//! build Credit (120k instances, ~4 s of CART training).
+
+use dt2cam::report::tables::{render_table5, table5};
+use dt2cam::report::workload::Workload;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let full = std::env::var("DT2CAM_BENCH_FULL").is_ok();
+    let mut names = vec![
+        "iris", "diabetes", "haberman", "car", "cancer", "titanic", "covid",
+    ];
+    if full {
+        names.push("credit");
+    }
+
+    let mut b = Bench::new("table5_tiles");
+    let mut workloads = Vec::new();
+    for n in &names {
+        workloads.push(Workload::prepare(n).unwrap());
+    }
+    let wrefs: Vec<&Workload> = workloads.iter().collect();
+    let rows = table5(&wrefs);
+    for line in render_table5(&rows).lines() {
+        b.report_line(line);
+    }
+    b.report_line("[paper: iris 9x12, diabetes 120x123, haberman 93x71, car 76x20,");
+    b.report_line("        cancer 23x52, credit 8475x3580, titanic 191x150, covid 441x146]");
+
+    // Tile-grid formula itself is what Table V reports; time the full
+    // train→parse→reduce→encode pipeline per dataset class.
+    b.case("prepare_workload_iris", || {
+        std::hint::black_box(Workload::prepare("iris").unwrap());
+    });
+    b.case("prepare_workload_haberman", || {
+        std::hint::black_box(Workload::prepare("haberman").unwrap());
+    });
+    b.case("table5_assembly", || {
+        std::hint::black_box(table5(&wrefs));
+    });
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! Bench/regeneration target for paper Table VI: the SOTA comparison on
+//! the traffic configuration (2000×2048 @ S=128), sequential + pipelined,
+//! with the FOM column (Eqn 12).
+
+use dt2cam::report::sota::{dt2cam_traffic_rows, fom};
+use dt2cam::report::tables::{render_table6, table6};
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::benchkit::Bench;
+
+fn main() {
+    let p = DeviceParams::default();
+    let mut b = Bench::new("table6_sota");
+
+    let rows = table6(&p);
+    for line in render_table6(&rows).lines() {
+        b.report_line(line);
+    }
+    b.report_line("[paper DT2CAM_128: 58.8e6 dec/s, 0.098 nJ, 0.07 mm2, 0.017 um2/bit, FOM 1.22e-19]");
+    b.report_line("[paper P-DT2CAM_128: 333e6 dec/s, FOM 2.15e-20]");
+
+    // Headline ratios from §IV.C.
+    let ours = dt2cam_traffic_rows(&p);
+    let acam_e = 0.17e-9;
+    b.report_value(
+        "energy_ratio_vs_ACAM (paper 1.73x)",
+        acam_e / ours[0].energy_per_dec,
+        "x",
+    );
+    b.report_value(
+        "area_ratio_vs_ACAM (paper 3.8x)",
+        0.266 / ours[0].area_mm2.unwrap(),
+        "x",
+    );
+    let fom_acam = fom(acam_e, 20.8e6, 0.266);
+    let fom_ours = fom(
+        ours[0].energy_per_dec,
+        ours[0].throughput,
+        ours[0].area_mm2.unwrap(),
+    );
+    b.report_value("FOM_ratio_seq (paper 17.8x)", fom_acam / fom_ours, "x");
+    let fom_pacam = fom(acam_e, 333e6, 0.266);
+    let fom_p = fom(
+        ours[1].energy_per_dec,
+        ours[1].throughput,
+        ours[1].area_mm2.unwrap(),
+    );
+    b.report_value("FOM_ratio_pipe (paper 6.3x)", fom_pacam / fom_p, "x");
+
+    b.case("table6_assembly", || {
+        std::hint::black_box(table6(&p));
+    });
+    b.finish();
+}

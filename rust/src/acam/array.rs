@@ -1,0 +1,206 @@
+//! ACAM array: range cells + functional match.
+
+use crate::compiler::{Comparator, Lut};
+use crate::util::prng::Prng;
+
+/// One analog CAM cell: stores the acceptance range `(lo, hi]` of one
+/// feature (6T2M cell of [15]/[40]; the two memristors program the two
+/// bound voltages).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AcamCell {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl AcamCell {
+    pub fn always_match() -> AcamCell {
+        AcamCell {
+            lo: f64::NEG_INFINITY,
+            hi: f64::INFINITY,
+        }
+    }
+
+    /// Ideal analog range match.
+    #[inline]
+    pub fn matches(&self, v: f64) -> bool {
+        v > self.lo && v <= self.hi
+    }
+
+    /// Match under bound programming error (memristor conductance
+    /// variability): each finite bound shifts by its own offset.
+    #[inline]
+    pub fn matches_noisy(&self, v: f64, d_lo: f64, d_hi: f64) -> bool {
+        let lo = if self.lo.is_finite() { self.lo + d_lo } else { self.lo };
+        let hi = if self.hi.is_finite() { self.hi + d_hi } else { self.hi };
+        v > lo && v <= hi
+    }
+}
+
+/// A decision tree mapped onto an ACAM: one row per tree path, one cell
+/// per feature.
+#[derive(Clone, Debug)]
+pub struct AcamArray {
+    /// `cells[r * n_features + f]`.
+    pub cells: Vec<AcamCell>,
+    pub n_rows: usize,
+    pub n_features: usize,
+    pub classes: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl AcamArray {
+    /// Build from a compiled LUT's reduced rule table (the DT-HW
+    /// compiler's column-reduction output *is* the ACAM programming).
+    pub fn from_lut(lut: &Lut) -> AcamArray {
+        let n_features = lut.encoders.len();
+        let n_rows = lut.reduced.len();
+        let mut cells = Vec::with_capacity(n_rows * n_features);
+        for row in &lut.reduced {
+            for rule in &row.rules {
+                let (lo, hi) = rule.bounds();
+                debug_assert!(matches!(
+                    rule.comparator,
+                    Comparator::Le | Comparator::Gt | Comparator::InBetween | Comparator::None
+                ));
+                cells.push(AcamCell { lo, hi });
+            }
+        }
+        AcamArray {
+            cells,
+            n_rows,
+            n_features,
+            classes: lut.classes.clone(),
+            n_classes: lut.n_classes,
+        }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.n_rows * self.n_features
+    }
+
+    /// Ideal search: indices of matching rows.
+    pub fn matching_rows(&self, x: &[f64]) -> Vec<usize> {
+        assert_eq!(x.len(), self.n_features);
+        (0..self.n_rows)
+            .filter(|&r| {
+                (0..self.n_features)
+                    .all(|f| self.cells[r * self.n_features + f].matches(x[f]))
+            })
+            .collect()
+    }
+
+    /// Classify (priority encoder on lowest matching row).
+    pub fn classify(&self, x: &[f64]) -> Option<usize> {
+        self.matching_rows(x).first().map(|&r| self.classes[r])
+    }
+
+    /// Classify under per-bound gaussian programming noise (σ in
+    /// normalized feature units). Each call draws fresh offsets —
+    /// callers seed `rng` per trial.
+    pub fn classify_noisy(&self, x: &[f64], sigma: f64, rng: &mut Prng) -> Option<usize> {
+        let hit = (0..self.n_rows).find(|&r| {
+            (0..self.n_features).all(|f| {
+                let c = self.cells[r * self.n_features + f];
+                c.matches_noisy(
+                    x[f],
+                    rng.normal_scaled(0.0, sigma),
+                    rng.normal_scaled(0.0, sigma),
+                )
+            })
+        });
+        hit.map(|r| self.classes[r])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::iris;
+    use crate::testkit::property;
+
+    fn iris_acam() -> (AcamArray, crate::compiler::Lut, crate::cart::Tree) {
+        let d = iris::load();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        (AcamArray::from_lut(&lut), lut, tree)
+    }
+
+    #[test]
+    fn one_cell_per_feature_per_path() {
+        let (a, lut, tree) = iris_acam();
+        assert_eq!(a.n_rows, tree.n_leaves());
+        assert_eq!(a.n_features, 4);
+        assert_eq!(a.n_cells(), lut.n_rows() * 4);
+        // The ACAM row is far narrower than the ternary row.
+        assert!(a.n_features < lut.width());
+    }
+
+    #[test]
+    fn acam_matches_tree_exactly() {
+        let (a, _lut, tree) = iris_acam();
+        let d = iris::load();
+        for x in &d.features {
+            assert_eq!(a.classify(x), Some(tree.predict(x)));
+        }
+    }
+
+    #[test]
+    fn acam_equals_tcam_lut_on_random_problems() {
+        property("ACAM == ternary LUT == tree", 15, |g| {
+            let n = g.usize_in(30, 120);
+            let f = g.usize_in(1, 5);
+            let classes = g.usize_in(2, 4);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+            let tree = train(&xs, &ys, classes, &TrainParams::default());
+            let lut = compile(&tree);
+            let acam = AcamArray::from_lut(&lut);
+            (0..30).all(|_| {
+                let x: Vec<f64> = (0..f).map(|_| g.f64_in(-0.2, 1.2)).collect();
+                let rows = acam.matching_rows(&x);
+                rows.len() == 1
+                    && acam.classify(&x) == lut.classify(&x)
+                    && acam.classify(&x) == Some(tree.predict(&x))
+            })
+        });
+    }
+
+    #[test]
+    fn unconstrained_feature_cell_is_infinite_range() {
+        let (a, lut, _) = iris_acam();
+        // Any rule with Comparator::None must map to (-inf, inf).
+        for (r, row) in lut.reduced.iter().enumerate() {
+            for (f, rule) in row.rules.iter().enumerate() {
+                if rule.comparator == Comparator::None {
+                    let c = a.cells[r * a.n_features + f];
+                    assert_eq!(c, AcamCell::always_match());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_noise_equals_ideal() {
+        let (a, _, tree) = iris_acam();
+        let d = iris::load();
+        let mut rng = crate::util::prng::Prng::new(3);
+        for x in d.features.iter().take(30) {
+            assert_eq!(a.classify_noisy(x, 0.0, &mut rng), Some(tree.predict(x)));
+        }
+    }
+
+    #[test]
+    fn heavy_programming_noise_breaks_matches() {
+        let (a, _, _) = iris_acam();
+        let d = iris::load();
+        let mut rng = crate::util::prng::Prng::new(5);
+        let wrong = d
+            .features
+            .iter()
+            .filter(|x| a.classify_noisy(x, 1.5, &mut rng) != a.classify(x))
+            .count();
+        assert!(wrong > 0, "sigma=1.5 must disturb some decisions");
+    }
+}

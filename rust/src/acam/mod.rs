@@ -1,0 +1,23 @@
+//! ACAM extension (paper §V future work; comparator baseline of §IV.C).
+//!
+//! The paper's Table VI baseline [15] realizes tree inference on *analog*
+//! CAMs: one 6T2M cell stores a full `(lo, hi]` range per feature, so a
+//! tree path occupies `N_features` cells instead of `Σ n_i` ternary bits.
+//! The paper names extending DT2CAM to ACAM typologies as future work —
+//! this module implements it: the DT-HW compiler's *reduced rule table*
+//! (one rule per feature per path — exactly an ACAM row) maps directly
+//! onto an ACAM array, with energy/latency/area models calibrated to the
+//! ACAM row of Table VI, so the TCAM-vs-ACAM comparison can be computed
+//! from one tree instead of quoted from the literature.
+//!
+//! Functional model: a cell matches input `v` iff `lo < v <= hi` (bounds
+//! from the column-reduction step; unconstrained features store
+//! `(-inf, +inf)`). A row matches iff all cells match — an exact
+//! realization of the reduced table, so ideal-hardware accuracy equals
+//! golden accuracy by construction (tested).
+
+pub mod array;
+pub mod model;
+
+pub use array::{AcamArray, AcamCell};
+pub use model::{acam_report, AcamParams, AcamReport};

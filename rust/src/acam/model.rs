@@ -1,0 +1,117 @@
+//! ACAM cost model, calibrated to the ACAM row of Table VI.
+//!
+//! [15] reports, for the traffic problem (2000 rules × 256 features):
+//! 20.8e6 dec/s sequential (1 GHz, pipelined 333e6), 0.17 nJ/dec,
+//! 0.266 mm², 0.299 µm²/bit. We back the per-cell constants out of those
+//! numbers, then apply them to arbitrary trees — which lets the
+//! TCAM-vs-ACAM trade-off be *computed* per dataset instead of quoted.
+
+use crate::util::ceil_div;
+
+use super::array::AcamArray;
+
+/// Calibrated ACAM device constants.
+#[derive(Clone, Debug)]
+pub struct AcamParams {
+    /// Energy per active cell per search (J). Calibrated: 0.17 nJ /
+    /// (2000 rows × 256 cells ≈ 512k cells) ≈ 0.33 fJ — analog in-cell
+    /// comparison is cheaper per cell than a digital unary field, the
+    /// paper's core trade-off.
+    pub e_cell: f64,
+    /// Area per cell (µm²): [15]'s 0.299 µm²/bit.
+    pub a_cell: f64,
+    /// Search latency per array pass (s): 1 GHz clock, as [15].
+    pub t_search: f64,
+    /// Row capacity of one array (ACAM arrays are also tiled; [15] uses
+    /// 50-row subarrays; sequential tile walk like DT2CAM's divisions).
+    pub rows_per_array: usize,
+}
+
+impl Default for AcamParams {
+    fn default() -> Self {
+        AcamParams {
+            e_cell: 0.33e-15,
+            a_cell: 0.299,
+            t_search: 1.0e-9,
+            rows_per_array: 50,
+        }
+    }
+}
+
+/// Cost summary of one tree on an ACAM realization.
+#[derive(Clone, Debug)]
+pub struct AcamReport {
+    pub n_rows: usize,
+    pub n_cells: usize,
+    pub n_arrays: usize,
+    /// J per decision (all cells active — ACAM has no selective
+    /// precharge across feature columns; that is DT2CAM's edge).
+    pub energy_per_dec: f64,
+    /// Sequential decisions/s (arrays searched in parallel, [15]).
+    pub throughput: f64,
+    /// mm².
+    pub area_mm2: f64,
+    /// µm²/cell.
+    pub area_per_cell: f64,
+}
+
+/// Evaluate the ACAM cost model for a mapped tree.
+pub fn acam_report(a: &AcamArray, p: &AcamParams) -> AcamReport {
+    let n_cells = a.n_cells();
+    let n_arrays = ceil_div(a.n_rows, p.rows_per_array).max(1);
+    let area_um2 = n_cells as f64 * p.a_cell;
+    AcamReport {
+        n_rows: a.n_rows,
+        n_cells,
+        n_arrays,
+        energy_per_dec: n_cells as f64 * p.e_cell,
+        throughput: 1.0 / p.t_search,
+        area_mm2: area_um2 / 1e6,
+        area_per_cell: p.a_cell,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acam::AcamCell;
+
+    fn traffic_like() -> AcamArray {
+        // 2000 rules x 256 features, the [15] configuration.
+        AcamArray {
+            cells: vec![AcamCell::always_match(); 2000 * 256],
+            n_rows: 2000,
+            n_features: 256,
+            classes: vec![0; 2000],
+            n_classes: 2,
+        }
+    }
+
+    #[test]
+    fn calibration_reproduces_table6_acam_row() {
+        let r = acam_report(&traffic_like(), &AcamParams::default());
+        // 0.17 nJ/dec and 0.299 um2/bit within calibration tolerance.
+        assert!(
+            (r.energy_per_dec - 0.17e-9).abs() / 0.17e-9 < 0.01,
+            "{}",
+            r.energy_per_dec
+        );
+        assert!((r.area_per_cell - 0.299).abs() < 1e-12);
+        // Area: 512k cells x 0.299 um2 = 0.153 mm2 core; [15]'s 0.266 mm2
+        // includes periphery — our per-cell model underestimates total
+        // area by design (documented), stays within 2x.
+        assert!(r.area_mm2 > 0.1 && r.area_mm2 < 0.266);
+        assert!((r.throughput - 1.0e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn arrays_scale_with_rows() {
+        let mut a = traffic_like();
+        let r1 = acam_report(&a, &AcamParams::default());
+        a.n_rows = 4000;
+        a.cells = vec![AcamCell::always_match(); 4000 * 256];
+        let r2 = acam_report(&a, &AcamParams::default());
+        assert_eq!(r2.n_arrays, r1.n_arrays * 2);
+        assert!(r2.energy_per_dec > r1.energy_per_dec);
+    }
+}

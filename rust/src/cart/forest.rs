@@ -1,0 +1,210 @@
+//! Random-forest extension: bagged CART ensembles on ReCAM banks.
+//!
+//! The paper's headline comparator [15] (and the ASIC-IMC baseline [20])
+//! accelerate *tree ensembles*; DT2CAM generalizes naturally — each tree
+//! compiles to its own LUT/tile bank, banks search in parallel (they are
+//! independent CAM arrays), and a digital majority vote combines the
+//! surviving rows' classes. Energy is the sum of the banks' energies;
+//! latency is the slowest bank (parallel banks) plus the vote.
+
+use crate::util::prng::Prng;
+
+use super::train::{train, TrainParams};
+use super::tree::Tree;
+
+/// Forest hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    /// Bootstrap sample fraction (with replacement), 0 < f <= 1.
+    pub sample_fraction: f64,
+    /// Feature subsampling per tree: number of features each tree sees
+    /// (0 = all). Classic RF uses sqrt(N).
+    pub max_features: usize,
+    pub tree: TrainParams,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_trees: 9,
+            sample_fraction: 1.0,
+            max_features: 0,
+            tree: TrainParams::default(),
+        }
+    }
+}
+
+/// A trained forest: trees plus the feature subset each tree was grown on
+/// (trees predict on the *projected* feature vector).
+#[derive(Clone, Debug)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    /// `feature_sets[t][j]` = original index of tree t's j-th feature.
+    pub feature_sets: Vec<Vec<usize>>,
+    pub n_classes: usize,
+}
+
+impl Forest {
+    /// Majority vote (ties: lowest class id, deterministic).
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let mut votes = vec![0usize; self.n_classes];
+        for (tree, feats) in self.trees.iter().zip(&self.feature_sets) {
+            let proj: Vec<f64> = feats.iter().map(|&f| x[f]).collect();
+            votes[tree.predict(&proj)] += 1;
+        }
+        argmax_lowest(&votes)
+    }
+
+    /// Combine per-tree predictions (e.g. from per-bank CAM searches)
+    /// into the forest decision — the coordinator's vote step.
+    pub fn vote(&self, per_tree: &[usize]) -> usize {
+        assert_eq!(per_tree.len(), self.trees.len());
+        let mut votes = vec![0usize; self.n_classes];
+        for &c in per_tree {
+            votes[c] += 1;
+        }
+        argmax_lowest(&votes)
+    }
+
+    pub fn total_leaves(&self) -> usize {
+        self.trees.iter().map(|t| t.n_leaves()).sum()
+    }
+}
+
+/// Index of the maximum, ties broken toward the lowest index (a
+/// deterministic digital vote — `max_by_key` would take the last).
+fn argmax_lowest(votes: &[usize]) -> usize {
+    let mut best = 0usize;
+    for (c, &v) in votes.iter().enumerate() {
+        if v > votes[best] {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Train a bagged forest.
+pub fn train_forest(
+    xs: &[Vec<f64>],
+    ys: &[usize],
+    n_classes: usize,
+    params: &ForestParams,
+    rng: &mut Prng,
+) -> Forest {
+    assert!(params.n_trees >= 1);
+    assert!(params.sample_fraction > 0.0 && params.sample_fraction <= 1.0);
+    let n = xs.len();
+    let n_features = xs[0].len();
+    let k = if params.max_features == 0 {
+        n_features
+    } else {
+        params.max_features.min(n_features)
+    };
+
+    let mut trees = Vec::with_capacity(params.n_trees);
+    let mut feature_sets = Vec::with_capacity(params.n_trees);
+    for _ in 0..params.n_trees {
+        // Feature subset.
+        let mut feats: Vec<usize> = (0..n_features).collect();
+        rng.shuffle(&mut feats);
+        feats.truncate(k);
+        feats.sort_unstable();
+
+        // Bootstrap sample (with replacement).
+        let m = ((n as f64) * params.sample_fraction).round().max(1.0) as usize;
+        let mut bx = Vec::with_capacity(m);
+        let mut by = Vec::with_capacity(m);
+        for _ in 0..m {
+            let i = rng.below(n);
+            bx.push(feats.iter().map(|&f| xs[i][f]).collect::<Vec<f64>>());
+            by.push(ys[i]);
+        }
+        trees.push(train(&bx, &by, n_classes, &params.tree));
+        feature_sets.push(feats);
+    }
+    Forest {
+        trees,
+        feature_sets,
+        n_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::iris;
+
+    #[test]
+    fn forest_votes_beat_or_match_chance() {
+        let d = iris::load();
+        let mut rng = Prng::new(5);
+        let f = train_forest(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &ForestParams {
+                n_trees: 7,
+                sample_fraction: 0.8,
+                max_features: 2,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let acc = d
+            .features
+            .iter()
+            .zip(&d.labels)
+            .filter(|(x, &y)| f.predict(x) == y)
+            .count() as f64
+            / 150.0;
+        assert!(acc > 0.9, "forest train accuracy {acc}");
+        assert_eq!(f.trees.len(), 7);
+        assert!(f.feature_sets.iter().all(|fs| fs.len() == 2));
+    }
+
+    #[test]
+    fn single_tree_forest_equals_tree_when_full_sample() {
+        // sample_fraction=1.0 still bootstraps (with replacement), so use
+        // the vote path to check plumbing instead of exact equality.
+        let d = iris::load();
+        let mut rng = Prng::new(9);
+        let f = train_forest(
+            &d.features,
+            &d.labels,
+            3,
+            &ForestParams {
+                n_trees: 1,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        for x in d.features.iter().take(20) {
+            let proj: Vec<f64> = f.feature_sets[0].iter().map(|&i| x[i]).collect();
+            assert_eq!(f.predict(x), f.trees[0].predict(&proj));
+        }
+    }
+
+    #[test]
+    fn vote_majority_and_tie_break() {
+        let d = iris::load();
+        let mut rng = Prng::new(1);
+        let f = train_forest(&d.features, &d.labels, 3, &ForestParams {
+            n_trees: 4,
+            ..Default::default()
+        }, &mut rng);
+        assert_eq!(f.vote(&[1, 1, 2, 1]), 1);
+        assert_eq!(f.vote(&[2, 2, 1, 1]), 1, "tie breaks to lowest class");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let d = iris::load();
+        let p = ForestParams::default();
+        let a = train_forest(&d.features, &d.labels, 3, &p, &mut Prng::new(42));
+        let b = train_forest(&d.features, &d.labels, 3, &p, &mut Prng::new(42));
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta.nodes, tb.nodes);
+        }
+    }
+}

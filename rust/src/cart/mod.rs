@@ -1,0 +1,121 @@
+//! From-scratch CART decision-tree trainer (paper §II.A.1, [27]).
+//!
+//! Binary axis-aligned splits on continuous features (`f <= th` goes left,
+//! `f > th` goes right — matching the paper's comparator semantics), gini
+//! impurity, midpoint thresholds between consecutive distinct values,
+//! multi-class leaves by majority. Unpruned by default, like the trees the
+//! paper compiles; `max_depth`/`min_samples_split` are available for
+//! ablations.
+//!
+//! The DT-HW compiler ([`crate::compiler`]) consumes [`Tree`] directly;
+//! golden accuracy (§IV.B) is this module's `predict` on the test split.
+
+pub mod forest;
+pub mod train;
+pub mod tree;
+
+pub use forest::{train_forest, Forest, ForestParams};
+pub use train::{train, TrainParams};
+pub use tree::{Node, NodeId, Tree};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::iris;
+    use crate::testkit::property;
+
+    #[test]
+    fn perfectly_separable_data_reaches_zero_error() {
+        // y = x0 > 0.5, clean.
+        let xs: Vec<Vec<f64>> = (0..100)
+            .map(|i| vec![i as f64 / 100.0, 0.3])
+            .collect();
+        let ys: Vec<usize> = (0..100).map(|i| usize::from(i >= 51)).collect();
+        let t = train(&xs, &ys, 2, &TrainParams::default());
+        for (x, &y) in xs.iter().zip(&ys) {
+            assert_eq!(t.predict(x), y);
+        }
+        assert!(t.n_leaves() == 2, "expected a single split, got {}", t.n_leaves());
+    }
+
+    #[test]
+    fn iris_training_accuracy_high() {
+        let d = iris::load();
+        let t = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let correct = d
+            .features
+            .iter()
+            .zip(&d.labels)
+            .filter(|(x, &y)| t.predict(x) == y)
+            .count();
+        // Unpruned CART memorizes almost everything on Iris.
+        assert!(correct >= 148, "train accuracy too low: {correct}/150");
+        assert!(t.n_leaves() <= 20, "tree exploded: {} leaves", t.n_leaves());
+    }
+
+    #[test]
+    fn max_depth_limits_leaves() {
+        let d = iris::load();
+        let p = TrainParams {
+            max_depth: 2,
+            ..TrainParams::default()
+        };
+        let t = train(&d.features, &d.labels, d.n_classes, &p);
+        assert!(t.n_leaves() <= 4);
+        assert!(t.depth() <= 2);
+    }
+
+    #[test]
+    fn single_class_data_gives_single_leaf() {
+        let xs = vec![vec![0.1], vec![0.7], vec![0.4]];
+        let ys = vec![1, 1, 1];
+        let t = train(&xs, &ys, 3, &TrainParams::default());
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.predict(&[0.9]), 1);
+    }
+
+    #[test]
+    fn prediction_paths_are_consistent_with_rules() {
+        // Every training point must land in a leaf whose path conditions
+        // it satisfies — the invariant the DT-HW compiler depends on.
+        property("cart path consistency", 20, |g| {
+            let n = g.usize_in(20, 120);
+            let f = g.usize_in(1, 5);
+            let classes = g.usize_in(2, 4);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+            let t = train(&xs, &ys, classes, &TrainParams::default());
+            xs.iter().all(|x| {
+                let (leaf, path) = t.predict_with_path(x);
+                path.iter().all(|&(feat, th, le)| {
+                    if le {
+                        x[feat] <= th
+                    } else {
+                        x[feat] > th
+                    }
+                }) && t.node(leaf).is_leaf()
+            })
+        });
+    }
+
+    #[test]
+    fn deeper_training_never_reduces_train_accuracy() {
+        property("cart monotone depth", 10, |g| {
+            let n = g.usize_in(30, 100);
+            let xs = g.matrix(n, 3);
+            let ys: Vec<usize> = xs
+                .iter()
+                .map(|x| usize::from(x[0] + 0.3 * x[1] > 0.6))
+                .collect();
+            let acc = |depth| {
+                let p = TrainParams {
+                    max_depth: depth,
+                    ..TrainParams::default()
+                };
+                let t = train(&xs, &ys, 2, &p);
+                xs.iter().zip(&ys).filter(|(x, &y)| t.predict(x) == y).count()
+            };
+            acc(8) >= acc(2)
+        });
+    }
+}

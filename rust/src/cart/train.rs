@@ -1,0 +1,313 @@
+//! CART training: greedy gini-impurity splitting.
+//!
+//! Per node: for each feature, sort the node's samples by value and scan
+//! split points between consecutive *distinct* values, maintaining left /
+//! right class histograms incrementally (O(n) per feature after the sort).
+//! Thresholds are midpoints, like sklearn's `best` splitter. Recursion
+//! stops on purity, `max_depth`, `min_samples_split`, `min_samples_leaf`,
+//! or when no split improves gini.
+
+use super::tree::{Node, Tree};
+
+/// Training hyper-parameters (defaults = unpruned, paper-style).
+#[derive(Clone, Debug)]
+pub struct TrainParams {
+    /// 0 = unlimited.
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Minimum gini decrease to accept a split (0.0 = any improvement).
+    pub min_impurity_decrease: f64,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        TrainParams {
+            max_depth: 0,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            min_impurity_decrease: 0.0,
+        }
+    }
+}
+
+fn gini(hist: &[usize], total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - hist
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+fn majority(hist: &[usize]) -> usize {
+    hist.iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+struct Builder<'a> {
+    xs: &'a [Vec<f64>],
+    ys: &'a [usize],
+    n_classes: usize,
+    params: &'a TrainParams,
+    nodes: Vec<Node>,
+    /// Scratch: per-feature presorted order is rebuilt per node; for the
+    /// dataset sizes here (<= 120k rows) this is fast enough and keeps the
+    /// memory footprint flat.
+    indices: Vec<usize>,
+}
+
+struct BestSplit {
+    feature: usize,
+    threshold: f64,
+    gain: f64,
+    /// Number of samples going left.
+    n_left: usize,
+}
+
+impl<'a> Builder<'a> {
+    /// Find the best (feature, threshold) for the samples in
+    /// `self.indices[lo..hi]`; returns None if no valid split exists.
+    fn best_split(&mut self, lo: usize, hi: usize, node_hist: &[usize]) -> Option<BestSplit> {
+        let n = hi - lo;
+        let parent_gini = gini(node_hist, n);
+        if parent_gini == 0.0 {
+            return None;
+        }
+        let mut best: Option<BestSplit> = None;
+        let mut order: Vec<usize> = self.indices[lo..hi].to_vec();
+        let mut left_hist = vec![0usize; self.n_classes];
+
+        for feature in 0..self.xs[0].len() {
+            order.sort_unstable_by(|&a, &b| {
+                self.xs[a][feature]
+                    .partial_cmp(&self.xs[b][feature])
+                    .unwrap()
+            });
+            left_hist.iter_mut().for_each(|c| *c = 0);
+            let mut right_hist = node_hist.to_vec();
+
+            for k in 0..n - 1 {
+                let idx = order[k];
+                left_hist[self.ys[idx]] += 1;
+                right_hist[self.ys[idx]] -= 1;
+                let v = self.xs[idx][feature];
+                let v_next = self.xs[order[k + 1]][feature];
+                if v == v_next {
+                    continue; // can't split between equal values
+                }
+                let n_left = k + 1;
+                let n_right = n - n_left;
+                if n_left < self.params.min_samples_leaf
+                    || n_right < self.params.min_samples_leaf
+                {
+                    continue;
+                }
+                let g = (n_left as f64 * gini(&left_hist, n_left)
+                    + n_right as f64 * gini(&right_hist, n_right))
+                    / n as f64;
+                let gain = parent_gini - g;
+                // NOTE: `>=` — zero-gain splits are accepted, like
+                // sklearn's unpruned CART, which keeps splitting impure
+                // nodes until purity. The paper's large LUTs (Credit:
+                // 8475 rows) only arise because CART memorizes label
+                // noise this way. Termination is still guaranteed: a
+                // split between distinct values strictly shrinks both
+                // children.
+                if gain >= self.params.min_impurity_decrease
+                    && best.as_ref().map_or(true, |b| gain > b.gain)
+                {
+                    best = Some(BestSplit {
+                        feature,
+                        threshold: 0.5 * (v + v_next),
+                        gain,
+                        n_left,
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Build the subtree over `indices[lo..hi]`; returns its node id.
+    fn build(&mut self, lo: usize, hi: usize, depth: usize) -> usize {
+        let n = hi - lo;
+        let mut hist = vec![0usize; self.n_classes];
+        for &i in &self.indices[lo..hi] {
+            hist[self.ys[i]] += 1;
+        }
+
+        let depth_ok = self.params.max_depth == 0 || depth < self.params.max_depth;
+        let splittable = n >= self.params.min_samples_split && depth_ok;
+        let split = if splittable {
+            self.best_split(lo, hi, &hist)
+        } else {
+            None
+        };
+
+        match split {
+            None => {
+                let id = self.nodes.len();
+                self.nodes.push(Node::Leaf {
+                    class: majority(&hist),
+                    n_samples: n,
+                });
+                id
+            }
+            Some(s) => {
+                // Partition indices[lo..hi] in place: <= threshold first.
+                self.indices[lo..hi].sort_unstable_by(|&a, &b| {
+                    let va = self.xs[a][s.feature] <= s.threshold;
+                    let vb = self.xs[b][s.feature] <= s.threshold;
+                    vb.cmp(&va) // true (left) first
+                });
+                let mid = lo + s.n_left;
+                debug_assert!(
+                    self.indices[lo..mid]
+                        .iter()
+                        .all(|&i| self.xs[i][s.feature] <= s.threshold)
+                        && self.indices[mid..hi]
+                            .iter()
+                            .all(|&i| self.xs[i][s.feature] > s.threshold),
+                    "partition broken"
+                );
+
+                let id = self.nodes.len();
+                self.nodes.push(Node::Internal {
+                    feature: s.feature,
+                    threshold: s.threshold,
+                    left: usize::MAX, // patched below
+                    right: usize::MAX,
+                });
+                let left = self.build(lo, mid, depth + 1);
+                let right = self.build(mid, hi, depth + 1);
+                if let Node::Internal {
+                    left: l, right: r, ..
+                } = &mut self.nodes[id]
+                {
+                    *l = left;
+                    *r = right;
+                }
+                id
+            }
+        }
+    }
+}
+
+/// Train a CART tree. `xs` is row-major, `ys[i] < n_classes`.
+pub fn train(xs: &[Vec<f64>], ys: &[usize], n_classes: usize, params: &TrainParams) -> Tree {
+    assert_eq!(xs.len(), ys.len(), "features/labels length mismatch");
+    assert!(!xs.is_empty(), "cannot train on empty data");
+    assert!(ys.iter().all(|&y| y < n_classes), "label out of range");
+    let n_features = xs[0].len();
+    assert!(n_features > 0, "need at least one feature");
+
+    let mut b = Builder {
+        xs,
+        ys,
+        n_classes,
+        params,
+        nodes: Vec::new(),
+        indices: (0..xs.len()).collect(),
+    };
+    let root = b.build(0, xs.len(), 0);
+    debug_assert_eq!(root, 0, "root must be node 0");
+    let tree = Tree {
+        nodes: b.nodes,
+        n_features,
+        n_classes,
+    };
+    debug_assert!(tree.validate().is_ok(), "{:?}", tree.validate());
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gini_of_pure_is_zero() {
+        assert_eq!(gini(&[5, 0], 5), 0.0);
+        assert!((gini(&[5, 5], 10) - 0.5).abs() < 1e-12);
+        assert!((gini(&[1, 1, 1], 3) - (1.0 - 3.0 * (1.0 / 9.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn splits_at_midpoint() {
+        let xs = vec![vec![0.0], vec![1.0]];
+        let ys = vec![0, 1];
+        let t = train(&xs, &ys, 2, &TrainParams::default());
+        match &t.nodes[0] {
+            Node::Internal { threshold, .. } => assert!((threshold - 0.5).abs() < 1e-12),
+            _ => panic!("expected a split"),
+        }
+    }
+
+    #[test]
+    fn respects_min_samples_leaf() {
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let mut ys = vec![0; 10];
+        ys[9] = 1; // a lone positive at the end
+        let p = TrainParams {
+            min_samples_leaf: 3,
+            ..TrainParams::default()
+        };
+        let t = train(&xs, &ys, 2, &p);
+        // The only gainful split (9 vs 1) violates min_samples_leaf, but
+        // CART may still find a 3/7 split if gainful; verify every leaf
+        // holds >= 3 samples instead of asserting no split.
+        for n in &t.nodes {
+            if let Node::Leaf { n_samples, .. } = n {
+                assert!(*n_samples >= 3, "leaf with {n_samples} samples");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_needs_depth_two() {
+        let xs = vec![
+            vec![0.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+        ];
+        let ys = vec![0, 1, 1, 0];
+        let t = train(&xs, &ys, 2, &TrainParams::default());
+        assert_eq!(t.depth(), 2);
+        for (x, &y) in xs.iter().zip(&ys) {
+            assert_eq!(t.predict(x), y);
+        }
+    }
+
+    #[test]
+    fn duplicate_feature_values_never_split_between_equals() {
+        let xs = vec![vec![1.0], vec![1.0], vec![1.0], vec![2.0]];
+        let ys = vec![0, 1, 0, 1];
+        let t = train(&xs, &ys, 2, &TrainParams::default());
+        // Only legal threshold is 1.5; the three x=1.0 samples stay together.
+        match &t.nodes[0] {
+            Node::Internal { threshold, .. } => assert!((threshold - 1.5).abs() < 1e-12),
+            Node::Leaf { .. } => {} // also acceptable if gain test rejects
+        }
+        assert_eq!(t.predict(&[2.0]), 1);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let xs: Vec<Vec<f64>> = (0..60)
+            .map(|i| vec![(i * 7 % 13) as f64, (i * 3 % 5) as f64])
+            .collect();
+        let ys: Vec<usize> = (0..60).map(|i| (i / 20) % 3).collect();
+        let a = train(&xs, &ys, 3, &TrainParams::default());
+        let b = train(&xs, &ys, 3, &TrainParams::default());
+        assert_eq!(a.nodes, b.nodes);
+    }
+}

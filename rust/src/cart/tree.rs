@@ -1,0 +1,281 @@
+//! Decision-tree data structure + inference.
+
+/// Node index into [`Tree::nodes`].
+pub type NodeId = usize;
+
+/// One tree node. Internal nodes route `x[feature] <= threshold` left.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    Leaf {
+        /// Majority class of the training samples at this leaf.
+        class: usize,
+        /// Training samples that reached this leaf (diagnostics).
+        n_samples: usize,
+    },
+    Internal {
+        feature: usize,
+        threshold: f64,
+        /// `x[feature] <= threshold`
+        left: NodeId,
+        /// `x[feature] > threshold`
+        right: NodeId,
+    },
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, Node::Leaf { .. })
+    }
+}
+
+/// A trained CART tree (arena representation, root = node 0).
+#[derive(Clone, Debug)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+impl Tree {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn root(&self) -> NodeId {
+        0
+    }
+
+    /// Predict the class of `x`.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let mut id = self.root();
+        loop {
+            match &self.nodes[id] {
+                Node::Leaf { class, .. } => return *class,
+                Node::Internal {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    id = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Predict and also return the taken path as `(feature, threshold,
+    /// took_le)` tuples — the raw material of the DT-HW tree-parsing step.
+    pub fn predict_with_path(&self, x: &[f64]) -> (NodeId, Vec<(usize, f64, bool)>) {
+        let mut id = self.root();
+        let mut path = Vec::new();
+        loop {
+            match &self.nodes[id] {
+                Node::Leaf { .. } => return (id, path),
+                Node::Internal {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    let le = x[*feature] <= *threshold;
+                    path.push((*feature, *threshold, le));
+                    id = if le { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Number of leaves (= paths = LUT rows after compilation).
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    /// Maximum root-to-leaf edge count.
+    pub fn depth(&self) -> usize {
+        fn rec(t: &Tree, id: NodeId) -> usize {
+            match &t.nodes[id] {
+                Node::Leaf { .. } => 0,
+                Node::Internal { left, right, .. } => 1 + rec(t, *left).max(rec(t, *right)),
+            }
+        }
+        rec(self, self.root())
+    }
+
+    /// Enumerate every root-to-leaf path: `(conditions, leaf_class)` where
+    /// a condition is `(feature, threshold, is_le)`. Paths come out in
+    /// left-to-right DFS order — the row order of the paper's parsed table
+    /// (Fig 2 lists the leftmost path first).
+    pub fn paths(&self) -> Vec<(Vec<(usize, f64, bool)>, usize)> {
+        let mut out = Vec::new();
+        let mut stack: Vec<(NodeId, Vec<(usize, f64, bool)>)> =
+            vec![(self.root(), Vec::new())];
+        while let Some((id, conds)) = stack.pop() {
+            match &self.nodes[id] {
+                Node::Leaf { class, .. } => out.push((conds, *class)),
+                Node::Internal {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    // Push right first so left pops first (DFS pre-order).
+                    let mut rconds = conds.clone();
+                    rconds.push((*feature, *threshold, false));
+                    stack.push((*right, rconds));
+                    let mut lconds = conds;
+                    lconds.push((*feature, *threshold, true));
+                    stack.push((*left, lconds));
+                }
+            }
+        }
+        out
+    }
+
+    /// Structural invariants (tests + compiler precondition).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty tree".into());
+        }
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![self.root()];
+        while let Some(id) = stack.pop() {
+            if id >= self.nodes.len() {
+                return Err(format!("child id {id} out of bounds"));
+            }
+            if seen[id] {
+                return Err(format!("node {id} reachable twice (not a tree)"));
+            }
+            seen[id] = true;
+            match &self.nodes[id] {
+                Node::Leaf { class, .. } => {
+                    if *class >= self.n_classes {
+                        return Err(format!("leaf class {class} out of range"));
+                    }
+                }
+                Node::Internal {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    if *feature >= self.n_features {
+                        return Err(format!("feature {feature} out of range"));
+                    }
+                    if !threshold.is_finite() {
+                        return Err("non-finite threshold".into());
+                    }
+                    stack.push(*left);
+                    stack.push(*right);
+                }
+            }
+        }
+        if let Some(orphan) = seen.iter().position(|s| !s) {
+            return Err(format!("orphan node {orphan}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built: x0 <= 0.5 -> class 0; else (x1 <= 0.3 -> 1, else 2).
+    fn fixture() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal {
+                    feature: 0,
+                    threshold: 0.5,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf {
+                    class: 0,
+                    n_samples: 5,
+                },
+                Node::Internal {
+                    feature: 1,
+                    threshold: 0.3,
+                    left: 3,
+                    right: 4,
+                },
+                Node::Leaf {
+                    class: 1,
+                    n_samples: 3,
+                },
+                Node::Leaf {
+                    class: 2,
+                    n_samples: 2,
+                },
+            ],
+            n_features: 2,
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn predict_routes_correctly() {
+        let t = fixture();
+        assert_eq!(t.predict(&[0.5, 0.9]), 0); // <= goes left
+        assert_eq!(t.predict(&[0.6, 0.3]), 1);
+        assert_eq!(t.predict(&[0.6, 0.31]), 2);
+    }
+
+    #[test]
+    fn counts() {
+        let t = fixture();
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(t.depth(), 2);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn paths_enumerates_all_leaves_in_dfs_order() {
+        let t = fixture();
+        let ps = t.paths();
+        assert_eq!(ps.len(), 3);
+        // Leftmost path first (paper Fig 2 convention).
+        assert_eq!(ps[0].1, 0);
+        assert_eq!(ps[0].0, vec![(0, 0.5, true)]);
+        assert_eq!(ps[1].1, 1);
+        assert_eq!(ps[1].0, vec![(0, 0.5, false), (1, 0.3, true)]);
+        assert_eq!(ps[2].1, 2);
+        assert_eq!(ps[2].0, vec![(0, 0.5, false), (1, 0.3, false)]);
+    }
+
+    #[test]
+    fn predict_with_path_matches_predict() {
+        let t = fixture();
+        for x in [[0.1, 0.1], [0.9, 0.1], [0.9, 0.9]] {
+            let (leaf, path) = t.predict_with_path(&x);
+            match t.node(leaf) {
+                Node::Leaf { class, .. } => assert_eq!(*class, t.predict(&x)),
+                _ => panic!("not a leaf"),
+            }
+            assert!(!path.is_empty());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_cycles() {
+        let mut t = fixture();
+        t.nodes[2] = Node::Internal {
+            feature: 1,
+            threshold: 0.3,
+            left: 0, // cycle back to root
+            right: 4,
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_class() {
+        let mut t = fixture();
+        t.nodes[1] = Node::Leaf {
+            class: 7,
+            n_samples: 1,
+        };
+        assert!(t.validate().is_err());
+    }
+}

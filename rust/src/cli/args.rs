@@ -1,0 +1,175 @@
+//! Tiny argv parser: `--key value`, `--flag`, positional subcommand.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: HashMap<String, Vec<String>>,
+    flags: Vec<String>,
+    /// Keys that were consumed (unknown-option reporting).
+    consumed: Vec<String>,
+}
+
+/// Option keys that take a value (everything else is a flag).
+const VALUE_KEYS: [&str; 12] = [
+    "dataset",
+    "tile-size",
+    "seed",
+    "saf",
+    "sigma-sa",
+    "sigma-input",
+    "max-inputs",
+    "engine",
+    "batch",
+    "requests",
+    "table",
+    "fig",
+];
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if VALUE_KEYS.contains(&key) {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("--{key} needs a value"))?;
+                    a.options.entry(key.to_string()).or_default().push(v);
+                } else {
+                    a.flags.push(key.to_string());
+                }
+            } else {
+                a.positionals.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    /// Pop the subcommand (first positional).
+    pub fn take_subcommand(&mut self) -> Option<String> {
+        if self.positionals.is_empty() {
+            None
+        } else {
+            Some(self.positionals.remove(0))
+        }
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.options.get(name).and_then(|v| v.last().cloned())
+    }
+
+    /// All values of a repeatable option.
+    pub fn opt_all(&mut self, name: &str) -> Vec<String> {
+        self.consumed.push(name.to_string());
+        self.options.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn opt_usize(&mut self, name: &str) -> Result<Option<usize>> {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<usize>()
+                    .with_context(|| format!("--{name} must be an integer, got '{s}'"))?,
+            )),
+        }
+    }
+
+    pub fn opt_f64(&mut self, name: &str) -> Result<Option<f64>> {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse::<f64>().with_context(|| {
+                format!("--{name} must be a number, got '{s}'")
+            })?)),
+        }
+    }
+
+    pub fn opt_u64(&mut self, name: &str) -> Result<Option<u64>> {
+        Ok(self.opt_usize(name)?.map(|v| v as u64))
+    }
+
+    /// Error on leftovers that no command consumed (typo safety).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.options.keys() {
+            if !self.consumed.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.consumed.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        if !self.positionals.is_empty() {
+            bail!("unexpected argument '{}'", self.positionals[0]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let mut a = parse("report --table 4 --table 6 --quick");
+        assert_eq!(a.take_subcommand().as_deref(), Some("report"));
+        assert_eq!(a.opt_all("table"), vec!["4", "6"]);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("all"));
+    }
+
+    #[test]
+    fn typed_values() {
+        let mut a = parse("simulate --tile-size 64 --saf 0.5 --seed 42");
+        a.take_subcommand();
+        assert_eq!(a.opt_usize("tile-size").unwrap(), Some(64));
+        assert_eq!(a.opt_f64("saf").unwrap(), Some(0.5));
+        assert_eq!(a.opt_u64("seed").unwrap(), Some(42));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(vec!["--dataset".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let mut a = parse("x --tile-size abc");
+        a.take_subcommand();
+        assert!(a.opt_usize("tile-size").is_err());
+    }
+
+    #[test]
+    fn finish_catches_unknown() {
+        let mut a = parse("report --bogus-flag");
+        a.take_subcommand();
+        assert!(a.finish().is_err());
+        let _ = a;
+    }
+
+    #[test]
+    fn finish_ok_when_all_consumed() {
+        let mut a = parse("report --quick");
+        a.take_subcommand();
+        assert!(a.flag("quick"));
+        a.finish().unwrap();
+    }
+}

@@ -1,0 +1,336 @@
+//! CLI subcommand implementations (thin drivers over the library).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::config::{EngineKind, RunConfig};
+use crate::coordinator::{Coordinator, InferenceRequest};
+use crate::nonideal::{inject_saf, perturb_vref, SafRates};
+use crate::report::figures::{self, NonidealGrid};
+use crate::report::tables;
+use crate::report::workload::Workload;
+use crate::synth::simulate::{simulate, SimOptions};
+use crate::tcam::params::DeviceParams;
+use crate::util::prng::Prng;
+use crate::util::stats::eng;
+
+use super::args::Args;
+
+fn dataset_arg(args: &mut Args) -> Result<String> {
+    args.opt_str("dataset")
+        .context("--dataset is required (iris, diabetes, haberman, car, cancer, credit, titanic, covid)")
+}
+
+/// `dt2cam compile`: train CART, run the DT-HW compiler, print the LUT
+/// geometry and (optionally) the mapping summary.
+pub fn compile(args: &mut Args) -> Result<()> {
+    let name = dataset_arg(args)?;
+    let s = args.opt_usize("tile-size")?.unwrap_or(128);
+    args.finish()?;
+
+    let w = Workload::prepare(&name)?;
+    let p = DeviceParams::default();
+    let m = w.map(s, &p);
+    println!("dataset        : {name}");
+    println!("tree           : {} leaves, depth {}", w.tree.n_leaves(), w.tree.depth());
+    println!("golden accuracy: {:.4}", w.golden_accuracy());
+    println!("LUT            : {} x {} trits (+{} class bits/row)",
+        w.lut.n_rows(), w.lut.width(), w.lut.class_width());
+    println!("n_total (Eqn 2): {}", w.lut.n_total());
+    println!(
+        "tiles @S={s}   : {} x {} = {} tiles ({} padded rows, {} padded cols)",
+        m.n_rwd, m.n_cwd, m.n_tiles(), m.padded_rows, m.padded_width
+    );
+    let (mm2, per_bit) = tables::area_for(m.n_tiles(), s, m.n_classes, &p);
+    println!("area (Eqn 11)  : {mm2:.4} mm^2  ({per_bit:.4} um^2/bit)");
+    // First rows rendered like Fig 2.
+    for r in 0..w.lut.n_rows().min(4) {
+        println!("  row {r}: {}  -> class {}", w.lut.row_to_string(r), w.lut.classes[r]);
+    }
+    Ok(())
+}
+
+/// `dt2cam simulate`: functional simulation with optional non-idealities.
+pub fn simulate_cmd(args: &mut Args) -> Result<()> {
+    let name = dataset_arg(args)?;
+    let s = args.opt_usize("tile-size")?.unwrap_or(128);
+    let saf = args.opt_f64("saf")?.unwrap_or(0.0);
+    let sigma_sa = args.opt_f64("sigma-sa")?.unwrap_or(0.0);
+    let sigma_in = args.opt_f64("sigma-input")?.unwrap_or(0.0);
+    let max_inputs = args.opt_usize("max-inputs")?.unwrap_or(0);
+    let seed = args.opt_u64("seed")?.unwrap_or(0xD72CA0);
+    let no_sp = args.flag("no-sp");
+    args.finish()?;
+
+    let w = Workload::prepare(&name)?;
+    let p = DeviceParams::default();
+    let mut rng = Prng::new(seed);
+    let mut m = w.map(s, &p);
+    inject_saf(&mut m, &SafRates::both(saf), &mut rng.fork(1));
+    let vref = perturb_vref(&m.vref, sigma_sa, &mut rng.fork(2));
+    let mut noise_rng = rng.fork(3);
+    let inputs: Vec<Vec<f64>> = w
+        .test_x
+        .iter()
+        .map(|row| {
+            row.iter()
+                .map(|&v| v + noise_rng.normal_scaled(0.0, sigma_in))
+                .collect()
+        })
+        .collect();
+
+    let r = simulate(
+        &m,
+        &w.lut,
+        &inputs,
+        &w.test_y,
+        &w.golden,
+        &vref,
+        &p,
+        &SimOptions {
+            selective_precharge: !no_sp,
+            analog: true,
+            max_inputs,
+        },
+    );
+    println!("dataset={name} S={s} tiles={} (SA'b'={saf}%, sigma_sa={sigma_sa} V, sigma_in={sigma_in})", r.n_tiles);
+    println!("inputs            : {}", r.n_inputs);
+    println!("accuracy          : {:.4} (golden {:.4}, agreement {:.4})",
+        r.accuracy, w.golden_accuracy(), r.golden_agreement);
+    println!("energy/dec        : {}", eng(r.energy_per_dec, "J"));
+    println!("rows/dec          : {:.1}", r.rows_per_dec);
+    println!("latency           : {}", eng(r.timing.latency, "s"));
+    println!("throughput (seq)  : {}", eng(r.timing.throughput_seq, "dec/s"));
+    println!("throughput (pipe) : {}", eng(r.timing.throughput_pipe, "dec/s"));
+    println!("EDP               : {:.3e} J.s", r.edp);
+    println!("no_match={} multi_match={}", r.no_match, r.multi_match);
+    Ok(())
+}
+
+/// `dt2cam serve`: run the coordinator over the test split as a request
+/// stream and report modeled + wall-clock serving metrics.
+pub fn serve(args: &mut Args) -> Result<()> {
+    let name = dataset_arg(args)?;
+    let s = args.opt_usize("tile-size")?.unwrap_or(128);
+    let batch = args.opt_usize("batch")?.unwrap_or(32);
+    let engine = EngineKind::parse(&args.opt_str("engine").unwrap_or_else(|| "native".into()))?;
+    let requests = args.opt_usize("requests")?.unwrap_or(0);
+    let pipelined = args.flag("pipelined");
+    args.finish()?;
+
+    let w = Workload::prepare(&name)?;
+    let p = DeviceParams::default();
+    let m = w.map(s, &p);
+    let cfg = RunConfig {
+        dataset: name.clone(),
+        tile_size: s,
+        batch,
+        engine,
+        ..RunConfig::default()
+    };
+    let vref = m.vref.clone();
+
+    let n = if requests > 0 {
+        requests.min(w.test_x.len())
+    } else {
+        w.test_x.len()
+    };
+
+    if pipelined {
+        use crate::coordinator::pipeline::run_pipeline;
+        use std::sync::Arc;
+        let plan = Arc::new(crate::coordinator::ServingPlan::build(&m, &vref, &p));
+        let batches: Vec<(Vec<Vec<bool>>, usize)> = w.test_x[..n]
+            .chunks(batch)
+            .map(|chunk| {
+                let qs: Vec<Vec<bool>> = chunk
+                    .iter()
+                    .map(|x| m.pad_query(&w.lut.encode_input(x)))
+                    .collect();
+                let real = qs.len();
+                (qs, real)
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = run_pipeline(Arc::clone(&plan), batches, 2)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let decided: usize = out.iter().map(|o| o.classes.iter().flatten().count()).collect::<Vec<_>>().len();
+        let correct: usize = out
+            .iter()
+            .flat_map(|o| o.classes.iter())
+            .zip(&w.test_y[..n])
+            .filter(|(c, y)| **c == Some(**y))
+            .count();
+        println!("pipelined serve: {n} requests in {wall:.3}s ({:.0} dec/s wall)", n as f64 / wall);
+        println!("accuracy {:.4} | modeled pipelined throughput {}",
+            correct as f64 / n as f64, eng(plan.timing.throughput_pipe, "dec/s"));
+        let _ = decided;
+        return Ok(());
+    }
+
+    let mut coord = Coordinator::new(&cfg, w.lut.clone(), &m, &vref, p)?;
+    let t0 = std::time::Instant::now();
+    let mut responses = Vec::with_capacity(n);
+    for (i, x) in w.test_x[..n].iter().enumerate() {
+        coord.submit(InferenceRequest::new(i as u64, x.clone()));
+        responses.extend(coord.poll(false)?);
+    }
+    responses.extend(coord.poll(true)?);
+    let wall = t0.elapsed().as_secs_f64();
+    coord.metrics.wall_total = wall;
+
+    responses.sort_by_key(|r| r.id);
+    let correct = responses
+        .iter()
+        .zip(&w.test_y[..n])
+        .filter(|(r, y)| r.class == Some(**y))
+        .count();
+    println!("engine={} dataset={name} S={s} batch={batch}", engine.name());
+    println!("served {} requests in {wall:.3} s", responses.len());
+    println!("accuracy          : {:.4} (golden {:.4})", correct as f64 / n as f64, w.golden_accuracy());
+    println!("modeled energy/dec: {}", eng(coord.metrics.energy_per_dec(), "J"));
+    println!("modeled latency   : {}", eng(coord.plan().timing.latency, "s"));
+    println!("modeled seq t-put : {}", eng(coord.plan().timing.throughput_seq, "dec/s"));
+    println!("wall-clock t-put  : {:.0} dec/s", coord.metrics.wall_throughput());
+    println!("{}", coord.metrics.summary_line());
+    Ok(())
+}
+
+/// `dt2cam report`: regenerate paper tables/figures.
+pub fn report(args: &mut Args) -> Result<()> {
+    let all = args.flag("all");
+    let quick = args.flag("quick");
+    let tables_sel = args.opt_all("table");
+    let figs_sel = args.opt_all("fig");
+    let out_dir = args.opt_str("out-dir");
+    args.finish()?;
+
+    let p = DeviceParams::default();
+    let mut output = String::new();
+
+    let want = |sel: &[String], key: &str, all: bool| -> bool {
+        all || sel.iter().any(|s| s == key)
+    };
+
+    if want(&tables_sel, "2", all) {
+        output.push_str(&tables::render_table2(&tables::table2()?));
+        output.push('\n');
+    }
+    if want(&tables_sel, "4", all) {
+        output.push_str(&tables::render_table4(&tables::table4(&p)));
+        output.push('\n');
+    }
+    // Workloads for table 5 / figs 6-8 (credit is heavy: skip in quick).
+    let fig_sets_needed = want(&tables_sel, "5", all)
+        || want(&figs_sel, "6", all)
+        || want(&figs_sel, "7", all)
+        || want(&figs_sel, "8", all);
+    let mut workloads: Vec<Workload> = Vec::new();
+    if fig_sets_needed {
+        let names: Vec<&str> = if quick {
+            vec!["iris", "haberman", "cancer"]
+        } else {
+            vec![
+                "iris", "diabetes", "haberman", "car", "cancer", "titanic", "covid", "credit",
+            ]
+        };
+        for n in names {
+            eprintln!("preparing workload {n}...");
+            workloads.push(Workload::prepare(n)?);
+        }
+    }
+    let wrefs: Vec<&Workload> = workloads.iter().collect();
+
+    if want(&tables_sel, "5", all) {
+        output.push_str(&tables::render_table5(&tables::table5(&wrefs)));
+        output.push('\n');
+    }
+    if want(&tables_sel, "6", all) {
+        output.push_str(&tables::render_table6(&tables::table6(&p)));
+        output.push('\n');
+    }
+    if want(&figs_sel, "6", all) {
+        let mut pts = Vec::new();
+        for w in &wrefs {
+            // Credit at small S is a 530x224 grid; still fine with the
+            // input cap, but skip S=16 for credit in quick mode.
+            eprintln!("fig6: {}", w.dataset.name);
+            pts.extend(figures::fig6(w, &p));
+        }
+        output.push_str(&figures::render_fig6(&pts));
+        output.push('\n');
+    }
+    if want(&figs_sel, "7", all) {
+        let grid = if quick {
+            NonidealGrid::quick()
+        } else {
+            NonidealGrid::default()
+        };
+        for name in ["diabetes", "covid", "cancer"] {
+            if let Some(w) = wrefs.iter().find(|w| w.dataset.name == name) {
+                eprintln!("fig7: {name}");
+                output.push_str(&figures::render_fig7(&figures::fig7(w, &p, &grid)));
+                output.push('\n');
+            }
+        }
+    }
+    if want(&figs_sel, "8", all) {
+        eprintln!("fig8...");
+        let pts = figures::fig8(&wrefs, &p, &[0.0, 0.1, 0.5], if quick { 1 } else { 3 });
+        output.push_str(&figures::render_fig8(&pts));
+        output.push('\n');
+    }
+    if want(&figs_sel, "9", all) {
+        output.push_str(&figures::render_fig9(&figures::fig9(&p)));
+        output.push('\n');
+    }
+
+    if output.is_empty() {
+        output = format!("nothing selected\n{}", super::HELP);
+    }
+    print!("{output}");
+    if let Some(dir) = out_dir {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("report.txt");
+        std::fs::write(&path, &output)?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        let mut a =
+            Args::parse(s.split_whitespace().map(String::from).collect()).unwrap();
+        a.take_subcommand();
+        a
+    }
+
+    #[test]
+    fn compile_command_runs() {
+        compile(&mut args("compile --dataset iris --tile-size 16")).unwrap();
+    }
+
+    #[test]
+    fn simulate_command_runs_with_faults() {
+        simulate_cmd(&mut args(
+            "simulate --dataset iris --tile-size 16 --saf 0.5 --sigma-sa 0.03 --sigma-input 0.01 --max-inputs 10",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn report_tables_quick() {
+        report(&mut args("report --table 4 --table 6")).unwrap();
+    }
+
+    #[test]
+    fn missing_dataset_is_error() {
+        assert!(compile(&mut args("compile")).is_err());
+    }
+}

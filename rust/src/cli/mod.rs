@@ -1,0 +1,48 @@
+//! Command-line interface (no `clap` offline — hand-rolled parser).
+//!
+//! ```text
+//! dt2cam compile  --dataset iris [--tile-size 128] [--seed N]
+//! dt2cam simulate --dataset iris --tile-size 64 [--saf 0.5] [--sigma-sa 0.05]
+//!                 [--sigma-input 0.01] [--no-sp] [--max-inputs N]
+//! dt2cam serve    --dataset covid --tile-size 128 --engine pjrt|native
+//!                 [--batch 32] [--requests N] [--pipelined]
+//! dt2cam report   --all | --table 2|4|5|6 | --fig 6|7|8|9  [--quick]
+//!                 [--out-dir reports]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::{bail, Result};
+
+/// Entry point for the `dt2cam` binary.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::parse(argv)?;
+    let cmd = args.take_subcommand().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "compile" => commands::compile(&mut args),
+        "simulate" => commands::simulate_cmd(&mut args),
+        "serve" => commands::serve(&mut args),
+        "report" => commands::report(&mut args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `dt2cam help`)"),
+    }
+}
+
+pub const HELP: &str = "\
+dt2cam — Decision Tree to Content Addressable Memory framework
+
+USAGE:
+  dt2cam compile  --dataset NAME [--tile-size S]
+  dt2cam simulate --dataset NAME --tile-size S [--saf PCT] [--sigma-sa V]
+                  [--sigma-input SIG] [--no-sp] [--max-inputs N]
+  dt2cam serve    --dataset NAME --tile-size S [--engine pjrt|native]
+                  [--batch B] [--requests N] [--pipelined]
+  dt2cam report   [--all] [--table N]... [--fig N]... [--quick] [--out-dir DIR]
+  dt2cam help
+";

@@ -1,0 +1,319 @@
+//! Step 4 — ternary adaptive encoding (paper §II.A.4, Fig 1).
+//!
+//! Per feature `i`: collect the `T_i` unique thresholds over all reduced
+//! rows; `n_i = T_i + 1` bits encode the `n_i` exclusive ranges
+//! `(-inf, th_1], (th_1, th_2], ..., (th_Ti, +inf)` as ascending *normal
+//! unary* codes `00..01, 00..11, ..., 11..11`. A rule spanning ranges
+//! `[LB, UB]` is encoded as `u_LB` with the positions where
+//! `XOR(u_LB, u_UB) == 1` replaced by don't-care — so any input whose
+//! range falls inside the span matches in the TCAM.
+//!
+//! The "adaptive precision" is that `n_i` varies per feature — features
+//! with few distinct split thresholds cost few bits (the paper's
+//! compactness claim; the `ablation_encoding` bench quantifies it against
+//! fixed-width encoding).
+
+use super::reduce::Rule;
+
+/// Ternary storage symbol of one TCAM cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trit {
+    Zero,
+    One,
+    /// Don't care ('x' in the paper): matches both query bits.
+    X,
+}
+
+impl Trit {
+    /// Digital match semantics of one cell.
+    #[inline]
+    pub fn matches(self, bit: bool) -> bool {
+        match self {
+            Trit::Zero => !bit,
+            Trit::One => bit,
+            Trit::X => true,
+        }
+    }
+
+    pub fn to_char(self) -> char {
+        match self {
+            Trit::Zero => '0',
+            Trit::One => '1',
+            Trit::X => 'x',
+        }
+    }
+}
+
+/// Encoder for one feature: its sorted unique thresholds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureEncoder {
+    thresholds: Vec<f64>,
+}
+
+impl FeatureEncoder {
+    /// Build from the thresholds appearing in this feature's column of the
+    /// reduced table (paper: `T_i = |∪_j {Th1_ij, Th2_ij}|`).
+    pub fn from_rules<'a>(rules: impl Iterator<Item = &'a Rule>) -> FeatureEncoder {
+        let mut ths: Vec<f64> = rules
+            .flat_map(|r| [r.th1, r.th2])
+            .filter(|t| t.is_finite())
+            .collect();
+        ths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ths.dedup();
+        FeatureEncoder { thresholds: ths }
+    }
+
+    pub fn from_thresholds(mut ths: Vec<f64>) -> FeatureEncoder {
+        ths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ths.dedup();
+        FeatureEncoder { thresholds: ths }
+    }
+
+    /// `T_i` — number of unique thresholds.
+    pub fn n_thresholds(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    /// `n_i = T_i + 1` — encoded bit width (Eqn 1).
+    pub fn n_bits(&self) -> usize {
+        self.thresholds.len() + 1
+    }
+
+    pub fn thresholds(&self) -> &[f64] {
+        &self.thresholds
+    }
+
+    /// Which exclusive range contains `x`? Range k is `(th_{k-1}, th_k]`;
+    /// range 0 is `(-inf, th_0]`, range `n_bits-1` is `(th_last, +inf)`.
+    pub fn range_index(&self, x: f64) -> usize {
+        // Number of thresholds strictly below x == partition point of
+        // `th < x` (upper bounds are inclusive: x == th_k stays in range k).
+        self.thresholds.partition_point(|&th| th < x)
+    }
+
+    /// Normal-form unary code of range `k`: `k+1` ones in the low
+    /// (rightmost) positions, zeros above. MSB-first vector.
+    pub fn code_for_range(&self, k: usize) -> Vec<Trit> {
+        let n = self.n_bits();
+        assert!(k < n, "range index {k} out of {n}");
+        (0..n)
+            .map(|pos| {
+                if pos >= n - 1 - k {
+                    Trit::One
+                } else {
+                    Trit::Zero
+                }
+            })
+            .collect()
+    }
+
+    /// Encode an input value: the plain (no don't-care) code of its range.
+    pub fn encode_input(&self, x: f64) -> Vec<bool> {
+        self.code_for_range(self.range_index(x))
+            .into_iter()
+            .map(|t| t == Trit::One)
+            .collect()
+    }
+
+    /// Encode a rule (paper Eqns 3–4): find the span `[LB, UB]` of
+    /// exclusive ranges the rule covers, then take `u_LB` with the
+    /// XOR-differing positions replaced by don't-care.
+    pub fn encode_rule(&self, rule: &Rule) -> Vec<Trit> {
+        let (lo, hi) = rule.bounds();
+        // LB: first range whose content exceeds `lo`. `lo` is either -inf
+        // or one of the thresholds (rule bounds come from tree splits).
+        let lb = if lo.is_infinite() {
+            0
+        } else {
+            // lo is threshold index t -> ranges above it start at t+1.
+            let t = self.index_of(lo);
+            t + 1
+        };
+        let ub = if hi.is_infinite() {
+            self.n_bits() - 1
+        } else {
+            self.index_of(hi)
+        };
+        assert!(lb <= ub, "rule spans empty range ({lo}, {hi}]");
+        let u_lb = self.code_for_range(lb);
+        let u_ub = self.code_for_range(ub);
+        // XOR(u_LB, u_UB) == 1 exactly where the codes differ.
+        u_lb.iter()
+            .zip(&u_ub)
+            .map(|(&a, &b)| if a != b { Trit::X } else { a })
+            .collect()
+    }
+
+    fn index_of(&self, th: f64) -> usize {
+        self.thresholds
+            .iter()
+            .position(|&t| t == th)
+            .unwrap_or_else(|| panic!("threshold {th} not in encoder set"))
+    }
+}
+
+/// Render a trit string (tests / debug dumps; Fig 1 notation).
+pub fn trits_to_string(ts: &[Trit]) -> String {
+    ts.iter().map(|t| t.to_char()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::reduce::Comparator;
+    use crate::testkit::property;
+
+    /// The paper's Fig 1 encoder: thresholds {0.8, 1.5, 1.65, 1.75}.
+    fn fig1() -> FeatureEncoder {
+        FeatureEncoder::from_thresholds(vec![0.8, 1.5, 1.65, 1.75])
+    }
+
+    fn rule(c: Comparator, th1: f64, th2: f64) -> Rule {
+        Rule {
+            comparator: c,
+            th1,
+            th2,
+        }
+    }
+
+    #[test]
+    fn fig1_unary_codes() {
+        let e = fig1();
+        assert_eq!(e.n_bits(), 5);
+        let codes: Vec<String> = (0..5).map(|k| trits_to_string(&e.code_for_range(k))).collect();
+        assert_eq!(codes, ["00001", "00011", "00111", "01111", "11111"]);
+    }
+
+    #[test]
+    fn fig1_rule_le_08() {
+        // rule: f <= 0.8 -> spans only range 0 -> 00001 (paper text).
+        let e = fig1();
+        let t = e.encode_rule(&rule(Comparator::Le, 0.8, f64::NAN));
+        assert_eq!(trits_to_string(&t), "00001");
+    }
+
+    #[test]
+    fn fig1_rule_between_165_175() {
+        // ]1.65, 1.75] -> range 3 -> 01111 (paper text).
+        let e = fig1();
+        let t = e.encode_rule(&rule(Comparator::InBetween, 1.65, 1.75));
+        assert_eq!(trits_to_string(&t), "01111");
+    }
+
+    #[test]
+    fn fig1_union_range_08_165() {
+        // ]0.8, 1.65] spans ranges 1..2: XOR(00011, 00111)=00100 -> 00x11.
+        let e = fig1();
+        let t = e.encode_rule(&rule(Comparator::InBetween, 0.8, 1.65));
+        assert_eq!(trits_to_string(&t), "00x11");
+    }
+
+    #[test]
+    fn fig1_union_range_15_inf() {
+        // ]1.5, +inf) spans last three ranges -> xx111 (paper text).
+        let e = fig1();
+        let t = e.encode_rule(&rule(Comparator::Gt, 1.5, f64::NAN));
+        assert_eq!(trits_to_string(&t), "xx111");
+    }
+
+    #[test]
+    fn input_encoding_picks_exclusive_range() {
+        let e = fig1();
+        let as_str = |x: f64| -> String {
+            e.encode_input(x)
+                .iter()
+                .map(|&b| if b { '1' } else { '0' })
+                .collect()
+        };
+        assert_eq!(as_str(0.5), "00001");
+        assert_eq!(as_str(0.8), "00001"); // inclusive upper bound
+        assert_eq!(as_str(0.81), "00011");
+        assert_eq!(as_str(1.5), "00011");
+        assert_eq!(as_str(1.6), "00111");
+        assert_eq!(as_str(1.75), "01111");
+        assert_eq!(as_str(1.76), "11111");
+        assert_eq!(as_str(99.0), "11111");
+        assert_eq!(as_str(-99.0), "00001");
+    }
+
+    #[test]
+    fn no_threshold_feature_uses_one_bit() {
+        let e = FeatureEncoder::from_thresholds(vec![]);
+        assert_eq!(e.n_bits(), 1);
+        assert_eq!(e.encode_input(0.3), vec![true]);
+        let t = e.encode_rule(&Rule::none());
+        assert_eq!(trits_to_string(&t), "1");
+    }
+
+    #[test]
+    fn none_rule_matches_every_input() {
+        let e = fig1();
+        let t = e.encode_rule(&Rule::none());
+        assert_eq!(trits_to_string(&t), "xxxx1");
+        for x in [-1.0, 0.8, 1.2, 1.7, 5.0] {
+            let q = e.encode_input(x);
+            assert!(t.iter().zip(&q).all(|(tr, &b)| tr.matches(b)));
+        }
+    }
+
+    #[test]
+    fn encode_decode_membership_property() {
+        // THE encoding-correctness property (paper's bijective-mapping
+        // claim): input x TCAM-matches encoded rule r  <=>  r.matches(x).
+        property("ternary code membership == rule membership", 60, |g| {
+            let t_count = g.usize_in(1, 8);
+            let ths: Vec<f64> = {
+                let mut v: Vec<f64> =
+                    (0..t_count).map(|_| g.f64_in(0.0, 1.0)).collect();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v.dedup();
+                v
+            };
+            let e = FeatureEncoder::from_thresholds(ths.clone());
+            // Random rule with bounds drawn from the threshold set.
+            let kind = g.usize_in(0, 4);
+            let pick = |g: &mut crate::testkit::Gen| ths[g.usize_in(0, ths.len())];
+            let r = match kind {
+                0 => rule(Comparator::Le, pick(g), f64::NAN),
+                1 => rule(Comparator::Gt, pick(g), f64::NAN),
+                2 => {
+                    let a = pick(g);
+                    let b = pick(g);
+                    if a < b {
+                        rule(Comparator::InBetween, a, b)
+                    } else if b < a {
+                        rule(Comparator::InBetween, b, a)
+                    } else {
+                        rule(Comparator::Le, a, f64::NAN)
+                    }
+                }
+                _ => Rule::none(),
+            };
+            let code = e.encode_rule(&r);
+            (0..40).all(|_| {
+                // Probe on and around thresholds plus uniform points.
+                let x = if g.bool() {
+                    g.f64_in(-0.5, 1.5)
+                } else {
+                    let th = ths[g.usize_in(0, ths.len())];
+                    th + g.pick(&[-1e-9, 0.0, 1e-9])
+                };
+                let q = e.encode_input(x);
+                let cam = code.iter().zip(&q).all(|(tr, &b)| tr.matches(b));
+                cam == r.matches(x)
+            })
+        });
+    }
+
+    #[test]
+    fn adaptive_width_equals_t_plus_one() {
+        property("n_i = T_i + 1", 30, |g| {
+            let t = g.usize_in(0, 12);
+            let mut ths: Vec<f64> = (0..t).map(|_| g.f64_in(0.0, 1.0)).collect();
+            ths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ths.dedup();
+            let e = FeatureEncoder::from_thresholds(ths.clone());
+            e.n_bits() == ths.len() + 1
+        });
+    }
+}

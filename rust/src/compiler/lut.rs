@@ -1,0 +1,319 @@
+//! LUT assembly: the DT-HW compiler's final product (Fig 2, right panel).
+//!
+//! Rows = tree paths; columns = concatenated per-feature adaptive unary
+//! fields; plus `⌈log2 C⌉` binary class bits per row (stored downstream in
+//! 1T1R cells, not in the TCAM). [`Lut`] also owns the per-feature
+//! encoders so inputs can be encoded into query bit-vectors, and provides
+//! the digital reference search used by tests and the golden-accuracy
+//! check (§IV.B).
+
+use crate::cart::Tree;
+use crate::util::ceil_log2;
+
+use super::encode::{FeatureEncoder, Trit};
+use super::parse::parse_tree;
+use super::reduce::{reduce_paths, ReducedRow};
+
+/// Compiled ternary look-up table.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    /// `stored[r]` is row r's trit string of length [`Lut::width`].
+    pub stored: Vec<Vec<Trit>>,
+    /// Class label per row.
+    pub classes: Vec<usize>,
+    /// Binary class bits per row (MSB first, `⌈log2 n_classes⌉` wide).
+    pub class_bits: Vec<Vec<bool>>,
+    /// Per-feature encoders (input encoding on the request path).
+    pub encoders: Vec<FeatureEncoder>,
+    /// Column offset of each feature's field.
+    pub offsets: Vec<usize>,
+    pub n_classes: usize,
+    /// The reduced rule table (kept for diagnostics and tests).
+    pub reduced: Vec<ReducedRow>,
+}
+
+impl Lut {
+    /// Number of LUT rows (= tree paths = `N_branches`).
+    pub fn n_rows(&self) -> usize {
+        self.stored.len()
+    }
+
+    /// Encoded row width `Σ n_i` (Table V "LUT Size" columns).
+    pub fn width(&self) -> usize {
+        self.offsets.last().map_or(0, |&o| {
+            o + self.encoders.last().map_or(0, |e| e.n_bits())
+        })
+    }
+
+    /// `n_total` of Eqn 2: rows * width.
+    pub fn n_total(&self) -> usize {
+        self.n_rows() * self.width()
+    }
+
+    /// Class bit width.
+    pub fn class_width(&self) -> usize {
+        ceil_log2(self.n_classes)
+    }
+
+    /// Encode a feature vector into a query bit string of length
+    /// [`Lut::width`] (per-feature adaptive unary codes, concatenated).
+    pub fn encode_input(&self, x: &[f64]) -> Vec<bool> {
+        assert_eq!(x.len(), self.encoders.len(), "feature arity mismatch");
+        let mut out = Vec::with_capacity(self.width());
+        for (e, &v) in self.encoders.iter().zip(x) {
+            out.extend(e.encode_input(v));
+        }
+        out
+    }
+
+    /// Digital reference match of one query against one row.
+    pub fn row_matches(&self, row: usize, query: &[bool]) -> bool {
+        self.stored[row]
+            .iter()
+            .zip(query)
+            .all(|(t, &b)| t.matches(b))
+    }
+
+    /// Digital reference search: indices of all matching rows.
+    pub fn matching_rows(&self, query: &[bool]) -> Vec<usize> {
+        (0..self.n_rows())
+            .filter(|&r| self.row_matches(r, query))
+            .collect()
+    }
+
+    /// Classify by LUT search (reference path; the hardware does this in
+    /// one TCAM shot). Returns `None` if no row matches — impossible for
+    /// in-domain inputs by the partition property, possible only after
+    /// fault injection.
+    pub fn classify(&self, x: &[f64]) -> Option<usize> {
+        let q = self.encode_input(x);
+        let rows = self.matching_rows(&q);
+        rows.first().map(|&r| self.classes[r])
+    }
+
+    /// Fixed-width (non-adaptive) total bit count, for the encoding
+    /// ablation: every feature padded to the widest field.
+    pub fn fixed_precision_total_bits(&self) -> usize {
+        let widest = self.encoders.iter().map(|e| e.n_bits()).max().unwrap_or(0);
+        self.n_rows() * widest * self.encoders.len()
+    }
+
+    /// Render row `r` like the paper's figures ("00x11 ...").
+    pub fn row_to_string(&self, r: usize) -> String {
+        let mut s = String::with_capacity(self.width() + self.encoders.len());
+        for (f, e) in self.encoders.iter().enumerate() {
+            if f > 0 {
+                s.push(' ');
+            }
+            let off = self.offsets[f];
+            for t in &self.stored[r][off..off + e.n_bits()] {
+                s.push(t.to_char());
+            }
+        }
+        s
+    }
+}
+
+/// Run the full DT-HW compile: tree → parsed paths → reduced rules →
+/// ternary LUT.
+pub fn compile(tree: &Tree) -> Lut {
+    let rows = parse_tree(tree);
+    let reduced = reduce_paths(&rows, tree.n_features);
+
+    // Per-feature encoders over the reduced table's threshold columns.
+    let encoders: Vec<FeatureEncoder> = (0..tree.n_features)
+        .map(|f| FeatureEncoder::from_rules(reduced.iter().map(|r| &r.rules[f])))
+        .collect();
+    let mut offsets = Vec::with_capacity(encoders.len());
+    let mut acc = 0;
+    for e in &encoders {
+        offsets.push(acc);
+        acc += e.n_bits();
+    }
+
+    let stored: Vec<Vec<Trit>> = reduced
+        .iter()
+        .map(|row| {
+            let mut bits = Vec::with_capacity(acc);
+            for (f, e) in encoders.iter().enumerate() {
+                bits.extend(e.encode_rule(&row.rules[f]));
+            }
+            bits
+        })
+        .collect();
+
+    let n_classes = tree.n_classes;
+    let cw = ceil_log2(n_classes);
+    let classes: Vec<usize> = reduced.iter().map(|r| r.class).collect();
+    let class_bits = classes
+        .iter()
+        .map(|&c| (0..cw).map(|b| (c >> (cw - 1 - b)) & 1 == 1).collect())
+        .collect();
+
+    Lut {
+        stored,
+        classes,
+        class_bits,
+        encoders,
+        offsets,
+        n_classes,
+        reduced,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, Node, TrainParams, Tree};
+    use crate::compiler::encode::trits_to_string;
+    use crate::dataset::iris;
+    use crate::testkit::property;
+
+    /// Fig 2 miniature (petal-width only): 3 paths, thresholds {0.8,1.75}.
+    fn fig2_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal {
+                    feature: 0,
+                    threshold: 0.8,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf {
+                    class: 0,
+                    n_samples: 50,
+                },
+                Node::Internal {
+                    feature: 0,
+                    threshold: 1.75,
+                    left: 3,
+                    right: 4,
+                },
+                Node::Leaf {
+                    class: 1,
+                    n_samples: 54,
+                },
+                Node::Leaf {
+                    class: 2,
+                    n_samples: 46,
+                },
+            ],
+            n_features: 1,
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn fig2_lut_is_three_bits_wide() {
+        // PW has two unique thresholds -> 3 bits (paper §II.B).
+        let lut = compile(&fig2_tree());
+        assert_eq!(lut.width(), 3);
+        assert_eq!(lut.n_rows(), 3);
+        assert_eq!(trits_to_string(&lut.stored[0]), "001"); // PW <= 0.8
+        assert_eq!(trits_to_string(&lut.stored[1]), "011"); // 0.8 < PW <= 1.75
+        assert_eq!(trits_to_string(&lut.stored[2]), "111"); // PW > 1.75
+        assert_eq!(lut.classes, vec![0, 1, 2]);
+        // 3 classes -> 2 class bits.
+        assert_eq!(lut.class_width(), 2);
+        assert_eq!(lut.class_bits[2], vec![true, false]);
+    }
+
+    #[test]
+    fn fig2_classification_by_search() {
+        let lut = compile(&fig2_tree());
+        assert_eq!(lut.classify(&[0.2]), Some(0));
+        assert_eq!(lut.classify(&[0.8]), Some(0));
+        assert_eq!(lut.classify(&[1.0]), Some(1));
+        assert_eq!(lut.classify(&[1.75]), Some(1));
+        assert_eq!(lut.classify(&[2.0]), Some(2));
+    }
+
+    #[test]
+    fn iris_lut_matches_tree_predictions_exactly() {
+        // The paper's §IV.B golden-accuracy claim at the digital level.
+        let d = iris::load();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        for x in &d.features {
+            assert_eq!(lut.classify(x), Some(tree.predict(x)));
+        }
+    }
+
+    #[test]
+    fn iris_lut_size_is_paperlike() {
+        // Table V: Iris LUT is 9 x 12 for the authors' 90% split. Ours
+        // trains on all 150 rows, so allow the same order of magnitude.
+        let d = iris::load();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        assert!(
+            (5..=25).contains(&lut.n_rows()),
+            "rows {}",
+            lut.n_rows()
+        );
+        assert!(
+            (8..=40).contains(&lut.width()),
+            "width {}",
+            lut.width()
+        );
+    }
+
+    #[test]
+    fn exactly_one_match_partition_property() {
+        // End-to-end DT-HW invariant: every input matches exactly one LUT
+        // row and inherits the tree's class.
+        property("LUT partition + class agreement", 20, |g| {
+            let n = g.usize_in(20, 120);
+            let f = g.usize_in(1, 5);
+            let classes = g.usize_in(2, 5);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+            let tree = train(&xs, &ys, classes, &TrainParams::default());
+            let lut = compile(&tree);
+            (0..40).all(|_| {
+                let x: Vec<f64> = (0..f).map(|_| g.f64_in(-0.2, 1.2)).collect();
+                let q = lut.encode_input(&x);
+                let rows = lut.matching_rows(&q);
+                rows.len() == 1 && lut.classes[rows[0]] == tree.predict(&x)
+            })
+        });
+    }
+
+    #[test]
+    fn width_is_sum_of_adaptive_fields() {
+        property("width = sum n_i (Eqn 2)", 15, |g| {
+            let n = g.usize_in(20, 100);
+            let f = g.usize_in(1, 5);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 2)).collect();
+            let lut = compile(&train(&xs, &ys, 2, &TrainParams::default()));
+            let sum: usize = lut.encoders.iter().map(|e| e.n_bits()).sum();
+            lut.width() == sum
+                && lut.n_total() == lut.n_rows() * sum
+                && lut.stored.iter().all(|r| r.len() == sum)
+        });
+    }
+
+    #[test]
+    fn adaptive_never_wider_than_fixed() {
+        property("adaptive <= fixed precision", 15, |g| {
+            let n = g.usize_in(20, 100);
+            let f = g.usize_in(2, 6);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 3)).collect();
+            let lut = compile(&train(&xs, &ys, 3, &TrainParams::default()));
+            lut.n_total() <= lut.fixed_precision_total_bits()
+        });
+    }
+
+    #[test]
+    fn class_bits_roundtrip() {
+        let lut = compile(&fig2_tree());
+        for (r, &c) in lut.classes.iter().enumerate() {
+            let decoded = lut.class_bits[r]
+                .iter()
+                .fold(0usize, |acc, &b| (acc << 1) | usize::from(b));
+            assert_eq!(decoded, c);
+        }
+    }
+}

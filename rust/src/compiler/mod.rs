@@ -1,0 +1,25 @@
+//! DT-HW compiler (paper §II.A): decision tree graph → ternary LUT.
+//!
+//! Pipeline, exactly the paper's four steps:
+//!
+//! 1. **Decision tree graph generation** — [`crate::cart`] (CART).
+//! 2. **Tree parsing** ([`parse`]) — every root→leaf path becomes a row of
+//!    raw conditions.
+//! 3. **Column reduction** ([`reduce`]) — conditions per (row, feature)
+//!    collapse into one rule: comparator ∈ {LE, GT, InBetween, None} with
+//!    thresholds Th1/Th2 (paper's '0'/'1'/'2'/NaN states).
+//! 4. **Ternary adaptive encoding** ([`encode`]) — per feature i,
+//!    `n_i = T_i + 1` unary bits over the feature's unique thresholds;
+//!    rules spanning several exclusive ranges take don't-care bits via the
+//!    XOR/Replace construction (Fig 1). [`lut`] assembles the final LUT
+//!    with binary class bits.
+
+pub mod encode;
+pub mod lut;
+pub mod parse;
+pub mod reduce;
+
+pub use encode::{FeatureEncoder, Trit};
+pub use lut::{compile, Lut};
+pub use parse::{parse_tree, PathRow};
+pub use reduce::{reduce_paths, Comparator, ReducedRow, Rule};

@@ -1,0 +1,103 @@
+//! Step 2 — tree parsing (paper §II.A.2).
+//!
+//! Walks every root→leaf path of a trained CART tree and records the raw
+//! condition sequence. One [`PathRow`] per leaf; row count = number of
+//! paths = the LUT's row count downstream.
+
+use crate::cart::Tree;
+
+/// One parsed root→leaf path: the ordered raw conditions plus the leaf
+/// class. A condition `(feature, threshold, is_le)` reads
+/// `x[feature] <= threshold` when `is_le`, else `x[feature] > threshold`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PathRow {
+    pub conditions: Vec<(usize, f64, bool)>,
+    pub class: usize,
+}
+
+/// Parse a tree into its table of conditions (Fig 2, second panel).
+pub fn parse_tree(tree: &Tree) -> Vec<PathRow> {
+    tree.paths()
+        .into_iter()
+        .map(|(conditions, class)| PathRow { conditions, class })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{Node, Tree};
+
+    /// The paper's Fig 2 miniature: PW <= 0.8 -> Setosa(0); PW > 0.8 &&
+    /// PW <= 1.75 -> Versicolor(1); PW > 0.8 && PW > 1.75 -> Virginica(2).
+    /// Feature 0 = petal width.
+    pub fn fig2_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node::Internal {
+                    feature: 0,
+                    threshold: 0.8,
+                    left: 1,
+                    right: 2,
+                },
+                Node::Leaf {
+                    class: 0,
+                    n_samples: 50,
+                },
+                Node::Internal {
+                    feature: 0,
+                    threshold: 1.75,
+                    left: 3,
+                    right: 4,
+                },
+                Node::Leaf {
+                    class: 1,
+                    n_samples: 54,
+                },
+                Node::Leaf {
+                    class: 2,
+                    n_samples: 46,
+                },
+            ],
+            n_features: 1,
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn fig2_parses_to_three_rows() {
+        let rows = parse_tree(&fig2_tree());
+        assert_eq!(rows.len(), 3);
+        // Row 1 (leftmost path): PW <= 0.8 -> class 0.
+        assert_eq!(rows[0].conditions, vec![(0, 0.8, true)]);
+        assert_eq!(rows[0].class, 0);
+        // Row 2: PW > 0.8, PW <= 1.75 -> class 1.
+        assert_eq!(rows[1].conditions, vec![(0, 0.8, false), (0, 1.75, true)]);
+        assert_eq!(rows[1].class, 1);
+        // Row 3 (rightmost): PW > 0.8, PW > 1.75 -> class 2.
+        assert_eq!(rows[2].conditions, vec![(0, 0.8, false), (0, 1.75, false)]);
+        assert_eq!(rows[2].class, 2);
+    }
+
+    #[test]
+    fn row_count_equals_leaf_count() {
+        let t = fig2_tree();
+        assert_eq!(parse_tree(&t).len(), t.n_leaves());
+    }
+
+    #[test]
+    fn single_leaf_tree_gives_unconditioned_row() {
+        let t = Tree {
+            nodes: vec![Node::Leaf {
+                class: 1,
+                n_samples: 10,
+            }],
+            n_features: 2,
+            n_classes: 2,
+        };
+        let rows = parse_tree(&t);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].conditions.is_empty());
+        assert_eq!(rows[0].class, 1);
+    }
+}

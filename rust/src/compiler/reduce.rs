@@ -1,0 +1,233 @@
+//! Step 3 — column reduction (paper §II.A.3).
+//!
+//! Per path, all conditions on one feature collapse into a single rule.
+//! Because a decision tree path intersects half-open intervals, the result
+//! is always one continuous range `(lb, ub]` (possibly unbounded on either
+//! side), expressed with the paper's three-state comparator + Th1/Th2:
+//!
+//! * `'0'` (LE):        x <= Th1          — only an upper bound
+//! * `'1'` (GT):        x  > Th1          — only a lower bound
+//! * `'2'` (InBetween): Th1 < x <= Th2    — both
+//! * `NaN` (None):      no rule on this feature in this row
+
+use super::parse::PathRow;
+
+/// Paper's comparator states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Comparator {
+    /// '0': `x <= th1`.
+    Le,
+    /// '1': `x > th1`.
+    Gt,
+    /// '2': `th1 < x <= th2`.
+    InBetween,
+    /// 'NaN': feature unconstrained in this row.
+    None,
+}
+
+/// One reduced rule on one feature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rule {
+    pub comparator: Comparator,
+    /// Th1 (lower bound for GT/InBetween, upper bound for LE).
+    pub th1: f64,
+    /// Th2 (upper bound, InBetween only).
+    pub th2: f64,
+}
+
+impl Rule {
+    pub fn none() -> Rule {
+        Rule {
+            comparator: Comparator::None,
+            th1: f64::NAN,
+            th2: f64::NAN,
+        }
+    }
+
+    /// Does `x` satisfy this rule? (Reference semantics for tests and the
+    /// end-to-end equivalence property.)
+    pub fn matches(&self, x: f64) -> bool {
+        match self.comparator {
+            Comparator::Le => x <= self.th1,
+            Comparator::Gt => x > self.th1,
+            Comparator::InBetween => x > self.th1 && x <= self.th2,
+            Comparator::None => true,
+        }
+    }
+
+    /// Range view: `(lower_exclusive, upper_inclusive)` with infinities.
+    pub fn bounds(&self) -> (f64, f64) {
+        match self.comparator {
+            Comparator::Le => (f64::NEG_INFINITY, self.th1),
+            Comparator::Gt => (self.th1, f64::INFINITY),
+            Comparator::InBetween => (self.th1, self.th2),
+            Comparator::None => (f64::NEG_INFINITY, f64::INFINITY),
+        }
+    }
+}
+
+/// One reduced row: a rule per feature + the class (Fig 2, third panel).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReducedRow {
+    pub rules: Vec<Rule>,
+    pub class: usize,
+}
+
+impl ReducedRow {
+    /// Does the full feature vector satisfy every rule in the row?
+    pub fn matches(&self, x: &[f64]) -> bool {
+        self.rules.iter().zip(x).all(|(r, &v)| r.matches(v))
+    }
+}
+
+/// Collapse each parsed path into one rule per feature.
+///
+/// A `<=` condition tightens the upper bound (min), a `>` condition
+/// tightens the lower bound (max). Tree construction guarantees
+/// lb < ub on every live path, which we assert.
+pub fn reduce_paths(rows: &[PathRow], n_features: usize) -> Vec<ReducedRow> {
+    rows.iter()
+        .map(|row| {
+            let mut lb = vec![f64::NEG_INFINITY; n_features];
+            let mut ub = vec![f64::INFINITY; n_features];
+            for &(feature, th, is_le) in &row.conditions {
+                if is_le {
+                    ub[feature] = ub[feature].min(th);
+                } else {
+                    lb[feature] = lb[feature].max(th);
+                }
+            }
+            let rules = (0..n_features)
+                .map(|f| {
+                    debug_assert!(
+                        lb[f] < ub[f],
+                        "dead path: feature {f} has empty range ({}, {}]",
+                        lb[f],
+                        ub[f]
+                    );
+                    match (lb[f].is_infinite(), ub[f].is_infinite()) {
+                        (true, true) => Rule::none(),
+                        (true, false) => Rule {
+                            comparator: Comparator::Le,
+                            th1: ub[f],
+                            th2: f64::NAN,
+                        },
+                        (false, true) => Rule {
+                            comparator: Comparator::Gt,
+                            th1: lb[f],
+                            th2: f64::NAN,
+                        },
+                        (false, false) => Rule {
+                            comparator: Comparator::InBetween,
+                            th1: lb[f],
+                            th2: ub[f],
+                        },
+                    }
+                })
+                .collect();
+            ReducedRow {
+                rules,
+                class: row.class,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::parse::parse_tree;
+    use crate::testkit::property;
+
+    fn row(conds: Vec<(usize, f64, bool)>, class: usize) -> PathRow {
+        PathRow {
+            conditions: conds,
+            class,
+        }
+    }
+
+    #[test]
+    fn fig2_reduction() {
+        // Paper Fig 2: (PW > 0.8, PW > 1.75) reduces to PW > 1.75 ('1').
+        let rows = vec![row(vec![(0, 0.8, false), (0, 1.75, false)], 2)];
+        let red = reduce_paths(&rows, 1);
+        assert_eq!(red[0].rules[0].comparator, Comparator::Gt);
+        assert_eq!(red[0].rules[0].th1, 1.75);
+    }
+
+    #[test]
+    fn le_chain_takes_min() {
+        let rows = vec![row(vec![(0, 2.0, true), (0, 1.5, true)], 0)];
+        let red = reduce_paths(&rows, 1);
+        assert_eq!(red[0].rules[0].comparator, Comparator::Le);
+        assert_eq!(red[0].rules[0].th1, 1.5);
+    }
+
+    #[test]
+    fn mixed_conditions_become_in_between() {
+        let rows = vec![row(vec![(0, 0.8, false), (0, 1.75, true)], 1)];
+        let red = reduce_paths(&rows, 1);
+        let r = red[0].rules[0];
+        assert_eq!(r.comparator, Comparator::InBetween);
+        assert_eq!(r.th1, 0.8);
+        assert_eq!(r.th2, 1.75);
+        assert!(r.matches(1.0));
+        assert!(r.matches(1.75)); // upper bound inclusive
+        assert!(!r.matches(0.8)); // lower bound exclusive
+        assert!(!r.matches(2.0));
+    }
+
+    #[test]
+    fn untouched_feature_is_none() {
+        let rows = vec![row(vec![(1, 0.5, true)], 0)];
+        let red = reduce_paths(&rows, 3);
+        assert_eq!(red[0].rules[0].comparator, Comparator::None);
+        assert_eq!(red[0].rules[1].comparator, Comparator::Le);
+        assert_eq!(red[0].rules[2].comparator, Comparator::None);
+        assert!(red[0].rules[0].matches(123.0));
+    }
+
+    #[test]
+    fn exactly_one_row_matches_any_input() {
+        // Rows of a decision tree partition the input space: every input
+        // matches exactly one reduced row. This is THE invariant that
+        // makes TCAM search correct (one surviving row, paper §II.C).
+        property("reduced rows partition the space", 25, |g| {
+            let n = g.usize_in(20, 150);
+            let f = g.usize_in(1, 5);
+            let classes = g.usize_in(2, 4);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+            let tree = train(&xs, &ys, classes, &TrainParams::default());
+            let reduced = reduce_paths(&parse_tree(&tree), f);
+            // Random probes, not just training points.
+            (0..50).all(|_| {
+                let x: Vec<f64> = (0..f).map(|_| g.f64_in(-0.2, 1.2)).collect();
+                reduced.iter().filter(|r| r.matches(&x)).count() == 1
+            })
+        });
+    }
+
+    #[test]
+    fn reduced_row_class_matches_tree_prediction() {
+        property("reduction preserves classification", 25, |g| {
+            let n = g.usize_in(20, 150);
+            let f = g.usize_in(1, 4);
+            let classes = g.usize_in(2, 4);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+            let tree = train(&xs, &ys, classes, &TrainParams::default());
+            let reduced = reduce_paths(&parse_tree(&tree), f);
+            (0..30).all(|_| {
+                let x: Vec<f64> = (0..f).map(|_| g.f64_in(0.0, 1.0)).collect();
+                let want = tree.predict(&x);
+                reduced
+                    .iter()
+                    .find(|r| r.matches(&x))
+                    .map(|r| r.class == want)
+                    .unwrap_or(false)
+            })
+        });
+    }
+}

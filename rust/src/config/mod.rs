@@ -1,0 +1,9 @@
+//! Configuration system: a dependency-free JSON value type + parser
+//! ([`json`]) and the typed run configuration ([`schema`]) consumed by the
+//! CLI, the coordinator, and the report harness.
+
+pub mod json;
+pub mod schema;
+
+pub use json::Json;
+pub use schema::{EngineKind, RunConfig, ScheduleMode};

@@ -1,0 +1,275 @@
+//! Typed run configuration.
+//!
+//! A [`RunConfig`] fully describes one DT2CAM experiment: dataset, tree
+//! hyper-parameters, tile geometry, engine (PJRT artifacts vs native
+//! simulator), scheduling mode, non-idealities and seeds. It loads from a
+//! JSON file (`dt2cam serve --config run.json`) or from CLI flags, and is
+//! echoed into every report so results are reproducible.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+/// Which execution engine evaluates tile matches on the request path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT-compiled HLO artifacts executed through the PJRT CPU client.
+    Pjrt,
+    /// Pure-Rust analog simulator (oracle / fallback).
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "pjrt" => Ok(EngineKind::Pjrt),
+            "native" => Ok(EngineKind::Native),
+            other => bail!("unknown engine '{other}' (expected pjrt|native)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::Native => "native",
+        }
+    }
+}
+
+/// Column-division scheduling mode (paper §IV.C, Table VI "P" rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Column-wise tiles operate sequentially per input (selective
+    /// precharge semantics, Fig 4).
+    Sequential,
+    /// Column-wise tiles form a pipeline; initiation interval is 3 cycles
+    /// (precharge / evaluate / sense do not overlap on one tile).
+    Pipelined,
+}
+
+impl ScheduleMode {
+    pub fn parse(s: &str) -> Result<ScheduleMode> {
+        match s {
+            "sequential" | "seq" => Ok(ScheduleMode::Sequential),
+            "pipelined" | "pipe" => Ok(ScheduleMode::Pipelined),
+            other => bail!("unknown schedule '{other}' (expected sequential|pipelined)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleMode::Sequential => "sequential",
+            ScheduleMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Full experiment configuration with paper-faithful defaults.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Dataset name (see `dataset::catalog`).
+    pub dataset: String,
+    /// Train fraction (paper: 0.9).
+    pub train_fraction: f64,
+    /// CART maximum depth (0 = unlimited, paper uses unpruned trees).
+    pub max_depth: usize,
+    /// CART minimum samples to split a node.
+    pub min_samples_split: usize,
+    /// TCAM tile size S (16/32/64/128, Table IV).
+    pub tile_size: usize,
+    /// Serving batch width (must match a lowered artifact for PJRT).
+    pub batch: usize,
+    /// Execution engine.
+    pub engine: EngineKind,
+    /// Sequential vs pipelined column divisions.
+    pub schedule: ScheduleMode,
+    /// Selective precharge enabled (Fig 5; Fig 6c ablates this).
+    pub selective_precharge: bool,
+    /// Stuck-at-0 probability per resistive device (fraction, not %).
+    pub saf0: f64,
+    /// Stuck-at-1 probability per resistive device.
+    pub saf1: f64,
+    /// Sense-amp Vref variability sigma (V).
+    pub sigma_sa: f64,
+    /// Input encoding noise sigma (on normalized features).
+    pub sigma_input: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Artifact directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "iris".to_string(),
+            train_fraction: 0.9,
+            max_depth: 0,
+            min_samples_split: 2,
+            tile_size: 128,
+            batch: 32,
+            engine: EngineKind::Native,
+            schedule: ScheduleMode::Sequential,
+            selective_precharge: true,
+            saf0: 0.0,
+            saf1: 0.0,
+            sigma_sa: 0.0,
+            sigma_input: 0.0,
+            seed: 0xD72CA0,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; unknown keys are rejected (typo safety).
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<RunConfig> {
+        let j = Json::parse(text).context("parsing config JSON")?;
+        let mut cfg = RunConfig::default();
+        let Json::Obj(fields) = &j else {
+            bail!("config root must be an object");
+        };
+        for (k, v) in fields {
+            match k.as_str() {
+                "dataset" => cfg.dataset = req_str(v, k)?,
+                "train_fraction" => cfg.train_fraction = req_f64(v, k)?,
+                "max_depth" => cfg.max_depth = req_usize(v, k)?,
+                "min_samples_split" => cfg.min_samples_split = req_usize(v, k)?,
+                "tile_size" => cfg.tile_size = req_usize(v, k)?,
+                "batch" => cfg.batch = req_usize(v, k)?,
+                "engine" => cfg.engine = EngineKind::parse(&req_str(v, k)?)?,
+                "schedule" => cfg.schedule = ScheduleMode::parse(&req_str(v, k)?)?,
+                "selective_precharge" => {
+                    cfg.selective_precharge =
+                        v.as_bool().with_context(|| format!("field {k} must be bool"))?
+                }
+                "saf0" => cfg.saf0 = req_f64(v, k)?,
+                "saf1" => cfg.saf1 = req_f64(v, k)?,
+                "sigma_sa" => cfg.sigma_sa = req_f64(v, k)?,
+                "sigma_input" => cfg.sigma_input = req_f64(v, k)?,
+                "seed" => cfg.seed = req_usize(v, k)? as u64,
+                "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.train_fraction) || self.train_fraction <= 0.0 {
+            bail!("train_fraction must be in (0,1)");
+        }
+        if ![16, 32, 64, 128].contains(&self.tile_size) {
+            bail!("tile_size must be one of 16/32/64/128 (Table IV)");
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        for (name, p) in [("saf0", self.saf0), ("saf1", self.saf1)] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{name} must be a probability in [0,1]");
+            }
+        }
+        if self.sigma_sa < 0.0 || self.sigma_input < 0.0 {
+            bail!("sigmas must be non-negative");
+        }
+        Ok(())
+    }
+
+    /// Echo as JSON (embedded into reports).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("train_fraction", Json::num(self.train_fraction)),
+            ("max_depth", Json::num(self.max_depth as f64)),
+            ("min_samples_split", Json::num(self.min_samples_split as f64)),
+            ("tile_size", Json::num(self.tile_size as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("engine", Json::str(self.engine.name())),
+            ("schedule", Json::str(self.schedule.name())),
+            ("selective_precharge", Json::Bool(self.selective_precharge)),
+            ("saf0", Json::num(self.saf0)),
+            ("saf1", Json::num(self.saf1)),
+            ("sigma_sa", Json::num(self.sigma_sa)),
+            ("sigma_input", Json::num(self.sigma_input)),
+            ("seed", Json::num(self.seed as f64)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+        ])
+    }
+}
+
+fn req_str(v: &Json, k: &str) -> Result<String> {
+    Ok(v.as_str()
+        .with_context(|| format!("field {k} must be a string"))?
+        .to_string())
+}
+
+fn req_f64(v: &Json, k: &str) -> Result<f64> {
+    v.as_f64().with_context(|| format!("field {k} must be a number"))
+}
+
+fn req_usize(v: &Json, k: &str) -> Result<usize> {
+    v.as_usize()
+        .with_context(|| format!("field {k} must be a non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_json() {
+        let cfg = RunConfig {
+            dataset: "covid".into(),
+            tile_size: 64,
+            engine: EngineKind::Pjrt,
+            schedule: ScheduleMode::Pipelined,
+            saf0: 0.005,
+            ..RunConfig::default()
+        };
+        let text = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json_text(&text).unwrap();
+        assert_eq!(back.dataset, "covid");
+        assert_eq!(back.tile_size, 64);
+        assert_eq!(back.engine, EngineKind::Pjrt);
+        assert_eq!(back.schedule, ScheduleMode::Pipelined);
+        assert!((back.saf0 - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(RunConfig::from_json_text(r#"{"datset": "iris"}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_tile_size() {
+        assert!(RunConfig::from_json_text(r#"{"tile_size": 100}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_probability() {
+        assert!(RunConfig::from_json_text(r#"{"saf0": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn parses_enums() {
+        assert!(EngineKind::parse("bogus").is_err());
+        assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
+        assert_eq!(ScheduleMode::parse("pipe").unwrap(), ScheduleMode::Pipelined);
+    }
+}

@@ -1,0 +1,143 @@
+//! Dynamic batcher: groups incoming requests into fixed-width batches.
+//!
+//! The TCAM searches all rows in one shot regardless of how many lanes
+//! carry real queries, so the artifact batch width B is a *hardware*
+//! quantity; the batcher's job is classic serving-systems work — fill
+//! lanes quickly, never hold a request past its deadline, pad partial
+//! batches with dead lanes.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub features: Vec<f64>,
+    pub arrived: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, features: Vec<f64>) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            features,
+            arrived: Instant::now(),
+        }
+    }
+}
+
+/// Deadline-driven fixed-width batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<InferenceRequest>,
+    batch_width: usize,
+    max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(batch_width: usize, max_wait: Duration) -> Batcher {
+        assert!(batch_width >= 1);
+        Batcher {
+            queue: VecDeque::new(),
+            batch_width,
+            max_wait,
+        }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn batch_width(&self) -> usize {
+        self.batch_width
+    }
+
+    /// Take the next batch if one is ready: either a full batch, or a
+    /// partial one whose oldest request has waited past `max_wait`.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<InferenceRequest>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.batch_width;
+        let overdue = now.duration_since(self.queue[0].arrived) >= self.max_wait;
+        if !full && !overdue {
+            return None;
+        }
+        let n = self.queue.len().min(self.batch_width);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Drain everything into batches (end-of-stream flush).
+    pub fn flush(&mut self) -> Vec<Vec<InferenceRequest>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.batch_width);
+            out.push(self.queue.drain(..n).collect());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, vec![0.0])
+    }
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let mut b = Batcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        b.push(req(0));
+        assert!(b.next_batch(Instant::now()).is_none());
+        let later = Instant::now() + Duration::from_millis(60);
+        let batch = b.next_batch(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn oversize_queue_yields_width_sized_batches() {
+        let mut b = Batcher::new(3, Duration::from_secs(1));
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 3);
+        assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 3);
+        assert!(b.next_batch(Instant::now()).is_none()); // 1 left, not due
+        let flushed = b.flush();
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(2, Duration::from_secs(1));
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let ids: Vec<u64> = b
+            .next_batch(Instant::now())
+            .unwrap()
+            .iter()
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+}

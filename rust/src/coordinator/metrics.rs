@@ -1,0 +1,118 @@
+//! Serving metrics: modeled hardware cost + wall-clock software cost.
+
+use std::time::Duration;
+
+use crate::util::stats::OnlineStats;
+
+/// Aggregated over a serving run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub decisions: u64,
+    pub no_match: u64,
+    pub multi_match: u64,
+    /// Modeled energy total (J).
+    pub modeled_energy: f64,
+    /// Modeled active row-division evaluations.
+    pub active_row_evals: u64,
+    /// Wall-clock per batch (s).
+    pub batch_wall: OnlineStats,
+    /// Request queueing delay (s).
+    pub queue_delay: OnlineStats,
+    /// Total serving wall time (s).
+    pub wall_total: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(
+        &mut self,
+        real_lanes: usize,
+        modeled_energy: f64,
+        active_rows: u64,
+        no_match: usize,
+        multi_match: usize,
+        wall: Duration,
+    ) {
+        self.batches += 1;
+        self.decisions += real_lanes as u64;
+        self.modeled_energy += modeled_energy;
+        self.active_row_evals += active_rows;
+        self.no_match += no_match as u64;
+        self.multi_match += multi_match as u64;
+        self.batch_wall.push(wall.as_secs_f64());
+    }
+
+    pub fn record_request(&mut self, queue_delay: Duration) {
+        self.requests += 1;
+        self.queue_delay.push(queue_delay.as_secs_f64());
+    }
+
+    /// Modeled energy per decision (J).
+    pub fn energy_per_dec(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.modeled_energy / self.decisions as f64
+        }
+    }
+
+    /// Wall-clock decisions per second of this software incarnation.
+    pub fn wall_throughput(&self) -> f64 {
+        if self.wall_total > 0.0 {
+            self.decisions as f64 / self.wall_total
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "requests={} decisions={} batches={} e/dec={:.3} nJ rows/dec={:.1} \
+             wall-throughput={:.0} dec/s no_match={} multi_match={}",
+            self.requests,
+            self.decisions,
+            self.batches,
+            self.energy_per_dec() * 1e9,
+            if self.decisions > 0 {
+                self.active_row_evals as f64 / self.decisions as f64
+            } else {
+                0.0
+            },
+            self.wall_throughput(),
+            self.no_match,
+            self.multi_match,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(10));
+        m.record_request(Duration::from_micros(20));
+        m.record_batch(2, 1e-9, 100, 0, 0, Duration::from_micros(50));
+        m.wall_total = 1.0;
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.decisions, 2);
+        assert!((m.energy_per_dec() - 0.5e-9).abs() < 1e-18);
+        assert_eq!(m.wall_throughput(), 2.0);
+        assert!(m.summary_line().contains("decisions=2"));
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.energy_per_dec(), 0.0);
+        assert_eq!(m.wall_throughput(), 0.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 serving coordinator — the system that puts DT2CAM on a request path.
+//!
+//! vLLM-router-shaped: requests (feature vectors) enter through the
+//! [`batcher`], the [`scheduler`] walks each batch across the column-wise
+//! divisions with selective-precharge semantics (Fig 4/5) executing every
+//! row-wise tile per division, and [`metrics`] accounts both the *modeled*
+//! hardware cost (nJ/dec, ns/dec from the synthesizer's device model) and
+//! the *wall-clock* cost of this software incarnation.
+//!
+//! Two engines drive tile matches:
+//! * `pjrt` — the AOT artifacts through [`crate::runtime::MatchEngine`]
+//!   (single executor thread; XLA's intra-op pool + stacked-division
+//!   artifacts provide parallelism);
+//! * `native` — [`crate::tcam::sim`] on the thread pool (row-wise tiles in
+//!   parallel, like the hardware's parallel row tiles).
+//!
+//! [`pipeline`] implements the paper's pipelined mode (Table VI "P" rows):
+//! one thread per column division connected by bounded channels.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod plan;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, InferenceRequest};
+pub use metrics::Metrics;
+pub use plan::ServingPlan;
+pub use scheduler::{BatchOutcome, Scheduler};
+pub use server::{Coordinator, InferenceResponse};

@@ -1,0 +1,254 @@
+//! Pipelined mode (paper Table VI "P" rows, Fig 4).
+//!
+//! One worker thread per column division, connected by bounded channels:
+//! batch k can be in division d+1 while batch k+1 is in division d —
+//! exactly the hardware's pipelining of column-wise tiles. The *modeled*
+//! pipelined throughput is `f_max / 3` independent of N_cwd (Table VI:
+//! 333 M dec/s at S=128); this module demonstrates the software analogue
+//! and measures its wall-clock scaling against the sequential walk.
+//!
+//! Native engine only: the PJRT client is single-threaded by construction
+//! (`Rc`), so the pipelined request path uses the f32 simulator — same
+//! numerics, same plan buffers.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::plan::ServingPlan;
+
+/// A batch travelling through the pipeline.
+struct PipeBatch {
+    seq: u64,
+    /// Per-lane padded query bits.
+    queries: Vec<Vec<bool>>,
+    real_lanes: usize,
+    /// Per-lane enable mask over padded rows.
+    enabled: Vec<Vec<bool>>,
+    /// Modeled active-row evaluations accumulated so far.
+    active_rows: u64,
+}
+
+/// Result of one pipelined batch.
+#[derive(Clone, Debug)]
+pub struct PipeOutcome {
+    pub seq: u64,
+    pub classes: Vec<Option<usize>>,
+    pub active_row_evals: u64,
+    pub no_match: usize,
+    pub multi_match: usize,
+}
+
+/// Stage worker: evaluate one division for a batch. Density-adaptive like
+/// the sequential scheduler (§Perf): a vectorizable dense gather when most
+/// rows are still enabled (stage 0), scalar sparse evaluation afterwards.
+fn run_stage(plan: &ServingPlan, d: usize, batch: &mut PipeBatch) {
+    let s = plan.s;
+    let div = &plan.divisions[d];
+    let col0 = d * s;
+    let mut g_dense = vec![0.0f32; s];
+    for lane in 0..batch.queries.len() {
+        let active = batch.enabled[lane].iter().filter(|&&e| e).count();
+        if lane < batch.real_lanes {
+            batch.active_rows += active as u64;
+        }
+        let bits = &batch.queries[lane][col0..col0 + s];
+        let en = &mut batch.enabled[lane];
+        let dense = active * 8 >= plan.padded_rows;
+        for rt in 0..plan.n_rwd {
+            let w_tile = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+            let gthresh_tile = &div.gthresh[rt * s..(rt + 1) * s];
+            if dense {
+                g_dense.iter_mut().for_each(|x| *x = 0.0);
+                for (j, &b) in bits.iter().enumerate() {
+                    let row_w = &w_tile
+                        [(2 * j + usize::from(b)) * s..(2 * j + usize::from(b) + 1) * s];
+                    for (acc, &wv) in g_dense.iter_mut().zip(row_w) {
+                        *acc += wv;
+                    }
+                }
+                for r in 0..s {
+                    let idx = rt * s + r;
+                    // Log-domain SA compare (§Perf): no exp per row.
+                    en[idx] = en[idx] && g_dense[r] < gthresh_tile[r];
+                }
+            } else {
+                // Selective precharge: only still-enabled rows evaluate.
+                for r in 0..s {
+                    let idx = rt * s + r;
+                    if !en[idx] {
+                        continue;
+                    }
+                    let mut g = 0.0f32;
+                    for (j, &b) in bits.iter().enumerate() {
+                        g += w_tile[(2 * j + usize::from(b)) * s + r];
+                    }
+                    en[idx] = g < gthresh_tile[r];
+                }
+            }
+        }
+    }
+}
+
+/// Run a stream of batches through the division pipeline. Returns
+/// outcomes in stream order.
+pub fn run_pipeline(
+    plan: Arc<ServingPlan>,
+    batches: Vec<(Vec<Vec<bool>>, usize)>,
+    channel_depth: usize,
+) -> Result<Vec<PipeOutcome>> {
+    let n_stages = plan.n_cwd;
+    let n_batches = batches.len();
+
+    // Stage 0 input channel.
+    let (tx0, rx0): (SyncSender<PipeBatch>, Receiver<PipeBatch>) =
+        sync_channel(channel_depth.max(1));
+
+    let mut handles = Vec::new();
+    let mut prev_rx = rx0;
+    for d in 0..n_stages {
+        let (tx_next, rx_next) = sync_channel::<PipeBatch>(channel_depth.max(1));
+        let plan = Arc::clone(&plan);
+        let rx = prev_rx;
+        handles.push(std::thread::spawn(move || {
+            for mut batch in rx {
+                run_stage(&plan, d, &mut batch);
+                if tx_next.send(batch).is_err() {
+                    return;
+                }
+            }
+        }));
+        prev_rx = rx_next;
+    }
+
+    // Feeder: initializes the enable masks (rogue rows gated out).
+    let feeder = {
+        let plan = Arc::clone(&plan);
+        std::thread::spawn(move || {
+            for (seq, (queries, real_lanes)) in batches.into_iter().enumerate() {
+                let lanes = queries.len();
+                let enabled: Vec<Vec<bool>> = (0..lanes)
+                    .map(|_| {
+                        let mut v = vec![false; plan.padded_rows];
+                        v[..plan.initially_active].fill(true);
+                        v
+                    })
+                    .collect();
+                let batch = PipeBatch {
+                    seq: seq as u64,
+                    enabled,
+                    queries,
+                    real_lanes,
+                    active_rows: 0,
+                };
+                if tx0.send(batch).is_err() {
+                    return;
+                }
+            }
+        })
+    };
+
+    // Collector (this thread).
+    let mut outcomes = Vec::with_capacity(n_batches);
+    for mut batch in prev_rx {
+        let mut classes = Vec::with_capacity(batch.queries.len());
+        let mut no_match = 0;
+        let mut multi_match = 0;
+        for (lane, en) in batch.enabled.iter().enumerate() {
+            if lane >= batch.real_lanes {
+                classes.push(None);
+                continue;
+            }
+            let mut survivors = en.iter().enumerate().filter(|(_, &e)| e).map(|(i, _)| i);
+            match (survivors.next(), survivors.next()) {
+                (None, _) => {
+                    no_match += 1;
+                    classes.push(None);
+                }
+                (Some(first), None) => classes.push(Some(plan.classes[first])),
+                (Some(first), Some(_)) => {
+                    multi_match += 1;
+                    classes.push(Some(plan.classes[first]));
+                }
+            }
+        }
+        outcomes.push(PipeOutcome {
+            seq: batch.seq,
+            classes,
+            active_row_evals: batch.active_rows,
+            no_match,
+            multi_match,
+        });
+        batch.enabled.clear();
+        if outcomes.len() == n_batches {
+            break;
+        }
+    }
+    feeder.join().ok();
+    for h in handles {
+        h.join().ok();
+    }
+    outcomes.sort_by_key(|o| o.seq);
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::coordinator::scheduler::{EngineRef, Scheduler};
+    use crate::dataset::catalog;
+    use crate::synth::mapping::MappedArray;
+    use crate::tcam::params::DeviceParams;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn pipeline_agrees_with_sequential_scheduler() {
+        let mut d = catalog::by_name("haberman", 0xD72CA0).unwrap();
+        d.normalize();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(3);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        assert!(m.n_cwd > 1, "pipeline needs several stages");
+        let plan = Arc::new(ServingPlan::build(&m, &m.vref, &p));
+
+        let batches: Vec<(Vec<Vec<bool>>, usize)> = d.features[..48]
+            .chunks(16)
+            .map(|chunk| {
+                let qs: Vec<Vec<bool>> = chunk
+                    .iter()
+                    .map(|x| m.pad_query(&lut.encode_input(x)))
+                    .collect();
+                let n = qs.len();
+                (qs, n)
+            })
+            .collect();
+
+        let piped = run_pipeline(Arc::clone(&plan), batches.clone(), 2).unwrap();
+
+        let sched = Scheduler::new(&plan, &p);
+        for (i, (qs, real)) in batches.iter().enumerate() {
+            let seq = sched.run_batch(&EngineRef::Native, qs, *real).unwrap();
+            assert_eq!(piped[i].classes, seq.classes, "batch {i}");
+            assert_eq!(piped[i].active_row_evals, seq.active_row_evals);
+        }
+    }
+
+    #[test]
+    fn pipeline_handles_empty_stream() {
+        let mut d = catalog::by_name("iris", 0).unwrap();
+        d.normalize();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(3);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        let plan = Arc::new(ServingPlan::build(&m, &m.vref, &p));
+        let out = run_pipeline(plan, vec![], 1).unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,204 @@
+//! Serving plan: everything the hot path needs, precomputed.
+//!
+//! Built once from a compiled LUT + mapped array (+ any injected faults):
+//! per-division conductance buffers in the artifact's `[T, 2S, S]` layout,
+//! f32 reference-voltage buffers, T_opt/C_in scalars, and the input
+//! encoder. Building W here keeps the request path allocation-free and
+//! makes fault injection a plan-rebuild, never a recompile.
+
+use crate::compiler::Lut;
+use crate::synth::mapping::MappedArray;
+use crate::tcam::cell::Cell;
+use crate::tcam::params::DeviceParams;
+
+/// Per column-division precomputed buffers.
+#[derive(Clone, Debug)]
+pub struct DivisionPlan {
+    /// Stacked conductances `[n_rwd, 2S, S]` (artifact W layout).
+    pub w: Vec<f32>,
+    /// Stacked per-row references `[n_rwd, S]` — row-tile r's slice covers
+    /// padded rows `r*S .. (r+1)*S` of this division.
+    pub vref: Vec<f32>,
+    /// T_opt / C_in for this division.
+    pub toc: f32,
+    /// Log-domain match thresholds (§Perf): `V > vref` with
+    /// `V = VDD·e^(−toc·G)` is equivalent to `G < −ln(vref/VDD)/toc`, so
+    /// the native hot path compares conductance sums against this
+    /// precomputed per-row bound and never calls `exp`. Same layout as
+    /// `vref`; `+inf` where `vref <= 0` (always match).
+    pub gthresh: Vec<f32>,
+}
+
+/// The full plan.
+#[derive(Clone, Debug)]
+pub struct ServingPlan {
+    /// Unique id (per build) — keys the engine's device-buffer cache.
+    pub plan_id: u64,
+    pub s: usize,
+    pub n_rwd: usize,
+    pub n_cwd: usize,
+    pub padded_rows: usize,
+    pub real_rows: usize,
+    pub divisions: Vec<DivisionPlan>,
+    /// Class per padded row.
+    pub classes: Vec<usize>,
+    pub n_classes: usize,
+    /// Rows initially enabled (rogue rows gated out).
+    pub initially_active: usize,
+    /// Modeled timing (from the synthesizer's device model).
+    pub timing: crate::synth::latency::TimingReport,
+    /// Modeled per-active-row energy + class-read energy.
+    pub e_row: f64,
+    pub e_mem: f64,
+}
+
+impl ServingPlan {
+    /// Precompute the plan from a mapped array. `vref` is the (possibly
+    /// variability-perturbed) per-(division, row) reference vector.
+    pub fn build(m: &MappedArray, vref: &[f64], p: &DeviceParams) -> ServingPlan {
+        assert_eq!(vref.len(), m.n_cwd * m.padded_rows);
+        let s = m.s;
+        let mut divisions = Vec::with_capacity(m.n_cwd);
+        for (d, div) in m.divisions.iter().enumerate() {
+            let mut w = vec![0.0f32; m.n_rwd * 2 * s * s];
+            let mut vr = vec![0.0f32; m.n_rwd * s];
+            for rt in 0..m.n_rwd {
+                let w_tile = &mut w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+                for local_r in 0..s {
+                    let r = rt * s + local_r;
+                    let base = r * m.padded_width;
+                    for (local_c, c) in (div.col_start..div.col_end).enumerate() {
+                        let cell = Cell::from_byte(m.cells[base + c]);
+                        // W[2j+b][row] within the tile, row-major [2S, S].
+                        w_tile[(2 * local_c) * s + local_r] =
+                            cell.g_active(false, p) as f32;
+                        w_tile[(2 * local_c + 1) * s + local_r] =
+                            cell.g_active(true, p) as f32;
+                    }
+                    vr[rt * s + local_r] = vref[d * m.padded_rows + r] as f32;
+                }
+            }
+            let toc = (div.t_sense / p.c_in) as f32;
+            let gthresh = vr
+                .iter()
+                .map(|&v| {
+                    if v <= 0.0 {
+                        f32::INFINITY
+                    } else {
+                        -((v as f64 / p.vdd).ln() as f32) / toc
+                    }
+                })
+                .collect();
+            divisions.push(DivisionPlan {
+                w,
+                vref: vr,
+                toc,
+                gthresh,
+            });
+        }
+        static NEXT_PLAN_ID: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(1);
+        ServingPlan {
+            plan_id: NEXT_PLAN_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            s,
+            n_rwd: m.n_rwd,
+            n_cwd: m.n_cwd,
+            padded_rows: m.padded_rows,
+            real_rows: m.real_rows,
+            divisions,
+            classes: m.classes.clone(),
+            n_classes: m.n_classes,
+            initially_active: m.initially_active_rows(),
+            timing: crate::synth::latency::timing(m, p),
+            e_row: p.e_row_active(),
+            e_mem: p.e_mem,
+        }
+    }
+
+    /// Encode one feature vector into the padded one-hot Q row
+    /// (`[2S * n_cwd]` split per division at execution time): returns the
+    /// padded query *bits* (the per-division Q rows are bit slices).
+    pub fn encode(&self, lut: &Lut, m_padded_width: usize, x: &[f64]) -> Vec<bool> {
+        let mut q = Vec::with_capacity(m_padded_width);
+        q.push(false); // decoder bit
+        for (e, &v) in lut.encoders.iter().zip(x) {
+            q.extend(e.encode_input(v));
+        }
+        q.resize(m_padded_width, false);
+        q
+    }
+
+    /// Memory footprint of the precomputed W buffers (bytes).
+    pub fn w_bytes(&self) -> usize {
+        self.divisions.iter().map(|d| d.w.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::iris;
+    use crate::tcam::sim::{self, TileView};
+    use crate::util::prng::Prng;
+
+    fn setup() -> (MappedArray, Lut, DeviceParams) {
+        let d = iris::load();
+        let lut = compile(&train(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &TrainParams::default(),
+        ));
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(5);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        (m, lut, p)
+    }
+
+    #[test]
+    fn plan_w_matches_sim_conductance_matrix() {
+        let (m, _lut, p) = setup();
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        // Compare division 0, row tile 0 against a TileView window.
+        let div = &m.divisions[0];
+        let vref_d = vec![div.vref_nominal; m.padded_rows];
+        let view = TileView {
+            cells: &m.cells,
+            rows: m.s,
+            cols: m.s,
+            row_stride: m.padded_width,
+            row_offset: 0,
+            col_offset: div.col_start,
+            vref: &vref_d,
+            t_opt_over_c: div.t_sense / p.c_in,
+        };
+        let w_ref = sim::conductance_matrix(&view, &p);
+        assert_eq!(&plan.divisions[0].w[..w_ref.len()], &w_ref[..]);
+    }
+
+    #[test]
+    fn plan_dimensions() {
+        let (m, _lut, p) = setup();
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        assert_eq!(plan.divisions.len(), m.n_cwd);
+        for d in &plan.divisions {
+            assert_eq!(d.w.len(), m.n_rwd * 2 * m.s * m.s);
+            assert_eq!(d.vref.len(), m.n_rwd * m.s);
+            assert!(d.toc > 0.0);
+        }
+        assert_eq!(plan.initially_active, m.real_rows);
+        assert!(plan.w_bytes() > 0);
+    }
+
+    #[test]
+    fn encode_matches_mapping_pad_query() {
+        let (m, lut, p) = setup();
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let x = [5.1, 3.5, 1.4, 0.2];
+        let a = plan.encode(&lut, m.padded_width, &x);
+        let b = m.pad_query(&lut.encode_input(&x));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,483 @@
+//! Stage scheduler: one batch across all column divisions (Fig 4).
+//!
+//! Sequential column-wise walk with selective-precharge semantics: a
+//! per-lane enable bitmask over the padded rows is ANDed with each
+//! division's match results; rows disabled for a lane are not counted as
+//! active (energy) in later divisions. Row-wise tiles of a division run in
+//! parallel — on the thread pool (native engine) or inside one stacked
+//! PJRT call (pjrt engine).
+
+use anyhow::Context;
+
+use crate::runtime::MatchEngine;
+use crate::tcam::params::DeviceParams;
+use crate::util::threadpool::parallel_map;
+
+use super::plan::ServingPlan;
+
+/// Engine selection for the scheduler (borrowed per call-site).
+pub enum EngineRef<'a> {
+    /// Native f32 simulator; row tiles fan out over scoped threads.
+    Native,
+    /// PJRT artifacts (single-threaded engine; XLA's intra-op pool and
+    /// the stacked-division artifacts provide the tile parallelism).
+    Pjrt(&'a MatchEngine),
+}
+
+/// Result of scheduling one batch.
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// Predicted class per lane (`None`: dead lane or no survivor).
+    pub classes: Vec<Option<usize>>,
+    /// Modeled energy total over real lanes (J).
+    pub modeled_energy: f64,
+    /// Active row-division evaluations (modeled, real lanes only).
+    pub active_row_evals: u64,
+    pub no_match: usize,
+    pub multi_match: usize,
+}
+
+/// Scheduler over a prepared plan.
+pub struct Scheduler<'a> {
+    pub plan: &'a ServingPlan,
+    pub params: &'a DeviceParams,
+}
+
+/// Match one row tile against a batch, directly from the plan's W layout.
+/// Writes `[lane][local_row]` booleans into `out`.
+///
+/// Two code paths, chosen by activity density (§Perf):
+/// * **dense** — the full vectorizable gather-matmul over all S rows per
+///   lane (first column division, where every row is still enabled);
+/// * **sparse** — per-(lane, enabled-row) scalar evaluation, skipping the
+///   rows selective precharge already disabled. In later divisions only a
+///   handful of rows per lane survive, so this is orders of magnitude
+///   less work (exactly the hardware's SP energy saving, mirrored in
+///   software time).
+fn tile_match_from_w(
+    w_tile: &[f32],
+    gthresh_tile: &[f32],
+    s: usize,
+    lane_bits: &[&[bool]],
+    // Enable mask per lane for this tile's rows (`[lane][local_row]`),
+    // or None = all enabled.
+    enabled: Option<&[&[bool]]>,
+    out: &mut [bool],
+) {
+    debug_assert_eq!(out.len(), lane_bits.len() * s);
+    // Count active (lane, row) pairs to pick the path.
+    let active: usize = match enabled {
+        None => lane_bits.len() * s,
+        Some(en) => en.iter().map(|e| e.iter().filter(|&&x| x).count()).sum(),
+    };
+    let dense_cutoff = lane_bits.len() * s / 8;
+
+    if active >= dense_cutoff || enabled.is_none() {
+        // Dense: per lane, one gather-accumulate across all rows.
+        let mut g = vec![0.0f32; s];
+        for (lane, bits) in lane_bits.iter().enumerate() {
+            debug_assert_eq!(bits.len(), s);
+            g.iter_mut().for_each(|x| *x = 0.0);
+            for (j, &b) in bits.iter().enumerate() {
+                let row_w =
+                    &w_tile[(2 * j + usize::from(b)) * s..(2 * j + usize::from(b) + 1) * s];
+                for (acc, &wv) in g.iter_mut().zip(row_w) {
+                    *acc += wv;
+                }
+            }
+            for r in 0..s {
+                // Log-domain SA compare: no exp on the hot path.
+                out[lane * s + r] = g[r] < gthresh_tile[r];
+            }
+        }
+    } else {
+        // Sparse: touch only enabled (lane, row) pairs.
+        let en = enabled.expect("sparse path requires masks");
+        for (lane, bits) in lane_bits.iter().enumerate() {
+            for r in 0..s {
+                if !en[lane][r] {
+                    continue;
+                }
+                let mut g = 0.0f32;
+                for (j, &b) in bits.iter().enumerate() {
+                    g += w_tile[(2 * j + usize::from(b)) * s + r];
+                }
+                out[lane * s + r] = g < gthresh_tile[r];
+            }
+        }
+    }
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(plan: &'a ServingPlan, params: &'a DeviceParams) -> Scheduler<'a> {
+        Scheduler { plan, params }
+    }
+
+    /// Execute one batch. `queries[lane]` is the padded query bit-vector
+    /// (length `n_cwd * S`); `real_lanes` lanes at the front are live,
+    /// the rest are padding. Dead lanes cost no modeled energy (their SAs
+    /// are gated like rogue rows).
+    pub fn run_batch(
+        &self,
+        engine: &EngineRef<'_>,
+        queries: &[Vec<bool>],
+        real_lanes: usize,
+    ) -> anyhow::Result<BatchOutcome> {
+        let plan = self.plan;
+        let s = plan.s;
+        let lanes = queries.len();
+        assert!(real_lanes <= lanes);
+        for q in queries {
+            assert_eq!(q.len(), plan.n_cwd * s, "query width mismatch");
+        }
+
+        // Per-lane enable mask over padded rows.
+        let mut enabled: Vec<Vec<bool>> = (0..lanes)
+            .map(|_| {
+                let mut v = vec![false; plan.padded_rows];
+                v[..plan.initially_active].fill(true);
+                v
+            })
+            .collect();
+        let mut energy_rows: u64 = 0;
+
+        for (d, div) in plan.divisions.iter().enumerate() {
+            // Modeled energy: active rows of real lanes pay this division.
+            for lane_enabled in enabled.iter().take(real_lanes) {
+                energy_rows += lane_enabled.iter().filter(|&&e| e).count() as u64;
+            }
+
+            // Division query bits per lane.
+            let col0 = d * s;
+            let lane_bits: Vec<&[bool]> =
+                queries.iter().map(|q| &q[col0..col0 + s]).collect();
+
+            // Evaluate all row tiles.
+            let matches: Vec<Vec<bool>> = match engine {
+                EngineRef::Native => {
+                    // [row_tile] -> [lane][local_row]; row-wise tiles in
+                    // parallel, like the hardware (Fig 4). After the first
+                    // division most rows are SP-disabled, so the per-tile
+                    // work collapses to the sparse path and thread fan-out
+                    // stops paying — stay serial once activity is low.
+                    let div_ref = &plan.divisions[d];
+                    let lane_bits_ref = &lane_bits;
+                    let enabled_ref = &enabled;
+                    let total_active: usize = enabled
+                        .iter()
+                        .map(|e| e.iter().filter(|&&x| x).count())
+                        .sum();
+                    let run_tile = move |rt: usize| -> Vec<bool> {
+                        let w_tile = &div_ref.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+                        let gthresh_tile = &div_ref.gthresh[rt * s..(rt + 1) * s];
+                        let en_refs: Vec<&[bool]> = enabled_ref
+                            .iter()
+                            .map(|e| &e[rt * s..(rt + 1) * s])
+                            .collect();
+                        let mut out = vec![false; lane_bits_ref.len() * s];
+                        tile_match_from_w(
+                            w_tile,
+                            gthresh_tile,
+                            s,
+                            lane_bits_ref,
+                            Some(&en_refs),
+                            &mut out,
+                        );
+                        out
+                    };
+                    // Thread fan-out only pays past ~8 row tiles: scoped
+                    // spawn costs ~30-50 us/thread while a dense 128x128
+                    // tile match is ~100-200 us (§Perf measurement).
+                    if total_active >= lanes * s && plan.n_rwd >= 8 {
+                        let jobs: Vec<usize> = (0..plan.n_rwd).collect();
+                        parallel_map(jobs, run_tile)
+                    } else {
+                        (0..plan.n_rwd).map(run_tile).collect()
+                    }
+                }
+                EngineRef::Pjrt(eng) => {
+                    self.run_division_pjrt(eng, d, &lane_bits, lanes)?
+                }
+            };
+
+            // AND the results into the enable masks.
+            for (rt, tile_matches) in matches.iter().enumerate() {
+                for lane in 0..lanes {
+                    let base = rt * s;
+                    let lane_m = &tile_matches[lane * s..(lane + 1) * s];
+                    let en = &mut enabled[lane];
+                    for r in 0..s {
+                        let idx = base + r;
+                        en[idx] = en[idx] && lane_m[r];
+                    }
+                }
+            }
+            let _ = div;
+        }
+
+        // Survivors -> classes.
+        let mut classes = Vec::with_capacity(lanes);
+        let mut no_match = 0;
+        let mut multi_match = 0;
+        for (lane, en) in enabled.iter().enumerate() {
+            if lane >= real_lanes {
+                classes.push(None);
+                continue;
+            }
+            let survivors: Vec<usize> = en
+                .iter()
+                .enumerate()
+                .filter(|(_, &e)| e)
+                .map(|(i, _)| i)
+                .collect();
+            match survivors.len() {
+                0 => {
+                    no_match += 1;
+                    classes.push(None);
+                }
+                1 => classes.push(Some(plan.classes[survivors[0]])),
+                _ => {
+                    multi_match += 1;
+                    // Priority encoder: lowest row wins.
+                    classes.push(Some(plan.classes[survivors[0]]));
+                }
+            }
+        }
+
+        let modeled_energy =
+            energy_rows as f64 * plan.e_row + real_lanes as f64 * plan.e_mem;
+        Ok(BatchOutcome {
+            classes,
+            modeled_energy,
+            active_row_evals: energy_rows,
+            no_match,
+            multi_match,
+        })
+    }
+
+    /// One column division through PJRT, chunking row tiles over the
+    /// available stacked-division artifacts (T ∈ {16, 8, 4, 2}) with the
+    /// plain tile artifact as the T=1 fallback. Lane counts that were
+    /// never lowered are padded up to the nearest available artifact
+    /// batch (padding lanes are all-zero one-hots: G = 0, discarded on
+    /// the way out).
+    fn run_division_pjrt(
+        &self,
+        eng: &MatchEngine,
+        d: usize,
+        lane_bits: &[&[bool]],
+        lanes: usize,
+    ) -> anyhow::Result<Vec<Vec<bool>>> {
+        let plan = self.plan;
+        let s = plan.s;
+        let div = &plan.divisions[d];
+
+        // Artifact batch width: smallest lowered batch >= lanes.
+        let pb = eng
+            .manifest()
+            .best_tile_batch(s, lanes)
+            .with_context(|| format!("no artifacts for tile size {s}"))?;
+        anyhow::ensure!(
+            pb >= lanes,
+            "batch {lanes} exceeds the largest lowered artifact batch {pb}              for S={s}; re-run `make artifacts` with a larger BATCH_SIZES"
+        );
+
+        // Build the Q buffer once per division: [pb, 2S] one-hot.
+        let mut q = vec![0.0f32; pb * 2 * s];
+        for (lane, bits) in lane_bits.iter().enumerate() {
+            let row = &mut q[lane * 2 * s..(lane + 1) * 2 * s];
+            for (j, &b) in bits.iter().enumerate() {
+                row[2 * j + usize::from(b)] = 1.0;
+            }
+        }
+
+        let mut out: Vec<Vec<bool>> = Vec::with_capacity(plan.n_rwd);
+        let mut rt = 0usize;
+        while rt < plan.n_rwd {
+            let remaining = plan.n_rwd - rt;
+            // Exact-fit stacked artifact, or — §Perf — the smallest
+            // *larger* stack padded with zero-conductance dummy tiles
+            // (one PJRT dispatch beats several small ones on CPU; dummy
+            // rows read all-match and are dropped below).
+            let exact = [16usize, 8, 4, 2]
+                .into_iter()
+                .find(|&t| t <= remaining && eng.manifest().division(s, pb, t).is_some());
+            let padded = [2usize, 4, 8, 16]
+                .into_iter()
+                .find(|&t| t >= remaining && eng.manifest().division(s, pb, t).is_some());
+            // Measured on this CPU (EXPERIMENTS.md §Perf): the stacked
+            // artifact's cost grows with T (interpret-mode pallas lowers
+            // to a per-tile loop), so exact chunks beat padding — padding
+            // is only the fallback when no exact stack exists.
+            let (chunk, real) = match (exact, padded) {
+                (Some(t), _) => (t, t),
+                (None, Some(t)) => (t, remaining.min(t)),
+                (None, None) => (1, 1),
+            };
+            // Device-resident constants: W / vref / toc never change
+            // between batches — upload once per (plan, division, range)
+            // and execute with buffers (§Perf: removes the dominant
+            // per-call host→device copy).
+            let bkey = |slot: u64| {
+                (plan.plan_id << 32)
+                    ^ ((d as u64) << 24)
+                    ^ ((rt as u64) << 8)
+                    ^ ((chunk as u64) << 2)
+                    ^ slot
+            };
+            use crate::runtime::ArtifactKind;
+            let toc_buf = eng.cached_buffer(bkey(2), &[div.toc], &[])?;
+            let res = if chunk == 1 {
+                let w = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+                let vr = &div.vref[rt * s..(rt + 1) * s];
+                let w_buf = eng.cached_buffer(bkey(0), w, &[2 * s, s])?;
+                let v_buf = eng.cached_buffer(bkey(1), vr, &[s])?;
+                eng.match_cached(ArtifactKind::Tile, s, pb, 1, &q, &w_buf, &v_buf, &toc_buf)?
+            } else if real == chunk {
+                let w = &div.w[rt * 2 * s * s..(rt + chunk) * 2 * s * s];
+                let vr = &div.vref[rt * s..(rt + chunk) * s];
+                let w_buf = eng.cached_buffer(bkey(0), w, &[chunk, 2 * s, s])?;
+                let v_buf = eng.cached_buffer(bkey(1), vr, &[chunk, s])?;
+                eng.match_cached(
+                    ArtifactKind::Division, s, pb, chunk, &q, &w_buf, &v_buf, &toc_buf,
+                )?
+            } else {
+                // Pad the tail with zero-conductance tiles.
+                let mut w = vec![0.0f32; chunk * 2 * s * s];
+                w[..real * 2 * s * s]
+                    .copy_from_slice(&div.w[rt * 2 * s * s..(rt + real) * 2 * s * s]);
+                let mut vr = vec![0.5f32; chunk * s];
+                vr[..real * s].copy_from_slice(&div.vref[rt * s..(rt + real) * s]);
+                let w_buf = eng.cached_buffer(bkey(0), &w, &[chunk, 2 * s, s])?;
+                let v_buf = eng.cached_buffer(bkey(1), &vr, &[chunk, s])?;
+                eng.match_cached(
+                    ArtifactKind::Division, s, pb, chunk, &q, &w_buf, &v_buf, &toc_buf,
+                )?
+            };
+            // res.matched layout: [chunk, pb, s] -> per row tile, keeping
+            // only the real lanes and real tiles.
+            for t in 0..real {
+                let mut tile = vec![false; lanes * s];
+                for lane in 0..lanes {
+                    for r in 0..s {
+                        tile[lane * s + r] =
+                            res.matched[t * pb * s + lane * s + r] > 0.5;
+                    }
+                }
+                out.push(tile);
+            }
+            rt += real;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::{compile, Lut};
+    use crate::dataset::{catalog, Dataset};
+    use crate::synth::mapping::MappedArray;
+    use crate::util::prng::Prng;
+
+
+    fn setup(name: &str, s: usize) -> (Dataset, Lut, MappedArray, DeviceParams) {
+        let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
+        d.normalize();
+        let (xs, ys) = (&d.features, &d.labels);
+        let tree = train(xs, ys, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(3);
+        let m = MappedArray::from_lut(&lut, s, &p, &mut rng);
+        (d, lut, m, p)
+    }
+
+    #[test]
+    fn native_scheduler_matches_lut_classification() {
+        let (d, lut, m, p) = setup("iris", 16);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+        let engine = EngineRef::Native;
+
+        let queries: Vec<Vec<bool>> = d.features[..32]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+        let out = sched.run_batch(&engine, &queries, 32).unwrap();
+        assert_eq!(out.no_match, 0);
+        assert_eq!(out.multi_match, 0);
+        for (i, x) in d.features[..32].iter().enumerate() {
+            assert_eq!(out.classes[i], lut.classify(x), "lane {i}");
+        }
+        assert!(out.modeled_energy > 0.0);
+    }
+
+    #[test]
+    fn dead_lanes_cost_nothing_and_return_none() {
+        let (d, lut, m, p) = setup("iris", 16);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+        let engine = EngineRef::Native;
+
+        let mut queries: Vec<Vec<bool>> = d.features[..2]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+        queries.push(vec![false; m.padded_width]); // dead lane
+        let out_3 = sched.run_batch(&engine, &queries, 2).unwrap();
+        assert_eq!(out_3.classes[2], None);
+
+        let out_2 = sched
+            .run_batch(&engine, &queries[..2].to_vec(), 2)
+            .unwrap();
+        assert_eq!(out_3.modeled_energy, out_2.modeled_energy);
+    }
+
+    #[test]
+    fn multi_division_sp_masks_propagate() {
+        // haberman at S=16 has multiple divisions; scheduler must agree
+        // with the synthesizer's functional simulation classification.
+        let (d, lut, m, p) = setup("haberman", 16);
+        assert!(m.n_cwd > 1);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+        let engine = EngineRef::Native;
+
+        let queries: Vec<Vec<bool>> = d.features[..16]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+        let out = sched.run_batch(&engine, &queries, 16).unwrap();
+        for (i, x) in d.features[..16].iter().enumerate() {
+            assert_eq!(out.classes[i], lut.classify(x), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn pjrt_and_native_schedulers_agree() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let eng = MatchEngine::new(&dir).unwrap();
+        let (d, lut, m, p) = setup("haberman", 16);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+
+        let queries: Vec<Vec<bool>> = d.features[..32]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+        let native = sched
+            .run_batch(&EngineRef::Native, &queries, 32)
+            .unwrap();
+        let pjrt = sched
+            .run_batch(&EngineRef::Pjrt(&eng), &queries, 32)
+            .unwrap();
+        assert_eq!(native.classes, pjrt.classes);
+        assert_eq!(native.modeled_energy, pjrt.modeled_energy);
+    }
+}

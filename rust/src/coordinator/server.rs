@@ -1,0 +1,231 @@
+//! The coordinator: ties batcher + scheduler + metrics into a serving
+//! loop. This is the `dt2cam serve` engine and the heart of the
+//! `serve_e2e` example.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::compiler::Lut;
+use crate::config::{EngineKind, RunConfig};
+use crate::runtime::MatchEngine;
+use crate::synth::mapping::MappedArray;
+use crate::tcam::params::DeviceParams;
+
+use super::batcher::{Batcher, InferenceRequest};
+use super::metrics::Metrics;
+use super::plan::ServingPlan;
+use super::scheduler::{EngineRef, Scheduler};
+
+/// One answered request.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Predicted class (None = no surviving row under faults).
+    pub class: Option<usize>,
+    /// Modeled per-decision latency of the hardware (s).
+    pub modeled_latency: f64,
+}
+
+/// The serving coordinator. Owns the plan and (optionally) the PJRT
+/// engine; single-threaded facade (PJRT client is `!Send`), with row-tile
+/// parallelism inside the scheduler.
+pub struct Coordinator {
+    plan: ServingPlan,
+    lut: Lut,
+    padded_width: usize,
+    params: DeviceParams,
+    engine_kind: EngineKind,
+    pjrt: Option<MatchEngine>,
+    batcher: Batcher,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    /// Build a coordinator from prepared pieces. For `EngineKind::Pjrt`
+    /// the artifact directory must contain a tile/division set matching
+    /// `cfg.tile_size` and `cfg.batch` (`make artifacts`).
+    pub fn new(
+        cfg: &RunConfig,
+        lut: Lut,
+        mapped: &MappedArray,
+        vref: &[f64],
+        params: DeviceParams,
+    ) -> Result<Coordinator> {
+        let plan = ServingPlan::build(mapped, vref, &params);
+        let pjrt = match cfg.engine {
+            EngineKind::Pjrt => {
+                let eng = MatchEngine::new(std::path::Path::new(&cfg.artifacts_dir))?;
+                // Fail fast if the geometry was never lowered.
+                eng.warm_tile(cfg.tile_size, cfg.batch)?;
+                Some(eng)
+            }
+            EngineKind::Native => None,
+        };
+        Ok(Coordinator {
+            plan,
+            lut,
+            padded_width: mapped.padded_width,
+            params,
+            engine_kind: cfg.engine,
+            pjrt,
+            batcher: Batcher::new(cfg.batch, Duration::from_millis(2)),
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn plan(&self) -> &ServingPlan {
+        &self.plan
+    }
+
+    /// Enqueue one request.
+    pub fn submit(&mut self, req: InferenceRequest) {
+        self.metrics.record_request(req.arrived.elapsed());
+        self.batcher.push(req);
+    }
+
+    /// Run all due batches; returns responses (request order within batch
+    /// preserved). `force_flush` drains partial batches (end of stream).
+    pub fn poll(&mut self, force_flush: bool) -> Result<Vec<InferenceResponse>> {
+        let mut batches = Vec::new();
+        while let Some(b) = self.batcher.next_batch(Instant::now()) {
+            batches.push(b);
+        }
+        if force_flush {
+            batches.extend(self.batcher.flush());
+        }
+        let mut responses = Vec::new();
+        for batch in batches {
+            responses.extend(self.run_batch(batch)?);
+        }
+        Ok(responses)
+    }
+
+    fn run_batch(&mut self, batch: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
+        let width = self.batcher.batch_width();
+        let real = batch.len();
+        // Encode + pad lanes to the artifact width.
+        let mut queries: Vec<Vec<bool>> = batch
+            .iter()
+            .map(|r| self.plan.encode(&self.lut, self.padded_width, &r.features))
+            .collect();
+        while queries.len() < width {
+            queries.push(vec![false; self.padded_width]);
+        }
+
+        let sched = Scheduler::new(&self.plan, &self.params);
+        let engine = match (&self.engine_kind, &self.pjrt) {
+            (EngineKind::Pjrt, Some(eng)) => EngineRef::Pjrt(eng),
+            _ => EngineRef::Native,
+        };
+        let t0 = Instant::now();
+        let out = sched.run_batch(&engine, &queries, real)?;
+        let wall = t0.elapsed();
+        self.metrics.record_batch(
+            real,
+            out.modeled_energy,
+            out.active_row_evals,
+            out.no_match,
+            out.multi_match,
+            wall,
+        );
+        self.metrics.wall_total += wall.as_secs_f64();
+
+        Ok(batch
+            .iter()
+            .zip(&out.classes)
+            .map(|(req, &class)| InferenceResponse {
+                id: req.id,
+                class,
+                modeled_latency: self.plan.timing.latency,
+            })
+            .collect())
+    }
+
+    /// Convenience: synchronous classification of a whole test set in
+    /// batch-width chunks (examples + benches).
+    pub fn classify_all(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Option<usize>>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for (i, x) in inputs.iter().enumerate() {
+            self.submit(InferenceRequest::new(i as u64, x.clone()));
+            let resp = self.poll(false)?;
+            out.extend(resp.into_iter().map(|r| (r.id, r.class)));
+        }
+        out.extend(
+            self.poll(true)?
+                .into_iter()
+                .map(|r| (r.id, r.class)),
+        );
+        let mut sorted = out;
+        sorted.sort_by_key(|(id, _)| *id);
+        Ok(sorted.into_iter().map(|(_, c)| c).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::catalog;
+    use crate::util::prng::Prng;
+
+    fn build(engine: EngineKind, dataset: &str, s: usize) -> (Coordinator, Vec<Vec<f64>>, Vec<usize>) {
+        let mut d = catalog::by_name(dataset, 0xD72CA0).unwrap();
+        d.normalize();
+        let mut rng = Prng::new(11);
+        let split = d.split(0.9, &mut rng);
+        let (xs, ys) = d.gather(&split.train);
+        let tree = train(&xs, &ys, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let m = MappedArray::from_lut(&lut, s, &p, &mut rng);
+        let cfg = RunConfig {
+            dataset: dataset.into(),
+            tile_size: s,
+            batch: 32,
+            engine,
+            ..RunConfig::default()
+        };
+        let vref = m.vref.clone();
+        let coord = Coordinator::new(&cfg, lut, &m, &vref, p).unwrap();
+        let (txs, tys) = d.gather(&split.test);
+        (coord, txs, tys)
+    }
+
+    #[test]
+    fn native_serving_classifies_whole_test_set() {
+        let (mut coord, txs, _tys) = build(EngineKind::Native, "iris", 16);
+        let got = coord.classify_all(&txs).unwrap();
+        assert_eq!(got.len(), txs.len());
+        assert!(got.iter().all(|c| c.is_some()));
+        assert_eq!(coord.metrics.decisions, txs.len() as u64);
+        assert!(coord.metrics.energy_per_dec() > 0.0);
+    }
+
+    #[test]
+    fn pjrt_serving_agrees_with_native() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let (mut native, txs, _) = build(EngineKind::Native, "haberman", 16);
+        let (mut pjrt, txs2, _) = build(EngineKind::Pjrt, "haberman", 16);
+        assert_eq!(txs, txs2);
+        let a = native.classify_all(&txs).unwrap();
+        let b = pjrt.classify_all(&txs).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn responses_preserve_request_ids() {
+        let (mut coord, txs, _) = build(EngineKind::Native, "iris", 16);
+        for (i, x) in txs.iter().take(5).enumerate() {
+            coord.submit(InferenceRequest::new(100 + i as u64, x.clone()));
+        }
+        let resp = coord.poll(true).unwrap();
+        let ids: Vec<u64> = resp.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![100, 101, 102, 103, 104]);
+        assert!(resp.iter().all(|r| r.modeled_latency > 0.0));
+    }
+}

@@ -1,0 +1,83 @@
+//! Dataset catalog: name -> loaded dataset (Table II inventory).
+
+use anyhow::{bail, Result};
+
+use super::synth::{self, SynthSpec};
+use super::{iris, Dataset};
+
+/// All dataset names, in Table II order.
+pub const ALL: [&str; 8] = [
+    "iris", "diabetes", "haberman", "car", "cancer", "credit", "titanic", "covid",
+];
+
+/// The subset used in the paper's non-ideality study (Fig 7).
+pub const NONIDEAL_SET: [&str; 3] = ["diabetes", "covid", "cancer"];
+
+/// Load a dataset by name. Synthetic datasets are generated
+/// deterministically from `seed` (embedded Iris ignores it).
+pub fn by_name(name: &str, seed: u64) -> Result<Dataset> {
+    if name == "iris" {
+        return Ok(iris::load());
+    }
+    match synth::specs().into_iter().find(|s| s.name == name) {
+        Some(spec) => Ok(synth::generate(&spec, seed)),
+        None => bail!(
+            "unknown dataset '{name}' (available: {})",
+            ALL.join(", ")
+        ),
+    }
+}
+
+/// Table II row for reporting: (name, instances, features, classes).
+pub fn table2_row(name: &str) -> Result<(String, usize, usize, usize)> {
+    if name == "iris" {
+        return Ok(("iris".into(), 150, 4, 3));
+    }
+    match synth::specs().into_iter().find(|s| s.name == name) {
+        Some(SynthSpec {
+            name,
+            n_instances,
+            n_features,
+            n_classes,
+            ..
+        }) => Ok((name.to_string(), n_instances, n_features, n_classes)),
+        None => bail!("unknown dataset '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_catalog_entry_loads_and_validates() {
+        for name in ALL.iter().filter(|n| **n != "credit") {
+            let d = by_name(name, 1).unwrap();
+            d.validate().unwrap();
+            let (_, ni, nf, nc) = table2_row(name).unwrap();
+            assert_eq!(d.n_instances(), ni, "{name}");
+            assert_eq!(d.n_features(), nf, "{name}");
+            assert_eq!(d.n_classes, nc, "{name}");
+        }
+    }
+
+    #[test]
+    fn credit_shape_only() {
+        // Credit is 120k instances; load once, check shape, don't repeat.
+        let d = by_name("credit", 1).unwrap();
+        assert_eq!(d.n_instances(), 120_269);
+        assert_eq!(d.n_features(), 10);
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(by_name("mnist", 0).is_err());
+    }
+
+    #[test]
+    fn nonideal_set_is_subset_of_all() {
+        for n in NONIDEAL_SET {
+            assert!(ALL.contains(&n));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Datasets (paper §III, Table II).
+//!
+//! The image is offline, so only Fisher's Iris ships verbatim (embedded,
+//! public domain). The other seven datasets are deterministic synthetic
+//! generators with Table II's exact shapes (#instances, #features,
+//! #classes) and *planted axis-aligned class structure* plus label noise —
+//! CART and the whole TCAM pipeline only ever see (features, labels), so
+//! trees of realistic size/shape emerge and the paper's cross-dataset
+//! trends (LUT size, tile counts, energy/throughput scaling) are
+//! preserved. See DESIGN.md §5 (substitutions).
+
+pub mod catalog;
+pub mod iris;
+pub mod synth;
+
+use crate::util::prng::Prng;
+
+/// A loaded dataset: row-major features + integer class labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// `features[i]` is instance i's feature vector.
+    pub features: Vec<Vec<f64>>,
+    /// `labels[i]` in `0..n_classes`.
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+    pub feature_names: Vec<String>,
+}
+
+/// Train/test split view (indices into the parent dataset).
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn n_instances(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.feature_names.len()
+    }
+
+    /// Min-max normalize every feature to [0, 1] in place (paper §II.C
+    /// injects input noise on the *normalized* dataset). Constant features
+    /// map to 0.
+    pub fn normalize(&mut self) {
+        let nf = self.n_features();
+        for j in 0..nf {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for row in &self.features {
+                lo = lo.min(row[j]);
+                hi = hi.max(row[j]);
+            }
+            let span = hi - lo;
+            for row in &mut self.features {
+                row[j] = if span > 0.0 { (row[j] - lo) / span } else { 0.0 };
+            }
+        }
+    }
+
+    /// Deterministic shuffled split; `train_fraction` in (0,1). The paper
+    /// uses 90/10 for every dataset.
+    pub fn split(&self, train_fraction: f64, rng: &mut Prng) -> Split {
+        assert!(
+            (0.0..1.0).contains(&train_fraction) && train_fraction > 0.0,
+            "bad train fraction {train_fraction}"
+        );
+        let mut idx: Vec<usize> = (0..self.n_instances()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.n_instances() as f64) * train_fraction).round() as usize;
+        let n_train = n_train.clamp(1, self.n_instances().saturating_sub(1).max(1));
+        Split {
+            train: idx[..n_train].to_vec(),
+            test: idx[n_train..].to_vec(),
+        }
+    }
+
+    /// Gather rows by index.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<Vec<f64>>, Vec<usize>) {
+        (
+            idx.iter().map(|&i| self.features[i].clone()).collect(),
+            idx.iter().map(|&i| self.labels[i]).collect(),
+        )
+    }
+
+    /// Additive gaussian noise on (normalized) features — the paper's
+    /// "input encoding noise" (σ_in sweep of Fig 7). Returns a noisy copy.
+    pub fn with_input_noise(&self, sigma: f64, rng: &mut Prng) -> Dataset {
+        let mut out = self.clone();
+        if sigma > 0.0 {
+            for row in &mut out.features {
+                for x in row.iter_mut() {
+                    *x += rng.normal_scaled(0.0, sigma);
+                }
+            }
+        }
+        out
+    }
+
+    /// Structural sanity checks (used by loaders and tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.features.len() != self.labels.len() {
+            return Err("features/labels length mismatch".into());
+        }
+        let nf = self.n_features();
+        if let Some(bad) = self.features.iter().position(|r| r.len() != nf) {
+            return Err(format!("row {bad} has wrong arity"));
+        }
+        if self.n_classes == 0 {
+            return Err("n_classes == 0".into());
+        }
+        if let Some(&bad) = self.labels.iter().find(|&&l| l >= self.n_classes) {
+            return Err(format!("label {bad} out of range"));
+        }
+        if self.features.iter().flatten().any(|x| !x.is_finite()) {
+            return Err("non-finite feature value".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            features: vec![
+                vec![0.0, 10.0],
+                vec![1.0, 20.0],
+                vec![2.0, 30.0],
+                vec![3.0, 40.0],
+            ],
+            labels: vec![0, 0, 1, 1],
+            n_classes: 2,
+            feature_names: vec!["a".into(), "b".into()],
+        }
+    }
+
+    #[test]
+    fn normalize_maps_to_unit_interval() {
+        let mut d = toy();
+        d.normalize();
+        for row in &d.features {
+            for &x in row {
+                assert!((0.0..=1.0).contains(&x));
+            }
+        }
+        assert_eq!(d.features[0][0], 0.0);
+        assert_eq!(d.features[3][0], 1.0);
+    }
+
+    #[test]
+    fn normalize_constant_feature() {
+        let mut d = toy();
+        for row in &mut d.features {
+            row[1] = 7.0;
+        }
+        d.normalize();
+        assert!(d.features.iter().all(|r| r[1] == 0.0));
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let d = toy();
+        let mut rng = Prng::new(1);
+        let s = d.split(0.75, &mut rng);
+        assert_eq!(s.train.len() + s.test.len(), 4);
+        let mut all: Vec<usize> = s.train.iter().chain(&s.test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn split_deterministic_per_seed() {
+        let d = toy();
+        let a = d.split(0.5, &mut Prng::new(9));
+        let b = d.split(0.5, &mut Prng::new(9));
+        assert_eq!(a.train, b.train);
+    }
+
+    #[test]
+    fn noise_zero_is_identity() {
+        let d = toy();
+        let mut rng = Prng::new(3);
+        let n = d.with_input_noise(0.0, &mut rng);
+        assert_eq!(n.features, d.features);
+    }
+
+    #[test]
+    fn noise_perturbs() {
+        let mut d = toy();
+        d.normalize();
+        let mut rng = Prng::new(3);
+        let n = d.with_input_noise(0.1, &mut rng);
+        assert_ne!(n.features, d.features);
+    }
+
+    #[test]
+    fn validate_catches_bad_label() {
+        let mut d = toy();
+        d.labels[0] = 5;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_ragged_rows() {
+        let mut d = toy();
+        d.features[2].push(1.0);
+        assert!(d.validate().is_err());
+    }
+}

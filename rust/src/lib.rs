@@ -1,0 +1,44 @@
+//! # DT2CAM — Decision Tree to Content Addressable Memory framework
+//!
+//! Production-grade reproduction of *"DT2CAM: A Decision Tree to Content
+//! Addressable Memory Framework"* (Rakka, Fouda, Kanj, Kurdahi, 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator and every substrate the
+//!   paper depends on: datasets, a from-scratch CART trainer, the DT-HW
+//!   compiler (tree parsing → column reduction → ternary adaptive
+//!   encoding), the ReCAM functional synthesizer (tile mapping, analog
+//!   device model, energy/latency/area/dynamic-range equations,
+//!   non-idealities), a request router + dynamic batcher + tile-stage
+//!   scheduler, and the benchmark/report harness that regenerates every
+//!   table and figure of the paper's evaluation.
+//! * **L2 (`python/compile/model.py`)** — the TCAM match compute graph,
+//!   AOT-lowered once to HLO text (`make artifacts`).
+//! * **L1 (`python/compile/kernels/tcam_match.py`)** — the Pallas hot-spot
+//!   kernel inside L2 (conductance matmul + RC-discharge epilogue).
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO-text
+//! artifacts through the PJRT CPU client (`xla` crate) and the coordinator
+//! executes them directly.
+//!
+//! Entry points: the `dt2cam` binary (see [`cli`]), the examples under
+//! `examples/`, and the benches under `rust/benches/` (one per paper table
+//! and figure — see DESIGN.md §4 for the experiment index).
+
+pub mod acam;
+pub mod cart;
+pub mod cli;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod nonideal;
+pub mod report;
+pub mod runtime;
+pub mod synth;
+pub mod tcam;
+pub mod testkit;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

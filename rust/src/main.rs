@@ -1,0 +1,11 @@
+//! `dt2cam` binary — the framework's leader entrypoint.
+//!
+//! See `dt2cam help` (or [`dt2cam::cli::HELP`]) for the command surface.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dt2cam::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,248 @@
+//! Hardware non-idealities (paper §II.C.2, Table I, Fig 7–8).
+//!
+//! Three independent mechanisms, each a pure *input rewrite* (the match
+//! kernel/simulator never changes — exactly like the physical array):
+//!
+//! * **Stuck-at faults** ([`inject_saf`]) — every resistive device (two
+//!   per TCAM cell) is independently stuck at HRS with probability `p_sa0`
+//!   ("SA0", bit 0) or at LRS with probability `p_sa1` ("SA1", bit 1).
+//!   Rewriting at the *device* level reproduces the paper's Table I
+//!   outcome table, including the always-mismatching {LRS, LRS} state.
+//! * **Sense-amp manufacturing variability** ([`perturb_vref`]) — each
+//!   row's SA reference voltage receives a gaussian offset
+//!   `V_ref ± σ_sa·z` (per division, per row), as in [33].
+//! * **Input encoding noise** — gaussian noise on the normalized input
+//!   features, applied by [`crate::dataset::Dataset::with_input_noise`]
+//!   before encoding.
+
+use crate::synth::mapping::MappedArray;
+use crate::tcam::cell::{Cell, Level};
+use crate::util::prng::Prng;
+
+/// Stuck-at-fault probabilities (fractions, not percent).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SafRates {
+    pub sa0: f64,
+    pub sa1: f64,
+}
+
+impl SafRates {
+    pub fn new(sa0: f64, sa1: f64) -> SafRates {
+        assert!((0.0..=1.0).contains(&sa0) && (0.0..=1.0).contains(&sa1));
+        SafRates { sa0, sa1 }
+    }
+
+    /// The paper's Fig 7 "SA'b' = x%" convention: SA0 = SA1 = x%.
+    pub fn both(percent: f64) -> SafRates {
+        SafRates::new(percent / 100.0, percent / 100.0)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.sa0 == 0.0 && self.sa1 == 0.0
+    }
+}
+
+/// Apply one device's stuck-at lottery.
+fn stuck(level: Level, rates: &SafRates, rng: &mut Prng) -> Level {
+    // A device cannot be stuck both ways; draw once and split the
+    // probability mass [0, sa0) -> SA0, [sa0, sa0+sa1) -> SA1.
+    let u = rng.f64();
+    if u < rates.sa0 {
+        Level::Hrs
+    } else if u < rates.sa0 + rates.sa1 {
+        Level::Lrs
+    } else {
+        level
+    }
+}
+
+/// Inject stuck-at faults into every TCAM cell of a mapped array
+/// (in place). Masked cells keep their OFF transistors, but their
+/// resistors can still be stuck — which is irrelevant electrically, as the
+/// paper notes, so we skip them for speed.
+pub fn inject_saf(m: &mut MappedArray, rates: &SafRates, rng: &mut Prng) {
+    if rates.is_zero() {
+        return;
+    }
+    assert!(
+        rates.sa0 + rates.sa1 <= 1.0,
+        "SA0 + SA1 probabilities exceed 1"
+    );
+    for byte in m.cells.iter_mut() {
+        let mut cell = Cell::from_byte(*byte);
+        if cell.masked {
+            continue;
+        }
+        cell.r1 = stuck(cell.r1, rates, rng);
+        cell.r2 = stuck(cell.r2, rates, rng);
+        *byte = cell.to_byte();
+    }
+}
+
+/// Gaussian SA reference-voltage offsets: returns a perturbed copy of the
+/// nominal per-(division, row) vref vector.
+pub fn perturb_vref(nominal: &[f64], sigma: f64, rng: &mut Prng) -> Vec<f64> {
+    if sigma == 0.0 {
+        return nominal.to_vec();
+    }
+    nominal
+        .iter()
+        .map(|&v| v + rng.normal_scaled(0.0, sigma))
+        .collect()
+}
+
+/// The paper's Fig 7 sweep grids.
+pub mod sweeps {
+    /// SA'b' percentages (SA0 = SA1): {0, 0.1, 0.5}% plotted; the full
+    /// Table I study also lists 1% and 5%.
+    pub const SAF_PERCENT: [f64; 5] = [0.0, 0.1, 0.5, 1.0, 5.0];
+    /// σ_sa in volts.
+    pub const SIGMA_SA: [f64; 5] = [0.0, 0.03, 0.04, 0.05, 0.1];
+    /// σ_in on normalized features.
+    pub const SIGMA_IN: [f64; 7] = [0.0, 0.001, 0.005, 0.01, 0.02, 0.05, 0.1];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::{compile, Trit};
+    use crate::dataset::iris;
+    use crate::tcam::params::DeviceParams;
+
+    fn mapped() -> MappedArray {
+        let d = iris::load();
+        let lut = compile(&train(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &TrainParams::default(),
+        ));
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(3);
+        MappedArray::from_lut(&lut, 16, &p, &mut rng)
+    }
+
+    #[test]
+    fn zero_rates_change_nothing() {
+        let mut m = mapped();
+        let before = m.cells.clone();
+        inject_saf(&mut m, &SafRates::both(0.0), &mut Prng::new(1));
+        assert_eq!(m.cells, before);
+    }
+
+    #[test]
+    fn full_sa1_gives_all_lrs() {
+        let mut m = mapped();
+        inject_saf(&mut m, &SafRates::new(0.0, 1.0), &mut Prng::new(1));
+        for byte in &m.cells {
+            let c = Cell::from_byte(*byte);
+            if !c.masked {
+                assert_eq!((c.r1, c.r2), (Level::Lrs, Level::Lrs));
+                // {LRS, LRS}: mismatches every query (Table I).
+                assert!(!c.matches(false) && !c.matches(true));
+            }
+        }
+    }
+
+    #[test]
+    fn full_sa0_turns_cells_into_dont_cares() {
+        // SA0 on both devices -> {HRS, HRS} = 'x' (Table I: 0 w/ SA0 -> x).
+        let mut m = mapped();
+        inject_saf(&mut m, &SafRates::new(1.0, 0.0), &mut Prng::new(1));
+        for byte in &m.cells {
+            let c = Cell::from_byte(*byte);
+            if !c.masked {
+                assert_eq!((c.r1, c.r2), (Level::Hrs, Level::Hrs));
+            }
+        }
+    }
+
+    #[test]
+    fn fault_rate_is_statistically_plausible() {
+        // With SA1 = 10% on trit-x cells (HRS/HRS), each device flips to
+        // LRS w.p. 0.1; count flipped devices across a big array.
+        let p = DeviceParams::default();
+        let mut g = crate::testkit::Gen::new(5);
+        let xs = g.matrix(200, 4);
+        let ys: Vec<usize> = (0..200).map(|_| g.usize_in(0, 2)).collect();
+        let lut = compile(&train(&xs, &ys, 2, &TrainParams::default()));
+        let mut rng = Prng::new(9);
+        let mut m = MappedArray::from_lut(&lut, 32, &p, &mut rng);
+        let devices_before: Vec<(Level, Level)> = m
+            .cells
+            .iter()
+            .map(|&b| {
+                let c = Cell::from_byte(b);
+                (c.r1, c.r2)
+            })
+            .collect();
+        inject_saf(&mut m, &SafRates::new(0.0, 0.1), &mut Prng::new(11));
+        let mut flipped = 0usize;
+        let mut eligible = 0usize;
+        for (byte, (r1, r2)) in m.cells.iter().zip(devices_before) {
+            let c = Cell::from_byte(*byte);
+            if c.masked {
+                continue;
+            }
+            for (now, was) in [(c.r1, r1), (c.r2, r2)] {
+                if was == Level::Hrs {
+                    eligible += 1;
+                    if now == Level::Lrs {
+                        flipped += 1;
+                    }
+                }
+            }
+        }
+        let rate = flipped as f64 / eligible as f64;
+        assert!((rate - 0.1).abs() < 0.02, "empirical SA1 rate {rate}");
+    }
+
+    #[test]
+    fn saf_injection_is_deterministic_per_seed() {
+        let mut a = mapped();
+        let mut b = mapped();
+        inject_saf(&mut a, &SafRates::both(1.0), &mut Prng::new(42));
+        inject_saf(&mut b, &SafRates::both(1.0), &mut Prng::new(42));
+        assert_eq!(a.cells, b.cells);
+    }
+
+    #[test]
+    fn vref_perturbation_statistics() {
+        let nominal = vec![0.4; 10_000];
+        let got = perturb_vref(&nominal, 0.05, &mut Prng::new(3));
+        let mean: f64 = got.iter().sum::<f64>() / got.len() as f64;
+        let var: f64 =
+            got.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / got.len() as f64;
+        assert!((mean - 0.4).abs() < 0.005);
+        assert!((var.sqrt() - 0.05).abs() < 0.005);
+    }
+
+    #[test]
+    fn vref_zero_sigma_is_identity() {
+        let nominal = vec![0.1, 0.2, 0.3];
+        assert_eq!(perturb_vref(&nominal, 0.0, &mut Prng::new(1)), nominal);
+    }
+
+    #[test]
+    fn table1_outcomes_for_trit_zero() {
+        // Encoded bit 0 = {HRS, LRS}. SA0 on device 2 -> x; SA1 on device
+        // 1 -> {LRS, LRS}. Verify both reachable outcomes.
+        let zero = Cell::from_trit(Trit::Zero);
+        // SA0 applied to both devices: r1 stays HRS, r2 HRS -> 'x'.
+        assert_eq!(
+            (Level::Hrs, Level::Hrs),
+            ({
+                let mut c = zero;
+                c.r1 = Level::Hrs;
+                c.r2 = Level::Hrs;
+                (c.r1, c.r2)
+            })
+        );
+        // SA1 applied to both: {LRS, LRS}.
+        let mut c = zero;
+        c.r1 = Level::Lrs;
+        c.r2 = Level::Lrs;
+        assert!(!c.matches(false) && !c.matches(true));
+    }
+}

@@ -1,0 +1,389 @@
+//! Figure regeneration (paper Figs 6, 7, 8, 9).
+
+use crate::nonideal::{inject_saf, perturb_vref, SafRates};
+use crate::synth::simulate::{simulate, SimOptions};
+use crate::tcam::params::DeviceParams;
+use crate::util::prng::Prng;
+use crate::util::threadpool::parallel_map;
+
+use super::sota::{dt2cam_traffic_rows, SotaRow, SOTA_BASELINES};
+use super::tables::TILE_SIZES;
+use super::workload::{Workload, EXPERIMENT_SEED, MAX_SIM_INPUTS};
+
+/// One Fig 6 point (per dataset × S): energy/throughput/EDP ± SP.
+#[derive(Clone, Debug)]
+pub struct Fig6Point {
+    pub dataset: String,
+    pub s: usize,
+    pub n_tiles: usize,
+    pub n_cwd: usize,
+    /// nJ per decision, SP on (paper default).
+    pub energy_nj: f64,
+    /// dec/s, sequential.
+    pub throughput: f64,
+    /// EDP (J·s) with SP.
+    pub edp: f64,
+    /// EDP without SP (energy is then exactly rows × divisions × E_row).
+    pub edp_no_sp: f64,
+    /// Fig 6c: % reduction of EDP with SP vs without.
+    pub edp_reduction_pct: f64,
+}
+
+/// Fig 6 (a: energy vs throughput, b: EDP, c: SP reduction) for one
+/// prepared workload across the S sweep.
+pub fn fig6(w: &Workload, p: &DeviceParams) -> Vec<Fig6Point> {
+    TILE_SIZES
+        .iter()
+        .map(|&s| {
+            let m = w.map(s, p);
+            let r = simulate(
+                &m,
+                &w.lut,
+                &w.test_x,
+                &w.test_y,
+                &w.golden,
+                &m.vref,
+                p,
+                &SimOptions {
+                    max_inputs: MAX_SIM_INPUTS,
+                    ..SimOptions::default()
+                },
+            );
+            // Without SP every initially-active row pays in every division
+            // (identical accuracy/timing — closed form, no second sim).
+            let e_no_sp = (m.initially_active_rows() * m.n_cwd) as f64 * p.e_row_active()
+                + p.e_mem;
+            let delay = 1.0 / r.timing.throughput_seq;
+            let edp_no_sp = e_no_sp * delay;
+            Fig6Point {
+                dataset: w.dataset.name.clone(),
+                s,
+                n_tiles: m.n_tiles(),
+                n_cwd: m.n_cwd,
+                energy_nj: r.energy_per_dec * 1e9,
+                throughput: r.timing.throughput_seq,
+                edp: r.edp,
+                edp_no_sp,
+                edp_reduction_pct: (1.0 - r.edp / edp_no_sp) * 100.0,
+            }
+        })
+        .collect()
+}
+
+/// One Fig 7 grid point.
+#[derive(Clone, Debug)]
+pub struct Fig7Point {
+    pub dataset: String,
+    pub s: usize,
+    pub sigma_in: f64,
+    pub sigma_sa: f64,
+    pub saf_pct: f64,
+    /// Percentage-point accuracy loss vs the golden accuracy
+    /// (golden_acc − acc) × 100.
+    pub acc_loss_pp: f64,
+    pub accuracy: f64,
+}
+
+/// Non-ideality sweep configuration (grids default to the paper's).
+#[derive(Clone, Debug)]
+pub struct NonidealGrid {
+    pub sigma_in: Vec<f64>,
+    pub sigma_sa: Vec<f64>,
+    pub saf_pct: Vec<f64>,
+    pub tile_sizes: Vec<usize>,
+    /// Monte-Carlo trials per point (faults/variability are random).
+    pub trials: usize,
+    pub max_inputs: usize,
+}
+
+impl Default for NonidealGrid {
+    fn default() -> Self {
+        NonidealGrid {
+            sigma_in: crate::nonideal::sweeps::SIGMA_IN.to_vec(),
+            sigma_sa: crate::nonideal::sweeps::SIGMA_SA.to_vec(),
+            saf_pct: vec![0.0, 0.1, 0.5],
+            tile_sizes: TILE_SIZES.to_vec(),
+            trials: 3,
+            max_inputs: MAX_SIM_INPUTS,
+        }
+    }
+}
+
+impl NonidealGrid {
+    /// A small grid for smoke tests / quick benches.
+    pub fn quick() -> NonidealGrid {
+        NonidealGrid {
+            sigma_in: vec![0.0, 0.01],
+            sigma_sa: vec![0.0, 0.05],
+            saf_pct: vec![0.0, 0.5],
+            tile_sizes: vec![16, 64],
+            trials: 1,
+            max_inputs: 128,
+        }
+    }
+}
+
+/// Fig 7: accuracy loss under (σ_in, σ_sa, SAF) for one dataset.
+/// Points are averaged over `grid.trials` seeds; sweeps fan out over all
+/// cores.
+pub fn fig7(w: &Workload, p: &DeviceParams, grid: &NonidealGrid) -> Vec<Fig7Point> {
+    let golden_acc = w.golden_accuracy_capped(grid.max_inputs);
+    let mut configs = Vec::new();
+    for &s in &grid.tile_sizes {
+        for &saf in &grid.saf_pct {
+            for &sig_sa in &grid.sigma_sa {
+                for &sig_in in &grid.sigma_in {
+                    configs.push((s, saf, sig_sa, sig_in));
+                }
+            }
+        }
+    }
+    let points = parallel_map(configs, |(s, saf, sig_sa, sig_in)| {
+        let mut acc_sum = 0.0;
+        for trial in 0..grid.trials {
+            let trial_seed = EXPERIMENT_SEED
+                ^ (s as u64) << 32
+                ^ ((saf * 1000.0) as u64) << 20
+                ^ ((sig_sa * 1000.0) as u64) << 10
+                ^ ((sig_in * 10000.0) as u64) << 2
+                ^ trial as u64;
+            let mut rng = Prng::new(trial_seed);
+            let mut m = w.map(s, p);
+            inject_saf(&mut m, &SafRates::both(saf), &mut rng.fork(1));
+            let vref = perturb_vref(&m.vref, sig_sa, &mut rng.fork(2));
+            // Input noise on the (normalized) test features.
+            let mut noise_rng = rng.fork(3);
+            let noisy_x: Vec<Vec<f64>> = w
+                .test_x
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&v| v + noise_rng.normal_scaled(0.0, sig_in))
+                        .collect()
+                })
+                .collect();
+            let r = simulate(
+                &m,
+                &w.lut,
+                &noisy_x,
+                &w.test_y,
+                &w.golden,
+                &vref,
+                p,
+                &SimOptions {
+                    max_inputs: grid.max_inputs,
+                    ..SimOptions::default()
+                },
+            );
+            acc_sum += r.accuracy;
+        }
+        let accuracy = acc_sum / grid.trials as f64;
+        Fig7Point {
+            dataset: w.dataset.name.clone(),
+            s,
+            sigma_in: sig_in,
+            sigma_sa: sig_sa,
+            saf_pct: saf,
+            acc_loss_pp: (golden_acc - accuracy) * 100.0,
+            accuracy,
+        }
+    });
+    points
+}
+
+/// One Fig 8 point: accuracy loss vs tile count.
+#[derive(Clone, Debug)]
+pub struct Fig8Point {
+    pub dataset: String,
+    pub s: usize,
+    pub n_tiles: usize,
+    pub saf_pct: f64,
+    pub acc_loss_pp: f64,
+}
+
+/// Fig 8: accuracy loss vs required tile count across datasets × S under
+/// stuck-at faults.
+pub fn fig8(
+    workloads: &[&Workload],
+    p: &DeviceParams,
+    saf_pcts: &[f64],
+    trials: usize,
+) -> Vec<Fig8Point> {
+    let mut out = Vec::new();
+    for w in workloads {
+        let golden_acc = w.golden_accuracy_capped(MAX_SIM_INPUTS);
+        for &s in &TILE_SIZES {
+            for &saf in saf_pcts {
+                let mut acc_sum = 0.0;
+                let mut tiles = 0;
+                for trial in 0..trials {
+                    let mut rng =
+                        Prng::new(EXPERIMENT_SEED ^ (s as u64) << 16 ^ trial as u64);
+                    let mut m = w.map(s, p);
+                    tiles = m.n_tiles();
+                    inject_saf(&mut m, &SafRates::both(saf), &mut rng);
+                    let r = simulate(
+                        &m,
+                        &w.lut,
+                        &w.test_x,
+                        &w.test_y,
+                        &w.golden,
+                        &m.vref,
+                        p,
+                        &SimOptions {
+                            max_inputs: MAX_SIM_INPUTS,
+                            ..SimOptions::default()
+                        },
+                    );
+                    acc_sum += r.accuracy;
+                }
+                out.push(Fig8Point {
+                    dataset: w.dataset.name.clone(),
+                    s,
+                    n_tiles: tiles,
+                    saf_pct: saf,
+                    acc_loss_pp: (golden_acc - acc_sum / trials as f64) * 100.0,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Fig 9: the energy-vs-throughput scatter (DT2CAM + SOTA points).
+pub fn fig9(p: &DeviceParams) -> Vec<SotaRow> {
+    let mut rows: Vec<SotaRow> = SOTA_BASELINES.to_vec();
+    rows.extend(dt2cam_traffic_rows(p));
+    rows
+}
+
+// ---------- text rendering ----------
+
+pub fn render_fig6(points: &[Fig6Point]) -> String {
+    let mut out = String::from(
+        "Fig 6 — energy/throughput/EDP per decision\n  dataset    S    tiles  N_cwd  nJ/dec     dec/s        EDP(J.s)    EDP-noSP    SP-reduction%\n",
+    );
+    for q in points {
+        out.push_str(&format!(
+            "  {:<10} {:>4} {:>6} {:>6}  {:>9.4}  {:>11.3e}  {:>10.3e}  {:>10.3e}  {:>8.1}\n",
+            q.dataset,
+            q.s,
+            q.n_tiles,
+            q.n_cwd,
+            q.energy_nj,
+            q.throughput,
+            q.edp,
+            q.edp_no_sp,
+            q.edp_reduction_pct
+        ));
+    }
+    out
+}
+
+pub fn render_fig7(points: &[Fig7Point]) -> String {
+    let mut out = String::from(
+        "Fig 7 — accuracy loss (pp) under non-idealities\n  dataset    S    SA'b'%  sigma_sa  sigma_in  acc     loss_pp\n",
+    );
+    for q in points {
+        out.push_str(&format!(
+            "  {:<10} {:>4} {:>7.2} {:>9.3} {:>9.4}  {:>6.4}  {:>7.2}\n",
+            q.dataset, q.s, q.saf_pct, q.sigma_sa, q.sigma_in, q.accuracy, q.acc_loss_pp
+        ));
+    }
+    out
+}
+
+pub fn render_fig8(points: &[Fig8Point]) -> String {
+    let mut out = String::from(
+        "Fig 8 — accuracy loss vs #tiles\n  dataset    S    #tiles  SA'b'%  loss_pp\n",
+    );
+    for q in points {
+        out.push_str(&format!(
+            "  {:<10} {:>4} {:>7} {:>7.2} {:>8.2}\n",
+            q.dataset, q.s, q.n_tiles, q.saf_pct, q.acc_loss_pp
+        ));
+    }
+    out
+}
+
+pub fn render_fig9(rows: &[SotaRow]) -> String {
+    let mut out = String::from(
+        "Fig 9 — energy vs throughput (DT2CAM vs SOTA)\n  accelerator     throughput(dec/s)  energy(nJ/dec)\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "  {:<14}  {:>17.3e}  {:>13.4}\n",
+            r.name,
+            r.throughput,
+            r.energy_per_dec * 1e9
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_iris_has_four_points_and_sane_trends() {
+        let w = Workload::prepare("iris").unwrap();
+        let p = DeviceParams::default();
+        let pts = fig6(&w, &p);
+        assert_eq!(pts.len(), 4);
+        // Iris is 1x1 tiles everywhere: single division -> SP reduction 0.
+        for q in &pts {
+            assert!(q.energy_nj > 0.0);
+            assert!(q.throughput > 1e6);
+            assert!(q.edp_reduction_pct.abs() < 1e-9, "{}", q.edp_reduction_pct);
+        }
+        // Paper §IV.A: throughput improves with S — T_opt *shrinks* as the
+        // row widens (smaller R_fm discharges C_in faster), and fewer
+        // divisions are needed for multi-division datasets.
+        assert!(pts[3].throughput >= pts[0].throughput);
+        let _ = render_fig6(&pts);
+    }
+
+    #[test]
+    fn fig6_multidivision_dataset_shows_sp_gain() {
+        let w = Workload::prepare("haberman").unwrap();
+        let p = DeviceParams::default();
+        let pts = fig6(&w, &p);
+        let small_s = &pts[0]; // S=16 -> several divisions
+        assert!(small_s.n_cwd > 1);
+        assert!(
+            small_s.edp_reduction_pct > 10.0,
+            "expected real SP gain, got {}",
+            small_s.edp_reduction_pct
+        );
+    }
+
+    #[test]
+    fn fig7_quick_grid_zero_noise_has_zero_loss() {
+        let w = Workload::prepare("iris").unwrap();
+        let p = DeviceParams::default();
+        let grid = NonidealGrid::quick();
+        let pts = fig7(&w, &p, &grid);
+        // The (0, 0, 0) point must match golden exactly (§IV.B).
+        let clean = pts
+            .iter()
+            .find(|q| q.sigma_in == 0.0 && q.sigma_sa == 0.0 && q.saf_pct == 0.0)
+            .unwrap();
+        assert!(clean.acc_loss_pp.abs() < 1e-9, "{}", clean.acc_loss_pp);
+        // Heavy SAF must hurt more than clean.
+        let hurt = pts
+            .iter()
+            .filter(|q| q.saf_pct > 0.0)
+            .map(|q| q.acc_loss_pp)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(hurt >= clean.acc_loss_pp);
+        let _ = render_fig7(&pts);
+    }
+
+    #[test]
+    fn fig9_has_seven_points() {
+        let rows = fig9(&DeviceParams::default());
+        assert_eq!(rows.len(), 7);
+        let _ = render_fig9(&rows);
+    }
+}

@@ -1,0 +1,14 @@
+//! Paper-table / figure regeneration (evaluation §IV).
+//!
+//! Every table and figure of the paper's evaluation section has a
+//! generator here; the benches under `rust/benches/` and the
+//! `paper_tables` / `nonidealities` examples are thin drivers over these.
+//! See DESIGN.md §4 for the experiment index.
+
+pub mod figures;
+pub mod sota;
+pub mod tables;
+pub mod workload;
+
+pub use sota::{dt2cam_traffic_rows, fom, SotaRow, SOTA_BASELINES};
+pub use workload::Workload;

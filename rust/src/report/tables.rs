@@ -1,0 +1,183 @@
+//! Table regeneration (paper Tables II, IV, V, VI).
+
+use anyhow::Result;
+
+use crate::dataset::catalog;
+use crate::synth::area::area;
+use crate::synth::range::{table4 as range_table4, RangeRow};
+use crate::tcam::params::DeviceParams;
+use crate::util::ceil_div;
+
+use super::sota::{dt2cam_traffic_rows, fom, SotaRow, SOTA_BASELINES};
+use super::workload::Workload;
+
+/// The paper's tile-size sweep (Fig 6 / Table V columns).
+pub const TILE_SIZES: [usize; 4] = [16, 32, 64, 128];
+
+/// Table II echo: (name, instances, features, classes).
+pub fn table2() -> Result<Vec<(String, usize, usize, usize)>> {
+    catalog::ALL.iter().map(|n| catalog::table2_row(n)).collect()
+}
+
+/// Table IV: D_cap limit → max cells/row → chosen S (+ achieved D).
+pub fn table4(p: &DeviceParams) -> Vec<RangeRow> {
+    range_table4(p)
+}
+
+/// One Table V row: LUT size and tile grid per S.
+#[derive(Clone, Debug)]
+pub struct Table5Row {
+    pub dataset: String,
+    pub lut_rows: usize,
+    pub lut_width: usize,
+    /// (n_rwd, n_cwd) per S in [`TILE_SIZES`] order.
+    pub grids: Vec<(usize, usize)>,
+}
+
+/// Table V from prepared workloads.
+pub fn table5(workloads: &[&Workload]) -> Vec<Table5Row> {
+    workloads
+        .iter()
+        .map(|w| {
+            let rows = w.lut.n_rows();
+            let width = w.lut.width();
+            Table5Row {
+                dataset: w.dataset.name.clone(),
+                lut_rows: rows,
+                lut_width: width,
+                grids: TILE_SIZES
+                    .iter()
+                    .map(|&s| (ceil_div(rows, s), ceil_div(width + 1, s)))
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+/// Table VI: literature baselines + computed DT2CAM rows, with FOM.
+pub fn table6(p: &DeviceParams) -> Vec<(SotaRow, Option<f64>)> {
+    let mut rows: Vec<SotaRow> = SOTA_BASELINES.to_vec();
+    rows.extend(dt2cam_traffic_rows(p));
+    rows.into_iter()
+        .map(|r| {
+            let f = r
+                .area_mm2
+                .map(|a| fom(r.energy_per_dec, r.throughput, a));
+            (r, f)
+        })
+        .collect()
+}
+
+/// Area report for an arbitrary mapped geometry (diagnostics).
+pub fn area_for(n_tiles: usize, s: usize, n_classes: usize, p: &DeviceParams) -> (f64, f64) {
+    let a = area(n_tiles, s, n_classes, p);
+    (a.total_mm2, a.per_bit_um2)
+}
+
+// ---------- text rendering ----------
+
+pub fn render_table2(rows: &[(String, usize, usize, usize)]) -> String {
+    let mut out = String::from(
+        "Table II — datasets\n  dataset    #instances  #features  #classes\n",
+    );
+    for (n, i, f, c) in rows {
+        out.push_str(&format!("  {n:<10} {i:>10}  {f:>9}  {c:>8}\n"));
+    }
+    out
+}
+
+pub fn render_table4(rows: &[RangeRow]) -> String {
+    let mut out = String::from(
+        "Table IV — dynamic range vs tile size\n  D_limit  max#cells/row  chosen S  D(S)\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "  {:<7.1}  {:>13}  {:>8}  {:.3}\n",
+            r.d_limit, r.max_cells, r.chosen_s, r.d_at_chosen
+        ));
+    }
+    out
+}
+
+pub fn render_table5(rows: &[Table5Row]) -> String {
+    let mut out = String::from(
+        "Table V — LUT sizes and tile grids (N_rwd x N_cwd)\n  dataset    LUT(RxW)      S=16       S=32       S=64       S=128\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "  {:<10} {:>5}x{:<5} ",
+            r.dataset, r.lut_rows, r.lut_width
+        ));
+        for (rwd, cwd) in &r.grids {
+            out.push_str(&format!("{:>5}x{:<5}", rwd, cwd));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn render_table6(rows: &[(SotaRow, Option<f64>)]) -> String {
+    let mut out = String::from(
+        "Table VI — SOTA comparison\n  accelerator     tech  f_clk   throughput(dec/s)  energy(nJ/dec)  area(mm2)  area/bit(um2)  FOM(J.s.mm2)\n",
+    );
+    for (r, f) in rows {
+        out.push_str(&format!(
+            "  {:<14} {:>4}nm {:>5.2}  {:>17.3e}  {:>14.4}  {:>9}  {:>13}  {:>12}\n",
+            r.name,
+            r.technology_nm,
+            r.f_clk_ghz,
+            r.throughput,
+            r.energy_per_dec * 1e9,
+            r.area_mm2.map_or("-".into(), |a| format!("{a:.3}")),
+            r.area_per_bit.map_or("-".into(), |a| format!("{a:.3}")),
+            f.map_or("-".into(), |v| format!("{v:.2e}")),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_all_eight() {
+        let t = table2().unwrap();
+        assert_eq!(t.len(), 8);
+        assert_eq!(t[0].0, "iris");
+        assert!(render_table2(&t).contains("credit"));
+    }
+
+    #[test]
+    fn table4_renders() {
+        let rows = table4(&DeviceParams::default());
+        let text = render_table4(&rows);
+        assert!(text.contains("128"));
+        assert!(text.contains("0.2"));
+    }
+
+    #[test]
+    fn table5_iris_row_matches_paper() {
+        let w = Workload::prepare("iris").unwrap();
+        let rows = table5(&[&w]);
+        // Paper: Iris 9x12, 1x1 tiles at every S.
+        assert_eq!(rows[0].grids, vec![(1, 1); 4]);
+        assert!(render_table5(&rows).contains("iris"));
+    }
+
+    #[test]
+    fn table6_has_seven_rows_and_dt2cam_wins_fom() {
+        let rows = table6(&DeviceParams::default());
+        assert_eq!(rows.len(), 7);
+        let foms: Vec<(String, f64)> = rows
+            .iter()
+            .filter_map(|(r, f)| f.map(|v| (r.name.to_string(), v)))
+            .collect();
+        let best = foms
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(best.0, "P-DT2CAM_128", "paper: lowest FOM is P-DT2CAM");
+        assert!(render_table6(&rows).contains("DT2CAM_128"));
+    }
+}

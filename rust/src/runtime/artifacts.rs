@@ -1,0 +1,180 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::json::Json;
+
+/// Tile vs stacked-division artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(q[B,2S], w[2S,S], vref[S], toc[]) -> (vml[B,S], match[B,S])`
+    Tile,
+    /// `(q[B,2S], w[T,2S,S], vref[T,S], toc[]) -> (vml[T,B,S], ...)`
+    Division,
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Lowering variant: "pallas" (the L1 kernel under interpret=True —
+    /// the TPU-shaped program, emulated on CPU) or "jnp" (its pure-jnp
+    /// twin, identical numerics, fused by XLA:CPU — preferred for CPU
+    /// serving, see EXPERIMENTS.md §Perf).
+    pub impl_: String,
+    pub path: PathBuf,
+    pub s: usize,
+    pub b: usize,
+    pub tiles: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate the manifest; referenced files must exist.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("manifest format must be 'hlo-text'");
+        }
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .context("manifest missing entries[]")?
+        {
+            let name = e
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("entry missing name")?
+                .to_string();
+            let kind = match e.get("kind").and_then(|v| v.as_str()) {
+                Some("tile") => ArtifactKind::Tile,
+                Some("division") => ArtifactKind::Division,
+                other => bail!("entry {name}: bad kind {other:?}"),
+            };
+            let file = e
+                .get("file")
+                .and_then(|v| v.as_str())
+                .context("entry missing file")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact file missing: {}", path.display());
+            }
+            entries.push(ArtifactEntry {
+                name,
+                kind,
+                impl_: e
+                    .get("impl")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("pallas")
+                    .to_string(),
+                path,
+                s: e.get("s").and_then(|v| v.as_usize()).context("missing s")?,
+                b: e.get("b").and_then(|v| v.as_usize()).context("missing b")?,
+                tiles: e
+                    .get("tiles")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(1),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Find a tile artifact for geometry (s, b). Prefers the "jnp"
+    /// lowering on CPU (identical numerics, XLA-fused; §Perf), falling
+    /// back to the pallas variant.
+    pub fn tile(&self, s: usize, b: usize) -> Option<&ArtifactEntry> {
+        let matching = |e: &&ArtifactEntry| {
+            e.kind == ArtifactKind::Tile && e.s == s && e.b == b
+        };
+        self.entries
+            .iter()
+            .filter(matching)
+            .find(|e| e.impl_ == "jnp")
+            .or_else(|| self.entries.iter().find(matching))
+    }
+
+    /// Find a stacked-division artifact for (s, b, tiles); same "jnp"
+    /// preference as [`Manifest::tile`].
+    pub fn division(&self, s: usize, b: usize, tiles: usize) -> Option<&ArtifactEntry> {
+        let matching = |e: &&ArtifactEntry| {
+            e.kind == ArtifactKind::Division && e.s == s && e.b == b && e.tiles == tiles
+        };
+        self.entries
+            .iter()
+            .filter(matching)
+            .find(|e| e.impl_ == "jnp")
+            .or_else(|| self.entries.iter().find(matching))
+    }
+
+    /// Smallest lowered batch ≥ `want` for tile artifacts of size `s`
+    /// (requests are padded up to the artifact's batch).
+    pub fn best_tile_batch(&self, s: usize, want: usize) -> Option<usize> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Tile && e.s == s && e.b >= want)
+            .map(|e| e.b)
+            .min()
+            .or_else(|| {
+                // Nothing big enough: take the largest available.
+                self.entries
+                    .iter()
+                    .filter(|e| e.kind == ArtifactKind::Tile && e.s == s)
+                    .map(|e| e.b)
+                    .max()
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_indexes() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        // Every paper geometry must be present.
+        for s in [16, 32, 64, 128] {
+            for b in [1, 32, 256] {
+                assert!(m.tile(s, b).is_some(), "missing tile s{s} b{b}");
+            }
+        }
+        assert!(m.division(128, 32, 16).is_some());
+        assert_eq!(m.best_tile_batch(16, 20), Some(32));
+        assert_eq!(m.best_tile_batch(16, 257), Some(256));
+        assert_eq!(m.best_tile_batch(16, 1), Some(1));
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

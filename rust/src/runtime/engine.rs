@@ -1,0 +1,396 @@
+//! The PJRT match engine: compile-once, execute-many.
+//!
+//! Wraps `xla::PjRtClient` (CPU). Executables are compiled lazily per
+//! geometry and cached; the coordinator calls [`MatchEngine::match_tile`]
+//! / [`MatchEngine::match_division`] on the hot path with raw f32 buffers
+//! (no Python anywhere).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{ArtifactEntry, ArtifactKind, Manifest};
+
+/// Output of one artifact execution.
+#[derive(Clone, Debug)]
+pub struct MatchResult {
+    /// Row-major `[B, S]` (tile) or `[T, B, S]` (division) ML voltages.
+    pub vml: Vec<f32>,
+    /// Same layout, 1.0 = match.
+    pub matched: Vec<f32>,
+}
+
+/// PJRT CPU client + compiled-executable cache.
+///
+/// NOTE: `xla::PjRtClient` is `Rc`-backed, so the engine is deliberately
+/// `!Send` — one thread owns it (the coordinator routes all PJRT execution
+/// through a single executor thread; XLA's own intra-op thread pool
+/// provides the parallelism, and the stacked-division artifacts batch all
+/// row tiles of a column division into one call).
+pub struct MatchEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// name -> compiled executable (lazily compiled, process-lifetime).
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Device-resident constant buffers (W / vref / toc), keyed by the
+    /// caller's cache key — the tile conductances never change between
+    /// batches, so uploading them once removes the dominant per-call
+    /// host→device copy (§Perf).
+    buffers: RefCell<HashMap<u64, Rc<xla::PjRtBuffer>>>,
+}
+
+impl MatchEngine {
+    /// Create the engine over an artifact directory (must contain
+    /// `manifest.json`; run `make artifacts` first).
+    pub fn new(artifacts_dir: &Path) -> Result<MatchEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(MatchEngine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            buffers: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact entry.
+    fn executable(&self, entry: &ArtifactEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&entry.name) {
+            return Ok(Rc::clone(exe));
+        }
+        let path_str = entry
+            .path
+            .to_str()
+            .context("artifact path is not UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert(entry.name.clone(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Upload (or fetch cached) a device-resident f32 buffer. `key` must
+    /// uniquely identify the contents (the scheduler derives it from the
+    /// plan identity + division + tile range).
+    pub fn cached_buffer(
+        &self,
+        key: u64,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.buffers.borrow().get(&key) {
+            return Ok(Rc::clone(b));
+        }
+        let buf = Rc::new(
+            self.client
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading constant buffer")?,
+        );
+        self.buffers.borrow_mut().insert(key, Rc::clone(&buf));
+        Ok(buf)
+    }
+
+    /// Drop all cached device buffers (plan rebuilds after fault
+    /// injection must not alias stale conductances).
+    pub fn clear_buffer_cache(&self) {
+        self.buffers.borrow_mut().clear();
+    }
+
+    /// Warm the cache for a geometry ahead of serving.
+    pub fn warm_tile(&self, s: usize, b: usize) -> Result<()> {
+        let entry = self
+            .manifest
+            .tile(s, b)
+            .with_context(|| format!("no tile artifact s{s} b{b}"))?
+            .clone();
+        self.executable(&entry).map(|_| ())
+    }
+
+    fn run(
+        &self,
+        entry: &ArtifactEntry,
+        q: &[f32],
+        w: &[f32],
+        vref: &[f32],
+        toc: f32,
+        out_len: usize,
+    ) -> Result<MatchResult> {
+        let exe = self.executable(entry)?;
+        let (s, b, t) = (entry.s as i64, entry.b as i64, entry.tiles as i64);
+        let q_lit = xla::Literal::vec1(q).reshape(&[b, 2 * s])?;
+        let (w_lit, vref_lit) = match entry.kind {
+            ArtifactKind::Tile => (
+                xla::Literal::vec1(w).reshape(&[2 * s, s])?,
+                xla::Literal::vec1(vref).reshape(&[s])?,
+            ),
+            ArtifactKind::Division => (
+                xla::Literal::vec1(w).reshape(&[t, 2 * s, s])?,
+                xla::Literal::vec1(vref).reshape(&[t, s])?,
+            ),
+        };
+        let toc_lit = xla::Literal::scalar(toc);
+        let result = exe.execute::<xla::Literal>(&[q_lit, w_lit, vref_lit, toc_lit])?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True -> 2-tuple (vml, match).
+        let (vml_lit, match_lit) = result.to_tuple2()?;
+        let vml = vml_lit.to_vec::<f32>()?;
+        let matched = match_lit.to_vec::<f32>()?;
+        if vml.len() != out_len || matched.len() != out_len {
+            bail!(
+                "artifact {} returned {} values, expected {out_len}",
+                entry.name,
+                vml.len()
+            );
+        }
+        Ok(MatchResult { vml, matched })
+    }
+
+    /// Execute with device-resident W/vref (cached via [`Self::cached_buffer`]);
+    /// only the per-batch Q (and toc) crosses the host boundary.
+    pub fn match_cached(
+        &self,
+        entry_kind: ArtifactKind,
+        s: usize,
+        b: usize,
+        tiles: usize,
+        q: &[f32],
+        w: &xla::PjRtBuffer,
+        vref: &xla::PjRtBuffer,
+        toc: &xla::PjRtBuffer,
+    ) -> Result<MatchResult> {
+        let entry = match entry_kind {
+            ArtifactKind::Tile => self.manifest.tile(s, b),
+            ArtifactKind::Division => self.manifest.division(s, b, tiles),
+        }
+        .with_context(|| format!("no artifact s{s} b{b} t{tiles}"))?
+        .clone();
+        let exe = self.executable(&entry)?;
+        let q_buf = self
+            .client
+            .buffer_from_host_buffer(q, &[b, 2 * s], None)?;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&[&q_buf, w, vref, toc])?[0][0]
+            .to_literal_sync()?;
+        let (vml_lit, match_lit) = result.to_tuple2()?;
+        Ok(MatchResult {
+            vml: vml_lit.to_vec::<f32>()?,
+            matched: match_lit.to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute a tile match: `q[B, 2S]`, `w[2S, S]`, `vref[S]` → `[B, S]`.
+    pub fn match_tile(
+        &self,
+        s: usize,
+        b: usize,
+        q: &[f32],
+        w: &[f32],
+        vref: &[f32],
+        toc: f32,
+    ) -> Result<MatchResult> {
+        let entry = self
+            .manifest
+            .tile(s, b)
+            .with_context(|| format!("no tile artifact s{s} b{b} (rerun make artifacts)"))?
+            .clone();
+        if q.len() != b * 2 * s || w.len() != 2 * s * s || vref.len() != s {
+            bail!(
+                "match_tile s{s} b{b}: bad buffer sizes q={} w={} vref={}",
+                q.len(),
+                w.len(),
+                vref.len()
+            );
+        }
+        self.run(&entry, q, w, vref, toc, b * s)
+    }
+
+    /// Execute a stacked column-division match:
+    /// `q[B, 2S]`, `w[T, 2S, S]`, `vref[T, S]` → `[T, B, S]`.
+    pub fn match_division(
+        &self,
+        s: usize,
+        b: usize,
+        tiles: usize,
+        q: &[f32],
+        w: &[f32],
+        vref: &[f32],
+        toc: f32,
+    ) -> Result<MatchResult> {
+        let entry = self
+            .manifest
+            .division(s, b, tiles)
+            .with_context(|| format!("no division artifact s{s} b{b} t{tiles}"))?
+            .clone();
+        if q.len() != b * 2 * s || w.len() != tiles * 2 * s * s || vref.len() != tiles * s {
+            bail!("match_division: bad buffer sizes");
+        }
+        self.run(&entry, q, w, vref, toc, tiles * b * s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tcam::params::DeviceParams;
+    use crate::tcam::sim::{self, TileView};
+    use crate::util::prng::Prng;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<MatchEngine> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping PJRT test: run `make artifacts`");
+            return None;
+        }
+        Some(MatchEngine::new(&dir).unwrap())
+    }
+
+    /// Random (cells, queries) problem for geometry (s, b).
+    fn random_problem(
+        s: usize,
+        b: usize,
+        seed: u64,
+    ) -> (Vec<u8>, Vec<Vec<bool>>, Vec<f64>, f64, DeviceParams) {
+        use crate::compiler::Trit;
+        use crate::tcam::cell::Cell;
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(seed);
+        let trits = [Trit::Zero, Trit::One, Trit::X];
+        let cells: Vec<u8> = (0..s * s)
+            .map(|_| Cell::from_trit(trits[rng.below(3)]).to_byte())
+            .collect();
+        let queries: Vec<Vec<bool>> = (0..b)
+            .map(|_| (0..s).map(|_| rng.chance(0.5)).collect())
+            .collect();
+        let vref = vec![p.v_ref(s); s];
+        let toc = p.t_opt(s) / p.c_in;
+        (cells, queries, vref, toc, p)
+    }
+
+    #[test]
+    fn pjrt_tile_matches_native_sim() {
+        // THE cross-engine equivalence test: artifact == native simulator
+        // bit-for-bit on match decisions, close on voltages.
+        let Some(eng) = engine() else { return };
+        for (s, b, seed) in [(16usize, 32usize, 1u64), (64, 32, 2), (128, 32, 3)] {
+            let (cells, queries, vref, toc, p) = random_problem(s, b, seed);
+            let view = TileView::dense(&cells, s, s, &vref, toc);
+            let w = sim::conductance_matrix(&view, &p);
+            let native = sim::match_batch_with_w(&view, &w, &queries, &p);
+
+            // Build Q and vref buffers for the artifact.
+            let mut q = vec![0.0f32; b * 2 * s];
+            for (i, bits) in queries.iter().enumerate() {
+                let row = sim::activation_row(bits);
+                q[i * 2 * s..(i + 1) * 2 * s].copy_from_slice(&row);
+            }
+            let vref32: Vec<f32> = vref.iter().map(|&v| v as f32).collect();
+            let got = eng
+                .match_tile(s, b, &q, &w, &vref32, toc as f32)
+                .unwrap();
+
+            // match layout: native is [q][r], artifact [b][s] — same.
+            for qi in 0..b {
+                for r in 0..s {
+                    let want = native.matched[qi * s + r];
+                    let have = got.matched[qi * s + r] > 0.5;
+                    assert_eq!(want, have, "s{s} q{qi} r{r}");
+                    let dv =
+                        (native.vml[qi * s + r] - got.vml[qi * s + r]).abs();
+                    assert!(dv < 1e-5, "vml diff {dv} at s{s} q{qi} r{r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_division_matches_stacked_tiles() {
+        let Some(eng) = engine() else { return };
+        let (s, b, t) = (16usize, 32usize, 4usize);
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(9);
+        use crate::compiler::Trit;
+        use crate::tcam::cell::Cell;
+        let trits = [Trit::Zero, Trit::One, Trit::X];
+        let tiles: Vec<Vec<u8>> = (0..t)
+            .map(|_| {
+                (0..s * s)
+                    .map(|_| Cell::from_trit(trits[rng.below(3)]).to_byte())
+                    .collect()
+            })
+            .collect();
+        let queries: Vec<Vec<bool>> = (0..b)
+            .map(|_| (0..s).map(|_| rng.chance(0.5)).collect())
+            .collect();
+        let vref = vec![p.v_ref(s); s];
+        let toc = p.t_opt(s) / p.c_in;
+
+        let mut q = vec![0.0f32; b * 2 * s];
+        for (i, bits) in queries.iter().enumerate() {
+            q[i * 2 * s..(i + 1) * 2 * s].copy_from_slice(&sim::activation_row(bits));
+        }
+        let mut w_all = Vec::with_capacity(t * 2 * s * s);
+        for cells in &tiles {
+            let view = TileView::dense(cells, s, s, &vref, toc);
+            w_all.extend(sim::conductance_matrix(&view, &p));
+        }
+        let vref32: Vec<f32> = (0..t)
+            .flat_map(|_| vref.iter().map(|&v| v as f32))
+            .collect();
+
+        let got = eng
+            .match_division(s, b, t, &q, &w_all, &vref32, toc as f32)
+            .unwrap();
+        for (ti, cells) in tiles.iter().enumerate() {
+            let view = TileView::dense(cells, s, s, &vref, toc);
+            let native = sim::match_batch(&view, &queries, &p);
+            for qi in 0..b {
+                for r in 0..s {
+                    let want = native.matched[qi * s + r];
+                    let have = got.matched[ti * b * s + qi * s + r] > 0.5;
+                    assert_eq!(want, have, "t{ti} q{qi} r{r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(eng) = engine() else { return };
+        eng.warm_tile(16, 1).unwrap();
+        let (cells, queries, vref, toc, p) = random_problem(16, 1, 5);
+        let view = TileView::dense(&cells, 16, 16, &vref, toc);
+        let w = sim::conductance_matrix(&view, &p);
+        let q = sim::activation_row(&queries[0]);
+        let vref32: Vec<f32> = vref.iter().map(|&v| v as f32).collect();
+        // Two calls, second must reuse the cache (observable: no error,
+        // same result).
+        let a = eng.match_tile(16, 1, &q, &w, &vref32, toc as f32).unwrap();
+        let b = eng.match_tile(16, 1, &q, &w, &vref32, toc as f32).unwrap();
+        assert_eq!(a.matched, b.matched);
+    }
+
+    #[test]
+    fn bad_buffer_sizes_rejected() {
+        let Some(eng) = engine() else { return };
+        let err = eng.match_tile(16, 1, &[0.0; 3], &[0.0; 512], &[0.4; 16], 1e4);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path — the Rust half of the L2/L1 contract.
+//!
+//! `make artifacts` (python, build-time only) lowers the match graph to
+//! `artifacts/tcam_match_s{S}_b{B}.hlo.txt` plus stacked
+//! `tcam_division_s{S}_b{B}_t{T}.hlo.txt` variants and a manifest. This
+//! module loads the text through `HloModuleProto::from_text_file` (text,
+//! never serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; see /opt/xla-example/README.md), compiles
+//! on the PJRT CPU client, and caches executables keyed by geometry.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest};
+pub use engine::{MatchEngine, MatchResult};

@@ -1,0 +1,79 @@
+//! Area model (paper Eqn 11, implemented verbatim).
+//!
+//! `A = N_t·(S²·A_2T2R + S·(A_SA + A_DFF + A_SP))
+//!      + S·log2(N_c)·(A_1T1R + A_SA2)`
+//!
+//! Inputs in µm², result reported in mm² like Table VI, plus the paper's
+//! area-per-bit column `A / #TCAM cells`.
+
+use crate::tcam::params::DeviceParams;
+use crate::util::ceil_log2;
+
+/// Area summary of one tile grid.
+#[derive(Clone, Debug)]
+pub struct AreaReport {
+    /// Total area (mm²).
+    pub total_mm2: f64,
+    /// Area per TCAM cell/bit (µm²/bit) — Table VI "Area/bit".
+    pub per_bit_um2: f64,
+    pub n_tiles: usize,
+    pub n_cells: usize,
+}
+
+/// Eqn 11. `n_classes >= 1`.
+pub fn area(n_tiles: usize, s: usize, n_classes: usize, p: &DeviceParams) -> AreaReport {
+    let class_bits = ceil_log2(n_classes.max(2)) as f64;
+    let um2 = n_tiles as f64
+        * ((s * s) as f64 * p.a_2t2r + s as f64 * (p.a_sa + p.a_dff + p.a_sp))
+        + s as f64 * class_bits * (p.a_1t1r + p.a_sa2);
+    let n_cells = n_tiles * s * s;
+    AreaReport {
+        total_mm2: um2 / 1.0e6,
+        per_bit_um2: um2 / n_cells as f64,
+        n_tiles,
+        n_cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_config_matches_table6() {
+        // Traffic config: 2000x2048 @ S=128 -> 16 x 17 = 272 tiles,
+        // 2 classes. Paper: 0.07 mm², 0.017 µm²/bit.
+        let p = DeviceParams::default();
+        let a = area(272, 128, 2, &p);
+        assert!(
+            (a.total_mm2 - 0.07).abs() / 0.07 < 0.02,
+            "area {} mm² vs 0.07",
+            a.total_mm2
+        );
+        assert!(
+            (a.per_bit_um2 - 0.017).abs() / 0.017 < 0.10,
+            "area/bit {} vs 0.017",
+            a.per_bit_um2
+        );
+    }
+
+    #[test]
+    fn area_scales_linearly_in_tiles() {
+        let p = DeviceParams::default();
+        let a1 = area(10, 64, 2, &p);
+        let a2 = area(20, 64, 2, &p);
+        // The class-memory term is tile-independent, so slightly sublinear.
+        assert!(a2.total_mm2 < 2.0 * a1.total_mm2 + 1e-12);
+        assert!(a2.total_mm2 > 1.9 * a1.total_mm2);
+    }
+
+    #[test]
+    fn more_classes_cost_class_bits_only() {
+        let p = DeviceParams::default();
+        let a2 = area(4, 32, 2, &p);
+        let a16 = area(4, 32, 16, &p);
+        let delta_um2 = (a16.total_mm2 - a2.total_mm2) * 1e6;
+        let want = 32.0 * 3.0 * (p.a_1t1r + p.a_sa2); // 4 bits vs 1 bit
+        assert!((delta_um2 - want).abs() < 1e-9, "{delta_um2} vs {want}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Energy model (paper Eqn 7 + §II.C.2 worst-case assumptions).
+//!
+//! Per decision: every *active* row of every visited column division costs
+//! `E_row = C_in·VDD² + E_sa` (full precharge from 0 V — the paper's
+//! worst-case — plus one SA sense), and the surviving row's class readout
+//! costs `E_mem` once. Activity is where the architecture saves energy:
+//!
+//! * rogue rows are statically gated (decoder column known at map time);
+//! * with **selective precharge** (Fig 5) a row that mismatched in
+//!   division d is not precharged/evaluated in divisions > d;
+//! * without SP (the Fig 6c baseline) every initially-active row pays in
+//!   every division.
+//!
+//! The extended (masked) columns of the last division are treated as
+//! regular don't-cares for energy — the paper's explicit worst-case — so
+//! a division's row energy does not depend on its masked-column count.
+
+use crate::tcam::params::DeviceParams;
+
+/// Accumulates activity during simulation and prices it at the end.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyAccount {
+    /// Total row-division activations.
+    pub active_row_evals: u64,
+    /// Total class readouts (one per decided input).
+    pub class_reads: u64,
+    /// Decisions accounted.
+    pub decisions: u64,
+}
+
+impl EnergyAccount {
+    pub fn new() -> EnergyAccount {
+        EnergyAccount::default()
+    }
+
+    /// Record one division evaluation with `n_active` rows.
+    pub fn division(&mut self, n_active: usize) {
+        self.active_row_evals += n_active as u64;
+    }
+
+    /// Record the class readout of one decided input.
+    pub fn decision(&mut self) {
+        self.class_reads += 1;
+        self.decisions += 1;
+    }
+
+    /// Total energy (J).
+    pub fn total(&self, p: &DeviceParams) -> f64 {
+        self.active_row_evals as f64 * p.e_row_active() + self.class_reads as f64 * p.e_mem
+    }
+
+    /// Average energy per decision (J/dec).
+    pub fn per_decision(&self, p: &DeviceParams) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.total(p) / self.decisions as f64
+        }
+    }
+
+    /// Average active row-evals per decision (diagnostic).
+    pub fn rows_per_decision(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.active_row_evals as f64 / self.decisions as f64
+        }
+    }
+}
+
+/// Closed-form worst-case traffic-config check (Table VI): 2000 active
+/// rows in the first division, ~1 surviving thereafter.
+pub fn traffic_config_energy(p: &DeviceParams) -> f64 {
+    let first_division_rows = 2000.0;
+    let later_divisions = 16.0; // 17 total
+    let survivors_per_later_division = 1.0;
+    let row_energy = p.e_row_active();
+    first_division_rows * row_energy
+        + later_divisions * survivors_per_later_division * row_energy
+        + p.e_mem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn account_prices_rows_and_reads() {
+        let p = DeviceParams::default();
+        let mut acc = EnergyAccount::new();
+        acc.division(100);
+        acc.division(3);
+        acc.decision();
+        let want = 103.0 * p.e_row_active() + p.e_mem;
+        assert!((acc.total(&p) - want).abs() < 1e-24);
+        assert!((acc.per_decision(&p) - want).abs() < 1e-24);
+        assert!((acc.rows_per_decision() - 103.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn traffic_config_lands_near_paper_0098nj() {
+        // Table VI: DT2CAM_128 energy 0.098 nJ/dec. Our worst-case model
+        // gives ~0.105 nJ (within 8%); EXPERIMENTS.md records the delta.
+        let e = traffic_config_energy(&DeviceParams::default());
+        assert!(
+            (e - 0.098e-9).abs() / 0.098e-9 < 0.10,
+            "traffic energy {e:.3e} J vs paper 0.098e-9 J"
+        );
+    }
+
+    #[test]
+    fn empty_account_is_zero() {
+        let acc = EnergyAccount::new();
+        assert_eq!(acc.per_decision(&DeviceParams::default()), 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Timing model (paper Eqns 8–10 + Table VI throughput).
+//!
+//! * Sequential mode: column divisions evaluate one after another
+//!   (selective-precharge semantics); per-decision delay is
+//!   `Σ_d T_cwd(d)` and the paper's throughput is its reciprocal
+//!   (Table VI: 17 divisions × 1 ns → 58.8 M dec/s for the traffic
+//!   config). Class readout (`T_mem`) overlaps the next input's first
+//!   division in the paper's accounting; we report it in latency but not
+//!   in throughput, and record that convention in EXPERIMENTS.md.
+//! * Pipelined mode: one division per stage; initiation interval is 3
+//!   cycles of `f_max` (precharge/evaluate/sense don't overlap on a tile,
+//!   Fig 4) → 333 M dec/s at S=128 regardless of N_cwd.
+
+use crate::tcam::params::DeviceParams;
+
+use super::mapping::MappedArray;
+
+/// Timing summary of one mapped array.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Per-division T_cwd (Eqn 9), seconds.
+    pub t_cwd: Vec<f64>,
+    /// Sum of per-division latencies (sequential evaluate time).
+    pub t_search: f64,
+    /// Full per-decision latency incl. class readout.
+    pub latency: f64,
+    /// Sequential throughput (dec/s) = 1 / t_search (paper convention).
+    pub throughput_seq: f64,
+    /// Pipelined throughput (dec/s) = f_max / initiation interval.
+    pub throughput_pipe: f64,
+    /// Eqn 10 max operating frequency (worst division).
+    pub f_max: f64,
+}
+
+/// Compute the timing of a mapped array.
+pub fn timing(m: &MappedArray, p: &DeviceParams) -> TimingReport {
+    // Synchronous design: every division takes the same T_cwd, set by the
+    // full tile width S (its T_opt dominates Eqn 9); masked-column load
+    // reduction shifts V_ref2, not timing.
+    let t_cwd: Vec<f64> = m
+        .divisions
+        .iter()
+        .map(|d| 3.0 * p.tau_pchg + d.t_sense + p.t_sa)
+        .collect();
+    let t_search: f64 = t_cwd.iter().sum();
+    let worst_cwd = t_cwd.iter().cloned().fold(0.0f64, f64::max);
+    let f_max = 1.0 / worst_cwd.max(p.t_mem);
+    TimingReport {
+        latency: t_search + p.t_mem,
+        throughput_seq: 1.0 / t_search,
+        throughput_pipe: f_max / p.pipeline_ii_cycles,
+        f_max,
+        t_cwd,
+        t_search,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::iris;
+    use crate::synth::mapping::MappedArray;
+    use crate::util::prng::Prng;
+
+    fn iris_mapped(s: usize) -> (MappedArray, DeviceParams) {
+        let d = iris::load();
+        let lut = compile(&train(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &TrainParams::default(),
+        ));
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(1);
+        (MappedArray::from_lut(&lut, s, &p, &mut rng), p)
+    }
+
+    #[test]
+    fn single_division_latency_is_one_tcwd_plus_tmem() {
+        let (m, p) = iris_mapped(16);
+        assert_eq!(m.n_cwd, 1);
+        let t = timing(&m, &p);
+        assert_eq!(t.t_cwd.len(), 1);
+        assert!((t.latency - (t.t_cwd[0] + p.t_mem)).abs() < 1e-15);
+        assert!((t.throughput_seq - 1.0 / t.t_cwd[0]).abs() / t.throughput_seq < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_throughput_is_fmax_over_three() {
+        let (m, p) = iris_mapped(16);
+        let t = timing(&m, &p);
+        assert!((t.throughput_pipe - t.f_max / 3.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn more_divisions_lower_sequential_throughput() {
+        // Same LUT, smaller S -> more divisions -> slower sequential.
+        let (m16, p) = iris_mapped(4.max(16)); // 1 division
+        let d = iris::load();
+        let lut = compile(&train(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &TrainParams::default(),
+        ));
+        let mut rng = Prng::new(1);
+        // Force multi-division via a smaller-than-width S is impossible for
+        // iris at 16 (width 13), so build a wide synthetic LUT instead.
+        let mut g = crate::testkit::Gen::new(3);
+        let xs = g.matrix(120, 6);
+        let ys: Vec<usize> = (0..120).map(|_| g.usize_in(0, 2)).collect();
+        let wide = compile(&train(&xs, &ys, 2, &TrainParams::default()));
+        let m_multi = MappedArray::from_lut(&wide, 16, &p, &mut rng);
+        if m_multi.n_cwd > 1 {
+            let t1 = timing(&m16, &p);
+            let t2 = timing(&m_multi, &p);
+            assert!(t2.throughput_seq < t1.throughput_seq);
+        }
+        let _ = lut;
+    }
+
+    #[test]
+    fn traffic_config_matches_table6() {
+        // 2000x2048 LUT @ S=128 -> 17 divisions of ~1 ns -> 58.8 M dec/s
+        // sequential; pipelined 333 M dec/s (Table VI rows DT2CAM_128 and
+        // P-DT2CAM_128).
+        use crate::synth::mapping::DivisionInfo;
+        let p = DeviceParams::default();
+        // Synthesize the division structure directly (the real mapping of
+        // a 2000x2048 LUT; building the cells is unnecessary for timing).
+        let n_cwd = crate::util::ceil_div(2048 + 1, 128);
+        assert_eq!(n_cwd, 17);
+        let t_sense = p.t_opt(128);
+        let divisions: Vec<DivisionInfo> = (0..n_cwd)
+            .map(|d| {
+                let col_start = d * 128;
+                let n_load = if d == n_cwd - 1 {
+                    128 - (17 * 128 - 2049)
+                } else {
+                    128
+                };
+                DivisionInfo {
+                    col_start,
+                    col_end: col_start + 128,
+                    n_load,
+                    t_sense,
+                    vref_nominal: p.v_ref_at(n_load, t_sense),
+                }
+            })
+            .collect();
+        let t_search: f64 = divisions
+            .iter()
+            .map(|d| 3.0 * p.tau_pchg + d.t_sense + p.t_sa)
+            .sum();
+        let throughput = 1.0 / t_search;
+        assert!(
+            (throughput - 58.8e6).abs() / 58.8e6 < 0.05,
+            "sequential throughput {throughput:.3e} vs paper 58.8e6"
+        );
+        let worst: f64 = divisions
+            .iter()
+            .map(|d| 3.0 * p.tau_pchg + d.t_sense + p.t_sa)
+            .fold(0.0, f64::max);
+        let pipe = (1.0 / worst.max(p.t_mem)) / p.pipeline_ii_cycles;
+        assert!(
+            (pipe - 333e6).abs() / 333e6 < 0.05,
+            "pipelined throughput {pipe:.3e} vs paper 333e6"
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! Tile mapping (paper §II.C.1, Fig 3).
+//!
+//! The LUT (m rows × w trits) plus one reserved **decoder column** maps
+//! onto `N_t = N_rwd × N_cwd` tiles of size S×S:
+//!
+//! * `N_cwd = ⌈(w + 1) / S⌉` column-wise divisions, `N_rwd = ⌈m / S⌉`
+//!   row-wise tiles (the Table V formulas).
+//! * The decoder column is column 0 of the first division: real rows store
+//!   trit 0, rogue (padding) rows store trit 1; the query is prefixed with
+//!   a '0' bit, so rogue rows are forced to mismatch.
+//! * Unused cells are don't-care; the *extended* columns of the last
+//!   division are **masked** don't-cares (OFF-OFF, no ML load) — which is
+//!   why the last division senses with its own `V_ref2`/`T_opt` (computed
+//!   for the reduced loading-cell count).
+//! * Rogue rows get random classes from the label set (paper).
+//! * Class labels live in `⌈log2 C⌉` 1T1R cells per row next to the last
+//!   division.
+
+use crate::compiler::{Lut, Trit};
+use crate::tcam::cell::Cell;
+use crate::tcam::params::DeviceParams;
+use crate::util::{ceil_div, ceil_log2};
+use crate::util::prng::Prng;
+
+/// Sensing configuration of one column-wise division.
+#[derive(Clone, Debug)]
+pub struct DivisionInfo {
+    /// First column (within the padded array) of this division.
+    pub col_start: usize,
+    /// One past the last column.
+    pub col_end: usize,
+    /// Cells per row that actually load the match line (masked extended
+    /// columns excluded) — determines T_opt and V_ref.
+    pub n_load: usize,
+    /// Sensing instant for this division. The design is synchronous: the
+    /// clock period (Eqn 10) is set by the full tile width S, so every
+    /// division senses at T_opt(S); reduced-load divisions compensate via
+    /// their reference voltage (V_ref2), not their timing.
+    pub t_sense: f64,
+    /// Nominal SA reference voltage (V_ref1, or V_ref2 on the last
+    /// division when masked columns are present).
+    pub vref_nominal: f64,
+}
+
+/// The LUT mapped onto a padded S×S tile grid.
+#[derive(Clone, Debug)]
+pub struct MappedArray {
+    pub s: usize,
+    pub n_rwd: usize,
+    pub n_cwd: usize,
+    /// Real LUT rows (rows beyond this are rogue).
+    pub real_rows: usize,
+    /// Real columns incl. decoder (columns beyond this are masked).
+    pub real_width: usize,
+    pub padded_rows: usize,
+    pub padded_width: usize,
+    /// Packed [`Cell`] bytes, `padded_rows × padded_width` row-major.
+    pub cells: Vec<u8>,
+    /// Per padded row class (rogue rows: random class, as the paper).
+    pub classes: Vec<usize>,
+    /// Binary class bits (1T1R contents) per padded row.
+    pub class_bits: Vec<Vec<bool>>,
+    pub n_classes: usize,
+    pub divisions: Vec<DivisionInfo>,
+    /// Nominal per-(division, row) SA reference voltages,
+    /// `vref[d * padded_rows + r]` — the non-ideality layer perturbs a
+    /// copy of this (SA manufacturing variability).
+    pub vref: Vec<f64>,
+    /// Statically disable rogue rows' precharge (decoder bits are known at
+    /// mapping time): the energy model then never counts them. Matches the
+    /// paper's "further energy savings" for rogue rows.
+    pub gate_rogue_rows: bool,
+}
+
+impl MappedArray {
+    /// Map a compiled LUT onto S×S tiles (paper defaults: decoder column
+    /// reserved, rogue rows gated).
+    pub fn from_lut(lut: &Lut, s: usize, p: &DeviceParams, rng: &mut Prng) -> MappedArray {
+        let real_rows = lut.n_rows();
+        let real_width = lut.width() + 1; // + decoder column
+        let n_rwd = ceil_div(real_rows, s).max(1);
+        let n_cwd = ceil_div(real_width, s).max(1);
+        let padded_rows = n_rwd * s;
+        let padded_width = n_cwd * s;
+
+        let mut cells = vec![0u8; padded_rows * padded_width];
+        let x_cell = Cell::from_trit(Trit::X).to_byte();
+        let masked_cell = Cell::masked().to_byte();
+        let dec_real = Cell::from_trit(Trit::Zero).to_byte();
+        let dec_rogue = Cell::from_trit(Trit::One).to_byte();
+
+        for r in 0..padded_rows {
+            let row = &mut cells[r * padded_width..(r + 1) * padded_width];
+            // Decoder column.
+            row[0] = if r < real_rows { dec_real } else { dec_rogue };
+            for c in 1..padded_width {
+                row[c] = if r < real_rows && c < real_width {
+                    Cell::from_trit(lut.stored[r][c - 1]).to_byte()
+                } else if c >= real_width {
+                    // Extended columns: masked don't-cares (the paper's
+                    // energy model treats them as regular don't-cares in
+                    // the worst case — the energy module handles that).
+                    masked_cell
+                } else {
+                    // Rogue rows inside the real width: plain don't-care.
+                    x_cell
+                };
+            }
+        }
+
+        // Classes: real rows keep theirs; rogue rows draw random labels.
+        let cw = ceil_log2(lut.n_classes);
+        let mut classes = Vec::with_capacity(padded_rows);
+        let mut class_bits = Vec::with_capacity(padded_rows);
+        for r in 0..padded_rows {
+            let c = if r < real_rows {
+                lut.classes[r]
+            } else {
+                rng.below(lut.n_classes)
+            };
+            classes.push(c);
+            class_bits.push((0..cw).map(|b| (c >> (cw - 1 - b)) & 1 == 1).collect());
+        }
+
+        // Division sensing parameters. One synchronous sensing instant
+        // (T_opt of the full width S); per-division V_ref compensates for
+        // masked-column load reduction (V_ref1 vs V_ref2, paper §II.C.2).
+        let t_sense = p.t_opt(s);
+        let mut divisions = Vec::with_capacity(n_cwd);
+        for d in 0..n_cwd {
+            let col_start = d * s;
+            let col_end = col_start + s;
+            let masked_cols = col_end.saturating_sub(real_width.max(col_start));
+            let n_load = (s - masked_cols).max(1);
+            divisions.push(DivisionInfo {
+                col_start,
+                col_end,
+                n_load,
+                t_sense,
+                vref_nominal: p.v_ref_at(n_load, t_sense),
+            });
+        }
+
+        let mut vref = Vec::with_capacity(n_cwd * padded_rows);
+        for d in &divisions {
+            vref.extend(std::iter::repeat(d.vref_nominal).take(padded_rows));
+        }
+
+        MappedArray {
+            s,
+            n_rwd,
+            n_cwd,
+            real_rows,
+            real_width,
+            padded_rows,
+            padded_width,
+            cells,
+            classes,
+            class_bits,
+            n_classes: lut.n_classes,
+            divisions,
+            vref,
+            gate_rogue_rows: true,
+        }
+    }
+
+    /// Total number of tiles `N_t` (Eqn 11, Table V).
+    pub fn n_tiles(&self) -> usize {
+        self.n_rwd * self.n_cwd
+    }
+
+    /// Build the padded query: leading decoder '0' bit + encoded LUT bits
+    /// + zeros over masked columns.
+    pub fn pad_query(&self, encoded: &[bool]) -> Vec<bool> {
+        debug_assert_eq!(encoded.len() + 1, self.real_width);
+        let mut q = Vec::with_capacity(self.padded_width);
+        q.push(false); // decoder bit
+        q.extend_from_slice(encoded);
+        q.resize(self.padded_width, false);
+        q
+    }
+
+    /// Cell accessor (tests/diagnostics).
+    pub fn cell(&self, r: usize, c: usize) -> Cell {
+        Cell::from_byte(self.cells[r * self.padded_width + c])
+    }
+
+    /// Rows that participate at all (rogue rows excluded when gated).
+    pub fn initially_active_rows(&self) -> usize {
+        if self.gate_rogue_rows {
+            self.real_rows
+        } else {
+            self.padded_rows
+        }
+    }
+
+    /// Digital full-array search of a padded query: row indices matching
+    /// in *every* division (the reference the simulator is tested
+    /// against).
+    pub fn digital_matches(&self, padded_query: &[bool]) -> Vec<usize> {
+        (0..self.padded_rows)
+            .filter(|&r| {
+                (0..self.padded_width).all(|c| self.cell(r, c).matches(padded_query[c]))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::iris;
+    use crate::testkit::property;
+
+    fn iris_lut() -> Lut {
+        let d = iris::load();
+        compile(&train(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &TrainParams::default(),
+        ))
+    }
+
+    #[test]
+    fn tile_grid_formulas_match_table5() {
+        // Table V: grid counts for given LUT sizes (we check the formula
+        // against the paper's own numbers).
+        let cases = [
+            // (lut rows, lut width, s, n_rwd, n_cwd)
+            (9, 12, 16, 1, 1),     // Iris @ 16
+            (120, 123, 16, 8, 8),  // Diabetes @ 16
+            (93, 71, 16, 6, 5),    // Haberman @ 16
+            (76, 20, 16, 5, 2),    // Car @ 16
+            (8475, 3580, 16, 530, 224), // Credit @ 16
+            (8475, 3580, 128, 67, 28),  // Credit @ 128
+            (441, 146, 64, 7, 3),  // Covid @ 64
+            (191, 150, 128, 2, 2), // Titanic @ 128
+        ];
+        for (rows, width, s, rwd, cwd) in cases {
+            assert_eq!(ceil_div(rows, s), rwd, "rows {rows} s {s}");
+            assert_eq!(ceil_div(width + 1, s), cwd, "width {width} s {s}");
+        }
+    }
+
+    #[test]
+    fn iris_maps_to_single_tile_at_16() {
+        let lut = iris_lut();
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(1);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        assert_eq!((m.n_rwd, m.n_cwd), (1, 1), "Table V Iris row");
+        assert_eq!(m.padded_rows, 16);
+        assert_eq!(m.padded_width, 16);
+    }
+
+    #[test]
+    fn decoder_column_separates_real_from_rogue() {
+        let lut = iris_lut();
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(1);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        for r in 0..m.padded_rows {
+            let cell = m.cell(r, 0);
+            if r < m.real_rows {
+                assert!(cell.matches(false) && !cell.matches(true));
+            } else {
+                assert!(!cell.matches(false) && cell.matches(true));
+            }
+        }
+    }
+
+    #[test]
+    fn rogue_rows_never_match_padded_queries() {
+        property("rogue rows forced mismatch", 10, |g| {
+            let n = g.usize_in(10, 60);
+            let f = g.usize_in(1, 4);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 3)).collect();
+            let lut = compile(&train(&xs, &ys, 3, &TrainParams::default()));
+            let p = DeviceParams::default();
+            let mut rng = Prng::new(g.u64());
+            let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+            (0..10).all(|_| {
+                let x: Vec<f64> = (0..f).map(|_| g.f64_in(0.0, 1.0)).collect();
+                let q = m.pad_query(&lut.encode_input(&x));
+                m.digital_matches(&q).iter().all(|&r| r < m.real_rows)
+            })
+        });
+    }
+
+    #[test]
+    fn mapped_search_agrees_with_lut_search() {
+        property("mapping preserves matches", 10, |g| {
+            let n = g.usize_in(10, 80);
+            let f = g.usize_in(1, 4);
+            let xs = g.matrix(n, f);
+            let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 2)).collect();
+            let lut = compile(&train(&xs, &ys, 2, &TrainParams::default()));
+            let p = DeviceParams::default();
+            let mut rng = Prng::new(g.u64());
+            for s in [16usize, 32] {
+                let m = MappedArray::from_lut(&lut, s, &p, &mut rng);
+                for _ in 0..8 {
+                    let x: Vec<f64> = (0..f).map(|_| g.f64_in(0.0, 1.0)).collect();
+                    let enc = lut.encode_input(&x);
+                    let want = lut.matching_rows(&enc);
+                    let got = m.digital_matches(&m.pad_query(&enc));
+                    if want != got {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn last_division_has_reduced_load_when_masked() {
+        let lut = iris_lut(); // width 12 -> real_width 13 @ S=16: masked 3
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(1);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        let d = &m.divisions[0];
+        assert_eq!(d.n_load, 13);
+        assert!(d.vref_nominal > 0.0);
+        // V_ref2 for 13 loading cells differs from a full 16-cell V_ref1,
+        // at the same (synchronous) sensing instant.
+        assert!((d.vref_nominal - p.v_ref_at(16, d.t_sense)).abs() > 1e-6);
+        assert!((d.t_sense - p.t_opt(16)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn all_divisions_full_load_when_width_divides() {
+        // Fabricate a LUT whose width+1 is a multiple of S.
+        let n = 40;
+        let f = 3;
+        let mut g = crate::testkit::Gen::new(7);
+        let xs = g.matrix(n, f);
+        let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 2)).collect();
+        let lut = compile(&train(&xs, &ys, 2, &TrainParams::default()));
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(2);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        for (i, d) in m.divisions.iter().enumerate() {
+            if i + 1 < m.divisions.len() {
+                assert_eq!(d.n_load, 16, "non-last division must be fully loaded");
+            }
+        }
+        assert_eq!(m.vref.len(), m.n_cwd * m.padded_rows);
+    }
+
+    #[test]
+    fn class_bits_cover_padded_rows() {
+        let lut = iris_lut();
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(1);
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+        assert_eq!(m.classes.len(), m.padded_rows);
+        assert_eq!(m.class_bits.len(), m.padded_rows);
+        for (r, bits) in m.class_bits.iter().enumerate() {
+            let decoded = bits.iter().fold(0usize, |a, &b| (a << 1) | usize::from(b));
+            assert_eq!(decoded, m.classes[r]);
+            assert!(m.classes[r] < m.n_classes);
+        }
+    }
+}

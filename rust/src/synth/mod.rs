@@ -1,0 +1,22 @@
+//! ReCAM functional synthesizer (paper §II.C).
+//!
+//! * [`mapping`] — LUT → S×S tile grid with decoder column, rogue rows,
+//!   don't-care padding, masked extended columns, per-division sensing
+//!   parameters (V_ref1/V_ref2, T_opt) and 1T1R class memory.
+//! * [`range`] — dynamic-range / target-size analysis (Table IV).
+//! * [`energy`] — Eqn 7 energy accounting (worst-case precharge model).
+//! * [`latency`] — Eqns 8–10 timing + sequential/pipelined throughput.
+//! * [`area`] — Eqn 11 area model + area/bit.
+//! * [`simulate`] — the functional simulator: runs encoded inputs through
+//!   the mapped array with selective-precharge semantics and produces
+//!   accuracy / energy / latency / EDP (drives Figs 6–8).
+
+pub mod area;
+pub mod energy;
+pub mod latency;
+pub mod mapping;
+pub mod range;
+pub mod simulate;
+
+pub use mapping::{DivisionInfo, MappedArray};
+pub use simulate::{simulate, SimOptions, SimReport};

@@ -1,0 +1,70 @@
+//! Dynamic-range / target-size analysis (paper Table IV, Eqn 6).
+//!
+//! For each `D_limit`, find the widest row that still gives the SA a
+//! "measurable difference", then pick the power-of-two tile size — the
+//! exact procedure behind Table IV.
+
+use crate::tcam::params::DeviceParams;
+
+/// One Table IV row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RangeRow {
+    pub d_limit: f64,
+    pub max_cells: usize,
+    pub chosen_s: usize,
+    /// D_cap actually achieved at `chosen_s` (diagnostic column).
+    pub d_at_chosen: f64,
+}
+
+/// The paper's D_limit sweep.
+pub const D_LIMITS: [f64; 5] = [0.2, 0.3, 0.4, 0.5, 0.6];
+
+/// Regenerate Table IV.
+pub fn table4(p: &DeviceParams) -> Vec<RangeRow> {
+    D_LIMITS
+        .iter()
+        .map(|&d_limit| {
+            let max_cells = p.max_cells_for_range(d_limit);
+            let chosen_s = p.chosen_tile_size(d_limit);
+            RangeRow {
+                d_limit,
+                max_cells,
+                chosen_s,
+                d_at_chosen: p.dynamic_range(chosen_s),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_s_column_is_exact() {
+        let rows = table4(&DeviceParams::default());
+        let s: Vec<usize> = rows.iter().map(|r| r.chosen_s).collect();
+        assert_eq!(s, vec![128, 64, 32, 32, 16], "paper Table IV S column");
+    }
+
+    #[test]
+    fn chosen_s_meets_its_limit() {
+        for r in table4(&DeviceParams::default()) {
+            assert!(
+                r.d_at_chosen >= r.d_limit,
+                "S={} violates D_limit={}",
+                r.chosen_s,
+                r.d_limit
+            );
+            assert!(r.chosen_s <= r.max_cells);
+        }
+    }
+
+    #[test]
+    fn max_cells_monotone_in_limit() {
+        let rows = table4(&DeviceParams::default());
+        for w in rows.windows(2) {
+            assert!(w[0].max_cells >= w[1].max_cells);
+        }
+    }
+}

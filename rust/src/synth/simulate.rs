@@ -1,0 +1,308 @@
+//! Functional simulation (paper §II.C.2): run a test set through the
+//! mapped ReCAM and report accuracy, energy, latency, and EDP.
+//!
+//! Mode of operation (Fig 4): column-wise divisions evaluate sequentially;
+//! row-wise tiles of a division operate in parallel (same cycle — the
+//! simulator evaluates all padded rows of a division at once). With
+//! selective precharge, a row that mismatches in division d is deactivated
+//! for divisions > d and dissipates nothing there; without SP (Fig 6c
+//! baseline) every initially-active row pays in every division. Rogue rows
+//! are statically gated (decoder column).
+//!
+//! Match evaluation is analog and kernel-faithful: conductance sum → RC
+//! discharge at the division's T_opt → SA compare against the row's
+//! (possibly variability-offset) V_ref. A digital mode exists for
+//! differential testing.
+//!
+//! After the last division the surviving row's 1T1R class bits are read
+//! (priority encoder on the lowest row index if faults produce multiple
+//! survivors; a zero-survivor event is a misclassification).
+
+use crate::compiler::Lut;
+use crate::tcam::cell::Cell;
+use crate::tcam::params::DeviceParams;
+
+use super::energy::EnergyAccount;
+use super::latency::{timing, TimingReport};
+use super::mapping::MappedArray;
+
+/// Simulation switches.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    /// Selective precharge enabled (paper default: on; Fig 6c ablates).
+    pub selective_precharge: bool,
+    /// Analog (kernel-faithful) evaluation; `false` = ideal digital.
+    pub analog: bool,
+    /// Cap on simulated inputs (0 = all). Large datasets are subsampled
+    /// deterministically (first `max_inputs`) — recorded in reports.
+    pub max_inputs: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            selective_precharge: true,
+            analog: true,
+            max_inputs: 0,
+        }
+    }
+}
+
+/// Simulation outcome (one dataset × one geometry × one fault state).
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub n_inputs: usize,
+    /// Fraction of inputs classified to the dataset label.
+    pub accuracy: f64,
+    /// Fraction agreeing with the software tree (golden) prediction.
+    pub golden_agreement: f64,
+    /// Average energy per decision (J).
+    pub energy_per_dec: f64,
+    /// Average active row-evaluations per decision.
+    pub rows_per_dec: f64,
+    /// Timing (shared across inputs — geometry-determined).
+    pub timing: TimingReport,
+    /// EDP per decision (J·s), sequential delay convention (Fig 6b).
+    pub edp: f64,
+    /// Inputs with no surviving row (fault-induced).
+    pub no_match: usize,
+    /// Inputs with multiple surviving rows (fault-induced).
+    pub multi_match: usize,
+    pub n_tiles: usize,
+}
+
+/// Run the functional simulation.
+///
+/// * `vref` — per-(division, row) SA references, layout as
+///   [`MappedArray::vref`]; pass `&m.vref` for nominal sensing or a
+///   perturbed copy for SA-variability studies.
+/// * `golden` — software tree predictions for agreement accounting.
+pub fn simulate(
+    m: &MappedArray,
+    lut: &Lut,
+    inputs: &[Vec<f64>],
+    labels: &[usize],
+    golden: &[usize],
+    vref: &[f64],
+    p: &DeviceParams,
+    opts: &SimOptions,
+) -> SimReport {
+    assert_eq!(inputs.len(), labels.len());
+    assert_eq!(inputs.len(), golden.len());
+    assert_eq!(vref.len(), m.n_cwd * m.padded_rows);
+
+    let n = if opts.max_inputs > 0 {
+        inputs.len().min(opts.max_inputs)
+    } else {
+        inputs.len()
+    };
+
+    let mut energy = EnergyAccount::new();
+    let mut correct = 0usize;
+    let mut agree = 0usize;
+    let mut no_match = 0usize;
+    let mut multi_match = 0usize;
+
+    let initial: Vec<u32> = (0..m.initially_active_rows() as u32).collect();
+    let vdd = p.vdd as f32;
+
+    for i in 0..n {
+        let q = m.pad_query(&lut.encode_input(&inputs[i]));
+        let mut active = initial.clone();
+
+        for (d, div) in m.divisions.iter().enumerate() {
+            // Energy: with SP only still-active rows pay; without SP the
+            // whole initial set pays in every division.
+            let paying = if opts.selective_precharge {
+                active.len()
+            } else {
+                initial.len()
+            };
+            energy.division(paying);
+
+            let toc = (div.t_sense / p.c_in) as f32;
+            let vref_d = &vref[d * m.padded_rows..(d + 1) * m.padded_rows];
+            active.retain(|&r| {
+                let r = r as usize;
+                let base = r * m.padded_width;
+                if opts.analog {
+                    let mut g = 0.0f32;
+                    for c in div.col_start..div.col_end {
+                        g += Cell::from_byte(m.cells[base + c]).g_active(q[c], p) as f32;
+                    }
+                    let v = vdd * (-toc * g).exp();
+                    v > vref_d[r] as f32
+                } else {
+                    (div.col_start..div.col_end)
+                        .all(|c| Cell::from_byte(m.cells[base + c]).matches(q[c]))
+                }
+            });
+            if active.is_empty() {
+                break; // every row lost: no survivor can emerge
+            }
+        }
+
+        let predicted = match active.len() {
+            0 => {
+                no_match += 1;
+                None
+            }
+            1 => Some(m.classes[active[0] as usize]),
+            _ => {
+                multi_match += 1;
+                // Priority encoder: lowest surviving row wins.
+                Some(m.classes[active[0] as usize])
+            }
+        };
+        energy.decision();
+
+        if let Some(c) = predicted {
+            if c == labels[i] {
+                correct += 1;
+            }
+            if c == golden[i] {
+                agree += 1;
+            }
+        }
+    }
+
+    let t = timing(m, p);
+    let e_dec = energy.per_decision(p);
+    let delay_seq = 1.0 / t.throughput_seq;
+    SimReport {
+        n_inputs: n,
+        accuracy: correct as f64 / n.max(1) as f64,
+        golden_agreement: agree as f64 / n.max(1) as f64,
+        energy_per_dec: e_dec,
+        rows_per_dec: energy.rows_per_decision(),
+        edp: e_dec * delay_seq,
+        timing: t,
+        no_match,
+        multi_match,
+        n_tiles: m.n_tiles(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::{catalog, iris};
+    use crate::util::prng::Prng;
+
+    fn setup(
+        name: &str,
+        s: usize,
+    ) -> (MappedArray, Lut, Vec<Vec<f64>>, Vec<usize>, Vec<usize>, DeviceParams) {
+        let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
+        d.normalize();
+        let mut rng = Prng::new(7);
+        let split = d.split(0.9, &mut rng);
+        let (xs, ys) = d.gather(&split.train);
+        let tree = train(&xs, &ys, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let m = MappedArray::from_lut(&lut, s, &p, &mut rng);
+        let (txs, tys) = d.gather(&split.test);
+        let golden: Vec<usize> = txs.iter().map(|x| tree.predict(x)).collect();
+        (m, lut, txs, tys, golden, p)
+    }
+
+    #[test]
+    fn ideal_hardware_matches_golden_exactly() {
+        // Paper §IV.B: "the accuracy evaluated by the ReCAM synthesizer
+        // for ideal hardware matches the accuracy obtained in Python".
+        for s in [16usize, 64] {
+            let (m, lut, xs, ys, golden, p) = setup("iris", s);
+            let r = simulate(&m, &lut, &xs, &ys, &golden, &m.vref, &p, &SimOptions::default());
+            assert_eq!(r.golden_agreement, 1.0, "S={s}");
+            assert_eq!(r.no_match, 0);
+            assert_eq!(r.multi_match, 0);
+            // Accuracy equals the tree's test accuracy.
+            let tree_acc = golden
+                .iter()
+                .zip(&ys)
+                .filter(|(g, y)| g == y)
+                .count() as f64
+                / ys.len() as f64;
+            assert!((r.accuracy - tree_acc).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn digital_and_analog_agree_on_ideal_cells() {
+        let (m, lut, xs, ys, golden, p) = setup("haberman", 16);
+        let a = simulate(
+            &m, &lut, &xs, &ys, &golden, &m.vref, &p,
+            &SimOptions { analog: true, ..Default::default() },
+        );
+        let d = simulate(
+            &m, &lut, &xs, &ys, &golden, &m.vref, &p,
+            &SimOptions { analog: false, ..Default::default() },
+        );
+        assert_eq!(a.accuracy, d.accuracy);
+        assert_eq!(a.golden_agreement, d.golden_agreement);
+    }
+
+    #[test]
+    fn sp_reduces_energy_on_multi_division_arrays() {
+        let (m, lut, xs, ys, golden, p) = setup("haberman", 16);
+        assert!(m.n_cwd > 1, "need multiple divisions for this test");
+        let with_sp = simulate(&m, &lut, &xs, &ys, &golden, &m.vref, &p, &SimOptions::default());
+        let without = simulate(
+            &m, &lut, &xs, &ys, &golden, &m.vref, &p,
+            &SimOptions { selective_precharge: false, ..Default::default() },
+        );
+        assert!(
+            with_sp.energy_per_dec < without.energy_per_dec,
+            "SP {} !< no-SP {}",
+            with_sp.energy_per_dec,
+            without.energy_per_dec
+        );
+        // Accuracy must be identical — SP is purely an energy feature.
+        assert_eq!(with_sp.accuracy, without.accuracy);
+    }
+
+    #[test]
+    fn single_division_sp_is_noop() {
+        let (m, lut, xs, ys, golden, p) = setup("iris", 16);
+        assert_eq!(m.n_cwd, 1);
+        let a = simulate(&m, &lut, &xs, &ys, &golden, &m.vref, &p, &SimOptions::default());
+        let b = simulate(
+            &m, &lut, &xs, &ys, &golden, &m.vref, &p,
+            &SimOptions { selective_precharge: false, ..Default::default() },
+        );
+        assert_eq!(a.energy_per_dec, b.energy_per_dec);
+    }
+
+    #[test]
+    fn max_inputs_caps_work() {
+        let (m, lut, xs, ys, golden, p) = setup("iris", 16);
+        let r = simulate(
+            &m, &lut, &xs, &ys, &golden, &m.vref, &p,
+            &SimOptions { max_inputs: 5, ..Default::default() },
+        );
+        assert_eq!(r.n_inputs, 5);
+    }
+
+    #[test]
+    fn energy_accounting_is_bounded_by_worst_case() {
+        let (m, lut, xs, ys, golden, p) = setup("haberman", 16);
+        let r = simulate(&m, &lut, &xs, &ys, &golden, &m.vref, &p, &SimOptions::default());
+        let worst = (m.real_rows * m.n_cwd) as f64 * p.e_row_active() + p.e_mem;
+        assert!(r.energy_per_dec <= worst + 1e-20);
+        assert!(r.energy_per_dec > 0.0);
+        // First division always pays for all real rows.
+        assert!(r.rows_per_dec >= m.real_rows as f64);
+    }
+
+    #[test]
+    fn iris_full_dataset_accuracy_is_high() {
+        // End-to-end smoke: train/test on iris through the whole stack.
+        let (m, lut, xs, ys, golden, p) = setup("iris", 16);
+        let r = simulate(&m, &lut, &xs, &ys, &golden, &m.vref, &p, &SimOptions::default());
+        assert!(r.accuracy >= 0.8, "iris test accuracy {}", r.accuracy);
+        let _ = iris::load();
+    }
+}

@@ -1,0 +1,172 @@
+//! 2T2R TCAM cell at resistor granularity.
+//!
+//! Table I encoding: trit 0 → {R1=HRS, R2=LRS}, trit 1 → {LRS, HRS},
+//! 'x' → {HRS, HRS}. Query bit b activates branch b (so a stored 0 matches
+//! query 0 through its HRS branch and mismatches query 1 through LRS).
+//! A *masked* don't-care keeps both access transistors OFF and barely
+//! loads the match line (extended columns of the last column division).
+//!
+//! Keeping the two resistor levels explicit makes stuck-at-fault injection
+//! (SA0 → device stuck HRS, SA1 → stuck LRS) a plain state rewrite with
+//! exactly the outcome table the paper lists (Table I).
+
+use crate::compiler::Trit;
+
+use super::params::DeviceParams;
+
+/// One resistive device's level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    Hrs,
+    Lrs,
+}
+
+/// One TCAM cell: two resistive branches + masked flag. Packs into a byte
+/// (`to_byte`/`from_byte`) so the Credit-scale arrays stay compact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub r1: Level,
+    pub r2: Level,
+    pub masked: bool,
+}
+
+impl Cell {
+    /// Encode a compiler trit (Table I).
+    pub fn from_trit(t: Trit) -> Cell {
+        match t {
+            Trit::Zero => Cell {
+                r1: Level::Hrs,
+                r2: Level::Lrs,
+                masked: false,
+            },
+            Trit::One => Cell {
+                r1: Level::Lrs,
+                r2: Level::Hrs,
+                masked: false,
+            },
+            Trit::X => Cell {
+                r1: Level::Hrs,
+                r2: Level::Hrs,
+                masked: false,
+            },
+        }
+    }
+
+    /// A masked don't-care (OFF-OFF transistors; extended columns).
+    pub fn masked() -> Cell {
+        Cell {
+            r1: Level::Hrs,
+            r2: Level::Hrs,
+            masked: true,
+        }
+    }
+
+    /// Conductance of the branch activated by query bit `b`.
+    pub fn g_active(&self, b: bool, p: &DeviceParams) -> f64 {
+        if self.masked {
+            return p.g_masked();
+        }
+        let level = if b { self.r2 } else { self.r1 };
+        match level {
+            Level::Hrs => p.g_match(),
+            Level::Lrs => p.g_mismatch(),
+        }
+    }
+
+    /// Digital (ideal) view: does query bit `b` match this cell? A cell
+    /// matches when its activated branch is high-resistance.
+    pub fn matches(&self, b: bool) -> bool {
+        if self.masked {
+            return true;
+        }
+        (if b { self.r2 } else { self.r1 }) == Level::Hrs
+    }
+
+    /// Byte packing: bit0 = r1 is LRS, bit1 = r2 is LRS, bit2 = masked.
+    pub fn to_byte(self) -> u8 {
+        (self.r1 == Level::Lrs) as u8
+            | (((self.r2 == Level::Lrs) as u8) << 1)
+            | ((self.masked as u8) << 2)
+    }
+
+    pub fn from_byte(b: u8) -> Cell {
+        Cell {
+            r1: if b & 1 != 0 { Level::Lrs } else { Level::Hrs },
+            r2: if b & 2 != 0 { Level::Lrs } else { Level::Hrs },
+            masked: b & 4 != 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trit_encoding_matches_table1() {
+        let c0 = Cell::from_trit(Trit::Zero);
+        assert_eq!((c0.r1, c0.r2), (Level::Hrs, Level::Lrs));
+        let c1 = Cell::from_trit(Trit::One);
+        assert_eq!((c1.r1, c1.r2), (Level::Lrs, Level::Hrs));
+        let cx = Cell::from_trit(Trit::X);
+        assert_eq!((cx.r1, cx.r2), (Level::Hrs, Level::Hrs));
+    }
+
+    #[test]
+    fn digital_match_semantics() {
+        assert!(Cell::from_trit(Trit::Zero).matches(false));
+        assert!(!Cell::from_trit(Trit::Zero).matches(true));
+        assert!(!Cell::from_trit(Trit::One).matches(false));
+        assert!(Cell::from_trit(Trit::One).matches(true));
+        assert!(Cell::from_trit(Trit::X).matches(false));
+        assert!(Cell::from_trit(Trit::X).matches(true));
+        assert!(Cell::masked().matches(false));
+        assert!(Cell::masked().matches(true));
+    }
+
+    #[test]
+    fn conductance_match_vs_mismatch() {
+        let p = DeviceParams::default();
+        let c = Cell::from_trit(Trit::Zero);
+        assert_eq!(c.g_active(false, &p), p.g_match());
+        assert_eq!(c.g_active(true, &p), p.g_mismatch());
+        assert_eq!(Cell::masked().g_active(true, &p), p.g_masked());
+    }
+
+    #[test]
+    fn digital_agrees_with_analog_threshold() {
+        // matches(b) <=> activated conductance is the small (HRS) one.
+        let p = DeviceParams::default();
+        for t in [Trit::Zero, Trit::One, Trit::X] {
+            let c = Cell::from_trit(t);
+            for b in [false, true] {
+                let digital = c.matches(b);
+                let analog_high_r = c.g_active(b, &p) <= p.g_match() + 1e-18;
+                assert_eq!(digital, analog_high_r, "{t:?} q={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        for r1 in [Level::Hrs, Level::Lrs] {
+            for r2 in [Level::Hrs, Level::Lrs] {
+                for masked in [false, true] {
+                    let c = Cell { r1, r2, masked };
+                    assert_eq!(Cell::from_byte(c.to_byte()), c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lrs_lrs_always_mismatches() {
+        // Table I: SA1 can produce {LRS, LRS} — mismatch on both queries.
+        let c = Cell {
+            r1: Level::Lrs,
+            r2: Level::Lrs,
+            masked: false,
+        };
+        assert!(!c.matches(false) && !c.matches(true));
+    }
+}

@@ -1,0 +1,18 @@
+//! Resistive TCAM device + array model (paper §II.C, Table III, [30]).
+//!
+//! * [`params`] — 16 nm predictive technology constants (Table III) and
+//!   the calibrated SPICE-surrogate constants (DESIGN.md §6), plus the
+//!   closed forms: dynamic range (Eqn 6), optimal sensing time (Eqn 8),
+//!   column latency (Eqn 9), max frequency (Eqn 10).
+//! * [`cell`] — 2T2R cell state at resistor granularity (so stuck-at
+//!   faults are plain state rewrites, Table I).
+//! * [`sim`] — the native analog tile-match simulator; numerically mirrors
+//!   the L1 Pallas kernel (`G = Q @ W`, `V = VDD·e^(−T_opt·G/C)`,
+//!   `match = V > V_ref`) and serves as its cross-check oracle.
+
+pub mod cell;
+pub mod params;
+pub mod sim;
+
+pub use cell::Cell;
+pub use params::DeviceParams;

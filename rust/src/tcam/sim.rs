@@ -1,0 +1,265 @@
+//! Native analog tile-match simulator — the Rust twin of the L1 Pallas
+//! kernel (and the `--engine native` request path).
+//!
+//! Semantics are identical to `python/compile/kernels/tcam_match.py`:
+//!
+//! ```text
+//! G[q, r] = Σ_j  g_active(cell[r, j], query[q, j])        (= Q @ W)
+//! V_ml    = VDD · exp(−(T_opt / C_in) · G)
+//! match   = V_ml > V_ref[r]
+//! ```
+//!
+//! Arithmetic is f32 to mirror the XLA-executed artifact; the integration
+//! tests assert both engines agree on every match bit and on V_ml within
+//! float tolerance.
+
+use crate::tcam::cell::Cell;
+use crate::tcam::params::DeviceParams;
+
+/// One tile's cells in row-major `[rows][cols]` byte form plus the
+/// per-row sensing configuration.
+#[derive(Clone, Debug)]
+pub struct TileView<'a> {
+    /// Packed [`Cell`] bytes; cell (r, j) of this view lives at
+    /// `cells[(row_offset + r) * row_stride + col_offset + j]`, so a view
+    /// can window directly into a full mapped array without copying.
+    pub cells: &'a [u8],
+    pub rows: usize,
+    pub cols: usize,
+    /// Row stride of the backing array (= its padded width).
+    pub row_stride: usize,
+    pub row_offset: usize,
+    pub col_offset: usize,
+    /// Per-row sense reference voltage (variability-adjusted upstream).
+    pub vref: &'a [f64],
+    /// T_opt / C_in for this column division.
+    pub t_opt_over_c: f64,
+}
+
+impl<'a> TileView<'a> {
+    /// A standalone dense tile (`row_stride == cols`).
+    pub fn dense(
+        cells: &'a [u8],
+        rows: usize,
+        cols: usize,
+        vref: &'a [f64],
+        t_opt_over_c: f64,
+    ) -> TileView<'a> {
+        TileView {
+            cells,
+            rows,
+            cols,
+            row_stride: cols,
+            row_offset: 0,
+            col_offset: 0,
+            vref,
+            t_opt_over_c,
+        }
+    }
+
+    #[inline]
+    pub fn cell(&self, r: usize, j: usize) -> u8 {
+        self.cells[(self.row_offset + r) * self.row_stride + self.col_offset + j]
+    }
+}
+
+/// Result of matching one batch against one tile.
+#[derive(Clone, Debug)]
+pub struct TileMatch {
+    /// `vml[q * rows + r]`.
+    pub vml: Vec<f32>,
+    /// `matched[q * rows + r]`.
+    pub matched: Vec<bool>,
+}
+
+/// Dense conductance matrix of a tile: `w[2j + b][r]` layout flattened to
+/// `[2*cols][rows]` row-major — exactly the artifact's W input. Built once
+/// per (tile, fault-state) and reused across batches.
+pub fn conductance_matrix(view: &TileView, p: &DeviceParams) -> Vec<f32> {
+    let mut w = vec![0.0f32; 2 * view.cols * view.rows];
+    for r in 0..view.rows {
+        for j in 0..view.cols {
+            let cell = Cell::from_byte(view.cell(r, j));
+            w[(2 * j) * view.rows + r] = cell.g_active(false, p) as f32;
+            w[(2 * j + 1) * view.rows + r] = cell.g_active(true, p) as f32;
+        }
+    }
+    w
+}
+
+/// One-hot branch activation of a query bit row — the artifact's Q input.
+pub fn activation_row(bits: &[bool]) -> Vec<f32> {
+    let mut q = vec![0.0f32; 2 * bits.len()];
+    for (j, &b) in bits.iter().enumerate() {
+        q[2 * j + usize::from(b)] = 1.0;
+    }
+    q
+}
+
+/// Match a batch of queries (each `cols` bits) against a tile, given its
+/// prebuilt conductance matrix (`w` as from [`conductance_matrix`]).
+pub fn match_batch_with_w(
+    view: &TileView,
+    w: &[f32],
+    queries: &[Vec<bool>],
+    p: &DeviceParams,
+) -> TileMatch {
+    let rows = view.rows;
+    let mut vml = vec![0.0f32; queries.len() * rows];
+    let mut matched = vec![false; queries.len() * rows];
+    let toc = view.t_opt_over_c as f32;
+    let vdd = p.vdd as f32;
+    for (qi, bits) in queries.iter().enumerate() {
+        debug_assert_eq!(bits.len(), view.cols);
+        // G = Q @ W, but Q is one-hot per column: gather instead of full
+        // matmul (the kernel's matmul semantics, exploited for speed).
+        let mut g = vec![0.0f32; rows];
+        for (j, &b) in bits.iter().enumerate() {
+            let row_w = &w[(2 * j + usize::from(b)) * rows..(2 * j + usize::from(b) + 1) * rows];
+            for (acc, &wv) in g.iter_mut().zip(row_w) {
+                *acc += wv;
+            }
+        }
+        for r in 0..rows {
+            let v = vdd * (-toc * g[r]).exp();
+            vml[qi * rows + r] = v;
+            matched[qi * rows + r] = v > view.vref[r] as f32;
+        }
+    }
+    TileMatch { vml, matched }
+}
+
+/// Convenience: build W and match in one call (tests; the hot path caches
+/// W via [`conductance_matrix`]).
+pub fn match_batch(view: &TileView, queries: &[Vec<bool>], p: &DeviceParams) -> TileMatch {
+    let w = conductance_matrix(view, p);
+    match_batch_with_w(view, &w, queries, p)
+}
+
+/// Digital reference for the same tile (ideal semantics, no analog).
+pub fn match_batch_digital(view: &TileView, queries: &[Vec<bool>]) -> Vec<bool> {
+    let mut out = vec![false; queries.len() * view.rows];
+    for (qi, bits) in queries.iter().enumerate() {
+        for r in 0..view.rows {
+            out[qi * view.rows + r] = (0..view.cols)
+                .all(|j| Cell::from_byte(view.cell(r, j)).matches(bits[j]));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Trit;
+    use crate::testkit::property;
+
+    fn tile_from_trits(trits: &[Vec<Trit>]) -> (Vec<u8>, usize, usize) {
+        let rows = trits.len();
+        let cols = trits[0].len();
+        let mut cells = Vec::with_capacity(rows * cols);
+        for row in trits {
+            for &t in row {
+                cells.push(Cell::from_trit(t).to_byte());
+            }
+        }
+        (cells, rows, cols)
+    }
+
+    #[test]
+    fn analog_match_equals_digital_for_ideal_cells() {
+        // The physics-functional equivalence property, natively (the
+        // python twin lives in test_kernel.py).
+        property("native analog == digital", 40, |g| {
+            let rows = g.usize_in(1, 20);
+            let cols = g.usize_in(2, 48);
+            let p = DeviceParams::default();
+            let trits: Vec<Vec<Trit>> = (0..rows)
+                .map(|_| {
+                    (0..cols)
+                        .map(|_| g.pick(&[Trit::Zero, Trit::One, Trit::X]))
+                        .collect()
+                })
+                .collect();
+            let (cells, rows, cols) = tile_from_trits(&trits);
+            let vref = vec![p.v_ref(cols); rows];
+            let view =
+                TileView::dense(&cells, rows, cols, &vref, p.t_opt(cols) / p.c_in);
+            let queries: Vec<Vec<bool>> = (0..8)
+                .map(|_| (0..cols).map(|_| g.bool()).collect())
+                .collect();
+            let analog = match_batch(&view, &queries, &p);
+            let digital = match_batch_digital(&view, &queries);
+            analog.matched == digital
+        });
+    }
+
+    #[test]
+    fn full_match_voltage_above_vref_one_mismatch_below() {
+        let p = DeviceParams::default();
+        for cols in [16usize, 64, 128] {
+            let trits = vec![vec![Trit::Zero; cols]];
+            let (cells, rows, cols) = tile_from_trits(&trits);
+            let vref = vec![p.v_ref(cols); rows];
+            let view =
+                TileView::dense(&cells, rows, cols, &vref, p.t_opt(cols) / p.c_in);
+            let q_match = vec![vec![false; cols]];
+            let mut one_bad = vec![false; cols];
+            one_bad[cols / 2] = true;
+            let m1 = match_batch(&view, &q_match, &p);
+            let m2 = match_batch(&view, &[one_bad], &p);
+            assert!(m1.matched[0]);
+            assert!(!m2.matched[0]);
+            // Voltage ordering and dynamic-range consistency.
+            assert!(m1.vml[0] > m2.vml[0]);
+            let d = m1.vml[0] - m2.vml[0];
+            let want = p.dynamic_range(cols) as f32;
+            assert!((d - want).abs() / want < 0.05, "D {d} vs {want}");
+        }
+    }
+
+    #[test]
+    fn w_matrix_matches_gather_path() {
+        // match_batch_with_w(W) must equal a direct per-cell evaluation.
+        let p = DeviceParams::default();
+        let trits = vec![
+            vec![Trit::Zero, Trit::One, Trit::X],
+            vec![Trit::One, Trit::One, Trit::Zero],
+        ];
+        let (cells, rows, cols) = tile_from_trits(&trits);
+        let vref = vec![p.v_ref(cols); rows];
+        let view = TileView::dense(&cells, rows, cols, &vref, p.t_opt(cols) / p.c_in);
+        let queries = vec![vec![false, true, false], vec![true, true, false]];
+        let got = match_batch(&view, &queries, &p);
+        // Direct: row0 matches q0 (0,1,x vs 0,1,0); row1 matches q1.
+        assert_eq!(got.matched, vec![true, false, false, true]);
+    }
+
+    #[test]
+    fn masked_columns_never_flip_result() {
+        let p = DeviceParams::default();
+        let mut cells = vec![
+            Cell::from_trit(Trit::Zero).to_byte(),
+            Cell::from_trit(Trit::One).to_byte(),
+        ];
+        cells.push(Cell::masked().to_byte());
+        cells.push(Cell::masked().to_byte());
+        let rows = 1;
+        let cols = 4;
+        // Sense as a 2-real-cell row (the paper's V_ref2 adjustment).
+        let vref = vec![p.v_ref(2); rows];
+        let view = TileView::dense(&cells, rows, cols, &vref, p.t_opt(2) / p.c_in);
+        for tail in [[false, false], [true, false], [true, true]] {
+            let q = vec![vec![false, true, tail[0], tail[1]]];
+            assert!(match_batch(&view, &q, &p).matched[0]);
+        }
+        let q_bad = vec![vec![true, true, false, false]];
+        assert!(!match_batch(&view, &q_bad, &p).matched[0]);
+    }
+
+    #[test]
+    fn activation_row_is_one_hot() {
+        let q = activation_row(&[true, false, true]);
+        assert_eq!(q, vec![0.0, 1.0, 1.0, 0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Micro/meso benchmark harness (`criterion` is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target (`harness = false`) builds a [`Bench`]
+//! and registers cases; the harness warms up, samples wall-clock
+//! iterations, and prints a fixed-width table plus (optionally) a JSON
+//! line per case so EXPERIMENTS.md numbers are machine-extractable.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark case result.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    /// Nanoseconds per iteration.
+    pub ns_per_iter: Summary,
+    pub iters: u64,
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 200,
+        }
+    }
+}
+
+/// Bench harness: `new("name")`, then `case(...)` repeatedly, then `finish()`.
+pub struct Bench {
+    title: String,
+    config: BenchConfig,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Bench {
+        let mut config = BenchConfig::default();
+        // `cargo bench -- --quick` or env for CI.
+        if std::env::args().any(|a| a == "--quick")
+            || std::env::var("DT2CAM_BENCH_QUICK").is_ok()
+        {
+            config.warmup = Duration::from_millis(20);
+            config.measure = Duration::from_millis(100);
+        }
+        println!("\n== bench: {title} ==");
+        Bench {
+            title: title.to_string(),
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Bench {
+        self.config = config;
+        self
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.config.warmup || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        // Estimate per-iter cost from warmup to size sample batches.
+        let per_iter = (start.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+        let target_samples = ((self.config.measure.as_nanos() as f64 / per_iter) as usize)
+            .clamp(self.config.min_samples, self.config.max_samples);
+
+        let mut samples = Vec::with_capacity(target_samples);
+        let mut total_iters = 0u64;
+        for _ in 0..target_samples {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+            total_iters += 1;
+        }
+        let res = CaseResult {
+            name: name.to_string(),
+            ns_per_iter: Summary::of(&samples),
+            iters: total_iters,
+        };
+        println!(
+            "  {:<44} {:>12.1} ns/iter  (p50 {:>12.1}, p95 {:>12.1}, n={})",
+            res.name,
+            res.ns_per_iter.mean,
+            res.ns_per_iter.p50,
+            res.ns_per_iter.p95,
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Print a free-form measurement row (for model-derived numbers like
+    /// nJ/dec that aren't wall-clock timings but belong in bench output).
+    pub fn report_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("  {:<44} {:>14.6} {unit}", name, value);
+    }
+
+    /// Print a pre-formatted table line (paper-table regeneration rows).
+    pub fn report_line(&mut self, line: &str) {
+        println!("  {line}");
+    }
+
+    /// Emit a machine-readable summary and return results.
+    pub fn finish(self) -> Vec<CaseResult> {
+        for r in &self.results {
+            println!(
+                "BENCHJSON {{\"bench\":\"{}\",\"case\":\"{}\",\"ns_mean\":{:.1},\"ns_p50\":{:.1},\"ns_p95\":{:.1},\"iters\":{}}}",
+                self.title, r.name, r.ns_per_iter.mean, r.ns_per_iter.p50, r.ns_per_iter.p95, r.iters
+            );
+        }
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("selftest").with_config(BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_samples: 3,
+            max_samples: 10,
+        });
+        let mut acc = 0u64;
+        let r = b.case("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        });
+        assert!(r.ns_per_iter.mean >= 0.0);
+        let all = b.finish();
+        assert_eq!(all.len(), 1);
+    }
+}

@@ -1,0 +1,52 @@
+//! General-purpose substrates built from scratch (the image is offline, so
+//! `rand`, `rayon`, `criterion` etc. are unavailable — and the paper's
+//! simulator needs deterministic, seedable randomness anyway).
+
+pub mod benchkit;
+pub mod prng;
+pub mod stats;
+pub mod threadpool;
+
+/// Integer ceiling division — tile-count math uses this everywhere
+/// (`N_cwd = ceil((width + 1) / S)`, `N_rwd = ceil(rows / S)`).
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `ceil(log2(n))` for n >= 1 — class-bit width `⌈log2(C)⌉` (paper §II.C).
+/// By convention a single class still needs one storage bit.
+#[inline]
+pub fn ceil_log2(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    if n <= 2 {
+        1
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 16), 0);
+        assert_eq!(ceil_div(1, 16), 1);
+        assert_eq!(ceil_div(16, 16), 1);
+        assert_eq!(ceil_div(17, 16), 2);
+        assert_eq!(ceil_div(2049, 128), 17); // traffic config N_cwd
+    }
+
+    #[test]
+    fn ceil_log2_basics() {
+        assert_eq!(ceil_log2(1), 1);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+    }
+}

@@ -1,0 +1,219 @@
+//! Summary statistics used by the simulator (per-decision energy/latency
+//! averaging), the accuracy sweeps, and the bench harness.
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+}
+
+/// Percentile over a sample (linear interpolation). `p` in [0, 100].
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "must be sorted");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p.clamp(0.0, 100.0) / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Convenience one-shot summary of a sample.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut st = OnlineStats::new();
+        for &x in xs {
+            st.push(x);
+        }
+        Summary {
+            count: xs.len(),
+            mean: st.mean(),
+            stddev: st.stddev(),
+            min: sorted[0],
+            p50: percentile(&sorted, 50.0),
+            p95: percentile(&sorted, 95.0),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Engineering-notation formatter (`1.23 n`, `45.6 µ`, `7.89 M` ...) used
+/// by every report table so units read like the paper's.
+pub fn eng(value: f64, unit: &str) -> String {
+    if value == 0.0 {
+        return format!("0 {unit}");
+    }
+    let prefixes: [(f64, &str); 9] = [
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "u"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+    ];
+    let mag = value.abs();
+    for &(scale, p) in &prefixes {
+        if mag >= scale {
+            return format!("{:.3} {p}{unit}", value / scale);
+        }
+    }
+    format!("{:.3e} {unit}", value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_match_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut st = OnlineStats::new();
+        for &x in &xs {
+            st.push(x);
+        }
+        assert_eq!(st.count(), 5);
+        assert!((st.mean() - 3.0).abs() < 1e-12);
+        assert!((st.variance() - 2.0).abs() < 1e-12);
+        assert_eq!(st.min(), 1.0);
+        assert_eq!(st.max(), 5.0);
+        assert!((st.sum() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        let mut all = OnlineStats::new();
+        for i in 0..50 {
+            let x = (i as f64) * 0.37 - 3.0;
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn eng_formatting() {
+        assert_eq!(eng(0.098e-9, "J"), "98.000 pJ");
+        assert_eq!(eng(1.7e-9, "J"), "1.700 nJ");
+        assert_eq!(eng(58.8e6, "Dec/s"), "58.800 MDec/s");
+        assert_eq!(eng(0.0, "J"), "0 J");
+    }
+}

@@ -1,0 +1,239 @@
+//! Minimal work-stealing-free thread pool (no `rayon`/`tokio` offline).
+//!
+//! The coordinator uses it for the paper's row-wise tile parallelism
+//! (Fig 4: row-wise tiles operate in parallel, column-wise divisions are
+//! sequential) and the report harness uses [`parallel_map`] for sweep
+//! fan-out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    cv: Condvar,
+    pending: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+    shutdown: Mutex<bool>,
+}
+
+/// Fixed-size thread pool with blocking `wait_idle`.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (>= 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            shutdown: Mutex::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dt2cam-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Pool sized to the machine (cores, capped at 16 — tile counts per
+    /// division rarely exceed that, see Table V).
+    pub fn default_size() -> ThreadPool {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ThreadPool::new(n.min(16))
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every enqueued job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_mx.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done_cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Run `f` over `items` in parallel, preserving order of results.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, R)>, _) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let r = f(item);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("pool job lost")).collect()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if *sh.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => {
+                // A panicking job must not wedge wait_idle: decrement via
+                // a drop guard.
+                struct Guard<'a>(&'a Shared);
+                impl Drop for Guard<'_> {
+                    fn drop(&mut self) {
+                        if self.0.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                            let _g = self.0.done_mx.lock().unwrap();
+                            self.0.done_cv.notify_all();
+                        }
+                    }
+                }
+                let guard = Guard(&sh);
+                j();
+                drop(guard);
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One-shot scoped parallel map (spawns up to `available_parallelism`
+/// threads; used by sweeps that don't hold a pool).
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Send + Sync,
+{
+    let n_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(items.len().max(1));
+    let items: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let work = Mutex::new(items);
+    let results = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let item = work.lock().unwrap().pop();
+                match item {
+                    Some((i, t)) => {
+                        let r = f(t);
+                        results.lock().unwrap().push((i, r));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    let mut rs = results.into_inner().unwrap();
+    rs.sort_by_key(|(i, _)| *i);
+    rs.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn wait_idle_with_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let out = parallel_map((0..200).collect::<Vec<i64>>(), |x| x + 1);
+        assert_eq!(out, (1..=200).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("job panic (expected in test)"));
+        let ok = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&ok);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Failure injection: the system must fail loudly and helpfully, never
+//! silently misclassify, when its environment is broken.
+
+use std::io::Write;
+
+use dt2cam::config::RunConfig;
+use dt2cam::runtime::Manifest;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dt2cam_test_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_artifacts_dir_mentions_make() {
+    let err = Manifest::load(std::path::Path::new("/definitely/not/here")).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = tmpdir("corrupt");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_with_wrong_format_rejected() {
+    let dir = tmpdir("wrongformat");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "protobuf", "entries": []}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("hlo-text"));
+}
+
+#[test]
+fn manifest_referencing_missing_file_rejected() {
+    let dir = tmpdir("missingfile");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "hlo-text", "entries": [
+            {"name": "x", "kind": "tile", "file": "gone.hlo.txt", "s": 16, "b": 1, "tiles": 1}
+        ]}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("gone.hlo.txt"));
+}
+
+#[test]
+fn empty_manifest_rejected() {
+    let dir = tmpdir("empty");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "hlo-text", "entries": []}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn garbage_hlo_file_fails_at_compile_not_execute() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    // A manifest whose file exists but contains garbage must error when
+    // the executable is built, with the artifact name in the message.
+    let dir = tmpdir("garbagehlo");
+    let mut f = std::fs::File::create(dir.join("bad.hlo.txt")).unwrap();
+    writeln!(f, "this is not HLO").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "hlo-text", "entries": [
+            {"name": "bad", "kind": "tile", "file": "bad.hlo.txt", "s": 16, "b": 1, "tiles": 1}
+        ]}"#,
+    )
+    .unwrap();
+    let eng = dt2cam::runtime::MatchEngine::new(&dir).unwrap();
+    let err = eng.warm_tile(16, 1).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad"), "{msg}");
+}
+
+#[test]
+fn config_rejects_nonsense() {
+    for bad in [
+        r#"{"tile_size": 33}"#,
+        r#"{"train_fraction": 1.5}"#,
+        r#"{"saf1": -0.1}"#,
+        r#"{"engine": "gpu"}"#,
+        r#"{"schedule": "warp"}"#,
+        r#"{"batch": 0}"#,
+        r#"[1,2,3]"#,
+    ] {
+        assert!(RunConfig::from_json_text(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn scheduler_rejects_wrong_query_width() {
+    use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+    use dt2cam::coordinator::ServingPlan;
+    use dt2cam::report::workload::Workload;
+    use dt2cam::tcam::params::DeviceParams;
+
+    let w = Workload::prepare("iris").unwrap();
+    let p = DeviceParams::default();
+    let m = w.map(16, &p);
+    let plan = ServingPlan::build(&m, &m.vref, &p);
+    let sched = Scheduler::new(&plan, &p);
+    let bad = vec![vec![false; 3]]; // wrong width
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = sched.run_batch(&EngineRef::Native, &bad, 1);
+    }));
+    assert!(res.is_err(), "wrong-width query must be rejected");
+}
+
+#[test]
+fn oversize_batch_errors_cleanly_on_pjrt() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+    use dt2cam::coordinator::ServingPlan;
+    use dt2cam::report::workload::Workload;
+    use dt2cam::runtime::MatchEngine;
+    use dt2cam::tcam::params::DeviceParams;
+
+    let w = Workload::prepare("iris").unwrap();
+    let p = DeviceParams::default();
+    let m = w.map(16, &p);
+    let plan = ServingPlan::build(&m, &m.vref, &p);
+    let sched = Scheduler::new(&plan, &p);
+    let eng = MatchEngine::new(std::path::Path::new("artifacts")).unwrap();
+    // 300 lanes: above the largest lowered batch (256).
+    let queries: Vec<Vec<bool>> = (0..300).map(|_| vec![false; m.padded_width]).collect();
+    let err = sched
+        .run_batch(&EngineRef::Pjrt(&eng), &queries, 300)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("largest lowered artifact batch"));
+}
+
+#[test]
+fn unknown_dataset_is_a_clean_error() {
+    let err = dt2cam::dataset::catalog::by_name("imagenet", 0).unwrap_err();
+    assert!(format!("{err:#}").contains("available"));
+}
+
+#[test]
+fn cli_unknown_flag_rejected() {
+    let argv: Vec<String> = ["report", "--frobnicate"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert!(dt2cam::cli::run(argv).is_err());
+}

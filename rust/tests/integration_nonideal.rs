@@ -1,0 +1,130 @@
+//! Integration: non-ideality behaviors end-to-end (paper §IV.B, Fig 7).
+
+use dt2cam::nonideal::{inject_saf, perturb_vref, SafRates};
+use dt2cam::report::workload::Workload;
+use dt2cam::synth::simulate::{simulate, SimOptions};
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::prng::Prng;
+
+fn sim_with(
+    w: &Workload,
+    s: usize,
+    saf: f64,
+    sigma_sa: f64,
+    sigma_in: f64,
+    seed: u64,
+) -> f64 {
+    let p = DeviceParams::default();
+    let mut rng = Prng::new(seed);
+    let mut m = w.map(s, &p);
+    inject_saf(&mut m, &SafRates::both(saf), &mut rng.fork(1));
+    let vref = perturb_vref(&m.vref, sigma_sa, &mut rng.fork(2));
+    let mut noise = rng.fork(3);
+    let inputs: Vec<Vec<f64>> = w
+        .test_x
+        .iter()
+        .map(|row| {
+            row.iter()
+                .map(|&v| v + noise.normal_scaled(0.0, sigma_in))
+                .collect()
+        })
+        .collect();
+    let r = simulate(
+        &m, &w.lut, &inputs, &w.test_y, &w.golden, &vref, &p,
+        &SimOptions { max_inputs: 256, ..SimOptions::default() },
+    );
+    r.accuracy
+}
+
+#[test]
+fn zero_nonidealities_reproduce_golden() {
+    for name in ["iris", "haberman", "cancer"] {
+        let w = Workload::prepare(name).unwrap();
+        let acc = sim_with(&w, 16, 0.0, 0.0, 0.0, 1);
+        let golden_capped = {
+            // simulate caps at 256 inputs; compute golden on same subset.
+            let n = w.test_x.len().min(256);
+            w.golden[..n]
+                .iter()
+                .zip(&w.test_y[..n])
+                .filter(|(g, y)| g == y)
+                .count() as f64
+                / n as f64
+        };
+        assert!((acc - golden_capped).abs() < 1e-12, "{name}");
+    }
+}
+
+#[test]
+fn heavy_saf_destroys_accuracy() {
+    let w = Workload::prepare("cancer").unwrap();
+    let clean = sim_with(&w, 64, 0.0, 0.0, 0.0, 2);
+    let broken = sim_with(&w, 64, 5.0, 0.0, 0.0, 2);
+    assert!(
+        broken < clean - 0.05,
+        "5% SAF should visibly hurt: clean {clean}, broken {broken}"
+    );
+}
+
+#[test]
+fn extreme_sa_variability_hurts() {
+    let w = Workload::prepare("haberman").unwrap();
+    let clean = sim_with(&w, 16, 0.0, 0.0, 0.0, 3);
+    // σ = 0.2 V swamps the dynamic range at S=16 (~0.55 V V_fm−V_1mm gap
+    // midpointed) — far beyond the paper's worst 0.1 V case.
+    let noisy = sim_with(&w, 16, 0.0, 0.2, 0.0, 3);
+    assert!(noisy <= clean, "clean {clean}, noisy {noisy}");
+}
+
+#[test]
+fn input_noise_degrades_gracefully() {
+    let w = Workload::prepare("cancer").unwrap();
+    let clean = sim_with(&w, 16, 0.0, 0.0, 0.0, 4);
+    let slight = sim_with(&w, 16, 0.0, 0.0, 0.001, 4);
+    let heavy = sim_with(&w, 16, 0.0, 0.0, 0.5, 4);
+    // Tiny noise must stay close to clean (paper: robust encoding).
+    assert!((clean - slight).abs() < 0.1, "clean {clean} slight {slight}");
+    // Massive noise must cost something.
+    assert!(heavy <= clean, "heavy noise cannot help: {heavy} vs {clean}");
+}
+
+#[test]
+fn saf_monotone_on_average() {
+    // Averaged over seeds, higher fault rates lose more accuracy.
+    let w = Workload::prepare("haberman").unwrap();
+    let avg = |saf: f64| -> f64 {
+        (0..5).map(|t| sim_with(&w, 16, saf, 0.0, 0.0, 100 + t)).sum::<f64>() / 5.0
+    };
+    let a0 = avg(0.0);
+    let a1 = avg(1.0);
+    let a5 = avg(5.0);
+    assert!(a0 >= a1 - 0.02, "0% {a0} vs 1% {a1}");
+    assert!(a1 >= a5 - 0.02, "1% {a1} vs 5% {a5}");
+}
+
+#[test]
+fn faults_can_produce_no_match_and_multi_match() {
+    // With many faults the CAM loses the exactly-one-survivor property;
+    // the simulator must report it rather than crash.
+    let w = Workload::prepare("iris").unwrap();
+    let p = DeviceParams::default();
+    let mut rng = Prng::new(9);
+    let mut m = w.map(16, &p);
+    inject_saf(&mut m, &SafRates::both(20.0 / 100.0 * 100.0), &mut rng);
+    let r = simulate(
+        &m, &w.lut, &w.test_x, &w.test_y, &w.golden, &m.vref, &p,
+        &SimOptions::default(),
+    );
+    assert_eq!(r.n_inputs, w.test_x.len());
+    assert!(r.no_match + r.multi_match > 0, "20% SAF must break matches");
+}
+
+#[test]
+fn vref_variability_is_per_sa_not_global() {
+    // Two different SAs must receive different offsets.
+    let nominal = vec![0.4; 64];
+    let got = perturb_vref(&nominal, 0.05, &mut Prng::new(5));
+    let distinct: std::collections::HashSet<u64> =
+        got.iter().map(|v| v.to_bits()).collect();
+    assert!(distinct.len() > 32);
+}

@@ -1,0 +1,153 @@
+//! Integration: the full DT2CAM flow per dataset, across tile sizes and
+//! engines. The load-bearing invariant everywhere is the paper's §IV.B
+//! claim — ideal hardware reproduces the software tree ("golden") exactly.
+
+use dt2cam::config::{EngineKind, RunConfig};
+use dt2cam::coordinator::{Coordinator, ServingPlan};
+use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+use dt2cam::report::workload::Workload;
+use dt2cam::synth::simulate::{simulate, SimOptions};
+use dt2cam::tcam::params::DeviceParams;
+
+fn golden_everywhere(name: &str, s: usize) {
+    let w = Workload::prepare(name).unwrap();
+    let p = DeviceParams::default();
+    let m = w.map(s, &p);
+
+    // 1. Digital LUT search == tree.
+    for (x, g) in w.test_x.iter().zip(&w.golden) {
+        assert_eq!(w.lut.classify(x), Some(*g), "{name} LUT vs tree");
+    }
+
+    // 2. Functional (analog) simulation == golden.
+    let r = simulate(
+        &m, &w.lut, &w.test_x, &w.test_y, &w.golden, &m.vref, &p,
+        &SimOptions { max_inputs: 256, ..SimOptions::default() },
+    );
+    assert_eq!(r.golden_agreement, 1.0, "{name} S={s} simulate vs golden");
+    assert_eq!(r.no_match, 0);
+    assert_eq!(r.multi_match, 0);
+
+    // 3. Serving scheduler (native engine) == golden.
+    let plan = ServingPlan::build(&m, &m.vref, &p);
+    let sched = Scheduler::new(&plan, &p);
+    let take = w.test_x.len().min(64);
+    let queries: Vec<Vec<bool>> = w.test_x[..take]
+        .iter()
+        .map(|x| m.pad_query(&w.lut.encode_input(x)))
+        .collect();
+    let out = sched.run_batch(&EngineRef::Native, &queries, take).unwrap();
+    for i in 0..take {
+        assert_eq!(out.classes[i], Some(w.golden[i]), "{name} scheduler lane {i}");
+    }
+}
+
+#[test]
+fn iris_all_tile_sizes() {
+    for s in [16, 32, 64, 128] {
+        golden_everywhere("iris", s);
+    }
+}
+
+#[test]
+fn haberman_multi_division() {
+    golden_everywhere("haberman", 16);
+    golden_everywhere("haberman", 32);
+}
+
+#[test]
+fn cancer_wide_features() {
+    golden_everywhere("cancer", 16);
+    golden_everywhere("cancer", 64);
+}
+
+#[test]
+fn car_multiclass() {
+    golden_everywhere("car", 16);
+    golden_everywhere("car", 128);
+}
+
+#[test]
+fn diabetes_and_titanic() {
+    golden_everywhere("diabetes", 64);
+    golden_everywhere("titanic", 128);
+}
+
+#[test]
+fn covid_large() {
+    golden_everywhere("covid", 128);
+}
+
+#[test]
+fn coordinator_full_roundtrip_native() {
+    let w = Workload::prepare("car").unwrap();
+    let p = DeviceParams::default();
+    let m = w.map(32, &p);
+    let cfg = RunConfig {
+        dataset: "car".into(),
+        tile_size: 32,
+        batch: 32,
+        engine: EngineKind::Native,
+        ..RunConfig::default()
+    };
+    let vref = m.vref.clone();
+    let mut coord = Coordinator::new(&cfg, w.lut.clone(), &m, &vref, p).unwrap();
+    let got = coord.classify_all(&w.test_x).unwrap();
+    for (c, g) in got.iter().zip(&w.golden) {
+        assert_eq!(*c, Some(*g));
+    }
+    assert_eq!(coord.metrics.decisions as usize, w.test_x.len());
+}
+
+#[test]
+fn pjrt_engine_full_agreement() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let w = Workload::prepare("haberman").unwrap();
+    let p = DeviceParams::default();
+    for s in [16usize, 64] {
+        let m = w.map(s, &p);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+        let eng = dt2cam::runtime::MatchEngine::new(std::path::Path::new("artifacts")).unwrap();
+        let take = w.test_x.len().min(32);
+        let queries: Vec<Vec<bool>> = w.test_x[..take]
+            .iter()
+            .map(|x| m.pad_query(&w.lut.encode_input(x)))
+            .collect();
+        let native = sched.run_batch(&EngineRef::Native, &queries, take).unwrap();
+        let pjrt = sched.run_batch(&EngineRef::Pjrt(&eng), &queries, take).unwrap();
+        assert_eq!(native.classes, pjrt.classes, "S={s}");
+        assert_eq!(native.active_row_evals, pjrt.active_row_evals, "S={s}");
+    }
+}
+
+#[test]
+fn sequential_equals_pipelined_outcomes() {
+    use dt2cam::coordinator::pipeline::run_pipeline;
+    use std::sync::Arc;
+    let w = Workload::prepare("diabetes").unwrap();
+    let p = DeviceParams::default();
+    let m = w.map(16, &p);
+    assert!(m.n_cwd > 1);
+    let plan = Arc::new(ServingPlan::build(&m, &m.vref, &p));
+    let batches: Vec<(Vec<Vec<bool>>, usize)> = w.test_x[..w.test_x.len().min(60)]
+        .chunks(20)
+        .map(|chunk| {
+            let qs: Vec<Vec<bool>> = chunk
+                .iter()
+                .map(|x| m.pad_query(&w.lut.encode_input(x)))
+                .collect();
+            let n = qs.len();
+            (qs, n)
+        })
+        .collect();
+    let piped = run_pipeline(Arc::clone(&plan), batches.clone(), 2).unwrap();
+    let sched = Scheduler::new(&plan, &p);
+    for (i, (qs, real)) in batches.iter().enumerate() {
+        let seq = sched.run_batch(&EngineRef::Native, qs, *real).unwrap();
+        assert_eq!(piped[i].classes, seq.classes, "batch {i}");
+    }
+}

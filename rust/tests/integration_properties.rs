@@ -1,0 +1,164 @@
+//! Property tests over the full compile→map→search chain on randomly
+//! generated learning problems (the repository's deepest invariants).
+
+use dt2cam::cart::{train, TrainParams};
+use dt2cam::compiler::compile;
+use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+use dt2cam::coordinator::ServingPlan;
+use dt2cam::synth::mapping::MappedArray;
+use dt2cam::synth::simulate::{simulate, SimOptions};
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::testkit::{property_r, Gen};
+use dt2cam::util::prng::Prng;
+
+/// Random learning problem -> every layer must agree with the tree.
+#[test]
+fn full_chain_equivalence_property() {
+    property_r("tree == LUT == mapped == scheduler", 12, |g: &mut Gen| {
+        let n = g.usize_in(30, 150);
+        let f = g.usize_in(1, 6);
+        let classes = g.usize_in(2, 5);
+        let xs = g.matrix(n, f);
+        let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+        let tree = train(&xs, &ys, classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let s = g.pick(&[16usize, 32, 64]);
+        let mut rng = Prng::new(g.u64());
+        let m = MappedArray::from_lut(&lut, s, &p, &mut rng);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+
+        // Random probes (in and slightly out of the training domain).
+        let probes: Vec<Vec<f64>> = (0..24)
+            .map(|_| (0..f).map(|_| g.f64_in(-0.1, 1.1)).collect())
+            .collect();
+        let queries: Vec<Vec<bool>> = probes
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+        let out = sched
+            .run_batch(&EngineRef::Native, &queries, probes.len())
+            .map_err(|e| e.to_string())?;
+
+        for (i, x) in probes.iter().enumerate() {
+            let want = tree.predict(x);
+            if lut.classify(x) != Some(want) {
+                return Err(format!("LUT diverged at probe {i}"));
+            }
+            if out.classes[i] != Some(want) {
+                return Err(format!(
+                    "scheduler diverged at probe {i}: {:?} vs {want}",
+                    out.classes[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Energy accounting invariants: SP <= no-SP; first division pays full.
+#[test]
+fn energy_invariants_property() {
+    property_r("energy bounds", 10, |g: &mut Gen| {
+        let n = g.usize_in(40, 120);
+        let f = g.usize_in(2, 5);
+        let xs = g.matrix(n, f);
+        let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 2)).collect();
+        let tree = train(&xs, &ys, 2, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(g.u64());
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
+
+        let probes: Vec<Vec<f64>> = (0..16)
+            .map(|_| (0..f).map(|_| g.f64_in(0.0, 1.0)).collect())
+            .collect();
+        let labels = vec![0usize; probes.len()];
+        let golden: Vec<usize> = probes.iter().map(|x| tree.predict(x)).collect();
+
+        let sp = simulate(
+            &m, &lut, &probes, &labels, &golden, &m.vref, &p,
+            &SimOptions::default(),
+        );
+        let no_sp = simulate(
+            &m, &lut, &probes, &labels, &golden, &m.vref, &p,
+            &SimOptions { selective_precharge: false, ..SimOptions::default() },
+        );
+        if sp.energy_per_dec > no_sp.energy_per_dec + 1e-20 {
+            return Err("SP increased energy".into());
+        }
+        // No-SP energy is exactly rows x divisions x E_row + E_mem.
+        let want =
+            (m.real_rows * m.n_cwd) as f64 * p.e_row_active() + p.e_mem;
+        if (no_sp.energy_per_dec - want).abs() > 1e-18 {
+            return Err(format!(
+                "no-SP energy {} != closed form {}",
+                no_sp.energy_per_dec, want
+            ));
+        }
+        // Accuracy identical (SP is purely an energy feature).
+        if sp.accuracy != no_sp.accuracy {
+            return Err("SP changed accuracy".into());
+        }
+        Ok(())
+    });
+}
+
+/// Tile-count formulas hold for arbitrary LUT geometries.
+#[test]
+fn tile_grid_formula_property() {
+    property_r("grid covers LUT exactly", 20, |g: &mut Gen| {
+        let n = g.usize_in(20, 200);
+        let f = g.usize_in(1, 6);
+        let xs = g.matrix(n, f);
+        let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 3)).collect();
+        let lut = compile(&train(&xs, &ys, 3, &TrainParams::default()));
+        let p = DeviceParams::default();
+        let s = g.pick(&[16usize, 32, 64, 128]);
+        let mut rng = Prng::new(g.u64());
+        let m = MappedArray::from_lut(&lut, s, &p, &mut rng);
+
+        let checks = [
+            m.n_rwd == (lut.n_rows() + s - 1) / s,
+            m.n_cwd == (lut.width() + 1 + s - 1) / s,
+            m.padded_rows == m.n_rwd * s,
+            m.padded_width == m.n_cwd * s,
+            m.padded_rows >= lut.n_rows(),
+            m.padded_width >= lut.width() + 1,
+            m.cells.len() == m.padded_rows * m.padded_width,
+            m.divisions.len() == m.n_cwd,
+        ];
+        if checks.iter().all(|&c| c) {
+            Ok(())
+        } else {
+            Err(format!("geometry checks failed: {checks:?}"))
+        }
+    });
+}
+
+/// The encoded query always selects exactly one row on clean hardware —
+/// even for out-of-range feature values.
+#[test]
+fn one_survivor_property() {
+    property_r("exactly one survivor", 15, |g: &mut Gen| {
+        let n = g.usize_in(30, 120);
+        let f = g.usize_in(1, 4);
+        let xs = g.matrix(n, f);
+        let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, 2)).collect();
+        let lut = compile(&train(&xs, &ys, 2, &TrainParams::default()));
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(g.u64());
+        let m = MappedArray::from_lut(&lut, 32, &p, &mut rng);
+        for _ in 0..20 {
+            // Includes far-out-of-domain probes.
+            let x: Vec<f64> = (0..f).map(|_| g.f64_in(-10.0, 10.0)).collect();
+            let q = m.pad_query(&lut.encode_input(&x));
+            let survivors = m.digital_matches(&q);
+            if survivors.len() != 1 {
+                return Err(format!("{} survivors for {x:?}", survivors.len()));
+            }
+        }
+        Ok(())
+    });
+}
