@@ -1,25 +1,42 @@
 //! One-off PJRT dispatch-cost probe used during the §Perf pass
-//! (EXPERIMENTS.md) — kept for re-profiling artifact variants.
+//! (EXPERIMENTS.md) — kept for re-profiling artifact variants. Opens the
+//! artifacts through the `pjrt` match backend and probes its raw engine.
 
-use dt2cam::runtime::MatchEngine;
+use dt2cam::api::PjrtBackend;
 use std::time::Instant;
+
 fn main() {
-    let eng = MatchEngine::new(std::path::Path::new("artifacts")).unwrap();
+    let backend = PjrtBackend::from_dir(std::path::Path::new("artifacts")).unwrap();
+    let eng = backend.engine();
     let (s, b) = (128usize, 32usize);
     println!("selected tile artifact: {}", eng.manifest().tile(s, b).unwrap().name);
     println!("selected div t=4 artifact: {}", eng.manifest().division(s, b, 4).unwrap().name);
-    let q = vec![0.5f32; b*2*s];
-    let w = vec![1e-5f32; 2*s*s];
+    let q = vec![0.5f32; b * 2 * s];
+    let w = vec![1e-5f32; 2 * s * s];
     let vref = vec![0.4f32; s];
-    for _ in 0..3 { let _ = eng.match_tile(s,b,&q,&w,&vref,1.4e4).unwrap(); }
+    for _ in 0..3 {
+        let _ = eng.match_tile(s, b, &q, &w, &vref, 1.4e4).unwrap();
+    }
     let t0 = Instant::now();
     let n = 100;
-    for _ in 0..n { let _ = eng.match_tile(s,b,&q,&w,&vref,1.4e4).unwrap(); }
-    println!("match_tile s128 b32: {:.1} us/call", t0.elapsed().as_secs_f64()*1e6/n as f64);
-    let wd = vec![1e-5f32; 4*2*s*s];
-    let vrd = vec![0.4f32; 4*s];
-    for _ in 0..3 { let _ = eng.match_division(s,b,4,&q,&wd,&vrd,1.4e4).unwrap(); }
+    for _ in 0..n {
+        let _ = eng.match_tile(s, b, &q, &w, &vref, 1.4e4).unwrap();
+    }
+    println!(
+        "match_tile s128 b32: {:.1} us/call",
+        t0.elapsed().as_secs_f64() * 1e6 / n as f64
+    );
+    let wd = vec![1e-5f32; 4 * 2 * s * s];
+    let vrd = vec![0.4f32; 4 * s];
+    for _ in 0..3 {
+        let _ = eng.match_division(s, b, 4, &q, &wd, &vrd, 1.4e4).unwrap();
+    }
     let t0 = Instant::now();
-    for _ in 0..n { let _ = eng.match_division(s,b,4,&q,&wd,&vrd,1.4e4).unwrap(); }
-    println!("match_division s128 b32 t4: {:.1} us/call", t0.elapsed().as_secs_f64()*1e6/n as f64);
+    for _ in 0..n {
+        let _ = eng.match_division(s, b, 4, &q, &wd, &vrd, 1.4e4).unwrap();
+    }
+    println!(
+        "match_division s128 b32 t4: {:.1} us/call",
+        t0.elapsed().as_secs_f64() * 1e6 / n as f64
+    );
 }

@@ -1,35 +1,45 @@
-//! Quickstart: the full DT2CAM flow on Iris in ~40 lines.
+//! Quickstart: the full DT2CAM flow on Iris through the typed pipeline
+//! facade in ~40 lines.
 //!
-//! Train a CART tree → DT-HW-compile it to a ternary LUT → map onto S×S
-//! ReCAM tiles → run the functional simulation on the held-out split →
-//! print accuracy / energy / latency. (The paper's Fig 2 walks exactly
-//! this dataset through the same stages.)
+//! `Dt2Cam::dataset` (CART training) → `TrainedModel::compile` (ternary
+//! LUT) → `CompiledProgram::map` (S×S ReCAM tiles) → `Session` (serving
+//! coordinator over a pluggable match backend). The paper's Fig 2 walks
+//! exactly this dataset through the same stages.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use dt2cam::report::workload::Workload;
+use dt2cam::api::Dt2Cam;
+use dt2cam::config::EngineKind;
 use dt2cam::synth::simulate::{simulate, SimOptions};
 use dt2cam::tcam::params::DeviceParams;
 use dt2cam::util::stats::eng;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Dataset → CART tree → ternary LUT (the DT-HW compiler).
-    let w = Workload::prepare("iris")?;
+    // 1. Dataset → CART tree (the expensive, once-per-program stage).
+    let model = Dt2Cam::dataset("iris")?;
     println!(
         "tree: {} leaves (= LUT rows), depth {}",
-        w.tree.n_leaves(),
-        w.tree.depth()
+        model.tree.n_leaves(),
+        model.tree.depth()
     );
-    println!("LUT : {} x {} trits", w.lut.n_rows(), w.lut.width());
-    for r in 0..w.lut.n_rows().min(3) {
-        println!("  row {r}: {}  -> class {}", w.lut.row_to_string(r), w.lut.classes[r]);
+
+    // 2. DT-HW compile: tree → ternary LUT + input encoders.
+    let program = model.compile();
+    println!("LUT : {} x {} trits", program.lut.n_rows(), program.lut.width());
+    for r in 0..program.lut.n_rows().min(3) {
+        println!(
+            "  row {r}: {}  -> class {}",
+            program.lut.row_to_string(r),
+            program.lut.classes[r]
+        );
     }
 
-    // 2. Map onto 16x16 resistive TCAM tiles (ReCAM synthesizer).
+    // 3. Map onto 16x16 resistive TCAM tiles (ReCAM synthesizer).
     let p = DeviceParams::default();
-    let m = w.map(16, &p);
+    let mapped = program.map(16, &p);
+    let m = &mapped.mapped;
     println!(
         "tiles: {} x {} of {}x{} (decoder column + {} rogue rows)",
         m.n_rwd,
@@ -39,17 +49,33 @@ fn main() -> anyhow::Result<()> {
         m.padded_rows - m.real_rows
     );
 
-    // 3. Functional simulation on the 10% test split.
+    // 4. Functional simulation on the 10% test split.
     let r = simulate(
-        &m, &w.lut, &w.test_x, &w.test_y, &w.golden, &m.vref, &p,
+        m, &program.lut, &model.test_x, &model.test_y, &model.golden, &m.vref, &p,
         &SimOptions::default(),
     );
-    println!("accuracy : {:.4} (golden {:.4})", r.accuracy, w.golden_accuracy());
+    println!("accuracy : {:.4} (golden {:.4})", r.accuracy, model.golden_accuracy());
     println!("energy   : {}", eng(r.energy_per_dec, "J/dec"));
     println!("latency  : {}", eng(r.timing.latency, "s"));
     println!("throughput (seq) : {}", eng(r.timing.throughput_seq, "dec/s"));
     println!("throughput (pipe): {}", eng(r.timing.throughput_pipe, "dec/s"));
     assert_eq!(r.golden_agreement, 1.0, "ideal hardware must match golden");
+
+    // 5. Serve the same split through a live session (native backend).
+    let mut session = mapped.session(EngineKind::Native, 8)?;
+    let classes = session.classify_all(&model.test_x)?;
+    let agree = classes
+        .iter()
+        .zip(&model.golden)
+        .filter(|(c, g)| **c == Some(**g))
+        .count();
+    println!(
+        "session ({}): {}/{} classifications match the software tree",
+        session.backend_name(),
+        agree,
+        classes.len()
+    );
+    assert_eq!(agree, classes.len());
     println!("ok: ReCAM classification matches the software tree exactly");
     Ok(())
 }

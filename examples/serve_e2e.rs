@@ -1,13 +1,16 @@
 //! End-to-end serving driver (the repository's E2E validation run —
 //! recorded in EXPERIMENTS.md §E2E).
 //!
-//! Proves all layers compose on a real workload:
+//! Proves all layers compose on a real workload through the typed
+//! pipeline facade:
 //!  * L1/L2 — the Pallas/JAX match graph, AOT-lowered to HLO text by
-//!    `make artifacts`, executed through PJRT from Rust;
-//!  * L3 — the coordinator: request stream → dynamic batcher → per-
-//!    division stage scheduling with selective precharge → class readout;
-//!  * plus the native engine as a differential oracle: both engines must
-//!    produce identical classifications.
+//!    `make artifacts`, executed through the `pjrt` match backend;
+//!  * L3 — the coordinator session: request stream → dynamic batcher →
+//!    per-division stage scheduling with selective precharge → class
+//!    readout;
+//!  * plus the `native` and `threaded-native` backends as differential
+//!    oracles: every registered backend must produce identical
+//!    classifications.
 //!
 //! Workload: the Covid dataset (33.6k instances, Table II) — train CART
 //! on 90%, serve the 10% split (3.36k requests) through the mapped ReCAM.
@@ -18,78 +21,83 @@
 
 use std::time::Instant;
 
-use dt2cam::config::{EngineKind, RunConfig};
-use dt2cam::coordinator::{Coordinator, InferenceRequest};
-use dt2cam::report::workload::Workload;
+use dt2cam::api::{Dt2Cam, MappedProgram};
+use dt2cam::config::EngineKind;
+use dt2cam::coordinator::InferenceRequest;
 use dt2cam::tcam::params::DeviceParams;
 use dt2cam::util::stats::eng;
 
 fn serve(
     engine: EngineKind,
-    w: &Workload,
-    s: usize,
+    mapped: &MappedProgram,
+    test_x: &[Vec<f64>],
     batch: usize,
-    n: usize,
 ) -> anyhow::Result<(Vec<Option<usize>>, f64, f64)> {
-    let p = DeviceParams::default();
-    let m = w.map(s, &p);
-    let cfg = RunConfig {
-        dataset: w.dataset.name.clone(),
-        tile_size: s,
-        batch,
-        engine,
-        ..RunConfig::default()
-    };
-    let vref = m.vref.clone();
-    let mut coord = Coordinator::new(&cfg, w.lut.clone(), &m, &vref, p)?;
+    let mut session = mapped.session(engine, batch)?;
 
     let t0 = Instant::now();
+    let n = test_x.len();
     let mut responses = Vec::with_capacity(n);
-    for (i, x) in w.test_x[..n].iter().enumerate() {
-        coord.submit(InferenceRequest::new(i as u64, x.clone()));
-        responses.extend(coord.poll(false)?);
+    for (i, x) in test_x.iter().enumerate() {
+        session.submit(InferenceRequest::new(i as u64, x.clone()));
+        responses.extend(session.poll(false)?);
     }
-    responses.extend(coord.poll(true)?);
+    responses.extend(session.poll(true)?);
     let wall = t0.elapsed().as_secs_f64();
 
     responses.sort_by_key(|r| r.id);
     let classes: Vec<Option<usize>> = responses.iter().map(|r| r.class).collect();
-    Ok((classes, wall, coord.metrics.energy_per_dec()))
+    Ok((classes, wall, session.metrics().energy_per_dec()))
 }
 
 fn main() -> anyhow::Result<()> {
     let has_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
     println!("== DT2CAM end-to-end serving (covid @ S=128, batch 32) ==");
-    let w = Workload::prepare("covid")?;
-    let n = w.test_x.len();
+    let model = Dt2Cam::dataset("covid")?;
+    let program = model.compile();
+    let mapped = program.map(128, &DeviceParams::default());
+    let n = model.test_x.len();
     println!(
         "workload: {} train / {} serve requests, LUT {}x{}",
-        w.split.train.len(),
+        model.split.train.len(),
         n,
-        w.lut.n_rows(),
-        w.lut.width()
+        program.lut.n_rows(),
+        program.lut.width()
     );
 
-    // Native engine first (always available).
-    let (native, wall_native, e_native) = serve(EngineKind::Native, &w, 128, 32, n)?;
     let acc = |cls: &[Option<usize>]| {
         cls.iter()
-            .zip(&w.test_y[..n])
+            .zip(&model.test_y[..n])
             .filter(|(c, y)| **c == Some(**y))
             .count() as f64
             / n as f64
     };
+
+    // Native backend first (always available), then threaded-native as a
+    // same-numerics, different-threading oracle.
+    let (native, wall_native, e_native) =
+        serve(EngineKind::Native, &mapped, &model.test_x, 32)?;
     println!(
-        "native: {n} decisions in {wall_native:.3}s -> {:.0} dec/s wall, accuracy {:.4}, modeled {}",
+        "native          : {n} decisions in {wall_native:.3}s -> {:.0} dec/s wall, accuracy {:.4}, modeled {}",
         n as f64 / wall_native,
         acc(&native),
         eng(e_native, "J/dec"),
     );
 
+    let (threaded, wall_threaded, _) =
+        serve(EngineKind::ThreadedNative, &mapped, &model.test_x, 32)?;
+    println!(
+        "threaded-native : {n} decisions in {wall_threaded:.3}s -> {:.0} dec/s wall, accuracy {:.4}",
+        n as f64 / wall_threaded,
+        acc(&threaded),
+    );
+    assert_eq!(native, threaded, "backends must agree on every classification");
+
     if has_artifacts {
-        let (pjrt, wall_pjrt, e_pjrt) = serve(EngineKind::Pjrt, &w, 128, 32, n)?;
+        let (pjrt, wall_pjrt, e_pjrt) =
+            serve(EngineKind::Pjrt, &mapped, &model.test_x, 32)?;
         println!(
-            "pjrt  : {n} decisions in {wall_pjrt:.3}s -> {:.0} dec/s wall, accuracy {:.4}, modeled {}",
+            "pjrt            : {n} decisions in {wall_pjrt:.3}s -> {:.0} dec/s wall, accuracy {:.4}, modeled {}",
             n as f64 / wall_pjrt,
             acc(&pjrt),
             eng(e_pjrt, "J/dec"),
@@ -103,7 +111,7 @@ fn main() -> anyhow::Result<()> {
     // Golden check: ideal hardware == software tree.
     let golden_agree = native
         .iter()
-        .zip(&w.golden[..n])
+        .zip(&model.golden[..n])
         .filter(|(c, g)| **c == Some(**g))
         .count();
     assert_eq!(golden_agree, n, "ideal hardware must match golden predictions");
@@ -111,7 +119,7 @@ fn main() -> anyhow::Result<()> {
         "golden agreement {}/{} | golden accuracy {:.4}",
         golden_agree,
         n,
-        w.golden_accuracy()
+        model.golden_accuracy()
     );
     Ok(())
 }

@@ -2,17 +2,15 @@
 //!
 //! L3 request-path stages in isolation and end-to-end:
 //! input encoding → tile match (native f32) → full batch schedule
-//! (native vs PJRT) → pipelined stream. Baseline + after-optimization
-//! numbers are recorded in EXPERIMENTS.md §Perf.
+//! (per registered backend) → pipelined stream. Baseline +
+//! after-optimization numbers are recorded in EXPERIMENTS.md §Perf.
 
 use std::sync::Arc;
 
-use dt2cam::config::{EngineKind, RunConfig};
+use dt2cam::api::{Dt2Cam, MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend};
+use dt2cam::config::EngineKind;
 use dt2cam::coordinator::pipeline::run_pipeline;
-use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
-use dt2cam::coordinator::{Coordinator, InferenceRequest, ServingPlan};
-use dt2cam::report::workload::Workload;
-use dt2cam::runtime::MatchEngine;
+use dt2cam::coordinator::{InferenceRequest, Scheduler};
 use dt2cam::tcam::params::DeviceParams;
 use dt2cam::util::benchkit::Bench;
 
@@ -21,47 +19,54 @@ fn main() {
     let mut b = Bench::new("perf_hotpath");
 
     // Workload: covid is the paper's big *practical* dataset (Credit-scale
-    // training is too slow for a microbench loop).
-    let w = Workload::prepare("covid").unwrap();
+    // training is too slow for a microbench loop). Built once through the
+    // typed facade; every stage below reuses the artifacts.
+    let model = Dt2Cam::dataset("covid").unwrap();
+    let program = model.compile();
     let s = 128;
-    let m = w.map(s, &p);
-    let plan = ServingPlan::build(&m, &m.vref, &p);
+    let mapped = program.map(s, &p);
+    let m = &mapped.mapped;
+    let plan = mapped.plan();
     b.report_line(&format!(
         "covid @S={s}: LUT {}x{}, grid {}x{}, plan W = {:.1} MiB",
-        w.lut.n_rows(),
-        w.lut.width(),
+        program.lut.n_rows(),
+        program.lut.width(),
         m.n_rwd,
         m.n_cwd,
         plan.w_bytes() as f64 / (1 << 20) as f64
     ));
 
     // L3 stage 1: input encoding.
-    let x = &w.test_x[0];
+    let x = &model.test_x[0];
     b.case("encode_input (adaptive unary)", || {
-        std::hint::black_box(w.lut.encode_input(x));
+        std::hint::black_box(program.lut.encode_input(x));
     });
 
-    // L3 stage 2: one full batch through the sequential scheduler.
-    let batch: Vec<Vec<bool>> = w.test_x[..32.min(w.test_x.len())]
+    // L3 stage 2: one full batch through the sequential scheduler, per
+    // backend (the pluggable seam's overhead must stay invisible here).
+    let batch: Vec<Vec<bool>> = model.test_x[..32.min(model.test_x.len())]
         .iter()
-        .map(|x| m.pad_query(&w.lut.encode_input(x)))
+        .map(|x| m.pad_query(&program.lut.encode_input(x)))
         .collect();
     let real = batch.len();
     let sched = Scheduler::new(&plan, &p);
+    let native = NativeBackend::new();
     b.case("scheduler_batch32_native", || {
-        std::hint::black_box(sched.run_batch(&EngineRef::Native, &batch, real).unwrap());
+        std::hint::black_box(sched.run_batch(&native, &batch, real).unwrap());
+    });
+    let threaded = ThreadedNativeBackend::auto();
+    b.case("scheduler_batch32_threaded_native", || {
+        std::hint::black_box(sched.run_batch(&threaded, &batch, real).unwrap());
     });
 
     // PJRT path (if artifacts are present).
     let artifacts = std::path::Path::new("artifacts");
     if artifacts.join("manifest.json").exists() {
-        let eng = MatchEngine::new(artifacts).unwrap();
+        let pjrt = PjrtBackend::from_dir(artifacts).unwrap();
         // warm
-        let _ = sched.run_batch(&EngineRef::Pjrt(&eng), &batch, real).unwrap();
+        let _ = sched.run_batch(&pjrt, &batch, real).unwrap();
         b.case("scheduler_batch32_pjrt", || {
-            std::hint::black_box(
-                sched.run_batch(&EngineRef::Pjrt(&eng), &batch, real).unwrap(),
-            );
+            std::hint::black_box(sched.run_batch(&pjrt, &batch, real).unwrap());
         });
     } else {
         b.report_line("(skipping PJRT cases: run `make artifacts`)");
@@ -70,33 +75,33 @@ fn main() {
     // Pipelined stream (8 batches in flight).
     let stream: Vec<(Vec<Vec<bool>>, usize)> = (0..8).map(|_| (batch.clone(), real)).collect();
     let plan_arc = Arc::new(plan.clone());
+    let pipe_backend: Arc<dyn MatchBackend + Send + Sync> = Arc::new(NativeBackend::new());
     b.case("pipeline_8x32_native", || {
         std::hint::black_box(
-            run_pipeline(Arc::clone(&plan_arc), stream.clone(), 2).unwrap(),
+            run_pipeline(
+                Arc::clone(&plan_arc),
+                Arc::clone(&pipe_backend),
+                stream.clone(),
+                2,
+            )
+            .unwrap(),
         );
     });
 
-    // End-to-end serving throughput (native), reported as dec/s.
-    let cfg = RunConfig {
-        dataset: "covid".into(),
-        tile_size: s,
-        batch: 32,
-        engine: EngineKind::Native,
-        ..RunConfig::default()
-    };
-    let mut coord = Coordinator::new(&cfg, w.lut.clone(), &m, &m.vref.clone(), p.clone()).unwrap();
-    let n = w.test_x.len().min(512);
+    // End-to-end serving throughput (native session), reported as dec/s.
+    let mut session = mapped.session(EngineKind::Native, 32).unwrap();
+    let n = model.test_x.len().min(512);
     let t0 = std::time::Instant::now();
-    for (i, x) in w.test_x[..n].iter().enumerate() {
-        coord.submit(InferenceRequest::new(i as u64, x.clone()));
-        let _ = coord.poll(false).unwrap();
+    for (i, x) in model.test_x[..n].iter().enumerate() {
+        session.submit(InferenceRequest::new(i as u64, x.clone()));
+        let _ = session.poll(false).unwrap();
     }
-    let _ = coord.poll(true).unwrap();
+    let _ = session.poll(true).unwrap();
     let wall = t0.elapsed().as_secs_f64();
     b.report_value("serve_e2e_native_wall_throughput", n as f64 / wall, "dec/s");
     b.report_value(
         "modeled_seq_throughput",
-        coord.plan().timing.throughput_seq,
+        session.plan().timing.throughput_seq,
         "dec/s",
     );
     b.finish();

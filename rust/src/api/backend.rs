@@ -1,0 +1,556 @@
+//! The pluggable match-backend seam: every execution substrate that can
+//! evaluate one column division of a serving plan implements
+//! [`MatchBackend`], and the coordinator/scheduler/pipeline layers compile
+//! only against `&dyn MatchBackend`.
+//!
+//! Contract (see `docs/API.md` §Backend): `match_division` is a *pure
+//! function* of `(plan, division, query bits, enable masks)` — it returns
+//! the per-row-tile match booleans and must agree bit-for-bit with every
+//! other backend on match decisions. Selective-precharge mask folding,
+//! energy accounting and the survivor → class readout stay in the
+//! scheduler; backends only answer "which rows matched".
+//!
+//! Three backends register (see [`super::registry`]):
+//! * [`NativeBackend`] — the f32 analog simulator, density-adaptive
+//!   (dense gather-matmul vs sparse per-enabled-row), row tiles fanned
+//!   out over scoped threads when activity is high.
+//! * [`ThreadedNativeBackend`] — same numerics, but row tiles are
+//!   statically partitioned into contiguous ranges with a fixed
+//!   range → worker assignment (worker *k* always evaluates the same
+//!   tile range in every division of every batch, so its W slices stay
+//!   hot in that core's cache).
+//! * [`PjrtBackend`] — the AOT HLO artifacts through the PJRT CPU
+//!   client, stacked-division dispatch with device-resident constants.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::plan::{DivisionPlan, ServingPlan};
+use crate::runtime::{ArtifactKind, MatchEngine};
+use crate::util::threadpool::parallel_map;
+
+/// One column division's worth of work handed to a backend.
+///
+/// `lane_bits[lane]` is the query bit-slice of this division (length
+/// `plan.s`); `enabled[lane]` is the selective-precharge mask over the
+/// *padded* rows (length `plan.padded_rows`) — rows disabled for a lane
+/// may be skipped (their result is ANDed away by the scheduler anyway).
+pub struct DivisionRequest<'a> {
+    /// Column-division index into `plan.divisions`.
+    pub division: usize,
+    /// Per-lane query bits of this division, `[lane][S]`.
+    pub lane_bits: &'a [&'a [bool]],
+    /// Per-lane enable masks over padded rows, `[lane][padded_rows]`.
+    pub enabled: &'a [Vec<bool>],
+}
+
+impl DivisionRequest<'_> {
+    /// Number of query lanes in this request.
+    pub fn lanes(&self) -> usize {
+        self.lane_bits.len()
+    }
+
+    /// Total enabled (lane, row) pairs — the density signal backends use
+    /// to pick dense vs sparse evaluation.
+    pub fn total_active(&self) -> usize {
+        self.enabled
+            .iter()
+            .map(|e| e.iter().filter(|&&x| x).count())
+            .sum()
+    }
+}
+
+/// Per-row-tile match booleans: `matches[row_tile][lane * S + local_row]`.
+pub type DivisionMatches = Vec<Vec<bool>>;
+
+/// An execution substrate for TCAM division matches (object-safe; the
+/// coordinator layers hold `&dyn MatchBackend` / `Box<dyn MatchBackend>`).
+pub trait MatchBackend {
+    /// Registry name of this backend (`--engine` value).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate every row tile of one column division against a batch.
+    /// Must be deterministic and agree with the native simulator on every
+    /// match decision.
+    fn match_division(
+        &self,
+        plan: &ServingPlan,
+        req: &DivisionRequest<'_>,
+    ) -> Result<DivisionMatches>;
+
+    /// Prepare for serving `lanes`-wide batches of this plan (compile
+    /// executables, check geometry). Called once at session build; must
+    /// fail fast if the backend cannot serve the geometry at all.
+    fn warm(&self, _plan: &ServingPlan, _lanes: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Drop any cached per-plan state (device buffers keyed by plan id).
+    /// Called by [`Coordinator::with_backend`](crate::coordinator::Coordinator)
+    /// at session build, so a backend reused across plan rebuilds (fault
+    /// injection, variability sweeps) never aliases stale conductances
+    /// and its cache does not grow without bound.
+    fn invalidate(&self) {}
+}
+
+/// Match one row tile against a batch, directly from the plan's W layout.
+/// Writes `[lane][local_row]` booleans into `out`.
+///
+/// Two code paths, chosen by activity density (§Perf):
+/// * **dense** — the full vectorizable gather-matmul over all S rows per
+///   lane (first column division, where every row is still enabled);
+/// * **sparse** — per-(lane, enabled-row) scalar evaluation, skipping the
+///   rows selective precharge already disabled. In later divisions only a
+///   handful of rows per lane survive, so this is orders of magnitude
+///   less work (exactly the hardware's SP energy saving, mirrored in
+///   software time).
+pub(crate) fn tile_match_from_w(
+    w_tile: &[f32],
+    gthresh_tile: &[f32],
+    s: usize,
+    lane_bits: &[&[bool]],
+    // Enable mask per lane for this tile's rows (`[lane][local_row]`),
+    // or None = all enabled.
+    enabled: Option<&[&[bool]]>,
+    out: &mut [bool],
+) {
+    debug_assert_eq!(out.len(), lane_bits.len() * s);
+    // Count active (lane, row) pairs to pick the path.
+    let active: usize = match enabled {
+        None => lane_bits.len() * s,
+        Some(en) => en.iter().map(|e| e.iter().filter(|&&x| x).count()).sum(),
+    };
+    let dense_cutoff = lane_bits.len() * s / 8;
+
+    if active >= dense_cutoff || enabled.is_none() {
+        // Dense: per lane, one gather-accumulate across all rows.
+        let mut g = vec![0.0f32; s];
+        for (lane, bits) in lane_bits.iter().enumerate() {
+            debug_assert_eq!(bits.len(), s);
+            g.iter_mut().for_each(|x| *x = 0.0);
+            for (j, &b) in bits.iter().enumerate() {
+                let row_w =
+                    &w_tile[(2 * j + usize::from(b)) * s..(2 * j + usize::from(b) + 1) * s];
+                for (acc, &wv) in g.iter_mut().zip(row_w) {
+                    *acc += wv;
+                }
+            }
+            for r in 0..s {
+                // Log-domain SA compare: no exp on the hot path.
+                out[lane * s + r] = g[r] < gthresh_tile[r];
+            }
+        }
+    } else {
+        // Sparse: touch only enabled (lane, row) pairs.
+        let en = enabled.expect("sparse path requires masks");
+        for (lane, bits) in lane_bits.iter().enumerate() {
+            for r in 0..s {
+                if !en[lane][r] {
+                    continue;
+                }
+                let mut g = 0.0f32;
+                for (j, &b) in bits.iter().enumerate() {
+                    g += w_tile[(2 * j + usize::from(b)) * s + r];
+                }
+                out[lane * s + r] = g < gthresh_tile[r];
+            }
+        }
+    }
+}
+
+/// Evaluate one row tile of `div` for the whole batch (shared kernel of
+/// both native backends).
+fn native_tile(
+    div: &DivisionPlan,
+    s: usize,
+    rt: usize,
+    lane_bits: &[&[bool]],
+    enabled: &[Vec<bool>],
+) -> Vec<bool> {
+    let w_tile = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+    let gthresh_tile = &div.gthresh[rt * s..(rt + 1) * s];
+    let en_refs: Vec<&[bool]> = enabled.iter().map(|e| &e[rt * s..(rt + 1) * s]).collect();
+    let mut out = vec![false; lane_bits.len() * s];
+    tile_match_from_w(w_tile, gthresh_tile, s, lane_bits, Some(&en_refs), &mut out);
+    out
+}
+
+/// Native f32 simulator backend. Density-adaptive: row tiles fan out over
+/// scoped threads while most rows are still enabled; once selective
+/// precharge has collapsed the activity, per-tile work is too small for
+/// thread fan-out to pay (scoped spawn is ~30-50 µs/thread vs a sparse
+/// tile match in the single-digit µs) and evaluation stays serial.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl MatchBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn match_division(
+        &self,
+        plan: &ServingPlan,
+        req: &DivisionRequest<'_>,
+    ) -> Result<DivisionMatches> {
+        let s = plan.s;
+        let lanes = req.lanes();
+        let div = &plan.divisions[req.division];
+        let total_active = req.total_active();
+        let run_tile = |rt: usize| native_tile(div, s, rt, req.lane_bits, req.enabled);
+        // Thread fan-out only pays past ~8 row tiles and while activity is
+        // still dense (§Perf measurement).
+        if total_active >= lanes * s && plan.n_rwd >= 8 {
+            let jobs: Vec<usize> = (0..plan.n_rwd).collect();
+            Ok(parallel_map(jobs, run_tile))
+        } else {
+            Ok((0..plan.n_rwd).map(run_tile).collect())
+        }
+    }
+}
+
+/// Native backend with static row-tile → worker partitioning.
+///
+/// When a division is still dense, its row tiles are split into
+/// `workers` contiguous ranges and (scoped) worker *k* always evaluates
+/// range *k* — the assignment is a pure function of
+/// `(k, n_rwd, workers)`, so repeated batches of the same plan reuse the
+/// same deterministic partition with no work-queue contention, unlike
+/// [`NativeBackend`]'s dynamic queue. (Workers are scoped threads per
+/// division call, not pinned OS threads; the affinity is of tiles to
+/// worker slots, not to cores.) Once selective precharge has collapsed
+/// activity, evaluation drops to the serial sparse path — per-tile work
+/// is then microseconds and thread spawns would dominate. Numerics are
+/// identical across all native backends: same tile kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadedNativeBackend {
+    workers: usize,
+}
+
+impl ThreadedNativeBackend {
+    /// Fixed worker count (>= 1).
+    pub fn new(workers: usize) -> ThreadedNativeBackend {
+        ThreadedNativeBackend {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Sized to the machine (cores, capped at 16 — tile counts per
+    /// division rarely exceed that, see Table V).
+    pub fn auto() -> ThreadedNativeBackend {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ThreadedNativeBackend::new(n.min(16))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+impl Default for ThreadedNativeBackend {
+    fn default() -> Self {
+        ThreadedNativeBackend::auto()
+    }
+}
+
+impl MatchBackend for ThreadedNativeBackend {
+    fn name(&self) -> &'static str {
+        "threaded-native"
+    }
+
+    fn match_division(
+        &self,
+        plan: &ServingPlan,
+        req: &DivisionRequest<'_>,
+    ) -> Result<DivisionMatches> {
+        let s = plan.s;
+        let n_rwd = plan.n_rwd;
+        let div = &plan.divisions[req.division];
+        let workers = self.workers.min(n_rwd).max(1);
+        // Same density gate as NativeBackend: sparse divisions are
+        // microseconds of scalar work — thread fan-out would cost more
+        // than the evaluation itself.
+        let dense = req.total_active() >= req.lanes() * s;
+        if workers == 1 || !dense {
+            return Ok((0..n_rwd)
+                .map(|rt| native_tile(div, s, rt, req.lane_bits, req.enabled))
+                .collect());
+        }
+        let chunks: Vec<Vec<Vec<bool>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|k| {
+                    // Static contiguous range for worker k.
+                    let lo = k * n_rwd / workers;
+                    let hi = (k + 1) * n_rwd / workers;
+                    let lane_bits = req.lane_bits;
+                    let enabled = req.enabled;
+                    scope.spawn(move || {
+                        (lo..hi)
+                            .map(|rt| native_tile(div, s, rt, lane_bits, enabled))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("threaded-native worker panicked"))
+                .collect()
+        });
+        Ok(chunks.into_iter().flatten().collect())
+    }
+}
+
+/// PJRT artifact backend: AOT-compiled HLO executables on the PJRT CPU
+/// client (single-threaded engine; XLA's intra-op pool and the stacked-
+/// division artifacts provide the tile parallelism). `!Send` by
+/// construction — one thread owns it.
+pub struct PjrtBackend {
+    engine: MatchEngine,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: MatchEngine) -> PjrtBackend {
+        PjrtBackend { engine }
+    }
+
+    /// Open an artifact directory (must contain `manifest.json`; run
+    /// `make artifacts` first).
+    pub fn from_dir(dir: &std::path::Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend::new(MatchEngine::new(dir)?))
+    }
+
+    /// The underlying engine (manifest inspection, probes).
+    pub fn engine(&self) -> &MatchEngine {
+        &self.engine
+    }
+
+    /// Resolve the lowered artifact batch width serving `lanes` lanes at
+    /// tile size `s` (single source for `warm` and `match_division`):
+    /// smallest lowered batch >= lanes, error if none is big enough.
+    fn artifact_batch(&self, s: usize, lanes: usize) -> Result<usize> {
+        let pb = self
+            .engine
+            .manifest()
+            .best_tile_batch(s, lanes)
+            .with_context(|| format!("no artifacts for tile size {s}"))?;
+        anyhow::ensure!(
+            pb >= lanes,
+            "batch {lanes} exceeds the largest lowered artifact batch {pb} for S={s}; \
+             re-run `make artifacts` with a larger BATCH_SIZES"
+        );
+        Ok(pb)
+    }
+}
+
+impl MatchBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn warm(&self, plan: &ServingPlan, lanes: usize) -> Result<()> {
+        let pb = self.artifact_batch(plan.s, lanes)?;
+        self.engine.warm_tile(plan.s, pb)
+    }
+
+    fn invalidate(&self) {
+        self.engine.clear_buffer_cache();
+    }
+
+    /// One column division through PJRT, chunking row tiles over the
+    /// available stacked-division artifacts (T ∈ {16, 8, 4, 2}) with the
+    /// plain tile artifact as the T=1 fallback. Lane counts that were
+    /// never lowered are padded up to the nearest available artifact
+    /// batch (padding lanes are all-zero one-hots: G = 0, discarded on
+    /// the way out).
+    fn match_division(
+        &self,
+        plan: &ServingPlan,
+        req: &DivisionRequest<'_>,
+    ) -> Result<DivisionMatches> {
+        let eng = &self.engine;
+        let s = plan.s;
+        let lanes = req.lanes();
+        let d = req.division;
+        let div = &plan.divisions[d];
+
+        // Artifact batch width: smallest lowered batch >= lanes.
+        let pb = self.artifact_batch(s, lanes)?;
+
+        // Build the Q buffer once per division: [pb, 2S] one-hot.
+        let mut q = vec![0.0f32; pb * 2 * s];
+        for (lane, bits) in req.lane_bits.iter().enumerate() {
+            let row = &mut q[lane * 2 * s..(lane + 1) * 2 * s];
+            for (j, &b) in bits.iter().enumerate() {
+                row[2 * j + usize::from(b)] = 1.0;
+            }
+        }
+
+        let mut out: Vec<Vec<bool>> = Vec::with_capacity(plan.n_rwd);
+        let mut rt = 0usize;
+        while rt < plan.n_rwd {
+            let remaining = plan.n_rwd - rt;
+            // Exact-fit stacked artifact, or — §Perf — the smallest
+            // *larger* stack padded with zero-conductance dummy tiles
+            // (one PJRT dispatch beats several small ones on CPU; dummy
+            // rows read all-match and are dropped below).
+            let exact = [16usize, 8, 4, 2]
+                .into_iter()
+                .find(|&t| t <= remaining && eng.manifest().division(s, pb, t).is_some());
+            let padded = [2usize, 4, 8, 16]
+                .into_iter()
+                .find(|&t| t >= remaining && eng.manifest().division(s, pb, t).is_some());
+            // Measured on this CPU (EXPERIMENTS.md §Perf): the stacked
+            // artifact's cost grows with T (interpret-mode pallas lowers
+            // to a per-tile loop), so exact chunks beat padding — padding
+            // is only the fallback when no exact stack exists.
+            let (chunk, real) = match (exact, padded) {
+                (Some(t), _) => (t, t),
+                (None, Some(t)) => (t, remaining.min(t)),
+                (None, None) => (1, 1),
+            };
+            // Device-resident constants: W / vref / toc never change
+            // between batches — upload once per (plan, division, range)
+            // and execute with buffers (§Perf: removes the dominant
+            // per-call host→device copy).
+            let bkey = |slot: u64| {
+                (plan.plan_id << 32)
+                    ^ ((d as u64) << 24)
+                    ^ ((rt as u64) << 8)
+                    ^ ((chunk as u64) << 2)
+                    ^ slot
+            };
+            let toc_buf = eng.cached_buffer(bkey(2), &[div.toc], &[])?;
+            let res = if chunk == 1 {
+                let w = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+                let vr = &div.vref[rt * s..(rt + 1) * s];
+                let w_buf = eng.cached_buffer(bkey(0), w, &[2 * s, s])?;
+                let v_buf = eng.cached_buffer(bkey(1), vr, &[s])?;
+                eng.match_cached(ArtifactKind::Tile, s, pb, 1, &q, &w_buf, &v_buf, &toc_buf)?
+            } else if real == chunk {
+                let w = &div.w[rt * 2 * s * s..(rt + chunk) * 2 * s * s];
+                let vr = &div.vref[rt * s..(rt + chunk) * s];
+                let w_buf = eng.cached_buffer(bkey(0), w, &[chunk, 2 * s, s])?;
+                let v_buf = eng.cached_buffer(bkey(1), vr, &[chunk, s])?;
+                eng.match_cached(
+                    ArtifactKind::Division, s, pb, chunk, &q, &w_buf, &v_buf, &toc_buf,
+                )?
+            } else {
+                // Pad the tail with zero-conductance tiles.
+                let mut w = vec![0.0f32; chunk * 2 * s * s];
+                w[..real * 2 * s * s]
+                    .copy_from_slice(&div.w[rt * 2 * s * s..(rt + real) * 2 * s * s]);
+                let mut vr = vec![0.5f32; chunk * s];
+                vr[..real * s].copy_from_slice(&div.vref[rt * s..(rt + real) * s]);
+                let w_buf = eng.cached_buffer(bkey(0), &w, &[chunk, 2 * s, s])?;
+                let v_buf = eng.cached_buffer(bkey(1), &vr, &[chunk, s])?;
+                eng.match_cached(
+                    ArtifactKind::Division, s, pb, chunk, &q, &w_buf, &v_buf, &toc_buf,
+                )?
+            };
+            // res.matched layout: [chunk, pb, s] -> per row tile, keeping
+            // only the real lanes and real tiles.
+            for t in 0..real {
+                let mut tile = vec![false; lanes * s];
+                for lane in 0..lanes {
+                    for r in 0..s {
+                        tile[lane * s + r] =
+                            res.matched[t * pb * s + lane * s + r] > 0.5;
+                    }
+                }
+                out.push(tile);
+            }
+            rt += real;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::catalog;
+    use crate::synth::mapping::MappedArray;
+    use crate::tcam::params::DeviceParams;
+    use crate::util::prng::Prng;
+
+    fn plan_for(name: &str, s: usize) -> (ServingPlan, Vec<Vec<bool>>) {
+        let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
+        d.normalize();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let mut rng = Prng::new(3);
+        let m = MappedArray::from_lut(&lut, s, &p, &mut rng);
+        let queries: Vec<Vec<bool>> = d.features[..24]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+        (ServingPlan::build(&m, &m.vref, &p), queries)
+    }
+
+    fn full_masks(plan: &ServingPlan, lanes: usize) -> Vec<Vec<bool>> {
+        (0..lanes)
+            .map(|_| {
+                let mut v = vec![false; plan.padded_rows];
+                v[..plan.initially_active].fill(true);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn threaded_native_agrees_with_native_per_division() {
+        // haberman @16 is a 6x5 grid: several row tiles per division.
+        let (plan, queries) = plan_for("haberman", 16);
+        let enabled = full_masks(&plan, queries.len());
+        let native = NativeBackend::new();
+        for workers in [1usize, 2, 3, 8] {
+            let threaded = ThreadedNativeBackend::new(workers);
+            for d in 0..plan.n_cwd {
+                let col0 = d * plan.s;
+                let lane_bits: Vec<&[bool]> = queries
+                    .iter()
+                    .map(|q| &q[col0..col0 + plan.s])
+                    .collect();
+                let req = DivisionRequest {
+                    division: d,
+                    lane_bits: &lane_bits,
+                    enabled: &enabled,
+                };
+                let a = native.match_division(&plan, &req).unwrap();
+                let b = threaded.match_division(&plan, &req).unwrap();
+                assert_eq!(a, b, "division {d}, workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn backends_report_registry_names() {
+        assert_eq!(NativeBackend::new().name(), "native");
+        assert_eq!(ThreadedNativeBackend::new(2).name(), "threaded-native");
+    }
+
+    #[test]
+    fn division_request_density_helpers() {
+        let (plan, queries) = plan_for("iris", 16);
+        let enabled = full_masks(&plan, queries.len());
+        let lane_bits: Vec<&[bool]> =
+            queries.iter().map(|q| &q[0..plan.s]).collect();
+        let req = DivisionRequest {
+            division: 0,
+            lane_bits: &lane_bits,
+            enabled: &enabled,
+        };
+        assert_eq!(req.lanes(), queries.len());
+        assert_eq!(req.total_active(), queries.len() * plan.initially_active);
+    }
+}

@@ -1,0 +1,562 @@
+//! The typed pipeline stages: `Dt2Cam::dataset(..)` → [`TrainedModel`]
+//! → [`CompiledProgram`] → [`MappedProgram`] → [`Session`].
+//!
+//! Every stage is an owned artifact; [`CompiledProgram`] and
+//! [`MappedProgram`] additionally (de)serialize to JSON so `compile` and
+//! `serve` can run in separate processes (`dt2cam compile --save p.json`
+//! then `dt2cam serve --program p.json`). The mapped artifact stores the
+//! compiled LUT, the mapping seed and the per-(division, row) reference
+//! voltages; the tile grid itself is rebuilt deterministically on load
+//! and cross-checked against the stored geometry, so artifacts stay
+//! small even for Credit-scale programs.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cart::{train, TrainParams, Tree};
+use crate::compiler::{compile, Lut};
+use crate::config::json::Json;
+use crate::config::EngineKind;
+use crate::coordinator::plan::ServingPlan;
+use crate::coordinator::server::{Coordinator, InferenceResponse};
+use crate::coordinator::InferenceRequest;
+use crate::coordinator::Metrics;
+use crate::dataset::{catalog, Dataset, Split};
+use crate::synth::mapping::MappedArray;
+use crate::tcam::params::DeviceParams;
+use crate::util::prng::Prng;
+
+use super::backend::MatchBackend;
+use super::registry::{self, BackendOptions};
+use super::serde::{
+    f64_arr, get, get_str, get_u64, get_usize, json_f64s, json_u64, json_usizes,
+    lut_from_json, lut_to_json, params_from_json, params_to_json, usize_arr,
+};
+use super::{map_seed, EXPERIMENT_SEED};
+
+const COMPILED_FORMAT: &str = "dt2cam-compiled-program";
+const MAPPED_FORMAT: &str = "dt2cam-mapped-program";
+const ARTIFACT_VERSION: usize = 1;
+
+/// Facade entry point. `Dt2Cam::dataset("iris")` loads + normalizes the
+/// dataset, performs the paper's 90/10 split, and trains the CART tree —
+/// the expensive, once-per-program stage.
+pub struct Dt2Cam;
+
+impl Dt2Cam {
+    /// Standard workload: paper defaults, [`EXPERIMENT_SEED`].
+    pub fn dataset(name: &str) -> Result<TrainedModel> {
+        Self::dataset_seeded(name, EXPERIMENT_SEED)
+    }
+
+    /// Same, with an explicit master seed (drives the synthetic dataset
+    /// generators, the split shuffle, and downstream mapping seeds).
+    pub fn dataset_seeded(name: &str, seed: u64) -> Result<TrainedModel> {
+        let mut dataset = catalog::by_name(name, seed)?;
+        dataset.normalize();
+        let mut rng = Prng::new(seed ^ 0x5917);
+        let split = dataset.split(0.9, &mut rng);
+        let (xs, ys) = dataset.gather(&split.train);
+        let tree = train(&xs, &ys, dataset.n_classes, &TrainParams::default());
+        let (test_x, test_y) = dataset.gather(&split.test);
+        let golden = test_x.iter().map(|x| tree.predict(x)).collect();
+        Ok(TrainedModel {
+            dataset,
+            split,
+            tree,
+            test_x,
+            test_y,
+            golden,
+            seed,
+        })
+    }
+}
+
+/// Stage 1 artifact: normalized dataset + split + trained CART tree +
+/// held-out evaluation data.
+pub struct TrainedModel {
+    /// The normalized dataset.
+    pub dataset: Dataset,
+    pub split: Split,
+    pub tree: Tree,
+    /// Test features/labels (gathered).
+    pub test_x: Vec<Vec<f64>>,
+    pub test_y: Vec<usize>,
+    /// Software-tree predictions on the test split (golden accuracy).
+    pub golden: Vec<usize>,
+    /// Master seed this model was built from.
+    pub seed: u64,
+}
+
+impl TrainedModel {
+    /// Stage 2: run the DT-HW compiler (tree parse → column reduction →
+    /// ternary adaptive encoding) into an owned [`CompiledProgram`].
+    pub fn compile(&self) -> CompiledProgram {
+        CompiledProgram {
+            dataset: self.dataset.name.clone(),
+            seed: self.seed,
+            lut: compile(&self.tree),
+            test_indices: self.split.test.clone(),
+            golden: self.golden.clone(),
+        }
+    }
+
+    /// Golden (software tree) test accuracy.
+    pub fn golden_accuracy(&self) -> f64 {
+        self.golden_accuracy_capped(0)
+    }
+
+    /// Golden accuracy over the first `cap` test rows (0 = all).
+    pub fn golden_accuracy_capped(&self, cap: usize) -> f64 {
+        let n = if cap > 0 {
+            self.test_y.len().min(cap)
+        } else {
+            self.test_y.len()
+        };
+        self.golden[..n]
+            .iter()
+            .zip(&self.test_y[..n])
+            .filter(|(g, y)| g == y)
+            .count() as f64
+            / n.max(1) as f64
+    }
+}
+
+/// Stage 2 artifact: the compiled ternary LUT + input encoders, plus the
+/// evaluation block (test-split indices and golden predictions) that
+/// lets a separate serve process rebuild its request stream without
+/// retraining.
+#[derive(Clone)]
+pub struct CompiledProgram {
+    /// Dataset name (catalog key).
+    pub dataset: String,
+    /// Master seed the model was trained with (pins the synthetic
+    /// dataset generator and the split shuffle).
+    pub seed: u64,
+    /// The DT-HW compiler's product: ternary rows + per-feature encoders.
+    pub lut: Lut,
+    /// Test-split row indices into the (deterministic) dataset.
+    pub test_indices: Vec<usize>,
+    /// Software-tree predictions for those rows.
+    pub golden: Vec<usize>,
+}
+
+impl CompiledProgram {
+    /// Stage 3: map onto S×S ReCAM tiles with the standard per-(seed, S)
+    /// mapping seed.
+    pub fn map(&self, s: usize, p: &DeviceParams) -> MappedProgram {
+        self.map_seeded(s, p, map_seed(self.seed, s))
+    }
+
+    /// Same, with an explicit mapping seed (rogue-row class draws).
+    pub fn map_seeded(&self, s: usize, p: &DeviceParams, seed: u64) -> MappedProgram {
+        let mut rng = Prng::new(seed);
+        let mapped = MappedArray::from_lut(&self.lut, s, p, &mut rng);
+        MappedProgram {
+            program: self.clone(),
+            mapped,
+            params: p.clone(),
+            map_seed: seed,
+        }
+    }
+
+    /// Digital reference classification (LUT search).
+    pub fn classify(&self, x: &[f64]) -> Option<usize> {
+        self.lut.classify(x)
+    }
+
+    /// Reload the (deterministic) dataset this program was trained on and
+    /// gather its test split: `(test_x, test_y)`. Cheap — no training.
+    pub fn test_split(&self) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
+        let mut d = catalog::by_name(&self.dataset, self.seed)?;
+        d.normalize();
+        // A corrupted artifact must fail loudly here, not panic inside
+        // Dataset::gather at serve time.
+        if let Some(&bad) = self.test_indices.iter().find(|&&i| i >= d.n_instances()) {
+            anyhow::bail!(
+                "test index {bad} out of range for dataset '{}' ({} rows) — corrupted artifact?",
+                self.dataset,
+                d.n_instances()
+            );
+        }
+        Ok(d.gather(&self.test_indices))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(COMPILED_FORMAT)),
+            ("version", Json::num(ARTIFACT_VERSION as f64)),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("seed", json_u64(self.seed)),
+            ("lut", lut_to_json(&self.lut)),
+            ("test_indices", json_usizes(&self.test_indices)),
+            ("golden", json_usizes(&self.golden)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CompiledProgram> {
+        let format = get_str(j, "format")?;
+        if format != COMPILED_FORMAT {
+            anyhow::bail!("not a compiled-program artifact (format '{format}')");
+        }
+        let version = get_usize(j, "version")?;
+        if version != ARTIFACT_VERSION {
+            anyhow::bail!("unsupported artifact version {version}");
+        }
+        let program = CompiledProgram {
+            dataset: get_str(j, "dataset")?,
+            seed: get_u64(j, "seed")?,
+            lut: lut_from_json(get(j, "lut")?)?,
+            test_indices: usize_arr(j, "test_indices")?,
+            golden: usize_arr(j, "golden")?,
+        };
+        if program.test_indices.len() != program.golden.len() {
+            anyhow::bail!(
+                "{} test indices but {} golden predictions",
+                program.test_indices.len(),
+                program.golden.len()
+            );
+        }
+        if let Some(&bad) = program
+            .golden
+            .iter()
+            .find(|&&g| g >= program.lut.n_classes)
+        {
+            anyhow::bail!(
+                "golden class {bad} out of range (n_classes {})",
+                program.lut.n_classes
+            );
+        }
+        Ok(program)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<CompiledProgram> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("loading {}", path.display()))
+    }
+}
+
+/// Stage 3 artifact: the program mapped onto an S×S tile grid, with
+/// device parameters and per-(division, row) reference voltages.
+pub struct MappedProgram {
+    /// The compiled program this mapping was built from.
+    pub program: CompiledProgram,
+    /// The tile grid (cells, classes, divisions, nominal vref).
+    pub mapped: MappedArray,
+    /// Device physics the mapping's sensing points were computed with.
+    pub params: DeviceParams,
+    /// Seed of the rogue-row class draws (mapping determinism).
+    pub map_seed: u64,
+}
+
+impl MappedProgram {
+    /// Tile size S.
+    pub fn tile_size(&self) -> usize {
+        self.mapped.s
+    }
+
+    /// Build the serving plan (precomputed W buffers, log-domain
+    /// thresholds, timing model) for the current `mapped.vref`.
+    pub fn plan(&self) -> ServingPlan {
+        ServingPlan::build(&self.mapped, &self.mapped.vref, &self.params)
+    }
+
+    /// Stage 4: open a serving session on a registry backend.
+    pub fn session(&self, engine: EngineKind, batch: usize) -> Result<Session> {
+        self.session_with(engine, batch, &BackendOptions::default())
+    }
+
+    /// Same, with explicit backend options (artifact dir, threads).
+    pub fn session_with(
+        &self,
+        engine: EngineKind,
+        batch: usize,
+        opts: &BackendOptions,
+    ) -> Result<Session> {
+        self.session_with_backend(registry::create(engine, opts)?, batch)
+    }
+
+    /// Open a session over an already-constructed backend.
+    pub fn session_with_backend(
+        &self,
+        backend: Box<dyn MatchBackend>,
+        batch: usize,
+    ) -> Result<Session> {
+        let coord = Coordinator::with_backend(
+            backend,
+            batch,
+            self.program.lut.clone(),
+            &self.mapped,
+            &self.mapped.vref,
+            self.params.clone(),
+        )?;
+        Ok(Session { coord })
+    }
+
+    /// Rebuild the nominal (fault-free) grid this program maps to.
+    fn nominal_grid(&self) -> MappedArray {
+        let mut rng = Prng::new(self.map_seed);
+        MappedArray::from_lut(&self.program.lut, self.mapped.s, &self.params, &mut rng)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("format", Json::str(MAPPED_FORMAT)),
+            ("version", Json::num(ARTIFACT_VERSION as f64)),
+            ("tile_size", Json::num(self.mapped.s as f64)),
+            ("map_seed", json_u64(self.map_seed)),
+            ("params", params_to_json(&self.params)),
+            (
+                "geometry",
+                Json::obj(vec![
+                    ("n_rwd", Json::num(self.mapped.n_rwd as f64)),
+                    ("n_cwd", Json::num(self.mapped.n_cwd as f64)),
+                    ("padded_rows", Json::num(self.mapped.padded_rows as f64)),
+                    ("padded_width", Json::num(self.mapped.padded_width as f64)),
+                    ("real_rows", Json::num(self.mapped.real_rows as f64)),
+                    ("real_width", Json::num(self.mapped.real_width as f64)),
+                ]),
+            ),
+            ("vref", json_f64s(&self.mapped.vref)),
+        ];
+        // Fault-injected grids (nonideal::inject_saf rewrites cell bytes)
+        // must survive the round-trip: store the cells explicitly whenever
+        // they deviate from the deterministic nominal rebuild. Nominal
+        // artifacts skip this and stay small at Credit scale.
+        if self.mapped.cells != self.nominal_grid().cells {
+            fields.push(("cells", Json::str(super::serde::bytes_to_hex(&self.mapped.cells))));
+        }
+        fields.push(("program", self.program.to_json()));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<MappedProgram> {
+        let format = get_str(j, "format")?;
+        if format != MAPPED_FORMAT {
+            anyhow::bail!("not a mapped-program artifact (format '{format}')");
+        }
+        let version = get_usize(j, "version")?;
+        if version != ARTIFACT_VERSION {
+            anyhow::bail!("unsupported artifact version {version}");
+        }
+        let s = get_usize(j, "tile_size")?;
+        let seed = get_u64(j, "map_seed")?;
+        let params = params_from_json(get(j, "params")?)?;
+        let program = CompiledProgram::from_json(get(j, "program")?)?;
+
+        // The tile grid is deterministic in (lut, S, params, seed):
+        // rebuild it, then cross-check the stored geometry.
+        let mut rng = Prng::new(seed);
+        let mut mapped = MappedArray::from_lut(&program.lut, s, &params, &mut rng);
+        let geo = get(j, "geometry")?;
+        for (key, have) in [
+            ("n_rwd", mapped.n_rwd),
+            ("n_cwd", mapped.n_cwd),
+            ("padded_rows", mapped.padded_rows),
+            ("padded_width", mapped.padded_width),
+            ("real_rows", mapped.real_rows),
+            ("real_width", mapped.real_width),
+        ] {
+            let want = get_usize(geo, key)?;
+            if want != have {
+                anyhow::bail!(
+                    "artifact geometry mismatch: {key} stored {want}, rebuilt {have} \
+                     (artifact and code disagree on the mapping)"
+                );
+            }
+        }
+
+        // Reference voltages are stored explicitly (they may carry
+        // variability perturbations the nominal rebuild cannot know).
+        let vref = f64_arr(j, "vref")?;
+        if vref.len() != mapped.vref.len() {
+            anyhow::bail!(
+                "vref length {} != expected {}",
+                vref.len(),
+                mapped.vref.len()
+            );
+        }
+        mapped.vref = vref;
+
+        // Non-nominal cell contents (fault injection) travel explicitly.
+        if let Some(cells_json) = j.get("cells") {
+            let hex = cells_json
+                .as_str()
+                .context("field 'cells' must be a hex string")?;
+            let cells = super::serde::hex_to_bytes(hex)?;
+            if cells.len() != mapped.cells.len() {
+                anyhow::bail!(
+                    "cells length {} != expected {}",
+                    cells.len(),
+                    mapped.cells.len()
+                );
+            }
+            mapped.cells = cells;
+        }
+
+        Ok(MappedProgram {
+            program,
+            mapped,
+            params,
+            map_seed: seed,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<MappedProgram> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("loading {}", path.display()))
+    }
+}
+
+/// Stage 4: a live serving session — the coordinator handle (batcher +
+/// scheduler + metrics over one backend).
+pub struct Session {
+    coord: Coordinator,
+}
+
+impl Session {
+    /// Enqueue one request.
+    pub fn submit(&mut self, req: InferenceRequest) {
+        self.coord.submit(req);
+    }
+
+    /// Run all due batches; `force_flush` drains partial batches.
+    pub fn poll(&mut self, force_flush: bool) -> Result<Vec<InferenceResponse>> {
+        self.coord.poll(force_flush)
+    }
+
+    /// Synchronous classification of a whole input set.
+    pub fn classify_all(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Option<usize>>> {
+        self.coord.classify_all(inputs)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.coord.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.coord.metrics
+    }
+
+    pub fn plan(&self) -> &ServingPlan {
+        self.coord.plan()
+    }
+
+    /// Registry name of the backend driving this session.
+    pub fn backend_name(&self) -> &'static str {
+        self.coord.backend_name()
+    }
+
+    /// The underlying coordinator (advanced control).
+    pub fn coordinator(&mut self) -> &mut Coordinator {
+        &mut self.coord
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_compose_on_iris() {
+        let model = Dt2Cam::dataset("iris").unwrap();
+        assert_eq!(model.test_x.len(), 15); // 10% of 150
+        assert!(model.golden_accuracy() > 0.7);
+        let program = model.compile();
+        assert_eq!(program.lut.n_rows(), model.tree.n_leaves());
+        let mp = program.map(16, &DeviceParams::default());
+        assert_eq!(mp.tile_size(), 16);
+        let mut session = mp.session(EngineKind::Native, 8).unwrap();
+        assert_eq!(session.backend_name(), "native");
+        let got = session.classify_all(&model.test_x).unwrap();
+        for (c, g) in got.iter().zip(&model.golden) {
+            assert_eq!(*c, Some(*g));
+        }
+    }
+
+    #[test]
+    fn stages_are_deterministic() {
+        let a = Dt2Cam::dataset("haberman").unwrap();
+        let b = Dt2Cam::dataset("haberman").unwrap();
+        assert_eq!(a.split.test, b.split.test);
+        assert_eq!(a.golden, b.golden);
+        let pa = a.compile();
+        let pb = b.compile();
+        assert_eq!(pa.lut.stored, pb.lut.stored);
+        let p = DeviceParams::default();
+        assert_eq!(pa.map(16, &p).mapped.cells, pb.map(16, &p).mapped.cells);
+    }
+
+    #[test]
+    fn test_split_reloads_without_training() {
+        let model = Dt2Cam::dataset("iris").unwrap();
+        let program = model.compile();
+        let (tx, ty) = program.test_split().unwrap();
+        assert_eq!(tx, model.test_x);
+        assert_eq!(ty, model.test_y);
+    }
+
+    #[test]
+    fn compiled_program_roundtrip() {
+        let program = Dt2Cam::dataset("iris").unwrap().compile();
+        let text = program.to_json().to_string_pretty();
+        let back = CompiledProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.dataset, program.dataset);
+        assert_eq!(back.seed, program.seed);
+        assert_eq!(back.lut.stored, program.lut.stored);
+        assert_eq!(back.test_indices, program.test_indices);
+        assert_eq!(back.golden, program.golden);
+    }
+
+    #[test]
+    fn mapped_program_roundtrip_preserves_grid_and_vref() {
+        let program = Dt2Cam::dataset("haberman").unwrap().compile();
+        let mut mp = program.map(16, &DeviceParams::default());
+        // Perturb a reference voltage: the artifact must carry it.
+        mp.mapped.vref[3] += 0.0125;
+        let text = mp.to_json().to_string_pretty();
+        let back = MappedProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.mapped.cells, mp.mapped.cells);
+        assert_eq!(back.mapped.classes, mp.mapped.classes);
+        assert_eq!(back.mapped.vref, mp.mapped.vref);
+        assert_eq!(back.map_seed, mp.map_seed);
+        assert_eq!(back.tile_size(), 16);
+    }
+
+    #[test]
+    fn fault_injected_cells_survive_roundtrip() {
+        use crate::nonideal::{inject_saf, SafRates};
+        let program = Dt2Cam::dataset("iris").unwrap().compile();
+        let mut mp = program.map(16, &DeviceParams::default());
+        inject_saf(&mut mp.mapped, &SafRates::both(5.0), &mut Prng::new(77));
+        let nominal = mp.nominal_grid();
+        assert_ne!(mp.mapped.cells, nominal.cells, "faults must have landed");
+        let text = mp.to_json().to_string_pretty();
+        let back = MappedProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.mapped.cells, mp.mapped.cells);
+    }
+
+    #[test]
+    fn artifact_rejects_wrong_format() {
+        let j = Json::parse(r#"{"format": "something-else", "version": 1}"#).unwrap();
+        assert!(CompiledProgram::from_json(&j).is_err());
+        assert!(MappedProgram::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Backend registry: maps `--engine` names to [`MatchBackend`]
+//! constructors. The canonical name list lives on
+//! [`EngineKind`](crate::config::EngineKind) (so typed configs and the
+//! CLI share one source of truth); [`create`] is exhaustive over it.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{EngineKind, RunConfig};
+
+use super::backend::{MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend};
+
+/// Construction options shared by every backend (each backend reads the
+/// fields it needs and ignores the rest).
+#[derive(Clone, Debug)]
+pub struct BackendOptions {
+    /// Artifact directory for the PJRT backend (`make artifacts` output).
+    pub artifacts_dir: PathBuf,
+    /// Worker count for `threaded-native` (0 = size to the machine).
+    pub threads: usize,
+}
+
+impl Default for BackendOptions {
+    fn default() -> Self {
+        BackendOptions {
+            artifacts_dir: PathBuf::from("artifacts"),
+            threads: 0,
+        }
+    }
+}
+
+impl BackendOptions {
+    pub fn from_config(cfg: &RunConfig) -> BackendOptions {
+        BackendOptions {
+            artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
+            threads: 0,
+        }
+    }
+}
+
+/// Valid `--engine` names, in presentation order.
+pub fn names() -> Vec<&'static str> {
+    EngineKind::ALL.iter().map(|k| k.name()).collect()
+}
+
+/// One-line summary per registered backend (CLI help, docs).
+pub fn describe() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("native", "f32 analog simulator, density-adaptive thread fan-out"),
+        (
+            "threaded-native",
+            "f32 analog simulator, static row-tile partition per worker",
+        ),
+        (
+            "pjrt",
+            "AOT HLO artifacts on the PJRT CPU client (requires `make artifacts`)",
+        ),
+    ]
+}
+
+/// Build a backend by kind. Exhaustive: adding an [`EngineKind`] variant
+/// without registering a constructor here is a compile error.
+pub fn create(kind: EngineKind, opts: &BackendOptions) -> Result<Box<dyn MatchBackend>> {
+    match kind {
+        EngineKind::Native => Ok(Box::new(NativeBackend::new())),
+        EngineKind::ThreadedNative => Ok(Box::new(if opts.threads == 0 {
+            ThreadedNativeBackend::auto()
+        } else {
+            ThreadedNativeBackend::new(opts.threads)
+        })),
+        EngineKind::Pjrt => Ok(Box::new(PjrtBackend::from_dir(&opts.artifacts_dir)?)),
+    }
+}
+
+/// Build a backend from an `--engine` string; unknown names error with
+/// the full list of valid names.
+pub fn create_by_name(name: &str, opts: &BackendOptions) -> Result<Box<dyn MatchBackend>> {
+    create(EngineKind::parse(name)?, opts)
+}
+
+/// Build a shareable backend for the stage pipeline (one worker thread
+/// per column division). Only `Send + Sync` backends qualify — the PJRT
+/// client is `Rc`-backed and single-threaded by construction.
+pub fn create_pipeline_backend(
+    kind: EngineKind,
+    opts: &BackendOptions,
+) -> Result<Arc<dyn MatchBackend + Send + Sync>> {
+    match kind {
+        EngineKind::Native => Ok(Arc::new(NativeBackend::new())),
+        EngineKind::ThreadedNative => Ok(Arc::new(if opts.threads == 0 {
+            ThreadedNativeBackend::auto()
+        } else {
+            ThreadedNativeBackend::new(opts.threads)
+        })),
+        EngineKind::Pjrt => bail!(
+            "the pjrt backend is single-threaded (PJRT client is !Send) and cannot \
+             drive the stage pipeline; use one of: native, threaded-native"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_engine_kind() {
+        let opts = BackendOptions::default();
+        for kind in [EngineKind::Native, EngineKind::ThreadedNative] {
+            let b = create(kind, &opts).unwrap();
+            assert_eq!(b.name(), kind.name());
+        }
+        // pjrt needs artifacts on disk; constructing against a missing
+        // directory must be a clean error, not a panic.
+        let missing = BackendOptions {
+            artifacts_dir: PathBuf::from("/definitely/not/here"),
+            threads: 0,
+        };
+        assert!(create(EngineKind::Pjrt, &missing).is_err());
+    }
+
+    #[test]
+    fn unknown_name_lists_valid_names() {
+        let err = create_by_name("gpu", &BackendOptions::default()).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in names() {
+            assert!(msg.contains(name), "error should list '{name}': {msg}");
+        }
+    }
+
+    #[test]
+    fn pipeline_backend_rejects_pjrt() {
+        let err =
+            create_pipeline_backend(EngineKind::Pjrt, &BackendOptions::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("pipeline"));
+    }
+
+    #[test]
+    fn describe_matches_names() {
+        let described: Vec<&str> = describe().iter().map(|(n, _)| *n).collect();
+        assert_eq!(described, names());
+    }
+}

@@ -1,0 +1,490 @@
+//! JSON (de)serialization of the pipeline's stage artifacts.
+//!
+//! The repo's own minimal [`Json`] value type is the wire format (no
+//! serde offline). Encoders are written to be *canonical*: trit rows as
+//! `"01x"` strings, thresholds as plain number arrays, `NaN` (unbounded
+//! rule thresholds) as `null`. Every decoder validates shape invariants
+//! (row widths, class ranges) so a corrupted artifact fails loudly at
+//! load, never at match time.
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::{Comparator, FeatureEncoder, Lut, ReducedRow, Rule, Trit};
+use crate::config::json::Json;
+use crate::tcam::params::DeviceParams;
+use crate::util::ceil_log2;
+
+// ---------------------------------------------------------------- helpers
+
+pub(crate) fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).with_context(|| format!("missing field '{key}'"))
+}
+
+pub(crate) fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(get(j, key)?
+        .as_str()
+        .with_context(|| format!("field '{key}' must be a string"))?
+        .to_string())
+}
+
+pub(crate) fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    get(j, key)?
+        .as_usize()
+        .with_context(|| format!("field '{key}' must be a non-negative integer"))
+}
+
+/// Decode a u64 stored by [`json_u64`]: a plain integral number, or a
+/// decimal string for values f64 cannot represent exactly.
+pub(crate) fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    match get(j, key)? {
+        Json::Str(s) => s
+            .parse::<u64>()
+            .with_context(|| format!("field '{key}' must be a u64 string")),
+        v => {
+            let n = v
+                .as_f64()
+                .with_context(|| format!("field '{key}' must be an integer or string"))?;
+            if n < 0.0 || n.fract() != 0.0 {
+                anyhow::bail!("field '{key}' must be a non-negative integer");
+            }
+            Ok(n as u64)
+        }
+    }
+}
+
+/// Encode a u64 losslessly: as a JSON number while exactly representable
+/// in f64 (readability), as a decimal string beyond 2^53 (seeds must
+/// never be silently rounded).
+pub(crate) fn json_u64(x: u64) -> Json {
+    if x <= (1u64 << 53) {
+        Json::num(x as f64)
+    } else {
+        Json::str(x.to_string())
+    }
+}
+
+pub(crate) fn get_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    get(j, key)?
+        .as_arr()
+        .with_context(|| format!("field '{key}' must be an array"))
+}
+
+pub(crate) fn usize_arr(j: &Json, key: &str) -> Result<Vec<usize>> {
+    get_arr(j, key)?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .with_context(|| format!("'{key}' entries must be non-negative integers"))
+        })
+        .collect()
+}
+
+pub(crate) fn f64_arr(j: &Json, key: &str) -> Result<Vec<f64>> {
+    get_arr(j, key)?
+        .iter()
+        .map(|v| v.as_f64().with_context(|| format!("'{key}' entries must be numbers")))
+        .collect()
+}
+
+pub(crate) fn json_usizes(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+pub(crate) fn json_f64s(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x)).collect())
+}
+
+/// Packed cell bytes as a hex string (2 chars/cell) — the compact
+/// encoding for non-nominal tile grids (fault-injected artifacts).
+pub(crate) fn bytes_to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xF) as u32, 16).unwrap());
+    }
+    s
+}
+
+pub(crate) fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        bail!("hex cell string has odd length {}", s.len());
+    }
+    s.as_bytes()
+        .chunks(2)
+        .map(|pair| {
+            let hi = (pair[0] as char)
+                .to_digit(16)
+                .with_context(|| format!("invalid hex digit '{}'", pair[0] as char))?;
+            let lo = (pair[1] as char)
+                .to_digit(16)
+                .with_context(|| format!("invalid hex digit '{}'", pair[1] as char))?;
+            Ok(((hi << 4) | lo) as u8)
+        })
+        .collect()
+}
+
+/// NaN-safe threshold encoding: unbounded rule thresholds become `null`
+/// (JSON has no NaN literal).
+fn json_th(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn th_from(j: &Json) -> Result<f64> {
+    match j {
+        Json::Null => Ok(f64::NAN),
+        Json::Num(n) => Ok(*n),
+        _ => bail!("rule threshold must be a number or null"),
+    }
+}
+
+// -------------------------------------------------------------- rules/LUT
+
+fn comparator_name(c: Comparator) -> &'static str {
+    match c {
+        Comparator::Le => "le",
+        Comparator::Gt => "gt",
+        Comparator::InBetween => "between",
+        Comparator::None => "none",
+    }
+}
+
+fn comparator_parse(s: &str) -> Result<Comparator> {
+    Ok(match s {
+        "le" => Comparator::Le,
+        "gt" => Comparator::Gt,
+        "between" => Comparator::InBetween,
+        "none" => Comparator::None,
+        other => bail!("unknown comparator '{other}' (expected le|gt|between|none)"),
+    })
+}
+
+fn rule_to_json(r: &Rule) -> Json {
+    Json::Arr(vec![
+        Json::str(comparator_name(r.comparator)),
+        json_th(r.th1),
+        json_th(r.th2),
+    ])
+}
+
+fn rule_from_json(j: &Json) -> Result<Rule> {
+    let a = j.as_arr().context("rule must be a [comparator, th1, th2] array")?;
+    if a.len() != 3 {
+        bail!("rule must have exactly 3 entries, got {}", a.len());
+    }
+    Ok(Rule {
+        comparator: comparator_parse(a[0].as_str().context("rule comparator must be a string")?)?,
+        th1: th_from(&a[1])?,
+        th2: th_from(&a[2])?,
+    })
+}
+
+fn trits_to_row_string(ts: &[Trit]) -> String {
+    ts.iter().map(|t| t.to_char()).collect()
+}
+
+fn trit_from_char(c: char) -> Result<Trit> {
+    Ok(match c {
+        '0' => Trit::Zero,
+        '1' => Trit::One,
+        'x' | 'X' => Trit::X,
+        other => bail!("invalid trit character '{other}' (expected 0, 1 or x)"),
+    })
+}
+
+/// Encode a compiled LUT. Derived fields (`offsets`, `class_bits`) are
+/// not stored — they are rebuilt on load.
+pub fn lut_to_json(lut: &Lut) -> Json {
+    Json::obj(vec![
+        ("n_classes", Json::num(lut.n_classes as f64)),
+        ("classes", json_usizes(&lut.classes)),
+        (
+            "stored",
+            Json::Arr(
+                lut.stored
+                    .iter()
+                    .map(|row| Json::str(trits_to_row_string(row)))
+                    .collect(),
+            ),
+        ),
+        (
+            "encoders",
+            Json::Arr(
+                lut.encoders
+                    .iter()
+                    .map(|e| json_f64s(e.thresholds()))
+                    .collect(),
+            ),
+        ),
+        (
+            "reduced",
+            Json::Arr(
+                lut.reduced
+                    .iter()
+                    .map(|row| {
+                        Json::obj(vec![
+                            ("class", Json::num(row.class as f64)),
+                            (
+                                "rules",
+                                Json::Arr(row.rules.iter().map(rule_to_json).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Decode a compiled LUT, revalidating every structural invariant.
+pub fn lut_from_json(j: &Json) -> Result<Lut> {
+    let n_classes = get_usize(j, "n_classes")?;
+    if n_classes == 0 {
+        bail!("n_classes must be >= 1");
+    }
+    let classes = usize_arr(j, "classes")?;
+    if let Some(&bad) = classes.iter().find(|&&c| c >= n_classes) {
+        bail!("class {bad} out of range (n_classes {n_classes})");
+    }
+
+    let encoders: Vec<FeatureEncoder> = get_arr(j, "encoders")?
+        .iter()
+        .map(|e| {
+            let ths: Result<Vec<f64>> = e
+                .as_arr()
+                .context("encoder must be a threshold array")?
+                .iter()
+                .map(|v| v.as_f64().context("threshold must be a number"))
+                .collect();
+            Ok(FeatureEncoder::from_thresholds(ths?))
+        })
+        .collect::<Result<_>>()?;
+    let mut offsets = Vec::with_capacity(encoders.len());
+    let mut width = 0usize;
+    for e in &encoders {
+        offsets.push(width);
+        width += e.n_bits();
+    }
+
+    let stored: Vec<Vec<Trit>> = get_arr(j, "stored")?
+        .iter()
+        .map(|row| {
+            let s = row.as_str().context("stored row must be a trit string")?;
+            let trits: Result<Vec<Trit>> = s.chars().map(trit_from_char).collect();
+            let trits = trits?;
+            if trits.len() != width {
+                bail!("stored row width {} != encoder width {width}", trits.len());
+            }
+            Ok(trits)
+        })
+        .collect::<Result<_>>()?;
+    if stored.len() != classes.len() {
+        bail!(
+            "{} stored rows but {} classes",
+            stored.len(),
+            classes.len()
+        );
+    }
+
+    let reduced: Vec<ReducedRow> = get_arr(j, "reduced")?
+        .iter()
+        .map(|row| {
+            let rules: Result<Vec<Rule>> =
+                get_arr(row, "rules")?.iter().map(rule_from_json).collect();
+            Ok(ReducedRow {
+                rules: rules?,
+                class: get_usize(row, "class")?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    if !reduced.is_empty() && reduced.len() != stored.len() {
+        bail!("reduced table rows {} != stored rows {}", reduced.len(), stored.len());
+    }
+
+    let cw = ceil_log2(n_classes);
+    let class_bits = classes
+        .iter()
+        .map(|&c| (0..cw).map(|b| (c >> (cw - 1 - b)) & 1 == 1).collect())
+        .collect();
+
+    Ok(Lut {
+        stored,
+        classes,
+        class_bits,
+        encoders,
+        offsets,
+        n_classes,
+        reduced,
+    })
+}
+
+// ----------------------------------------------------------- DeviceParams
+
+/// Encode the full device-parameter set (Table III + calibrated
+/// constants) so a saved program pins its physics.
+pub fn params_to_json(p: &DeviceParams) -> Json {
+    Json::obj(vec![
+        ("r_lrs", Json::num(p.r_lrs)),
+        ("r_hrs", Json::num(p.r_hrs)),
+        ("r_on", Json::num(p.r_on)),
+        ("r_off", Json::num(p.r_off)),
+        ("c_in", Json::num(p.c_in)),
+        ("vdd", Json::num(p.vdd)),
+        ("tau_pchg", Json::num(p.tau_pchg)),
+        ("t_sa", Json::num(p.t_sa)),
+        ("t_mem", Json::num(p.t_mem)),
+        ("e_sa", Json::num(p.e_sa)),
+        ("e_mem", Json::num(p.e_mem)),
+        ("pipeline_ii_cycles", Json::num(p.pipeline_ii_cycles)),
+        ("a_2t2r", Json::num(p.a_2t2r)),
+        ("a_sa", Json::num(p.a_sa)),
+        ("a_dff", Json::num(p.a_dff)),
+        ("a_sp", Json::num(p.a_sp)),
+        ("a_1t1r", Json::num(p.a_1t1r)),
+        ("a_sa2", Json::num(p.a_sa2)),
+    ])
+}
+
+/// Decode device parameters: defaults + stored overrides, unknown keys
+/// rejected (typo safety, like `RunConfig`).
+pub fn params_from_json(j: &Json) -> Result<DeviceParams> {
+    let Json::Obj(fields) = j else {
+        bail!("params must be an object");
+    };
+    let mut p = DeviceParams::default();
+    for (k, v) in fields {
+        let n = v
+            .as_f64()
+            .with_context(|| format!("params field '{k}' must be a number"))?;
+        match k.as_str() {
+            "r_lrs" => p.r_lrs = n,
+            "r_hrs" => p.r_hrs = n,
+            "r_on" => p.r_on = n,
+            "r_off" => p.r_off = n,
+            "c_in" => p.c_in = n,
+            "vdd" => p.vdd = n,
+            "tau_pchg" => p.tau_pchg = n,
+            "t_sa" => p.t_sa = n,
+            "t_mem" => p.t_mem = n,
+            "e_sa" => p.e_sa = n,
+            "e_mem" => p.e_mem = n,
+            "pipeline_ii_cycles" => p.pipeline_ii_cycles = n,
+            "a_2t2r" => p.a_2t2r = n,
+            "a_sa" => p.a_sa = n,
+            "a_dff" => p.a_dff = n,
+            "a_sp" => p.a_sp = n,
+            "a_1t1r" => p.a_1t1r = n,
+            "a_sa2" => p.a_sa2 = n,
+            other => bail!("unknown params key '{other}'"),
+        }
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cart::{train, TrainParams};
+    use crate::compiler::compile;
+    use crate::dataset::iris;
+
+    fn iris_lut() -> Lut {
+        let d = iris::load();
+        compile(&train(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &TrainParams::default(),
+        ))
+    }
+
+    #[test]
+    fn lut_roundtrips_through_json() {
+        let lut = iris_lut();
+        let text = lut_to_json(&lut).to_string_pretty();
+        let back = lut_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.stored, lut.stored);
+        assert_eq!(back.classes, lut.classes);
+        assert_eq!(back.class_bits, lut.class_bits);
+        assert_eq!(back.offsets, lut.offsets);
+        assert_eq!(back.n_classes, lut.n_classes);
+        assert_eq!(back.encoders, lut.encoders);
+        // NaN-aware compare (unbounded rule thresholds are NaN, and
+        // NaN != NaN under derived PartialEq).
+        assert_eq!(back.reduced.len(), lut.reduced.len());
+        for (a, b) in back.reduced.iter().zip(&lut.reduced) {
+            assert_eq!(a.class, b.class);
+            for (ra, rb) in a.rules.iter().zip(&b.rules) {
+                assert_eq!(ra.comparator, rb.comparator);
+                assert!(ra.th1 == rb.th1 || (ra.th1.is_nan() && rb.th1.is_nan()));
+                assert!(ra.th2 == rb.th2 || (ra.th2.is_nan() && rb.th2.is_nan()));
+            }
+        }
+        // Behavioral equivalence on real inputs.
+        let d = iris::load();
+        for x in d.features.iter().take(20) {
+            assert_eq!(back.classify(x), lut.classify(x));
+        }
+    }
+
+    #[test]
+    fn lut_load_rejects_bad_width() {
+        let lut = iris_lut();
+        let mut j = lut_to_json(&lut);
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "stored" {
+                    *v = Json::Arr(vec![Json::str("01")]);
+                }
+            }
+        }
+        assert!(lut_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn lut_load_rejects_out_of_range_class() {
+        let j = Json::parse(
+            r#"{"n_classes": 2, "classes": [5], "stored": ["1"],
+                "encoders": [[]], "reduced": []}"#,
+        )
+        .unwrap();
+        assert!(lut_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn params_roundtrip_and_reject_unknown() {
+        let p = DeviceParams {
+            r_lrs: 1.0e3,
+            vdd: 0.9,
+            ..DeviceParams::default()
+        };
+        let text = params_to_json(&p).to_string_compact();
+        let back = params_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.r_lrs, 1.0e3);
+        assert_eq!(back.vdd, 0.9);
+        assert_eq!(back.r_hrs, p.r_hrs);
+        assert!(params_from_json(&Json::parse(r#"{"r_lsr": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn u64_beyond_f64_precision_roundtrips_exactly() {
+        let big = (1u64 << 53) + 3; // not representable in f64
+        let j = Json::obj(vec![("seed", json_u64(big)), ("small", json_u64(42))]);
+        let text = j.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(get_u64(&back, "seed").unwrap(), big);
+        assert_eq!(get_u64(&back, "small").unwrap(), 42);
+    }
+
+    #[test]
+    fn nan_thresholds_roundtrip_as_null() {
+        let r = Rule::none();
+        let j = rule_to_json(&r);
+        let back = rule_from_json(&j).unwrap();
+        assert_eq!(back.comparator, Comparator::None);
+        assert!(back.th1.is_nan() && back.th2.is_nan());
+    }
+}

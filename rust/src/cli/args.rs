@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 12] = [
+const VALUE_KEYS: [&str; 16] = [
     "dataset",
     "tile-size",
     "seed",
@@ -28,6 +28,10 @@ const VALUE_KEYS: [&str; 12] = [
     "requests",
     "table",
     "fig",
+    "out-dir",
+    "save",
+    "program",
+    "artifacts-dir",
 ];
 
 impl Args {

@@ -1,11 +1,14 @@
-//! CLI subcommand implementations (thin drivers over the library).
+//! CLI subcommand implementations (thin drivers over the [`crate::api`]
+//! facade — no subcommand wires the pipeline by hand).
 
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::config::{EngineKind, RunConfig};
-use crate::coordinator::{Coordinator, InferenceRequest};
+use crate::api::registry::{self, BackendOptions};
+use crate::api::{Dt2Cam, MappedProgram};
+use crate::config::EngineKind;
+use crate::coordinator::InferenceRequest;
 use crate::nonideal::{inject_saf, perturb_vref, SafRates};
 use crate::report::figures::{self, NonidealGrid};
 use crate::report::tables;
@@ -22,22 +25,42 @@ fn dataset_arg(args: &mut Args) -> Result<String> {
         .context("--dataset is required (iris, diabetes, haberman, car, cancer, credit, titanic, covid)")
 }
 
+/// Parse `--engine` against the backend registry; unknown names error
+/// with the full list of valid names.
+fn engine_arg(args: &mut Args) -> Result<EngineKind> {
+    EngineKind::parse(&args.opt_str("engine").unwrap_or_else(|| "native".into()))
+}
+
+fn backend_opts(args: &mut Args) -> BackendOptions {
+    BackendOptions {
+        artifacts_dir: PathBuf::from(
+            args.opt_str("artifacts-dir")
+                .unwrap_or_else(|| "artifacts".into()),
+        ),
+        threads: 0,
+    }
+}
+
 /// `dt2cam compile`: train CART, run the DT-HW compiler, print the LUT
-/// geometry and (optionally) the mapping summary.
+/// geometry and the mapping summary; `--save` writes the mapped-program
+/// artifact so `serve` can run in a separate process.
 pub fn compile(args: &mut Args) -> Result<()> {
     let name = dataset_arg(args)?;
     let s = args.opt_usize("tile-size")?.unwrap_or(128);
+    let save = args.opt_str("save");
     args.finish()?;
 
-    let w = Workload::prepare(&name)?;
+    let model = Dt2Cam::dataset(&name)?;
+    let program = model.compile();
     let p = DeviceParams::default();
-    let m = w.map(s, &p);
+    let mapped = program.map(s, &p);
+    let m = &mapped.mapped;
     println!("dataset        : {name}");
-    println!("tree           : {} leaves, depth {}", w.tree.n_leaves(), w.tree.depth());
-    println!("golden accuracy: {:.4}", w.golden_accuracy());
+    println!("tree           : {} leaves, depth {}", model.tree.n_leaves(), model.tree.depth());
+    println!("golden accuracy: {:.4}", model.golden_accuracy());
     println!("LUT            : {} x {} trits (+{} class bits/row)",
-        w.lut.n_rows(), w.lut.width(), w.lut.class_width());
-    println!("n_total (Eqn 2): {}", w.lut.n_total());
+        program.lut.n_rows(), program.lut.width(), program.lut.class_width());
+    println!("n_total (Eqn 2): {}", program.lut.n_total());
     println!(
         "tiles @S={s}   : {} x {} = {} tiles ({} padded rows, {} padded cols)",
         m.n_rwd, m.n_cwd, m.n_tiles(), m.padded_rows, m.padded_width
@@ -45,8 +68,17 @@ pub fn compile(args: &mut Args) -> Result<()> {
     let (mm2, per_bit) = tables::area_for(m.n_tiles(), s, m.n_classes, &p);
     println!("area (Eqn 11)  : {mm2:.4} mm^2  ({per_bit:.4} um^2/bit)");
     // First rows rendered like Fig 2.
-    for r in 0..w.lut.n_rows().min(4) {
-        println!("  row {r}: {}  -> class {}", w.lut.row_to_string(r), w.lut.classes[r]);
+    for r in 0..program.lut.n_rows().min(4) {
+        println!(
+            "  row {r}: {}  -> class {}",
+            program.lut.row_to_string(r),
+            program.lut.classes[r]
+        );
+    }
+    if let Some(path) = save {
+        let path = PathBuf::from(path);
+        mapped.save(&path)?;
+        eprintln!("wrote mapped-program artifact {}", path.display());
     }
     Ok(())
 }
@@ -63,14 +95,15 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
     let no_sp = args.flag("no-sp");
     args.finish()?;
 
-    let w = Workload::prepare(&name)?;
+    let model = Dt2Cam::dataset(&name)?;
+    let program = model.compile();
     let p = DeviceParams::default();
     let mut rng = Prng::new(seed);
-    let mut m = w.map(s, &p);
+    let mut m = program.map(s, &p).mapped;
     inject_saf(&mut m, &SafRates::both(saf), &mut rng.fork(1));
     let vref = perturb_vref(&m.vref, sigma_sa, &mut rng.fork(2));
     let mut noise_rng = rng.fork(3);
-    let inputs: Vec<Vec<f64>> = w
+    let inputs: Vec<Vec<f64>> = model
         .test_x
         .iter()
         .map(|row| {
@@ -82,10 +115,10 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
 
     let r = simulate(
         &m,
-        &w.lut,
+        &program.lut,
         &inputs,
-        &w.test_y,
-        &w.golden,
+        &model.test_y,
+        &model.golden,
         &vref,
         &p,
         &SimOptions {
@@ -94,10 +127,13 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
             max_inputs,
         },
     );
-    println!("dataset={name} S={s} tiles={} (SA'b'={saf}%, sigma_sa={sigma_sa} V, sigma_in={sigma_in})", r.n_tiles);
+    println!(
+        "dataset={name} S={s} tiles={} (SA'b'={saf}%, sigma_sa={sigma_sa} V, sigma_in={sigma_in})",
+        r.n_tiles
+    );
     println!("inputs            : {}", r.n_inputs);
     println!("accuracy          : {:.4} (golden {:.4}, agreement {:.4})",
-        r.accuracy, w.golden_accuracy(), r.golden_agreement);
+        r.accuracy, model.golden_accuracy(), r.golden_agreement);
     println!("energy/dec        : {}", eng(r.energy_per_dec, "J"));
     println!("rows/dec          : {:.1}", r.rows_per_dec);
     println!("latency           : {}", eng(r.timing.latency, "s"));
@@ -109,91 +145,136 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
 }
 
 /// `dt2cam serve`: run the coordinator over the test split as a request
-/// stream and report modeled + wall-clock serving metrics.
+/// stream and report modeled + wall-clock serving metrics. With
+/// `--program` the mapped-program artifact saved by `compile --save` is
+/// loaded instead of retraining (the two-process flow).
 pub fn serve(args: &mut Args) -> Result<()> {
-    let name = dataset_arg(args)?;
-    let s = args.opt_usize("tile-size")?.unwrap_or(128);
+    let tile_size_arg = args.opt_usize("tile-size")?;
     let batch = args.opt_usize("batch")?.unwrap_or(32);
-    let engine = EngineKind::parse(&args.opt_str("engine").unwrap_or_else(|| "native".into()))?;
+    let engine = engine_arg(args)?;
+    let opts = backend_opts(args);
     let requests = args.opt_usize("requests")?.unwrap_or(0);
     let pipelined = args.flag("pipelined");
-    args.finish()?;
+    let program_path = args.opt_str("program");
 
-    let w = Workload::prepare(&name)?;
-    let p = DeviceParams::default();
-    let m = w.map(s, &p);
-    let cfg = RunConfig {
-        dataset: name.clone(),
-        tile_size: s,
-        batch,
-        engine,
-        ..RunConfig::default()
+    // Stage artifacts: load from disk (two-process flow) or build fresh.
+    let (mapped, test_x, test_y, golden, name) = if let Some(path) = program_path {
+        // The artifact pins dataset and tile size; conflicting flags are
+        // errors, not silent overrides.
+        if let Some(d) = args.opt_str("dataset") {
+            anyhow::bail!(
+                "--dataset {d} conflicts with --program (the artifact pins its dataset)"
+            );
+        }
+        args.finish()?;
+        let mp = MappedProgram::load(&PathBuf::from(&path))?;
+        if let Some(ts) = tile_size_arg {
+            if ts != mp.tile_size() {
+                anyhow::bail!(
+                    "--tile-size {ts} conflicts with --program (artifact was mapped at S={})",
+                    mp.tile_size()
+                );
+            }
+        }
+        let (tx, ty) = mp.program.test_split()?;
+        let golden = mp.program.golden.clone();
+        let name = mp.program.dataset.clone();
+        eprintln!(
+            "loaded program artifact {path}: dataset {name}, S={}, LUT {}x{}",
+            mp.tile_size(),
+            mp.program.lut.n_rows(),
+            mp.program.lut.width()
+        );
+        (mp, tx, ty, golden, name)
+    } else {
+        let name = dataset_arg(args)?;
+        args.finish()?;
+        let model = Dt2Cam::dataset(&name)?;
+        let program = model.compile();
+        let mp = program.map(tile_size_arg.unwrap_or(128), &DeviceParams::default());
+        (mp, model.test_x, model.test_y, model.golden, name)
     };
-    let vref = m.vref.clone();
+    let s = mapped.tile_size();
 
     let n = if requests > 0 {
-        requests.min(w.test_x.len())
+        requests.min(test_x.len())
     } else {
-        w.test_x.len()
+        test_x.len()
     };
+    let golden_acc = golden
+        .iter()
+        .zip(&test_y)
+        .filter(|(g, y)| g == y)
+        .count() as f64
+        / test_y.len().max(1) as f64;
 
     if pipelined {
         use crate::coordinator::pipeline::run_pipeline;
         use std::sync::Arc;
-        let plan = Arc::new(crate::coordinator::ServingPlan::build(&m, &vref, &p));
-        let batches: Vec<(Vec<Vec<bool>>, usize)> = w.test_x[..n]
+        let backend = registry::create_pipeline_backend(engine, &opts)?;
+        let plan = Arc::new(mapped.plan());
+        let lut = &mapped.program.lut;
+        let m = &mapped.mapped;
+        let batches: Vec<(Vec<Vec<bool>>, usize)> = test_x[..n]
             .chunks(batch)
             .map(|chunk| {
                 let qs: Vec<Vec<bool>> = chunk
                     .iter()
-                    .map(|x| m.pad_query(&w.lut.encode_input(x)))
+                    .map(|x| m.pad_query(&lut.encode_input(x)))
                     .collect();
                 let real = qs.len();
                 (qs, real)
             })
             .collect();
         let t0 = std::time::Instant::now();
-        let out = run_pipeline(Arc::clone(&plan), batches, 2)?;
+        let out = run_pipeline(Arc::clone(&plan), backend, batches, 2)?;
         let wall = t0.elapsed().as_secs_f64();
-        let decided: usize = out.iter().map(|o| o.classes.iter().flatten().count()).collect::<Vec<_>>().len();
         let correct: usize = out
             .iter()
             .flat_map(|o| o.classes.iter())
-            .zip(&w.test_y[..n])
+            .zip(&test_y[..n])
             .filter(|(c, y)| **c == Some(**y))
             .count();
         println!("pipelined serve: {n} requests in {wall:.3}s ({:.0} dec/s wall)", n as f64 / wall);
         println!("accuracy {:.4} | modeled pipelined throughput {}",
             correct as f64 / n as f64, eng(plan.timing.throughput_pipe, "dec/s"));
-        let _ = decided;
         return Ok(());
     }
 
-    let mut coord = Coordinator::new(&cfg, w.lut.clone(), &m, &vref, p)?;
+    let mut session = mapped.session_with(engine, batch, &opts)?;
     let t0 = std::time::Instant::now();
     let mut responses = Vec::with_capacity(n);
-    for (i, x) in w.test_x[..n].iter().enumerate() {
-        coord.submit(InferenceRequest::new(i as u64, x.clone()));
-        responses.extend(coord.poll(false)?);
+    for (i, x) in test_x[..n].iter().enumerate() {
+        session.submit(InferenceRequest::new(i as u64, x.clone()));
+        responses.extend(session.poll(false)?);
     }
-    responses.extend(coord.poll(true)?);
+    responses.extend(session.poll(true)?);
     let wall = t0.elapsed().as_secs_f64();
-    coord.metrics.wall_total = wall;
+    session.metrics_mut().wall_total = wall;
 
     responses.sort_by_key(|r| r.id);
     let correct = responses
         .iter()
-        .zip(&w.test_y[..n])
+        .zip(&test_y[..n])
         .filter(|(r, y)| r.class == Some(**y))
         .count();
-    println!("engine={} dataset={name} S={s} batch={batch}", engine.name());
+    println!("engine={} dataset={name} S={s} batch={batch}", session.backend_name());
     println!("served {} requests in {wall:.3} s", responses.len());
-    println!("accuracy          : {:.4} (golden {:.4})", correct as f64 / n as f64, w.golden_accuracy());
-    println!("modeled energy/dec: {}", eng(coord.metrics.energy_per_dec(), "J"));
-    println!("modeled latency   : {}", eng(coord.plan().timing.latency, "s"));
-    println!("modeled seq t-put : {}", eng(coord.plan().timing.throughput_seq, "dec/s"));
-    println!("wall-clock t-put  : {:.0} dec/s", coord.metrics.wall_throughput());
-    println!("{}", coord.metrics.summary_line());
+    println!("accuracy          : {:.4} (golden {golden_acc:.4})", correct as f64 / n as f64);
+    println!("modeled energy/dec: {}", eng(session.metrics().energy_per_dec(), "J"));
+    println!("modeled latency   : {}", eng(session.plan().timing.latency, "s"));
+    println!("modeled seq t-put : {}", eng(session.plan().timing.throughput_seq, "dec/s"));
+    println!("wall-clock t-put  : {:.0} dec/s", session.metrics().wall_throughput());
+    println!("{}", session.metrics().summary_line());
+    Ok(())
+}
+
+/// `dt2cam backends`: list the registered match backends.
+pub fn backends(args: &mut Args) -> Result<()> {
+    args.finish()?;
+    for (name, summary) in registry::describe() {
+        println!("{name:<16} {summary}");
+    }
     Ok(())
 }
 
@@ -311,6 +392,10 @@ mod tests {
         a
     }
 
+    fn tmpfile(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dt2cam_cli_{name}_{}", std::process::id()))
+    }
+
     #[test]
     fn compile_command_runs() {
         compile(&mut args("compile --dataset iris --tile-size 16")).unwrap();
@@ -332,5 +417,61 @@ mod tests {
     #[test]
     fn missing_dataset_is_error() {
         assert!(compile(&mut args("compile")).is_err());
+    }
+
+    #[test]
+    fn backends_command_lists_registry() {
+        backends(&mut args("backends")).unwrap();
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_registry_names() {
+        let err = serve(&mut args("serve --dataset iris --engine warp")).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in registry::names() {
+            assert!(msg.contains(name), "missing '{name}' in: {msg}");
+        }
+    }
+
+    #[test]
+    fn serve_program_rejects_conflicting_flags() {
+        let path = tmpfile("conflict.json");
+        let _ = std::fs::remove_file(&path);
+        compile(&mut args(&format!(
+            "compile --dataset iris --tile-size 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        let err = serve(&mut args(&format!(
+            "serve --program {} --dataset covid",
+            path.display()
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("conflicts with --program"));
+        let err = serve(&mut args(&format!(
+            "serve --program {} --tile-size 128",
+            path.display()
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("S=16"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compile_save_then_serve_program_two_process() {
+        let path = tmpfile("program.json");
+        let _ = std::fs::remove_file(&path);
+        compile(&mut args(&format!(
+            "compile --dataset iris --tile-size 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert!(path.exists(), "compile --save must write the artifact");
+        serve(&mut args(&format!(
+            "serve --program {} --engine native --batch 8",
+            path.display()
+        )))
+        .unwrap();
+        let _ = std::fs::remove_file(&path);
     }
 }

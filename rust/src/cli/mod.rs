@@ -1,14 +1,19 @@
 //! Command-line interface (no `clap` offline — hand-rolled parser).
 //!
 //! ```text
-//! dt2cam compile  --dataset iris [--tile-size 128] [--seed N]
+//! dt2cam compile  --dataset iris [--tile-size 128] [--save prog.json]
 //! dt2cam simulate --dataset iris --tile-size 64 [--saf 0.5] [--sigma-sa 0.05]
 //!                 [--sigma-input 0.01] [--no-sp] [--max-inputs N]
-//! dt2cam serve    --dataset covid --tile-size 128 --engine pjrt|native
+//! dt2cam serve    --dataset covid --tile-size 128 --engine ENGINE
 //!                 [--batch 32] [--requests N] [--pipelined]
+//! dt2cam serve    --program prog.json --engine ENGINE   (two-process flow)
+//! dt2cam backends
 //! dt2cam report   --all | --table 2|4|5|6 | --fig 6|7|8|9  [--quick]
 //!                 [--out-dir reports]
 //! ```
+//!
+//! `ENGINE` is a backend-registry name: `native`, `threaded-native`, or
+//! `pjrt` (see `dt2cam backends`).
 
 pub mod args;
 pub mod commands;
@@ -25,6 +30,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "compile" => commands::compile(&mut args),
         "simulate" => commands::simulate_cmd(&mut args),
         "serve" => commands::serve(&mut args),
+        "backends" => commands::backends(&mut args),
         "report" => commands::report(&mut args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
@@ -38,11 +44,17 @@ pub const HELP: &str = "\
 dt2cam — Decision Tree to Content Addressable Memory framework
 
 USAGE:
-  dt2cam compile  --dataset NAME [--tile-size S]
+  dt2cam compile  --dataset NAME [--tile-size S] [--save PROGRAM.json]
   dt2cam simulate --dataset NAME --tile-size S [--saf PCT] [--sigma-sa V]
                   [--sigma-input SIG] [--no-sp] [--max-inputs N]
-  dt2cam serve    --dataset NAME --tile-size S [--engine pjrt|native]
+  dt2cam serve    --dataset NAME --tile-size S [--engine ENGINE]
                   [--batch B] [--requests N] [--pipelined]
+  dt2cam serve    --program PROGRAM.json [--engine ENGINE] [--batch B]
+  dt2cam backends
   dt2cam report   [--all] [--table N]... [--fig N]... [--quick] [--out-dir DIR]
   dt2cam help
+
+ENGINE: native | threaded-native | pjrt  (see `dt2cam backends`)
+`compile --save` + `serve --program` run the pipeline as two processes
+over a mapped-program JSON artifact (compile once, serve many).
 ";

@@ -12,28 +12,47 @@ use anyhow::{bail, Context, Result};
 
 use super::json::Json;
 
-/// Which execution engine evaluates tile matches on the request path.
+/// Which execution backend evaluates tile matches on the request path.
+/// The canonical name list; [`crate::api::registry`] maps each variant
+/// to a [`crate::api::MatchBackend`] constructor (exhaustively — adding
+/// a variant without registering it is a compile error there).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
-    /// AOT-compiled HLO artifacts executed through the PJRT CPU client.
-    Pjrt,
     /// Pure-Rust analog simulator (oracle / fallback).
     Native,
+    /// Analog simulator with static row-tile → worker affinity.
+    ThreadedNative,
+    /// AOT-compiled HLO artifacts executed through the PJRT CPU client.
+    Pjrt,
 }
 
 impl EngineKind {
+    /// Every registered backend, in presentation order.
+    pub const ALL: [EngineKind; 3] = [
+        EngineKind::Native,
+        EngineKind::ThreadedNative,
+        EngineKind::Pjrt,
+    ];
+
+    /// Parse an `--engine` name; the error lists every valid name.
     pub fn parse(s: &str) -> Result<EngineKind> {
-        match s {
-            "pjrt" => Ok(EngineKind::Pjrt),
-            "native" => Ok(EngineKind::Native),
-            other => bail!("unknown engine '{other}' (expected pjrt|native)"),
+        for kind in EngineKind::ALL {
+            if s == kind.name() {
+                return Ok(kind);
+            }
         }
+        let valid: Vec<&str> = EngineKind::ALL.iter().map(|k| k.name()).collect();
+        bail!(
+            "unknown engine '{s}' (valid engines: {})",
+            valid.join(", ")
+        )
     }
 
     pub fn name(&self) -> &'static str {
         match self {
-            EngineKind::Pjrt => "pjrt",
             EngineKind::Native => "native",
+            EngineKind::ThreadedNative => "threaded-native",
+            EngineKind::Pjrt => "pjrt",
         }
     }
 }
@@ -270,6 +289,18 @@ mod tests {
     fn parses_enums() {
         assert!(EngineKind::parse("bogus").is_err());
         assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
+        assert_eq!(
+            EngineKind::parse("threaded-native").unwrap(),
+            EngineKind::ThreadedNative
+        );
         assert_eq!(ScheduleMode::parse("pipe").unwrap(), ScheduleMode::Pipelined);
+    }
+
+    #[test]
+    fn engine_error_lists_all_valid_names() {
+        let msg = format!("{:#}", EngineKind::parse("gpu").unwrap_err());
+        for kind in EngineKind::ALL {
+            assert!(msg.contains(kind.name()), "missing '{}' in: {msg}", kind.name());
+        }
     }
 }

@@ -7,15 +7,15 @@
 //! hardware cost (nJ/dec, ns/dec from the synthesizer's device model) and
 //! the *wall-clock* cost of this software incarnation.
 //!
-//! Two engines drive tile matches:
-//! * `pjrt` — the AOT artifacts through [`crate::runtime::MatchEngine`]
-//!   (single executor thread; XLA's intra-op pool + stacked-division
-//!   artifacts provide parallelism);
-//! * `native` — [`crate::tcam::sim`] on the thread pool (row-wise tiles in
-//!   parallel, like the hardware's parallel row tiles).
+//! Tile matches are evaluated through the pluggable
+//! [`MatchBackend`](crate::api::MatchBackend) seam — `native`,
+//! `threaded-native`, and `pjrt` backends register in
+//! [`crate::api::registry`], and every layer here compiles only against
+//! `&dyn MatchBackend`.
 //!
 //! [`pipeline`] implements the paper's pipelined mode (Table VI "P" rows):
-//! one thread per column division connected by bounded channels.
+//! one thread per column division connected by bounded channels, over any
+//! `Send + Sync` backend.
 
 pub mod batcher;
 pub mod metrics;

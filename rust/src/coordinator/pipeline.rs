@@ -7,14 +7,20 @@
 //! 333 M dec/s at S=128); this module demonstrates the software analogue
 //! and measures its wall-clock scaling against the sequential walk.
 //!
-//! Native engine only: the PJRT client is single-threaded by construction
-//! (`Rc`), so the pipelined request path uses the f32 simulator — same
-//! numerics, same plan buffers.
+//! Stage evaluation goes through the shared [`MatchBackend`] seam — the
+//! same kernels as the sequential scheduler, so pipelined and sequential
+//! outcomes are identical by construction. Because stages run on their
+//! own threads the backend must be `Send + Sync` (`native` /
+//! `threaded-native`; the PJRT client is `Rc`-backed and cannot cross
+//! threads — [`crate::api::registry::create_pipeline_backend`] enforces
+//! this at the seam).
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+use crate::api::backend::{DivisionRequest, MatchBackend};
 
 use super::plan::ServingPlan;
 
@@ -28,6 +34,8 @@ struct PipeBatch {
     enabled: Vec<Vec<bool>>,
     /// Modeled active-row evaluations accumulated so far.
     active_rows: u64,
+    /// First stage error, if any (batch passes through untouched after).
+    error: Option<String>,
 }
 
 /// Result of one pipelined batch.
@@ -40,61 +48,50 @@ pub struct PipeOutcome {
     pub multi_match: usize,
 }
 
-/// Stage worker: evaluate one division for a batch. Density-adaptive like
-/// the sequential scheduler (§Perf): a vectorizable dense gather when most
-/// rows are still enabled (stage 0), scalar sparse evaluation afterwards.
-fn run_stage(plan: &ServingPlan, d: usize, batch: &mut PipeBatch) {
+/// Stage worker: evaluate one division for a batch through the backend,
+/// folding the matches into the selective-precharge masks.
+fn run_stage(
+    plan: &ServingPlan,
+    backend: &dyn MatchBackend,
+    d: usize,
+    batch: &mut PipeBatch,
+) -> Result<()> {
     let s = plan.s;
-    let div = &plan.divisions[d];
     let col0 = d * s;
-    let mut g_dense = vec![0.0f32; s];
-    for lane in 0..batch.queries.len() {
-        let active = batch.enabled[lane].iter().filter(|&&e| e).count();
-        if lane < batch.real_lanes {
-            batch.active_rows += active as u64;
-        }
-        let bits = &batch.queries[lane][col0..col0 + s];
-        let en = &mut batch.enabled[lane];
-        let dense = active * 8 >= plan.padded_rows;
-        for rt in 0..plan.n_rwd {
-            let w_tile = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
-            let gthresh_tile = &div.gthresh[rt * s..(rt + 1) * s];
-            if dense {
-                g_dense.iter_mut().for_each(|x| *x = 0.0);
-                for (j, &b) in bits.iter().enumerate() {
-                    let row_w = &w_tile
-                        [(2 * j + usize::from(b)) * s..(2 * j + usize::from(b) + 1) * s];
-                    for (acc, &wv) in g_dense.iter_mut().zip(row_w) {
-                        *acc += wv;
-                    }
-                }
-                for r in 0..s {
-                    let idx = rt * s + r;
-                    // Log-domain SA compare (§Perf): no exp per row.
-                    en[idx] = en[idx] && g_dense[r] < gthresh_tile[r];
-                }
-            } else {
-                // Selective precharge: only still-enabled rows evaluate.
-                for r in 0..s {
-                    let idx = rt * s + r;
-                    if !en[idx] {
-                        continue;
-                    }
-                    let mut g = 0.0f32;
-                    for (j, &b) in bits.iter().enumerate() {
-                        g += w_tile[(2 * j + usize::from(b)) * s + r];
-                    }
-                    en[idx] = g < gthresh_tile[r];
-                }
+    // Modeled energy: active rows of real lanes pay this division.
+    for lane_enabled in batch.enabled.iter().take(batch.real_lanes) {
+        batch.active_rows += lane_enabled.iter().filter(|&&e| e).count() as u64;
+    }
+    let lane_bits: Vec<&[bool]> = batch
+        .queries
+        .iter()
+        .map(|q| &q[col0..col0 + s])
+        .collect();
+    let req = DivisionRequest {
+        division: d,
+        lane_bits: &lane_bits,
+        enabled: &batch.enabled,
+    };
+    let matches = backend.match_division(plan, &req)?;
+    drop(lane_bits);
+    for (rt, tile_matches) in matches.iter().enumerate() {
+        for (lane, en) in batch.enabled.iter_mut().enumerate() {
+            let base = rt * s;
+            let lane_m = &tile_matches[lane * s..(lane + 1) * s];
+            for r in 0..s {
+                let idx = base + r;
+                en[idx] = en[idx] && lane_m[r];
             }
         }
     }
+    Ok(())
 }
 
 /// Run a stream of batches through the division pipeline. Returns
 /// outcomes in stream order.
 pub fn run_pipeline(
     plan: Arc<ServingPlan>,
+    backend: Arc<dyn MatchBackend + Send + Sync>,
     batches: Vec<(Vec<Vec<bool>>, usize)>,
     channel_depth: usize,
 ) -> Result<Vec<PipeOutcome>> {
@@ -110,10 +107,15 @@ pub fn run_pipeline(
     for d in 0..n_stages {
         let (tx_next, rx_next) = sync_channel::<PipeBatch>(channel_depth.max(1));
         let plan = Arc::clone(&plan);
+        let backend = Arc::clone(&backend);
         let rx = prev_rx;
         handles.push(std::thread::spawn(move || {
             for mut batch in rx {
-                run_stage(&plan, d, &mut batch);
+                if batch.error.is_none() {
+                    if let Err(e) = run_stage(&plan, backend.as_ref(), d, &mut batch) {
+                        batch.error = Some(format!("{e:#}"));
+                    }
+                }
                 if tx_next.send(batch).is_err() {
                     return;
                 }
@@ -141,6 +143,7 @@ pub fn run_pipeline(
                     queries,
                     real_lanes,
                     active_rows: 0,
+                    error: None,
                 };
                 if tx0.send(batch).is_err() {
                     return;
@@ -151,7 +154,11 @@ pub fn run_pipeline(
 
     // Collector (this thread).
     let mut outcomes = Vec::with_capacity(n_batches);
+    let mut first_error: Option<String> = None;
     for mut batch in prev_rx {
+        if let Some(e) = batch.error.take() {
+            first_error.get_or_insert(e);
+        }
         let mut classes = Vec::with_capacity(batch.queries.len());
         let mut no_match = 0;
         let mut multi_match = 0;
@@ -185,9 +192,28 @@ pub fn run_pipeline(
             break;
         }
     }
-    feeder.join().ok();
+    // A panicking stage (e.g. malformed query width) drops its batch and
+    // closes the downstream channel — joins must surface that instead of
+    // returning Ok with silently truncated outcomes.
+    if feeder.join().is_err() {
+        bail!("pipeline feeder thread panicked");
+    }
+    let mut panicked = false;
     for h in handles {
-        h.join().ok();
+        panicked |= h.join().is_err();
+    }
+    if panicked {
+        bail!("pipeline stage thread panicked (malformed batch input?)");
+    }
+    if let Some(e) = first_error {
+        bail!("pipeline stage failed: {e}");
+    }
+    if outcomes.len() != n_batches {
+        bail!(
+            "pipeline produced {} of {} batch outcomes",
+            outcomes.len(),
+            n_batches
+        );
     }
     outcomes.sort_by_key(|o| o.seq);
     Ok(outcomes)
@@ -196,9 +222,10 @@ pub fn run_pipeline(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{NativeBackend, ThreadedNativeBackend};
     use crate::cart::{train, TrainParams};
     use crate::compiler::compile;
-    use crate::coordinator::scheduler::{EngineRef, Scheduler};
+    use crate::coordinator::scheduler::Scheduler;
     use crate::dataset::catalog;
     use crate::synth::mapping::MappedArray;
     use crate::tcam::params::DeviceParams;
@@ -228,13 +255,19 @@ mod tests {
             })
             .collect();
 
-        let piped = run_pipeline(Arc::clone(&plan), batches.clone(), 2).unwrap();
+        for backend in [
+            Arc::new(NativeBackend::new()) as Arc<dyn MatchBackend + Send + Sync>,
+            Arc::new(ThreadedNativeBackend::new(3)),
+        ] {
+            let piped =
+                run_pipeline(Arc::clone(&plan), backend, batches.clone(), 2).unwrap();
 
-        let sched = Scheduler::new(&plan, &p);
-        for (i, (qs, real)) in batches.iter().enumerate() {
-            let seq = sched.run_batch(&EngineRef::Native, qs, *real).unwrap();
-            assert_eq!(piped[i].classes, seq.classes, "batch {i}");
-            assert_eq!(piped[i].active_row_evals, seq.active_row_evals);
+            let sched = Scheduler::new(&plan, &p);
+            for (i, (qs, real)) in batches.iter().enumerate() {
+                let seq = sched.run_batch(&NativeBackend::new(), qs, *real).unwrap();
+                assert_eq!(piped[i].classes, seq.classes, "batch {i}");
+                assert_eq!(piped[i].active_row_evals, seq.active_row_evals);
+            }
         }
     }
 
@@ -248,7 +281,7 @@ mod tests {
         let mut rng = Prng::new(3);
         let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
         let plan = Arc::new(ServingPlan::build(&m, &m.vref, &p));
-        let out = run_pipeline(plan, vec![], 1).unwrap();
+        let out = run_pipeline(plan, Arc::new(NativeBackend::new()), vec![], 1).unwrap();
         assert!(out.is_empty());
     }
 }

@@ -3,26 +3,16 @@
 //! Sequential column-wise walk with selective-precharge semantics: a
 //! per-lane enable bitmask over the padded rows is ANDed with each
 //! division's match results; rows disabled for a lane are not counted as
-//! active (energy) in later divisions. Row-wise tiles of a division run in
-//! parallel — on the thread pool (native engine) or inside one stacked
-//! PJRT call (pjrt engine).
+//! active (energy) in later divisions. Division evaluation is delegated
+//! to a pluggable [`MatchBackend`] (native simulator, threaded-native,
+//! or PJRT artifacts — see [`crate::api::registry`]); the scheduler owns
+//! what the backends must not: mask folding, energy accounting, and the
+//! survivor → class priority encoding.
 
-use anyhow::Context;
-
-use crate::runtime::MatchEngine;
+use crate::api::backend::{DivisionRequest, MatchBackend};
 use crate::tcam::params::DeviceParams;
-use crate::util::threadpool::parallel_map;
 
 use super::plan::ServingPlan;
-
-/// Engine selection for the scheduler (borrowed per call-site).
-pub enum EngineRef<'a> {
-    /// Native f32 simulator; row tiles fan out over scoped threads.
-    Native,
-    /// PJRT artifacts (single-threaded engine; XLA's intra-op pool and
-    /// the stacked-division artifacts provide the tile parallelism).
-    Pjrt(&'a MatchEngine),
-}
 
 /// Result of scheduling one batch.
 #[derive(Clone, Debug)]
@@ -43,71 +33,6 @@ pub struct Scheduler<'a> {
     pub params: &'a DeviceParams,
 }
 
-/// Match one row tile against a batch, directly from the plan's W layout.
-/// Writes `[lane][local_row]` booleans into `out`.
-///
-/// Two code paths, chosen by activity density (§Perf):
-/// * **dense** — the full vectorizable gather-matmul over all S rows per
-///   lane (first column division, where every row is still enabled);
-/// * **sparse** — per-(lane, enabled-row) scalar evaluation, skipping the
-///   rows selective precharge already disabled. In later divisions only a
-///   handful of rows per lane survive, so this is orders of magnitude
-///   less work (exactly the hardware's SP energy saving, mirrored in
-///   software time).
-fn tile_match_from_w(
-    w_tile: &[f32],
-    gthresh_tile: &[f32],
-    s: usize,
-    lane_bits: &[&[bool]],
-    // Enable mask per lane for this tile's rows (`[lane][local_row]`),
-    // or None = all enabled.
-    enabled: Option<&[&[bool]]>,
-    out: &mut [bool],
-) {
-    debug_assert_eq!(out.len(), lane_bits.len() * s);
-    // Count active (lane, row) pairs to pick the path.
-    let active: usize = match enabled {
-        None => lane_bits.len() * s,
-        Some(en) => en.iter().map(|e| e.iter().filter(|&&x| x).count()).sum(),
-    };
-    let dense_cutoff = lane_bits.len() * s / 8;
-
-    if active >= dense_cutoff || enabled.is_none() {
-        // Dense: per lane, one gather-accumulate across all rows.
-        let mut g = vec![0.0f32; s];
-        for (lane, bits) in lane_bits.iter().enumerate() {
-            debug_assert_eq!(bits.len(), s);
-            g.iter_mut().for_each(|x| *x = 0.0);
-            for (j, &b) in bits.iter().enumerate() {
-                let row_w =
-                    &w_tile[(2 * j + usize::from(b)) * s..(2 * j + usize::from(b) + 1) * s];
-                for (acc, &wv) in g.iter_mut().zip(row_w) {
-                    *acc += wv;
-                }
-            }
-            for r in 0..s {
-                // Log-domain SA compare: no exp on the hot path.
-                out[lane * s + r] = g[r] < gthresh_tile[r];
-            }
-        }
-    } else {
-        // Sparse: touch only enabled (lane, row) pairs.
-        let en = enabled.expect("sparse path requires masks");
-        for (lane, bits) in lane_bits.iter().enumerate() {
-            for r in 0..s {
-                if !en[lane][r] {
-                    continue;
-                }
-                let mut g = 0.0f32;
-                for (j, &b) in bits.iter().enumerate() {
-                    g += w_tile[(2 * j + usize::from(b)) * s + r];
-                }
-                out[lane * s + r] = g < gthresh_tile[r];
-            }
-        }
-    }
-}
-
 impl<'a> Scheduler<'a> {
     pub fn new(plan: &'a ServingPlan, params: &'a DeviceParams) -> Scheduler<'a> {
         Scheduler { plan, params }
@@ -119,7 +44,7 @@ impl<'a> Scheduler<'a> {
     /// are gated like rogue rows).
     pub fn run_batch(
         &self,
-        engine: &EngineRef<'_>,
+        backend: &dyn MatchBackend,
         queries: &[Vec<bool>],
         real_lanes: usize,
     ) -> anyhow::Result<BatchOutcome> {
@@ -141,7 +66,7 @@ impl<'a> Scheduler<'a> {
             .collect();
         let mut energy_rows: u64 = 0;
 
-        for (d, div) in plan.divisions.iter().enumerate() {
+        for d in 0..plan.divisions.len() {
             // Modeled energy: active rows of real lanes pay this division.
             for lane_enabled in enabled.iter().take(real_lanes) {
                 energy_rows += lane_enabled.iter().filter(|&&e| e).count() as u64;
@@ -152,53 +77,13 @@ impl<'a> Scheduler<'a> {
             let lane_bits: Vec<&[bool]> =
                 queries.iter().map(|q| &q[col0..col0 + s]).collect();
 
-            // Evaluate all row tiles.
-            let matches: Vec<Vec<bool>> = match engine {
-                EngineRef::Native => {
-                    // [row_tile] -> [lane][local_row]; row-wise tiles in
-                    // parallel, like the hardware (Fig 4). After the first
-                    // division most rows are SP-disabled, so the per-tile
-                    // work collapses to the sparse path and thread fan-out
-                    // stops paying — stay serial once activity is low.
-                    let div_ref = &plan.divisions[d];
-                    let lane_bits_ref = &lane_bits;
-                    let enabled_ref = &enabled;
-                    let total_active: usize = enabled
-                        .iter()
-                        .map(|e| e.iter().filter(|&&x| x).count())
-                        .sum();
-                    let run_tile = move |rt: usize| -> Vec<bool> {
-                        let w_tile = &div_ref.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
-                        let gthresh_tile = &div_ref.gthresh[rt * s..(rt + 1) * s];
-                        let en_refs: Vec<&[bool]> = enabled_ref
-                            .iter()
-                            .map(|e| &e[rt * s..(rt + 1) * s])
-                            .collect();
-                        let mut out = vec![false; lane_bits_ref.len() * s];
-                        tile_match_from_w(
-                            w_tile,
-                            gthresh_tile,
-                            s,
-                            lane_bits_ref,
-                            Some(&en_refs),
-                            &mut out,
-                        );
-                        out
-                    };
-                    // Thread fan-out only pays past ~8 row tiles: scoped
-                    // spawn costs ~30-50 us/thread while a dense 128x128
-                    // tile match is ~100-200 us (§Perf measurement).
-                    if total_active >= lanes * s && plan.n_rwd >= 8 {
-                        let jobs: Vec<usize> = (0..plan.n_rwd).collect();
-                        parallel_map(jobs, run_tile)
-                    } else {
-                        (0..plan.n_rwd).map(run_tile).collect()
-                    }
-                }
-                EngineRef::Pjrt(eng) => {
-                    self.run_division_pjrt(eng, d, &lane_bits, lanes)?
-                }
+            // Evaluate all row tiles through the backend.
+            let req = DivisionRequest {
+                division: d,
+                lane_bits: &lane_bits,
+                enabled: &enabled,
             };
+            let matches = backend.match_division(plan, &req)?;
 
             // AND the results into the enable masks.
             for (rt, tile_matches) in matches.iter().enumerate() {
@@ -212,7 +97,6 @@ impl<'a> Scheduler<'a> {
                     }
                 }
             }
-            let _ = div;
         }
 
         // Survivors -> classes.
@@ -254,133 +138,17 @@ impl<'a> Scheduler<'a> {
             multi_match,
         })
     }
-
-    /// One column division through PJRT, chunking row tiles over the
-    /// available stacked-division artifacts (T ∈ {16, 8, 4, 2}) with the
-    /// plain tile artifact as the T=1 fallback. Lane counts that were
-    /// never lowered are padded up to the nearest available artifact
-    /// batch (padding lanes are all-zero one-hots: G = 0, discarded on
-    /// the way out).
-    fn run_division_pjrt(
-        &self,
-        eng: &MatchEngine,
-        d: usize,
-        lane_bits: &[&[bool]],
-        lanes: usize,
-    ) -> anyhow::Result<Vec<Vec<bool>>> {
-        let plan = self.plan;
-        let s = plan.s;
-        let div = &plan.divisions[d];
-
-        // Artifact batch width: smallest lowered batch >= lanes.
-        let pb = eng
-            .manifest()
-            .best_tile_batch(s, lanes)
-            .with_context(|| format!("no artifacts for tile size {s}"))?;
-        anyhow::ensure!(
-            pb >= lanes,
-            "batch {lanes} exceeds the largest lowered artifact batch {pb}              for S={s}; re-run `make artifacts` with a larger BATCH_SIZES"
-        );
-
-        // Build the Q buffer once per division: [pb, 2S] one-hot.
-        let mut q = vec![0.0f32; pb * 2 * s];
-        for (lane, bits) in lane_bits.iter().enumerate() {
-            let row = &mut q[lane * 2 * s..(lane + 1) * 2 * s];
-            for (j, &b) in bits.iter().enumerate() {
-                row[2 * j + usize::from(b)] = 1.0;
-            }
-        }
-
-        let mut out: Vec<Vec<bool>> = Vec::with_capacity(plan.n_rwd);
-        let mut rt = 0usize;
-        while rt < plan.n_rwd {
-            let remaining = plan.n_rwd - rt;
-            // Exact-fit stacked artifact, or — §Perf — the smallest
-            // *larger* stack padded with zero-conductance dummy tiles
-            // (one PJRT dispatch beats several small ones on CPU; dummy
-            // rows read all-match and are dropped below).
-            let exact = [16usize, 8, 4, 2]
-                .into_iter()
-                .find(|&t| t <= remaining && eng.manifest().division(s, pb, t).is_some());
-            let padded = [2usize, 4, 8, 16]
-                .into_iter()
-                .find(|&t| t >= remaining && eng.manifest().division(s, pb, t).is_some());
-            // Measured on this CPU (EXPERIMENTS.md §Perf): the stacked
-            // artifact's cost grows with T (interpret-mode pallas lowers
-            // to a per-tile loop), so exact chunks beat padding — padding
-            // is only the fallback when no exact stack exists.
-            let (chunk, real) = match (exact, padded) {
-                (Some(t), _) => (t, t),
-                (None, Some(t)) => (t, remaining.min(t)),
-                (None, None) => (1, 1),
-            };
-            // Device-resident constants: W / vref / toc never change
-            // between batches — upload once per (plan, division, range)
-            // and execute with buffers (§Perf: removes the dominant
-            // per-call host→device copy).
-            let bkey = |slot: u64| {
-                (plan.plan_id << 32)
-                    ^ ((d as u64) << 24)
-                    ^ ((rt as u64) << 8)
-                    ^ ((chunk as u64) << 2)
-                    ^ slot
-            };
-            use crate::runtime::ArtifactKind;
-            let toc_buf = eng.cached_buffer(bkey(2), &[div.toc], &[])?;
-            let res = if chunk == 1 {
-                let w = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
-                let vr = &div.vref[rt * s..(rt + 1) * s];
-                let w_buf = eng.cached_buffer(bkey(0), w, &[2 * s, s])?;
-                let v_buf = eng.cached_buffer(bkey(1), vr, &[s])?;
-                eng.match_cached(ArtifactKind::Tile, s, pb, 1, &q, &w_buf, &v_buf, &toc_buf)?
-            } else if real == chunk {
-                let w = &div.w[rt * 2 * s * s..(rt + chunk) * 2 * s * s];
-                let vr = &div.vref[rt * s..(rt + chunk) * s];
-                let w_buf = eng.cached_buffer(bkey(0), w, &[chunk, 2 * s, s])?;
-                let v_buf = eng.cached_buffer(bkey(1), vr, &[chunk, s])?;
-                eng.match_cached(
-                    ArtifactKind::Division, s, pb, chunk, &q, &w_buf, &v_buf, &toc_buf,
-                )?
-            } else {
-                // Pad the tail with zero-conductance tiles.
-                let mut w = vec![0.0f32; chunk * 2 * s * s];
-                w[..real * 2 * s * s]
-                    .copy_from_slice(&div.w[rt * 2 * s * s..(rt + real) * 2 * s * s]);
-                let mut vr = vec![0.5f32; chunk * s];
-                vr[..real * s].copy_from_slice(&div.vref[rt * s..(rt + real) * s]);
-                let w_buf = eng.cached_buffer(bkey(0), &w, &[chunk, 2 * s, s])?;
-                let v_buf = eng.cached_buffer(bkey(1), &vr, &[chunk, s])?;
-                eng.match_cached(
-                    ArtifactKind::Division, s, pb, chunk, &q, &w_buf, &v_buf, &toc_buf,
-                )?
-            };
-            // res.matched layout: [chunk, pb, s] -> per row tile, keeping
-            // only the real lanes and real tiles.
-            for t in 0..real {
-                let mut tile = vec![false; lanes * s];
-                for lane in 0..lanes {
-                    for r in 0..s {
-                        tile[lane * s + r] =
-                            res.matched[t * pb * s + lane * s + r] > 0.5;
-                    }
-                }
-                out.push(tile);
-            }
-            rt += real;
-        }
-        Ok(out)
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{NativeBackend, PjrtBackend, ThreadedNativeBackend};
     use crate::cart::{train, TrainParams};
     use crate::compiler::{compile, Lut};
     use crate::dataset::{catalog, Dataset};
     use crate::synth::mapping::MappedArray;
     use crate::util::prng::Prng;
-
 
     fn setup(name: &str, s: usize) -> (Dataset, Lut, MappedArray, DeviceParams) {
         let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
@@ -399,13 +167,13 @@ mod tests {
         let (d, lut, m, p) = setup("iris", 16);
         let plan = ServingPlan::build(&m, &m.vref, &p);
         let sched = Scheduler::new(&plan, &p);
-        let engine = EngineRef::Native;
+        let backend = NativeBackend::new();
 
         let queries: Vec<Vec<bool>> = d.features[..32]
             .iter()
             .map(|x| m.pad_query(&lut.encode_input(x)))
             .collect();
-        let out = sched.run_batch(&engine, &queries, 32).unwrap();
+        let out = sched.run_batch(&backend, &queries, 32).unwrap();
         assert_eq!(out.no_match, 0);
         assert_eq!(out.multi_match, 0);
         for (i, x) in d.features[..32].iter().enumerate() {
@@ -419,18 +187,18 @@ mod tests {
         let (d, lut, m, p) = setup("iris", 16);
         let plan = ServingPlan::build(&m, &m.vref, &p);
         let sched = Scheduler::new(&plan, &p);
-        let engine = EngineRef::Native;
+        let backend = NativeBackend::new();
 
         let mut queries: Vec<Vec<bool>> = d.features[..2]
             .iter()
             .map(|x| m.pad_query(&lut.encode_input(x)))
             .collect();
         queries.push(vec![false; m.padded_width]); // dead lane
-        let out_3 = sched.run_batch(&engine, &queries, 2).unwrap();
+        let out_3 = sched.run_batch(&backend, &queries, 2).unwrap();
         assert_eq!(out_3.classes[2], None);
 
         let out_2 = sched
-            .run_batch(&engine, &queries[..2].to_vec(), 2)
+            .run_batch(&backend, &queries[..2].to_vec(), 2)
             .unwrap();
         assert_eq!(out_3.modeled_energy, out_2.modeled_energy);
     }
@@ -443,16 +211,37 @@ mod tests {
         assert!(m.n_cwd > 1);
         let plan = ServingPlan::build(&m, &m.vref, &p);
         let sched = Scheduler::new(&plan, &p);
-        let engine = EngineRef::Native;
+        let backend = NativeBackend::new();
 
         let queries: Vec<Vec<bool>> = d.features[..16]
             .iter()
             .map(|x| m.pad_query(&lut.encode_input(x)))
             .collect();
-        let out = sched.run_batch(&engine, &queries, 16).unwrap();
+        let out = sched.run_batch(&backend, &queries, 16).unwrap();
         for (i, x) in d.features[..16].iter().enumerate() {
             assert_eq!(out.classes[i], lut.classify(x), "lane {i}");
         }
+    }
+
+    #[test]
+    fn threaded_native_scheduler_agrees_with_native() {
+        let (d, lut, m, p) = setup("haberman", 16);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+
+        let queries: Vec<Vec<bool>> = d.features[..24]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+        let native = sched
+            .run_batch(&NativeBackend::new(), &queries, 24)
+            .unwrap();
+        let threaded = sched
+            .run_batch(&ThreadedNativeBackend::new(4), &queries, 24)
+            .unwrap();
+        assert_eq!(native.classes, threaded.classes);
+        assert_eq!(native.modeled_energy, threaded.modeled_energy);
+        assert_eq!(native.active_row_evals, threaded.active_row_evals);
     }
 
     #[test]
@@ -462,7 +251,7 @@ mod tests {
             eprintln!("skipping: run `make artifacts`");
             return;
         }
-        let eng = MatchEngine::new(&dir).unwrap();
+        let pjrt = PjrtBackend::from_dir(&dir).unwrap();
         let (d, lut, m, p) = setup("haberman", 16);
         let plan = ServingPlan::build(&m, &m.vref, &p);
         let sched = Scheduler::new(&plan, &p);
@@ -472,12 +261,10 @@ mod tests {
             .map(|x| m.pad_query(&lut.encode_input(x)))
             .collect();
         let native = sched
-            .run_batch(&EngineRef::Native, &queries, 32)
+            .run_batch(&NativeBackend::new(), &queries, 32)
             .unwrap();
-        let pjrt = sched
-            .run_batch(&EngineRef::Pjrt(&eng), &queries, 32)
-            .unwrap();
-        assert_eq!(native.classes, pjrt.classes);
-        assert_eq!(native.modeled_energy, pjrt.modeled_energy);
+        let got = sched.run_batch(&pjrt, &queries, 32).unwrap();
+        assert_eq!(native.classes, got.classes);
+        assert_eq!(native.modeled_energy, got.modeled_energy);
     }
 }

@@ -1,21 +1,23 @@
 //! The coordinator: ties batcher + scheduler + metrics into a serving
-//! loop. This is the `dt2cam serve` engine and the heart of the
-//! `serve_e2e` example.
+//! loop over one pluggable [`MatchBackend`]. This is the `dt2cam serve`
+//! engine, the substance of [`crate::api::Session`], and the heart of
+//! the `serve_e2e` example.
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::api::backend::MatchBackend;
+use crate::api::registry::{self, BackendOptions};
 use crate::compiler::Lut;
-use crate::config::{EngineKind, RunConfig};
-use crate::runtime::MatchEngine;
+use crate::config::RunConfig;
 use crate::synth::mapping::MappedArray;
 use crate::tcam::params::DeviceParams;
 
 use super::batcher::{Batcher, InferenceRequest};
 use super::metrics::Metrics;
 use super::plan::ServingPlan;
-use super::scheduler::{EngineRef, Scheduler};
+use super::scheduler::Scheduler;
 
 /// One answered request.
 #[derive(Clone, Debug)]
@@ -27,23 +29,23 @@ pub struct InferenceResponse {
     pub modeled_latency: f64,
 }
 
-/// The serving coordinator. Owns the plan and (optionally) the PJRT
-/// engine; single-threaded facade (PJRT client is `!Send`), with row-tile
-/// parallelism inside the scheduler.
+/// The serving coordinator. Owns the plan and the match backend;
+/// single-threaded facade (the PJRT backend is `!Send`), with row-tile
+/// parallelism inside the backend.
 pub struct Coordinator {
     plan: ServingPlan,
     lut: Lut,
     padded_width: usize,
     params: DeviceParams,
-    engine_kind: EngineKind,
-    pjrt: Option<MatchEngine>,
+    backend: Box<dyn MatchBackend>,
     batcher: Batcher,
     pub metrics: Metrics,
 }
 
 impl Coordinator {
-    /// Build a coordinator from prepared pieces. For `EngineKind::Pjrt`
-    /// the artifact directory must contain a tile/division set matching
+    /// Build a coordinator from prepared pieces, constructing the backend
+    /// from the config's engine through the registry. For `pjrt` the
+    /// artifact directory must contain a tile/division set matching
     /// `cfg.tile_size` and `cfg.batch` (`make artifacts`).
     pub fn new(
         cfg: &RunConfig,
@@ -52,30 +54,43 @@ impl Coordinator {
         vref: &[f64],
         params: DeviceParams,
     ) -> Result<Coordinator> {
+        let backend = registry::create(cfg.engine, &BackendOptions::from_config(cfg))?;
+        Self::with_backend(backend, cfg.batch, lut, mapped, vref, params)
+    }
+
+    /// Build a coordinator over an already-constructed backend. The
+    /// backend is warmed against the plan geometry (fail fast).
+    pub fn with_backend(
+        backend: Box<dyn MatchBackend>,
+        batch: usize,
+        lut: Lut,
+        mapped: &MappedArray,
+        vref: &[f64],
+        params: DeviceParams,
+    ) -> Result<Coordinator> {
         let plan = ServingPlan::build(mapped, vref, &params);
-        let pjrt = match cfg.engine {
-            EngineKind::Pjrt => {
-                let eng = MatchEngine::new(std::path::Path::new(&cfg.artifacts_dir))?;
-                // Fail fast if the geometry was never lowered.
-                eng.warm_tile(cfg.tile_size, cfg.batch)?;
-                Some(eng)
-            }
-            EngineKind::Native => None,
-        };
+        // A backend reused across sessions (plan rebuilds after fault
+        // injection) must not alias stale per-plan caches.
+        backend.invalidate();
+        backend.warm(&plan, batch)?;
         Ok(Coordinator {
             plan,
             lut,
             padded_width: mapped.padded_width,
             params,
-            engine_kind: cfg.engine,
-            pjrt,
-            batcher: Batcher::new(cfg.batch, Duration::from_millis(2)),
+            backend,
+            batcher: Batcher::new(batch, Duration::from_millis(2)),
             metrics: Metrics::new(),
         })
     }
 
     pub fn plan(&self) -> &ServingPlan {
         &self.plan
+    }
+
+    /// Registry name of the backend driving this coordinator.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Enqueue one request.
@@ -114,12 +129,8 @@ impl Coordinator {
         }
 
         let sched = Scheduler::new(&self.plan, &self.params);
-        let engine = match (&self.engine_kind, &self.pjrt) {
-            (EngineKind::Pjrt, Some(eng)) => EngineRef::Pjrt(eng),
-            _ => EngineRef::Native,
-        };
         let t0 = Instant::now();
-        let out = sched.run_batch(&engine, &queries, real)?;
+        let out = sched.run_batch(self.backend.as_ref(), &queries, real)?;
         let wall = t0.elapsed();
         self.metrics.record_batch(
             real,
@@ -167,10 +178,15 @@ mod tests {
     use super::*;
     use crate::cart::{train, TrainParams};
     use crate::compiler::compile;
+    use crate::config::EngineKind;
     use crate::dataset::catalog;
     use crate::util::prng::Prng;
 
-    fn build(engine: EngineKind, dataset: &str, s: usize) -> (Coordinator, Vec<Vec<f64>>, Vec<usize>) {
+    fn build(
+        engine: EngineKind,
+        dataset: &str,
+        s: usize,
+    ) -> (Coordinator, Vec<Vec<f64>>, Vec<usize>) {
         let mut d = catalog::by_name(dataset, 0xD72CA0).unwrap();
         d.normalize();
         let mut rng = Prng::new(11);
@@ -196,11 +212,23 @@ mod tests {
     #[test]
     fn native_serving_classifies_whole_test_set() {
         let (mut coord, txs, _tys) = build(EngineKind::Native, "iris", 16);
+        assert_eq!(coord.backend_name(), "native");
         let got = coord.classify_all(&txs).unwrap();
         assert_eq!(got.len(), txs.len());
         assert!(got.iter().all(|c| c.is_some()));
         assert_eq!(coord.metrics.decisions, txs.len() as u64);
         assert!(coord.metrics.energy_per_dec() > 0.0);
+    }
+
+    #[test]
+    fn threaded_native_serving_agrees_with_native() {
+        let (mut native, txs, _) = build(EngineKind::Native, "haberman", 16);
+        let (mut threaded, txs2, _) = build(EngineKind::ThreadedNative, "haberman", 16);
+        assert_eq!(txs, txs2);
+        assert_eq!(threaded.backend_name(), "threaded-native");
+        let a = native.classify_all(&txs).unwrap();
+        let b = threaded.classify_all(&txs).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

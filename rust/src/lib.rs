@@ -21,11 +21,39 @@
 //! artifacts through the PJRT CPU client (`xla` crate) and the coordinator
 //! executes them directly.
 //!
+//! ## The typed pipeline facade
+//!
+//! The [`api`] module is the front door: the paper's strict pipeline as a
+//! typed object graph with owned, (de)serializable stage artifacts and
+//! pluggable execution backends —
+//!
+//! ```no_run
+//! use dt2cam::api::Dt2Cam;
+//! use dt2cam::config::EngineKind;
+//! use dt2cam::tcam::params::DeviceParams;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let model = Dt2Cam::dataset("iris")?;                // CART training
+//! let program = model.compile();                       // DT-HW compile
+//! let mapped = program.map(16, &DeviceParams::default()); // tile map
+//! mapped.save(std::path::Path::new("iris.program.json"))?; // ⇄ JSON
+//! let mut session = mapped.session(EngineKind::Native, 32)?;
+//! let classes = session.classify_all(&model.test_x)?;
+//! # let _ = classes; Ok(()) }
+//! ```
+//!
+//! Compile and serve can run as separate processes: `dt2cam compile
+//! --dataset iris --save p.json`, then `dt2cam serve --program p.json`.
+//! Execution substrates implement [`api::MatchBackend`] (`native`,
+//! `threaded-native`, `pjrt`); see `docs/API.md` for the stage and
+//! backend contracts.
+//!
 //! Entry points: the `dt2cam` binary (see [`cli`]), the examples under
 //! `examples/`, and the benches under `rust/benches/` (one per paper table
 //! and figure — see DESIGN.md §4 for the experiment index).
 
 pub mod acam;
+pub mod api;
 pub mod cart;
 pub mod cli;
 pub mod compiler;

@@ -1,18 +1,24 @@
-//! Shared experiment workload: dataset → split → tree → LUT, built once
-//! and reused by every table/figure generator.
+//! Shared experiment workload: the report harness's flat view over the
+//! [`crate::api`] pipeline stages (dataset → split → tree → LUT), built
+//! once and reused by every table/figure generator.
+//!
+//! All wiring lives in the facade ([`Dt2Cam::dataset`] →
+//! [`TrainedModel::compile`]); `Workload` only flattens the stage
+//! artifacts into the field layout the generators consume.
 
 use anyhow::Result;
 
-use crate::cart::{train, Tree, TrainParams};
-use crate::compiler::{compile, Lut};
-use crate::dataset::{catalog, Dataset, Split};
+use crate::api::{map_seed, Dt2Cam, TrainedModel};
+use crate::cart::Tree;
+use crate::compiler::Lut;
+use crate::dataset::{Dataset, Split};
 use crate::synth::mapping::MappedArray;
 use crate::tcam::params::DeviceParams;
 use crate::util::prng::Prng;
 
 /// Deterministic master seed for all paper-table regeneration runs
 /// (recorded in EXPERIMENTS.md).
-pub const EXPERIMENT_SEED: u64 = 0xD72CA0;
+pub use crate::api::EXPERIMENT_SEED;
 
 /// Input cap per simulation for the very large datasets (the paper uses
 /// the full 10% test split; we deterministically subsample the first K
@@ -31,35 +37,38 @@ pub struct Workload {
     pub test_y: Vec<usize>,
     /// Software-tree predictions on the test split (golden accuracy).
     pub golden: Vec<usize>,
+    /// Master seed the model was trained with (drives [`Workload::map`]).
+    pub seed: u64,
+}
+
+impl From<TrainedModel> for Workload {
+    /// Flatten the facade's stage artifacts into the report layout.
+    fn from(model: TrainedModel) -> Workload {
+        let lut = model.compile().lut;
+        Workload {
+            dataset: model.dataset,
+            split: model.split,
+            tree: model.tree,
+            lut,
+            test_x: model.test_x,
+            test_y: model.test_y,
+            golden: model.golden,
+            seed: model.seed,
+        }
+    }
 }
 
 impl Workload {
     /// Build the standard workload for a dataset (90/10 split, unpruned
-    /// CART — the paper's setup).
+    /// CART — the paper's setup) through the facade.
     pub fn prepare(name: &str) -> Result<Workload> {
-        let mut dataset = catalog::by_name(name, EXPERIMENT_SEED)?;
-        dataset.normalize();
-        let mut rng = Prng::new(EXPERIMENT_SEED ^ 0x5917);
-        let split = dataset.split(0.9, &mut rng);
-        let (xs, ys) = dataset.gather(&split.train);
-        let tree = train(&xs, &ys, dataset.n_classes, &TrainParams::default());
-        let lut = compile(&tree);
-        let (test_x, test_y) = dataset.gather(&split.test);
-        let golden = test_x.iter().map(|x| tree.predict(x)).collect();
-        Ok(Workload {
-            dataset,
-            split,
-            tree,
-            lut,
-            test_x,
-            test_y,
-            golden,
-        })
+        Ok(Workload::from(Dt2Cam::dataset(name)?))
     }
 
-    /// Map onto S×S tiles with the standard seed.
+    /// Map onto S×S tiles with the facade's per-(seed, S) mapping
+    /// convention (the workload's own master seed, not a global).
     pub fn map(&self, s: usize, p: &DeviceParams) -> MappedArray {
-        let mut rng = Prng::new(EXPERIMENT_SEED ^ (s as u64) << 8);
+        let mut rng = Prng::new(map_seed(self.seed, s));
         MappedArray::from_lut(&self.lut, s, p, &mut rng)
     }
 
@@ -105,5 +114,28 @@ mod tests {
         assert_eq!(a.split.test, b.split.test);
         assert_eq!(a.lut.n_rows(), b.lut.n_rows());
         assert_eq!(a.golden, b.golden);
+    }
+
+    #[test]
+    fn custom_seed_workload_maps_like_facade() {
+        let program = Dt2Cam::dataset_seeded("iris", 42).unwrap().compile();
+        let w = Workload::from(Dt2Cam::dataset_seeded("iris", 42).unwrap());
+        let p = DeviceParams::default();
+        assert_eq!(w.map(16, &p).cells, program.map(16, &p).mapped.cells);
+    }
+
+    #[test]
+    fn workload_map_matches_facade_mapping() {
+        // The report shim and the facade must produce bit-identical tile
+        // grids (same mapping-seed convention).
+        let model = Dt2Cam::dataset("iris").unwrap();
+        let program = model.compile();
+        let w = Workload::prepare("iris").unwrap();
+        let p = DeviceParams::default();
+        let a = w.map(16, &p);
+        let b = program.map(16, &p);
+        assert_eq!(a.cells, b.mapped.cells);
+        assert_eq!(a.classes, b.mapped.classes);
+        assert_eq!(a.vref, b.mapped.vref);
     }
 }

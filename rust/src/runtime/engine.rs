@@ -248,7 +248,7 @@ impl MatchEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tcam::params::DeviceParams;
+    use crate::testkit::fixtures::{random_queries, random_tile_problem, random_trit_cells};
     use crate::tcam::sim::{self, TileView};
     use crate::util::prng::Prng;
     use std::path::PathBuf;
@@ -262,35 +262,15 @@ mod tests {
         Some(MatchEngine::new(&dir).unwrap())
     }
 
-    /// Random (cells, queries) problem for geometry (s, b).
-    fn random_problem(
-        s: usize,
-        b: usize,
-        seed: u64,
-    ) -> (Vec<u8>, Vec<Vec<bool>>, Vec<f64>, f64, DeviceParams) {
-        use crate::compiler::Trit;
-        use crate::tcam::cell::Cell;
-        let p = DeviceParams::default();
-        let mut rng = Prng::new(seed);
-        let trits = [Trit::Zero, Trit::One, Trit::X];
-        let cells: Vec<u8> = (0..s * s)
-            .map(|_| Cell::from_trit(trits[rng.below(3)]).to_byte())
-            .collect();
-        let queries: Vec<Vec<bool>> = (0..b)
-            .map(|_| (0..s).map(|_| rng.chance(0.5)).collect())
-            .collect();
-        let vref = vec![p.v_ref(s); s];
-        let toc = p.t_opt(s) / p.c_in;
-        (cells, queries, vref, toc, p)
-    }
-
     #[test]
     fn pjrt_tile_matches_native_sim() {
         // THE cross-engine equivalence test: artifact == native simulator
         // bit-for-bit on match decisions, close on voltages.
         let Some(eng) = engine() else { return };
         for (s, b, seed) in [(16usize, 32usize, 1u64), (64, 32, 2), (128, 32, 3)] {
-            let (cells, queries, vref, toc, p) = random_problem(s, b, seed);
+            let prob = random_tile_problem(s, b, seed);
+            let (cells, queries, vref, toc, p) =
+                (prob.cells, prob.queries, prob.vref, prob.toc, prob.params);
             let view = TileView::dense(&cells, s, s, &vref, toc);
             let w = sim::conductance_matrix(&view, &p);
             let native = sim::match_batch_with_w(&view, &w, &queries, &p);
@@ -324,21 +304,10 @@ mod tests {
     fn pjrt_division_matches_stacked_tiles() {
         let Some(eng) = engine() else { return };
         let (s, b, t) = (16usize, 32usize, 4usize);
-        let p = DeviceParams::default();
+        let p = crate::tcam::params::DeviceParams::default();
         let mut rng = Prng::new(9);
-        use crate::compiler::Trit;
-        use crate::tcam::cell::Cell;
-        let trits = [Trit::Zero, Trit::One, Trit::X];
-        let tiles: Vec<Vec<u8>> = (0..t)
-            .map(|_| {
-                (0..s * s)
-                    .map(|_| Cell::from_trit(trits[rng.below(3)]).to_byte())
-                    .collect()
-            })
-            .collect();
-        let queries: Vec<Vec<bool>> = (0..b)
-            .map(|_| (0..s).map(|_| rng.chance(0.5)).collect())
-            .collect();
+        let tiles: Vec<Vec<u8>> = (0..t).map(|_| random_trit_cells(s * s, &mut rng)).collect();
+        let queries = random_queries(s, b, &mut rng);
         let vref = vec![p.v_ref(s); s];
         let toc = p.t_opt(s) / p.c_in;
 
@@ -375,7 +344,9 @@ mod tests {
     fn executable_cache_hits() {
         let Some(eng) = engine() else { return };
         eng.warm_tile(16, 1).unwrap();
-        let (cells, queries, vref, toc, p) = random_problem(16, 1, 5);
+        let prob = random_tile_problem(16, 1, 5);
+        let (cells, queries, vref, toc, p) =
+            (prob.cells, prob.queries, prob.vref, prob.toc, prob.params);
         let view = TileView::dense(&cells, 16, 16, &vref, toc);
         let w = sim::conductance_matrix(&view, &p);
         let q = sim::activation_row(&queries[0]);

@@ -1,0 +1,92 @@
+//! Shared deterministic test fixtures: random trit-cell tiles and query
+//! batches for backend-parity and engine-equivalence tests (previously
+//! duplicated inside `runtime::engine`'s test module).
+
+use crate::compiler::Trit;
+use crate::tcam::cell::Cell;
+use crate::tcam::params::DeviceParams;
+use crate::util::prng::Prng;
+
+/// A random (cells, queries) tile problem for geometry (s, b), with the
+/// nominal sensing configuration every engine test uses.
+pub struct RandomTileProblem {
+    /// Packed [`Cell`] bytes, `s × s` row-major.
+    pub cells: Vec<u8>,
+    /// `b` random query bit-vectors of length `s`.
+    pub queries: Vec<Vec<bool>>,
+    /// Nominal per-row reference voltages (`v_ref(s)` everywhere).
+    pub vref: Vec<f64>,
+    /// `T_opt / C_in` sensing scalar.
+    pub toc: f64,
+    pub params: DeviceParams,
+}
+
+/// `n` random ternary cells (uniform over {0, 1, x}), packed as bytes.
+pub fn random_trit_cells(n: usize, rng: &mut Prng) -> Vec<u8> {
+    let trits = [Trit::Zero, Trit::One, Trit::X];
+    (0..n)
+        .map(|_| Cell::from_trit(trits[rng.below(3)]).to_byte())
+        .collect()
+}
+
+/// `b` random query bit-vectors of length `s` (fair coin per bit).
+pub fn random_queries(s: usize, b: usize, rng: &mut Prng) -> Vec<Vec<bool>> {
+    (0..b)
+        .map(|_| (0..s).map(|_| rng.chance(0.5)).collect())
+        .collect()
+}
+
+/// Deterministic random tile problem for geometry (s, b) under `seed`.
+pub fn random_tile_problem(s: usize, b: usize, seed: u64) -> RandomTileProblem {
+    let params = DeviceParams::default();
+    let mut rng = Prng::new(seed);
+    let cells = random_trit_cells(s * s, &mut rng);
+    let queries = random_queries(s, b, &mut rng);
+    let vref = vec![params.v_ref(s); s];
+    let toc = params.t_opt(s) / params.c_in;
+    RandomTileProblem {
+        cells,
+        queries,
+        vref,
+        toc,
+        params,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problems_are_deterministic_per_seed() {
+        let a = random_tile_problem(16, 8, 42);
+        let b = random_tile_problem(16, 8, 42);
+        assert_eq!(a.cells, b.cells);
+        assert_eq!(a.queries, b.queries);
+        let c = random_tile_problem(16, 8, 43);
+        assert_ne!(
+            (a.cells, a.queries),
+            (c.cells, c.queries),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn problem_shapes_match_geometry() {
+        let p = random_tile_problem(32, 5, 1);
+        assert_eq!(p.cells.len(), 32 * 32);
+        assert_eq!(p.queries.len(), 5);
+        assert!(p.queries.iter().all(|q| q.len() == 32));
+        assert_eq!(p.vref.len(), 32);
+        assert!(p.toc > 0.0);
+    }
+
+    #[test]
+    fn cells_decode_to_valid_trit_cells() {
+        let mut rng = Prng::new(7);
+        for byte in random_trit_cells(64, &mut rng) {
+            let c = Cell::from_byte(byte);
+            assert!(!c.masked, "fixture cells are never masked");
+        }
+    }
+}

@@ -12,6 +12,8 @@
 //! });
 //! ```
 
+pub mod fixtures;
+
 use crate::util::prng::Prng;
 
 /// Value generator handed to each property case.

@@ -1,0 +1,203 @@
+//! Integration tests for the typed pipeline facade (`dt2cam::api`):
+//! backend parity across every registered `MatchBackend`, stage-artifact
+//! JSON round-trips, and the two-process compile → serve flow.
+
+use std::path::PathBuf;
+
+use dt2cam::api::registry::{self, BackendOptions};
+use dt2cam::api::{CompiledProgram, Dt2Cam, MappedProgram, MatchBackend};
+use dt2cam::config::{EngineKind, Json};
+use dt2cam::coordinator::Scheduler;
+use dt2cam::tcam::params::DeviceParams;
+
+fn tmpfile(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dt2cam_api_{name}_{}", std::process::id()))
+}
+
+/// Build every registered backend; the pjrt entry skips cleanly when
+/// `artifacts/manifest.json` is absent (offline checkout).
+fn all_backends() -> Vec<Box<dyn MatchBackend>> {
+    let opts = BackendOptions::default();
+    let mut backends = Vec::new();
+    for kind in EngineKind::ALL {
+        if kind == EngineKind::Pjrt && !opts.artifacts_dir.join("manifest.json").exists() {
+            eprintln!("skipping pjrt backend: run `make artifacts`");
+            continue;
+        }
+        backends.push(registry::create(kind, &opts).unwrap());
+    }
+    backends
+}
+
+#[test]
+fn every_registered_backend_produces_identical_decisions() {
+    // THE seam-proving test: one batch, every backend, identical match
+    // decisions and identical modeled energy accounting. haberman @16 is
+    // multi-division and multi-row-tile, so selective precharge, mask
+    // folding, and tile chunking are all exercised.
+    let model = Dt2Cam::dataset("haberman").unwrap();
+    let program = model.compile();
+    let p = DeviceParams::default();
+    let mapped = program.map(16, &p);
+    let plan = mapped.plan();
+    let sched = Scheduler::new(&plan, &p);
+
+    let take = model.test_x.len().min(32);
+    let queries: Vec<Vec<bool>> = model.test_x[..take]
+        .iter()
+        .map(|x| mapped.mapped.pad_query(&program.lut.encode_input(x)))
+        .collect();
+
+    let backends = all_backends();
+    assert!(backends.len() >= 2, "native + threaded-native always register");
+    let baseline = sched
+        .run_batch(backends[0].as_ref(), &queries, take)
+        .unwrap();
+    // Ideal hardware must match the software tree...
+    for i in 0..take {
+        assert_eq!(baseline.classes[i], Some(model.golden[i]), "lane {i}");
+    }
+    // ...and every other backend must match the baseline bit-for-bit.
+    for backend in &backends[1..] {
+        let out = sched.run_batch(backend.as_ref(), &queries, take).unwrap();
+        assert_eq!(out.classes, baseline.classes, "backend {}", backend.name());
+        assert_eq!(
+            out.active_row_evals,
+            baseline.active_row_evals,
+            "backend {}",
+            backend.name()
+        );
+        assert_eq!(
+            out.modeled_energy,
+            baseline.modeled_energy,
+            "backend {}",
+            backend.name()
+        );
+    }
+}
+
+#[test]
+fn compiled_program_roundtrips_through_file() {
+    let program = Dt2Cam::dataset("iris").unwrap().compile();
+    let path = tmpfile("compiled.json");
+    program.save(&path).unwrap();
+    let back = CompiledProgram::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(back.dataset, program.dataset);
+    assert_eq!(back.seed, program.seed);
+    assert_eq!(back.lut.stored, program.lut.stored);
+    assert_eq!(back.lut.classes, program.lut.classes);
+    assert_eq!(back.lut.encoders, program.lut.encoders);
+    assert_eq!(back.test_indices, program.test_indices);
+    assert_eq!(back.golden, program.golden);
+
+    // Behavioral equivalence: the reloaded program classifies like the
+    // original on the real test split.
+    let (test_x, _) = back.test_split().unwrap();
+    for x in test_x.iter().take(15) {
+        assert_eq!(back.classify(x), program.classify(x));
+    }
+}
+
+#[test]
+fn mapped_program_roundtrips_through_file() {
+    let program = Dt2Cam::dataset("haberman").unwrap().compile();
+    let p = DeviceParams::default();
+    let mut mapped = program.map(16, &p);
+    // Carry a vref perturbation through the artifact (variability
+    // workflows re-serve perturbed plans).
+    mapped.mapped.vref[7] += 0.011;
+
+    let path = tmpfile("mapped.json");
+    mapped.save(&path).unwrap();
+    let back = MappedProgram::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(back.tile_size(), 16);
+    assert_eq!(back.map_seed, mapped.map_seed);
+    assert_eq!(back.mapped.cells, mapped.mapped.cells);
+    assert_eq!(back.mapped.classes, mapped.mapped.classes);
+    assert_eq!(back.mapped.vref, mapped.mapped.vref);
+    assert_eq!(back.params.r_lrs, mapped.params.r_lrs);
+
+    // The rebuilt plan serves identically.
+    let sched_plan = back.plan();
+    let orig_plan = mapped.plan();
+    assert_eq!(sched_plan.n_rwd, orig_plan.n_rwd);
+    assert_eq!(sched_plan.n_cwd, orig_plan.n_cwd);
+    for (a, b) in sched_plan.divisions.iter().zip(&orig_plan.divisions) {
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.vref, b.vref);
+    }
+}
+
+#[test]
+fn two_process_compile_then_serve_via_artifact() {
+    // Process 1: compile + map + save.
+    let path = tmpfile("two_process.json");
+    {
+        let program = Dt2Cam::dataset("iris").unwrap().compile();
+        program.map(16, &DeviceParams::default()).save(&path).unwrap();
+    }
+
+    // Process 2: load the artifact cold (no TrainedModel in scope), build
+    // a session, and serve the test split re-derived from the artifact.
+    let mapped = MappedProgram::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let (test_x, _test_y) = mapped.program.test_split().unwrap();
+    let mut session = mapped.session(EngineKind::Native, 8).unwrap();
+    let classes = session.classify_all(&test_x).unwrap();
+    assert_eq!(classes.len(), mapped.program.golden.len());
+    for (c, g) in classes.iter().zip(&mapped.program.golden) {
+        assert_eq!(*c, Some(*g), "artifact-served class must match golden");
+    }
+    assert!(session.metrics().energy_per_dec() > 0.0);
+}
+
+#[test]
+fn sessions_agree_across_registered_engines() {
+    let model = Dt2Cam::dataset("iris").unwrap();
+    let mapped = model.compile().map(16, &DeviceParams::default());
+    let native = mapped
+        .session(EngineKind::Native, 8)
+        .unwrap()
+        .classify_all(&model.test_x)
+        .unwrap();
+    let threaded = mapped
+        .session(EngineKind::ThreadedNative, 8)
+        .unwrap()
+        .classify_all(&model.test_x)
+        .unwrap();
+    assert_eq!(native, threaded);
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let pjrt = mapped
+            .session(EngineKind::Pjrt, 8)
+            .unwrap()
+            .classify_all(&model.test_x)
+            .unwrap();
+        assert_eq!(native, pjrt);
+    }
+}
+
+#[test]
+fn corrupted_artifact_fails_loudly() {
+    let program = Dt2Cam::dataset("iris").unwrap().compile();
+    let mut j = program.map(16, &DeviceParams::default()).to_json();
+    // Flip the stored geometry: load must detect the mismatch.
+    if let Json::Obj(fields) = &mut j {
+        for (k, v) in fields.iter_mut() {
+            if k == "geometry" {
+                if let Json::Obj(geo) = v {
+                    for (gk, gv) in geo.iter_mut() {
+                        if gk == "padded_rows" {
+                            *gv = Json::num(9999.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let err = MappedProgram::from_json(&j).unwrap_err();
+    assert!(format!("{err:#}").contains("geometry"));
+}

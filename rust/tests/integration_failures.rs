@@ -103,7 +103,8 @@ fn config_rejects_nonsense() {
 
 #[test]
 fn scheduler_rejects_wrong_query_width() {
-    use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+    use dt2cam::api::NativeBackend;
+    use dt2cam::coordinator::scheduler::Scheduler;
     use dt2cam::coordinator::ServingPlan;
     use dt2cam::report::workload::Workload;
     use dt2cam::tcam::params::DeviceParams;
@@ -115,7 +116,7 @@ fn scheduler_rejects_wrong_query_width() {
     let sched = Scheduler::new(&plan, &p);
     let bad = vec![vec![false; 3]]; // wrong width
     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        let _ = sched.run_batch(&EngineRef::Native, &bad, 1);
+        let _ = sched.run_batch(&NativeBackend::new(), &bad, 1);
     }));
     assert!(res.is_err(), "wrong-width query must be rejected");
 }
@@ -125,10 +126,10 @@ fn oversize_batch_errors_cleanly_on_pjrt() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         return;
     }
-    use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+    use dt2cam::api::PjrtBackend;
+    use dt2cam::coordinator::scheduler::Scheduler;
     use dt2cam::coordinator::ServingPlan;
     use dt2cam::report::workload::Workload;
-    use dt2cam::runtime::MatchEngine;
     use dt2cam::tcam::params::DeviceParams;
 
     let w = Workload::prepare("iris").unwrap();
@@ -136,13 +137,34 @@ fn oversize_batch_errors_cleanly_on_pjrt() {
     let m = w.map(16, &p);
     let plan = ServingPlan::build(&m, &m.vref, &p);
     let sched = Scheduler::new(&plan, &p);
-    let eng = MatchEngine::new(std::path::Path::new("artifacts")).unwrap();
+    let pjrt = PjrtBackend::from_dir(std::path::Path::new("artifacts")).unwrap();
     // 300 lanes: above the largest lowered batch (256).
     let queries: Vec<Vec<bool>> = (0..300).map(|_| vec![false; m.padded_width]).collect();
-    let err = sched
-        .run_batch(&EngineRef::Pjrt(&eng), &queries, 300)
-        .unwrap_err();
+    let err = sched.run_batch(&pjrt, &queries, 300).unwrap_err();
     assert!(format!("{err:#}").contains("largest lowered artifact batch"));
+}
+
+#[test]
+fn unknown_engine_error_lists_registry_names() {
+    use dt2cam::api::registry;
+    use dt2cam::config::EngineKind;
+
+    let err = EngineKind::parse("gpu").unwrap_err();
+    let msg = format!("{err:#}");
+    for name in registry::names() {
+        assert!(msg.contains(name), "error should list '{name}': {msg}");
+    }
+
+    // Same failure surfaced through the CLI's --engine path.
+    let argv: Vec<String> = ["serve", "--dataset", "iris", "--engine", "gpu"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cli_err = dt2cam::cli::run(argv).unwrap_err();
+    let cli_msg = format!("{cli_err:#}");
+    for name in registry::names() {
+        assert!(cli_msg.contains(name), "CLI error should list '{name}': {cli_msg}");
+    }
 }
 
 #[test]

@@ -1,10 +1,10 @@
 //! Integration: the full DT2CAM flow per dataset, across tile sizes and
-//! engines. The load-bearing invariant everywhere is the paper's §IV.B
+//! backends. The load-bearing invariant everywhere is the paper's §IV.B
 //! claim — ideal hardware reproduces the software tree ("golden") exactly.
 
+use dt2cam::api::{MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend};
 use dt2cam::config::{EngineKind, RunConfig};
-use dt2cam::coordinator::{Coordinator, ServingPlan};
-use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+use dt2cam::coordinator::{Coordinator, Scheduler, ServingPlan};
 use dt2cam::report::workload::Workload;
 use dt2cam::synth::simulate::{simulate, SimOptions};
 use dt2cam::tcam::params::DeviceParams;
@@ -28,7 +28,7 @@ fn golden_everywhere(name: &str, s: usize) {
     assert_eq!(r.no_match, 0);
     assert_eq!(r.multi_match, 0);
 
-    // 3. Serving scheduler (native engine) == golden.
+    // 3. Serving scheduler (native backend) == golden.
     let plan = ServingPlan::build(&m, &m.vref, &p);
     let sched = Scheduler::new(&plan, &p);
     let take = w.test_x.len().min(64);
@@ -36,7 +36,9 @@ fn golden_everywhere(name: &str, s: usize) {
         .iter()
         .map(|x| m.pad_query(&w.lut.encode_input(x)))
         .collect();
-    let out = sched.run_batch(&EngineRef::Native, &queries, take).unwrap();
+    let out = sched
+        .run_batch(&NativeBackend::new(), &queries, take)
+        .unwrap();
     for i in 0..take {
         assert_eq!(out.classes[i], Some(w.golden[i]), "{name} scheduler lane {i}");
     }
@@ -111,16 +113,18 @@ fn pjrt_engine_full_agreement() {
         let m = w.map(s, &p);
         let plan = ServingPlan::build(&m, &m.vref, &p);
         let sched = Scheduler::new(&plan, &p);
-        let eng = dt2cam::runtime::MatchEngine::new(std::path::Path::new("artifacts")).unwrap();
+        let pjrt = PjrtBackend::from_dir(std::path::Path::new("artifacts")).unwrap();
         let take = w.test_x.len().min(32);
         let queries: Vec<Vec<bool>> = w.test_x[..take]
             .iter()
             .map(|x| m.pad_query(&w.lut.encode_input(x)))
             .collect();
-        let native = sched.run_batch(&EngineRef::Native, &queries, take).unwrap();
-        let pjrt = sched.run_batch(&EngineRef::Pjrt(&eng), &queries, take).unwrap();
-        assert_eq!(native.classes, pjrt.classes, "S={s}");
-        assert_eq!(native.active_row_evals, pjrt.active_row_evals, "S={s}");
+        let native = sched
+            .run_batch(&NativeBackend::new(), &queries, take)
+            .unwrap();
+        let got = sched.run_batch(&pjrt, &queries, take).unwrap();
+        assert_eq!(native.classes, got.classes, "S={s}");
+        assert_eq!(native.active_row_evals, got.active_row_evals, "S={s}");
     }
 }
 
@@ -144,10 +148,16 @@ fn sequential_equals_pipelined_outcomes() {
             (qs, n)
         })
         .collect();
-    let piped = run_pipeline(Arc::clone(&plan), batches.clone(), 2).unwrap();
-    let sched = Scheduler::new(&plan, &p);
-    for (i, (qs, real)) in batches.iter().enumerate() {
-        let seq = sched.run_batch(&EngineRef::Native, qs, *real).unwrap();
-        assert_eq!(piped[i].classes, seq.classes, "batch {i}");
+    // Both Send + Sync backends must pipe to the sequential outcome.
+    for backend in [
+        Arc::new(NativeBackend::new()) as Arc<dyn MatchBackend + Send + Sync>,
+        Arc::new(ThreadedNativeBackend::new(4)),
+    ] {
+        let piped = run_pipeline(Arc::clone(&plan), backend, batches.clone(), 2).unwrap();
+        let sched = Scheduler::new(&plan, &p);
+        for (i, (qs, real)) in batches.iter().enumerate() {
+            let seq = sched.run_batch(&NativeBackend::new(), qs, *real).unwrap();
+            assert_eq!(piped[i].classes, seq.classes, "batch {i}");
+        }
     }
 }

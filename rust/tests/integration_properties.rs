@@ -1,9 +1,10 @@
 //! Property tests over the full compile→map→search chain on randomly
 //! generated learning problems (the repository's deepest invariants).
 
+use dt2cam::api::NativeBackend;
 use dt2cam::cart::{train, TrainParams};
 use dt2cam::compiler::compile;
-use dt2cam::coordinator::scheduler::{EngineRef, Scheduler};
+use dt2cam::coordinator::scheduler::Scheduler;
 use dt2cam::coordinator::ServingPlan;
 use dt2cam::synth::mapping::MappedArray;
 use dt2cam::synth::simulate::{simulate, SimOptions};
@@ -38,7 +39,7 @@ fn full_chain_equivalence_property() {
             .map(|x| m.pad_query(&lut.encode_input(x)))
             .collect();
         let out = sched
-            .run_batch(&EngineRef::Native, &queries, probes.len())
+            .run_batch(&NativeBackend::new(), &queries, probes.len())
             .map_err(|e| e.to_string())?;
 
         for (i, x) in probes.iter().enumerate() {
