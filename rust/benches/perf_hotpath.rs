@@ -1,18 +1,129 @@
 //! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md).
 //!
 //! L3 request-path stages in isolation and end-to-end:
-//! input encoding → tile match (native f32) → full batch schedule
-//! (per registered backend) → pipelined stream. Baseline +
-//! after-optimization numbers are recorded in EXPERIMENTS.md §Perf.
+//! input encoding → full batch schedule (per registered backend, packed
+//! `RowMask` spine vs the retired `Vec<bool>` baseline) → pipelined
+//! stream. Baseline + after-optimization numbers are recorded in
+//! EXPERIMENTS.md §Perf; the `packed_vs_boolmask_speedup` row is the
+//! acceptance gate for the bit-packed selective-precharge refactor
+//! (target: >= 2x on the multi-division scheduler path at batch 32).
 
 use std::sync::Arc;
 
 use dt2cam::api::{Dt2Cam, MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend};
 use dt2cam::config::EngineKind;
 use dt2cam::coordinator::pipeline::run_pipeline;
-use dt2cam::coordinator::{InferenceRequest, Scheduler};
+use dt2cam::coordinator::{BatchScratch, InferenceRequest, Scheduler, ServingPlan};
 use dt2cam::tcam::params::DeviceParams;
 use dt2cam::util::benchkit::Bench;
+
+/// The retired `Vec<Vec<bool>>` mask walk, kept verbatim as the bench
+/// baseline: per-byte mask scans for energy/density, per-bool AND folds,
+/// fresh allocations per batch/tile — exactly the pre-RowMask scheduler
+/// + native kernel, so the speedup row measures the representation
+/// change and nothing else.
+mod boolmask_baseline {
+    use super::ServingPlan;
+
+    fn tile_match_bools(
+        w_tile: &[f32],
+        gthresh_tile: &[f32],
+        s: usize,
+        lane_bits: &[&[bool]],
+        enabled: &[&[bool]],
+        out: &mut [bool],
+    ) {
+        let lanes = lane_bits.len();
+        let active: usize = enabled
+            .iter()
+            .map(|e| e.iter().filter(|&&x| x).count())
+            .sum();
+        let dense_cutoff = lanes * s / 8;
+        if active >= dense_cutoff {
+            let mut g = vec![0.0f32; s];
+            for (lane, bits) in lane_bits.iter().enumerate() {
+                g.iter_mut().for_each(|x| *x = 0.0);
+                for (j, &b) in bits.iter().enumerate() {
+                    let row_w =
+                        &w_tile[(2 * j + usize::from(b)) * s..(2 * j + usize::from(b) + 1) * s];
+                    for (acc, &wv) in g.iter_mut().zip(row_w) {
+                        *acc += wv;
+                    }
+                }
+                for r in 0..s {
+                    out[lane * s + r] = g[r] < gthresh_tile[r];
+                }
+            }
+        } else {
+            for (lane, bits) in lane_bits.iter().enumerate() {
+                for r in 0..s {
+                    if !enabled[lane][r] {
+                        continue;
+                    }
+                    let mut g = 0.0f32;
+                    for (j, &b) in bits.iter().enumerate() {
+                        g += w_tile[(2 * j + usize::from(b)) * s + r];
+                    }
+                    out[lane * s + r] = g < gthresh_tile[r];
+                }
+            }
+        }
+    }
+
+    /// Sequential division walk over `Vec<bool>` masks (serial tiles —
+    /// compare against the packed serial path via worker count 1).
+    pub fn run_batch(
+        plan: &ServingPlan,
+        queries: &[Vec<bool>],
+        real_lanes: usize,
+    ) -> (Vec<Option<usize>>, u64) {
+        let s = plan.s;
+        let lanes = queries.len();
+        let mut enabled: Vec<Vec<bool>> = (0..lanes)
+            .map(|_| {
+                let mut v = vec![false; plan.padded_rows];
+                v[..plan.initially_active].fill(true);
+                v
+            })
+            .collect();
+        let mut energy_rows = 0u64;
+        for (d, div) in plan.divisions.iter().enumerate() {
+            for lane_enabled in enabled.iter().take(real_lanes) {
+                energy_rows += lane_enabled.iter().filter(|&&e| e).count() as u64;
+            }
+            let col0 = d * s;
+            let lane_bits: Vec<&[bool]> =
+                queries.iter().map(|q| &q[col0..col0 + s]).collect();
+            for rt in 0..plan.n_rwd {
+                let w_tile = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+                let gthresh_tile = &div.gthresh[rt * s..(rt + 1) * s];
+                let en_refs: Vec<&[bool]> =
+                    enabled.iter().map(|e| &e[rt * s..(rt + 1) * s]).collect();
+                let mut out = vec![false; lanes * s];
+                tile_match_bools(w_tile, gthresh_tile, s, &lane_bits, &en_refs, &mut out);
+                for (lane, en) in enabled.iter_mut().enumerate() {
+                    for r in 0..s {
+                        let idx = rt * s + r;
+                        en[idx] = en[idx] && out[lane * s + r];
+                    }
+                }
+            }
+        }
+        let mut classes = Vec::with_capacity(lanes);
+        for (lane, en) in enabled.iter().enumerate() {
+            if lane >= real_lanes {
+                classes.push(None);
+                continue;
+            }
+            classes.push(
+                en.iter()
+                    .position(|&e| e)
+                    .map(|first| plan.classes[first]),
+            );
+        }
+        (classes, energy_rows)
+    }
+}
 
 fn main() {
     let p = DeviceParams::default();
@@ -50,13 +161,50 @@ fn main() {
         .collect();
     let real = batch.len();
     let sched = Scheduler::new(&plan, &p);
+
+    // The acceptance pair: Vec<bool> baseline vs the packed RowMask walk
+    // (serial tiles on both sides — workers=1 disables fan-out — so the
+    // row measures the mask representation, not threading). Sanity: both
+    // must classify identically before being timed.
+    let serial = ThreadedNativeBackend::new(1);
+    let mut scratch = BatchScratch::default();
+    {
+        let (base_classes, base_energy) = boolmask_baseline::run_batch(&plan, &batch, real);
+        let packed = sched
+            .run_batch_with(&serial, &batch, real, &mut scratch)
+            .unwrap();
+        assert_eq!(packed.classes, base_classes, "baseline/packed divergence");
+        assert_eq!(packed.active_row_evals, base_energy);
+    }
+    let base = b
+        .case("scheduler_batch32_boolmask_baseline", || {
+            std::hint::black_box(boolmask_baseline::run_batch(&plan, &batch, real));
+        })
+        .ns_per_iter
+        .mean;
+    let packed = b
+        .case("scheduler_batch32_packed_serial", || {
+            std::hint::black_box(
+                sched
+                    .run_batch_with(&serial, &batch, real, &mut scratch)
+                    .unwrap(),
+            );
+        })
+        .ns_per_iter
+        .mean;
+    b.report_value("packed_vs_boolmask_speedup", base / packed, "x (want >= 2)");
+
     let native = NativeBackend::new();
     b.case("scheduler_batch32_native", || {
-        std::hint::black_box(sched.run_batch(&native, &batch, real).unwrap());
+        std::hint::black_box(sched.run_batch_with(&native, &batch, real, &mut scratch).unwrap());
     });
     let threaded = ThreadedNativeBackend::auto();
     b.case("scheduler_batch32_threaded_native", || {
-        std::hint::black_box(sched.run_batch(&threaded, &batch, real).unwrap());
+        std::hint::black_box(
+            sched
+                .run_batch_with(&threaded, &batch, real, &mut scratch)
+                .unwrap(),
+        );
     });
 
     // PJRT path (if artifacts are present).
@@ -64,9 +212,11 @@ fn main() {
     if artifacts.join("manifest.json").exists() {
         let pjrt = PjrtBackend::from_dir(artifacts).unwrap();
         // warm
-        let _ = sched.run_batch(&pjrt, &batch, real).unwrap();
+        let _ = sched.run_batch_with(&pjrt, &batch, real, &mut scratch).unwrap();
         b.case("scheduler_batch32_pjrt", || {
-            std::hint::black_box(sched.run_batch(&pjrt, &batch, real).unwrap());
+            std::hint::black_box(
+                sched.run_batch_with(&pjrt, &batch, real, &mut scratch).unwrap(),
+            );
         });
     } else {
         b.report_line("(skipping PJRT cases: run `make artifacts`)");

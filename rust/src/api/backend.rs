@@ -4,63 +4,87 @@
 //! only against `&dyn MatchBackend`.
 //!
 //! Contract (see `docs/API.md` §Backend): `match_division` is a *pure
-//! function* of `(plan, division, query bits, enable masks)` — it returns
-//! the per-row-tile match booleans and must agree bit-for-bit with every
-//! other backend on match decisions. Selective-precharge mask folding,
-//! energy accounting and the survivor → class readout stay in the
-//! scheduler; backends only answer "which rows matched".
+//! function* of `(plan, division, query bits, enable masks)` — it fills
+//! per-lane packed match masks and must agree bit-for-bit with every
+//! other backend on match decisions. Rows disabled in `req.enabled` are
+//! **always false** in the output (normative, not best-effort: the
+//! registry parity suite exercises partial masks). Selective-precharge
+//! mask folding, energy accounting and the survivor → class readout stay
+//! in the scheduler; backends only answer "which enabled rows matched".
 //!
 //! Three backends register (see [`super::registry`]):
 //! * [`NativeBackend`] — the f32 analog simulator, density-adaptive
 //!   (dense gather-matmul vs sparse per-enabled-row), row tiles fanned
 //!   out over scoped threads when activity is high.
 //! * [`ThreadedNativeBackend`] — same numerics, but row tiles are
-//!   statically partitioned into contiguous ranges with a fixed
-//!   range → worker assignment (worker *k* always evaluates the same
-//!   tile range in every division of every batch, so its W slices stay
-//!   hot in that core's cache).
+//!   statically partitioned into contiguous ranges executed on a
+//!   *persistent* [`ThreadPool`] owned by the backend (worker *k* always
+//!   evaluates the same tile range in every division of every batch, so
+//!   its W slices stay hot in that worker's cache, and dense divisions
+//!   no longer pay the ~30-50 µs/thread scoped-spawn cost per call).
 //! * [`PjrtBackend`] — the AOT HLO artifacts through the PJRT CPU
 //!   client, stacked-division dispatch with device-resident constants.
+//!
+//! §Perf: the steady-state match path is allocation-free across batches
+//! after warm-up — the scheduler owns reusable enable/match mask
+//! scratch, the gather-accumulate `g` buffer lives in a thread-local
+//! (one per pool worker), the sparse path iterates the packed survivor
+//! set's bits instead of scanning a `Vec<bool>` byte-by-byte, and
+//! `threaded-native` recycles its dense-path per-worker partials
+//! through a backend-owned pool. ([`NativeBackend`]'s dense fan-out
+//! still allocates per-chunk partials — it also spawns scoped threads
+//! per division by design; `threaded-native` is the pooled engine.)
+
+use std::cell::RefCell;
+use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::plan::{DivisionPlan, ServingPlan};
-use crate::runtime::{ArtifactKind, MatchEngine};
-use crate::util::threadpool::parallel_map;
+use crate::runtime::{ArtifactKind, BufferKey, MatchEngine};
+use crate::util::rowmask::{reset_masks, RowMask};
+use crate::util::threadpool::{parallel_map, ThreadPool};
 
 /// One column division's worth of work handed to a backend.
-///
-/// `lane_bits[lane]` is the query bit-slice of this division (length
-/// `plan.s`); `enabled[lane]` is the selective-precharge mask over the
-/// *padded* rows (length `plan.padded_rows`) — rows disabled for a lane
-/// may be skipped (their result is ANDed away by the scheduler anyway).
 pub struct DivisionRequest<'a> {
     /// Column-division index into `plan.divisions`.
     pub division: usize,
-    /// Per-lane query bits of this division, `[lane][S]`.
-    pub lane_bits: &'a [&'a [bool]],
-    /// Per-lane enable masks over padded rows, `[lane][padded_rows]`.
-    pub enabled: &'a [Vec<bool>],
+    /// Full padded query bit rows, one per lane (length `n_cwd * S`);
+    /// a backend slices its division's bits via [`Self::lane_bits`], so
+    /// no per-division slice vector is ever materialized.
+    pub queries: &'a [Vec<bool>],
+    /// Per-lane packed selective-precharge masks over the padded rows.
+    pub enabled: &'a [RowMask],
 }
 
-impl DivisionRequest<'_> {
+impl<'a> DivisionRequest<'a> {
     /// Number of query lanes in this request.
     pub fn lanes(&self) -> usize {
-        self.lane_bits.len()
+        self.queries.len()
+    }
+
+    /// This division's query bit-slice for one lane (length `s`).
+    #[inline]
+    pub fn lane_bits(&self, lane: usize, s: usize) -> &'a [bool] {
+        &self.queries[lane][self.division * s..(self.division + 1) * s]
     }
 
     /// Total enabled (lane, row) pairs — the density signal backends use
-    /// to pick dense vs sparse evaluation.
+    /// to pick dense vs sparse evaluation. A popcount per lane word,
+    /// not a byte scan.
     pub fn total_active(&self) -> usize {
-        self.enabled
-            .iter()
-            .map(|e| e.iter().filter(|&&x| x).count())
-            .sum()
+        self.enabled.iter().map(|m| m.count_ones()).sum()
     }
 }
 
-/// Per-row-tile match booleans: `matches[row_tile][lane * S + local_row]`.
-pub type DivisionMatches = Vec<Vec<bool>>;
+/// Per-lane packed match results over the *padded* rows of the whole
+/// division: `matches[lane].get(rt * S + local_row)`.
+///
+/// Normative: rows disabled in the request's enable mask are always
+/// `false` here, on every backend — the scheduler's fold is then a pure
+/// word-wise AND and partial-mask parity holds bit-for-bit across the
+/// registry.
+pub type DivisionMatches = Vec<RowMask>;
 
 /// An execution substrate for TCAM division matches (object-safe; the
 /// coordinator layers hold `&dyn MatchBackend` / `Box<dyn MatchBackend>`).
@@ -68,14 +92,17 @@ pub trait MatchBackend {
     /// Registry name of this backend (`--engine` value).
     fn name(&self) -> &'static str;
 
-    /// Evaluate every row tile of one column division against a batch.
-    /// Must be deterministic and agree with the native simulator on every
-    /// match decision.
+    /// Evaluate every row tile of one column division against a batch,
+    /// filling `out` (reshaped to `lanes` masks over `padded_rows`,
+    /// reusing its allocations). Must be deterministic and agree with
+    /// the native simulator on every match decision; disabled rows stay
+    /// `false`.
     fn match_division(
         &self,
         plan: &ServingPlan,
         req: &DivisionRequest<'_>,
-    ) -> Result<DivisionMatches>;
+        out: &mut DivisionMatches,
+    ) -> Result<()>;
 
     /// Prepare for serving `lanes`-wide batches of this plan (compile
     /// executables, check geometry). Called once at session build; must
@@ -92,40 +119,59 @@ pub trait MatchBackend {
     fn invalidate(&self) {}
 }
 
-/// Match one row tile against a batch, directly from the plan's W layout.
-/// Writes `[lane][local_row]` booleans into `out`.
+thread_local! {
+    // Gather-accumulate scratch for the native tile kernel, hoisted out
+    // of the per-tile hot path: one buffer per thread (pool workers keep
+    // theirs across divisions and batches), so the kernel performs no
+    // heap allocation after warm-up.
+    static G_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Match one row tile directly from the plan's W layout, setting bits
+/// `base + local_row` in the per-lane output masks. Only rows enabled in
+/// `req.enabled` can come out `true`.
 ///
-/// Two code paths, chosen by activity density (§Perf):
-/// * **dense** — the full vectorizable gather-matmul over all S rows per
-///   lane (first column division, where every row is still enabled);
-/// * **sparse** — per-(lane, enabled-row) scalar evaluation, skipping the
-///   rows selective precharge already disabled. In later divisions only a
-///   handful of rows per lane survive, so this is orders of magnitude
-///   less work (exactly the hardware's SP energy saving, mirrored in
-///   software time).
-pub(crate) fn tile_match_from_w(
+/// Density is decided **per lane** (a popcount of the lane's mask words
+/// over this tile — free with packed masks, where the old `Vec<bool>`
+/// kernel could only afford one per-tile decision and paid a full
+/// gather for every lane of any dense tile):
+/// * **dense lane** (≥ S/8 rows alive) — one vectorizable
+///   gather-accumulate across all S rows, then read out the surviving
+///   rows;
+/// * **sparse lane** — per-enabled-row scalar evaluation, iterating the
+///   mask's set bits. In later divisions only a handful of rows per
+///   lane survive, so this is orders of magnitude less work (exactly
+///   the hardware's SP energy saving, mirrored in software time).
+///
+/// Both paths sum the same conductances in the same j-order, so their
+/// f32 results are bit-identical — the dense/sparse choice can never
+/// change a match decision.
+pub(crate) fn tile_match_into(
     w_tile: &[f32],
     gthresh_tile: &[f32],
     s: usize,
-    lane_bits: &[&[bool]],
-    // Enable mask per lane for this tile's rows (`[lane][local_row]`),
-    // or None = all enabled.
-    enabled: Option<&[&[bool]]>,
-    out: &mut [bool],
+    base: usize,
+    req: &DivisionRequest<'_>,
+    g: &mut Vec<f32>,
+    out: &mut [RowMask],
 ) {
-    debug_assert_eq!(out.len(), lane_bits.len() * s);
-    // Count active (lane, row) pairs to pick the path.
-    let active: usize = match enabled {
-        None => lane_bits.len() * s,
-        Some(en) => en.iter().map(|e| e.iter().filter(|&&x| x).count()).sum(),
-    };
-    let dense_cutoff = lane_bits.len() * s / 8;
-
-    if active >= dense_cutoff || enabled.is_none() {
-        // Dense: per lane, one gather-accumulate across all rows.
-        let mut g = vec![0.0f32; s];
-        for (lane, bits) in lane_bits.iter().enumerate() {
-            debug_assert_eq!(bits.len(), s);
+    let lanes = req.lanes();
+    debug_assert_eq!(out.len(), lanes);
+    // Gather beats per-row sums once enough rows are alive to amortize
+    // it (~S²/8 SIMD adds vs lane_active·S strided scalar adds).
+    let dense_cutoff = (s / 8).max(1);
+    g.clear();
+    g.resize(s, 0.0);
+    for lane in 0..lanes {
+        let enabled = &req.enabled[lane];
+        let lane_active = enabled.count_range(base, base + s);
+        if lane_active == 0 {
+            continue;
+        }
+        let bits = req.lane_bits(lane, s);
+        debug_assert_eq!(bits.len(), s);
+        if lane_active >= dense_cutoff {
+            // Dense lane: one gather-accumulate across all rows.
             g.iter_mut().for_each(|x| *x = 0.0);
             for (j, &b) in bits.iter().enumerate() {
                 let row_w =
@@ -134,44 +180,66 @@ pub(crate) fn tile_match_from_w(
                     *acc += wv;
                 }
             }
-            for r in 0..s {
-                // Log-domain SA compare: no exp on the hot path.
-                out[lane * s + r] = g[r] < gthresh_tile[r];
+            if lane_active == s {
+                for r in 0..s {
+                    // Log-domain SA compare: no exp on the hot path.
+                    if g[r] < gthresh_tile[r] {
+                        out[lane].set(base + r);
+                    }
+                }
+            } else {
+                // Only surviving rows read out (disabled rows stay
+                // false by construction).
+                for row in enabled.ones_range(base, base + s) {
+                    if g[row - base] < gthresh_tile[row - base] {
+                        out[lane].set(row);
+                    }
+                }
             }
-        }
-    } else {
-        // Sparse: touch only enabled (lane, row) pairs.
-        let en = enabled.expect("sparse path requires masks");
-        for (lane, bits) in lane_bits.iter().enumerate() {
-            for r in 0..s {
-                if !en[lane][r] {
-                    continue;
-                }
-                let mut g = 0.0f32;
+        } else {
+            // Sparse lane: touch only enabled rows, walking set bits.
+            for row in enabled.ones_range(base, base + s) {
+                let lr = row - base;
+                let mut acc = 0.0f32;
                 for (j, &b) in bits.iter().enumerate() {
-                    g += w_tile[(2 * j + usize::from(b)) * s + r];
+                    acc += w_tile[(2 * j + usize::from(b)) * s + lr];
                 }
-                out[lane * s + r] = g < gthresh_tile[r];
+                if acc < gthresh_tile[lr] {
+                    out[lane].set(row);
+                }
             }
         }
     }
 }
 
-/// Evaluate one row tile of `div` for the whole batch (shared kernel of
-/// both native backends).
-fn native_tile(
+/// Evaluate row tiles `[rt_lo, rt_hi)` of `div` into the per-lane masks
+/// (shared kernel of both native backends; thread-local `g` scratch).
+fn native_tiles_into(
     div: &DivisionPlan,
     s: usize,
-    rt: usize,
-    lane_bits: &[&[bool]],
-    enabled: &[Vec<bool>],
-) -> Vec<bool> {
-    let w_tile = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
-    let gthresh_tile = &div.gthresh[rt * s..(rt + 1) * s];
-    let en_refs: Vec<&[bool]> = enabled.iter().map(|e| &e[rt * s..(rt + 1) * s]).collect();
-    let mut out = vec![false; lane_bits.len() * s];
-    tile_match_from_w(w_tile, gthresh_tile, s, lane_bits, Some(&en_refs), &mut out);
-    out
+    rt_lo: usize,
+    rt_hi: usize,
+    req: &DivisionRequest<'_>,
+    out: &mut [RowMask],
+) {
+    G_SCRATCH.with(|g| {
+        let mut g = g.borrow_mut();
+        for rt in rt_lo..rt_hi {
+            let w_tile = &div.w[rt * 2 * s * s..(rt + 1) * 2 * s * s];
+            let gthresh_tile = &div.gthresh[rt * s..(rt + 1) * s];
+            tile_match_into(w_tile, gthresh_tile, s, rt * s, req, &mut g, out);
+        }
+    });
+}
+
+/// OR worker partials into `out` — tile ranges cover disjoint bit
+/// ranges, so the merge is exact.
+fn merge_partials(out: &mut [RowMask], parts: &[Vec<RowMask>]) {
+    for part in parts {
+        for (o, p) in out.iter_mut().zip(part) {
+            o.or_assign(p);
+        }
+    }
 }
 
 /// Native f32 simulator backend. Density-adaptive: row tiles fan out over
@@ -197,46 +265,68 @@ impl MatchBackend for NativeBackend {
         &self,
         plan: &ServingPlan,
         req: &DivisionRequest<'_>,
-    ) -> Result<DivisionMatches> {
+        out: &mut DivisionMatches,
+    ) -> Result<()> {
         let s = plan.s;
         let lanes = req.lanes();
+        reset_masks(out, lanes, plan.padded_rows);
         let div = &plan.divisions[req.division];
         let total_active = req.total_active();
-        let run_tile = |rt: usize| native_tile(div, s, rt, req.lane_bits, req.enabled);
         // Thread fan-out only pays past ~8 row tiles and while activity is
-        // still dense (§Perf measurement).
+        // still dense (§Perf measurement). Tiles go out as ~2 contiguous
+        // chunks per core — enough granularity for the dynamic queue to
+        // balance, while each chunk (not each tile) pays for one
+        // division-sized partial mask set.
         if total_active >= lanes * s && plan.n_rwd >= 8 {
-            let jobs: Vec<usize> = (0..plan.n_rwd).collect();
-            Ok(parallel_map(jobs, run_tile))
+            let n_threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4);
+            let n_chunks = (2 * n_threads).min(plan.n_rwd);
+            let jobs: Vec<(usize, usize)> = (0..n_chunks)
+                .map(|k| (k * plan.n_rwd / n_chunks, (k + 1) * plan.n_rwd / n_chunks))
+                .collect();
+            let parts = parallel_map(jobs, |(lo, hi)| {
+                let mut part = vec![RowMask::zeros(plan.padded_rows); lanes];
+                native_tiles_into(div, s, lo, hi, req, &mut part);
+                part
+            });
+            merge_partials(out, &parts);
         } else {
-            Ok((0..plan.n_rwd).map(run_tile).collect())
+            native_tiles_into(div, s, 0, plan.n_rwd, req, out);
         }
+        Ok(())
     }
 }
 
-/// Native backend with static row-tile → worker partitioning.
+/// Native backend with static row-tile → worker partitioning on a
+/// persistent thread pool.
 ///
 /// When a division is still dense, its row tiles are split into
-/// `workers` contiguous ranges and (scoped) worker *k* always evaluates
+/// `workers` contiguous ranges and pool worker *k* always evaluates
 /// range *k* — the assignment is a pure function of
 /// `(k, n_rwd, workers)`, so repeated batches of the same plan reuse the
 /// same deterministic partition with no work-queue contention, unlike
-/// [`NativeBackend`]'s dynamic queue. (Workers are scoped threads per
-/// division call, not pinned OS threads; the affinity is of tiles to
-/// worker slots, not to cores.) Once selective precharge has collapsed
-/// activity, evaluation drops to the serial sparse path — per-tile work
-/// is then microseconds and thread spawns would dominate. Numerics are
-/// identical across all native backends: same tile kernel.
-#[derive(Clone, Copy, Debug)]
+/// [`NativeBackend`]'s dynamic queue. The pool is spawned once at
+/// backend construction and lives as long as the backend: dense
+/// divisions pay a condvar wake instead of a thread spawn per call.
+/// Once selective precharge has collapsed activity, evaluation drops to
+/// the serial sparse path — per-tile work is then microseconds and even
+/// a pool dispatch would dominate. Numerics are identical across all
+/// native backends: same tile kernel.
 pub struct ThreadedNativeBackend {
-    workers: usize,
+    pool: ThreadPool,
+    /// Recycled per-worker partial mask sets for the dense path —
+    /// popped before a fan-out, reshaped in place, pushed back after
+    /// the merge, so steady-state dense divisions allocate nothing.
+    partials: Mutex<Vec<Vec<RowMask>>>,
 }
 
 impl ThreadedNativeBackend {
-    /// Fixed worker count (>= 1).
+    /// Fixed worker count (>= 1); spawns the pool immediately.
     pub fn new(workers: usize) -> ThreadedNativeBackend {
         ThreadedNativeBackend {
-            workers: workers.max(1),
+            pool: ThreadPool::new(workers.max(1)),
+            partials: Mutex::new(Vec::new()),
         }
     }
 
@@ -250,7 +340,15 @@ impl ThreadedNativeBackend {
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.pool.size()
+    }
+}
+
+impl std::fmt::Debug for ThreadedNativeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadedNativeBackend")
+            .field("workers", &self.pool.size())
+            .finish()
     }
 }
 
@@ -269,41 +367,36 @@ impl MatchBackend for ThreadedNativeBackend {
         &self,
         plan: &ServingPlan,
         req: &DivisionRequest<'_>,
-    ) -> Result<DivisionMatches> {
+        out: &mut DivisionMatches,
+    ) -> Result<()> {
         let s = plan.s;
         let n_rwd = plan.n_rwd;
+        let lanes = req.lanes();
+        reset_masks(out, lanes, plan.padded_rows);
         let div = &plan.divisions[req.division];
-        let workers = self.workers.min(n_rwd).max(1);
+        let workers = self.pool.size().min(n_rwd).max(1);
         // Same density gate as NativeBackend: sparse divisions are
-        // microseconds of scalar work — thread fan-out would cost more
-        // than the evaluation itself.
-        let dense = req.total_active() >= req.lanes() * s;
+        // microseconds of scalar work — even a pool dispatch would cost
+        // more than the evaluation itself.
+        let dense = req.total_active() >= lanes * s;
         if workers == 1 || !dense {
-            return Ok((0..n_rwd)
-                .map(|rt| native_tile(div, s, rt, req.lane_bits, req.enabled))
-                .collect());
+            native_tiles_into(div, s, 0, n_rwd, req, out);
+            return Ok(());
         }
-        let chunks: Vec<Vec<Vec<bool>>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..workers)
-                .map(|k| {
-                    // Static contiguous range for worker k.
-                    let lo = k * n_rwd / workers;
-                    let hi = (k + 1) * n_rwd / workers;
-                    let lane_bits = req.lane_bits;
-                    let enabled = req.enabled;
-                    scope.spawn(move || {
-                        (lo..hi)
-                            .map(|rt| native_tile(div, s, rt, lane_bits, enabled))
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("threaded-native worker panicked"))
-                .collect()
+        let parts = self.pool.scoped_map(workers, |k| {
+            // Static contiguous range for worker k.
+            let lo = k * n_rwd / workers;
+            let hi = (k + 1) * n_rwd / workers;
+            // Recycled scratch: pop a retired partial set (any shape —
+            // reset_masks reshapes in place) or start an empty one.
+            let mut part = self.partials.lock().unwrap().pop().unwrap_or_default();
+            reset_masks(&mut part, lanes, plan.padded_rows);
+            native_tiles_into(div, s, lo, hi, req, &mut part);
+            part
         });
-        Ok(chunks.into_iter().flatten().collect())
+        merge_partials(out, &parts);
+        self.partials.lock().unwrap().extend(parts);
+        Ok(())
     }
 }
 
@@ -368,31 +461,34 @@ impl MatchBackend for PjrtBackend {
     /// plain tile artifact as the T=1 fallback. Lane counts that were
     /// never lowered are padded up to the nearest available artifact
     /// batch (padding lanes are all-zero one-hots: G = 0, discarded on
-    /// the way out).
+    /// the way out). The artifact computes match bits for *every* row;
+    /// the readout below ANDs them against the enable masks, so disabled
+    /// rows are false on this backend too (the normative contract).
     fn match_division(
         &self,
         plan: &ServingPlan,
         req: &DivisionRequest<'_>,
-    ) -> Result<DivisionMatches> {
+        out: &mut DivisionMatches,
+    ) -> Result<()> {
         let eng = &self.engine;
         let s = plan.s;
         let lanes = req.lanes();
         let d = req.division;
         let div = &plan.divisions[d];
+        reset_masks(out, lanes, plan.padded_rows);
 
         // Artifact batch width: smallest lowered batch >= lanes.
         let pb = self.artifact_batch(s, lanes)?;
 
         // Build the Q buffer once per division: [pb, 2S] one-hot.
         let mut q = vec![0.0f32; pb * 2 * s];
-        for (lane, bits) in req.lane_bits.iter().enumerate() {
+        for lane in 0..lanes {
             let row = &mut q[lane * 2 * s..(lane + 1) * 2 * s];
-            for (j, &b) in bits.iter().enumerate() {
+            for (j, &b) in req.lane_bits(lane, s).iter().enumerate() {
                 row[2 * j + usize::from(b)] = 1.0;
             }
         }
 
-        let mut out: Vec<Vec<bool>> = Vec::with_capacity(plan.n_rwd);
         let mut rt = 0usize;
         while rt < plan.n_rwd {
             let remaining = plan.n_rwd - rt;
@@ -418,13 +514,16 @@ impl MatchBackend for PjrtBackend {
             // Device-resident constants: W / vref / toc never change
             // between batches — upload once per (plan, division, range)
             // and execute with buffers (§Perf: removes the dominant
-            // per-call host→device copy).
-            let bkey = |slot: u64| {
-                (plan.plan_id << 32)
-                    ^ ((d as u64) << 24)
-                    ^ ((rt as u64) << 8)
-                    ^ ((chunk as u64) << 2)
-                    ^ slot
+            // per-call host→device copy). Keys are full tuples, never a
+            // bit-pack: every coordinate participates exactly, so
+            // adversarial geometries (rt ≥ 2^16, plan_id ≥ 2^32) cannot
+            // alias another range's conductances.
+            let bkey = |slot: u8| BufferKey {
+                plan_id: plan.plan_id,
+                division: d,
+                rt,
+                chunk,
+                slot,
             };
             let toc_buf = eng.cached_buffer(bkey(2), &[div.toc], &[])?;
             let res = if chunk == 1 {
@@ -454,21 +553,22 @@ impl MatchBackend for PjrtBackend {
                     ArtifactKind::Division, s, pb, chunk, &q, &w_buf, &v_buf, &toc_buf,
                 )?
             };
-            // res.matched layout: [chunk, pb, s] -> per row tile, keeping
-            // only the real lanes and real tiles.
+            // res.matched layout: [chunk, pb, s] -> fold into the lane
+            // masks, keeping only real lanes, real tiles, and rows the
+            // enable mask allows.
             for t in 0..real {
-                let mut tile = vec![false; lanes * s];
+                let base = (rt + t) * s;
                 for lane in 0..lanes {
-                    for r in 0..s {
-                        tile[lane * s + r] =
-                            res.matched[t * pb * s + lane * s + r] > 0.5;
+                    for row in req.enabled[lane].ones_range(base, base + s) {
+                        if res.matched[t * pb * s + lane * s + (row - base)] > 0.5 {
+                            out[lane].set(row);
+                        }
                     }
                 }
-                out.push(tile);
             }
             rt += real;
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -497,14 +597,25 @@ mod tests {
         (ServingPlan::build(&m, &m.vref, &p), queries)
     }
 
-    fn full_masks(plan: &ServingPlan, lanes: usize) -> Vec<Vec<bool>> {
-        (0..lanes)
-            .map(|_| {
-                let mut v = vec![false; plan.padded_rows];
-                v[..plan.initially_active].fill(true);
-                v
-            })
-            .collect()
+    fn full_masks(plan: &ServingPlan, lanes: usize) -> Vec<RowMask> {
+        (0..lanes).map(|_| plan.initial_mask()).collect()
+    }
+
+    fn matches_for(
+        backend: &dyn MatchBackend,
+        plan: &ServingPlan,
+        queries: &[Vec<bool>],
+        enabled: &[RowMask],
+        d: usize,
+    ) -> DivisionMatches {
+        let req = DivisionRequest {
+            division: d,
+            queries,
+            enabled,
+        };
+        let mut out = DivisionMatches::new();
+        backend.match_division(plan, &req, &mut out).unwrap();
+        out
     }
 
     #[test]
@@ -516,19 +627,77 @@ mod tests {
         for workers in [1usize, 2, 3, 8] {
             let threaded = ThreadedNativeBackend::new(workers);
             for d in 0..plan.n_cwd {
-                let col0 = d * plan.s;
-                let lane_bits: Vec<&[bool]> = queries
-                    .iter()
-                    .map(|q| &q[col0..col0 + plan.s])
-                    .collect();
-                let req = DivisionRequest {
-                    division: d,
-                    lane_bits: &lane_bits,
-                    enabled: &enabled,
-                };
-                let a = native.match_division(&plan, &req).unwrap();
-                let b = threaded.match_division(&plan, &req).unwrap();
+                let a = matches_for(&native, &plan, &queries, &enabled, d);
+                let b = matches_for(&threaded, &plan, &queries, &enabled, d);
                 assert_eq!(a, b, "division {d}, workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_mask_result_is_full_mask_result_anded() {
+        // Purity: a backend's output under a partial mask must equal its
+        // full-mask output AND the mask — whichever dense/sparse path
+        // each tile takes. Exercises the tail word (initially_active is
+        // rarely a word multiple) and empty lanes.
+        let (plan, queries) = plan_for("haberman", 16);
+        let lanes = queries.len();
+        let full = full_masks(&plan, lanes);
+        let native = NativeBackend::new();
+        let threaded = ThreadedNativeBackend::new(3);
+
+        let patterns: Vec<Vec<RowMask>> = vec![
+            // Every other active row, offset per lane.
+            (0..lanes)
+                .map(|lane| {
+                    let mut m = RowMask::zeros(plan.padded_rows);
+                    for r in (lane % 2..plan.initially_active).step_by(2) {
+                        m.set(r);
+                    }
+                    m
+                })
+                .collect(),
+            // One surviving row per lane; odd lanes fully gated.
+            (0..lanes)
+                .map(|lane| {
+                    let mut m = RowMask::zeros(plan.padded_rows);
+                    if lane % 2 == 0 {
+                        m.set(lane * 7 % plan.initially_active);
+                    }
+                    m
+                })
+                .collect(),
+            // Only the tail of the active prefix (tail-word stress).
+            (0..lanes)
+                .map(|_| {
+                    let mut m = RowMask::zeros(plan.padded_rows);
+                    for r in plan.initially_active.saturating_sub(3)..plan.initially_active {
+                        m.set(r);
+                    }
+                    m
+                })
+                .collect(),
+        ];
+
+        for backend in [&native as &dyn MatchBackend, &threaded] {
+            for d in 0..plan.n_cwd {
+                let base = matches_for(backend, &plan, &queries, &full, d);
+                for (pi, partial) in patterns.iter().enumerate() {
+                    let got = matches_for(backend, &plan, &queries, partial, d);
+                    for lane in 0..lanes {
+                        let mut want = base[lane].clone();
+                        want.and_assign(&partial[lane]);
+                        assert_eq!(
+                            got[lane], want,
+                            "{} d{d} pattern {pi} lane {lane}",
+                            backend.name()
+                        );
+                        // Disabled rows are always false (normative).
+                        for row in got[lane].ones() {
+                            assert!(partial[lane].get(row), "ghost row {row}");
+                        }
+                    }
+                }
             }
         }
     }
@@ -543,14 +712,14 @@ mod tests {
     fn division_request_density_helpers() {
         let (plan, queries) = plan_for("iris", 16);
         let enabled = full_masks(&plan, queries.len());
-        let lane_bits: Vec<&[bool]> =
-            queries.iter().map(|q| &q[0..plan.s]).collect();
         let req = DivisionRequest {
             division: 0,
-            lane_bits: &lane_bits,
+            queries: &queries,
             enabled: &enabled,
         };
         assert_eq!(req.lanes(), queries.len());
         assert_eq!(req.total_active(), queries.len() * plan.initially_active);
+        assert_eq!(req.lane_bits(0, plan.s).len(), plan.s);
+        assert_eq!(req.lane_bits(0, plan.s), &queries[0][..plan.s]);
     }
 }

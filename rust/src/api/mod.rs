@@ -52,6 +52,9 @@ pub use backend::{
 };
 pub use program::{CompiledProgram, Dt2Cam, MappedProgram, Session, TrainedModel};
 pub use registry::BackendOptions;
+// The packed survivor-set type backends produce and consume
+// (`DivisionRequest::enabled` / `DivisionMatches`).
+pub use crate::util::rowmask::RowMask;
 
 /// Deterministic master seed for all paper-table regeneration runs
 /// (recorded in EXPERIMENTS.md).

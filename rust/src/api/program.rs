@@ -426,7 +426,10 @@ impl MappedProgram {
 }
 
 /// Stage 4: a live serving session — the coordinator handle (batcher +
-/// scheduler + metrics over one backend).
+/// scheduler + metrics over one backend). The coordinator owns reusable
+/// scheduler scratch, so a long-lived session's division walk performs
+/// no heap allocation after warm-up (§Perf: the packed selective-
+/// precharge masks are folded in place, batch after batch).
 pub struct Session {
     coord: Coordinator,
 }

@@ -51,7 +51,7 @@ pub fn describe() -> Vec<(&'static str, &'static str)> {
         ("native", "f32 analog simulator, density-adaptive thread fan-out"),
         (
             "threaded-native",
-            "f32 analog simulator, static row-tile partition per worker",
+            "f32 analog simulator, static row-tile partition on a persistent pool",
         ),
         (
             "pjrt",

@@ -113,6 +113,28 @@ mod tests {
     }
 
     #[test]
+    fn deadline_boundary_is_inclusive_with_no_new_pushes() {
+        // An overdue partial batch must release on a bare poll — no
+        // intervening push — and the >= comparison makes the deadline
+        // instant itself sufficient.
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        let r = req(0);
+        let boundary = r.arrived + Duration::from_millis(50);
+        b.push(r);
+        assert!(b.next_batch(boundary - Duration::from_millis(1)).is_none());
+        let batch = b.next_batch(boundary).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn empty_queue_yields_nothing() {
+        let mut b = Batcher::new(4, Duration::from_millis(1));
+        assert!(b.next_batch(Instant::now()).is_none());
+        assert!(b.flush().is_empty());
+    }
+
+    #[test]
     fn oversize_queue_yields_width_sized_batches() {
         let mut b = Batcher::new(3, Duration::from_secs(1));
         for i in 0..7 {

@@ -18,7 +18,10 @@ pub struct Metrics {
     pub active_row_evals: u64,
     /// Wall-clock per batch (s).
     pub batch_wall: OnlineStats,
-    /// Request queueing delay (s).
+    /// Request queueing delay (s), measured arrival → batch dispatch
+    /// (recorded when the batcher releases the request, not at submit —
+    /// a deadline-released partial batch reports >= the batcher's
+    /// `max_wait`).
     pub queue_delay: OnlineStats,
     /// Total serving wall time (s).
     pub wall_total: f64,
@@ -47,8 +50,13 @@ impl Metrics {
         self.batch_wall.push(wall.as_secs_f64());
     }
 
-    pub fn record_request(&mut self, queue_delay: Duration) {
+    /// Count one arrival (at submit; the delay is not yet known).
+    pub fn record_request(&mut self) {
         self.requests += 1;
+    }
+
+    /// Record one request's arrival → batch-dispatch wait (at drain).
+    pub fn record_queue_delay(&mut self, queue_delay: Duration) {
         self.queue_delay.push(queue_delay.as_secs_f64());
     }
 
@@ -98,12 +106,16 @@ mod tests {
     #[test]
     fn accumulates() {
         let mut m = Metrics::new();
-        m.record_request(Duration::from_micros(10));
-        m.record_request(Duration::from_micros(20));
+        m.record_request();
+        m.record_request();
+        m.record_queue_delay(Duration::from_micros(10));
+        m.record_queue_delay(Duration::from_micros(20));
         m.record_batch(2, 1e-9, 100, 0, 0, Duration::from_micros(50));
         m.wall_total = 1.0;
         assert_eq!(m.requests, 2);
         assert_eq!(m.decisions, 2);
+        assert_eq!(m.queue_delay.count(), 2);
+        assert!((m.queue_delay.mean() - 15e-6).abs() < 1e-12);
         assert!((m.energy_per_dec() - 0.5e-9).abs() < 1e-18);
         assert_eq!(m.wall_throughput(), 2.0);
         assert!(m.summary_line().contains("decisions=2"));

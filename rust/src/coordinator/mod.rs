@@ -2,7 +2,9 @@
 //!
 //! vLLM-router-shaped: requests (feature vectors) enter through the
 //! [`batcher`], the [`scheduler`] walks each batch across the column-wise
-//! divisions with selective-precharge semantics (Fig 4/5) executing every
+//! divisions with selective-precharge semantics (Fig 4/5) — per-lane
+//! survivor sets are packed [`crate::util::rowmask::RowMask`] bitsets,
+//! folded by word-wise AND and popcounted for energy — executing every
 //! row-wise tile per division, and [`metrics`] accounts both the *modeled*
 //! hardware cost (nJ/dec, ns/dec from the synthesizer's device model) and
 //! the *wall-clock* cost of this software incarnation.
@@ -27,5 +29,5 @@ pub mod server;
 pub use batcher::{Batcher, InferenceRequest};
 pub use metrics::Metrics;
 pub use plan::ServingPlan;
-pub use scheduler::{BatchOutcome, Scheduler};
+pub use scheduler::{BatchOutcome, BatchScratch, Scheduler};
 pub use server::{Coordinator, InferenceResponse};

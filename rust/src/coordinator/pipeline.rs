@@ -20,7 +20,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::api::backend::{DivisionRequest, MatchBackend};
+use crate::api::backend::{DivisionMatches, DivisionRequest, MatchBackend};
+use crate::util::rowmask::RowMask;
 
 use super::plan::ServingPlan;
 
@@ -30,8 +31,11 @@ struct PipeBatch {
     /// Per-lane padded query bits.
     queries: Vec<Vec<bool>>,
     real_lanes: usize,
-    /// Per-lane enable mask over padded rows.
-    enabled: Vec<Vec<bool>>,
+    /// Per-lane packed enable mask over padded rows.
+    enabled: Vec<RowMask>,
+    /// Per-stage match output scratch — travels with the batch, so each
+    /// stage reuses the previous stage's allocation.
+    matches: DivisionMatches,
     /// Modeled active-row evaluations accumulated so far.
     active_rows: u64,
     /// First stage error, if any (batch passes through untouched after).
@@ -56,33 +60,25 @@ fn run_stage(
     d: usize,
     batch: &mut PipeBatch,
 ) -> Result<()> {
-    let s = plan.s;
-    let col0 = d * s;
-    // Modeled energy: active rows of real lanes pay this division.
-    for lane_enabled in batch.enabled.iter().take(batch.real_lanes) {
-        batch.active_rows += lane_enabled.iter().filter(|&&e| e).count() as u64;
+    // Modeled energy: active rows of real lanes pay this division
+    // (popcount per lane).
+    for m in batch.enabled.iter().take(batch.real_lanes) {
+        batch.active_rows += m.count_ones() as u64;
     }
-    let lane_bits: Vec<&[bool]> = batch
-        .queries
-        .iter()
-        .map(|q| &q[col0..col0 + s])
-        .collect();
+    // Hardware gating: when no real lane has a surviving row, nothing
+    // precharges — this stage (and every later one) is free.
+    if batch.enabled[..batch.real_lanes].iter().all(|m| !m.any()) {
+        return Ok(());
+    }
     let req = DivisionRequest {
         division: d,
-        lane_bits: &lane_bits,
+        queries: &batch.queries,
         enabled: &batch.enabled,
     };
-    let matches = backend.match_division(plan, &req)?;
-    drop(lane_bits);
-    for (rt, tile_matches) in matches.iter().enumerate() {
-        for (lane, en) in batch.enabled.iter_mut().enumerate() {
-            let base = rt * s;
-            let lane_m = &tile_matches[lane * s..(lane + 1) * s];
-            for r in 0..s {
-                let idx = base + r;
-                en[idx] = en[idx] && lane_m[r];
-            }
-        }
+    backend.match_division(plan, &req, &mut batch.matches)?;
+    // Fold: word-wise AND of match bits into the enable masks.
+    for (en, m) in batch.enabled.iter_mut().zip(&batch.matches) {
+        en.and_assign(m);
     }
     Ok(())
 }
@@ -130,18 +126,14 @@ pub fn run_pipeline(
         std::thread::spawn(move || {
             for (seq, (queries, real_lanes)) in batches.into_iter().enumerate() {
                 let lanes = queries.len();
-                let enabled: Vec<Vec<bool>> = (0..lanes)
-                    .map(|_| {
-                        let mut v = vec![false; plan.padded_rows];
-                        v[..plan.initially_active].fill(true);
-                        v
-                    })
-                    .collect();
+                let enabled: Vec<RowMask> =
+                    (0..lanes).map(|_| plan.initial_mask()).collect();
                 let batch = PipeBatch {
                     seq: seq as u64,
                     enabled,
                     queries,
                     real_lanes,
+                    matches: DivisionMatches::new(),
                     active_rows: 0,
                     error: None,
                 };
@@ -167,7 +159,7 @@ pub fn run_pipeline(
                 classes.push(None);
                 continue;
             }
-            let mut survivors = en.iter().enumerate().filter(|(_, &e)| e).map(|(i, _)| i);
+            let mut survivors = en.ones();
             match (survivors.next(), survivors.next()) {
                 (None, _) => {
                     no_match += 1;

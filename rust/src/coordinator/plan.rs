@@ -10,6 +10,7 @@ use crate::compiler::Lut;
 use crate::synth::mapping::MappedArray;
 use crate::tcam::cell::Cell;
 use crate::tcam::params::DeviceParams;
+use crate::util::rowmask::RowMask;
 
 /// Per column-division precomputed buffers.
 #[derive(Clone, Debug)]
@@ -132,6 +133,12 @@ impl ServingPlan {
     pub fn w_bytes(&self) -> usize {
         self.divisions.iter().map(|d| d.w.len() * 4).sum()
     }
+
+    /// Fresh per-lane selective-precharge mask: the first
+    /// `initially_active` (non-rogue) rows enabled, packed.
+    pub fn initial_mask(&self) -> RowMask {
+        RowMask::with_prefix(self.padded_rows, self.initially_active)
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +197,10 @@ mod tests {
         }
         assert_eq!(plan.initially_active, m.real_rows);
         assert!(plan.w_bytes() > 0);
+        let mask = plan.initial_mask();
+        assert_eq!(mask.len(), plan.padded_rows);
+        assert_eq!(mask.count_ones(), plan.initially_active);
+        assert_eq!(mask.first_one(), Some(0));
     }
 
     #[test]

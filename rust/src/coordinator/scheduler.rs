@@ -1,16 +1,24 @@
 //! Stage scheduler: one batch across all column divisions (Fig 4).
 //!
 //! Sequential column-wise walk with selective-precharge semantics: a
-//! per-lane enable bitmask over the padded rows is ANDed with each
-//! division's match results; rows disabled for a lane are not counted as
-//! active (energy) in later divisions. Division evaluation is delegated
-//! to a pluggable [`MatchBackend`] (native simulator, threaded-native,
-//! or PJRT artifacts — see [`crate::api::registry`]); the scheduler owns
-//! what the backends must not: mask folding, energy accounting, and the
-//! survivor → class priority encoding.
+//! per-lane packed [`RowMask`] over the padded rows is ANDed (word-wise)
+//! with each division's match results; rows disabled for a lane are not
+//! counted as active (energy) in later divisions, and once *every* real
+//! lane's mask is empty the walk stops — the hardware gates all
+//! precharge at that point, so the remaining divisions cost nothing.
+//! Division evaluation is delegated to a pluggable [`MatchBackend`]
+//! (native simulator, threaded-native, or PJRT artifacts — see
+//! [`crate::api::registry`]); the scheduler owns what the backends must
+//! not: mask folding, energy accounting, and the survivor → class
+//! priority encoding.
+//!
+//! §Perf: with a caller-held [`BatchScratch`] the division walk performs
+//! no heap allocation — masks, match outputs and the backends' gather
+//! scratch are all reused across divisions *and* batches.
 
-use crate::api::backend::{DivisionRequest, MatchBackend};
+use crate::api::backend::{DivisionMatches, DivisionRequest, MatchBackend};
 use crate::tcam::params::DeviceParams;
+use crate::util::rowmask::{reset_masks, RowMask};
 
 use super::plan::ServingPlan;
 
@@ -23,30 +31,66 @@ pub struct BatchOutcome {
     pub modeled_energy: f64,
     /// Active row-division evaluations (modeled, real lanes only).
     pub active_row_evals: u64,
+    /// Column divisions actually walked (< `n_cwd` when the early-exit
+    /// gate fired because every real lane's mask emptied).
+    pub divisions_evaluated: usize,
     pub no_match: usize,
     pub multi_match: usize,
+}
+
+/// Reusable scratch for [`Scheduler::run_batch_with`]: the per-lane
+/// enable masks and the backend's match output. Hold one per serving
+/// loop and the batch walk allocates nothing after warm-up.
+#[derive(Default)]
+pub struct BatchScratch {
+    enabled: Vec<RowMask>,
+    matches: DivisionMatches,
 }
 
 /// Scheduler over a prepared plan.
 pub struct Scheduler<'a> {
     pub plan: &'a ServingPlan,
     pub params: &'a DeviceParams,
+    /// Stop walking divisions once every real lane's mask is empty
+    /// (default true — mirrors the hardware's precharge gating). The
+    /// early-exit and full walks produce identical outcomes; the flag
+    /// exists so tests can prove it.
+    pub early_exit: bool,
 }
 
 impl<'a> Scheduler<'a> {
     pub fn new(plan: &'a ServingPlan, params: &'a DeviceParams) -> Scheduler<'a> {
-        Scheduler { plan, params }
+        Scheduler {
+            plan,
+            params,
+            early_exit: true,
+        }
     }
 
-    /// Execute one batch. `queries[lane]` is the padded query bit-vector
-    /// (length `n_cwd * S`); `real_lanes` lanes at the front are live,
-    /// the rest are padding. Dead lanes cost no modeled energy (their SAs
-    /// are gated like rogue rows).
+    /// Execute one batch with fresh scratch (tests, one-shot callers).
+    /// `queries[lane]` is the padded query bit-vector (length
+    /// `n_cwd * S`); `real_lanes` lanes at the front are live, the rest
+    /// are padding. Dead lanes cost no modeled energy (their SAs are
+    /// gated like rogue rows).
     pub fn run_batch(
         &self,
         backend: &dyn MatchBackend,
         queries: &[Vec<bool>],
         real_lanes: usize,
+    ) -> anyhow::Result<BatchOutcome> {
+        let mut scratch = BatchScratch::default();
+        self.run_batch_with(backend, queries, real_lanes, &mut scratch)
+    }
+
+    /// Execute one batch reusing caller-held scratch — the serving hot
+    /// path ([`crate::coordinator::Coordinator`] holds one scratch for
+    /// its whole lifetime).
+    pub fn run_batch_with(
+        &self,
+        backend: &dyn MatchBackend,
+        queries: &[Vec<bool>],
+        real_lanes: usize,
+        scratch: &mut BatchScratch,
     ) -> anyhow::Result<BatchOutcome> {
         let plan = self.plan;
         let s = plan.s;
@@ -56,74 +100,65 @@ impl<'a> Scheduler<'a> {
             assert_eq!(q.len(), plan.n_cwd * s, "query width mismatch");
         }
 
-        // Per-lane enable mask over padded rows.
-        let mut enabled: Vec<Vec<bool>> = (0..lanes)
-            .map(|_| {
-                let mut v = vec![false; plan.padded_rows];
-                v[..plan.initially_active].fill(true);
-                v
-            })
-            .collect();
+        // Per-lane packed enable masks over padded rows (rogue rows and
+        // padding gated from the start).
+        reset_masks(&mut scratch.enabled, lanes, plan.padded_rows);
+        for m in scratch.enabled.iter_mut() {
+            m.reset_prefix(plan.initially_active);
+        }
+
         let mut energy_rows: u64 = 0;
+        let mut divisions_evaluated = 0usize;
 
         for d in 0..plan.divisions.len() {
-            // Modeled energy: active rows of real lanes pay this division.
-            for lane_enabled in enabled.iter().take(real_lanes) {
-                energy_rows += lane_enabled.iter().filter(|&&e| e).count() as u64;
+            // Hardware gating: when no real lane has a surviving row,
+            // nothing precharges — the remaining divisions are free.
+            if self.early_exit
+                && scratch.enabled[..real_lanes].iter().all(|m| !m.any())
+            {
+                break;
             }
 
-            // Division query bits per lane.
-            let col0 = d * s;
-            let lane_bits: Vec<&[bool]> =
-                queries.iter().map(|q| &q[col0..col0 + s]).collect();
+            // Modeled energy: active rows of real lanes pay this
+            // division (a popcount per lane, not a byte scan).
+            for m in scratch.enabled.iter().take(real_lanes) {
+                energy_rows += m.count_ones() as u64;
+            }
 
             // Evaluate all row tiles through the backend.
             let req = DivisionRequest {
                 division: d,
-                lane_bits: &lane_bits,
-                enabled: &enabled,
+                queries,
+                enabled: &scratch.enabled,
             };
-            let matches = backend.match_division(plan, &req)?;
+            backend.match_division(plan, &req, &mut scratch.matches)?;
+            divisions_evaluated += 1;
 
-            // AND the results into the enable masks.
-            for (rt, tile_matches) in matches.iter().enumerate() {
-                for lane in 0..lanes {
-                    let base = rt * s;
-                    let lane_m = &tile_matches[lane * s..(lane + 1) * s];
-                    let en = &mut enabled[lane];
-                    for r in 0..s {
-                        let idx = base + r;
-                        en[idx] = en[idx] && lane_m[r];
-                    }
-                }
+            // Fold: word-wise AND of match bits into the enable masks.
+            for (en, m) in scratch.enabled.iter_mut().zip(&scratch.matches) {
+                en.and_assign(m);
             }
         }
 
-        // Survivors -> classes.
+        // Survivors -> classes (priority encoder: lowest row wins).
         let mut classes = Vec::with_capacity(lanes);
         let mut no_match = 0;
         let mut multi_match = 0;
-        for (lane, en) in enabled.iter().enumerate() {
+        for (lane, en) in scratch.enabled.iter().enumerate() {
             if lane >= real_lanes {
                 classes.push(None);
                 continue;
             }
-            let survivors: Vec<usize> = en
-                .iter()
-                .enumerate()
-                .filter(|(_, &e)| e)
-                .map(|(i, _)| i)
-                .collect();
-            match survivors.len() {
-                0 => {
+            let mut ones = en.ones();
+            match (ones.next(), ones.next()) {
+                (None, _) => {
                     no_match += 1;
                     classes.push(None);
                 }
-                1 => classes.push(Some(plan.classes[survivors[0]])),
-                _ => {
+                (Some(first), None) => classes.push(Some(plan.classes[first])),
+                (Some(first), Some(_)) => {
                     multi_match += 1;
-                    // Priority encoder: lowest row wins.
-                    classes.push(Some(plan.classes[survivors[0]]));
+                    classes.push(Some(plan.classes[first]));
                 }
             }
         }
@@ -134,6 +169,7 @@ impl<'a> Scheduler<'a> {
             classes,
             modeled_energy,
             active_row_evals: energy_rows,
+            divisions_evaluated,
             no_match,
             multi_match,
         })
@@ -176,6 +212,7 @@ mod tests {
         let out = sched.run_batch(&backend, &queries, 32).unwrap();
         assert_eq!(out.no_match, 0);
         assert_eq!(out.multi_match, 0);
+        assert_eq!(out.divisions_evaluated, plan.n_cwd);
         for (i, x) in d.features[..32].iter().enumerate() {
             assert_eq!(out.classes[i], lut.classify(x), "lane {i}");
         }
@@ -221,6 +258,67 @@ mod tests {
         for (i, x) in d.features[..16].iter().enumerate() {
             assert_eq!(out.classes[i], lut.classify(x), "lane {i}");
         }
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches_is_identical() {
+        // The serving loop reuses one BatchScratch; outcomes must match
+        // fresh-scratch runs batch after batch, including after a batch
+        // of different width.
+        let (d, lut, m, p) = setup("haberman", 16);
+        let plan = ServingPlan::build(&m, &m.vref, &p);
+        let sched = Scheduler::new(&plan, &p);
+        let backend = NativeBackend::new();
+        let queries: Vec<Vec<bool>> = d.features[..24]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+
+        let mut scratch = BatchScratch::default();
+        for chunk in [&queries[..16], &queries[16..24], &queries[..24]] {
+            let fresh = sched.run_batch(&backend, chunk, chunk.len()).unwrap();
+            let reused = sched
+                .run_batch_with(&backend, chunk, chunk.len(), &mut scratch)
+                .unwrap();
+            assert_eq!(fresh.classes, reused.classes);
+            assert_eq!(fresh.active_row_evals, reused.active_row_evals);
+            assert_eq!(fresh.modeled_energy, reused.modeled_energy);
+        }
+    }
+
+    #[test]
+    fn early_exit_matches_full_walk_and_skips_dead_divisions() {
+        // Force division 0 to kill every row (thresholds at -inf: no
+        // conductance sum can be below them), then prove the early-exit
+        // walk reports identical classes/energy to the full walk while
+        // evaluating only the first division.
+        let (d, lut, m, p) = setup("haberman", 16);
+        let mut plan = ServingPlan::build(&m, &m.vref, &p);
+        assert!(plan.n_cwd > 1);
+        for t in plan.divisions[0].gthresh.iter_mut() {
+            *t = f32::NEG_INFINITY;
+        }
+        let backend = NativeBackend::new();
+        let queries: Vec<Vec<bool>> = d.features[..8]
+            .iter()
+            .map(|x| m.pad_query(&lut.encode_input(x)))
+            .collect();
+
+        let mut gated = Scheduler::new(&plan, &p);
+        gated.early_exit = true;
+        let mut full = Scheduler::new(&plan, &p);
+        full.early_exit = false;
+
+        let a = gated.run_batch(&backend, &queries, 8).unwrap();
+        let b = full.run_batch(&backend, &queries, 8).unwrap();
+        assert_eq!(a.divisions_evaluated, 1, "gate must fire after div 0");
+        assert_eq!(b.divisions_evaluated, plan.n_cwd);
+        assert_eq!(a.no_match, 8);
+        assert_eq!(a.classes, b.classes);
+        assert_eq!(a.modeled_energy, b.modeled_energy);
+        assert_eq!(a.active_row_evals, b.active_row_evals);
+        assert_eq!(a.no_match, b.no_match);
+        assert_eq!(a.multi_match, b.multi_match);
     }
 
     #[test]

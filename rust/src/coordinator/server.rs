@@ -17,7 +17,7 @@ use crate::tcam::params::DeviceParams;
 use super::batcher::{Batcher, InferenceRequest};
 use super::metrics::Metrics;
 use super::plan::ServingPlan;
-use super::scheduler::Scheduler;
+use super::scheduler::{BatchScratch, Scheduler};
 
 /// One answered request.
 #[derive(Clone, Debug)]
@@ -39,6 +39,9 @@ pub struct Coordinator {
     params: DeviceParams,
     backend: Box<dyn MatchBackend>,
     batcher: Batcher,
+    /// Scheduler scratch reused across every batch this coordinator
+    /// serves — the division walk allocates nothing after warm-up.
+    scratch: BatchScratch,
     pub metrics: Metrics,
 }
 
@@ -80,6 +83,7 @@ impl Coordinator {
             params,
             backend,
             batcher: Batcher::new(batch, Duration::from_millis(2)),
+            scratch: BatchScratch::default(),
             metrics: Metrics::new(),
         })
     }
@@ -93,9 +97,12 @@ impl Coordinator {
         self.backend.name()
     }
 
-    /// Enqueue one request.
+    /// Enqueue one request. The queueing delay is *not* recorded here —
+    /// at submission the request has waited ~0; [`Coordinator::poll`]
+    /// records the real arrival → batch-dispatch delay when the batcher
+    /// releases the request.
     pub fn submit(&mut self, req: InferenceRequest) {
-        self.metrics.record_request(req.arrived.elapsed());
+        self.metrics.record_request();
         self.batcher.push(req);
     }
 
@@ -119,6 +126,12 @@ impl Coordinator {
     fn run_batch(&mut self, batch: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
         let width = self.batcher.batch_width();
         let real = batch.len();
+        // The queue delay is measured here, at batch dispatch: this is
+        // the full batcher wait (arrival → drain), which a deadline-
+        // released partial batch reports as >= max_wait.
+        for r in &batch {
+            self.metrics.record_queue_delay(r.arrived.elapsed());
+        }
         // Encode + pad lanes to the artifact width.
         let mut queries: Vec<Vec<bool>> = batch
             .iter()
@@ -130,7 +143,8 @@ impl Coordinator {
 
         let sched = Scheduler::new(&self.plan, &self.params);
         let t0 = Instant::now();
-        let out = sched.run_batch(self.backend.as_ref(), &queries, real)?;
+        let out =
+            sched.run_batch_with(self.backend.as_ref(), &queries, real, &mut self.scratch)?;
         let wall = t0.elapsed();
         self.metrics.record_batch(
             real,
@@ -243,6 +257,38 @@ mod tests {
         let a = native.classify_all(&txs).unwrap();
         let b = pjrt.classify_all(&txs).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn overdue_partial_batch_releases_on_poll_and_reports_queue_delay() {
+        // One request in a width-32 batcher: poll(false) must release it
+        // once the 2 ms deadline passes, with NO intervening submit, and
+        // the recorded queue delay must be the arrival → dispatch wait
+        // (>= max_wait), not the ~0 observed at submission.
+        let (mut coord, txs, _) = build(EngineKind::Native, "iris", 16);
+        coord.submit(InferenceRequest::new(0, txs[0].clone()));
+        // The first poll normally finds the request not yet overdue and
+        // releases nothing — but a preempted test thread may already be
+        // past the deadline, in which case the batch legitimately
+        // releases now (and still only because >= 2 ms elapsed). Either
+        // way no second submit ever happens.
+        let mut resp = coord.poll(false).unwrap();
+        if resp.is_empty() {
+            assert_eq!(coord.metrics.queue_delay.count(), 0);
+            std::thread::sleep(Duration::from_millis(5));
+            resp = coord.poll(false).unwrap();
+        }
+        assert_eq!(resp.len(), 1, "overdue partial batch must release");
+        assert_eq!(resp[0].id, 0);
+        assert_eq!(coord.metrics.queue_delay.count(), 1);
+        // Release happens only once >= 2 ms (the deadline) has elapsed,
+        // and the delay is measured at dispatch — so it must clear
+        // max_wait on every path.
+        assert!(
+            coord.metrics.queue_delay.max() >= 0.002,
+            "queue delay {} < max_wait",
+            coord.metrics.queue_delay.max()
+        );
     }
 
     #[test]

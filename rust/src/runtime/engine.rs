@@ -14,6 +14,28 @@ use anyhow::{bail, Context, Result};
 
 use super::artifacts::{ArtifactEntry, ArtifactKind, Manifest};
 
+/// Identity of a device-resident constant buffer (W / vref / toc slice).
+///
+/// A plain tuple key: every coordinate participates exactly, hashed and
+/// compared field-by-field. The previous scheme packed these into one
+/// u64 with shifted XORs, which aliased — `rt << 8` reached the division
+/// bits once `rt ≥ 2^16`, and `plan_id << 32` silently truncated — and
+/// an aliased key serves *stale conductances* for a different tile
+/// range or plan. See `buffer_keys_never_alias` below.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BufferKey {
+    /// `ServingPlan::plan_id` of the owning plan (unique per build).
+    pub plan_id: u64,
+    /// Column-division index.
+    pub division: usize,
+    /// First row tile of the uploaded range.
+    pub rt: usize,
+    /// Stacked-artifact chunk width the range was shaped for.
+    pub chunk: usize,
+    /// Which constant: 0 = W, 1 = vref, 2 = toc.
+    pub slot: u8,
+}
+
 /// Output of one artifact execution.
 #[derive(Clone, Debug)]
 pub struct MatchResult {
@@ -36,10 +58,10 @@ pub struct MatchEngine {
     /// name -> compiled executable (lazily compiled, process-lifetime).
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// Device-resident constant buffers (W / vref / toc), keyed by the
-    /// caller's cache key — the tile conductances never change between
-    /// batches, so uploading them once removes the dominant per-call
-    /// host→device copy (§Perf).
-    buffers: RefCell<HashMap<u64, Rc<xla::PjRtBuffer>>>,
+    /// caller's [`BufferKey`] — the tile conductances never change
+    /// between batches, so uploading them once removes the dominant
+    /// per-call host→device copy (§Perf).
+    buffers: RefCell<HashMap<BufferKey, Rc<xla::PjRtBuffer>>>,
 }
 
 impl MatchEngine {
@@ -88,11 +110,11 @@ impl MatchEngine {
     }
 
     /// Upload (or fetch cached) a device-resident f32 buffer. `key` must
-    /// uniquely identify the contents (the scheduler derives it from the
-    /// plan identity + division + tile range).
+    /// uniquely identify the contents (the PJRT backend derives it from
+    /// the plan identity + division + tile range + constant slot).
     pub fn cached_buffer(
         &self,
-        key: u64,
+        key: BufferKey,
         data: &[f32],
         dims: &[usize],
     ) -> Result<Rc<xla::PjRtBuffer>> {
@@ -356,6 +378,41 @@ mod tests {
         let a = eng.match_tile(16, 1, &q, &w, &vref32, toc as f32).unwrap();
         let b = eng.match_tile(16, 1, &q, &w, &vref32, toc as f32).unwrap();
         assert_eq!(a.matched, b.matched);
+    }
+
+    #[test]
+    fn buffer_keys_never_alias() {
+        use std::collections::HashSet;
+        // The retired XOR pack collided on adversarial geometries —
+        // demonstrate both documented failure modes, then prove the
+        // tuple key never aliases across the same coordinate space.
+        let old_pack = |plan_id: u64, d: u64, rt: u64, chunk: u64, slot: u64| {
+            (plan_id << 32) ^ (d << 24) ^ (rt << 8) ^ (chunk << 2) ^ slot
+        };
+        // rt << 8 reaches the division bits at rt = 2^16.
+        assert_eq!(old_pack(1, 1, 0, 2, 0), old_pack(1, 0, 1 << 16, 2, 0));
+        // plan_id << 32 truncates: plans 2^32 apart alias.
+        assert_eq!(old_pack(7, 0, 0, 2, 0), old_pack(7 + (1 << 32), 0, 0, 2, 0));
+
+        let mut seen = HashSet::new();
+        for plan_id in [0u64, 1, 7, 1 << 31, (1u64 << 32) + 7, u64::MAX] {
+            for division in [0usize, 1, 3, 1 << 16, 1 << 24] {
+                for rt in [0usize, 1, 255, 1 << 16, (1 << 16) + 1] {
+                    for chunk in [1usize, 2, 16] {
+                        for slot in [0u8, 1, 2] {
+                            let key = BufferKey {
+                                plan_id,
+                                division,
+                                rt,
+                                chunk,
+                                slot,
+                            };
+                            assert!(seen.insert(key), "aliased: {key:?}");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

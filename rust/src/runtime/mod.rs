@@ -13,4 +13,4 @@ pub mod artifacts;
 pub mod engine;
 
 pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest};
-pub use engine::{MatchEngine, MatchResult};
+pub use engine::{BufferKey, MatchEngine, MatchResult};

@@ -109,11 +109,14 @@ pub fn match_batch_with_w(
     let mut matched = vec![false; queries.len() * rows];
     let toc = view.t_opt_over_c as f32;
     let vdd = p.vdd as f32;
+    // Gather scratch hoisted out of the query loop: one allocation per
+    // call, zeroed per lane (mirrors the serving path's reusable `g`).
+    let mut g = vec![0.0f32; rows];
     for (qi, bits) in queries.iter().enumerate() {
         debug_assert_eq!(bits.len(), view.cols);
         // G = Q @ W, but Q is one-hot per column: gather instead of full
         // matmul (the kernel's matmul semantics, exploited for speed).
-        let mut g = vec![0.0f32; rows];
+        g.iter_mut().for_each(|x| *x = 0.0);
         for (j, &b) in bits.iter().enumerate() {
             let row_w = &w[(2 * j + usize::from(b)) * rows..(2 * j + usize::from(b) + 1) * rows];
             for (acc, &wv) in g.iter_mut().zip(row_w) {

@@ -43,6 +43,15 @@ pub struct Bench {
     title: String,
     config: BenchConfig,
     results: Vec<CaseResult>,
+    /// Free-form measurement rows from [`Bench::report_value`] — they
+    /// travel into the JSON artifact too (the acceptance-gate numbers,
+    /// e.g. `packed_vs_boolmask_speedup`, live here, not in `results`).
+    values: Vec<(String, f64, String)>,
+    /// Where `finish` writes `BENCH_<title>.json` (None = stdout only).
+    /// Seeded from `DT2CAM_BENCH_JSON_DIR` at construction; override
+    /// with [`Bench::with_json_dir`] (tests use this instead of
+    /// mutating the process environment).
+    json_dir: Option<std::path::PathBuf>,
 }
 
 impl Bench {
@@ -60,11 +69,19 @@ impl Bench {
             title: title.to_string(),
             config,
             results: Vec::new(),
+            values: Vec::new(),
+            json_dir: std::env::var_os("DT2CAM_BENCH_JSON_DIR")
+                .map(std::path::PathBuf::from),
         }
     }
 
     pub fn with_config(mut self, config: BenchConfig) -> Bench {
         self.config = config;
+        self
+    }
+
+    pub fn with_json_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Bench {
+        self.json_dir = Some(dir.into());
         self
     }
 
@@ -108,9 +125,12 @@ impl Bench {
     }
 
     /// Print a free-form measurement row (for model-derived numbers like
-    /// nJ/dec that aren't wall-clock timings but belong in bench output).
+    /// nJ/dec or the packed-mask speedup gate that aren't wall-clock
+    /// timings but belong in bench output and the JSON artifact).
     pub fn report_value(&mut self, name: &str, value: f64, unit: &str) {
         println!("  {:<44} {:>14.6} {unit}", name, value);
+        self.values
+            .push((name.to_string(), value, unit.to_string()));
     }
 
     /// Print a pre-formatted table line (paper-table regeneration rows).
@@ -118,13 +138,35 @@ impl Bench {
         println!("  {line}");
     }
 
-    /// Emit a machine-readable summary and return results.
+    /// Emit a machine-readable summary and return results. When
+    /// `DT2CAM_BENCH_JSON_DIR` is set, additionally writes
+    /// `<dir>/BENCH_<title>.json` (one object per case) so CI can
+    /// archive the perf trajectory run over run.
     pub fn finish(self) -> Vec<CaseResult> {
+        let mut lines = Vec::with_capacity(self.results.len() + self.values.len());
         for r in &self.results {
-            println!(
-                "BENCHJSON {{\"bench\":\"{}\",\"case\":\"{}\",\"ns_mean\":{:.1},\"ns_p50\":{:.1},\"ns_p95\":{:.1},\"iters\":{}}}",
+            let line = format!(
+                "{{\"bench\":\"{}\",\"case\":\"{}\",\"ns_mean\":{:.1},\"ns_p50\":{:.1},\"ns_p95\":{:.1},\"iters\":{}}}",
                 self.title, r.name, r.ns_per_iter.mean, r.ns_per_iter.p50, r.ns_per_iter.p95, r.iters
             );
+            println!("BENCHJSON {line}");
+            lines.push(line);
+        }
+        for (name, value, unit) in &self.values {
+            let line = format!(
+                "{{\"bench\":\"{}\",\"value\":\"{name}\",\"v\":{value:.6},\"unit\":\"{unit}\"}}",
+                self.title
+            );
+            println!("BENCHJSON {line}");
+            lines.push(line);
+        }
+        if let Some(dir) = &self.json_dir {
+            let path = dir.join(format!("BENCH_{}.json", self.title));
+            let body = format!("[\n  {}\n]\n", lines.join(",\n  "));
+            match std::fs::create_dir_all(dir).and_then(|()| std::fs::write(&path, body)) {
+                Ok(()) => println!("  wrote {}", path.display()),
+                Err(e) => eprintln!("  could not write {}: {e}", path.display()),
+            }
         }
         self.results
     }
@@ -150,5 +192,29 @@ mod tests {
         assert!(r.ns_per_iter.mean >= 0.0);
         let all = b.finish();
         assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn bench_json_file_is_written_when_dir_is_set() {
+        let dir = std::env::temp_dir().join(format!("dt2cam_benchjson_{}", std::process::id()));
+        let mut b = Bench::new("jsontest")
+            .with_config(BenchConfig {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(2),
+                min_samples: 2,
+                max_samples: 4,
+            })
+            .with_json_dir(&dir);
+        b.case("tick", || {
+            std::hint::black_box(1 + 1);
+        });
+        b.report_value("speedup", 2.5, "x");
+        b.finish();
+        let path = dir.join("BENCH_jsontest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"case\":\"tick\""));
+        assert!(text.contains("\"value\":\"speedup\""));
+        assert!(text.trim_start().starts_with('['));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

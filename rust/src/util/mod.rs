@@ -4,6 +4,7 @@
 
 pub mod benchkit;
 pub mod prng;
+pub mod rowmask;
 pub mod stats;
 pub mod threadpool;
 

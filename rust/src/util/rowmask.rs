@@ -1,0 +1,367 @@
+//! Packed row bitmask — the selective-precharge survivor set.
+//!
+//! The paper's Fig. 4 scheme keeps, per query lane, the set of rows that
+//! are still candidates after each column division; everything hot in
+//! the serving spine (energy accounting, mask folding, density gating,
+//! sparse-row iteration) is a set operation over that survivor set. A
+//! `Vec<bool>` representation pays one byte and one branch per padded
+//! row; [`RowMask`] packs the set into u64 words so folding is a
+//! word-wise AND, activity counting is a popcount, and the sparse match
+//! path iterates set bits directly.
+//!
+//! Invariant: bits at positions `>= len` in the tail word are always
+//! zero, so whole-word popcounts and emptiness checks never see ghost
+//! rows. Every mutating method preserves this (the tail-word mask in
+//! [`RowMask::reset_prefix`] is the classic bitset bug — see the tests).
+
+use crate::util::ceil_div;
+
+const WORD_BITS: usize = 64;
+
+/// A fixed-length bitset over padded rows, packed into u64 words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowMask {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl RowMask {
+    /// All-false mask over `len` rows.
+    pub fn zeros(len: usize) -> RowMask {
+        RowMask {
+            words: vec![0; ceil_div(len, WORD_BITS)],
+            len,
+        }
+    }
+
+    /// Mask with the first `prefix` rows set (the initial enable state:
+    /// real rows active, rogue/padding rows gated).
+    pub fn with_prefix(len: usize, prefix: usize) -> RowMask {
+        let mut m = RowMask::zeros(len);
+        m.reset_prefix(prefix);
+        m
+    }
+
+    /// Build from unpacked booleans (tests, interop with legacy layouts).
+    pub fn from_bools(bits: &[bool]) -> RowMask {
+        let mut m = RowMask::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                m.set(i);
+            }
+        }
+        m
+    }
+
+    /// Unpack to booleans (tests, interop).
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Number of rows covered (set or not).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The backing words (tail bits beyond `len` are guaranteed zero, so
+    /// word-granular scans — popcounts, tile slices at `S % 64 == 0` —
+    /// need no edge handling).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Resize to `len` rows, all false, reusing the allocation.
+    pub fn reset_zeros(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(ceil_div(len, WORD_BITS), 0);
+        self.len = len;
+    }
+
+    /// Set exactly the first `prefix` rows, clearing the rest. The tail
+    /// word is masked so no bit at `>= prefix` survives.
+    pub fn reset_prefix(&mut self, prefix: usize) {
+        assert!(prefix <= self.len, "prefix {prefix} > len {}", self.len);
+        let full = prefix / WORD_BITS;
+        for w in &mut self.words[..full] {
+            *w = !0;
+        }
+        for w in &mut self.words[full..] {
+            *w = 0;
+        }
+        if prefix % WORD_BITS != 0 {
+            self.words[full] = (1u64 << (prefix % WORD_BITS)) - 1;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len, "bit {i} out of range {}", self.len);
+        self.words[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+    }
+
+    #[inline]
+    pub fn unset(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / WORD_BITS] &= !(1u64 << (i % WORD_BITS));
+    }
+
+    /// Word-wise `self &= other` — the scheduler's mask fold.
+    pub fn and_assign(&mut self, other: &RowMask) {
+        assert_eq!(self.len, other.len, "mask length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// Word-wise `self |= other` — merging disjoint per-worker partials.
+    pub fn or_assign(&mut self, other: &RowMask) {
+        assert_eq!(self.len, other.len, "mask length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Number of set rows (popcount over words).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Any row set at all? One branch per word, early-out.
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Set rows within `[lo, hi)` — per-tile activity for density gating.
+    pub fn count_range(&self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi && hi <= self.len);
+        if lo == hi {
+            return 0;
+        }
+        let wl = lo / WORD_BITS;
+        let wh = (hi - 1) / WORD_BITS;
+        let mask_lo = !0u64 << (lo % WORD_BITS);
+        let mask_hi = !0u64 >> (WORD_BITS - 1 - (hi - 1) % WORD_BITS);
+        if wl == wh {
+            (self.words[wl] & mask_lo & mask_hi).count_ones() as usize
+        } else {
+            let mut n = (self.words[wl] & mask_lo).count_ones() as usize;
+            for w in &self.words[wl + 1..wh] {
+                n += w.count_ones() as usize;
+            }
+            n + (self.words[wh] & mask_hi).count_ones() as usize
+        }
+    }
+
+    /// Iterate set rows in ascending order.
+    pub fn ones(&self) -> Ones<'_> {
+        self.ones_range(0, self.len)
+    }
+
+    /// Iterate set rows within `[lo, hi)` — the sparse match path walks a
+    /// tile's surviving rows without scanning disabled ones.
+    pub fn ones_range(&self, lo: usize, hi: usize) -> Ones<'_> {
+        assert!(lo <= hi && hi <= self.len);
+        let wi = lo / WORD_BITS;
+        let cur = match self.words.get(wi) {
+            Some(&w) => w & (!0u64 << (lo % WORD_BITS)),
+            None => 0,
+        };
+        Ones {
+            words: &self.words,
+            wi,
+            cur,
+            hi,
+        }
+    }
+
+    /// Lowest set row — the priority encoder (lowest row wins).
+    pub fn first_one(&self) -> Option<usize> {
+        self.ones().next()
+    }
+}
+
+/// Set-bit iterator over a [`RowMask`] range (word-skipping).
+pub struct Ones<'a> {
+    words: &'a [u64],
+    wi: usize,
+    cur: u64,
+    hi: usize,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.cur == 0 {
+            self.wi += 1;
+            if self.wi >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.wi];
+        }
+        let bit = self.wi * WORD_BITS + self.cur.trailing_zeros() as usize;
+        if bit >= self.hi {
+            self.cur = 0;
+            self.wi = self.words.len();
+            return None;
+        }
+        self.cur &= self.cur - 1;
+        Some(bit)
+    }
+}
+
+/// Reshape a mask vector to `count` all-false masks over `len` rows,
+/// reusing every existing allocation (the per-division match scratch).
+pub fn reset_masks(masks: &mut Vec<RowMask>, count: usize, len: usize) {
+    masks.truncate(count);
+    for m in masks.iter_mut() {
+        m.reset_zeros(len);
+    }
+    while masks.len() < count {
+        masks.push(RowMask::zeros(len));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_and_get_roundtrip() {
+        for (len, prefix) in [(0, 0), (1, 1), (64, 64), (64, 17), (100, 0), (100, 100), (130, 65)]
+        {
+            let m = RowMask::with_prefix(len, prefix);
+            for i in 0..len {
+                assert_eq!(m.get(i), i < prefix, "len {len} prefix {prefix} bit {i}");
+            }
+            assert_eq!(m.count_ones(), prefix);
+            assert_eq!(m.any(), prefix > 0);
+        }
+    }
+
+    #[test]
+    fn tail_word_is_masked_at_non_word_multiple_lengths() {
+        // The classic bitset bug: padded_rows % 64 != 0 leaving ghost
+        // bits in the tail word that popcounts then see.
+        for len in [1usize, 63, 65, 96, 100, 127, 130] {
+            let mut m = RowMask::zeros(len);
+            m.reset_prefix(len); // all rows on
+            assert_eq!(m.count_ones(), len, "len {len}");
+            assert_eq!(m.ones().count(), len);
+            // No word carries a bit at position >= len.
+            if len % 64 != 0 {
+                let tail = *m.words().last().unwrap();
+                assert_eq!(tail >> (len % 64), 0, "ghost bits at len {len}");
+            }
+            // Emptying via AND with zeros stays empty and popcount-0.
+            m.and_assign(&RowMask::zeros(len));
+            assert!(!m.any());
+            assert_eq!(m.count_ones(), 0);
+        }
+    }
+
+    #[test]
+    fn reset_prefix_clears_previous_contents() {
+        let mut m = RowMask::with_prefix(130, 130);
+        m.reset_prefix(7);
+        assert_eq!(m.count_ones(), 7);
+        assert_eq!(m.ones().collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5, 6]);
+        m.reset_prefix(0);
+        assert!(!m.any());
+    }
+
+    #[test]
+    fn and_or_fold() {
+        let a = RowMask::from_bools(&[true, true, false, true, false]);
+        let mut b = RowMask::from_bools(&[true, false, true, true, false]);
+        let mut c = b.clone();
+        b.and_assign(&a);
+        assert_eq!(b.to_bools(), vec![true, false, false, true, false]);
+        c.or_assign(&a);
+        assert_eq!(c.to_bools(), vec![true, true, true, true, false]);
+    }
+
+    #[test]
+    fn ones_range_walks_word_boundaries() {
+        let mut m = RowMask::zeros(200);
+        let set = [0usize, 1, 63, 64, 65, 127, 128, 199];
+        for &i in &set {
+            m.set(i);
+        }
+        assert_eq!(m.ones().collect::<Vec<_>>(), set);
+        assert_eq!(m.ones_range(1, 128).collect::<Vec<_>>(), vec![1, 63, 64, 65, 127]);
+        assert_eq!(m.ones_range(64, 65).collect::<Vec<_>>(), vec![64]);
+        assert_eq!(m.ones_range(66, 127).count(), 0);
+        assert_eq!(m.first_one(), Some(0));
+        m.unset(0);
+        assert_eq!(m.first_one(), Some(1));
+    }
+
+    #[test]
+    fn count_range_matches_iteration() {
+        // Pseudo-random pattern via a multiplicative hash; compare the
+        // masked popcount against brute force on every sub-range.
+        let len = 150;
+        let mut m = RowMask::zeros(len);
+        for i in 0..len {
+            if (i as u64).wrapping_mul(0x9E3779B97F4A7C15) >> 61 & 1 == 1 {
+                m.set(i);
+            }
+        }
+        for lo in (0..len).step_by(7) {
+            for hi in (lo..=len).step_by(13) {
+                let want = (lo..hi).filter(|&i| m.get(i)).count();
+                assert_eq!(m.count_range(lo, hi), want, "[{lo}, {hi})");
+                assert_eq!(m.ones_range(lo, hi).count(), want, "[{lo}, {hi})");
+            }
+        }
+        assert_eq!(m.count_range(len, len), 0);
+    }
+
+    #[test]
+    fn from_to_bools_roundtrip() {
+        let bits: Vec<bool> = (0..77).map(|i| i % 3 == 0).collect();
+        let m = RowMask::from_bools(&bits);
+        assert_eq!(m.to_bools(), bits);
+        assert_eq!(m.len(), 77);
+        assert_eq!(m.count_ones(), bits.iter().filter(|&&b| b).count());
+    }
+
+    #[test]
+    fn reset_masks_reshapes_and_reuses() {
+        let mut v = vec![RowMask::with_prefix(10, 10); 4];
+        reset_masks(&mut v, 2, 70);
+        assert_eq!(v.len(), 2);
+        for m in &v {
+            assert_eq!(m.len(), 70);
+            assert!(!m.any());
+        }
+        reset_masks(&mut v, 5, 3);
+        assert_eq!(v.len(), 5);
+        for m in &v {
+            assert_eq!(m.len(), 3);
+            assert!(!m.any());
+        }
+    }
+
+    #[test]
+    fn empty_mask_edge_cases() {
+        let m = RowMask::zeros(0);
+        assert!(m.is_empty());
+        assert!(!m.any());
+        assert_eq!(m.count_ones(), 0);
+        assert_eq!(m.ones().count(), 0);
+        assert_eq!(m.first_one(), None);
+        assert_eq!(m.words().len(), 0);
+    }
+}

@@ -5,7 +5,10 @@
 use std::path::PathBuf;
 
 use dt2cam::api::registry::{self, BackendOptions};
-use dt2cam::api::{CompiledProgram, Dt2Cam, MappedProgram, MatchBackend};
+use dt2cam::api::{
+    CompiledProgram, DivisionMatches, DivisionRequest, Dt2Cam, MappedProgram, MatchBackend,
+    RowMask,
+};
 use dt2cam::config::{EngineKind, Json};
 use dt2cam::coordinator::Scheduler;
 use dt2cam::tcam::params::DeviceParams;
@@ -73,6 +76,114 @@ fn every_registered_backend_produces_identical_decisions() {
             "backend {}",
             backend.name()
         );
+    }
+}
+
+#[test]
+fn every_registered_backend_agrees_under_partial_masks() {
+    // The disabled-row contract, registry-wide: under *partial* and
+    // adversarial enable masks every backend must produce identical
+    // packed match masks, with masked-off rows always false. The
+    // full-mask parity test above cannot catch a backend that computes
+    // real match bits for disabled rows (the pre-fix pjrt behavior) or
+    // leaves them unset only on one of its dense/sparse paths.
+    let model = Dt2Cam::dataset("haberman").unwrap();
+    let program = model.compile();
+    let p = DeviceParams::default();
+    let mapped = program.map(16, &p);
+    let plan = mapped.plan();
+
+    let take = model.test_x.len().min(16);
+    let queries: Vec<Vec<bool>> = model.test_x[..take]
+        .iter()
+        .map(|x| mapped.mapped.pad_query(&program.lut.encode_input(x)))
+        .collect();
+
+    // Adversarial patterns over the padded rows: lane-staggered stripes,
+    // single survivors with fully-gated lanes, the active prefix's tail
+    // (tail-word stress), and rows *beyond* the initially-active prefix
+    // (rogue/padding rows a scheduler would never enable).
+    let patterns: Vec<(&str, Vec<RowMask>)> = vec![
+        (
+            "stripes",
+            (0..take)
+                .map(|lane| {
+                    let mut m = RowMask::zeros(plan.padded_rows);
+                    for r in (lane % 3..plan.padded_rows).step_by(3) {
+                        m.set(r);
+                    }
+                    m
+                })
+                .collect(),
+        ),
+        (
+            "single-survivor",
+            (0..take)
+                .map(|lane| {
+                    let mut m = RowMask::zeros(plan.padded_rows);
+                    if lane % 2 == 0 {
+                        m.set(lane * 5 % plan.padded_rows);
+                    }
+                    m
+                })
+                .collect(),
+        ),
+        (
+            "prefix-tail",
+            (0..take)
+                .map(|_| {
+                    let mut m = RowMask::zeros(plan.padded_rows);
+                    for r in plan.initially_active.saturating_sub(2)..plan.initially_active {
+                        m.set(r);
+                    }
+                    m
+                })
+                .collect(),
+        ),
+        (
+            "beyond-prefix",
+            (0..take)
+                .map(|_| {
+                    let mut m = RowMask::zeros(plan.padded_rows);
+                    for r in plan.initially_active..plan.padded_rows {
+                        m.set(r);
+                    }
+                    m
+                })
+                .collect(),
+        ),
+    ];
+
+    let backends = all_backends();
+    for (name, enabled) in &patterns {
+        for d in 0..plan.n_cwd {
+            let req = DivisionRequest {
+                division: d,
+                queries: &queries,
+                enabled,
+            };
+            let mut baseline = DivisionMatches::new();
+            backends[0].match_division(&plan, &req, &mut baseline).unwrap();
+            // Normative: no backend may report a disabled row as matched.
+            for (lane, m) in baseline.iter().enumerate() {
+                for row in m.ones() {
+                    assert!(
+                        enabled[lane].get(row),
+                        "{name}: disabled row {row} set (lane {lane}, div {d})"
+                    );
+                }
+            }
+            for backend in &backends[1..] {
+                let mut got = DivisionMatches::new();
+                backend.match_division(&plan, &req, &mut got).unwrap();
+                assert_eq!(
+                    got,
+                    baseline,
+                    "backend {} diverges on pattern '{name}', division {d}",
+                    backend.name()
+                );
+            }
+        }
     }
 }
 
