@@ -1,0 +1,118 @@
+//! Forest serving quickstart: a bagged CART ensemble as a multi-bank
+//! CAM program through the typed pipeline facade.
+//!
+//! `Dt2Cam::forest` trains N trees (bootstrap samples, optional feature
+//! subsets); each tree compiles to its own LUT/tile **bank**; banks are
+//! independent CAM arrays, so a `Send + Sync` backend searches them in
+//! parallel and the session combines surviving classes with the
+//! deterministic majority vote (ties → lowest class id). Hardware cost
+//! follows `cart::forest`: energy sums over banks, modeled latency is
+//! the slowest bank plus the vote stage.
+//!
+//! The same artifact flow as single trees applies — the mapped program
+//! saves as a schema-v2 JSON artifact and serves from a separate
+//! process (`dt2cam compile --dataset titanic --forest 9 --save f.json`
+//! then `dt2cam serve --program f.json`).
+//!
+//! ```sh
+//! cargo run --release --example forest_serve
+//! ```
+
+use dt2cam::api::{Dt2Cam, MappedProgram};
+use dt2cam::cart::ForestParams;
+use dt2cam::config::EngineKind;
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::stats::eng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== DT2CAM forest serving (titanic, 9 banks @ S=16) ==");
+
+    // 1. Train the ensemble (and the single tree it competes against).
+    let single = Dt2Cam::dataset("titanic")?;
+    let fp = ForestParams {
+        n_trees: 9,
+        sample_fraction: 0.8,
+        max_features: 0, // all features per tree (bagging only)
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest("titanic", &fp)?;
+    println!(
+        "forest: {} banks, {} total leaves | golden accuracy {:.4} (single tree {:.4})",
+        model.n_banks(),
+        model.forest.total_leaves(),
+        model.golden_accuracy(),
+        single.golden_accuracy(),
+    );
+
+    // 2-3. Compile + map: one LUT and one tile grid per bank.
+    let program = model.compile();
+    let mapped = program.map(16, &DeviceParams::default());
+    for (bi, (cb, mb)) in program.banks.iter().zip(&mapped.banks).enumerate() {
+        println!(
+            "  bank {bi}: LUT {:>3} x {:>2}, {} tiles, map_seed {:#x}",
+            cb.lut.n_rows(),
+            cb.lut.width(),
+            mb.mapped.n_tiles(),
+            mb.map_seed
+        );
+    }
+
+    // Artifact round-trip: the v2 schema carries every bank.
+    let path = std::env::temp_dir().join(format!("dt2cam_forest_{}.json", std::process::id()));
+    mapped.save(&path)?;
+    let mapped = MappedProgram::load(&path)?;
+    std::fs::remove_file(&path).ok();
+    assert_eq!(mapped.n_banks(), 9, "artifact must preserve all banks");
+
+    // 4. Serve the test split: native and threaded-native both dispatch
+    //    banks in parallel and must agree vote-for-vote.
+    let mut native = mapped.session(EngineKind::Native, 32)?;
+    println!(
+        "session: engine={} banks={} bank-parallel={}",
+        native.backend_name(),
+        native.n_banks(),
+        native.bank_parallel()
+    );
+    let t0 = std::time::Instant::now();
+    let classes = native.classify_all(&model.test_x)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut threaded = mapped.session(EngineKind::ThreadedNative, 32)?;
+    let classes_t = threaded.classify_all(&model.test_x)?;
+    assert_eq!(classes, classes_t, "backends must agree on every vote");
+
+    // Ideal hardware: every bank matches its tree, so the combined vote
+    // equals the software forest on every input.
+    let golden_agree = classes
+        .iter()
+        .zip(&model.golden)
+        .filter(|(c, g)| **c == Some(**g))
+        .count();
+    assert_eq!(golden_agree, classes.len(), "ideal hardware must match golden");
+
+    let n = model.test_y.len();
+    let acc = classes
+        .iter()
+        .zip(&model.test_y)
+        .filter(|(c, y)| **c == Some(**y))
+        .count() as f64
+        / n as f64;
+    println!(
+        "served {n} requests in {wall:.3}s ({:.0} dec/s wall) | accuracy {acc:.4}",
+        n as f64 / wall
+    );
+    println!(
+        "modeled: energy/dec {} (sum over banks) | latency {} (slowest bank + vote)",
+        eng(native.metrics().energy_per_dec(), "J"),
+        eng(native.modeled_latency(), "s"),
+    );
+    let breakdown: Vec<String> = native
+        .metrics()
+        .bank_energy
+        .iter()
+        .map(|e| format!("{:.2}", e * 1e9 / native.metrics().decisions as f64))
+        .collect();
+    println!("per-bank nJ/dec: [{}]", breakdown.join(", "));
+    println!("ok: 9-bank forest serves end-to-end with bit-identical votes across backends");
+    Ok(())
+}

@@ -21,25 +21,26 @@ fn main() -> anyhow::Result<()> {
     let model = Dt2Cam::dataset("iris")?;
     println!(
         "tree: {} leaves (= LUT rows), depth {}",
-        model.tree.n_leaves(),
-        model.tree.depth()
+        model.tree().n_leaves(),
+        model.tree().depth()
     );
 
-    // 2. DT-HW compile: tree → ternary LUT + input encoders.
+    // 2. DT-HW compile: tree → ternary LUT + input encoders (a 1-bank
+    //    program; `Dt2Cam::forest` yields the N-bank generalization).
     let program = model.compile();
-    println!("LUT : {} x {} trits", program.lut.n_rows(), program.lut.width());
-    for r in 0..program.lut.n_rows().min(3) {
+    println!("LUT : {} x {} trits", program.lut().n_rows(), program.lut().width());
+    for r in 0..program.lut().n_rows().min(3) {
         println!(
             "  row {r}: {}  -> class {}",
-            program.lut.row_to_string(r),
-            program.lut.classes[r]
+            program.lut().row_to_string(r),
+            program.lut().classes[r]
         );
     }
 
     // 3. Map onto 16x16 resistive TCAM tiles (ReCAM synthesizer).
     let p = DeviceParams::default();
     let mapped = program.map(16, &p);
-    let m = &mapped.mapped;
+    let m = mapped.primary();
     println!(
         "tiles: {} x {} of {}x{} (decoder column + {} rogue rows)",
         m.n_rwd,
@@ -51,7 +52,7 @@ fn main() -> anyhow::Result<()> {
 
     // 4. Functional simulation on the 10% test split.
     let r = simulate(
-        m, &program.lut, &model.test_x, &model.test_y, &model.golden, &m.vref, &p,
+        m, program.lut(), &model.test_x, &model.test_y, &model.golden, &m.vref, &p,
         &SimOptions::default(),
     );
     println!("accuracy : {:.4} (golden {:.4})", r.accuracy, model.golden_accuracy());

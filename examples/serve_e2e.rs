@@ -61,8 +61,8 @@ fn main() -> anyhow::Result<()> {
         "workload: {} train / {} serve requests, LUT {}x{}",
         model.split.train.len(),
         n,
-        program.lut.n_rows(),
-        program.lut.width()
+        program.lut().n_rows(),
+        program.lut().width()
     );
 
     let acc = |cls: &[Option<usize>]| {

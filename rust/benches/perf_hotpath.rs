@@ -136,12 +136,12 @@ fn main() {
     let program = model.compile();
     let s = 128;
     let mapped = program.map(s, &p);
-    let m = &mapped.mapped;
+    let m = mapped.primary();
     let plan = mapped.plan();
     b.report_line(&format!(
         "covid @S={s}: LUT {}x{}, grid {}x{}, plan W = {:.1} MiB",
-        program.lut.n_rows(),
-        program.lut.width(),
+        program.lut().n_rows(),
+        program.lut().width(),
         m.n_rwd,
         m.n_cwd,
         plan.w_bytes() as f64 / (1 << 20) as f64
@@ -150,14 +150,14 @@ fn main() {
     // L3 stage 1: input encoding.
     let x = &model.test_x[0];
     b.case("encode_input (adaptive unary)", || {
-        std::hint::black_box(program.lut.encode_input(x));
+        std::hint::black_box(program.lut().encode_input(x));
     });
 
     // L3 stage 2: one full batch through the sequential scheduler, per
     // backend (the pluggable seam's overhead must stay invisible here).
     let batch: Vec<Vec<bool>> = model.test_x[..32.min(model.test_x.len())]
         .iter()
-        .map(|x| m.pad_query(&program.lut.encode_input(x)))
+        .map(|x| m.pad_query(&program.lut().encode_input(x)))
         .collect();
     let real = batch.len();
     let sched = Scheduler::new(&plan, &p);
@@ -237,6 +237,86 @@ fn main() {
             .unwrap(),
         );
     });
+
+    // Forest vs single tree (ISSUE 3 acceptance row): a 9-bank forest
+    // program served through bank-parallel dispatch, against (a) the
+    // same program with banks walked sequentially, and (b) 9 separate
+    // single-tree sessions run back to back. Haberman @S=16 keeps the
+    // per-bank work small enough that bank fan-out — not tile fan-out —
+    // dominates the parallel win.
+    {
+        use dt2cam::api::BankDispatch;
+        use dt2cam::cart::ForestParams;
+        use std::time::Instant;
+
+        let fmodel = Dt2Cam::forest(
+            "haberman",
+            &ForestParams {
+                n_trees: 9,
+                sample_fraction: 0.8,
+                max_features: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fmapped = fmodel.compile().map(16, &p);
+        let fx: Vec<Vec<f64>> = fmodel.test_x.iter().take(32).cloned().collect();
+
+        // Bank-parallel (registry dispatch for a Send + Sync backend).
+        let mut par = fmapped.session(EngineKind::Native, 32).unwrap();
+        // Sequential per-bank walk of the same program.
+        let mut seq = fmapped
+            .session_with_dispatch(
+                BankDispatch::Sequential(Box::new(NativeBackend::new())),
+                32,
+            )
+            .unwrap();
+        // Sanity before timing: identical votes either way.
+        assert_eq!(
+            par.classify_all(&fx).unwrap(),
+            seq.classify_all(&fx).unwrap(),
+            "bank dispatch modes diverged"
+        );
+
+        let t_par = b
+            .case("forest9_batch32_bank_parallel", || {
+                std::hint::black_box(par.classify_all(&fx).unwrap());
+            })
+            .ns_per_iter
+            .mean;
+        let t_seq = b
+            .case("forest9_batch32_bank_sequential", || {
+                std::hint::black_box(seq.classify_all(&fx).unwrap());
+            })
+            .ns_per_iter
+            .mean;
+        b.report_value(
+            "forest_bank_parallel_speedup",
+            t_seq / t_par,
+            "x (want > 1)",
+        );
+
+        // 9 sequential single-tree sessions over the same inputs (the
+        // pre-bank workaround for ensembles): per-decision wall-clock.
+        let smodel = Dt2Cam::dataset("haberman").unwrap();
+        let smapped = smodel.compile().map(16, &p);
+        let mut singles: Vec<_> = (0..9)
+            .map(|_| smapped.session(EngineKind::Native, 32).unwrap())
+            .collect();
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            for sess in singles.iter_mut() {
+                std::hint::black_box(sess.classify_all(&fx).unwrap());
+            }
+        }
+        let single9_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+        b.report_value(
+            "forest_vs_single_tree",
+            single9_ns / t_par.max(1.0),
+            "x per-decision speedup of the 9-bank forest over 9 sequential single-tree sessions",
+        );
+    }
 
     // End-to-end serving throughput (native session), reported as dec/s.
     let mut session = mapped.session(EngineKind::Native, 32).unwrap();

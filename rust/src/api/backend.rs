@@ -36,7 +36,7 @@
 //! per division by design; `threaded-native` is the pooled engine.)
 
 use std::cell::RefCell;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -117,6 +117,41 @@ pub trait MatchBackend {
     /// injection, variability sweeps) never aliases stale conductances
     /// and its cache does not grow without bound.
     fn invalidate(&self) {}
+}
+
+/// How a multi-bank (forest) program's banks are dispatched onto one
+/// backend. Banks are independent CAM arrays, so a `Send + Sync` backend
+/// can evaluate them concurrently (one shared instance, per-bank
+/// scheduler scratch); the PJRT client is `Rc`-backed and single-threaded
+/// by construction, so it walks the banks sequentially. Single-bank
+/// programs behave identically under either variant — the coordinator
+/// short-circuits the fan-out when there is only one bank.
+pub enum BankDispatch {
+    /// Banks evaluated one after another on a single-threaded backend.
+    Sequential(Box<dyn MatchBackend>),
+    /// Banks fanned out over [`crate::util::ThreadPool`] workers, all
+    /// sharing this backend instance.
+    Parallel(Arc<dyn MatchBackend + Send + Sync>),
+}
+
+impl BankDispatch {
+    /// The underlying backend, dispatch-agnostic.
+    pub fn backend(&self) -> &dyn MatchBackend {
+        match self {
+            BankDispatch::Sequential(b) => b.as_ref(),
+            BankDispatch::Parallel(b) => b.as_ref(),
+        }
+    }
+
+    /// Registry name of the underlying backend.
+    pub fn name(&self) -> &'static str {
+        self.backend().name()
+    }
+
+    /// Whether banks may evaluate concurrently.
+    pub fn is_parallel(&self) -> bool {
+        matches!(self, BankDispatch::Parallel(_))
+    }
 }
 
 thread_local! {

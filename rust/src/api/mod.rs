@@ -1,43 +1,58 @@
 //! The typed pipeline facade — one front door for the paper's strict
 //! pipeline and the load-bearing seam every serving layer builds on.
 //!
-//! The paper's flow is compile-once / execute-many:
+//! The paper's flow is compile-once / execute-many, generalized to
+//! tree-ensemble programs: a program is a vector of **CAM banks** (one
+//! per tree), and a single tree is the 1-bank special case.
 //!
 //! ```text
-//! Dt2Cam::dataset(name)          dataset + split + CART tree
+//! Dt2Cam::dataset(name)          dataset + split + CART tree (1 bank)
+//! Dt2Cam::forest(name, params)   dataset + split + bagged forest (N banks)
 //!        │ .compile()
 //!        ▼
-//! CompiledProgram                ternary LUT + input encoders     (JSON ⇄)
-//!        │ .map(S, params)
+//! CompiledProgram                per-bank ternary LUT + encoders +
+//!        │ .map(S, params)       feature projection          (JSON ⇄ v2)
 //!        ▼
-//! MappedProgram                  S×S tile grid + vref + physics   (JSON ⇄)
-//!        │ .session(engine, batch)
+//! MappedProgram                  per-bank S×S tile grid + vref +
+//!        │ .session(engine, b)   per-bank mapping seed       (JSON ⇄ v2)
 //!        ▼
-//! Session                        coordinator handle (batcher + scheduler
-//!                                + metrics over one MatchBackend)
+//! Session                        coordinator handle: batcher + per-bank
+//!                                scheduler + majority vote + metrics
+//!                                over one MatchBackend
 //! ```
 //!
 //! Every stage is an owned artifact; the two middle stages save/load as
-//! JSON so `dt2cam compile` and `dt2cam serve` can run as separate
+//! JSON (schema v2; v1 single-tree artifacts still load as 1-bank
+//! programs) so `dt2cam compile` and `dt2cam serve` can run as separate
 //! processes (see `docs/API.md`).
 //!
 //! Execution substrates plug in through the object-safe [`MatchBackend`]
 //! trait; [`registry`] maps `--engine` names (`native`,
 //! `threaded-native`, `pjrt`) to constructors, and the coordinator,
 //! scheduler and pipeline compile only against `&dyn MatchBackend`.
+//! Banks are independent CAM arrays: a `Send + Sync` backend evaluates
+//! them concurrently ([`BankDispatch::Parallel`], fan-out over
+//! `util::ThreadPool`), the `!Send` PJRT client walks them sequentially
+//! ([`BankDispatch::Sequential`]) — identical results either way.
+//! Hardware cost semantics follow `cart::forest`: modeled energy sums
+//! over banks, modeled latency is the slowest bank plus the vote stage.
 //!
 //! ```no_run
 //! use dt2cam::api::Dt2Cam;
+//! use dt2cam::cart::ForestParams;
 //! use dt2cam::config::EngineKind;
 //! use dt2cam::tcam::params::DeviceParams;
 //!
 //! # fn main() -> anyhow::Result<()> {
-//! let model = Dt2Cam::dataset("iris")?;          // train CART
-//! let program = model.compile();                 // DT-HW compile → LUT
-//! let mapped = program.map(16, &DeviceParams::default()); // tile map
-//! let mut session = mapped.session(EngineKind::Native, 32)?;
-//! let classes = session.classify_all(&model.test_x)?;
-//! assert_eq!(classes.len(), model.test_x.len());
+//! // Single tree (1 bank):
+//! let model = Dt2Cam::dataset("iris")?;
+//! // Bagged forest (9 banks), same downstream API:
+//! let forest = Dt2Cam::forest("titanic", &ForestParams::default())?;
+//! let program = forest.compile();               // one LUT per bank
+//! let mapped = program.map(16, &DeviceParams::default()); // per-bank tiles
+//! let mut session = mapped.session(EngineKind::Native, 32)?; // bank-parallel
+//! let classes = session.classify_all(&forest.test_x)?;    // majority vote
+//! assert_eq!(classes.len(), forest.test_x.len());
 //! # Ok(()) }
 //! ```
 
@@ -47,10 +62,12 @@ pub mod registry;
 pub mod serde;
 
 pub use backend::{
-    DivisionMatches, DivisionRequest, MatchBackend, NativeBackend, PjrtBackend,
+    BankDispatch, DivisionMatches, DivisionRequest, MatchBackend, NativeBackend, PjrtBackend,
     ThreadedNativeBackend,
 };
-pub use program::{CompiledProgram, Dt2Cam, MappedProgram, Session, TrainedModel};
+pub use program::{
+    CompiledBank, CompiledProgram, Dt2Cam, MappedBank, MappedProgram, Session, TrainedModel,
+};
 pub use registry::BackendOptions;
 // The packed survivor-set type backends produce and consume
 // (`DivisionRequest::enabled` / `DivisionMatches`).
@@ -62,8 +79,18 @@ pub const EXPERIMENT_SEED: u64 = 0xD72CA0;
 
 /// Standard mapping seed for tile size `s` under master seed `seed`
 /// (drives the rogue-row class draws; one convention for every caller).
+/// For multi-bank programs this is bank 0's seed — see [`bank_map_seed`].
 pub fn map_seed(seed: u64, s: usize) -> u64 {
     seed ^ ((s as u64) << 8)
+}
+
+/// Mapping seed of bank `bank` under base seed `base` (itself from
+/// [`map_seed`]): bank 0 uses `base` unchanged — exactly the v1
+/// single-tree convention, so old artifacts and the report harness stay
+/// bit-identical — and later banks decorrelate through a golden-ratio
+/// multiply.
+pub fn bank_map_seed(base: u64, bank: usize) -> u64 {
+    base ^ (bank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 #[cfg(test)]
@@ -76,5 +103,18 @@ mod tests {
         // than `<<`, so this must equal SEED ^ (s << 8).
         assert_eq!(map_seed(EXPERIMENT_SEED, 16), EXPERIMENT_SEED ^ (16u64 << 8));
         assert_eq!(map_seed(EXPERIMENT_SEED, 128), EXPERIMENT_SEED ^ (128u64 << 8));
+    }
+
+    #[test]
+    fn bank_zero_keeps_the_v1_mapping_seed() {
+        let base = map_seed(EXPERIMENT_SEED, 16);
+        assert_eq!(bank_map_seed(base, 0), base);
+        // Later banks draw distinct, deterministic seeds.
+        let seeds: Vec<u64> = (0..9).map(|b| bank_map_seed(base, b)).collect();
+        for (i, &a) in seeds.iter().enumerate() {
+            for &b in &seeds[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
     }
 }

@@ -1,25 +1,35 @@
-//! The typed pipeline stages: `Dt2Cam::dataset(..)` → [`TrainedModel`]
-//! → [`CompiledProgram`] → [`MappedProgram`] → [`Session`].
+//! The typed pipeline stages: `Dt2Cam::dataset(..)` / `Dt2Cam::forest(..)`
+//! → [`TrainedModel`] → [`CompiledProgram`] → [`MappedProgram`] →
+//! [`Session`].
+//!
+//! A program is a vector of **CAM banks** end to end: every stage holds
+//! one entry per tree of the underlying ensemble, and a single-tree
+//! program is simply the 1-bank special case (identity feature
+//! projection, trivial vote). Banks are independent CAM arrays — they
+//! compile, map, and search independently; the serving session combines
+//! their surviving classes with the deterministic majority vote from
+//! [`crate::cart::Forest`].
 //!
 //! Every stage is an owned artifact; [`CompiledProgram`] and
-//! [`MappedProgram`] additionally (de)serialize to JSON so `compile` and
-//! `serve` can run in separate processes (`dt2cam compile --save p.json`
-//! then `dt2cam serve --program p.json`). The mapped artifact stores the
-//! compiled LUT, the mapping seed and the per-(division, row) reference
-//! voltages; the tile grid itself is rebuilt deterministically on load
-//! and cross-checked against the stored geometry, so artifacts stay
-//! small even for Credit-scale programs.
+//! [`MappedProgram`] additionally (de)serialize to JSON (schema **v2**,
+//! with v1 single-tree artifacts still loading as 1-bank programs) so
+//! `compile` and `serve` can run in separate processes (`dt2cam compile
+//! --save p.json` then `dt2cam serve --program p.json`). The mapped
+//! artifact stores, per bank, the mapping seed and the per-(division,
+//! row) reference voltages; each bank's tile grid is rebuilt
+//! deterministically on load and cross-checked against the stored
+//! geometry, so artifacts stay small even for Credit-scale programs.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::cart::{train, TrainParams, Tree};
+use crate::cart::{train, train_forest, Forest, ForestParams, TrainParams, Tree};
 use crate::compiler::{compile, Lut};
 use crate::config::json::Json;
 use crate::config::EngineKind;
 use crate::coordinator::plan::ServingPlan;
-use crate::coordinator::server::{Coordinator, InferenceResponse};
+use crate::coordinator::server::{BankSpec, Coordinator, InferenceResponse};
 use crate::coordinator::InferenceRequest;
 use crate::coordinator::Metrics;
 use crate::dataset::{catalog, Dataset, Split};
@@ -27,21 +37,27 @@ use crate::synth::mapping::MappedArray;
 use crate::tcam::params::DeviceParams;
 use crate::util::prng::Prng;
 
-use super::backend::MatchBackend;
+use super::backend::{BankDispatch, MatchBackend};
 use super::registry::{self, BackendOptions};
 use super::serde::{
-    f64_arr, get, get_str, get_u64, get_usize, json_f64s, json_u64, json_usizes,
-    lut_from_json, lut_to_json, params_from_json, params_to_json, usize_arr,
+    bank_from_json, bank_to_json, f64_arr, get, get_arr, get_str, get_u64, get_usize,
+    json_f64s, json_u64, json_usizes, lut_from_json, params_from_json, params_to_json,
+    usize_arr,
 };
-use super::{map_seed, EXPERIMENT_SEED};
+use super::{bank_map_seed, map_seed, EXPERIMENT_SEED};
 
 const COMPILED_FORMAT: &str = "dt2cam-compiled-program";
 const MAPPED_FORMAT: &str = "dt2cam-mapped-program";
-const ARTIFACT_VERSION: usize = 1;
+/// Current artifact schema: v2, the multi-bank layout. v1 (single-tree,
+/// no `banks` array) is still read and upgraded to a 1-bank program.
+const ARTIFACT_VERSION: usize = 2;
+const SUPPORTED_VERSIONS: [usize; 2] = [1, 2];
 
 /// Facade entry point. `Dt2Cam::dataset("iris")` loads + normalizes the
 /// dataset, performs the paper's 90/10 split, and trains the CART tree —
-/// the expensive, once-per-program stage.
+/// the expensive, once-per-program stage. `Dt2Cam::forest(..)` trains a
+/// bagged CART ensemble instead; everything downstream treats the
+/// single tree as a 1-bank forest.
 pub struct Dt2Cam;
 
 impl Dt2Cam {
@@ -53,56 +69,114 @@ impl Dt2Cam {
     /// Same, with an explicit master seed (drives the synthetic dataset
     /// generators, the split shuffle, and downstream mapping seeds).
     pub fn dataset_seeded(name: &str, seed: u64) -> Result<TrainedModel> {
-        let mut dataset = catalog::by_name(name, seed)?;
-        dataset.normalize();
-        let mut rng = Prng::new(seed ^ 0x5917);
-        let split = dataset.split(0.9, &mut rng);
-        let (xs, ys) = dataset.gather(&split.train);
+        let (dataset, split, xs, ys) = load_split(name, seed)?;
         let tree = train(&xs, &ys, dataset.n_classes, &TrainParams::default());
-        let (test_x, test_y) = dataset.gather(&split.test);
-        let golden = test_x.iter().map(|x| tree.predict(x)).collect();
-        Ok(TrainedModel {
-            dataset,
-            split,
-            tree,
-            test_x,
-            test_y,
-            golden,
-            seed,
-        })
+        let forest = Forest::single(tree, dataset.n_features(), dataset.n_classes);
+        Ok(TrainedModel::assemble(dataset, split, forest, seed))
+    }
+
+    /// Ensemble workload: a bagged CART forest (multi-bank program) with
+    /// the standard [`EXPERIMENT_SEED`].
+    pub fn forest(name: &str, params: &ForestParams) -> Result<TrainedModel> {
+        Self::forest_seeded(name, params, EXPERIMENT_SEED)
+    }
+
+    /// Same, with an explicit master seed. The forest's bootstrap and
+    /// feature-subset draws run on their own PRNG stream, so the
+    /// dataset/split state is byte-identical to the single-tree path
+    /// under the same seed.
+    pub fn forest_seeded(name: &str, params: &ForestParams, seed: u64) -> Result<TrainedModel> {
+        let (dataset, split, xs, ys) = load_split(name, seed)?;
+        let mut forest_rng = Prng::new(seed ^ 0xF0BE57);
+        let forest = train_forest(&xs, &ys, dataset.n_classes, params, &mut forest_rng);
+        Ok(TrainedModel::assemble(dataset, split, forest, seed))
     }
 }
 
-/// Stage 1 artifact: normalized dataset + split + trained CART tree +
-/// held-out evaluation data.
+/// Shared head of both training paths: load + normalize + split + gather
+/// the train block (identical PRNG stream either way).
+fn load_split(name: &str, seed: u64) -> Result<(Dataset, Split, Vec<Vec<f64>>, Vec<usize>)> {
+    let mut dataset = catalog::by_name(name, seed)?;
+    dataset.normalize();
+    let mut rng = Prng::new(seed ^ 0x5917);
+    let split = dataset.split(0.9, &mut rng);
+    let (xs, ys) = dataset.gather(&split.train);
+    Ok((dataset, split, xs, ys))
+}
+
+/// Stage 1 artifact: normalized dataset + split + trained ensemble
+/// (1-bank for single trees) + held-out evaluation data.
 pub struct TrainedModel {
     /// The normalized dataset.
     pub dataset: Dataset,
     pub split: Split,
-    pub tree: Tree,
+    /// The trained ensemble: one tree per CAM bank, with per-tree
+    /// feature projections. Single-tree models hold exactly one tree
+    /// with the identity projection.
+    pub forest: Forest,
     /// Test features/labels (gathered).
     pub test_x: Vec<Vec<f64>>,
     pub test_y: Vec<usize>,
-    /// Software-tree predictions on the test split (golden accuracy).
+    /// Software-ensemble predictions on the test split (golden
+    /// accuracy); for one bank this is the plain tree prediction.
     pub golden: Vec<usize>,
     /// Master seed this model was built from.
     pub seed: u64,
 }
 
 impl TrainedModel {
+    fn assemble(dataset: Dataset, split: Split, forest: Forest, seed: u64) -> TrainedModel {
+        let (test_x, test_y) = dataset.gather(&split.test);
+        let mut proj = Vec::new();
+        let golden = test_x
+            .iter()
+            .map(|x| forest.predict_with_buf(x, &mut proj))
+            .collect();
+        TrainedModel {
+            dataset,
+            split,
+            forest,
+            test_x,
+            test_y,
+            golden,
+            seed,
+        }
+    }
+
+    /// The primary (bank 0) tree — the whole model for single-tree
+    /// programs.
+    pub fn tree(&self) -> &Tree {
+        &self.forest.trees[0]
+    }
+
+    /// Number of CAM banks (trees) in this model.
+    pub fn n_banks(&self) -> usize {
+        self.forest.trees.len()
+    }
+
     /// Stage 2: run the DT-HW compiler (tree parse → column reduction →
-    /// ternary adaptive encoding) into an owned [`CompiledProgram`].
+    /// ternary adaptive encoding) per bank into an owned
+    /// [`CompiledProgram`].
     pub fn compile(&self) -> CompiledProgram {
         CompiledProgram {
             dataset: self.dataset.name.clone(),
             seed: self.seed,
-            lut: compile(&self.tree),
+            banks: self
+                .forest
+                .trees
+                .iter()
+                .zip(&self.forest.feature_sets)
+                .map(|(tree, feats)| CompiledBank {
+                    lut: compile(tree),
+                    features: feats.clone(),
+                })
+                .collect(),
             test_indices: self.split.test.clone(),
             golden: self.golden.clone(),
         }
     }
 
-    /// Golden (software tree) test accuracy.
+    /// Golden (software ensemble) test accuracy.
     pub fn golden_accuracy(&self) -> f64 {
         self.golden_accuracy_capped(0)
     }
@@ -123,10 +197,22 @@ impl TrainedModel {
     }
 }
 
-/// Stage 2 artifact: the compiled ternary LUT + input encoders, plus the
-/// evaluation block (test-split indices and golden predictions) that
-/// lets a separate serve process rebuild its request stream without
-/// retraining.
+/// One compiled CAM bank: the DT-HW compiler's product for one tree,
+/// plus the feature projection that tree was grown on.
+#[derive(Clone)]
+pub struct CompiledBank {
+    /// The bank's ternary LUT + input encoders (over the *projected*
+    /// features — `lut.encoders.len() == features.len()`).
+    pub lut: Lut,
+    /// `features[j]` = original dataset index of this bank's j-th
+    /// feature (identity for single-tree programs).
+    pub features: Vec<usize>,
+}
+
+/// Stage 2 artifact: one compiled LUT + input encoders per bank, plus
+/// the evaluation block (test-split indices and golden predictions)
+/// that lets a separate serve process rebuild its request stream
+/// without retraining.
 #[derive(Clone)]
 pub struct CompiledProgram {
     /// Dataset name (catalog key).
@@ -134,36 +220,78 @@ pub struct CompiledProgram {
     /// Master seed the model was trained with (pins the synthetic
     /// dataset generator and the split shuffle).
     pub seed: u64,
-    /// The DT-HW compiler's product: ternary rows + per-feature encoders.
-    pub lut: Lut,
+    /// The CAM banks, one per tree of the ensemble.
+    pub banks: Vec<CompiledBank>,
     /// Test-split row indices into the (deterministic) dataset.
     pub test_indices: Vec<usize>,
-    /// Software-tree predictions for those rows.
+    /// Software-ensemble predictions for those rows.
     pub golden: Vec<usize>,
 }
 
 impl CompiledProgram {
-    /// Stage 3: map onto S×S ReCAM tiles with the standard per-(seed, S)
-    /// mapping seed.
+    /// The primary (bank 0) LUT — the whole program for single-tree
+    /// (1-bank) programs.
+    pub fn lut(&self) -> &Lut {
+        &self.banks[0].lut
+    }
+
+    /// Number of CAM banks.
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Class count (shared by every bank).
+    pub fn n_classes(&self) -> usize {
+        self.banks[0].lut.n_classes
+    }
+
+    /// Stage 3: map every bank onto S×S ReCAM tiles with the standard
+    /// per-(seed, S, bank) mapping-seed convention.
     pub fn map(&self, s: usize, p: &DeviceParams) -> MappedProgram {
         self.map_seeded(s, p, map_seed(self.seed, s))
     }
 
-    /// Same, with an explicit mapping seed (rogue-row class draws).
-    pub fn map_seeded(&self, s: usize, p: &DeviceParams, seed: u64) -> MappedProgram {
-        let mut rng = Prng::new(seed);
-        let mapped = MappedArray::from_lut(&self.lut, s, p, &mut rng);
+    /// Same, with an explicit base mapping seed: bank b draws its rogue
+    /// rows from [`bank_map_seed`]`(base, b)` (bank 0 uses `base`
+    /// itself, preserving the single-tree convention).
+    pub fn map_seeded(&self, s: usize, p: &DeviceParams, base: u64) -> MappedProgram {
+        let banks = self
+            .banks
+            .iter()
+            .enumerate()
+            .map(|(b, cb)| {
+                let seed = bank_map_seed(base, b);
+                let mut rng = Prng::new(seed);
+                MappedBank {
+                    mapped: MappedArray::from_lut(&cb.lut, s, p, &mut rng),
+                    map_seed: seed,
+                }
+            })
+            .collect();
         MappedProgram {
             program: self.clone(),
-            mapped,
+            banks,
             params: p.clone(),
-            map_seed: seed,
         }
     }
 
-    /// Digital reference classification (LUT search).
+    /// Digital reference classification: per-bank LUT search on the
+    /// projected features, combined by the normative forest rule
+    /// ([`crate::cart::vote_survivors`]: silent banks cast no vote,
+    /// ties → lowest class id; `None` means no bank matched).
     pub fn classify(&self, x: &[f64]) -> Option<usize> {
-        self.lut.classify(x)
+        let mut votes = Vec::new();
+        let mut proj = Vec::new();
+        let per_bank: Vec<Option<usize>> = self
+            .banks
+            .iter()
+            .map(|bank| {
+                proj.clear();
+                proj.extend(bank.features.iter().map(|&f| x[f]));
+                bank.lut.classify(&proj)
+            })
+            .collect();
+        crate::cart::vote_survivors(per_bank, self.n_classes(), &mut votes)
     }
 
     /// Reload the (deterministic) dataset this program was trained on and
@@ -189,7 +317,10 @@ impl CompiledProgram {
             ("version", Json::num(ARTIFACT_VERSION as f64)),
             ("dataset", Json::str(self.dataset.clone())),
             ("seed", json_u64(self.seed)),
-            ("lut", lut_to_json(&self.lut)),
+            (
+                "banks",
+                Json::Arr(self.banks.iter().map(bank_to_json).collect()),
+            ),
             ("test_indices", json_usizes(&self.test_indices)),
             ("golden", json_usizes(&self.golden)),
         ])
@@ -200,14 +331,37 @@ impl CompiledProgram {
         if format != COMPILED_FORMAT {
             anyhow::bail!("not a compiled-program artifact (format '{format}')");
         }
-        let version = get_usize(j, "version")?;
-        if version != ARTIFACT_VERSION {
-            anyhow::bail!("unsupported artifact version {version}");
+        let banks = match get_usize(j, "version")? {
+            // v1: single-tree layout — one top-level `lut`, upgraded to
+            // a 1-bank program with the identity feature projection.
+            1 => {
+                let lut = lut_from_json(get(j, "lut")?)?;
+                let features = (0..lut.encoders.len()).collect();
+                vec![CompiledBank { lut, features }]
+            }
+            2 => get_arr(j, "banks")?
+                .iter()
+                .map(bank_from_json)
+                .collect::<Result<_>>()?,
+            found => anyhow::bail!(
+                "unsupported {COMPILED_FORMAT} artifact version {found} \
+                 (this binary supports versions {SUPPORTED_VERSIONS:?})"
+            ),
+        };
+        if banks.is_empty() {
+            anyhow::bail!("artifact has no banks");
+        }
+        let n_classes = banks[0].lut.n_classes;
+        if let Some(bad) = banks.iter().position(|b| b.lut.n_classes != n_classes) {
+            anyhow::bail!(
+                "bank {bad} has {} classes but bank 0 has {n_classes}",
+                banks[bad].lut.n_classes
+            );
         }
         let program = CompiledProgram {
             dataset: get_str(j, "dataset")?,
             seed: get_u64(j, "seed")?,
-            lut: lut_from_json(get(j, "lut")?)?,
+            banks,
             test_indices: usize_arr(j, "test_indices")?,
             golden: usize_arr(j, "golden")?,
         };
@@ -218,15 +372,8 @@ impl CompiledProgram {
                 program.golden.len()
             );
         }
-        if let Some(&bad) = program
-            .golden
-            .iter()
-            .find(|&&g| g >= program.lut.n_classes)
-        {
-            anyhow::bail!(
-                "golden class {bad} out of range (n_classes {})",
-                program.lut.n_classes
-            );
+        if let Some(&bad) = program.golden.iter().find(|&&g| g >= n_classes) {
+            anyhow::bail!("golden class {bad} out of range (n_classes {n_classes})");
         }
         Ok(program)
     }
@@ -241,36 +388,58 @@ impl CompiledProgram {
             .with_context(|| format!("reading {}", path.display()))?;
         let j = Json::parse(&text)
             .with_context(|| format!("parsing {}", path.display()))?;
-        Self::from_json(&j).with_context(|| format!("loading {}", path.display()))
+        Self::from_json(&j)
+            .with_context(|| format!("loading compiled-program artifact {}", path.display()))
     }
 }
 
-/// Stage 3 artifact: the program mapped onto an S×S tile grid, with
-/// device parameters and per-(division, row) reference voltages.
-pub struct MappedProgram {
-    /// The compiled program this mapping was built from.
-    pub program: CompiledProgram,
-    /// The tile grid (cells, classes, divisions, nominal vref).
+/// One mapped CAM bank: the bank's tile grid plus the seed of its
+/// rogue-row class draws.
+pub struct MappedBank {
+    /// The bank's tile grid (cells, classes, divisions, nominal vref).
     pub mapped: MappedArray,
-    /// Device physics the mapping's sensing points were computed with.
-    pub params: DeviceParams,
-    /// Seed of the rogue-row class draws (mapping determinism).
+    /// Seed of this bank's rogue-row class draws (mapping determinism).
     pub map_seed: u64,
 }
 
+/// Stage 3 artifact: the program mapped onto per-bank S×S tile grids,
+/// with shared device parameters and per-bank mapping seeds.
+pub struct MappedProgram {
+    /// The compiled program this mapping was built from.
+    pub program: CompiledProgram,
+    /// One mapped grid per bank, in bank order.
+    pub banks: Vec<MappedBank>,
+    /// Device physics the mappings' sensing points were computed with.
+    pub params: DeviceParams,
+}
+
 impl MappedProgram {
-    /// Tile size S.
+    /// Tile size S (shared by every bank).
     pub fn tile_size(&self) -> usize {
-        self.mapped.s
+        self.banks[0].mapped.s
     }
 
-    /// Build the serving plan (precomputed W buffers, log-domain
-    /// thresholds, timing model) for the current `mapped.vref`.
+    /// Number of CAM banks.
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// The primary (bank 0) tile grid — the whole program for
+    /// single-tree programs.
+    pub fn primary(&self) -> &MappedArray {
+        &self.banks[0].mapped
+    }
+
+    /// Build the primary bank's serving plan (precomputed W buffers,
+    /// log-domain thresholds, timing model) for its current `vref`.
+    /// Sessions build one plan per bank internally.
     pub fn plan(&self) -> ServingPlan {
-        ServingPlan::build(&self.mapped, &self.mapped.vref, &self.params)
+        ServingPlan::build(&self.banks[0].mapped, &self.banks[0].mapped.vref, &self.params)
     }
 
-    /// Stage 4: open a serving session on a registry backend.
+    /// Stage 4: open a serving session on a registry backend. `Send +
+    /// Sync` backends dispatch banks in parallel; the PJRT client walks
+    /// them sequentially.
     pub fn session(&self, engine: EngineKind, batch: usize) -> Result<Session> {
         self.session_with(engine, batch, &BackendOptions::default())
     }
@@ -282,61 +451,110 @@ impl MappedProgram {
         batch: usize,
         opts: &BackendOptions,
     ) -> Result<Session> {
-        self.session_with_backend(registry::create(engine, opts)?, batch)
+        self.session_with_dispatch(registry::create_bank_dispatch(engine, opts)?, batch)
     }
 
-    /// Open a session over an already-constructed backend.
+    /// Open a session over an already-constructed backend (banks are
+    /// walked sequentially; use [`MappedProgram::session_with_dispatch`]
+    /// with [`BankDispatch::Parallel`] for concurrent banks).
     pub fn session_with_backend(
         &self,
         backend: Box<dyn MatchBackend>,
         batch: usize,
     ) -> Result<Session> {
-        let coord = Coordinator::with_backend(
-            backend,
-            batch,
-            self.program.lut.clone(),
-            &self.mapped,
-            &self.mapped.vref,
-            self.params.clone(),
-        )?;
+        self.session_with_dispatch(BankDispatch::Sequential(backend), batch)
+    }
+
+    /// Open a session with an explicit bank-dispatch mode.
+    pub fn session_with_dispatch(&self, dispatch: BankDispatch, batch: usize) -> Result<Session> {
+        let specs: Vec<BankSpec<'_>> = self
+            .program
+            .banks
+            .iter()
+            .zip(&self.banks)
+            .map(|(cb, mb)| BankSpec {
+                lut: cb.lut.clone(),
+                features: cb.features.clone(),
+                mapped: &mb.mapped,
+                vref: &mb.mapped.vref,
+            })
+            .collect();
+        let coord = Coordinator::with_banks(dispatch, batch, specs, self.params.clone())?;
         Ok(Session { coord })
     }
 
-    /// Rebuild the nominal (fault-free) grid this program maps to.
-    fn nominal_grid(&self) -> MappedArray {
-        let mut rng = Prng::new(self.map_seed);
-        MappedArray::from_lut(&self.program.lut, self.mapped.s, &self.params, &mut rng)
+    /// Rebuild one bank's nominal (fault-free) grid.
+    fn nominal_grid(&self, bank: usize) -> MappedArray {
+        let b = &self.banks[bank];
+        let mut rng = Prng::new(b.map_seed);
+        MappedArray::from_lut(&self.program.banks[bank].lut, b.mapped.s, &self.params, &mut rng)
+    }
+
+    fn geometry_json(m: &MappedArray) -> Json {
+        Json::obj(vec![
+            ("n_rwd", Json::num(m.n_rwd as f64)),
+            ("n_cwd", Json::num(m.n_cwd as f64)),
+            ("padded_rows", Json::num(m.padded_rows as f64)),
+            ("padded_width", Json::num(m.padded_width as f64)),
+            ("real_rows", Json::num(m.real_rows as f64)),
+            ("real_width", Json::num(m.real_width as f64)),
+        ])
+    }
+
+    /// Cross-check a stored geometry block against a rebuilt grid.
+    fn check_geometry(geo: &Json, m: &MappedArray, bank: usize) -> Result<()> {
+        for (key, have) in [
+            ("n_rwd", m.n_rwd),
+            ("n_cwd", m.n_cwd),
+            ("padded_rows", m.padded_rows),
+            ("padded_width", m.padded_width),
+            ("real_rows", m.real_rows),
+            ("real_width", m.real_width),
+        ] {
+            let want = get_usize(geo, key)?;
+            if want != have {
+                anyhow::bail!(
+                    "bank {bank} geometry mismatch: {key} stored {want}, rebuilt {have} \
+                     (artifact and code disagree on the mapping)"
+                );
+            }
+        }
+        Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        let mut fields = vec![
+        let bank_objs = self
+            .banks
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let mut fields = vec![
+                    ("map_seed", json_u64(b.map_seed)),
+                    ("geometry", Self::geometry_json(&b.mapped)),
+                    ("vref", json_f64s(&b.mapped.vref)),
+                ];
+                // Fault-injected grids (nonideal::inject_saf rewrites
+                // cell bytes) must survive the round-trip: store the
+                // cells explicitly whenever they deviate from the
+                // deterministic nominal rebuild. Nominal artifacts skip
+                // this and stay small at Credit scale.
+                if b.mapped.cells != self.nominal_grid(bi).cells {
+                    fields.push((
+                        "cells",
+                        Json::str(super::serde::bytes_to_hex(&b.mapped.cells)),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
             ("format", Json::str(MAPPED_FORMAT)),
             ("version", Json::num(ARTIFACT_VERSION as f64)),
-            ("tile_size", Json::num(self.mapped.s as f64)),
-            ("map_seed", json_u64(self.map_seed)),
+            ("tile_size", Json::num(self.tile_size() as f64)),
             ("params", params_to_json(&self.params)),
-            (
-                "geometry",
-                Json::obj(vec![
-                    ("n_rwd", Json::num(self.mapped.n_rwd as f64)),
-                    ("n_cwd", Json::num(self.mapped.n_cwd as f64)),
-                    ("padded_rows", Json::num(self.mapped.padded_rows as f64)),
-                    ("padded_width", Json::num(self.mapped.padded_width as f64)),
-                    ("real_rows", Json::num(self.mapped.real_rows as f64)),
-                    ("real_width", Json::num(self.mapped.real_width as f64)),
-                ]),
-            ),
-            ("vref", json_f64s(&self.mapped.vref)),
-        ];
-        // Fault-injected grids (nonideal::inject_saf rewrites cell bytes)
-        // must survive the round-trip: store the cells explicitly whenever
-        // they deviate from the deterministic nominal rebuild. Nominal
-        // artifacts skip this and stay small at Credit scale.
-        if self.mapped.cells != self.nominal_grid().cells {
-            fields.push(("cells", Json::str(super::serde::bytes_to_hex(&self.mapped.cells))));
-        }
-        fields.push(("program", self.program.to_json()));
-        Json::obj(fields)
+            ("banks", Json::Arr(bank_objs)),
+            ("program", self.program.to_json()),
+        ])
     }
 
     pub fn from_json(j: &Json) -> Result<MappedProgram> {
@@ -345,69 +563,80 @@ impl MappedProgram {
             anyhow::bail!("not a mapped-program artifact (format '{format}')");
         }
         let version = get_usize(j, "version")?;
-        if version != ARTIFACT_VERSION {
-            anyhow::bail!("unsupported artifact version {version}");
+        if !SUPPORTED_VERSIONS.contains(&version) {
+            anyhow::bail!(
+                "unsupported {MAPPED_FORMAT} artifact version {version} (this binary \
+                 supports versions {SUPPORTED_VERSIONS:?}); v1 single-tree artifacts \
+                 still load as 1-bank v2 programs — re-save with `dt2cam compile \
+                 --save` on this binary to migrate an old artifact forward"
+            );
         }
         let s = get_usize(j, "tile_size")?;
-        let seed = get_u64(j, "map_seed")?;
         let params = params_from_json(get(j, "params")?)?;
         let program = CompiledProgram::from_json(get(j, "program")?)?;
 
-        // The tile grid is deterministic in (lut, S, params, seed):
-        // rebuild it, then cross-check the stored geometry.
-        let mut rng = Prng::new(seed);
-        let mut mapped = MappedArray::from_lut(&program.lut, s, &params, &mut rng);
-        let geo = get(j, "geometry")?;
-        for (key, have) in [
-            ("n_rwd", mapped.n_rwd),
-            ("n_cwd", mapped.n_cwd),
-            ("padded_rows", mapped.padded_rows),
-            ("padded_width", mapped.padded_width),
-            ("real_rows", mapped.real_rows),
-            ("real_width", mapped.real_width),
-        ] {
-            let want = get_usize(geo, key)?;
-            if want != have {
-                anyhow::bail!(
-                    "artifact geometry mismatch: {key} stored {want}, rebuilt {have} \
-                     (artifact and code disagree on the mapping)"
-                );
-            }
-        }
-
-        // Reference voltages are stored explicitly (they may carry
-        // variability perturbations the nominal rebuild cannot know).
-        let vref = f64_arr(j, "vref")?;
-        if vref.len() != mapped.vref.len() {
+        // v1 stores a single bank's fields at the top level; v2 stores a
+        // `banks` array. Either way each bank's tile grid is
+        // deterministic in (lut, S, params, map_seed): rebuild it, then
+        // cross-check the stored geometry.
+        let bank_sources: Vec<&Json> = if version == 1 {
+            vec![j]
+        } else {
+            get_arr(j, "banks")?.iter().collect()
+        };
+        if bank_sources.len() != program.banks.len() {
             anyhow::bail!(
-                "vref length {} != expected {}",
-                vref.len(),
-                mapped.vref.len()
+                "artifact stores {} mapped banks but its program compiles {} banks",
+                bank_sources.len(),
+                program.banks.len()
             );
         }
-        mapped.vref = vref;
 
-        // Non-nominal cell contents (fault injection) travel explicitly.
-        if let Some(cells_json) = j.get("cells") {
-            let hex = cells_json
-                .as_str()
-                .context("field 'cells' must be a hex string")?;
-            let cells = super::serde::hex_to_bytes(hex)?;
-            if cells.len() != mapped.cells.len() {
+        let mut banks = Vec::with_capacity(bank_sources.len());
+        for (bi, src) in bank_sources.into_iter().enumerate() {
+            let seed = get_u64(src, "map_seed")?;
+            let mut rng = Prng::new(seed);
+            let mut mapped = MappedArray::from_lut(&program.banks[bi].lut, s, &params, &mut rng);
+            Self::check_geometry(get(src, "geometry")?, &mapped, bi)?;
+
+            // Reference voltages are stored explicitly (they may carry
+            // variability perturbations the nominal rebuild cannot know).
+            let vref = f64_arr(src, "vref")?;
+            if vref.len() != mapped.vref.len() {
                 anyhow::bail!(
-                    "cells length {} != expected {}",
-                    cells.len(),
-                    mapped.cells.len()
+                    "bank {bi}: vref length {} != expected {}",
+                    vref.len(),
+                    mapped.vref.len()
                 );
             }
-            mapped.cells = cells;
+            mapped.vref = vref;
+
+            // Non-nominal cell contents (fault injection) travel
+            // explicitly.
+            if let Some(cells_json) = src.get("cells") {
+                let hex = cells_json
+                    .as_str()
+                    .context("field 'cells' must be a hex string")?;
+                let cells = super::serde::hex_to_bytes(hex)?;
+                if cells.len() != mapped.cells.len() {
+                    anyhow::bail!(
+                        "bank {bi}: cells length {} != expected {}",
+                        cells.len(),
+                        mapped.cells.len()
+                    );
+                }
+                mapped.cells = cells;
+            }
+            banks.push(MappedBank {
+                mapped,
+                map_seed: seed,
+            });
         }
 
         Ok(MappedProgram {
             program,
-            mapped,
+            banks,
             params,
-            map_seed: seed,
         })
     }
 
@@ -421,15 +650,19 @@ impl MappedProgram {
             .with_context(|| format!("reading {}", path.display()))?;
         let j = Json::parse(&text)
             .with_context(|| format!("parsing {}", path.display()))?;
-        Self::from_json(&j).with_context(|| format!("loading {}", path.display()))
+        Self::from_json(&j)
+            .with_context(|| format!("loading mapped-program artifact {}", path.display()))
     }
 }
 
 /// Stage 4: a live serving session — the coordinator handle (batcher +
-/// scheduler + metrics over one backend). The coordinator owns reusable
-/// scheduler scratch, so a long-lived session's division walk performs
-/// no heap allocation after warm-up (§Perf: the packed selective-
-/// precharge masks are folded in place, batch after batch).
+/// per-bank scheduler + metrics over one backend). Banks search in
+/// parallel for `Send + Sync` backends and their surviving classes are
+/// combined by the deterministic majority vote; the coordinator owns
+/// per-bank reusable scheduler scratch, so a long-lived session's
+/// division walks perform no heap allocation after warm-up (§Perf: the
+/// packed selective-precharge masks are folded in place, batch after
+/// batch).
 pub struct Session {
     coord: Coordinator,
 }
@@ -458,8 +691,24 @@ impl Session {
         &mut self.coord.metrics
     }
 
+    /// The primary (bank 0) serving plan.
     pub fn plan(&self) -> &ServingPlan {
         self.coord.plan()
+    }
+
+    /// Number of CAM banks this session serves.
+    pub fn n_banks(&self) -> usize {
+        self.coord.n_banks()
+    }
+
+    /// Modeled per-decision latency: slowest bank + vote stage.
+    pub fn modeled_latency(&self) -> f64 {
+        self.coord.modeled_latency()
+    }
+
+    /// Whether banks are dispatched concurrently.
+    pub fn bank_parallel(&self) -> bool {
+        self.coord.bank_parallel()
     }
 
     /// Registry name of the backend driving this session.
@@ -481,17 +730,66 @@ mod tests {
     fn stages_compose_on_iris() {
         let model = Dt2Cam::dataset("iris").unwrap();
         assert_eq!(model.test_x.len(), 15); // 10% of 150
+        assert_eq!(model.n_banks(), 1);
         assert!(model.golden_accuracy() > 0.7);
         let program = model.compile();
-        assert_eq!(program.lut.n_rows(), model.tree.n_leaves());
+        assert_eq!(program.lut().n_rows(), model.tree().n_leaves());
         let mp = program.map(16, &DeviceParams::default());
         assert_eq!(mp.tile_size(), 16);
         let mut session = mp.session(EngineKind::Native, 8).unwrap();
         assert_eq!(session.backend_name(), "native");
+        assert_eq!(session.n_banks(), 1);
         let got = session.classify_all(&model.test_x).unwrap();
         for (c, g) in got.iter().zip(&model.golden) {
             assert_eq!(*c, Some(*g));
         }
+    }
+
+    #[test]
+    fn forest_stages_compose_and_match_software_vote() {
+        let fp = ForestParams {
+            n_trees: 3,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..Default::default()
+        };
+        let model = Dt2Cam::forest("haberman", &fp).unwrap();
+        assert_eq!(model.n_banks(), 3);
+        let program = model.compile();
+        assert_eq!(program.n_banks(), 3);
+        // Each bank's LUT is sized to its own tree and projects <= 2
+        // features.
+        for (bank, tree) in program.banks.iter().zip(&model.forest.trees) {
+            assert_eq!(bank.lut.n_rows(), tree.n_leaves());
+            assert_eq!(bank.features.len(), bank.lut.encoders.len());
+            assert!(bank.features.len() <= 2);
+        }
+        // Digital reference: per-bank LUT search + vote == Forest::predict.
+        for x in model.test_x.iter().take(20) {
+            assert_eq!(program.classify(x), Some(model.forest.predict(x)));
+        }
+        // Ideal hardware through a live session matches golden exactly.
+        let mp = program.map(16, &DeviceParams::default());
+        assert_eq!(mp.n_banks(), 3);
+        let mut session = mp.session(EngineKind::Native, 8).unwrap();
+        assert_eq!(session.n_banks(), 3);
+        let got = session.classify_all(&model.test_x).unwrap();
+        for (c, g) in got.iter().zip(&model.golden) {
+            assert_eq!(*c, Some(*g));
+        }
+        // Forest latency: slowest bank + vote stage.
+        assert!(session.modeled_latency() > session.plan().timing.latency);
+    }
+
+    #[test]
+    fn forest_and_single_tree_share_split_state() {
+        // Same seed → identical dataset/split/test block regardless of
+        // the training path (the forest PRNG is a separate stream).
+        let single = Dt2Cam::dataset("haberman").unwrap();
+        let forest = Dt2Cam::forest("haberman", &ForestParams::default()).unwrap();
+        assert_eq!(single.split.test, forest.split.test);
+        assert_eq!(single.test_x, forest.test_x);
+        assert_eq!(single.test_y, forest.test_y);
     }
 
     #[test]
@@ -502,9 +800,37 @@ mod tests {
         assert_eq!(a.golden, b.golden);
         let pa = a.compile();
         let pb = b.compile();
-        assert_eq!(pa.lut.stored, pb.lut.stored);
+        assert_eq!(pa.lut().stored, pb.lut().stored);
         let p = DeviceParams::default();
-        assert_eq!(pa.map(16, &p).mapped.cells, pb.map(16, &p).mapped.cells);
+        assert_eq!(
+            pa.map(16, &p).banks[0].mapped.cells,
+            pb.map(16, &p).banks[0].mapped.cells
+        );
+    }
+
+    #[test]
+    fn forest_training_is_deterministic() {
+        let fp = ForestParams {
+            n_trees: 4,
+            sample_fraction: 0.9,
+            max_features: 2,
+            ..Default::default()
+        };
+        let a = Dt2Cam::forest("iris", &fp).unwrap();
+        let b = Dt2Cam::forest("iris", &fp).unwrap();
+        assert_eq!(a.golden, b.golden);
+        for (ta, tb) in a.forest.trees.iter().zip(&b.forest.trees) {
+            assert_eq!(ta.nodes, tb.nodes);
+        }
+        assert_eq!(a.forest.feature_sets, b.forest.feature_sets);
+        // Per-bank mapping seeds differ across banks, deterministically.
+        let p = DeviceParams::default();
+        let ma = a.compile().map(16, &p);
+        let mb = b.compile().map(16, &p);
+        let seeds: Vec<u64> = ma.banks.iter().map(|b| b.map_seed).collect();
+        assert_eq!(seeds, mb.banks.iter().map(|b| b.map_seed).collect::<Vec<_>>());
+        assert_eq!(seeds[0], map_seed(a.seed, 16), "bank 0 keeps the v1 convention");
+        assert!(seeds.windows(2).all(|w| w[0] != w[1]));
     }
 
     #[test]
@@ -523,9 +849,35 @@ mod tests {
         let back = CompiledProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.dataset, program.dataset);
         assert_eq!(back.seed, program.seed);
-        assert_eq!(back.lut.stored, program.lut.stored);
+        assert_eq!(back.n_banks(), 1);
+        assert_eq!(back.lut().stored, program.lut().stored);
         assert_eq!(back.test_indices, program.test_indices);
         assert_eq!(back.golden, program.golden);
+    }
+
+    #[test]
+    fn multibank_compiled_program_roundtrip() {
+        let fp = ForestParams {
+            n_trees: 3,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..Default::default()
+        };
+        let model = Dt2Cam::forest("haberman", &fp).unwrap();
+        let program = model.compile();
+        let text = program.to_json().to_string_pretty();
+        let back = CompiledProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_banks(), 3);
+        for (a, b) in back.banks.iter().zip(&program.banks) {
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.lut.stored, b.lut.stored);
+            assert_eq!(a.lut.classes, b.lut.classes);
+            assert_eq!(a.lut.encoders, b.lut.encoders);
+        }
+        // Behavioral equivalence of the voted classification.
+        for x in model.test_x.iter().take(15) {
+            assert_eq!(back.classify(x), program.classify(x));
+        }
     }
 
     #[test]
@@ -533,14 +885,38 @@ mod tests {
         let program = Dt2Cam::dataset("haberman").unwrap().compile();
         let mut mp = program.map(16, &DeviceParams::default());
         // Perturb a reference voltage: the artifact must carry it.
-        mp.mapped.vref[3] += 0.0125;
+        mp.banks[0].mapped.vref[3] += 0.0125;
         let text = mp.to_json().to_string_pretty();
         let back = MappedProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
-        assert_eq!(back.mapped.cells, mp.mapped.cells);
-        assert_eq!(back.mapped.classes, mp.mapped.classes);
-        assert_eq!(back.mapped.vref, mp.mapped.vref);
-        assert_eq!(back.map_seed, mp.map_seed);
+        assert_eq!(back.banks[0].mapped.cells, mp.banks[0].mapped.cells);
+        assert_eq!(back.banks[0].mapped.classes, mp.banks[0].mapped.classes);
+        assert_eq!(back.banks[0].mapped.vref, mp.banks[0].mapped.vref);
+        assert_eq!(back.banks[0].map_seed, mp.banks[0].map_seed);
         assert_eq!(back.tile_size(), 16);
+    }
+
+    #[test]
+    fn multibank_mapped_roundtrip_preserves_every_bank() {
+        let fp = ForestParams {
+            n_trees: 3,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..Default::default()
+        };
+        let program = Dt2Cam::forest("haberman", &fp).unwrap().compile();
+        let mut mp = program.map(16, &DeviceParams::default());
+        // Perturb a different bank's vref: per-bank vectors must travel
+        // independently.
+        mp.banks[2].mapped.vref[1] += 0.009;
+        let text = mp.to_json().to_string_pretty();
+        let back = MappedProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_banks(), 3);
+        for (a, b) in back.banks.iter().zip(&mp.banks) {
+            assert_eq!(a.map_seed, b.map_seed);
+            assert_eq!(a.mapped.cells, b.mapped.cells);
+            assert_eq!(a.mapped.classes, b.mapped.classes);
+            assert_eq!(a.mapped.vref, b.mapped.vref);
+        }
     }
 
     #[test]
@@ -548,18 +924,55 @@ mod tests {
         use crate::nonideal::{inject_saf, SafRates};
         let program = Dt2Cam::dataset("iris").unwrap().compile();
         let mut mp = program.map(16, &DeviceParams::default());
-        inject_saf(&mut mp.mapped, &SafRates::both(5.0), &mut Prng::new(77));
-        let nominal = mp.nominal_grid();
-        assert_ne!(mp.mapped.cells, nominal.cells, "faults must have landed");
+        inject_saf(&mut mp.banks[0].mapped, &SafRates::both(5.0), &mut Prng::new(77));
+        let nominal = mp.nominal_grid(0);
+        assert_ne!(mp.banks[0].mapped.cells, nominal.cells, "faults must have landed");
         let text = mp.to_json().to_string_pretty();
         let back = MappedProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
-        assert_eq!(back.mapped.cells, mp.mapped.cells);
+        assert_eq!(back.banks[0].mapped.cells, mp.banks[0].mapped.cells);
     }
 
     #[test]
     fn artifact_rejects_wrong_format() {
-        let j = Json::parse(r#"{"format": "something-else", "version": 1}"#).unwrap();
+        let j = Json::parse(r#"{"format": "something-else", "version": 2}"#).unwrap();
         assert!(CompiledProgram::from_json(&j).is_err());
         assert!(MappedProgram::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unsupported_version_errors_name_found_and_supported() {
+        let j = Json::parse(
+            r#"{"format": "dt2cam-compiled-program", "version": 99}"#,
+        )
+        .unwrap();
+        let msg = format!("{:#}", CompiledProgram::from_json(&j).unwrap_err());
+        assert!(msg.contains("99"), "must name the found version: {msg}");
+        assert!(msg.contains("[1, 2]"), "must list supported versions: {msg}");
+
+        let j = Json::parse(r#"{"format": "dt2cam-mapped-program", "version": 99}"#).unwrap();
+        let msg = format!("{:#}", MappedProgram::from_json(&j).unwrap_err());
+        assert!(msg.contains("99") && msg.contains("[1, 2]"), "{msg}");
+        assert!(
+            msg.contains("migrate"),
+            "mapped-program version error must carry the migration note: {msg}"
+        );
+    }
+
+    #[test]
+    fn load_errors_name_the_artifact_path() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dt2cam_badver_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"format": "dt2cam-mapped-program", "version": 99}"#,
+        )
+        .unwrap();
+        let msg = format!("{:#}", MappedProgram::load(&path).unwrap_err());
+        std::fs::remove_file(&path).ok();
+        assert!(
+            msg.contains(&path.display().to_string()),
+            "load error must name the artifact path: {msg}"
+        );
+        assert!(msg.contains("version 99"), "{msg}");
     }
 }

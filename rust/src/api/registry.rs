@@ -10,7 +10,9 @@ use anyhow::{bail, Result};
 
 use crate::config::{EngineKind, RunConfig};
 
-use super::backend::{MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend};
+use super::backend::{
+    BankDispatch, MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend,
+};
 
 /// Construction options shared by every backend (each backend reads the
 /// fields it needs and ignores the rest).
@@ -80,6 +82,24 @@ pub fn create_by_name(name: &str, opts: &BackendOptions) -> Result<Box<dyn Match
     create(EngineKind::parse(name)?, opts)
 }
 
+/// Build a backend wrapped in its bank-dispatch mode: `Send + Sync`
+/// backends come back [`BankDispatch::Parallel`] (forest banks fan out
+/// over a thread pool, sharing the instance), the PJRT client comes back
+/// [`BankDispatch::Sequential`] (its `Rc`-backed state pins it to one
+/// thread, so banks are walked in order). Exhaustive over
+/// [`EngineKind`], like [`create`].
+pub fn create_bank_dispatch(kind: EngineKind, opts: &BackendOptions) -> Result<BankDispatch> {
+    match kind {
+        // Construction is delegated so each backend's registration
+        // logic lives in exactly one place; the match stays exhaustive,
+        // so a new EngineKind variant still stops compilation here.
+        EngineKind::Native | EngineKind::ThreadedNative => Ok(BankDispatch::Parallel(
+            create_pipeline_backend(kind, opts)?,
+        )),
+        EngineKind::Pjrt => Ok(BankDispatch::Sequential(create(kind, opts)?)),
+    }
+}
+
 /// Build a shareable backend for the stage pipeline (one worker thread
 /// per column division). Only `Send + Sync` backends qualify — the PJRT
 /// client is `Rc`-backed and single-threaded by construction.
@@ -128,6 +148,24 @@ mod tests {
         for name in names() {
             assert!(msg.contains(name), "error should list '{name}': {msg}");
         }
+    }
+
+    #[test]
+    fn bank_dispatch_mode_matches_backend_threading() {
+        let opts = BackendOptions::default();
+        let native = create_bank_dispatch(EngineKind::Native, &opts).unwrap();
+        assert!(native.is_parallel());
+        assert_eq!(native.name(), "native");
+        let threaded = create_bank_dispatch(EngineKind::ThreadedNative, &opts).unwrap();
+        assert!(threaded.is_parallel());
+        assert_eq!(threaded.name(), "threaded-native");
+        // pjrt (when constructible) is sequential; against a missing
+        // artifact dir it is a clean error either way.
+        let missing = BackendOptions {
+            artifacts_dir: PathBuf::from("/definitely/not/here"),
+            threads: 0,
+        };
+        assert!(create_bank_dispatch(EngineKind::Pjrt, &missing).is_err());
     }
 
     #[test]

@@ -321,6 +321,33 @@ pub fn lut_from_json(j: &Json) -> Result<Lut> {
     })
 }
 
+// ----------------------------------------------------------------- banks
+
+use super::program::CompiledBank;
+
+/// Encode one compiled CAM bank: its feature projection + its LUT.
+pub fn bank_to_json(bank: &CompiledBank) -> Json {
+    Json::obj(vec![
+        ("features", json_usizes(&bank.features)),
+        ("lut", lut_to_json(&bank.lut)),
+    ])
+}
+
+/// Decode one compiled CAM bank, revalidating the projection arity
+/// (each LUT encoder corresponds to exactly one projected feature).
+pub fn bank_from_json(j: &Json) -> Result<CompiledBank> {
+    let lut = lut_from_json(get(j, "lut")?)?;
+    let features = usize_arr(j, "features")?;
+    if features.len() != lut.encoders.len() {
+        bail!(
+            "bank projects {} features but its LUT has {} encoders",
+            features.len(),
+            lut.encoders.len()
+        );
+    }
+    Ok(CompiledBank { lut, features })
+}
+
 // ----------------------------------------------------------- DeviceParams
 
 /// Encode the full device-parameter set (Table III + calibrated
@@ -452,6 +479,30 @@ mod tests {
         )
         .unwrap();
         assert!(lut_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bank_roundtrips_and_rejects_arity_mismatch() {
+        let lut = iris_lut();
+        let n = lut.encoders.len();
+        let bank = CompiledBank {
+            lut,
+            features: (0..n).rev().collect(),
+        };
+        let text = bank_to_json(&bank).to_string_compact();
+        let back = bank_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.features, bank.features);
+        assert_eq!(back.lut.stored, bank.lut.stored);
+        // Projection arity must match the encoder count.
+        let mut j = bank_to_json(&bank);
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "features" {
+                    *v = Json::Arr(vec![Json::num(0.0)]);
+                }
+            }
+        }
+        assert!(bank_from_json(&j).is_err());
     }
 
     #[test]

@@ -46,14 +46,37 @@ pub struct Forest {
 }
 
 impl Forest {
+    /// Wrap a single tree as a 1-bank forest with the identity feature
+    /// projection — the facade's single-tree program is exactly this, so
+    /// "one tree" is the 1-bank special case of the ensemble model, not
+    /// a separate code path.
+    pub fn single(tree: Tree, n_features: usize, n_classes: usize) -> Forest {
+        Forest {
+            trees: vec![tree],
+            feature_sets: vec![(0..n_features).collect()],
+            n_classes,
+        }
+    }
+
     /// Majority vote (ties: lowest class id, deterministic).
     pub fn predict(&self, x: &[f64]) -> usize {
+        let mut proj = Vec::new();
+        self.predict_with_buf(x, &mut proj)
+    }
+
+    /// [`Forest::predict`] with a caller-held projection buffer — the
+    /// per-tree projected feature vector is built in `proj` instead of a
+    /// fresh allocation per tree per sample (same scratch-reuse pattern
+    /// as the scheduler's `BatchScratch`), so bulk golden-prediction
+    /// loops allocate nothing after warm-up.
+    pub fn predict_with_buf(&self, x: &[f64], proj: &mut Vec<f64>) -> usize {
         let mut votes = vec![0usize; self.n_classes];
         for (tree, feats) in self.trees.iter().zip(&self.feature_sets) {
-            let proj: Vec<f64> = feats.iter().map(|&f| x[f]).collect();
-            votes[tree.predict(&proj)] += 1;
+            proj.clear();
+            proj.extend(feats.iter().map(|&f| x[f]));
+            votes[tree.predict(proj)] += 1;
         }
-        argmax_lowest(&votes)
+        majority_vote(&votes)
     }
 
     /// Combine per-tree predictions (e.g. from per-bank CAM searches)
@@ -64,7 +87,7 @@ impl Forest {
         for &c in per_tree {
             votes[c] += 1;
         }
-        argmax_lowest(&votes)
+        majority_vote(&votes)
     }
 
     pub fn total_leaves(&self) -> usize {
@@ -72,9 +95,38 @@ impl Forest {
     }
 }
 
-/// Index of the maximum, ties broken toward the lowest index (a
-/// deterministic digital vote — `max_by_key` would take the last).
-fn argmax_lowest(votes: &[usize]) -> usize {
+/// Combine per-bank CAM survivors into the forest decision: a bank with
+/// no surviving row (`None`) casts no vote; if no bank voted the result
+/// is `None` (a no-match); otherwise [`majority_vote`] over the cast
+/// votes (ties → lowest class id). This is THE normative combine rule —
+/// the coordinator, the digital reference `CompiledProgram::classify`,
+/// and the CLI's forest simulation all call it, so the semantics cannot
+/// drift apart. `votes` is caller-held scratch (cleared and resized
+/// here) so per-lane hot loops stay allocation-free.
+pub fn vote_survivors(
+    per_bank: impl IntoIterator<Item = Option<usize>>,
+    n_classes: usize,
+    votes: &mut Vec<usize>,
+) -> Option<usize> {
+    votes.clear();
+    votes.resize(n_classes, 0);
+    let mut any = false;
+    for c in per_bank.into_iter().flatten() {
+        votes[c] += 1;
+        any = true;
+    }
+    if any {
+        Some(majority_vote(votes))
+    } else {
+        None
+    }
+}
+
+/// The deterministic digital majority vote shared by [`Forest::predict`]
+/// and the bank-combining coordinator: index of the maximum vote count,
+/// ties broken toward the lowest class id (`max_by_key` would take the
+/// last — hardware ties must not depend on iteration order).
+pub fn majority_vote(votes: &[usize]) -> usize {
     let mut best = 0usize;
     for (c, &v) in votes.iter().enumerate() {
         if v > votes[best] {
@@ -195,6 +247,92 @@ mod tests {
         }, &mut rng);
         assert_eq!(f.vote(&[1, 1, 2, 1]), 1);
         assert_eq!(f.vote(&[2, 2, 1, 1]), 1, "tie breaks to lowest class");
+    }
+
+    #[test]
+    fn vote_survivors_skips_silent_banks_and_reports_no_match() {
+        let mut buf = Vec::new();
+        // No bank voted: a no-match, not class 0.
+        assert_eq!(vote_survivors([None, None], 2, &mut buf), None);
+        // Silent banks cast no vote; majority over the rest.
+        assert_eq!(
+            vote_survivors([Some(1), None, Some(1), Some(0)], 2, &mut buf),
+            Some(1)
+        );
+        // Ties break to the lowest class id, like Forest::vote.
+        assert_eq!(
+            vote_survivors([Some(2), Some(1), None], 3, &mut buf),
+            Some(1)
+        );
+        // The scratch buffer is reshaped per call, so reuse across
+        // different n_classes is safe.
+        assert_eq!(vote_survivors([Some(4)], 5, &mut buf), Some(4));
+    }
+
+    #[test]
+    fn majority_vote_tie_breaks_to_lowest_class_deterministically() {
+        // The vote is a pure function of the counts: ties always resolve
+        // to the lowest class id, independent of which bank voted when.
+        assert_eq!(majority_vote(&[2, 2, 0]), 0);
+        assert_eq!(majority_vote(&[0, 3, 3]), 1);
+        assert_eq!(majority_vote(&[1, 1, 1, 1]), 0);
+        assert_eq!(majority_vote(&[0, 0, 5]), 2);
+        // Repeated evaluation is bit-stable (no hidden iteration-order
+        // dependence).
+        for _ in 0..10 {
+            assert_eq!(majority_vote(&[4, 4, 4]), 0);
+        }
+    }
+
+    #[test]
+    fn predict_with_buf_matches_predict_and_projects_correctly() {
+        let d = iris::load();
+        let mut rng = Prng::new(17);
+        let f = train_forest(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &ForestParams {
+                n_trees: 5,
+                sample_fraction: 0.7,
+                max_features: 2,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut buf = Vec::new();
+        for x in d.features.iter().take(30) {
+            // Buffered and allocating paths agree…
+            assert_eq!(f.predict_with_buf(x, &mut buf), f.predict(x));
+            // …and both equal the explicit per-tree projection + vote.
+            let per_tree: Vec<usize> = f
+                .trees
+                .iter()
+                .zip(&f.feature_sets)
+                .map(|(t, feats)| {
+                    let proj: Vec<f64> = feats.iter().map(|&i| x[i]).collect();
+                    t.predict(&proj)
+                })
+                .collect();
+            assert_eq!(f.predict(x), f.vote(&per_tree));
+        }
+    }
+
+    #[test]
+    fn single_wraps_tree_with_identity_projection() {
+        let d = iris::load();
+        let tree = crate::cart::train(
+            &d.features,
+            &d.labels,
+            d.n_classes,
+            &crate::cart::TrainParams::default(),
+        );
+        let f = Forest::single(tree.clone(), d.n_features(), d.n_classes);
+        assert_eq!(f.trees.len(), 1);
+        assert_eq!(f.feature_sets[0], (0..d.n_features()).collect::<Vec<_>>());
+        for x in d.features.iter().take(20) {
+            assert_eq!(f.predict(x), tree.predict(x));
+        }
     }
 
     #[test]

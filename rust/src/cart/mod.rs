@@ -14,7 +14,7 @@ pub mod forest;
 pub mod train;
 pub mod tree;
 
-pub use forest::{train_forest, Forest, ForestParams};
+pub use forest::{majority_vote, train_forest, vote_survivors, Forest, ForestParams};
 pub use train::{train, TrainParams};
 pub use tree::{Node, NodeId, Tree};
 

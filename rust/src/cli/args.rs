@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 16] = [
+const VALUE_KEYS: [&str; 19] = [
     "dataset",
     "tile-size",
     "seed",
@@ -32,6 +32,9 @@ const VALUE_KEYS: [&str; 16] = [
     "save",
     "program",
     "artifacts-dir",
+    "forest",
+    "sample-fraction",
+    "max-features",
 ];
 
 impl Args {

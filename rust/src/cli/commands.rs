@@ -6,7 +6,8 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::api::registry::{self, BackendOptions};
-use crate::api::{Dt2Cam, MappedProgram};
+use crate::api::{Dt2Cam, MappedProgram, TrainedModel};
+use crate::cart::{vote_survivors, ForestParams};
 use crate::config::EngineKind;
 use crate::coordinator::InferenceRequest;
 use crate::nonideal::{inject_saf, perturb_vref, SafRates};
@@ -41,49 +42,134 @@ fn backend_opts(args: &mut Args) -> BackendOptions {
     }
 }
 
-/// `dt2cam compile`: train CART, run the DT-HW compiler, print the LUT
-/// geometry and the mapping summary; `--save` writes the mapped-program
-/// artifact so `serve` can run in a separate process.
+/// Parse the ensemble flags: `--forest N [--sample-fraction F]
+/// [--max-features K]`. `None` = single-tree program; the sub-flags
+/// without `--forest` are an error, not a silent no-op.
+fn forest_params_arg(args: &mut Args) -> Result<Option<ForestParams>> {
+    let n_trees = args.opt_usize("forest")?;
+    let sample_fraction = args.opt_f64("sample-fraction")?;
+    let max_features = args.opt_usize("max-features")?;
+    match n_trees {
+        None => {
+            if sample_fraction.is_some() || max_features.is_some() {
+                anyhow::bail!("--sample-fraction/--max-features require --forest N");
+            }
+            Ok(None)
+        }
+        Some(n) => {
+            anyhow::ensure!(n >= 1, "--forest needs at least 1 tree");
+            let f = sample_fraction.unwrap_or(1.0);
+            anyhow::ensure!(
+                f > 0.0 && f <= 1.0,
+                "--sample-fraction must be in (0, 1], got {f}"
+            );
+            Ok(Some(ForestParams {
+                n_trees: n,
+                sample_fraction: f,
+                max_features: max_features.unwrap_or(0),
+                ..ForestParams::default()
+            }))
+        }
+    }
+}
+
+/// Train the requested program: a bagged forest when `--forest` was
+/// given, the paper's single unpruned CART tree otherwise.
+fn train_model(name: &str, forest: &Option<ForestParams>) -> Result<TrainedModel> {
+    match forest {
+        Some(fp) => Dt2Cam::forest(name, fp),
+        None => Dt2Cam::dataset(name),
+    }
+}
+
+/// `dt2cam compile`: train CART (or a bagged forest with `--forest N`),
+/// run the DT-HW compiler per bank, print the LUT geometry and the
+/// mapping summary; `--save` writes the mapped-program artifact (schema
+/// v2) so `serve` can run in a separate process.
 pub fn compile(args: &mut Args) -> Result<()> {
     let name = dataset_arg(args)?;
     let s = args.opt_usize("tile-size")?.unwrap_or(128);
+    let forest = forest_params_arg(args)?;
     let save = args.opt_str("save");
     args.finish()?;
 
-    let model = Dt2Cam::dataset(&name)?;
+    let model = train_model(&name, &forest)?;
     let program = model.compile();
     let p = DeviceParams::default();
     let mapped = program.map(s, &p);
-    let m = &mapped.mapped;
     println!("dataset        : {name}");
-    println!("tree           : {} leaves, depth {}", model.tree.n_leaves(), model.tree.depth());
+    if model.n_banks() == 1 {
+        println!(
+            "tree           : {} leaves, depth {}",
+            model.tree().n_leaves(),
+            model.tree().depth()
+        );
+    } else {
+        println!(
+            "forest         : {} banks, {} total leaves",
+            model.n_banks(),
+            model.forest.total_leaves()
+        );
+    }
     println!("golden accuracy: {:.4}", model.golden_accuracy());
-    println!("LUT            : {} x {} trits (+{} class bits/row)",
-        program.lut.n_rows(), program.lut.width(), program.lut.class_width());
-    println!("n_total (Eqn 2): {}", program.lut.n_total());
-    println!(
-        "tiles @S={s}   : {} x {} = {} tiles ({} padded rows, {} padded cols)",
-        m.n_rwd, m.n_cwd, m.n_tiles(), m.padded_rows, m.padded_width
-    );
-    let (mm2, per_bit) = tables::area_for(m.n_tiles(), s, m.n_classes, &p);
-    println!("area (Eqn 11)  : {mm2:.4} mm^2  ({per_bit:.4} um^2/bit)");
-    // First rows rendered like Fig 2.
-    for r in 0..program.lut.n_rows().min(4) {
+    let mut total_tiles = 0usize;
+    let mut total_mm2 = 0.0f64;
+    for (bi, (cb, mb)) in program.banks.iter().zip(&mapped.banks).enumerate() {
+        let m = &mb.mapped;
+        let tag = if program.n_banks() == 1 {
+            String::new()
+        } else {
+            format!("bank {bi} ")
+        };
+        println!(
+            "{tag}LUT        : {} x {} trits (+{} class bits/row), n_total (Eqn 2) {}",
+            cb.lut.n_rows(),
+            cb.lut.width(),
+            cb.lut.class_width(),
+            cb.lut.n_total()
+        );
+        println!(
+            "{tag}tiles @S={s}: {} x {} = {} tiles ({} padded rows, {} padded cols)",
+            m.n_rwd,
+            m.n_cwd,
+            m.n_tiles(),
+            m.padded_rows,
+            m.padded_width
+        );
+        let (mm2, per_bit) = tables::area_for(m.n_tiles(), s, m.n_classes, &p);
+        println!("{tag}area (Eqn 11): {mm2:.4} mm^2  ({per_bit:.4} um^2/bit)");
+        total_tiles += m.n_tiles();
+        total_mm2 += mm2;
+    }
+    if program.n_banks() > 1 {
+        println!("total area     : {total_mm2:.4} mm^2 over {total_tiles} tiles");
+    }
+    // First rows of the primary bank rendered like Fig 2.
+    for r in 0..program.lut().n_rows().min(4) {
         println!(
             "  row {r}: {}  -> class {}",
-            program.lut.row_to_string(r),
-            program.lut.classes[r]
+            program.lut().row_to_string(r),
+            program.lut().classes[r]
         );
     }
     if let Some(path) = save {
         let path = PathBuf::from(path);
         mapped.save(&path)?;
-        eprintln!("wrote mapped-program artifact {}", path.display());
+        eprintln!(
+            "wrote mapped-program artifact {} ({} bank{})",
+            path.display(),
+            mapped.n_banks(),
+            if mapped.n_banks() == 1 { "" } else { "s" }
+        );
     }
     Ok(())
 }
 
 /// `dt2cam simulate`: functional simulation with optional non-idealities.
+/// With `--forest N` every bank is simulated independently (per-bank
+/// fault/variability streams) and the surviving classes are combined by
+/// the deterministic majority vote; energy sums over banks, latency is
+/// the slowest bank + vote stage.
 pub fn simulate_cmd(args: &mut Args) -> Result<()> {
     let name = dataset_arg(args)?;
     let s = args.opt_usize("tile-size")?.unwrap_or(128);
@@ -92,16 +178,30 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
     let sigma_in = args.opt_f64("sigma-input")?.unwrap_or(0.0);
     let max_inputs = args.opt_usize("max-inputs")?.unwrap_or(0);
     let seed = args.opt_u64("seed")?.unwrap_or(0xD72CA0);
+    let forest = forest_params_arg(args)?;
     let no_sp = args.flag("no-sp");
     args.finish()?;
 
-    let model = Dt2Cam::dataset(&name)?;
+    let model = train_model(&name, &forest)?;
     let program = model.compile();
     let p = DeviceParams::default();
     let mut rng = Prng::new(seed);
-    let mut m = program.map(s, &p).mapped;
-    inject_saf(&mut m, &SafRates::both(saf), &mut rng.fork(1));
-    let vref = perturb_vref(&m.vref, sigma_sa, &mut rng.fork(2));
+    let mut mapped = program.map(s, &p);
+    let opts = SimOptions {
+        selective_precharge: !no_sp,
+        analog: true,
+        max_inputs,
+    };
+    // Fork the per-bank fault/variability streams *before* the noise
+    // stream, in bank order: `fork` advances the parent, and bank 0
+    // forking (1, 2) then noise forking (3) reproduces the historic
+    // single-tree stream order exactly.
+    let mut bank_rngs: Vec<(Prng, Prng)> = (0..mapped.n_banks() as u64)
+        .map(|bi| (rng.fork(1 + 10 * bi), rng.fork(2 + 10 * bi)))
+        .collect();
+    // Input noise is drawn once in the original feature domain — banks
+    // sharing a feature see the same perturbed value, like hardware
+    // banks wired to the same encoder outputs.
     let mut noise_rng = rng.fork(3);
     let inputs: Vec<Vec<f64>> = model
         .test_x
@@ -113,34 +213,103 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
         })
         .collect();
 
-    let r = simulate(
-        &m,
-        &program.lut,
-        &inputs,
-        &model.test_y,
-        &model.golden,
-        &vref,
+    // Per-bank simulation: each bank gets its own fault/variability
+    // streams, its projected inputs, and its own tree as golden.
+    let mut reports = Vec::with_capacity(mapped.n_banks());
+    for bi in 0..mapped.n_banks() {
+        let mb = &mut mapped.banks[bi];
+        let (saf_rng, vref_rng) = &mut bank_rngs[bi];
+        inject_saf(&mut mb.mapped, &SafRates::both(saf), saf_rng);
+        let vref = perturb_vref(&mb.mapped.vref, sigma_sa, vref_rng);
+        let feats = &program.banks[bi].features;
+        let ptx: Vec<Vec<f64>> = inputs
+            .iter()
+            .map(|x| feats.iter().map(|&f| x[f]).collect())
+            .collect();
+        let bank_golden: Vec<usize> = model
+            .test_x
+            .iter()
+            .map(|x| {
+                let proj: Vec<f64> = feats.iter().map(|&f| x[f]).collect();
+                model.forest.trees[bi].predict(&proj)
+            })
+            .collect();
+        reports.push(simulate(
+            &mb.mapped,
+            &program.banks[bi].lut,
+            &ptx,
+            &model.test_y,
+            &bank_golden,
+            &vref,
+            &p,
+            &opts,
+        ));
+    }
+
+    // Roll up: vote per input (the normative `cart::vote_survivors`
+    // rule), energy summed, latency = slowest + vote.
+    let n = reports[0].n_inputs;
+    let n_classes = program.n_classes();
+    let (mut correct, mut agree, mut no_match) = (0usize, 0usize, 0usize);
+    let mut votes = Vec::new();
+    for i in 0..n {
+        match vote_survivors(reports.iter().map(|r| r.classes[i]), n_classes, &mut votes) {
+            Some(c) => {
+                if c == model.test_y[i] {
+                    correct += 1;
+                }
+                if c == model.golden[i] {
+                    agree += 1;
+                }
+            }
+            None => no_match += 1,
+        }
+    }
+    let energy_per_dec = crate::synth::energy::forest_energy(
+        &reports.iter().map(|r| r.energy_per_dec).collect::<Vec<_>>(),
+    );
+    let latency = crate::synth::latency::forest_latency(
+        &reports.iter().map(|r| r.timing.latency).collect::<Vec<_>>(),
         &p,
-        &SimOptions {
-            selective_precharge: !no_sp,
-            analog: true,
-            max_inputs,
-        },
     );
+    let throughput_seq = reports
+        .iter()
+        .map(|r| r.timing.throughput_seq)
+        .fold(f64::INFINITY, f64::min);
+    let rows_per_dec: f64 = reports.iter().map(|r| r.rows_per_dec).sum();
+    let total_tiles: usize = reports.iter().map(|r| r.n_tiles).sum();
+    let multi_match: usize = reports.iter().map(|r| r.multi_match).sum();
+    let accuracy = correct as f64 / n.max(1) as f64;
+    let agreement = agree as f64 / n.max(1) as f64;
+
     println!(
-        "dataset={name} S={s} tiles={} (SA'b'={saf}%, sigma_sa={sigma_sa} V, sigma_in={sigma_in})",
-        r.n_tiles
+        "dataset={name} S={s} banks={} tiles={total_tiles} (SA'b'={saf}%, sigma_sa={sigma_sa} V, sigma_in={sigma_in})",
+        mapped.n_banks()
     );
-    println!("inputs            : {}", r.n_inputs);
-    println!("accuracy          : {:.4} (golden {:.4}, agreement {:.4})",
-        r.accuracy, model.golden_accuracy(), r.golden_agreement);
-    println!("energy/dec        : {}", eng(r.energy_per_dec, "J"));
-    println!("rows/dec          : {:.1}", r.rows_per_dec);
-    println!("latency           : {}", eng(r.timing.latency, "s"));
-    println!("throughput (seq)  : {}", eng(r.timing.throughput_seq, "dec/s"));
-    println!("throughput (pipe) : {}", eng(r.timing.throughput_pipe, "dec/s"));
-    println!("EDP               : {:.3e} J.s", r.edp);
-    println!("no_match={} multi_match={}", r.no_match, r.multi_match);
+    println!("inputs            : {n}");
+    println!(
+        "accuracy          : {accuracy:.4} (golden {:.4}, agreement {agreement:.4})",
+        model.golden_accuracy_capped(n)
+    );
+    println!("energy/dec        : {}", eng(energy_per_dec, "J"));
+    println!("rows/dec          : {rows_per_dec:.1}");
+    println!("latency           : {}", eng(latency, "s"));
+    println!("throughput (seq)  : {}", eng(throughput_seq, "dec/s"));
+    println!(
+        "throughput (pipe) : {}",
+        eng(
+            reports
+                .iter()
+                .map(|r| r.timing.throughput_pipe)
+                .fold(f64::INFINITY, f64::min),
+            "dec/s"
+        )
+    );
+    // EDP keeps the paper's sequential-delay convention (energy ×
+    // 1/throughput_seq, class readout excluded — see synth/latency.rs),
+    // so single-tree output matches `SimReport::edp` exactly.
+    println!("EDP               : {:.3e} J.s", energy_per_dec / throughput_seq);
+    println!("no_match={no_match} multi_match={multi_match}");
     Ok(())
 }
 
@@ -155,15 +324,21 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let opts = backend_opts(args);
     let requests = args.opt_usize("requests")?.unwrap_or(0);
     let pipelined = args.flag("pipelined");
+    let forest = forest_params_arg(args)?;
     let program_path = args.opt_str("program");
 
     // Stage artifacts: load from disk (two-process flow) or build fresh.
     let (mapped, test_x, test_y, golden, name) = if let Some(path) = program_path {
-        // The artifact pins dataset and tile size; conflicting flags are
-        // errors, not silent overrides.
+        // The artifact pins dataset, tile size and bank structure;
+        // conflicting flags are errors, not silent overrides.
         if let Some(d) = args.opt_str("dataset") {
             anyhow::bail!(
                 "--dataset {d} conflicts with --program (the artifact pins its dataset)"
+            );
+        }
+        if forest.is_some() {
+            anyhow::bail!(
+                "--forest conflicts with --program (the artifact pins its bank structure)"
             );
         }
         args.finish()?;
@@ -180,16 +355,17 @@ pub fn serve(args: &mut Args) -> Result<()> {
         let golden = mp.program.golden.clone();
         let name = mp.program.dataset.clone();
         eprintln!(
-            "loaded program artifact {path}: dataset {name}, S={}, LUT {}x{}",
+            "loaded program artifact {path}: dataset {name}, S={}, {} bank(s), LUT0 {}x{}",
             mp.tile_size(),
-            mp.program.lut.n_rows(),
-            mp.program.lut.width()
+            mp.n_banks(),
+            mp.program.lut().n_rows(),
+            mp.program.lut().width()
         );
         (mp, tx, ty, golden, name)
     } else {
         let name = dataset_arg(args)?;
         args.finish()?;
-        let model = Dt2Cam::dataset(&name)?;
+        let model = train_model(&name, &forest)?;
         let program = model.compile();
         let mp = program.map(tile_size_arg.unwrap_or(128), &DeviceParams::default());
         (mp, model.test_x, model.test_y, model.golden, name)
@@ -211,10 +387,15 @@ pub fn serve(args: &mut Args) -> Result<()> {
     if pipelined {
         use crate::coordinator::pipeline::run_pipeline;
         use std::sync::Arc;
+        anyhow::ensure!(
+            mapped.n_banks() == 1,
+            "--pipelined serves single-bank programs (the division pipeline is \
+             per-array); forest programs already run bank-parallel — drop --pipelined"
+        );
         let backend = registry::create_pipeline_backend(engine, &opts)?;
         let plan = Arc::new(mapped.plan());
-        let lut = &mapped.program.lut;
-        let m = &mapped.mapped;
+        let lut = mapped.program.lut();
+        let m = mapped.primary();
         let batches: Vec<(Vec<Vec<bool>>, usize)> = test_x[..n]
             .chunks(batch)
             .map(|chunk| {
@@ -258,12 +439,28 @@ pub fn serve(args: &mut Args) -> Result<()> {
         .zip(&test_y[..n])
         .filter(|(r, y)| r.class == Some(**y))
         .count();
-    println!("engine={} dataset={name} S={s} batch={batch}", session.backend_name());
+    println!(
+        "engine={} dataset={name} S={s} batch={batch} banks={}{}",
+        session.backend_name(),
+        session.n_banks(),
+        if session.bank_parallel() {
+            " (bank-parallel)"
+        } else {
+            ""
+        }
+    );
     println!("served {} requests in {wall:.3} s", responses.len());
     println!("accuracy          : {:.4} (golden {golden_acc:.4})", correct as f64 / n as f64);
     println!("modeled energy/dec: {}", eng(session.metrics().energy_per_dec(), "J"));
-    println!("modeled latency   : {}", eng(session.plan().timing.latency, "s"));
-    println!("modeled seq t-put : {}", eng(session.plan().timing.throughput_seq, "dec/s"));
+    println!("modeled latency   : {}", eng(session.modeled_latency(), "s"));
+    // Sequential throughput is bounded by the slowest bank (banks search
+    // in parallel); single-bank programs report the paper's 1/t_search.
+    let seq_tput = session
+        .coordinator()
+        .bank_plans()
+        .map(|p| p.timing.throughput_seq)
+        .fold(f64::INFINITY, f64::min);
+    println!("modeled seq t-put : {}", eng(seq_tput, "dec/s"));
     println!("wall-clock t-put  : {:.0} dec/s", session.metrics().wall_throughput());
     println!("{}", session.metrics().summary_line());
     Ok(())
@@ -399,6 +596,79 @@ mod tests {
     #[test]
     fn compile_command_runs() {
         compile(&mut args("compile --dataset iris --tile-size 16")).unwrap();
+    }
+
+    #[test]
+    fn compile_forest_command_runs() {
+        compile(&mut args(
+            "compile --dataset iris --tile-size 16 --forest 3 --sample-fraction 0.8 --max-features 2",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn forest_subflags_require_forest() {
+        let err = compile(&mut args(
+            "compile --dataset iris --tile-size 16 --sample-fraction 0.5",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--forest"));
+        let err =
+            compile(&mut args("compile --dataset iris --tile-size 16 --forest 0")).unwrap_err();
+        assert!(format!("{err:#}").contains("at least 1"));
+    }
+
+    #[test]
+    fn simulate_forest_command_runs() {
+        simulate_cmd(&mut args(
+            "simulate --dataset iris --tile-size 16 --forest 3 --max-features 2 --max-inputs 10",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_forest_command_runs() {
+        serve(&mut args(
+            "serve --dataset haberman --tile-size 16 --forest 3 --sample-fraction 0.8 \
+             --max-features 2 --engine native --batch 8",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_program_rejects_forest_flag() {
+        let path = tmpfile("forest_conflict.json");
+        let _ = std::fs::remove_file(&path);
+        compile(&mut args(&format!(
+            "compile --dataset iris --tile-size 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        let err = serve(&mut args(&format!(
+            "serve --program {} --forest 3",
+            path.display()
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("conflicts with --program"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn forest_compile_save_then_serve_program_two_process() {
+        let path = tmpfile("forest_program.json");
+        let _ = std::fs::remove_file(&path);
+        compile(&mut args(&format!(
+            "compile --dataset haberman --tile-size 16 --forest 3 --max-features 2 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        assert!(path.exists(), "compile --save must write the artifact");
+        serve(&mut args(&format!(
+            "serve --program {} --engine threaded-native --batch 8",
+            path.display()
+        )))
+        .unwrap();
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

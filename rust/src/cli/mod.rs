@@ -1,11 +1,13 @@
 //! Command-line interface (no `clap` offline — hand-rolled parser).
 //!
 //! ```text
-//! dt2cam compile  --dataset iris [--tile-size 128] [--save prog.json]
-//! dt2cam simulate --dataset iris --tile-size 64 [--saf 0.5] [--sigma-sa 0.05]
-//!                 [--sigma-input 0.01] [--no-sp] [--max-inputs N]
+//! dt2cam compile  --dataset iris [--tile-size 128] [--forest N]
+//!                 [--sample-fraction F] [--max-features K] [--save prog.json]
+//! dt2cam simulate --dataset iris --tile-size 64 [--forest N] [--saf 0.5]
+//!                 [--sigma-sa 0.05] [--sigma-input 0.01] [--no-sp]
+//!                 [--max-inputs N]
 //! dt2cam serve    --dataset covid --tile-size 128 --engine ENGINE
-//!                 [--batch 32] [--requests N] [--pipelined]
+//!                 [--forest N] [--batch 32] [--requests N] [--pipelined]
 //! dt2cam serve    --program prog.json --engine ENGINE   (two-process flow)
 //! dt2cam backends
 //! dt2cam report   --all | --table 2|4|5|6 | --fig 6|7|8|9  [--quick]
@@ -13,7 +15,9 @@
 //! ```
 //!
 //! `ENGINE` is a backend-registry name: `native`, `threaded-native`, or
-//! `pjrt` (see `dt2cam backends`).
+//! `pjrt` (see `dt2cam backends`). `--forest N` trains a bagged CART
+//! ensemble: the program becomes N CAM banks searched in parallel
+//! (`Send + Sync` backends) and combined by deterministic majority vote.
 
 pub mod args;
 pub mod commands;
@@ -44,10 +48,11 @@ pub const HELP: &str = "\
 dt2cam — Decision Tree to Content Addressable Memory framework
 
 USAGE:
-  dt2cam compile  --dataset NAME [--tile-size S] [--save PROGRAM.json]
-  dt2cam simulate --dataset NAME --tile-size S [--saf PCT] [--sigma-sa V]
-                  [--sigma-input SIG] [--no-sp] [--max-inputs N]
-  dt2cam serve    --dataset NAME --tile-size S [--engine ENGINE]
+  dt2cam compile  --dataset NAME [--tile-size S] [--forest N]
+                  [--sample-fraction F] [--max-features K] [--save PROGRAM.json]
+  dt2cam simulate --dataset NAME --tile-size S [--forest N] [--saf PCT]
+                  [--sigma-sa V] [--sigma-input SIG] [--no-sp] [--max-inputs N]
+  dt2cam serve    --dataset NAME --tile-size S [--engine ENGINE] [--forest N]
                   [--batch B] [--requests N] [--pipelined]
   dt2cam serve    --program PROGRAM.json [--engine ENGINE] [--batch B]
   dt2cam backends
@@ -55,6 +60,9 @@ USAGE:
   dt2cam help
 
 ENGINE: native | threaded-native | pjrt  (see `dt2cam backends`)
+`--forest N` trains a bagged CART ensemble: N CAM banks searched in
+parallel and combined by deterministic majority vote (single-tree
+programs are the 1-bank case).
 `compile --save` + `serve --program` run the pipeline as two processes
 over a mapped-program JSON artifact (compile once, serve many).
 ";

@@ -12,8 +12,14 @@ pub struct Metrics {
     pub decisions: u64,
     pub no_match: u64,
     pub multi_match: u64,
-    /// Modeled energy total (J).
+    /// Modeled energy total (J). For a multi-bank (forest) program this
+    /// is the sum over banks — see [`Metrics::bank_energy`] for the
+    /// per-bank breakdown.
     pub modeled_energy: f64,
+    /// Per-bank modeled energy (J); `bank_energy.len()` is the bank
+    /// count of the serving coordinator (1 for single-tree programs).
+    /// Sums to `modeled_energy`.
+    pub bank_energy: Vec<f64>,
     /// Modeled active row-division evaluations.
     pub active_row_evals: u64,
     /// Wall-clock per batch (s).
@@ -55,6 +61,22 @@ impl Metrics {
         self.requests += 1;
     }
 
+    /// Attribute one bank's share of a batch's modeled energy (the
+    /// aggregate is still recorded through [`Metrics::record_batch`];
+    /// this keeps the per-bank breakdown for forest observability).
+    pub fn record_bank_energy(&mut self, bank: usize, energy: f64) {
+        if self.bank_energy.len() <= bank {
+            self.bank_energy.resize(bank + 1, 0.0);
+        }
+        self.bank_energy[bank] += energy;
+    }
+
+    /// Number of CAM banks this serving run dispatched to (1 for
+    /// single-tree programs; 0 before any batch ran).
+    pub fn n_banks(&self) -> usize {
+        self.bank_energy.len()
+    }
+
     /// Record one request's arrival → batch-dispatch wait (at drain).
     pub fn record_queue_delay(&mut self, queue_delay: Duration) {
         self.queue_delay.push(queue_delay.as_secs_f64());
@@ -80,9 +102,14 @@ impl Metrics {
 
     /// One-line summary for logs.
     pub fn summary_line(&self) -> String {
+        let banks = if self.bank_energy.len() > 1 {
+            format!(" banks={}", self.bank_energy.len())
+        } else {
+            String::new()
+        };
         format!(
             "requests={} decisions={} batches={} e/dec={:.3} nJ rows/dec={:.1} \
-             wall-throughput={:.0} dec/s no_match={} multi_match={}",
+             wall-throughput={:.0} dec/s no_match={} multi_match={}{banks}",
             self.requests,
             self.decisions,
             self.batches,
@@ -126,5 +153,21 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.energy_per_dec(), 0.0);
         assert_eq!(m.wall_throughput(), 0.0);
+        assert_eq!(m.n_banks(), 0);
+    }
+
+    #[test]
+    fn bank_energy_breakdown_accumulates_per_bank() {
+        let mut m = Metrics::new();
+        m.record_bank_energy(0, 1e-9);
+        m.record_bank_energy(2, 3e-9);
+        m.record_bank_energy(0, 1e-9);
+        assert_eq!(m.n_banks(), 3);
+        assert!((m.bank_energy[0] - 2e-9).abs() < 1e-24);
+        assert_eq!(m.bank_energy[1], 0.0);
+        assert!((m.bank_energy[2] - 3e-9).abs() < 1e-24);
+        // summary mentions the bank count only for multi-bank runs.
+        assert!(m.summary_line().contains("banks=3"));
+        assert!(!Metrics::new().summary_line().contains("banks="));
     }
 }

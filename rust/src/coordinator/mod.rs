@@ -1,13 +1,17 @@
 //! L3 serving coordinator — the system that puts DT2CAM on a request path.
 //!
 //! vLLM-router-shaped: requests (feature vectors) enter through the
-//! [`batcher`], the [`scheduler`] walks each batch across the column-wise
-//! divisions with selective-precharge semantics (Fig 4/5) — per-lane
-//! survivor sets are packed [`crate::util::rowmask::RowMask`] bitsets,
-//! folded by word-wise AND and popcounted for energy — executing every
-//! row-wise tile per division, and [`metrics`] accounts both the *modeled*
-//! hardware cost (nJ/dec, ns/dec from the synthesizer's device model) and
-//! the *wall-clock* cost of this software incarnation.
+//! [`batcher`], the [`server`] coordinator fans each batch out across the
+//! program's CAM **banks** (one per ensemble tree; single-tree programs
+//! are the 1-bank case) and combines surviving classes by deterministic
+//! majority vote, the [`scheduler`] walks each bank's batch across the
+//! column-wise divisions with selective-precharge semantics (Fig 4/5) —
+//! per-lane survivor sets are packed [`crate::util::rowmask::RowMask`]
+//! bitsets, folded by word-wise AND and popcounted for energy —
+//! executing every row-wise tile per division, and [`metrics`] accounts
+//! both the *modeled* hardware cost (nJ/dec summed over banks, ns/dec of
+//! the slowest bank + vote) and the *wall-clock* cost of this software
+//! incarnation.
 //!
 //! Tile matches are evaluated through the pluggable
 //! [`MatchBackend`](crate::api::MatchBackend) seam — `native`,
@@ -30,4 +34,4 @@ pub use batcher::{Batcher, InferenceRequest};
 pub use metrics::Metrics;
 pub use plan::ServingPlan;
 pub use scheduler::{BatchOutcome, BatchScratch, Scheduler};
-pub use server::{Coordinator, InferenceResponse};
+pub use server::{BankSpec, Coordinator, InferenceResponse};

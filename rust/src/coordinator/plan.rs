@@ -35,6 +35,11 @@ pub struct DivisionPlan {
 pub struct ServingPlan {
     /// Unique id (per build) — keys the engine's device-buffer cache.
     pub plan_id: u64,
+    /// Which CAM bank of the program this plan serves (0 for single-tree
+    /// programs; forest programs build one plan per bank). Stamped onto
+    /// every [`BatchOutcome`](super::scheduler::BatchOutcome) so bank
+    /// results stay attributable after a parallel fan-out.
+    pub bank: usize,
     pub s: usize,
     pub n_rwd: usize,
     pub n_cwd: usize,
@@ -56,7 +61,18 @@ pub struct ServingPlan {
 impl ServingPlan {
     /// Precompute the plan from a mapped array. `vref` is the (possibly
     /// variability-perturbed) per-(division, row) reference vector.
+    /// Single-bank convenience for [`ServingPlan::build_bank`] (bank 0).
     pub fn build(m: &MappedArray, vref: &[f64], p: &DeviceParams) -> ServingPlan {
+        Self::build_bank(m, vref, p, 0)
+    }
+
+    /// Build the plan for one bank of a (possibly multi-bank) program.
+    pub fn build_bank(
+        m: &MappedArray,
+        vref: &[f64],
+        p: &DeviceParams,
+        bank: usize,
+    ) -> ServingPlan {
         assert_eq!(vref.len(), m.n_cwd * m.padded_rows);
         let s = m.s;
         let mut divisions = Vec::with_capacity(m.n_cwd);
@@ -101,6 +117,7 @@ impl ServingPlan {
             std::sync::atomic::AtomicU64::new(1);
         ServingPlan {
             plan_id: NEXT_PLAN_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            bank,
             s,
             n_rwd: m.n_rwd,
             n_cwd: m.n_cwd,

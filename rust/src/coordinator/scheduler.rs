@@ -25,6 +25,11 @@ use super::plan::ServingPlan;
 /// Result of scheduling one batch.
 #[derive(Clone, Debug)]
 pub struct BatchOutcome {
+    /// Which CAM bank produced this outcome (stamped from
+    /// [`ServingPlan::bank`]; 0 for single-tree programs). The
+    /// bank-combining coordinator fans one batch out across bank plans
+    /// and attributes each outcome back through this field.
+    pub bank: usize,
     /// Predicted class per lane (`None`: dead lane or no survivor).
     pub classes: Vec<Option<usize>>,
     /// Modeled energy total over real lanes (J).
@@ -166,6 +171,7 @@ impl<'a> Scheduler<'a> {
         let modeled_energy =
             energy_rows as f64 * plan.e_row + real_lanes as f64 * plan.e_mem;
         Ok(BatchOutcome {
+            bank: plan.bank,
             classes,
             modeled_energy,
             active_row_evals: energy_rows,

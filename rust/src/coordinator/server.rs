@@ -1,55 +1,102 @@
 //! The coordinator: ties batcher + scheduler + metrics into a serving
-//! loop over one pluggable [`MatchBackend`]. This is the `dt2cam serve`
-//! engine, the substance of [`crate::api::Session`], and the heart of
-//! the `serve_e2e` example.
+//! loop over the CAM **banks** of one program. A single-tree program is
+//! the 1-bank special case; a forest program fans each batch out across
+//! its banks (independent CAM arrays — in parallel over a
+//! [`ThreadPool`] when the backend is `Send + Sync`, sequentially for
+//! the `!Send` PJRT client) and combines the surviving classes with the
+//! deterministic majority vote from [`crate::cart::Forest`]. This is
+//! the `dt2cam serve` engine, the substance of [`crate::api::Session`],
+//! and the heart of the `serve_e2e` / `forest_serve` examples.
+//!
+//! Hardware cost semantics (see `cart::forest`): modeled energy is the
+//! **sum** over banks (every array burns its own joules), modeled
+//! latency is the **slowest** bank plus the digital vote stage (banks
+//! search concurrently).
 
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::api::backend::MatchBackend;
+use crate::api::backend::{BankDispatch, MatchBackend};
 use crate::api::registry::{self, BackendOptions};
+use crate::cart::vote_survivors;
 use crate::compiler::Lut;
 use crate::config::RunConfig;
+use crate::synth::latency::forest_latency;
 use crate::synth::mapping::MappedArray;
 use crate::tcam::params::DeviceParams;
+use crate::util::threadpool::ThreadPool;
 
 use super::batcher::{Batcher, InferenceRequest};
 use super::metrics::Metrics;
 use super::plan::ServingPlan;
-use super::scheduler::{BatchScratch, Scheduler};
+use super::scheduler::{BatchOutcome, BatchScratch, Scheduler};
 
 /// One answered request.
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
     pub id: u64,
-    /// Predicted class (None = no surviving row under faults).
+    /// Predicted class (None = no surviving row in any bank).
     pub class: Option<usize>,
-    /// Modeled per-decision latency of the hardware (s).
+    /// Modeled per-decision latency of the hardware (s): slowest bank +
+    /// vote stage for forest programs, the single bank's latency
+    /// otherwise.
     pub modeled_latency: f64,
 }
 
-/// The serving coordinator. Owns the plan and the match backend;
-/// single-threaded facade (the PJRT backend is `!Send`), with row-tile
-/// parallelism inside the backend.
-pub struct Coordinator {
-    plan: ServingPlan,
+/// One bank's compiled + mapped pieces handed to
+/// [`Coordinator::with_banks`] (borrowed — the coordinator builds its
+/// own plan from them).
+pub struct BankSpec<'a> {
+    /// The bank's compiled LUT (owned; the coordinator keeps it for
+    /// input encoding).
+    pub lut: Lut,
+    /// Feature projection: `features[j]` is the original dataset index
+    /// of this bank's j-th feature (identity for single-tree programs).
+    pub features: Vec<usize>,
+    /// The bank's tile grid.
+    pub mapped: &'a MappedArray,
+    /// The bank's per-(division, row) reference voltages.
+    pub vref: &'a [f64],
+}
+
+/// Everything one bank needs on the request path.
+struct BankRuntime {
     lut: Lut,
+    features: Vec<usize>,
     padded_width: usize,
+    plan: ServingPlan,
+    /// Per-bank scheduler scratch, reused across every batch. Behind a
+    /// `Mutex` so the parallel fan-out can reach it through `&self`
+    /// (uncontended — exactly one job per bank per batch).
+    scratch: Mutex<BatchScratch>,
+}
+
+/// The serving coordinator. Owns one plan per bank and the bank
+/// dispatch; single-threaded facade (the PJRT backend is `!Send`), with
+/// bank-level fan-out (and row-tile parallelism inside the backend) for
+/// `Send + Sync` backends.
+pub struct Coordinator {
+    banks: Vec<BankRuntime>,
+    n_classes: usize,
     params: DeviceParams,
-    backend: Box<dyn MatchBackend>,
+    dispatch: BankDispatch,
+    /// Bank fan-out pool — present only for parallel dispatch over more
+    /// than one bank.
+    pool: Option<ThreadPool>,
     batcher: Batcher,
-    /// Scheduler scratch reused across every batch this coordinator
-    /// serves — the division walk allocates nothing after warm-up.
-    scratch: BatchScratch,
+    /// Modeled per-decision latency (slowest bank + vote stage).
+    modeled_latency: f64,
     pub metrics: Metrics,
 }
 
 impl Coordinator {
-    /// Build a coordinator from prepared pieces, constructing the backend
-    /// from the config's engine through the registry. For `pjrt` the
-    /// artifact directory must contain a tile/division set matching
-    /// `cfg.tile_size` and `cfg.batch` (`make artifacts`).
+    /// Build a single-bank coordinator from prepared pieces,
+    /// constructing the backend from the config's engine through the
+    /// registry. For `pjrt` the artifact directory must contain a
+    /// tile/division set matching `cfg.tile_size` and `cfg.batch`
+    /// (`make artifacts`).
     pub fn new(
         cfg: &RunConfig,
         lut: Lut,
@@ -57,12 +104,25 @@ impl Coordinator {
         vref: &[f64],
         params: DeviceParams,
     ) -> Result<Coordinator> {
-        let backend = registry::create(cfg.engine, &BackendOptions::from_config(cfg))?;
-        Self::with_backend(backend, cfg.batch, lut, mapped, vref, params)
+        let dispatch =
+            registry::create_bank_dispatch(cfg.engine, &BackendOptions::from_config(cfg))?;
+        let features = (0..lut.encoders.len()).collect();
+        Self::with_banks(
+            dispatch,
+            cfg.batch,
+            vec![BankSpec {
+                lut,
+                features,
+                mapped,
+                vref,
+            }],
+            params,
+        )
     }
 
-    /// Build a coordinator over an already-constructed backend. The
-    /// backend is warmed against the plan geometry (fail fast).
+    /// Build a single-bank coordinator over an already-constructed
+    /// backend (sequential dispatch — with one bank the two modes are
+    /// identical).
     pub fn with_backend(
         backend: Box<dyn MatchBackend>,
         batch: usize,
@@ -71,30 +131,107 @@ impl Coordinator {
         vref: &[f64],
         params: DeviceParams,
     ) -> Result<Coordinator> {
-        let plan = ServingPlan::build(mapped, vref, &params);
-        // A backend reused across sessions (plan rebuilds after fault
-        // injection) must not alias stale per-plan caches.
-        backend.invalidate();
-        backend.warm(&plan, batch)?;
-        Ok(Coordinator {
-            plan,
-            lut,
-            padded_width: mapped.padded_width,
+        let features = (0..lut.encoders.len()).collect();
+        Self::with_banks(
+            BankDispatch::Sequential(backend),
+            batch,
+            vec![BankSpec {
+                lut,
+                features,
+                mapped,
+                vref,
+            }],
             params,
-            backend,
+        )
+    }
+
+    /// Build a coordinator over one-or-many banks. Every bank is warmed
+    /// against the backend (fail fast); the backend's per-plan caches
+    /// are invalidated first so an instance reused across sessions
+    /// (plan rebuilds after fault injection) never aliases stale state.
+    pub fn with_banks(
+        dispatch: BankDispatch,
+        batch: usize,
+        banks: Vec<BankSpec<'_>>,
+        params: DeviceParams,
+    ) -> Result<Coordinator> {
+        anyhow::ensure!(!banks.is_empty(), "a program needs at least one bank");
+        dispatch.backend().invalidate();
+        let mut runtimes = Vec::with_capacity(banks.len());
+        for (b, spec) in banks.into_iter().enumerate() {
+            let plan = ServingPlan::build_bank(spec.mapped, spec.vref, &params, b);
+            dispatch.backend().warm(&plan, batch)?;
+            runtimes.push(BankRuntime {
+                lut: spec.lut,
+                features: spec.features,
+                padded_width: spec.mapped.padded_width,
+                plan,
+                scratch: Mutex::new(BatchScratch::default()),
+            });
+        }
+        let n_classes = runtimes[0].plan.n_classes;
+        // Fail fast like every other construction path: a mismatched
+        // class space would otherwise surface as an out-of-bounds vote
+        // index mid-batch.
+        if let Some(bad) = runtimes.iter().position(|r| r.plan.n_classes != n_classes) {
+            anyhow::bail!(
+                "bank {bad} has {} classes but bank 0 has {n_classes} — \
+                 every bank of a program must share one class space",
+                runtimes[bad].plan.n_classes
+            );
+        }
+        let latencies: Vec<f64> = runtimes.iter().map(|r| r.plan.timing.latency).collect();
+        let modeled_latency = forest_latency(&latencies, &params);
+        // Bank fan-out pool: one worker per bank (capped like the
+        // backend pools), only when the dispatch allows concurrency and
+        // there is more than one bank to overlap.
+        let pool = if dispatch.is_parallel() && runtimes.len() > 1 {
+            Some(ThreadPool::new(runtimes.len().min(16)))
+        } else {
+            None
+        };
+        Ok(Coordinator {
+            banks: runtimes,
+            n_classes,
+            params,
+            dispatch,
+            pool,
             batcher: Batcher::new(batch, Duration::from_millis(2)),
-            scratch: BatchScratch::default(),
+            modeled_latency,
             metrics: Metrics::new(),
         })
     }
 
+    /// The primary (bank 0) serving plan — the whole plan set for
+    /// single-tree programs; see [`Coordinator::bank_plans`] for all of
+    /// them.
     pub fn plan(&self) -> &ServingPlan {
-        &self.plan
+        &self.banks[0].plan
+    }
+
+    /// Every bank's serving plan, in bank order.
+    pub fn bank_plans(&self) -> impl Iterator<Item = &ServingPlan> {
+        self.banks.iter().map(|b| &b.plan)
+    }
+
+    /// Number of CAM banks this coordinator serves.
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Modeled per-decision latency (slowest bank + vote stage).
+    pub fn modeled_latency(&self) -> f64 {
+        self.modeled_latency
     }
 
     /// Registry name of the backend driving this coordinator.
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.dispatch.name()
+    }
+
+    /// Whether banks are dispatched concurrently.
+    pub fn bank_parallel(&self) -> bool {
+        self.pool.is_some()
     }
 
     /// Enqueue one request. The queueing delay is *not* recorded here —
@@ -123,6 +260,20 @@ impl Coordinator {
         Ok(responses)
     }
 
+    /// Evaluate one bank for one encoded batch (shared by both dispatch
+    /// paths).
+    fn run_bank(
+        bank: &BankRuntime,
+        params: &DeviceParams,
+        backend: &dyn MatchBackend,
+        queries: &[Vec<bool>],
+        real: usize,
+    ) -> Result<BatchOutcome> {
+        let sched = Scheduler::new(&bank.plan, params);
+        let mut scratch = bank.scratch.lock().unwrap();
+        sched.run_batch_with(backend, queries, real, &mut scratch)
+    }
+
     fn run_batch(&mut self, batch: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
         let width = self.batcher.batch_width();
         let real = batch.len();
@@ -132,37 +283,100 @@ impl Coordinator {
         for r in &batch {
             self.metrics.record_queue_delay(r.arrived.elapsed());
         }
-        // Encode + pad lanes to the artifact width.
-        let mut queries: Vec<Vec<bool>> = batch
+        // Encode + pad lanes to the artifact width, once per bank: each
+        // bank sees its own feature projection through its own encoders.
+        // One reusable projection buffer serves every (bank, lane) pair.
+        let mut proj: Vec<f64> = Vec::new();
+        let bank_queries: Vec<Vec<Vec<bool>>> = self
+            .banks
             .iter()
-            .map(|r| self.plan.encode(&self.lut, self.padded_width, &r.features))
+            .map(|bank| {
+                let mut qs: Vec<Vec<bool>> = batch
+                    .iter()
+                    .map(|r| {
+                        proj.clear();
+                        proj.extend(bank.features.iter().map(|&f| r.features[f]));
+                        bank.plan.encode(&bank.lut, bank.padded_width, &proj)
+                    })
+                    .collect();
+                while qs.len() < width {
+                    qs.push(vec![false; bank.padded_width]);
+                }
+                qs
+            })
             .collect();
-        while queries.len() < width {
-            queries.push(vec![false; self.padded_width]);
+
+        let t0 = Instant::now();
+        let outcomes: Vec<BatchOutcome> = match (&self.pool, &self.dispatch) {
+            (Some(pool), BankDispatch::Parallel(backend)) => {
+                // Bank fan-out: banks are independent CAM arrays, the
+                // backend is shared (&self), scratch is per-bank.
+                let banks = &self.banks;
+                let params = &self.params;
+                let backend: &(dyn MatchBackend + Send + Sync) = backend.as_ref();
+                pool.scoped_map(banks.len(), |b| {
+                    Self::run_bank(&banks[b], params, backend, &bank_queries[b], real)
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+            }
+            _ => {
+                let backend = self.dispatch.backend();
+                self.banks
+                    .iter()
+                    .enumerate()
+                    .map(|(b, bank)| {
+                        Self::run_bank(bank, &self.params, backend, &bank_queries[b], real)
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        let wall = t0.elapsed();
+
+        // Combine survivors with the normative forest rule
+        // (`cart::vote_survivors`: silent banks cast no vote, ties →
+        // lowest class id, no votes at all → no-match).
+        let mut classes = Vec::with_capacity(real);
+        let mut no_match = 0usize;
+        let mut votes = Vec::new();
+        for lane in 0..real {
+            let c = vote_survivors(
+                outcomes.iter().map(|out| out.classes[lane]),
+                self.n_classes,
+                &mut votes,
+            );
+            if c.is_none() {
+                no_match += 1;
+            }
+            classes.push(c);
         }
 
-        let sched = Scheduler::new(&self.plan, &self.params);
-        let t0 = Instant::now();
-        let out =
-            sched.run_batch_with(self.backend.as_ref(), &queries, real, &mut self.scratch)?;
-        let wall = t0.elapsed();
+        // Roll up the hardware cost: energy and row activity sum over
+        // banks (each array burns its own joules); multi-match events
+        // are per-bank hardware events and also sum.
+        let modeled_energy: f64 = outcomes.iter().map(|o| o.modeled_energy).sum();
+        let active_rows: u64 = outcomes.iter().map(|o| o.active_row_evals).sum();
+        let multi_match: usize = outcomes.iter().map(|o| o.multi_match).sum();
+        for out in &outcomes {
+            self.metrics.record_bank_energy(out.bank, out.modeled_energy);
+        }
         self.metrics.record_batch(
             real,
-            out.modeled_energy,
-            out.active_row_evals,
-            out.no_match,
-            out.multi_match,
+            modeled_energy,
+            active_rows,
+            no_match,
+            multi_match,
             wall,
         );
         self.metrics.wall_total += wall.as_secs_f64();
 
         Ok(batch
             .iter()
-            .zip(&out.classes)
+            .zip(&classes)
             .map(|(req, &class)| InferenceResponse {
                 id: req.id,
                 class,
-                modeled_latency: self.plan.timing.latency,
+                modeled_latency: self.modeled_latency,
             })
             .collect())
     }
@@ -227,11 +441,15 @@ mod tests {
     fn native_serving_classifies_whole_test_set() {
         let (mut coord, txs, _tys) = build(EngineKind::Native, "iris", 16);
         assert_eq!(coord.backend_name(), "native");
+        assert_eq!(coord.n_banks(), 1);
+        // Single bank: no fan-out pool even under parallel dispatch.
+        assert!(!coord.bank_parallel());
         let got = coord.classify_all(&txs).unwrap();
         assert_eq!(got.len(), txs.len());
         assert!(got.iter().all(|c| c.is_some()));
         assert_eq!(coord.metrics.decisions, txs.len() as u64);
         assert!(coord.metrics.energy_per_dec() > 0.0);
+        assert_eq!(coord.metrics.n_banks(), 1);
     }
 
     #[test]
@@ -301,5 +519,153 @@ mod tests {
         let ids: Vec<u64> = resp.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![100, 101, 102, 103, 104]);
         assert!(resp.iter().all(|r| r.modeled_latency > 0.0));
+    }
+
+    // ------------------------------------------------- multi-bank tests
+
+    /// Build a 3-bank coordinator (bagged forest on haberman) plus the
+    /// forest itself and its test split.
+    fn build_forest(
+        dispatch: BankDispatch,
+    ) -> (Coordinator, crate::cart::Forest, Vec<Vec<f64>>, Vec<usize>) {
+        use crate::cart::{train_forest, ForestParams};
+        let mut d = catalog::by_name("haberman", 0xD72CA0).unwrap();
+        d.normalize();
+        let mut rng = Prng::new(11);
+        let split = d.split(0.9, &mut rng);
+        let (xs, ys) = d.gather(&split.train);
+        let forest = train_forest(
+            &xs,
+            &ys,
+            d.n_classes,
+            &ForestParams {
+                n_trees: 3,
+                sample_fraction: 0.8,
+                max_features: 2,
+                ..Default::default()
+            },
+            &mut Prng::new(7),
+        );
+        let p = DeviceParams::default();
+        // Specs borrow the arrays only during construction; the
+        // coordinator owns everything it needs afterwards.
+        let arrays: Vec<MappedArray> = forest
+            .trees
+            .iter()
+            .map(|t| MappedArray::from_lut(&compile(t), 16, &p, &mut Prng::new(3)))
+            .collect();
+        let specs: Vec<BankSpec> = forest
+            .trees
+            .iter()
+            .zip(&forest.feature_sets)
+            .zip(&arrays)
+            .map(|((t, feats), m)| BankSpec {
+                lut: compile(t),
+                features: feats.clone(),
+                mapped: m,
+                vref: &m.vref,
+            })
+            .collect();
+        let coord = Coordinator::with_banks(dispatch, 16, specs, p).unwrap();
+        let (txs, tys) = d.gather(&split.test);
+        (coord, forest, txs, tys)
+    }
+
+    #[test]
+    fn forest_coordinator_votes_match_software_forest() {
+        use crate::api::NativeBackend;
+        let (mut coord, forest, txs, _tys) =
+            build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+        assert_eq!(coord.n_banks(), 3);
+        assert!(!coord.bank_parallel());
+        let got = coord.classify_all(&txs).unwrap();
+        // Ideal hardware: every bank matches its tree exactly, so the
+        // combined vote must equal Forest::predict on every input.
+        for (i, x) in txs.iter().enumerate() {
+            assert_eq!(got[i], Some(forest.predict(x)), "input {i}");
+        }
+        // Energy is attributed per bank and sums to the aggregate.
+        assert_eq!(coord.metrics.n_banks(), 3);
+        let sum: f64 = coord.metrics.bank_energy.iter().sum();
+        assert!((sum - coord.metrics.modeled_energy).abs() <= 1e-18 * sum.abs().max(1.0));
+        assert!(coord.metrics.bank_energy.iter().all(|&e| e > 0.0));
+    }
+
+    #[test]
+    fn parallel_and_sequential_bank_dispatch_agree() {
+        use crate::api::{NativeBackend, ThreadedNativeBackend};
+        use std::sync::Arc;
+        let (mut seq, _, txs, _) =
+            build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+        let (mut par, _, txs2, _) =
+            build_forest(BankDispatch::Parallel(Arc::new(NativeBackend::new())));
+        let (mut par_threaded, _, _, _) = build_forest(BankDispatch::Parallel(Arc::new(
+            ThreadedNativeBackend::new(2),
+        )));
+        assert_eq!(txs, txs2);
+        assert!(par.bank_parallel());
+        let a = seq.classify_all(&txs).unwrap();
+        let b = par.classify_all(&txs).unwrap();
+        let c = par_threaded.classify_all(&txs).unwrap();
+        assert_eq!(a, b, "parallel fan-out must not change any vote");
+        assert_eq!(a, c);
+        // Cost roll-ups are dispatch-invariant too.
+        assert_eq!(seq.metrics.modeled_energy, par.metrics.modeled_energy);
+        assert_eq!(seq.metrics.active_row_evals, par.metrics.active_row_evals);
+        assert_eq!(seq.metrics.bank_energy, par.metrics.bank_energy);
+    }
+
+    #[test]
+    fn with_banks_rejects_mismatched_class_spaces() {
+        use crate::api::NativeBackend;
+        let build_one = |name: &str| {
+            let mut d = catalog::by_name(name, 1).unwrap();
+            d.normalize();
+            let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+            let lut = compile(&tree);
+            let m = MappedArray::from_lut(&lut, 16, &DeviceParams::default(), &mut Prng::new(2));
+            (lut, m)
+        };
+        let (lut_a, m_a) = build_one("iris"); // 3 classes
+        let (lut_b, m_b) = build_one("haberman"); // 2 classes
+        let specs = vec![
+            BankSpec {
+                features: (0..lut_a.encoders.len()).collect(),
+                lut: lut_a,
+                mapped: &m_a,
+                vref: &m_a.vref,
+            },
+            BankSpec {
+                features: (0..lut_b.encoders.len()).collect(),
+                lut: lut_b,
+                mapped: &m_b,
+                vref: &m_b.vref,
+            },
+        ];
+        let err = Coordinator::with_banks(
+            BankDispatch::Sequential(Box::new(NativeBackend::new())),
+            8,
+            specs,
+            DeviceParams::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("class space"), "{err:#}");
+    }
+
+    #[test]
+    fn forest_modeled_latency_is_slowest_bank_plus_vote() {
+        use crate::api::NativeBackend;
+        use crate::synth::latency::vote_latency;
+        let (coord, _, _, _) =
+            build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+        let slowest = coord
+            .bank_plans()
+            .map(|p| p.timing.latency)
+            .fold(0.0f64, f64::max);
+        let p = DeviceParams::default();
+        assert!((coord.modeled_latency() - (slowest + vote_latency(&p))).abs() < 1e-24);
+        // Single-bank coordinators report the bank's latency unchanged.
+        let (single, _, _) = build(EngineKind::Native, "iris", 16);
+        assert_eq!(single.modeled_latency(), single.plan().timing.latency);
     }
 }

@@ -42,11 +42,15 @@
 //! # let _ = classes; Ok(()) }
 //! ```
 //!
-//! Compile and serve can run as separate processes: `dt2cam compile
-//! --dataset iris --save p.json`, then `dt2cam serve --program p.json`.
-//! Execution substrates implement [`api::MatchBackend`] (`native`,
-//! `threaded-native`, `pjrt`); see `docs/API.md` for the stage and
-//! backend contracts.
+//! A program is a vector of **CAM banks**: `Dt2Cam::forest(name,
+//! &ForestParams)` trains a bagged CART ensemble whose trees compile to
+//! independent banks, searched in parallel and combined by
+//! deterministic majority vote (`dt2cam serve --forest 9`); the single
+//! tree above is the 1-bank special case. Compile and serve can run as
+//! separate processes: `dt2cam compile --dataset iris --save p.json`,
+//! then `dt2cam serve --program p.json`. Execution substrates implement
+//! [`api::MatchBackend`] (`native`, `threaded-native`, `pjrt`); see
+//! `docs/API.md` for the stage, bank, and backend contracts.
 //!
 //! Entry points: the `dt2cam` binary (see [`cli`]), the examples under
 //! `examples/`, and the benches under `rust/benches/` (one per paper table

@@ -43,17 +43,43 @@ pub struct Workload {
 
 impl From<TrainedModel> for Workload {
     /// Flatten the facade's stage artifacts into the report layout.
+    ///
+    /// The report harness is single-tree (the paper's tables/figures),
+    /// so only 1-bank models convert: a forest's bank-0 LUT expects
+    /// *projected* feature vectors while `test_x`/`golden` are
+    /// ensemble-level, and silently mixing the two would misattribute
+    /// every feature position. Forest workloads go through the facade's
+    /// bank-aware `Session` instead.
+    ///
+    /// # Panics
+    /// If `model` has more than one bank.
     fn from(model: TrainedModel) -> Workload {
-        let lut = model.compile().lut;
+        assert_eq!(
+            model.n_banks(),
+            1,
+            "Workload is the single-tree report shim; serve forest models \
+             through api::Session (bank-aware) instead"
+        );
+        let lut = model.compile().banks.swap_remove(0).lut;
+        let TrainedModel {
+            dataset,
+            split,
+            forest,
+            test_x,
+            test_y,
+            golden,
+            seed,
+        } = model;
+        let tree = forest.trees.into_iter().next().expect("model has a bank");
         Workload {
-            dataset: model.dataset,
-            split: model.split,
-            tree: model.tree,
+            dataset,
+            split,
+            tree,
             lut,
-            test_x: model.test_x,
-            test_y: model.test_y,
-            golden: model.golden,
-            seed: model.seed,
+            test_x,
+            test_y,
+            golden,
+            seed,
         }
     }
 }
@@ -108,6 +134,22 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "single-tree report shim")]
+    fn workload_rejects_multi_bank_models() {
+        use crate::cart::ForestParams;
+        let model = Dt2Cam::forest(
+            "iris",
+            &ForestParams {
+                n_trees: 2,
+                max_features: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let _ = Workload::from(model);
+    }
+
+    #[test]
     fn workload_is_deterministic() {
         let a = Workload::prepare("haberman").unwrap();
         let b = Workload::prepare("haberman").unwrap();
@@ -121,7 +163,7 @@ mod tests {
         let program = Dt2Cam::dataset_seeded("iris", 42).unwrap().compile();
         let w = Workload::from(Dt2Cam::dataset_seeded("iris", 42).unwrap());
         let p = DeviceParams::default();
-        assert_eq!(w.map(16, &p).cells, program.map(16, &p).mapped.cells);
+        assert_eq!(w.map(16, &p).cells, program.map(16, &p).primary().cells);
     }
 
     #[test]
@@ -134,8 +176,8 @@ mod tests {
         let p = DeviceParams::default();
         let a = w.map(16, &p);
         let b = program.map(16, &p);
-        assert_eq!(a.cells, b.mapped.cells);
-        assert_eq!(a.classes, b.mapped.classes);
-        assert_eq!(a.vref, b.mapped.vref);
+        assert_eq!(a.cells, b.primary().cells);
+        assert_eq!(a.classes, b.primary().classes);
+        assert_eq!(a.vref, b.primary().vref);
     }
 }

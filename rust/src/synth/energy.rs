@@ -68,6 +68,16 @@ impl EnergyAccount {
     }
 }
 
+/// Forest energy roll-up (`cart::forest` hardware semantics): every bank
+/// is a physically separate CAM array that precharges and senses its own
+/// rows, so a multi-bank decision costs the **sum** of the banks'
+/// energies (unlike latency, which is the slowest bank — the arrays run
+/// concurrently but each still burns its own joules).
+pub fn forest_energy(bank_energies: &[f64]) -> f64 {
+    assert!(!bank_energies.is_empty(), "a program has at least one bank");
+    bank_energies.iter().sum()
+}
+
 /// Closed-form worst-case traffic-config check (Table VI): 2000 active
 /// rows in the first division, ~1 surviving thereafter.
 pub fn traffic_config_energy(p: &DeviceParams) -> f64 {
@@ -106,6 +116,12 @@ mod tests {
             (e - 0.098e-9).abs() / 0.098e-9 < 0.10,
             "traffic energy {e:.3e} J vs paper 0.098e-9 J"
         );
+    }
+
+    #[test]
+    fn forest_energy_sums_banks() {
+        assert_eq!(forest_energy(&[1.0e-9]), 1.0e-9);
+        assert!((forest_energy(&[1.0e-9, 2.0e-9, 0.5e-9]) - 3.5e-9).abs() < 1e-24);
     }
 
     #[test]

@@ -55,6 +55,29 @@ pub fn timing(m: &MappedArray, p: &DeviceParams) -> TimingReport {
     }
 }
 
+/// Modeled latency of the digital majority-vote stage that combines a
+/// multi-bank forest program's surviving classes: one digital read/compare
+/// pass, priced like the class readout (`T_mem`). A 1-bank program has no
+/// vote stage.
+pub fn vote_latency(p: &DeviceParams) -> f64 {
+    p.t_mem
+}
+
+/// Forest latency roll-up (`cart::forest` hardware semantics): banks are
+/// independent CAM arrays searching in parallel, so the per-decision
+/// latency is the **slowest bank** plus the vote stage — never the sum.
+/// With one bank this is exactly that bank's latency (no vote stage),
+/// so single-tree programs report unchanged numbers.
+pub fn forest_latency(bank_latencies: &[f64], p: &DeviceParams) -> f64 {
+    assert!(!bank_latencies.is_empty(), "a program has at least one bank");
+    let slowest = bank_latencies.iter().cloned().fold(0.0f64, f64::max);
+    if bank_latencies.len() == 1 {
+        slowest
+    } else {
+        slowest + vote_latency(p)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +142,18 @@ mod tests {
             assert!(t2.throughput_seq < t1.throughput_seq);
         }
         let _ = lut;
+    }
+
+    #[test]
+    fn forest_latency_is_slowest_bank_plus_vote() {
+        let p = DeviceParams::default();
+        // Single bank: no vote stage — exactly the bank's latency.
+        assert_eq!(forest_latency(&[3.2e-9], &p), 3.2e-9);
+        // Multi-bank: slowest bank + one vote stage, never the sum.
+        let banks = [2.0e-9, 5.0e-9, 3.0e-9];
+        let got = forest_latency(&banks, &p);
+        assert!((got - (5.0e-9 + vote_latency(&p))).abs() < 1e-24);
+        assert!(got < banks.iter().sum::<f64>());
     }
 
     #[test]

@@ -69,6 +69,9 @@ pub struct SimReport {
     /// Inputs with multiple surviving rows (fault-induced).
     pub multi_match: usize,
     pub n_tiles: usize,
+    /// Per-input predicted class (`None` = no surviving row). Forest
+    /// simulations vote across per-bank reports with these.
+    pub classes: Vec<Option<usize>>,
 }
 
 /// Run the functional simulation.
@@ -102,6 +105,7 @@ pub fn simulate(
     let mut agree = 0usize;
     let mut no_match = 0usize;
     let mut multi_match = 0usize;
+    let mut classes = Vec::with_capacity(n);
 
     let initial: Vec<u32> = (0..m.initially_active_rows() as u32).collect();
     let vdd = p.vdd as f32;
@@ -155,6 +159,7 @@ pub fn simulate(
             }
         };
         energy.decision();
+        classes.push(predicted);
 
         if let Some(c) = predicted {
             if c == labels[i] {
@@ -180,6 +185,7 @@ pub fn simulate(
         no_match,
         multi_match,
         n_tiles: m.n_tiles(),
+        classes,
     }
 }
 
@@ -284,6 +290,16 @@ mod tests {
             &SimOptions { max_inputs: 5, ..Default::default() },
         );
         assert_eq!(r.n_inputs, 5);
+        // Per-input classes line up with the simulated prefix and agree
+        // with the accuracy accounting.
+        assert_eq!(r.classes.len(), 5);
+        let correct = r
+            .classes
+            .iter()
+            .zip(&ys[..5])
+            .filter(|(c, y)| **c == Some(**y))
+            .count();
+        assert!((r.accuracy - correct as f64 / 5.0).abs() < 1e-12);
     }
 
     #[test]

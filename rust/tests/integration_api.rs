@@ -48,7 +48,7 @@ fn every_registered_backend_produces_identical_decisions() {
     let take = model.test_x.len().min(32);
     let queries: Vec<Vec<bool>> = model.test_x[..take]
         .iter()
-        .map(|x| mapped.mapped.pad_query(&program.lut.encode_input(x)))
+        .map(|x| mapped.primary().pad_query(&program.lut().encode_input(x)))
         .collect();
 
     let backends = all_backends();
@@ -96,7 +96,7 @@ fn every_registered_backend_agrees_under_partial_masks() {
     let take = model.test_x.len().min(16);
     let queries: Vec<Vec<bool>> = model.test_x[..take]
         .iter()
-        .map(|x| mapped.mapped.pad_query(&program.lut.encode_input(x)))
+        .map(|x| mapped.primary().pad_query(&program.lut().encode_input(x)))
         .collect();
 
     // Adversarial patterns over the padded rows: lane-staggered stripes,
@@ -197,9 +197,9 @@ fn compiled_program_roundtrips_through_file() {
 
     assert_eq!(back.dataset, program.dataset);
     assert_eq!(back.seed, program.seed);
-    assert_eq!(back.lut.stored, program.lut.stored);
-    assert_eq!(back.lut.classes, program.lut.classes);
-    assert_eq!(back.lut.encoders, program.lut.encoders);
+    assert_eq!(back.lut().stored, program.lut().stored);
+    assert_eq!(back.lut().classes, program.lut().classes);
+    assert_eq!(back.lut().encoders, program.lut().encoders);
     assert_eq!(back.test_indices, program.test_indices);
     assert_eq!(back.golden, program.golden);
 
@@ -218,7 +218,7 @@ fn mapped_program_roundtrips_through_file() {
     let mut mapped = program.map(16, &p);
     // Carry a vref perturbation through the artifact (variability
     // workflows re-serve perturbed plans).
-    mapped.mapped.vref[7] += 0.011;
+    mapped.banks[0].mapped.vref[7] += 0.011;
 
     let path = tmpfile("mapped.json");
     mapped.save(&path).unwrap();
@@ -226,10 +226,10 @@ fn mapped_program_roundtrips_through_file() {
     std::fs::remove_file(&path).ok();
 
     assert_eq!(back.tile_size(), 16);
-    assert_eq!(back.map_seed, mapped.map_seed);
-    assert_eq!(back.mapped.cells, mapped.mapped.cells);
-    assert_eq!(back.mapped.classes, mapped.mapped.classes);
-    assert_eq!(back.mapped.vref, mapped.mapped.vref);
+    assert_eq!(back.banks[0].map_seed, mapped.banks[0].map_seed);
+    assert_eq!(back.primary().cells, mapped.primary().cells);
+    assert_eq!(back.primary().classes, mapped.primary().classes);
+    assert_eq!(back.primary().vref, mapped.primary().vref);
     assert_eq!(back.params.r_lrs, mapped.params.r_lrs);
 
     // The rebuilt plan serves identically.
@@ -292,17 +292,216 @@ fn sessions_agree_across_registered_engines() {
 }
 
 #[test]
+fn forest_program_backend_parity_and_votes() {
+    // The multi-bank seam-proving test: a 3-bank forest program, every
+    // registered backend. Per-bank match outcomes must be bit-identical
+    // (classes, energy, row activity) and the sessions' final majority
+    // votes must agree across engines — with the usual clean pjrt skip.
+    use dt2cam::cart::ForestParams;
+    use dt2cam::coordinator::ServingPlan;
+
+    let fp = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest("haberman", &fp).unwrap();
+    let program = model.compile();
+    let p = DeviceParams::default();
+    let mapped = program.map(16, &p);
+    assert_eq!(mapped.n_banks(), 3);
+
+    let take = model.test_x.len().min(16);
+    let backends = all_backends();
+    assert!(backends.len() >= 2);
+    for (bi, mb) in mapped.banks.iter().enumerate() {
+        let lut = &program.banks[bi].lut;
+        let feats = &program.banks[bi].features;
+        let plan = ServingPlan::build_bank(&mb.mapped, &mb.mapped.vref, &p, bi);
+        let sched = Scheduler::new(&plan, &p);
+        let queries: Vec<Vec<bool>> = model.test_x[..take]
+            .iter()
+            .map(|x| {
+                let proj: Vec<f64> = feats.iter().map(|&f| x[f]).collect();
+                mb.mapped.pad_query(&lut.encode_input(&proj))
+            })
+            .collect();
+        let base = sched.run_batch(backends[0].as_ref(), &queries, take).unwrap();
+        assert_eq!(base.bank, bi, "outcome must carry its bank id");
+        for backend in &backends[1..] {
+            let out = sched.run_batch(backend.as_ref(), &queries, take).unwrap();
+            assert_eq!(out.classes, base.classes, "bank {bi}, backend {}", backend.name());
+            assert_eq!(out.active_row_evals, base.active_row_evals, "bank {bi}");
+            assert_eq!(out.modeled_energy, base.modeled_energy, "bank {bi}");
+        }
+    }
+
+    // Session-level: final votes bit-identical across engines and equal
+    // to the software forest (ideal hardware).
+    let opts = BackendOptions::default();
+    let mut per_engine: Vec<(&str, Vec<Option<usize>>)> = Vec::new();
+    for kind in EngineKind::ALL {
+        if kind == EngineKind::Pjrt && !opts.artifacts_dir.join("manifest.json").exists() {
+            eprintln!("skipping pjrt session: run `make artifacts`");
+            continue;
+        }
+        let mut session = mapped.session(kind, 8).unwrap();
+        assert_eq!(session.n_banks(), 3);
+        per_engine.push((kind.name(), session.classify_all(&model.test_x).unwrap()));
+    }
+    for (c, g) in per_engine[0].1.iter().zip(&model.golden) {
+        assert_eq!(*c, Some(*g), "ideal hardware must match the software forest");
+    }
+    for (name, votes) in &per_engine[1..] {
+        assert_eq!(votes, &per_engine[0].1, "engine {name} votes diverge");
+    }
+}
+
+#[test]
+fn v1_compiled_artifact_loads_as_one_bank_v2_program() {
+    // Back-compat: a pre-bank (v1) compiled artifact — single top-level
+    // `lut`, no `banks` array — must load as a 1-bank v2 program with
+    // the identity feature projection and identical classifications.
+    use dt2cam::api::serde::lut_to_json;
+
+    let model = Dt2Cam::dataset("iris").unwrap();
+    let program = model.compile();
+    // The exact v1 writer layout, reconstructed by hand.
+    let v1 = Json::obj(vec![
+        ("format", Json::str("dt2cam-compiled-program")),
+        ("version", Json::num(1.0)),
+        ("dataset", Json::str(program.dataset.clone())),
+        ("seed", Json::num(program.seed as f64)),
+        ("lut", lut_to_json(program.lut())),
+        (
+            "test_indices",
+            Json::Arr(program.test_indices.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+        (
+            "golden",
+            Json::Arr(program.golden.iter().map(|&g| Json::num(g as f64)).collect()),
+        ),
+    ]);
+    let path = tmpfile("v1_compiled.json");
+    std::fs::write(&path, v1.to_string_pretty()).unwrap();
+    let back = CompiledProgram::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(back.n_banks(), 1);
+    assert_eq!(
+        back.banks[0].features,
+        (0..program.lut().encoders.len()).collect::<Vec<_>>(),
+        "v1 upgrade must use the identity projection"
+    );
+    assert_eq!(back.lut().stored, program.lut().stored);
+    for x in &model.test_x {
+        assert_eq!(back.classify(x), program.classify(x));
+    }
+    // And the upgraded program re-saves as v2, round-tripping cleanly.
+    let text = back.to_json().to_string_pretty();
+    let again = CompiledProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(again.lut().stored, back.lut().stored);
+}
+
+#[test]
+fn v1_mapped_artifact_loads_and_classifies_identically() {
+    // Back-compat at the mapped level: a v1 artifact (bank fields at the
+    // top level) loads as a 1-bank v2 program whose grid, vref and
+    // served classifications are identical to the v2 mapping of the
+    // same program.
+    use dt2cam::api::serde::{lut_to_json, params_to_json};
+
+    let model = Dt2Cam::dataset("haberman").unwrap();
+    let program = model.compile();
+    let p = DeviceParams::default();
+    let mapped = program.map(16, &p);
+    let m = mapped.primary();
+
+    let v1_program = Json::obj(vec![
+        ("format", Json::str("dt2cam-compiled-program")),
+        ("version", Json::num(1.0)),
+        ("dataset", Json::str(program.dataset.clone())),
+        ("seed", Json::num(program.seed as f64)),
+        ("lut", lut_to_json(program.lut())),
+        (
+            "test_indices",
+            Json::Arr(program.test_indices.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+        (
+            "golden",
+            Json::Arr(program.golden.iter().map(|&g| Json::num(g as f64)).collect()),
+        ),
+    ]);
+    let v1 = Json::obj(vec![
+        ("format", Json::str("dt2cam-mapped-program")),
+        ("version", Json::num(1.0)),
+        ("tile_size", Json::num(16.0)),
+        ("map_seed", Json::num(mapped.banks[0].map_seed as f64)),
+        ("params", params_to_json(&p)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("n_rwd", Json::num(m.n_rwd as f64)),
+                ("n_cwd", Json::num(m.n_cwd as f64)),
+                ("padded_rows", Json::num(m.padded_rows as f64)),
+                ("padded_width", Json::num(m.padded_width as f64)),
+                ("real_rows", Json::num(m.real_rows as f64)),
+                ("real_width", Json::num(m.real_width as f64)),
+            ]),
+        ),
+        ("vref", Json::Arr(m.vref.iter().map(|&v| Json::num(v)).collect())),
+        ("program", v1_program),
+    ]);
+    let path = tmpfile("v1_mapped.json");
+    std::fs::write(&path, v1.to_string_pretty()).unwrap();
+    let back = MappedProgram::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(back.n_banks(), 1);
+    assert_eq!(back.tile_size(), 16);
+    assert_eq!(back.banks[0].map_seed, mapped.banks[0].map_seed);
+    assert_eq!(back.primary().cells, m.cells, "v1 grid must rebuild bit-identically");
+    assert_eq!(back.primary().vref, m.vref);
+
+    // Serving the v1-loaded program gives the same classifications as
+    // the v2 program (and the golden tree).
+    let a = back
+        .session(EngineKind::Native, 8)
+        .unwrap()
+        .classify_all(&model.test_x)
+        .unwrap();
+    let b = mapped
+        .session(EngineKind::Native, 8)
+        .unwrap()
+        .classify_all(&model.test_x)
+        .unwrap();
+    assert_eq!(a, b);
+    for (c, g) in a.iter().zip(&model.golden) {
+        assert_eq!(*c, Some(*g));
+    }
+}
+
+#[test]
 fn corrupted_artifact_fails_loudly() {
     let program = Dt2Cam::dataset("iris").unwrap().compile();
     let mut j = program.map(16, &DeviceParams::default()).to_json();
-    // Flip the stored geometry: load must detect the mismatch.
+    // Flip bank 0's stored geometry: load must detect the mismatch.
     if let Json::Obj(fields) = &mut j {
         for (k, v) in fields.iter_mut() {
-            if k == "geometry" {
-                if let Json::Obj(geo) = v {
-                    for (gk, gv) in geo.iter_mut() {
-                        if gk == "padded_rows" {
-                            *gv = Json::num(9999.0);
+            if k == "banks" {
+                if let Json::Arr(banks) = v {
+                    if let Json::Obj(bank) = &mut banks[0] {
+                        for (bk, bv) in bank.iter_mut() {
+                            if bk == "geometry" {
+                                if let Json::Obj(geo) = bv {
+                                    for (gk, gv) in geo.iter_mut() {
+                                        if gk == "padded_rows" {
+                                            *gv = Json::num(9999.0);
+                                        }
+                                    }
+                                }
+                            }
                         }
                     }
                 }
