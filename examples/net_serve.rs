@@ -1,0 +1,82 @@
+//! Wire-level serving demo: the socket server, client, and both load
+//! generators, end to end on a loopback port.
+//!
+//! Spawns `net::Server` in-process over a 3-bank bagged forest
+//! (haberman @S=16), sanity-checks a blocking client against the
+//! in-process session, drives closed- and open-loop load, scrapes the
+//! metrics frame, and shuts down gracefully. The same server is
+//! reachable from a second process — see `dt2cam serve --listen` /
+//! `dt2cam loadgen --connect` for the two-terminal flow.
+//!
+//! ```sh
+//! cargo run --release --example net_serve
+//! ```
+
+use dt2cam::api::Dt2Cam;
+use dt2cam::cart::ForestParams;
+use dt2cam::config::EngineKind;
+use dt2cam::net::{self, Client, Server, ServerConfig};
+use dt2cam::tcam::params::DeviceParams;
+
+fn main() -> anyhow::Result<()> {
+    println!("== DT2CAM wire-level serving (3-bank forest, haberman @ S=16) ==");
+    let fp = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest("haberman", &fp)?;
+    let mapped = model.compile().map(16, &DeviceParams::default());
+    let inputs = model.test_x.clone();
+
+    // In-process oracle for the same program.
+    let expected = mapped
+        .session(EngineKind::Native, 8)?
+        .classify_all(&inputs)?;
+
+    // The server builds its coordinator on its own scheduler thread.
+    let server = Server::spawn("127.0.0.1:0", ServerConfig::default(), move || {
+        Ok(mapped
+            .session(EngineKind::Native, 8)?
+            .into_coordinator())
+    })?;
+    let addr = server.local_addr().to_string();
+    println!("server listening on {addr}");
+
+    // Blocking client: answers must match the in-process session.
+    let mut client = Client::connect(&addr)?;
+    for (i, x) in inputs.iter().enumerate().take(5) {
+        let got = client.classify(x)?;
+        assert_eq!(got, expected[i], "wire answer diverged on input {i}");
+        println!("  request {i}: class {got:?} (matches in-process)");
+    }
+
+    // Closed-loop load: 4 clients, each waiting for its answer.
+    let report = net::closed_loop(&addr, &inputs, 4, 200)?;
+    println!("closed-loop : {}", report.summary_line());
+
+    // Open-loop load: 2 connections pacing 1000 req/s aggregate.
+    let report = net::open_loop(&addr, &inputs, 2, 1000.0, 300)?;
+    println!("open-loop   : {}", report.summary_line());
+
+    // Scrape the server-side roll-ups over the wire.
+    let snap = client.metrics()?;
+    println!("metrics     : {}", snap.summary_line());
+    assert!(
+        snap.decisions + snap.shed >= 505,
+        "5 + 200 + 300 requests must be accounted for (answered or shed)"
+    );
+
+    // Graceful shutdown over the wire; join returns the final report.
+    Client::connect(&addr)?.shutdown()?;
+    let report = server.join()?;
+    println!(
+        "server stopped: conns={} shed={} | {}",
+        report.connections,
+        report.shed,
+        report.metrics.summary_line()
+    );
+    println!("ok: wire serving matches the in-process coordinator");
+    Ok(())
+}

@@ -18,6 +18,12 @@
 //! ```sh
 //! make artifacts && cargo run --release --example serve_e2e
 //! ```
+//!
+//! This example drives the session *in-process*; the same coordinator
+//! also serves over a real network boundary — the `net` module's framed
+//! TCP socket path (`dt2cam serve --listen ADDR` on one terminal,
+//! `dt2cam loadgen --connect ADDR` on another). See
+//! `examples/net_serve.rs` for that flow end to end.
 
 use std::time::Instant;
 

@@ -328,11 +328,45 @@ fn main() {
     }
     let _ = session.poll(true).unwrap();
     let wall = t0.elapsed().as_secs_f64();
-    b.report_value("serve_e2e_native_wall_throughput", n as f64 / wall, "dec/s");
+    let inproc_tput = n as f64 / wall;
+    b.report_value("serve_e2e_native_wall_throughput", inproc_tput, "dec/s");
     b.report_value(
         "modeled_seq_throughput",
         session.plan().timing.throughput_seq,
         "dec/s",
     );
+
+    // ISSUE 4 acceptance row: the same covid program behind the wire —
+    // in-process classify_all vs loopback socket throughput at batch 32
+    // — so protocol + framing + routing overhead is tracked from day
+    // one. 32 closed-loop clients keep ~a full batch of lanes in
+    // flight, so the batcher coalesces across connections exactly like
+    // the in-process path does within one stream.
+    {
+        use dt2cam::net::{self, Server, ServerConfig};
+        let program_for_server = program.clone();
+        let params = p.clone();
+        let server = Server::spawn("127.0.0.1:0", ServerConfig::default(), move || {
+            Ok(program_for_server
+                .map(s, &params)
+                .session(EngineKind::Native, 32)?
+                .into_coordinator())
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let inputs: Vec<Vec<f64>> = model.test_x[..n].to_vec();
+        // Warm the connection path once before timing.
+        let _ = net::closed_loop(&addr, &inputs, 4, 32).unwrap();
+        let report = net::closed_loop(&addr, &inputs, 32, n).unwrap();
+        assert_eq!(report.completed, n as u64, "loopback run must answer everything");
+        b.report_value("wire_loopback_wall_throughput", report.throughput(), "dec/s");
+        b.report_value("wire_loopback_p99_latency_us", report.p99 * 1e6, "us");
+        b.report_value(
+            "inprocess_vs_wire_ratio",
+            inproc_tput / report.throughput().max(1e-9),
+            "x (in-process classify_all over loopback wire, batch 32)",
+        );
+        server.shutdown().unwrap();
+    }
     b.finish();
 }

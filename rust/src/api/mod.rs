@@ -26,6 +26,12 @@
 //! programs) so `dt2cam compile` and `dt2cam serve` can run as separate
 //! processes (see `docs/API.md`).
 //!
+//! Above stage 4 sits the wire layer: [`Session::into_coordinator`]
+//! hands the owned coordinator to [`crate::net::Server`], which serves
+//! it over TCP with cross-connection batching and bounded admission
+//! (`dt2cam serve --listen`); [`test_inputs`] rebuilds the matching
+//! request stream on the client side without training.
+//!
 //! Execution substrates plug in through the object-safe [`MatchBackend`]
 //! trait; [`registry`] maps `--engine` names (`native`,
 //! `threaded-native`, `pjrt`) to constructors, and the coordinator,
@@ -66,7 +72,8 @@ pub use backend::{
     ThreadedNativeBackend,
 };
 pub use program::{
-    CompiledBank, CompiledProgram, Dt2Cam, MappedBank, MappedProgram, Session, TrainedModel,
+    test_inputs, CompiledBank, CompiledProgram, Dt2Cam, MappedBank, MappedProgram, Session,
+    TrainedModel,
 };
 pub use registry::BackendOptions;
 // The packed survivor-set type backends produce and consume

@@ -104,6 +104,16 @@ fn load_split(name: &str, seed: u64) -> Result<(Dataset, Split, Vec<Vec<f64>>, V
     Ok((dataset, split, xs, ys))
 }
 
+/// Gather the standard test split of `name` under `seed` **without
+/// training** — the request stream a wire client replays against a
+/// server whose program was trained from the same `(name, seed)`. Uses
+/// the exact normalize/split PRNG sequence of [`Dt2Cam::dataset`], so
+/// the rows are bit-identical to the server's own `test_x`.
+pub fn test_inputs(name: &str, seed: u64) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
+    let (dataset, split, _, _) = load_split(name, seed)?;
+    Ok(dataset.gather(&split.test))
+}
+
 /// Stage 1 artifact: normalized dataset + split + trained ensemble
 /// (1-bank for single trees) + held-out evaluation data.
 pub struct TrainedModel {
@@ -720,6 +730,13 @@ impl Session {
     pub fn coordinator(&mut self) -> &mut Coordinator {
         &mut self.coord
     }
+
+    /// Unwrap into the owned coordinator. The socket server
+    /// ([`crate::net::Server`]) takes this: its scheduler thread owns
+    /// the coordinator outright, with no facade in between.
+    pub fn into_coordinator(self) -> Coordinator {
+        self.coord
+    }
 }
 
 #[cfg(test)]
@@ -838,6 +855,14 @@ mod tests {
         let model = Dt2Cam::dataset("iris").unwrap();
         let program = model.compile();
         let (tx, ty) = program.test_split().unwrap();
+        assert_eq!(tx, model.test_x);
+        assert_eq!(ty, model.test_y);
+    }
+
+    #[test]
+    fn test_inputs_match_the_trained_split_bit_for_bit() {
+        let model = Dt2Cam::dataset("haberman").unwrap();
+        let (tx, ty) = test_inputs("haberman", model.seed).unwrap();
         assert_eq!(tx, model.test_x);
         assert_eq!(ty, model.test_y);
     }

@@ -63,6 +63,12 @@ pub(crate) fn json_u64(x: u64) -> Json {
     }
 }
 
+pub(crate) fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    get(j, key)?
+        .as_f64()
+        .with_context(|| format!("field '{key}' must be a number"))
+}
+
 pub(crate) fn get_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
     get(j, key)?
         .as_arr()

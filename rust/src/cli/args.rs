@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 19] = [
+const VALUE_KEYS: [&str; 24] = [
     "dataset",
     "tile-size",
     "seed",
@@ -35,6 +35,11 @@ const VALUE_KEYS: [&str; 19] = [
     "forest",
     "sample-fraction",
     "max-features",
+    "listen",
+    "connect",
+    "admission",
+    "clients",
+    "rps",
 ];
 
 impl Args {

@@ -10,12 +10,14 @@ use crate::api::{Dt2Cam, MappedProgram, TrainedModel};
 use crate::cart::{vote_survivors, ForestParams};
 use crate::config::EngineKind;
 use crate::coordinator::InferenceRequest;
+use crate::net;
 use crate::nonideal::{inject_saf, perturb_vref, SafRates};
 use crate::report::figures::{self, NonidealGrid};
 use crate::report::tables;
 use crate::report::workload::Workload;
 use crate::synth::simulate::{simulate, SimOptions};
 use crate::tcam::params::DeviceParams;
+use crate::util::benchkit::Bench;
 use crate::util::prng::Prng;
 use crate::util::stats::eng;
 
@@ -316,7 +318,12 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
 /// `dt2cam serve`: run the coordinator over the test split as a request
 /// stream and report modeled + wall-clock serving metrics. With
 /// `--program` the mapped-program artifact saved by `compile --save` is
-/// loaded instead of retraining (the two-process flow).
+/// loaded instead of retraining (the two-process flow). With `--listen
+/// ADDR` the coordinator goes behind the wire-protocol socket server
+/// instead: requests arrive from TCP clients (see `dt2cam loadgen`),
+/// batches coalesce across connections, admission is bounded
+/// (`--admission N`, overflow answered with a shed frame), and the
+/// server runs until a client sends a shutdown frame.
 pub fn serve(args: &mut Args) -> Result<()> {
     let tile_size_arg = args.opt_usize("tile-size")?;
     let batch = args.opt_usize("batch")?.unwrap_or(32);
@@ -326,6 +333,25 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let pipelined = args.flag("pipelined");
     let forest = forest_params_arg(args)?;
     let program_path = args.opt_str("program");
+    let listen = args.opt_str("listen");
+    let admission = args.opt_usize("admission")?;
+
+    // Serving knobs are validated up front, naming the flag: a zero
+    // batch width used to reach Batcher::new unchecked and panic there.
+    anyhow::ensure!(
+        batch >= 1,
+        "--batch must be >= 1 (got 0): the hardware batch width cannot be empty"
+    );
+    if let Some(a) = admission {
+        anyhow::ensure!(
+            a >= 1,
+            "--admission must be >= 1 (got 0): a zero bound would shed every request"
+        );
+        anyhow::ensure!(
+            listen.is_some(),
+            "--admission requires --listen (it bounds the socket server's in-flight queue)"
+        );
+    }
 
     // Stage artifacts: load from disk (two-process flow) or build fresh.
     let (mapped, test_x, test_y, golden, name) = if let Some(path) = program_path {
@@ -371,6 +397,51 @@ pub fn serve(args: &mut Args) -> Result<()> {
         (mp, model.test_x, model.test_y, model.golden, name)
     };
     let s = mapped.tile_size();
+
+    // Socket-server mode: the coordinator goes behind the wire, built
+    // on the server's scheduler thread (so even the !Send pjrt backend
+    // serves), and requests come from TCP clients instead of the test
+    // split.
+    if let Some(addr) = listen {
+        anyhow::ensure!(
+            !pipelined,
+            "--pipelined conflicts with --listen (the socket server drives the \
+             batching coordinator)"
+        );
+        anyhow::ensure!(
+            requests == 0,
+            "--requests conflicts with --listen (request volume comes from clients; \
+             see `dt2cam loadgen`)"
+        );
+        let admission = admission.unwrap_or(256);
+        let n_banks = mapped.n_banks();
+        let server = net::Server::spawn(
+            addr.as_str(),
+            net::ServerConfig {
+                admission,
+                ..Default::default()
+            },
+            move || Ok(mapped.session_with(engine, batch, &opts)?.into_coordinator()),
+        )?;
+        eprintln!(
+            "dt2cam serving {name} @S={s} on {} (engine {}, batch {batch}, \
+             admission {admission}, {n_banks} bank{})",
+            server.local_addr(),
+            engine.name(),
+            if n_banks == 1 { "" } else { "s" }
+        );
+        eprintln!(
+            "stop with: dt2cam loadgen --connect {} --dataset {name} --quick --shutdown",
+            server.local_addr()
+        );
+        let report = server.join()?;
+        println!(
+            "server stopped: conns={} shed={} protocol_errors={}",
+            report.connections, report.shed, report.protocol_errors
+        );
+        println!("{}", report.metrics.summary_line());
+        return Ok(());
+    }
 
     let n = if requests > 0 {
         requests.min(test_x.len())
@@ -463,6 +534,65 @@ pub fn serve(args: &mut Args) -> Result<()> {
     println!("modeled seq t-put : {}", eng(seq_tput, "dec/s"));
     println!("wall-clock t-put  : {:.0} dec/s", session.metrics().wall_throughput());
     println!("{}", session.metrics().summary_line());
+    Ok(())
+}
+
+/// `dt2cam loadgen`: generate traffic against a `serve --listen` server
+/// and report client-observed p50/p95/p99 latency + wall throughput.
+/// Closed-loop by default (`--clients N` concurrent request→response
+/// loops); `--rps R` switches to open-loop pacing at an aggregate
+/// target rate. Inputs are the dataset's standard test split, rebuilt
+/// client-side without training (`api::test_inputs`). `--shutdown`
+/// sends a shutdown frame afterwards. Emits `net_loopback` benchkit
+/// rows (`BENCH_net_loopback.json` when `DT2CAM_BENCH_JSON_DIR` is
+/// set) so CI archives wire throughput and tail latency per run.
+pub fn loadgen(args: &mut Args) -> Result<()> {
+    let connect = args
+        .opt_str("connect")
+        .context("--connect ADDR is required (the `dt2cam serve --listen` address)")?;
+    let name = dataset_arg(args)?;
+    let seed = args.opt_u64("seed")?.unwrap_or(crate::api::EXPERIMENT_SEED);
+    let quick = args.flag("quick");
+    let clients = args.opt_usize("clients")?.unwrap_or(if quick { 2 } else { 4 });
+    let rps = args.opt_f64("rps")?.unwrap_or(0.0);
+    let requests = args
+        .opt_usize("requests")?
+        .unwrap_or(if quick { 64 } else { 1024 });
+    let do_shutdown = args.flag("shutdown");
+    args.finish()?;
+    anyhow::ensure!(clients >= 1, "--clients must be >= 1");
+    anyhow::ensure!(requests >= 1, "--requests must be >= 1");
+    anyhow::ensure!(rps >= 0.0, "--rps must be >= 0 (0 = closed loop)");
+
+    let (inputs, _) = crate::api::test_inputs(&name, seed)?;
+    eprintln!(
+        "loadgen: {requests} {} over {clients} connection(s) against {connect} \
+         ({} distinct inputs from {name})",
+        if rps > 0.0 {
+            format!("open-loop requests @ {rps} rps")
+        } else {
+            "closed-loop requests".to_string()
+        },
+        inputs.len()
+    );
+    let report = if rps > 0.0 {
+        net::open_loop(&connect, &inputs, clients, rps, requests)?
+    } else {
+        net::closed_loop(&connect, &inputs, clients, requests)?
+    };
+    println!("{}", report.summary_line());
+
+    let mut b = Bench::new("net_loopback");
+    b.report_value("wall_throughput", report.throughput(), "dec/s");
+    b.report_value("latency_p50_us", report.p50 * 1e6, "us");
+    b.report_value("latency_p99_us", report.p99 * 1e6, "us");
+    b.report_value("shed", report.shed as f64, "requests");
+    b.finish();
+
+    if do_shutdown {
+        net::Client::connect(&connect)?.shutdown()?;
+        eprintln!("sent shutdown frame to {connect}");
+    }
     Ok(())
 }
 
@@ -692,6 +822,56 @@ mod tests {
     #[test]
     fn backends_command_lists_registry() {
         backends(&mut args("backends")).unwrap();
+    }
+
+    #[test]
+    fn serve_rejects_zero_batch_naming_the_flag() {
+        // --batch 0 used to reach Batcher::new unvalidated and panic.
+        let err = serve(&mut args("serve --dataset iris --tile-size 16 --batch 0"))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--batch"), "must name the flag: {msg}");
+    }
+
+    #[test]
+    fn serve_validates_admission_flag() {
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --listen 127.0.0.1:0 --admission 0",
+        ))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--admission"), "must name the flag: {msg}");
+        // --admission without --listen is a contradiction, not a no-op.
+        let err = serve(&mut args("serve --dataset iris --tile-size 16 --admission 8"))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--listen"), "{msg}");
+    }
+
+    #[test]
+    fn loadgen_requires_connect() {
+        let err = loadgen(&mut args("loadgen --dataset iris")).unwrap_err();
+        assert!(format!("{err:#}").contains("--connect"));
+    }
+
+    #[test]
+    fn loadgen_command_runs_against_in_process_server() {
+        let model = Dt2Cam::dataset("iris").unwrap();
+        let mapped = model.compile().map(16, &DeviceParams::default());
+        let server = net::Server::spawn(
+            "127.0.0.1:0",
+            net::ServerConfig::default(),
+            move || Ok(mapped.session(EngineKind::Native, 8)?.into_coordinator()),
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        loadgen(&mut args(&format!(
+            "loadgen --connect {addr} --dataset iris --quick --clients 2 --requests 16 --shutdown"
+        )))
+        .unwrap();
+        let report = server.join().unwrap();
+        assert_eq!(report.metrics.decisions, 16);
+        assert_eq!(report.shed, 0);
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //! dt2cam serve    --dataset covid --tile-size 128 --engine ENGINE
 //!                 [--forest N] [--batch 32] [--requests N] [--pipelined]
 //! dt2cam serve    --program prog.json --engine ENGINE   (two-process flow)
+//! dt2cam serve    --listen 127.0.0.1:7230 [--admission N] ...  (socket server)
+//! dt2cam loadgen  --connect 127.0.0.1:7230 --dataset NAME [--clients N]
+//!                 [--rps R] [--requests N] [--quick] [--shutdown]
 //! dt2cam backends
 //! dt2cam report   --all | --table 2|4|5|6 | --fig 6|7|8|9  [--quick]
 //!                 [--out-dir reports]
@@ -18,6 +21,9 @@
 //! `pjrt` (see `dt2cam backends`). `--forest N` trains a bagged CART
 //! ensemble: the program becomes N CAM banks searched in parallel
 //! (`Send + Sync` backends) and combined by deterministic majority vote.
+//! `serve --listen` binds the wire-protocol socket server (bounded
+//! admission, cross-connection batching); `loadgen` drives it from a
+//! second process and reports p50/p95/p99 latency + wall throughput.
 
 pub mod args;
 pub mod commands;
@@ -34,6 +40,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "compile" => commands::compile(&mut args),
         "simulate" => commands::simulate_cmd(&mut args),
         "serve" => commands::serve(&mut args),
+        "loadgen" => commands::loadgen(&mut args),
         "backends" => commands::backends(&mut args),
         "report" => commands::report(&mut args),
         "help" | "--help" | "-h" => {
@@ -55,6 +62,10 @@ USAGE:
   dt2cam serve    --dataset NAME --tile-size S [--engine ENGINE] [--forest N]
                   [--batch B] [--requests N] [--pipelined]
   dt2cam serve    --program PROGRAM.json [--engine ENGINE] [--batch B]
+  dt2cam serve    --listen ADDR [--admission N] (--dataset NAME | --program P.json)
+                  [--engine ENGINE] [--batch B] [--forest N]
+  dt2cam loadgen  --connect ADDR --dataset NAME [--clients N] [--rps R]
+                  [--requests N] [--seed SEED] [--quick] [--shutdown]
   dt2cam backends
   dt2cam report   [--all] [--table N]... [--fig N]... [--quick] [--out-dir DIR]
   dt2cam help
@@ -65,4 +76,11 @@ parallel and combined by deterministic majority vote (single-tree
 programs are the 1-bank case).
 `compile --save` + `serve --program` run the pipeline as two processes
 over a mapped-program JSON artifact (compile once, serve many).
+`serve --listen` binds the framed wire protocol on a TCP socket: the
+batcher coalesces requests across connections, admission is bounded
+(overflow answered with a shed frame), and a shutdown frame drains
+in-flight requests before the server stops. `loadgen` generates
+closed-loop (default) or open-loop (`--rps R`) traffic against it and
+reports p50/p95/p99 end-to-end latency and wall throughput;
+`--shutdown` stops the server afterwards.
 ";

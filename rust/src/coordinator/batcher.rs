@@ -57,6 +57,17 @@ impl Batcher {
         self.batch_width
     }
 
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+
+    /// Retune the partial-batch deadline. The socket server uses this to
+    /// trade tail latency for coalescing; already-queued requests are
+    /// judged against the new deadline on the next [`Batcher::next_batch`].
+    pub fn set_max_wait(&mut self, max_wait: Duration) {
+        self.max_wait = max_wait;
+    }
+
     /// Take the next batch if one is ready: either a full batch, or a
     /// partial one whose oldest request has waited past `max_wait`.
     pub fn next_batch(&mut self, now: Instant) -> Option<Vec<InferenceRequest>> {
@@ -146,6 +157,17 @@ mod tests {
         let flushed = b.flush();
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].len(), 1);
+    }
+
+    #[test]
+    fn max_wait_can_be_retuned_live() {
+        let mut b = Batcher::new(4, Duration::from_secs(3600));
+        b.push(req(0));
+        assert!(b.next_batch(Instant::now()).is_none());
+        b.set_max_wait(Duration::ZERO);
+        assert_eq!(b.max_wait(), Duration::ZERO);
+        // The queued request is judged against the new deadline.
+        assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 1);
     }
 
     #[test]

@@ -2,7 +2,20 @@
 
 use std::time::Duration;
 
-use crate::util::stats::OnlineStats;
+use crate::util::stats::{percentile, OnlineStats};
+
+/// Bound on retained end-to-end latency samples: percentiles are
+/// computed over a sliding window of the most recent requests, so a
+/// long-lived server's memory stays flat.
+pub const LATENCY_WINDOW: usize = 1 << 16;
+
+/// End-to-end latency percentiles (s) over the retained sample window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencyPercentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
 
 /// Aggregated over a serving run.
 #[derive(Clone, Debug, Default)]
@@ -31,6 +44,12 @@ pub struct Metrics {
     pub queue_delay: OnlineStats,
     /// Total serving wall time (s).
     pub wall_total: f64,
+    /// End-to-end per-request latency samples (s): arrival → response
+    /// materialization, i.e. queue delay *plus* batch service. Ring of
+    /// the most recent [`LATENCY_WINDOW`] requests.
+    latency_samples: Vec<f64>,
+    /// Ring write cursor into `latency_samples`.
+    latency_next: usize,
 }
 
 impl Metrics {
@@ -82,6 +101,40 @@ impl Metrics {
         self.queue_delay.push(queue_delay.as_secs_f64());
     }
 
+    /// Record one request's end-to-end latency (arrival → response
+    /// materialization: queue delay + batch service). Feeds the
+    /// p50/p95/p99 roll-ups in [`Metrics::latency_percentiles`].
+    pub fn record_latency(&mut self, total: Duration) {
+        let x = total.as_secs_f64();
+        if self.latency_samples.len() < LATENCY_WINDOW {
+            self.latency_samples.push(x);
+        } else {
+            self.latency_samples[self.latency_next] = x;
+        }
+        self.latency_next = (self.latency_next + 1) % LATENCY_WINDOW;
+    }
+
+    /// Retained end-to-end latency samples (bounded by
+    /// [`LATENCY_WINDOW`]).
+    pub fn latency_count(&self) -> usize {
+        self.latency_samples.len()
+    }
+
+    /// p50/p95/p99 end-to-end latency over the retained window; `None`
+    /// before the first request completes.
+    pub fn latency_percentiles(&self) -> Option<LatencyPercentiles> {
+        if self.latency_samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latency_samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(LatencyPercentiles {
+            p50: percentile(&sorted, 50.0),
+            p95: percentile(&sorted, 95.0),
+            p99: percentile(&sorted, 99.0),
+        })
+    }
+
     /// Modeled energy per decision (J).
     pub fn energy_per_dec(&self) -> f64 {
         if self.decisions == 0 {
@@ -107,9 +160,18 @@ impl Metrics {
         } else {
             String::new()
         };
+        let lat = match self.latency_percentiles() {
+            Some(l) => format!(
+                " lat(p50/p95/p99)={:.1}/{:.1}/{:.1} us",
+                l.p50 * 1e6,
+                l.p95 * 1e6,
+                l.p99 * 1e6
+            ),
+            None => String::new(),
+        };
         format!(
             "requests={} decisions={} batches={} e/dec={:.3} nJ rows/dec={:.1} \
-             wall-throughput={:.0} dec/s no_match={} multi_match={}{banks}",
+             wall-throughput={:.0} dec/s no_match={} multi_match={}{banks}{lat}",
             self.requests,
             self.decisions,
             self.batches,
@@ -154,6 +216,41 @@ mod tests {
         assert_eq!(m.energy_per_dec(), 0.0);
         assert_eq!(m.wall_throughput(), 0.0);
         assert_eq!(m.n_banks(), 0);
+        assert!(m.latency_percentiles().is_none());
+        assert!(!m.summary_line().contains("lat(p50/p95/p99)"));
+    }
+
+    #[test]
+    fn latency_percentiles_over_recorded_samples() {
+        let mut m = Metrics::new();
+        // 1..=100 ms — p50 = 50.5 ms, p99 = 99.01 ms (linear interp).
+        for i in 1..=100u64 {
+            m.record_latency(Duration::from_millis(i));
+        }
+        assert_eq!(m.latency_count(), 100);
+        let l = m.latency_percentiles().unwrap();
+        assert!((l.p50 - 0.0505).abs() < 1e-9, "{}", l.p50);
+        assert!((l.p95 - 0.09505).abs() < 1e-9, "{}", l.p95);
+        assert!((l.p99 - 0.09901).abs() < 1e-9, "{}", l.p99);
+        assert!(l.p50 <= l.p95 && l.p95 <= l.p99);
+        assert!(m.summary_line().contains("lat(p50/p95/p99)"));
+    }
+
+    #[test]
+    fn latency_window_is_bounded_and_slides() {
+        let mut m = Metrics::new();
+        for _ in 0..LATENCY_WINDOW + 10 {
+            m.record_latency(Duration::from_micros(10));
+        }
+        assert_eq!(m.latency_count(), LATENCY_WINDOW);
+        // After the window slid past the early samples, only the new
+        // value remains.
+        for _ in 0..LATENCY_WINDOW {
+            m.record_latency(Duration::from_micros(20));
+        }
+        let l = m.latency_percentiles().unwrap();
+        assert!((l.p50 - 20e-6).abs() < 1e-12);
+        assert!((l.p99 - 20e-6).abs() < 1e-12);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, InferenceRequest};
-pub use metrics::Metrics;
+pub use metrics::{LatencyPercentiles, Metrics};
 pub use plan::ServingPlan;
 pub use scheduler::{BatchOutcome, BatchScratch, Scheduler};
 pub use server::{BankSpec, Coordinator, InferenceResponse};

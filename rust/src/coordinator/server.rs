@@ -234,6 +234,31 @@ impl Coordinator {
         self.pool.is_some()
     }
 
+    /// Minimum feature-vector length a request must carry: the largest
+    /// original-feature index any bank projects, plus one. The socket
+    /// server validates incoming frames against this before admission
+    /// (a short vector would otherwise panic inside the per-bank
+    /// projection mid-batch).
+    pub fn n_features(&self) -> usize {
+        self.banks
+            .iter()
+            .flat_map(|b| b.features.iter().map(|&f| f + 1))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Requests waiting in the batcher (submitted, not yet dispatched).
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Retune the batcher's partial-batch deadline (default 2 ms). The
+    /// socket server exposes this so deployments can trade tail latency
+    /// for cross-connection coalescing.
+    pub fn set_batch_max_wait(&mut self, max_wait: Duration) {
+        self.batcher.set_max_wait(max_wait);
+    }
+
     /// Enqueue one request. The queueing delay is *not* recorded here —
     /// at submission the request has waited ~0; [`Coordinator::poll`]
     /// records the real arrival → batch-dispatch delay when the batcher
@@ -369,6 +394,13 @@ impl Coordinator {
             wall,
         );
         self.metrics.wall_total += wall.as_secs_f64();
+        // End-to-end latency sample per request — arrival → response
+        // materialization (queue delay + batch service) — feeding the
+        // p50/p95/p99 roll-ups in `summary_line` and the net metrics
+        // frame.
+        for r in &batch {
+            self.metrics.record_latency(r.arrived.elapsed());
+        }
 
         Ok(batch
             .iter()
@@ -507,6 +539,32 @@ mod tests {
             "queue delay {} < max_wait",
             coord.metrics.queue_delay.max()
         );
+    }
+
+    #[test]
+    fn end_to_end_latency_samples_cover_every_decision() {
+        let (mut coord, txs, _) = build(EngineKind::Native, "iris", 16);
+        let got = coord.classify_all(&txs).unwrap();
+        assert_eq!(coord.metrics.latency_count(), got.len());
+        let l = coord.metrics.latency_percentiles().unwrap();
+        assert!(l.p50 > 0.0 && l.p50 <= l.p95 && l.p95 <= l.p99);
+        // Iris projects all 4 features identically on its single bank.
+        assert_eq!(coord.n_features(), txs[0].len());
+        assert_eq!(coord.pending(), 0);
+    }
+
+    #[test]
+    fn batch_deadline_is_retunable() {
+        let (mut coord, txs, _) = build(EngineKind::Native, "iris", 16);
+        // With an hour-long deadline a lone request never releases on
+        // poll(false)...
+        coord.set_batch_max_wait(Duration::from_secs(3600));
+        coord.submit(InferenceRequest::new(0, txs[0].clone()));
+        assert!(coord.poll(false).unwrap().is_empty());
+        assert_eq!(coord.pending(), 1);
+        // ...until the deadline is retuned to zero.
+        coord.set_batch_max_wait(Duration::ZERO);
+        assert_eq!(coord.poll(false).unwrap().len(), 1);
     }
 
     #[test]

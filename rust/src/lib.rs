@@ -52,6 +52,13 @@
 //! [`api::MatchBackend`] (`native`, `threaded-native`, `pjrt`); see
 //! `docs/API.md` for the stage, bank, and backend contracts.
 //!
+//! The [`net`] module puts the coordinator behind a real network
+//! boundary: a framed wire protocol over TCP, a socket server whose
+//! batcher coalesces requests *across connections* under a bounded
+//! admission queue (overflow is shed, never buffered), a blocking
+//! client, and open/closed-loop load generators — `dt2cam serve
+//! --listen ADDR` / `dt2cam loadgen --connect ADDR`.
+//!
 //! Entry points: the `dt2cam` binary (see [`cli`]), the examples under
 //! `examples/`, and the benches under `rust/benches/` (one per paper table
 //! and figure — see DESIGN.md §4 for the experiment index).
@@ -64,6 +71,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod dataset;
+pub mod net;
 pub mod nonideal;
 pub mod report;
 pub mod runtime;

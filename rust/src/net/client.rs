@@ -1,0 +1,211 @@
+//! Blocking wire client: connect, classify, scrape metrics, shut the
+//! server down — with one transparent reconnect on a dropped
+//! connection and typed errors for everything the server can say.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use thiserror::Error;
+
+use super::protocol::{read_frame, write_frame, Frame, FrameError, MetricsSnapshot};
+
+/// How long [`Client::metrics`] waits for the snapshot frame. The
+/// server may drop a metrics reply under extreme writer-channel
+/// pressure rather than stall its scheduler, so the scrape must not
+/// wait forever.
+pub const METRICS_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Typed client-side errors.
+#[derive(Debug, Error)]
+pub enum ClientError {
+    #[error("i/o: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("framing: {0}")]
+    Frame(#[from] FrameError),
+    /// The server refused the request — its admission queue is full.
+    /// Back off and retry.
+    #[error("request {id} shed by the server (admission queue full)")]
+    Shed { id: u64 },
+    /// The server answered with a typed error frame.
+    #[error("server error{}: {message}", id.map(|i| format!(" (request {i})")).unwrap_or_default())]
+    Server { id: Option<u64>, message: String },
+    /// A frame that makes no sense at this point of the conversation.
+    #[error("unexpected frame from server: {0}")]
+    Unexpected(String),
+    /// The server did not answer within the deadline (metrics scrapes).
+    #[error("timed out waiting for the server's reply")]
+    Timeout,
+}
+
+impl ClientError {
+    /// Whether the underlying connection is gone (worth a reconnect).
+    fn is_disconnect(&self) -> bool {
+        match self {
+            ClientError::Io(_) => true,
+            ClientError::Frame(f) => f.is_fatal(),
+            _ => false,
+        }
+    }
+}
+
+/// A blocking request/response client over one TCP connection.
+///
+/// `classify` performs one transparent reconnect-and-retry when the
+/// connection dropped underneath it (server restart, idle timeout);
+/// application-level refusals ([`ClientError::Shed`],
+/// [`ClientError::Server`]) are returned as-is — retrying those is the
+/// caller's policy decision.
+pub struct Client {
+    addr: String,
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `"127.0.0.1:7230"`).
+    pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            addr: addr.to_string(),
+            stream,
+            next_id: 0,
+        })
+    }
+
+    /// The address this client dials (and re-dials on reconnect).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Drop the current connection and dial the stored address again.
+    pub fn reconnect(&mut self) -> Result<(), ClientError> {
+        let stream = TcpStream::connect(&self.addr)?;
+        stream.set_nodelay(true)?;
+        self.stream = stream;
+        Ok(())
+    }
+
+    /// Classify one feature vector; `None` means no CAM bank matched.
+    pub fn classify(&mut self, features: &[f64]) -> Result<Option<usize>, ClientError> {
+        match self.classify_once(features) {
+            Err(e) if e.is_disconnect() => {
+                self.reconnect()?;
+                self.classify_once(features)
+            }
+            r => r,
+        }
+    }
+
+    fn classify_once(&mut self, features: &[f64]) -> Result<Option<usize>, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_frame(
+            &mut self.stream,
+            &Frame::Request {
+                id,
+                features: features.to_vec(),
+            },
+        )?;
+        loop {
+            match read_frame(&mut self.stream)? {
+                Frame::Response { id: rid, class, .. } if rid == id => return Ok(class),
+                // A stale response from a request this client abandoned
+                // (e.g. before a reconnect): skip it.
+                Frame::Response { .. } => continue,
+                Frame::Shed { id: rid } if rid == id => return Err(ClientError::Shed { id }),
+                Frame::Shed { .. } => continue,
+                Frame::Error { id: eid, message } => {
+                    return Err(ClientError::Server { id: eid, message })
+                }
+                other => return Err(ClientError::Unexpected(format!("{other:?}"))),
+            }
+        }
+    }
+
+    /// Scrape the server's serving roll-ups. Bounded by
+    /// [`METRICS_TIMEOUT`]: under extreme backpressure the server drops
+    /// the snapshot frame rather than stall its scheduler, and this
+    /// call must not hang on that.
+    pub fn metrics(&mut self) -> Result<MetricsSnapshot, ClientError> {
+        self.stream.set_read_timeout(Some(METRICS_TIMEOUT))?;
+        let result = self.metrics_inner();
+        let _ = self.stream.set_read_timeout(None);
+        result
+    }
+
+    fn metrics_inner(&mut self) -> Result<MetricsSnapshot, ClientError> {
+        write_frame(&mut self.stream, &Frame::MetricsRequest)?;
+        loop {
+            match read_frame(&mut self.stream) {
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(ClientError::Timeout)
+                }
+                Err(e) => return Err(e.into()),
+                Ok(Frame::Metrics(snapshot)) => return Ok(snapshot),
+                // Late responses/sheds from pipelined use: skip.
+                Ok(Frame::Response { .. }) | Ok(Frame::Shed { .. }) => continue,
+                Ok(Frame::Error { id, message }) => {
+                    return Err(ClientError::Server { id, message })
+                }
+                Ok(other) => return Err(ClientError::Unexpected(format!("{other:?}"))),
+            }
+        }
+    }
+
+    /// Ask the server to drain in-flight requests and stop.
+    pub fn shutdown(mut self) -> Result<(), ClientError> {
+        write_frame(&mut self.stream, &Frame::Shutdown)?;
+        // The server closes the connection once the drain finished; a
+        // clean EOF is the expected acknowledgement. Any frames still
+        // in flight for other requests are skipped.
+        loop {
+            match read_frame(&mut self.stream) {
+                Ok(_) => continue,
+                Err(FrameError::Closed) | Err(FrameError::Truncated) => return Ok(()),
+                Err(FrameError::Io(e)) => {
+                    // Connection reset during teardown counts as closed.
+                    let _ = e;
+                    return Ok(());
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Pipelined use (load generators): fire one request without
+    /// waiting for its response. Pair with [`Client::recv`].
+    pub fn send_request(&mut self, id: u64, features: &[f64]) -> Result<(), ClientError> {
+        write_frame(
+            &mut self.stream,
+            &Frame::Request {
+                id,
+                features: features.to_vec(),
+            },
+        )?;
+        Ok(())
+    }
+
+    /// Read the next frame (pipelined use).
+    pub fn recv(&mut self) -> Result<Frame, ClientError> {
+        Ok(read_frame(&mut self.stream)?)
+    }
+
+    /// Clone the underlying stream so a second thread can read while
+    /// this one writes (open-loop load generation).
+    pub fn try_clone_stream(&self) -> std::io::Result<TcpStream> {
+        self.stream.try_clone()
+    }
+
+    /// Testing hook: kill the underlying connection in place, so the
+    /// transparent-reconnect path can be exercised deterministically.
+    #[doc(hidden)]
+    pub fn sever_for_test(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}

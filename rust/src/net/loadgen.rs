@@ -1,0 +1,326 @@
+//! Load generators for the wire protocol: closed-loop (each client
+//! waits for its answer — measures latency under its own concurrency)
+//! and open-loop (requests fired at a target rate regardless of
+//! completions — measures behavior under offered load, sheds included).
+//!
+//! Both report end-to-end p50/p95/p99 latency (via
+//! [`crate::util::stats::percentile`]) and wall throughput, the numbers
+//! the paper's Table VI serving claims have to be weighed against once
+//! a real network sits between client and CAM.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::stats::{percentile, OnlineStats};
+
+use super::client::{Client, ClientError};
+use super::protocol::{read_frame, Frame};
+
+/// Aggregate report of one load-generation run. Latencies in seconds.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests answered with a response frame.
+    pub completed: u64,
+    /// Requests refused with a shed frame (admission queue full).
+    pub shed: u64,
+    /// Requests that failed any other way (I/O, server errors, timeouts).
+    pub errors: u64,
+    /// Wall-clock seconds for the whole run.
+    pub wall: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LoadReport {
+    fn from_samples(mut samples: Vec<f64>, shed: u64, errors: u64, wall: f64) -> LoadReport {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut st = OnlineStats::new();
+        for &s in &samples {
+            st.push(s);
+        }
+        let pct = |p: f64| {
+            if samples.is_empty() {
+                0.0
+            } else {
+                percentile(&samples, p)
+            }
+        };
+        LoadReport {
+            completed: samples.len() as u64,
+            shed,
+            errors,
+            wall,
+            mean: if samples.is_empty() { 0.0 } else { st.mean() },
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            max: if samples.is_empty() { 0.0 } else { st.max() },
+        }
+    }
+
+    /// Completed decisions per wall second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall > 0.0 {
+            self.completed as f64 / self.wall
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "completed={} shed={} errors={} wall={:.3} s throughput={:.0} dec/s \
+             latency(mean/p50/p95/p99)={:.1}/{:.1}/{:.1}/{:.1} us",
+            self.completed,
+            self.shed,
+            self.errors,
+            self.wall,
+            self.throughput(),
+            self.mean * 1e6,
+            self.p50 * 1e6,
+            self.p95 * 1e6,
+            self.p99 * 1e6,
+        )
+    }
+}
+
+/// Split `total` across `n` workers, first workers take the remainder.
+fn shares(total: usize, n: usize) -> Vec<usize> {
+    (0..n).map(|i| total / n + usize::from(i < total % n)).collect()
+}
+
+/// Closed-loop generator: `clients` connections, each issuing its share
+/// of `total` requests strictly one-at-a-time (request → response →
+/// next). Latency is the full round trip as the client observes it.
+/// Inputs are replayed round-robin per client.
+pub fn closed_loop(
+    addr: &str,
+    inputs: &[Vec<f64>],
+    clients: usize,
+    total: usize,
+) -> Result<LoadReport> {
+    anyhow::ensure!(clients >= 1, "closed_loop needs at least 1 client");
+    anyhow::ensure!(!inputs.is_empty(), "closed_loop needs at least 1 input row");
+    let t0 = Instant::now();
+    let per = shares(total, clients);
+    let results: Vec<Result<(Vec<f64>, u64, u64)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = per
+            .iter()
+            .enumerate()
+            .map(|(c, &share)| {
+                s.spawn(move || -> Result<(Vec<f64>, u64, u64)> {
+                    let mut client = Client::connect(addr)
+                        .with_context(|| format!("client {c} connecting to {addr}"))?;
+                    let mut samples = Vec::with_capacity(share);
+                    let (mut shed, mut errors) = (0u64, 0u64);
+                    for k in 0..share {
+                        // Stripe inputs so concurrent clients exercise
+                        // different rows of the workload.
+                        let x = &inputs[(c + k * clients) % inputs.len()];
+                        let t = Instant::now();
+                        match client.classify(x) {
+                            Ok(_) => samples.push(t.elapsed().as_secs_f64()),
+                            Err(ClientError::Shed { .. }) => shed += 1,
+                            Err(_) => errors += 1,
+                        }
+                    }
+                    Ok((samples, shed, errors))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen worker panicked"))
+            .collect()
+    });
+    let mut samples = Vec::new();
+    let (mut shed, mut errors) = (0u64, 0u64);
+    for r in results {
+        let (s, sh, er) = r?;
+        samples.extend(s);
+        shed += sh;
+        errors += er;
+    }
+    Ok(LoadReport::from_samples(samples, shed, errors, t0.elapsed().as_secs_f64()))
+}
+
+/// Open-loop generator: `conns` connections submit `total` requests at
+/// an aggregate target rate of `rps` requests/second (0 = as fast as
+/// the sockets accept them), without waiting for responses; a receiver
+/// thread per connection matches responses back by id. Latency is
+/// submission → response. Requests still unanswered
+/// [`OPEN_LOOP_DRAIN_TIMEOUT`] after the last submission count as
+/// errors.
+pub fn open_loop(
+    addr: &str,
+    inputs: &[Vec<f64>],
+    conns: usize,
+    rps: f64,
+    total: usize,
+) -> Result<LoadReport> {
+    anyhow::ensure!(conns >= 1, "open_loop needs at least 1 connection");
+    anyhow::ensure!(!inputs.is_empty(), "open_loop needs at least 1 input row");
+    anyhow::ensure!(rps >= 0.0, "open_loop rate must be >= 0");
+    let t0 = Instant::now();
+    let per = shares(total, conns);
+    let results: Vec<Result<(Vec<f64>, u64, u64)>> = std::thread::scope(|s| {
+        let interval_s = per_conn_interval(rps, conns);
+        let handles: Vec<_> = per
+            .iter()
+            .enumerate()
+            .map(|(c, &share)| {
+                s.spawn(move || open_loop_conn(addr, inputs, c, interval_s, share))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen worker panicked"))
+            .collect()
+    });
+    let mut samples = Vec::new();
+    let (mut shed, mut errors) = (0u64, 0u64);
+    for r in results {
+        let (s, sh, er) = r?;
+        samples.extend(s);
+        shed += sh;
+        errors += er;
+    }
+    Ok(LoadReport::from_samples(samples, shed, errors, t0.elapsed().as_secs_f64()))
+}
+
+/// How long the open-loop receiver waits for stragglers after the last
+/// submission before counting them as errors.
+pub const OPEN_LOOP_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn per_conn_interval(rps: f64, conns: usize) -> f64 {
+    if rps > 0.0 {
+        conns as f64 / rps
+    } else {
+        0.0
+    }
+}
+
+/// One open-loop connection: paced submitter on this thread, receiver
+/// on a helper thread, pending ids matched in a shared map.
+fn open_loop_conn(
+    addr: &str,
+    inputs: &[Vec<f64>],
+    conn_idx: usize,
+    interval_s: f64,
+    share: usize,
+) -> Result<(Vec<f64>, u64, u64)> {
+    let mut client = Client::connect(addr)
+        .with_context(|| format!("open-loop connection {conn_idx} to {addr}"))?;
+    let mut read_half = client.try_clone_stream()?;
+    read_half.set_read_timeout(Some(OPEN_LOOP_DRAIN_TIMEOUT))?;
+    let pending: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    // How many outcomes the receiver should wait for: starts at the
+    // planned share and shrinks when a send fails (those are accounted
+    // by the submitter, not awaited by the receiver).
+    let target = Arc::new(std::sync::atomic::AtomicUsize::new(share));
+
+    let recv_pending = Arc::clone(&pending);
+    let recv_target = Arc::clone(&target);
+    let receiver = std::thread::spawn(move || -> (Vec<f64>, u64, u64) {
+        use std::sync::atomic::Ordering;
+        let mut samples = Vec::with_capacity(share);
+        let (mut shed, mut errors) = (0u64, 0u64);
+        let mut done = 0usize;
+        while done < recv_target.load(Ordering::Acquire) {
+            match read_frame(&mut read_half) {
+                Ok(Frame::Response { id, .. }) => {
+                    if let Some(t) = recv_pending.lock().unwrap().remove(&id) {
+                        samples.push(t.elapsed().as_secs_f64());
+                        done += 1;
+                    }
+                }
+                Ok(Frame::Shed { id }) => {
+                    if recv_pending.lock().unwrap().remove(&id).is_some() {
+                        shed += 1;
+                        done += 1;
+                    }
+                }
+                Ok(Frame::Error { id, .. }) => {
+                    if let Some(i) = id {
+                        if recv_pending.lock().unwrap().remove(&i).is_some() {
+                            errors += 1;
+                            done += 1;
+                        }
+                    }
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    // Timeout, disconnect, or framing loss: everything
+                    // still awaited is unaccounted for.
+                    errors += recv_pending.lock().unwrap().len() as u64;
+                    break;
+                }
+            }
+        }
+        (samples, shed, errors)
+    });
+
+    let start = Instant::now();
+    let mut send_failures = 0u64;
+    for i in 0..share {
+        if interval_s > 0.0 {
+            let due_s = i as f64 * interval_s;
+            let elapsed = start.elapsed().as_secs_f64();
+            if due_s > elapsed {
+                std::thread::sleep(Duration::from_secs_f64(due_s - elapsed));
+            }
+        }
+        let id = i as u64;
+        let x = &inputs[(conn_idx + i) % inputs.len()];
+        pending.lock().unwrap().insert(id, Instant::now());
+        if client.send_request(id, x).is_err() {
+            pending.lock().unwrap().remove(&id);
+            target.fetch_sub(1, std::sync::atomic::Ordering::AcqRel);
+            send_failures += 1;
+        }
+    }
+    let (samples, shed, mut errors) = receiver.join().expect("open-loop receiver panicked");
+    errors += send_failures;
+    Ok((samples, shed, errors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_split_evenly_with_remainder_up_front() {
+        assert_eq!(shares(10, 3), vec![4, 3, 3]);
+        assert_eq!(shares(3, 4), vec![1, 1, 1, 0]);
+        assert_eq!(shares(0, 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn report_percentiles_from_samples() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let r = LoadReport::from_samples(samples, 2, 1, 0.5);
+        assert_eq!(r.completed, 100);
+        assert_eq!(r.shed, 2);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.throughput(), 200.0);
+        assert!((r.p50 - 0.0505).abs() < 1e-9);
+        assert!((r.p99 - 0.09901).abs() < 1e-9);
+        assert!(r.p50 <= r.p95 && r.p95 <= r.p99 && r.p99 <= r.max);
+        assert!(r.summary_line().contains("completed=100"));
+    }
+
+    #[test]
+    fn empty_report_is_all_zero() {
+        let r = LoadReport::from_samples(Vec::new(), 0, 0, 1.0);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.p99, 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Wire-level serving: the network boundary in front of the
+//! coordinator.
+//!
+//! The paper's Table VI throughput claims (up to 333 M decisions/s
+//! pipelined) only matter if requests can reach the accelerator;
+//! serving-oriented CAM work (Pedretti et al.'s memristive aCAM tree
+//! engine, RETENTION's ensemble accelerator) frames the CAM as a
+//! *service* behind a query interface. This module is that interface
+//! for DT2CAM — std-only, no new dependencies:
+//!
+//! * [`protocol`] — length-prefixed, versioned frames whose payloads are
+//!   the repository's own JSON ([`Frame`], [`MetricsSnapshot`], typed
+//!   [`FrameError`]s that distinguish recoverable from fatal).
+//! * [`server`] — a [`std::net::TcpListener`] front door: thread-per-
+//!   connection readers feed a **bounded admission queue** (overflow is
+//!   answered with an explicit [`Frame::Shed`], never buffered), a
+//!   dedicated scheduler thread builds and owns the multi-bank
+//!   [`crate::coordinator::Coordinator`] — so the batcher coalesces
+//!   requests *across connections* — and responses are routed back by
+//!   request id through per-connection writers. Graceful shutdown
+//!   drains in-flight requests.
+//! * [`client`] — a blocking client with transparent reconnect and
+//!   typed errors.
+//! * [`loadgen`] — open- and closed-loop load generators reporting
+//!   p50/p95/p99 end-to-end latency and wall throughput.
+//!
+//! CLI: `dt2cam serve --listen ADDR [--admission N]` on one terminal,
+//! `dt2cam loadgen --connect ADDR --dataset NAME` on another; see
+//! `docs/API.md` §Serving over the wire and `examples/net_serve.rs`.
+
+pub mod client;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use client::{Client, ClientError};
+pub use loadgen::{closed_loop, open_loop, LoadReport};
+pub use protocol::{
+    encode_frame, read_frame, write_frame, Frame, FrameError, MetricsSnapshot, MAX_FRAME_LEN,
+    PROTOCOL_VERSION,
+};
+pub use server::{Server, ServerConfig, ServerHandle, ServerReport};

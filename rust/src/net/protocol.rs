@@ -1,0 +1,621 @@
+//! The DT2CAM wire protocol: length-prefixed, versioned frames whose
+//! payloads are the repository's own JSON (`config::json::Json`, encoded
+//! with the same `api::serde` conventions as the stage artifacts — u64
+//! ids survive beyond 2^53, `null` encodes absent classes).
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! +------------------+----------+-----------+--------------------------+
+//! | length: u32 (BE) | ver: u8  | type: u8  | payload: JSON, UTF-8     |
+//! +------------------+----------+-----------+--------------------------+
+//! ```
+//!
+//! `length` counts everything after itself (version byte + type byte +
+//! payload), so a reader always knows exactly how many bytes to consume
+//! — a malformed *payload* never desynchronizes the stream, which is
+//! what lets the server reply with a typed [`Frame::Error`] and keep the
+//! connection alive. Frames above [`MAX_FRAME_LEN`] are rejected; the
+//! reader skips the declared payload (bounded by [`DISCARD_LIMIT`]) so
+//! even an oversize frame is survivable. Only a mid-frame disconnect
+//! ([`FrameError::Truncated`]), an unskippably huge declared length, or
+//! a raw I/O failure are fatal to the connection.
+//!
+//! ## Versioning rule
+//!
+//! Every frame carries [`PROTOCOL_VERSION`]. A peer that receives a
+//! frame with a different version answers with a typed error naming
+//! both versions and ignores the frame — the stream itself stays
+//! decodable because the length prefix is version-invariant. Additive
+//! evolution (new frame types, new payload fields) does not bump the
+//! version; changing the meaning or layout of an existing frame does.
+
+use std::io::{Read, Write};
+
+use thiserror::Error;
+
+use crate::api::serde::{f64_arr, get, get_f64, get_str, get_u64, get_usize, json_f64s, json_u64};
+use crate::config::json::Json;
+
+/// Wire protocol version carried by every frame.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Largest accepted frame (version + type + payload), in bytes. A batch
+/// of feature f64s or a metrics snapshot is a few KiB; 1 MiB leaves
+/// room for Credit-scale feature vectors without letting a broken peer
+/// make the server buffer arbitrarily.
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+
+/// Oversize frames up to this declared length are skipped (consumed and
+/// discarded) so the connection survives with a typed error; beyond it
+/// the stream is considered hostile and the connection is closed.
+pub const DISCARD_LIMIT: usize = 8 * MAX_FRAME_LEN;
+
+const TYPE_REQUEST: u8 = 1;
+const TYPE_RESPONSE: u8 = 2;
+const TYPE_SHED: u8 = 3;
+const TYPE_ERROR: u8 = 4;
+const TYPE_METRICS_REQUEST: u8 = 5;
+const TYPE_METRICS: u8 = 6;
+const TYPE_SHUTDOWN: u8 = 7;
+
+/// One wire frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server: classify one feature vector. `id` is
+    /// client-scoped (the server routes responses back by it; distinct
+    /// connections may reuse ids freely).
+    Request { id: u64, features: Vec<f64> },
+    /// Server → client: the answer to [`Frame::Request`] `id`.
+    /// `class` is `None` when no CAM bank matched, `modeled_latency`
+    /// the modeled hardware seconds per decision.
+    Response {
+        id: u64,
+        class: Option<usize>,
+        modeled_latency: f64,
+    },
+    /// Server → client: request `id` was *not* admitted — the bounded
+    /// admission queue is full. Explicit backpressure: the client
+    /// should back off and retry; the server never buffers unboundedly.
+    Shed { id: u64 },
+    /// Either direction: a typed protocol or serving error. `id` names
+    /// the offending request when one is attributable.
+    Error { id: Option<u64>, message: String },
+    /// Client → server: scrape a [`MetricsSnapshot`].
+    MetricsRequest,
+    /// Server → client: the serving roll-ups.
+    Metrics(MetricsSnapshot),
+    /// Client → server: drain in-flight requests, answer them, then
+    /// close every connection and stop the server.
+    Shutdown,
+}
+
+/// Typed framing/decoding errors. [`FrameError::is_fatal`] separates
+/// "reply with [`Frame::Error`] and keep the connection" from "the
+/// stream is unrecoverable — close it".
+#[derive(Debug, Error)]
+pub enum FrameError {
+    /// Clean EOF at a frame boundary (the peer hung up between frames).
+    #[error("connection closed")]
+    Closed,
+    /// EOF in the middle of a frame — the stream is desynchronized.
+    #[error("truncated frame (connection dropped mid-frame)")]
+    Truncated,
+    #[error("i/o reading frame: {0}")]
+    Io(#[from] std::io::Error),
+    /// Declared length above [`MAX_FRAME_LEN`]; the payload was skipped,
+    /// the connection survives.
+    #[error("frame of {len} bytes exceeds the {max}-byte limit")]
+    Oversize { len: usize, max: usize },
+    /// Declared length above [`DISCARD_LIMIT`] — not worth consuming.
+    #[error("frame of {len} bytes is too large to skip; closing the connection")]
+    Unskippable { len: usize },
+    #[error("unsupported protocol version {found} (this peer speaks {supported})")]
+    Version { found: u8, supported: u8 },
+    #[error("unknown frame type 0x{0:02x}")]
+    UnknownType(u8),
+    #[error("bad frame payload: {0}")]
+    Payload(String),
+}
+
+impl FrameError {
+    /// Whether the connection can keep going after this error. The
+    /// length prefix was honored for every non-fatal case, so the next
+    /// read starts at a frame boundary.
+    pub fn is_fatal(&self) -> bool {
+        matches!(
+            self,
+            FrameError::Closed
+                | FrameError::Truncated
+                | FrameError::Io(_)
+                | FrameError::Unskippable { .. }
+        )
+    }
+}
+
+/// Server-side serving roll-ups, scraped over the wire with
+/// [`Frame::MetricsRequest`]. Latency fields are seconds; percentile
+/// fields are 0 when no request has completed yet.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Requests admitted into the coordinator.
+    pub requests: u64,
+    /// Requests answered (real batch lanes executed).
+    pub decisions: u64,
+    /// Hardware batches dispatched.
+    pub batches: u64,
+    /// Requests refused with [`Frame::Shed`] (admission queue full).
+    pub shed: u64,
+    /// Connections accepted since the server started.
+    pub connections: u64,
+    /// Non-fatal protocol errors answered with [`Frame::Error`].
+    pub protocol_errors: u64,
+    pub no_match: u64,
+    pub multi_match: u64,
+    /// CAM banks of the served program.
+    pub n_banks: usize,
+    /// Modeled energy per decision (J).
+    pub energy_per_dec: f64,
+    /// Modeled per-decision hardware latency (s).
+    pub modeled_latency: f64,
+    /// Wall-clock decisions/s of the serving software (batch-compute
+    /// wall, the coordinator's own accounting).
+    pub wall_throughput: f64,
+    /// Mean arrival → batch-dispatch wait (s).
+    pub queue_delay_mean: f64,
+    /// End-to-end (queue + service) latency percentiles (s).
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", json_u64(self.requests)),
+            ("decisions", json_u64(self.decisions)),
+            ("batches", json_u64(self.batches)),
+            ("shed", json_u64(self.shed)),
+            ("connections", json_u64(self.connections)),
+            ("protocol_errors", json_u64(self.protocol_errors)),
+            ("no_match", json_u64(self.no_match)),
+            ("multi_match", json_u64(self.multi_match)),
+            ("n_banks", Json::num(self.n_banks as f64)),
+            ("energy_per_dec", Json::num(self.energy_per_dec)),
+            ("modeled_latency", Json::num(self.modeled_latency)),
+            ("wall_throughput", Json::num(self.wall_throughput)),
+            ("queue_delay_mean", Json::num(self.queue_delay_mean)),
+            ("latency_p50", Json::num(self.latency_p50)),
+            ("latency_p95", Json::num(self.latency_p95)),
+            ("latency_p99", Json::num(self.latency_p99)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<MetricsSnapshot> {
+        Ok(MetricsSnapshot {
+            requests: get_u64(j, "requests")?,
+            decisions: get_u64(j, "decisions")?,
+            batches: get_u64(j, "batches")?,
+            shed: get_u64(j, "shed")?,
+            connections: get_u64(j, "connections")?,
+            protocol_errors: get_u64(j, "protocol_errors")?,
+            no_match: get_u64(j, "no_match")?,
+            multi_match: get_u64(j, "multi_match")?,
+            n_banks: get_usize(j, "n_banks")?,
+            energy_per_dec: get_f64(j, "energy_per_dec")?,
+            modeled_latency: get_f64(j, "modeled_latency")?,
+            wall_throughput: get_f64(j, "wall_throughput")?,
+            queue_delay_mean: get_f64(j, "queue_delay_mean")?,
+            latency_p50: get_f64(j, "latency_p50")?,
+            latency_p95: get_f64(j, "latency_p95")?,
+            latency_p99: get_f64(j, "latency_p99")?,
+        })
+    }
+
+    /// One-line summary for logs (client-side scrape output).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "requests={} decisions={} batches={} shed={} conns={} e/dec={:.3} nJ \
+             wall-throughput={:.0} dec/s lat(p50/p95/p99)={:.1}/{:.1}/{:.1} us \
+             no_match={} multi_match={} banks={}",
+            self.requests,
+            self.decisions,
+            self.batches,
+            self.shed,
+            self.connections,
+            self.energy_per_dec * 1e9,
+            self.wall_throughput,
+            self.latency_p50 * 1e6,
+            self.latency_p95 * 1e6,
+            self.latency_p99 * 1e6,
+            self.no_match,
+            self.multi_match,
+            self.n_banks,
+        )
+    }
+}
+
+// ------------------------------------------------------------- encoding
+
+fn class_to_json(class: Option<usize>) -> Json {
+    match class {
+        Some(c) => Json::num(c as f64),
+        None => Json::Null,
+    }
+}
+
+fn frame_parts(frame: &Frame) -> (u8, Json) {
+    match frame {
+        Frame::Request { id, features } => (
+            TYPE_REQUEST,
+            Json::obj(vec![("id", json_u64(*id)), ("features", json_f64s(features))]),
+        ),
+        Frame::Response {
+            id,
+            class,
+            modeled_latency,
+        } => (
+            TYPE_RESPONSE,
+            Json::obj(vec![
+                ("id", json_u64(*id)),
+                ("class", class_to_json(*class)),
+                ("modeled_latency", Json::num(*modeled_latency)),
+            ]),
+        ),
+        Frame::Shed { id } => (TYPE_SHED, Json::obj(vec![("id", json_u64(*id))])),
+        Frame::Error { id, message } => (
+            TYPE_ERROR,
+            Json::obj(vec![
+                (
+                    "id",
+                    match id {
+                        Some(i) => json_u64(*i),
+                        None => Json::Null,
+                    },
+                ),
+                ("message", Json::str(message.clone())),
+            ]),
+        ),
+        Frame::MetricsRequest => (TYPE_METRICS_REQUEST, Json::obj(vec![])),
+        Frame::Metrics(snapshot) => (TYPE_METRICS, snapshot.to_json()),
+        Frame::Shutdown => (TYPE_SHUTDOWN, Json::obj(vec![])),
+    }
+}
+
+/// Serialize one frame to its full wire representation (length prefix
+/// included).
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let (ty, payload) = frame_parts(frame);
+    let body = payload.to_string_compact().into_bytes();
+    let len = 2 + body.len();
+    let mut out = Vec::with_capacity(4 + len);
+    out.extend_from_slice(&(len as u32).to_be_bytes());
+    out.push(PROTOCOL_VERSION);
+    out.push(ty);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame (a single `write_all`, so concurrent writers that
+/// serialize at a higher level never interleave frame bytes).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    let bytes = encode_frame(frame);
+    if bytes.len() > 4 + MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!(
+                "refusing to send a {}-byte frame (limit {MAX_FRAME_LEN})",
+                bytes.len() - 4
+            ),
+        ));
+    }
+    w.write_all(&bytes)
+}
+
+fn payload_err<E: std::fmt::Display>(e: E) -> FrameError {
+    FrameError::Payload(format!("{e:#}"))
+}
+
+fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
+    let text = std::str::from_utf8(payload).map_err(payload_err)?;
+    let j = Json::parse(text).map_err(payload_err)?;
+    match ty {
+        TYPE_REQUEST => Ok(Frame::Request {
+            id: get_u64(&j, "id").map_err(payload_err)?,
+            features: f64_arr(&j, "features").map_err(payload_err)?,
+        }),
+        TYPE_RESPONSE => {
+            let class = match get(&j, "class").map_err(payload_err)? {
+                Json::Null => None,
+                v => Some(v.as_usize().ok_or_else(|| {
+                    FrameError::Payload(
+                        "field 'class' must be a non-negative integer or null".into(),
+                    )
+                })?),
+            };
+            Ok(Frame::Response {
+                id: get_u64(&j, "id").map_err(payload_err)?,
+                class,
+                modeled_latency: get_f64(&j, "modeled_latency").map_err(payload_err)?,
+            })
+        }
+        TYPE_SHED => Ok(Frame::Shed {
+            id: get_u64(&j, "id").map_err(payload_err)?,
+        }),
+        TYPE_ERROR => {
+            let id = match get(&j, "id").map_err(payload_err)? {
+                Json::Null => None,
+                _ => Some(get_u64(&j, "id").map_err(payload_err)?),
+            };
+            Ok(Frame::Error {
+                id,
+                message: get_str(&j, "message").map_err(payload_err)?,
+            })
+        }
+        TYPE_METRICS_REQUEST => Ok(Frame::MetricsRequest),
+        TYPE_METRICS => Ok(Frame::Metrics(
+            MetricsSnapshot::from_json(&j).map_err(payload_err)?,
+        )),
+        TYPE_SHUTDOWN => Ok(Frame::Shutdown),
+        other => Err(FrameError::UnknownType(other)),
+    }
+}
+
+/// Consume and discard exactly `n` bytes (oversize-frame recovery).
+fn discard(r: &mut impl Read, mut n: usize) -> Result<(), FrameError> {
+    let mut sink = [0u8; 4096];
+    while n > 0 {
+        let take = n.min(sink.len());
+        r.read_exact(&mut sink[..take]).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                FrameError::Truncated
+            } else {
+                FrameError::Io(e)
+            }
+        })?;
+        n -= take;
+    }
+    Ok(())
+}
+
+/// Read one frame. Non-fatal errors ([`FrameError::is_fatal`] false)
+/// leave the stream positioned at the next frame boundary, so the
+/// caller can answer with [`Frame::Error`] and keep reading.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, FrameError> {
+    // Length prefix. A clean EOF here is the peer hanging up between
+    // frames — `Closed`, not `Truncated`.
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated
+                })
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME_LEN {
+        if len > DISCARD_LIMIT {
+            return Err(FrameError::Unskippable { len });
+        }
+        discard(r, len)?;
+        return Err(FrameError::Oversize {
+            len,
+            max: MAX_FRAME_LEN,
+        });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    })?;
+    if len < 2 {
+        return Err(FrameError::Payload(format!(
+            "frame body of {len} bytes is shorter than the version+type header"
+        )));
+    }
+    let (ver, ty) = (body[0], body[1]);
+    if ver != PROTOCOL_VERSION {
+        return Err(FrameError::Version {
+            found: ver,
+            supported: PROTOCOL_VERSION,
+        });
+    }
+    decode_payload(ty, &body[2..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let bytes = encode_frame(&frame);
+        let mut cursor = &bytes[..];
+        let back = read_frame(&mut cursor).unwrap();
+        assert_eq!(back, frame);
+        assert!(cursor.is_empty(), "frame must consume exactly its bytes");
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        roundtrip(Frame::Request {
+            id: 7,
+            features: vec![0.25, -1.5, 3.0],
+        });
+        roundtrip(Frame::Response {
+            id: 7,
+            class: Some(2),
+            modeled_latency: 1.25e-8,
+        });
+        roundtrip(Frame::Response {
+            id: 8,
+            class: None,
+            modeled_latency: 0.0,
+        });
+        roundtrip(Frame::Shed { id: 9 });
+        roundtrip(Frame::Error {
+            id: Some(3),
+            message: "bad \"thing\"\n".into(),
+        });
+        roundtrip(Frame::Error {
+            id: None,
+            message: "no id".into(),
+        });
+        roundtrip(Frame::MetricsRequest);
+        roundtrip(Frame::Metrics(MetricsSnapshot {
+            requests: 10,
+            decisions: 9,
+            batches: 2,
+            shed: 1,
+            connections: 3,
+            protocol_errors: 0,
+            no_match: 0,
+            multi_match: 1,
+            n_banks: 3,
+            energy_per_dec: 1.7e-9,
+            modeled_latency: 2.5e-8,
+            wall_throughput: 1234.5,
+            queue_delay_mean: 0.002,
+            latency_p50: 0.0021,
+            latency_p95: 0.004,
+            latency_p99: 0.0051,
+        }));
+        roundtrip(Frame::Shutdown);
+    }
+
+    #[test]
+    fn request_id_beyond_f64_precision_roundtrips() {
+        roundtrip(Frame::Request {
+            id: (1u64 << 53) + 11,
+            features: vec![1.0],
+        });
+        roundtrip(Frame::Shed { id: u64::MAX });
+    }
+
+    #[test]
+    fn several_frames_stream_back_to_back() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shed { id: 1 }).unwrap();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        let mut cursor = &buf[..];
+        assert_eq!(read_frame(&mut cursor).unwrap(), Frame::Shed { id: 1 });
+        assert_eq!(read_frame(&mut cursor).unwrap(), Frame::Shutdown);
+        assert!(matches!(
+            read_frame(&mut cursor).unwrap_err(),
+            FrameError::Closed
+        ));
+    }
+
+    #[test]
+    fn truncated_frame_is_fatal() {
+        let bytes = encode_frame(&Frame::Shed { id: 1 });
+        let mut cursor = &bytes[..bytes.len() - 2];
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert!(matches!(err, FrameError::Truncated));
+        assert!(err.is_fatal());
+        // A cut inside the length prefix is equally fatal.
+        let mut cursor = &bytes[..2];
+        assert!(matches!(
+            read_frame(&mut cursor).unwrap_err(),
+            FrameError::Truncated
+        ));
+    }
+
+    #[test]
+    fn oversize_frame_is_skipped_and_recoverable() {
+        let len = MAX_FRAME_LEN + 16;
+        let mut buf = Vec::with_capacity(4 + len);
+        buf.extend_from_slice(&(len as u32).to_be_bytes());
+        buf.resize(4 + len, 0);
+        write_frame(&mut buf, &Frame::Shed { id: 5 }).unwrap();
+        let mut cursor = &buf[..];
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert!(matches!(err, FrameError::Oversize { .. }), "{err}");
+        assert!(!err.is_fatal());
+        // The stream recovered at the next frame boundary.
+        assert_eq!(read_frame(&mut cursor).unwrap(), Frame::Shed { id: 5 });
+    }
+
+    #[test]
+    fn unskippable_frame_is_fatal() {
+        let len = DISCARD_LIMIT + 1;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(len as u32).to_be_bytes());
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, FrameError::Unskippable { .. }));
+        assert!(err.is_fatal());
+    }
+
+    #[test]
+    fn wrong_version_is_typed_and_recoverable() {
+        let mut bytes = encode_frame(&Frame::Shutdown);
+        bytes[4] = 99; // version byte
+        write_frame(&mut bytes, &Frame::Shutdown).unwrap();
+        let mut cursor = &bytes[..];
+        let err = read_frame(&mut cursor).unwrap_err();
+        match err {
+            FrameError::Version { found, supported } => {
+                assert_eq!(found, 99);
+                assert_eq!(supported, PROTOCOL_VERSION);
+            }
+            other => panic!("expected Version, got {other}"),
+        }
+        // Recoverable: the following frame still decodes.
+        assert_eq!(read_frame(&mut cursor).unwrap(), Frame::Shutdown);
+    }
+
+    #[test]
+    fn unknown_type_and_bad_payload_are_recoverable() {
+        // Unknown frame type.
+        let mut bytes = encode_frame(&Frame::Shutdown);
+        bytes[5] = 0xEE; // type byte
+        let err = read_frame(&mut &bytes[..]).unwrap_err();
+        assert!(matches!(err, FrameError::UnknownType(0xEE)));
+        assert!(!err.is_fatal());
+
+        // Valid type, garbage JSON payload.
+        let body = b"\x01\x01{not json";
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        buf.extend_from_slice(body);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, FrameError::Payload(_)), "{err}");
+        assert!(!err.is_fatal());
+
+        // Valid JSON, missing field.
+        let payload = b"{}";
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((payload.len() + 2) as u32).to_be_bytes());
+        buf.push(PROTOCOL_VERSION);
+        buf.push(super::TYPE_REQUEST);
+        buf.extend_from_slice(payload);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, FrameError::Payload(_)));
+        let msg = err.to_string();
+        assert!(msg.contains("id"), "should name the missing field: {msg}");
+    }
+
+    #[test]
+    fn snapshot_summary_line_mentions_key_rollups() {
+        let s = MetricsSnapshot {
+            decisions: 42,
+            shed: 3,
+            ..Default::default()
+        };
+        let line = s.summary_line();
+        assert!(line.contains("decisions=42"));
+        assert!(line.contains("shed=3"));
+        let back = MetricsSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+}

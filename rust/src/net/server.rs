@@ -1,0 +1,647 @@
+//! The socket server: a [`TcpListener`] front door over the multi-bank
+//! [`Coordinator`].
+//!
+//! ## Threading model
+//!
+//! ```text
+//!             accept thread ── one reader thread per connection
+//!                                   │  (admission-gated)
+//!                                   ▼
+//!             bounded admission queue (explicit backpressure: Shed)
+//!                                   │
+//!                                   ▼
+//!             scheduler thread ── owns the Coordinator
+//!              (builds it too — the PJRT backend is !Send, so the
+//!               coordinator must be born where it lives)
+//!                                   │  responses routed by global id
+//!                                   ▼
+//!             per-connection writer threads ── frames back out
+//! ```
+//!
+//! The batcher finally does its real job here: requests from
+//! *independent connections* coalesce into hardware batches, and
+//! responses are routed back to whichever connection asked, by request
+//! id — not drained in submission order.
+//!
+//! ## Backpressure contract
+//!
+//! At most `admission` requests are in flight (admitted but not yet
+//! answered) at any instant, server-wide. A request arriving past the
+//! bound is answered immediately with [`Frame::Shed`] — the server
+//! never buffers unboundedly. Everything else in the pipeline is
+//! bounded too: the admission channel, the per-connection writer
+//! channels (sized so routing a response can never block the
+//! scheduler), and TCP's own flow control covers the rest.
+//!
+//! ## Shutdown
+//!
+//! A [`Frame::Shutdown`] (or [`ServerHandle::shutdown`]) drains
+//! in-flight requests through a final forced flush, routes the last
+//! responses, then closes every connection and stops the accept loop.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
+
+use super::protocol::{read_frame, write_frame, Frame, MetricsSnapshot};
+
+/// Server tunables.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Admission bound: maximum requests in flight (admitted, not yet
+    /// answered) server-wide before new requests are [`Frame::Shed`].
+    pub admission: usize,
+    /// Override for the coordinator's partial-batch deadline (None =
+    /// keep its 2 ms default). Larger values coalesce more aggressively
+    /// across connections at the cost of tail latency.
+    pub batch_max_wait: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            admission: 256,
+            batch_max_wait: None,
+        }
+    }
+}
+
+/// Final roll-ups returned by [`ServerHandle::join`].
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    /// The coordinator's serving metrics (latency percentiles included).
+    pub metrics: Metrics,
+    /// Requests refused with [`Frame::Shed`].
+    pub shed: u64,
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    /// Non-fatal protocol errors answered with [`Frame::Error`].
+    pub protocol_errors: u64,
+    /// Responses computed but dropped because their connection's writer
+    /// channel was full — the client had stopped reading (its channel
+    /// also carries the Error/Shed replies its own traffic provoked).
+    pub dropped_responses: u64,
+}
+
+enum SchedMsg {
+    /// An admitted request (`req.id` is the server-global id; the route
+    /// entry back to `(connection, client id)` is already registered).
+    Request(InferenceRequest),
+    /// Scrape request from connection `conn`.
+    Metrics { conn: u64 },
+    Shutdown,
+}
+
+enum WriterMsg {
+    Frame(Frame),
+    /// Flush pending frames, close both stream halves, exit.
+    Close,
+}
+
+struct Route {
+    conn: u64,
+    client_id: u64,
+}
+
+/// One live connection as the server tracks it.
+struct ConnHandle {
+    /// The connection's writer channel.
+    tx: SyncSender<WriterMsg>,
+    /// A second handle to the socket, used only to force-close a
+    /// stalled connection (writer channel full → the client stopped
+    /// reading) so shutdown can never hang on it.
+    stream: TcpStream,
+}
+
+/// State shared by the accept loop, readers, and the scheduler.
+struct Shared {
+    admission: usize,
+    /// Admitted-but-unanswered requests, server-wide.
+    inflight: AtomicUsize,
+    shed: AtomicU64,
+    accepted: AtomicU64,
+    protocol_errors: AtomicU64,
+    dropped_responses: AtomicU64,
+    shutting_down: AtomicBool,
+    next_global: AtomicU64,
+    /// Minimum feature-vector length a request must carry (set by the
+    /// scheduler once the coordinator is built, before accept starts).
+    min_features: AtomicUsize,
+    /// global id → response route.
+    routes: Mutex<HashMap<u64, Route>>,
+    /// connection id → live connection.
+    conns: Mutex<HashMap<u64, ConnHandle>>,
+}
+
+impl Shared {
+    /// Try to take one admission slot; `false` means shed.
+    fn admit(&self) -> bool {
+        self.inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                (v < self.admission).then_some(v + 1)
+            })
+            .is_ok()
+    }
+
+    fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Send a frame to connection `conn`'s writer, if it still exists.
+    /// Blocking — reader-thread use only: a reader stalled on its own
+    /// connection's writer is legitimate TCP backpressure on that
+    /// client, nothing else.
+    fn send_to(&self, conn: u64, frame: Frame) {
+        let tx = self.conns.lock().unwrap().get(&conn).map(|h| h.tx.clone());
+        if let Some(tx) = tx {
+            let _ = tx.send(WriterMsg::Frame(frame));
+        }
+    }
+
+    /// Non-blocking variant for the scheduler thread: a full writer
+    /// channel (client not reading) drops the frame instead of stalling
+    /// every other connection's serving.
+    fn try_send_to(&self, conn: u64, frame: Frame) {
+        let tx = self.conns.lock().unwrap().get(&conn).map(|h| h.tx.clone());
+        if let Some(tx) = tx {
+            let _ = tx.try_send(WriterMsg::Frame(frame));
+        }
+    }
+}
+
+/// Namespace for [`Server::spawn`].
+pub struct Server;
+
+impl Server {
+    /// Bind `addr` and serve the coordinator produced by `build`.
+    ///
+    /// `build` runs **on the scheduler thread** — only the closure must
+    /// be `Send`, not the coordinator, so even the `!Send` PJRT backend
+    /// can serve over the wire. `spawn` returns once the coordinator is
+    /// built and the listener is accepting (or with `build`'s error).
+    pub fn spawn<A, F>(addr: A, config: ServerConfig, build: F) -> Result<ServerHandle>
+    where
+        A: ToSocketAddrs,
+        F: FnOnce() -> Result<Coordinator> + Send + 'static,
+    {
+        anyhow::ensure!(config.admission >= 1, "admission bound must be >= 1");
+        let listener = TcpListener::bind(addr).context("binding listen address")?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            admission: config.admission,
+            inflight: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            dropped_responses: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            next_global: AtomicU64::new(0),
+            min_features: AtomicUsize::new(0),
+            routes: Mutex::new(HashMap::new()),
+            conns: Mutex::new(HashMap::new()),
+        });
+        // Channel capacity: `admission` request slots (the inflight gate
+        // guarantees no more are ever outstanding) plus slack for
+        // control messages (metrics scrapes, shutdown).
+        let (tx, rx) = mpsc::sync_channel::<SchedMsg>(config.admission + 16);
+
+        // Scheduler thread: build the coordinator where it will live,
+        // signal readiness, then serve.
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let sched_shared = Arc::clone(&shared);
+        let batch_max_wait = config.batch_max_wait;
+        let scheduler = std::thread::Builder::new()
+            .name("dt2cam-net-scheduler".into())
+            .spawn(move || -> Result<Metrics> {
+                let mut coord = match build() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        anyhow::bail!("coordinator build failed");
+                    }
+                };
+                if let Some(d) = batch_max_wait {
+                    coord.set_batch_max_wait(d);
+                }
+                sched_shared
+                    .min_features
+                    .store(coord.n_features(), Ordering::Release);
+                let _ = ready_tx.send(Ok(()));
+                let result = serve_loop(&mut coord, &rx, &sched_shared);
+                close_all(&sched_shared);
+                result.map(|()| coord.metrics.clone())
+            })
+            .context("spawning scheduler thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = scheduler.join();
+                return Err(e.context("building the serving coordinator"));
+            }
+            Err(_) => {
+                // Scheduler died before signaling (panic in build).
+                let panic = scheduler
+                    .join()
+                    .err()
+                    .map(|_| "panic".to_string())
+                    .unwrap_or_else(|| "exit".to_string());
+                anyhow::bail!("scheduler thread {panic}ed before becoming ready");
+            }
+        }
+
+        // Accept loop, now that the coordinator is ready.
+        let accept_shared = Arc::clone(&shared);
+        let accept_tx = tx.clone();
+        let accept = std::thread::Builder::new()
+            .name("dt2cam-net-accept".into())
+            .spawn(move || accept_loop(listener, accept_tx, accept_shared))
+            .context("spawning accept thread")?;
+
+        Ok(ServerHandle {
+            addr: local_addr,
+            tx,
+            shared,
+            scheduler: Some(scheduler),
+            accept: Some(accept),
+        })
+    }
+}
+
+/// Handle to a running server. Dropping it does **not** stop the server;
+/// call [`ServerHandle::shutdown`] (or send a wire shutdown frame and
+/// [`ServerHandle::join`]).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    tx: SyncSender<SchedMsg>,
+    shared: Arc<Shared>,
+    scheduler: Option<JoinHandle<Result<Metrics>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests shed so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shared.shed.load(Ordering::Acquire)
+    }
+
+    /// Request shutdown and wait for the drain to finish.
+    pub fn shutdown(self) -> Result<ServerReport> {
+        let _ = self.tx.send(SchedMsg::Shutdown);
+        self.join()
+    }
+
+    /// Wait for the server to stop (a wire shutdown frame, or a prior
+    /// [`ServerHandle::shutdown`]) and return the final roll-ups.
+    pub fn join(mut self) -> Result<ServerReport> {
+        let metrics = match self.scheduler.take().expect("join called once").join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("scheduler thread panicked"),
+        };
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        Ok(ServerReport {
+            metrics,
+            shed: self.shared.shed.load(Ordering::Acquire),
+            connections: self.shared.accepted.load(Ordering::Acquire),
+            protocol_errors: self.shared.protocol_errors.load(Ordering::Acquire),
+            dropped_responses: self.shared.dropped_responses.load(Ordering::Acquire),
+        })
+    }
+}
+
+// ------------------------------------------------------------ scheduler
+
+fn serve_loop(coord: &mut Coordinator, rx: &Receiver<SchedMsg>, shared: &Shared) -> Result<()> {
+    loop {
+        let mut shutdown = false;
+        // Block briefly for the next message so idle serving costs ~one
+        // wakeup per millisecond, then drain opportunistically so a
+        // burst lands in one batch.
+        match rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(msg) => {
+                shutdown |= handle(coord, shared, msg);
+                while let Ok(msg) = rx.try_recv() {
+                    shutdown |= handle(coord, shared, msg);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+        }
+        if shutdown {
+            break;
+        }
+        route(shared, coord.poll(false)?);
+    }
+    // Graceful drain. The flag stops readers admitting anything new, so
+    // the channel empties in bounded rounds; each round force-flushes
+    // the batcher and routes its responses — answering every admitted
+    // request, including ones that raced into the channel alongside the
+    // shutdown message.
+    shared.shutting_down.store(true, Ordering::Release);
+    loop {
+        let mut admitted = false;
+        while let Ok(msg) = rx.try_recv() {
+            if let SchedMsg::Request(req) = msg {
+                coord.submit(req);
+                admitted = true;
+            }
+        }
+        let responses = coord.poll(true)?;
+        let answered = !responses.is_empty();
+        route(shared, responses);
+        if !admitted && !answered {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Apply one scheduler message; returns true on shutdown.
+fn handle(coord: &mut Coordinator, shared: &Shared, msg: SchedMsg) -> bool {
+    match msg {
+        SchedMsg::Request(req) => {
+            coord.submit(req);
+            false
+        }
+        SchedMsg::Metrics { conn } => {
+            shared.try_send_to(conn, Frame::Metrics(snapshot(coord, shared)));
+            false
+        }
+        SchedMsg::Shutdown => true,
+    }
+}
+
+/// Route responses back to their connections by global id. A vanished
+/// connection drops its responses (the admission slot is still
+/// released).
+fn route(shared: &Shared, responses: Vec<InferenceResponse>) {
+    if responses.is_empty() {
+        return;
+    }
+    let mut routes = shared.routes.lock().unwrap();
+    for r in responses {
+        let Some(route) = routes.remove(&r.id) else {
+            continue;
+        };
+        let tx = shared.conns.lock().unwrap().get(&route.conn).map(|h| h.tx.clone());
+        if let Some(tx) = tx {
+            // try_send, never block the scheduler on one connection. A
+            // Full channel means the client stopped reading while its
+            // own traffic (Error/Shed replies share the channel) piled
+            // up — its response is forfeit, counted, and the admission
+            // slot still frees.
+            match tx.try_send(WriterMsg::Frame(Frame::Response {
+                id: route.client_id,
+                class: r.class,
+                modeled_latency: r.modeled_latency,
+            })) {
+                Ok(()) | Err(TrySendError::Disconnected(_)) => {}
+                Err(TrySendError::Full(_)) => {
+                    shared.dropped_responses.fetch_add(1, Ordering::AcqRel);
+                }
+            }
+        }
+        shared.release();
+    }
+}
+
+fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
+    let m = &coord.metrics;
+    let lat = m.latency_percentiles();
+    MetricsSnapshot {
+        requests: m.requests,
+        decisions: m.decisions,
+        batches: m.batches,
+        shed: shared.shed.load(Ordering::Acquire),
+        connections: shared.accepted.load(Ordering::Acquire),
+        protocol_errors: shared.protocol_errors.load(Ordering::Acquire),
+        no_match: m.no_match,
+        multi_match: m.multi_match,
+        n_banks: m.n_banks().max(coord.n_banks()),
+        energy_per_dec: m.energy_per_dec(),
+        modeled_latency: coord.modeled_latency(),
+        wall_throughput: m.wall_throughput(),
+        queue_delay_mean: if m.queue_delay.count() > 0 {
+            m.queue_delay.mean()
+        } else {
+            0.0
+        },
+        latency_p50: lat.map_or(0.0, |l| l.p50),
+        latency_p95: lat.map_or(0.0, |l| l.p95),
+        latency_p99: lat.map_or(0.0, |l| l.p99),
+    }
+}
+
+/// Stop accepting, then close every live connection: each writer gets a
+/// `Close`, writes its pending frames, and shuts both stream halves —
+/// which also wakes its reader with EOF. A connection whose writer
+/// channel is full (client stopped reading) is force-closed at the
+/// socket instead, so shutdown can never hang on it.
+fn close_all(shared: &Shared) {
+    // The flag flips inside the conns lock: a racing accept either sees
+    // it under its own lock (and refuses the connection) or finished
+    // its insert first (and is drained right here). No connection can
+    // slip through unclosed.
+    let handles: Vec<ConnHandle> = {
+        let mut conns = shared.conns.lock().unwrap();
+        shared.shutting_down.store(true, Ordering::Release);
+        conns.drain().map(|(_, h)| h).collect()
+    };
+    for h in handles {
+        if h.tx.try_send(WriterMsg::Close).is_err() {
+            let _ = h.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+// ------------------------------------------------------- accept/reader
+
+/// Non-blocking accept loop polled every 20 ms: no wake-connection
+/// trickery is needed for shutdown, the flag alone stops it.
+fn accept_loop(listener: TcpListener, tx: SyncSender<SchedMsg>, shared: Arc<Shared>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if shared.shutting_down.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let conn = shared.accepted.fetch_add(1, Ordering::AcqRel);
+                // Accepted sockets inherit non-blocking mode on some
+                // platforms; readers/writers want blocking I/O.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let (Ok(write_half), Ok(ctl_half)) = (stream.try_clone(), stream.try_clone())
+                else {
+                    continue;
+                };
+                let (wtx, wrx) = mpsc::sync_channel::<WriterMsg>(shared.admission + 16);
+                {
+                    // Registration races against close_all under this
+                    // lock: if the shutdown flag is already up, refuse
+                    // the connection (drop it) instead of inserting
+                    // into a map that was just drained — a late insert
+                    // would leak its reader/writer threads.
+                    let mut conns = shared.conns.lock().unwrap();
+                    if shared.shutting_down.load(Ordering::Acquire) {
+                        break;
+                    }
+                    conns.insert(
+                        conn,
+                        ConnHandle {
+                            tx: wtx,
+                            stream: ctl_half,
+                        },
+                    );
+                }
+                let _ = std::thread::Builder::new()
+                    .name(format!("dt2cam-net-writer-{conn}"))
+                    .spawn(move || writer_loop(write_half, wrx));
+                let rtx = tx.clone();
+                let rshared = Arc::clone(&shared);
+                let _ = std::thread::Builder::new()
+                    .name(format!("dt2cam-net-reader-{conn}"))
+                    .spawn(move || reader_loop(conn, stream, rtx, rshared));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => {
+                // Transient accept errors (EMFILE etc.): keep listening.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<WriterMsg>) {
+    for msg in rx.iter() {
+        match msg {
+            WriterMsg::Frame(frame) => {
+                if write_frame(&mut stream, &frame).is_err() {
+                    break;
+                }
+            }
+            WriterMsg::Close => break,
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, shared: Arc<Shared>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Frame::Request { id, features }) => {
+                if shared.shutting_down.load(Ordering::Acquire) {
+                    // The drain is running: refuse instead of admitting
+                    // work the scheduler may never see.
+                    shared.send_to(
+                        conn,
+                        Frame::Error {
+                            id: Some(id),
+                            message: "server is shutting down".to_string(),
+                        },
+                    );
+                    continue;
+                }
+                let need = shared.min_features.load(Ordering::Acquire);
+                if features.len() < need {
+                    shared.protocol_errors.fetch_add(1, Ordering::AcqRel);
+                    shared.send_to(
+                        conn,
+                        Frame::Error {
+                            id: Some(id),
+                            message: format!(
+                                "request carries {} features but the served program \
+                                 needs at least {need}",
+                                features.len()
+                            ),
+                        },
+                    );
+                    continue;
+                }
+                if !shared.admit() {
+                    // Explicit backpressure: past the admission bound
+                    // the request is refused *now*, never queued.
+                    shared.shed.fetch_add(1, Ordering::AcqRel);
+                    shared.send_to(conn, Frame::Shed { id });
+                    continue;
+                }
+                let gid = shared.next_global.fetch_add(1, Ordering::AcqRel);
+                shared.routes.lock().unwrap().insert(
+                    gid,
+                    Route {
+                        conn,
+                        client_id: id,
+                    },
+                );
+                // Arrival is stamped here, at the socket — the queue
+                // delay the metrics see includes the admission hop.
+                if tx.send(SchedMsg::Request(InferenceRequest::new(gid, features))).is_err() {
+                    shared.routes.lock().unwrap().remove(&gid);
+                    shared.release();
+                    break;
+                }
+            }
+            Ok(Frame::MetricsRequest) => {
+                if tx.send(SchedMsg::Metrics { conn }).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::Shutdown) => {
+                let _ = tx.send(SchedMsg::Shutdown);
+                // Keep reading until the scheduler closes us: the drain
+                // responses still need this connection's writer.
+            }
+            Ok(other) => {
+                shared.protocol_errors.fetch_add(1, Ordering::AcqRel);
+                shared.send_to(
+                    conn,
+                    Frame::Error {
+                        id: None,
+                        message: format!("unexpected client frame: {other:?}"),
+                    },
+                );
+            }
+            Err(e) if e.is_fatal() => break,
+            Err(e) => {
+                // Recoverable framing error: answer typed, keep the
+                // connection (the length prefix re-synced the stream).
+                shared.protocol_errors.fetch_add(1, Ordering::AcqRel);
+                shared.send_to(
+                    conn,
+                    Frame::Error {
+                        id: None,
+                        message: e.to_string(),
+                    },
+                );
+            }
+        }
+    }
+    // Reader gone: retire the connection (unless shutdown already did).
+    // The client is gone too, so a full writer channel is force-closed
+    // rather than waited on.
+    if let Some(h) = shared.conns.lock().unwrap().remove(&conn) {
+        if h.tx.try_send(WriterMsg::Close).is_err() {
+            let _ = h.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}

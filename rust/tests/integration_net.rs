@@ -1,0 +1,340 @@
+//! Loopback integration tests for the wire-level serving subsystem
+//! (`dt2cam::net`): a spawned socket server answering concurrent
+//! clients must produce exactly the predictions the in-process
+//! coordinator produces, shed load past the admission bound instead of
+//! buffering unboundedly, survive malformed frames, and drain in-flight
+//! requests on graceful shutdown — registry-wide where the backend
+//! allows it (the `!Send` pjrt client is built *on* the server's
+//! scheduler thread, so it serves too when artifacts exist).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use dt2cam::api::{BackendOptions, Dt2Cam};
+use dt2cam::cart::ForestParams;
+use dt2cam::config::EngineKind;
+use dt2cam::net::{
+    encode_frame, read_frame, write_frame, Client, ClientError, Frame, Server, ServerConfig,
+    MAX_FRAME_LEN,
+};
+use dt2cam::tcam::params::DeviceParams;
+
+/// Spawn a socket server over a 3-bank bagged forest on haberman
+/// (@S=16, the acceptance-criterion program) and return the handle, the
+/// test inputs, and the in-process expected predictions.
+fn spawn_forest_server(
+    engine: EngineKind,
+    batch: usize,
+    cfg: ServerConfig,
+) -> (
+    dt2cam::net::ServerHandle,
+    Vec<Vec<f64>>,
+    Vec<Option<usize>>,
+) {
+    let fp = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest("haberman", &fp).unwrap();
+    let mapped = model.compile().map(16, &DeviceParams::default());
+    let expected = mapped
+        .session(engine, batch)
+        .unwrap()
+        .classify_all(&model.test_x)
+        .unwrap();
+    let opts = BackendOptions::default();
+    let server = Server::spawn("127.0.0.1:0", cfg, move || {
+        Ok(mapped.session_with(engine, batch, &opts)?.into_coordinator())
+    })
+    .unwrap();
+    (server, model.test_x, expected)
+}
+
+fn has_pjrt_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn concurrent_clients_get_exactly_the_in_process_answers_registry_wide() {
+    for engine in EngineKind::ALL {
+        if engine == EngineKind::Pjrt && !has_pjrt_artifacts() {
+            eprintln!("skipping pjrt: run `make artifacts`");
+            continue;
+        }
+        let (server, inputs, expected) =
+            spawn_forest_server(engine, 8, ServerConfig::default());
+        let addr = server.local_addr().to_string();
+        let n_clients = 4;
+        // Each client owns a disjoint stripe of the test split; the
+        // requests interleave on the wire, so the server's batcher
+        // coalesces lanes *across connections* — the answers must still
+        // be exactly the in-process ones, routed back to whoever asked.
+        let got: Vec<Vec<(usize, Option<usize>)>> = std::thread::scope(|s| {
+            (0..n_clients)
+                .map(|c| {
+                    let addr = addr.clone();
+                    let inputs = &inputs;
+                    s.spawn(move || {
+                        let mut client = Client::connect(&addr).unwrap();
+                        let mut out = Vec::new();
+                        let mut i = c;
+                        while i < inputs.len() {
+                            out.push((i, client.classify(&inputs[i]).unwrap()));
+                            i += n_clients;
+                        }
+                        out
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for stripe in got {
+            for (i, class) in stripe {
+                assert_eq!(class, expected[i], "engine {} input {i}", engine.name());
+            }
+        }
+
+        // The metrics frame reflects the whole run, across connections.
+        let mut probe = Client::connect(&addr).unwrap();
+        let snap = probe.metrics().unwrap();
+        assert_eq!(snap.decisions, inputs.len() as u64, "{}", engine.name());
+        assert_eq!(snap.requests, inputs.len() as u64);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.n_banks, 3);
+        assert!(snap.energy_per_dec > 0.0);
+        assert!(snap.modeled_latency > 0.0);
+        assert!(
+            snap.latency_p50 > 0.0 && snap.latency_p50 <= snap.latency_p99,
+            "percentiles must be ordered: {snap:?}"
+        );
+        assert!(snap.connections >= n_clients as u64);
+
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.metrics.decisions, inputs.len() as u64);
+        assert_eq!(report.shed, 0);
+    }
+}
+
+#[test]
+fn malformed_truncated_and_oversize_frames_get_typed_errors_and_the_connection_survives() {
+    let (server, inputs, expected) =
+        spawn_forest_server(EngineKind::Native, 4, ServerConfig::default());
+    let addr = server.local_addr().to_string();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+
+    let roundtrip_ok = |stream: &mut TcpStream| {
+        write_frame(
+            stream,
+            &Frame::Request {
+                id: 7,
+                features: inputs[0].clone(),
+            },
+        )
+        .unwrap();
+        match read_frame(stream).unwrap() {
+            Frame::Response { id, class, .. } => {
+                assert_eq!(id, 7);
+                assert_eq!(class, expected[0]);
+            }
+            other => panic!("expected a response, got {other:?}"),
+        }
+    };
+
+    // 1. Unknown frame type: typed error, connection survives.
+    let mut bytes = encode_frame(&Frame::Shutdown);
+    bytes[5] = 0xEE;
+    stream.write_all(&bytes).unwrap();
+    match read_frame(&mut stream).unwrap() {
+        Frame::Error { message, .. } => {
+            assert!(message.contains("0xee"), "{message}")
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    roundtrip_ok(&mut stream);
+
+    // 2. Wrong protocol version: typed error naming both versions.
+    let mut bytes = encode_frame(&Frame::MetricsRequest);
+    bytes[4] = 9;
+    stream.write_all(&bytes).unwrap();
+    match read_frame(&mut stream).unwrap() {
+        Frame::Error { message, .. } => {
+            assert!(message.contains('9') && message.contains('1'), "{message}")
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    roundtrip_ok(&mut stream);
+
+    // 3. Garbage JSON payload behind a valid header.
+    let body = b"\x01\x01{definitely not json";
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    bytes.extend_from_slice(body);
+    stream.write_all(&bytes).unwrap();
+    assert!(matches!(read_frame(&mut stream).unwrap(), Frame::Error { .. }));
+    roundtrip_ok(&mut stream);
+
+    // 4. A request with too few features: typed error carrying the id.
+    write_frame(
+        &mut stream,
+        &Frame::Request {
+            id: 42,
+            features: vec![0.5],
+        },
+    )
+    .unwrap();
+    match read_frame(&mut stream).unwrap() {
+        Frame::Error { id, message } => {
+            assert_eq!(id, Some(42));
+            assert!(message.contains("features"), "{message}");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    roundtrip_ok(&mut stream);
+
+    // 5. Oversize frame: the server skips the declared payload, answers
+    // a typed error, and the connection still works.
+    let len = MAX_FRAME_LEN + 64;
+    let mut bytes = Vec::with_capacity(4 + len);
+    bytes.extend_from_slice(&(len as u32).to_be_bytes());
+    bytes.resize(4 + len, 0);
+    stream.write_all(&bytes).unwrap();
+    match read_frame(&mut stream).unwrap() {
+        Frame::Error { message, .. } => {
+            assert!(message.contains("exceeds"), "{message}")
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    roundtrip_ok(&mut stream);
+
+    // 6. Truncated frame: this connection is unrecoverable (the server
+    // drops it)... but the *server* survives and keeps serving others.
+    let mut doomed = TcpStream::connect(&addr).unwrap();
+    doomed.write_all(&100u32.to_be_bytes()).unwrap();
+    doomed.write_all(&[1, 1, b'{']).unwrap();
+    drop(doomed); // EOF mid-frame on the server side
+    std::thread::sleep(Duration::from_millis(50));
+    roundtrip_ok(&mut stream);
+
+    // The error counter saw the recoverable rejections.
+    let mut probe = Client::connect(&addr).unwrap();
+    let snap = probe.metrics().unwrap();
+    assert!(snap.protocol_errors >= 4, "{snap:?}");
+
+    let report = server.shutdown().unwrap();
+    assert!(report.protocol_errors >= 4);
+}
+
+#[test]
+fn admission_overflow_sheds_and_graceful_shutdown_drains_in_flight() {
+    // Admission bound 2, batch width 64, and an hour-long batch
+    // deadline: admitted requests sit in the batcher (nothing releases
+    // them), so the 3rd..5th requests must shed deterministically, and
+    // only the shutdown drain answers the first two.
+    let (server, inputs, expected) = spawn_forest_server(
+        EngineKind::Native,
+        64,
+        ServerConfig {
+            admission: 2,
+            batch_max_wait: Some(Duration::from_secs(3600)),
+        },
+    );
+    let addr = server.local_addr().to_string();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    for id in 0..5u64 {
+        write_frame(
+            &mut stream,
+            &Frame::Request {
+                id,
+                features: inputs[id as usize % inputs.len()].clone(),
+            },
+        )
+        .unwrap();
+    }
+    // Exactly the overflow (ids 2, 3, 4) comes back shed, in order —
+    // the admitted pair is *held*, not answered and not buffered past
+    // the bound.
+    for want in 2..5u64 {
+        match read_frame(&mut stream).unwrap() {
+            Frame::Shed { id } => assert_eq!(id, want),
+            other => panic!("expected shed for {want}, got {other:?}"),
+        }
+    }
+    assert_eq!(server.shed_count(), 3);
+
+    // Graceful shutdown: the drain answers the two in-flight requests
+    // before the connection closes.
+    write_frame(&mut stream, &Frame::Shutdown).unwrap();
+    for want in 0..2u64 {
+        match read_frame(&mut stream).unwrap() {
+            Frame::Response { id, class, .. } => {
+                assert_eq!(id, want);
+                assert_eq!(class, expected[want as usize]);
+            }
+            other => panic!("expected drained response for {want}, got {other:?}"),
+        }
+    }
+    // ...and then EOF.
+    assert!(read_frame(&mut stream).unwrap_err().is_fatal());
+
+    let report = server.join().unwrap();
+    assert_eq!(report.shed, 3);
+    assert_eq!(report.metrics.decisions, 2);
+    assert_eq!(report.metrics.requests, 2, "shed requests are never admitted");
+}
+
+#[test]
+fn client_reconnects_transparently_and_loadgens_report_latency() {
+    let (server, inputs, expected) =
+        spawn_forest_server(EngineKind::ThreadedNative, 8, ServerConfig::default());
+    let addr = server.local_addr().to_string();
+
+    // Transparent reconnect: kill the client's socket in place; the
+    // next classify must redial and still answer correctly.
+    let mut client = Client::connect(&addr).unwrap();
+    assert_eq!(client.classify(&inputs[0]).unwrap(), expected[0]);
+    client.sever_for_test();
+    assert_eq!(
+        client.classify(&inputs[1]).unwrap(),
+        expected[1],
+        "classify must survive a dropped connection via reconnect"
+    );
+
+    // Closed-loop load: every request answered, percentiles ordered.
+    let report = dt2cam::net::closed_loop(&addr, &inputs, 3, 60).unwrap();
+    assert_eq!(report.completed, 60);
+    assert_eq!(report.errors, 0);
+    assert!(report.p50 > 0.0 && report.p50 <= report.p95 && report.p95 <= report.p99);
+    assert!(report.throughput() > 0.0);
+
+    // Open-loop at a modest target rate: all answered too (the rate is
+    // far below capacity, so sheds would indicate a bug here with the
+    // default admission bound).
+    let report = dt2cam::net::open_loop(&addr, &inputs, 2, 500.0, 50).unwrap();
+    assert_eq!(report.completed + report.shed, 50);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.shed, 0);
+
+    let typed_shed = ClientError::Shed { id: 9 };
+    assert!(typed_shed.to_string().contains("admission"));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn wire_shutdown_via_client_stops_the_server_and_join_returns_rollups() {
+    let (server, inputs, _) =
+        spawn_forest_server(EngineKind::Native, 8, ServerConfig::default());
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    for x in inputs.iter().take(5) {
+        client.classify(x).unwrap();
+    }
+    // Shutdown over the wire (the CI smoke path), not via the handle.
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    let report = server.join().unwrap();
+    assert_eq!(report.metrics.decisions, 5);
+}
