@@ -10,7 +10,9 @@
 
 use std::sync::Arc;
 
-use dt2cam::api::{Dt2Cam, MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend};
+use dt2cam::api::{
+    BackendOptions, Dt2Cam, MatchBackend, NativeBackend, PjrtBackend, ThreadedNativeBackend,
+};
 use dt2cam::config::EngineKind;
 use dt2cam::coordinator::pipeline::run_pipeline;
 use dt2cam::coordinator::{BatchScratch, InferenceRequest, Scheduler, ServingPlan};
@@ -336,6 +338,45 @@ fn main() {
         "dec/s",
     );
 
+    // ISSUE 5 acceptance rows: the streaming pipelined coordinator vs
+    // the batch-sequential walk on the same covid @S=128 program at
+    // batch 32 — in-process first, then behind the wire. Sanity before
+    // timing: the two strategies must classify identically.
+    let pipe_tput = {
+        let inputs: Vec<Vec<f64>> = model.test_x[..n].to_vec();
+        let mut seq_sess = mapped.session(EngineKind::Native, 32).unwrap();
+        let mut pipe_sess = mapped
+            .session_pipelined(EngineKind::Native, 32, &BackendOptions::default(), 4)
+            .unwrap();
+        assert_eq!(
+            seq_sess.classify_all(&inputs).unwrap(),
+            pipe_sess.classify_all(&inputs).unwrap(),
+            "pipelined/sequential divergence"
+        );
+        let t_seq = b
+            .case("serve_e2e_batch32_sequential", || {
+                std::hint::black_box(seq_sess.classify_all(&inputs).unwrap());
+            })
+            .ns_per_iter
+            .mean;
+        let t_pipe = b
+            .case("serve_e2e_batch32_pipelined", || {
+                std::hint::black_box(pipe_sess.classify_all(&inputs).unwrap());
+            })
+            .ns_per_iter
+            .mean;
+        b.report_value(
+            "pipelined_vs_sequential_speedup",
+            t_seq / t_pipe,
+            "x (streaming stage pipeline over batch-at-a-time walk)",
+        );
+        pipe_sess.metrics().modeled_pipe_throughput
+    };
+    // The paper's modeled pipelined figure (Table VI: f_max/3) next to
+    // every wall number above, so the trajectory toward 333 M dec/s is
+    // tracked in the same JSON artifact.
+    b.report_value("modeled_pipe_throughput", pipe_tput, "dec/s");
+
     // ISSUE 4 acceptance row: the same covid program behind the wire —
     // in-process classify_all vs loopback socket throughput at batch 32
     // — so protocol + framing + routing overhead is tracked from day
@@ -366,6 +407,31 @@ fn main() {
             inproc_tput / report.throughput().max(1e-9),
             "x (in-process classify_all over loopback wire, batch 32)",
         );
+        server.shutdown().unwrap();
+    }
+
+    // ISSUE 5 wire row: the same covid @S=128 program served
+    // `--listen --pipelined` (streaming stage pipeline behind the
+    // socket scheduler), 32 closed-loop clients at batch 32 — the wall
+    // number CI tracks toward the paper's pipelined throughput.
+    {
+        use dt2cam::net::{self, Server, ServerConfig};
+        let program_for_server = program.clone();
+        let params = p.clone();
+        let server = Server::spawn("127.0.0.1:0", ServerConfig::default(), move || {
+            Ok(program_for_server
+                .map(s, &params)
+                .session_pipelined(EngineKind::Native, 32, &BackendOptions::default(), 4)?
+                .into_coordinator())
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let inputs: Vec<Vec<f64>> = model.test_x[..n].to_vec();
+        let _ = net::closed_loop(&addr, &inputs, 4, 32).unwrap(); // warm
+        let report = net::closed_loop(&addr, &inputs, 32, n).unwrap();
+        assert_eq!(report.completed, n as u64, "pipelined loopback must answer everything");
+        b.report_value("wire_pipelined_wall_throughput", report.throughput(), "dec/s");
+        b.report_value("wire_pipelined_p99_latency_us", report.p99 * 1e6, "us");
         server.shutdown().unwrap();
     }
     b.finish();

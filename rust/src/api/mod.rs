@@ -43,6 +43,17 @@
 //! Hardware cost semantics follow `cart::forest`: modeled energy sums
 //! over banks, modeled latency is the slowest bank plus the vote stage.
 //!
+//! Stage 4 comes in two execution strategies:
+//! [`MappedProgram::session`] walks each batch to completion
+//! (batch-sequential), while [`MappedProgram::session_pipelined`] runs
+//! the paper's Table VI "P" mode — a streaming stage pipeline per bank
+//! (one thread per column division, bounded channels), banks streaming
+//! concurrently, several batches in flight at once — behind the *same*
+//! `submit`/`poll`/`classify_all` seam, bit-identical in classes,
+//! energy and row activity. `serve --pipelined` (with or without
+//! `--listen`/`--forest`) runs on it; only `Send + Sync` engines
+//! qualify ([`registry::pipeline_capable`]).
+//!
 //! ```no_run
 //! use dt2cam::api::Dt2Cam;
 //! use dt2cam::cart::ForestParams;

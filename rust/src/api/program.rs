@@ -475,10 +475,9 @@ impl MappedProgram {
         self.session_with_dispatch(BankDispatch::Sequential(backend), batch)
     }
 
-    /// Open a session with an explicit bank-dispatch mode.
-    pub fn session_with_dispatch(&self, dispatch: BankDispatch, batch: usize) -> Result<Session> {
-        let specs: Vec<BankSpec<'_>> = self
-            .program
+    /// One [`BankSpec`] per bank, borrowing this program's grids.
+    fn bank_specs(&self) -> Vec<BankSpec<'_>> {
+        self.program
             .banks
             .iter()
             .zip(&self.banks)
@@ -488,8 +487,40 @@ impl MappedProgram {
                 mapped: &mb.mapped,
                 vref: &mb.mapped.vref,
             })
-            .collect();
-        let coord = Coordinator::with_banks(dispatch, batch, specs, self.params.clone())?;
+            .collect()
+    }
+
+    /// Open a session with an explicit bank-dispatch mode.
+    pub fn session_with_dispatch(&self, dispatch: BankDispatch, batch: usize) -> Result<Session> {
+        let coord =
+            Coordinator::with_banks(dispatch, batch, self.bank_specs(), self.params.clone())?;
+        Ok(Session { coord })
+    }
+
+    /// Stage 4, pipelined: open a **streaming pipelined** session — the
+    /// paper's Table VI "P" execution mode. Every bank runs a live
+    /// stage pipeline (one thread per column division, bounded channels
+    /// of `depth` batches), banks stream concurrently, and several
+    /// batches are in flight across divisions at once; classes, energy
+    /// and row activity are bit-identical to the sequential session.
+    /// Only `Send + Sync` engines qualify (`native`,
+    /// `threaded-native`); `pjrt` errors through
+    /// [`registry::create_pipeline_backend`].
+    pub fn session_pipelined(
+        &self,
+        engine: EngineKind,
+        batch: usize,
+        opts: &BackendOptions,
+        depth: usize,
+    ) -> Result<Session> {
+        let backend = registry::create_pipeline_backend(engine, opts)?;
+        let coord = Coordinator::with_banks_pipelined(
+            backend,
+            batch,
+            self.bank_specs(),
+            self.params.clone(),
+            depth,
+        )?;
         Ok(Session { coord })
     }
 
@@ -582,6 +613,13 @@ impl MappedProgram {
             );
         }
         let s = get_usize(j, "tile_size")?;
+        // A corrupted tile size must fail typed here: the grid rebuild
+        // below divides and allocates by S (0 would panic, an absurd
+        // value would try to allocate the moon).
+        anyhow::ensure!(
+            (1..=8192).contains(&s),
+            "tile size {s} out of range (1..=8192) — corrupted artifact?"
+        );
         let params = params_from_json(get(j, "params")?)?;
         let program = CompiledProgram::from_json(get(j, "program")?)?;
 
@@ -721,6 +759,12 @@ impl Session {
         self.coord.bank_parallel()
     }
 
+    /// Whether this session executes through the streaming stage
+    /// pipeline ([`MappedProgram::session_pipelined`]).
+    pub fn pipelined(&self) -> bool {
+        self.coord.pipelined()
+    }
+
     /// Registry name of the backend driving this session.
     pub fn backend_name(&self) -> &'static str {
         self.coord.backend_name()
@@ -796,6 +840,51 @@ mod tests {
         }
         // Forest latency: slowest bank + vote stage.
         assert!(session.modeled_latency() > session.plan().timing.latency);
+    }
+
+    #[test]
+    fn pipelined_session_matches_sequential_and_rejects_pjrt() {
+        let fp = ForestParams {
+            n_trees: 3,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..Default::default()
+        };
+        let model = Dt2Cam::forest("haberman", &fp).unwrap();
+        let mp = model.compile().map(16, &DeviceParams::default());
+        let opts = BackendOptions::default();
+        let mut seq = mp.session(EngineKind::Native, 8).unwrap();
+        let mut piped = mp
+            .session_pipelined(EngineKind::Native, 8, &opts, 2)
+            .unwrap();
+        assert!(piped.pipelined());
+        assert!(!seq.pipelined());
+        assert_eq!(piped.n_banks(), 3);
+        let a = seq.classify_all(&model.test_x).unwrap();
+        let b = piped.classify_all(&model.test_x).unwrap();
+        assert_eq!(a, b);
+        assert!(piped.metrics().modeled_pipe_throughput > 0.0);
+        // The !Send pjrt client cannot drive stage threads: typed error
+        // at the seam, regardless of whether artifacts exist.
+        let err = mp
+            .session_pipelined(EngineKind::Pjrt, 8, &opts, 2)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("pipeline"));
+    }
+
+    #[test]
+    fn mapped_artifact_rejects_corrupt_tile_size() {
+        let program = Dt2Cam::dataset("iris").unwrap().compile();
+        let mp = program.map(16, &DeviceParams::default());
+        for bad in ["0", "9999"] {
+            let text = mp
+                .to_json()
+                .to_string_pretty()
+                .replace("\"tile_size\": 16", &format!("\"tile_size\": {bad}"));
+            let err = MappedProgram::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("tile size"), "tile_size={bad}: {msg}");
+        }
     }
 
     #[test]

@@ -100,6 +100,15 @@ pub fn create_bank_dispatch(kind: EngineKind, opts: &BackendOptions) -> Result<B
     }
 }
 
+/// Whether `kind` can drive the streaming stage pipeline: the pipeline
+/// runs every stage on its own thread, so only backends whose instances
+/// are `Send + Sync` qualify. Test harnesses use this to skip
+/// pipeline-incapable engines cleanly; the authoritative error text
+/// comes from [`create_pipeline_backend`].
+pub fn pipeline_capable(kind: EngineKind) -> bool {
+    !matches!(kind, EngineKind::Pjrt)
+}
+
 /// Build a shareable backend for the stage pipeline (one worker thread
 /// per column division). Only `Send + Sync` backends qualify — the PJRT
 /// client is `Rc`-backed and single-threaded by construction.
@@ -173,6 +182,20 @@ mod tests {
         let err =
             create_pipeline_backend(EngineKind::Pjrt, &BackendOptions::default()).unwrap_err();
         assert!(format!("{err:#}").contains("pipeline"));
+    }
+
+    #[test]
+    fn pipeline_capability_matches_constructor_behavior() {
+        let opts = BackendOptions::default();
+        for kind in EngineKind::ALL {
+            let constructible = create_pipeline_backend(kind, &opts).is_ok();
+            assert_eq!(
+                pipeline_capable(kind),
+                constructible,
+                "capability flag and constructor disagree for {}",
+                kind.name()
+            );
+        }
     }
 
     #[test]

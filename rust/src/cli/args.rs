@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 24] = [
+const VALUE_KEYS: [&str; 26] = [
     "dataset",
     "tile-size",
     "seed",
@@ -40,6 +40,8 @@ const VALUE_KEYS: [&str; 24] = [
     "admission",
     "clients",
     "rps",
+    "pipe-depth",
+    "tag",
 ];
 
 impl Args {

@@ -324,6 +324,15 @@ pub fn simulate_cmd(args: &mut Args) -> Result<()> {
 /// batches coalesce across connections, admission is bounded
 /// (`--admission N`, overflow answered with a shed frame), and the
 /// server runs until a client sends a shutdown frame.
+///
+/// `--pipelined` swaps the execution strategy for the paper's Table VI
+/// "P" mode — a streaming stage pipeline per CAM bank (a thread per
+/// column division, bounded channels of `--pipe-depth` batches) with
+/// several batches in flight at once. It composes with everything:
+/// `--forest` (every bank pipelines concurrently), `--program`, and
+/// `--listen` (the socket scheduler feeds the pipeline heads and
+/// routes outcomes back by request id). Only `Send + Sync` engines
+/// qualify; `pjrt` errors at the seam.
 pub fn serve(args: &mut Args) -> Result<()> {
     let tile_size_arg = args.opt_usize("tile-size")?;
     let batch = args.opt_usize("batch")?.unwrap_or(32);
@@ -331,6 +340,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let opts = backend_opts(args);
     let requests = args.opt_usize("requests")?.unwrap_or(0);
     let pipelined = args.flag("pipelined");
+    let pipe_depth_arg = args.opt_usize("pipe-depth")?;
     let forest = forest_params_arg(args)?;
     let program_path = args.opt_str("program");
     let listen = args.opt_str("listen");
@@ -352,6 +362,17 @@ pub fn serve(args: &mut Args) -> Result<()> {
             "--admission requires --listen (it bounds the socket server's in-flight queue)"
         );
     }
+    if let Some(d) = pipe_depth_arg {
+        anyhow::ensure!(
+            d >= 1,
+            "--pipe-depth must be >= 1 (got 0): a stage channel needs room for a batch"
+        );
+        anyhow::ensure!(
+            pipelined,
+            "--pipe-depth requires --pipelined (it sizes the stage-pipeline channels)"
+        );
+    }
+    let pipe_depth = pipe_depth_arg.unwrap_or(2);
 
     // Stage artifacts: load from disk (two-process flow) or build fresh.
     let (mapped, test_x, test_y, golden, name) = if let Some(path) = program_path {
@@ -404,11 +425,6 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // split.
     if let Some(addr) = listen {
         anyhow::ensure!(
-            !pipelined,
-            "--pipelined conflicts with --listen (the socket server drives the \
-             batching coordinator)"
-        );
-        anyhow::ensure!(
             requests == 0,
             "--requests conflicts with --listen (request volume comes from clients; \
              see `dt2cam loadgen`)"
@@ -421,14 +437,22 @@ pub fn serve(args: &mut Args) -> Result<()> {
                 admission,
                 ..Default::default()
             },
-            move || Ok(mapped.session_with(engine, batch, &opts)?.into_coordinator()),
+            move || {
+                let session = if pipelined {
+                    mapped.session_pipelined(engine, batch, &opts, pipe_depth)?
+                } else {
+                    mapped.session_with(engine, batch, &opts)?
+                };
+                Ok(session.into_coordinator())
+            },
         )?;
         eprintln!(
             "dt2cam serving {name} @S={s} on {} (engine {}, batch {batch}, \
-             admission {admission}, {n_banks} bank{})",
+             admission {admission}, {n_banks} bank{}{})",
             server.local_addr(),
             engine.name(),
-            if n_banks == 1 { "" } else { "s" }
+            if n_banks == 1 { "" } else { "s" },
+            if pipelined { ", pipelined" } else { "" }
         );
         eprintln!(
             "stop with: dt2cam loadgen --connect {} --dataset {name} --quick --shutdown",
@@ -455,45 +479,11 @@ pub fn serve(args: &mut Args) -> Result<()> {
         .count() as f64
         / test_y.len().max(1) as f64;
 
-    if pipelined {
-        use crate::coordinator::pipeline::run_pipeline;
-        use std::sync::Arc;
-        anyhow::ensure!(
-            mapped.n_banks() == 1,
-            "--pipelined serves single-bank programs (the division pipeline is \
-             per-array); forest programs already run bank-parallel — drop --pipelined"
-        );
-        let backend = registry::create_pipeline_backend(engine, &opts)?;
-        let plan = Arc::new(mapped.plan());
-        let lut = mapped.program.lut();
-        let m = mapped.primary();
-        let batches: Vec<(Vec<Vec<bool>>, usize)> = test_x[..n]
-            .chunks(batch)
-            .map(|chunk| {
-                let qs: Vec<Vec<bool>> = chunk
-                    .iter()
-                    .map(|x| m.pad_query(&lut.encode_input(x)))
-                    .collect();
-                let real = qs.len();
-                (qs, real)
-            })
-            .collect();
-        let t0 = std::time::Instant::now();
-        let out = run_pipeline(Arc::clone(&plan), backend, batches, 2)?;
-        let wall = t0.elapsed().as_secs_f64();
-        let correct: usize = out
-            .iter()
-            .flat_map(|o| o.classes.iter())
-            .zip(&test_y[..n])
-            .filter(|(c, y)| **c == Some(**y))
-            .count();
-        println!("pipelined serve: {n} requests in {wall:.3}s ({:.0} dec/s wall)", n as f64 / wall);
-        println!("accuracy {:.4} | modeled pipelined throughput {}",
-            correct as f64 / n as f64, eng(plan.timing.throughput_pipe, "dec/s"));
-        return Ok(());
-    }
-
-    let mut session = mapped.session_with(engine, batch, &opts)?;
+    let mut session = if pipelined {
+        mapped.session_pipelined(engine, batch, &opts, pipe_depth)?
+    } else {
+        mapped.session_with(engine, batch, &opts)?
+    };
     let t0 = std::time::Instant::now();
     let mut responses = Vec::with_capacity(n);
     for (i, x) in test_x[..n].iter().enumerate() {
@@ -511,11 +501,16 @@ pub fn serve(args: &mut Args) -> Result<()> {
         .filter(|(r, y)| r.class == Some(**y))
         .count();
     println!(
-        "engine={} dataset={name} S={s} batch={batch} banks={}{}",
+        "engine={} dataset={name} S={s} batch={batch} banks={}{}{}",
         session.backend_name(),
         session.n_banks(),
         if session.bank_parallel() {
             " (bank-parallel)"
+        } else {
+            ""
+        },
+        if session.pipelined() {
+            " (stage-pipelined)"
         } else {
             ""
         }
@@ -532,6 +527,14 @@ pub fn serve(args: &mut Args) -> Result<()> {
         .map(|p| p.timing.throughput_seq)
         .fold(f64::INFINITY, f64::min);
     println!("modeled seq t-put : {}", eng(seq_tput, "dec/s"));
+    if session.pipelined() {
+        // The paper's headline number (f_max / II) next to what this
+        // software incarnation actually sustained.
+        println!(
+            "modeled pipe t-put: {}",
+            eng(session.metrics().modeled_pipe_throughput, "dec/s")
+        );
+    }
     println!("wall-clock t-put  : {:.0} dec/s", session.metrics().wall_throughput());
     println!("{}", session.metrics().summary_line());
     Ok(())
@@ -543,15 +546,18 @@ pub fn serve(args: &mut Args) -> Result<()> {
 /// loops); `--rps R` switches to open-loop pacing at an aggregate
 /// target rate. Inputs are the dataset's standard test split, rebuilt
 /// client-side without training (`api::test_inputs`). `--shutdown`
-/// sends a shutdown frame afterwards. Emits `net_loopback` benchkit
-/// rows (`BENCH_net_loopback.json` when `DT2CAM_BENCH_JSON_DIR` is
-/// set) so CI archives wire throughput and tail latency per run.
+/// sends a shutdown frame afterwards. Emits benchkit rows titled by
+/// `--tag` (default `net_loopback`; `BENCH_<tag>.json` when
+/// `DT2CAM_BENCH_JSON_DIR` is set) so CI archives wire throughput and
+/// tail latency per run — distinct tags keep e.g. the pipelined smoke
+/// (`net_pipelined`) separate from the sequential one.
 pub fn loadgen(args: &mut Args) -> Result<()> {
     let connect = args
         .opt_str("connect")
         .context("--connect ADDR is required (the `dt2cam serve --listen` address)")?;
     let name = dataset_arg(args)?;
     let seed = args.opt_u64("seed")?.unwrap_or(crate::api::EXPERIMENT_SEED);
+    let tag = args.opt_str("tag").unwrap_or_else(|| "net_loopback".into());
     let quick = args.flag("quick");
     let clients = args.opt_usize("clients")?.unwrap_or(if quick { 2 } else { 4 });
     let rps = args.opt_f64("rps")?.unwrap_or(0.0);
@@ -582,7 +588,7 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
     };
     println!("{}", report.summary_line());
 
-    let mut b = Bench::new("net_loopback");
+    let mut b = Bench::new(&tag);
     b.report_value("wall_throughput", report.throughput(), "dec/s");
     b.report_value("latency_p50_us", report.p50 * 1e6, "us");
     b.report_value("latency_p99_us", report.p99 * 1e6, "us");
@@ -766,6 +772,50 @@ mod tests {
     }
 
     #[test]
+    fn serve_pipelined_command_runs() {
+        serve(&mut args(
+            "serve --dataset iris --tile-size 16 --engine native --batch 8 --pipelined",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_pipelined_composes_with_forest() {
+        // The old `--pipelined serves single-bank programs` conflict is
+        // gone: a forest program pipelines every bank concurrently.
+        serve(&mut args(
+            "serve --dataset haberman --tile-size 16 --forest 3 --max-features 2 \
+             --engine threaded-native --batch 8 --pipelined --pipe-depth 2",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_validates_pipe_depth_flag() {
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --pipelined --pipe-depth 0",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--pipe-depth"));
+        // --pipe-depth without --pipelined is a contradiction.
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --pipe-depth 2",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--pipelined"));
+    }
+
+    #[test]
+    fn serve_pipelined_rejects_pjrt_with_typed_error() {
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --engine pjrt --pipelined",
+        ))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pipeline"), "{msg}");
+    }
+
+    #[test]
     fn serve_program_rejects_forest_flag() {
         let path = tmpfile("forest_conflict.json");
         let _ = std::fs::remove_file(&path);
@@ -866,7 +916,8 @@ mod tests {
         .unwrap();
         let addr = server.local_addr().to_string();
         loadgen(&mut args(&format!(
-            "loadgen --connect {addr} --dataset iris --quick --clients 2 --requests 16 --shutdown"
+            "loadgen --connect {addr} --dataset iris --quick --clients 2 --requests 16 \
+             --tag net_cli_smoke --shutdown"
         )))
         .unwrap();
         let report = server.join().unwrap();

@@ -7,11 +7,12 @@
 //!                 [--sigma-sa 0.05] [--sigma-input 0.01] [--no-sp]
 //!                 [--max-inputs N]
 //! dt2cam serve    --dataset covid --tile-size 128 --engine ENGINE
-//!                 [--forest N] [--batch 32] [--requests N] [--pipelined]
+//!                 [--forest N] [--batch 32] [--requests N]
+//!                 [--pipelined [--pipe-depth D]]
 //! dt2cam serve    --program prog.json --engine ENGINE   (two-process flow)
-//! dt2cam serve    --listen 127.0.0.1:7230 [--admission N] ...  (socket server)
+//! dt2cam serve    --listen 127.0.0.1:7230 [--admission N] [--pipelined] ...
 //! dt2cam loadgen  --connect 127.0.0.1:7230 --dataset NAME [--clients N]
-//!                 [--rps R] [--requests N] [--quick] [--shutdown]
+//!                 [--rps R] [--requests N] [--tag NAME] [--quick] [--shutdown]
 //! dt2cam backends
 //! dt2cam report   --all | --table 2|4|5|6 | --fig 6|7|8|9  [--quick]
 //!                 [--out-dir reports]
@@ -60,12 +61,12 @@ USAGE:
   dt2cam simulate --dataset NAME --tile-size S [--forest N] [--saf PCT]
                   [--sigma-sa V] [--sigma-input SIG] [--no-sp] [--max-inputs N]
   dt2cam serve    --dataset NAME --tile-size S [--engine ENGINE] [--forest N]
-                  [--batch B] [--requests N] [--pipelined]
+                  [--batch B] [--requests N] [--pipelined [--pipe-depth D]]
   dt2cam serve    --program PROGRAM.json [--engine ENGINE] [--batch B]
   dt2cam serve    --listen ADDR [--admission N] (--dataset NAME | --program P.json)
-                  [--engine ENGINE] [--batch B] [--forest N]
+                  [--engine ENGINE] [--batch B] [--forest N] [--pipelined]
   dt2cam loadgen  --connect ADDR --dataset NAME [--clients N] [--rps R]
-                  [--requests N] [--seed SEED] [--quick] [--shutdown]
+                  [--requests N] [--seed SEED] [--tag NAME] [--quick] [--shutdown]
   dt2cam backends
   dt2cam report   [--all] [--table N]... [--fig N]... [--quick] [--out-dir DIR]
   dt2cam help
@@ -76,6 +77,10 @@ parallel and combined by deterministic majority vote (single-tree
 programs are the 1-bank case).
 `compile --save` + `serve --program` run the pipeline as two processes
 over a mapped-program JSON artifact (compile once, serve many).
+`--pipelined` runs the paper's Table VI \"P\" execution mode: a streaming
+stage pipeline per bank (one thread per column division, bounded
+channels of `--pipe-depth` batches), several batches in flight at once;
+composes with `--forest`, `--program`, and `--listen`.
 `serve --listen` binds the framed wire protocol on a TCP socket: the
 batcher coalesces requests across connections, admission is bounded
 (overflow answered with a shed frame), and a shutdown frame drains

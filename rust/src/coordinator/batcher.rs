@@ -83,6 +83,21 @@ impl Batcher {
         Some(self.queue.drain(..n).collect())
     }
 
+    /// Drain every batch due at `now` (full batches and overdue
+    /// partials); with `force` also flush the remainder. The one call
+    /// site both coordinator execution modes (sequential and pipelined)
+    /// share, so their release policy cannot drift.
+    pub fn take_due(&mut self, now: Instant, force: bool) -> Vec<Vec<InferenceRequest>> {
+        let mut out = Vec::new();
+        while let Some(b) = self.next_batch(now) {
+            out.push(b);
+        }
+        if force {
+            out.extend(self.flush());
+        }
+        out
+    }
+
     /// Drain everything into batches (end-of-stream flush).
     pub fn flush(&mut self) -> Vec<Vec<InferenceRequest>> {
         let mut out = Vec::new();
@@ -168,6 +183,24 @@ mod tests {
         assert_eq!(b.max_wait(), Duration::ZERO);
         // The queued request is judged against the new deadline.
         assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn take_due_releases_full_batches_and_flushes_on_force() {
+        let mut b = Batcher::new(3, Duration::from_secs(3600));
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        // Two full batches release; the partial is held (deadline far).
+        let due = b.take_due(Instant::now(), false);
+        assert_eq!(due.iter().map(Vec::len).collect::<Vec<_>>(), vec![3, 3]);
+        assert_eq!(b.pending(), 1);
+        // Force drains the remainder.
+        let forced = b.take_due(Instant::now(), true);
+        assert_eq!(forced.len(), 1);
+        assert_eq!(forced[0].len(), 1);
+        assert_eq!(forced[0][0].id, 6);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

@@ -44,6 +44,16 @@ pub struct Metrics {
     pub queue_delay: OnlineStats,
     /// Total serving wall time (s).
     pub wall_total: f64,
+    /// Modeled pipelined throughput of the served program (dec/s,
+    /// Table VI "P" rows: `f_max / pipeline_ii_cycles`, the slowest
+    /// bank's figure for forests). Set by the pipelined coordinator at
+    /// construction; 0 for batch-sequential serving, where the figure
+    /// would be aspirational rather than descriptive.
+    pub modeled_pipe_throughput: f64,
+    /// Batches that a pipeline stage failed (the typed
+    /// [`StageError`](super::pipeline::StageError) travels to the
+    /// caller on every affected response; this is the roll-up).
+    pub stage_errors: u64,
     /// End-to-end per-request latency samples (s): arrival → response
     /// materialization, i.e. queue delay *plus* batch service. Ring of
     /// the most recent [`LATENCY_WINDOW`] requests.
@@ -169,9 +179,22 @@ impl Metrics {
             ),
             None => String::new(),
         };
+        // The modeled pipelined figure (f_max/3) rides alongside the
+        // wall number so the gap toward the paper's Table VI rows is
+        // visible in every serving log line of the pipelined mode.
+        let pipe = if self.modeled_pipe_throughput > 0.0 {
+            format!(" modeled-pipe={:.3e} dec/s", self.modeled_pipe_throughput)
+        } else {
+            String::new()
+        };
+        let stage_errs = if self.stage_errors > 0 {
+            format!(" stage_errors={}", self.stage_errors)
+        } else {
+            String::new()
+        };
         format!(
             "requests={} decisions={} batches={} e/dec={:.3} nJ rows/dec={:.1} \
-             wall-throughput={:.0} dec/s no_match={} multi_match={}{banks}{lat}",
+             wall-throughput={:.0} dec/s{pipe} no_match={} multi_match={}{banks}{lat}{stage_errs}",
             self.requests,
             self.decisions,
             self.batches,
@@ -218,6 +241,20 @@ mod tests {
         assert_eq!(m.n_banks(), 0);
         assert!(m.latency_percentiles().is_none());
         assert!(!m.summary_line().contains("lat(p50/p95/p99)"));
+    }
+
+    #[test]
+    fn modeled_pipe_throughput_rides_alongside_wall_numbers() {
+        let mut m = Metrics::new();
+        // Batch-sequential serving never shows the pipelined figure.
+        assert!(!m.summary_line().contains("modeled-pipe"));
+        assert!(!m.summary_line().contains("stage_errors"));
+        m.modeled_pipe_throughput = 3.33e8;
+        let line = m.summary_line();
+        assert!(line.contains("modeled-pipe=3.330e8 dec/s"), "{line}");
+        assert!(line.contains("wall-throughput="), "{line}");
+        m.stage_errors = 2;
+        assert!(m.summary_line().contains("stage_errors=2"));
     }
 
     #[test]

@@ -19,9 +19,14 @@
 //! [`crate::api::registry`], and every layer here compiles only against
 //! `&dyn MatchBackend`.
 //!
-//! [`pipeline`] implements the paper's pipelined mode (Table VI "P" rows):
-//! one thread per column division connected by bounded channels, over any
-//! `Send + Sync` backend.
+//! [`pipeline`] implements the paper's pipelined mode (Table VI "P" rows)
+//! as a first-class execution strategy: a [`StreamingPipeline`] runs one
+//! thread per column division *per bank*, connected by bounded channels,
+//! over any `Send + Sync` backend — and
+//! [`Coordinator::with_banks_pipelined`] plugs it in behind the same
+//! `submit`/`poll` seam the batch-sequential coordinator serves, so the
+//! socket server and the CLI pick the strategy with a flag. Stage
+//! failures are typed ([`StageError`]) and poison only their own batch.
 
 pub mod batcher;
 pub mod metrics;
@@ -32,6 +37,7 @@ pub mod server;
 
 pub use batcher::{Batcher, InferenceRequest};
 pub use metrics::{LatencyPercentiles, Metrics};
+pub use pipeline::{run_pipeline, PipeOutcome, StageError, StreamingPipeline};
 pub use plan::ServingPlan;
 pub use scheduler::{BatchOutcome, BatchScratch, Scheduler};
 pub use server::{BankSpec, Coordinator, InferenceResponse};

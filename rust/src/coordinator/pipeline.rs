@@ -1,22 +1,42 @@
-//! Pipelined mode (paper Table VI "P" rows, Fig 4).
+//! Pipelined mode (paper Table VI "P" rows, Fig 4) — a *streaming*
+//! stage pipeline, composable with the bank model.
 //!
 //! One worker thread per column division, connected by bounded channels:
 //! batch k can be in division d+1 while batch k+1 is in division d —
 //! exactly the hardware's pipelining of column-wise tiles. The *modeled*
 //! pipelined throughput is `f_max / 3` independent of N_cwd (Table VI:
-//! 333 M dec/s at S=128); this module demonstrates the software analogue
-//! and measures its wall-clock scaling against the sequential walk.
+//! 333 M dec/s at S=128); this module implements the software analogue
+//! and the serving coordinator measures its wall-clock scaling against
+//! the sequential walk.
+//!
+//! [`StreamingPipeline`] is the live form: one stage pipeline **per CAM
+//! bank** of a program, all banks draining into a single outcome
+//! channel, so a multi-bank forest program pipelines every bank
+//! concurrently while batches stream through each bank's divisions.
+//! [`Coordinator::with_banks_pipelined`](super::Coordinator) feeds
+//! admitted batches into the heads and routes [`PipeOutcome`]s back by
+//! batch sequence number — this is what `dt2cam serve --pipelined`
+//! (with or without `--listen`/`--forest`) runs on. [`run_pipeline`] is
+//! the one-shot convenience over a single bank (benches, tests).
 //!
 //! Stage evaluation goes through the shared [`MatchBackend`] seam — the
-//! same kernels as the sequential scheduler, so pipelined and sequential
-//! outcomes are identical by construction. Because stages run on their
-//! own threads the backend must be `Send + Sync` (`native` /
-//! `threaded-native`; the PJRT client is `Rc`-backed and cannot cross
+//! same kernels as the sequential scheduler and the same survivor
+//! readout ([`read_survivors`](super::scheduler)), so pipelined and
+//! sequential outcomes are identical by construction. Because stages
+//! run on their own threads the backend must be `Send + Sync` (`native`
+//! / `threaded-native`; the PJRT client is `Rc`-backed and cannot cross
 //! threads — [`crate::api::registry::create_pipeline_backend`] enforces
 //! this at the seam).
+//!
+//! A failing stage poisons **only its own batch**: the error is typed
+//! ([`StageError`] — stage index, division id, bank) and travels with
+//! the batch to the collector, while later batches keep flowing through
+//! the same stages. Nothing in flight is ever silently dropped.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -24,8 +44,44 @@ use crate::api::backend::{DivisionMatches, DivisionRequest, MatchBackend};
 use crate::util::rowmask::RowMask;
 
 use super::plan::ServingPlan;
+use super::scheduler::read_survivors;
 
-/// A batch travelling through the pipeline.
+/// How long collectors wait for the next in-flight outcome before
+/// declaring the pipeline stalled (a stage thread can only stop
+/// producing if it panicked out from under its channel).
+pub const PIPELINE_DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Typed failure of one pipeline stage. Carries *where* the failure
+/// happened — the stage index within its bank's pipeline, the column
+/// division that stage evaluates, and the bank — so a wire client or a
+/// log line can name the failing hardware stage, not just "an error".
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageError {
+    /// Index of the failing stage thread within its bank's pipeline.
+    pub stage: usize,
+    /// Column division that stage was evaluating (== `stage` for the
+    /// division pipeline; kept separate so the identity is explicit at
+    /// every use site).
+    pub division: usize,
+    /// CAM bank whose pipeline the stage belongs to.
+    pub bank: usize,
+    /// The backend's error, rendered.
+    pub message: String,
+}
+
+impl std::fmt::Display for StageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pipeline stage {} (bank {}, division {}) failed: {}",
+            self.stage, self.bank, self.division, self.message
+        )
+    }
+}
+
+impl std::error::Error for StageError {}
+
+/// A batch travelling through one bank's pipeline.
 struct PipeBatch {
     seq: u64,
     /// Per-lane padded query bits.
@@ -38,18 +94,29 @@ struct PipeBatch {
     matches: DivisionMatches,
     /// Modeled active-row evaluations accumulated so far.
     active_rows: u64,
-    /// First stage error, if any (batch passes through untouched after).
-    error: Option<String>,
+    /// First stage failure, if any (the batch passes through untouched
+    /// afterwards and surfaces the error in its outcome).
+    error: Option<StageError>,
 }
 
-/// Result of one pipelined batch.
+/// Result of one pipelined batch for one bank. Mirrors the sequential
+/// [`BatchOutcome`](super::scheduler::BatchOutcome) fields the
+/// coordinator rolls up, plus the typed per-batch stage error.
 #[derive(Clone, Debug)]
 pub struct PipeOutcome {
+    /// CAM bank this outcome belongs to (0 for single-bank programs).
+    pub bank: usize,
+    /// Batch sequence number (as fed).
     pub seq: u64,
     pub classes: Vec<Option<usize>>,
     pub active_row_evals: u64,
+    /// Modeled energy of this bank's batch (J) — same closed form as the
+    /// sequential scheduler, so roll-ups are bit-identical.
+    pub modeled_energy: f64,
     pub no_match: usize,
     pub multi_match: usize,
+    /// Set when a stage failed this batch; `classes` is all-`None` then.
+    pub error: Option<StageError>,
 }
 
 /// Stage worker: evaluate one division for a batch through the backend,
@@ -83,129 +150,244 @@ fn run_stage(
     Ok(())
 }
 
-/// Run a stream of batches through the division pipeline. Returns
-/// outcomes in stream order.
+/// A live streaming pipeline: one stage pipeline per bank plan, every
+/// stage on its own thread, all banks draining into one outcome
+/// channel. Feed batches with [`StreamingPipeline::feed`] (blocking
+/// send = natural backpressure when the bounded stage channels fill),
+/// collect with [`StreamingPipeline::try_next`] /
+/// [`StreamingPipeline::next_timeout`]. Outcomes arrive per *(bank,
+/// seq)* pair, in each bank's feed order but interleaved across banks.
+///
+/// Dropping the pipeline closes the heads, lets every in-flight batch
+/// drain forward, and joins the stage threads.
+pub struct StreamingPipeline {
+    heads: Vec<SyncSender<PipeBatch>>,
+    out_rx: Receiver<PipeOutcome>,
+    threads: Vec<JoinHandle<()>>,
+    plans: Vec<Arc<ServingPlan>>,
+}
+
+impl StreamingPipeline {
+    /// Spawn the stage threads: `plans[b]` gets `plans[b].n_cwd` stage
+    /// workers plus one collector, chained by bounded channels of
+    /// `depth` batches (>= 1).
+    pub fn new(
+        plans: Vec<Arc<ServingPlan>>,
+        backend: Arc<dyn MatchBackend + Send + Sync>,
+        depth: usize,
+    ) -> StreamingPipeline {
+        let depth = depth.max(1);
+        // The outcome channel is unbounded on purpose: collectors never
+        // block, so the pipeline always drains forward and a blocking
+        // `feed` can only ever be waiting on stage-0 capacity — no
+        // feeder/collector deadlock is constructible.
+        let (out_tx, out_rx) = channel::<PipeOutcome>();
+        let mut heads = Vec::with_capacity(plans.len());
+        let mut threads = Vec::new();
+        for (bank, plan) in plans.iter().enumerate() {
+            let (head, mut prev_rx) = sync_channel::<PipeBatch>(depth);
+            heads.push(head);
+            for d in 0..plan.n_cwd {
+                let (tx_next, rx_next) = sync_channel::<PipeBatch>(depth);
+                let plan = Arc::clone(plan);
+                let backend = Arc::clone(&backend);
+                let rx = prev_rx;
+                let handle = std::thread::Builder::new()
+                    .name(format!("dt2cam-pipe-b{bank}-s{d}"))
+                    .spawn(move || {
+                        for mut batch in rx {
+                            // An already-poisoned batch passes through
+                            // untouched; later batches still evaluate.
+                            if batch.error.is_none() {
+                                if let Err(e) = run_stage(&plan, backend.as_ref(), d, &mut batch) {
+                                    batch.error = Some(StageError {
+                                        stage: d,
+                                        division: d,
+                                        bank,
+                                        message: format!("{e:#}"),
+                                    });
+                                }
+                            }
+                            if tx_next.send(batch).is_err() {
+                                return;
+                            }
+                        }
+                    })
+                    .expect("spawn pipeline stage thread");
+                threads.push(handle);
+                prev_rx = rx_next;
+            }
+            // Collector: survivors → classes with the *same* readout as
+            // the sequential scheduler, plus the closed-form energy.
+            let plan = Arc::clone(plan);
+            let out_tx = out_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("dt2cam-pipe-b{bank}-out"))
+                .spawn(move || {
+                    for batch in prev_rx {
+                        // A poisoned batch reads out as all-`None` with
+                        // zeroed counters: its masks were folded only
+                        // through the divisions before the failure, so
+                        // a survivor readout would produce plausible-
+                        // looking garbage classes. The typed error is
+                        // the batch's whole result.
+                        let outcome = if batch.error.is_some() {
+                            PipeOutcome {
+                                bank,
+                                seq: batch.seq,
+                                classes: vec![None; batch.queries.len()],
+                                active_row_evals: 0,
+                                modeled_energy: 0.0,
+                                no_match: 0,
+                                multi_match: 0,
+                                error: batch.error,
+                            }
+                        } else {
+                            let (classes, no_match, multi_match) =
+                                read_survivors(&plan, &batch.enabled, batch.real_lanes);
+                            let modeled_energy = batch.active_rows as f64 * plan.e_row
+                                + batch.real_lanes as f64 * plan.e_mem;
+                            PipeOutcome {
+                                bank,
+                                seq: batch.seq,
+                                classes,
+                                active_row_evals: batch.active_rows,
+                                modeled_energy,
+                                no_match,
+                                multi_match,
+                                error: batch.error,
+                            }
+                        };
+                        if out_tx.send(outcome).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn pipeline collector thread");
+            threads.push(handle);
+        }
+        // Only the per-bank collector clones keep the channel open.
+        drop(out_tx);
+        StreamingPipeline {
+            heads,
+            out_rx,
+            threads,
+            plans,
+        }
+    }
+
+    /// Number of bank pipelines.
+    pub fn n_banks(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Number of stages (column divisions) in bank `bank`'s pipeline.
+    pub fn n_stages(&self, bank: usize) -> usize {
+        self.plans[bank].n_stages()
+    }
+
+    /// Feed one batch into bank `bank`'s pipeline head. Initializes the
+    /// enable masks (rogue rows gated out). Blocks while the head
+    /// channel is full — bounded-channel backpressure, never unbounded
+    /// buffering. Malformed lane widths are a typed error here, at the
+    /// seam, not a panic inside a stage thread.
+    pub fn feed(
+        &self,
+        bank: usize,
+        seq: u64,
+        queries: Vec<Vec<bool>>,
+        real_lanes: usize,
+    ) -> Result<()> {
+        let plan = &self.plans[bank];
+        anyhow::ensure!(
+            real_lanes <= queries.len(),
+            "bank {bank}: {real_lanes} real lanes exceed {} query lanes",
+            queries.len()
+        );
+        for (lane, q) in queries.iter().enumerate() {
+            anyhow::ensure!(
+                q.len() == plan.n_cwd * plan.s,
+                "bank {bank} lane {lane}: query width {} != n_cwd * S = {}",
+                q.len(),
+                plan.n_cwd * plan.s
+            );
+        }
+        let enabled: Vec<RowMask> = (0..queries.len()).map(|_| plan.initial_mask()).collect();
+        let batch = PipeBatch {
+            seq,
+            queries,
+            real_lanes,
+            enabled,
+            matches: DivisionMatches::new(),
+            active_rows: 0,
+            error: None,
+        };
+        if self.heads[bank].send(batch).is_err() {
+            bail!("pipeline bank {bank} is no longer accepting batches (stage thread died)");
+        }
+        Ok(())
+    }
+
+    /// Collect one finished outcome without blocking.
+    pub fn try_next(&self) -> Option<PipeOutcome> {
+        self.out_rx.try_recv().ok()
+    }
+
+    /// Collect one finished outcome, waiting up to `timeout`. `Ok(None)`
+    /// means nothing finished in time; `Err` means the pipeline died
+    /// (a stage thread panicked out from under its channel).
+    pub fn next_timeout(&self, timeout: Duration) -> Result<Option<PipeOutcome>> {
+        match self.out_rx.recv_timeout(timeout) {
+            Ok(o) => Ok(Some(o)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("pipeline outcome channel closed (stage thread panicked?)")
+            }
+        }
+    }
+}
+
+impl Drop for StreamingPipeline {
+    fn drop(&mut self) {
+        // Closing the heads cascades hang-ups down every stage chain;
+        // the unbounded outcome channel guarantees forward drain, so
+        // every thread exits and the joins cannot block.
+        self.heads.clear();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One-shot convenience: run a finite stream of batches through a
+/// single bank's division pipeline and return every outcome in stream
+/// order. Per-batch stage failures come back as
+/// [`PipeOutcome::error`] — batches behind a poisoned one still
+/// complete; `Err` is reserved for the pipeline machinery itself dying.
 pub fn run_pipeline(
     plan: Arc<ServingPlan>,
     backend: Arc<dyn MatchBackend + Send + Sync>,
     batches: Vec<(Vec<Vec<bool>>, usize)>,
     channel_depth: usize,
 ) -> Result<Vec<PipeOutcome>> {
-    let n_stages = plan.n_cwd;
     let n_batches = batches.len();
-
-    // Stage 0 input channel.
-    let (tx0, rx0): (SyncSender<PipeBatch>, Receiver<PipeBatch>) =
-        sync_channel(channel_depth.max(1));
-
-    let mut handles = Vec::new();
-    let mut prev_rx = rx0;
-    for d in 0..n_stages {
-        let (tx_next, rx_next) = sync_channel::<PipeBatch>(channel_depth.max(1));
-        let plan = Arc::clone(&plan);
-        let backend = Arc::clone(&backend);
-        let rx = prev_rx;
-        handles.push(std::thread::spawn(move || {
-            for mut batch in rx {
-                if batch.error.is_none() {
-                    if let Err(e) = run_stage(&plan, backend.as_ref(), d, &mut batch) {
-                        batch.error = Some(format!("{e:#}"));
-                    }
-                }
-                if tx_next.send(batch).is_err() {
-                    return;
-                }
-            }
-        }));
-        prev_rx = rx_next;
-    }
-
-    // Feeder: initializes the enable masks (rogue rows gated out).
-    let feeder = {
-        let plan = Arc::clone(&plan);
-        std::thread::spawn(move || {
-            for (seq, (queries, real_lanes)) in batches.into_iter().enumerate() {
-                let lanes = queries.len();
-                let enabled: Vec<RowMask> =
-                    (0..lanes).map(|_| plan.initial_mask()).collect();
-                let batch = PipeBatch {
-                    seq: seq as u64,
-                    enabled,
-                    queries,
-                    real_lanes,
-                    matches: DivisionMatches::new(),
-                    active_rows: 0,
-                    error: None,
-                };
-                if tx0.send(batch).is_err() {
-                    return;
-                }
-            }
-        })
-    };
-
-    // Collector (this thread).
+    let pipe = StreamingPipeline::new(vec![plan], backend, channel_depth);
     let mut outcomes = Vec::with_capacity(n_batches);
-    let mut first_error: Option<String> = None;
-    for mut batch in prev_rx {
-        if let Some(e) = batch.error.take() {
-            first_error.get_or_insert(e);
-        }
-        let mut classes = Vec::with_capacity(batch.queries.len());
-        let mut no_match = 0;
-        let mut multi_match = 0;
-        for (lane, en) in batch.enabled.iter().enumerate() {
-            if lane >= batch.real_lanes {
-                classes.push(None);
-                continue;
-            }
-            let mut survivors = en.ones();
-            match (survivors.next(), survivors.next()) {
-                (None, _) => {
-                    no_match += 1;
-                    classes.push(None);
-                }
-                (Some(first), None) => classes.push(Some(plan.classes[first])),
-                (Some(first), Some(_)) => {
-                    multi_match += 1;
-                    classes.push(Some(plan.classes[first]));
-                }
-            }
-        }
-        outcomes.push(PipeOutcome {
-            seq: batch.seq,
-            classes,
-            active_row_evals: batch.active_rows,
-            no_match,
-            multi_match,
-        });
-        batch.enabled.clear();
-        if outcomes.len() == n_batches {
-            break;
+    for (seq, (queries, real_lanes)) in batches.into_iter().enumerate() {
+        pipe.feed(0, seq as u64, queries, real_lanes)?;
+        // Opportunistic drain keeps the resident set at ~pipeline depth.
+        while let Some(o) = pipe.try_next() {
+            outcomes.push(o);
         }
     }
-    // A panicking stage (e.g. malformed query width) drops its batch and
-    // closes the downstream channel — joins must surface that instead of
-    // returning Ok with silently truncated outcomes.
-    if feeder.join().is_err() {
-        bail!("pipeline feeder thread panicked");
-    }
-    let mut panicked = false;
-    for h in handles {
-        panicked |= h.join().is_err();
-    }
-    if panicked {
-        bail!("pipeline stage thread panicked (malformed batch input?)");
-    }
-    if let Some(e) = first_error {
-        bail!("pipeline stage failed: {e}");
-    }
-    if outcomes.len() != n_batches {
-        bail!(
-            "pipeline produced {} of {} batch outcomes",
-            outcomes.len(),
-            n_batches
-        );
+    while outcomes.len() < n_batches {
+        match pipe.next_timeout(PIPELINE_DRAIN_TIMEOUT)? {
+            Some(o) => outcomes.push(o),
+            None => bail!(
+                "pipeline produced {} of {n_batches} batch outcomes before stalling",
+                outcomes.len()
+            ),
+        }
     }
     outcomes.sort_by_key(|o| o.seq);
     Ok(outcomes)
@@ -223,29 +405,45 @@ mod tests {
     use crate::tcam::params::DeviceParams;
     use crate::util::prng::Prng;
 
-    #[test]
-    fn pipeline_agrees_with_sequential_scheduler() {
-        let mut d = catalog::by_name("haberman", 0xD72CA0).unwrap();
+    fn setup(name: &str) -> (Arc<ServingPlan>, MappedArray, crate::compiler::Lut, DeviceParams) {
+        let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
         d.normalize();
         let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
         let lut = compile(&tree);
         let p = DeviceParams::default();
         let mut rng = Prng::new(3);
         let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
-        assert!(m.n_cwd > 1, "pipeline needs several stages");
         let plan = Arc::new(ServingPlan::build(&m, &m.vref, &p));
+        (plan, m, lut, p)
+    }
 
-        let batches: Vec<(Vec<Vec<bool>>, usize)> = d.features[..48]
-            .chunks(16)
+    fn batches_for(
+        name: &str,
+        m: &MappedArray,
+        lut: &crate::compiler::Lut,
+        n: usize,
+        width: usize,
+    ) -> Vec<(Vec<Vec<bool>>, usize)> {
+        let mut d = catalog::by_name(name, 0xD72CA0).unwrap();
+        d.normalize();
+        d.features[..n]
+            .chunks(width)
             .map(|chunk| {
                 let qs: Vec<Vec<bool>> = chunk
                     .iter()
                     .map(|x| m.pad_query(&lut.encode_input(x)))
                     .collect();
-                let n = qs.len();
-                (qs, n)
+                let real = qs.len();
+                (qs, real)
             })
-            .collect();
+            .collect()
+    }
+
+    #[test]
+    fn pipeline_agrees_with_sequential_scheduler() {
+        let (plan, m, lut, p) = setup("haberman");
+        assert!(m.n_cwd > 1, "pipeline needs several stages");
+        let batches = batches_for("haberman", &m, &lut, 48, 16);
 
         for backend in [
             Arc::new(NativeBackend::new()) as Arc<dyn MatchBackend + Send + Sync>,
@@ -257,23 +455,169 @@ mod tests {
             let sched = Scheduler::new(&plan, &p);
             for (i, (qs, real)) in batches.iter().enumerate() {
                 let seq = sched.run_batch(&NativeBackend::new(), qs, *real).unwrap();
+                assert!(piped[i].error.is_none());
+                assert_eq!(piped[i].bank, 0);
                 assert_eq!(piped[i].classes, seq.classes, "batch {i}");
                 assert_eq!(piped[i].active_row_evals, seq.active_row_evals);
+                assert_eq!(piped[i].modeled_energy, seq.modeled_energy, "batch {i}");
+                assert_eq!(piped[i].no_match, seq.no_match);
+                assert_eq!(piped[i].multi_match, seq.multi_match);
             }
         }
     }
 
     #[test]
     fn pipeline_handles_empty_stream() {
-        let mut d = catalog::by_name("iris", 0).unwrap();
-        d.normalize();
-        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
-        let lut = compile(&tree);
-        let p = DeviceParams::default();
-        let mut rng = Prng::new(3);
-        let m = MappedArray::from_lut(&lut, 16, &p, &mut rng);
-        let plan = Arc::new(ServingPlan::build(&m, &m.vref, &p));
+        let (plan, _, _, _) = setup("iris");
         let out = run_pipeline(plan, Arc::new(NativeBackend::new()), vec![], 1).unwrap();
         assert!(out.is_empty());
+    }
+
+    /// A backend that fails exactly one call to one division (the k-th),
+    /// delegating everything else to the native simulator. Stage threads
+    /// process batches in feed order, so the k-th call to division d is
+    /// batch seq k — a deterministic poison for one batch of a stream.
+    struct PoisonBackend {
+        inner: NativeBackend,
+        fail_division: usize,
+        countdown: std::sync::atomic::AtomicI64,
+    }
+
+    impl MatchBackend for PoisonBackend {
+        fn name(&self) -> &'static str {
+            "poison"
+        }
+        fn match_division(
+            &self,
+            plan: &ServingPlan,
+            req: &DivisionRequest<'_>,
+            out: &mut DivisionMatches,
+        ) -> Result<()> {
+            use std::sync::atomic::Ordering;
+            if req.division == self.fail_division
+                && self.countdown.fetch_sub(1, Ordering::SeqCst) == 0
+            {
+                bail!("injected stage fault");
+            }
+            self.inner.match_division(plan, req, out)
+        }
+    }
+
+    #[test]
+    fn poisoned_middle_stage_fails_only_its_batch_and_later_batches_complete() {
+        let (plan, m, lut, p) = setup("haberman");
+        assert!(plan.n_cwd >= 2, "need a middle stage to poison");
+        let batches = batches_for("haberman", &m, &lut, 48, 16);
+        assert!(batches.len() >= 3);
+        let fail_division = 1;
+        // countdown = 1: the second call (seq 1) to division 1 fails.
+        let backend = Arc::new(PoisonBackend {
+            inner: NativeBackend::new(),
+            fail_division,
+            countdown: std::sync::atomic::AtomicI64::new(1),
+        });
+        let piped = run_pipeline(Arc::clone(&plan), backend, batches.clone(), 1).unwrap();
+
+        // Nothing in flight was dropped: every batch has an outcome.
+        assert_eq!(piped.len(), batches.len());
+
+        // The poisoned batch carries the typed error, naming stage,
+        // division and bank...
+        let err = piped[1].error.as_ref().expect("batch 1 must fail");
+        assert_eq!(err.stage, fail_division);
+        assert_eq!(err.division, fail_division);
+        assert_eq!(err.bank, 0);
+        assert!(err.message.contains("injected stage fault"), "{err}");
+        let shown = err.to_string();
+        assert!(
+            shown.contains("stage 1") && shown.contains("division 1"),
+            "display must name the failing stage: {shown}"
+        );
+        // ...and no plausible-looking classes from the partial fold: a
+        // caller that forgets to check `error` sees all-None, never a
+        // silent misclassification.
+        assert!(piped[1].classes.iter().all(|c| c.is_none()));
+        assert_eq!(piped[1].active_row_evals, 0);
+        assert_eq!(piped[1].modeled_energy, 0.0);
+
+        // ...while every other batch completes with sequential-identical
+        // classes (the poisoned batch skipped later stages untouched).
+        let sched = Scheduler::new(&plan, &p);
+        for (i, (qs, real)) in batches.iter().enumerate() {
+            if i == 1 {
+                continue;
+            }
+            let seq = sched.run_batch(&NativeBackend::new(), qs, *real).unwrap();
+            assert!(piped[i].error.is_none(), "batch {i} must succeed");
+            assert_eq!(piped[i].classes, seq.classes, "batch {i}");
+            assert_eq!(piped[i].active_row_evals, seq.active_row_evals);
+        }
+    }
+
+    #[test]
+    fn feed_rejects_malformed_lane_width_with_typed_error() {
+        let (plan, _, _, _) = setup("iris");
+        let pipe = StreamingPipeline::new(
+            vec![Arc::clone(&plan)],
+            Arc::new(NativeBackend::new()),
+            1,
+        );
+        let err = pipe
+            .feed(0, 0, vec![vec![false; 3]], 1)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("width") && msg.contains("bank 0"), "{msg}");
+        // A real-lane overrun is typed too.
+        let err = pipe
+            .feed(0, 0, vec![vec![false; plan.n_cwd * plan.s]], 2)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("real lanes"));
+    }
+
+    #[test]
+    fn streaming_pipeline_runs_banks_concurrently_and_tags_outcomes() {
+        // Two banks (same plan twice is fine — the pipeline is
+        // bank-agnostic), distinct batch streams per bank: every
+        // outcome must come back tagged with its (bank, seq) and equal
+        // the sequential walk of that bank's stream.
+        let (plan, m, lut, p) = setup("haberman");
+        let pipe = StreamingPipeline::new(
+            vec![Arc::clone(&plan), Arc::clone(&plan)],
+            Arc::new(NativeBackend::new()),
+            2,
+        );
+        assert_eq!(pipe.n_banks(), 2);
+        assert_eq!(pipe.n_stages(0), plan.n_cwd);
+        let streams = [
+            batches_for("haberman", &m, &lut, 32, 8),
+            batches_for("haberman", &m, &lut, 48, 16),
+        ];
+        let mut expected_outcomes = 0;
+        for (b, stream) in streams.iter().enumerate() {
+            for (seq, (qs, real)) in stream.iter().enumerate() {
+                pipe.feed(b, seq as u64, qs.clone(), *real).unwrap();
+                expected_outcomes += 1;
+            }
+        }
+        let mut got: Vec<PipeOutcome> = Vec::new();
+        while got.len() < expected_outcomes {
+            match pipe.next_timeout(PIPELINE_DRAIN_TIMEOUT).unwrap() {
+                Some(o) => got.push(o),
+                None => panic!("pipeline stalled at {} outcomes", got.len()),
+            }
+        }
+        let sched = Scheduler::new(&plan, &p);
+        for o in &got {
+            let (qs, real) = &streams[o.bank][o.seq as usize];
+            let seq = sched.run_batch(&NativeBackend::new(), qs, *real).unwrap();
+            assert!(o.error.is_none());
+            assert_eq!(o.classes, seq.classes, "bank {} seq {}", o.bank, o.seq);
+            assert_eq!(o.active_row_evals, seq.active_row_evals);
+        }
+        // Each (bank, seq) pair arrived exactly once.
+        let mut keys: Vec<(usize, u64)> = got.iter().map(|o| (o.bank, o.seq)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), expected_outcomes, "duplicate or lost outcomes");
     }
 }

@@ -151,6 +151,19 @@ impl ServingPlan {
         self.divisions.iter().map(|d| d.w.len() * 4).sum()
     }
 
+    /// Number of pipeline stages this plan serves as: one per column
+    /// division (the streaming pipeline spawns exactly this many stage
+    /// threads per bank).
+    pub fn n_stages(&self) -> usize {
+        self.n_cwd
+    }
+
+    /// Modeled pipelined throughput of this bank (dec/s, Table VI "P"
+    /// rows: `f_max / II`, independent of the division count).
+    pub fn pipe_throughput(&self) -> f64 {
+        self.timing.throughput_pipe
+    }
+
     /// Fresh per-lane selective-precharge mask: the first
     /// `initially_active` (non-rogue) rows enabled, packed.
     pub fn initial_mask(&self) -> RowMask {
@@ -214,6 +227,9 @@ mod tests {
         }
         assert_eq!(plan.initially_active, m.real_rows);
         assert!(plan.w_bytes() > 0);
+        assert_eq!(plan.n_stages(), m.n_cwd);
+        assert_eq!(plan.pipe_throughput(), plan.timing.throughput_pipe);
+        assert!(plan.pipe_throughput() > 0.0);
         let mask = plan.initial_mask();
         assert_eq!(mask.len(), plan.padded_rows);
         assert_eq!(mask.count_ones(), plan.initially_active);

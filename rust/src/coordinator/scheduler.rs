@@ -52,6 +52,40 @@ pub struct BatchScratch {
     matches: DivisionMatches,
 }
 
+/// Priority-encode the surviving rows into per-lane classes (lowest
+/// row wins), counting no-match and multi-match events. Lanes past
+/// `real_lanes` are padding and read out as `None`. Shared by the
+/// sequential scheduler and the stage pipeline's collector, so the two
+/// walks agree on the readout by construction.
+pub(crate) fn read_survivors(
+    plan: &ServingPlan,
+    enabled: &[RowMask],
+    real_lanes: usize,
+) -> (Vec<Option<usize>>, usize, usize) {
+    let mut classes = Vec::with_capacity(enabled.len());
+    let mut no_match = 0;
+    let mut multi_match = 0;
+    for (lane, en) in enabled.iter().enumerate() {
+        if lane >= real_lanes {
+            classes.push(None);
+            continue;
+        }
+        let mut ones = en.ones();
+        match (ones.next(), ones.next()) {
+            (None, _) => {
+                no_match += 1;
+                classes.push(None);
+            }
+            (Some(first), None) => classes.push(Some(plan.classes[first])),
+            (Some(first), Some(_)) => {
+                multi_match += 1;
+                classes.push(Some(plan.classes[first]));
+            }
+        }
+    }
+    (classes, no_match, multi_match)
+}
+
 /// Scheduler over a prepared plan.
 pub struct Scheduler<'a> {
     pub plan: &'a ServingPlan,
@@ -146,27 +180,8 @@ impl<'a> Scheduler<'a> {
         }
 
         // Survivors -> classes (priority encoder: lowest row wins).
-        let mut classes = Vec::with_capacity(lanes);
-        let mut no_match = 0;
-        let mut multi_match = 0;
-        for (lane, en) in scratch.enabled.iter().enumerate() {
-            if lane >= real_lanes {
-                classes.push(None);
-                continue;
-            }
-            let mut ones = en.ones();
-            match (ones.next(), ones.next()) {
-                (None, _) => {
-                    no_match += 1;
-                    classes.push(None);
-                }
-                (Some(first), None) => classes.push(Some(plan.classes[first])),
-                (Some(first), Some(_)) => {
-                    multi_match += 1;
-                    classes.push(Some(plan.classes[first]));
-                }
-            }
-        }
+        let (classes, no_match, multi_match) =
+            read_survivors(plan, &scratch.enabled, real_lanes);
 
         let modeled_energy =
             energy_rows as f64 * plan.e_row + real_lanes as f64 * plan.e_mem;

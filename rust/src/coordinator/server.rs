@@ -8,12 +8,28 @@
 //! the `dt2cam serve` engine, the substance of [`crate::api::Session`],
 //! and the heart of the `serve_e2e` / `forest_serve` examples.
 //!
+//! Two execution strategies share this facade:
+//!
+//! * **batch-sequential** ([`Coordinator::with_banks`]) — each released
+//!   batch walks every division of every bank to completion before the
+//!   next batch starts (bank fan-out over the pool, divisions in
+//!   order);
+//! * **stage-pipelined** ([`Coordinator::with_banks_pipelined`], the
+//!   paper's Table VI "P" mode) — each bank owns a live
+//!   [`StreamingPipeline`] stage per column division, batches are *fed*
+//!   on submit-side polls and *collected* as they emerge, so several
+//!   batches are in flight across divisions at once while banks stream
+//!   concurrently. Outcomes are re-joined per batch by sequence number
+//!   and voted exactly like the sequential path — the two strategies
+//!   are bit-identical in classes, energy, and row activity.
+//!
 //! Hardware cost semantics (see `cart::forest`): modeled energy is the
 //! **sum** over banks (every array burns its own joules), modeled
 //! latency is the **slowest** bank plus the digital vote stage (banks
 //! search concurrently).
 
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -30,6 +46,7 @@ use crate::util::threadpool::ThreadPool;
 
 use super::batcher::{Batcher, InferenceRequest};
 use super::metrics::Metrics;
+use super::pipeline::{PipeOutcome, StreamingPipeline, PIPELINE_DRAIN_TIMEOUT};
 use super::plan::ServingPlan;
 use super::scheduler::{BatchOutcome, BatchScratch, Scheduler};
 
@@ -43,6 +60,11 @@ pub struct InferenceResponse {
     /// vote stage for forest programs, the single bank's latency
     /// otherwise.
     pub modeled_latency: f64,
+    /// Set when serving this request's batch failed (a rendered
+    /// [`StageError`](super::pipeline::StageError) from the pipelined
+    /// mode); `class` carries no information then. The socket server
+    /// routes such responses as typed error frames.
+    pub error: Option<String>,
 }
 
 /// One bank's compiled + mapped pieces handed to
@@ -66,29 +88,63 @@ struct BankRuntime {
     lut: Lut,
     features: Vec<usize>,
     padded_width: usize,
-    plan: ServingPlan,
+    /// Shared with the stage-pipeline threads in pipelined mode (an
+    /// uncontended refcount bump otherwise).
+    plan: Arc<ServingPlan>,
     /// Per-bank scheduler scratch, reused across every batch. Behind a
     /// `Mutex` so the parallel fan-out can reach it through `&self`
     /// (uncontended — exactly one job per bank per batch).
     scratch: Mutex<BatchScratch>,
 }
 
+/// One batch in flight inside the stage pipelines: the requests it
+/// answers, and the per-bank outcomes collected so far.
+struct PendingPipe {
+    reqs: Vec<InferenceRequest>,
+    /// Indexed by bank; filled as outcomes emerge.
+    outcomes: Vec<Option<PipeOutcome>>,
+    remaining: usize,
+    /// When the batch entered the pipeline (per-batch residence time).
+    fed: Instant,
+}
+
+/// Streaming pipelined execution state.
+struct PipelineState {
+    stream: StreamingPipeline,
+    /// seq → in-flight batch. Bounded by the stage channels' depth ×
+    /// stages (the feed blocks past that), never by client behavior.
+    pending: HashMap<u64, PendingPipe>,
+    next_seq: u64,
+    /// Start of the still-unaccounted slice of the current busy span.
+    /// Pipelined batches overlap, so per-batch walls cannot be summed
+    /// into `Metrics::wall_total`; instead busy (in-flight) time is
+    /// rolled into it incrementally on every poll — the same
+    /// no-idle-time convention the sequential path gets by
+    /// construction, and live metrics scrapes under sustained load see
+    /// a current figure rather than one frozen at the last idle point.
+    busy_since: Option<Instant>,
+}
+
 /// The serving coordinator. Owns one plan per bank and the bank
 /// dispatch; single-threaded facade (the PJRT backend is `!Send`), with
 /// bank-level fan-out (and row-tile parallelism inside the backend) for
-/// `Send + Sync` backends.
+/// `Send + Sync` backends, and an optional streaming stage pipeline per
+/// bank ([`Coordinator::with_banks_pipelined`]).
 pub struct Coordinator {
     banks: Vec<BankRuntime>,
     n_classes: usize,
     params: DeviceParams,
     dispatch: BankDispatch,
     /// Bank fan-out pool — present only for parallel dispatch over more
-    /// than one bank.
+    /// than one bank (used for batch execution in sequential mode and
+    /// for per-bank query encoding in both modes).
     pool: Option<ThreadPool>,
     batcher: Batcher,
     /// Modeled per-decision latency (slowest bank + vote stage).
     modeled_latency: f64,
     pub metrics: Metrics,
+    /// Streaming pipelined execution (None = batch-sequential walk).
+    pipeline: Option<PipelineState>,
 }
 
 impl Coordinator {
@@ -145,27 +201,28 @@ impl Coordinator {
         )
     }
 
-    /// Build a coordinator over one-or-many banks. Every bank is warmed
-    /// against the backend (fail fast); the backend's per-plan caches
-    /// are invalidated first so an instance reused across sessions
-    /// (plan rebuilds after fault injection) never aliases stale state.
-    pub fn with_banks(
-        dispatch: BankDispatch,
+    /// Shared head of both construction paths: build + warm every
+    /// bank's runtime, validate the class space, compute the modeled
+    /// latency roll-up. The backend's per-plan caches are invalidated
+    /// first so an instance reused across sessions (plan rebuilds after
+    /// fault injection) never aliases stale state.
+    fn build_runtimes(
+        backend: &dyn MatchBackend,
         batch: usize,
         banks: Vec<BankSpec<'_>>,
-        params: DeviceParams,
-    ) -> Result<Coordinator> {
+        params: &DeviceParams,
+    ) -> Result<(Vec<BankRuntime>, usize, f64)> {
         anyhow::ensure!(!banks.is_empty(), "a program needs at least one bank");
-        dispatch.backend().invalidate();
+        backend.invalidate();
         let mut runtimes = Vec::with_capacity(banks.len());
         for (b, spec) in banks.into_iter().enumerate() {
-            let plan = ServingPlan::build_bank(spec.mapped, spec.vref, &params, b);
-            dispatch.backend().warm(&plan, batch)?;
+            let plan = ServingPlan::build_bank(spec.mapped, spec.vref, params, b);
+            backend.warm(&plan, batch)?;
             runtimes.push(BankRuntime {
                 lut: spec.lut,
                 features: spec.features,
                 padded_width: spec.mapped.padded_width,
-                plan,
+                plan: Arc::new(plan),
                 scratch: Mutex::new(BatchScratch::default()),
             });
         }
@@ -181,7 +238,20 @@ impl Coordinator {
             );
         }
         let latencies: Vec<f64> = runtimes.iter().map(|r| r.plan.timing.latency).collect();
-        let modeled_latency = forest_latency(&latencies, &params);
+        let modeled_latency = forest_latency(&latencies, params);
+        Ok((runtimes, n_classes, modeled_latency))
+    }
+
+    /// Build a coordinator over one-or-many banks (batch-sequential
+    /// execution: each released batch runs to completion).
+    pub fn with_banks(
+        dispatch: BankDispatch,
+        batch: usize,
+        banks: Vec<BankSpec<'_>>,
+        params: DeviceParams,
+    ) -> Result<Coordinator> {
+        let (runtimes, n_classes, modeled_latency) =
+            Self::build_runtimes(dispatch.backend(), batch, banks, &params)?;
         // Bank fan-out pool: one worker per bank (capped like the
         // backend pools), only when the dispatch allows concurrency and
         // there is more than one bank to overlap.
@@ -199,6 +269,66 @@ impl Coordinator {
             batcher: Batcher::new(batch, Duration::from_millis(2)),
             modeled_latency,
             metrics: Metrics::new(),
+            pipeline: None,
+        })
+    }
+
+    /// Build a **streaming pipelined** coordinator (the paper's Table
+    /// VI "P" execution mode): one live stage pipeline per bank — a
+    /// thread per column division connected by bounded channels of
+    /// `depth` batches — with banks streaming concurrently and several
+    /// batches in flight across divisions at once. `submit`/`poll`
+    /// behave exactly like the sequential coordinator's, except that
+    /// `poll(false)` returns whatever batches *finished* since the last
+    /// call rather than running each batch to completion; `poll(true)`
+    /// drains the pipeline. Classes, modeled energy, and row activity
+    /// are bit-identical to [`Coordinator::with_banks`] by
+    /// construction (same kernels, same readout, same vote).
+    ///
+    /// The backend must be `Send + Sync` (stages run on their own
+    /// threads) — [`crate::api::registry::create_pipeline_backend`]
+    /// enforces this for registry engines.
+    pub fn with_banks_pipelined(
+        backend: Arc<dyn MatchBackend + Send + Sync>,
+        batch: usize,
+        banks: Vec<BankSpec<'_>>,
+        params: DeviceParams,
+        depth: usize,
+    ) -> Result<Coordinator> {
+        let (runtimes, n_classes, modeled_latency) =
+            Self::build_runtimes(backend.as_ref(), batch, banks, &params)?;
+        let plans: Vec<Arc<ServingPlan>> = runtimes.iter().map(|r| Arc::clone(&r.plan)).collect();
+        let stream = StreamingPipeline::new(plans, Arc::clone(&backend), depth);
+        // The pool fans the per-bank query encoding out; the match work
+        // itself is already parallel across banks (each bank's stage
+        // threads run concurrently).
+        let pool = if runtimes.len() > 1 {
+            Some(ThreadPool::new(runtimes.len().min(16)))
+        } else {
+            None
+        };
+        let mut metrics = Metrics::new();
+        // Modeled pipelined throughput (f_max / II): the slowest bank
+        // bounds a forest, exactly like modeled latency.
+        metrics.modeled_pipe_throughput = runtimes
+            .iter()
+            .map(|r| r.plan.pipe_throughput())
+            .fold(f64::INFINITY, f64::min);
+        Ok(Coordinator {
+            banks: runtimes,
+            n_classes,
+            params,
+            dispatch: BankDispatch::Parallel(backend),
+            pool,
+            batcher: Batcher::new(batch, Duration::from_millis(2)),
+            modeled_latency,
+            metrics,
+            pipeline: Some(PipelineState {
+                stream,
+                pending: HashMap::new(),
+                next_seq: 0,
+                busy_since: None,
+            }),
         })
     }
 
@@ -211,7 +341,20 @@ impl Coordinator {
 
     /// Every bank's serving plan, in bank order.
     pub fn bank_plans(&self) -> impl Iterator<Item = &ServingPlan> {
-        self.banks.iter().map(|b| &b.plan)
+        self.banks.iter().map(|b| &*b.plan)
+    }
+
+    /// Whether this coordinator executes through the streaming stage
+    /// pipeline (Table VI "P" mode) rather than batch-at-a-time.
+    pub fn pipelined(&self) -> bool {
+        self.pipeline.is_some()
+    }
+
+    /// Batches currently inside the stage pipelines (fed, not yet fully
+    /// collected); always 0 for batch-sequential coordinators and after
+    /// a draining `poll(true)`.
+    pub fn in_flight(&self) -> usize {
+        self.pipeline.as_ref().map_or(0, |s| s.pending.len())
     }
 
     /// Number of CAM banks this coordinator serves.
@@ -270,13 +413,17 @@ impl Coordinator {
 
     /// Run all due batches; returns responses (request order within batch
     /// preserved). `force_flush` drains partial batches (end of stream).
+    ///
+    /// Pipelined coordinators *feed* due batches and return whatever
+    /// batches finished since the last poll — responses for a given
+    /// submit may arrive on a later poll, in pipeline-completion order.
+    /// `poll(true)` additionally blocks until every in-flight batch has
+    /// drained, so a forced flush answers everything submitted in both
+    /// modes.
     pub fn poll(&mut self, force_flush: bool) -> Result<Vec<InferenceResponse>> {
-        let mut batches = Vec::new();
-        while let Some(b) = self.batcher.next_batch(Instant::now()) {
-            batches.push(b);
-        }
-        if force_flush {
-            batches.extend(self.batcher.flush());
+        let batches = self.batcher.take_due(Instant::now(), force_flush);
+        if self.pipeline.is_some() {
+            return self.poll_pipelined(batches, force_flush);
         }
         let mut responses = Vec::new();
         for batch in batches {
@@ -299,6 +446,36 @@ impl Coordinator {
         sched.run_batch_with(backend, queries, real, &mut scratch)
     }
 
+    /// Encode + pad one admitted batch to the artifact width, once per
+    /// bank: each bank sees its own feature projection through its own
+    /// encoders. Fanned out over the bank pool when one exists (the
+    /// per-bank encodes are independent); one reusable projection
+    /// buffer serves every lane of a bank either way.
+    fn encode_banks(&self, batch: &[InferenceRequest], width: usize) -> Vec<Vec<Vec<bool>>> {
+        let encode_one = |bank: &BankRuntime| -> Vec<Vec<bool>> {
+            let mut proj: Vec<f64> = Vec::new();
+            let mut qs: Vec<Vec<bool>> = batch
+                .iter()
+                .map(|r| {
+                    proj.clear();
+                    proj.extend(bank.features.iter().map(|&f| r.features[f]));
+                    bank.plan.encode(&bank.lut, bank.padded_width, &proj)
+                })
+                .collect();
+            while qs.len() < width {
+                qs.push(vec![false; bank.padded_width]);
+            }
+            qs
+        };
+        match &self.pool {
+            Some(pool) if self.banks.len() > 1 => {
+                let banks = &self.banks;
+                pool.scoped_map(banks.len(), |b| encode_one(&banks[b]))
+            }
+            _ => self.banks.iter().map(encode_one).collect(),
+        }
+    }
+
     fn run_batch(&mut self, batch: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
         let width = self.batcher.batch_width();
         let real = batch.len();
@@ -308,28 +485,7 @@ impl Coordinator {
         for r in &batch {
             self.metrics.record_queue_delay(r.arrived.elapsed());
         }
-        // Encode + pad lanes to the artifact width, once per bank: each
-        // bank sees its own feature projection through its own encoders.
-        // One reusable projection buffer serves every (bank, lane) pair.
-        let mut proj: Vec<f64> = Vec::new();
-        let bank_queries: Vec<Vec<Vec<bool>>> = self
-            .banks
-            .iter()
-            .map(|bank| {
-                let mut qs: Vec<Vec<bool>> = batch
-                    .iter()
-                    .map(|r| {
-                        proj.clear();
-                        proj.extend(bank.features.iter().map(|&f| r.features[f]));
-                        bank.plan.encode(&bank.lut, bank.padded_width, &proj)
-                    })
-                    .collect();
-                while qs.len() < width {
-                    qs.push(vec![false; bank.padded_width]);
-                }
-                qs
-            })
-            .collect();
+        let bank_queries = self.encode_banks(&batch, width);
 
         let t0 = Instant::now();
         let outcomes: Vec<BatchOutcome> = match (&self.pool, &self.dispatch) {
@@ -409,24 +565,225 @@ impl Coordinator {
                 id: req.id,
                 class,
                 modeled_latency: self.modeled_latency,
+                error: None,
             })
             .collect())
     }
 
+    // -------------------------------------------- pipelined execution
+
+    /// Pipelined poll: feed every due batch into the bank pipelines,
+    /// then collect whatever finished. With `drain`, block until the
+    /// pipelines are empty (end of stream / graceful shutdown).
+    fn poll_pipelined(
+        &mut self,
+        batches: Vec<Vec<InferenceRequest>>,
+        drain: bool,
+    ) -> Result<Vec<InferenceResponse>> {
+        for batch in batches {
+            self.feed_pipeline(batch)?;
+        }
+        let mut responses = Vec::new();
+        // Non-blocking sweep of everything the stages finished.
+        while let Some(outcome) = self.try_next_outcome() {
+            self.absorb_outcome(outcome, &mut responses);
+        }
+        if drain {
+            // Stage threads are always making progress on in-flight
+            // batches, so a bounded wait per outcome suffices; a
+            // timeout can only mean a stage thread died.
+            while !self.pipeline.as_ref().expect("pipelined mode").pending.is_empty() {
+                let next = self
+                    .pipeline
+                    .as_ref()
+                    .expect("pipelined mode")
+                    .stream
+                    .next_timeout(PIPELINE_DRAIN_TIMEOUT)?;
+                match next {
+                    Some(outcome) => self.absorb_outcome(outcome, &mut responses),
+                    None => anyhow::bail!(
+                        "pipeline drain stalled with {} batches in flight",
+                        self.in_flight()
+                    ),
+                }
+            }
+        }
+        self.roll_busy_span();
+        Ok(responses)
+    }
+
+    /// Encode one released batch for every bank and feed the bank
+    /// pipelines. A blocking feed (bounded stage channels) is the
+    /// backpressure path: the caller waits while the stages drain
+    /// forward — in-flight work is bounded by channel depth × stages,
+    /// never by offered load.
+    fn feed_pipeline(&mut self, batch: Vec<InferenceRequest>) -> Result<()> {
+        let width = self.batcher.batch_width();
+        let real = batch.len();
+        // Queue delay at batch dispatch, like the sequential path.
+        for r in &batch {
+            self.metrics.record_queue_delay(r.arrived.elapsed());
+        }
+        let bank_queries = self.encode_banks(&batch, width);
+        let n_banks = self.banks.len();
+        let state = self.pipeline.as_mut().expect("pipelined mode");
+        let seq = state.next_seq;
+        state.next_seq += 1;
+        state.busy_since.get_or_insert_with(Instant::now);
+        state.pending.insert(
+            seq,
+            PendingPipe {
+                reqs: batch,
+                outcomes: (0..n_banks).map(|_| None).collect(),
+                remaining: n_banks,
+                fed: Instant::now(),
+            },
+        );
+        let state = self.pipeline.as_ref().expect("pipelined mode");
+        for (b, queries) in bank_queries.into_iter().enumerate() {
+            state.stream.feed(b, seq, queries, real)?;
+        }
+        Ok(())
+    }
+
+    /// Record one bank outcome; when its batch is complete, vote, roll
+    /// up the hardware cost, and materialize the responses.
+    fn absorb_outcome(&mut self, outcome: PipeOutcome, responses: &mut Vec<InferenceResponse>) {
+        let seq = outcome.seq;
+        let bank = outcome.bank;
+        let entry = {
+            let state = self.pipeline.as_mut().expect("pipelined mode");
+            let entry = state
+                .pending
+                .get_mut(&seq)
+                .expect("pipeline outcome for unknown batch");
+            debug_assert!(entry.outcomes[bank].is_none(), "duplicate bank outcome");
+            entry.outcomes[bank] = Some(outcome);
+            entry.remaining -= 1;
+            if entry.remaining > 0 {
+                return;
+            }
+            state.pending.remove(&seq).expect("entry just seen")
+        };
+        let residence = entry.fed.elapsed();
+        let outcomes: Vec<PipeOutcome> = entry
+            .outcomes
+            .into_iter()
+            .map(|o| o.expect("complete batch"))
+            .collect();
+        let real = entry.reqs.len();
+
+        // A poisoned batch answers every one of its requests with the
+        // typed stage error — and nothing else: no cost roll-up for
+        // work the hardware model cannot attribute. Later batches are
+        // unaffected (they flowed around the failure in the stages).
+        if let Some(err) = outcomes.iter().find_map(|o| o.error.as_ref()) {
+            let message = err.to_string();
+            self.metrics.stage_errors += 1;
+            responses.extend(entry.reqs.iter().map(|r| InferenceResponse {
+                id: r.id,
+                class: None,
+                modeled_latency: self.modeled_latency,
+                error: Some(message.clone()),
+            }));
+            return;
+        }
+
+        // Combine survivors with the normative forest rule — identical
+        // to the sequential path (`outcomes` is in bank order).
+        let mut classes = Vec::with_capacity(real);
+        let mut no_match = 0usize;
+        let mut votes = Vec::new();
+        for lane in 0..real {
+            let c = vote_survivors(
+                outcomes.iter().map(|out| out.classes[lane]),
+                self.n_classes,
+                &mut votes,
+            );
+            if c.is_none() {
+                no_match += 1;
+            }
+            classes.push(c);
+        }
+
+        let modeled_energy: f64 = outcomes.iter().map(|o| o.modeled_energy).sum();
+        let active_rows: u64 = outcomes.iter().map(|o| o.active_row_evals).sum();
+        let multi_match: usize = outcomes.iter().map(|o| o.multi_match).sum();
+        for out in &outcomes {
+            self.metrics.record_bank_energy(out.bank, out.modeled_energy);
+        }
+        // `residence` is this batch's pipeline dwell (feed → joined):
+        // the honest per-batch figure in a pipelined system. Batches
+        // overlap, so it feeds the per-batch stats only — wall_total is
+        // accumulated from busy spans instead (see `PipelineState`).
+        self.metrics.record_batch(
+            real,
+            modeled_energy,
+            active_rows,
+            no_match,
+            multi_match,
+            residence,
+        );
+        for r in &entry.reqs {
+            self.metrics.record_latency(r.arrived.elapsed());
+        }
+        responses.extend(entry.reqs.iter().zip(&classes).map(|(req, &class)| {
+            InferenceResponse {
+                id: req.id,
+                class,
+                modeled_latency: self.modeled_latency,
+                error: None,
+            }
+        }));
+    }
+
+    /// One finished outcome, if any (scopes the pipeline borrow so the
+    /// caller can absorb with `&mut self`).
+    fn try_next_outcome(&self) -> Option<PipeOutcome> {
+        self.pipeline.as_ref().expect("pipelined mode").stream.try_next()
+    }
+
+    /// Fold the elapsed slice of the current busy span into
+    /// `Metrics::wall_total` (called at the end of every pipelined
+    /// poll). While batches remain in flight the span marker advances
+    /// to "now", so sustained load keeps `wall_throughput` current;
+    /// once the pipeline drains the marker clears and idle time stops
+    /// counting.
+    fn roll_busy_span(&mut self) {
+        let state = self.pipeline.as_mut().expect("pipelined mode");
+        if let Some(t0) = state.busy_since.as_mut() {
+            let now = Instant::now();
+            self.metrics.wall_total += now.duration_since(*t0).as_secs_f64();
+            if state.pending.is_empty() {
+                state.busy_since = None;
+            } else {
+                *t0 = now;
+            }
+        }
+    }
+
     /// Convenience: synchronous classification of a whole test set in
-    /// batch-width chunks (examples + benches).
+    /// batch-width chunks (examples + benches). Works identically over
+    /// both execution modes — pipelined responses simply arrive on
+    /// later polls and are re-ordered by request id here. A served
+    /// error (pipelined stage failure) surfaces as `Err`.
     pub fn classify_all(&mut self, inputs: &[Vec<f64>]) -> Result<Vec<Option<usize>>> {
         let mut out = Vec::with_capacity(inputs.len());
         for (i, x) in inputs.iter().enumerate() {
             self.submit(InferenceRequest::new(i as u64, x.clone()));
-            let resp = self.poll(false)?;
-            out.extend(resp.into_iter().map(|r| (r.id, r.class)));
+            for r in self.poll(false)? {
+                if let Some(e) = r.error {
+                    anyhow::bail!("request {} failed: {e}", r.id);
+                }
+                out.push((r.id, r.class));
+            }
         }
-        out.extend(
-            self.poll(true)?
-                .into_iter()
-                .map(|r| (r.id, r.class)),
-        );
+        for r in self.poll(true)? {
+            if let Some(e) = r.error {
+                anyhow::bail!("request {} failed: {e}", r.id);
+            }
+            out.push((r.id, r.class));
+        }
         let mut sorted = out;
         sorted.sort_by_key(|(id, _)| *id);
         Ok(sorted.into_iter().map(|(_, c)| c).collect())
@@ -581,11 +938,9 @@ mod tests {
 
     // ------------------------------------------------- multi-bank tests
 
-    /// Build a 3-bank coordinator (bagged forest on haberman) plus the
-    /// forest itself and its test split.
-    fn build_forest(
-        dispatch: BankDispatch,
-    ) -> (Coordinator, crate::cart::Forest, Vec<Vec<f64>>, Vec<usize>) {
+    /// Train the 3-bank bagged forest on haberman and map every bank:
+    /// the shared fixture of both coordinator modes.
+    fn forest_parts() -> (crate::cart::Forest, Vec<MappedArray>, Vec<Vec<f64>>, Vec<usize>) {
         use crate::cart::{train_forest, ForestParams};
         let mut d = catalog::by_name("haberman", 0xD72CA0).unwrap();
         d.normalize();
@@ -605,28 +960,65 @@ mod tests {
             &mut Prng::new(7),
         );
         let p = DeviceParams::default();
-        // Specs borrow the arrays only during construction; the
-        // coordinator owns everything it needs afterwards.
         let arrays: Vec<MappedArray> = forest
             .trees
             .iter()
             .map(|t| MappedArray::from_lut(&compile(t), 16, &p, &mut Prng::new(3)))
             .collect();
-        let specs: Vec<BankSpec> = forest
+        let (txs, tys) = d.gather(&split.test);
+        (forest, arrays, txs, tys)
+    }
+
+    /// Specs borrow the arrays only during construction; the
+    /// coordinator owns everything it needs afterwards.
+    fn specs_of<'a>(
+        forest: &crate::cart::Forest,
+        arrays: &'a [MappedArray],
+    ) -> Vec<BankSpec<'a>> {
+        forest
             .trees
             .iter()
             .zip(&forest.feature_sets)
-            .zip(&arrays)
+            .zip(arrays)
             .map(|((t, feats), m)| BankSpec {
                 lut: compile(t),
                 features: feats.clone(),
                 mapped: m,
                 vref: &m.vref,
             })
-            .collect();
-        let coord = Coordinator::with_banks(dispatch, 16, specs, p).unwrap();
-        let (txs, tys) = d.gather(&split.test);
+            .collect()
+    }
+
+    /// Build a 3-bank coordinator (bagged forest on haberman) plus the
+    /// forest itself and its test split.
+    fn build_forest(
+        dispatch: BankDispatch,
+    ) -> (Coordinator, crate::cart::Forest, Vec<Vec<f64>>, Vec<usize>) {
+        let (forest, arrays, txs, tys) = forest_parts();
+        let coord = Coordinator::with_banks(
+            dispatch,
+            16,
+            specs_of(&forest, &arrays),
+            DeviceParams::default(),
+        )
+        .unwrap();
         (coord, forest, txs, tys)
+    }
+
+    /// Same program behind the streaming pipelined coordinator.
+    fn build_forest_pipelined(depth: usize) -> (Coordinator, Vec<Vec<f64>>) {
+        use crate::api::NativeBackend;
+        use std::sync::Arc;
+        let (forest, arrays, txs, _tys) = forest_parts();
+        let coord = Coordinator::with_banks_pipelined(
+            Arc::new(NativeBackend::new()),
+            16,
+            specs_of(&forest, &arrays),
+            DeviceParams::default(),
+            depth,
+        )
+        .unwrap();
+        (coord, txs)
     }
 
     #[test]
@@ -708,6 +1100,93 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("class space"), "{err:#}");
+    }
+
+    #[test]
+    fn pipelined_coordinator_is_bit_identical_to_sequential_on_a_forest() {
+        use crate::api::NativeBackend;
+        for depth in [1usize, 2, 4] {
+            // Fresh sequential coordinator per depth: metrics roll-ups
+            // are compared 1:1 against each pipelined run.
+            let (mut seq, _, txs, _) =
+                build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+            let (mut piped, txs2) = build_forest_pipelined(depth);
+            assert_eq!(txs, txs2);
+            assert!(piped.pipelined());
+            assert!(!seq.pipelined());
+            assert_eq!(piped.n_banks(), 3);
+            let a = seq.classify_all(&txs).unwrap();
+            let b = piped.classify_all(&txs).unwrap();
+            assert_eq!(a, b, "depth {depth}: pipelined votes diverged");
+            assert_eq!(piped.in_flight(), 0, "drain must empty the pipeline");
+            assert_eq!(piped.pending(), 0);
+            // Hardware cost roll-ups are execution-strategy-invariant,
+            // bit for bit.
+            assert_eq!(seq.metrics.modeled_energy, piped.metrics.modeled_energy);
+            assert_eq!(seq.metrics.active_row_evals, piped.metrics.active_row_evals);
+            assert_eq!(seq.metrics.bank_energy, piped.metrics.bank_energy);
+            assert_eq!(seq.metrics.decisions, piped.metrics.decisions);
+            assert_eq!(seq.metrics.no_match, piped.metrics.no_match);
+            assert_eq!(seq.metrics.multi_match, piped.metrics.multi_match);
+            // The pipelined mode reports the paper's modeled figure.
+            assert!(piped.metrics.modeled_pipe_throughput > 0.0);
+            assert!(piped.metrics.summary_line().contains("modeled-pipe="));
+            assert_eq!(seq.metrics.modeled_pipe_throughput, 0.0);
+            // Every request got exactly one latency sample.
+            assert_eq!(piped.metrics.latency_count(), txs.len());
+        }
+    }
+
+    #[test]
+    fn pipelined_single_bank_matches_sequential_and_drains_on_force() {
+        use crate::api::NativeBackend;
+        use std::sync::Arc;
+        let mut d = catalog::by_name("iris", 0xD72CA0).unwrap();
+        d.normalize();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let p = DeviceParams::default();
+        let m = MappedArray::from_lut(&lut, 16, &p, &mut Prng::new(2));
+        let spec = || {
+            vec![BankSpec {
+                lut: lut.clone(),
+                features: (0..lut.encoders.len()).collect(),
+                mapped: &m,
+                vref: &m.vref,
+            }]
+        };
+        let mut seq = Coordinator::with_banks(
+            BankDispatch::Sequential(Box::new(NativeBackend::new())),
+            8,
+            spec(),
+            p.clone(),
+        )
+        .unwrap();
+        let mut piped = Coordinator::with_banks_pipelined(
+            Arc::new(NativeBackend::new()),
+            8,
+            spec(),
+            p.clone(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(piped.n_banks(), 1);
+        assert!(!piped.bank_parallel(), "one bank needs no fan-out pool");
+        let a = seq.classify_all(&d.features[..40].to_vec()).unwrap();
+        let b = piped.classify_all(&d.features[..40].to_vec()).unwrap();
+        assert_eq!(a, b);
+
+        // A lone request behind an hour-long deadline is only released
+        // — and pushed through the whole pipeline — by a forced poll.
+        piped.set_batch_max_wait(Duration::from_secs(3600));
+        piped.submit(InferenceRequest::new(99, d.features[0].clone()));
+        assert!(piped.poll(false).unwrap().is_empty());
+        assert_eq!(piped.pending(), 1);
+        let resp = piped.poll(true).unwrap();
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].id, 99);
+        assert!(resp[0].error.is_none());
+        assert_eq!(piped.in_flight(), 0);
     }
 
     #[test]

@@ -23,6 +23,16 @@
 //! responses are routed back to whichever connection asked, by request
 //! id — not drained in submission order.
 //!
+//! The coordinator behind the seam may be either execution strategy —
+//! batch-sequential or the streaming stage pipeline
+//! (`serve --listen --pipelined`). Pipelined serving keeps several
+//! batches in flight across column divisions: the scheduler's poll
+//! feeds admitted batches into the pipeline heads and routes whatever
+//! outcomes emerged since the last poll, so completion order (not
+//! submission order) drives the response stream — the per-request-id
+//! routing below is what makes that safe. Graceful shutdown's forced
+//! flush drains batches already inside the pipeline before closing.
+//!
 //! ## Backpressure contract
 //!
 //! At most `admission` requests are in flight (admitted but not yet
@@ -400,16 +410,26 @@ fn route(shared: &Shared, responses: Vec<InferenceResponse>) {
         };
         let tx = shared.conns.lock().unwrap().get(&route.conn).map(|h| h.tx.clone());
         if let Some(tx) = tx {
+            // A served failure (typed pipeline stage error) goes back
+            // as an error frame carrying the client's request id; a
+            // healthy answer as a response frame.
+            let frame = match r.error {
+                Some(message) => Frame::Error {
+                    id: Some(route.client_id),
+                    message,
+                },
+                None => Frame::Response {
+                    id: route.client_id,
+                    class: r.class,
+                    modeled_latency: r.modeled_latency,
+                },
+            };
             // try_send, never block the scheduler on one connection. A
             // Full channel means the client stopped reading while its
             // own traffic (Error/Shed replies share the channel) piled
             // up — its response is forfeit, counted, and the admission
             // slot still frees.
-            match tx.try_send(WriterMsg::Frame(Frame::Response {
-                id: route.client_id,
-                class: r.class,
-                modeled_latency: r.modeled_latency,
-            })) {
+            match tx.try_send(WriterMsg::Frame(frame)) {
                 Ok(()) | Err(TrySendError::Disconnected(_)) => {}
                 Err(TrySendError::Full(_)) => {
                     shared.dropped_responses.fetch_add(1, Ordering::AcqRel);

@@ -5,6 +5,7 @@
 use std::path::PathBuf;
 
 use dt2cam::api::registry::{self, BackendOptions};
+use dt2cam::api::serde::{lut_to_json, params_to_json};
 use dt2cam::api::{
     CompiledProgram, DivisionMatches, DivisionRequest, Dt2Cam, MappedProgram, MatchBackend,
     RowMask,
@@ -12,9 +13,56 @@ use dt2cam::api::{
 use dt2cam::config::{EngineKind, Json};
 use dt2cam::coordinator::Scheduler;
 use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::prng::Prng;
 
 fn tmpfile(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("dt2cam_api_{name}_{}", std::process::id()))
+}
+
+/// The exact v1 (pre-bank) compiled-artifact writer layout,
+/// reconstructed by hand: one top-level `lut`, no `banks` array.
+fn v1_compiled_json(program: &CompiledProgram) -> Json {
+    Json::obj(vec![
+        ("format", Json::str("dt2cam-compiled-program")),
+        ("version", Json::num(1.0)),
+        ("dataset", Json::str(program.dataset.clone())),
+        ("seed", Json::num(program.seed as f64)),
+        ("lut", lut_to_json(program.lut())),
+        (
+            "test_indices",
+            Json::Arr(program.test_indices.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+        (
+            "golden",
+            Json::Arr(program.golden.iter().map(|&g| Json::num(g as f64)).collect()),
+        ),
+    ])
+}
+
+/// The exact v1 mapped-artifact writer layout: the single bank's fields
+/// (map_seed, geometry, vref) at the top level.
+fn v1_mapped_json(mapped: &MappedProgram) -> Json {
+    let m = mapped.primary();
+    Json::obj(vec![
+        ("format", Json::str("dt2cam-mapped-program")),
+        ("version", Json::num(1.0)),
+        ("tile_size", Json::num(m.s as f64)),
+        ("map_seed", Json::num(mapped.banks[0].map_seed as f64)),
+        ("params", params_to_json(&mapped.params)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("n_rwd", Json::num(m.n_rwd as f64)),
+                ("n_cwd", Json::num(m.n_cwd as f64)),
+                ("padded_rows", Json::num(m.padded_rows as f64)),
+                ("padded_width", Json::num(m.padded_width as f64)),
+                ("real_rows", Json::num(m.real_rows as f64)),
+                ("real_width", Json::num(m.real_width as f64)),
+            ]),
+        ),
+        ("vref", Json::Arr(m.vref.iter().map(|&v| Json::num(v)).collect())),
+        ("program", v1_compiled_json(&mapped.program)),
+    ])
 }
 
 /// Build every registered backend; the pjrt entry skips cleanly when
@@ -363,26 +411,9 @@ fn v1_compiled_artifact_loads_as_one_bank_v2_program() {
     // Back-compat: a pre-bank (v1) compiled artifact — single top-level
     // `lut`, no `banks` array — must load as a 1-bank v2 program with
     // the identity feature projection and identical classifications.
-    use dt2cam::api::serde::lut_to_json;
-
     let model = Dt2Cam::dataset("iris").unwrap();
     let program = model.compile();
-    // The exact v1 writer layout, reconstructed by hand.
-    let v1 = Json::obj(vec![
-        ("format", Json::str("dt2cam-compiled-program")),
-        ("version", Json::num(1.0)),
-        ("dataset", Json::str(program.dataset.clone())),
-        ("seed", Json::num(program.seed as f64)),
-        ("lut", lut_to_json(program.lut())),
-        (
-            "test_indices",
-            Json::Arr(program.test_indices.iter().map(|&i| Json::num(i as f64)).collect()),
-        ),
-        (
-            "golden",
-            Json::Arr(program.golden.iter().map(|&g| Json::num(g as f64)).collect()),
-        ),
-    ]);
+    let v1 = v1_compiled_json(&program);
     let path = tmpfile("v1_compiled.json");
     std::fs::write(&path, v1.to_string_pretty()).unwrap();
     let back = CompiledProgram::load(&path).unwrap();
@@ -410,49 +441,13 @@ fn v1_mapped_artifact_loads_and_classifies_identically() {
     // top level) loads as a 1-bank v2 program whose grid, vref and
     // served classifications are identical to the v2 mapping of the
     // same program.
-    use dt2cam::api::serde::{lut_to_json, params_to_json};
-
     let model = Dt2Cam::dataset("haberman").unwrap();
     let program = model.compile();
     let p = DeviceParams::default();
     let mapped = program.map(16, &p);
     let m = mapped.primary();
 
-    let v1_program = Json::obj(vec![
-        ("format", Json::str("dt2cam-compiled-program")),
-        ("version", Json::num(1.0)),
-        ("dataset", Json::str(program.dataset.clone())),
-        ("seed", Json::num(program.seed as f64)),
-        ("lut", lut_to_json(program.lut())),
-        (
-            "test_indices",
-            Json::Arr(program.test_indices.iter().map(|&i| Json::num(i as f64)).collect()),
-        ),
-        (
-            "golden",
-            Json::Arr(program.golden.iter().map(|&g| Json::num(g as f64)).collect()),
-        ),
-    ]);
-    let v1 = Json::obj(vec![
-        ("format", Json::str("dt2cam-mapped-program")),
-        ("version", Json::num(1.0)),
-        ("tile_size", Json::num(16.0)),
-        ("map_seed", Json::num(mapped.banks[0].map_seed as f64)),
-        ("params", params_to_json(&p)),
-        (
-            "geometry",
-            Json::obj(vec![
-                ("n_rwd", Json::num(m.n_rwd as f64)),
-                ("n_cwd", Json::num(m.n_cwd as f64)),
-                ("padded_rows", Json::num(m.padded_rows as f64)),
-                ("padded_width", Json::num(m.padded_width as f64)),
-                ("real_rows", Json::num(m.real_rows as f64)),
-                ("real_width", Json::num(m.real_width as f64)),
-            ]),
-        ),
-        ("vref", Json::Arr(m.vref.iter().map(|&v| Json::num(v)).collect())),
-        ("program", v1_program),
-    ]);
+    let v1 = v1_mapped_json(&mapped);
     let path = tmpfile("v1_mapped.json");
     std::fs::write(&path, v1.to_string_pretty()).unwrap();
     let back = MappedProgram::load(&path).unwrap();
@@ -480,6 +475,132 @@ fn v1_mapped_artifact_loads_and_classifies_identically() {
     for (c, g) in a.iter().zip(&model.golden) {
         assert_eq!(*c, Some(*g));
     }
+}
+
+// -------------------------------------------------- artifact robustness
+
+fn count_nodes(j: &Json) -> usize {
+    1 + match j {
+        Json::Obj(fields) => fields.iter().map(|(_, v)| count_nodes(v)).sum(),
+        Json::Arr(items) => items.iter().map(count_nodes).sum(),
+        _ => 0,
+    }
+}
+
+/// Replace the pre-order `target`-th node of the tree with `with`.
+fn replace_node(j: &mut Json, cursor: &mut usize, target: usize, with: &Json) -> bool {
+    if *cursor == target {
+        *j = with.clone();
+        return true;
+    }
+    *cursor += 1;
+    match j {
+        Json::Obj(fields) => fields
+            .iter_mut()
+            .any(|(_, v)| replace_node(v, cursor, target, with)),
+        Json::Arr(items) => items
+            .iter_mut()
+            .any(|v| replace_node(v, cursor, target, with)),
+        _ => false,
+    }
+}
+
+#[test]
+fn mutated_artifacts_fail_loudly_naming_the_path_never_panic() {
+    // The robustness property over all four artifact flavors (v1/v2 ×
+    // compiled/mapped): under a seeded stream of corruptions —
+    // truncation at arbitrary offsets, single-byte damage, and
+    // wrong-typed node replacements anywhere in the JSON tree — `load`
+    // either succeeds (the mutation happened to be benign) or returns a
+    // typed error that names the artifact path. It must **never**
+    // panic: every mutated byte stream runs through the full
+    // parse → validate → rebuild path in-process right here.
+    let program = Dt2Cam::dataset("iris").unwrap().compile();
+    let mapped = program.map(16, &DeviceParams::default());
+    let cases: Vec<(&str, String, bool)> = vec![
+        ("v2c", program.to_json().to_string_pretty(), false),
+        ("v2m", mapped.to_json().to_string_pretty(), true),
+        ("v1c", v1_compiled_json(&program).to_string_pretty(), false),
+        ("v1m", v1_mapped_json(&mapped).to_string_pretty(), true),
+    ];
+    let wrong_typed = [
+        Json::str("bogus"),
+        Json::num(-7.0),
+        Json::num(2.5),
+        Json::Null,
+        Json::Arr(vec![]),
+        Json::obj(vec![]),
+    ];
+    let mut rng = Prng::new(0xC0FFEE);
+    for (tag, text, is_mapped) in &cases {
+        assert!(text.is_ascii(), "byte-offset mutations assume ASCII artifacts");
+        for k in 0..15usize {
+            let mutated = match k % 3 {
+                // Truncation at a seeded offset (the "process died
+                // mid-write" artifact).
+                0 => text[..1 + rng.below(text.len() - 1)].to_string(),
+                // One corrupted byte (bit-rot; may or may not stay
+                // parseable).
+                1 => {
+                    let mut bytes = text.clone().into_bytes();
+                    bytes[rng.below(bytes.len())] = b'#';
+                    String::from_utf8(bytes).unwrap()
+                }
+                // A wrong-typed value at a seeded node of the tree.
+                _ => {
+                    let mut j = Json::parse(text).unwrap();
+                    let target = rng.below(count_nodes(&j));
+                    let with = &wrong_typed[rng.below(wrong_typed.len())];
+                    let mut cursor = 0usize;
+                    replace_node(&mut j, &mut cursor, target, with);
+                    j.to_string_pretty()
+                }
+            };
+            let path = tmpfile(&format!("mut_{tag}_{k}"));
+            std::fs::write(&path, &mutated).unwrap();
+            let err = if *is_mapped {
+                MappedProgram::load(&path).err().map(|e| format!("{e:#}"))
+            } else {
+                CompiledProgram::load(&path).err().map(|e| format!("{e:#}"))
+            };
+            std::fs::remove_file(&path).ok();
+            if let Some(msg) = err {
+                assert!(
+                    msg.contains(&path.display().to_string()),
+                    "{tag} mutation {k}: error must name the artifact path: {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn truncated_and_wrong_typed_artifacts_error_deterministically() {
+    // The targeted (non-random) corners of the robustness property,
+    // pinned so a regression names itself: hard truncation, a
+    // wrong-typed version, and a mapped artifact whose tile size was
+    // damaged to something the grid rebuild would have panicked on.
+    let program = Dt2Cam::dataset("iris").unwrap().compile();
+    let mapped = program.map(16, &DeviceParams::default());
+
+    // Truncated mid-stream: a parse error naming the path.
+    let text = mapped.to_json().to_string_pretty();
+    let path = tmpfile("truncated_mapped.json");
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let msg = format!("{:#}", MappedProgram::load(&path).unwrap_err());
+    std::fs::remove_file(&path).ok();
+    assert!(msg.contains(&path.display().to_string()), "{msg}");
+
+    // Wrong-typed version field.
+    let bad = text.replace("\"version\": 2", "\"version\": \"two\"");
+    let err = MappedProgram::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+
+    // Zero tile size (used to reach a divide-by-zero in the grid
+    // rebuild): typed error naming the field.
+    let bad = text.replace("\"tile_size\": 16", "\"tile_size\": 0");
+    let err = MappedProgram::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("tile size"), "{err:#}");
 }
 
 #[test]

@@ -11,7 +11,7 @@ use std::io::Write;
 use std::net::TcpStream;
 use std::time::Duration;
 
-use dt2cam::api::{BackendOptions, Dt2Cam};
+use dt2cam::api::{registry, BackendOptions, Dt2Cam};
 use dt2cam::cart::ForestParams;
 use dt2cam::config::EngineKind;
 use dt2cam::net::{
@@ -55,6 +55,44 @@ fn spawn_forest_server(
 
 fn has_pjrt_artifacts() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Same 3-bank forest program, served through the **streaming
+/// pipelined** coordinator (`serve --listen --pipelined`). The expected
+/// predictions are deliberately computed by the *sequential* in-process
+/// session — the acceptance criterion is that the pipelined wire path
+/// answers with exactly those classes.
+fn spawn_pipelined_forest_server(
+    engine: EngineKind,
+    batch: usize,
+    cfg: ServerConfig,
+    depth: usize,
+) -> (
+    dt2cam::net::ServerHandle,
+    Vec<Vec<f64>>,
+    Vec<Option<usize>>,
+) {
+    let fp = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest("haberman", &fp).unwrap();
+    let mapped = model.compile().map(16, &DeviceParams::default());
+    let expected = mapped
+        .session(engine, batch)
+        .unwrap()
+        .classify_all(&model.test_x)
+        .unwrap();
+    let opts = BackendOptions::default();
+    let server = Server::spawn("127.0.0.1:0", cfg, move || {
+        Ok(mapped
+            .session_pipelined(engine, batch, &opts, depth)?
+            .into_coordinator())
+    })
+    .unwrap();
+    (server, model.test_x, expected)
 }
 
 #[test]
@@ -118,6 +156,131 @@ fn concurrent_clients_get_exactly_the_in_process_answers_registry_wide() {
         assert_eq!(report.metrics.decisions, inputs.len() as u64);
         assert_eq!(report.shed, 0);
     }
+}
+
+#[test]
+fn pipelined_wire_serving_answers_concurrent_clients_with_sequential_classes() {
+    // The ISSUE 5 acceptance test: `serve --listen --pipelined` on a
+    // 3-bank forest, 4 concurrent wire clients, a *tiny* stage-channel
+    // depth (1) so batches genuinely queue inside the pipeline — every
+    // admitted request must come back exactly once, with its own id,
+    // carrying exactly the class the sequential in-process
+    // `classify_all` produces. Runs on every pipeline-capable registry
+    // backend; the rest skip cleanly.
+    for engine in EngineKind::ALL {
+        if !registry::pipeline_capable(engine) {
+            eprintln!(
+                "skipping {}: backend cannot drive the stage pipeline",
+                engine.name()
+            );
+            continue;
+        }
+        let (server, inputs, expected) =
+            spawn_pipelined_forest_server(engine, 8, ServerConfig::default(), 1);
+        let addr = server.local_addr().to_string();
+        let n_clients = 4;
+        let got: Vec<Vec<(usize, Option<usize>)>> = std::thread::scope(|s| {
+            (0..n_clients)
+                .map(|c| {
+                    let addr = addr.clone();
+                    let inputs = &inputs;
+                    s.spawn(move || {
+                        let mut client = Client::connect(&addr).unwrap();
+                        let mut out = Vec::new();
+                        let mut i = c;
+                        while i < inputs.len() {
+                            out.push((i, client.classify(&inputs[i]).unwrap()));
+                            i += n_clients;
+                        }
+                        out
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let mut answered = 0usize;
+        for stripe in got {
+            for (i, class) in stripe {
+                assert_eq!(class, expected[i], "engine {} input {i}", engine.name());
+                answered += 1;
+            }
+        }
+        assert_eq!(answered, inputs.len(), "every request answered exactly once");
+
+        // The snapshot sees the pipelined coordinator's roll-ups.
+        let mut probe = Client::connect(&addr).unwrap();
+        let snap = probe.metrics().unwrap();
+        assert_eq!(snap.decisions, inputs.len() as u64, "{}", engine.name());
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.n_banks, 3);
+
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.metrics.decisions, inputs.len() as u64);
+        assert_eq!(report.metrics.stage_errors, 0);
+        assert!(report.metrics.modeled_pipe_throughput > 0.0);
+    }
+}
+
+#[test]
+fn pipelined_graceful_shutdown_drains_batches_already_inside_the_pipeline() {
+    // Batch width 4, stage-channel depth 1, hour-long partial-batch
+    // deadline: the two full batches (ids 0..8) release into the
+    // pipeline immediately, the trailing partial (ids 8..11) is held by
+    // the batcher. The wire shutdown must answer all 11 exactly once —
+    // the in-pipeline batches via the drain, the partial via the forced
+    // flush — before the connection closes.
+    let (server, inputs, expected) = spawn_pipelined_forest_server(
+        EngineKind::Native,
+        4,
+        ServerConfig {
+            admission: 64,
+            batch_max_wait: Some(Duration::from_secs(3600)),
+        },
+        1,
+    );
+    let addr = server.local_addr().to_string();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let total = 11u64;
+    for id in 0..total {
+        write_frame(
+            &mut stream,
+            &Frame::Request {
+                id,
+                features: inputs[id as usize].clone(),
+            },
+        )
+        .unwrap();
+    }
+    // Let the scheduler release the full batches into the pipeline so
+    // the shutdown genuinely finds batches *inside* the stages.
+    std::thread::sleep(Duration::from_millis(100));
+    write_frame(&mut stream, &Frame::Shutdown).unwrap();
+
+    let mut seen = std::collections::HashMap::new();
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Frame::Response { id, class, .. }) => {
+                assert!(
+                    seen.insert(id, class).is_none(),
+                    "request {id} answered twice"
+                );
+            }
+            Ok(other) => panic!("unexpected frame during drain: {other:?}"),
+            Err(e) => {
+                assert!(e.is_fatal(), "non-fatal error mid-drain: {e}");
+                break;
+            }
+        }
+    }
+    assert_eq!(seen.len(), total as usize, "every admitted request answered");
+    for (id, class) in seen {
+        assert_eq!(class, expected[id as usize], "request {id}");
+    }
+    let report = server.join().unwrap();
+    assert_eq!(report.metrics.decisions, total);
+    assert_eq!(report.shed, 0);
 }
 
 #[test]

@@ -157,7 +157,52 @@ fn sequential_equals_pipelined_outcomes() {
         let sched = Scheduler::new(&plan, &p);
         for (i, (qs, real)) in batches.iter().enumerate() {
             let seq = sched.run_batch(&NativeBackend::new(), qs, *real).unwrap();
+            assert!(piped[i].error.is_none(), "batch {i} carried a stage error");
             assert_eq!(piped[i].classes, seq.classes, "batch {i}");
+            assert_eq!(piped[i].active_row_evals, seq.active_row_evals, "batch {i}");
+            assert_eq!(piped[i].modeled_energy, seq.modeled_energy, "batch {i}");
         }
+    }
+}
+
+#[test]
+fn pipelined_session_equals_sequential_session_end_to_end() {
+    // The facade-level differential: `session_pipelined` (streaming
+    // bank × stage pipeline behind the coordinator seam) against the
+    // plain `session`, on a 3-bank forest, per pipeline-capable engine.
+    use dt2cam::api::{registry, BackendOptions, Dt2Cam};
+    use dt2cam::cart::ForestParams;
+    use dt2cam::config::EngineKind;
+
+    let fp = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest("haberman", &fp).unwrap();
+    let mapped = model.compile().map(16, &DeviceParams::default());
+    let opts = BackendOptions::default();
+    for engine in EngineKind::ALL {
+        if !registry::pipeline_capable(engine) {
+            eprintln!("skipping {}: cannot drive the stage pipeline", engine.name());
+            continue;
+        }
+        let mut seq = mapped.session(engine, 8).unwrap();
+        let mut piped = mapped.session_pipelined(engine, 8, &opts, 2).unwrap();
+        assert!(piped.pipelined());
+        let a = seq.classify_all(&model.test_x).unwrap();
+        let b = piped.classify_all(&model.test_x).unwrap();
+        assert_eq!(a, b, "engine {}", engine.name());
+        assert_eq!(
+            seq.metrics().modeled_energy,
+            piped.metrics().modeled_energy,
+            "engine {}",
+            engine.name()
+        );
+        assert_eq!(
+            seq.metrics().active_row_evals,
+            piped.metrics().active_row_evals
+        );
     }
 }

@@ -1,11 +1,13 @@
 //! Property tests over the full compile→map→search chain on randomly
 //! generated learning problems (the repository's deepest invariants).
 
+use dt2cam::api::registry::{self, BackendOptions};
 use dt2cam::api::NativeBackend;
-use dt2cam::cart::{train, TrainParams};
+use dt2cam::cart::{train, train_forest, Forest, ForestParams, TrainParams};
 use dt2cam::compiler::compile;
+use dt2cam::config::EngineKind;
 use dt2cam::coordinator::scheduler::Scheduler;
-use dt2cam::coordinator::ServingPlan;
+use dt2cam::coordinator::{BankSpec, Coordinator, ServingPlan};
 use dt2cam::synth::mapping::MappedArray;
 use dt2cam::synth::simulate::{simulate, SimOptions};
 use dt2cam::tcam::params::DeviceParams;
@@ -56,6 +58,144 @@ fn full_chain_equivalence_property() {
         }
         Ok(())
     });
+}
+
+/// One [`BankSpec`] per tree, borrowing the mapped arrays (specs are
+/// consumed by coordinator construction, so callers build them twice —
+/// once per execution strategy).
+fn bank_specs<'a>(forest: &Forest, arrays: &'a [MappedArray]) -> Vec<BankSpec<'a>> {
+    forest
+        .trees
+        .iter()
+        .zip(&forest.feature_sets)
+        .zip(arrays)
+        .map(|((t, feats), m)| BankSpec {
+            lut: compile(t),
+            features: feats.clone(),
+            mapped: m,
+            vref: &m.vref,
+        })
+        .collect()
+}
+
+/// The ISSUE 5 differential harness: on seeded randomized ensemble
+/// programs (1-, 3-, and 9-bank bagged forests over random learning
+/// problems, varied tile sizes, varied channel depths), the streaming
+/// pipelined coordinator must be **bit-identical** to the sequential
+/// coordinator — classes, modeled energy, active-row counts, and the
+/// per-bank energy breakdown — on every registry backend that supports
+/// pipelining. Backends that cannot drive stage threads (the `Rc`-backed
+/// pjrt client) skip cleanly with the registry's own message.
+#[test]
+fn pipelined_coordinator_bit_identical_to_sequential_across_backends() {
+    let opts = BackendOptions::default();
+    for kind in EngineKind::ALL {
+        if let Err(e) = registry::create_pipeline_backend(kind, &opts) {
+            assert!(
+                !registry::pipeline_capable(kind),
+                "constructor refused a pipeline-capable backend: {e:#}"
+            );
+            eprintln!("skipping {} in the pipelined harness: {e:#}", kind.name());
+            continue;
+        }
+        for n_banks in [1usize, 3, 9] {
+            property_r(
+                &format!("pipelined == sequential ({}, {n_banks} banks)", kind.name()),
+                3,
+                |g: &mut Gen| {
+                    let n = g.usize_in(40, 110);
+                    let f = g.usize_in(2, 5);
+                    let classes = g.usize_in(2, 4);
+                    let xs = g.matrix(n, f);
+                    let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+                    let forest = train_forest(
+                        &xs,
+                        &ys,
+                        classes,
+                        &ForestParams {
+                            n_trees: n_banks,
+                            sample_fraction: 0.8,
+                            max_features: 2.min(f),
+                            ..Default::default()
+                        },
+                        &mut Prng::new(g.u64()),
+                    );
+                    let p = DeviceParams::default();
+                    let s = g.pick(&[16usize, 32, 64]);
+                    let arrays: Vec<MappedArray> = forest
+                        .trees
+                        .iter()
+                        .map(|t| {
+                            MappedArray::from_lut(&compile(t), s, &p, &mut Prng::new(g.u64()))
+                        })
+                        .collect();
+                    let batch = g.pick(&[4usize, 8]);
+                    let depth = g.pick(&[1usize, 2, 4]);
+
+                    let dispatch = registry::create_bank_dispatch(kind, &opts)
+                        .map_err(|e| format!("{e:#}"))?;
+                    let mut seq = Coordinator::with_banks(
+                        dispatch,
+                        batch,
+                        bank_specs(&forest, &arrays),
+                        p.clone(),
+                    )
+                    .map_err(|e| format!("{e:#}"))?;
+                    let backend = registry::create_pipeline_backend(kind, &opts)
+                        .map_err(|e| format!("{e:#}"))?;
+                    let mut piped = Coordinator::with_banks_pipelined(
+                        backend,
+                        batch,
+                        bank_specs(&forest, &arrays),
+                        p.clone(),
+                        depth,
+                    )
+                    .map_err(|e| format!("{e:#}"))?;
+
+                    // Probes in and slightly out of the training domain.
+                    let probes: Vec<Vec<f64>> = (0..g.usize_in(10, 30))
+                        .map(|_| (0..f).map(|_| g.f64_in(-0.1, 1.1)).collect())
+                        .collect();
+                    let a = seq.classify_all(&probes).map_err(|e| format!("{e:#}"))?;
+                    let b = piped.classify_all(&probes).map_err(|e| format!("{e:#}"))?;
+                    if a != b {
+                        return Err(format!(
+                            "classes diverged (S={s}, batch={batch}, depth={depth}): {a:?} vs {b:?}"
+                        ));
+                    }
+                    if piped.in_flight() != 0 {
+                        return Err(format!("{} batches left in flight", piped.in_flight()));
+                    }
+                    // Hardware cost roll-ups must agree bit for bit.
+                    if seq.metrics.modeled_energy != piped.metrics.modeled_energy {
+                        return Err(format!(
+                            "modeled energy diverged: {} vs {}",
+                            seq.metrics.modeled_energy, piped.metrics.modeled_energy
+                        ));
+                    }
+                    if seq.metrics.active_row_evals != piped.metrics.active_row_evals {
+                        return Err(format!(
+                            "active-row counts diverged: {} vs {}",
+                            seq.metrics.active_row_evals, piped.metrics.active_row_evals
+                        ));
+                    }
+                    if seq.metrics.bank_energy != piped.metrics.bank_energy {
+                        return Err(format!(
+                            "per-bank energy diverged: {:?} vs {:?}",
+                            seq.metrics.bank_energy, piped.metrics.bank_energy
+                        ));
+                    }
+                    if seq.metrics.decisions != piped.metrics.decisions
+                        || seq.metrics.no_match != piped.metrics.no_match
+                        || seq.metrics.multi_match != piped.metrics.multi_match
+                    {
+                        return Err("decision/match counters diverged".into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
 }
 
 /// Energy accounting invariants: SP <= no-SP; first division pays full.
