@@ -40,6 +40,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::config::json::Json;
 use crate::coordinator::plan::{DivisionPlan, ServingPlan};
 use crate::runtime::{ArtifactKind, BufferKey, MatchEngine};
 use crate::util::rowmask::{reset_masks, RowMask};
@@ -119,36 +120,126 @@ pub trait MatchBackend {
     fn invalidate(&self) {}
 }
 
+/// One bank's outcome for one externally-batched set of rows, as
+/// reported by a remote worker. Mirrors the scheduler's per-bank batch
+/// outcome field-for-field, except `bank` carries the **global** bank
+/// id (the worker's local index is a placement detail the router never
+/// sees). `classes[lane]` is the bank's surviving class for row `lane`
+/// (`None` = no CAM row matched in this bank); `modeled_energy` is the
+/// bank's modeled energy for the whole batch — summed in ascending
+/// global bank order by the router, it reproduces the single-process
+/// f64 sum bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteBankOutcome {
+    /// Global bank id.
+    pub bank: usize,
+    /// Per-row surviving class (`None` = no match in this bank).
+    pub classes: Vec<Option<usize>>,
+    /// Modeled energy of this bank over the batch (J).
+    pub modeled_energy: f64,
+    /// Row evaluations actually performed (selective precharge).
+    pub active_row_evals: u64,
+    /// Column divisions walked.
+    pub divisions_evaluated: usize,
+    /// Rows of the batch with no surviving CAM row in this bank.
+    pub no_match: usize,
+    /// Rows with >1 surviving CAM row (lowest-index rule applied).
+    pub multi_match: usize,
+}
+
+/// Live status of one remote worker as seen by a remote dispatch
+/// implementation. `snapshot` is the worker's own metrics snapshot as
+/// raw JSON (this layer cannot name `net::MetricsSnapshot` without a
+/// circular dependency; the serving layer decodes it).
+#[derive(Clone, Debug)]
+pub struct RemoteWorkerStatus {
+    /// Address the worker is dialed at.
+    pub addr: String,
+    /// Global bank ids placed on this worker (primaries and replicas).
+    pub banks: Vec<usize>,
+    /// Whether the worker currently holds a live connection.
+    pub alive: bool,
+    /// Bank-batches dispatched to this worker.
+    pub dispatched: u64,
+    /// Dispatches that failed over (transport error, error frame).
+    pub failed: u64,
+    /// Dispatches the worker refused with a shed frame.
+    pub shed: u64,
+    /// The worker's own metrics snapshot (JSON), when scraped.
+    pub snapshot: Option<Json>,
+}
+
+/// The remote bank-evaluation seam: an implementation owns connections
+/// to worker processes that each serve a subset of the program's banks,
+/// and answers one batch of raw feature rows with one
+/// [`RemoteBankOutcome`] **per bank of the whole program**, in
+/// ascending global bank order. Failover between replicas, retry
+/// bounds and per-worker accounting live behind this trait; the
+/// coordinator only sees "all banks answered" or a typed error (which
+/// it converts to per-request error responses — a lost worker must
+/// never kill the serving loop).
+pub trait RemoteBankDispatch: Send {
+    /// Human-readable dispatch name (metrics, logs).
+    fn name(&self) -> &'static str;
+
+    /// Number of banks in the placement (must equal the program's).
+    fn n_banks(&self) -> usize;
+
+    /// Evaluate `rows` on every bank of the program, returning exactly
+    /// one outcome per bank, sorted by ascending global bank id, each
+    /// with `classes.len() == rows.len()`. Errors only when some bank
+    /// is unserveable after exhausting its replicas.
+    fn run_banks(&mut self, rows: &[Vec<f64>]) -> Result<Vec<RemoteBankOutcome>>;
+
+    /// Per-worker placement/health/accounting status; with `scrape`,
+    /// also pull each live worker's own metrics snapshot.
+    fn worker_status(&mut self, scrape: bool) -> Vec<RemoteWorkerStatus>;
+}
+
 /// How a multi-bank (forest) program's banks are dispatched onto one
 /// backend. Banks are independent CAM arrays, so a `Send + Sync` backend
 /// can evaluate them concurrently (one shared instance, per-bank
 /// scheduler scratch); the PJRT client is `Rc`-backed and single-threaded
 /// by construction, so it walks the banks sequentially. Single-bank
 /// programs behave identically under either variant — the coordinator
-/// short-circuits the fan-out when there is only one bank.
+/// short-circuits the fan-out when there is only one bank. `Remote`
+/// sends each batch's raw rows to worker processes that each serve a
+/// subset of the banks (the cluster router's mode): there is no local
+/// [`MatchBackend`] at all, and the coordinator joins the returned
+/// per-bank outcomes with the same vote it applies locally.
 pub enum BankDispatch {
     /// Banks evaluated one after another on a single-threaded backend.
     Sequential(Box<dyn MatchBackend>),
     /// Banks fanned out over [`crate::util::ThreadPool`] workers, all
     /// sharing this backend instance.
     Parallel(Arc<dyn MatchBackend + Send + Sync>),
+    /// Banks evaluated by remote worker processes (cluster router).
+    /// The mutex decouples the dispatch's `&mut self` calls from the
+    /// coordinator's simultaneous borrows of its own bank state.
+    Remote(Mutex<Box<dyn RemoteBankDispatch>>),
 }
 
 impl BankDispatch {
-    /// The underlying backend, dispatch-agnostic.
-    pub fn backend(&self) -> &dyn MatchBackend {
+    /// The underlying local backend; `None` for remote dispatch (the
+    /// banks live in other processes).
+    pub fn backend(&self) -> Option<&dyn MatchBackend> {
         match self {
-            BankDispatch::Sequential(b) => b.as_ref(),
-            BankDispatch::Parallel(b) => b.as_ref(),
+            BankDispatch::Sequential(b) => Some(b.as_ref()),
+            BankDispatch::Parallel(b) => Some(b.as_ref()),
+            BankDispatch::Remote(_) => None,
         }
     }
 
-    /// Registry name of the underlying backend.
+    /// Registry name of the underlying backend (or the remote
+    /// dispatch's own name).
     pub fn name(&self) -> &'static str {
-        self.backend().name()
+        match self {
+            BankDispatch::Remote(r) => r.lock().unwrap().name(),
+            _ => self.backend().expect("local dispatch").name(),
+        }
     }
 
-    /// Whether banks may evaluate concurrently.
+    /// Whether banks may evaluate concurrently in this process.
     pub fn is_parallel(&self) -> bool {
         matches!(self, BankDispatch::Parallel(_))
     }

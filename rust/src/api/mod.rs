@@ -80,7 +80,7 @@ pub mod serde;
 
 pub use backend::{
     BankDispatch, DivisionMatches, DivisionRequest, MatchBackend, NativeBackend, PjrtBackend,
-    ThreadedNativeBackend,
+    RemoteBankDispatch, RemoteBankOutcome, RemoteWorkerStatus, ThreadedNativeBackend,
 };
 pub use program::{
     test_inputs, CompiledBank, CompiledProgram, Dt2Cam, MappedBank, MappedProgram, Session,

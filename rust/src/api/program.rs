@@ -476,7 +476,7 @@ impl MappedProgram {
     }
 
     /// One [`BankSpec`] per bank, borrowing this program's grids.
-    fn bank_specs(&self) -> Vec<BankSpec<'_>> {
+    pub(crate) fn bank_specs(&self) -> Vec<BankSpec<'_>> {
         self.program
             .banks
             .iter()
@@ -486,6 +486,28 @@ impl MappedProgram {
                 features: cb.features.clone(),
                 mapped: &mb.mapped,
                 vref: &mb.mapped.vref,
+            })
+            .collect()
+    }
+
+    /// [`BankSpec`]s for a subset of this program's banks, named by
+    /// **global** bank id (the cluster worker's constructor input —
+    /// banks must be ascending and unique so the worker's local bank
+    /// order mirrors the global order).
+    pub(crate) fn bank_specs_for(&self, banks: &[usize]) -> Result<Vec<BankSpec<'_>>> {
+        anyhow::ensure!(!banks.is_empty(), "a worker needs at least one bank");
+        anyhow::ensure!(
+            banks.windows(2).all(|w| w[0] < w[1]),
+            "bank subset must be strictly ascending, got {banks:?}"
+        );
+        let all = self.bank_specs();
+        let n = all.len();
+        let mut picked: Vec<Option<BankSpec<'_>>> = all.into_iter().map(Some).collect();
+        banks
+            .iter()
+            .map(|&b| {
+                anyhow::ensure!(b < n, "bank {b} out of range (program has {n} banks)");
+                Ok(picked[b].take().expect("ascending unique ids"))
             })
             .collect()
     }

@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 26] = [
+const VALUE_KEYS: [&str; 29] = [
     "dataset",
     "tile-size",
     "seed",
@@ -42,6 +42,9 @@ const VALUE_KEYS: [&str; 26] = [
     "rps",
     "pipe-depth",
     "tag",
+    "banks",
+    "workers",
+    "replicas",
 ];
 
 impl Args {

@@ -554,7 +554,10 @@ pub fn serve(args: &mut Args) -> Result<()> {
 pub fn loadgen(args: &mut Args) -> Result<()> {
     let connect = args
         .opt_str("connect")
-        .context("--connect ADDR is required (the `dt2cam serve --listen` address)")?;
+        .context("--connect ADDR is required (the `dt2cam serve --listen` address; \
+                  comma-separate several to round-robin clients across a fleet)")?;
+    let targets = crate::cluster::parse_worker_list(&connect)
+        .context("parsing --connect address list")?;
     let name = dataset_arg(args)?;
     let seed = args.opt_u64("seed")?.unwrap_or(crate::api::EXPERIMENT_SEED);
     let tag = args.opt_str("tag").unwrap_or_else(|| "net_loopback".into());
@@ -582,11 +585,14 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
         inputs.len()
     );
     let report = if rps > 0.0 {
-        net::open_loop(&connect, &inputs, clients, rps, requests)?
+        net::open_loop_multi(&targets, &inputs, clients, rps, requests)?
     } else {
-        net::closed_loop(&connect, &inputs, clients, requests)?
+        net::closed_loop_multi(&targets, &inputs, clients, requests)?
     };
     println!("{}", report.summary_line());
+    for (addr, sub) in &report.per_target {
+        println!("  {addr}: {}", sub.summary_line());
+    }
 
     let mut b = Bench::new(&tag);
     b.report_value("wall_throughput", report.throughput(), "dec/s");
@@ -596,9 +602,165 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
     b.finish();
 
     if do_shutdown {
-        net::Client::connect(&connect)?.shutdown()?;
-        eprintln!("sent shutdown frame to {connect}");
+        for addr in &targets {
+            net::Client::connect(addr)?.shutdown()?;
+            eprintln!("sent shutdown frame to {addr}");
+        }
     }
+    Ok(())
+}
+
+/// Stage artifacts for the cluster commands: load a pinned
+/// `--program PATH` artifact or train+compile `--dataset NAME`
+/// (`[--forest N --sample-fraction F --max-features M] [--tile-size S]`).
+/// Same conflict rules as `serve`: the artifact pins dataset, tile size
+/// and bank structure. Calls `args.finish()`.
+fn cluster_program(args: &mut Args) -> Result<MappedProgram> {
+    let tile_size_arg = args.opt_usize("tile-size")?;
+    let forest = forest_params_arg(args)?;
+    if let Some(path) = args.opt_str("program") {
+        if let Some(d) = args.opt_str("dataset") {
+            anyhow::bail!(
+                "--dataset {d} conflicts with --program (the artifact pins its dataset)"
+            );
+        }
+        if forest.is_some() {
+            anyhow::bail!(
+                "--forest conflicts with --program (the artifact pins its bank structure)"
+            );
+        }
+        args.finish()?;
+        let mp = MappedProgram::load(&PathBuf::from(&path))?;
+        if let Some(ts) = tile_size_arg {
+            if ts != mp.tile_size() {
+                anyhow::bail!(
+                    "--tile-size {ts} conflicts with --program (artifact was mapped at S={})",
+                    mp.tile_size()
+                );
+            }
+        }
+        eprintln!(
+            "loaded program artifact {path}: dataset {}, S={}, {} bank(s)",
+            mp.program.dataset,
+            mp.tile_size(),
+            mp.n_banks()
+        );
+        Ok(mp)
+    } else {
+        let name = dataset_arg(args)?;
+        args.finish()?;
+        let model = train_model(&name, &forest)?;
+        let program = model.compile();
+        Ok(program.map(tile_size_arg.unwrap_or(128), &DeviceParams::default()))
+    }
+}
+
+/// `dt2cam worker`: serve a bank subset of one program as a cluster
+/// worker — the existing socket server over a coordinator restricted
+/// to `--banks` (global ids, strictly ascending). Router and workers
+/// must load the *same* program (share a `compile --save` artifact or
+/// the same `--dataset`/`--forest` flags: training is deterministic)
+/// or the router's fan-out will be answered with mismatched grids.
+pub fn worker(args: &mut Args) -> Result<()> {
+    let listen = args
+        .opt_str("listen")
+        .context("--listen ADDR is required (the address the router will dial)")?;
+    let banks_s = args
+        .opt_str("banks")
+        .context("--banks LIST is required (global bank ids, e.g. 0,2,4)")?;
+    let engine = engine_arg(args)?;
+    let batch = args.opt_usize("batch")?.unwrap_or(32);
+    let admission = args.opt_usize("admission")?.unwrap_or(256);
+    let opts = backend_opts(args);
+    anyhow::ensure!(batch >= 1, "--batch must be >= 1 (got 0)");
+    anyhow::ensure!(admission >= 1, "--admission must be >= 1 (got 0)");
+    let banks = crate::cluster::parse_bank_list(&banks_s)?;
+    let mapped = cluster_program(args)?;
+
+    let name = mapped.program.dataset.clone();
+    let n_banks = mapped.n_banks();
+    let s = mapped.tile_size();
+    let server = crate::cluster::spawn_worker(
+        listen.as_str(),
+        net::ServerConfig {
+            admission,
+            ..Default::default()
+        },
+        mapped,
+        engine,
+        batch,
+        opts,
+        banks.clone(),
+    )?;
+    eprintln!(
+        "dt2cam worker serving banks {banks:?} of {n_banks} ({name} @S={s}) on {} \
+         (engine {}, batch {batch}, admission {admission})",
+        server.local_addr(),
+        engine.name()
+    );
+    eprintln!(
+        "stop with: dt2cam loadgen --connect {} --dataset {name} --quick --shutdown",
+        server.local_addr()
+    );
+    let report = server.join()?;
+    println!(
+        "worker stopped: conns={} shed={} protocol_errors={}",
+        report.connections, report.shed, report.protocol_errors
+    );
+    println!("{}", report.metrics.summary_line());
+    Ok(())
+}
+
+/// `dt2cam router`: the cluster frontend. Loads the full program,
+/// places its banks round-robin over `--workers` (with `--replicas R`
+/// failover copies), dials the fleet, and serves clients through the
+/// unchanged frame protocol. Workers must already be listening.
+pub fn router(args: &mut Args) -> Result<()> {
+    let listen = args
+        .opt_str("listen")
+        .context("--listen ADDR is required (the address clients will dial)")?;
+    let workers_s = args.opt_str("workers").context(
+        "--workers LIST is required (comma-separated worker addresses, e.g. \
+         127.0.0.1:7401,127.0.0.1:7402)",
+    )?;
+    let replicas = args.opt_usize("replicas")?.unwrap_or(0);
+    let batch = args.opt_usize("batch")?.unwrap_or(32);
+    let admission = args.opt_usize("admission")?.unwrap_or(256);
+    anyhow::ensure!(batch >= 1, "--batch must be >= 1 (got 0)");
+    anyhow::ensure!(admission >= 1, "--admission must be >= 1 (got 0)");
+    let workers = crate::cluster::parse_worker_list(&workers_s)?;
+    let mapped = cluster_program(args)?;
+
+    let name = mapped.program.dataset.clone();
+    let n_banks = mapped.n_banks();
+    let s = mapped.tile_size();
+    let placement = crate::cluster::Placement::round_robin(n_banks, workers.clone(), replicas)?;
+    let server = crate::cluster::spawn_router(
+        listen.as_str(),
+        net::ServerConfig {
+            admission,
+            ..Default::default()
+        },
+        mapped,
+        batch,
+        placement,
+    )?;
+    eprintln!(
+        "dt2cam router serving {name} @S={s} ({n_banks} banks over {} worker(s), \
+         {replicas} replica(s)) on {} (batch {batch}, admission {admission})",
+        workers.len(),
+        server.local_addr()
+    );
+    eprintln!(
+        "stop with: dt2cam loadgen --connect {} --dataset {name} --quick --shutdown",
+        server.local_addr()
+    );
+    let report = server.join()?;
+    println!(
+        "router stopped: conns={} shed={} protocol_errors={}",
+        report.connections, report.shed, report.protocol_errors
+    );
+    println!("{}", report.metrics.summary_line());
     Ok(())
 }
 
@@ -956,6 +1118,49 @@ mod tests {
         .unwrap_err();
         assert!(format!("{err:#}").contains("S=16"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn worker_and_router_validate_required_flags() {
+        let err = worker(&mut args("worker --banks 0,1")).unwrap_err();
+        assert!(format!("{err:#}").contains("--listen"));
+        let err = worker(&mut args("worker --listen 127.0.0.1:0")).unwrap_err();
+        assert!(format!("{err:#}").contains("--banks"));
+        let err = worker(&mut args(
+            "worker --listen 127.0.0.1:0 --banks 2,1 --dataset iris",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("ascending"), "{err:#}");
+        let err = router(&mut args("router --listen 127.0.0.1:0")).unwrap_err();
+        assert!(format!("{err:#}").contains("--workers"));
+        let err = router(&mut args("router --workers 127.0.0.1:1")).unwrap_err();
+        assert!(format!("{err:#}").contains("--listen"));
+    }
+
+    #[test]
+    fn loadgen_round_robins_comma_separated_targets() {
+        // Two single-process servers standing in for a fleet: the CLI
+        // must split --connect, spread clients, and shut both down.
+        let spawn = || {
+            let model = Dt2Cam::dataset("iris").unwrap();
+            let mapped = model.compile().map(16, &DeviceParams::default());
+            net::Server::spawn("127.0.0.1:0", net::ServerConfig::default(), move || {
+                Ok(mapped.session(EngineKind::Native, 8)?.into_coordinator())
+            })
+            .unwrap()
+        };
+        let (a, b) = (spawn(), spawn());
+        let connect = format!("{},{}", a.local_addr(), b.local_addr());
+        loadgen(&mut args(&format!(
+            "loadgen --connect {connect} --dataset iris --quick --clients 2 --requests 16 \
+             --tag net_cli_multi --shutdown"
+        )))
+        .unwrap();
+        let (ra, rb) = (a.join().unwrap(), b.join().unwrap());
+        // 2 clients round-robin over 2 targets: one each, 8 requests per.
+        assert_eq!(ra.metrics.decisions + rb.metrics.decisions, 16);
+        assert_eq!(ra.metrics.decisions, 8);
+        assert_eq!(ra.shed + rb.shed, 0);
     }
 
     #[test]

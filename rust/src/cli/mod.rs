@@ -11,6 +11,10 @@
 //!                 [--pipelined [--pipe-depth D]]
 //! dt2cam serve    --program prog.json --engine ENGINE   (two-process flow)
 //! dt2cam serve    --listen 127.0.0.1:7230 [--admission N] [--pipelined] ...
+//! dt2cam worker   --listen 127.0.0.1:7401 --banks 0,2,4
+//!                 (--dataset NAME | --program prog.json) [--engine ENGINE]
+//! dt2cam router   --listen 127.0.0.1:7230 --workers 127.0.0.1:7401,127.0.0.1:7402
+//!                 [--replicas R] (--dataset NAME | --program prog.json)
 //! dt2cam loadgen  --connect 127.0.0.1:7230 --dataset NAME [--clients N]
 //!                 [--rps R] [--requests N] [--tag NAME] [--quick] [--shutdown]
 //! dt2cam backends
@@ -41,6 +45,8 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "compile" => commands::compile(&mut args),
         "simulate" => commands::simulate_cmd(&mut args),
         "serve" => commands::serve(&mut args),
+        "worker" => commands::worker(&mut args),
+        "router" => commands::router(&mut args),
         "loadgen" => commands::loadgen(&mut args),
         "backends" => commands::backends(&mut args),
         "report" => commands::report(&mut args),
@@ -65,7 +71,11 @@ USAGE:
   dt2cam serve    --program PROGRAM.json [--engine ENGINE] [--batch B]
   dt2cam serve    --listen ADDR [--admission N] (--dataset NAME | --program P.json)
                   [--engine ENGINE] [--batch B] [--forest N] [--pipelined]
-  dt2cam loadgen  --connect ADDR --dataset NAME [--clients N] [--rps R]
+  dt2cam worker   --listen ADDR --banks LIST (--dataset NAME | --program P.json)
+                  [--engine ENGINE] [--batch B] [--admission N]
+  dt2cam router   --listen ADDR --workers ADDR,ADDR,... [--replicas R]
+                  (--dataset NAME | --program P.json) [--batch B] [--admission N]
+  dt2cam loadgen  --connect ADDR[,ADDR...] --dataset NAME [--clients N] [--rps R]
                   [--requests N] [--seed SEED] [--tag NAME] [--quick] [--shutdown]
   dt2cam backends
   dt2cam report   [--all] [--table N]... [--fig N]... [--quick] [--out-dir DIR]
@@ -87,5 +97,16 @@ batcher coalesces requests across connections, admission is bounded
 in-flight requests before the server stops. `loadgen` generates
 closed-loop (default) or open-loop (`--rps R`) traffic against it and
 reports p50/p95/p99 end-to-end latency and wall throughput;
-`--shutdown` stops the server afterwards.
+`--shutdown` stops the server afterwards. `--connect` takes a
+comma-separated list to round-robin clients across a fleet (per-target
+breakdown in the report; `--shutdown` stops every target).
+`worker`/`router` shard one forest's banks across processes: each
+worker serves `--banks` (global ids) of the shared program, the router
+places banks round-robin over `--workers` (`--replicas R` failover
+copies), fans each batch out as bank-subset frames, and joins survivor
+votes by the normative majority rule — classes and modeled energy are
+bit-identical to single-process `serve`. Clients dial the router with
+the unchanged protocol. Router and workers must load the same program
+(share a `compile --save` artifact, or identical --dataset/--forest
+flags — training is deterministic).
 ";

@@ -1,0 +1,48 @@
+//! Distributed bank-sharded serving: one forest, N processes.
+//!
+//! The paper's pipelined throughput headline assumes all CAM banks run
+//! concurrently in hardware; a single process caps out at its cores.
+//! Banks are independently evaluable CAM arrays (the same property
+//! RETENTION and Pedretti et al.'s analog-CAM tree engine exploit), so
+//! sharding the forest *by bank* across worker processes is a
+//! bijective, accuracy-preserving distribution: every worker computes
+//! exactly what the single process would for its banks, and the
+//! router's join is the normative `cart::vote_survivors` rule over
+//! outcomes in ascending global bank order — classes and per-bank
+//! modeled energy stay bit-identical.
+//!
+//! ```text
+//!   clients ──frames──▶ router (full program metadata,
+//!              │           BankDispatch::Remote)
+//!              │   BankBatch{banks, rows} per owning worker
+//!              ▼
+//!   worker A (banks 0,2,4,…)   worker B (banks 1,3,5,…)   …
+//!     net::Server over a bank-subset Coordinator
+//! ```
+//!
+//! * [`placement`] — who serves which banks, with optional replicas in
+//!   failover order ([`Placement::round_robin`]).
+//! * [`worker`] — the existing `net/` server restricted to a bank
+//!   subset ([`worker_coordinator`], [`spawn_worker`];
+//!   `dt2cam worker --listen … --banks 0,2,4`).
+//! * [`remote`] — the frame-speaking [`RemoteDispatch`] behind the
+//!   coordinator's bank-dispatch seam: fan-out, join, failover to
+//!   replicas, per-worker shed/failure accounting.
+//! * [`router`] — the client-facing frontend ([`router_coordinator`],
+//!   [`spawn_router`]; `dt2cam router --listen … --workers a:p,b:p`).
+//!
+//! Failure semantics: a worker that sheds, errors, times out, or drops
+//! its connection is excluded for the current batch and its banks
+//! retried on the next replica; with no replica left the batch answers
+//! a typed error frame (never a hang), and the worker is re-probed
+//! after a short gate. See `docs/API.md` §Cluster serving.
+
+pub mod placement;
+pub mod remote;
+pub mod router;
+pub mod worker;
+
+pub use placement::{parse_bank_list, parse_worker_list, Placement};
+pub use remote::{RemoteDispatch, DEAD_RETRY_BACKOFF, WORKER_REPLY_TIMEOUT};
+pub use router::{router_coordinator, spawn_router};
+pub use worker::{spawn_worker, worker_coordinator};

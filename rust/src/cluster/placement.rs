@@ -1,0 +1,185 @@
+//! Bank → worker placement: which worker processes serve which CAM
+//! banks, and in what failover order.
+//!
+//! The forest's banks are independently evaluable CAM arrays (the
+//! property the whole cluster leans on), so placement is a pure
+//! assignment problem with no accuracy consequences: any worker that
+//! holds a bank's mapped grid computes exactly what every other holder
+//! computes. Round-robin with rotating replicas keeps bank counts
+//! within one of each other and spreads each bank's replica set across
+//! distinct workers.
+
+use anyhow::Result;
+
+/// An assignment of `n_banks` global bank ids to a fleet of worker
+/// addresses, each bank owned by a primary plus optional replicas.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    n_banks: usize,
+    workers: Vec<String>,
+    /// `owners[b]` — worker indices serving bank `b`, primary first,
+    /// then replicas in failover order. All distinct.
+    owners: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    /// Round-robin placement: bank `b`'s primary is worker
+    /// `b % workers`, its `replicas` extra copies the next workers
+    /// around the ring. `replicas` must leave each bank's owner set
+    /// distinct (`replicas < workers.len()`).
+    pub fn round_robin(n_banks: usize, workers: Vec<String>, replicas: usize) -> Result<Placement> {
+        anyhow::ensure!(n_banks >= 1, "placement needs at least 1 bank");
+        anyhow::ensure!(!workers.is_empty(), "placement needs at least 1 worker");
+        for (i, a) in workers.iter().enumerate() {
+            anyhow::ensure!(!a.trim().is_empty(), "worker address {i} is empty");
+            anyhow::ensure!(
+                !workers[..i].contains(a),
+                "worker address {a:?} listed twice"
+            );
+        }
+        anyhow::ensure!(
+            replicas < workers.len(),
+            "{replicas} replicas need at least {} workers, got {}",
+            replicas + 1,
+            workers.len()
+        );
+        let w = workers.len();
+        let owners = (0..n_banks)
+            .map(|b| (0..=replicas).map(|r| (b + r) % w).collect())
+            .collect();
+        Ok(Placement {
+            n_banks,
+            workers,
+            owners,
+        })
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.n_banks
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Extra copies of each bank beyond its primary.
+    pub fn replicas(&self) -> usize {
+        self.owners[0].len() - 1
+    }
+
+    pub fn workers(&self) -> &[String] {
+        &self.workers
+    }
+
+    pub fn addr(&self, worker: usize) -> &str {
+        &self.workers[worker]
+    }
+
+    /// Worker indices serving bank `bank`, primary first.
+    pub fn owners(&self, bank: usize) -> &[usize] {
+        &self.owners[bank]
+    }
+
+    /// Global bank ids placed on worker `worker` (primary or replica),
+    /// ascending — exactly the `--banks` list that worker must serve.
+    pub fn banks_of(&self, worker: usize) -> Vec<usize> {
+        (0..self.n_banks)
+            .filter(|&b| self.owners[b].contains(&worker))
+            .collect()
+    }
+}
+
+/// Parse a `--banks` list: comma-separated global bank ids, e.g.
+/// `"0,2,4"`. Must be strictly ascending (the worker's local bank
+/// order has to mirror the global order for bit-identical energy
+/// summation).
+pub fn parse_bank_list(s: &str) -> Result<Vec<usize>> {
+    let banks: Vec<usize> = s
+        .split(',')
+        .map(|p| {
+            let p = p.trim();
+            p.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad bank id {p:?} in --banks list"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!banks.is_empty(), "--banks list is empty");
+    anyhow::ensure!(
+        banks.windows(2).all(|w| w[0] < w[1]),
+        "--banks list must be strictly ascending, got {s:?}"
+    );
+    Ok(banks)
+}
+
+/// Parse a `--workers` list: comma-separated addresses, e.g.
+/// `"127.0.0.1:7301,127.0.0.1:7302"`.
+pub fn parse_worker_list(s: &str) -> Result<Vec<String>> {
+    let workers: Vec<String> = s
+        .split(',')
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect();
+    anyhow::ensure!(!workers.is_empty(), "--workers list is empty");
+    Ok(workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 7301 + i)).collect()
+    }
+
+    #[test]
+    fn round_robin_stripes_banks_without_replicas() {
+        // The CI smoke layout: 9 banks over 2 workers.
+        let p = Placement::round_robin(9, addrs(2), 0).unwrap();
+        assert_eq!(p.banks_of(0), vec![0, 2, 4, 6, 8]);
+        assert_eq!(p.banks_of(1), vec![1, 3, 5, 7]);
+        assert_eq!(p.owners(4), &[0]);
+        assert_eq!(p.replicas(), 0);
+    }
+
+    #[test]
+    fn replicas_rotate_to_distinct_workers() {
+        let p = Placement::round_robin(9, addrs(3), 1).unwrap();
+        for b in 0..9 {
+            let o = p.owners(b);
+            assert_eq!(o.len(), 2);
+            assert_ne!(o[0], o[1], "bank {b} replicated onto its own primary");
+            assert_eq!(o[0], b % 3);
+            assert_eq!(o[1], (b + 1) % 3);
+        }
+        // Every worker serves its primaries plus its neighbors' replicas.
+        assert_eq!(p.banks_of(0), vec![0, 2, 3, 5, 6, 8]);
+        // Per-bank assignment is always ascending per worker.
+        for w in 0..3 {
+            let banks = p.banks_of(w);
+            assert!(banks.windows(2).all(|x| x[0] < x[1]));
+        }
+    }
+
+    #[test]
+    fn invalid_placements_are_refused() {
+        assert!(Placement::round_robin(0, addrs(2), 0).is_err());
+        assert!(Placement::round_robin(9, vec![], 0).is_err());
+        assert!(Placement::round_robin(9, addrs(2), 2).is_err(), "replica set must be distinct");
+        let dup = vec!["a:1".to_string(), "a:1".to_string()];
+        assert!(Placement::round_robin(9, dup, 0).is_err());
+    }
+
+    #[test]
+    fn bank_list_parses_and_validates() {
+        assert_eq!(parse_bank_list("0,2,4").unwrap(), vec![0, 2, 4]);
+        assert_eq!(parse_bank_list(" 1 , 3 ").unwrap(), vec![1, 3]);
+        assert!(parse_bank_list("").is_err());
+        assert!(parse_bank_list("2,1").is_err(), "must be ascending");
+        assert!(parse_bank_list("1,1").is_err(), "must be strict");
+        assert!(parse_bank_list("a,b").is_err());
+        assert_eq!(
+            parse_worker_list("a:1, b:2").unwrap(),
+            vec!["a:1".to_string(), "b:2".to_string()]
+        );
+        assert!(parse_worker_list(" , ").is_err());
+    }
+}

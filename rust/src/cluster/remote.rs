@@ -1,0 +1,321 @@
+//! The frame-speaking [`RemoteBankDispatch`]: the router side of the
+//! cluster plane, living *behind* the coordinator's bank-dispatch seam.
+//!
+//! For each batch the dispatch groups the program's banks by the first
+//! live owner in placement order, ships one [`Frame::BankBatch`] of raw
+//! f64 rows per owner, and joins the returned [`Frame::BankOutcomes`]
+//! into the full ascending-by-global-bank-id outcome vector the
+//! coordinator's vote and energy accounting expect. A worker that
+//! sheds, errors, times out, or drops its connection is excluded for
+//! the rest of the batch and its banks retried on the next owner in
+//! failover order; only when a bank has no eligible owner left does
+//! the batch fail — typed, attributable, and per-batch (the next batch
+//! probes dead workers again after a short gate).
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api::backend::{RemoteBankDispatch, RemoteBankOutcome, RemoteWorkerStatus};
+use crate::net::{Client, Frame};
+
+use super::placement::Placement;
+
+/// How long the router waits for one worker's [`Frame::BankOutcomes`]
+/// before declaring the worker dead for this batch.
+pub const WORKER_REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long a worker marked dead is left alone before the next batch
+/// may try to revive it (bounds per-batch dial attempts against a
+/// down worker without writing it off forever).
+pub const DEAD_RETRY_BACKOFF: Duration = Duration::from_millis(250);
+
+struct WorkerLink {
+    addr: String,
+    /// Global bank ids placed on this worker (ascending).
+    banks: Vec<usize>,
+    /// Live connection; `None` while the worker is considered dead.
+    client: Option<Client>,
+    /// Earliest instant a revival dial may be attempted.
+    retry_at: Option<Instant>,
+    dispatched: u64,
+    failed: u64,
+    shed: u64,
+}
+
+impl WorkerLink {
+    /// Dial and verify the worker serves every bank placed on it.
+    fn dial(addr: &str, banks: &[usize]) -> Result<Client> {
+        let mut client =
+            Client::connect(addr).with_context(|| format!("dialing worker {addr}"))?;
+        let (served, _) = client
+            .health()
+            .map_err(|e| anyhow::anyhow!("health probe of worker {addr}: {e}"))?;
+        for &b in banks {
+            anyhow::ensure!(
+                served.contains(&b),
+                "worker {addr} serves banks {served:?} but placement assigns it bank {b}"
+            );
+        }
+        Ok(client)
+    }
+
+    fn mark_dead(&mut self) {
+        self.client = None;
+        self.retry_at = Some(Instant::now() + DEAD_RETRY_BACKOFF);
+        self.failed += 1;
+    }
+
+    /// A live client, reviving a dead link when its retry gate passed.
+    fn ensure_alive(&mut self) -> Option<&mut Client> {
+        if self.client.is_none() {
+            match self.retry_at {
+                Some(t) if Instant::now() < t => return None,
+                _ => match WorkerLink::dial(&self.addr, &self.banks) {
+                    Ok(c) => {
+                        self.client = Some(c);
+                        self.retry_at = None;
+                    }
+                    Err(_) => {
+                        self.retry_at = Some(Instant::now() + DEAD_RETRY_BACKOFF);
+                        return None;
+                    }
+                },
+            }
+        }
+        self.client.as_mut()
+    }
+}
+
+/// Router-side remote dispatch over a [`Placement`].
+pub struct RemoteDispatch {
+    links: Vec<WorkerLink>,
+    /// `owners[b]` — worker indices in failover order (from placement).
+    owners: Vec<Vec<usize>>,
+    n_banks: usize,
+    next_wire_id: u64,
+}
+
+impl RemoteDispatch {
+    /// Dial the fleet. Individual workers may be down at construction
+    /// (they get the usual retry gate), but every bank must have at
+    /// least one live owner or the router refuses to start.
+    pub fn connect(placement: &Placement) -> Result<RemoteDispatch> {
+        let mut links = Vec::with_capacity(placement.n_workers());
+        for w in 0..placement.n_workers() {
+            let addr = placement.addr(w).to_string();
+            let banks = placement.banks_of(w);
+            let (client, retry_at) = match WorkerLink::dial(&addr, &banks) {
+                Ok(c) => (Some(c), None),
+                Err(_) => (None, Some(Instant::now())),
+            };
+            links.push(WorkerLink {
+                addr,
+                banks,
+                client,
+                retry_at,
+                dispatched: 0,
+                failed: 0,
+                shed: 0,
+            });
+        }
+        for b in 0..placement.n_banks() {
+            anyhow::ensure!(
+                placement.owners(b).iter().any(|&w| links[w].client.is_some()),
+                "bank {b} has no reachable owner (workers {:?})",
+                placement
+                    .owners(b)
+                    .iter()
+                    .map(|&w| links[w].addr.as_str())
+                    .collect::<Vec<_>>()
+            );
+        }
+        Ok(RemoteDispatch {
+            links,
+            owners: (0..placement.n_banks()).map(|b| placement.owners(b).to_vec()).collect(),
+            n_banks: placement.n_banks(),
+            next_wire_id: 0,
+        })
+    }
+
+    /// First eligible owner of `bank`: not yet excluded this batch, and
+    /// alive (or revivable past its retry gate).
+    fn pick_owner(&mut self, bank: usize, tried: &HashSet<usize>) -> Option<usize> {
+        let owners = self.owners[bank].clone();
+        owners
+            .into_iter()
+            .find(|w| !tried.contains(w) && self.links[*w].ensure_alive().is_some())
+    }
+
+    /// Ship one bank batch to worker `w` without waiting for the reply
+    /// (the caller ships every group first, so workers compute
+    /// concurrently). Returns the wire id, or `None` when the send
+    /// failed and the worker was marked dead.
+    fn send_to_worker(&mut self, w: usize, banks: &[usize], rows: &[Vec<f64>]) -> Option<u64> {
+        let id = self.next_wire_id;
+        self.next_wire_id += 1;
+        let link = &mut self.links[w];
+        let client = link.client.as_mut()?;
+        link.dispatched += 1;
+        let batch = Frame::BankBatch {
+            id,
+            banks: banks.to_vec(),
+            rows: rows.to_vec(),
+        };
+        if client.send_frame(&batch).is_err() {
+            link.mark_dead();
+            return None;
+        }
+        Some(id)
+    }
+
+    /// Collect worker `w`'s reply to wire id `id` into `slots`. Returns
+    /// false when the worker failed (caller excludes it for this batch
+    /// and retries its banks elsewhere).
+    fn read_from_worker(
+        &mut self,
+        w: usize,
+        id: u64,
+        banks: &[usize],
+        n_rows: usize,
+        slots: &mut [Option<RemoteBankOutcome>],
+    ) -> bool {
+        let link = &mut self.links[w];
+        let Some(client) = link.client.as_mut() else {
+            return false;
+        };
+        if client.set_read_timeout(Some(WORKER_REPLY_TIMEOUT)).is_err() {
+            link.mark_dead();
+            return false;
+        }
+        let verdict = loop {
+            match client.recv() {
+                Ok(Frame::BankOutcomes { id: rid, outcomes }) if rid == id => {
+                    let wanted: HashSet<usize> = banks.iter().copied().collect();
+                    let complete = outcomes.len() == banks.len()
+                        && outcomes
+                            .iter()
+                            .all(|o| wanted.contains(&o.bank) && o.classes.len() == n_rows);
+                    if complete {
+                        for o in outcomes {
+                            slots[o.bank] = Some(o);
+                        }
+                        break true;
+                    }
+                    // A malformed reply is a worker bug: fail over.
+                    link.failed += 1;
+                    break false;
+                }
+                // Stale outcomes from an abandoned earlier batch.
+                Ok(Frame::BankOutcomes { .. }) => continue,
+                Ok(Frame::Shed { id: rid }) if rid == id => {
+                    link.shed += 1;
+                    break false;
+                }
+                Ok(Frame::Shed { .. }) | Ok(Frame::Response { .. }) | Ok(Frame::Health { .. })
+                | Ok(Frame::Metrics(_)) => continue,
+                Ok(_) => {
+                    link.failed += 1;
+                    break false;
+                }
+                Err(_) => {
+                    // Timeout, disconnect, or fatal framing loss.
+                    link.mark_dead();
+                    return false;
+                }
+            }
+        };
+        let _ = client.set_read_timeout(None);
+        verdict
+    }
+}
+
+impl RemoteBankDispatch for RemoteDispatch {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn n_banks(&self) -> usize {
+        self.n_banks
+    }
+
+    fn run_banks(&mut self, rows: &[Vec<f64>]) -> Result<Vec<RemoteBankOutcome>> {
+        anyhow::ensure!(!rows.is_empty(), "remote dispatch needs at least one row");
+        let mut slots: Vec<Option<RemoteBankOutcome>> = (0..self.n_banks).map(|_| None).collect();
+        // Workers excluded for the rest of this batch (failed, shed, or
+        // dead): each failed round adds at least one, so the loop ends
+        // within n_workers rounds.
+        let mut tried: HashSet<usize> = HashSet::new();
+        while slots.iter().any(|s| s.is_none()) {
+            // Group uncovered banks by their first eligible owner.
+            let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+            for b in (0..self.n_banks).filter(|&b| slots[b].is_none()) {
+                let Some(w) = self.pick_owner(b, &tried) else {
+                    anyhow::bail!(
+                        "bank {b} is unserveable: no owner reachable (workers {:?})",
+                        self.owners[b]
+                            .iter()
+                            .map(|&w| self.links[w].addr.as_str())
+                            .collect::<Vec<_>>()
+                    );
+                };
+                match groups.iter_mut().find(|(g, _)| *g == w) {
+                    Some((_, banks)) => banks.push(b),
+                    None => groups.push((w, vec![b])),
+                }
+            }
+            // Ship every group before reading any reply: workers whose
+            // bank sets are disjoint evaluate this batch concurrently.
+            let sent: Vec<Option<u64>> = groups
+                .iter()
+                .map(|(w, banks)| self.send_to_worker(*w, banks, rows))
+                .collect();
+            for ((w, banks), id) in groups.iter().zip(sent) {
+                let ok = match id {
+                    Some(id) => self.read_from_worker(*w, id, banks, rows.len(), &mut slots),
+                    None => false,
+                };
+                if !ok {
+                    tried.insert(*w);
+                }
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.expect("all banks covered")).collect())
+    }
+
+    fn worker_status(&mut self, scrape: bool) -> Vec<RemoteWorkerStatus> {
+        (0..self.links.len())
+            .map(|w| {
+                let snapshot = if scrape && self.links[w].client.is_some() {
+                    match self.links[w].client.as_mut().unwrap().metrics() {
+                        Ok(s) => Some(s.to_json()),
+                        Err(e) => {
+                            if matches!(
+                                e,
+                                crate::net::ClientError::Io(_)
+                                    | crate::net::ClientError::Frame(_)
+                                    | crate::net::ClientError::Timeout
+                            ) {
+                                self.links[w].mark_dead();
+                            }
+                            None
+                        }
+                    }
+                } else {
+                    None
+                };
+                let link = &self.links[w];
+                RemoteWorkerStatus {
+                    addr: link.addr.clone(),
+                    banks: link.banks.clone(),
+                    alive: link.client.is_some(),
+                    dispatched: link.dispatched,
+                    failed: link.failed,
+                    shed: link.shed,
+                    snapshot,
+                }
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,60 @@
+//! The cluster frontend: a full `net/` server whose coordinator's bank
+//! dispatch is [`RemoteDispatch`] instead of a local backend.
+//!
+//! Clients speak the unchanged versioned frame protocol — request,
+//! response, shed, metrics, shutdown — and cannot tell a router from a
+//! single-process server. Behind the seam, every admitted batch fans
+//! out as [`crate::net::Frame::BankBatch`]s to the workers owning each
+//! bank, and the returned per-bank survivor votes join through the
+//! same normative `cart::vote_survivors` rule (ascending global bank
+//! order, so classes *and* modeled energy attribution are bit-identical
+//! to single-process serving). A router's metrics reply additionally
+//! carries per-worker attribution and the merged cluster view.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::api::backend::BankDispatch;
+use crate::api::program::MappedProgram;
+use crate::coordinator::Coordinator;
+use crate::net::{Server, ServerConfig, ServerHandle};
+
+use super::placement::Placement;
+use super::remote::RemoteDispatch;
+
+/// Build the router's coordinator: the full program's bank specs (for
+/// encoders, vote arity, and modeled-cost bookkeeping — the mapped
+/// grids exist on the workers too, same artifact) over a remote
+/// dispatch that dials `placement`'s fleet.
+pub fn router_coordinator(
+    mapped: &MappedProgram,
+    batch: usize,
+    placement: &Placement,
+) -> Result<Coordinator> {
+    anyhow::ensure!(
+        placement.n_banks() == mapped.n_banks(),
+        "placement covers {} banks but the program has {}",
+        placement.n_banks(),
+        mapped.n_banks()
+    );
+    let remote = RemoteDispatch::connect(placement)?;
+    let dispatch = BankDispatch::Remote(Mutex::new(Box::new(remote)));
+    Coordinator::with_banks(dispatch, batch, mapped.bank_specs(), mapped.params.clone())
+}
+
+/// Spawn a router server on `addr` fronting `placement`'s worker
+/// fleet. Workers must be up (or at least one owner per bank must be)
+/// when this is called — the dispatch dials and health-checks the
+/// fleet during construction.
+pub fn spawn_router(
+    addr: &str,
+    config: ServerConfig,
+    mapped: MappedProgram,
+    batch: usize,
+    placement: Placement,
+) -> Result<ServerHandle> {
+    Server::spawn(addr, config, move || {
+        router_coordinator(&mapped, batch, &placement)
+    })
+}

@@ -1,0 +1,55 @@
+//! The cluster worker: the existing `net/` server restricted to a
+//! subset of the program's banks.
+//!
+//! A worker owns real mapped grids for its banks only, serves
+//! [`crate::net::Frame::BankBatch`] requests from routers (it encodes
+//! raw f64 rows itself — same artifact, same LUTs, so its encodings
+//! are bit-identical to any other holder's), and answers
+//! [`crate::net::Frame::HealthRequest`] probes with its served bank
+//! ids. It is a full server: plain `Request` frames still work against
+//! the bank subset (useful for debugging a single shard), and
+//! `MetricsRequest`/`Shutdown` behave exactly as on a single-process
+//! server.
+
+use anyhow::{Context, Result};
+
+use crate::api::program::MappedProgram;
+use crate::api::registry::{self, BackendOptions};
+use crate::config::EngineKind;
+use crate::coordinator::Coordinator;
+use crate::net::{Server, ServerConfig, ServerHandle};
+
+/// Build a coordinator serving only `banks` (strictly ascending global
+/// bank ids) of `mapped`.
+pub fn worker_coordinator(
+    mapped: &MappedProgram,
+    engine: EngineKind,
+    batch: usize,
+    opts: &BackendOptions,
+    banks: &[usize],
+) -> Result<Coordinator> {
+    let specs = mapped
+        .bank_specs_for(banks)
+        .context("selecting the worker's bank subset")?;
+    let dispatch = registry::create_bank_dispatch(engine, opts)?;
+    let mut coord = Coordinator::with_banks(dispatch, batch, specs, mapped.params.clone())?;
+    coord.set_bank_ids(banks.to_vec())?;
+    Ok(coord)
+}
+
+/// Spawn a worker server on `addr`. The mapped program is moved onto
+/// the server's scheduler thread (plain data — mapping happened
+/// already), so the handle owns everything it needs.
+pub fn spawn_worker(
+    addr: &str,
+    config: ServerConfig,
+    mapped: MappedProgram,
+    engine: EngineKind,
+    batch: usize,
+    opts: BackendOptions,
+    banks: Vec<usize>,
+) -> Result<ServerHandle> {
+    Server::spawn(addr, config, move || {
+        worker_coordinator(&mapped, engine, batch, &opts, &banks)
+    })
+}

@@ -32,9 +32,9 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::api::backend::{BankDispatch, MatchBackend};
+use crate::api::backend::{BankDispatch, MatchBackend, RemoteBankOutcome, RemoteWorkerStatus};
 use crate::api::registry::{self, BackendOptions};
 use crate::cart::vote_survivors;
 use crate::compiler::Lut;
@@ -132,6 +132,10 @@ struct PipelineState {
 /// bank ([`Coordinator::with_banks_pipelined`]).
 pub struct Coordinator {
     banks: Vec<BankRuntime>,
+    /// Global bank id of each local bank (identity for a coordinator
+    /// serving the whole program; a strict ascending subset on a
+    /// cluster worker — see [`Coordinator::set_bank_ids`]).
+    bank_ids: Vec<usize>,
     n_classes: usize,
     params: DeviceParams,
     dispatch: BankDispatch,
@@ -205,19 +209,26 @@ impl Coordinator {
     /// bank's runtime, validate the class space, compute the modeled
     /// latency roll-up. The backend's per-plan caches are invalidated
     /// first so an instance reused across sessions (plan rebuilds after
-    /// fault injection) never aliases stale state.
+    /// fault injection) never aliases stale state. `backend` is `None`
+    /// for remote dispatch — the plans are still built (class-space
+    /// validation, latency model, encoders) but there is nothing local
+    /// to warm.
     fn build_runtimes(
-        backend: &dyn MatchBackend,
+        backend: Option<&dyn MatchBackend>,
         batch: usize,
         banks: Vec<BankSpec<'_>>,
         params: &DeviceParams,
     ) -> Result<(Vec<BankRuntime>, usize, f64)> {
         anyhow::ensure!(!banks.is_empty(), "a program needs at least one bank");
-        backend.invalidate();
+        if let Some(b) = backend {
+            b.invalidate();
+        }
         let mut runtimes = Vec::with_capacity(banks.len());
         for (b, spec) in banks.into_iter().enumerate() {
             let plan = ServingPlan::build_bank(spec.mapped, spec.vref, params, b);
-            backend.warm(&plan, batch)?;
+            if let Some(backend) = backend {
+                backend.warm(&plan, batch)?;
+            }
             runtimes.push(BankRuntime {
                 lut: spec.lut,
                 features: spec.features,
@@ -252,6 +263,16 @@ impl Coordinator {
     ) -> Result<Coordinator> {
         let (runtimes, n_classes, modeled_latency) =
             Self::build_runtimes(dispatch.backend(), batch, banks, &params)?;
+        // A remote dispatch must place exactly the program's banks —
+        // a placement/program mismatch fails here, not mid-batch.
+        if let BankDispatch::Remote(remote) = &dispatch {
+            let placed = remote.lock().unwrap().n_banks();
+            anyhow::ensure!(
+                placed == runtimes.len(),
+                "remote dispatch places {placed} banks but the program has {}",
+                runtimes.len()
+            );
+        }
         // Bank fan-out pool: one worker per bank (capped like the
         // backend pools), only when the dispatch allows concurrency and
         // there is more than one bank to overlap.
@@ -261,6 +282,7 @@ impl Coordinator {
             None
         };
         Ok(Coordinator {
+            bank_ids: (0..runtimes.len()).collect(),
             banks: runtimes,
             n_classes,
             params,
@@ -296,7 +318,7 @@ impl Coordinator {
         depth: usize,
     ) -> Result<Coordinator> {
         let (runtimes, n_classes, modeled_latency) =
-            Self::build_runtimes(backend.as_ref(), batch, banks, &params)?;
+            Self::build_runtimes(Some(backend.as_ref()), batch, banks, &params)?;
         let plans: Vec<Arc<ServingPlan>> = runtimes.iter().map(|r| Arc::clone(&r.plan)).collect();
         let stream = StreamingPipeline::new(plans, Arc::clone(&backend), depth);
         // The pool fans the per-bank query encoding out; the match work
@@ -315,6 +337,7 @@ impl Coordinator {
             .map(|r| r.plan.pipe_throughput())
             .fold(f64::INFINITY, f64::min);
         Ok(Coordinator {
+            bank_ids: (0..runtimes.len()).collect(),
             banks: runtimes,
             n_classes,
             params,
@@ -360,6 +383,45 @@ impl Coordinator {
     /// Number of CAM banks this coordinator serves.
     pub fn n_banks(&self) -> usize {
         self.banks.len()
+    }
+
+    /// Global bank id of each locally served bank, ascending. Identity
+    /// (`0..n_banks`) unless [`Coordinator::set_bank_ids`] relabeled
+    /// the banks (cluster workers serving a placement subset).
+    pub fn bank_ids(&self) -> &[usize] {
+        &self.bank_ids
+    }
+
+    /// Relabel the locally served banks with their **global** ids (a
+    /// cluster worker builds its coordinator from a subset of the
+    /// program's bank specs, in ascending global order, then records
+    /// which global banks those are). Ids must be strictly ascending —
+    /// the router sums per-bank energies in global bank order, and an
+    /// out-of-order subset would silently reorder that f64 sum.
+    pub fn set_bank_ids(&mut self, ids: Vec<usize>) -> Result<()> {
+        anyhow::ensure!(
+            ids.len() == self.banks.len(),
+            "{} bank ids for {} banks",
+            ids.len(),
+            self.banks.len()
+        );
+        anyhow::ensure!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "bank ids must be strictly ascending, got {ids:?}"
+        );
+        self.bank_ids = ids;
+        Ok(())
+    }
+
+    /// Per-worker status when this coordinator dispatches banks
+    /// remotely (the cluster router); `None` under local dispatch.
+    /// With `scrape`, each live worker's own metrics snapshot is pulled
+    /// over the wire too.
+    pub fn remote_status(&self, scrape: bool) -> Option<Vec<RemoteWorkerStatus>> {
+        match &self.dispatch {
+            BankDispatch::Remote(remote) => Some(remote.lock().unwrap().worker_status(scrape)),
+            _ => None,
+        }
     }
 
     /// Modeled per-decision latency (slowest bank + vote stage).
@@ -446,33 +508,41 @@ impl Coordinator {
         sched.run_batch_with(backend, queries, real, &mut scratch)
     }
 
+    /// Encode + pad one batch of raw feature rows to `width` lanes for
+    /// one bank: the bank sees its own feature projection through its
+    /// own encoders; one reusable projection buffer serves every lane.
+    fn encode_bank_rows(bank: &BankRuntime, rows: &[&[f64]], width: usize) -> Vec<Vec<bool>> {
+        let mut proj: Vec<f64> = Vec::new();
+        let mut qs: Vec<Vec<bool>> = rows
+            .iter()
+            .map(|x| {
+                proj.clear();
+                proj.extend(bank.features.iter().map(|&f| x[f]));
+                bank.plan.encode(&bank.lut, bank.padded_width, &proj)
+            })
+            .collect();
+        while qs.len() < width {
+            qs.push(vec![false; bank.padded_width]);
+        }
+        qs
+    }
+
     /// Encode + pad one admitted batch to the artifact width, once per
-    /// bank: each bank sees its own feature projection through its own
-    /// encoders. Fanned out over the bank pool when one exists (the
-    /// per-bank encodes are independent); one reusable projection
-    /// buffer serves every lane of a bank either way.
+    /// bank. Fanned out over the bank pool when one exists (the
+    /// per-bank encodes are independent).
     fn encode_banks(&self, batch: &[InferenceRequest], width: usize) -> Vec<Vec<Vec<bool>>> {
-        let encode_one = |bank: &BankRuntime| -> Vec<Vec<bool>> {
-            let mut proj: Vec<f64> = Vec::new();
-            let mut qs: Vec<Vec<bool>> = batch
-                .iter()
-                .map(|r| {
-                    proj.clear();
-                    proj.extend(bank.features.iter().map(|&f| r.features[f]));
-                    bank.plan.encode(&bank.lut, bank.padded_width, &proj)
-                })
-                .collect();
-            while qs.len() < width {
-                qs.push(vec![false; bank.padded_width]);
-            }
-            qs
-        };
+        let rows: Vec<&[f64]> = batch.iter().map(|r| r.features.as_slice()).collect();
         match &self.pool {
             Some(pool) if self.banks.len() > 1 => {
                 let banks = &self.banks;
-                pool.scoped_map(banks.len(), |b| encode_one(&banks[b]))
+                let rows = &rows;
+                pool.scoped_map(banks.len(), |b| Self::encode_bank_rows(&banks[b], rows, width))
             }
-            _ => self.banks.iter().map(encode_one).collect(),
+            _ => self
+                .banks
+                .iter()
+                .map(|b| Self::encode_bank_rows(b, &rows, width))
+                .collect(),
         }
     }
 
@@ -485,6 +555,41 @@ impl Coordinator {
         for r in &batch {
             self.metrics.record_queue_delay(r.arrived.elapsed());
         }
+
+        // Remote dispatch (cluster router): the raw rows go over the
+        // wire — each worker encodes them against its own copy of the
+        // artifact — and a failed dispatch (bank unserveable after
+        // failover) answers every request of the batch with a typed
+        // error, exactly like the pipelined poisoned-batch path. It
+        // must never `?` out of here: that would kill the serving loop
+        // over one lost worker.
+        if let BankDispatch::Remote(remote) = &self.dispatch {
+            let rows: Vec<Vec<f64>> = batch.iter().map(|r| r.features.clone()).collect();
+            let t0 = Instant::now();
+            let result = remote
+                .lock()
+                .unwrap()
+                .run_banks(&rows)
+                .and_then(|o| Self::check_remote_outcomes(o, self.banks.len(), real));
+            let wall = t0.elapsed();
+            return Ok(match result {
+                Ok(outcomes) => self.finish_batch(&batch, &outcomes, wall),
+                Err(e) => {
+                    self.metrics.stage_errors += 1;
+                    let message = format!("{e:#}");
+                    batch
+                        .iter()
+                        .map(|r| InferenceResponse {
+                            id: r.id,
+                            class: None,
+                            modeled_latency: self.modeled_latency,
+                            error: Some(message.clone()),
+                        })
+                        .collect()
+                }
+            });
+        }
+
         let bank_queries = self.encode_banks(&batch, width);
 
         let t0 = Instant::now();
@@ -502,7 +607,7 @@ impl Coordinator {
                 .collect::<Result<Vec<_>>>()?
             }
             _ => {
-                let backend = self.dispatch.backend();
+                let backend = self.dispatch.backend().expect("local dispatch");
                 self.banks
                     .iter()
                     .enumerate()
@@ -513,7 +618,63 @@ impl Coordinator {
             }
         };
         let wall = t0.elapsed();
+        Ok(self.finish_batch(&batch, &outcomes, wall))
+    }
 
+    /// Validate remote outcomes and convert them to the scheduler's
+    /// batch-outcome shape: exactly one outcome per bank, ascending
+    /// global ids 0..n (the router serves the whole program, so global
+    /// and local ids coincide), and a class per real lane. Anything
+    /// else is a protocol violation answered as a typed batch error.
+    fn check_remote_outcomes(
+        outcomes: Vec<RemoteBankOutcome>,
+        n_banks: usize,
+        real: usize,
+    ) -> Result<Vec<BatchOutcome>> {
+        anyhow::ensure!(
+            outcomes.len() == n_banks,
+            "remote dispatch answered {} banks, program has {n_banks}",
+            outcomes.len()
+        );
+        outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| {
+                anyhow::ensure!(
+                    o.bank == i,
+                    "remote outcomes out of order: bank {} at position {i}",
+                    o.bank
+                );
+                anyhow::ensure!(
+                    o.classes.len() >= real,
+                    "bank {i} answered {} lanes for a {real}-row batch",
+                    o.classes.len()
+                );
+                Ok(BatchOutcome {
+                    bank: o.bank,
+                    classes: o.classes,
+                    modeled_energy: o.modeled_energy,
+                    active_row_evals: o.active_row_evals,
+                    divisions_evaluated: o.divisions_evaluated,
+                    no_match: o.no_match,
+                    multi_match: o.multi_match,
+                })
+            })
+            .collect()
+    }
+
+    /// Shared tail of every batch-sequential execution path (local or
+    /// remote): vote, roll up the hardware cost, materialize responses.
+    /// Keeping this literally shared is what makes the cluster router
+    /// bit-identical to single-process serving — same vote, same f64
+    /// energy sum in the same bank order.
+    fn finish_batch(
+        &mut self,
+        batch: &[InferenceRequest],
+        outcomes: &[BatchOutcome],
+        wall: Duration,
+    ) -> Vec<InferenceResponse> {
+        let real = batch.len();
         // Combine survivors with the normative forest rule
         // (`cart::vote_survivors`: silent banks cast no vote, ties →
         // lowest class id, no votes at all → no-match).
@@ -538,7 +699,7 @@ impl Coordinator {
         let modeled_energy: f64 = outcomes.iter().map(|o| o.modeled_energy).sum();
         let active_rows: u64 = outcomes.iter().map(|o| o.active_row_evals).sum();
         let multi_match: usize = outcomes.iter().map(|o| o.multi_match).sum();
-        for out in &outcomes {
+        for out in outcomes {
             self.metrics.record_bank_energy(out.bank, out.modeled_energy);
         }
         self.metrics.record_batch(
@@ -554,11 +715,11 @@ impl Coordinator {
         // materialization (queue delay + batch service) — feeding the
         // p50/p95/p99 roll-ups in `summary_line` and the net metrics
         // frame.
-        for r in &batch {
+        for r in batch {
             self.metrics.record_latency(r.arrived.elapsed());
         }
 
-        Ok(batch
+        batch
             .iter()
             .zip(&classes)
             .map(|(req, &class)| InferenceResponse {
@@ -566,6 +727,107 @@ impl Coordinator {
                 class,
                 modeled_latency: self.modeled_latency,
                 error: None,
+            })
+            .collect()
+    }
+
+    /// Evaluate one externally-batched set of raw rows on a subset of
+    /// this coordinator's banks, named by **global** bank id — the
+    /// worker-side entry of the cluster's remote bank dispatch. The
+    /// rows arrive exactly as the router batched them and bypass the
+    /// local batcher, and the queries are encoded at `rows.len()` lanes
+    /// (padding lanes are provably free — they carry no cost and no
+    /// vote — so no width round-up is needed); the per-bank outcomes
+    /// are therefore bit-identical to the single-process walk of the
+    /// same batch. No vote happens here: the router joins. Metrics are
+    /// recorded at bank granularity (`no_match`/`multi_match` sum over
+    /// the *served banks*, not over joined votes).
+    pub fn run_bank_batch(
+        &mut self,
+        banks: &[usize],
+        rows: &[Vec<f64>],
+    ) -> Result<Vec<RemoteBankOutcome>> {
+        anyhow::ensure!(!banks.is_empty(), "bank batch names no banks");
+        anyhow::ensure!(!rows.is_empty(), "bank batch carries no rows");
+        let locals: Vec<usize> = banks
+            .iter()
+            .map(|g| {
+                self.bank_ids
+                    .iter()
+                    .position(|id| id == g)
+                    .with_context(|| {
+                        format!("bank {g} is not served here (serving {:?})", self.bank_ids)
+                    })
+            })
+            .collect::<Result<_>>()?;
+        let need = self.n_features();
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                r.len() >= need,
+                "bank-batch row {i} carries {} features, banks here need {need}",
+                r.len()
+            );
+        }
+        let real = rows.len();
+        let row_refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        self.metrics.requests += real as u64;
+        let t0 = Instant::now();
+        let outcomes: Vec<BatchOutcome> = match (&self.pool, &self.dispatch) {
+            (Some(pool), BankDispatch::Parallel(backend)) if locals.len() > 1 => {
+                let banks_rt = &self.banks;
+                let params = &self.params;
+                let backend: &(dyn MatchBackend + Send + Sync) = backend.as_ref();
+                let locals = &locals;
+                let row_refs = &row_refs;
+                pool.scoped_map(locals.len(), |k| {
+                    let b = locals[k];
+                    let queries = Self::encode_bank_rows(&banks_rt[b], row_refs, real);
+                    Self::run_bank(&banks_rt[b], params, backend, &queries, real)
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+            }
+            _ => {
+                let backend = self
+                    .dispatch
+                    .backend()
+                    .context("a remote-dispatch coordinator cannot serve bank batches")?;
+                locals
+                    .iter()
+                    .map(|&b| {
+                        let queries = Self::encode_bank_rows(&self.banks[b], &row_refs, real);
+                        Self::run_bank(&self.banks[b], &self.params, backend, &queries, real)
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        let wall = t0.elapsed();
+
+        // Bank-granularity roll-ups (the vote-level figures live on the
+        // router, which sees every bank).
+        let modeled_energy: f64 = outcomes.iter().map(|o| o.modeled_energy).sum();
+        let active_rows: u64 = outcomes.iter().map(|o| o.active_row_evals).sum();
+        let no_match: usize = outcomes.iter().map(|o| o.no_match).sum();
+        let multi_match: usize = outcomes.iter().map(|o| o.multi_match).sum();
+        for out in &outcomes {
+            self.metrics.record_bank_energy(out.bank, out.modeled_energy);
+        }
+        self.metrics
+            .record_batch(real, modeled_energy, active_rows, no_match, multi_match, wall);
+        self.metrics.wall_total += wall.as_secs_f64();
+
+        // Stamp global ids on the way out (outcome.bank is the local
+        // plan index here — a worker's bank 0 may be global bank 4).
+        Ok(outcomes
+            .into_iter()
+            .map(|o| RemoteBankOutcome {
+                bank: self.bank_ids[o.bank],
+                classes: o.classes,
+                modeled_energy: o.modeled_energy,
+                active_row_evals: o.active_row_evals,
+                divisions_evaluated: o.divisions_evaluated,
+                no_match: o.no_match,
+                multi_match: o.multi_match,
             })
             .collect())
     }

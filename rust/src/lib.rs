@@ -57,7 +57,10 @@
 //! batcher coalesces requests *across connections* under a bounded
 //! admission queue (overflow is shed, never buffered), a blocking
 //! client, and open/closed-loop load generators — `dt2cam serve
-//! --listen ADDR` / `dt2cam loadgen --connect ADDR`.
+//! --listen ADDR` / `dt2cam loadgen --connect ADDR`. The [`cluster`]
+//! module shards one forest's banks across N worker processes behind a
+//! frontend router speaking the same protocol (`dt2cam worker` /
+//! `dt2cam router`), bit-identical to single-process serving.
 //!
 //! Entry points: the `dt2cam` binary (see [`cli`]), the examples under
 //! `examples/`, and the benches under `rust/benches/` (one per paper table
@@ -67,6 +70,7 @@ pub mod acam;
 pub mod api;
 pub mod cart;
 pub mod cli;
+pub mod cluster;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;

@@ -15,6 +15,17 @@ use super::protocol::{read_frame, write_frame, Frame, FrameError, MetricsSnapsho
 /// wait forever.
 pub const METRICS_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// Dial attempts a [`Client::reconnect`] makes before giving up with
+/// [`ClientError::Unreachable`].
+pub const RECONNECT_ATTEMPTS: u32 = 5;
+
+/// First inter-attempt delay; doubles each retry (plus jitter) up to
+/// [`RECONNECT_MAX_DELAY`].
+pub const RECONNECT_BASE_DELAY: Duration = Duration::from_millis(10);
+
+/// Backoff ceiling for [`Client::reconnect`].
+pub const RECONNECT_MAX_DELAY: Duration = Duration::from_millis(640);
+
 /// Typed client-side errors.
 #[derive(Debug, Error)]
 pub enum ClientError {
@@ -35,6 +46,10 @@ pub enum ClientError {
     /// The server did not answer within the deadline (metrics scrapes).
     #[error("timed out waiting for the server's reply")]
     Timeout,
+    /// Every dial in the reconnect budget failed — the peer is down (or
+    /// the address is wrong). The caller decides whether to fail over.
+    #[error("{addr} unreachable after {attempts} connection attempts")]
+    Unreachable { addr: String, attempts: u32 },
 }
 
 impl ClientError {
@@ -78,12 +93,43 @@ impl Client {
         &self.addr
     }
 
-    /// Drop the current connection and dial the stored address again.
+    /// Drop the current connection and dial the stored address again,
+    /// with bounded exponential backoff: [`RECONNECT_ATTEMPTS`] dials,
+    /// sleeping `base · 2^k` (jittered, capped at
+    /// [`RECONNECT_MAX_DELAY`]) between consecutive failures. A dead
+    /// peer costs a few hundred milliseconds and a typed
+    /// [`ClientError::Unreachable`] — never a hot spin.
     pub fn reconnect(&mut self) -> Result<(), ClientError> {
-        let stream = TcpStream::connect(&self.addr)?;
-        stream.set_nodelay(true)?;
-        self.stream = stream;
-        Ok(())
+        self.reconnect_with(RECONNECT_ATTEMPTS, RECONNECT_BASE_DELAY, RECONNECT_MAX_DELAY)
+    }
+
+    /// [`Client::reconnect`] with an explicit retry budget (tests, and
+    /// callers with their own failover policy wanting a fast verdict).
+    pub fn reconnect_with(
+        &mut self,
+        attempts: u32,
+        base: Duration,
+        max: Duration,
+    ) -> Result<(), ClientError> {
+        let mut delay = base.min(max);
+        for attempt in 0..attempts {
+            match TcpStream::connect(&self.addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    self.stream = stream;
+                    return Ok(());
+                }
+                Err(_) if attempt + 1 < attempts => {
+                    std::thread::sleep(jittered(delay, &self.addr, attempt));
+                    delay = (delay * 2).min(max);
+                }
+                Err(_) => break,
+            }
+        }
+        Err(ClientError::Unreachable {
+            addr: self.addr.clone(),
+            attempts,
+        })
     }
 
     /// Classify one feature vector; `None` means no CAM bank matched.
@@ -148,14 +194,59 @@ impl Client {
                 }
                 Err(e) => return Err(e.into()),
                 Ok(Frame::Metrics(snapshot)) => return Ok(snapshot),
-                // Late responses/sheds from pipelined use: skip.
-                Ok(Frame::Response { .. }) | Ok(Frame::Shed { .. }) => continue,
+                // Late responses/sheds from pipelined use (and stale
+                // bank outcomes / health on a dispatch connection): skip.
+                Ok(Frame::Response { .. })
+                | Ok(Frame::Shed { .. })
+                | Ok(Frame::BankOutcomes { .. })
+                | Ok(Frame::Health { .. }) => continue,
                 Ok(Frame::Error { id, message }) => {
                     return Err(ClientError::Server { id, message })
                 }
                 Ok(other) => return Err(ClientError::Unexpected(format!("{other:?}"))),
             }
         }
+    }
+
+    /// Ask a worker which banks it serves and how loaded it is (the
+    /// cluster router's liveness probe). Bounded like [`Client::metrics`].
+    pub fn health(&mut self) -> Result<(Vec<usize>, u64), ClientError> {
+        self.stream.set_read_timeout(Some(METRICS_TIMEOUT))?;
+        let result = self.health_inner();
+        let _ = self.stream.set_read_timeout(None);
+        result
+    }
+
+    fn health_inner(&mut self) -> Result<(Vec<usize>, u64), ClientError> {
+        write_frame(&mut self.stream, &Frame::HealthRequest)?;
+        loop {
+            match read_frame(&mut self.stream) {
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(ClientError::Timeout)
+                }
+                Err(e) => return Err(e.into()),
+                Ok(Frame::Health { banks, in_flight }) => return Ok((banks, in_flight)),
+                // Late answers to earlier traffic on this connection.
+                Ok(Frame::Response { .. })
+                | Ok(Frame::Shed { .. })
+                | Ok(Frame::BankOutcomes { .. }) => continue,
+                Ok(Frame::Error { id, message }) => {
+                    return Err(ClientError::Server { id, message })
+                }
+                Ok(other) => return Err(ClientError::Unexpected(format!("{other:?}"))),
+            }
+        }
+    }
+
+    /// Set (or clear) the socket read deadline — cluster dispatch wants
+    /// bounded waits on worker replies.
+    pub fn set_read_timeout(&mut self, d: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(d)
     }
 
     /// Ask the server to drain in-flight requests and stop.
@@ -196,6 +287,12 @@ impl Client {
         Ok(read_frame(&mut self.stream)?)
     }
 
+    /// Write one raw frame (cluster dispatch: bank batches, probes).
+    pub fn send_frame(&mut self, frame: &Frame) -> Result<(), ClientError> {
+        write_frame(&mut self.stream, frame)?;
+        Ok(())
+    }
+
     /// Clone the underlying stream so a second thread can read while
     /// this one writes (open-loop load generation).
     pub fn try_clone_stream(&self) -> std::io::Result<TcpStream> {
@@ -207,5 +304,72 @@ impl Client {
     #[doc(hidden)]
     pub fn sever_for_test(&mut self) {
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Deterministic jitter in `[delay, 1.5·delay)`: a splitmix-style hash
+/// of (address, attempt) decorrelates a fleet of clients retrying the
+/// same dead worker without needing a randomness source.
+fn jittered(delay: Duration, addr: &str, attempt: u32) -> Duration {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+    for b in addr.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^= attempt as u64;
+    h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let frac = (h >> 40) as f64 / (1u64 << 24) as f64; // [0, 1)
+    delay.mul_f64(1.0 + 0.5 * frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::net::TcpListener;
+    use std::time::Instant;
+
+    use super::*;
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let base = Duration::from_millis(10);
+        for attempt in 0..8 {
+            let a = jittered(base, "127.0.0.1:7230", attempt);
+            let b = jittered(base, "127.0.0.1:7230", attempt);
+            assert_eq!(a, b, "same inputs must jitter identically");
+            assert!(a >= base && a < base.mul_f64(1.5), "{a:?} out of band");
+        }
+        // Different addresses decorrelate (not all equal to the first).
+        let spread: Vec<Duration> = (0..8)
+            .map(|p| jittered(base, &format!("10.0.0.{p}:1"), 0))
+            .collect();
+        assert!(spread.iter().any(|&d| d != spread[0]));
+    }
+
+    #[test]
+    fn reconnect_backs_off_and_reports_unreachable() {
+        // Bind, connect, then drop the listener: the port is now dead,
+        // so every re-dial is refused quickly and deterministically.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        drop(listener);
+        client.sever_for_test();
+
+        let start = Instant::now();
+        let err = client
+            .reconnect_with(3, Duration::from_millis(5), Duration::from_millis(20))
+            .unwrap_err();
+        match err {
+            ClientError::Unreachable { addr: a, attempts } => {
+                assert_eq!(a, addr);
+                assert_eq!(attempts, 3);
+            }
+            other => panic!("expected Unreachable, got {other}"),
+        }
+        // Two inter-attempt sleeps of >= 5 ms and >= 10 ms happened.
+        assert!(
+            start.elapsed() >= Duration::from_millis(15),
+            "backoff must actually wait, finished in {:?}",
+            start.elapsed()
+        );
     }
 }

@@ -35,6 +35,12 @@ pub struct LoadReport {
     pub p95: f64,
     pub p99: f64,
     pub max: f64,
+    /// Per-target breakdown when the run round-robined clients across
+    /// several addresses ([`closed_loop_multi`] / [`open_loop_multi`]):
+    /// one `(address, sub-report)` pair per target, in the order given.
+    /// Sub-reports share the run's wall clock (their throughputs sum to
+    /// the aggregate) and have empty `per_target`s of their own.
+    pub per_target: Vec<(String, LoadReport)>,
 }
 
 impl LoadReport {
@@ -61,6 +67,7 @@ impl LoadReport {
             p95: pct(95.0),
             p99: pct(99.0),
             max: if samples.is_empty() { 0.0 } else { st.max() },
+            per_target: Vec::new(),
         }
     }
 
@@ -106,16 +113,31 @@ pub fn closed_loop(
     clients: usize,
     total: usize,
 ) -> Result<LoadReport> {
+    closed_loop_multi(&[addr.to_string()], inputs, clients, total)
+}
+
+/// [`closed_loop`] against several targets: client `c` dials
+/// `addrs[c % addrs.len()]`, so clients round-robin across the fleet
+/// and the aggregate report carries a per-target breakdown.
+pub fn closed_loop_multi(
+    addrs: &[String],
+    inputs: &[Vec<f64>],
+    clients: usize,
+    total: usize,
+) -> Result<LoadReport> {
+    anyhow::ensure!(!addrs.is_empty(), "closed_loop needs at least 1 address");
     anyhow::ensure!(clients >= 1, "closed_loop needs at least 1 client");
     anyhow::ensure!(!inputs.is_empty(), "closed_loop needs at least 1 input row");
     let t0 = Instant::now();
     let per = shares(total, clients);
-    let results: Vec<Result<(Vec<f64>, u64, u64)>> = std::thread::scope(|s| {
+    let results: Vec<Result<(usize, Vec<f64>, u64, u64)>> = std::thread::scope(|s| {
         let handles: Vec<_> = per
             .iter()
             .enumerate()
             .map(|(c, &share)| {
-                s.spawn(move || -> Result<(Vec<f64>, u64, u64)> {
+                let target = c % addrs.len();
+                let addr = addrs[target].as_str();
+                s.spawn(move || -> Result<(usize, Vec<f64>, u64, u64)> {
                     let mut client = Client::connect(addr)
                         .with_context(|| format!("client {c} connecting to {addr}"))?;
                     let mut samples = Vec::with_capacity(share);
@@ -131,7 +153,7 @@ pub fn closed_loop(
                             Err(_) => errors += 1,
                         }
                     }
-                    Ok((samples, shed, errors))
+                    Ok((target, samples, shed, errors))
                 })
             })
             .collect();
@@ -140,15 +162,38 @@ pub fn closed_loop(
             .map(|h| h.join().expect("loadgen worker panicked"))
             .collect()
     });
+    aggregate(addrs, results, t0.elapsed().as_secs_f64())
+}
+
+/// Fold per-thread `(target, samples, shed, errors)` results into the
+/// aggregate report plus its per-target breakdown.
+fn aggregate(
+    addrs: &[String],
+    results: Vec<Result<(usize, Vec<f64>, u64, u64)>>,
+    wall: f64,
+) -> Result<LoadReport> {
+    let mut by_target: Vec<(Vec<f64>, u64, u64)> = vec![(Vec::new(), 0, 0); addrs.len()];
     let mut samples = Vec::new();
     let (mut shed, mut errors) = (0u64, 0u64);
     for r in results {
-        let (s, sh, er) = r?;
-        samples.extend(s);
+        let (target, s, sh, er) = r?;
+        samples.extend_from_slice(&s);
         shed += sh;
         errors += er;
+        let slot = &mut by_target[target];
+        slot.0.extend(s);
+        slot.1 += sh;
+        slot.2 += er;
     }
-    Ok(LoadReport::from_samples(samples, shed, errors, t0.elapsed().as_secs_f64()))
+    let mut report = LoadReport::from_samples(samples, shed, errors, wall);
+    if addrs.len() > 1 {
+        report.per_target = addrs
+            .iter()
+            .zip(by_target)
+            .map(|(a, (s, sh, er))| (a.clone(), LoadReport::from_samples(s, sh, er, wall)))
+            .collect();
+    }
+    Ok(report)
 }
 
 /// Open-loop generator: `conns` connections submit `total` requests at
@@ -165,18 +210,37 @@ pub fn open_loop(
     rps: f64,
     total: usize,
 ) -> Result<LoadReport> {
+    open_loop_multi(&[addr.to_string()], inputs, conns, rps, total)
+}
+
+/// [`open_loop`] against several targets: connection `c` dials
+/// `addrs[c % addrs.len()]`; the aggregate rate still spreads across
+/// all connections and the report carries a per-target breakdown.
+pub fn open_loop_multi(
+    addrs: &[String],
+    inputs: &[Vec<f64>],
+    conns: usize,
+    rps: f64,
+    total: usize,
+) -> Result<LoadReport> {
+    anyhow::ensure!(!addrs.is_empty(), "open_loop needs at least 1 address");
     anyhow::ensure!(conns >= 1, "open_loop needs at least 1 connection");
     anyhow::ensure!(!inputs.is_empty(), "open_loop needs at least 1 input row");
     anyhow::ensure!(rps >= 0.0, "open_loop rate must be >= 0");
     let t0 = Instant::now();
     let per = shares(total, conns);
-    let results: Vec<Result<(Vec<f64>, u64, u64)>> = std::thread::scope(|s| {
+    let results: Vec<Result<(usize, Vec<f64>, u64, u64)>> = std::thread::scope(|s| {
         let interval_s = per_conn_interval(rps, conns);
         let handles: Vec<_> = per
             .iter()
             .enumerate()
             .map(|(c, &share)| {
-                s.spawn(move || open_loop_conn(addr, inputs, c, interval_s, share))
+                let target = c % addrs.len();
+                let addr = addrs[target].as_str();
+                s.spawn(move || {
+                    open_loop_conn(addr, inputs, c, interval_s, share)
+                        .map(|(s, sh, er)| (target, s, sh, er))
+                })
             })
             .collect();
         handles
@@ -184,15 +248,7 @@ pub fn open_loop(
             .map(|h| h.join().expect("loadgen worker panicked"))
             .collect()
     });
-    let mut samples = Vec::new();
-    let (mut shed, mut errors) = (0u64, 0u64);
-    for r in results {
-        let (s, sh, er) = r?;
-        samples.extend(s);
-        shed += sh;
-        errors += er;
-    }
-    Ok(LoadReport::from_samples(samples, shed, errors, t0.elapsed().as_secs_f64()))
+    aggregate(addrs, results, t0.elapsed().as_secs_f64())
 }
 
 /// How long the open-loop receiver waits for stragglers after the last
@@ -322,5 +378,36 @@ mod tests {
         assert_eq!(r.completed, 0);
         assert_eq!(r.throughput(), 0.0);
         assert_eq!(r.p99, 0.0);
+        assert!(r.per_target.is_empty());
+    }
+
+    #[test]
+    fn aggregate_breaks_down_per_target_and_sums_to_total() {
+        let addrs = vec!["a:1".to_string(), "b:2".to_string()];
+        // Threads 0 and 2 hit target 0, thread 1 hits target 1 — the
+        // same c % addrs.len() striping the generators use.
+        let results = vec![
+            Ok((0usize, vec![0.001, 0.002], 1u64, 0u64)),
+            Ok((1usize, vec![0.003], 0u64, 2u64)),
+            Ok((0usize, vec![0.004], 0u64, 0u64)),
+        ];
+        let r = aggregate(&addrs, results, 2.0).unwrap();
+        assert_eq!(r.completed, 4);
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.errors, 2);
+        assert_eq!(r.per_target.len(), 2);
+        let (a0, r0) = &r.per_target[0];
+        assert_eq!(a0, "a:1");
+        assert_eq!(r0.completed, 3);
+        assert_eq!(r0.shed, 1);
+        let (a1, r1) = &r.per_target[1];
+        assert_eq!(a1, "b:2");
+        assert_eq!(r1.completed, 1);
+        assert_eq!(r1.errors, 2);
+        // Sub-report throughputs share the wall and sum to the total.
+        assert!((r0.throughput() + r1.throughput() - r.throughput()).abs() < 1e-9);
+        // Single-target runs keep the breakdown empty.
+        let single = aggregate(&addrs[..1], vec![Ok((0, vec![0.001], 0, 0))], 1.0).unwrap();
+        assert!(single.per_target.is_empty());
     }
 }

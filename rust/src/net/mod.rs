@@ -27,6 +27,12 @@
 //! CLI: `dt2cam serve --listen ADDR [--admission N]` on one terminal,
 //! `dt2cam loadgen --connect ADDR --dataset NAME` on another; see
 //! `docs/API.md` §Serving over the wire and `examples/net_serve.rs`.
+//!
+//! The same frames carry the cluster plane ([`crate::cluster`]): a
+//! router fans [`Frame::BankBatch`]s out to bank-sharded workers and
+//! joins their [`Frame::BankOutcomes`]; [`Frame::Health`] is the
+//! liveness/placement probe, and a router's [`Frame::Metrics`] reply
+//! merges worker snapshots with [`protocol::WorkerMetrics`] attribution.
 
 pub mod client;
 pub mod loadgen;
@@ -34,9 +40,9 @@ pub mod protocol;
 pub mod server;
 
 pub use client::{Client, ClientError};
-pub use loadgen::{closed_loop, open_loop, LoadReport};
+pub use loadgen::{closed_loop, closed_loop_multi, open_loop, open_loop_multi, LoadReport};
 pub use protocol::{
-    encode_frame, read_frame, write_frame, Frame, FrameError, MetricsSnapshot, MAX_FRAME_LEN,
-    PROTOCOL_VERSION,
+    encode_frame, read_frame, write_frame, Frame, FrameError, MetricsSnapshot, WorkerMetrics,
+    MAX_FRAME_LEN, PROTOCOL_VERSION,
 };
 pub use server::{Server, ServerConfig, ServerHandle, ServerReport};

@@ -34,7 +34,11 @@ use std::io::{Read, Write};
 
 use thiserror::Error;
 
-use crate::api::serde::{f64_arr, get, get_f64, get_str, get_u64, get_usize, json_f64s, json_u64};
+use crate::api::backend::RemoteBankOutcome;
+use crate::api::serde::{
+    f64_arr, get, get_arr, get_f64, get_str, get_u64, get_usize, json_f64s, json_u64, json_usizes,
+    usize_arr,
+};
 use crate::config::json::Json;
 
 /// Wire protocol version carried by every frame.
@@ -58,6 +62,10 @@ const TYPE_ERROR: u8 = 4;
 const TYPE_METRICS_REQUEST: u8 = 5;
 const TYPE_METRICS: u8 = 6;
 const TYPE_SHUTDOWN: u8 = 7;
+const TYPE_BANK_BATCH: u8 = 8;
+const TYPE_BANK_OUTCOMES: u8 = 9;
+const TYPE_HEALTH_REQUEST: u8 = 10;
+const TYPE_HEALTH: u8 = 11;
 
 /// One wire frame.
 #[derive(Clone, Debug, PartialEq)]
@@ -88,6 +96,28 @@ pub enum Frame {
     /// Client → server: drain in-flight requests, answer them, then
     /// close every connection and stop the server.
     Shutdown,
+    /// Router → worker: evaluate one batch of raw feature rows on a
+    /// subset of the worker's banks, named by **global** bank id. The
+    /// worker encodes rows itself (same artifact, same LUTs — the
+    /// encodings are bit-identical to the router's), so the wire
+    /// carries f64s, which `Json::num` round-trips exactly.
+    BankBatch {
+        id: u64,
+        banks: Vec<usize>,
+        rows: Vec<Vec<f64>>,
+    },
+    /// Worker → router: per-bank outcomes for [`Frame::BankBatch`]
+    /// `id`, ascending by global bank id, one entry per requested bank.
+    BankOutcomes {
+        id: u64,
+        outcomes: Vec<RemoteBankOutcome>,
+    },
+    /// Router → worker: which banks do you serve, and how loaded are
+    /// you? Also the liveness probe for failover.
+    HealthRequest,
+    /// Worker → router: the answer — served global bank ids (ascending)
+    /// and currently admitted in-flight requests.
+    Health { banks: Vec<usize>, in_flight: u64 },
 }
 
 /// Typed framing/decoding errors. [`FrameError::is_fatal`] separates
@@ -167,6 +197,71 @@ pub struct MetricsSnapshot {
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
+    /// Per-worker attribution when this snapshot was scraped from a
+    /// cluster router; empty on a single-process server or worker.
+    pub per_worker: Vec<WorkerMetrics>,
+}
+
+/// One worker's contribution to a cluster-wide [`MetricsSnapshot`]:
+/// the router's dispatch accounting for that worker plus (when the
+/// worker was reachable at scrape time) the worker's own snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerMetrics {
+    pub addr: String,
+    /// Global bank ids placed on this worker.
+    pub banks: Vec<usize>,
+    /// Whether the router currently considers the worker reachable.
+    pub alive: bool,
+    /// Bank-batches the router sent to this worker.
+    pub dispatched: u64,
+    /// Bank-batches that failed (transport error, timeout, or a typed
+    /// error frame) and were retried elsewhere or surfaced as errors.
+    pub failed: u64,
+    /// Bank-batches the worker refused with [`Frame::Shed`].
+    pub shed: u64,
+    /// The worker's own metrics, scraped at snapshot time. `None` when
+    /// the worker was unreachable. Boxed: the type is recursive
+    /// (a worker snapshot itself carries a `per_worker` list — always
+    /// empty one level down).
+    pub snapshot: Option<Box<MetricsSnapshot>>,
+}
+
+impl WorkerMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("addr", Json::str(self.addr.clone())),
+            ("banks", json_usizes(&self.banks)),
+            ("alive", Json::Bool(self.alive)),
+            ("dispatched", json_u64(self.dispatched)),
+            ("failed", json_u64(self.failed)),
+            ("shed", json_u64(self.shed)),
+            (
+                "snapshot",
+                match &self.snapshot {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<WorkerMetrics> {
+        let snapshot = match get(j, "snapshot")? {
+            Json::Null => None,
+            s => Some(Box::new(MetricsSnapshot::from_json(s)?)),
+        };
+        Ok(WorkerMetrics {
+            addr: get_str(j, "addr")?,
+            banks: usize_arr(j, "banks")?,
+            alive: get(j, "alive")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("field 'alive' must be a boolean"))?,
+            dispatched: get_u64(j, "dispatched")?,
+            failed: get_u64(j, "failed")?,
+            shed: get_u64(j, "shed")?,
+            snapshot,
+        })
+    }
 }
 
 impl MetricsSnapshot {
@@ -188,10 +283,22 @@ impl MetricsSnapshot {
             ("latency_p50", Json::num(self.latency_p50)),
             ("latency_p95", Json::num(self.latency_p95)),
             ("latency_p99", Json::num(self.latency_p99)),
+            (
+                "per_worker",
+                Json::Arr(self.per_worker.iter().map(WorkerMetrics::to_json).collect()),
+            ),
         ])
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<MetricsSnapshot> {
+        // Absent on snapshots from pre-cluster servers — tolerate it.
+        let per_worker = match j.get("per_worker") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(_) => get_arr(j, "per_worker")?
+                .iter()
+                .map(WorkerMetrics::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        };
         Ok(MetricsSnapshot {
             requests: get_u64(j, "requests")?,
             decisions: get_u64(j, "decisions")?,
@@ -209,7 +316,51 @@ impl MetricsSnapshot {
             latency_p50: get_f64(j, "latency_p50")?,
             latency_p95: get_f64(j, "latency_p95")?,
             latency_p99: get_f64(j, "latency_p99")?,
+            per_worker,
         })
+    }
+
+    /// Merge several worker snapshots into one cluster-wide view.
+    /// Counters sum exactly. `modeled_latency` takes the max (the
+    /// decision waits for its slowest bank). Rate and latency fields
+    /// cannot be merged exactly from percentile summaries — each
+    /// worker's latency ring is gone by scrape time — so means and
+    /// percentiles are combined as **decision-weighted averages**, an
+    /// approximation that is exact when workers are evenly loaded and
+    /// documented as approximate in `docs/API.md`. `wall_throughput`
+    /// sums (workers batch concurrently). `per_worker` is left empty;
+    /// the caller attaches attribution.
+    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot::default();
+        let mut weight = 0.0f64;
+        for p in parts {
+            out.requests += p.requests;
+            out.decisions += p.decisions;
+            out.batches += p.batches;
+            out.shed += p.shed;
+            out.connections += p.connections;
+            out.protocol_errors += p.protocol_errors;
+            out.no_match += p.no_match;
+            out.multi_match += p.multi_match;
+            out.n_banks += p.n_banks;
+            out.modeled_latency = out.modeled_latency.max(p.modeled_latency);
+            out.wall_throughput += p.wall_throughput;
+            let w = p.decisions as f64;
+            out.energy_per_dec += w * p.energy_per_dec;
+            out.queue_delay_mean += w * p.queue_delay_mean;
+            out.latency_p50 += w * p.latency_p50;
+            out.latency_p95 += w * p.latency_p95;
+            out.latency_p99 += w * p.latency_p99;
+            weight += w;
+        }
+        if weight > 0.0 {
+            out.energy_per_dec /= weight;
+            out.queue_delay_mean /= weight;
+            out.latency_p50 /= weight;
+            out.latency_p95 /= weight;
+            out.latency_p99 /= weight;
+        }
+        out
     }
 
     /// One-line summary for logs (client-side scrape output).
@@ -242,6 +393,63 @@ fn class_to_json(class: Option<usize>) -> Json {
         Some(c) => Json::num(c as f64),
         None => Json::Null,
     }
+}
+
+fn rows_to_json(rows: &[Vec<f64>]) -> Json {
+    Json::Arr(rows.iter().map(|r| json_f64s(r)).collect())
+}
+
+fn f64_rows(j: &Json, key: &str) -> anyhow::Result<Vec<Vec<f64>>> {
+    get_arr(j, key)?
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' entries must be arrays"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'{key}' row entries must be numbers"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn outcome_to_json(o: &RemoteBankOutcome) -> Json {
+    Json::obj(vec![
+        ("bank", Json::num(o.bank as f64)),
+        (
+            "classes",
+            Json::Arr(o.classes.iter().map(|&c| class_to_json(c)).collect()),
+        ),
+        ("modeled_energy", Json::num(o.modeled_energy)),
+        ("active_row_evals", json_u64(o.active_row_evals)),
+        ("divisions_evaluated", Json::num(o.divisions_evaluated as f64)),
+        ("no_match", Json::num(o.no_match as f64)),
+        ("multi_match", Json::num(o.multi_match as f64)),
+    ])
+}
+
+fn outcome_from_json(j: &Json) -> anyhow::Result<RemoteBankOutcome> {
+    let classes = get_arr(j, "classes")?
+        .iter()
+        .map(|v| match v {
+            Json::Null => Ok(None),
+            v => v
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("'classes' entries must be integers or null")),
+        })
+        .collect::<anyhow::Result<_>>()?;
+    Ok(RemoteBankOutcome {
+        bank: get_usize(j, "bank")?,
+        classes,
+        modeled_energy: get_f64(j, "modeled_energy")?,
+        active_row_evals: get_u64(j, "active_row_evals")?,
+        divisions_evaluated: get_usize(j, "divisions_evaluated")?,
+        no_match: get_usize(j, "no_match")?,
+        multi_match: get_usize(j, "multi_match")?,
+    })
 }
 
 fn frame_parts(frame: &Frame) -> (u8, Json) {
@@ -279,6 +487,32 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
         Frame::MetricsRequest => (TYPE_METRICS_REQUEST, Json::obj(vec![])),
         Frame::Metrics(snapshot) => (TYPE_METRICS, snapshot.to_json()),
         Frame::Shutdown => (TYPE_SHUTDOWN, Json::obj(vec![])),
+        Frame::BankBatch { id, banks, rows } => (
+            TYPE_BANK_BATCH,
+            Json::obj(vec![
+                ("id", json_u64(*id)),
+                ("banks", json_usizes(banks)),
+                ("rows", rows_to_json(rows)),
+            ]),
+        ),
+        Frame::BankOutcomes { id, outcomes } => (
+            TYPE_BANK_OUTCOMES,
+            Json::obj(vec![
+                ("id", json_u64(*id)),
+                (
+                    "outcomes",
+                    Json::Arr(outcomes.iter().map(outcome_to_json).collect()),
+                ),
+            ]),
+        ),
+        Frame::HealthRequest => (TYPE_HEALTH_REQUEST, Json::obj(vec![])),
+        Frame::Health { banks, in_flight } => (
+            TYPE_HEALTH,
+            Json::obj(vec![
+                ("banks", json_usizes(banks)),
+                ("in_flight", json_u64(*in_flight)),
+            ]),
+        ),
     }
 }
 
@@ -357,6 +591,25 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
             MetricsSnapshot::from_json(&j).map_err(payload_err)?,
         )),
         TYPE_SHUTDOWN => Ok(Frame::Shutdown),
+        TYPE_BANK_BATCH => Ok(Frame::BankBatch {
+            id: get_u64(&j, "id").map_err(payload_err)?,
+            banks: usize_arr(&j, "banks").map_err(payload_err)?,
+            rows: f64_rows(&j, "rows").map_err(payload_err)?,
+        }),
+        TYPE_BANK_OUTCOMES => Ok(Frame::BankOutcomes {
+            id: get_u64(&j, "id").map_err(payload_err)?,
+            outcomes: get_arr(&j, "outcomes")
+                .map_err(payload_err)?
+                .iter()
+                .map(outcome_from_json)
+                .collect::<anyhow::Result<_>>()
+                .map_err(payload_err)?,
+        }),
+        TYPE_HEALTH_REQUEST => Ok(Frame::HealthRequest),
+        TYPE_HEALTH => Ok(Frame::Health {
+            banks: usize_arr(&j, "banks").map_err(payload_err)?,
+            in_flight: get_u64(&j, "in_flight").map_err(payload_err)?,
+        }),
         other => Err(FrameError::UnknownType(other)),
     }
 }
@@ -489,8 +742,137 @@ mod tests {
             latency_p50: 0.0021,
             latency_p95: 0.004,
             latency_p99: 0.0051,
+            per_worker: vec![],
         }));
         roundtrip(Frame::Shutdown);
+    }
+
+    #[test]
+    fn cluster_frames_roundtrip() {
+        roundtrip(Frame::BankBatch {
+            id: 41,
+            banks: vec![0, 2, 4],
+            rows: vec![vec![0.1, -2.5, 30.0], vec![1.0, 0.0, 0.5]],
+        });
+        roundtrip(Frame::BankBatch {
+            id: (1u64 << 53) + 3,
+            banks: vec![1],
+            rows: vec![vec![]],
+        });
+        roundtrip(Frame::BankOutcomes {
+            id: 41,
+            outcomes: vec![
+                RemoteBankOutcome {
+                    bank: 0,
+                    classes: vec![Some(1), None],
+                    // A value with no short decimal form must survive
+                    // the wire bit-exactly (Json::num prints shortest
+                    // round-trip representation).
+                    modeled_energy: 1.7e-9 + f64::EPSILON,
+                    active_row_evals: 123,
+                    divisions_evaluated: 4,
+                    no_match: 1,
+                    multi_match: 0,
+                },
+                RemoteBankOutcome {
+                    bank: 2,
+                    classes: vec![Some(0), Some(0)],
+                    modeled_energy: 0.0,
+                    active_row_evals: 0,
+                    divisions_evaluated: 0,
+                    no_match: 0,
+                    multi_match: 2,
+                },
+            ],
+        });
+        roundtrip(Frame::HealthRequest);
+        roundtrip(Frame::Health {
+            banks: vec![1, 3, 5, 7],
+            in_flight: 6,
+        });
+    }
+
+    #[test]
+    fn per_worker_attribution_roundtrips_and_old_snapshots_still_parse() {
+        let inner = MetricsSnapshot {
+            decisions: 5,
+            ..Default::default()
+        };
+        let snap = MetricsSnapshot {
+            requests: 10,
+            decisions: 10,
+            per_worker: vec![
+                WorkerMetrics {
+                    addr: "127.0.0.1:9001".into(),
+                    banks: vec![0, 2],
+                    alive: true,
+                    dispatched: 7,
+                    failed: 1,
+                    shed: 0,
+                    snapshot: Some(Box::new(inner)),
+                },
+                WorkerMetrics {
+                    addr: "127.0.0.1:9002".into(),
+                    banks: vec![1],
+                    alive: false,
+                    dispatched: 2,
+                    failed: 2,
+                    shed: 1,
+                    snapshot: None,
+                },
+            ],
+            ..Default::default()
+        };
+        roundtrip(Frame::Metrics(snap.clone()));
+        // A pre-cluster peer omits the field entirely.
+        let mut fields = snap.to_json();
+        if let Json::Obj(pairs) = &mut fields {
+            pairs.retain(|(k, _)| k != "per_worker");
+        }
+        let back = MetricsSnapshot::from_json(&fields).unwrap();
+        assert!(back.per_worker.is_empty());
+        assert_eq!(back.requests, 10);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_weights_latency_by_decisions() {
+        let a = MetricsSnapshot {
+            requests: 30,
+            decisions: 30,
+            batches: 3,
+            shed: 1,
+            n_banks: 5,
+            modeled_latency: 2e-8,
+            wall_throughput: 100.0,
+            energy_per_dec: 1e-9,
+            latency_p50: 0.001,
+            ..Default::default()
+        };
+        let b = MetricsSnapshot {
+            requests: 10,
+            decisions: 10,
+            batches: 1,
+            n_banks: 4,
+            modeled_latency: 3e-8,
+            wall_throughput: 50.0,
+            energy_per_dec: 2e-9,
+            latency_p50: 0.005,
+            ..Default::default()
+        };
+        let m = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(m.requests, 40);
+        assert_eq!(m.decisions, 40);
+        assert_eq!(m.batches, 4);
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.n_banks, 9);
+        assert_eq!(m.modeled_latency, 3e-8);
+        assert_eq!(m.wall_throughput, 150.0);
+        // Decision-weighted: (30·1e-9 + 10·2e-9) / 40.
+        assert!((m.energy_per_dec - 1.25e-9).abs() < 1e-18);
+        assert!((m.latency_p50 - 0.002).abs() < 1e-12);
+        // Degenerate merge of nothing is all-zero, not NaN.
+        let z = MetricsSnapshot::merge(&[]);
+        assert_eq!(z, MetricsSnapshot::default());
     }
 
     #[test]

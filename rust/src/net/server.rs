@@ -62,7 +62,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
 
-use super::protocol::{read_frame, write_frame, Frame, MetricsSnapshot};
+use super::protocol::{read_frame, write_frame, Frame, MetricsSnapshot, WorkerMetrics};
 
 /// Server tunables.
 #[derive(Clone, Debug)]
@@ -108,6 +108,17 @@ enum SchedMsg {
     Request(InferenceRequest),
     /// Scrape request from connection `conn`.
     Metrics { conn: u64 },
+    /// A router-dispatched bank-subset batch (one admission slot for
+    /// the whole batch — the worker's unit of work is the batch, not
+    /// the row).
+    BankBatch {
+        conn: u64,
+        id: u64,
+        banks: Vec<usize>,
+        rows: Vec<Vec<f64>>,
+    },
+    /// Liveness/placement probe from connection `conn`.
+    Health { conn: u64 },
     Shutdown,
 }
 
@@ -366,9 +377,18 @@ fn serve_loop(coord: &mut Coordinator, rx: &Receiver<SchedMsg>, shared: &Shared)
     loop {
         let mut admitted = false;
         while let Ok(msg) = rx.try_recv() {
-            if let SchedMsg::Request(req) = msg {
-                coord.submit(req);
-                admitted = true;
+            match msg {
+                SchedMsg::Request(req) => {
+                    coord.submit(req);
+                    admitted = true;
+                }
+                // A bank batch that raced in alongside the shutdown is
+                // still admitted work — answer it (handle() replies and
+                // releases its slot), don't strand the router.
+                msg @ (SchedMsg::BankBatch { .. } | SchedMsg::Health { .. }) => {
+                    let _ = handle(coord, shared, msg);
+                }
+                SchedMsg::Metrics { .. } | SchedMsg::Shutdown => {}
             }
         }
         let responses = coord.poll(true)?;
@@ -390,6 +410,38 @@ fn handle(coord: &mut Coordinator, shared: &Shared, msg: SchedMsg) -> bool {
         }
         SchedMsg::Metrics { conn } => {
             shared.try_send_to(conn, Frame::Metrics(snapshot(coord, shared)));
+            false
+        }
+        SchedMsg::BankBatch {
+            conn,
+            id,
+            banks,
+            rows,
+        } => {
+            // A failed bank batch answers typed — never tears down the
+            // scheduler (mirrors the per-request stage-error path).
+            let frame = match coord.run_bank_batch(&banks, &rows) {
+                Ok(outcomes) => Frame::BankOutcomes { id, outcomes },
+                Err(e) => {
+                    coord.metrics.stage_errors += 1;
+                    Frame::Error {
+                        id: Some(id),
+                        message: format!("{e:#}"),
+                    }
+                }
+            };
+            shared.try_send_to(conn, frame);
+            shared.release();
+            false
+        }
+        SchedMsg::Health { conn } => {
+            shared.try_send_to(
+                conn,
+                Frame::Health {
+                    banks: coord.bank_ids().to_vec(),
+                    in_flight: shared.inflight.load(Ordering::Acquire) as u64,
+                },
+            );
             false
         }
         SchedMsg::Shutdown => true,
@@ -443,7 +495,7 @@ fn route(shared: &Shared, responses: Vec<InferenceResponse>) {
 fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
     let m = &coord.metrics;
     let lat = m.latency_percentiles();
-    MetricsSnapshot {
+    let snap = MetricsSnapshot {
         requests: m.requests,
         decisions: m.decisions,
         batches: m.batches,
@@ -464,7 +516,60 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
         latency_p50: lat.map_or(0.0, |l| l.p50),
         latency_p95: lat.map_or(0.0, |l| l.p95),
         latency_p99: lat.map_or(0.0, |l| l.p99),
-    }
+        // A router merges its workers' snapshots into the cluster-wide
+        // view and attaches per-worker attribution; a plain server or
+        // worker has no remote dispatch and reports itself unchanged.
+        per_worker: Vec::new(),
+    };
+    let Some(statuses) = coord.remote_status(true) else {
+        return snap;
+    };
+    let workers: Vec<WorkerMetrics> = statuses
+        .into_iter()
+        .map(|s| WorkerMetrics {
+            addr: s.addr,
+            banks: s.banks,
+            alive: s.alive,
+            dispatched: s.dispatched,
+            failed: s.failed,
+            shed: s.shed,
+            snapshot: s
+                .snapshot
+                .as_ref()
+                .and_then(|j| MetricsSnapshot::from_json(j).ok())
+                .map(Box::new),
+        })
+        .collect();
+    let parts: Vec<MetricsSnapshot> = workers
+        .iter()
+        .filter_map(|w| w.snapshot.as_deref().cloned())
+        .collect();
+    // Cluster-wide view: execution-plane fields (bank batches run,
+    // per-bank no/multi-match tallies, summed worker throughput,
+    // decision-weighted worker latencies) come from the worker merge;
+    // client-plane fields are overridden with what only the router's
+    // front door measured — admitted requests, decisions, shed,
+    // connections, protocol errors, end-to-end latency percentiles,
+    // and the served program's modeled energy/latency (the router's
+    // coordinator re-aggregates remote outcomes exactly, where the
+    // worker merge is approximate).
+    let mut merged = MetricsSnapshot::merge(&parts);
+    merged.requests = snap.requests;
+    merged.decisions = snap.decisions;
+    merged.shed = snap.shed;
+    merged.connections = snap.connections;
+    merged.protocol_errors = snap.protocol_errors;
+    merged.no_match = snap.no_match;
+    merged.multi_match = snap.multi_match;
+    merged.n_banks = snap.n_banks;
+    merged.energy_per_dec = snap.energy_per_dec;
+    merged.modeled_latency = snap.modeled_latency;
+    merged.queue_delay_mean = snap.queue_delay_mean;
+    merged.latency_p50 = snap.latency_p50;
+    merged.latency_p95 = snap.latency_p95;
+    merged.latency_p99 = snap.latency_p99;
+    merged.per_worker = workers;
+    merged
 }
 
 /// Stop accepting, then close every live connection: each writer gets a
@@ -623,6 +728,43 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
             }
             Ok(Frame::MetricsRequest) => {
                 if tx.send(SchedMsg::Metrics { conn }).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::BankBatch { id, banks, rows }) => {
+                if shared.shutting_down.load(Ordering::Acquire) {
+                    shared.send_to(
+                        conn,
+                        Frame::Error {
+                            id: Some(id),
+                            message: "server is shutting down".to_string(),
+                        },
+                    );
+                    continue;
+                }
+                // One admission slot per bank batch: the router already
+                // batched its clients, so the batch is this worker's
+                // unit of backpressure.
+                if !shared.admit() {
+                    shared.shed.fetch_add(1, Ordering::AcqRel);
+                    shared.send_to(conn, Frame::Shed { id });
+                    continue;
+                }
+                if tx
+                    .send(SchedMsg::BankBatch {
+                        conn,
+                        id,
+                        banks,
+                        rows,
+                    })
+                    .is_err()
+                {
+                    shared.release();
+                    break;
+                }
+            }
+            Ok(Frame::HealthRequest) => {
+                if tx.send(SchedMsg::Health { conn }).is_err() {
                     break;
                 }
             }

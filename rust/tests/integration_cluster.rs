@@ -1,0 +1,254 @@
+//! Cluster integration tests (`dt2cam::cluster`): a 9-bank forest
+//! sharded over 3 worker processes behind a frontend router must be
+//! indistinguishable from single-process serving — bit-identical
+//! classes *and* bit-identical modeled energy accounting — and must
+//! degrade the way the design promises when workers die: replicated
+//! banks fail over with zero dropped admitted requests, unreplicated
+//! banks answer typed error frames promptly instead of hanging.
+
+use std::time::Duration;
+
+use dt2cam::api::{BackendOptions, Dt2Cam, MappedProgram};
+use dt2cam::cart::ForestParams;
+use dt2cam::cluster::{spawn_router, spawn_worker, Placement};
+use dt2cam::config::EngineKind;
+use dt2cam::net::{Client, ClientError, ServerConfig, ServerHandle};
+use dt2cam::tcam::params::DeviceParams;
+
+fn has_pjrt_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+struct Cluster {
+    router: ServerHandle,
+    workers: Vec<ServerHandle>,
+    inputs: Vec<Vec<f64>>,
+    expected: Vec<Option<usize>>,
+    /// `energy_per_dec()` of the single-process session that produced
+    /// `expected` (same batch width as the cluster).
+    energy_per_dec: f64,
+}
+
+/// Train the acceptance-criterion program — a 9-bank bagged forest on
+/// haberman @S=16 — compute the single-process expectations, then
+/// stand up `n_workers` workers plus a router placing the banks
+/// round-robin with `replicas` failover copies. `MappedProgram` isn't
+/// `Clone`, but mapping is deterministic per (seed, S, bank), so each
+/// process re-maps the same compiled program — exactly the shared
+/// `compile --save` artifact of the multi-process flow.
+fn spawn_cluster(engine: EngineKind, batch: usize, n_workers: usize, replicas: usize) -> Cluster {
+    let fp = ForestParams {
+        n_trees: 9,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest("haberman", &fp).unwrap();
+    let program = model.compile();
+    let p = DeviceParams::default();
+    let map = || -> MappedProgram { program.map(16, &p) };
+
+    let mapped = map();
+    let (expected, energy_per_dec) = {
+        let mut single = mapped.session(engine, batch).unwrap();
+        let expected = single.classify_all(&model.test_x).unwrap();
+        (expected, single.metrics().energy_per_dec())
+    };
+
+    // The bank layout depends only on worker *indices*, so shape it
+    // before the real addresses exist (workers bind port 0).
+    let shape = Placement::round_robin(
+        9,
+        (0..n_workers).map(|i| format!("w{i}")).collect(),
+        replicas,
+    )
+    .unwrap();
+    let workers: Vec<ServerHandle> = (0..n_workers)
+        .map(|w| {
+            spawn_worker(
+                "127.0.0.1:0",
+                ServerConfig::default(),
+                map(),
+                engine,
+                batch,
+                BackendOptions::default(),
+                shape.banks_of(w),
+            )
+            .unwrap()
+        })
+        .collect();
+    let addrs: Vec<String> = workers.iter().map(|w| w.local_addr().to_string()).collect();
+    let placement = Placement::round_robin(9, addrs, replicas).unwrap();
+    let router = spawn_router("127.0.0.1:0", ServerConfig::default(), mapped, batch, placement)
+        .unwrap();
+    Cluster {
+        router,
+        workers,
+        inputs: model.test_x,
+        expected,
+        energy_per_dec,
+    }
+}
+
+#[test]
+fn three_workers_answer_bit_identically_to_single_process_registry_wide() {
+    // Batch width 1 on both sides pins the accumulation order: one
+    // closed-loop client sends the test split in order, so the router
+    // executes one-row batches in row order, summing per-bank modeled
+    // energy in ascending global bank id — exactly the single-process
+    // session's order. Classes must match per input; the energy
+    // roll-up must match to the last bit (any per-bank attribution
+    // drift on any worker would perturb the f64 sum).
+    for engine in EngineKind::ALL {
+        if engine == EngineKind::Pjrt && !has_pjrt_artifacts() {
+            eprintln!("skipping pjrt: run `make artifacts`");
+            continue;
+        }
+        let c = spawn_cluster(engine, 1, 3, 0);
+        let addr = c.router.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        for (i, x) in c.inputs.iter().enumerate() {
+            assert_eq!(
+                client.classify(x).unwrap(),
+                c.expected[i],
+                "engine {} input {i}",
+                engine.name()
+            );
+        }
+
+        let snap = client.metrics().unwrap();
+        assert_eq!(snap.decisions, c.inputs.len() as u64, "{}", engine.name());
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.n_banks, 9);
+        assert_eq!(
+            snap.energy_per_dec.to_bits(),
+            c.energy_per_dec.to_bits(),
+            "modeled energy must be bit-identical: cluster {} vs single-process {} ({})",
+            snap.energy_per_dec,
+            c.energy_per_dec,
+            engine.name()
+        );
+
+        // Per-worker attribution: the round-robin layout, every worker
+        // alive, dispatched to, and reporting its own scraped roll-ups.
+        assert_eq!(snap.per_worker.len(), 3, "{}", engine.name());
+        for (w, wm) in snap.per_worker.iter().enumerate() {
+            assert!(wm.alive, "worker {w} must be alive: {wm:?}");
+            assert!(wm.dispatched > 0, "worker {w} never dispatched to");
+            assert_eq!(wm.failed, 0);
+            let banks: Vec<usize> = (0..9).filter(|b| b % 3 == w).collect();
+            assert_eq!(wm.banks, banks, "worker {w} bank subset");
+            let ws = wm.snapshot.as_ref().expect("scraped worker snapshot");
+            assert!(ws.energy_per_dec > 0.0, "worker {w} energy attribution");
+            assert_eq!(ws.n_banks, 3, "worker {w} serves 3 of the 9 banks");
+        }
+
+        let report = c.router.shutdown().unwrap();
+        assert_eq!(report.metrics.decisions, c.inputs.len() as u64);
+        assert_eq!(report.shed, 0);
+        for w in c.workers {
+            w.shutdown().unwrap();
+        }
+    }
+}
+
+#[test]
+fn killing_a_replicated_worker_mid_load_loses_no_admitted_requests() {
+    // replicas=1: every bank has two owners, so the fleet survives any
+    // single death. Four concurrent clients hammer the router while
+    // worker 0 is shut down mid-run — every admitted request must
+    // still come back exactly once with the single-process class
+    // (failover is allowed to cost latency, never answers).
+    let mut c = spawn_cluster(EngineKind::Native, 8, 3, 1);
+    let addr = c.router.local_addr().to_string();
+    let n_clients = 4usize;
+    let per_client = 50usize;
+    let barrier = std::sync::Barrier::new(n_clients + 1);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|cix| {
+                let addr = addr.clone();
+                let inputs = &c.inputs;
+                let expected = &c.expected;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    barrier.wait();
+                    for k in 0..per_client {
+                        let i = (cix + k * n_clients) % inputs.len();
+                        let got = client.classify(&inputs[i]).unwrap();
+                        assert_eq!(got, expected[i], "client {cix} request {k} (input {i})");
+                    }
+                })
+            })
+            .collect();
+        barrier.wait();
+        // Let the load get going, then take out worker 0 (primary for
+        // banks 0,3,6 — their replicas live on worker 1).
+        std::thread::sleep(Duration::from_millis(25));
+        c.workers.remove(0).shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let mut probe = Client::connect(&addr).unwrap();
+    let snap = probe.metrics().unwrap();
+    assert_eq!(snap.decisions, (n_clients * per_client) as u64);
+    assert_eq!(snap.shed, 0, "failover must not shed admitted requests");
+    assert_eq!(snap.per_worker.len(), 3);
+
+    c.router.shutdown().unwrap();
+    for w in c.workers {
+        w.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn unreplicated_worker_death_answers_typed_errors_without_hanging() {
+    // replicas=0: worker 0 is the only owner of banks 0,3,6. After it
+    // dies every request needs an unserveable bank, so the router must
+    // answer a typed error frame naming the bank — promptly (death is
+    // detected on the broken socket, not by waiting out the 30 s reply
+    // timeout) — and keep serving its control plane.
+    let mut c = spawn_cluster(EngineKind::Native, 4, 3, 0);
+    let addr = c.router.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    assert_eq!(client.classify(&c.inputs[0]).unwrap(), c.expected[0]);
+
+    c.workers.remove(0).shutdown().unwrap();
+
+    let t0 = std::time::Instant::now();
+    match client.classify(&c.inputs[1]) {
+        Err(ClientError::Server { id, message }) => {
+            assert!(id.is_some(), "the error must carry the request id");
+            assert!(
+                message.contains("unserveable"),
+                "must name the failure, got: {message}"
+            );
+        }
+        other => panic!("expected a typed server error, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "a dead sole owner must fail fast, not time out"
+    );
+
+    // The connection and the router both survive: the control plane
+    // still answers, attributing the outage to worker 0.
+    let snap = client.metrics().unwrap();
+    assert_eq!(
+        snap.per_worker.iter().filter(|w| w.alive).count(),
+        2,
+        "{:?}",
+        snap.per_worker
+    );
+    let dead = &snap.per_worker[0];
+    assert!(!dead.alive);
+    assert!(dead.failed > 0, "the death must be accounted: {dead:?}");
+
+    c.router.shutdown().unwrap();
+    for w in c.workers {
+        w.shutdown().unwrap();
+    }
+}
