@@ -1,0 +1,489 @@
+//! Plan/mapping lint: cross-field schema checks on compiled programs
+//! and geometry/determinism checks on mapped programs.
+//!
+//! These are the checks the JSON loaders *don't* do — the loaders
+//! validate shape (field presence, widths, lengths), while this pass
+//! validates meaning: dataset references resolve and agree on arity,
+//! test/golden blocks index real instances, tile geometry matches the
+//! deterministic mapping formulas, per-bank map seeds follow the
+//! documented derivation, and shipped cells are diffed against the
+//! seed-rebuilt nominal grid (fault-injected artifacts legitimately
+//! drift — that is a warning with a byte count, not an error).
+
+use crate::api::{bank_map_seed, CompiledProgram, MappedProgram};
+use crate::dataset::catalog;
+use crate::util::ceil_div;
+
+use super::{Diagnostic, Severity};
+
+/// Program-level cross-field checks on a compiled artifact.
+pub fn check_compiled_meta(p: &CompiledProgram, out: &mut Vec<Diagnostic>) {
+    if p.banks.is_empty() {
+        out.push(Diagnostic::new(
+            Severity::Error,
+            "schema",
+            "program has no banks".to_string(),
+        ));
+        return;
+    }
+
+    let n_classes = p.banks[0].lut.n_classes;
+    for (b, bank) in p.banks.iter().enumerate() {
+        if bank.lut.n_classes != n_classes {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "schema",
+                    format!(
+                        "bank disagrees on class count ({} vs bank 0's {})",
+                        bank.lut.n_classes, n_classes
+                    ),
+                )
+                .bank(b),
+            );
+        }
+        if bank.features.len() != bank.lut.encoders.len() {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "schema",
+                    format!(
+                        "{} projected features but {} encoders",
+                        bank.features.len(),
+                        bank.lut.encoders.len()
+                    ),
+                )
+                .bank(b),
+            );
+        }
+        let mut seen = bank.features.clone();
+        seen.sort_unstable();
+        if seen.windows(2).any(|w| w[0] == w[1]) {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "schema",
+                    format!("feature projection {:?} repeats a feature", bank.features),
+                )
+                .bank(b),
+            );
+        }
+    }
+
+    if p.test_indices.len() != p.golden.len() {
+        out.push(Diagnostic::new(
+            Severity::Error,
+            "schema",
+            format!(
+                "{} test indices but {} golden labels",
+                p.test_indices.len(),
+                p.golden.len()
+            ),
+        ));
+    }
+    for &g in &p.golden {
+        if g >= n_classes {
+            out.push(Diagnostic::new(
+                Severity::Error,
+                "class-range",
+                format!("golden label {g} out of range (n_classes = {n_classes})"),
+            ));
+            break;
+        }
+    }
+
+    // Dataset cross-checks: the artifact must replay against the
+    // dataset it names (serving reloads it for the test split).
+    match catalog::by_name(&p.dataset, p.seed) {
+        Err(e) => out.push(Diagnostic::new(
+            Severity::Error,
+            "dataset",
+            format!("dataset {:?} does not resolve: {e}", p.dataset),
+        )),
+        Ok(d) => {
+            if d.n_classes != n_classes {
+                out.push(Diagnostic::new(
+                    Severity::Error,
+                    "dataset",
+                    format!(
+                        "program claims {n_classes} classes but dataset {:?} has {}",
+                        p.dataset, d.n_classes
+                    ),
+                ));
+            }
+            if let Some(&bad) = p.test_indices.iter().find(|&&i| i >= d.n_instances()) {
+                out.push(Diagnostic::new(
+                    Severity::Error,
+                    "dataset",
+                    format!(
+                        "test index {bad} out of range (dataset has {} instances)",
+                        d.n_instances()
+                    ),
+                ));
+            }
+            for (b, bank) in p.banks.iter().enumerate() {
+                if let Some(&bad) = bank.features.iter().find(|&&f| f >= d.n_features()) {
+                    out.push(
+                        Diagnostic::new(
+                            Severity::Error,
+                            "dataset",
+                            format!(
+                                "projected feature {bad} out of range (dataset has {} features)",
+                                d.n_features()
+                            ),
+                        )
+                        .bank(b),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Mapping-side lint on a mapped artifact (the compiled checks run
+/// separately via `verify_compiled`).
+pub fn check_mapped(mp: &MappedProgram, out: &mut Vec<Diagnostic>) {
+    if mp.banks.is_empty() {
+        out.push(Diagnostic::new(
+            Severity::Error,
+            "schema",
+            "mapped program has no banks".to_string(),
+        ));
+        return;
+    }
+    if mp.banks.len() != mp.program.banks.len() {
+        out.push(Diagnostic::new(
+            Severity::Error,
+            "schema",
+            format!(
+                "{} mapped banks for {} compiled banks",
+                mp.banks.len(),
+                mp.program.banks.len()
+            ),
+        ));
+        return;
+    }
+
+    let s = mp.tile_size();
+    if !(1..=8192).contains(&s) {
+        out.push(Diagnostic::new(
+            Severity::Error,
+            "tile-size",
+            format!("tile size {s} outside the supported range 1..=8192"),
+        ));
+        return;
+    }
+
+    for p in [mp.params.r_lrs, mp.params.r_hrs, mp.params.c_in, mp.params.vdd, mp.params.t_sa] {
+        if !(p.is_finite() && p > 0.0) {
+            out.push(Diagnostic::new(
+                Severity::Error,
+                "params",
+                format!("device parameter {p} is not a positive finite number"),
+            ));
+        }
+    }
+
+    let base_seed = mp.banks[0].map_seed;
+    let mut drifted_banks = 0usize;
+    for (b, bank) in mp.banks.iter().enumerate() {
+        let m = &bank.mapped;
+        let lut = &mp.program.banks[b].lut;
+
+        // Geometry must be exactly what the deterministic mapping
+        // formulas produce for (lut, S); anything else and the loader's
+        // seed-rebuilt grid would not line up with the shipped vref and
+        // cell overrides.
+        let real_rows = lut.n_rows();
+        let real_width = lut.width() + 1; // +1 decoder column
+        let n_rwd = ceil_div(real_rows, s).max(1);
+        let n_cwd = ceil_div(real_width, s).max(1);
+        let expect = (real_rows, real_width, n_rwd, n_cwd, n_rwd * s, n_cwd * s);
+        let got = (m.real_rows, m.real_width, m.n_rwd, m.n_cwd, m.padded_rows, m.padded_width);
+        if m.s != s {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "mapping-geometry",
+                    format!("bank tile size {} disagrees with program tile size {s}", m.s),
+                )
+                .bank(b),
+            );
+            continue;
+        }
+        if got != expect {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "mapping-geometry",
+                    format!(
+                        "grid geometry {got:?} disagrees with the mapping formulas {expect:?} \
+                         for {real_rows} LUT rows × {} trits at S={s}",
+                        lut.width()
+                    ),
+                )
+                .bank(b),
+            );
+            continue;
+        }
+        if m.cells.len() != m.padded_rows * m.padded_width {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "mapping-geometry",
+                    format!(
+                        "{} cells for a {}×{} padded grid",
+                        m.cells.len(),
+                        m.padded_rows,
+                        m.padded_width
+                    ),
+                )
+                .bank(b),
+            );
+            continue;
+        }
+        if m.classes.len() != m.padded_rows {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "mapping-geometry",
+                    format!("{} row classes for {} padded rows", m.classes.len(), m.padded_rows),
+                )
+                .bank(b),
+            );
+            continue;
+        }
+        if m.divisions.len() != n_cwd {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "mapping-geometry",
+                    format!("{} divisions for {n_cwd} column-wise divisions", m.divisions.len()),
+                )
+                .bank(b),
+            );
+        }
+        if m.vref.len() != n_cwd * m.padded_rows {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "vref",
+                    format!(
+                        "{} vref entries for {} divisions × {} padded rows",
+                        m.vref.len(),
+                        n_cwd,
+                        m.padded_rows
+                    ),
+                )
+                .bank(b),
+            );
+        } else if m.vref.iter().any(|v| !v.is_finite()) {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "vref",
+                    "vref contains a non-finite entry".to_string(),
+                )
+                .bank(b),
+            );
+        }
+
+        // Real rows must carry exactly the LUT's class labels; rogue
+        // (padding) rows anything in range.
+        if m.classes[..real_rows.min(m.classes.len())] != lut.classes[..] {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "class-consistency",
+                    "mapped row classes disagree with the LUT's class labels".to_string(),
+                )
+                .bank(b),
+            );
+        } else if let Some(&bad) = m.classes[real_rows..].iter().find(|&&c| c >= lut.n_classes) {
+            out.push(
+                Diagnostic::new(
+                    Severity::Error,
+                    "class-range",
+                    format!("rogue-row class {bad} out of range (n_classes = {})", lut.n_classes),
+                )
+                .bank(b),
+            );
+        }
+
+        // Map-seed determinism: bank seeds must follow the documented
+        // derivation from bank 0's base seed, or loaders rebuilding
+        // grids from seeds will diverge across processes.
+        let expect_seed = bank_map_seed(base_seed, b);
+        if bank.map_seed != expect_seed {
+            out.push(
+                Diagnostic::new(
+                    Severity::Warning,
+                    "map-seed",
+                    format!(
+                        "bank map seed {:#x} is not the documented derivation {expect_seed:#x} \
+                         from bank 0's seed {base_seed:#x}",
+                        bank.map_seed
+                    ),
+                )
+                .bank(b),
+            );
+        }
+
+        // Cell drift vs. the seed-rebuilt nominal grid. Deterministic
+        // by construction, so any difference is deliberate (fault
+        // injection) or tampering — worth a warning with a count.
+        let nominal = mp.nominal_grid(b);
+        if nominal.cells.len() == m.cells.len() {
+            let drift = nominal
+                .cells
+                .iter()
+                .zip(&m.cells)
+                .filter(|(a, c)| a != c)
+                .count();
+            if drift > 0 {
+                drifted_banks += 1;
+                out.push(
+                    Diagnostic::new(
+                        Severity::Warning,
+                        "cell-drift",
+                        format!(
+                            "{drift} of {} cell bytes differ from the nominal grid \
+                             (fault injection or tampering)",
+                            m.cells.len()
+                        ),
+                    )
+                    .bank(b),
+                );
+            }
+            if nominal.classes != m.classes {
+                out.push(
+                    Diagnostic::new(
+                        Severity::Warning,
+                        "cell-drift",
+                        "rogue-row class draws differ from the seed's nominal draws".to_string(),
+                    )
+                    .bank(b),
+                );
+            }
+        }
+
+        // Tile-size sanity, advisory only: heavy padding is legitimate
+        // (the paper sweeps S) but worth surfacing.
+        if m.padded_rows >= 4 * real_rows.max(1) {
+            out.push(
+                Diagnostic::new(
+                    Severity::Info,
+                    "tile-size",
+                    format!(
+                        "tile rows are heavily padded ({real_rows} real rows in {} padded — \
+                         consider a smaller S)",
+                        m.padded_rows
+                    ),
+                )
+                .bank(b),
+            );
+        }
+    }
+
+    if drifted_banks > 0 {
+        out.push(Diagnostic::new(
+            Severity::Info,
+            "cell-drift",
+            format!("{drifted_banks} bank(s) carry non-nominal cells"),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Dt2Cam;
+    use crate::tcam::DeviceParams;
+
+    #[test]
+    fn nominal_mapping_lints_clean() {
+        let mapped = Dt2Cam::dataset("iris")
+            .unwrap()
+            .compile()
+            .map(16, &DeviceParams::default());
+        let mut out = Vec::new();
+        check_mapped(&mapped, &mut out);
+        assert!(
+            out.iter().all(|d| d.severity == Severity::Info),
+            "unexpected diagnostics: {out:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_dataset_is_an_error() {
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        program.dataset = "atlantis".to_string();
+        let mut out = Vec::new();
+        check_compiled_meta(&program, &mut out);
+        assert!(out.iter().any(|d| d.check == "dataset" && d.severity == Severity::Error));
+    }
+
+    #[test]
+    fn out_of_range_test_index_is_an_error() {
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        program.test_indices[0] = 1_000_000;
+        let mut out = Vec::new();
+        check_compiled_meta(&program, &mut out);
+        assert!(out.iter().any(|d| d.check == "dataset"), "{out:?}");
+    }
+
+    #[test]
+    fn fault_injected_cells_are_a_warning_not_an_error() {
+        use crate::nonideal::{inject_saf, SafRates};
+        use crate::util::prng::Prng;
+
+        let mut mapped = Dt2Cam::dataset("iris")
+            .unwrap()
+            .compile()
+            .map(16, &DeviceParams::default());
+        let mut rng = Prng::new(7);
+        inject_saf(&mut mapped.banks[0].mapped, &SafRates { sa0: 0.2, sa1: 0.2 }, &mut rng);
+        let mut out = Vec::new();
+        check_mapped(&mapped, &mut out);
+        assert!(out.iter().any(|d| d.check == "cell-drift"), "{out:?}");
+        assert!(out.iter().all(|d| d.severity != Severity::Error), "{out:?}");
+    }
+
+    #[test]
+    fn broken_vref_is_an_error() {
+        let mut mapped = Dt2Cam::dataset("iris")
+            .unwrap()
+            .compile()
+            .map(16, &DeviceParams::default());
+        mapped.banks[0].mapped.vref[0] = f64::NAN;
+        let mut out = Vec::new();
+        check_mapped(&mapped, &mut out);
+        assert!(out
+            .iter()
+            .any(|d| d.check == "vref" && d.severity == Severity::Error));
+    }
+
+    #[test]
+    fn wrong_map_seed_is_a_warning() {
+        use crate::cart::ForestParams;
+
+        let params = ForestParams {
+            n_trees: 3,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..ForestParams::default()
+        };
+        let mut mapped = Dt2Cam::forest("haberman", &params)
+            .unwrap()
+            .compile()
+            .map(16, &DeviceParams::default());
+        // Bank 0 is the derivation base; flipping a later bank's seed
+        // deterministically breaks the documented derivation.
+        mapped.banks[1].map_seed ^= 1;
+        let mut out = Vec::new();
+        check_mapped(&mapped, &mut out);
+        let d = out.iter().find(|d| d.check == "map-seed").unwrap();
+        assert_eq!(d.severity, Severity::Warning);
+        assert_eq!(d.bank, Some(1));
+    }
+}

@@ -1,0 +1,379 @@
+//! Static program verifier (paper §II.A's bijectivity claim, checked).
+//!
+//! The compiler's central invariant is that every root→leaf path of the
+//! source tree maps to exactly one TCAM row and, jointly, the rows of a
+//! bank *partition* the input space: any feature vector matches exactly
+//! one row. Nothing downstream re-checks that — a corrupted or
+//! hand-edited artifact only shows up as silently wrong simulation
+//! output. This module verifies `CompiledProgram` / `MappedProgram`
+//! artifacts **without running a single simulation**:
+//!
+//! - [`rows`] — per-row decoding of the adaptive unary code
+//!   (`0^a x^b 1^c` don't-care structure), bijectivity against the
+//!   reduced rule table, adaptive-precision consistency.
+//! - [`space`] — completeness/disjointness over the discrete
+//!   range-index product space (exact, via arbitrary-precision volume
+//!   arithmetic), dead-row and unreachable-class detection — the
+//!   RETENTION (arXiv:2506.05994) dedup precursor.
+//! - [`lint`] — plan/mapping lint: schema cross-field checks, dataset
+//!   range checks, tile geometry, map-seed determinism, cell drift.
+//!
+//! Three consumers: the `dt2cam check` CLI command, the verify-on-load
+//! gate at every artifact load seam ([`gate_artifact`]), and library
+//! callers such as the future row-dedup pass, which must run
+//! [`verify_compiled`] / [`verify_mapped`] before and after rewriting.
+
+pub mod lint;
+pub mod rows;
+pub mod space;
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::api::{CompiledProgram, MappedProgram};
+use crate::config::Json;
+
+/// How bad a finding is.
+///
+/// `Error` means the artifact violates an invariant the pipeline relies
+/// on (wrong answers or panics downstream). `Warning` means the
+/// artifact is serviceable but deviates from what the repo's own
+/// compile paths produce (e.g. fault-injected cells, custom map seeds).
+/// `Info` is advisory only and never gates anything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Error => write!(f, "error"),
+            Severity::Warning => write!(f, "warning"),
+            Severity::Info => write!(f, "info"),
+        }
+    }
+}
+
+/// One structured finding.
+///
+/// `check` is a stable kebab-case id from the check catalog (see
+/// `docs/API.md` §Static verification); `witness` carries concrete
+/// evidence — a feature interval, an uncovered input region, a byte
+/// count — rendered for humans but specific enough to reproduce.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub check: &'static str,
+    pub bank: Option<usize>,
+    pub row: Option<usize>,
+    pub message: String,
+    pub witness: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn new(severity: Severity, check: &'static str, message: String) -> Diagnostic {
+        Diagnostic { severity, check, bank: None, row: None, message, witness: None }
+    }
+
+    pub fn bank(mut self, b: usize) -> Diagnostic {
+        self.bank = Some(b);
+        self
+    }
+
+    pub fn row(mut self, r: usize) -> Diagnostic {
+        self.row = Some(r);
+        self
+    }
+
+    pub fn witness(mut self, w: String) -> Diagnostic {
+        self.witness = Some(w);
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("severity", Json::str(&self.severity.to_string())),
+            ("check", Json::str(self.check)),
+        ];
+        if let Some(b) = self.bank {
+            fields.push(("bank", Json::num(b as f64)));
+        }
+        if let Some(r) = self.row {
+            fields.push(("row", Json::num(r as f64)));
+        }
+        fields.push(("message", Json::str(&self.message)));
+        if let Some(w) = &self.witness {
+            fields.push(("witness", Json::str(w)));
+        }
+        Json::obj(fields)
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.severity, self.check)?;
+        if let Some(b) = self.bank {
+            write!(f, " bank {b}")?;
+        }
+        if let Some(r) = self.row {
+            write!(f, " row {r}")?;
+        }
+        write!(f, ": {}", self.message)?;
+        if let Some(w) = &self.witness {
+            write!(f, " (witness: {w})")?;
+        }
+        Ok(())
+    }
+}
+
+/// The verifier's output: every finding, plus enough shape metadata to
+/// read the report standalone. Serializes via [`AnalysisReport::to_json`]
+/// (`format: "dt2cam-analysis-report"`, version 1).
+#[derive(Clone, Debug)]
+pub struct AnalysisReport {
+    /// `"compiled"` or `"mapped"`.
+    pub artifact: &'static str,
+    pub dataset: String,
+    pub n_banks: usize,
+    /// Total LUT rows across banks.
+    pub n_rows: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    pub fn n_errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn n_warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// No errors (warnings allowed) — the bar every artifact produced
+    /// by the repo's own compile paths must clear.
+    pub fn is_clean(&self) -> bool {
+        self.n_errors() == 0
+    }
+
+    /// Gate predicate: clean, and warning-free too when
+    /// `deny_warnings` is set.
+    pub fn passes(&self, deny_warnings: bool) -> bool {
+        self.is_clean() && (!deny_warnings || self.n_warnings() == 0)
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "analysis[{}]: {} on {} bank(s) / {} row(s) — {} error(s), {} warning(s)",
+            self.artifact,
+            self.dataset,
+            self.n_banks,
+            self.n_rows,
+            self.n_errors(),
+            self.n_warnings()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("dt2cam-analysis-report")),
+            ("version", Json::num(1.0)),
+            ("artifact", Json::str(self.artifact)),
+            ("dataset", Json::str(&self.dataset)),
+            ("banks", Json::num(self.n_banks as f64)),
+            ("rows", Json::num(self.n_rows as f64)),
+            ("errors", Json::num(self.n_errors() as f64)),
+            ("warnings", Json::num(self.n_warnings() as f64)),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Verify a compiled program: per-bank row decoding + bijectivity
+/// ([`rows`]), partition checks ([`space`]), and program-level lint
+/// ([`lint::check_compiled_meta`]). Never panics on corrupt input —
+/// every violation becomes a [`Diagnostic`].
+pub fn verify_compiled(p: &CompiledProgram) -> AnalysisReport {
+    let mut diags = Vec::new();
+    lint::check_compiled_meta(p, &mut diags);
+
+    let n_classes = p.banks.first().map_or(0, |b| b.lut.n_classes);
+    let mut reachable = vec![false; n_classes];
+    let mut n_rows = 0;
+    for (b, bank) in p.banks.iter().enumerate() {
+        let boxes = rows::check_rows(b, &bank.lut, &mut diags);
+        space::check_space(b, &bank.lut, &boxes, &mut diags);
+        n_rows += bank.lut.n_rows();
+        for &c in &bank.lut.classes {
+            if c < n_classes {
+                reachable[c] = true;
+            }
+        }
+    }
+
+    // Unreachable classes are judged program-wide: a bagged forest bank
+    // legitimately misses classes its bootstrap sample never saw (that
+    // per-bank note is Info, emitted in space::check_space), but a class
+    // no bank can ever emit is a real artifact smell.
+    for (c, &seen) in reachable.iter().enumerate() {
+        if !seen {
+            diags.push(Diagnostic::new(
+                Severity::Warning,
+                "unreachable-class",
+                format!("class {c} appears in no bank's rows — the program can never emit it"),
+            ));
+        }
+    }
+
+    AnalysisReport {
+        artifact: "compiled",
+        dataset: p.dataset.clone(),
+        n_banks: p.banks.len(),
+        n_rows,
+        diagnostics: diags,
+    }
+}
+
+/// Verify a mapped program: everything [`verify_compiled`] checks on
+/// the embedded compiled program, plus the mapping lint (tile geometry,
+/// map-seed determinism, cell drift, vref sanity).
+pub fn verify_mapped(mp: &MappedProgram) -> AnalysisReport {
+    let mut report = verify_compiled(&mp.program);
+    report.artifact = "mapped";
+    lint::check_mapped(mp, &mut report.diagnostics);
+    report
+}
+
+/// Policy for the verify-on-load gate at artifact load seams.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VerifyMode {
+    /// Print diagnostics, serve anyway (the default).
+    Warn,
+    /// Refuse to serve an artifact with verification errors.
+    Deny,
+    /// Skip verification entirely.
+    Off,
+}
+
+impl VerifyMode {
+    pub fn parse(s: &str) -> Result<VerifyMode> {
+        match s {
+            "warn" => Ok(VerifyMode::Warn),
+            "deny" => Ok(VerifyMode::Deny),
+            "off" => Ok(VerifyMode::Off),
+            other => bail!("--verify takes warn|deny|off, got {other:?}"),
+        }
+    }
+}
+
+/// Verify-on-load gate: runs [`verify_mapped`] on a just-loaded
+/// artifact and applies the [`VerifyMode`] policy. `origin` names the
+/// artifact in diagnostics (typically its path). Error/Warning
+/// diagnostics go to stderr; Info stays quiet.
+pub fn gate_artifact(mp: &MappedProgram, origin: &str, mode: VerifyMode) -> Result<()> {
+    if mode == VerifyMode::Off {
+        return Ok(());
+    }
+    let report = verify_mapped(mp);
+    for d in report.diagnostics.iter().filter(|d| d.severity != Severity::Info) {
+        eprintln!("verify: {d}");
+    }
+    let errors = report.n_errors();
+    if errors > 0 {
+        match mode {
+            VerifyMode::Deny => bail!(
+                "artifact {origin} failed static verification: {errors} error(s) \
+                 (diagnostics above; --verify warn loads anyway, --verify off skips)"
+            ),
+            VerifyMode::Warn => eprintln!(
+                "verify: artifact {origin} has {errors} error(s) — \
+                 loading anyway (--verify deny refuses)"
+            ),
+            VerifyMode::Off => unreachable!(),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Dt2Cam;
+    use crate::tcam::DeviceParams;
+
+    #[test]
+    fn clean_program_verifies_clean() {
+        let program = Dt2Cam::dataset("iris").unwrap().compile();
+        let report = verify_compiled(&program);
+        assert!(report.is_clean(), "unexpected diagnostics: {:?}", report.diagnostics);
+        assert_eq!(report.n_warnings(), 0, "{:?}", report.diagnostics);
+        assert_eq!(report.artifact, "compiled");
+        assert_eq!(report.n_banks, 1);
+        assert!(report.n_rows > 0);
+
+        let mapped = program.map(16, &DeviceParams::default());
+        let report = verify_mapped(&mapped);
+        assert!(report.passes(true), "{:?}", report.diagnostics);
+        assert_eq!(report.artifact, "mapped");
+    }
+
+    #[test]
+    fn corrupt_class_is_an_error() {
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        let n = program.banks[0].lut.n_classes;
+        let c = &mut program.banks[0].lut.classes[0];
+        *c = (*c + 1) % n;
+        let report = verify_compiled(&program);
+        assert!(!report.is_clean());
+        assert!(
+            report.diagnostics.iter().any(|d| d.check == "bijectivity"),
+            "{:?}",
+            report.diagnostics
+        );
+    }
+
+    #[test]
+    fn report_json_round_trips_counts() {
+        let program = Dt2Cam::dataset("haberman").unwrap().compile();
+        let report = verify_compiled(&program);
+        let j = report.to_json();
+        assert_eq!(j.get("format").and_then(Json::as_str), Some("dt2cam-analysis-report"));
+        assert_eq!(j.get("errors").and_then(Json::as_usize), Some(report.n_errors()));
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("banks").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn gate_respects_modes() {
+        let mapped = Dt2Cam::dataset("iris")
+            .unwrap()
+            .compile()
+            .map(16, &DeviceParams::default());
+        assert!(gate_artifact(&mapped, "test", VerifyMode::Warn).is_ok());
+        assert!(gate_artifact(&mapped, "test", VerifyMode::Deny).is_ok());
+
+        let mut bad = mapped.clone();
+        let n = bad.program.banks[0].lut.n_classes;
+        let c = &mut bad.program.banks[0].lut.classes[0];
+        *c = (*c + 1) % n;
+        assert!(gate_artifact(&bad, "test", VerifyMode::Off).is_ok());
+        assert!(gate_artifact(&bad, "test", VerifyMode::Warn).is_ok());
+        let err = gate_artifact(&bad, "test", VerifyMode::Deny).unwrap_err();
+        assert!(err.to_string().contains("failed static verification"), "{err}");
+    }
+
+    #[test]
+    fn verify_mode_parses() {
+        assert_eq!(VerifyMode::parse("warn").unwrap(), VerifyMode::Warn);
+        assert_eq!(VerifyMode::parse("deny").unwrap(), VerifyMode::Deny);
+        assert_eq!(VerifyMode::parse("off").unwrap(), VerifyMode::Off);
+        assert!(VerifyMode::parse("loud").is_err());
+    }
+}

@@ -1,0 +1,456 @@
+//! Row-level checks: decode each stored row *back* from its don't-care
+//! structure and hold it against the reduced rule table.
+//!
+//! Under the paper's adaptive unary scheme (§II.A.4) a well-formed
+//! feature field is always `0^a x^b 1^c` with `c ≥ 1`:
+//! [`FeatureEncoder::encode_rule`] emits the lower-bound unary code
+//! `u_LB` (ones packed at the low-order end) with the positions where
+//! `XOR(u_LB, u_UB) = 1` replaced by don't-cares. Decoding inverts
+//! that — `LB = c − 1`, `UB = n − 1 − a` — so spans and valid fields
+//! are in bijection, and comparing a stored field against a re-encoded
+//! rule reduces to comparing two spans. Any other field shape cannot
+//! come out of the compiler and is a `row-encoding` error.
+//!
+//! All re-encoding here is panic-free: `FeatureEncoder::encode_rule`
+//! aborts the process when a rule threshold is missing from the
+//! encoder's set, so the verifier re-derives spans itself and turns
+//! every violation into a [`Diagnostic`] instead.
+
+use crate::compiler::encode::trits_to_string;
+use crate::compiler::{Comparator, FeatureEncoder, Lut, Rule, Trit};
+
+use super::{Diagnostic, Severity};
+
+/// One row decoded into per-feature range-index spans
+/// (`spans[f] = (lb, ub)`, both inclusive), plus its class and its
+/// original row index (rows that fail to decode are skipped, so the
+/// index is not positional).
+#[derive(Clone, Debug)]
+pub struct RowBox {
+    pub row: usize,
+    pub class: usize,
+    pub spans: Vec<(usize, usize)>,
+}
+
+/// Decode one feature field. Returns the `(lb, ub)` span, or a
+/// human-readable description of the shape violation.
+pub fn decode_field(field: &[Trit]) -> Result<(usize, usize), String> {
+    let n = field.len();
+    let zeros = field.iter().take_while(|&&t| t == Trit::Zero).count();
+    let xs = field[zeros..].iter().take_while(|&&t| t == Trit::X).count();
+    let ones = field[zeros + xs..].iter().take_while(|&&t| t == Trit::One).count();
+    if zeros + xs + ones != n {
+        return Err(format!(
+            "field {:?} is not of the adaptive unary shape 0*x*1+",
+            trits_to_string(field)
+        ));
+    }
+    if ones == 0 {
+        return Err(format!(
+            "field {:?} has no trailing '1' — it matches no range index",
+            trits_to_string(field)
+        ));
+    }
+    Ok((ones - 1, ones - 1 + xs))
+}
+
+/// Render a span back to the field string it must encode as.
+fn span_field_string(lb: usize, ub: usize, n_bits: usize) -> String {
+    let mut s = String::with_capacity(n_bits);
+    for _ in 0..n_bits.saturating_sub(ub + 1) {
+        s.push('0');
+    }
+    for _ in lb..ub {
+        s.push('x');
+    }
+    for _ in 0..lb + 1 {
+        s.push('1');
+    }
+    s
+}
+
+/// Render a span as the half-open value interval it covers.
+pub fn span_interval(enc: &FeatureEncoder, lb: usize, ub: usize) -> String {
+    let ths = enc.thresholds();
+    let lo = if lb == 0 { "-inf".to_string() } else { format!("{:.4}", ths[lb - 1]) };
+    let hi = if ub >= ths.len() { "+inf".to_string() } else { format!("{:.4}", ths[ub]) };
+    format!("({lo}, {hi}]")
+}
+
+/// Panic-free re-derivation of the span a reduced rule must encode as.
+/// Mirrors `FeatureEncoder::encode_rule`, but a threshold missing from
+/// the encoder set (or an inverted bound pair) comes back as `Err`
+/// instead of aborting the process.
+fn rule_span(enc: &FeatureEncoder, rule: &Rule) -> Result<(usize, usize), String> {
+    let position = |th: f64| enc.thresholds().iter().position(|&t| t == th);
+    let (lo, hi) = rule.bounds();
+    let lb = if lo == f64::NEG_INFINITY {
+        0
+    } else {
+        match position(lo) {
+            Some(t) => t + 1,
+            None => return Err(format!("rule lower bound {lo} is not an encoder threshold")),
+        }
+    };
+    let ub = if hi == f64::INFINITY {
+        enc.n_bits() - 1
+    } else {
+        match position(hi) {
+            Some(t) => t,
+            None => return Err(format!("rule upper bound {hi} is not an encoder threshold")),
+        }
+    };
+    if lb > ub {
+        return Err(format!("rule covers an empty value range ({lo}, {hi}]"));
+    }
+    Ok((lb, ub))
+}
+
+/// Comparator-level well-formedness: thresholds must be finite where
+/// the comparator reads them and ordered for `InBetween` — the
+/// "thresholds monotone along each path" half of the precision check
+/// (an inverted pair means the source path contradicted itself).
+fn rule_shape_error(rule: &Rule) -> Option<String> {
+    match rule.comparator {
+        Comparator::None => None,
+        Comparator::Le if !rule.th1.is_finite() => {
+            Some(format!("LE rule has non-finite threshold {}", rule.th1))
+        }
+        Comparator::Gt if !rule.th1.is_finite() => {
+            Some(format!("GT rule has non-finite threshold {}", rule.th1))
+        }
+        Comparator::InBetween if !(rule.th1.is_finite() && rule.th2.is_finite()) => {
+            Some(format!(
+                "IN-BETWEEN rule has non-finite thresholds ({}, {})",
+                rule.th1, rule.th2
+            ))
+        }
+        Comparator::InBetween if rule.th1 >= rule.th2 => Some(format!(
+            "IN-BETWEEN thresholds not monotone along the path: {} >= {}",
+            rule.th1, rule.th2
+        )),
+        _ => None,
+    }
+}
+
+/// All row-level checks for one bank. Emits diagnostics into `out` and
+/// returns the successfully decoded rows for the space checks.
+pub fn check_rows(bank: usize, lut: &Lut, out: &mut Vec<Diagnostic>) -> Vec<RowBox> {
+    let diag = |sev, check, msg: String| Diagnostic::new(sev, check, msg).bank(bank);
+
+    // Adaptive-precision consistency of the encoders themselves.
+    for (f, enc) in lut.encoders.iter().enumerate() {
+        let ths = enc.thresholds();
+        if ths.iter().any(|t| !t.is_finite()) {
+            out.push(diag(
+                Severity::Error,
+                "precision",
+                format!("feature {f}: encoder thresholds contain a non-finite value"),
+            ));
+        } else if ths.windows(2).any(|w| w[0] >= w[1]) {
+            out.push(diag(
+                Severity::Error,
+                "precision",
+                format!("feature {f}: encoder thresholds are not strictly ascending"),
+            ));
+        }
+    }
+
+    // Field layout: offsets must be the running sum of per-feature bit
+    // widths (the fields are concatenated in feature order).
+    let mut offsets = Vec::with_capacity(lut.encoders.len());
+    let mut width = 0;
+    for enc in &lut.encoders {
+        offsets.push(width);
+        width += enc.n_bits();
+    }
+    if lut.offsets != offsets {
+        out.push(diag(
+            Severity::Error,
+            "precision",
+            format!(
+                "field offsets {:?} disagree with encoder bit widths (expected {:?})",
+                lut.offsets, offsets
+            ),
+        ));
+    }
+
+    let classes_ok = lut.classes.len() == lut.stored.len();
+    if !classes_ok {
+        out.push(diag(
+            Severity::Error,
+            "schema",
+            format!(
+                "{} class labels for {} stored rows",
+                lut.classes.len(),
+                lut.stored.len()
+            ),
+        ));
+    }
+    for (r, &c) in lut.classes.iter().enumerate() {
+        if c >= lut.n_classes {
+            out.push(
+                diag(
+                    Severity::Error,
+                    "class-range",
+                    format!("class id {c} out of range (n_classes = {})", lut.n_classes),
+                )
+                .row(r),
+            );
+        }
+    }
+
+    // Decode every stored row into a RowBox.
+    let mut boxes = Vec::with_capacity(lut.stored.len());
+    for (r, row) in lut.stored.iter().enumerate() {
+        if row.len() != width {
+            out.push(
+                diag(
+                    Severity::Error,
+                    "row-encoding",
+                    format!("stored row is {} trits wide, fields total {width}", row.len()),
+                )
+                .row(r),
+            );
+            continue;
+        }
+        let mut spans = Vec::with_capacity(lut.encoders.len());
+        for (f, enc) in lut.encoders.iter().enumerate() {
+            let field = &row[offsets[f]..offsets[f] + enc.n_bits()];
+            match decode_field(field) {
+                Ok(span) => spans.push(span),
+                Err(why) => out.push(
+                    diag(Severity::Error, "row-encoding", format!("feature {f}: {why}")).row(r),
+                ),
+            }
+        }
+        if spans.len() == lut.encoders.len() {
+            let class = if classes_ok { lut.classes[r] } else { 0 };
+            boxes.push(RowBox { row: r, class, spans });
+        }
+    }
+
+    check_against_reduced(bank, lut, &boxes, &offsets, out);
+    boxes
+}
+
+/// Bijectivity against the reduced rule table: every source path must
+/// re-encode to exactly its stored row (span-for-span, class-for-class)
+/// and the encoder threshold sets must be exactly the thresholds the
+/// paths mention.
+fn check_against_reduced(
+    bank: usize,
+    lut: &Lut,
+    boxes: &[RowBox],
+    offsets: &[usize],
+    out: &mut Vec<Diagnostic>,
+) {
+    let diag = |sev, check, msg: String| Diagnostic::new(sev, check, msg).bank(bank);
+    if lut.reduced.is_empty() {
+        if !lut.stored.is_empty() {
+            out.push(diag(
+                Severity::Info,
+                "bijectivity",
+                "artifact carries no reduced rule table — path↔row bijectivity not checkable"
+                    .to_string(),
+            ));
+        }
+        return;
+    }
+    if lut.reduced.len() != lut.stored.len() {
+        out.push(diag(
+            Severity::Error,
+            "bijectivity",
+            format!(
+                "{} source paths but {} stored rows — the mapping cannot be a bijection",
+                lut.reduced.len(),
+                lut.stored.len()
+            ),
+        ));
+        return;
+    }
+
+    let arity_ok = lut.reduced.iter().all(|row| row.rules.len() == lut.encoders.len());
+    if !arity_ok {
+        out.push(diag(
+            Severity::Error,
+            "schema",
+            format!("reduced rows do not all carry {} rules", lut.encoders.len()),
+        ));
+        return;
+    }
+
+    // The encoder for feature f must be built from exactly the
+    // thresholds the paths mention (paper: n_i = T_i + 1 bits).
+    for (f, enc) in lut.encoders.iter().enumerate() {
+        let rebuilt = FeatureEncoder::from_rules(lut.reduced.iter().map(|row| &row.rules[f]));
+        if &rebuilt != enc {
+            out.push(diag(
+                Severity::Error,
+                "precision",
+                format!(
+                    "feature {f}: encoder thresholds {:?} disagree with the rule table's \
+                     threshold set {:?}",
+                    enc.thresholds(),
+                    rebuilt.thresholds()
+                ),
+            ));
+        }
+    }
+
+    // Index decoded boxes by original row for the span comparison.
+    let mut box_of = vec![None; lut.stored.len()];
+    for b in boxes {
+        box_of[b.row] = Some(b);
+    }
+
+    for (r, path) in lut.reduced.iter().enumerate() {
+        if lut.classes.get(r).copied() != Some(path.class) {
+            out.push(
+                diag(
+                    Severity::Error,
+                    "bijectivity",
+                    format!(
+                        "row class {:?} disagrees with its source path's class {}",
+                        lut.classes.get(r),
+                        path.class
+                    ),
+                )
+                .row(r),
+            );
+        }
+        let Some(rb) = box_of[r] else { continue };
+        for (f, rule) in path.rules.iter().enumerate() {
+            if let Some(why) = rule_shape_error(rule) {
+                out.push(
+                    diag(Severity::Error, "precision", format!("feature {f}: {why}")).row(r),
+                );
+                continue;
+            }
+            let enc = &lut.encoders[f];
+            match rule_span(enc, rule) {
+                Err(why) => out.push(
+                    diag(Severity::Error, "precision", format!("feature {f}: {why}")).row(r),
+                ),
+                Ok(expect) if expect != rb.spans[f] => {
+                    let field = &lut.stored[r][offsets[f]..offsets[f] + enc.n_bits()];
+                    out.push(
+                        diag(
+                            Severity::Error,
+                            "bijectivity",
+                            format!(
+                                "feature {f}: path encodes as {:?}, row stores {:?}",
+                                span_field_string(expect.0, expect.1, enc.n_bits()),
+                                trits_to_string(field),
+                            ),
+                        )
+                        .row(r)
+                        .witness(format!(
+                            "path covers {}, row covers {}",
+                            span_interval(enc, expect.0, expect.1),
+                            span_interval(enc, rb.spans[f].0, rb.spans[f].1)
+                        )),
+                    );
+                }
+                Ok(_) => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Dt2Cam;
+
+    fn trits(s: &str) -> Vec<Trit> {
+        s.chars()
+            .map(|c| match c {
+                '0' => Trit::Zero,
+                '1' => Trit::One,
+                'x' => Trit::X,
+                other => panic!("bad trit char {other}"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn decode_field_inverts_the_unary_shape() {
+        // 5-bit field: spans (lb, ub) and their canonical shapes.
+        assert_eq!(decode_field(&trits("00001")), Ok((0, 0)));
+        assert_eq!(decode_field(&trits("11111")), Ok((4, 4)));
+        assert_eq!(decode_field(&trits("0xx11")), Ok((1, 3)));
+        assert_eq!(decode_field(&trits("xxxx1")), Ok((0, 4)));
+        assert_eq!(decode_field(&trits("1")), Ok((0, 0)));
+    }
+
+    #[test]
+    fn decode_field_rejects_malformed_shapes() {
+        assert!(decode_field(&trits("00000")).is_err()); // no trailing one
+        assert!(decode_field(&trits("10001")).is_err()); // one before zero
+        assert!(decode_field(&trits("00x0x1")).is_err()); // zero inside x-run
+        assert!(decode_field(&trits("011x1")).is_err()); // x inside one-run
+    }
+
+    #[test]
+    fn span_round_trips_through_field_string() {
+        for n in 1..7usize {
+            for lb in 0..n {
+                for ub in lb..n {
+                    let s = span_field_string(lb, ub, n);
+                    assert_eq!(decode_field(&trits(&s)), Ok((lb, ub)), "n={n} lb={lb} ub={ub}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_lut_rows_all_decode() {
+        let program = Dt2Cam::dataset("iris").unwrap().compile();
+        let lut = program.lut();
+        let mut diags = Vec::new();
+        let boxes = check_rows(0, lut, &mut diags);
+        assert!(diags.iter().all(|d| d.severity == Severity::Info), "{diags:?}");
+        assert_eq!(boxes.len(), lut.n_rows());
+    }
+
+    #[test]
+    fn flipped_trit_breaks_bijectivity() {
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        let lut = &mut program.banks[0].lut;
+        // Turn the last trit of row 0 into a different trit; every
+        // rewrite either breaks the field shape or moves the span.
+        let last = lut.stored[0].len() - 1;
+        lut.stored[0][last] = match lut.stored[0][last] {
+            Trit::One => Trit::Zero,
+            _ => Trit::One,
+        };
+        let mut diags = Vec::new();
+        check_rows(0, &program.banks[0].lut, &mut diags);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.severity == Severity::Error
+                    && (d.check == "bijectivity" || d.check == "row-encoding")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn foreign_threshold_is_a_precision_error() {
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        let lut = &mut program.banks[0].lut;
+        // Nudge one finite rule threshold off the encoder's set.
+        'outer: for row in &mut lut.reduced {
+            for rule in &mut row.rules {
+                if rule.th1.is_finite() {
+                    rule.th1 += 1e30;
+                    break 'outer;
+                }
+            }
+        }
+        let mut diags = Vec::new();
+        check_rows(0, &program.banks[0].lut, &mut diags);
+        assert!(diags.iter().any(|d| d.check == "precision"), "{diags:?}");
+    }
+}

@@ -1,0 +1,443 @@
+//! Input-space partition checks: completeness, disjointness, dead rows.
+//!
+//! Whether a row matches an input depends only on the input's
+//! per-feature *range index* (which inter-threshold interval each value
+//! falls in), so the discrete product space `{0..n_0} × … × {0..n_F}`
+//! is an exact, finite model of the continuous input domain. Over it:
+//!
+//! - **disjointness** is a pairwise span-intersection test — two rows
+//!   overlap iff their spans intersect on *every* feature;
+//! - **completeness** is exact volume accounting: for pairwise-disjoint
+//!   rows, `Σ row volumes == Π n_i` iff every input is covered. The
+//!   product overflows `u128` at Credit scale (hundreds of ranges to
+//!   the 10th power and beyond), so volumes use a minimal
+//!   arbitrary-precision integer ([`Volume`], base 2^32 limbs);
+//! - a **hole witness** comes from a volume-pruned descent: at each
+//!   feature, pick the first range index whose covering rows cannot
+//!   fill the remaining subspace, and recurse into it.
+
+use crate::compiler::Lut;
+
+use super::rows::{span_interval, RowBox};
+use super::{Diagnostic, Severity};
+
+/// Minimal arbitrary-precision unsigned integer: little-endian base
+/// 2^32 limbs (held in `u64` so limb×small products can't overflow),
+/// no trailing zero limbs. Just enough arithmetic — multiply by a
+/// small factor, add, compare — to sum row volumes exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Volume {
+    limbs: Vec<u64>,
+}
+
+impl Volume {
+    pub fn zero() -> Volume {
+        Volume { limbs: Vec::new() }
+    }
+
+    pub fn one() -> Volume {
+        Volume { limbs: vec![1] }
+    }
+
+    pub fn product(factors: impl Iterator<Item = usize>) -> Volume {
+        let mut v = Volume::one();
+        for f in factors {
+            v.mul_small(f);
+        }
+        v
+    }
+
+    /// In-place multiply by a small factor (`m < 2^32`; per-feature
+    /// range counts are bounded by the LUT width, far below that).
+    pub fn mul_small(&mut self, m: usize) {
+        assert!(m < (1 << 32), "factor {m} exceeds one limb");
+        if m == 0 {
+            self.limbs.clear();
+            return;
+        }
+        let m = m as u64;
+        let mut carry = 0u64;
+        for limb in &mut self.limbs {
+            let v = *limb * m + carry;
+            *limb = v & 0xFFFF_FFFF;
+            carry = v >> 32;
+        }
+        while carry > 0 {
+            self.limbs.push(carry & 0xFFFF_FFFF);
+            carry >>= 32;
+        }
+    }
+
+    pub fn add(&mut self, other: &Volume) {
+        if other.limbs.len() > self.limbs.len() {
+            self.limbs.resize(other.limbs.len(), 0);
+        }
+        let mut carry = 0u64;
+        for (i, limb) in self.limbs.iter_mut().enumerate() {
+            let v = *limb + other.limbs.get(i).copied().unwrap_or(0) + carry;
+            *limb = v & 0xFFFF_FFFF;
+            carry = v >> 32;
+        }
+        if carry > 0 {
+            self.limbs.push(carry);
+        }
+    }
+
+    /// Lossy magnitude for human-readable messages.
+    pub fn approx(&self) -> f64 {
+        self.limbs
+            .iter()
+            .rev()
+            .fold(0.0, |acc, &limb| acc * 4_294_967_296.0 + limb as f64)
+    }
+}
+
+fn box_volume(b: &RowBox, from_feature: usize) -> Volume {
+    let mut v = Volume::one();
+    for &(lb, ub) in &b.spans[from_feature..] {
+        v.mul_small(ub - lb + 1);
+    }
+    v
+}
+
+fn intersects(a: &RowBox, b: &RowBox) -> bool {
+    a.spans
+        .iter()
+        .zip(&b.spans)
+        .all(|(x, y)| x.0 <= y.1 && y.0 <= x.1)
+}
+
+/// Is `inner` contained in `outer` on every feature?
+fn contains(outer: &RowBox, inner: &RowBox) -> bool {
+    outer
+        .spans
+        .iter()
+        .zip(&inner.spans)
+        .all(|(o, i)| o.0 <= i.0 && i.1 <= o.1)
+}
+
+/// Render the intersection of two boxes as value intervals, skipping
+/// features where the overlap is the whole domain (capped — wide
+/// programs would otherwise produce unreadable witnesses).
+fn overlap_witness(lut: &Lut, a: &RowBox, b: &RowBox) -> String {
+    let mut parts = Vec::new();
+    for (f, enc) in lut.encoders.iter().enumerate() {
+        let lb = a.spans[f].0.max(b.spans[f].0);
+        let ub = a.spans[f].1.min(b.spans[f].1);
+        if lb == 0 && ub == enc.n_bits() - 1 {
+            continue;
+        }
+        if parts.len() == 6 {
+            parts.push("…".to_string());
+            break;
+        }
+        parts.push(format!("f{f} in {}", span_interval(enc, lb, ub)));
+    }
+    if parts.is_empty() {
+        "the whole input domain".to_string()
+    } else {
+        parts.join(", ")
+    }
+}
+
+/// Per-slice coverage volume over features `from_feature..`. Valid
+/// because all candidate boxes agree on every feature before
+/// `from_feature` (they cover the same descent prefix), so their
+/// pairwise disjointness must live in the remaining features.
+fn slice_volume(slice: &[&RowBox], from_feature: usize) -> Volume {
+    let mut sum = Volume::zero();
+    for b in slice {
+        sum.add(&box_volume(b, from_feature));
+    }
+    sum
+}
+
+/// Find one uncovered range-index point, assuming the boxes are
+/// pairwise disjoint and known not to fill the space. Cost is bounded
+/// by width × rows per level; callers gate it with a work cap.
+fn find_hole(boxes: &[RowBox], n_bits: &[usize]) -> Option<Vec<usize>> {
+    let mut live: Vec<&RowBox> = boxes.iter().collect();
+    let mut point = Vec::with_capacity(n_bits.len());
+    for f in 0..n_bits.len() {
+        let full = Volume::product(n_bits[f + 1..].iter().copied());
+        let mut descend = None;
+        for k in 0..n_bits[f] {
+            let slice: Vec<&RowBox> = live
+                .iter()
+                .copied()
+                .filter(|b| b.spans[f].0 <= k && k <= b.spans[f].1)
+                .collect();
+            if slice.is_empty() || slice_volume(&slice, f + 1) != full {
+                descend = Some((k, slice));
+                break;
+            }
+        }
+        let (k, slice) = descend?;
+        point.push(k);
+        live = slice;
+    }
+    if live.is_empty() {
+        Some(point)
+    } else {
+        None
+    }
+}
+
+/// Cap on per-bank overlap diagnostics; a heavily corrupted artifact
+/// would otherwise drown the report in O(rows²) findings.
+const OVERLAP_DIAG_CAP: usize = 16;
+
+/// Partition checks for one bank over its decoded rows.
+pub fn check_space(bank: usize, lut: &Lut, boxes: &[RowBox], out: &mut Vec<Diagnostic>) {
+    let diag = |sev, check, msg: String| Diagnostic::new(sev, check, msg).bank(bank);
+    if lut.encoders.is_empty() || lut.n_rows() == 0 {
+        return;
+    }
+
+    // Pairwise disjointness. Overlaps with *different* classes make
+    // classification ambiguous (which row wins depends on match order)
+    // — errors. Same-class overlaps keep answers well-defined but mark
+    // redundant rows: full containment of a later row means it can
+    // never be the first match (dead row, the RETENTION dedup
+    // precursor); partial overlap is shadowing.
+    let mut n_overlaps = 0usize;
+    let mut suppressed = 0usize;
+    for i in 0..boxes.len() {
+        for j in i + 1..boxes.len() {
+            let (a, b) = (&boxes[i], &boxes[j]);
+            if !intersects(a, b) {
+                continue;
+            }
+            n_overlaps += 1;
+            if n_overlaps > OVERLAP_DIAG_CAP {
+                suppressed += 1;
+                continue;
+            }
+            let witness = overlap_witness(lut, a, b);
+            if a.class != b.class {
+                out.push(
+                    diag(
+                        Severity::Error,
+                        "disjointness",
+                        format!(
+                            "rows {} and {} overlap with different classes ({} vs {})",
+                            a.row, b.row, a.class, b.class
+                        ),
+                    )
+                    .row(b.row)
+                    .witness(witness),
+                );
+            } else if contains(a, b) {
+                out.push(
+                    diag(
+                        Severity::Warning,
+                        "dead-row",
+                        format!(
+                            "row {} is contained in earlier row {} (same class) — \
+                             unreachable under first-match, a dedup candidate",
+                            b.row, a.row
+                        ),
+                    )
+                    .row(b.row)
+                    .witness(witness),
+                );
+            } else {
+                out.push(
+                    diag(
+                        Severity::Warning,
+                        "shadowing",
+                        format!(
+                            "rows {} and {} partially overlap (same class {})",
+                            a.row, b.row, a.class
+                        ),
+                    )
+                    .row(b.row)
+                    .witness(witness),
+                );
+            }
+        }
+    }
+    if suppressed > 0 {
+        out.push(diag(
+            Severity::Info,
+            "disjointness",
+            format!("{suppressed} further overlapping pair(s) suppressed"),
+        ));
+    }
+
+    // Exact completeness by volume accounting — only meaningful when
+    // every row decoded and the rows are disjoint.
+    let n_bits: Vec<usize> = lut.encoders.iter().map(|e| e.n_bits()).collect();
+    if boxes.len() < lut.n_rows() {
+        out.push(diag(
+            Severity::Info,
+            "completeness",
+            "skipped: some rows failed to decode".to_string(),
+        ));
+    } else if n_overlaps > 0 {
+        out.push(diag(
+            Severity::Info,
+            "completeness",
+            "skipped: overlapping rows make volume accounting inconclusive".to_string(),
+        ));
+    } else {
+        let total = Volume::product(n_bits.iter().copied());
+        let mut sum = Volume::zero();
+        for b in boxes {
+            sum.add(&box_volume(b, 0));
+        }
+        if sum != total {
+            let mut d = diag(
+                Severity::Error,
+                "completeness",
+                format!(
+                    "rows cover ≈{:.4e} of ≈{:.4e} range cells — some inputs match no row",
+                    sum.approx(),
+                    total.approx()
+                ),
+            );
+            // Witness search is width × rows per feature level; skip it
+            // for huge programs (the shortfall above already fails the
+            // check).
+            let width: usize = n_bits.iter().sum();
+            if boxes.len() * width <= 200_000 {
+                if let Some(point) = find_hole(boxes, &n_bits) {
+                    let rendered: Vec<String> = point
+                        .iter()
+                        .enumerate()
+                        .map(|(f, &k)| format!("f{f} in {}", span_interval(&lut.encoders[f], k, k)))
+                        .collect();
+                    d = d.witness(format!("uncovered region: {}", rendered.join(", ")));
+                }
+            }
+            out.push(d);
+        }
+    }
+
+    // Per-bank class coverage is advisory only: bagged forest banks
+    // legitimately miss classes (program-wide reachability is judged in
+    // verify_compiled).
+    let missing: Vec<usize> = (0..lut.n_classes)
+        .filter(|c| !lut.classes.contains(c))
+        .collect();
+    if !missing.is_empty() {
+        out.push(diag(
+            Severity::Info,
+            "unreachable-class",
+            format!("class(es) {missing:?} have no row in this bank"),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rows::check_rows;
+    use crate::api::Dt2Cam;
+
+    fn volume_of(factors: &[usize]) -> Volume {
+        Volume::product(factors.iter().copied())
+    }
+
+    #[test]
+    fn volume_arithmetic_is_exact_past_u128() {
+        // 2^32 as a product of two in-limb factors.
+        let mut v = volume_of(&[1 << 16, 1 << 16]);
+        assert_eq!(v.approx(), 4_294_967_296.0);
+        // 200^25 ≈ 3.4e57 overflows u128 (max ≈ 3.4e38) but must stay
+        // exact: multiply up, then verify via the distributive law.
+        let big = volume_of(&[200; 25]);
+        let mut sum = Volume::zero();
+        for _ in 0..200 {
+            sum.add(&volume_of(&[200; 24]));
+        }
+        assert_eq!(big, sum);
+        assert!(big.approx() > 1e57);
+        v.mul_small(0);
+        assert_eq!(v, Volume::zero());
+    }
+
+    fn boxed(row: usize, class: usize, spans: &[(usize, usize)]) -> RowBox {
+        RowBox { row, class, spans: spans.to_vec() }
+    }
+
+    // A hand-made 2-feature LUT shell: 3×2 range grid.
+    fn grid_lut() -> Lut {
+        use crate::compiler::FeatureEncoder;
+        Lut {
+            stored: vec![Vec::new(); 2], // n_rows only; boxes are handed in
+            classes: vec![0, 1],
+            class_bits: Vec::new(),
+            encoders: vec![
+                FeatureEncoder::from_thresholds(vec![0.25, 0.5]),
+                FeatureEncoder::from_thresholds(vec![0.75]),
+            ],
+            offsets: vec![0, 3],
+            n_classes: 2,
+            reduced: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn exact_partition_is_clean() {
+        let lut = grid_lut();
+        // Two boxes tiling the 3×2 grid exactly.
+        let boxes = vec![boxed(0, 0, &[(0, 0), (0, 1)]), boxed(1, 1, &[(1, 2), (0, 1)])];
+        let mut out = Vec::new();
+        check_space(0, &lut, &boxes, &mut out);
+        assert!(out.iter().all(|d| d.severity == Severity::Info), "{out:?}");
+    }
+
+    #[test]
+    fn hole_is_an_error_with_a_witness() {
+        let lut = grid_lut();
+        // Range (1, f1=1) and all of f0=2 are uncovered.
+        let boxes = vec![boxed(0, 0, &[(0, 0), (0, 1)]), boxed(1, 1, &[(1, 1), (0, 0)])];
+        let mut out = Vec::new();
+        check_space(0, &lut, &boxes, &mut out);
+        let hole = out
+            .iter()
+            .find(|d| d.check == "completeness" && d.severity == Severity::Error)
+            .unwrap_or_else(|| panic!("no completeness error in {out:?}"));
+        let w = hole.witness.as_deref().unwrap();
+        assert!(w.contains("uncovered region"), "{w}");
+    }
+
+    #[test]
+    fn cross_class_overlap_is_an_error() {
+        let lut = grid_lut();
+        let boxes = vec![boxed(0, 0, &[(0, 1), (0, 1)]), boxed(1, 1, &[(1, 2), (0, 1)])];
+        let mut out = Vec::new();
+        check_space(0, &lut, &boxes, &mut out);
+        let d = out.iter().find(|d| d.check == "disjointness").unwrap();
+        assert_eq!(d.severity, Severity::Error);
+        assert!(d.witness.as_deref().unwrap().contains("f0"), "{d:?}");
+    }
+
+    #[test]
+    fn contained_same_class_row_is_a_dead_row_warning() {
+        let lut = grid_lut();
+        let boxes = vec![
+            boxed(0, 0, &[(0, 2), (0, 1)]), // covers everything
+            boxed(1, 0, &[(1, 1), (0, 0)]), // inside row 0, same class
+        ];
+        let mut out = Vec::new();
+        check_space(0, &lut, &boxes, &mut out);
+        let d = out.iter().find(|d| d.check == "dead-row").unwrap();
+        assert_eq!(d.severity, Severity::Warning);
+        assert_eq!(d.row, Some(1));
+    }
+
+    #[test]
+    fn compiled_banks_partition_their_space() {
+        // The end-to-end property the paper claims: compiled LUTs tile
+        // the range-index space exactly, across all bank counts.
+        let program = Dt2Cam::dataset("haberman").unwrap().compile();
+        for (b, bank) in program.banks.iter().enumerate() {
+            let mut out = Vec::new();
+            let boxes = check_rows(b, &bank.lut, &mut out);
+            check_space(b, &bank.lut, &boxes, &mut out);
+            assert!(out.iter().all(|d| d.severity == Severity::Info), "{out:?}");
+        }
+    }
+}

@@ -405,6 +405,7 @@ impl CompiledProgram {
 
 /// One mapped CAM bank: the bank's tile grid plus the seed of its
 /// rogue-row class draws.
+#[derive(Clone)]
 pub struct MappedBank {
     /// The bank's tile grid (cells, classes, divisions, nominal vref).
     pub mapped: MappedArray,
@@ -414,6 +415,7 @@ pub struct MappedBank {
 
 /// Stage 3 artifact: the program mapped onto per-bank S×S tile grids,
 /// with shared device parameters and per-bank mapping seeds.
+#[derive(Clone)]
 pub struct MappedProgram {
     /// The compiled program this mapping was built from.
     pub program: CompiledProgram,
@@ -546,8 +548,10 @@ impl MappedProgram {
         Ok(Session { coord })
     }
 
-    /// Rebuild one bank's nominal (fault-free) grid.
-    fn nominal_grid(&self, bank: usize) -> MappedArray {
+    /// Rebuild one bank's nominal (fault-free) grid from its mapping
+    /// seed. Deterministic; the static verifier diffs the shipped cells
+    /// against this to detect drift (fault injection or tampering).
+    pub fn nominal_grid(&self, bank: usize) -> MappedArray {
         let b = &self.banks[bank];
         let mut rng = Prng::new(b.map_seed);
         MappedArray::from_lut(&self.program.banks[bank].lut, b.mapped.s, &self.params, &mut rng)

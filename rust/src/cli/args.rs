@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 29] = [
+const VALUE_KEYS: [&str; 32] = [
     "dataset",
     "tile-size",
     "seed",
@@ -45,6 +45,9 @@ const VALUE_KEYS: [&str; 29] = [
     "banks",
     "workers",
     "replicas",
+    "deny",
+    "json",
+    "verify",
 ];
 
 impl Args {

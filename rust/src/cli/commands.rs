@@ -5,10 +5,11 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
+use crate::analysis;
 use crate::api::registry::{self, BackendOptions};
-use crate::api::{Dt2Cam, MappedProgram, TrainedModel};
+use crate::api::{CompiledProgram, Dt2Cam, MappedProgram, TrainedModel};
 use crate::cart::{vote_survivors, ForestParams};
-use crate::config::EngineKind;
+use crate::config::{EngineKind, Json};
 use crate::coordinator::InferenceRequest;
 use crate::net;
 use crate::nonideal::{inject_saf, perturb_vref, SafRates};
@@ -81,6 +82,24 @@ fn train_model(name: &str, forest: &Option<ForestParams>) -> Result<TrainedModel
     match forest {
         Some(fp) => Dt2Cam::forest(name, fp),
         None => Dt2Cam::dataset(name),
+    }
+}
+
+/// Parse `--verify warn|deny|off` for the artifact-loading commands
+/// (`serve --program`, `worker`, `router`). Only meaningful with
+/// `--program`: fresh-trained programs are verified by construction,
+/// so the flag without it is a contradiction, not a silent no-op.
+fn verify_mode_arg(args: &mut Args, has_program: bool) -> Result<analysis::VerifyMode> {
+    match args.opt_str("verify") {
+        None => Ok(analysis::VerifyMode::Warn),
+        Some(v) => {
+            anyhow::ensure!(
+                has_program,
+                "--verify requires --program (fresh-trained programs are verified \
+                 by construction; `dt2cam check --dataset` verifies a build)"
+            );
+            analysis::VerifyMode::parse(&v)
+        }
     }
 }
 
@@ -345,6 +364,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let program_path = args.opt_str("program");
     let listen = args.opt_str("listen");
     let admission = args.opt_usize("admission")?;
+    let verify = verify_mode_arg(args, program_path.is_some())?;
 
     // Serving knobs are validated up front, naming the flag: a zero
     // batch width used to reach Batcher::new unchecked and panic there.
@@ -390,6 +410,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
         }
         args.finish()?;
         let mp = MappedProgram::load(&PathBuf::from(&path))?;
+        analysis::gate_artifact(&mp, &path, verify)?;
         if let Some(ts) = tile_size_arg {
             if ts != mp.tile_size() {
                 anyhow::bail!(
@@ -610,6 +631,96 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// `dt2cam check`: the static program verifier. Proves (or refutes)
+/// the path↔row bijectivity, completeness/disjointness and mapping-lint
+/// invariants of a program artifact — or of the program the build flags
+/// would produce — without running a single simulation. Accepts both
+/// artifact flavors (`compile --save` mapped programs and compiled
+/// programs), dispatching on the JSON `format` field. Exit is nonzero
+/// on any error, or on warnings under `--deny warnings`; `--json PATH`
+/// writes the structured AnalysisReport for CI archiving.
+pub fn check(args: &mut Args) -> Result<()> {
+    let program_path = args.opt_str("program");
+    let json_path = args.opt_str("json");
+    let deny_warnings = match args.opt_str("deny").as_deref() {
+        None => false,
+        Some("warnings") => true,
+        Some(other) => anyhow::bail!(
+            "--deny takes 'warnings' (got {other:?}); errors always fail the check"
+        ),
+    };
+    let tile_size_arg = args.opt_usize("tile-size")?;
+    let forest = forest_params_arg(args)?;
+    let seed = args.opt_u64("seed")?;
+
+    let report = if let Some(path) = program_path {
+        // Artifact mode verifies the file as-is; build flags would be
+        // silently ignored, so they are conflicts instead.
+        if let Some(d) = args.opt_str("dataset") {
+            anyhow::bail!(
+                "--dataset {d} conflicts with --program (check verifies the artifact as-is)"
+            );
+        }
+        anyhow::ensure!(
+            tile_size_arg.is_none() && forest.is_none() && seed.is_none(),
+            "--tile-size/--forest/--seed conflict with --program \
+             (check verifies the artifact as-is)"
+        );
+        args.finish()?;
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading program artifact {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        match j.get("format").and_then(|f| f.as_str()).unwrap_or("") {
+            "dt2cam-mapped-program" => analysis::verify_mapped(&MappedProgram::from_json(&j)?),
+            "dt2cam-compiled-program" => {
+                analysis::verify_compiled(&CompiledProgram::from_json(&j)?)
+            }
+            other => anyhow::bail!(
+                "{path} is not a dt2cam program artifact (format {other:?}; expected \
+                 dt2cam-mapped-program or dt2cam-compiled-program)"
+            ),
+        }
+    } else {
+        // Build mode: train + compile + map the named dataset (same
+        // flags as `compile`) and verify the result end to end.
+        let name = dataset_arg(args)?;
+        args.finish()?;
+        let model = match (&forest, seed) {
+            (Some(fp), Some(sd)) => Dt2Cam::forest_seeded(&name, fp, sd)?,
+            (Some(fp), None) => Dt2Cam::forest(&name, fp)?,
+            (None, Some(sd)) => Dt2Cam::dataset_seeded(&name, sd)?,
+            (None, None) => Dt2Cam::dataset(&name)?,
+        };
+        let mapped = model
+            .compile()
+            .map(tile_size_arg.unwrap_or(128), &DeviceParams::default());
+        analysis::verify_mapped(&mapped)
+    };
+
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    println!("{}", report.summary_line());
+    if let Some(jp) = json_path {
+        std::fs::write(&jp, report.to_json().to_string_pretty())
+            .with_context(|| format!("writing analysis report to {jp}"))?;
+        eprintln!("wrote {jp}");
+    }
+    if !report.passes(deny_warnings) {
+        anyhow::bail!(
+            "verification failed: {} error(s), {} warning(s){}",
+            report.n_errors(),
+            report.n_warnings(),
+            if deny_warnings && report.n_errors() == 0 {
+                " (--deny warnings)"
+            } else {
+                ""
+            }
+        );
+    }
+    Ok(())
+}
+
 /// Stage artifacts for the cluster commands: load a pinned
 /// `--program PATH` artifact or train+compile `--dataset NAME`
 /// (`[--forest N --sample-fraction F --max-features M] [--tile-size S]`).
@@ -618,7 +729,9 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
 fn cluster_program(args: &mut Args) -> Result<MappedProgram> {
     let tile_size_arg = args.opt_usize("tile-size")?;
     let forest = forest_params_arg(args)?;
-    if let Some(path) = args.opt_str("program") {
+    let program_path = args.opt_str("program");
+    let verify = verify_mode_arg(args, program_path.is_some())?;
+    if let Some(path) = program_path {
         if let Some(d) = args.opt_str("dataset") {
             anyhow::bail!(
                 "--dataset {d} conflicts with --program (the artifact pins its dataset)"
@@ -631,6 +744,7 @@ fn cluster_program(args: &mut Args) -> Result<MappedProgram> {
         }
         args.finish()?;
         let mp = MappedProgram::load(&PathBuf::from(&path))?;
+        analysis::gate_artifact(&mp, &path, verify)?;
         if let Some(ts) = tile_size_arg {
             if ts != mp.tile_size() {
                 anyhow::bail!(
@@ -1179,5 +1293,86 @@ mod tests {
         )))
         .unwrap();
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn check_passes_on_saved_artifact() {
+        let path = tmpfile("check_clean.json");
+        let _ = std::fs::remove_file(&path);
+        compile(&mut args(&format!(
+            "compile --dataset iris --tile-size 16 --save {}",
+            path.display()
+        )))
+        .unwrap();
+        check(&mut args(&format!(
+            "check --program {} --deny warnings",
+            path.display()
+        )))
+        .unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn check_build_mode_passes_and_writes_report() {
+        let report_path = tmpfile("check_report.json");
+        let _ = std::fs::remove_file(&report_path);
+        check(&mut args(&format!(
+            "check --dataset iris --tile-size 16 --deny warnings --json {}",
+            report_path.display()
+        )))
+        .unwrap();
+        let text = std::fs::read_to_string(&report_path).unwrap();
+        assert!(text.contains("dt2cam-analysis-report"), "{text}");
+        let _ = std::fs::remove_file(&report_path);
+    }
+
+    #[test]
+    fn check_rejects_bad_deny_value_and_conflicting_flags() {
+        let err = check(&mut args("check --dataset iris --deny everything")).unwrap_err();
+        assert!(format!("{err:#}").contains("--deny"));
+        let err = check(&mut args("check --program x.json --dataset iris")).unwrap_err();
+        assert!(format!("{err:#}").contains("conflicts with --program"));
+        let err = check(&mut args("check --program x.json --tile-size 16")).unwrap_err();
+        assert!(format!("{err:#}").contains("conflict with --program"));
+    }
+
+    #[test]
+    fn check_flags_corrupted_artifact_and_verify_gate_denies_it() {
+        let path = tmpfile("check_corrupt.json");
+        let _ = std::fs::remove_file(&path);
+        let model = Dt2Cam::dataset("iris").unwrap();
+        let mut mapped = model.compile().map(16, &DeviceParams::default());
+        let lut = &mut mapped.program.banks[0].lut;
+        lut.classes[0] = (lut.classes[0] + 1) % lut.n_classes;
+        mapped.save(&path).unwrap();
+        // The corrupted artifact still loads, but check must fail it...
+        let err = check(&mut args(&format!("check --program {}", path.display())))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("error(s)"), "{err:#}");
+        // ...and the load gate must refuse it under --verify deny.
+        let err = serve(&mut args(&format!(
+            "serve --program {} --engine native --batch 8 --verify deny",
+            path.display()
+        )))
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("failed static verification"),
+            "{err:#}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn verify_flag_requires_program() {
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --verify deny",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--program"), "{err:#}");
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --verify sometimes",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--program"), "{err:#}");
     }
 }

@@ -17,6 +17,8 @@
 //!                 [--replicas R] (--dataset NAME | --program prog.json)
 //! dt2cam loadgen  --connect 127.0.0.1:7230 --dataset NAME [--clients N]
 //!                 [--rps R] [--requests N] [--tag NAME] [--quick] [--shutdown]
+//! dt2cam check    (--program prog.json | --dataset NAME [--forest N])
+//!                 [--deny warnings] [--json report.json]
 //! dt2cam backends
 //! dt2cam report   --all | --table 2|4|5|6 | --fig 6|7|8|9  [--quick]
 //!                 [--out-dir reports]
@@ -48,6 +50,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "worker" => commands::worker(&mut args),
         "router" => commands::router(&mut args),
         "loadgen" => commands::loadgen(&mut args),
+        "check" => commands::check(&mut args),
         "backends" => commands::backends(&mut args),
         "report" => commands::report(&mut args),
         "help" | "--help" | "-h" => {
@@ -77,6 +80,9 @@ USAGE:
                   (--dataset NAME | --program P.json) [--batch B] [--admission N]
   dt2cam loadgen  --connect ADDR[,ADDR...] --dataset NAME [--clients N] [--rps R]
                   [--requests N] [--seed SEED] [--tag NAME] [--quick] [--shutdown]
+  dt2cam check    (--program PROGRAM.json | --dataset NAME [--tile-size S]
+                  [--forest N] [--sample-fraction F] [--max-features K]
+                  [--seed SEED]) [--deny warnings] [--json REPORT.json]
   dt2cam backends
   dt2cam report   [--all] [--table N]... [--fig N]... [--quick] [--out-dir DIR]
   dt2cam help
@@ -100,6 +106,13 @@ reports p50/p95/p99 end-to-end latency and wall throughput;
 `--shutdown` stops the server afterwards. `--connect` takes a
 comma-separated list to round-robin clients across a fleet (per-target
 breakdown in the report; `--shutdown` stops every target).
+`check` is the static program verifier: it proves (or refutes) the
+path↔row bijectivity, completeness/disjointness, and mapping-lint
+invariants of an artifact — or of the program `--dataset`/`--forest`
+would compile — without running a simulation. Exit is nonzero on any
+error, or on warnings under `--deny warnings`; `--json` writes the
+structured AnalysisReport. `serve --program`, `worker`, and `router`
+also verify on load (`--verify warn|deny|off`, default warn).
 `worker`/`router` shard one forest's banks across processes: each
 worker serves `--banks` (global ids) of the shared program, the router
 places banks round-robin over `--workers` (`--replicas R` failover

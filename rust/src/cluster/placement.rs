@@ -103,6 +103,11 @@ pub fn parse_bank_list(s: &str) -> Result<Vec<usize>> {
         })
         .collect::<Result<_>>()?;
     anyhow::ensure!(!banks.is_empty(), "--banks list is empty");
+    // A repeated id gets its own error naming the culprit — "must be
+    // ascending" for `0,3,3` hides what actually went wrong.
+    if let Some(w) = banks.windows(2).find(|w| w[0] == w[1]) {
+        anyhow::bail!("duplicate bank id {} in --banks list {s:?}", w[0]);
+    }
     anyhow::ensure!(
         banks.windows(2).all(|w| w[0] < w[1]),
         "--banks list must be strictly ascending, got {s:?}"
@@ -111,7 +116,10 @@ pub fn parse_bank_list(s: &str) -> Result<Vec<usize>> {
 }
 
 /// Parse a `--workers` list: comma-separated addresses, e.g.
-/// `"127.0.0.1:7301,127.0.0.1:7302"`.
+/// `"127.0.0.1:7301,127.0.0.1:7302"`. A repeated address is an error
+/// naming the duplicate: it is never what the operator meant (the
+/// placement layer would refuse it later with a less direct message,
+/// and `loadgen --connect` would silently double a target's load).
 pub fn parse_worker_list(s: &str) -> Result<Vec<String>> {
     let workers: Vec<String> = s
         .split(',')
@@ -119,6 +127,12 @@ pub fn parse_worker_list(s: &str) -> Result<Vec<String>> {
         .filter(|p| !p.is_empty())
         .collect();
     anyhow::ensure!(!workers.is_empty(), "--workers list is empty");
+    for (i, a) in workers.iter().enumerate() {
+        anyhow::ensure!(
+            !workers[..i].contains(a),
+            "duplicate worker address {a:?} in worker list {s:?}"
+        );
+    }
     Ok(workers)
 }
 
@@ -181,5 +195,24 @@ mod tests {
             vec!["a:1".to_string(), "b:2".to_string()]
         );
         assert!(parse_worker_list(" , ").is_err());
+    }
+
+    #[test]
+    fn duplicate_bank_id_error_names_the_duplicate() {
+        let err = parse_bank_list("0,3,3").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("duplicate bank id 3"), "{msg}");
+        // Out-of-order without repetition keeps the ascending message.
+        let msg = format!("{:#}", parse_bank_list("0,4,2").unwrap_err());
+        assert!(msg.contains("ascending"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_worker_address_error_names_the_duplicate() {
+        let err = parse_worker_list("a:1,b:2,a:1").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("duplicate worker address \"a:1\""), "{msg}");
+        // Whitespace-normalized repeats are still duplicates.
+        assert!(parse_worker_list("a:1, a:1").is_err());
     }
 }

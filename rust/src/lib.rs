@@ -65,8 +65,20 @@
 //! Entry points: the `dt2cam` binary (see [`cli`]), the examples under
 //! `examples/`, and the benches under `rust/benches/` (one per paper table
 //! and figure — see DESIGN.md §4 for the experiment index).
+//!
+//! Artifacts are *verified*, not trusted: the [`analysis`] module is a
+//! static program verifier (path↔row bijectivity, input-space
+//! completeness/disjointness, mapping lint) behind `dt2cam check` and a
+//! verify-on-load gate at every artifact load seam.
+
+// Unsafe hygiene: the only unsafe in the crate is the lifetime
+// transmute inside `util::threadpool::ThreadPool::scoped_map`; any new
+// unsafe must be an explicit block with a `// SAFETY:` comment even
+// inside an unsafe fn.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod acam;
+pub mod analysis;
 pub mod api;
 pub mod cart;
 pub mod cli;

@@ -4,6 +4,12 @@
 //! (Fig 4: row-wise tiles operate in parallel, column-wise divisions are
 //! sequential) and the report harness uses [`parallel_map`] for sweep
 //! fan-out.
+//!
+//! Unsafe surface: exactly one `unsafe` block (the scoped-job lifetime
+//! transmute in [`ThreadPool::scoped_map`], see its `// SAFETY:`
+//! comment). The crate denies `unsafe_op_in_unsafe_fn`, and CI runs the
+//! `util::` unit suites under Miri plus the coordinator suites under
+//! ThreadSanitizer to keep this file honest.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};

@@ -1,0 +1,163 @@
+//! Integration tests for the static program verifier (`dt2cam check` /
+//! `analysis::verify_*`): every repo-produced program must verify
+//! clean, and seeded row-level mutations of a clean artifact must be
+//! flagged (the verifier's recall, measured end to end through the
+//! JSON round-trip).
+
+use dt2cam::analysis;
+use dt2cam::api::{CompiledProgram, Dt2Cam};
+use dt2cam::cart::ForestParams;
+use dt2cam::compiler::Trit;
+use dt2cam::tcam::params::DeviceParams;
+use dt2cam::util::prng::Prng;
+
+/// Fail with the full diagnostic list, not just the counts.
+fn assert_clean(report: &analysis::AnalysisReport, ctx: &str) {
+    if report.n_errors() > 0 || report.n_warnings() > 0 {
+        for d in &report.diagnostics {
+            eprintln!("{ctx}: {d}");
+        }
+        panic!("{ctx}: {}", report.summary_line());
+    }
+}
+
+/// Every shipped dataset's single-tree program verifies clean at both
+/// stages (compiled and mapped). Credit is excluded on runtime grounds
+/// (120k instances; covid's 33k is the established ceiling for the
+/// debug-profile suites — see `integration_pipeline::covid_large`).
+#[test]
+fn all_dataset_programs_verify_clean() {
+    for name in [
+        "iris", "diabetes", "haberman", "car", "cancer", "titanic", "covid",
+    ] {
+        let model = Dt2Cam::dataset(name).unwrap();
+        let program = model.compile();
+        assert_clean(&analysis::verify_compiled(&program), name);
+        let mapped = program.map(64, &DeviceParams::default());
+        assert_clean(&analysis::verify_mapped(&mapped), name);
+    }
+}
+
+/// Forest programs (3 and 9 banks) on two datasets and two training
+/// seeds verify clean — bagging, feature projection and per-bank
+/// mapping seeds all stay inside the invariants.
+#[test]
+fn forest_programs_verify_clean_across_seeds() {
+    for name in ["iris", "haberman"] {
+        for n_trees in [3usize, 9] {
+            for seed in [dt2cam::api::EXPERIMENT_SEED, 20260808] {
+                let fp = ForestParams {
+                    n_trees,
+                    sample_fraction: 0.8,
+                    max_features: 2,
+                    ..ForestParams::default()
+                };
+                let model = Dt2Cam::forest_seeded(name, &fp, seed).unwrap();
+                let program = model.compile();
+                let ctx = format!("{name} x{n_trees} seed {seed}");
+                assert_clean(&analysis::verify_compiled(&program), &ctx);
+                let mapped = program.map(16, &DeviceParams::default());
+                assert_clean(&analysis::verify_mapped(&mapped), &ctx);
+            }
+        }
+    }
+}
+
+/// Mutation testing of the verifier itself: seeded row-level mutations
+/// of a clean compiled artifact — a flipped trit, a relabeled class, a
+/// swapped row pair, a nudged rule threshold — must be flagged as
+/// errors (or refuse to load) after a JSON round-trip. Requires >= 90%
+/// recall over the mutation corpus.
+#[test]
+fn seeded_row_mutations_are_flagged() {
+    let model = Dt2Cam::dataset("iris").unwrap();
+    let program = model.compile();
+    assert_clean(&analysis::verify_compiled(&program), "pristine iris");
+
+    let mut rng = Prng::new(0xC0FFEE);
+    let mut total = 0usize;
+    let mut flagged = 0usize;
+    for _ in 0..60 {
+        let mut mutant = program.clone();
+        let b = rng.below(mutant.banks.len());
+        let lut = &mut mutant.banks[b].lut;
+        let n_rows = lut.n_rows();
+        let r = rng.below(n_rows);
+        match rng.below(4) {
+            // Flip one stored trit (cycle so the cell always changes).
+            0 => {
+                let c = rng.below(lut.stored[r].len());
+                lut.stored[r][c] = match lut.stored[r][c] {
+                    Trit::Zero => Trit::One,
+                    Trit::One => Trit::X,
+                    Trit::X => Trit::Zero,
+                };
+            }
+            // Relabel one row's class.
+            1 => lut.classes[r] = (lut.classes[r] + 1) % lut.n_classes,
+            // Swap two distinct stored rows (classes stay put).
+            2 => {
+                if n_rows < 2 {
+                    continue;
+                }
+                let r2 = (r + 1 + rng.below(n_rows - 1)) % n_rows;
+                if lut.stored[r] == lut.stored[r2] {
+                    continue; // identical patterns: not a mutation
+                }
+                lut.stored.swap(r, r2);
+            }
+            // Nudge one finite rule threshold in the reduced table.
+            _ => {
+                let Some(rule) = lut
+                    .reduced
+                    .get_mut(r)
+                    .and_then(|row| row.rules.iter_mut().find(|ru| ru.th1.is_finite()))
+                else {
+                    continue;
+                };
+                rule.th1 += 0.05;
+            }
+        }
+        total += 1;
+        // Round-trip through the artifact JSON: a mutation that the
+        // loader already refuses counts as flagged too.
+        let caught = match CompiledProgram::from_json(&mutant.to_json()) {
+            Err(_) => true,
+            Ok(p) => analysis::verify_compiled(&p).n_errors() > 0,
+        };
+        if caught {
+            flagged += 1;
+        }
+    }
+    assert!(total >= 40, "mutation corpus too small: {total}");
+    assert!(
+        flagged * 10 >= total * 9,
+        "verifier recall below 90%: flagged {flagged} of {total} mutants"
+    );
+}
+
+/// Mapped-level mutations are flagged by the mapping lint: a flipped
+/// cell byte is drift (warning), a broken vref or geometry is an error.
+#[test]
+fn mapped_mutations_are_flagged() {
+    let model = Dt2Cam::dataset("iris").unwrap();
+    let mut mapped = model.compile().map(16, &DeviceParams::default());
+
+    // Nominal grid drift: corrupt one real-row cell.
+    let mut drifted = mapped.clone();
+    drifted.banks[0].mapped.cells[1] ^= 1;
+    let report = analysis::verify_mapped(&drifted);
+    assert!(
+        report
+            .diagnostics
+            .iter()
+            .any(|d| d.check == "cell-drift"),
+        "{}",
+        report.summary_line()
+    );
+
+    // Broken sensing reference: an error, not a warning.
+    mapped.banks[0].mapped.vref[0] = f64::NAN;
+    let report = analysis::verify_mapped(&mapped);
+    assert!(report.n_errors() > 0, "{}", report.summary_line());
+}
