@@ -435,4 +435,52 @@ fn main() {
         server.shutdown().unwrap();
     }
     b.finish();
+
+    // ISSUE 8 acceptance rows: the cross-bank row optimizer on the two
+    // 9-bank reference forests. A separate Bench title so CI archives
+    // BENCH_opt_rows.json alongside the hot-path trajectory. Sanity
+    // before reporting: the L2-optimized program must classify a batch
+    // bit-identically to the unoptimized one.
+    {
+        use dt2cam::cart::ForestParams;
+        use dt2cam::opt::OptLevel;
+
+        let mut ob = Bench::new("opt_rows");
+        for ds in ["covid", "haberman"] {
+            let fmodel = Dt2Cam::forest(
+                ds,
+                &ForestParams {
+                    n_trees: 9,
+                    sample_fraction: 0.8,
+                    max_features: 2,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let program = fmodel.compile();
+            let (optimized, report) = program.optimize(OptLevel::L2).unwrap();
+
+            let fx: Vec<Vec<f64>> = fmodel.test_x.iter().take(32).cloned().collect();
+            let mut base = program.map(16, &p).session(EngineKind::Native, 32).unwrap();
+            let mut opt = optimized.map(16, &p).session(EngineKind::Native, 32).unwrap();
+            assert_eq!(
+                base.classify_all(&fx).unwrap(),
+                opt.classify_all(&fx).unwrap(),
+                "optimizer changed classification on {ds}"
+            );
+
+            ob.report_line(&report.summary_line());
+            ob.report_value(
+                &format!("rows_after_dedup_ratio_{ds}"),
+                report.rows_after_dedup_ratio(),
+                "physical/baseline rows (want < 1)",
+            );
+            ob.report_value(
+                &format!("forest_energy_saving_{ds}"),
+                report.forest_energy_saving(),
+                "fraction of modeled search energy removed (want > 0)",
+            );
+        }
+        ob.finish();
+    }
 }

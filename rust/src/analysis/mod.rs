@@ -70,13 +70,26 @@ pub struct Diagnostic {
     pub check: &'static str,
     pub bank: Option<usize>,
     pub row: Option<usize>,
+    /// The *other* row of a pairwise finding — for `dead-row` the
+    /// subsuming (covering) row, for `shadowing` the earlier overlap
+    /// partner. Machine-readable so `opt::` can consume a report as its
+    /// merge worklist instead of re-deriving coverage.
+    pub other_row: Option<usize>,
     pub message: String,
     pub witness: Option<String>,
 }
 
 impl Diagnostic {
     pub fn new(severity: Severity, check: &'static str, message: String) -> Diagnostic {
-        Diagnostic { severity, check, bank: None, row: None, message, witness: None }
+        Diagnostic {
+            severity,
+            check,
+            bank: None,
+            row: None,
+            other_row: None,
+            message,
+            witness: None,
+        }
     }
 
     pub fn bank(mut self, b: usize) -> Diagnostic {
@@ -86,6 +99,11 @@ impl Diagnostic {
 
     pub fn row(mut self, r: usize) -> Diagnostic {
         self.row = Some(r);
+        self
+    }
+
+    pub fn other_row(mut self, r: usize) -> Diagnostic {
+        self.other_row = Some(r);
         self
     }
 
@@ -105,6 +123,9 @@ impl Diagnostic {
         if let Some(r) = self.row {
             fields.push(("row", Json::num(r as f64)));
         }
+        if let Some(r) = self.other_row {
+            fields.push(("other_row", Json::num(r as f64)));
+        }
         fields.push(("message", Json::str(&self.message)));
         if let Some(w) = &self.witness {
             fields.push(("witness", Json::str(w)));
@@ -121,6 +142,9 @@ impl fmt::Display for Diagnostic {
         }
         if let Some(r) = self.row {
             write!(f, " row {r}")?;
+        }
+        if let Some(r) = self.other_row {
+            write!(f, " (vs row {r})")?;
         }
         write!(f, ": {}", self.message)?;
         if let Some(w) = &self.witness {

@@ -239,6 +239,7 @@ pub fn check_space(bank: usize, lut: &Lut, boxes: &[RowBox], out: &mut Vec<Diagn
                         ),
                     )
                     .row(b.row)
+                    .other_row(a.row)
                     .witness(witness),
                 );
             } else {
@@ -252,6 +253,7 @@ pub fn check_space(bank: usize, lut: &Lut, boxes: &[RowBox], out: &mut Vec<Diagn
                         ),
                     )
                     .row(b.row)
+                    .other_row(a.row)
                     .witness(witness),
                 );
             }
@@ -426,6 +428,8 @@ mod tests {
         let d = out.iter().find(|d| d.check == "dead-row").unwrap();
         assert_eq!(d.severity, Severity::Warning);
         assert_eq!(d.row, Some(1));
+        // Machine-readable worklist hook: the subsuming row is named.
+        assert_eq!(d.other_row, Some(0));
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::coordinator::server::{BankSpec, Coordinator, InferenceResponse};
 use crate::coordinator::InferenceRequest;
 use crate::coordinator::Metrics;
 use crate::dataset::{catalog, Dataset, Split};
+use crate::opt::OptMeta;
 use crate::synth::mapping::MappedArray;
 use crate::tcam::params::DeviceParams;
 use crate::util::prng::Prng;
@@ -41,8 +42,8 @@ use super::backend::{BankDispatch, MatchBackend};
 use super::registry::{self, BackendOptions};
 use super::serde::{
     bank_from_json, bank_to_json, f64_arr, get, get_arr, get_str, get_u64, get_usize,
-    json_f64s, json_u64, json_usizes, lut_from_json, params_from_json, params_to_json,
-    usize_arr,
+    json_f64s, json_u64, json_usizes, lut_from_json, opt_from_json, opt_to_json,
+    params_from_json, params_to_json, usize_arr,
 };
 use super::{bank_map_seed, map_seed, EXPERIMENT_SEED};
 
@@ -183,6 +184,7 @@ impl TrainedModel {
                 .collect(),
             test_indices: self.split.test.clone(),
             golden: self.golden.clone(),
+            opt: None,
         }
     }
 
@@ -236,6 +238,12 @@ pub struct CompiledProgram {
     pub test_indices: Vec<usize>,
     /// Software-ensemble predictions for those rows.
     pub golden: Vec<usize>,
+    /// Row-optimizer metadata ([`crate::opt`]): cross-bank shared row
+    /// blocks + per-row provenance. `None` for every program the plain
+    /// compile path produces; populated by
+    /// [`CompiledProgram::optimize`]. The in-memory banks are always
+    /// full — sharing only elides rows in the *serialized* artifact.
+    pub opt: Option<OptMeta>,
 }
 
 impl CompiledProgram {
@@ -322,18 +330,31 @@ impl CompiledProgram {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        // Optimized programs serialize with every shared-copy row
+        // elided (the content lives once in its shared block);
+        // `from_json` rematerializes them, so the round-trip is exact.
+        let banks = match &self.opt {
+            Some(meta) => Json::Arr(
+                crate::opt::provenance::elide_shared(&self.banks, meta)
+                    .iter()
+                    .map(bank_to_json)
+                    .collect(),
+            ),
+            None => Json::Arr(self.banks.iter().map(bank_to_json).collect()),
+        };
+        let mut fields = vec![
             ("format", Json::str(COMPILED_FORMAT)),
             ("version", Json::num(ARTIFACT_VERSION as f64)),
             ("dataset", Json::str(self.dataset.clone())),
             ("seed", json_u64(self.seed)),
-            (
-                "banks",
-                Json::Arr(self.banks.iter().map(bank_to_json).collect()),
-            ),
+            ("banks", banks),
             ("test_indices", json_usizes(&self.test_indices)),
             ("golden", json_usizes(&self.golden)),
-        ])
+        ];
+        if let Some(meta) = &self.opt {
+            fields.push(("opt", opt_to_json(meta)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<CompiledProgram> {
@@ -368,12 +389,25 @@ impl CompiledProgram {
                 banks[bad].lut.n_classes
             );
         }
+        // Additive v2 field: row-optimizer metadata. When present, the
+        // serialized banks had their shared-copy rows elided —
+        // rematerialize them so the in-memory program is always full.
+        let opt = match j.get("opt") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(opt_from_json(v).context("parsing 'opt' metadata")?),
+        };
+        let mut banks = banks;
+        if let Some(meta) = &opt {
+            crate::opt::provenance::rematerialize(&mut banks, meta)
+                .context("rematerializing shared rows from 'opt' metadata")?;
+        }
         let program = CompiledProgram {
             dataset: get_str(j, "dataset")?,
             seed: get_u64(j, "seed")?,
             banks,
             test_indices: usize_arr(j, "test_indices")?,
             golden: usize_arr(j, "golden")?,
+            opt,
         };
         if program.test_indices.len() != program.golden.len() {
             anyhow::bail!(
@@ -477,17 +511,23 @@ impl MappedProgram {
         self.session_with_dispatch(BankDispatch::Sequential(backend), batch)
     }
 
-    /// One [`BankSpec`] per bank, borrowing this program's grids.
+    /// One [`BankSpec`] per bank, borrowing this program's grids. Each
+    /// spec carries the bank's *physical* row count (logical rows minus
+    /// shared-copy elisions, see [`CompiledProgram::row_accounting`])
+    /// so coordinators can report row savings in their metrics.
     pub(crate) fn bank_specs(&self) -> Vec<BankSpec<'_>> {
+        let acct = self.program.row_accounting();
         self.program
             .banks
             .iter()
             .zip(&self.banks)
-            .map(|(cb, mb)| BankSpec {
+            .zip(acct.rows_physical)
+            .map(|((cb, mb), rows_physical)| BankSpec {
                 lut: cb.lut.clone(),
                 features: cb.features.clone(),
                 mapped: &mb.mapped,
                 vref: &mb.mapped.vref,
+                rows_physical,
             })
             .collect()
     }
@@ -1018,6 +1058,57 @@ mod tests {
         for x in model.test_x.iter().take(15) {
             assert_eq!(back.classify(x), program.classify(x));
         }
+    }
+
+    #[test]
+    fn optimized_program_roundtrip_rematerializes_shared_rows() {
+        use crate::opt::OptLevel;
+        let fp = ForestParams {
+            n_trees: 9,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..Default::default()
+        };
+        let program = Dt2Cam::forest("haberman", &fp).unwrap().compile();
+        let (opt, report) = program.optimize(OptLevel::L2).unwrap();
+        let text = opt.to_json().to_string_pretty();
+        let back = CompiledProgram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // The in-memory program is full banks on both sides: the
+        // round-trip must be exact even though the serialized banks had
+        // their shared-copy rows elided.
+        assert_eq!(back.n_banks(), 9);
+        for (a, b) in back.banks.iter().zip(&opt.banks) {
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.lut.stored, b.lut.stored);
+            assert_eq!(a.lut.classes, b.lut.classes);
+            assert_eq!(a.lut.encoders, b.lut.encoders);
+            assert_eq!(a.lut.reduced, b.lut.reduced);
+        }
+        let meta = back.opt.as_ref().unwrap();
+        assert_eq!(meta.level, 2);
+        assert_eq!(meta.shared_blocks.len(), report.shared_blocks);
+        // Elision actually happened if anything was shared: the raw
+        // artifact stores fewer rows than the program evaluates.
+        if report.shared_rows > 0 {
+            let stored_rows: usize = Json::parse(&text)
+                .unwrap()
+                .get("banks")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|b| {
+                    b.get("lut").unwrap().get("stored").unwrap().as_arr().unwrap().len()
+                })
+                .sum();
+            assert!(
+                stored_rows < report.rows_after,
+                "artifact stores {stored_rows} rows, program evaluates {}",
+                report.rows_after
+            );
+        }
+        // Re-serializing the loaded program is byte-stable.
+        assert_eq!(back.to_json().to_string_pretty(), text);
     }
 
     #[test]

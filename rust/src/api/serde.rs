@@ -354,6 +354,172 @@ pub fn bank_from_json(j: &Json) -> Result<CompiledBank> {
     Ok(CompiledBank { lut, features })
 }
 
+// --------------------------------------------------------------- opt meta
+
+use crate::opt::{BankOpt, OptMeta, SharedBlock};
+
+/// Encode row-optimizer metadata (the compiled artifact's additive
+/// `opt` field; see `docs/API.md` §Row optimization).
+pub(crate) fn opt_to_json(m: &OptMeta) -> Json {
+    Json::obj(vec![
+        ("level", Json::num(m.level as f64)),
+        ("baseline_rows", json_usizes(&m.baseline_rows)),
+        ("baseline_bits", json_usizes(&m.baseline_bits)),
+        (
+            "banks",
+            Json::Arr(m.banks.iter().map(bank_opt_to_json).collect()),
+        ),
+        (
+            "shared_blocks",
+            Json::Arr(m.shared_blocks.iter().map(shared_block_to_json).collect()),
+        ),
+    ])
+}
+
+fn bank_opt_to_json(b: &BankOpt) -> Json {
+    Json::obj(vec![
+        (
+            "provenance",
+            Json::Arr(b.provenance.iter().map(|og| json_usizes(og)).collect()),
+        ),
+        (
+            "shared",
+            Json::Arr(
+                b.shared
+                    .iter()
+                    .map(|&(r, blk)| Json::Arr(vec![Json::num(r as f64), Json::num(blk as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn shared_block_to_json(b: &SharedBlock) -> Json {
+    Json::obj(vec![
+        ("class", Json::num(b.class as f64)),
+        (
+            "rules",
+            Json::Arr(
+                b.rules
+                    .iter()
+                    .map(|(f, r)| {
+                        Json::Arr(vec![
+                            Json::num(*f as f64),
+                            Json::str(comparator_name(r.comparator)),
+                            json_th(r.th1),
+                            json_th(r.th2),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "owners",
+            Json::Arr(
+                b.owners
+                    .iter()
+                    .map(|&(bk, r)| Json::Arr(vec![Json::num(bk as f64), Json::num(r as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn usize_pair(j: &Json, what: &str) -> Result<(usize, usize)> {
+    let a = j
+        .as_arr()
+        .with_context(|| format!("{what} must be a 2-element array"))?;
+    if a.len() != 2 {
+        bail!("{what} must have exactly 2 entries, got {}", a.len());
+    }
+    let x = a[0]
+        .as_usize()
+        .with_context(|| format!("{what} entries must be non-negative integers"))?;
+    let y = a[1]
+        .as_usize()
+        .with_context(|| format!("{what} entries must be non-negative integers"))?;
+    Ok((x, y))
+}
+
+fn bank_opt_from_json(j: &Json) -> Result<BankOpt> {
+    let provenance = get_arr(j, "provenance")?
+        .iter()
+        .map(|og| {
+            og.as_arr()
+                .context("provenance entries must be arrays")?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .context("provenance row ids must be non-negative integers")
+                })
+                .collect::<Result<Vec<usize>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let shared = get_arr(j, "shared")?
+        .iter()
+        .map(|p| usize_pair(p, "shared row reference"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(BankOpt { provenance, shared })
+}
+
+fn shared_block_from_json(j: &Json) -> Result<SharedBlock> {
+    let rules = get_arr(j, "rules")?
+        .iter()
+        .map(|r| {
+            let a = r
+                .as_arr()
+                .context("shared rule must be [feature, comparator, th1, th2]")?;
+            if a.len() != 4 {
+                bail!("shared rule must have exactly 4 entries, got {}", a.len());
+            }
+            let f = a[0]
+                .as_usize()
+                .context("shared rule feature must be a non-negative integer")?;
+            Ok((
+                f,
+                Rule {
+                    comparator: comparator_parse(
+                        a[1].as_str().context("shared rule comparator must be a string")?,
+                    )?,
+                    th1: th_from(&a[2])?,
+                    th2: th_from(&a[3])?,
+                },
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let owners = get_arr(j, "owners")?
+        .iter()
+        .map(|p| usize_pair(p, "shared block owner"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(SharedBlock {
+        class: get_usize(j, "class")?,
+        rules,
+        owners,
+    })
+}
+
+/// Decode row-optimizer metadata; structural cross-checks against the
+/// banks happen in `opt::provenance::rematerialize`.
+pub(crate) fn opt_from_json(j: &Json) -> Result<OptMeta> {
+    let level = get_usize(j, "level")?;
+    if !(1..=2).contains(&level) {
+        bail!("unknown optimization level {level} (this binary knows 1|2)");
+    }
+    Ok(OptMeta {
+        level: level as u8,
+        baseline_rows: usize_arr(j, "baseline_rows")?,
+        baseline_bits: usize_arr(j, "baseline_bits")?,
+        banks: get_arr(j, "banks")?
+            .iter()
+            .map(bank_opt_from_json)
+            .collect::<Result<Vec<_>>>()?,
+        shared_blocks: get_arr(j, "shared_blocks")?
+            .iter()
+            .map(shared_block_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
 // ----------------------------------------------------------- DeviceParams
 
 /// Encode the full device-parameter set (Table III + calibrated

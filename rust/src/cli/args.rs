@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 32] = [
+const VALUE_KEYS: [&str; 34] = [
     "dataset",
     "tile-size",
     "seed",
@@ -48,6 +48,8 @@ const VALUE_KEYS: [&str; 32] = [
     "deny",
     "json",
     "verify",
+    "out",
+    "level",
 ];
 
 impl Args {

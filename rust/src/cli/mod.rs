@@ -3,6 +3,8 @@
 //! ```text
 //! dt2cam compile  --dataset iris [--tile-size 128] [--forest N]
 //!                 [--sample-fraction F] [--max-features K] [--save prog.json]
+//!                 [--optimize [--level 1|2]]
+//! dt2cam optimize --program prog.json --out opt.json [--level 1|2]
 //! dt2cam simulate --dataset iris --tile-size 64 [--forest N] [--saf 0.5]
 //!                 [--sigma-sa 0.05] [--sigma-input 0.01] [--no-sp]
 //!                 [--max-inputs N]
@@ -45,6 +47,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     let cmd = args.take_subcommand().unwrap_or_else(|| "help".to_string());
     match cmd.as_str() {
         "compile" => commands::compile(&mut args),
+        "optimize" => commands::optimize(&mut args),
         "simulate" => commands::simulate_cmd(&mut args),
         "serve" => commands::serve(&mut args),
         "worker" => commands::worker(&mut args),
@@ -67,6 +70,8 @@ dt2cam — Decision Tree to Content Addressable Memory framework
 USAGE:
   dt2cam compile  --dataset NAME [--tile-size S] [--forest N]
                   [--sample-fraction F] [--max-features K] [--save PROGRAM.json]
+                  [--optimize [--level 1|2]]
+  dt2cam optimize --program PROGRAM.json --out OPT.json [--level 1|2]
   dt2cam simulate --dataset NAME --tile-size S [--forest N] [--saf PCT]
                   [--sigma-sa V] [--sigma-input SIG] [--no-sp] [--max-inputs N]
   dt2cam serve    --dataset NAME --tile-size S [--engine ENGINE] [--forest N]
@@ -106,6 +111,12 @@ reports p50/p95/p99 end-to-end latency and wall throughput;
 `--shutdown` stops the server afterwards. `--connect` takes a
 comma-separated list to round-robin clients across a fleet (per-target
 breakdown in the report; `--shutdown` stops every target).
+`optimize` (and `compile --optimize`) runs the post-compile row
+optimizer: within-bank dead-row/subsumption merge (`--level 2` adds
+same-class union and bounding-box merges), cross-bank shared row
+blocks, and a full provenance table — classification is preserved
+exactly, the optimized artifact re-verifies clean, and `serve`/`check`
+consume it transparently.
 `check` is the static program verifier: it proves (or refutes) the
 path↔row bijectivity, completeness/disjointness, and mapping-lint
 invariants of an artifact — or of the program `--dataset`/`--forest`

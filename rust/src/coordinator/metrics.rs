@@ -54,6 +54,14 @@ pub struct Metrics {
     /// [`StageError`](super::pipeline::StageError) travels to the
     /// caller on every affected response; this is the roll-up).
     pub stage_errors: u64,
+    /// Logical rows across all served banks (what the searcher models:
+    /// every bank's full row table, shared rows counted once per
+    /// owner). Set at coordinator construction; 0 when unknown.
+    pub rows_total: u64,
+    /// Physically stored rows across all served banks after row
+    /// optimization (shared row blocks counted once, at their canonical
+    /// owner). Equal to `rows_total` for unoptimized programs.
+    pub rows_physical: u64,
     /// End-to-end per-request latency samples (s): arrival → response
     /// materialization, i.e. queue delay *plus* batch service. Ring of
     /// the most recent [`LATENCY_WINDOW`] requests.
@@ -192,9 +200,17 @@ impl Metrics {
         } else {
             String::new()
         };
+        // Physical vs logical row storage: diverges only for
+        // row-optimized artifacts (shared blocks / merged rows), so the
+        // segment is silent until a coordinator stamps the counts.
+        let rows = if self.rows_total > 0 {
+            format!(" rows={}/{}", self.rows_physical, self.rows_total)
+        } else {
+            String::new()
+        };
         format!(
             "requests={} decisions={} batches={} e/dec={:.3} nJ rows/dec={:.1} \
-             wall-throughput={:.0} dec/s{pipe} no_match={} multi_match={}{banks}{lat}{stage_errs}",
+             wall-throughput={:.0} dec/s{pipe} no_match={} multi_match={}{banks}{rows}{lat}{stage_errs}",
             self.requests,
             self.decisions,
             self.batches,
@@ -255,6 +271,18 @@ mod tests {
         assert!(line.contains("wall-throughput="), "{line}");
         m.stage_errors = 2;
         assert!(m.summary_line().contains("stage_errors=2"));
+    }
+
+    #[test]
+    fn row_accounting_rides_alongside_wall_numbers() {
+        let mut m = Metrics::new();
+        // Coordinators that never stamped row counts stay silent.
+        assert!(!m.summary_line().contains("rows="));
+        m.rows_total = 120;
+        m.rows_physical = 97;
+        let line = m.summary_line();
+        assert!(line.contains("rows=97/120"), "{line}");
+        assert!(line.contains("wall-throughput="), "{line}");
     }
 
     #[test]

@@ -81,6 +81,11 @@ pub struct BankSpec<'a> {
     pub mapped: &'a MappedArray,
     /// The bank's per-(division, row) reference voltages.
     pub vref: &'a [f64],
+    /// Rows the bank's artifact actually stores (logical rows minus
+    /// cross-bank shared-copy elisions — see
+    /// `CompiledProgram::row_accounting`). Equal to `lut.n_rows()` for
+    /// unoptimized programs; only feeds the metrics roll-up.
+    pub rows_physical: usize,
 }
 
 /// Everything one bank needs on the request path.
@@ -167,6 +172,7 @@ impl Coordinator {
         let dispatch =
             registry::create_bank_dispatch(cfg.engine, &BackendOptions::from_config(cfg))?;
         let features = (0..lut.encoders.len()).collect();
+        let rows_physical = lut.n_rows();
         Self::with_banks(
             dispatch,
             cfg.batch,
@@ -175,6 +181,7 @@ impl Coordinator {
                 features,
                 mapped,
                 vref,
+                rows_physical,
             }],
             params,
         )
@@ -192,6 +199,7 @@ impl Coordinator {
         params: DeviceParams,
     ) -> Result<Coordinator> {
         let features = (0..lut.encoders.len()).collect();
+        let rows_physical = lut.n_rows();
         Self::with_banks(
             BankDispatch::Sequential(backend),
             batch,
@@ -200,6 +208,7 @@ impl Coordinator {
                 features,
                 mapped,
                 vref,
+                rows_physical,
             }],
             params,
         )
@@ -261,6 +270,10 @@ impl Coordinator {
         banks: Vec<BankSpec<'_>>,
         params: DeviceParams,
     ) -> Result<Coordinator> {
+        // Row accounting before `build_runtimes` consumes the specs:
+        // logical rows the banks evaluate vs rows their artifact stores.
+        let rows_total: u64 = banks.iter().map(|s| s.lut.n_rows() as u64).sum();
+        let rows_physical: u64 = banks.iter().map(|s| s.rows_physical as u64).sum();
         let (runtimes, n_classes, modeled_latency) =
             Self::build_runtimes(dispatch.backend(), batch, banks, &params)?;
         // A remote dispatch must place exactly the program's banks —
@@ -281,6 +294,9 @@ impl Coordinator {
         } else {
             None
         };
+        let mut metrics = Metrics::new();
+        metrics.rows_total = rows_total;
+        metrics.rows_physical = rows_physical;
         Ok(Coordinator {
             bank_ids: (0..runtimes.len()).collect(),
             banks: runtimes,
@@ -290,7 +306,7 @@ impl Coordinator {
             pool,
             batcher: Batcher::new(batch, Duration::from_millis(2)),
             modeled_latency,
-            metrics: Metrics::new(),
+            metrics,
             pipeline: None,
         })
     }
@@ -317,6 +333,8 @@ impl Coordinator {
         params: DeviceParams,
         depth: usize,
     ) -> Result<Coordinator> {
+        let rows_total: u64 = banks.iter().map(|s| s.lut.n_rows() as u64).sum();
+        let rows_physical: u64 = banks.iter().map(|s| s.rows_physical as u64).sum();
         let (runtimes, n_classes, modeled_latency) =
             Self::build_runtimes(Some(backend.as_ref()), batch, banks, &params)?;
         let plans: Vec<Arc<ServingPlan>> = runtimes.iter().map(|r| Arc::clone(&r.plan)).collect();
@@ -330,6 +348,8 @@ impl Coordinator {
             None
         };
         let mut metrics = Metrics::new();
+        metrics.rows_total = rows_total;
+        metrics.rows_physical = rows_physical;
         // Modeled pipelined throughput (f_max / II): the slowest bank
         // bounds a forest, exactly like modeled latency.
         metrics.modeled_pipe_throughput = runtimes
@@ -1242,11 +1262,16 @@ mod tests {
             .iter()
             .zip(&forest.feature_sets)
             .zip(arrays)
-            .map(|((t, feats), m)| BankSpec {
-                lut: compile(t),
-                features: feats.clone(),
-                mapped: m,
-                vref: &m.vref,
+            .map(|((t, feats), m)| {
+                let lut = compile(t);
+                let rows_physical = lut.n_rows();
+                BankSpec {
+                    lut,
+                    features: feats.clone(),
+                    mapped: m,
+                    vref: &m.vref,
+                    rows_physical,
+                }
             })
             .collect()
     }
@@ -1343,12 +1368,14 @@ mod tests {
         let specs = vec![
             BankSpec {
                 features: (0..lut_a.encoders.len()).collect(),
+                rows_physical: lut_a.n_rows(),
                 lut: lut_a,
                 mapped: &m_a,
                 vref: &m_a.vref,
             },
             BankSpec {
                 features: (0..lut_b.encoders.len()).collect(),
+                rows_physical: lut_b.n_rows(),
                 lut: lut_b,
                 mapped: &m_b,
                 vref: &m_b.vref,
@@ -1415,6 +1442,7 @@ mod tests {
                 features: (0..lut.encoders.len()).collect(),
                 mapped: &m,
                 vref: &m.vref,
+                rows_physical: lut.n_rows(),
             }]
         };
         let mut seq = Coordinator::with_banks(

@@ -89,6 +89,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod net;
 pub mod nonideal;
+pub mod opt;
 pub mod report;
 pub mod runtime;
 pub mod synth;

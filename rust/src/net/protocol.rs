@@ -197,6 +197,12 @@ pub struct MetricsSnapshot {
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
+    /// Logical rows across the served banks (0 when the server predates
+    /// row accounting or serves no program).
+    pub rows_total: u64,
+    /// Physically stored rows after row optimization (shared row blocks
+    /// counted once). Equal to `rows_total` for unoptimized programs.
+    pub rows_physical: u64,
     /// Per-worker attribution when this snapshot was scraped from a
     /// cluster router; empty on a single-process server or worker.
     pub per_worker: Vec<WorkerMetrics>,
@@ -283,6 +289,8 @@ impl MetricsSnapshot {
             ("latency_p50", Json::num(self.latency_p50)),
             ("latency_p95", Json::num(self.latency_p95)),
             ("latency_p99", Json::num(self.latency_p99)),
+            ("rows_total", json_u64(self.rows_total)),
+            ("rows_physical", json_u64(self.rows_physical)),
             (
                 "per_worker",
                 Json::Arr(self.per_worker.iter().map(WorkerMetrics::to_json).collect()),
@@ -298,6 +306,15 @@ impl MetricsSnapshot {
                 .iter()
                 .map(WorkerMetrics::from_json)
                 .collect::<anyhow::Result<_>>()?,
+        };
+        // Absent on snapshots from pre-row-accounting servers.
+        let rows_total = match j.get("rows_total") {
+            None | Some(Json::Null) => 0,
+            Some(_) => get_u64(j, "rows_total")?,
+        };
+        let rows_physical = match j.get("rows_physical") {
+            None | Some(Json::Null) => 0,
+            Some(_) => get_u64(j, "rows_physical")?,
         };
         Ok(MetricsSnapshot {
             requests: get_u64(j, "requests")?,
@@ -316,6 +333,8 @@ impl MetricsSnapshot {
             latency_p50: get_f64(j, "latency_p50")?,
             latency_p95: get_f64(j, "latency_p95")?,
             latency_p99: get_f64(j, "latency_p99")?,
+            rows_total,
+            rows_physical,
             per_worker,
         })
     }
@@ -343,6 +362,8 @@ impl MetricsSnapshot {
             out.no_match += p.no_match;
             out.multi_match += p.multi_match;
             out.n_banks += p.n_banks;
+            out.rows_total += p.rows_total;
+            out.rows_physical += p.rows_physical;
             out.modeled_latency = out.modeled_latency.max(p.modeled_latency);
             out.wall_throughput += p.wall_throughput;
             let w = p.decisions as f64;
@@ -365,10 +386,17 @@ impl MetricsSnapshot {
 
     /// One-line summary for logs (client-side scrape output).
     pub fn summary_line(&self) -> String {
+        // Row accounting is silent for pre-row-accounting peers
+        // (rows_total 0) so old scrape output stays byte-stable.
+        let rows = if self.rows_total > 0 {
+            format!(" rows={}/{}", self.rows_physical, self.rows_total)
+        } else {
+            String::new()
+        };
         format!(
             "requests={} decisions={} batches={} shed={} conns={} e/dec={:.3} nJ \
              wall-throughput={:.0} dec/s lat(p50/p95/p99)={:.1}/{:.1}/{:.1} us \
-             no_match={} multi_match={} banks={}",
+             no_match={} multi_match={} banks={}{rows}",
             self.requests,
             self.decisions,
             self.batches,
@@ -742,6 +770,8 @@ mod tests {
             latency_p50: 0.0021,
             latency_p95: 0.004,
             latency_p99: 0.0051,
+            rows_total: 57,
+            rows_physical: 41,
             per_worker: vec![],
         }));
         roundtrip(Frame::Shutdown);
@@ -832,6 +862,28 @@ mod tests {
         let back = MetricsSnapshot::from_json(&fields).unwrap();
         assert!(back.per_worker.is_empty());
         assert_eq!(back.requests, 10);
+    }
+
+    #[test]
+    fn row_accounting_roundtrips_and_old_snapshots_still_parse() {
+        let snap = MetricsSnapshot {
+            decisions: 4,
+            rows_total: 120,
+            rows_physical: 97,
+            ..Default::default()
+        };
+        roundtrip(Frame::Metrics(snap.clone()));
+        assert!(snap.summary_line().contains("rows=97/120"));
+        // A pre-row-accounting peer omits the fields entirely.
+        let mut fields = snap.to_json();
+        if let Json::Obj(pairs) = &mut fields {
+            pairs.retain(|(k, _)| k != "rows_total" && k != "rows_physical");
+        }
+        let back = MetricsSnapshot::from_json(&fields).unwrap();
+        assert_eq!(back.rows_total, 0);
+        assert_eq!(back.rows_physical, 0);
+        assert_eq!(back.decisions, 4);
+        assert!(!back.summary_line().contains("rows="));
     }
 
     #[test]

@@ -516,6 +516,8 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
         latency_p50: lat.map_or(0.0, |l| l.p50),
         latency_p95: lat.map_or(0.0, |l| l.p95),
         latency_p99: lat.map_or(0.0, |l| l.p99),
+        rows_total: m.rows_total,
+        rows_physical: m.rows_physical,
         // A router merges its workers' snapshots into the cluster-wide
         // view and attaches per-worker attribution; a plain server or
         // worker has no remote dispatch and reports itself unchanged.
@@ -568,6 +570,10 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
     merged.latency_p50 = snap.latency_p50;
     merged.latency_p95 = snap.latency_p95;
     merged.latency_p99 = snap.latency_p99;
+    // The router's own coordinator already counts every served bank's
+    // rows; summing the worker figures on top would double-count.
+    merged.rows_total = snap.rows_total;
+    merged.rows_physical = snap.rows_physical;
     merged.per_worker = workers;
     merged
 }

@@ -1,0 +1,498 @@
+//! Within-bank row merging: dead-row (containment) elimination plus the
+//! level-2 same-class merges, all in *value space* over the reduced
+//! rule table.
+//!
+//! Each row is a same-class axis-aligned box of half-open intervals
+//! `(lo, hi]` (one per feature, from [`Rule::bounds`]) — exactly the
+//! geometry the static verifier's `dead-row`/`shadowing` checks reason
+//! about, so collapsing here collapses those findings by construction.
+//! Three passes run to a fixed point:
+//!
+//! 1. **Containment** (levels 1+2): a row whose box is contained in an
+//!    earlier-or-later same-class box is absorbed by the container.
+//!    This is the verifier's `dead-row` finding. On a clean program it
+//!    is a no-op, so level 1 leaves the LUT bit-identical.
+//! 2. **Union merge** (level 2): two same-class rows identical on every
+//!    feature but one, whose intervals on that feature union to a
+//!    single interval, merge into the union box. This is where clean
+//!    tree compiles shrink: CART sibling leaves with the same class are
+//!    adjacent boxes differing only on the split feature.
+//! 3. **Bounding-box collapse** (level 2): a partially-overlapping
+//!    same-class pair (the verifier's `shadowing` finding) is replaced
+//!    by its bounding box — but only when every other row intersecting
+//!    that box is same-class and fully contained (absorbed too), so the
+//!    collapse can never create a new overlap or change any class
+//!    assignment. On an incomplete program this may additionally cover
+//!    previously-unmatched inputs inside the box; clean programs (the
+//!    only ones `optimize` accepts) have no such inputs.
+//!
+//! When any pass changed the row set, the whole LUT is rebuilt with the
+//! `compiler::lut::compile` recipe — encoders regenerated with
+//! `FeatureEncoder::from_rules` over the surviving rules — so thresholds
+//! only the absorbed rows referenced drop out and the verifier's
+//! adaptive-precision check (`encoders == from_rules(reduced)`) holds
+//! on the output. An unchanged row set returns the input LUT verbatim.
+
+use anyhow::{bail, Result};
+
+use crate::compiler::{FeatureEncoder, Lut, ReducedRow, Rule, Trit};
+use crate::util::ceil_log2;
+
+use super::provenance::rule_from_bounds;
+use super::OptLevel;
+
+/// One semantic row: per-feature value intervals `(lo, hi]`, class, and
+/// the original row ids it stands for.
+#[derive(Clone, Debug)]
+struct SemRow {
+    bounds: Vec<(f64, f64)>,
+    class: usize,
+    origin: Vec<usize>,
+}
+
+/// Result of optimizing one bank.
+pub(crate) struct BankMergeOutcome {
+    pub lut: Lut,
+    /// `provenance[r]` = original row ids surviving row `r` absorbed.
+    pub provenance: Vec<Vec<usize>>,
+    /// Whether the row set changed (and the LUT was rebuilt).
+    pub changed: bool,
+}
+
+/// `(lo, hi]` interval containment: `inner ⊆ outer`.
+fn interval_contains(outer: (f64, f64), inner: (f64, f64)) -> bool {
+    outer.0 <= inner.0 && inner.1 <= outer.1
+}
+
+/// Non-empty intersection of two `(lo, hi]` intervals.
+fn interval_intersects(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0.max(b.0) < a.1.min(b.1)
+}
+
+/// Do two `(lo, hi]` intervals union to a single interval? (They
+/// overlap or are adjacent: `(0,3] ∪ (3,7] = (0,7]`.)
+fn interval_union_is_interval(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 <= b.1 && b.0 <= a.1
+}
+
+fn box_contains(outer: &[(f64, f64)], inner: &[(f64, f64)]) -> bool {
+    outer.iter().zip(inner).all(|(&o, &i)| interval_contains(o, i))
+}
+
+fn box_intersects(a: &[(f64, f64)], b: &[(f64, f64)]) -> bool {
+    a.iter().zip(b).all(|(&x, &y)| interval_intersects(x, y))
+}
+
+fn absorb(into: &mut SemRow, from: &SemRow) {
+    into.origin.extend_from_slice(&from.origin);
+    into.origin.sort_unstable();
+    into.origin.dedup();
+}
+
+/// One containment sweep: absorb every same-class contained row into
+/// its container (either direction). Returns true if anything changed.
+fn containment_pass(rows: &mut Vec<SemRow>) -> bool {
+    let mut changed = false;
+    let mut i = 0;
+    while i < rows.len() {
+        let mut j = i + 1;
+        while j < rows.len() {
+            if rows[i].class == rows[j].class {
+                if box_contains(&rows[i].bounds, &rows[j].bounds) {
+                    let gone = rows.remove(j);
+                    absorb(&mut rows[i], &gone);
+                    changed = true;
+                    continue;
+                }
+                if box_contains(&rows[j].bounds, &rows[i].bounds) {
+                    let keep = rows[j].clone();
+                    let gone = std::mem::replace(&mut rows[i], keep);
+                    absorb(&mut rows[i], &gone);
+                    rows.remove(j);
+                    changed = true;
+                    continue;
+                }
+            }
+            j += 1;
+        }
+        i += 1;
+    }
+    changed
+}
+
+/// One union-merge sweep (level 2): merge same-class pairs identical on
+/// every feature but one whose intervals union to an interval.
+fn union_pass(rows: &mut Vec<SemRow>) -> bool {
+    let mut changed = false;
+    let mut i = 0;
+    while i < rows.len() {
+        let mut j = i + 1;
+        while j < rows.len() {
+            if rows[i].class == rows[j].class {
+                if let Some(f) = union_mergeable(&rows[i], &rows[j]) {
+                    let (la, ha) = rows[i].bounds[f];
+                    let (lb, hb) = rows[j].bounds[f];
+                    rows[i].bounds[f] = (la.min(lb), ha.max(hb));
+                    let gone = rows.remove(j);
+                    absorb(&mut rows[i], &gone);
+                    changed = true;
+                    continue;
+                }
+            }
+            j += 1;
+        }
+        i += 1;
+    }
+    changed
+}
+
+/// If `a` and `b` differ on exactly one feature and union to a single
+/// interval there, return that feature.
+fn union_mergeable(a: &SemRow, b: &SemRow) -> Option<usize> {
+    let mut differing = None;
+    for (f, (&ia, &ib)) in a.bounds.iter().zip(&b.bounds).enumerate() {
+        if ia != ib {
+            if differing.is_some() {
+                return None;
+            }
+            differing = Some(f);
+        }
+    }
+    let f = differing?;
+    interval_union_is_interval(a.bounds[f], b.bounds[f]).then_some(f)
+}
+
+/// One bounding-box sweep (level 2): collapse a partially-overlapping
+/// same-class pair to its bounding box when that is provably safe —
+/// every other row intersecting the box must be same-class and fully
+/// contained in it (those rows are absorbed too).
+fn bbox_pass(rows: &mut Vec<SemRow>) -> bool {
+    for i in 0..rows.len() {
+        for j in (i + 1)..rows.len() {
+            if rows[i].class != rows[j].class
+                || !box_intersects(&rows[i].bounds, &rows[j].bounds)
+            {
+                continue;
+            }
+            let bbox: Vec<(f64, f64)> = rows[i]
+                .bounds
+                .iter()
+                .zip(&rows[j].bounds)
+                .map(|(&(la, ha), &(lb, hb))| (la.min(lb), ha.max(hb)))
+                .collect();
+            let mut absorbed = Vec::new();
+            let mut safe = true;
+            for (k, row) in rows.iter().enumerate() {
+                if k == i || k == j || !box_intersects(&bbox, &row.bounds) {
+                    continue;
+                }
+                if row.class == rows[i].class && box_contains(&bbox, &row.bounds) {
+                    absorbed.push(k);
+                } else {
+                    safe = false;
+                    break;
+                }
+            }
+            if !safe {
+                continue;
+            }
+            absorbed.push(j);
+            absorbed.sort_unstable();
+            // Fold origins and the bbox into row i *before* removing
+            // anything, so index shifts can't misattribute.
+            let origins: Vec<Vec<usize>> =
+                absorbed.iter().map(|&k| rows[k].origin.clone()).collect();
+            for og in origins {
+                rows[i].origin.extend(og);
+            }
+            rows[i].origin.sort_unstable();
+            rows[i].origin.dedup();
+            rows[i].bounds = bbox;
+            for &k in absorbed.iter().rev() {
+                rows.remove(k);
+            }
+            return true;
+        }
+    }
+    false
+}
+
+/// Optimize one bank's LUT. `hints` are `(dead_row, container_row)`
+/// pairs harvested from the verifier's `dead-row` findings — applied
+/// (after validation) before the general fixed point, which then also
+/// catches anything past the verifier's diagnostic cap.
+pub(crate) fn optimize_bank(
+    lut: &Lut,
+    level: OptLevel,
+    hints: &[(usize, usize)],
+) -> Result<BankMergeOutcome> {
+    if lut.reduced.len() != lut.n_rows() {
+        bail!(
+            "bank has {} reduced rules for {} rows — cannot optimize without a full rule table",
+            lut.reduced.len(),
+            lut.n_rows()
+        );
+    }
+    let n_features = lut.encoders.len();
+    let mut rows: Vec<SemRow> = lut
+        .reduced
+        .iter()
+        .enumerate()
+        .map(|(r, row)| {
+            if row.rules.len() != n_features {
+                bail!("row {r}: {} rules for {} features", row.rules.len(), n_features);
+            }
+            Ok(SemRow {
+                bounds: row.rules.iter().map(Rule::bounds).collect(),
+                class: row.class,
+                origin: vec![r],
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let mut changed = false;
+
+    // Worklist hints first: validated containment absorptions.
+    for &(dead, container) in hints {
+        let (di, ci) = match (
+            rows.iter().position(|r| r.origin.contains(&dead)),
+            rows.iter().position(|r| r.origin.contains(&container)),
+        ) {
+            (Some(d), Some(c)) if d != c => (d, c),
+            _ => continue,
+        };
+        if rows[di].class == rows[ci].class
+            && box_contains(&rows[ci].bounds, &rows[di].bounds)
+        {
+            let gone = rows.remove(di);
+            let ci = if di < ci { ci - 1 } else { ci };
+            absorb(&mut rows[ci], &gone);
+            changed = true;
+        }
+    }
+
+    // Fixed point over the enabled passes.
+    loop {
+        let mut any = containment_pass(&mut rows);
+        if level >= OptLevel::L2 {
+            any |= union_pass(&mut rows);
+            any |= bbox_pass(&mut rows);
+        }
+        if !any {
+            break;
+        }
+        changed = true;
+    }
+
+    if !changed {
+        return Ok(BankMergeOutcome {
+            lut: lut.clone(),
+            provenance: (0..lut.n_rows()).map(|r| vec![r]).collect(),
+            changed: false,
+        });
+    }
+
+    let provenance: Vec<Vec<usize>> = rows.iter().map(|r| r.origin.clone()).collect();
+    let lut = rebuild_lut(&rows, n_features, lut.n_classes);
+    Ok(BankMergeOutcome {
+        lut,
+        provenance,
+        changed: true,
+    })
+}
+
+/// Rebuild a LUT from semantic rows with the `compile()` recipe:
+/// encoders from the surviving rules (orphaned thresholds drop out),
+/// then re-encode every row.
+fn rebuild_lut(rows: &[SemRow], n_features: usize, n_classes: usize) -> Lut {
+    let reduced: Vec<ReducedRow> = rows
+        .iter()
+        .map(|r| ReducedRow {
+            rules: r.bounds.iter().map(|&(lo, hi)| rule_from_bounds(lo, hi)).collect(),
+            class: r.class,
+        })
+        .collect();
+
+    let encoders: Vec<FeatureEncoder> = (0..n_features)
+        .map(|f| FeatureEncoder::from_rules(reduced.iter().map(|r| &r.rules[f])))
+        .collect();
+    let mut offsets = Vec::with_capacity(encoders.len());
+    let mut acc = 0;
+    for e in &encoders {
+        offsets.push(acc);
+        acc += e.n_bits();
+    }
+
+    let stored: Vec<Vec<Trit>> = reduced
+        .iter()
+        .map(|row| {
+            let mut bits = Vec::with_capacity(acc);
+            for (f, e) in encoders.iter().enumerate() {
+                bits.extend(e.encode_rule(&row.rules[f]));
+            }
+            bits
+        })
+        .collect();
+
+    let cw = ceil_log2(n_classes);
+    let classes: Vec<usize> = reduced.iter().map(|r| r.class).collect();
+    let class_bits = classes
+        .iter()
+        .map(|&c| (0..cw).map(|b| (c >> (cw - 1 - b)) & 1 == 1).collect())
+        .collect();
+
+    Lut {
+        stored,
+        classes,
+        class_bits,
+        encoders,
+        offsets,
+        n_classes,
+        reduced,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Comparator;
+
+    fn rule_le(th: f64) -> Rule {
+        Rule { comparator: Comparator::Le, th1: th, th2: f64::NAN }
+    }
+
+    fn rule_gt(th: f64) -> Rule {
+        Rule { comparator: Comparator::Gt, th1: th, th2: f64::NAN }
+    }
+
+    fn rule_between(a: f64, b: f64) -> Rule {
+        Rule { comparator: Comparator::InBetween, th1: a, th2: b }
+    }
+
+    fn lut_from_rows(rows: Vec<(Vec<Rule>, usize)>, n_features: usize, n_classes: usize) -> Lut {
+        let sem: Vec<SemRow> = rows
+            .iter()
+            .enumerate()
+            .map(|(r, (rules, class))| SemRow {
+                bounds: rules.iter().map(Rule::bounds).collect(),
+                class: *class,
+                origin: vec![r],
+            })
+            .collect();
+        rebuild_lut(&sem, n_features, n_classes)
+    }
+
+    #[test]
+    fn contained_same_class_row_is_absorbed_at_level_1() {
+        // Row 1 ⊂ row 0, same class: the verifier's dead-row case.
+        let lut = lut_from_rows(
+            vec![
+                (vec![rule_le(5.0), Rule::none()], 0),
+                (vec![rule_le(3.0), rule_gt(1.0)], 0),
+                (vec![rule_gt(5.0), Rule::none()], 1),
+            ],
+            2,
+            2,
+        );
+        let out = optimize_bank(&lut, OptLevel::L1, &[]).unwrap();
+        assert!(out.changed);
+        assert_eq!(out.lut.n_rows(), 2);
+        assert_eq!(out.provenance, vec![vec![0, 1], vec![2]]);
+        // Thresholds only the absorbed row used (3.0, 1.0) drop out.
+        assert_eq!(out.lut.encoders[0].thresholds(), &[5.0]);
+        assert_eq!(out.lut.encoders[1].thresholds(), &[] as &[f64]);
+    }
+
+    #[test]
+    fn clean_partition_is_untouched_at_level_1() {
+        let lut = lut_from_rows(
+            vec![
+                (vec![rule_le(2.0)], 0),
+                (vec![rule_between(2.0, 4.0)], 1),
+                (vec![rule_gt(4.0)], 0),
+            ],
+            1,
+            2,
+        );
+        let out = optimize_bank(&lut, OptLevel::L1, &[]).unwrap();
+        assert!(!out.changed);
+        assert_eq!(out.lut.stored, lut.stored);
+        assert_eq!(out.provenance, vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn adjacent_same_class_boxes_union_at_level_2() {
+        // (-inf,2] and (2,4] on feature 0, same class, same elsewhere:
+        // level 1 keeps both, level 2 merges to (-inf,4].
+        let rows = vec![
+            (vec![rule_le(2.0), rule_le(7.0)], 0),
+            (vec![rule_between(2.0, 4.0), rule_le(7.0)], 0),
+            (vec![rule_gt(4.0), rule_le(7.0)], 1),
+            (vec![Rule::none(), rule_gt(7.0)], 1),
+        ];
+        let lut = lut_from_rows(rows, 2, 2);
+        let l1 = optimize_bank(&lut, OptLevel::L1, &[]).unwrap();
+        assert!(!l1.changed);
+        let l2 = optimize_bank(&lut, OptLevel::L2, &[]).unwrap();
+        assert!(l2.changed);
+        assert_eq!(l2.lut.n_rows(), 3);
+        assert_eq!(l2.provenance[0], vec![0, 1]);
+        assert_eq!(l2.lut.reduced[0].rules[0], rule_le(4.0));
+        // Classification is preserved over a grid of the value space.
+        for x in [0.0, 2.0, 2.5, 4.0, 5.0] {
+            for y in [6.0, 7.0, 8.0] {
+                assert_eq!(lut.classify(&[x, y]), l2.lut.classify(&[x, y]), "at ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_same_class_pair_collapses_to_bbox_when_safe() {
+        // Rows 0/1 overlap (shadowing); their bbox is (-inf,4] × all,
+        // and no other row intersects it with a different class.
+        let rows = vec![
+            (vec![rule_le(3.0)], 0),
+            (vec![rule_between(1.0, 4.0)], 0),
+            (vec![rule_gt(4.0)], 1),
+        ];
+        let lut = lut_from_rows(rows, 1, 2);
+        let out = optimize_bank(&lut, OptLevel::L2, &[]).unwrap();
+        assert!(out.changed);
+        assert_eq!(out.lut.n_rows(), 2);
+        assert_eq!(out.provenance[0], vec![0, 1]);
+        for x in [0.0, 1.0, 3.5, 4.0, 9.0] {
+            assert_eq!(lut.classify(&[x]), out.lut.classify(&[x]), "at {x}");
+        }
+    }
+
+    #[test]
+    fn bbox_collapse_refused_when_other_class_intersects() {
+        // Rows 0/1 overlap, but class-1 row 2 lives inside their bbox:
+        // collapsing would change classifications, so it must survive.
+        let rows = vec![
+            (vec![rule_le(3.0), rule_le(5.0)], 0),
+            (vec![rule_between(1.0, 4.0), rule_gt(5.0)], 0),
+            (vec![rule_between(1.0, 3.0), rule_between(4.0, 6.0)], 1),
+        ];
+        let lut = lut_from_rows(rows, 2, 2);
+        let out = optimize_bank(&lut, OptLevel::L2, &[]).unwrap();
+        assert_eq!(out.lut.n_rows(), 3, "unsafe bbox collapse must be refused");
+    }
+
+    #[test]
+    fn hints_are_validated_not_trusted() {
+        let lut = lut_from_rows(
+            vec![
+                (vec![rule_le(5.0)], 0),
+                (vec![rule_gt(5.0)], 1),
+            ],
+            1,
+            2,
+        );
+        // Bogus hint: row 1 is not contained in row 0 (and differs in
+        // class) — must be ignored, not applied.
+        let out = optimize_bank(&lut, OptLevel::L1, &[(1, 0)]).unwrap();
+        assert!(!out.changed);
+        assert_eq!(out.lut.n_rows(), 2);
+    }
+}

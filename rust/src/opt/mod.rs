@@ -1,0 +1,498 @@
+//! Post-compile row optimizer: the RETENTION-style compact mapping pass
+//! (ROADMAP item 3; arXiv:2506.05994 motivates it — ensemble CAM cost
+//! is dominated by redundant rows).
+//!
+//! [`CompiledProgram::optimize`] runs three ordered transforms:
+//!
+//! 1. **Within-bank merge** ([`merge`]): dead-row elimination (level 1)
+//!    plus same-class union/bounding-box merges (level 2) over the
+//!    reduced rule table, rebuilding each changed LUT with the compile
+//!    recipe so the adaptive-precision invariant holds.
+//! 2. **Cross-bank sharing** ([`share`]): rows semantically identical
+//!    in ≥2 banks become [`SharedBlock`]s — stored once in the
+//!    artifact, rematerialized per owner bank at load, invisible at
+//!    runtime.
+//! 3. **Provenance** ([`provenance`]): every surviving row records the
+//!    original rows it absorbed ([`BankOpt::provenance`]), so
+//!    `synth::energy`/`latency` roll-ups and `Metrics.bank_energy`
+//!    attribution can always be mapped back to pre-optimization rows.
+//!
+//! **Contract.** The pass refuses to run on a program with verification
+//! errors, and re-verifies its own output: it bails unless the output
+//! is error-free and has no more `dead-row`/`shadowing` findings than
+//! the input (level 2 collapses them to zero wherever the geometry
+//! allows). Level 1 never changes a clean program's LUTs — classes
+//! *and* modeled energy are bit-identical. Level 2 preserves
+//! classification exactly (proved by the differential property suite)
+//! while rows, and therefore modeled energy, may shrink.
+//!
+//! The verifier's `dead-row` findings (with their machine-readable
+//! `other_row` witness) are consumed as the merge worklist; the merge
+//! fixed point then catches anything past the verifier's diagnostic
+//! cap.
+
+mod merge;
+pub mod provenance;
+mod share;
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::{verify_compiled, AnalysisReport};
+use crate::api::{CompiledBank, CompiledProgram, MappedBank, MappedProgram};
+use crate::synth::mapping::MappedArray;
+use crate::util::prng::Prng;
+
+pub use provenance::{BankOpt, OptMeta, RowAccounting, SharedBlock};
+
+/// How aggressive the pass is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// Dead-row elimination + cross-bank sharing only. On a clean
+    /// program the LUTs are untouched: classes and modeled energy stay
+    /// bit-identical; the win is artifact/storage compaction.
+    L1,
+    /// Adds same-class union and bounding-box merges: classification is
+    /// preserved exactly, row count (and modeled energy) may shrink.
+    L2,
+}
+
+impl OptLevel {
+    pub fn parse(s: &str) -> Result<OptLevel> {
+        match s {
+            "1" => Ok(OptLevel::L1),
+            "2" => Ok(OptLevel::L2),
+            other => bail!("--level takes 1|2, got {other:?}"),
+        }
+    }
+
+    pub fn rank(self) -> u8 {
+        match self {
+            OptLevel::L1 => 1,
+            OptLevel::L2 => 2,
+        }
+    }
+
+    pub fn from_rank(r: u8) -> Result<OptLevel> {
+        match r {
+            1 => Ok(OptLevel::L1),
+            2 => Ok(OptLevel::L2),
+            other => bail!("unknown optimization level {other} (this binary knows 1|2)"),
+        }
+    }
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "L{}", self.rank())
+    }
+}
+
+/// What one `optimize` run did (not serialized — the artifact carries
+/// [`OptMeta`]; this is for CLI/bench output).
+#[derive(Clone, Debug)]
+pub struct OptReport {
+    pub level: OptLevel,
+    /// Logical rows before / after the within-bank merge.
+    pub rows_before: usize,
+    pub rows_after: usize,
+    /// Rows the artifact stores once cross-bank sharing is applied.
+    pub rows_physical: usize,
+    /// Stored TCAM bits before / after (rows × per-bank width).
+    pub bits_before: usize,
+    pub bits_physical: usize,
+    pub shared_blocks: usize,
+    /// Total per-bank shared-row references.
+    pub shared_rows: usize,
+    /// `dead-row` + `shadowing` findings in the input / output reports.
+    pub findings_before: usize,
+    pub findings_after: usize,
+}
+
+impl OptReport {
+    /// Physical rows over pre-optimization logical rows (< 1.0 when the
+    /// pass saved anything).
+    pub fn rows_after_dedup_ratio(&self) -> f64 {
+        if self.rows_before == 0 {
+            1.0
+        } else {
+            self.rows_physical as f64 / self.rows_before as f64
+        }
+    }
+
+    /// Modeled storage-energy saving: 1 − stored bits after / before.
+    pub fn forest_energy_saving(&self) -> f64 {
+        if self.bits_before == 0 {
+            0.0
+        } else {
+            1.0 - self.bits_physical as f64 / self.bits_before as f64
+        }
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "opt[{}]: rows {} -> {} logical / {} physical (ratio {:.3}), \
+             bits {} -> {} (saving {:.1}%), {} shared block(s) over {} row ref(s), \
+             collapsible findings {} -> {}",
+            self.level,
+            self.rows_before,
+            self.rows_after,
+            self.rows_physical,
+            self.rows_after_dedup_ratio(),
+            self.bits_before,
+            self.bits_physical,
+            100.0 * self.forest_energy_saving(),
+            self.shared_blocks,
+            self.shared_rows,
+            self.findings_before,
+            self.findings_after,
+        )
+    }
+}
+
+/// `dead-row` + `shadowing` findings — exactly what the pass must
+/// collapse.
+fn count_collapsible(report: &AnalysisReport) -> usize {
+    report
+        .diagnostics
+        .iter()
+        .filter(|d| d.check == "dead-row" || d.check == "shadowing")
+        .count()
+}
+
+impl CompiledProgram {
+    /// Run the row optimizer. Returns the optimized program (full banks
+    /// in memory, [`OptMeta`] describing sharing + provenance) and an
+    /// [`OptReport`] of what changed. Fails rather than ship anything
+    /// that does not re-verify at least as clean as the input.
+    pub fn optimize(&self, level: OptLevel) -> Result<(CompiledProgram, OptReport)> {
+        let before = verify_compiled(self);
+        if before.n_errors() > 0 {
+            bail!(
+                "refusing to optimize a program that fails static verification \
+                 ({}); run `dt2cam check` for diagnostics",
+                before.summary_line()
+            );
+        }
+        let findings_before = count_collapsible(&before);
+
+        // Satellite contract: the verifier's dead-row findings are the
+        // merge worklist (bank, dead row, subsuming row).
+        let mut hints: Vec<Vec<(usize, usize)>> = vec![Vec::new(); self.banks.len()];
+        for d in &before.diagnostics {
+            if d.check == "dead-row" {
+                if let (Some(b), Some(r), Some(o)) = (d.bank, d.row, d.other_row) {
+                    if b < hints.len() {
+                        hints[b].push((r, o));
+                    }
+                }
+            }
+        }
+
+        let rows_before: usize = self.banks.iter().map(|b| b.lut.n_rows()).sum();
+        let bits_before: usize = self.banks.iter().map(|b| provenance::lut_bits(&b.lut)).sum();
+
+        let mut banks = Vec::with_capacity(self.banks.len());
+        let mut bank_prov = Vec::with_capacity(self.banks.len());
+        for (b, cb) in self.banks.iter().enumerate() {
+            let out = merge::optimize_bank(&cb.lut, level, &hints[b])
+                .with_context(|| format!("optimizing bank {b}"))?;
+            bank_prov.push(out.provenance);
+            banks.push(CompiledBank {
+                lut: out.lut,
+                features: cb.features.clone(),
+            });
+        }
+
+        // Re-optimizing an optimized program: compose provenance
+        // through the prior meta and keep the original baseline, so
+        // origins always name *pre-first-optimization* rows.
+        let (baseline_rows, baseline_bits) = if let Some(old) = &self.opt {
+            for (b, prov) in bank_prov.iter_mut().enumerate() {
+                for origins in prov.iter_mut() {
+                    let mut composed: Vec<usize> = origins
+                        .iter()
+                        .flat_map(|&o| {
+                            old.banks[b].provenance.get(o).cloned().unwrap_or(vec![o])
+                        })
+                        .collect();
+                    composed.sort_unstable();
+                    composed.dedup();
+                    *origins = composed;
+                }
+            }
+            (old.baseline_rows.clone(), old.baseline_bits.clone())
+        } else {
+            (
+                self.banks.iter().map(|b| b.lut.n_rows()).collect(),
+                self.banks.iter().map(|b| provenance::lut_bits(&b.lut)).collect(),
+            )
+        };
+
+        let shared = share::build_shared(&banks);
+        let shared_rows = shared.per_bank.iter().map(Vec::len).sum();
+        let meta = OptMeta {
+            level: level.rank(),
+            baseline_rows,
+            baseline_bits,
+            banks: bank_prov
+                .into_iter()
+                .zip(shared.per_bank)
+                .map(|(provenance, shared)| BankOpt { provenance, shared })
+                .collect(),
+            shared_blocks: shared.blocks,
+        };
+
+        let optimized = CompiledProgram {
+            dataset: self.dataset.clone(),
+            seed: self.seed,
+            banks,
+            test_indices: self.test_indices.clone(),
+            golden: self.golden.clone(),
+            opt: Some(meta),
+        };
+
+        let after = verify_compiled(&optimized);
+        if after.n_errors() > 0 {
+            bail!(
+                "row optimizer produced a program that fails static verification \
+                 ({}) — refusing to ship it; first finding: {}",
+                after.summary_line(),
+                after
+                    .diagnostics
+                    .iter()
+                    .find(|d| d.severity == crate::analysis::Severity::Error)
+                    .map(|d| d.to_string())
+                    .unwrap_or_default()
+            );
+        }
+        let findings_after = count_collapsible(&after);
+        if findings_after > findings_before {
+            bail!(
+                "row optimizer increased dead-row/shadowing findings ({findings_before} -> \
+                 {findings_after}) — refusing to ship the result"
+            );
+        }
+
+        let acct = optimized.row_accounting();
+        let report = OptReport {
+            level,
+            rows_before,
+            rows_after: acct.total(),
+            rows_physical: acct.physical(),
+            bits_before,
+            bits_physical: provenance::physical_bits(&optimized.banks, &acct.rows_physical),
+            shared_blocks: optimized.opt.as_ref().map_or(0, |m| m.shared_blocks.len()),
+            shared_rows,
+            findings_before,
+            findings_after,
+        };
+        Ok((optimized, report))
+    }
+}
+
+impl MappedProgram {
+    /// Optimize the embedded compiled program and re-map every bank
+    /// whose LUT changed, reusing each bank's recorded mapping seed so
+    /// the result is exactly what `compile --optimize` would have
+    /// mapped. Banks with unchanged LUTs keep their grids byte-for-byte
+    /// (fault-injected cells and tuned vrefs survive a level-1 pass).
+    /// Refuses to re-map a *changed* bank whose grid deviates from the
+    /// nominal rebuild — silently discarding injected faults would make
+    /// downstream robustness numbers lie.
+    pub fn optimize(&self, level: OptLevel) -> Result<(MappedProgram, OptReport)> {
+        let (program, report) = self.program.optimize(level)?;
+        let mut banks = Vec::with_capacity(self.banks.len());
+        for (b, (cb, mb)) in program.banks.iter().zip(&self.banks).enumerate() {
+            let old = &self.program.banks[b].lut;
+            let unchanged = cb.lut.stored == old.stored
+                && cb.lut.classes == old.classes
+                && cb.lut.encoders == old.encoders;
+            if unchanged {
+                banks.push(mb.clone());
+                continue;
+            }
+            let nominal = self.nominal_grid(b);
+            if mb.mapped.cells != nominal.cells || mb.mapped.vref != nominal.vref {
+                bail!(
+                    "bank {b}'s grid deviates from its nominal mapping (fault injection or \
+                     vref tuning) and its LUT changed under {level} — re-mapping would drop \
+                     those deviations; optimize the compiled program before injecting faults"
+                );
+            }
+            let mut rng = Prng::new(mb.map_seed);
+            let mapped = MappedArray::from_lut(&cb.lut, mb.mapped.s, &self.params, &mut rng);
+            banks.push(MappedBank {
+                mapped,
+                map_seed: mb.map_seed,
+            });
+        }
+        Ok((
+            MappedProgram {
+                program,
+                banks,
+                params: self.params.clone(),
+            },
+            report,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::verify_mapped;
+    use crate::api::Dt2Cam;
+    use crate::cart::ForestParams;
+    use crate::tcam::params::DeviceParams;
+
+    fn forest_program(name: &str, n_trees: usize, seed: u64) -> CompiledProgram {
+        let fp = ForestParams {
+            n_trees,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..ForestParams::default()
+        };
+        Dt2Cam::forest_seeded(name, &fp, seed).unwrap().compile()
+    }
+
+    #[test]
+    fn level_1_is_a_no_op_on_clean_single_tree_programs() {
+        let program = Dt2Cam::dataset("iris").unwrap().compile();
+        let (opt, report) = program.optimize(OptLevel::L1).unwrap();
+        assert_eq!(report.rows_before, report.rows_after);
+        for (a, b) in program.banks.iter().zip(&opt.banks) {
+            assert_eq!(a.lut.stored, b.lut.stored, "level 1 must not touch a clean LUT");
+        }
+        // Single bank → nothing to share either.
+        assert_eq!(report.shared_blocks, 0);
+        assert!((report.rows_after_dedup_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimized_forest_shrinks_and_reverifies_clean() {
+        let program = forest_program("haberman", 9, 0xD72CA0);
+        let (opt, report) = program.optimize(OptLevel::L2).unwrap();
+        let after = verify_compiled(&opt);
+        assert!(after.passes(true), "{:?}", after.diagnostics);
+        assert!(
+            report.rows_after_dedup_ratio() < 1.0,
+            "9-bank haberman forest must dedup something: {}",
+            report.summary_line()
+        );
+        assert!(
+            report.forest_energy_saving() > 0.0,
+            "{}",
+            report.summary_line()
+        );
+        // Classification is bit-identical on the whole test split.
+        let (xs, _) = program.test_split().unwrap();
+        for x in &xs {
+            assert_eq!(program.classify(x), opt.classify(x));
+        }
+    }
+
+    #[test]
+    fn provenance_covers_every_original_row() {
+        let program = forest_program("haberman", 5, 42);
+        let (opt, _) = program.optimize(OptLevel::L2).unwrap();
+        let meta = opt.opt.as_ref().unwrap();
+        assert_eq!(meta.level, 2);
+        for (b, bank) in meta.banks.iter().enumerate() {
+            let mut seen: Vec<usize> = bank.provenance.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            seen.dedup();
+            let expect: Vec<usize> = (0..program.banks[b].lut.n_rows()).collect();
+            assert_eq!(seen, expect, "bank {b} provenance must partition the original rows");
+        }
+    }
+
+    #[test]
+    fn dead_row_finding_is_collapsed_at_level_1() {
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        let lut = &mut program.banks[0].lut;
+        lut.stored.push(lut.stored[0].clone());
+        lut.classes.push(lut.classes[0]);
+        lut.class_bits.push(lut.class_bits[0].clone());
+        lut.reduced.push(lut.reduced[0].clone());
+        let dup = program.banks[0].lut.n_rows() - 1;
+
+        let before = verify_compiled(&program);
+        assert!(
+            before.diagnostics.iter().any(|d| d.check == "dead-row" && d.other_row == Some(0)),
+            "{:?}",
+            before.diagnostics
+        );
+        let (opt, report) = program.optimize(OptLevel::L1).unwrap();
+        assert_eq!(report.findings_before, 1);
+        assert_eq!(report.findings_after, 0, "the dead-row finding must collapse");
+        assert_eq!(opt.banks[0].lut.n_rows(), dup);
+        let meta = opt.opt.as_ref().unwrap();
+        assert!(
+            meta.banks[0]
+                .provenance
+                .iter()
+                .any(|og| og.contains(&0) && og.contains(&dup)),
+            "the surviving row must record the absorbed duplicate"
+        );
+    }
+
+    #[test]
+    fn corrupt_program_is_refused() {
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        let n = program.banks[0].lut.n_classes;
+        let c = &mut program.banks[0].lut.classes[0];
+        *c = (*c + 1) % n;
+        let err = program.optimize(OptLevel::L2).unwrap_err();
+        assert!(err.to_string().contains("fails static verification"), "{err}");
+    }
+
+    #[test]
+    fn mapped_optimize_reuses_seeds_and_reverifies() {
+        let program = forest_program("haberman", 3, 7);
+        let mapped = program.map(16, &DeviceParams::default());
+        let (opt, _) = mapped.optimize(OptLevel::L2).unwrap();
+        let report = verify_mapped(&opt);
+        assert!(report.passes(true), "{:?}", report.diagnostics);
+        for (a, b) in mapped.banks.iter().zip(&opt.banks) {
+            assert_eq!(a.map_seed, b.map_seed);
+        }
+    }
+
+    #[test]
+    fn mapped_optimize_refuses_to_drop_injected_faults() {
+        // Duplicate a row so the merge pass is guaranteed to change the
+        // LUT (the duplicate is a dead row), then fault a cell: the
+        // changed bank's grid deviates from nominal → must refuse.
+        let mut program = Dt2Cam::dataset("iris").unwrap().compile();
+        let lut = &mut program.banks[0].lut;
+        lut.stored.push(lut.stored[0].clone());
+        lut.classes.push(lut.classes[0]);
+        lut.class_bits.push(lut.class_bits[0].clone());
+        lut.reduced.push(lut.reduced[0].clone());
+        let mut mapped = program.map(16, &DeviceParams::default());
+        mapped.banks[0].mapped.cells[0] ^= 1;
+        let err = mapped.optimize(OptLevel::L1).unwrap_err();
+        assert!(err.to_string().contains("nominal"), "{err}");
+    }
+
+    #[test]
+    fn reoptimizing_composes_provenance_to_original_rows() {
+        let program = forest_program("haberman", 9, 0xD72CA0);
+        let (once, _) = program.optimize(OptLevel::L2).unwrap();
+        let (twice, _) = once.optimize(OptLevel::L2).unwrap();
+        let meta = twice.opt.as_ref().unwrap();
+        assert_eq!(meta.baseline_rows, once.opt.as_ref().unwrap().baseline_rows);
+        for (b, bank) in meta.banks.iter().enumerate() {
+            for origins in &bank.provenance {
+                for &o in origins {
+                    assert!(
+                        o < program.banks[b].lut.n_rows(),
+                        "origin {o} must name a pre-first-optimization row"
+                    );
+                }
+            }
+        }
+    }
+}

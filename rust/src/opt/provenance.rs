@@ -1,0 +1,342 @@
+//! Optimization metadata: shared row blocks, per-row provenance, and
+//! the row accounting that keeps energy attribution meaningful after
+//! rows merge or dedup away.
+//!
+//! The in-memory [`CompiledProgram`] always holds **full** banks — every
+//! logical row materialized — so classification, serving, and the
+//! static verifier are completely unaware of optimization. [`OptMeta`]
+//! is the artifact-plane view: which rows are copies of a cross-bank
+//! [`SharedBlock`] (stored once in the artifact, rematerialized into
+//! each owner bank at load), and which original rows each surviving row
+//! absorbed ([`BankOpt::provenance`]). [`row_accounting`] folds that
+//! into per-bank logical vs physical row counts, the numbers behind
+//! `Metrics.rows_total`/`rows_physical` and the benchkit
+//! `rows_after_dedup_ratio` row.
+
+use anyhow::{bail, Result};
+
+use crate::api::{CompiledBank, CompiledProgram};
+use crate::compiler::{Comparator, FeatureEncoder, Lut, ReducedRow, Rule, Trit};
+use crate::util::ceil_log2;
+
+/// Per-program optimization metadata (the artifact's additive `opt`
+/// field). Present only on programs that went through
+/// [`CompiledProgram::optimize`]; absent on every artifact the plain
+/// compile path produces, so old artifacts parse unchanged.
+#[derive(Clone, Debug)]
+pub struct OptMeta {
+    /// Optimization level this meta was produced at (1 or 2).
+    pub level: u8,
+    /// Logical rows per bank *before* optimization (the denominator of
+    /// `rows_after_dedup_ratio`; carried forward when a program is
+    /// re-optimized).
+    pub baseline_rows: Vec<usize>,
+    /// Stored TCAM bits per bank before optimization (`rows × width`;
+    /// the denominator of `forest_energy_saving`).
+    pub baseline_bits: Vec<usize>,
+    /// Per-bank provenance + shared-row references, in bank order.
+    pub banks: Vec<BankOpt>,
+    /// Cross-bank shared row blocks, each stored once in the artifact.
+    pub shared_blocks: Vec<SharedBlock>,
+}
+
+/// One bank's optimization records.
+#[derive(Clone, Debug, Default)]
+pub struct BankOpt {
+    /// `provenance[r]` = the original (pre-optimization) row ids of
+    /// this bank that surviving row `r` stands for. A row untouched by
+    /// the pass lists only itself; a merged row lists every absorbed
+    /// original, so per-row energy/latency roll-ups can be attributed
+    /// back to pre-optimization rows exactly.
+    pub provenance: Vec<Vec<usize>>,
+    /// `(row, block)` pairs: logical row `row` of this bank is a copy
+    /// of `shared_blocks[block]`. The copy is elided from the
+    /// serialized bank and rematerialized at load. Sorted by `row`.
+    pub shared: Vec<(usize, usize)>,
+}
+
+/// One cross-bank shared row: the row's semantics (class + constrained
+/// rules over **original dataset feature ids**) stored once, plus every
+/// `(bank, row)` location that references it.
+#[derive(Clone, Debug)]
+pub struct SharedBlock {
+    pub class: usize,
+    /// Constrained rules only (`Comparator::None` features are
+    /// omitted), keyed by original dataset feature id, ascending.
+    pub rules: Vec<(usize, Rule)>,
+    /// Owner locations, ascending by `(bank, row)`. The first owner's
+    /// bank is the canonical one: accounting charges the single stored
+    /// copy to it.
+    pub owners: Vec<(usize, usize)>,
+}
+
+/// Per-bank logical vs physical row counts of a (possibly optimized)
+/// program.
+#[derive(Clone, Debug)]
+pub struct RowAccounting {
+    /// Rows each bank evaluates at runtime (`lut.n_rows()`).
+    pub rows_total: Vec<usize>,
+    /// Rows each bank actually stores once cross-bank sharing is
+    /// applied: every shared copy is elided, and each shared block is
+    /// charged once to its canonical (first-owner) bank. Equal to
+    /// `rows_total` for unoptimized programs.
+    pub rows_physical: Vec<usize>,
+}
+
+impl RowAccounting {
+    pub fn total(&self) -> usize {
+        self.rows_total.iter().sum()
+    }
+
+    pub fn physical(&self) -> usize {
+        self.rows_physical.iter().sum()
+    }
+}
+
+impl CompiledProgram {
+    /// Logical vs physical row accounting for this program (see
+    /// [`RowAccounting`]). Cheap; safe on unoptimized programs.
+    pub fn row_accounting(&self) -> RowAccounting {
+        let rows_total: Vec<usize> = self.banks.iter().map(|b| b.lut.n_rows()).collect();
+        let mut rows_physical = rows_total.clone();
+        if let Some(meta) = &self.opt {
+            for (b, bank) in meta.banks.iter().enumerate().take(rows_physical.len()) {
+                rows_physical[b] = rows_physical[b].saturating_sub(bank.shared.len());
+            }
+            for block in &meta.shared_blocks {
+                if let Some(&(bank, _)) = block.owners.first() {
+                    if bank < rows_physical.len() {
+                        rows_physical[bank] += 1;
+                    }
+                }
+            }
+        }
+        RowAccounting {
+            rows_total,
+            rows_physical,
+        }
+    }
+}
+
+// ------------------------------------------------- span/trit helpers
+
+/// Panic-free span derivation for a rule against an encoder: the
+/// `encode_rule` logic with missing-threshold errors instead of aborts
+/// (rematerialization runs on untrusted artifacts).
+pub(crate) fn rule_span_checked(enc: &FeatureEncoder, rule: &Rule) -> Result<(usize, usize)> {
+    let position = |th: f64| enc.thresholds().iter().position(|&t| t == th);
+    let (lo, hi) = rule.bounds();
+    let lb = if lo == f64::NEG_INFINITY {
+        0
+    } else {
+        match position(lo) {
+            Some(t) => t + 1,
+            None => bail!("rule lower bound {lo} is not an encoder threshold"),
+        }
+    };
+    let ub = if hi == f64::INFINITY {
+        enc.n_bits() - 1
+    } else {
+        match position(hi) {
+            Some(t) => t,
+            None => bail!("rule upper bound {hi} is not an encoder threshold"),
+        }
+    };
+    if lb > ub {
+        bail!("rule covers an empty value range ({lo}, {hi}]");
+    }
+    Ok((lb, ub))
+}
+
+/// The adaptive unary trit field of span `[lb, ub]`: `u_LB` with the
+/// XOR-differing positions against `u_UB` replaced by don't-care.
+pub(crate) fn span_trits(enc: &FeatureEncoder, lb: usize, ub: usize) -> Vec<Trit> {
+    let u_lb = enc.code_for_range(lb);
+    let u_ub = enc.code_for_range(ub);
+    u_lb.iter()
+        .zip(&u_ub)
+        .map(|(&a, &b)| if a != b { Trit::X } else { a })
+        .collect()
+}
+
+/// Build a [`Rule`] back from value-space bounds `(lo_exclusive,
+/// hi_inclusive]` (the inverse of [`Rule::bounds`]).
+pub(crate) fn rule_from_bounds(lo: f64, hi: f64) -> Rule {
+    match (lo == f64::NEG_INFINITY, hi == f64::INFINITY) {
+        (true, true) => Rule::none(),
+        (true, false) => Rule {
+            comparator: Comparator::Le,
+            th1: hi,
+            th2: f64::NAN,
+        },
+        (false, true) => Rule {
+            comparator: Comparator::Gt,
+            th1: lo,
+            th2: f64::NAN,
+        },
+        (false, false) => Rule {
+            comparator: Comparator::InBetween,
+            th1: lo,
+            th2: hi,
+        },
+    }
+}
+
+// -------------------------------------------- elision / rematerialize
+
+/// Serialization-side transform: clone the banks with every shared-copy
+/// row elided from `stored`/`classes`/`class_bits`/`reduced`, so each
+/// shared row's content lives only in its [`SharedBlock`].
+pub(crate) fn elide_shared(banks: &[CompiledBank], meta: &OptMeta) -> Vec<CompiledBank> {
+    banks
+        .iter()
+        .enumerate()
+        .map(|(b, bank)| {
+            let Some(opt) = meta.banks.get(b) else {
+                return bank.clone();
+            };
+            if opt.shared.is_empty() {
+                return bank.clone();
+            }
+            let mut lut = bank.lut.clone();
+            let mut rows: Vec<usize> = opt.shared.iter().map(|&(r, _)| r).collect();
+            rows.sort_unstable();
+            for &r in rows.iter().rev() {
+                if r < lut.stored.len() {
+                    lut.stored.remove(r);
+                    lut.classes.remove(r);
+                    if r < lut.class_bits.len() {
+                        lut.class_bits.remove(r);
+                    }
+                    if r < lut.reduced.len() {
+                        lut.reduced.remove(r);
+                    }
+                }
+            }
+            CompiledBank {
+                lut,
+                features: bank.features.clone(),
+            }
+        })
+        .collect()
+}
+
+/// Load-side transform: re-insert every shared row into its owner
+/// banks, re-encoding the block's semantic rules with each bank's own
+/// encoders. Validates the meta cross-references so a corrupted
+/// artifact fails loudly here, never at match time.
+pub(crate) fn rematerialize(banks: &mut [CompiledBank], meta: &OptMeta) -> Result<()> {
+    if meta.banks.len() != banks.len() {
+        bail!(
+            "opt meta describes {} banks but the program has {}",
+            meta.banks.len(),
+            banks.len()
+        );
+    }
+    if meta.baseline_rows.len() != banks.len() || meta.baseline_bits.len() != banks.len() {
+        bail!("opt meta baseline arrays do not match the bank count");
+    }
+
+    // Cross-reference check: owners and per-bank shared lists must be
+    // two views of the same relation.
+    for (bid, block) in meta.shared_blocks.iter().enumerate() {
+        if block.owners.is_empty() {
+            bail!("shared block {bid} has no owners");
+        }
+        for &(b, r) in &block.owners {
+            if b >= banks.len() {
+                bail!("shared block {bid} names bank {b}, but the program has {} banks", banks.len());
+            }
+            if !meta.banks[b].shared.contains(&(r, bid)) {
+                bail!("shared block {bid} claims owner (bank {b}, row {r}) but that bank does not reference it");
+            }
+        }
+    }
+
+    for (b, bank) in banks.iter_mut().enumerate() {
+        let opt = &meta.banks[b];
+        let mut shared = opt.shared.clone();
+        shared.sort_unstable();
+        if shared.windows(2).any(|w| w[0].0 == w[1].0) {
+            bail!("bank {b}: two shared blocks claim the same row");
+        }
+        let final_rows = bank.lut.stored.len() + shared.len();
+        let cw = ceil_log2(bank.lut.n_classes);
+        for &(row, bid) in &shared {
+            if row >= final_rows {
+                bail!("bank {b}: shared row {row} out of range ({final_rows} rows)");
+            }
+            let Some(block) = meta.shared_blocks.get(bid) else {
+                bail!("bank {b}: shared row {row} references unknown block {bid}");
+            };
+            if !block.owners.contains(&(b, row)) {
+                bail!("bank {b} row {row} references block {bid}, which does not list it as an owner");
+            }
+            if block.class >= bank.lut.n_classes {
+                bail!("shared block {bid}: class {} out of range", block.class);
+            }
+            // Project the block's rules (original feature ids) onto
+            // this bank's feature order; a block constraining a feature
+            // the bank cannot see is a corrupted artifact.
+            for &(f, _) in &block.rules {
+                if !bank.features.contains(&f) {
+                    bail!("shared block {bid} constrains feature {f}, which bank {b} does not project");
+                }
+            }
+            let rules: Vec<Rule> = bank
+                .features
+                .iter()
+                .map(|f| {
+                    block
+                        .rules
+                        .iter()
+                        .find(|(bf, _)| bf == f)
+                        .map(|&(_, r)| r)
+                        .unwrap_or_else(Rule::none)
+                })
+                .collect();
+            let mut trits = Vec::with_capacity(bank.lut.width());
+            for (j, rule) in rules.iter().enumerate() {
+                let enc = &bank.lut.encoders[j];
+                let (lb, ub) = rule_span_checked(enc, rule)
+                    .map_err(|e| anyhow::anyhow!("bank {b} shared row {row} feature {j}: {e}"))?;
+                trits.extend(span_trits(enc, lb, ub));
+            }
+            let class_bits: Vec<bool> =
+                (0..cw).map(|k| (block.class >> (cw - 1 - k)) & 1 == 1).collect();
+            bank.lut.stored.insert(row, trits);
+            bank.lut.classes.insert(row, block.class);
+            bank.lut.class_bits.insert(row.min(bank.lut.class_bits.len()), class_bits);
+            bank.lut.reduced.insert(
+                row.min(bank.lut.reduced.len()),
+                ReducedRow {
+                    rules,
+                    class: block.class,
+                },
+            );
+        }
+        if opt.provenance.len() != bank.lut.n_rows() {
+            bail!(
+                "bank {b}: provenance covers {} rows but the bank has {}",
+                opt.provenance.len(),
+                bank.lut.n_rows()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Total stored TCAM bits of a program's banks under the given per-bank
+/// physical row counts.
+pub(crate) fn physical_bits(banks: &[CompiledBank], rows_physical: &[usize]) -> usize {
+    banks
+        .iter()
+        .zip(rows_physical)
+        .map(|(b, &rows)| rows * b.lut.width())
+        .sum()
+}
+
+/// `rows × width` of one bank (baseline-bit bookkeeping).
+pub(crate) fn lut_bits(lut: &Lut) -> usize {
+    lut.n_rows() * lut.width()
+}

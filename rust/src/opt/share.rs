@@ -1,0 +1,216 @@
+//! Cross-bank identical-row dedup: rows whose *semantics* (class +
+//! constrained value intervals over original dataset feature ids) are
+//! identical in at least [`SHARE_MIN_BANKS`] distinct banks are
+//! extracted into [`SharedBlock`]s. Every owner's copy is elided from
+//! the serialized artifact and rematerialized into its bank at load
+//! (see `provenance::rematerialize`), so the in-memory program — and
+//! therefore matching, energy, and the verifier — is unchanged.
+//!
+//! The key is built from `Rule::bounds` bit patterns, not trit strings:
+//! two banks projecting different feature subsets (or owning different
+//! threshold sets, hence different field widths) still share a row as
+//! long as it constrains the same original features the same way.
+//! `BTreeMap` keeps block discovery order deterministic, so artifact
+//! bytes are reproducible.
+
+use std::collections::BTreeMap;
+
+use crate::api::CompiledBank;
+use crate::compiler::Comparator;
+
+use super::provenance::SharedBlock;
+
+/// A row must appear in at least this many distinct banks to be worth a
+/// shared block (a block costs one stored copy plus per-owner refs).
+pub(crate) const SHARE_MIN_BANKS: usize = 2;
+
+/// Cross-bank sharing result: the blocks plus, per bank, the sorted
+/// `(row, block)` reference list.
+pub(crate) struct ShareOutcome {
+    pub blocks: Vec<SharedBlock>,
+    pub per_bank: Vec<Vec<(usize, usize)>>,
+}
+
+/// Semantic row key: class + sorted constrained intervals keyed by
+/// original feature id, with bounds compared bit-exactly.
+type RowKey = (usize, Vec<(usize, u64, u64)>);
+
+/// Find every row shared by ≥ [`SHARE_MIN_BANKS`] distinct banks.
+/// Banks without a full reduced rule table are skipped (they can still
+/// be optimized within-bank, just not shared).
+pub(crate) fn build_shared(banks: &[CompiledBank]) -> ShareOutcome {
+    let mut groups: BTreeMap<RowKey, Vec<(usize, usize)>> = BTreeMap::new();
+    for (b, bank) in banks.iter().enumerate() {
+        if bank.lut.reduced.len() != bank.lut.n_rows() {
+            continue;
+        }
+        for (r, row) in bank.lut.reduced.iter().enumerate() {
+            let mut key: Vec<(usize, u64, u64)> = row
+                .rules
+                .iter()
+                .zip(&bank.features)
+                .filter(|(rule, _)| rule.comparator != Comparator::None)
+                .map(|(rule, &f)| {
+                    let (lo, hi) = rule.bounds();
+                    (f, lo.to_bits(), hi.to_bits())
+                })
+                .collect();
+            key.sort_unstable();
+            groups.entry((row.class, key)).or_default().push((b, r));
+        }
+    }
+
+    let mut blocks = Vec::new();
+    let mut per_bank: Vec<Vec<(usize, usize)>> = vec![Vec::new(); banks.len()];
+    for ((class, _), mut owners) in groups {
+        owners.sort_unstable();
+        let distinct_banks = {
+            let mut bs: Vec<usize> = owners.iter().map(|&(b, _)| b).collect();
+            bs.dedup();
+            bs.len()
+        };
+        if distinct_banks < SHARE_MIN_BANKS {
+            continue;
+        }
+        let (cb, cr) = owners[0];
+        let canonical = &banks[cb].lut.reduced[cr];
+        let mut rules: Vec<_> = canonical
+            .rules
+            .iter()
+            .zip(&banks[cb].features)
+            .filter(|(rule, _)| rule.comparator != Comparator::None)
+            .map(|(rule, &f)| (f, *rule))
+            .collect();
+        rules.sort_unstable_by_key(|&(f, _)| f);
+        let block_id = blocks.len();
+        for &(b, r) in &owners {
+            per_bank[b].push((r, block_id));
+        }
+        blocks.push(SharedBlock {
+            class,
+            rules,
+            owners,
+        });
+    }
+    for refs in &mut per_bank {
+        refs.sort_unstable();
+    }
+    ShareOutcome { blocks, per_bank }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{Lut, Rule, Trit};
+
+    fn bank_from_rules(rows: Vec<(Vec<Rule>, usize)>, features: Vec<usize>) -> CompiledBank {
+        // Small hand-built LUT: reuse the compile recipe pieces via a
+        // synthetic tree is overkill; assemble directly.
+        use crate::compiler::{FeatureEncoder, ReducedRow};
+        use crate::util::ceil_log2;
+        let n_features = features.len();
+        let reduced: Vec<ReducedRow> = rows
+            .iter()
+            .map(|(rules, class)| ReducedRow { rules: rules.clone(), class: *class })
+            .collect();
+        let encoders: Vec<FeatureEncoder> = (0..n_features)
+            .map(|f| FeatureEncoder::from_rules(reduced.iter().map(|r| &r.rules[f])))
+            .collect();
+        let mut offsets = Vec::new();
+        let mut acc = 0;
+        for e in &encoders {
+            offsets.push(acc);
+            acc += e.n_bits();
+        }
+        let stored: Vec<Vec<Trit>> = reduced
+            .iter()
+            .map(|row| {
+                let mut bits = Vec::new();
+                for (f, e) in encoders.iter().enumerate() {
+                    bits.extend(e.encode_rule(&row.rules[f]));
+                }
+                bits
+            })
+            .collect();
+        let n_classes = 2;
+        let cw = ceil_log2(n_classes);
+        let classes: Vec<usize> = reduced.iter().map(|r| r.class).collect();
+        let class_bits = classes
+            .iter()
+            .map(|&c| (0..cw).map(|b| (c >> (cw - 1 - b)) & 1 == 1).collect())
+            .collect();
+        CompiledBank {
+            lut: Lut { stored, classes, class_bits, encoders, offsets, n_classes, reduced },
+            features,
+        }
+    }
+
+    fn le(th: f64) -> Rule {
+        Rule { comparator: crate::compiler::Comparator::Le, th1: th, th2: f64::NAN }
+    }
+
+    fn gt(th: f64) -> Rule {
+        Rule { comparator: crate::compiler::Comparator::Gt, th1: th, th2: f64::NAN }
+    }
+
+    #[test]
+    fn identical_rows_across_banks_form_a_block() {
+        // Banks 0 and 2 both contain "feature 4 <= 1.5 → class 0";
+        // bank 1 does not. The shared key is over *original* feature
+        // ids, so bank 2 projecting [7, 4] still matches bank 0's [4].
+        let b0 = bank_from_rules(
+            vec![(vec![le(1.5)], 0), (vec![gt(1.5)], 1)],
+            vec![4],
+        );
+        let b1 = bank_from_rules(
+            vec![(vec![le(9.0)], 0), (vec![gt(9.0)], 1)],
+            vec![2],
+        );
+        let b2 = bank_from_rules(
+            vec![
+                (vec![Rule::none(), le(1.5)], 0),
+                (vec![Rule::none(), gt(1.5)], 1),
+            ],
+            vec![7, 4],
+        );
+        let out = build_shared(&[b0, b1, b2]);
+        assert_eq!(out.blocks.len(), 2, "both the le and gt rows are shared");
+        let block = &out.blocks[0];
+        assert_eq!(block.owners, vec![(0, 0), (2, 0)]);
+        assert_eq!(block.rules.len(), 1);
+        assert_eq!(block.rules[0].0, 4);
+        assert_eq!(out.per_bank[0], vec![(0, 0), (1, 1)]);
+        assert!(out.per_bank[1].is_empty());
+        assert_eq!(out.per_bank[2], vec![(0, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn rows_unique_to_one_bank_are_not_shared() {
+        let b0 = bank_from_rules(vec![(vec![le(1.0)], 0), (vec![gt(1.0)], 1)], vec![0]);
+        let b1 = bank_from_rules(vec![(vec![le(2.0)], 0), (vec![gt(2.0)], 1)], vec![0]);
+        let out = build_shared(&[b0, b1]);
+        assert!(out.blocks.is_empty());
+        assert!(out.per_bank.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn sharing_is_deterministic_over_real_forest_compiles() {
+        use crate::api::Dt2Cam;
+        use crate::cart::ForestParams;
+        let fp = ForestParams {
+            n_trees: 5,
+            sample_fraction: 0.8,
+            max_features: 2,
+            ..ForestParams::default()
+        };
+        let program = Dt2Cam::forest_seeded("haberman", &fp, 7).unwrap().compile();
+        let a = build_shared(&program.banks);
+        let b = build_shared(&program.banks);
+        assert_eq!(a.blocks.len(), b.blocks.len());
+        for (x, y) in a.blocks.iter().zip(&b.blocks) {
+            assert_eq!(x.owners, y.owners);
+            assert_eq!(x.class, y.class);
+        }
+        assert_eq!(a.per_bank, b.per_bank);
+    }
+}

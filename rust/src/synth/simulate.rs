@@ -69,6 +69,13 @@ pub struct SimReport {
     /// Inputs with multiple surviving rows (fault-induced).
     pub multi_match: usize,
     pub n_tiles: usize,
+    /// Logical rows of the simulated LUT (what the search models).
+    pub rows_total: usize,
+    /// Physically stored rows. The simulator itself always stores the
+    /// full row table, so this equals `rows_total` here; callers that
+    /// simulate a row-optimized artifact (shared row blocks elided on
+    /// disk) override it from the program's row accounting.
+    pub rows_physical: usize,
     /// Per-input predicted class (`None` = no surviving row). Forest
     /// simulations vote across per-bank reports with these.
     pub classes: Vec<Option<usize>>,
@@ -185,6 +192,8 @@ pub fn simulate(
         no_match,
         multi_match,
         n_tiles: m.n_tiles(),
+        rows_total: lut.n_rows(),
+        rows_physical: lut.n_rows(),
         classes,
     }
 }
@@ -319,6 +328,9 @@ mod tests {
         let (m, lut, xs, ys, golden, p) = setup("iris", 16);
         let r = simulate(&m, &lut, &xs, &ys, &golden, &m.vref, &p, &SimOptions::default());
         assert!(r.accuracy >= 0.8, "iris test accuracy {}", r.accuracy);
+        // The simulator stores the full row table — logical == physical.
+        assert_eq!(r.rows_total, lut.n_rows());
+        assert_eq!(r.rows_physical, r.rows_total);
         let _ = iris::load();
     }
 }

@@ -2,12 +2,15 @@
 //! generated learning problems (the repository's deepest invariants).
 
 use dt2cam::api::registry::{self, BackendOptions};
-use dt2cam::api::NativeBackend;
+use dt2cam::api::{Dt2Cam, NativeBackend};
 use dt2cam::cart::{train, train_forest, Forest, ForestParams, TrainParams};
+use dt2cam::cluster::{spawn_router, spawn_worker, Placement};
 use dt2cam::compiler::compile;
 use dt2cam::config::EngineKind;
 use dt2cam::coordinator::scheduler::Scheduler;
 use dt2cam::coordinator::{BankSpec, Coordinator, ServingPlan};
+use dt2cam::net::{Client, ServerConfig};
+use dt2cam::opt::OptLevel;
 use dt2cam::synth::mapping::MappedArray;
 use dt2cam::synth::simulate::{simulate, SimOptions};
 use dt2cam::tcam::params::DeviceParams;
@@ -69,11 +72,16 @@ fn bank_specs<'a>(forest: &Forest, arrays: &'a [MappedArray]) -> Vec<BankSpec<'a
         .iter()
         .zip(&forest.feature_sets)
         .zip(arrays)
-        .map(|((t, feats), m)| BankSpec {
-            lut: compile(t),
-            features: feats.clone(),
-            mapped: m,
-            vref: &m.vref,
+        .map(|((t, feats), m)| {
+            let lut = compile(t);
+            let rows_physical = lut.n_rows();
+            BankSpec {
+                lut,
+                features: feats.clone(),
+                mapped: m,
+                vref: &m.vref,
+                rows_physical,
+            }
         })
         .collect()
 }
@@ -195,6 +203,193 @@ fn pipelined_coordinator_bit_identical_to_sequential_across_backends() {
                 },
             );
         }
+    }
+}
+
+/// The row optimizer's differential acceptance bar: on seeded 1-, 3-,
+/// and 9-bank forests over real datasets, both optimizer levels must
+/// preserve classification **bit-identically** on every registry
+/// backend in sequential and pipelined execution; level 1 must also
+/// preserve the modeled energy attribution (total, per-bank, active-row
+/// counts) bit for bit, because it never touches a clean program's
+/// LUTs. The row accounting stamped into the serving metrics must match
+/// the optimizer's own report exactly.
+#[test]
+fn row_optimizer_preserves_classification_across_backends_and_modes() {
+    let opts = BackendOptions::default();
+    let p = DeviceParams::default();
+    for (name, n_banks) in [("iris", 1usize), ("haberman", 3), ("haberman", 9)] {
+        property_r(
+            &format!("optimized == baseline ({name}, {n_banks} banks)"),
+            2,
+            |g: &mut Gen| {
+                let seed = g.u64();
+                let model = if n_banks == 1 {
+                    Dt2Cam::dataset_seeded(name, seed).map_err(|e| format!("{e:#}"))?
+                } else {
+                    Dt2Cam::forest_seeded(
+                        name,
+                        &ForestParams {
+                            n_trees: n_banks,
+                            sample_fraction: 0.8,
+                            max_features: 2,
+                            ..Default::default()
+                        },
+                        seed,
+                    )
+                    .map_err(|e| format!("{e:#}"))?
+                };
+                let program = model.compile();
+                let base = program.map(16, &p);
+                for level in [OptLevel::L1, OptLevel::L2] {
+                    let (opt_program, report) =
+                        program.optimize(level).map_err(|e| format!("{e:#}"))?;
+                    let optm = opt_program.map(16, &p);
+                    for kind in EngineKind::ALL {
+                        let mut bs = match base.session_with(kind, 8, &opts) {
+                            Ok(s) => s,
+                            Err(e) => {
+                                eprintln!("skipping {} in the opt harness: {e:#}", kind.name());
+                                continue;
+                            }
+                        };
+                        let mut os = optm
+                            .session_with(kind, 8, &opts)
+                            .map_err(|e| format!("{e:#}"))?;
+                        let want = bs.classify_all(&model.test_x).map_err(|e| format!("{e:#}"))?;
+                        let got = os.classify_all(&model.test_x).map_err(|e| format!("{e:#}"))?;
+                        if want != got {
+                            return Err(format!(
+                                "classes diverged under {level} on {} ({name}, {n_banks} banks)",
+                                kind.name()
+                            ));
+                        }
+                        // The optimizer's report and the serving metrics
+                        // must agree on the row accounting.
+                        if os.metrics().rows_total != report.rows_after as u64
+                            || os.metrics().rows_physical != report.rows_physical as u64
+                        {
+                            return Err(format!(
+                                "metrics rows {}/{} != opt report {}/{}",
+                                os.metrics().rows_physical,
+                                os.metrics().rows_total,
+                                report.rows_physical,
+                                report.rows_after
+                            ));
+                        }
+                        if level == OptLevel::L1 {
+                            // Level 1 never touches a clean LUT: energy
+                            // attribution is bit-identical to baseline.
+                            let (a, b) = (bs.metrics(), os.metrics());
+                            if a.modeled_energy.to_bits() != b.modeled_energy.to_bits()
+                                || a.active_row_evals != b.active_row_evals
+                                || a.bank_energy != b.bank_energy
+                            {
+                                return Err(format!(
+                                    "level-1 energy attribution diverged on {}",
+                                    kind.name()
+                                ));
+                            }
+                        }
+                        if registry::pipeline_capable(kind) {
+                            let mut op = optm
+                                .session_pipelined(kind, 8, &opts, 2)
+                                .map_err(|e| format!("{e:#}"))?;
+                            let piped =
+                                op.classify_all(&model.test_x).map_err(|e| format!("{e:#}"))?;
+                            if piped != want {
+                                return Err(format!(
+                                    "pipelined optimized classes diverged under {level} on {}",
+                                    kind.name()
+                                ));
+                            }
+                            if op.metrics().modeled_energy.to_bits()
+                                != os.metrics().modeled_energy.to_bits()
+                                || op.metrics().bank_energy != os.metrics().bank_energy
+                            {
+                                return Err(format!(
+                                    "pipelined optimized energy diverged under {level} on {}",
+                                    kind.name()
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The optimized artifact shards transparently: a 9-bank L2-optimized
+/// haberman forest behind 3 workers and a router answers bit-identically
+/// to the single-process session, and the cluster-wide metrics snapshot
+/// carries the program's row accounting over the wire.
+#[test]
+fn optimized_program_serves_bit_identically_through_a_cluster() {
+    let fp = ForestParams {
+        n_trees: 9,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model = Dt2Cam::forest_seeded("haberman", &fp, 0xD72CA0).unwrap();
+    let (program, report) = model.compile().optimize(OptLevel::L2).unwrap();
+    let p = DeviceParams::default();
+    let map = || program.map(16, &p);
+
+    let mapped = map();
+    let (expected, energy) = {
+        let mut single = mapped.session(EngineKind::Native, 1).unwrap();
+        let expected = single.classify_all(&model.test_x).unwrap();
+        (expected, single.metrics().energy_per_dec())
+    };
+
+    let shape =
+        Placement::round_robin(9, (0..3).map(|i| format!("w{i}")).collect(), 0).unwrap();
+    let workers: Vec<_> = (0..3)
+        .map(|w| {
+            spawn_worker(
+                "127.0.0.1:0",
+                ServerConfig::default(),
+                map(),
+                EngineKind::Native,
+                1,
+                BackendOptions::default(),
+                shape.banks_of(w),
+            )
+            .unwrap()
+        })
+        .collect();
+    let addrs: Vec<String> = workers.iter().map(|w| w.local_addr().to_string()).collect();
+    let placement = Placement::round_robin(9, addrs, 0).unwrap();
+    let router =
+        spawn_router("127.0.0.1:0", ServerConfig::default(), mapped, 1, placement).unwrap();
+
+    let mut client = Client::connect(&router.local_addr().to_string()).unwrap();
+    for (i, x) in model.test_x.iter().enumerate() {
+        assert_eq!(client.classify(x).unwrap(), expected[i], "input {i}");
+    }
+    let snap = client.metrics().unwrap();
+    assert_eq!(snap.decisions, model.test_x.len() as u64);
+    assert_eq!(
+        snap.energy_per_dec.to_bits(),
+        energy.to_bits(),
+        "cluster energy must be bit-identical to single-process"
+    );
+    // Row accounting travels the wire: the router reports the optimized
+    // program's logical and physical rows (not a worker double-count).
+    assert_eq!(snap.rows_total, report.rows_after as u64);
+    assert_eq!(snap.rows_physical, report.rows_physical as u64);
+    assert!(
+        report.rows_physical < report.rows_before,
+        "a 9-bank haberman forest must merge or share rows: {}",
+        report.summary_line()
+    );
+
+    router.shutdown().unwrap();
+    for w in workers {
+        w.shutdown().unwrap();
     }
 }
 
