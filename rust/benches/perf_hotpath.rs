@@ -483,4 +483,63 @@ fn main() {
         }
         ob.finish();
     }
+
+    // ISSUE 9 acceptance rows: the observability plane's overhead
+    // contract, on the same covid program behind the loopback wire.
+    // The trace plane is compiled in unconditionally, so "baseline"
+    // and "trace off" are two runs of the identical default config:
+    // their ratio bounds run-to-run noise plus the dormant plane's
+    // cost (one sampling branch per admitted request). The third run
+    // samples every request (`--trace-sample 1`), the worst case.
+    {
+        use dt2cam::net::{self, Server, ServerConfig};
+
+        let mut obb = Bench::new("obs_overhead");
+        let inputs: Vec<Vec<f64>> = model.test_x[..n].to_vec();
+        let run = |trace_sample: u64| -> f64 {
+            let program_for_server = program.clone();
+            let params = p.clone();
+            let server = Server::spawn(
+                "127.0.0.1:0",
+                ServerConfig {
+                    trace_sample,
+                    ..Default::default()
+                },
+                move || {
+                    Ok(program_for_server
+                        .map(s, &params)
+                        .session(EngineKind::Native, 32)?
+                        .into_coordinator())
+                },
+            )
+            .unwrap();
+            let addr = server.local_addr().to_string();
+            let _ = net::closed_loop(&addr, &inputs, 4, 32).unwrap(); // warm
+            let report = net::closed_loop(&addr, &inputs, 32, inputs.len()).unwrap();
+            assert_eq!(
+                report.completed,
+                inputs.len() as u64,
+                "obs overhead run must answer everything"
+            );
+            server.shutdown().unwrap();
+            report.throughput()
+        };
+        let t_baseline = run(0);
+        let t_off = run(0);
+        let t_on = run(1);
+        obb.report_value("wall_throughput_baseline", t_baseline, "dec/s");
+        obb.report_value("wall_throughput_trace_off", t_off, "dec/s");
+        obb.report_value("wall_throughput_trace_on", t_on, "dec/s");
+        obb.report_value(
+            "trace_off_vs_baseline_ratio",
+            t_off / t_baseline.max(1e-9),
+            "x (want >= 0.97: a dormant tracer is one branch per request)",
+        );
+        obb.report_value(
+            "trace_on_overhead_pct",
+            (1.0 - t_on / t_baseline.max(1e-9)) * 100.0,
+            "% (want <= 10: 1-in-1 sampling vs the untraced baseline)",
+        );
+        obb.finish();
+    }
 }

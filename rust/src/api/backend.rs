@@ -188,8 +188,11 @@ pub trait RemoteBankDispatch: Send {
     /// Evaluate `rows` on every bank of the program, returning exactly
     /// one outcome per bank, sorted by ascending global bank id, each
     /// with `classes.len() == rows.len()`. Errors only when some bank
-    /// is unserveable after exhausting its replicas.
-    fn run_banks(&mut self, rows: &[Vec<f64>]) -> Result<Vec<RemoteBankOutcome>>;
+    /// is unserveable after exhausting its replicas. `trace` is the
+    /// batch's representative trace id (0 = untraced), propagated to
+    /// the workers so their bank-match spans correlate with the
+    /// router's remote span.
+    fn run_banks(&mut self, rows: &[Vec<f64>], trace: u64) -> Result<Vec<RemoteBankOutcome>>;
 
     /// Per-worker placement/health/accounting status; with `scrape`,
     /// also pull each live worker's own metrics snapshot.

@@ -48,7 +48,11 @@ use super::serde::{
 use super::{bank_map_seed, map_seed, EXPERIMENT_SEED};
 
 const COMPILED_FORMAT: &str = "dt2cam-compiled-program";
-const MAPPED_FORMAT: &str = "dt2cam-mapped-program";
+/// Artifact format tag of a mapped program — also the program-identity
+/// string a serving process advertises over `Frame::Health`, so a
+/// cluster router can detect a worker loaded from the wrong kind of
+/// artifact (or a stale pre-identity build, which reports "").
+pub const MAPPED_FORMAT: &str = "dt2cam-mapped-program";
 /// Current artifact schema: v2, the multi-bank layout. v1 (single-tree,
 /// no `banks` array) is still read and upgraded to a 1-bank program.
 const ARTIFACT_VERSION: usize = 2;
@@ -468,6 +472,18 @@ impl MappedProgram {
     /// Number of CAM banks.
     pub fn n_banks(&self) -> usize {
         self.banks.len()
+    }
+
+    /// Physical row count of the full program (logical rows minus
+    /// shared-copy elisions) — the figure a serving process advertises
+    /// as part of its program identity over health probes.
+    pub fn rows_physical(&self) -> u64 {
+        self.program
+            .row_accounting()
+            .rows_physical
+            .iter()
+            .map(|&r| r as u64)
+            .sum()
     }
 
     /// The primary (bank 0) tile grid — the whole program for

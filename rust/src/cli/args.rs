@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 34] = [
+const VALUE_KEYS: [&str; 37] = [
     "dataset",
     "tile-size",
     "seed",
@@ -50,6 +50,9 @@ const VALUE_KEYS: [&str; 34] = [
     "verify",
     "out",
     "level",
+    "trace-sample",
+    "trace-out",
+    "n",
 ];
 
 impl Args {

@@ -396,6 +396,8 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let program_path = args.opt_str("program");
     let listen = args.opt_str("listen");
     let admission = args.opt_usize("admission")?;
+    let trace_sample = args.opt_u64("trace-sample")?.unwrap_or(0);
+    let trace_out = args.opt_str("trace-out");
     let verify = verify_mode_arg(args, program_path.is_some())?;
 
     // Serving knobs are validated up front, naming the flag: a zero
@@ -425,6 +427,18 @@ pub fn serve(args: &mut Args) -> Result<()> {
         );
     }
     let pipe_depth = pipe_depth_arg.unwrap_or(2);
+    if trace_sample > 0 {
+        anyhow::ensure!(
+            listen.is_some(),
+            "--trace-sample requires --listen (tracing instruments the socket server)"
+        );
+    }
+    if trace_out.is_some() {
+        anyhow::ensure!(
+            trace_sample > 0,
+            "--trace-out requires --trace-sample N >= 1 (nothing would be recorded)"
+        );
+    }
 
     // Stage artifacts: load from disk (two-process flow) or build fresh.
     let (mapped, test_x, test_y, golden, name) = if let Some(path) = program_path {
@@ -488,6 +502,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
             addr.as_str(),
             net::ServerConfig {
                 admission,
+                trace_sample,
                 ..Default::default()
             },
             move || {
@@ -501,22 +516,29 @@ pub fn serve(args: &mut Args) -> Result<()> {
         )?;
         eprintln!(
             "dt2cam serving {name} @S={s} on {} (engine {}, batch {batch}, \
-             admission {admission}, {n_banks} bank{}{})",
+             admission {admission}, {n_banks} bank{}{}{})",
             server.local_addr(),
             engine.name(),
             if n_banks == 1 { "" } else { "s" },
-            if pipelined { ", pipelined" } else { "" }
+            if pipelined { ", pipelined" } else { "" },
+            if trace_sample > 0 {
+                format!(", tracing 1/{trace_sample}")
+            } else {
+                String::new()
+            }
         );
         eprintln!(
             "stop with: dt2cam loadgen --connect {} --dataset {name} --quick --shutdown",
             server.local_addr()
         );
+        let tracer = server.tracer();
         let report = server.join()?;
         println!(
             "server stopped: conns={} shed={} protocol_errors={}",
             report.connections, report.shed, report.protocol_errors
         );
         println!("{}", report.metrics.summary_line());
+        write_trace_out(&trace_out, &tracer)?;
         return Ok(());
     }
 
@@ -593,6 +615,23 @@ pub fn serve(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--trace-out` epilogue for the serving commands: after the
+/// server joins, dump its span ring as Chrome trace-event JSON (open at
+/// chrome://tracing or ui.perfetto.dev). The tracer handle must be
+/// captured *before* `join()` consumes the server handle.
+fn write_trace_out(
+    trace_out: &Option<String>,
+    tracer: &Option<crate::obs::Tracer>,
+) -> Result<()> {
+    if let (Some(path), Some(t)) = (trace_out, tracer) {
+        let spans = t.snapshot();
+        std::fs::write(path, crate::obs::export::chrome_trace_json(&spans))
+            .with_context(|| format!("writing trace file {path}"))?;
+        eprintln!("wrote trace file {path} ({} span(s))", spans.len());
+    }
+    Ok(())
+}
+
 /// `dt2cam loadgen`: generate traffic against a `serve --listen` server
 /// and report client-observed p50/p95/p99 latency + wall throughput.
 /// Closed-loop by default (`--clients N` concurrent request→response
@@ -653,6 +692,21 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
     b.report_value("latency_p99_us", report.p99 * 1e6, "us");
     b.report_value("shed", report.shed as f64, "requests");
     b.finish();
+
+    // Per-stage server-side time breakdown from the obs scrape —
+    // best-effort: a pre-obs server or one running with
+    // `--trace-sample 0` has no stage totals and the section is
+    // silently skipped (spans_max 0: the text scrape is enough here).
+    if let Ok((text, _)) = net::Client::connect(&targets[0]).and_then(|mut c| c.obs_scrape(0)) {
+        let stages = crate::obs::export::parse_stage_totals(&text);
+        if !stages.is_empty() {
+            println!("server stage breakdown ({}):", targets[0]);
+            for (stage, ns, count) in &stages {
+                let mean_us = *ns as f64 / 1e3 / (*count).max(1) as f64;
+                println!("  {stage:<12} {count:>8} span(s)  mean {mean_us:>9.1} us");
+            }
+        }
+    }
 
     if do_shutdown {
         for addr in &targets {
@@ -899,9 +953,17 @@ pub fn worker(args: &mut Args) -> Result<()> {
     let engine = engine_arg(args)?;
     let batch = args.opt_usize("batch")?.unwrap_or(32);
     let admission = args.opt_usize("admission")?.unwrap_or(256);
+    let trace_sample = args.opt_u64("trace-sample")?.unwrap_or(0);
+    let trace_out = args.opt_str("trace-out");
     let opts = backend_opts(args);
     anyhow::ensure!(batch >= 1, "--batch must be >= 1 (got 0)");
     anyhow::ensure!(admission >= 1, "--admission must be >= 1 (got 0)");
+    if trace_out.is_some() {
+        anyhow::ensure!(
+            trace_sample > 0,
+            "--trace-out requires --trace-sample N >= 1 (nothing would be recorded)"
+        );
+    }
     let banks = crate::cluster::parse_bank_list(&banks_s)?;
     let mapped = cluster_program(args)?;
 
@@ -912,6 +974,7 @@ pub fn worker(args: &mut Args) -> Result<()> {
         listen.as_str(),
         net::ServerConfig {
             admission,
+            trace_sample,
             ..Default::default()
         },
         mapped,
@@ -930,12 +993,14 @@ pub fn worker(args: &mut Args) -> Result<()> {
         "stop with: dt2cam loadgen --connect {} --dataset {name} --quick --shutdown",
         server.local_addr()
     );
+    let tracer = server.tracer();
     let report = server.join()?;
     println!(
         "worker stopped: conns={} shed={} protocol_errors={}",
         report.connections, report.shed, report.protocol_errors
     );
     println!("{}", report.metrics.summary_line());
+    write_trace_out(&trace_out, &tracer)?;
     Ok(())
 }
 
@@ -954,8 +1019,16 @@ pub fn router(args: &mut Args) -> Result<()> {
     let replicas = args.opt_usize("replicas")?.unwrap_or(0);
     let batch = args.opt_usize("batch")?.unwrap_or(32);
     let admission = args.opt_usize("admission")?.unwrap_or(256);
+    let trace_sample = args.opt_u64("trace-sample")?.unwrap_or(0);
+    let trace_out = args.opt_str("trace-out");
     anyhow::ensure!(batch >= 1, "--batch must be >= 1 (got 0)");
     anyhow::ensure!(admission >= 1, "--admission must be >= 1 (got 0)");
+    if trace_out.is_some() {
+        anyhow::ensure!(
+            trace_sample > 0,
+            "--trace-out requires --trace-sample N >= 1 (nothing would be recorded)"
+        );
+    }
     let workers = crate::cluster::parse_worker_list(&workers_s)?;
     let mapped = cluster_program(args)?;
 
@@ -967,6 +1040,7 @@ pub fn router(args: &mut Args) -> Result<()> {
         listen.as_str(),
         net::ServerConfig {
             admission,
+            trace_sample,
             ..Default::default()
         },
         mapped,
@@ -983,12 +1057,51 @@ pub fn router(args: &mut Args) -> Result<()> {
         "stop with: dt2cam loadgen --connect {} --dataset {name} --quick --shutdown",
         server.local_addr()
     );
+    let tracer = server.tracer();
     let report = server.join()?;
     println!(
         "router stopped: conns={} shed={} protocol_errors={}",
         report.connections, report.shed, report.protocol_errors
     );
     println!("{}", report.metrics.summary_line());
+    write_trace_out(&trace_out, &tracer)?;
+    Ok(())
+}
+
+/// `dt2cam trace`: pull the span ring and metrics scrape from a live
+/// server started with `--trace-sample N` and write a Chrome
+/// trace-event JSON file (open it at chrome://tracing or
+/// ui.perfetto.dev). Also prints the server's per-stage time totals
+/// from the scrape. `--n` bounds how many spans the server returns
+/// (the newest are kept; default 4096, the server-side report cap).
+pub fn trace(args: &mut Args) -> Result<()> {
+    let connect = args
+        .opt_str("connect")
+        .context("--connect ADDR is required (a server started with --trace-sample)")?;
+    let out = args
+        .opt_str("out")
+        .context("--out PATH is required (where the Chrome trace JSON goes)")?;
+    let n = args.opt_usize("n")?.unwrap_or(4096);
+    args.finish()?;
+    anyhow::ensure!(n >= 1, "--n must be >= 1 (the server returns its newest N spans)");
+
+    let (text, spans) = net::Client::connect(&connect)?
+        .obs_scrape(n)
+        .with_context(|| format!("scraping {connect}"))?;
+    std::fs::write(&out, crate::obs::export::chrome_trace_json(&spans))
+        .with_context(|| format!("writing trace file {out}"))?;
+    println!("wrote {out}: {} span(s) from {connect}", spans.len());
+    let stages = crate::obs::export::parse_stage_totals(&text);
+    if stages.is_empty() {
+        eprintln!(
+            "note: scrape has no stage totals — is the server running with --trace-sample 0?"
+        );
+    } else {
+        for (stage, ns, count) in &stages {
+            let mean_us = *ns as f64 / 1e3 / (*count).max(1) as f64;
+            println!("  {stage:<12} {count:>8} span(s)  mean {mean_us:>9.1} us");
+        }
+    }
     Ok(())
 }
 

@@ -19,6 +19,7 @@
 //!                 [--replicas R] (--dataset NAME | --program prog.json)
 //! dt2cam loadgen  --connect 127.0.0.1:7230 --dataset NAME [--clients N]
 //!                 [--rps R] [--requests N] [--tag NAME] [--quick] [--shutdown]
+//! dt2cam trace    --connect 127.0.0.1:7230 --out spans.json [--n N]
 //! dt2cam check    (--program prog.json | --dataset NAME [--forest N])
 //!                 [--deny warnings] [--json report.json]
 //! dt2cam backends
@@ -53,6 +54,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "worker" => commands::worker(&mut args),
         "router" => commands::router(&mut args),
         "loadgen" => commands::loadgen(&mut args),
+        "trace" => commands::trace(&mut args),
         "check" => commands::check(&mut args),
         "backends" => commands::backends(&mut args),
         "report" => commands::report(&mut args),
@@ -79,12 +81,16 @@ USAGE:
   dt2cam serve    --program PROGRAM.json [--engine ENGINE] [--batch B]
   dt2cam serve    --listen ADDR [--admission N] (--dataset NAME | --program P.json)
                   [--engine ENGINE] [--batch B] [--forest N] [--pipelined]
+                  [--trace-sample N [--trace-out SPANS.json]]
   dt2cam worker   --listen ADDR --banks LIST (--dataset NAME | --program P.json)
                   [--engine ENGINE] [--batch B] [--admission N]
+                  [--trace-sample N [--trace-out SPANS.json]]
   dt2cam router   --listen ADDR --workers ADDR,ADDR,... [--replicas R]
                   (--dataset NAME | --program P.json) [--batch B] [--admission N]
+                  [--trace-sample N [--trace-out SPANS.json]]
   dt2cam loadgen  --connect ADDR[,ADDR...] --dataset NAME [--clients N] [--rps R]
                   [--requests N] [--seed SEED] [--tag NAME] [--quick] [--shutdown]
+  dt2cam trace    --connect ADDR --out SPANS.json [--n N]
   dt2cam check    (--program PROGRAM.json | --dataset NAME [--tile-size S]
                   [--forest N] [--sample-fraction F] [--max-features K]
                   [--seed SEED]) [--deny warnings] [--json REPORT.json]
@@ -132,5 +138,18 @@ votes by the normative majority rule — classes and modeled energy are
 bit-identical to single-process `serve`. Clients dial the router with
 the unchanged protocol. Router and workers must load the same program
 (share a `compile --save` artifact, or identical --dataset/--forest
-flags — training is deterministic).
+flags — training is deterministic). Workers advertise the loaded
+program's identity over health probes and the router refuses a
+mismatched (wrong or stale) artifact at dial time.
+`--trace-sample N` traces every Nth admitted request end to end
+(admission → queue → dispatch → bank match / pipeline stages → remote
+round-trip → vote → respond) into a bounded in-memory span ring;
+0 (default) disables tracing at near-zero overhead. `dt2cam trace`
+scrapes a live tracing server and writes the spans as Chrome
+trace-event JSON (chrome://tracing, ui.perfetto.dev); `--trace-out`
+writes the same file from the server itself at shutdown. All servers
+answer metric scrapes in Prometheus text format over the wire
+(`loadgen` prints the per-stage time breakdown from it after a run),
+and percentiles aggregate across the cluster by exact histogram-bucket
+merging. See docs/API.md § Observability.
 ";

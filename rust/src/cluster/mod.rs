@@ -43,6 +43,6 @@ pub mod router;
 pub mod worker;
 
 pub use placement::{parse_bank_list, parse_worker_list, Placement};
-pub use remote::{RemoteDispatch, DEAD_RETRY_BACKOFF, WORKER_REPLY_TIMEOUT};
+pub use remote::{ProgramIdentity, RemoteDispatch, DEAD_RETRY_BACKOFF, WORKER_REPLY_TIMEOUT};
 pub use router::{router_coordinator, spawn_router};
 pub use worker::{spawn_worker, worker_coordinator};

@@ -31,10 +31,28 @@ pub const WORKER_REPLY_TIMEOUT: Duration = Duration::from_secs(30);
 /// down worker without writing it off forever).
 pub const DEAD_RETRY_BACKOFF: Duration = Duration::from_millis(250);
 
+/// The program identity a router expects every worker to advertise:
+/// same artifact format, same full-program bank count, same physical
+/// row count. A worker whose [`Frame::Health`] reply disagrees is
+/// refused at dial time — it loaded a wrong or stale artifact, and
+/// letting it serve would silently corrupt votes. A pre-identity
+/// worker (empty format string) passes: it cannot be checked.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramIdentity {
+    /// Artifact format tag (`crate::api::program::MAPPED_FORMAT`).
+    pub format: String,
+    /// Bank count of the full program.
+    pub banks: usize,
+    /// Physical row count of the full program.
+    pub rows_physical: u64,
+}
+
 struct WorkerLink {
     addr: String,
     /// Global bank ids placed on this worker (ascending).
     banks: Vec<usize>,
+    /// Program identity the worker must advertise (`None` = unchecked).
+    expect: Option<ProgramIdentity>,
     /// Live connection; `None` while the worker is considered dead.
     client: Option<Client>,
     /// Earliest instant a revival dial may be attempted.
@@ -45,17 +63,37 @@ struct WorkerLink {
 }
 
 impl WorkerLink {
-    /// Dial and verify the worker serves every bank placed on it.
-    fn dial(addr: &str, banks: &[usize]) -> Result<Client> {
+    /// Dial and verify the worker serves every bank placed on it and
+    /// loaded the expected program.
+    fn dial(addr: &str, banks: &[usize], expect: Option<&ProgramIdentity>) -> Result<Client> {
         let mut client =
             Client::connect(addr).with_context(|| format!("dialing worker {addr}"))?;
-        let (served, _) = client
+        let health = client
             .health()
             .map_err(|e| anyhow::anyhow!("health probe of worker {addr}: {e}"))?;
         for &b in banks {
             anyhow::ensure!(
-                served.contains(&b),
-                "worker {addr} serves banks {served:?} but placement assigns it bank {b}"
+                health.banks.contains(&b),
+                "worker {addr} serves banks {:?} but placement assigns it bank {b}",
+                health.banks
+            );
+        }
+        // An empty format means the worker predates program identity —
+        // nothing to check against.
+        if let Some(want) = expect.filter(|_| !health.format.is_empty()) {
+            anyhow::ensure!(
+                health.format == want.format
+                    && health.program_banks == want.banks
+                    && health.rows_physical == want.rows_physical,
+                "worker {addr} loaded a different program: advertises \
+                 {}/{} banks/{} physical rows, router expects {}/{}/{} — \
+                 wrong or stale artifact",
+                health.format,
+                health.program_banks,
+                health.rows_physical,
+                want.format,
+                want.banks,
+                want.rows_physical
             );
         }
         Ok(client)
@@ -72,7 +110,7 @@ impl WorkerLink {
         if self.client.is_none() {
             match self.retry_at {
                 Some(t) if Instant::now() < t => return None,
-                _ => match WorkerLink::dial(&self.addr, &self.banks) {
+                _ => match WorkerLink::dial(&self.addr, &self.banks, self.expect.as_ref()) {
                     Ok(c) => {
                         self.client = Some(c);
                         self.retry_at = None;
@@ -100,19 +138,33 @@ pub struct RemoteDispatch {
 impl RemoteDispatch {
     /// Dial the fleet. Individual workers may be down at construction
     /// (they get the usual retry gate), but every bank must have at
-    /// least one live owner or the router refuses to start.
-    pub fn connect(placement: &Placement) -> Result<RemoteDispatch> {
+    /// least one live owner or the router refuses to start. With
+    /// `expect`, every dial (initial and revival) verifies the worker
+    /// advertises that program identity; a worker that answers with a
+    /// different one fails its dial loudly rather than serve stale
+    /// banks.
+    pub fn connect(
+        placement: &Placement,
+        expect: Option<ProgramIdentity>,
+    ) -> Result<RemoteDispatch> {
         let mut links = Vec::with_capacity(placement.n_workers());
+        let mut first_err: Option<anyhow::Error> = None;
         for w in 0..placement.n_workers() {
             let addr = placement.addr(w).to_string();
             let banks = placement.banks_of(w);
-            let (client, retry_at) = match WorkerLink::dial(&addr, &banks) {
+            let (client, retry_at) = match WorkerLink::dial(&addr, &banks, expect.as_ref()) {
                 Ok(c) => (Some(c), None),
-                Err(_) => (None, Some(Instant::now())),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    (None, Some(Instant::now()))
+                }
             };
             links.push(WorkerLink {
                 addr,
                 banks,
+                expect: expect.clone(),
                 client,
                 retry_at,
                 dispatched: 0,
@@ -121,15 +173,18 @@ impl RemoteDispatch {
             });
         }
         for b in 0..placement.n_banks() {
-            anyhow::ensure!(
-                placement.owners(b).iter().any(|&w| links[w].client.is_some()),
-                "bank {b} has no reachable owner (workers {:?})",
-                placement
+            if !placement.owners(b).iter().any(|&w| links[w].client.is_some()) {
+                let owners: Vec<&str> = placement
                     .owners(b)
                     .iter()
                     .map(|&w| links[w].addr.as_str())
-                    .collect::<Vec<_>>()
-            );
+                    .collect();
+                let why = first_err
+                    .as_ref()
+                    .map(|e| format!("; first dial failure: {e:#}"))
+                    .unwrap_or_default();
+                anyhow::bail!("bank {b} has no reachable owner (workers {owners:?}){why}");
+            }
         }
         Ok(RemoteDispatch {
             links,
@@ -152,7 +207,13 @@ impl RemoteDispatch {
     /// (the caller ships every group first, so workers compute
     /// concurrently). Returns the wire id, or `None` when the send
     /// failed and the worker was marked dead.
-    fn send_to_worker(&mut self, w: usize, banks: &[usize], rows: &[Vec<f64>]) -> Option<u64> {
+    fn send_to_worker(
+        &mut self,
+        w: usize,
+        banks: &[usize],
+        rows: &[Vec<f64>],
+        trace: u64,
+    ) -> Option<u64> {
         let id = self.next_wire_id;
         self.next_wire_id += 1;
         let link = &mut self.links[w];
@@ -162,6 +223,7 @@ impl RemoteDispatch {
             id,
             banks: banks.to_vec(),
             rows: rows.to_vec(),
+            trace,
         };
         if client.send_frame(&batch).is_err() {
             link.mark_dead();
@@ -214,7 +276,7 @@ impl RemoteDispatch {
                     break false;
                 }
                 Ok(Frame::Shed { .. }) | Ok(Frame::Response { .. }) | Ok(Frame::Health { .. })
-                | Ok(Frame::Metrics(_)) => continue,
+                | Ok(Frame::Metrics(_)) | Ok(Frame::ObsReport { .. }) => continue,
                 Ok(_) => {
                     link.failed += 1;
                     break false;
@@ -240,7 +302,7 @@ impl RemoteBankDispatch for RemoteDispatch {
         self.n_banks
     }
 
-    fn run_banks(&mut self, rows: &[Vec<f64>]) -> Result<Vec<RemoteBankOutcome>> {
+    fn run_banks(&mut self, rows: &[Vec<f64>], trace: u64) -> Result<Vec<RemoteBankOutcome>> {
         anyhow::ensure!(!rows.is_empty(), "remote dispatch needs at least one row");
         let mut slots: Vec<Option<RemoteBankOutcome>> = (0..self.n_banks).map(|_| None).collect();
         // Workers excluded for the rest of this batch (failed, shed, or
@@ -269,7 +331,7 @@ impl RemoteBankDispatch for RemoteDispatch {
             // bank sets are disjoint evaluate this batch concurrently.
             let sent: Vec<Option<u64>> = groups
                 .iter()
-                .map(|(w, banks)| self.send_to_worker(*w, banks, rows))
+                .map(|(w, banks)| self.send_to_worker(*w, banks, rows, trace))
                 .collect();
             for ((w, banks), id) in groups.iter().zip(sent) {
                 let ok = match id {

@@ -16,12 +16,12 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::api::backend::BankDispatch;
-use crate::api::program::MappedProgram;
+use crate::api::program::{MappedProgram, MAPPED_FORMAT};
 use crate::coordinator::Coordinator;
 use crate::net::{Server, ServerConfig, ServerHandle};
 
 use super::placement::Placement;
-use super::remote::RemoteDispatch;
+use super::remote::{ProgramIdentity, RemoteDispatch};
 
 /// Build the router's coordinator: the full program's bank specs (for
 /// encoders, vote arity, and modeled-cost bookkeeping — the mapped
@@ -38,7 +38,15 @@ pub fn router_coordinator(
         placement.n_banks(),
         mapped.n_banks()
     );
-    let remote = RemoteDispatch::connect(placement)?;
+    // Workers must hold the same artifact the router routes for —
+    // their health replies are checked against this identity at every
+    // dial (initial and revival).
+    let expect = ProgramIdentity {
+        format: MAPPED_FORMAT.to_string(),
+        banks: mapped.n_banks(),
+        rows_physical: mapped.rows_physical(),
+    };
+    let remote = RemoteDispatch::connect(placement, Some(expect))?;
     let dispatch = BankDispatch::Remote(Mutex::new(Box::new(remote)));
     Coordinator::with_banks(dispatch, batch, mapped.bank_specs(), mapped.params.clone())
 }

@@ -34,6 +34,10 @@ pub fn worker_coordinator(
     let dispatch = registry::create_bank_dispatch(engine, opts)?;
     let mut coord = Coordinator::with_banks(dispatch, batch, specs, mapped.params.clone())?;
     coord.set_bank_ids(banks.to_vec())?;
+    // Advertise the *full* program's identity over health probes, not
+    // the subset's — every worker of the same artifact then reports the
+    // same figures, which is exactly what the router checks.
+    coord.set_program_identity(mapped.n_banks(), mapped.rows_physical());
     Ok(coord)
 }
 

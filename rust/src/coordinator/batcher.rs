@@ -15,6 +15,10 @@ pub struct InferenceRequest {
     pub id: u64,
     pub features: Vec<f64>,
     pub arrived: Instant,
+    /// Trace id assigned at admission when this request was sampled for
+    /// tracing; 0 = untraced (the common case — span recording is a
+    /// single branch then).
+    pub trace: u64,
 }
 
 impl InferenceRequest {
@@ -23,6 +27,15 @@ impl InferenceRequest {
             id,
             features,
             arrived: Instant::now(),
+            trace: 0,
+        }
+    }
+
+    /// Same, carrying a sampled trace id (`dt2cam serve --trace-sample`).
+    pub fn traced(id: u64, features: Vec<f64>, trace: u64) -> InferenceRequest {
+        InferenceRequest {
+            trace,
+            ..InferenceRequest::new(id, features)
         }
     }
 }

@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::obs::Histogram;
 use crate::util::stats::{percentile, OnlineStats};
 
 /// Bound on retained end-to-end latency samples: percentiles are
@@ -68,6 +69,14 @@ pub struct Metrics {
     latency_samples: Vec<f64>,
     /// Ring write cursor into `latency_samples`.
     latency_next: usize,
+    /// Mergeable end-to-end latency histogram (ns) over the *whole*
+    /// run (histograms never slide — bucket counts stay exact, which
+    /// is what makes cluster-wide percentile merging exact).
+    pub latency_hist: Histogram,
+    /// Mergeable queue-delay histogram (ns).
+    pub queue_hist: Histogram,
+    /// Real lanes per dispatched batch.
+    pub batch_hist: Histogram,
 }
 
 impl Metrics {
@@ -91,6 +100,7 @@ impl Metrics {
         self.no_match += no_match as u64;
         self.multi_match += multi_match as u64;
         self.batch_wall.push(wall.as_secs_f64());
+        self.batch_hist.record(real_lanes as u64);
     }
 
     /// Count one arrival (at submit; the delay is not yet known).
@@ -117,6 +127,7 @@ impl Metrics {
     /// Record one request's arrival → batch-dispatch wait (at drain).
     pub fn record_queue_delay(&mut self, queue_delay: Duration) {
         self.queue_delay.push(queue_delay.as_secs_f64());
+        self.queue_hist.record(queue_delay.as_nanos() as u64);
     }
 
     /// Record one request's end-to-end latency (arrival → response
@@ -130,6 +141,7 @@ impl Metrics {
             self.latency_samples[self.latency_next] = x;
         }
         self.latency_next = (self.latency_next + 1) % LATENCY_WINDOW;
+        self.latency_hist.record(total.as_nanos() as u64);
     }
 
     /// Retained end-to-end latency samples (bounded by
@@ -299,6 +311,27 @@ mod tests {
         assert!((l.p99 - 0.09901).abs() < 1e-9, "{}", l.p99);
         assert!(l.p50 <= l.p95 && l.p95 <= l.p99);
         assert!(m.summary_line().contains("lat(p50/p95/p99)"));
+    }
+
+    #[test]
+    fn histograms_track_latency_queue_and_batch_size() {
+        let mut m = Metrics::new();
+        m.record_latency(Duration::from_micros(10));
+        m.record_latency(Duration::from_micros(100));
+        m.record_queue_delay(Duration::from_micros(5));
+        m.record_batch(4, 1e-9, 8, 0, 0, Duration::from_micros(50));
+        assert_eq!(m.latency_hist.count(), 2);
+        assert_eq!(m.latency_hist.sum(), 110_000); // ns
+        assert_eq!(m.queue_hist.count(), 1);
+        assert_eq!(m.batch_hist.count(), 1);
+        assert_eq!(m.batch_hist.sum(), 4);
+        // The histogram covers the whole run, not just the sliding
+        // percentile window.
+        for _ in 0..LATENCY_WINDOW {
+            m.record_latency(Duration::from_micros(10));
+        }
+        assert_eq!(m.latency_count(), LATENCY_WINDOW);
+        assert_eq!(m.latency_hist.count() as usize, LATENCY_WINDOW + 2);
     }
 
     #[test]

@@ -34,13 +34,14 @@
 //! the same stages. Nothing in flight is ever silently dropped.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::api::backend::{DivisionMatches, DivisionRequest, MatchBackend};
+use crate::obs::{SpanKind, Tracer};
 use crate::util::rowmask::RowMask;
 
 use super::plan::ServingPlan;
@@ -97,6 +98,9 @@ struct PipeBatch {
     /// First stage failure, if any (the batch passes through untouched
     /// afterwards and surfaces the error in its outcome).
     error: Option<StageError>,
+    /// Representative trace id for the batch (0 = untraced); stage
+    /// threads stamp their spans with it.
+    trace: u64,
 }
 
 /// Result of one pipelined batch for one bank. Mirrors the sequential
@@ -176,6 +180,19 @@ impl StreamingPipeline {
         backend: Arc<dyn MatchBackend + Send + Sync>,
         depth: usize,
     ) -> StreamingPipeline {
+        Self::with_tracer(plans, backend, depth, Arc::new(OnceLock::new()))
+    }
+
+    /// [`StreamingPipeline::new`] with a shared tracer slot: once a
+    /// [`Tracer`] lands in the slot (the coordinator attaches it after
+    /// construction), every stage thread records one
+    /// [`SpanKind::Stage`] span per traced batch it evaluates.
+    pub fn with_tracer(
+        plans: Vec<Arc<ServingPlan>>,
+        backend: Arc<dyn MatchBackend + Send + Sync>,
+        depth: usize,
+        tracer: Arc<OnceLock<Tracer>>,
+    ) -> StreamingPipeline {
         let depth = depth.max(1);
         // The outcome channel is unbounded on purpose: collectors never
         // block, so the pipeline always drains forward and a blocking
@@ -191,6 +208,7 @@ impl StreamingPipeline {
                 let (tx_next, rx_next) = sync_channel::<PipeBatch>(depth);
                 let plan = Arc::clone(plan);
                 let backend = Arc::clone(&backend);
+                let tracer = Arc::clone(&tracer);
                 let rx = prev_rx;
                 let handle = std::thread::Builder::new()
                     .name(format!("dt2cam-pipe-b{bank}-s{d}"))
@@ -199,6 +217,8 @@ impl StreamingPipeline {
                             // An already-poisoned batch passes through
                             // untouched; later batches still evaluate.
                             if batch.error.is_none() {
+                                let tr = if batch.trace != 0 { tracer.get() } else { None };
+                                let s = tr.map(|t| t.now_ns());
                                 if let Err(e) = run_stage(&plan, backend.as_ref(), d, &mut batch) {
                                     batch.error = Some(StageError {
                                         stage: d,
@@ -206,6 +226,16 @@ impl StreamingPipeline {
                                         bank,
                                         message: format!("{e:#}"),
                                     });
+                                }
+                                if let (Some(t), Some(s)) = (tr, s) {
+                                    t.record(
+                                        batch.trace,
+                                        SpanKind::Stage,
+                                        Some(bank),
+                                        Some(d),
+                                        s,
+                                        t.now_ns().saturating_sub(s),
+                                    );
                                 }
                             }
                             if tx_next.send(batch).is_err() {
@@ -298,6 +328,20 @@ impl StreamingPipeline {
         queries: Vec<Vec<bool>>,
         real_lanes: usize,
     ) -> Result<()> {
+        self.feed_traced(bank, seq, queries, real_lanes, 0)
+    }
+
+    /// [`StreamingPipeline::feed`] carrying the batch's representative
+    /// trace id (0 = untraced); the stage threads stamp their spans
+    /// with it.
+    pub fn feed_traced(
+        &self,
+        bank: usize,
+        seq: u64,
+        queries: Vec<Vec<bool>>,
+        real_lanes: usize,
+        trace: u64,
+    ) -> Result<()> {
         let plan = &self.plans[bank];
         anyhow::ensure!(
             real_lanes <= queries.len(),
@@ -321,6 +365,7 @@ impl StreamingPipeline {
             matches: DivisionMatches::new(),
             active_rows: 0,
             error: None,
+            trace,
         };
         if self.heads[bank].send(batch).is_err() {
             bail!("pipeline bank {bank} is no longer accepting batches (stage thread died)");
@@ -552,6 +597,45 @@ mod tests {
             assert_eq!(piped[i].classes, seq.classes, "batch {i}");
             assert_eq!(piped[i].active_row_evals, seq.active_row_evals);
         }
+    }
+
+    #[test]
+    fn traced_batches_record_one_stage_span_per_division() {
+        let (plan, m, lut, _p) = setup("haberman");
+        assert!(plan.n_cwd >= 2);
+        let slot: Arc<OnceLock<Tracer>> = Arc::new(OnceLock::new());
+        let tracer = Tracer::new(1);
+        assert!(slot.set(tracer.clone()).is_ok());
+        let pipe = StreamingPipeline::with_tracer(
+            vec![Arc::clone(&plan)],
+            Arc::new(NativeBackend::new()),
+            1,
+            slot,
+        );
+        let batches = batches_for("haberman", &m, &lut, 32, 8);
+        let n = batches.len();
+        assert!(n >= 2);
+        for (seq, (qs, real)) in batches.into_iter().enumerate() {
+            // Only the first batch is traced — the rest must record
+            // nothing.
+            let trace = if seq == 0 { 42 } else { 0 };
+            pipe.feed_traced(0, seq as u64, qs, real, trace).unwrap();
+        }
+        let mut got = 0;
+        while got < n {
+            match pipe.next_timeout(PIPELINE_DRAIN_TIMEOUT).unwrap() {
+                Some(_) => got += 1,
+                None => panic!("pipeline stalled at {got} outcomes"),
+            }
+        }
+        let spans = tracer.snapshot();
+        assert_eq!(spans.len(), plan.n_cwd, "one stage span per division");
+        assert!(spans
+            .iter()
+            .all(|s| s.kind == SpanKind::Stage && s.trace == 42 && s.bank == 0));
+        let mut divs: Vec<u32> = spans.iter().map(|s| s.division).collect();
+        divs.sort_unstable();
+        assert_eq!(divs, (0..plan.n_cwd as u32).collect::<Vec<_>>());
     }
 
     #[test]

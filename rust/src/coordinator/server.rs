@@ -29,13 +29,15 @@
 //! search concurrently).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::api::backend::{BankDispatch, MatchBackend, RemoteBankOutcome, RemoteWorkerStatus};
+use crate::api::program::MAPPED_FORMAT;
 use crate::api::registry::{self, BackendOptions};
+use crate::obs::{SpanKind, Tracer};
 use crate::cart::vote_survivors;
 use crate::compiler::Lut;
 use crate::config::RunConfig;
@@ -65,6 +67,10 @@ pub struct InferenceResponse {
     /// mode); `class` carries no information then. The socket server
     /// routes such responses as typed error frames.
     pub error: Option<String>,
+    /// Trace id this response answers (copied from the request; 0 =
+    /// untraced). The socket server echoes it in the response frame so
+    /// clients can correlate answers with exported spans.
+    pub trace: u64,
 }
 
 /// One bank's compiled + mapped pieces handed to
@@ -154,6 +160,20 @@ pub struct Coordinator {
     pub metrics: Metrics,
     /// Streaming pipelined execution (None = batch-sequential walk).
     pipeline: Option<PipelineState>,
+    /// Program identity advertised over `Frame::Health` (the format is
+    /// always [`MAPPED_FORMAT`]): bank count and physical rows of the
+    /// *whole program*. Defaults to the locally served figures; a
+    /// cluster worker serving a placement subset overwrites them with
+    /// the full program's ([`Coordinator::set_program_identity`]) so
+    /// the router compares every worker against one expected identity.
+    program_banks: usize,
+    program_rows_physical: u64,
+    /// Tracing slot — empty until the socket server attaches a
+    /// [`Tracer`] (`--trace-sample`). A shared `OnceLock` rather than a
+    /// plain field so the pipeline stage threads (spawned at
+    /// construction, before any attach can happen) observe the
+    /// attachment too.
+    tracer: Arc<OnceLock<Tracer>>,
 }
 
 impl Coordinator {
@@ -299,6 +319,8 @@ impl Coordinator {
         metrics.rows_physical = rows_physical;
         Ok(Coordinator {
             bank_ids: (0..runtimes.len()).collect(),
+            program_banks: runtimes.len(),
+            program_rows_physical: rows_physical,
             banks: runtimes,
             n_classes,
             params,
@@ -308,6 +330,7 @@ impl Coordinator {
             modeled_latency,
             metrics,
             pipeline: None,
+            tracer: Arc::new(OnceLock::new()),
         })
     }
 
@@ -338,7 +361,13 @@ impl Coordinator {
         let (runtimes, n_classes, modeled_latency) =
             Self::build_runtimes(Some(backend.as_ref()), batch, banks, &params)?;
         let plans: Vec<Arc<ServingPlan>> = runtimes.iter().map(|r| Arc::clone(&r.plan)).collect();
-        let stream = StreamingPipeline::new(plans, Arc::clone(&backend), depth);
+        // The tracer slot is created *before* the stage threads spawn
+        // and shared with them, so a tracer attached after construction
+        // (the socket server attaches on its scheduler thread) reaches
+        // the per-division stage spans.
+        let tracer: Arc<OnceLock<Tracer>> = Arc::new(OnceLock::new());
+        let stream =
+            StreamingPipeline::with_tracer(plans, Arc::clone(&backend), depth, Arc::clone(&tracer));
         // The pool fans the per-bank query encoding out; the match work
         // itself is already parallel across banks (each bank's stage
         // threads run concurrently).
@@ -358,6 +387,8 @@ impl Coordinator {
             .fold(f64::INFINITY, f64::min);
         Ok(Coordinator {
             bank_ids: (0..runtimes.len()).collect(),
+            program_banks: runtimes.len(),
+            program_rows_physical: rows_physical,
             banks: runtimes,
             n_classes,
             params,
@@ -372,6 +403,7 @@ impl Coordinator {
                 next_seq: 0,
                 busy_since: None,
             }),
+            tracer,
         })
     }
 
@@ -431,6 +463,52 @@ impl Coordinator {
         );
         self.bank_ids = ids;
         Ok(())
+    }
+
+    /// Attach a tracer (idempotent — the first attach wins). The shared
+    /// slot makes the attachment visible to the pipeline stage threads.
+    pub fn attach_tracer(&self, tracer: Tracer) {
+        let _ = self.tracer.set(tracer);
+    }
+
+    /// The attached tracer, if any.
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.get()
+    }
+
+    /// Program identity `(artifact format, bank count, physical rows)`
+    /// — the triple a serving process advertises over `Frame::Health`
+    /// so a router can detect a worker holding the wrong (or stale)
+    /// program.
+    pub fn identity(&self) -> (&'static str, usize, u64) {
+        (MAPPED_FORMAT, self.program_banks, self.program_rows_physical)
+    }
+
+    /// Overwrite the advertised identity with whole-program figures (a
+    /// cluster worker serves a bank *subset* but must advertise the
+    /// program it was built from, or every subset would look like a
+    /// different program to the router).
+    pub fn set_program_identity(&mut self, banks: usize, rows_physical: u64) {
+        self.program_banks = banks;
+        self.program_rows_physical = rows_physical;
+    }
+
+    /// First sampled trace id in a batch: batch-level spans (dispatch,
+    /// bank match, remote round-trip, vote) are recorded once against a
+    /// representative traced request rather than once per lane. 0 =
+    /// nothing in this batch is traced.
+    fn rep_trace(batch: &[InferenceRequest]) -> u64 {
+        batch.iter().map(|r| r.trace).find(|&t| t != 0).unwrap_or(0)
+    }
+
+    /// The tracer, but only when this batch has something to record —
+    /// keeps fully-untraced batches at a single branch per span site.
+    fn batch_tracer(&self, rep: u64) -> Option<&Tracer> {
+        if rep == 0 {
+            None
+        } else {
+            self.tracer.get()
+        }
     }
 
     /// Per-worker status when this coordinator dispatches banks
@@ -575,6 +653,17 @@ impl Coordinator {
         for r in &batch {
             self.metrics.record_queue_delay(r.arrived.elapsed());
         }
+        let rep = Self::rep_trace(&batch);
+        let tracer = self.batch_tracer(rep).cloned();
+        if let Some(tr) = tracer.as_ref() {
+            // One queue span per traced request — its personal batcher
+            // wait, not the batch representative's.
+            let now = tr.now_ns();
+            for r in batch.iter().filter(|r| r.trace != 0) {
+                let start = tr.ns_at(r.arrived);
+                tr.record(r.trace, SpanKind::Queue, None, None, start, now.saturating_sub(start));
+            }
+        }
 
         // Remote dispatch (cluster router): the raw rows go over the
         // wire — each worker encodes them against its own copy of the
@@ -589,9 +678,21 @@ impl Coordinator {
             let result = remote
                 .lock()
                 .unwrap()
-                .run_banks(&rows)
+                .run_banks(&rows, rep)
                 .and_then(|o| Self::check_remote_outcomes(o, self.banks.len(), real));
             let wall = t0.elapsed();
+            if let Some(tr) = tracer.as_ref() {
+                // One remote span for the whole fan-out: send the bank
+                // batches, wait for every worker's outcomes.
+                tr.record(
+                    rep,
+                    SpanKind::Remote,
+                    None,
+                    None,
+                    tr.ns_at(t0),
+                    wall.as_nanos() as u64,
+                );
+            }
             return Ok(match result {
                 Ok(outcomes) => self.finish_batch(&batch, &outcomes, wall),
                 Err(e) => {
@@ -604,13 +705,21 @@ impl Coordinator {
                             class: None,
                             modeled_latency: self.modeled_latency,
                             error: Some(message.clone()),
+                            trace: r.trace,
                         })
                         .collect()
                 }
             });
         }
 
+        // The dispatch span covers forming the batch for the hardware:
+        // per-bank encode + pad (the launch itself is the bank-match
+        // spans that follow).
+        let enc0 = tracer.as_ref().map(|t| t.now_ns());
         let bank_queries = self.encode_banks(&batch, width);
+        if let (Some(tr), Some(s)) = (tracer.as_ref(), enc0) {
+            tr.record(rep, SpanKind::Dispatch, None, None, s, tr.now_ns().saturating_sub(s));
+        }
 
         let t0 = Instant::now();
         let outcomes: Vec<BatchOutcome> = match (&self.pool, &self.dispatch) {
@@ -619,20 +728,47 @@ impl Coordinator {
                 // backend is shared (&self), scratch is per-bank.
                 let banks = &self.banks;
                 let params = &self.params;
+                let tr = tracer.as_ref();
                 let backend: &(dyn MatchBackend + Send + Sync) = backend.as_ref();
                 pool.scoped_map(banks.len(), |b| {
-                    Self::run_bank(&banks[b], params, backend, &bank_queries[b], real)
+                    let s = tr.map(|t| t.now_ns());
+                    let out = Self::run_bank(&banks[b], params, backend, &bank_queries[b], real);
+                    if let (Some(t), Some(s)) = (tr, s) {
+                        t.record(
+                            rep,
+                            SpanKind::BankMatch,
+                            Some(b),
+                            None,
+                            s,
+                            t.now_ns().saturating_sub(s),
+                        );
+                    }
+                    out
                 })
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
             }
             _ => {
                 let backend = self.dispatch.backend().expect("local dispatch");
+                let tr = tracer.as_ref();
                 self.banks
                     .iter()
                     .enumerate()
                     .map(|(b, bank)| {
-                        Self::run_bank(bank, &self.params, backend, &bank_queries[b], real)
+                        let s = tr.map(|t| t.now_ns());
+                        let out =
+                            Self::run_bank(bank, &self.params, backend, &bank_queries[b], real);
+                        if let (Some(t), Some(s)) = (tr, s) {
+                            t.record(
+                                rep,
+                                SpanKind::BankMatch,
+                                Some(b),
+                                None,
+                                s,
+                                t.now_ns().saturating_sub(s),
+                            );
+                        }
+                        out
                     })
                     .collect::<Result<Vec<_>>>()?
             }
@@ -695,6 +831,9 @@ impl Coordinator {
         wall: Duration,
     ) -> Vec<InferenceResponse> {
         let real = batch.len();
+        let rep = Self::rep_trace(batch);
+        let tracer = self.batch_tracer(rep).cloned();
+        let vote0 = tracer.as_ref().map(|t| t.now_ns());
         // Combine survivors with the normative forest rule
         // (`cart::vote_survivors`: silent banks cast no vote, ties →
         // lowest class id, no votes at all → no-match).
@@ -711,6 +850,9 @@ impl Coordinator {
                 no_match += 1;
             }
             classes.push(c);
+        }
+        if let (Some(tr), Some(s)) = (tracer.as_ref(), vote0) {
+            tr.record(rep, SpanKind::Vote, None, None, s, tr.now_ns().saturating_sub(s));
         }
 
         // Roll up the hardware cost: energy and row activity sum over
@@ -747,6 +889,7 @@ impl Coordinator {
                 class,
                 modeled_latency: self.modeled_latency,
                 error: None,
+                trace: req.trace,
             })
             .collect()
     }
@@ -761,11 +904,15 @@ impl Coordinator {
     /// are therefore bit-identical to the single-process walk of the
     /// same batch. No vote happens here: the router joins. Metrics are
     /// recorded at bank granularity (`no_match`/`multi_match` sum over
-    /// the *served banks*, not over joined votes).
+    /// the *served banks*, not over joined votes). `trace` is the
+    /// router's representative trace id for the batch (0 = untraced) —
+    /// the worker's bank-match spans are stamped with it so a scrape of
+    /// the worker correlates with the router's remote span.
     pub fn run_bank_batch(
         &mut self,
         banks: &[usize],
         rows: &[Vec<f64>],
+        trace: u64,
     ) -> Result<Vec<RemoteBankOutcome>> {
         anyhow::ensure!(!banks.is_empty(), "bank batch names no banks");
         anyhow::ensure!(!rows.is_empty(), "bank batch carries no rows");
@@ -791,6 +938,7 @@ impl Coordinator {
         let real = rows.len();
         let row_refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
         self.metrics.requests += real as u64;
+        let tracer = self.batch_tracer(trace).cloned();
         let t0 = Instant::now();
         let outcomes: Vec<BatchOutcome> = match (&self.pool, &self.dispatch) {
             (Some(pool), BankDispatch::Parallel(backend)) if locals.len() > 1 => {
@@ -799,10 +947,26 @@ impl Coordinator {
                 let backend: &(dyn MatchBackend + Send + Sync) = backend.as_ref();
                 let locals = &locals;
                 let row_refs = &row_refs;
+                let tr = tracer.as_ref();
+                let bank_ids = &self.bank_ids;
                 pool.scoped_map(locals.len(), |k| {
                     let b = locals[k];
+                    let s = tr.map(|t| t.now_ns());
                     let queries = Self::encode_bank_rows(&banks_rt[b], row_refs, real);
-                    Self::run_bank(&banks_rt[b], params, backend, &queries, real)
+                    let out = Self::run_bank(&banks_rt[b], params, backend, &queries, real);
+                    if let (Some(t), Some(s)) = (tr, s) {
+                        // Stamped with the *global* bank id — that is
+                        // the id the router's spans speak.
+                        t.record(
+                            trace,
+                            SpanKind::BankMatch,
+                            Some(bank_ids[b]),
+                            None,
+                            s,
+                            t.now_ns().saturating_sub(s),
+                        );
+                    }
+                    out
                 })
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
@@ -812,11 +976,25 @@ impl Coordinator {
                     .dispatch
                     .backend()
                     .context("a remote-dispatch coordinator cannot serve bank batches")?;
+                let tr = tracer.as_ref();
                 locals
                     .iter()
                     .map(|&b| {
+                        let s = tr.map(|t| t.now_ns());
                         let queries = Self::encode_bank_rows(&self.banks[b], &row_refs, real);
-                        Self::run_bank(&self.banks[b], &self.params, backend, &queries, real)
+                        let out =
+                            Self::run_bank(&self.banks[b], &self.params, backend, &queries, real);
+                        if let (Some(t), Some(s)) = (tr, s) {
+                            t.record(
+                                trace,
+                                SpanKind::BankMatch,
+                                Some(self.bank_ids[b]),
+                                None,
+                                s,
+                                t.now_ns().saturating_sub(s),
+                            );
+                        }
+                        out
                     })
                     .collect::<Result<Vec<_>>>()?
             }
@@ -906,6 +1084,19 @@ impl Coordinator {
         for r in &batch {
             self.metrics.record_queue_delay(r.arrived.elapsed());
         }
+        let rep = Self::rep_trace(&batch);
+        let tracer = self.batch_tracer(rep).cloned();
+        if let Some(tr) = tracer.as_ref() {
+            let now = tr.now_ns();
+            for r in batch.iter().filter(|r| r.trace != 0) {
+                let start = tr.ns_at(r.arrived);
+                tr.record(r.trace, SpanKind::Queue, None, None, start, now.saturating_sub(start));
+            }
+        }
+        // The dispatch span covers encode + feed: a blocking feed means
+        // the pipeline applied backpressure, and that wait is honest
+        // dispatch time.
+        let enc0 = tracer.as_ref().map(|t| t.now_ns());
         let bank_queries = self.encode_banks(&batch, width);
         let n_banks = self.banks.len();
         let state = self.pipeline.as_mut().expect("pipelined mode");
@@ -923,7 +1114,10 @@ impl Coordinator {
         );
         let state = self.pipeline.as_ref().expect("pipelined mode");
         for (b, queries) in bank_queries.into_iter().enumerate() {
-            state.stream.feed(b, seq, queries, real)?;
+            state.stream.feed_traced(b, seq, queries, real, rep)?;
+        }
+        if let (Some(tr), Some(s)) = (tracer.as_ref(), enc0) {
+            tr.record(rep, SpanKind::Dispatch, None, None, s, tr.now_ns().saturating_sub(s));
         }
         Ok(())
     }
@@ -967,10 +1161,14 @@ impl Coordinator {
                 class: None,
                 modeled_latency: self.modeled_latency,
                 error: Some(message.clone()),
+                trace: r.trace,
             }));
             return;
         }
 
+        let rep = Self::rep_trace(&entry.reqs);
+        let tracer = self.batch_tracer(rep).cloned();
+        let vote0 = tracer.as_ref().map(|t| t.now_ns());
         // Combine survivors with the normative forest rule — identical
         // to the sequential path (`outcomes` is in bank order).
         let mut classes = Vec::with_capacity(real);
@@ -986,6 +1184,9 @@ impl Coordinator {
                 no_match += 1;
             }
             classes.push(c);
+        }
+        if let (Some(tr), Some(s)) = (tracer.as_ref(), vote0) {
+            tr.record(rep, SpanKind::Vote, None, None, s, tr.now_ns().saturating_sub(s));
         }
 
         let modeled_energy: f64 = outcomes.iter().map(|o| o.modeled_energy).sum();
@@ -1015,6 +1216,7 @@ impl Coordinator {
                 class,
                 modeled_latency: self.modeled_latency,
                 error: None,
+                trace: req.trace,
             }
         }));
     }
@@ -1477,6 +1679,68 @@ mod tests {
         assert_eq!(resp[0].id, 99);
         assert!(resp[0].error.is_none());
         assert_eq!(piped.in_flight(), 0);
+    }
+
+    #[test]
+    fn attached_tracer_records_batch_spans_for_traced_requests() {
+        use crate::obs::SpanKind as K;
+        let (mut coord, txs, _) = build(EngineKind::Native, "iris", 16);
+        let (format, banks, rows) = coord.identity();
+        assert_eq!(format, "dt2cam-mapped-program");
+        assert_eq!(banks, 1);
+        assert!(rows > 0);
+        let tracer = crate::obs::Tracer::new(1);
+        coord.attach_tracer(tracer.clone());
+        for (i, x) in txs.iter().take(3).enumerate() {
+            let t = tracer.admit();
+            assert_ne!(t, 0, "sample divisor 1 traces everything");
+            coord.submit(InferenceRequest::traced(i as u64, x.clone(), t));
+        }
+        let resp = coord.poll(true).unwrap();
+        assert_eq!(resp.len(), 3);
+        assert!(resp.iter().all(|r| r.trace != 0), "responses echo the trace id");
+        let spans = tracer.snapshot();
+        let count = |k: K| spans.iter().filter(|s| s.kind == k).count();
+        // One batch: a queue span per request, one dispatch, one bank
+        // match (single bank), one vote.
+        assert_eq!(count(K::Queue), 3);
+        assert_eq!(count(K::Dispatch), 1);
+        assert_eq!(count(K::BankMatch), 1);
+        assert_eq!(count(K::Vote), 1);
+        assert!(spans
+            .iter()
+            .filter(|s| s.kind == K::BankMatch)
+            .all(|s| s.bank == 0));
+        // Untraced serving records nothing more once the ring is read.
+        let before = tracer.snapshot().len();
+        coord.submit(InferenceRequest::new(99, txs[0].clone()));
+        let _ = coord.poll(true).unwrap();
+        assert_eq!(tracer.snapshot().len(), before);
+    }
+
+    #[test]
+    fn pipelined_tracer_records_one_stage_span_per_bank_division() {
+        use crate::obs::SpanKind as K;
+        let (mut coord, txs) = build_forest_pipelined(2);
+        let tracer = crate::obs::Tracer::new(1);
+        coord.attach_tracer(tracer.clone());
+        let t = tracer.admit();
+        coord.submit(InferenceRequest::traced(0, txs[0].clone(), t));
+        let resp = coord.poll(true).unwrap();
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].trace, t);
+        let spans = tracer.snapshot();
+        let stages: Vec<_> = spans.iter().filter(|s| s.kind == K::Stage).collect();
+        let expected: usize = coord.bank_plans().map(|p| p.n_cwd).sum();
+        assert_eq!(stages.len(), expected, "one stage span per (bank, division)");
+        assert!(stages.iter().all(|s| s.trace == t));
+        // Every (bank, division) pair appears exactly once.
+        let mut keys: Vec<(u32, u32)> = stages.iter().map(|s| (s.bank, s.division)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), expected);
+        assert_eq!(spans.iter().filter(|s| s.kind == K::Vote).count(), 1);
+        assert_eq!(spans.iter().filter(|s| s.kind == K::Dispatch).count(), 1);
     }
 
     #[test]

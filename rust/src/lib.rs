@@ -60,7 +60,11 @@
 //! --listen ADDR` / `dt2cam loadgen --connect ADDR`. The [`cluster`]
 //! module shards one forest's banks across N worker processes behind a
 //! frontend router speaking the same protocol (`dt2cam worker` /
-//! `dt2cam router`), bit-identical to single-process serving.
+//! `dt2cam router`), bit-identical to single-process serving. The
+//! [`obs`] module is the observability plane: exactly-mergeable log2
+//! histograms (cluster percentiles are exact to bucket resolution),
+//! sampled per-request tracing with a bounded span ring (`--trace-sample
+//! N`, `dt2cam trace`), and Prometheus-style / Chrome-trace export.
 //!
 //! Entry points: the `dt2cam` binary (see [`cli`]), the examples under
 //! `examples/`, and the benches under `rust/benches/` (one per paper table
@@ -89,6 +93,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod net;
 pub mod nonideal;
+pub mod obs;
 pub mod opt;
 pub mod report;
 pub mod runtime;

@@ -7,6 +7,8 @@ use std::time::Duration;
 
 use thiserror::Error;
 
+use crate::obs::Span;
+
 use super::protocol::{read_frame, write_frame, Frame, FrameError, MetricsSnapshot};
 
 /// How long [`Client::metrics`] waits for the snapshot frame. The
@@ -61,6 +63,28 @@ impl ClientError {
             _ => false,
         }
     }
+}
+
+/// What a serving process says about itself in a [`Frame::Health`]
+/// reply: which banks it serves, how loaded it is, how long it has
+/// been up, and the identity of the program it loaded. The identity
+/// fields are empty/zero when the peer predates program identity —
+/// callers skip identity checks then.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthInfo {
+    /// Global bank ids this process serves (ascending).
+    pub banks: Vec<usize>,
+    /// Requests admitted but not yet answered.
+    pub in_flight: u64,
+    /// Whole seconds since the process started serving.
+    pub uptime_s: u64,
+    /// Artifact format tag of the loaded program
+    /// ([`crate::api::program::MAPPED_FORMAT`] on current peers).
+    pub format: String,
+    /// Bank count of the *full* program (not just the banks served).
+    pub program_banks: usize,
+    /// Physical row count of the full program.
+    pub rows_physical: u64,
 }
 
 /// A blocking request/response client over one TCP connection.
@@ -199,7 +223,8 @@ impl Client {
                 Ok(Frame::Response { .. })
                 | Ok(Frame::Shed { .. })
                 | Ok(Frame::BankOutcomes { .. })
-                | Ok(Frame::Health { .. }) => continue,
+                | Ok(Frame::Health { .. })
+                | Ok(Frame::ObsReport { .. }) => continue,
                 Ok(Frame::Error { id, message }) => {
                     return Err(ClientError::Server { id, message })
                 }
@@ -208,16 +233,17 @@ impl Client {
         }
     }
 
-    /// Ask a worker which banks it serves and how loaded it is (the
-    /// cluster router's liveness probe). Bounded like [`Client::metrics`].
-    pub fn health(&mut self) -> Result<(Vec<usize>, u64), ClientError> {
+    /// Ask a serving process which banks it serves, how loaded it is,
+    /// and what program it loaded (the cluster router's liveness and
+    /// identity probe). Bounded like [`Client::metrics`].
+    pub fn health(&mut self) -> Result<HealthInfo, ClientError> {
         self.stream.set_read_timeout(Some(METRICS_TIMEOUT))?;
         let result = self.health_inner();
         let _ = self.stream.set_read_timeout(None);
         result
     }
 
-    fn health_inner(&mut self) -> Result<(Vec<usize>, u64), ClientError> {
+    fn health_inner(&mut self) -> Result<HealthInfo, ClientError> {
         write_frame(&mut self.stream, &Frame::HealthRequest)?;
         loop {
             match read_frame(&mut self.stream) {
@@ -230,11 +256,72 @@ impl Client {
                     return Err(ClientError::Timeout)
                 }
                 Err(e) => return Err(e.into()),
-                Ok(Frame::Health { banks, in_flight }) => return Ok((banks, in_flight)),
+                Ok(Frame::Health {
+                    banks,
+                    in_flight,
+                    uptime_s,
+                    format,
+                    program_banks,
+                    rows_physical,
+                }) => {
+                    return Ok(HealthInfo {
+                        banks,
+                        in_flight,
+                        uptime_s,
+                        format,
+                        program_banks,
+                        rows_physical,
+                    })
+                }
                 // Late answers to earlier traffic on this connection.
                 Ok(Frame::Response { .. })
                 | Ok(Frame::Shed { .. })
-                | Ok(Frame::BankOutcomes { .. }) => continue,
+                | Ok(Frame::BankOutcomes { .. })
+                | Ok(Frame::ObsReport { .. }) => continue,
+                Ok(Frame::Error { id, message }) => {
+                    return Err(ClientError::Server { id, message })
+                }
+                Ok(other) => return Err(ClientError::Unexpected(format!("{other:?}"))),
+            }
+        }
+    }
+
+    /// Scrape the server's Prometheus-style exposition text plus up to
+    /// `spans_max` recent trace spans (0 = text only). Bounded like
+    /// [`Client::metrics`].
+    pub fn obs_scrape(
+        &mut self,
+        spans_max: usize,
+    ) -> Result<(String, Vec<Span>), ClientError> {
+        self.stream.set_read_timeout(Some(METRICS_TIMEOUT))?;
+        let result = self.obs_scrape_inner(spans_max);
+        let _ = self.stream.set_read_timeout(None);
+        result
+    }
+
+    fn obs_scrape_inner(
+        &mut self,
+        spans_max: usize,
+    ) -> Result<(String, Vec<Span>), ClientError> {
+        write_frame(&mut self.stream, &Frame::ObsScrape { spans_max })?;
+        loop {
+            match read_frame(&mut self.stream) {
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(ClientError::Timeout)
+                }
+                Err(e) => return Err(e.into()),
+                Ok(Frame::ObsReport { text, spans }) => return Ok((text, spans)),
+                // Late answers to earlier traffic on this connection.
+                Ok(Frame::Response { .. })
+                | Ok(Frame::Shed { .. })
+                | Ok(Frame::BankOutcomes { .. })
+                | Ok(Frame::Health { .. })
+                | Ok(Frame::Metrics(_)) => continue,
                 Ok(Frame::Error { id, message }) => {
                     return Err(ClientError::Server { id, message })
                 }

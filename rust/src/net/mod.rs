@@ -39,7 +39,7 @@ pub mod loadgen;
 pub mod protocol;
 pub mod server;
 
-pub use client::{Client, ClientError};
+pub use client::{Client, ClientError, HealthInfo};
 pub use loadgen::{closed_loop, closed_loop_multi, open_loop, open_loop_multi, LoadReport};
 pub use protocol::{
     encode_frame, read_frame, write_frame, Frame, FrameError, MetricsSnapshot, WorkerMetrics,

@@ -40,6 +40,7 @@ use crate::api::serde::{
     usize_arr,
 };
 use crate::config::json::Json;
+use crate::obs::{Histogram, Span};
 
 /// Wire protocol version carried by every frame.
 pub const PROTOCOL_VERSION: u8 = 1;
@@ -66,6 +67,13 @@ const TYPE_BANK_BATCH: u8 = 8;
 const TYPE_BANK_OUTCOMES: u8 = 9;
 const TYPE_HEALTH_REQUEST: u8 = 10;
 const TYPE_HEALTH: u8 = 11;
+const TYPE_OBS_SCRAPE: u8 = 12;
+const TYPE_OBS_REPORT: u8 = 13;
+
+/// Most spans an [`Frame::ObsReport`] will carry, regardless of what
+/// the scraper asked for — keeps the report safely under
+/// [`MAX_FRAME_LEN`].
+pub const MAX_REPORT_SPANS: usize = 4096;
 
 /// One wire frame.
 #[derive(Clone, Debug, PartialEq)]
@@ -81,6 +89,10 @@ pub enum Frame {
         id: u64,
         class: Option<usize>,
         modeled_latency: f64,
+        /// Trace id assigned at admission when the request was sampled
+        /// (`--trace-sample N`); `None` otherwise. Lets a client
+        /// correlate its answer with the server's span dump.
+        trace: Option<u64>,
     },
     /// Server → client: request `id` was *not* admitted — the bounded
     /// admission queue is full. Explicit backpressure: the client
@@ -105,6 +117,11 @@ pub enum Frame {
         id: u64,
         banks: Vec<usize>,
         rows: Vec<Vec<f64>>,
+        /// Representative trace id of the router's batch (0 = untraced;
+        /// additive — omitted on the wire then, so pre-trace peers are
+        /// byte-identical). The worker stamps its bank-match spans with
+        /// it.
+        trace: u64,
     },
     /// Worker → router: per-bank outcomes for [`Frame::BankBatch`]
     /// `id`, ascending by global bank id, one entry per requested bank.
@@ -116,8 +133,31 @@ pub enum Frame {
     /// you? Also the liveness probe for failover.
     HealthRequest,
     /// Worker → router: the answer — served global bank ids (ascending)
-    /// and currently admitted in-flight requests.
-    Health { banks: Vec<usize>, in_flight: u64 },
+    /// and currently admitted in-flight requests, plus uptime and the
+    /// served program's identity (all additive; a pre-identity peer
+    /// reports zeros/empty and the router skips the identity check).
+    Health {
+        banks: Vec<usize>,
+        in_flight: u64,
+        /// Seconds since the server started.
+        uptime_s: u64,
+        /// Artifact format of the served program (e.g.
+        /// `"dt2cam-mapped-program"`); empty when unknown.
+        format: String,
+        /// Banks in the *whole* served program (not just this worker's
+        /// subset) — a worker serving a different forest disagrees here.
+        program_banks: usize,
+        /// Physical rows of the whole program — a cheap content
+        /// fingerprint that catches stale/re-optimized artifacts.
+        rows_physical: u64,
+    },
+    /// Client → server: scrape the observability plane. `spans_max`
+    /// bounds how many spans ride back (0 = exposition text only);
+    /// clamped server-side to [`MAX_REPORT_SPANS`].
+    ObsScrape { spans_max: usize },
+    /// Server → client: Prometheus-style text exposition plus up to
+    /// `spans_max` spans from the trace ring (oldest first).
+    ObsReport { text: String, spans: Vec<Span> },
 }
 
 /// Typed framing/decoding errors. [`FrameError::is_fatal`] separates
@@ -176,6 +216,11 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// Requests refused with [`Frame::Shed`] (admission queue full).
     pub shed: u64,
+    /// Responses computed but never delivered: the owning connection's
+    /// writer queue was full or the connection was gone. Admitted work
+    /// that produced no visible answer — previously only visible in the
+    /// server-local `ServerReport`.
+    pub dropped: u64,
     /// Connections accepted since the server started.
     pub connections: u64,
     /// Non-fatal protocol errors answered with [`Frame::Error`].
@@ -203,6 +248,14 @@ pub struct MetricsSnapshot {
     /// Physically stored rows after row optimization (shared row blocks
     /// counted once). Equal to `rows_total` for unoptimized programs.
     pub rows_physical: u64,
+    /// End-to-end latency histogram (nanoseconds, fixed log2 schema).
+    /// Merging is bucket-wise addition, so cluster percentiles derived
+    /// from it are exact to bucket resolution — see `obs::hist`.
+    pub latency_hist: Histogram,
+    /// Arrival → batch-dispatch wait histogram (nanoseconds).
+    pub queue_hist: Histogram,
+    /// Real lanes per dispatched hardware batch.
+    pub batch_hist: Histogram,
     /// Per-worker attribution when this snapshot was scraped from a
     /// cluster router; empty on a single-process server or worker.
     pub per_worker: Vec<WorkerMetrics>,
@@ -277,6 +330,7 @@ impl MetricsSnapshot {
             ("decisions", json_u64(self.decisions)),
             ("batches", json_u64(self.batches)),
             ("shed", json_u64(self.shed)),
+            ("dropped", json_u64(self.dropped)),
             ("connections", json_u64(self.connections)),
             ("protocol_errors", json_u64(self.protocol_errors)),
             ("no_match", json_u64(self.no_match)),
@@ -291,6 +345,9 @@ impl MetricsSnapshot {
             ("latency_p99", Json::num(self.latency_p99)),
             ("rows_total", json_u64(self.rows_total)),
             ("rows_physical", json_u64(self.rows_physical)),
+            ("latency_hist", self.latency_hist.to_json()),
+            ("queue_hist", self.queue_hist.to_json()),
+            ("batch_hist", self.batch_hist.to_json()),
             (
                 "per_worker",
                 Json::Arr(self.per_worker.iter().map(WorkerMetrics::to_json).collect()),
@@ -316,11 +373,24 @@ impl MetricsSnapshot {
             None | Some(Json::Null) => 0,
             Some(_) => get_u64(j, "rows_physical")?,
         };
+        // Absent on snapshots from pre-observability servers.
+        let hist = |key: &str| -> anyhow::Result<Histogram> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(Histogram::new()),
+                Some(h) => Histogram::from_json(h)
+                    .map_err(|e| anyhow::anyhow!("field '{key}': {e:#}")),
+            }
+        };
+        let dropped = match j.get("dropped") {
+            None | Some(Json::Null) => 0,
+            Some(_) => get_u64(j, "dropped")?,
+        };
         Ok(MetricsSnapshot {
             requests: get_u64(j, "requests")?,
             decisions: get_u64(j, "decisions")?,
             batches: get_u64(j, "batches")?,
             shed: get_u64(j, "shed")?,
+            dropped,
             connections: get_u64(j, "connections")?,
             protocol_errors: get_u64(j, "protocol_errors")?,
             no_match: get_u64(j, "no_match")?,
@@ -335,20 +405,27 @@ impl MetricsSnapshot {
             latency_p99: get_f64(j, "latency_p99")?,
             rows_total,
             rows_physical,
+            latency_hist: hist("latency_hist")?,
+            queue_hist: hist("queue_hist")?,
+            batch_hist: hist("batch_hist")?,
             per_worker,
         })
     }
 
     /// Merge several worker snapshots into one cluster-wide view.
-    /// Counters sum exactly. `modeled_latency` takes the max (the
-    /// decision waits for its slowest bank). Rate and latency fields
-    /// cannot be merged exactly from percentile summaries — each
-    /// worker's latency ring is gone by scrape time — so means and
-    /// percentiles are combined as **decision-weighted averages**, an
-    /// approximation that is exact when workers are evenly loaded and
-    /// documented as approximate in `docs/API.md`. `wall_throughput`
-    /// sums (workers batch concurrently). `per_worker` is left empty;
-    /// the caller attaches attribution.
+    /// Counters and histograms sum exactly (histogram merge is
+    /// bucket-wise add — see `obs::hist`), `modeled_latency` takes the
+    /// max (the decision waits for its slowest bank), `wall_throughput`
+    /// sums (workers batch concurrently). Latency percentiles are
+    /// derived from the merged latency histogram, so they are exact to
+    /// bucket resolution over the whole cluster; the queue-delay mean
+    /// comes from the merged queue histogram's exact sum/count.
+    /// `energy_per_dec` is a per-decision mean, so its decision-weighted
+    /// combination is exact, not an approximation. Peers that predate
+    /// histograms contribute empty ones; with *no* histogram data at
+    /// all the merged percentiles are 0 (never a fabricated average —
+    /// the old decision-weighted percentile merge is gone).
+    /// `per_worker` is left empty; the caller attaches attribution.
     pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
         let mut out = MetricsSnapshot::default();
         let mut weight = 0.0f64;
@@ -357,6 +434,7 @@ impl MetricsSnapshot {
             out.decisions += p.decisions;
             out.batches += p.batches;
             out.shed += p.shed;
+            out.dropped += p.dropped;
             out.connections += p.connections;
             out.protocol_errors += p.protocol_errors;
             out.no_match += p.no_match;
@@ -366,21 +444,20 @@ impl MetricsSnapshot {
             out.rows_physical += p.rows_physical;
             out.modeled_latency = out.modeled_latency.max(p.modeled_latency);
             out.wall_throughput += p.wall_throughput;
+            out.latency_hist.merge(&p.latency_hist);
+            out.queue_hist.merge(&p.queue_hist);
+            out.batch_hist.merge(&p.batch_hist);
             let w = p.decisions as f64;
             out.energy_per_dec += w * p.energy_per_dec;
-            out.queue_delay_mean += w * p.queue_delay_mean;
-            out.latency_p50 += w * p.latency_p50;
-            out.latency_p95 += w * p.latency_p95;
-            out.latency_p99 += w * p.latency_p99;
             weight += w;
         }
         if weight > 0.0 {
             out.energy_per_dec /= weight;
-            out.queue_delay_mean /= weight;
-            out.latency_p50 /= weight;
-            out.latency_p95 /= weight;
-            out.latency_p99 /= weight;
         }
+        out.queue_delay_mean = out.queue_hist.mean() * 1e-9;
+        out.latency_p50 = out.latency_hist.percentile(50.0) as f64 * 1e-9;
+        out.latency_p95 = out.latency_hist.percentile(95.0) as f64 * 1e-9;
+        out.latency_p99 = out.latency_hist.percentile(99.0) as f64 * 1e-9;
         out
     }
 
@@ -394,13 +471,14 @@ impl MetricsSnapshot {
             String::new()
         };
         format!(
-            "requests={} decisions={} batches={} shed={} conns={} e/dec={:.3} nJ \
+            "requests={} decisions={} batches={} shed={} dropped={} conns={} e/dec={:.3} nJ \
              wall-throughput={:.0} dec/s lat(p50/p95/p99)={:.1}/{:.1}/{:.1} us \
              no_match={} multi_match={} banks={}{rows}",
             self.requests,
             self.decisions,
             self.batches,
             self.shed,
+            self.dropped,
             self.connections,
             self.energy_per_dec * 1e9,
             self.wall_throughput,
@@ -490,14 +568,18 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
             id,
             class,
             modeled_latency,
-        } => (
-            TYPE_RESPONSE,
-            Json::obj(vec![
+            trace,
+        } => {
+            let mut fields = vec![
                 ("id", json_u64(*id)),
                 ("class", class_to_json(*class)),
                 ("modeled_latency", Json::num(*modeled_latency)),
-            ]),
-        ),
+            ];
+            if let Some(t) = trace {
+                fields.push(("trace", json_u64(*t)));
+            }
+            (TYPE_RESPONSE, Json::obj(fields))
+        }
         Frame::Shed { id } => (TYPE_SHED, Json::obj(vec![("id", json_u64(*id))])),
         Frame::Error { id, message } => (
             TYPE_ERROR,
@@ -515,14 +597,22 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
         Frame::MetricsRequest => (TYPE_METRICS_REQUEST, Json::obj(vec![])),
         Frame::Metrics(snapshot) => (TYPE_METRICS, snapshot.to_json()),
         Frame::Shutdown => (TYPE_SHUTDOWN, Json::obj(vec![])),
-        Frame::BankBatch { id, banks, rows } => (
-            TYPE_BANK_BATCH,
-            Json::obj(vec![
+        Frame::BankBatch {
+            id,
+            banks,
+            rows,
+            trace,
+        } => {
+            let mut fields = vec![
                 ("id", json_u64(*id)),
                 ("banks", json_usizes(banks)),
                 ("rows", rows_to_json(rows)),
-            ]),
-        ),
+            ];
+            if *trace != 0 {
+                fields.push(("trace", json_u64(*trace)));
+            }
+            (TYPE_BANK_BATCH, Json::obj(fields))
+        }
         Frame::BankOutcomes { id, outcomes } => (
             TYPE_BANK_OUTCOMES,
             Json::obj(vec![
@@ -534,11 +624,33 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
             ]),
         ),
         Frame::HealthRequest => (TYPE_HEALTH_REQUEST, Json::obj(vec![])),
-        Frame::Health { banks, in_flight } => (
+        Frame::Health {
+            banks,
+            in_flight,
+            uptime_s,
+            format,
+            program_banks,
+            rows_physical,
+        } => (
             TYPE_HEALTH,
             Json::obj(vec![
                 ("banks", json_usizes(banks)),
                 ("in_flight", json_u64(*in_flight)),
+                ("uptime_s", json_u64(*uptime_s)),
+                ("format", Json::str(format.clone())),
+                ("program_banks", Json::num(*program_banks as f64)),
+                ("rows_physical", json_u64(*rows_physical)),
+            ]),
+        ),
+        Frame::ObsScrape { spans_max } => (
+            TYPE_OBS_SCRAPE,
+            Json::obj(vec![("spans_max", Json::num(*spans_max as f64))]),
+        ),
+        Frame::ObsReport { text, spans } => (
+            TYPE_OBS_REPORT,
+            Json::obj(vec![
+                ("text", Json::str(text.clone())),
+                ("spans", Json::Arr(spans.iter().map(Span::to_json).collect())),
             ]),
         ),
     }
@@ -595,10 +707,15 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
                     )
                 })?),
             };
+            let trace = match j.get("trace") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(get_u64(&j, "trace").map_err(payload_err)?),
+            };
             Ok(Frame::Response {
                 id: get_u64(&j, "id").map_err(payload_err)?,
                 class,
                 modeled_latency: get_f64(&j, "modeled_latency").map_err(payload_err)?,
+                trace,
             })
         }
         TYPE_SHED => Ok(Frame::Shed {
@@ -619,11 +736,19 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
             MetricsSnapshot::from_json(&j).map_err(payload_err)?,
         )),
         TYPE_SHUTDOWN => Ok(Frame::Shutdown),
-        TYPE_BANK_BATCH => Ok(Frame::BankBatch {
-            id: get_u64(&j, "id").map_err(payload_err)?,
-            banks: usize_arr(&j, "banks").map_err(payload_err)?,
-            rows: f64_rows(&j, "rows").map_err(payload_err)?,
-        }),
+        TYPE_BANK_BATCH => {
+            // Absent on batches from pre-trace routers.
+            let trace = match j.get("trace") {
+                None | Some(Json::Null) => 0,
+                Some(_) => get_u64(&j, "trace").map_err(payload_err)?,
+            };
+            Ok(Frame::BankBatch {
+                id: get_u64(&j, "id").map_err(payload_err)?,
+                banks: usize_arr(&j, "banks").map_err(payload_err)?,
+                rows: f64_rows(&j, "rows").map_err(payload_err)?,
+                trace,
+            })
+        }
         TYPE_BANK_OUTCOMES => Ok(Frame::BankOutcomes {
             id: get_u64(&j, "id").map_err(payload_err)?,
             outcomes: get_arr(&j, "outcomes")
@@ -634,9 +759,45 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
                 .map_err(payload_err)?,
         }),
         TYPE_HEALTH_REQUEST => Ok(Frame::HealthRequest),
-        TYPE_HEALTH => Ok(Frame::Health {
-            banks: usize_arr(&j, "banks").map_err(payload_err)?,
-            in_flight: get_u64(&j, "in_flight").map_err(payload_err)?,
+        TYPE_HEALTH => {
+            // Identity fields are additive — a pre-identity peer omits
+            // them and the router skips the check.
+            let uptime_s = match j.get("uptime_s") {
+                None | Some(Json::Null) => 0,
+                Some(_) => get_u64(&j, "uptime_s").map_err(payload_err)?,
+            };
+            let format = match j.get("format") {
+                None | Some(Json::Null) => String::new(),
+                Some(_) => get_str(&j, "format").map_err(payload_err)?,
+            };
+            let program_banks = match j.get("program_banks") {
+                None | Some(Json::Null) => 0,
+                Some(_) => get_usize(&j, "program_banks").map_err(payload_err)?,
+            };
+            let rows_physical = match j.get("rows_physical") {
+                None | Some(Json::Null) => 0,
+                Some(_) => get_u64(&j, "rows_physical").map_err(payload_err)?,
+            };
+            Ok(Frame::Health {
+                banks: usize_arr(&j, "banks").map_err(payload_err)?,
+                in_flight: get_u64(&j, "in_flight").map_err(payload_err)?,
+                uptime_s,
+                format,
+                program_banks,
+                rows_physical,
+            })
+        }
+        TYPE_OBS_SCRAPE => Ok(Frame::ObsScrape {
+            spans_max: get_usize(&j, "spans_max").map_err(payload_err)?,
+        }),
+        TYPE_OBS_REPORT => Ok(Frame::ObsReport {
+            text: get_str(&j, "text").map_err(payload_err)?,
+            spans: get_arr(&j, "spans")
+                .map_err(payload_err)?
+                .iter()
+                .map(Span::from_json)
+                .collect::<anyhow::Result<_>>()
+                .map_err(payload_err)?,
         }),
         other => Err(FrameError::UnknownType(other)),
     }
@@ -737,11 +898,13 @@ mod tests {
             id: 7,
             class: Some(2),
             modeled_latency: 1.25e-8,
+            trace: None,
         });
         roundtrip(Frame::Response {
             id: 8,
             class: None,
             modeled_latency: 0.0,
+            trace: Some(42),
         });
         roundtrip(Frame::Shed { id: 9 });
         roundtrip(Frame::Error {
@@ -753,11 +916,15 @@ mod tests {
             message: "no id".into(),
         });
         roundtrip(Frame::MetricsRequest);
+        let mut latency_hist = Histogram::new();
+        latency_hist.record(2100);
+        latency_hist.record(900_000);
         roundtrip(Frame::Metrics(MetricsSnapshot {
             requests: 10,
             decisions: 9,
             batches: 2,
             shed: 1,
+            dropped: 2,
             connections: 3,
             protocol_errors: 0,
             no_match: 0,
@@ -772,6 +939,9 @@ mod tests {
             latency_p99: 0.0051,
             rows_total: 57,
             rows_physical: 41,
+            latency_hist,
+            queue_hist: Histogram::new(),
+            batch_hist: Histogram::new(),
             per_worker: vec![],
         }));
         roundtrip(Frame::Shutdown);
@@ -783,11 +953,13 @@ mod tests {
             id: 41,
             banks: vec![0, 2, 4],
             rows: vec![vec![0.1, -2.5, 30.0], vec![1.0, 0.0, 0.5]],
+            trace: 7,
         });
         roundtrip(Frame::BankBatch {
             id: (1u64 << 53) + 3,
             banks: vec![1],
             rows: vec![vec![]],
+            trace: 0,
         });
         roundtrip(Frame::BankOutcomes {
             id: 41,
@@ -819,7 +991,116 @@ mod tests {
         roundtrip(Frame::Health {
             banks: vec![1, 3, 5, 7],
             in_flight: 6,
+            uptime_s: 300,
+            format: "dt2cam-mapped-program".into(),
+            program_banks: 9,
+            rows_physical: 217,
         });
+        // A pre-trace router's BankBatch (no trace field) must still
+        // decode, as an untraced batch.
+        let payload = br#"{"id":5,"banks":[1],"rows":[[0.5]]}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((payload.len() + 2) as u32).to_be_bytes());
+        buf.push(PROTOCOL_VERSION);
+        buf.push(super::TYPE_BANK_BATCH);
+        buf.extend_from_slice(payload);
+        match read_frame(&mut &buf[..]).unwrap() {
+            Frame::BankBatch {
+                id, banks, trace, ..
+            } => {
+                assert_eq!(id, 5);
+                assert_eq!(banks, vec![1]);
+                assert_eq!(trace, 0);
+            }
+            other => panic!("expected BankBatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn obs_frames_roundtrip_and_old_health_still_parses() {
+        use crate::obs::{SpanKind, NO_INDEX};
+        roundtrip(Frame::ObsScrape { spans_max: 0 });
+        roundtrip(Frame::ObsScrape { spans_max: 4096 });
+        roundtrip(Frame::ObsReport {
+            text: "dt2cam_requests_total 5\n".into(),
+            spans: vec![
+                Span {
+                    trace: 3,
+                    kind: SpanKind::Admission,
+                    bank: NO_INDEX,
+                    division: NO_INDEX,
+                    start_ns: 10,
+                    dur_ns: 2,
+                },
+                Span {
+                    trace: 3,
+                    kind: SpanKind::Stage,
+                    bank: 1,
+                    division: 4,
+                    start_ns: 100,
+                    dur_ns: 50,
+                },
+            ],
+        });
+        roundtrip(Frame::ObsReport {
+            text: String::new(),
+            spans: vec![],
+        });
+        // A pre-identity peer's Health frame (banks + in_flight only)
+        // must still decode, with identity fields defaulted.
+        let payload = br#"{"banks":[0,2],"in_flight":1}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((payload.len() + 2) as u32).to_be_bytes());
+        buf.push(PROTOCOL_VERSION);
+        buf.push(super::TYPE_HEALTH);
+        buf.extend_from_slice(payload);
+        match read_frame(&mut &buf[..]).unwrap() {
+            Frame::Health {
+                banks,
+                in_flight,
+                uptime_s,
+                format,
+                program_banks,
+                rows_physical,
+            } => {
+                assert_eq!(banks, vec![0, 2]);
+                assert_eq!(in_flight, 1);
+                assert_eq!(uptime_s, 0);
+                assert!(format.is_empty());
+                assert_eq!(program_banks, 0);
+                assert_eq!(rows_physical, 0);
+            }
+            other => panic!("expected Health, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn histograms_and_dropped_ride_snapshots_and_old_snapshots_still_parse() {
+        let mut snap = MetricsSnapshot {
+            decisions: 3,
+            dropped: 7,
+            ..Default::default()
+        };
+        for ns in [1_000u64, 2_000_000, 2_100_000] {
+            snap.latency_hist.record(ns);
+        }
+        snap.queue_hist.record(500);
+        snap.batch_hist.record(3);
+        roundtrip(Frame::Metrics(snap.clone()));
+        assert!(snap.summary_line().contains("dropped=7"));
+        // A pre-observability peer omits all four fields.
+        let mut fields = snap.to_json();
+        if let Json::Obj(pairs) = &mut fields {
+            pairs.retain(|(k, _)| {
+                k != "dropped" && k != "latency_hist" && k != "queue_hist" && k != "batch_hist"
+            });
+        }
+        let back = MetricsSnapshot::from_json(&fields).unwrap();
+        assert_eq!(back.dropped, 0);
+        assert!(back.latency_hist.is_empty());
+        assert!(back.queue_hist.is_empty());
+        assert!(back.batch_hist.is_empty());
+        assert_eq!(back.decisions, 3);
     }
 
     #[test]
@@ -887,20 +1168,23 @@ mod tests {
     }
 
     #[test]
-    fn merge_sums_counters_and_weights_latency_by_decisions() {
-        let a = MetricsSnapshot {
+    fn merge_sums_counters_and_derives_percentiles_from_histograms() {
+        let mut a = MetricsSnapshot {
             requests: 30,
             decisions: 30,
             batches: 3,
             shed: 1,
+            dropped: 2,
             n_banks: 5,
             modeled_latency: 2e-8,
             wall_throughput: 100.0,
             energy_per_dec: 1e-9,
-            latency_p50: 0.001,
+            // A stale per-worker percentile must NOT leak into the
+            // merged view — percentiles come from histograms only.
+            latency_p50: 123.0,
             ..Default::default()
         };
-        let b = MetricsSnapshot {
+        let mut b = MetricsSnapshot {
             requests: 10,
             decisions: 10,
             batches: 1,
@@ -908,20 +1192,41 @@ mod tests {
             modeled_latency: 3e-8,
             wall_throughput: 50.0,
             energy_per_dec: 2e-9,
-            latency_p50: 0.005,
+            latency_p50: 456.0,
             ..Default::default()
         };
+        // Shard the same sample set across the two snapshots; the
+        // merged percentiles must equal a pooled histogram's.
+        let mut pooled = Histogram::new();
+        for i in 0..400u64 {
+            let ns = (i + 1) * 10_000; // 10 µs .. 4 ms
+            pooled.record(ns);
+            if i % 3 == 0 {
+                a.latency_hist.record(ns);
+                a.queue_hist.record(ns / 10);
+            } else {
+                b.latency_hist.record(ns);
+                b.queue_hist.record(ns / 10);
+            }
+        }
         let m = MetricsSnapshot::merge(&[a, b]);
         assert_eq!(m.requests, 40);
         assert_eq!(m.decisions, 40);
         assert_eq!(m.batches, 4);
         assert_eq!(m.shed, 1);
+        assert_eq!(m.dropped, 2);
         assert_eq!(m.n_banks, 9);
         assert_eq!(m.modeled_latency, 3e-8);
         assert_eq!(m.wall_throughput, 150.0);
-        // Decision-weighted: (30·1e-9 + 10·2e-9) / 40.
+        // Decision-weighted mean of a per-decision mean is exact:
+        // (30·1e-9 + 10·2e-9) / 40.
         assert!((m.energy_per_dec - 1.25e-9).abs() < 1e-18);
-        assert!((m.latency_p50 - 0.002).abs() < 1e-12);
+        // Exact-to-bucket percentiles from the merged histogram.
+        assert_eq!(m.latency_hist, pooled);
+        assert_eq!(m.latency_p50, pooled.percentile(50.0) as f64 * 1e-9);
+        assert_eq!(m.latency_p99, pooled.percentile(99.0) as f64 * 1e-9);
+        // Queue-delay mean from the merged histogram's exact sum/count.
+        assert!((m.queue_delay_mean - m.queue_hist.mean() * 1e-9).abs() < 1e-15);
         // Degenerate merge of nothing is all-zero, not NaN.
         let z = MetricsSnapshot::merge(&[]);
         assert_eq!(z, MetricsSnapshot::default());

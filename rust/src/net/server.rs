@@ -56,13 +56,17 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
+use crate::obs::export::prometheus_text;
+use crate::obs::{SpanKind, Tracer};
 
-use super::protocol::{read_frame, write_frame, Frame, MetricsSnapshot, WorkerMetrics};
+use super::protocol::{
+    read_frame, write_frame, Frame, MetricsSnapshot, WorkerMetrics, MAX_REPORT_SPANS,
+};
 
 /// Server tunables.
 #[derive(Clone, Debug)]
@@ -74,6 +78,11 @@ pub struct ServerConfig {
     /// keep its 2 ms default). Larger values coalesce more aggressively
     /// across connections at the cost of tail latency.
     pub batch_max_wait: Option<Duration>,
+    /// Trace sampling: every Nth admitted request gets a trace id and
+    /// records spans through the serving path. 0 = tracing off (the
+    /// default) — no tracer is built and the hot path pays one
+    /// `Option` check per request.
+    pub trace_sample: u64,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +90,7 @@ impl Default for ServerConfig {
         ServerConfig {
             admission: 256,
             batch_max_wait: None,
+            trace_sample: 0,
         }
     }
 }
@@ -116,9 +126,14 @@ enum SchedMsg {
         id: u64,
         banks: Vec<usize>,
         rows: Vec<Vec<f64>>,
+        /// The router batch's representative trace id (0 = untraced).
+        trace: u64,
     },
     /// Liveness/placement probe from connection `conn`.
     Health { conn: u64 },
+    /// Observability scrape from connection `conn`: exposition text
+    /// plus up to `spans_max` recent spans.
+    ObsScrape { conn: u64, spans_max: usize },
     Shutdown,
 }
 
@@ -157,6 +172,12 @@ struct Shared {
     /// Minimum feature-vector length a request must carry (set by the
     /// scheduler once the coordinator is built, before accept starts).
     min_features: AtomicUsize,
+    /// When the server started serving (uptime in health replies).
+    start: Instant,
+    /// The server-wide tracer; `None` when `trace_sample` is 0. Readers
+    /// sample admissions through it, the scheduler's coordinator shares
+    /// it (via `attach_tracer`), and scrapes snapshot it.
+    tracer: Option<Tracer>,
     /// global id → response route.
     routes: Mutex<HashMap<u64, Route>>,
     /// connection id → live connection.
@@ -227,6 +248,8 @@ impl Server {
             shutting_down: AtomicBool::new(false),
             next_global: AtomicU64::new(0),
             min_features: AtomicUsize::new(0),
+            start: Instant::now(),
+            tracer: (config.trace_sample > 0).then(|| Tracer::new(config.trace_sample)),
             routes: Mutex::new(HashMap::new()),
             conns: Mutex::new(HashMap::new()),
         });
@@ -252,6 +275,12 @@ impl Server {
                 };
                 if let Some(d) = batch_max_wait {
                     coord.set_batch_max_wait(d);
+                }
+                // Share the server's tracer with the coordinator (and,
+                // through its slot, with pipeline stage threads) so the
+                // whole serving path records into one span ring.
+                if let Some(t) = &sched_shared.tracer {
+                    coord.attach_tracer(t.clone());
                 }
                 sched_shared
                     .min_features
@@ -317,6 +346,13 @@ impl ServerHandle {
     /// Requests shed so far.
     pub fn shed_count(&self) -> u64 {
         self.shared.shed.load(Ordering::Acquire)
+    }
+
+    /// The server's tracer (`None` when `trace_sample` was 0). Cloning
+    /// is cheap — the span ring is shared — so callers can keep one
+    /// handle and dump spans after [`ServerHandle::join`].
+    pub fn tracer(&self) -> Option<Tracer> {
+        self.shared.tracer.clone()
     }
 
     /// Request shutdown and wait for the drain to finish.
@@ -388,7 +424,7 @@ fn serve_loop(coord: &mut Coordinator, rx: &Receiver<SchedMsg>, shared: &Shared)
                 msg @ (SchedMsg::BankBatch { .. } | SchedMsg::Health { .. }) => {
                     let _ = handle(coord, shared, msg);
                 }
-                SchedMsg::Metrics { .. } | SchedMsg::Shutdown => {}
+                SchedMsg::Metrics { .. } | SchedMsg::ObsScrape { .. } | SchedMsg::Shutdown => {}
             }
         }
         let responses = coord.poll(true)?;
@@ -417,10 +453,11 @@ fn handle(coord: &mut Coordinator, shared: &Shared, msg: SchedMsg) -> bool {
             id,
             banks,
             rows,
+            trace,
         } => {
             // A failed bank batch answers typed — never tears down the
             // scheduler (mirrors the per-request stage-error path).
-            let frame = match coord.run_bank_batch(&banks, &rows) {
+            let frame = match coord.run_bank_batch(&banks, &rows, trace) {
                 Ok(outcomes) => Frame::BankOutcomes { id, outcomes },
                 Err(e) => {
                     coord.metrics.stage_errors += 1;
@@ -435,13 +472,41 @@ fn handle(coord: &mut Coordinator, shared: &Shared, msg: SchedMsg) -> bool {
             false
         }
         SchedMsg::Health { conn } => {
+            let (format, program_banks, rows_physical) = coord.identity();
             shared.try_send_to(
                 conn,
                 Frame::Health {
                     banks: coord.bank_ids().to_vec(),
                     in_flight: shared.inflight.load(Ordering::Acquire) as u64,
+                    uptime_s: shared.start.elapsed().as_secs(),
+                    format: format.to_string(),
+                    program_banks,
+                    rows_physical,
                 },
             );
+            false
+        }
+        SchedMsg::ObsScrape { conn, spans_max } => {
+            let snap = snapshot(coord, shared);
+            let text = prometheus_text(
+                &snap,
+                shared.start.elapsed().as_secs(),
+                shared.tracer.as_ref(),
+            );
+            let spans = match &shared.tracer {
+                Some(t) if spans_max > 0 => {
+                    let mut s = t.snapshot();
+                    // Keep the newest spans when clamping (the tail of
+                    // the ring is where the live traffic is).
+                    let cap = spans_max.min(MAX_REPORT_SPANS);
+                    if s.len() > cap {
+                        s.drain(..s.len() - cap);
+                    }
+                    s
+                }
+                _ => Vec::new(),
+            };
+            shared.try_send_to(conn, Frame::ObsReport { text, spans });
             false
         }
         SchedMsg::Shutdown => true,
@@ -462,6 +527,12 @@ fn route(shared: &Shared, responses: Vec<InferenceResponse>) {
         };
         let tx = shared.conns.lock().unwrap().get(&route.conn).map(|h| h.tx.clone());
         if let Some(tx) = tx {
+            // The respond span covers frame construction plus the
+            // handoff to the connection's writer.
+            let span0 = match (&shared.tracer, r.trace) {
+                (Some(t), trace) if trace != 0 => Some((t, trace, t.now_ns())),
+                _ => None,
+            };
             // A served failure (typed pipeline stage error) goes back
             // as an error frame carrying the client's request id; a
             // healthy answer as a response frame.
@@ -474,6 +545,7 @@ fn route(shared: &Shared, responses: Vec<InferenceResponse>) {
                     id: route.client_id,
                     class: r.class,
                     modeled_latency: r.modeled_latency,
+                    trace: (r.trace != 0).then_some(r.trace),
                 },
             };
             // try_send, never block the scheduler on one connection. A
@@ -486,6 +558,16 @@ fn route(shared: &Shared, responses: Vec<InferenceResponse>) {
                 Err(TrySendError::Full(_)) => {
                     shared.dropped_responses.fetch_add(1, Ordering::AcqRel);
                 }
+            }
+            if let Some((t, trace, s)) = span0 {
+                t.record(
+                    trace,
+                    SpanKind::Respond,
+                    None,
+                    None,
+                    s,
+                    t.now_ns().saturating_sub(s),
+                );
             }
         }
         shared.release();
@@ -500,6 +582,7 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
         decisions: m.decisions,
         batches: m.batches,
         shed: shared.shed.load(Ordering::Acquire),
+        dropped: shared.dropped_responses.load(Ordering::Acquire),
         connections: shared.accepted.load(Ordering::Acquire),
         protocol_errors: shared.protocol_errors.load(Ordering::Acquire),
         no_match: m.no_match,
@@ -518,6 +601,9 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
         latency_p99: lat.map_or(0.0, |l| l.p99),
         rows_total: m.rows_total,
         rows_physical: m.rows_physical,
+        latency_hist: m.latency_hist.clone(),
+        queue_hist: m.queue_hist.clone(),
+        batch_hist: m.batch_hist.clone(),
         // A router merges its workers' snapshots into the cluster-wide
         // view and attaches per-worker attribution; a plain server or
         // worker has no remote dispatch and reports itself unchanged.
@@ -547,18 +633,20 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
         .filter_map(|w| w.snapshot.as_deref().cloned())
         .collect();
     // Cluster-wide view: execution-plane fields (bank batches run,
-    // per-bank no/multi-match tallies, summed worker throughput,
-    // decision-weighted worker latencies) come from the worker merge;
-    // client-plane fields are overridden with what only the router's
-    // front door measured — admitted requests, decisions, shed,
-    // connections, protocol errors, end-to-end latency percentiles,
-    // and the served program's modeled energy/latency (the router's
-    // coordinator re-aggregates remote outcomes exactly, where the
-    // worker merge is approximate).
+    // per-bank no/multi-match tallies, summed worker throughput, and —
+    // since the merge became histogram-based — latency/queue
+    // percentiles derived *exactly* from the bucket-wise sum of worker
+    // histograms) come from the worker merge; client-plane counters
+    // are overridden with what only the router's front door measured —
+    // admitted requests, decisions, shed, dropped, connections,
+    // protocol errors, and the served program's modeled energy/latency
+    // (the router's coordinator re-aggregates remote outcomes exactly,
+    // where the worker merge is approximate).
     let mut merged = MetricsSnapshot::merge(&parts);
     merged.requests = snap.requests;
     merged.decisions = snap.decisions;
     merged.shed = snap.shed;
+    merged.dropped = snap.dropped;
     merged.connections = snap.connections;
     merged.protocol_errors = snap.protocol_errors;
     merged.no_match = snap.no_match;
@@ -566,10 +654,6 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
     merged.n_banks = snap.n_banks;
     merged.energy_per_dec = snap.energy_per_dec;
     merged.modeled_latency = snap.modeled_latency;
-    merged.queue_delay_mean = snap.queue_delay_mean;
-    merged.latency_p50 = snap.latency_p50;
-    merged.latency_p95 = snap.latency_p95;
-    merged.latency_p99 = snap.latency_p99;
     // The router's own coordinator already counts every served bank's
     // rows; summing the worker figures on top would double-count.
     merged.rows_total = snap.rows_total;
@@ -717,6 +801,16 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
                     continue;
                 }
                 let gid = shared.next_global.fetch_add(1, Ordering::AcqRel);
+                // Trace ids are allocated at admission; the admission
+                // span covers route registration and the scheduler
+                // handoff. With tracing off this is one `Option` check.
+                let (trace, adm0) = match &shared.tracer {
+                    Some(t) => {
+                        let trace = t.admit();
+                        (trace, (trace != 0).then(|| t.now_ns()))
+                    }
+                    None => (0, None),
+                };
                 shared.routes.lock().unwrap().insert(
                     gid,
                     Route {
@@ -726,10 +820,25 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
                 );
                 // Arrival is stamped here, at the socket — the queue
                 // delay the metrics see includes the admission hop.
-                if tx.send(SchedMsg::Request(InferenceRequest::new(gid, features))).is_err() {
+                if tx
+                    .send(SchedMsg::Request(InferenceRequest::traced(
+                        gid, features, trace,
+                    )))
+                    .is_err()
+                {
                     shared.routes.lock().unwrap().remove(&gid);
                     shared.release();
                     break;
+                }
+                if let (Some(t), Some(s)) = (shared.tracer.as_ref(), adm0) {
+                    t.record(
+                        trace,
+                        SpanKind::Admission,
+                        None,
+                        None,
+                        s,
+                        t.now_ns().saturating_sub(s),
+                    );
                 }
             }
             Ok(Frame::MetricsRequest) => {
@@ -737,7 +846,12 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
                     break;
                 }
             }
-            Ok(Frame::BankBatch { id, banks, rows }) => {
+            Ok(Frame::BankBatch {
+                id,
+                banks,
+                rows,
+                trace,
+            }) => {
                 if shared.shutting_down.load(Ordering::Acquire) {
                     shared.send_to(
                         conn,
@@ -762,6 +876,7 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
                         id,
                         banks,
                         rows,
+                        trace,
                     })
                     .is_err()
                 {
@@ -771,6 +886,11 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
             }
             Ok(Frame::HealthRequest) => {
                 if tx.send(SchedMsg::Health { conn }).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::ObsScrape { spans_max }) => {
+                if tx.send(SchedMsg::ObsScrape { conn, spans_max }).is_err() {
                     break;
                 }
             }

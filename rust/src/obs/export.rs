@@ -1,0 +1,236 @@
+//! Exposition formats: Prometheus-style text and Chrome trace-event JSON.
+//!
+//! Both are *derived* views — the data lives in [`MetricsSnapshot`]
+//! (counters + mergeable histograms) and the [`Tracer`] span ring. The
+//! text form rides the wire in `Frame::ObsReport` and is what `dt2cam
+//! loadgen` parses for its per-stage breakdown; the Chrome form is what
+//! `dt2cam trace --out spans.json` writes (loadable in
+//! `chrome://tracing` / Perfetto).
+
+use crate::net::protocol::MetricsSnapshot;
+use crate::obs::hist::{bucket_upper, Histogram};
+use crate::obs::trace::{Span, Tracer, NO_INDEX};
+use crate::config::json::Json;
+
+use std::fmt::Write as _;
+
+fn counter(out: &mut String, name: &str, v: u64) {
+    let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, v: f64) {
+    let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+}
+
+fn histogram(out: &mut String, name: &str, h: &Histogram) {
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets().iter().enumerate() {
+        cum += c;
+        if c != 0 {
+            let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", bucket_upper(i));
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {}", h.sum());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Render a snapshot (plus optional tracer state) as Prometheus-style
+/// text exposition. Stable line prefixes are a contract: `loadgen`
+/// parses `dt2cam_stage_ns_total` / `dt2cam_stage_count` back out with
+/// [`parse_stage_totals`].
+pub fn prometheus_text(snap: &MetricsSnapshot, uptime_s: u64, tracer: Option<&Tracer>) -> String {
+    let mut out = String::with_capacity(4096);
+    counter(&mut out, "dt2cam_requests_total", snap.requests);
+    counter(&mut out, "dt2cam_decisions_total", snap.decisions);
+    counter(&mut out, "dt2cam_batches_total", snap.batches);
+    counter(&mut out, "dt2cam_shed_total", snap.shed);
+    counter(&mut out, "dt2cam_dropped_responses_total", snap.dropped);
+    counter(&mut out, "dt2cam_protocol_errors_total", snap.protocol_errors);
+    counter(&mut out, "dt2cam_no_match_total", snap.no_match);
+    counter(&mut out, "dt2cam_multi_match_total", snap.multi_match);
+    gauge(&mut out, "dt2cam_connections", snap.connections as f64);
+    gauge(&mut out, "dt2cam_banks", snap.n_banks as f64);
+    gauge(&mut out, "dt2cam_rows_total", snap.rows_total as f64);
+    gauge(&mut out, "dt2cam_rows_physical", snap.rows_physical as f64);
+    gauge(&mut out, "dt2cam_uptime_seconds", uptime_s as f64);
+    // Snapshot latencies are seconds and energy is joules; the gauge
+    // names carry the exported unit, so convert here.
+    gauge(&mut out, "dt2cam_energy_per_decision_nj", snap.energy_per_dec * 1e9);
+    gauge(&mut out, "dt2cam_modeled_latency_us", snap.modeled_latency * 1e6);
+    gauge(&mut out, "dt2cam_wall_throughput_dps", snap.wall_throughput);
+    gauge(&mut out, "dt2cam_queue_delay_mean_us", snap.queue_delay_mean * 1e6);
+    for (q, v) in [
+        ("0.5", snap.latency_p50 * 1e6),
+        ("0.95", snap.latency_p95 * 1e6),
+        ("0.99", snap.latency_p99 * 1e6),
+    ] {
+        let _ = writeln!(out, "dt2cam_latency_us{{quantile=\"{q}\"}} {v}");
+    }
+    histogram(&mut out, "dt2cam_latency_ns", &snap.latency_hist);
+    histogram(&mut out, "dt2cam_queue_delay_ns", &snap.queue_hist);
+    histogram(&mut out, "dt2cam_batch_size", &snap.batch_hist);
+    if let Some(t) = tracer {
+        gauge(&mut out, "dt2cam_trace_sample", t.sample() as f64);
+        counter(&mut out, "dt2cam_trace_spans_dropped_total", t.dropped());
+        let _ = writeln!(out, "# TYPE dt2cam_stage_ns_total counter");
+        let _ = writeln!(out, "# TYPE dt2cam_stage_count counter");
+        for (name, ns, count) in t.stage_totals() {
+            let _ = writeln!(out, "dt2cam_stage_ns_total{{stage=\"{name}\"}} {ns}");
+            let _ = writeln!(out, "dt2cam_stage_count{{stage=\"{name}\"}} {count}");
+        }
+    }
+    out
+}
+
+/// Parse `dt2cam_stage_ns_total`/`dt2cam_stage_count` rows back out of
+/// an exposition text: `(stage, total_ns, count)`, in taxonomy order of
+/// appearance. Tolerant of everything else in the text.
+pub fn parse_stage_totals(text: &str) -> Vec<(String, u64, u64)> {
+    fn labeled(line: &str, prefix: &str) -> Option<(String, u64)> {
+        let rest = line.strip_prefix(prefix)?.strip_prefix("{stage=\"")?;
+        let (stage, rest) = rest.split_once("\"}")?;
+        let v = rest.trim().parse::<u64>().ok()?;
+        Some((stage.to_string(), v))
+    }
+    let mut order: Vec<String> = Vec::new();
+    let mut ns: Vec<(String, u64)> = Vec::new();
+    let mut counts: Vec<(String, u64)> = Vec::new();
+    for line in text.lines() {
+        if let Some((stage, v)) = labeled(line, "dt2cam_stage_ns_total") {
+            if !order.contains(&stage) {
+                order.push(stage.clone());
+            }
+            ns.push((stage, v));
+        } else if let Some((stage, v)) = labeled(line, "dt2cam_stage_count") {
+            counts.push((stage, v));
+        }
+    }
+    order
+        .into_iter()
+        .map(|stage| {
+            let total = ns.iter().find(|(s, _)| *s == stage).map(|&(_, v)| v).unwrap_or(0);
+            let n = counts.iter().find(|(s, _)| *s == stage).map(|&(_, v)| v).unwrap_or(0);
+            (stage, total, n)
+        })
+        .collect()
+}
+
+/// Render spans as Chrome trace-event JSON (the `{"traceEvents": [...]}`
+/// object form). Complete events (`ph: "X"`), timestamps in
+/// microseconds, one `tid` per trace id so each request gets its own
+/// row in the viewer.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            let mut args = vec![("trace", Json::num(s.trace as f64))];
+            if s.bank != NO_INDEX {
+                args.push(("bank", Json::num(s.bank as f64)));
+            }
+            if s.division != NO_INDEX {
+                args.push(("division", Json::num(s.division as f64)));
+            }
+            let name = if s.kind == crate::obs::trace::SpanKind::Stage && s.division != NO_INDEX {
+                format!("stage d{}", s.division)
+            } else {
+                s.kind.as_str().to_string()
+            };
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str("dt2cam")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(s.start_ns as f64 / 1000.0)),
+                ("dur", Json::num((s.dur_ns.max(1)) as f64 / 1000.0)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(s.trace as f64)),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(events))]).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanKind;
+
+    fn snap_with_hist() -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::default();
+        s.requests = 10;
+        s.decisions = 10;
+        s.shed = 1;
+        s.dropped = 2;
+        for v in [100u64, 2000, 30_000] {
+            s.latency_hist.record(v);
+        }
+        s.batch_hist.record(8);
+        s
+    }
+
+    #[test]
+    fn exposition_has_counters_histograms_and_stage_rows() {
+        let t = Tracer::new(1);
+        t.record(1, SpanKind::Queue, None, None, 0, 500);
+        t.record(1, SpanKind::Vote, None, None, 500, 20);
+        let text = prometheus_text(&snap_with_hist(), 12, Some(&t));
+        assert!(text.contains("dt2cam_requests_total 10"));
+        assert!(text.contains("dt2cam_dropped_responses_total 2"));
+        assert!(text.contains("dt2cam_uptime_seconds 12"));
+        assert!(text.contains("dt2cam_latency_ns_count 3"));
+        assert!(text.contains("dt2cam_latency_ns_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("dt2cam_batch_size_count 1"));
+        assert!(text.contains("dt2cam_stage_ns_total{stage=\"queue\"} 500"));
+        assert!(text.contains("dt2cam_stage_count{stage=\"vote\"} 1"));
+
+        let rows = parse_stage_totals(&text);
+        let queue = rows.iter().find(|(s, _, _)| s == "queue").unwrap();
+        assert_eq!((queue.1, queue.2), (500, 1));
+        let vote = rows.iter().find(|(s, _, _)| s == "vote").unwrap();
+        assert_eq!((vote.1, vote.2), (20, 1));
+    }
+
+    #[test]
+    fn exposition_without_tracer_omits_stage_rows() {
+        let text = prometheus_text(&snap_with_hist(), 0, None);
+        assert!(!text.contains("dt2cam_stage_ns_total"));
+        assert!(parse_stage_totals(&text).is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_complete_events() {
+        let spans = vec![
+            Span {
+                trace: 3,
+                kind: SpanKind::Admission,
+                bank: NO_INDEX,
+                division: NO_INDEX,
+                start_ns: 1000,
+                dur_ns: 0,
+            },
+            Span {
+                trace: 3,
+                kind: SpanKind::Stage,
+                bank: 0,
+                division: 2,
+                start_ns: 2000,
+                dur_ns: 1500,
+            },
+        ];
+        let text = chrome_trace_json(&spans);
+        let j = Json::parse(&text).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("admission"));
+        // Zero-duration spans get a 1 ns floor so viewers render them.
+        assert!(events[0].get("dur").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(events[1].get("name").unwrap().as_str(), Some("stage d2"));
+        assert_eq!(
+            events[1].get("args").unwrap().get("bank").unwrap().as_usize(),
+            Some(0)
+        );
+    }
+}

@@ -1,0 +1,328 @@
+//! Log2-bucketed, exactly-mergeable histograms.
+//!
+//! The bucket schema is *fixed* (part of the wire contract, see
+//! `docs/API.md` §Observability): bucket 0 holds the value 0, bucket
+//! `i >= 1` holds values in `[2^(i-1), 2^i)`, and the last bucket is
+//! open-ended. Because the schema never varies, `merge` is a plain
+//! bucket-wise add, so percentiles computed from a merged histogram are
+//! bit-identical to percentiles computed from one histogram fed the
+//! pooled samples — the property the cluster router relies on for its
+//! tail-latency roll-ups (the old decision-weighted percentile merge
+//! was approximate and is gone).
+//!
+//! Values are dimensionless `u64`s; latency histograms record
+//! nanoseconds, size histograms record counts. Percentile estimates
+//! return the *inclusive upper edge* of the bucket containing the rank,
+//! so the estimate is within one bucket width of the true sample.
+
+use crate::api::serde::{get_u64, json_u64};
+use crate::config::json::Json;
+use anyhow::{Context, Result};
+
+/// Number of buckets. Bucket 39 starts at 2^38 ns ≈ 275 s — far above
+/// any latency this system can produce, so the open tail never matters
+/// in practice.
+pub const N_BUCKETS: usize = 40;
+
+/// A fixed-schema log2 histogram. `merge` is bucket-wise addition and
+/// therefore exact: order and grouping of merges never change any
+/// derived statistic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+}
+
+/// Bucket index for a value: 0 for 0, else `floor(log2(v)) + 1`,
+/// clamped into the open-ended last bucket.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(N_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper edge of a bucket (`2^i - 1`; 0 for bucket 0). The
+/// open-ended last bucket reports its lower edge region's top the same
+/// way — an intentional saturation, not a real bound.
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i.min(63)) - 1
+    }
+}
+
+/// Width of a bucket: the number of distinct values it can hold.
+pub fn bucket_width(i: usize) -> u64 {
+    if i == 0 {
+        1
+    } else {
+        1u64 << (i - 1).min(62)
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket-wise add — the exact merge. Associative and commutative,
+    /// so sharded recording then merging gives the same histogram as
+    /// centralized recording.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Percentile estimate at bucket resolution: the inclusive upper
+    /// edge of the bucket containing the rank-`ceil(p/100 * count)`
+    /// sample. Depends only on bucket counts, so it is merge-invariant.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(N_BUCKETS - 1)
+    }
+
+    /// Raw bucket counts (fixed schema, `N_BUCKETS` entries).
+    pub fn buckets(&self) -> &[u64; N_BUCKETS] {
+        &self.counts
+    }
+
+    /// Cumulative counts per bucket — the shape Prometheus exposition
+    /// wants (`le` buckets are cumulative).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(N_BUCKETS);
+        let mut cum = 0u64;
+        for &c in &self.counts {
+            cum += c;
+            out.push(cum);
+        }
+        out
+    }
+
+    /// Compact JSON: counts trimmed of trailing zero buckets, plus the
+    /// redundant-but-cheap `count`/`sum` roll-ups. An empty histogram
+    /// encodes as `{"counts":[],"count":0,"sum":0}`.
+    pub fn to_json(&self) -> Json {
+        let last = self
+            .counts
+            .iter()
+            .rposition(|&c| c != 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        Json::obj(vec![
+            (
+                "counts",
+                Json::Arr(self.counts[..last].iter().map(|&c| json_u64(c)).collect()),
+            ),
+            ("count", json_u64(self.count)),
+            ("sum", json_u64(self.sum)),
+        ])
+    }
+
+    /// Decode; tolerates short count arrays (trailing zeros trimmed)
+    /// and rejects arrays longer than the fixed schema.
+    pub fn from_json(j: &Json) -> Result<Histogram> {
+        let arr = j
+            .get("counts")
+            .and_then(|v| v.as_arr())
+            .context("histogram needs a 'counts' array")?;
+        if arr.len() > N_BUCKETS {
+            anyhow::bail!(
+                "histogram has {} buckets but the schema is fixed at {N_BUCKETS}",
+                arr.len()
+            );
+        }
+        let mut h = Histogram::new();
+        for (i, v) in arr.iter().enumerate() {
+            let wrapped = Json::obj(vec![("c", v.clone())]);
+            h.counts[i] = get_u64(&wrapped, "c").context("histogram bucket count")?;
+        }
+        h.count = get_u64(j, "count")?;
+        h.sum = get_u64(j, "sum")?;
+        let bucket_total: u64 = h.counts.iter().sum();
+        if bucket_total != h.count {
+            anyhow::bail!(
+                "histogram bucket counts sum to {bucket_total} but count says {}",
+                h.count
+            );
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn bucket_schema_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        // Bucket i >= 1 covers [2^(i-1), 2^i).
+        for i in 1..20 {
+            assert_eq!(bucket_index(1u64 << (i - 1)), i);
+            assert_eq!(bucket_index((1u64 << i) - 1), i);
+        }
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(3), 7);
+        assert_eq!(bucket_width(0), 1);
+        assert_eq!(bucket_width(3), 4);
+    }
+
+    #[test]
+    fn record_count_sum_mean() {
+        let mut h = Histogram::new();
+        for v in [0, 1, 5, 100, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 206);
+        assert!((h.mean() - 41.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_is_within_one_bucket_of_true_sample() {
+        let mut h = Histogram::new();
+        let mut samples: Vec<u64> = Vec::new();
+        let mut rng = Prng::new(7);
+        for _ in 0..5000 {
+            let v = rng.next_u64() % 1_000_000;
+            h.record(v);
+            samples.push(v);
+        }
+        samples.sort_unstable();
+        for p in [50.0, 95.0, 99.0] {
+            let rank = ((p / 100.0) * samples.len() as f64).ceil().max(1.0) as usize;
+            let truth = samples[rank - 1];
+            let est = h.percentile(p);
+            assert_eq!(bucket_index(truth), bucket_index(est));
+            let width = bucket_width(bucket_index(est));
+            assert!(est.abs_diff(truth) < width, "p{p}: est {est} truth {truth}");
+        }
+    }
+
+    #[test]
+    fn merge_over_k_shards_is_bit_identical_to_pooled() {
+        // The tentpole property: K sharded histograms merged in any
+        // grouping report exactly the same percentiles as one histogram
+        // fed the pooled samples.
+        let mut rng = Prng::new(42);
+        for k in [2usize, 3, 7] {
+            let mut shards = vec![Histogram::new(); k];
+            let mut pooled = Histogram::new();
+            for i in 0..4096 {
+                // Mix of scales so several buckets are populated.
+                let v = match i % 3 {
+                    0 => rng.next_u64() % 64,
+                    1 => rng.next_u64() % 65_536,
+                    _ => rng.next_u64() % 100_000_000,
+                };
+                shards[i % k].record(v);
+                pooled.record(v);
+            }
+            let mut merged = Histogram::new();
+            for s in &shards {
+                merged.merge(s);
+            }
+            assert_eq!(merged, pooled);
+            // Also merge in reverse order — associativity/commutativity.
+            let mut rev = Histogram::new();
+            for s in shards.iter().rev() {
+                rev.merge(s);
+            }
+            assert_eq!(rev, pooled);
+            for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                assert_eq!(merged.percentile(p), pooled.percentile(p));
+            }
+            assert_eq!(merged.mean(), pooled.mean());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_empty() {
+        let mut h = Histogram::new();
+        for v in [0u64, 3, 3, 900, 1 << 30] {
+            h.record(v);
+        }
+        let text = h.to_json().to_string_compact();
+        let back = Histogram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, h);
+
+        let empty = Histogram::new();
+        let back = Histogram::from_json(&Json::parse(&empty.to_json().to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back, empty);
+        assert_eq!(back.percentile(99.0), 0);
+    }
+
+    #[test]
+    fn json_rejects_inconsistent_or_oversized() {
+        let j = Json::parse(r#"{"counts":[1,1],"count":3,"sum":0}"#).unwrap();
+        assert!(Histogram::from_json(&j).is_err());
+        let too_many: Vec<String> = (0..N_BUCKETS + 1).map(|_| "0".to_string()).collect();
+        let j = Json::parse(&format!(
+            r#"{{"counts":[{}],"count":0,"sum":0}}"#,
+            too_many.join(",")
+        ))
+        .unwrap();
+        assert!(Histogram::from_json(&j).is_err());
+    }
+}

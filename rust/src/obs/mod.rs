@@ -1,0 +1,24 @@
+//! Observability plane: mergeable histograms, request tracing, export.
+//!
+//! Std-only, like `net/`. Three pieces:
+//!
+//! - [`hist`] — fixed-schema log2 histograms whose `merge` is bucket-wise
+//!   addition, making cluster-wide percentiles exact to bucket
+//!   resolution (this replaced the approximate decision-weighted
+//!   percentile merge in `MetricsSnapshot::merge`).
+//! - [`trace`] — per-request trace ids assigned at admission plus a
+//!   bounded span ring covering admission → queue → dispatch →
+//!   bank-match/stage → remote → vote → respond.
+//! - [`export`] — Prometheus-style text exposition (served over
+//!   `Frame::ObsScrape`/`ObsReport`) and Chrome trace-event JSON dumps.
+//!
+//! See `docs/API.md` §Observability for the span taxonomy, the bucket
+//! schema, and the overhead contract.
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::{chrome_trace_json, parse_stage_totals, prometheus_text};
+pub use hist::{bucket_index, bucket_upper, bucket_width, Histogram, N_BUCKETS};
+pub use trace::{Span, SpanKind, Tracer, DEFAULT_RING_CAPACITY, NO_INDEX, SPAN_KINDS};

@@ -1,0 +1,398 @@
+//! Per-request tracing: trace ids, typed spans, and a bounded span ring.
+//!
+//! A [`Tracer`] is a cheaply-cloneable handle shared by the net reader
+//! threads (admission), the scheduler thread (queue/dispatch/vote), the
+//! pipeline stage threads (per-division stages), and the remote
+//! dispatcher (worker round-trips). Recording takes one short `Mutex`
+//! lock on a fixed-capacity ring — never an allocation — and when the
+//! request is unsampled (`trace == 0`) recording is a single branch, so
+//! `--trace-sample 0` costs nothing on the hot path.
+//!
+//! Timestamps are nanoseconds since the tracer's epoch (a monotonic
+//! `Instant` captured at construction); wall-clock never enters the
+//! span stream, so spans from one process are internally consistent
+//! even across clock steps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::api::serde::{get_str, get_u64, json_u64};
+use crate::config::json::Json;
+use anyhow::{Context, Result};
+
+/// The span taxonomy — one kind per stage of the request lifecycle.
+/// The wire names (see [`SpanKind::as_str`]) are a documented contract
+/// (`docs/API.md` §Observability).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Frame decode + admission decision in the net reader thread.
+    Admission,
+    /// Time spent queued in the batcher (arrival → dispatch).
+    Queue,
+    /// Batch dispatch: the scheduler handing a formed batch to the
+    /// execution path (whole-batch run for the sequential coordinator,
+    /// pipeline feed for the streaming one).
+    Dispatch,
+    /// One bank's match phase over a batch (sequential and worker-side
+    /// execution).
+    BankMatch,
+    /// One column-division stage of the streaming pipeline.
+    Stage,
+    /// A remote worker round-trip (router side: send `BankBatch`, wait
+    /// for `BankOutcomes`).
+    Remote,
+    /// Survivor-vote readout across banks.
+    Vote,
+    /// Writing the response frame back to the client connection.
+    Respond,
+}
+
+pub const SPAN_KINDS: [SpanKind; 8] = [
+    SpanKind::Admission,
+    SpanKind::Queue,
+    SpanKind::Dispatch,
+    SpanKind::BankMatch,
+    SpanKind::Stage,
+    SpanKind::Remote,
+    SpanKind::Vote,
+    SpanKind::Respond,
+];
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Admission => "admission",
+            SpanKind::Queue => "queue",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::BankMatch => "bank_match",
+            SpanKind::Stage => "stage",
+            SpanKind::Remote => "remote",
+            SpanKind::Vote => "vote",
+            SpanKind::Respond => "respond",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        SPAN_KINDS.iter().copied().find(|k| k.as_str() == s)
+    }
+
+    fn index(self) -> usize {
+        SPAN_KINDS.iter().position(|&k| k == self).unwrap()
+    }
+}
+
+/// Sentinel for "no bank"/"no division" on spans where the dimension
+/// does not apply.
+pub const NO_INDEX: u32 = u32::MAX;
+
+/// One recorded span. `bank`/`division` are [`NO_INDEX`] when not
+/// applicable; timestamps are ns since the recording tracer's epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub trace: u64,
+    pub kind: SpanKind,
+    pub bank: u32,
+    pub division: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("trace", json_u64(self.trace)),
+            ("kind", Json::str(self.kind.as_str())),
+        ];
+        if self.bank != NO_INDEX {
+            fields.push(("bank", Json::num(self.bank as f64)));
+        }
+        if self.division != NO_INDEX {
+            fields.push(("division", Json::num(self.division as f64)));
+        }
+        fields.push(("start_ns", json_u64(self.start_ns)));
+        fields.push(("dur_ns", json_u64(self.dur_ns)));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Span> {
+        let kind_name = get_str(j, "kind")?;
+        let kind = SpanKind::parse(&kind_name)
+            .with_context(|| format!("unknown span kind '{kind_name}'"))?;
+        let opt_index = |key: &str| -> Result<u32> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(NO_INDEX),
+                Some(v) => Ok(v
+                    .as_usize()
+                    .with_context(|| format!("span '{key}' must be a non-negative integer"))?
+                    as u32),
+            }
+        };
+        Ok(Span {
+            trace: get_u64(j, "trace")?,
+            kind,
+            bank: opt_index("bank")?,
+            division: opt_index("division")?,
+            start_ns: get_u64(j, "start_ns")?,
+            dur_ns: get_u64(j, "dur_ns")?,
+        })
+    }
+}
+
+/// Default span-ring capacity. At ~48 B/span this is well under 1 MiB
+/// resident, and more than a scrape can ship in one frame anyway.
+pub const DEFAULT_RING_CAPACITY: usize = 16384;
+
+struct Ring {
+    spans: Vec<Span>,
+    next: usize,
+    wrapped: bool,
+}
+
+/// Per-[`SpanKind`] running totals, updated on every recorded span.
+/// These feed the `dt2cam_stage_ns_total` / `dt2cam_stage_count`
+/// exposition rows that `loadgen` turns into a per-stage breakdown.
+struct StageTotals {
+    ns: [AtomicU64; SPAN_KINDS.len()],
+    count: [AtomicU64; SPAN_KINDS.len()],
+}
+
+struct Inner {
+    sample: u64,
+    epoch: Instant,
+    next_trace: AtomicU64,
+    ring: Mutex<Ring>,
+    totals: StageTotals,
+    dropped: AtomicU64,
+}
+
+/// Shared tracing handle. Clone freely — all clones share one ring,
+/// one epoch, and one trace-id counter.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<Inner>,
+}
+
+impl Tracer {
+    /// `sample` is the sampling divisor: 0 disables tracing entirely,
+    /// N traces every Nth admitted request.
+    pub fn new(sample: u64) -> Tracer {
+        Tracer::with_capacity(sample, DEFAULT_RING_CAPACITY)
+    }
+
+    pub fn with_capacity(sample: u64, capacity: usize) -> Tracer {
+        let capacity = capacity.max(1);
+        Tracer {
+            inner: Arc::new(Inner {
+                sample,
+                epoch: Instant::now(),
+                next_trace: AtomicU64::new(1),
+                ring: Mutex::new(Ring {
+                    spans: Vec::with_capacity(capacity),
+                    next: 0,
+                    wrapped: false,
+                }),
+                totals: StageTotals {
+                    ns: std::array::from_fn(|_| AtomicU64::new(0)),
+                    count: std::array::from_fn(|_| AtomicU64::new(0)),
+                },
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn sample(&self) -> u64 {
+        self.inner.sample
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.sample > 0
+    }
+
+    /// Admission-time trace-id assignment: every admitted request gets
+    /// the next id, and the sampled ones (id divisible by the sampling
+    /// divisor) return it; the rest return 0 ("untraced") so every
+    /// downstream record call is a single branch.
+    pub fn admit(&self) -> u64 {
+        if self.inner.sample == 0 {
+            return 0;
+        }
+        let id = self.inner.next_trace.fetch_add(1, Ordering::Relaxed);
+        if id % self.inner.sample == 0 {
+            id
+        } else {
+            0
+        }
+    }
+
+    /// Nanoseconds since this tracer's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.inner.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Map an externally-captured `Instant` (e.g. a request's arrival
+    /// time) onto the tracer clock.
+    pub fn ns_at(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.inner.epoch).as_nanos() as u64
+    }
+
+    /// Record one span. A no-op for untraced requests (`trace == 0`).
+    pub fn record(
+        &self,
+        trace: u64,
+        kind: SpanKind,
+        bank: Option<usize>,
+        division: Option<usize>,
+        start_ns: u64,
+        dur_ns: u64,
+    ) {
+        if trace == 0 {
+            return;
+        }
+        let ki = kind.index();
+        self.inner.totals.ns[ki].fetch_add(dur_ns, Ordering::Relaxed);
+        self.inner.totals.count[ki].fetch_add(1, Ordering::Relaxed);
+        let span = Span {
+            trace,
+            kind,
+            bank: bank.map(|b| b as u32).unwrap_or(NO_INDEX),
+            division: division.map(|d| d as u32).unwrap_or(NO_INDEX),
+            start_ns,
+            dur_ns,
+        };
+        let mut ring = self.inner.ring.lock().unwrap();
+        if ring.spans.len() < ring.spans.capacity() {
+            ring.spans.push(span);
+            ring.next = ring.spans.len() % ring.spans.capacity();
+        } else {
+            let at = ring.next;
+            ring.spans[at] = span;
+            ring.next = (at + 1) % ring.spans.len();
+            ring.wrapped = true;
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spans recorded so far, oldest first. Bounded by the ring
+    /// capacity; once the ring wraps the oldest spans are gone (the
+    /// `dropped` counter says how many).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let ring = self.inner.ring.lock().unwrap();
+        if !ring.wrapped {
+            ring.spans.clone()
+        } else {
+            let mut out = Vec::with_capacity(ring.spans.len());
+            out.extend_from_slice(&ring.spans[ring.next..]);
+            out.extend_from_slice(&ring.spans[..ring.next]);
+            out
+        }
+    }
+
+    /// Spans overwritten after the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Per-kind `(name, total_ns, count)` rows for exposition.
+    pub fn stage_totals(&self) -> Vec<(&'static str, u64, u64)> {
+        SPAN_KINDS
+            .iter()
+            .map(|&k| {
+                let i = k.index();
+                (
+                    k.as_str(),
+                    self.inner.totals.ns[i].load(Ordering::Relaxed),
+                    self.inner.totals.count[i].load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_divisor_controls_admission() {
+        let off = Tracer::new(0);
+        for _ in 0..10 {
+            assert_eq!(off.admit(), 0);
+        }
+        let all = Tracer::new(1);
+        let ids: Vec<u64> = (0..5).map(|_| all.admit()).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5]);
+        let third = Tracer::new(3);
+        let ids: Vec<u64> = (0..9).map(|_| third.admit()).collect();
+        let traced: Vec<u64> = ids.iter().copied().filter(|&i| i != 0).collect();
+        assert_eq!(traced, vec![3, 6, 9]);
+    }
+
+    #[test]
+    fn untraced_records_are_dropped_and_ring_bounds_memory() {
+        let t = Tracer::with_capacity(1, 4);
+        t.record(0, SpanKind::Queue, None, None, 0, 100);
+        assert!(t.snapshot().is_empty());
+        for i in 1..=6u64 {
+            t.record(i, SpanKind::Queue, None, None, i * 10, 1);
+        }
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 4);
+        // Oldest-first after wrap: traces 3,4,5,6 survive.
+        let traces: Vec<u64> = spans.iter().map(|s| s.trace).collect();
+        assert_eq!(traces, vec![3, 4, 5, 6]);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn stage_totals_accumulate() {
+        let t = Tracer::new(1);
+        t.record(1, SpanKind::Stage, Some(0), Some(2), 0, 100);
+        t.record(1, SpanKind::Stage, Some(0), Some(3), 100, 50);
+        t.record(2, SpanKind::Vote, None, None, 200, 7);
+        let rows = t.stage_totals();
+        let stage = rows.iter().find(|(n, _, _)| *n == "stage").unwrap();
+        assert_eq!((stage.1, stage.2), (150, 2));
+        let vote = rows.iter().find(|(n, _, _)| *n == "vote").unwrap();
+        assert_eq!((vote.1, vote.2), (7, 1));
+        let idle = rows.iter().find(|(n, _, _)| *n == "remote").unwrap();
+        assert_eq!((idle.1, idle.2), (0, 0));
+    }
+
+    #[test]
+    fn span_json_roundtrips_with_and_without_indices() {
+        let s = Span {
+            trace: 42,
+            kind: SpanKind::Stage,
+            bank: 1,
+            division: 3,
+            start_ns: 1000,
+            dur_ns: 250,
+        };
+        let back = Span::from_json(&Json::parse(&s.to_json().to_string_compact()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        let s = Span {
+            trace: 7,
+            kind: SpanKind::Respond,
+            bank: NO_INDEX,
+            division: NO_INDEX,
+            start_ns: 5,
+            dur_ns: 1,
+        };
+        let text = s.to_json().to_string_compact();
+        assert!(!text.contains("bank"));
+        let back = Span::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert!(Span::from_json(&Json::parse(r#"{"trace":1,"kind":"nope","start_ns":0,"dur_ns":0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn clones_share_one_ring_and_clock() {
+        let t = Tracer::new(1);
+        let t2 = t.clone();
+        let id = t.admit();
+        t2.record(id, SpanKind::Admission, None, None, t.now_ns(), 10);
+        assert_eq!(t.snapshot().len(), 1);
+        assert!(t2.ns_at(Instant::now()) >= t.snapshot()[0].start_ns);
+    }
+}

@@ -153,6 +153,70 @@ fn three_workers_answer_bit_identically_to_single_process_registry_wide() {
 }
 
 #[test]
+fn router_percentiles_derive_exactly_from_merged_worker_histograms() {
+    // Drive latency samples into each worker's own front door (plain
+    // `Request` frames work against a bank subset; only the samples
+    // matter here, not the subset's classes), pool the scraped worker
+    // histograms by hand, and the router's cluster-wide view must be
+    // exactly that pooled histogram — its p99 equal to the pooled
+    // histogram's percentile, which is by construction within one log2
+    // bucket width of the true pooled sample p99. The old
+    // decision-weighted percentile merge could not make this promise.
+    use dt2cam::obs::{bucket_index, bucket_upper, bucket_width, Histogram};
+
+    let c = spawn_cluster(EngineKind::Native, 4, 3, 0);
+    let per_worker = 20usize;
+    for w in &c.workers {
+        let mut client = Client::connect(&w.local_addr().to_string()).unwrap();
+        for x in c.inputs.iter().take(per_worker) {
+            let _ = client.classify(x).unwrap();
+        }
+    }
+
+    let mut pooled = Histogram::new();
+    for w in &c.workers {
+        let snap = Client::connect(&w.local_addr().to_string())
+            .unwrap()
+            .metrics()
+            .unwrap();
+        assert_eq!(
+            snap.latency_hist.count(),
+            per_worker as u64,
+            "every worker-side request must land in the worker's histogram"
+        );
+        pooled.merge(&snap.latency_hist);
+    }
+    assert_eq!(pooled.count(), (3 * per_worker) as u64);
+
+    let addr = c.router.local_addr().to_string();
+    let snap = Client::connect(&addr).unwrap().metrics().unwrap();
+    // No traffic hit the router itself, so its merged histogram is
+    // exactly the workers' pool (bucket-wise sum, no approximation)...
+    assert_eq!(snap.latency_hist, pooled);
+    // ...and the scraped percentiles come from that pool: identical to
+    // the pooled histogram's own percentile read.
+    let want_p99 = pooled.percentile(99.0);
+    assert!(want_p99 > 0, "sampled latencies must be nonzero");
+    assert_eq!((snap.latency_p99 * 1e9).round() as u64, want_p99);
+    assert_eq!((snap.latency_p50 * 1e9).round() as u64, pooled.percentile(50.0));
+    assert!(snap.latency_p50 <= snap.latency_p99);
+    // The bucket-resolution contract the test banner promises: the
+    // percentile read is a bucket upper bound, so it sits within one
+    // bucket width of every sample in that bucket — including the true
+    // pooled sample p99.
+    let i = bucket_index(want_p99);
+    assert_eq!(bucket_upper(i), want_p99);
+    assert!(bucket_width(i) > 0);
+    // The merged queue-delay mean is the pooled histogram's exact mean.
+    assert!((snap.queue_delay_mean - snap.queue_hist.mean() * 1e-9).abs() < 1e-12);
+
+    c.router.shutdown().unwrap();
+    for w in c.workers {
+        w.shutdown().unwrap();
+    }
+}
+
+#[test]
 fn killing_a_replicated_worker_mid_load_loses_no_admitted_requests() {
     // replicas=1: every bank has two owners, so the fleet survives any
     // single death. Four concurrent clients hammer the router while

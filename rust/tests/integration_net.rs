@@ -237,6 +237,7 @@ fn pipelined_graceful_shutdown_drains_batches_already_inside_the_pipeline() {
         ServerConfig {
             admission: 64,
             batch_max_wait: Some(Duration::from_secs(3600)),
+            ..Default::default()
         },
         1,
     );
@@ -404,6 +405,7 @@ fn admission_overflow_sheds_and_graceful_shutdown_drains_in_flight() {
         ServerConfig {
             admission: 2,
             batch_max_wait: Some(Duration::from_secs(3600)),
+            ..Default::default()
         },
     );
     let addr = server.local_addr().to_string();

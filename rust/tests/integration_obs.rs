@@ -1,0 +1,269 @@
+//! Observability integration tests (`dt2cam::obs` behind the wire):
+//! a server spawned with `trace_sample: 1` must produce the full
+//! admission → queue → dispatch → bank-match (or per-division stage)
+//! → vote → respond span chain for a traced request, echo the trace id
+//! in the response frame, and answer `ObsScrape` with a Prometheus-style
+//! text exposition whose stage totals parse back out; an untraced
+//! server must answer the same scrape with counters only.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::TcpStream;
+
+use dt2cam::api::{BackendOptions, Dt2Cam};
+use dt2cam::cart::ForestParams;
+use dt2cam::config::EngineKind;
+use dt2cam::net::{read_frame, write_frame, Client, Frame, Server, ServerConfig};
+use dt2cam::obs::{parse_stage_totals, Span, SpanKind};
+use dt2cam::tcam::params::DeviceParams;
+
+/// The 3-bank haberman forest @S=16 used across the wire tests, plus
+/// the per-bank column-division counts (the pipelined stage fan-out).
+fn spawn_forest_server(
+    cfg: ServerConfig,
+    pipelined: bool,
+) -> (
+    dt2cam::net::ServerHandle,
+    Vec<Vec<f64>>,
+    Vec<Option<usize>>,
+    Vec<usize>,
+) {
+    let fp = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let engine = EngineKind::Native;
+    let model = Dt2Cam::forest("haberman", &fp).unwrap();
+    let mapped = model.compile().map(16, &DeviceParams::default());
+    let divisions: Vec<usize> = mapped.banks.iter().map(|b| b.mapped.n_cwd).collect();
+    let expected = mapped
+        .session(engine, 8)
+        .unwrap()
+        .classify_all(&model.test_x)
+        .unwrap();
+    let opts = BackendOptions::default();
+    let server = Server::spawn("127.0.0.1:0", cfg, move || {
+        let session = if pipelined {
+            mapped.session_pipelined(engine, 8, &opts, 2)?
+        } else {
+            mapped.session_with(engine, 8, &opts)?
+        };
+        Ok(session.into_coordinator())
+    })
+    .unwrap();
+    (server, model.test_x, expected, divisions)
+}
+
+/// Group spans by trace id, keeping per-trace kind sets.
+fn by_trace(spans: &[Span]) -> BTreeMap<u64, Vec<&Span>> {
+    let mut m: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+    for s in spans {
+        m.entry(s.trace).or_default().push(s);
+    }
+    m
+}
+
+fn kinds_of(spans: &[&Span]) -> BTreeSet<&'static str> {
+    spans.iter().map(|s| s.kind.as_str()).collect()
+}
+
+#[test]
+fn traced_sequential_serving_produces_the_full_span_chain_and_scrape() {
+    let (server, inputs, expected, _) = spawn_forest_server(
+        ServerConfig {
+            trace_sample: 1,
+            ..Default::default()
+        },
+        false,
+    );
+    let addr = server.local_addr().to_string();
+
+    // Raw frames so the response's trace echo is observable: with
+    // sampling 1 every admitted request must come back carrying the
+    // trace id its spans were recorded under.
+    let n = 12usize.min(inputs.len());
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut echoed = BTreeSet::new();
+    for (i, x) in inputs[..n].iter().enumerate() {
+        write_frame(
+            &mut stream,
+            &Frame::Request {
+                id: i as u64,
+                features: x.clone(),
+            },
+        )
+        .unwrap();
+        match read_frame(&mut stream).unwrap() {
+            Frame::Response {
+                id, class, trace, ..
+            } => {
+                assert_eq!(id, i as u64);
+                assert_eq!(class, expected[i], "input {i}");
+                let t = trace.expect("trace_sample 1 must echo a trace id");
+                assert!(t != 0, "trace id 0 is the untraced sentinel");
+                assert!(echoed.insert(t), "trace ids must be distinct, got {t} twice");
+            }
+            other => panic!("expected a response, got {other:?}"),
+        }
+    }
+
+    let (text, spans) = Client::connect(&addr).unwrap().obs_scrape(4096).unwrap();
+
+    // Scrape text: counters, histograms, tracer rows — and the stage
+    // totals parse back out with every taxonomy stage of this mode.
+    assert!(text.contains(&format!("dt2cam_requests_total {n}")), "{text}");
+    assert!(text.contains("dt2cam_latency_ns_count"), "{text}");
+    assert!(text.contains("dt2cam_batch_size_count"), "{text}");
+    assert!(text.contains("dt2cam_trace_sample 1"), "{text}");
+    let stages: BTreeSet<String> = parse_stage_totals(&text)
+        .into_iter()
+        .inspect(|(stage, ns, count)| {
+            assert!(*count > 0, "stage {stage} counted no spans");
+            assert!(*ns > 0 || stage == "admission", "stage {stage} has zero total time");
+        })
+        .map(|(stage, _, _)| stage)
+        .collect();
+    for want in ["admission", "queue", "dispatch", "bank_match", "vote", "respond"] {
+        assert!(stages.contains(want), "scrape lacks stage {want}: {stages:?}");
+    }
+
+    // Span ring: every echoed trace is present, and at least one trace
+    // carries the complete admission → respond chain with a bank-match
+    // span per bank (batch-level spans are recorded under the batch's
+    // representative trace; closed-loop single-connection traffic makes
+    // every batch single-request, so every chain should be complete).
+    let grouped = by_trace(&spans);
+    for t in &echoed {
+        assert!(grouped.contains_key(t), "no spans for echoed trace {t}");
+    }
+    let full = grouped
+        .values()
+        .find(|spans| {
+            kinds_of(spans).is_superset(&BTreeSet::from([
+                "admission", "queue", "dispatch", "bank_match", "vote", "respond",
+            ]))
+        })
+        .expect("at least one trace must carry the full span chain");
+    let banks: BTreeSet<u32> = full
+        .iter()
+        .filter(|s| s.kind == SpanKind::BankMatch)
+        .map(|s| s.bank)
+        .collect();
+    assert_eq!(banks, BTreeSet::from([0, 1, 2]), "one bank-match span per bank");
+    let admission = full.iter().find(|s| s.kind == SpanKind::Admission).unwrap();
+    let respond = full.iter().find(|s| s.kind == SpanKind::Respond).unwrap();
+    assert!(
+        admission.start_ns <= respond.start_ns,
+        "admission must start before respond: {admission:?} vs {respond:?}"
+    );
+
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn pipelined_tracing_emits_one_stage_span_per_division_per_bank() {
+    let (server, inputs, expected, divisions) = spawn_forest_server(
+        ServerConfig {
+            trace_sample: 1,
+            ..Default::default()
+        },
+        true,
+    );
+    let addr = server.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let n = 8usize.min(inputs.len());
+    for (i, x) in inputs[..n].iter().enumerate() {
+        assert_eq!(client.classify(x).unwrap(), expected[i], "input {i}");
+    }
+
+    let (text, spans) = Client::connect(&addr).unwrap().obs_scrape(4096).unwrap();
+    assert!(
+        parse_stage_totals(&text).iter().any(|(s, _, _)| s == "stage"),
+        "pipelined scrape must total the stage spans: {text}"
+    );
+
+    // Find a trace with stage spans and check the fan-out: exactly one
+    // span per column division of every bank (the pipeline runs one
+    // stage thread per division, each recording once per traced batch).
+    let grouped = by_trace(&spans);
+    let (trace, stage_spans) = grouped
+        .iter()
+        .map(|(t, spans)| {
+            (
+                t,
+                spans
+                    .iter()
+                    .filter(|s| s.kind == SpanKind::Stage)
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .find(|(_, stage)| !stage.is_empty())
+        .expect("some traced batch must have stage spans");
+    let mut per_bank: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for s in &stage_spans {
+        per_bank.entry(s.bank).or_default().push(s.division);
+    }
+    assert_eq!(
+        per_bank.len(),
+        divisions.len(),
+        "trace {trace} must cross every bank's pipeline: {per_bank:?}"
+    );
+    for (bank, mut divs) in per_bank {
+        divs.sort_unstable();
+        let want: Vec<u32> = (0..divisions[bank as usize] as u32).collect();
+        assert_eq!(
+            divs, want,
+            "bank {bank} must record exactly one stage span per division"
+        );
+    }
+
+    // The surrounding chain is still there in pipelined mode.
+    let full = grouped
+        .values()
+        .find(|spans| {
+            kinds_of(spans).is_superset(&BTreeSet::from([
+                "admission", "queue", "dispatch", "stage", "vote", "respond",
+            ]))
+        })
+        .expect("at least one trace must carry the full pipelined chain");
+    assert!(!full.is_empty());
+
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn untraced_server_scrapes_counters_only_and_echoes_no_trace() {
+    let (server, inputs, expected, _) =
+        spawn_forest_server(ServerConfig::default(), false);
+    let addr = server.local_addr().to_string();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    write_frame(
+        &mut stream,
+        &Frame::Request {
+            id: 0,
+            features: inputs[0].clone(),
+        },
+    )
+    .unwrap();
+    match read_frame(&mut stream).unwrap() {
+        Frame::Response { class, trace, .. } => {
+            assert_eq!(class, expected[0]);
+            assert_eq!(trace, None, "trace_sample 0 must not assign trace ids");
+        }
+        other => panic!("expected a response, got {other:?}"),
+    }
+
+    let (text, spans) = Client::connect(&addr).unwrap().obs_scrape(4096).unwrap();
+    assert!(text.contains("dt2cam_requests_total 1"), "{text}");
+    assert!(
+        !text.contains("dt2cam_trace_sample"),
+        "no tracer rows without tracing: {text}"
+    );
+    assert!(parse_stage_totals(&text).is_empty());
+    assert!(spans.is_empty(), "no tracer, no spans: {spans:?}");
+
+    server.shutdown().unwrap();
+}

@@ -498,3 +498,44 @@ fn one_survivor_property() {
         Ok(())
     });
 }
+
+/// Sharded histogram recording then merging — any shard count, any
+/// assignment, any merge order — must be bit-identical to pooled
+/// recording: buckets, count, sum, and therefore every percentile.
+/// This is the exactness claim the router's cluster-wide metrics merge
+/// stands on (`obs::hist`).
+#[test]
+fn histogram_merge_over_arbitrary_shardings_is_bit_identical_to_pooled() {
+    use dt2cam::obs::Histogram;
+    property_r("sharded hist merge == pooled", 40, |g: &mut Gen| {
+        let k = g.usize_in(1, 9);
+        let n = g.usize_in(0, 400);
+        let mut pooled = Histogram::new();
+        let mut shards = vec![Histogram::new(); k];
+        for _ in 0..n {
+            // Uniform exponent so every log2 bucket gets exercised,
+            // then a random offset inside the bucket.
+            let exp = g.usize_in(0, 64) as u32;
+            let lo = 1u64 << exp.min(63);
+            let v = lo + g.u64() % lo;
+            pooled.record(v);
+            shards[g.usize_in(0, k)].record(v);
+        }
+        // Merge in a random order: bucket-wise addition is associative
+        // and commutative, so the order must not matter.
+        let mut merged = Histogram::new();
+        while !shards.is_empty() {
+            let i = g.usize_in(0, shards.len());
+            merged.merge(&shards.remove(i));
+        }
+        if merged != pooled {
+            return Err(format!("merged != pooled over {k} shards: {merged:?} vs {pooled:?}"));
+        }
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            if merged.percentile(p) != pooled.percentile(p) {
+                return Err(format!("p{p} diverged after merge"));
+            }
+        }
+        Ok(())
+    });
+}
