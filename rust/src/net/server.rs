@@ -420,11 +420,18 @@ fn serve_loop(coord: &mut Coordinator, rx: &Receiver<SchedMsg>, shared: &Shared)
                 }
                 // A bank batch that raced in alongside the shutdown is
                 // still admitted work — answer it (handle() replies and
-                // releases its slot), don't strand the router.
-                msg @ (SchedMsg::BankBatch { .. } | SchedMsg::Health { .. }) => {
+                // releases its slot), don't strand the router. Scrapes
+                // raced in the same way get their reply too — a
+                // silently-dropped scrape would leave the scraper
+                // blocked until its read timeout. Only further
+                // shutdown messages are discarded.
+                msg @ (SchedMsg::BankBatch { .. }
+                | SchedMsg::Health { .. }
+                | SchedMsg::Metrics { .. }
+                | SchedMsg::ObsScrape { .. }) => {
                     let _ = handle(coord, shared, msg);
                 }
-                SchedMsg::Metrics { .. } | SchedMsg::ObsScrape { .. } | SchedMsg::Shutdown => {}
+                SchedMsg::Shutdown => {}
             }
         }
         let responses = coord.poll(true)?;
@@ -633,15 +640,16 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
         .filter_map(|w| w.snapshot.as_deref().cloned())
         .collect();
     // Cluster-wide view: execution-plane fields (bank batches run,
-    // per-bank no/multi-match tallies, summed worker throughput, and —
-    // since the merge became histogram-based — latency/queue
-    // percentiles derived *exactly* from the bucket-wise sum of worker
-    // histograms) come from the worker merge; client-plane counters
-    // are overridden with what only the router's front door measured —
-    // admitted requests, decisions, shed, dropped, connections,
-    // protocol errors, and the served program's modeled energy/latency
-    // (the router's coordinator re-aggregates remote outcomes exactly,
-    // where the worker merge is approximate).
+    // summed worker throughput, worker-side histograms) come from the
+    // worker merge; client-plane counters are overridden with what
+    // only the router's front door measured — admitted requests,
+    // decisions, shed, dropped, connections, protocol errors, and the
+    // served program's modeled energy/latency (the router's
+    // coordinator re-aggregates remote outcomes exactly, where the
+    // worker merge is approximate) — and the router's own latency and
+    // queue histograms join the bucket-wise sum below before the
+    // percentiles are derived, so the figures stay exact-to-bucket
+    // over every request-plane sample in the cluster.
     let mut merged = MetricsSnapshot::merge(&parts);
     merged.requests = snap.requests;
     merged.decisions = snap.decisions;
@@ -658,6 +666,19 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
     // rows; summing the worker figures on top would double-count.
     merged.rows_total = snap.rows_total;
     merged.rows_physical = snap.rows_physical;
+    // The router's front door is where end-to-end client latency and
+    // queue delay are measured — under routed traffic the workers see
+    // only `BankBatch` frames, which record no request-plane samples,
+    // so their latency/queue histograms are empty and the router's own
+    // samples are the cluster's only ones. Fold them into the merged
+    // histograms (still a bucket-wise add, still exact) and re-derive
+    // the percentiles from the combined pool.
+    merged.latency_hist.merge(&snap.latency_hist);
+    merged.queue_hist.merge(&snap.queue_hist);
+    merged.queue_delay_mean = merged.queue_hist.mean() * 1e-9;
+    merged.latency_p50 = merged.latency_hist.percentile(50.0) as f64 * 1e-9;
+    merged.latency_p95 = merged.latency_hist.percentile(95.0) as f64 * 1e-9;
+    merged.latency_p99 = merged.latency_hist.percentile(99.0) as f64 * 1e-9;
     merged.per_worker = workers;
     merged
 }

@@ -145,6 +145,10 @@ pub const DEFAULT_RING_CAPACITY: usize = 16384;
 
 struct Ring {
     spans: Vec<Span>,
+    /// The requested ring bound. `Vec::with_capacity` only promises
+    /// *at least* that much, so the wrap/full checks use this field —
+    /// never `Vec::capacity()` — to keep the bound exact.
+    cap: usize,
     next: usize,
     wrapped: bool,
 }
@@ -189,6 +193,7 @@ impl Tracer {
                 next_trace: AtomicU64::new(1),
                 ring: Mutex::new(Ring {
                     spans: Vec::with_capacity(capacity),
+                    cap: capacity,
                     next: 0,
                     wrapped: false,
                 }),
@@ -261,13 +266,13 @@ impl Tracer {
             dur_ns,
         };
         let mut ring = self.inner.ring.lock().unwrap();
-        if ring.spans.len() < ring.spans.capacity() {
+        if ring.spans.len() < ring.cap {
             ring.spans.push(span);
-            ring.next = ring.spans.len() % ring.spans.capacity();
+            ring.next = ring.spans.len() % ring.cap;
         } else {
             let at = ring.next;
             ring.spans[at] = span;
-            ring.next = (at + 1) % ring.spans.len();
+            ring.next = (at + 1) % ring.cap;
             ring.wrapped = true;
             self.inner.dropped.fetch_add(1, Ordering::Relaxed);
         }

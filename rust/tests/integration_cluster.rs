@@ -162,6 +162,10 @@ fn router_percentiles_derive_exactly_from_merged_worker_histograms() {
     // histogram's percentile, which is by construction within one log2
     // bucket width of the true pooled sample p99. The old
     // decision-weighted percentile merge could not make this promise.
+    // A second phase then drives traffic through the router alone —
+    // the realistic pattern, where workers' request-plane histograms
+    // stay empty — and the scraped percentiles must reflect the
+    // router's own front-door samples, not collapse to zero.
     use dt2cam::obs::{bucket_index, bucket_upper, bucket_width, Histogram};
 
     let c = spawn_cluster(EngineKind::Native, 4, 3, 0);
@@ -209,6 +213,42 @@ fn router_percentiles_derive_exactly_from_merged_worker_histograms() {
     assert!(bucket_width(i) > 0);
     // The merged queue-delay mean is the pooled histogram's exact mean.
     assert!((snap.queue_delay_mean - snap.queue_hist.mean() * 1e-9).abs() < 1e-12);
+
+    // Now the realistic traffic pattern: clients talk only to the
+    // router. Workers see nothing but `BankBatch` frames — which record
+    // no request-plane latency or queue samples — so the router's own
+    // front-door histogram is the sole source of these figures, and the
+    // merge must include it rather than discard it in favor of the
+    // (empty) worker histograms.
+    let per_router = 20usize;
+    let mut client = Client::connect(&addr).unwrap();
+    for x in c.inputs.iter().take(per_router) {
+        let _ = client.classify(x).unwrap();
+    }
+    let snap = client.metrics().unwrap();
+    assert_eq!(
+        snap.latency_hist.count(),
+        (3 * per_worker + per_router) as u64,
+        "the router's own end-to-end samples must join the merged histogram"
+    );
+    assert!(
+        snap.latency_p99 > 0.0,
+        "router-only traffic must still yield a nonzero scraped tail latency"
+    );
+    // The scraped percentiles keep deriving from the (now combined)
+    // histogram — the router's own samples included, exactly.
+    assert_eq!(
+        (snap.latency_p99 * 1e9).round() as u64,
+        snap.latency_hist.percentile(99.0)
+    );
+    assert_eq!(
+        (snap.latency_p50 * 1e9).round() as u64,
+        snap.latency_hist.percentile(50.0)
+    );
+    assert!(
+        snap.queue_hist.count() >= per_router as u64,
+        "routed requests must contribute queue-delay samples"
+    );
 
     c.router.shutdown().unwrap();
     for w in c.workers {
