@@ -169,6 +169,23 @@ pub struct RemoteWorkerStatus {
     pub snapshot: Option<Json>,
 }
 
+/// The program a remote bank batch belongs to, stamped by the router on
+/// every `Frame::BankBatch` so a worker holding different program bits
+/// refuses instead of silently answering from the wrong tenant. The
+/// identity figures are the *whole* program's (the same triple
+/// `Frame::Health` advertises), so every placement subset checks
+/// against one expectation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgramStamp {
+    /// Program id (empty = the worker's active program — the
+    /// pre-lifecycle wire behavior, accepted for back-compat).
+    pub id: String,
+    /// Whole-program bank count (0 = unstamped, unchecked).
+    pub banks: usize,
+    /// Whole-program physical rows (0 = unstamped, unchecked).
+    pub rows_physical: u64,
+}
+
 /// The remote bank-evaluation seam: an implementation owns connections
 /// to worker processes that each serve a subset of the program's banks,
 /// and answers one batch of raw feature rows with one
@@ -191,8 +208,15 @@ pub trait RemoteBankDispatch: Send {
     /// is unserveable after exhausting its replicas. `trace` is the
     /// batch's representative trace id (0 = untraced), propagated to
     /// the workers so their bank-match spans correlate with the
-    /// router's remote span.
-    fn run_banks(&mut self, rows: &[Vec<f64>], trace: u64) -> Result<Vec<RemoteBankOutcome>>;
+    /// router's remote span. `program` is the batch's admission stamp,
+    /// propagated so each worker serves the right tenant (and refuses a
+    /// mismatched identity).
+    fn run_banks(
+        &mut self,
+        rows: &[Vec<f64>],
+        trace: u64,
+        program: &ProgramStamp,
+    ) -> Result<Vec<RemoteBankOutcome>>;
 
     /// Per-worker placement/health/accounting status; with `scrape`,
     /// also pull each live worker's own metrics snapshot.

@@ -15,7 +15,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value (everything else is a flag).
-const VALUE_KEYS: [&str; 37] = [
+const VALUE_KEYS: [&str; 42] = [
     "dataset",
     "tile-size",
     "seed",
@@ -53,6 +53,11 @@ const VALUE_KEYS: [&str; 37] = [
     "trace-sample",
     "trace-out",
     "n",
+    "max-programs",
+    "id",
+    "swap-at",
+    "swap-program",
+    "swap-id",
 ];
 
 impl Args {

@@ -396,6 +396,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let program_path = args.opt_str("program");
     let listen = args.opt_str("listen");
     let admission = args.opt_usize("admission")?;
+    let max_programs_arg = args.opt_usize("max-programs")?;
     let trace_sample = args.opt_u64("trace-sample")?.unwrap_or(0);
     let trace_out = args.opt_str("trace-out");
     let verify = verify_mode_arg(args, program_path.is_some())?;
@@ -414,6 +415,16 @@ pub fn serve(args: &mut Args) -> Result<()> {
         anyhow::ensure!(
             listen.is_some(),
             "--admission requires --listen (it bounds the socket server's in-flight queue)"
+        );
+    }
+    if let Some(m) = max_programs_arg {
+        anyhow::ensure!(
+            m >= 1,
+            "--max-programs must be >= 1 (got 0): the registry must hold the boot program"
+        );
+        anyhow::ensure!(
+            listen.is_some(),
+            "--max-programs requires --listen (it bounds the socket server's program registry)"
         );
     }
     if let Some(d) = pipe_depth_arg {
@@ -497,12 +508,15 @@ pub fn serve(args: &mut Args) -> Result<()> {
              see `dt2cam loadgen`)"
         );
         let admission = admission.unwrap_or(256);
+        let max_programs =
+            max_programs_arg.unwrap_or(crate::coordinator::DEFAULT_MAX_PROGRAMS);
         let n_banks = mapped.n_banks();
         let server = net::Server::spawn(
             addr.as_str(),
             net::ServerConfig {
                 admission,
                 trace_sample,
+                max_programs,
                 ..Default::default()
             },
             move || {
@@ -534,8 +548,8 @@ pub fn serve(args: &mut Args) -> Result<()> {
         let tracer = server.tracer();
         let report = server.join()?;
         println!(
-            "server stopped: conns={} shed={} protocol_errors={}",
-            report.connections, report.shed, report.protocol_errors
+            "server stopped: conns={} shed={} protocol_errors={} dropped={}",
+            report.connections, report.shed, report.protocol_errors, report.dropped_responses
         );
         println!("{}", report.metrics.summary_line());
         write_trace_out(&trace_out, &tracer)?;
@@ -638,7 +652,12 @@ fn write_trace_out(
 /// loops); `--rps R` switches to open-loop pacing at an aggregate
 /// target rate. Inputs are the dataset's standard test split, rebuilt
 /// client-side without training (`api::test_inputs`). `--shutdown`
-/// sends a shutdown frame afterwards. Emits benchkit rows titled by
+/// sends a shutdown frame afterwards. `--swap-at N --swap-program
+/// P.json [--swap-id ID]` hot-swaps the targets' active program
+/// mid-run: after the Nth answered request one client loads the
+/// artifact on every target, then activates it everywhere, while the
+/// other clients keep the load flowing — the reported numbers span the
+/// swap window. Emits benchkit rows titled by
 /// `--tag` (default `net_loopback`; `BENCH_<tag>.json` when
 /// `DT2CAM_BENCH_JSON_DIR` is set) so CI archives wire throughput and
 /// tail latency per run — distinct tags keep e.g. the pipelined smoke
@@ -660,10 +679,31 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
         .opt_usize("requests")?
         .unwrap_or(if quick { 64 } else { 1024 });
     let do_shutdown = args.flag("shutdown");
+    let swap_at = args.opt_usize("swap-at")?.unwrap_or(0);
+    let swap_program = args.opt_str("swap-program");
+    let swap_id_arg = args.opt_str("swap-id");
     args.finish()?;
     anyhow::ensure!(clients >= 1, "--clients must be >= 1");
     anyhow::ensure!(requests >= 1, "--requests must be >= 1");
     anyhow::ensure!(rps >= 0.0, "--rps must be >= 0 (0 = closed loop)");
+    if swap_at > 0 || swap_program.is_some() || swap_id_arg.is_some() {
+        anyhow::ensure!(
+            swap_at > 0 && swap_program.is_some(),
+            "--swap-at N and --swap-program P.json go together (and --swap-id \
+             requires both): the trigger needs a threshold and an artifact"
+        );
+        anyhow::ensure!(
+            rps == 0.0,
+            "--swap-at requires the closed loop (drop --rps): the trigger counts \
+             answered requests"
+        );
+        anyhow::ensure!(
+            swap_at < requests,
+            "--swap-at {swap_at} must be < --requests {requests} (the swap must land \
+             mid-run to be measured)"
+        );
+    }
+    let swap_id = swap_id_arg.unwrap_or_else(|| "swap".into());
 
     let (inputs, _) = crate::api::test_inputs(&name, seed)?;
     eprintln!(
@@ -676,10 +716,45 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
         },
         inputs.len()
     );
+    // The hot-swap trigger: whichever client lands the --swap-at'th
+    // answered request loads the swap artifact on every target, then
+    // activates it everywhere — load-everywhere-then-activate so a
+    // routed fleet never serves from mixed resident sets mid-swap.
+    let trigger: Option<Box<dyn FnOnce() + Send>> = match &swap_program {
+        None => None,
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading swap artifact {path}"))?;
+            let artifact = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+            let targets = targets.clone();
+            let id = swap_id.clone();
+            let path = path.clone();
+            Some(Box::new(move || {
+                for addr in &targets {
+                    if let Err(e) = net::Client::connect(addr)
+                        .and_then(|mut c| c.load_program(&id, &artifact).map(drop))
+                    {
+                        eprintln!("swap: loading {path} as {id:?} on {addr}: {e:#}");
+                        return;
+                    }
+                }
+                for addr in &targets {
+                    match net::Client::connect(addr)
+                        .and_then(|mut c| c.activate_program(&id).map(drop))
+                    {
+                        Ok(()) => eprintln!("swap: activated {id:?} on {addr}"),
+                        Err(e) => eprintln!("swap: activating {id:?} on {addr}: {e:#}"),
+                    }
+                }
+            }))
+        }
+    };
     let report = if rps > 0.0 {
         net::open_loop_multi(&targets, &inputs, clients, rps, requests)?
     } else {
-        net::closed_loop_multi(&targets, &inputs, clients, requests)?
+        net::closed_loop_multi_with_trigger(
+            &targets, &inputs, clients, requests, swap_at, trigger,
+        )?
     };
     println!("{}", report.summary_line());
     for (addr, sub) in &report.per_target {
@@ -691,6 +766,7 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
     b.report_value("latency_p50_us", report.p50 * 1e6, "us");
     b.report_value("latency_p99_us", report.p99 * 1e6, "us");
     b.report_value("shed", report.shed as f64, "requests");
+    b.report_value("errors", report.errors as f64, "requests");
     b.finish();
 
     // Per-stage server-side time breakdown from the obs scrape —
@@ -714,6 +790,87 @@ pub fn loadgen(args: &mut Args) -> Result<()> {
             eprintln!("sent shutdown frame to {addr}");
         }
     }
+    Ok(())
+}
+
+/// Shared prologue for the admin-plane commands: dial `--connect` and
+/// print the program table the server answered with.
+fn print_program_table(programs: &[net::ProgramInfo]) {
+    println!(
+        "{:<20} {:>8} {:>7} {:>6} {:>10} {:>9}",
+        "PROGRAM", "VERSION", "ACTIVE", "BANKS", "ROWS_PHYS", "IN_FLIGHT"
+    );
+    for p in programs {
+        println!(
+            "{:<20} {:>8} {:>7} {:>6} {:>10} {:>9}",
+            p.id,
+            p.version,
+            if p.active { "yes" } else { "" },
+            p.banks,
+            p.rows_physical,
+            p.in_flight
+        );
+    }
+}
+
+/// `dt2cam load`: upload a `compile --save` artifact to a live server
+/// under `--id`. The server verifies the artifact before admitting it
+/// to its program registry (a corrupt or verifier-rejected artifact is
+/// refused with a typed error and the registry is left untouched); the
+/// loaded program serves pinned traffic immediately and unpinned
+/// traffic after `dt2cam activate`.
+pub fn load(args: &mut Args) -> Result<()> {
+    let connect = args
+        .opt_str("connect")
+        .context("--connect ADDR is required (the `dt2cam serve --listen` address)")?;
+    let id = args
+        .opt_str("id")
+        .context("--id ID is required (the registry name for the program)")?;
+    let program_path = args
+        .opt_str("program")
+        .context("--program PATH is required (a `compile --save` artifact)")?;
+    args.finish()?;
+    let text = std::fs::read_to_string(&program_path)
+        .with_context(|| format!("reading program artifact {program_path}"))?;
+    let artifact = Json::parse(&text).with_context(|| format!("parsing {program_path}"))?;
+    let programs = net::Client::connect(&connect)?
+        .load_program(&id, &artifact)
+        .with_context(|| format!("loading {program_path} as {id:?} on {connect}"))?;
+    eprintln!("loaded {program_path} as {id:?} on {connect}");
+    print_program_table(&programs);
+    Ok(())
+}
+
+/// `dt2cam activate`: switch a live server's unpinned traffic to the
+/// loaded program `--id`. Atomic at the admission point: batches
+/// already admitted finish on the version they were admitted under.
+pub fn activate(args: &mut Args) -> Result<()> {
+    let connect = args
+        .opt_str("connect")
+        .context("--connect ADDR is required (the `dt2cam serve --listen` address)")?;
+    let id = args
+        .opt_str("id")
+        .context("--id ID is required (a program previously loaded with `dt2cam load`)")?;
+    args.finish()?;
+    let programs = net::Client::connect(&connect)?
+        .activate_program(&id)
+        .with_context(|| format!("activating {id:?} on {connect}"))?;
+    eprintln!("activated {id:?} on {connect}");
+    print_program_table(&programs);
+    Ok(())
+}
+
+/// `dt2cam programs`: list a live server's resident programs — id,
+/// registry version, active flag, shape, and in-flight batch count.
+pub fn programs(args: &mut Args) -> Result<()> {
+    let connect = args
+        .opt_str("connect")
+        .context("--connect ADDR is required (the `dt2cam serve --listen` address)")?;
+    args.finish()?;
+    let programs = net::Client::connect(&connect)?
+        .programs()
+        .with_context(|| format!("listing programs on {connect}"))?;
+    print_program_table(&programs);
     Ok(())
 }
 
@@ -996,8 +1153,8 @@ pub fn worker(args: &mut Args) -> Result<()> {
     let tracer = server.tracer();
     let report = server.join()?;
     println!(
-        "worker stopped: conns={} shed={} protocol_errors={}",
-        report.connections, report.shed, report.protocol_errors
+        "worker stopped: conns={} shed={} protocol_errors={} dropped={}",
+        report.connections, report.shed, report.protocol_errors, report.dropped_responses
     );
     println!("{}", report.metrics.summary_line());
     write_trace_out(&trace_out, &tracer)?;
@@ -1060,8 +1217,8 @@ pub fn router(args: &mut Args) -> Result<()> {
     let tracer = server.tracer();
     let report = server.join()?;
     println!(
-        "router stopped: conns={} shed={} protocol_errors={}",
-        report.connections, report.shed, report.protocol_errors
+        "router stopped: conns={} shed={} protocol_errors={} dropped={}",
+        report.connections, report.shed, report.protocol_errors, report.dropped_responses
     );
     println!("{}", report.metrics.summary_line());
     write_trace_out(&trace_out, &tracer)?;
@@ -1656,6 +1813,111 @@ mod tests {
             "{err:#}"
         );
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn serve_validates_max_programs_flag() {
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --listen 127.0.0.1:0 --max-programs 0",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--max-programs"), "{err:#}");
+        // --max-programs without --listen is a contradiction, not a no-op.
+        let err = serve(&mut args(
+            "serve --dataset iris --tile-size 16 --max-programs 4",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--listen"), "{err:#}");
+    }
+
+    #[test]
+    fn loadgen_validates_swap_flags() {
+        // --swap-at without --swap-program (and vice versa) is an error.
+        let err = loadgen(&mut args(
+            "loadgen --connect 127.0.0.1:1 --dataset iris --swap-at 8",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--swap-program"), "{err:#}");
+        let err = loadgen(&mut args(
+            "loadgen --connect 127.0.0.1:1 --dataset iris --swap-program x.json",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--swap-at"), "{err:#}");
+        // The trigger counts closed-loop completions; open loop conflicts.
+        let err = loadgen(&mut args(
+            "loadgen --connect 127.0.0.1:1 --dataset iris --rps 10 \
+             --swap-at 8 --swap-program x.json",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("closed loop"), "{err:#}");
+        // The swap must land mid-run.
+        let err = loadgen(&mut args(
+            "loadgen --connect 127.0.0.1:1 --dataset iris --requests 8 \
+             --swap-at 8 --swap-program x.json",
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("mid-run"), "{err:#}");
+    }
+
+    #[test]
+    fn admin_commands_require_their_flags() {
+        let err = load(&mut args("load --id a --program x.json")).unwrap_err();
+        assert!(format!("{err:#}").contains("--connect"));
+        let err = load(&mut args("load --connect 127.0.0.1:1 --program x.json")).unwrap_err();
+        assert!(format!("{err:#}").contains("--id"));
+        let err = load(&mut args("load --connect 127.0.0.1:1 --id a")).unwrap_err();
+        assert!(format!("{err:#}").contains("--program"));
+        let err = activate(&mut args("activate --connect 127.0.0.1:1")).unwrap_err();
+        assert!(format!("{err:#}").contains("--id"));
+        let err = programs(&mut args("programs")).unwrap_err();
+        assert!(format!("{err:#}").contains("--connect"));
+    }
+
+    #[test]
+    fn load_activate_programs_commands_drive_a_live_server() {
+        let swap = tmpfile("cli_swap.json");
+        let _ = std::fs::remove_file(&swap);
+        compile(&mut args(&format!(
+            "compile --dataset iris --tile-size 16 --forest 3 --max-features 2 --save {}",
+            swap.display()
+        )))
+        .unwrap();
+
+        let model = Dt2Cam::dataset("iris").unwrap();
+        let mapped = model.compile().map(16, &DeviceParams::default());
+        let server = net::Server::spawn(
+            "127.0.0.1:0",
+            net::ServerConfig::default(),
+            move || Ok(mapped.session(EngineKind::Native, 8)?.into_coordinator()),
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+
+        load(&mut args(&format!(
+            "load --connect {addr} --id forest --program {}",
+            swap.display()
+        )))
+        .unwrap();
+        programs(&mut args(&format!("programs --connect {addr}"))).unwrap();
+        activate(&mut args(&format!("activate --connect {addr} --id forest"))).unwrap();
+        // Activating an id that was never loaded is a typed refusal.
+        let err = activate(&mut args(&format!("activate --connect {addr} --id ghost")))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+
+        // loadgen --swap-at drives the same plane mid-run: every request
+        // is answered (the swap sheds/drops nothing).
+        loadgen(&mut args(&format!(
+            "loadgen --connect {addr} --dataset iris --quick --clients 2 --requests 16 \
+             --swap-at 4 --swap-program {} --swap-id forest2 --tag net_cli_swap --shutdown",
+            swap.display()
+        )))
+        .unwrap();
+        let report = server.join().unwrap();
+        assert_eq!(report.metrics.decisions, 16);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.dropped_responses, 0);
+        let _ = std::fs::remove_file(&swap);
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "worker" => commands::worker(&mut args),
         "router" => commands::router(&mut args),
         "loadgen" => commands::loadgen(&mut args),
+        "load" => commands::load(&mut args),
+        "activate" => commands::activate(&mut args),
+        "programs" => commands::programs(&mut args),
         "trace" => commands::trace(&mut args),
         "check" => commands::check(&mut args),
         "backends" => commands::backends(&mut args),
@@ -81,7 +84,7 @@ USAGE:
   dt2cam serve    --program PROGRAM.json [--engine ENGINE] [--batch B]
   dt2cam serve    --listen ADDR [--admission N] (--dataset NAME | --program P.json)
                   [--engine ENGINE] [--batch B] [--forest N] [--pipelined]
-                  [--trace-sample N [--trace-out SPANS.json]]
+                  [--max-programs N] [--trace-sample N [--trace-out SPANS.json]]
   dt2cam worker   --listen ADDR --banks LIST (--dataset NAME | --program P.json)
                   [--engine ENGINE] [--batch B] [--admission N]
                   [--trace-sample N [--trace-out SPANS.json]]
@@ -90,6 +93,10 @@ USAGE:
                   [--trace-sample N [--trace-out SPANS.json]]
   dt2cam loadgen  --connect ADDR[,ADDR...] --dataset NAME [--clients N] [--rps R]
                   [--requests N] [--seed SEED] [--tag NAME] [--quick] [--shutdown]
+                  [--swap-at N --swap-program P.json [--swap-id ID]]
+  dt2cam load     --connect ADDR --id ID --program PROGRAM.json
+  dt2cam activate --connect ADDR --id ID
+  dt2cam programs --connect ADDR
   dt2cam trace    --connect ADDR --out SPANS.json [--n N]
   dt2cam check    (--program PROGRAM.json | --dataset NAME [--tile-size S]
                   [--forest N] [--sample-fraction F] [--max-features K]
@@ -141,6 +148,17 @@ the unchanged protocol. Router and workers must load the same program
 flags — training is deterministic). Workers advertise the loaded
 program's identity over health probes and the router refuses a
 mismatched (wrong or stale) artifact at dial time.
+`load`/`activate`/`programs` are the online lifecycle admin plane: a
+listening server keeps an LRU-bounded registry of up to `--max-programs`
+mapped programs (default 4). `load` uploads a `compile --save` artifact
+under an id (verified before admission — a rejected artifact leaves the
+registry untouched); `activate` switches unpinned traffic to it
+atomically at the admission point (batches already admitted finish on
+their original version); `programs` lists residents. A request frame's
+optional `program` field pins it to one tenant regardless of the active
+id. `loadgen --swap-at N --swap-program P.json` loads and activates a
+second program after the Nth answered request of a measured run — the
+hot-swap-under-load benchmark. See docs/API.md § Model lifecycle.
 `--trace-sample N` traces every Nth admitted request end to end
 (admission → queue → dispatch → bank match / pipeline stages → remote
 round-trip → vote → respond) into a bounded in-memory span ring;

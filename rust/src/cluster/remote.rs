@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::api::backend::{RemoteBankDispatch, RemoteBankOutcome, RemoteWorkerStatus};
+use crate::api::backend::{ProgramStamp, RemoteBankDispatch, RemoteBankOutcome, RemoteWorkerStatus};
 use crate::net::{Client, Frame};
 
 use super::placement::Placement;
@@ -213,6 +213,7 @@ impl RemoteDispatch {
         banks: &[usize],
         rows: &[Vec<f64>],
         trace: u64,
+        program: &ProgramStamp,
     ) -> Option<u64> {
         let id = self.next_wire_id;
         self.next_wire_id += 1;
@@ -224,6 +225,9 @@ impl RemoteDispatch {
             banks: banks.to_vec(),
             rows: rows.to_vec(),
             trace,
+            program: program.id.clone(),
+            pbanks: program.banks,
+            prows: program.rows_physical,
         };
         if client.send_frame(&batch).is_err() {
             link.mark_dead();
@@ -302,7 +306,12 @@ impl RemoteBankDispatch for RemoteDispatch {
         self.n_banks
     }
 
-    fn run_banks(&mut self, rows: &[Vec<f64>], trace: u64) -> Result<Vec<RemoteBankOutcome>> {
+    fn run_banks(
+        &mut self,
+        rows: &[Vec<f64>],
+        trace: u64,
+        program: &ProgramStamp,
+    ) -> Result<Vec<RemoteBankOutcome>> {
         anyhow::ensure!(!rows.is_empty(), "remote dispatch needs at least one row");
         let mut slots: Vec<Option<RemoteBankOutcome>> = (0..self.n_banks).map(|_| None).collect();
         // Workers excluded for the rest of this batch (failed, shed, or
@@ -331,7 +340,7 @@ impl RemoteBankDispatch for RemoteDispatch {
             // bank sets are disjoint evaluate this batch concurrently.
             let sent: Vec<Option<u64>> = groups
                 .iter()
-                .map(|(w, banks)| self.send_to_worker(*w, banks, rows, trace))
+                .map(|(w, banks)| self.send_to_worker(*w, banks, rows, trace, program))
                 .collect();
             for ((w, banks), id) in groups.iter().zip(sent) {
                 let ok = match id {

@@ -5,6 +5,15 @@
 //! quantity; the batcher's job is classic serving-systems work — fill
 //! lanes quickly, never hold a request past its deadline, pad partial
 //! batches with dead lanes.
+//!
+//! Since the server became multi-program (hot swap, pinned tenants),
+//! pending batches are **keyed by `(program id, version)`**: a batch
+//! dispatches against exactly one program's banks, so two programs'
+//! rows must never coalesce into one hardware batch — not even across
+//! the instant an activation lands between a `submit` and the next
+//! `take_due`. Requests stay FIFO *within* a key, which is what keeps
+//! per-tenant classes and modeled energy bit-identical to
+//! single-program serving.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -19,6 +28,11 @@ pub struct InferenceRequest {
     /// tracing; 0 = untraced (the common case — span recording is a
     /// single branch then).
     pub trace: u64,
+    /// Tenant pin: `Some(id)` routes to that resident program
+    /// regardless of which id is active; `None` follows the active id
+    /// at admission. Carried on the request so the wire reader can
+    /// stamp it without widening the scheduler channel's message shape.
+    pub program: Option<String>,
 }
 
 impl InferenceRequest {
@@ -28,6 +42,7 @@ impl InferenceRequest {
             features,
             arrived: Instant::now(),
             trace: 0,
+            program: None,
         }
     }
 
@@ -38,12 +53,40 @@ impl InferenceRequest {
             ..InferenceRequest::new(id, features)
         }
     }
+
+    /// Pin this request to a program id (builder-style; `None` clears).
+    pub fn with_program(mut self, program: Option<String>) -> InferenceRequest {
+        self.program = program;
+        self
+    }
 }
 
-/// Deadline-driven fixed-width batcher.
+/// The identity a pending batch dispatches against: which program, and
+/// which loaded version of it. Stamped at admission — an activation or
+/// reload between admission and dispatch changes *future* keys, never
+/// a stamped one.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub program: String,
+    pub version: u64,
+}
+
+impl BatchKey {
+    pub fn new(program: &str, version: u64) -> BatchKey {
+        BatchKey {
+            program: program.to_string(),
+            version,
+        }
+    }
+}
+
+/// Deadline-driven fixed-width batcher, keyed by program version.
 #[derive(Debug)]
 pub struct Batcher {
-    queue: VecDeque<InferenceRequest>,
+    /// One FIFO queue per batch key, in key-arrival order. Emptied
+    /// queues are dropped so stale `(id, version)` keys from old swaps
+    /// cannot accumulate.
+    queues: Vec<(BatchKey, VecDeque<InferenceRequest>)>,
     batch_width: usize,
     max_wait: Duration,
 }
@@ -52,18 +95,25 @@ impl Batcher {
     pub fn new(batch_width: usize, max_wait: Duration) -> Batcher {
         assert!(batch_width >= 1);
         Batcher {
-            queue: VecDeque::new(),
+            queues: Vec::new(),
             batch_width,
             max_wait,
         }
     }
 
-    pub fn push(&mut self, req: InferenceRequest) {
-        self.queue.push_back(req);
+    pub fn push(&mut self, key: BatchKey, req: InferenceRequest) {
+        match self.queues.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, q)) => q.push_back(req),
+            None => {
+                let mut q = VecDeque::new();
+                q.push_back(req);
+                self.queues.push((key, q));
+            }
+        }
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
     pub fn batch_width(&self) -> usize {
@@ -81,26 +131,29 @@ impl Batcher {
         self.max_wait = max_wait;
     }
 
-    /// Take the next batch if one is ready: either a full batch, or a
-    /// partial one whose oldest request has waited past `max_wait`.
-    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<InferenceRequest>> {
-        if self.queue.is_empty() {
-            return None;
+    /// Take the next batch if one is ready: the first key (in arrival
+    /// order) holding either a full batch or a partial one whose oldest
+    /// request has waited past `max_wait`. The batch never mixes keys.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(BatchKey, Vec<InferenceRequest>)> {
+        let idx = self.queues.iter().position(|(_, q)| {
+            q.len() >= self.batch_width
+                || q.front()
+                    .is_some_and(|r| now.duration_since(r.arrived) >= self.max_wait)
+        })?;
+        let n = self.queues[idx].1.len().min(self.batch_width);
+        let batch: Vec<InferenceRequest> = self.queues[idx].1.drain(..n).collect();
+        let key = self.queues[idx].0.clone();
+        if self.queues[idx].1.is_empty() {
+            self.queues.remove(idx);
         }
-        let full = self.queue.len() >= self.batch_width;
-        let overdue = now.duration_since(self.queue[0].arrived) >= self.max_wait;
-        if !full && !overdue {
-            return None;
-        }
-        let n = self.queue.len().min(self.batch_width);
-        Some(self.queue.drain(..n).collect())
+        Some((key, batch))
     }
 
     /// Drain every batch due at `now` (full batches and overdue
     /// partials); with `force` also flush the remainder. The one call
     /// site both coordinator execution modes (sequential and pipelined)
     /// share, so their release policy cannot drift.
-    pub fn take_due(&mut self, now: Instant, force: bool) -> Vec<Vec<InferenceRequest>> {
+    pub fn take_due(&mut self, now: Instant, force: bool) -> Vec<(BatchKey, Vec<InferenceRequest>)> {
         let mut out = Vec::new();
         while let Some(b) = self.next_batch(now) {
             out.push(b);
@@ -111,12 +164,15 @@ impl Batcher {
         out
     }
 
-    /// Drain everything into batches (end-of-stream flush).
-    pub fn flush(&mut self) -> Vec<Vec<InferenceRequest>> {
+    /// Drain everything into batches (end-of-stream flush), per key in
+    /// key-arrival order.
+    pub fn flush(&mut self) -> Vec<(BatchKey, Vec<InferenceRequest>)> {
         let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let n = self.queue.len().min(self.batch_width);
-            out.push(self.queue.drain(..n).collect());
+        for (key, mut q) in self.queues.drain(..) {
+            while !q.is_empty() {
+                let n = q.len().min(self.batch_width);
+                out.push((key.clone(), q.drain(..n).collect()));
+            }
         }
         out
     }
@@ -130,13 +186,18 @@ mod tests {
         InferenceRequest::new(id, vec![0.0])
     }
 
+    fn key() -> BatchKey {
+        BatchKey::new("default", 1)
+    }
+
     #[test]
     fn full_batch_releases_immediately() {
         let mut b = Batcher::new(4, Duration::from_secs(10));
         for i in 0..4 {
-            b.push(req(i));
+            b.push(key(), req(i));
         }
-        let batch = b.next_batch(Instant::now()).unwrap();
+        let (k, batch) = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(k, key());
         assert_eq!(batch.len(), 4);
         assert_eq!(b.pending(), 0);
     }
@@ -144,10 +205,10 @@ mod tests {
     #[test]
     fn partial_batch_waits_for_deadline() {
         let mut b = Batcher::new(4, Duration::from_millis(50));
-        b.push(req(0));
+        b.push(key(), req(0));
         assert!(b.next_batch(Instant::now()).is_none());
         let later = Instant::now() + Duration::from_millis(60);
-        let batch = b.next_batch(later).unwrap();
+        let (_, batch) = b.next_batch(later).unwrap();
         assert_eq!(batch.len(), 1);
     }
 
@@ -159,9 +220,9 @@ mod tests {
         let mut b = Batcher::new(4, Duration::from_millis(50));
         let r = req(0);
         let boundary = r.arrived + Duration::from_millis(50);
-        b.push(r);
+        b.push(key(), r);
         assert!(b.next_batch(boundary - Duration::from_millis(1)).is_none());
-        let batch = b.next_batch(boundary).unwrap();
+        let (_, batch) = b.next_batch(boundary).unwrap();
         assert_eq!(batch.len(), 1);
         assert_eq!(b.pending(), 0);
     }
@@ -177,42 +238,42 @@ mod tests {
     fn oversize_queue_yields_width_sized_batches() {
         let mut b = Batcher::new(3, Duration::from_secs(1));
         for i in 0..7 {
-            b.push(req(i));
+            b.push(key(), req(i));
         }
-        assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 3);
-        assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 3);
+        assert_eq!(b.next_batch(Instant::now()).unwrap().1.len(), 3);
+        assert_eq!(b.next_batch(Instant::now()).unwrap().1.len(), 3);
         assert!(b.next_batch(Instant::now()).is_none()); // 1 left, not due
         let flushed = b.flush();
         assert_eq!(flushed.len(), 1);
-        assert_eq!(flushed[0].len(), 1);
+        assert_eq!(flushed[0].1.len(), 1);
     }
 
     #[test]
     fn max_wait_can_be_retuned_live() {
         let mut b = Batcher::new(4, Duration::from_secs(3600));
-        b.push(req(0));
+        b.push(key(), req(0));
         assert!(b.next_batch(Instant::now()).is_none());
         b.set_max_wait(Duration::ZERO);
         assert_eq!(b.max_wait(), Duration::ZERO);
         // The queued request is judged against the new deadline.
-        assert_eq!(b.next_batch(Instant::now()).unwrap().len(), 1);
+        assert_eq!(b.next_batch(Instant::now()).unwrap().1.len(), 1);
     }
 
     #[test]
     fn take_due_releases_full_batches_and_flushes_on_force() {
         let mut b = Batcher::new(3, Duration::from_secs(3600));
         for i in 0..7 {
-            b.push(req(i));
+            b.push(key(), req(i));
         }
         // Two full batches release; the partial is held (deadline far).
         let due = b.take_due(Instant::now(), false);
-        assert_eq!(due.iter().map(Vec::len).collect::<Vec<_>>(), vec![3, 3]);
+        assert_eq!(due.iter().map(|(_, v)| v.len()).collect::<Vec<_>>(), vec![3, 3]);
         assert_eq!(b.pending(), 1);
         // Force drains the remainder.
         let forced = b.take_due(Instant::now(), true);
         assert_eq!(forced.len(), 1);
-        assert_eq!(forced[0].len(), 1);
-        assert_eq!(forced[0][0].id, 6);
+        assert_eq!(forced[0].1.len(), 1);
+        assert_eq!(forced[0].1[0].id, 6);
         assert_eq!(b.pending(), 0);
     }
 
@@ -220,14 +281,63 @@ mod tests {
     fn fifo_order_preserved() {
         let mut b = Batcher::new(2, Duration::from_secs(1));
         for i in 0..4 {
-            b.push(req(i));
+            b.push(key(), req(i));
         }
         let ids: Vec<u64> = b
             .next_batch(Instant::now())
             .unwrap()
+            .1
             .iter()
             .map(|r| r.id)
             .collect();
         assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn swap_between_submit_and_take_due_never_mixes_programs() {
+        // Regression for the hot-swap hazard this keying exists for: a
+        // request admitted under (A, 1) is pending when an activation
+        // lands and the next request is stamped (B, 2). A deadline-only
+        // batcher would coalesce both into one hardware batch; keyed,
+        // each dispatches against its own program.
+        let mut b = Batcher::new(4, Duration::ZERO);
+        b.push(BatchKey::new("A", 1), req(0));
+        b.push(BatchKey::new("A", 1), req(1));
+        // …activation flips A→B between submit and take_due…
+        b.push(BatchKey::new("B", 2), req(2));
+        let due = b.take_due(Instant::now(), false);
+        assert_eq!(due.len(), 2, "one batch per key, never one mixed batch");
+        assert_eq!(due[0].0, BatchKey::new("A", 1));
+        assert_eq!(due[0].1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(due[1].0, BatchKey::new("B", 2));
+        assert_eq!(due[1].1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn reload_of_same_id_is_a_distinct_key() {
+        // Same program id, bumped version (an in-place reload): still
+        // two batches — the version is part of the key.
+        let mut b = Batcher::new(8, Duration::ZERO);
+        b.push(BatchKey::new("A", 1), req(0));
+        b.push(BatchKey::new("A", 2), req(1));
+        let due = b.take_due(Instant::now(), false);
+        assert_eq!(due.len(), 2);
+        assert_eq!(due[0].0.version, 1);
+        assert_eq!(due[1].0.version, 2);
+    }
+
+    #[test]
+    fn keys_release_in_arrival_order_and_fifo_within_key() {
+        let mut b = Batcher::new(2, Duration::from_secs(3600));
+        b.push(BatchKey::new("A", 1), req(0));
+        b.push(BatchKey::new("B", 2), req(10));
+        b.push(BatchKey::new("A", 1), req(1));
+        b.push(BatchKey::new("B", 2), req(11));
+        let due = b.take_due(Instant::now(), false);
+        assert_eq!(due.len(), 2);
+        assert_eq!(due[0].0, BatchKey::new("A", 1));
+        assert_eq!(due[0].1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(due[1].1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![10, 11]);
     }
 }

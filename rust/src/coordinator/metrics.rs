@@ -18,6 +18,21 @@ pub struct LatencyPercentiles {
     pub p99: f64,
 }
 
+/// Per-program share of a multi-tenant serving run: how many decisions
+/// each resident program answered and the modeled energy its banks
+/// burned doing so. The aggregate fields on [`Metrics`] are the sums;
+/// this breakdown is what makes A/B serving of two forest variants
+/// observable (`dt2cam programs`, `MetricsSnapshot::per_program`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProgramUsage {
+    /// Program id as loaded (`"default"` for the boot program).
+    pub id: String,
+    /// Decisions answered by this program.
+    pub decisions: u64,
+    /// Modeled energy total (J) attributed to this program's banks.
+    pub modeled_energy: f64,
+}
+
 /// Aggregated over a serving run.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -77,6 +92,10 @@ pub struct Metrics {
     pub queue_hist: Histogram,
     /// Real lanes per dispatched batch.
     pub batch_hist: Histogram,
+    /// Per-program decision/energy attribution, in first-use order.
+    /// Single-program serving shows exactly one entry (the boot
+    /// program); hot-swap and pinned tenants grow it.
+    pub per_program: Vec<ProgramUsage>,
 }
 
 impl Metrics {
@@ -122,6 +141,23 @@ impl Metrics {
     /// single-tree programs; 0 before any batch ran).
     pub fn n_banks(&self) -> usize {
         self.bank_energy.len()
+    }
+
+    /// Attribute one batch's decisions + modeled energy to the program
+    /// that served it (the aggregate is still recorded through
+    /// [`Metrics::record_batch`]; this keeps the per-tenant breakdown).
+    pub fn record_program(&mut self, id: &str, decisions: u64, modeled_energy: f64) {
+        match self.per_program.iter_mut().find(|p| p.id == id) {
+            Some(p) => {
+                p.decisions += decisions;
+                p.modeled_energy += modeled_energy;
+            }
+            None => self.per_program.push(ProgramUsage {
+                id: id.to_string(),
+                decisions,
+                modeled_energy,
+            }),
+        }
     }
 
     /// Record one request's arrival → batch-dispatch wait (at drain).
@@ -220,9 +256,22 @@ impl Metrics {
         } else {
             String::new()
         };
+        // Multi-tenant runs break decisions down per program; a
+        // single-program run's breakdown is the aggregate, so the
+        // segment stays silent then.
+        let programs = if self.per_program.len() > 1 {
+            let parts: Vec<String> = self
+                .per_program
+                .iter()
+                .map(|p| format!("{}:{}", p.id, p.decisions))
+                .collect();
+            format!(" programs={}", parts.join(","))
+        } else {
+            String::new()
+        };
         format!(
             "requests={} decisions={} batches={} e/dec={:.3} nJ rows/dec={:.1} \
-             wall-throughput={:.0} dec/s{pipe} no_match={} multi_match={}{banks}{rows}{lat}{stage_errs}",
+             wall-throughput={:.0} dec/s{pipe} no_match={} multi_match={}{banks}{rows}{programs}{lat}{stage_errs}",
             self.requests,
             self.decisions,
             self.batches,
@@ -349,6 +398,24 @@ mod tests {
         let l = m.latency_percentiles().unwrap();
         assert!((l.p50 - 20e-6).abs() < 1e-12);
         assert!((l.p99 - 20e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_program_attribution_accumulates_and_shows_when_multi_tenant() {
+        let mut m = Metrics::new();
+        assert!(!m.summary_line().contains("programs="));
+        m.record_program("A", 3, 3e-9);
+        // One program: the breakdown equals the aggregate, stay silent.
+        assert!(!m.summary_line().contains("programs="));
+        m.record_program("A", 2, 2e-9);
+        m.record_program("B", 1, 1e-9);
+        assert_eq!(m.per_program.len(), 2);
+        assert_eq!(m.per_program[0].id, "A");
+        assert_eq!(m.per_program[0].decisions, 5);
+        assert!((m.per_program[0].modeled_energy - 5e-9).abs() < 1e-24);
+        assert_eq!(m.per_program[1].decisions, 1);
+        let line = m.summary_line();
+        assert!(line.contains("programs=A:5,B:1"), "{line}");
     }
 
     #[test]

@@ -28,16 +28,27 @@
 //! socket server and the CLI pick the strategy with a flag. Stage
 //! failures are typed ([`StageError`]) and poison only their own batch.
 
+//! [`registry`] holds the online program lifecycle: an LRU-bounded
+//! multi-tenant [`ProgramRegistry`] (one active id, monotonic versions)
+//! behind [`Coordinator::load_program`] / `activate_program` — batches
+//! are keyed by `(program, version)` at admission, so activation is
+//! atomic at the admission point and a swap never mixes two programs'
+//! rows in one batch.
+
 pub mod batcher;
 pub mod metrics;
 pub mod pipeline;
 pub mod plan;
+pub mod registry;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batcher, InferenceRequest};
-pub use metrics::{LatencyPercentiles, Metrics};
+pub use batcher::{BatchKey, Batcher, InferenceRequest};
+pub use metrics::{LatencyPercentiles, Metrics, ProgramUsage};
 pub use pipeline::{run_pipeline, PipeOutcome, StageError, StreamingPipeline};
 pub use plan::ServingPlan;
+pub use registry::{ProgramRegistry, ProgramSlot};
 pub use scheduler::{BatchOutcome, BatchScratch, Scheduler};
-pub use server::{BankSpec, Coordinator, InferenceResponse};
+pub use server::{
+    BankSpec, Coordinator, InferenceResponse, ProgramStatus, DEFAULT_MAX_PROGRAMS, DEFAULT_PROGRAM,
+};

@@ -1,0 +1,371 @@
+//! The program registry: the multi-tenant slot table behind online
+//! program lifecycle (`dt2cam load` / `activate` / `programs`).
+//!
+//! An LRU-bounded map of program id → per-program runtime, with one
+//! **active** id and a monotonic version counter. The registry itself
+//! is generic over the runtime payload `T` (the coordinator stores its
+//! per-program bank runtimes + pipeline state; tests store plain
+//! values) so the lifecycle invariants are testable in isolation:
+//!
+//! * **Versioning** — every successful insert stamps a fresh, strictly
+//!   increasing version (Risingwave-style catalog versioning): a batch
+//!   admitted under `(id, version)` can always detect a reload.
+//! * **Atomic activation** — [`ProgramRegistry::activate`] flips one
+//!   index; requests admitted before the flip finish on their stamped
+//!   slot, requests admitted after route to the new one. There is no
+//!   drain: both slots stay resident and serveable.
+//! * **Pinned safety** — eviction considers only slots that are neither
+//!   active nor carrying in-flight requests; when every slot is
+//!   protected, insertion is refused with a typed error instead of
+//!   evicting work out from under an admitted request.
+//! * **Reload safety** — re-inserting a resident id bumps its version
+//!   in place, but only when the slot has nothing in flight; otherwise
+//!   a stamped batch could silently run on the wrong program bits.
+
+use anyhow::Result;
+
+/// One resident program.
+pub struct ProgramSlot<T> {
+    /// Program id (client-chosen; `"default"` for the boot program).
+    pub id: String,
+    /// Registry-wide monotonic version stamped at insert.
+    pub version: u64,
+    /// The per-program runtime payload.
+    pub runtime: T,
+    /// Logical LRU clock value of the last touch.
+    last_used: u64,
+    /// Requests admitted against this slot and not yet answered.
+    in_flight: u64,
+}
+
+impl<T> ProgramSlot<T> {
+    /// Requests admitted against this slot and not yet answered.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+}
+
+/// LRU-bounded program table with one active id and monotonic
+/// versions. See the module docs for the invariants.
+pub struct ProgramRegistry<T> {
+    slots: Vec<ProgramSlot<T>>,
+    /// Index of the active slot in `slots`.
+    active: usize,
+    /// Next version to stamp (starts at 1; never reused).
+    next_version: u64,
+    /// Logical LRU clock (bumped on every touch).
+    clock: u64,
+    cap: usize,
+}
+
+impl<T> ProgramRegistry<T> {
+    /// A registry holding (and activating) one boot program, bounded at
+    /// `cap` resident programs (clamped to >= 1).
+    pub fn new(cap: usize, id: &str, runtime: T) -> ProgramRegistry<T> {
+        ProgramRegistry {
+            slots: vec![ProgramSlot {
+                id: id.to_string(),
+                version: 1,
+                runtime,
+                last_used: 0,
+                in_flight: 0,
+            }],
+            active: 0,
+            next_version: 2,
+            clock: 1,
+            cap: cap.max(1),
+        }
+    }
+
+    /// Resident program count.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Maximum resident programs.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Retune the bound (clamped to >= 1). Shrinking below the current
+    /// resident count evicts nothing immediately — the next insert
+    /// evicts (or refuses) until the table fits.
+    pub fn set_cap(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+    }
+
+    /// Every resident slot (registry order, not LRU order).
+    pub fn slots(&self) -> &[ProgramSlot<T>] {
+        &self.slots
+    }
+
+    /// Every resident slot, mutably (the coordinator's pipelined poll
+    /// sweeps every resident pipeline).
+    pub fn slots_mut(&mut self) -> &mut [ProgramSlot<T>] {
+        &mut self.slots
+    }
+
+    /// Index of `id`, if resident.
+    pub fn index_of(&self, id: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.id == id)
+    }
+
+    /// Resolve an optional pin to a slot index: `Some(id)` must be
+    /// resident (else `None` is returned and the caller refuses the
+    /// request), `None` follows the active id.
+    pub fn resolve(&self, pin: Option<&str>) -> Option<usize> {
+        match pin {
+            Some(id) => self.index_of(id),
+            None => Some(self.active),
+        }
+    }
+
+    /// The slot at `idx` (indices come from [`ProgramRegistry::resolve`]
+    /// / [`ProgramRegistry::index_of`] and are stable between mutations).
+    pub fn slot(&self, idx: usize) -> &ProgramSlot<T> {
+        &self.slots[idx]
+    }
+
+    /// The slot at `idx`, mutably.
+    pub fn slot_mut(&mut self, idx: usize) -> &mut ProgramSlot<T> {
+        &mut self.slots[idx]
+    }
+
+    /// The active slot.
+    pub fn active_slot(&self) -> &ProgramSlot<T> {
+        &self.slots[self.active]
+    }
+
+    /// The active slot, mutably.
+    pub fn active_slot_mut(&mut self) -> &mut ProgramSlot<T> {
+        &mut self.slots[self.active]
+    }
+
+    /// The active program id.
+    pub fn active_id(&self) -> &str {
+        &self.slots[self.active].id
+    }
+
+    /// Mark `idx` as just-used (LRU bookkeeping) and count one admitted
+    /// request against it. Paired with [`ProgramRegistry::finish`].
+    pub fn begin(&mut self, idx: usize, n: u64) {
+        self.clock += 1;
+        let slot = &mut self.slots[idx];
+        slot.last_used = self.clock;
+        slot.in_flight += n;
+    }
+
+    /// Retire `n` answered requests from program `id`. Saturating — a
+    /// slot evicted and re-inserted between admit and answer (only
+    /// possible at in_flight 0 by construction) must not underflow.
+    pub fn finish(&mut self, id: &str, n: u64) {
+        if let Some(i) = self.index_of(id) {
+            self.slots[i].in_flight = self.slots[i].in_flight.saturating_sub(n);
+        }
+    }
+
+    /// Make `id` the target of all unpinned admissions. Atomic at the
+    /// admission point: nothing about resident slots changes, only the
+    /// routing of *future* submits. Returns the activated version.
+    pub fn activate(&mut self, id: &str) -> Result<u64> {
+        let Some(i) = self.index_of(id) else {
+            anyhow::bail!(
+                "cannot activate unknown program {id:?} (resident: {:?})",
+                self.ids()
+            );
+        };
+        self.active = i;
+        self.clock += 1;
+        self.slots[i].last_used = self.clock;
+        Ok(self.slots[i].version)
+    }
+
+    /// Insert (or reload) a program and stamp a fresh version, which is
+    /// returned. A resident id is replaced in place — refused while it
+    /// has requests in flight. A full registry evicts the
+    /// least-recently-used slot that is neither active nor carrying
+    /// in-flight requests; when every slot is protected the insert is
+    /// refused with a typed error (never evicts admitted work).
+    pub fn insert(&mut self, id: &str, runtime: T) -> Result<u64> {
+        if let Some(i) = self.index_of(id) {
+            let slot = &mut self.slots[i];
+            anyhow::ensure!(
+                slot.in_flight == 0,
+                "cannot reload program {id:?}: {} requests in flight against \
+                 version {} — retry once drained, or load under a new id",
+                slot.in_flight,
+                slot.version
+            );
+            let version = self.next_version;
+            self.next_version += 1;
+            self.clock += 1;
+            let slot = &mut self.slots[i];
+            slot.runtime = runtime;
+            slot.version = version;
+            slot.last_used = self.clock;
+            return Ok(version);
+        }
+        while self.slots.len() >= self.cap {
+            let victim = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| *i != self.active && s.in_flight == 0)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(i, _)| i);
+            let Some(victim) = victim else {
+                anyhow::bail!(
+                    "program registry is full ({} of {}) and every resident program \
+                     is active or has requests in flight — cannot load {id:?}",
+                    self.slots.len(),
+                    self.cap
+                );
+            };
+            let evicted = self.slots.remove(victim);
+            drop(evicted);
+            // The active index may have shifted down by the removal.
+            if victim < self.active {
+                self.active -= 1;
+            }
+        }
+        let version = self.next_version;
+        self.next_version += 1;
+        self.clock += 1;
+        self.slots.push(ProgramSlot {
+            id: id.to_string(),
+            version,
+            runtime,
+            last_used: self.clock,
+            in_flight: 0,
+        });
+        Ok(version)
+    }
+
+    /// Resident program ids (registry order).
+    pub fn ids(&self) -> Vec<&str> {
+        self.slots.iter().map(|s| s.id.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boot_program_is_active_at_version_one() {
+        let r = ProgramRegistry::new(4, "default", 10);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.active_id(), "default");
+        assert_eq!(r.active_slot().version, 1);
+        assert_eq!(r.active_slot().runtime, 10);
+        assert_eq!(r.resolve(None), Some(0));
+        assert_eq!(r.resolve(Some("default")), Some(0));
+        assert_eq!(r.resolve(Some("missing")), None);
+    }
+
+    #[test]
+    fn versions_are_monotonic_across_inserts_and_reloads() {
+        let mut r = ProgramRegistry::new(4, "a", 0);
+        assert_eq!(r.insert("b", 1).unwrap(), 2);
+        assert_eq!(r.insert("c", 2).unwrap(), 3);
+        // Reload in place: same id, fresh version, new runtime.
+        assert_eq!(r.insert("b", 9).unwrap(), 4);
+        let b = r.slot(r.index_of("b").unwrap());
+        assert_eq!((b.version, b.runtime), (4, 9));
+        // The active program never changed.
+        assert_eq!(r.active_id(), "a");
+    }
+
+    #[test]
+    fn activation_flips_routing_only() {
+        let mut r = ProgramRegistry::new(4, "a", 0);
+        r.insert("b", 1).unwrap();
+        assert_eq!(r.activate("b").unwrap(), 2);
+        assert_eq!(r.active_id(), "b");
+        assert_eq!(r.resolve(None), r.index_of("b"));
+        // Both programs stay resident and pinnable.
+        assert_eq!(r.resolve(Some("a")), r.index_of("a"));
+        let err = r.activate("zzz").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown program"), "{err:#}");
+        assert_eq!(r.active_id(), "b", "failed activation changes nothing");
+    }
+
+    #[test]
+    fn lru_eviction_picks_least_recently_used_idle_slot() {
+        let mut r = ProgramRegistry::new(3, "a", 0);
+        r.insert("b", 1).unwrap();
+        r.insert("c", 2).unwrap();
+        // Touch b after c: a is LRU among non-active… but a is active,
+        // so the eviction order considers b and c only. Touch b, making
+        // c the victim.
+        let b = r.index_of("b").unwrap();
+        r.begin(b, 1);
+        r.finish("b", 1);
+        r.insert("d", 3).unwrap();
+        assert_eq!(r.len(), 3);
+        assert!(r.index_of("c").is_none(), "c was LRU and idle");
+        assert!(r.index_of("a").is_some(), "active is never evicted");
+        assert!(r.index_of("b").is_some());
+        assert!(r.index_of("d").is_some());
+        assert_eq!(r.active_id(), "a", "eviction must not move the active id");
+    }
+
+    #[test]
+    fn eviction_never_touches_active_or_in_flight_slots() {
+        let mut r = ProgramRegistry::new(2, "a", 0);
+        r.insert("b", 1).unwrap();
+        // Pin b with one in-flight request: both slots are now
+        // protected (a active, b in flight) — insert must refuse.
+        let b = r.index_of("b").unwrap();
+        r.begin(b, 1);
+        let err = r.insert("c", 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("registry is full"), "{msg}");
+        assert!(msg.contains("\"c\""), "refusal names the program: {msg}");
+        assert_eq!(r.len(), 2, "refused insert leaves the registry untouched");
+        // Drain b; now it is evictable and the insert succeeds.
+        r.finish("b", 1);
+        r.insert("c", 2).unwrap();
+        assert!(r.index_of("b").is_none());
+        assert!(r.index_of("c").is_some());
+    }
+
+    #[test]
+    fn reload_refused_while_requests_in_flight() {
+        let mut r = ProgramRegistry::new(4, "a", 0);
+        r.insert("b", 1).unwrap();
+        let b = r.index_of("b").unwrap();
+        r.begin(b, 2);
+        let err = r.insert("b", 9).unwrap_err();
+        assert!(format!("{err:#}").contains("2 requests in flight"), "{err:#}");
+        // Untouched: old version, old runtime.
+        let slot = r.slot(r.index_of("b").unwrap());
+        assert_eq!((slot.version, slot.runtime), (2, 1));
+        r.finish("b", 2);
+        assert_eq!(r.insert("b", 9).unwrap(), 3);
+    }
+
+    #[test]
+    fn eviction_preserves_the_active_index() {
+        // Active slot sits *after* the victim in the vec: removal must
+        // re-point the active index, not silently activate a neighbor.
+        let mut r = ProgramRegistry::new(2, "a", 0);
+        r.insert("b", 1).unwrap();
+        r.activate("b").unwrap();
+        // a is now idle and LRU; inserting c evicts it. b (active)
+        // shifted down one index.
+        r.insert("c", 2).unwrap();
+        assert_eq!(r.active_id(), "b");
+        assert!(r.index_of("a").is_none());
+        r.begin(r.resolve(None).unwrap(), 1);
+        assert_eq!(r.active_slot().in_flight(), 1);
+    }
+
+    #[test]
+    fn finish_is_saturating_and_ignores_unknown_ids() {
+        let mut r = ProgramRegistry::new(2, "a", 0);
+        r.finish("a", 5);
+        assert_eq!(r.active_slot().in_flight(), 0);
+        r.finish("ghost", 1);
+    }
+}

@@ -46,11 +46,22 @@ use crate::synth::mapping::MappedArray;
 use crate::tcam::params::DeviceParams;
 use crate::util::threadpool::ThreadPool;
 
-use super::batcher::{Batcher, InferenceRequest};
+use super::batcher::{BatchKey, Batcher, InferenceRequest};
 use super::metrics::Metrics;
 use super::pipeline::{PipeOutcome, StreamingPipeline, PIPELINE_DRAIN_TIMEOUT};
 use super::plan::ServingPlan;
+use super::registry::ProgramRegistry;
 use super::scheduler::{BatchOutcome, BatchScratch, Scheduler};
+
+use crate::api::backend::ProgramStamp;
+
+/// Program id every coordinator boots with (the program its
+/// constructor was handed). `dt2cam load` adds tenants next to it.
+pub const DEFAULT_PROGRAM: &str = "default";
+
+/// Resident-program bound a coordinator starts with
+/// (`serve --max-programs` retunes it).
+pub const DEFAULT_MAX_PROGRAMS: usize = 4;
 
 /// One answered request.
 #[derive(Clone, Debug)]
@@ -64,13 +75,38 @@ pub struct InferenceResponse {
     pub modeled_latency: f64,
     /// Set when serving this request's batch failed (a rendered
     /// [`StageError`](super::pipeline::StageError) from the pipelined
-    /// mode); `class` carries no information then. The socket server
+    /// mode, or an admission refusal — unknown pin, short feature
+    /// vector); `class` carries no information then. The socket server
     /// routes such responses as typed error frames.
     pub error: Option<String>,
     /// Trace id this response answers (copied from the request; 0 =
     /// untraced). The socket server echoes it in the response frame so
     /// clients can correlate answers with exported spans.
     pub trace: u64,
+    /// Admission stamp: the program id this request was admitted
+    /// against (empty only for refusals of unknown pins).
+    pub program: String,
+    /// Admission stamp: the program version (0 only for refusals of
+    /// unknown pins). In-flight batches finish on the version they were
+    /// admitted under even across an `activate` — this stamp is the
+    /// proof.
+    pub version: u64,
+}
+
+/// One row of [`Coordinator::program_list`] — the serving-side truth
+/// behind the `Frame::Programs` admin reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgramStatus {
+    pub id: String,
+    pub version: u64,
+    pub active: bool,
+    /// Whole-program bank count (identity figure, not the local
+    /// subset's).
+    pub banks: usize,
+    /// Whole-program physical rows (identity figure).
+    pub rows_physical: u64,
+    /// Requests admitted against this program and not yet answered.
+    pub in_flight: u64,
 }
 
 /// One bank's compiled + mapped pieces handed to
@@ -136,44 +172,92 @@ struct PipelineState {
     busy_since: Option<Instant>,
 }
 
-/// The serving coordinator. Owns one plan per bank and the bank
-/// dispatch; single-threaded facade (the PJRT backend is `!Send`), with
-/// bank-level fan-out (and row-tile parallelism inside the backend) for
-/// `Send + Sync` backends, and an optional streaming stage pipeline per
-/// bank ([`Coordinator::with_banks_pipelined`]).
-pub struct Coordinator {
+/// Everything one resident *program* needs on the request path — the
+/// registry payload. One of these per tenant; the active one serves
+/// unpinned traffic.
+struct ProgramRuntime {
     banks: Vec<BankRuntime>,
     /// Global bank id of each local bank (identity for a coordinator
     /// serving the whole program; a strict ascending subset on a
     /// cluster worker — see [`Coordinator::set_bank_ids`]).
     bank_ids: Vec<usize>,
     n_classes: usize,
+    /// Minimum feature-vector length a request for this program must
+    /// carry (largest projected original-feature index + 1).
+    n_features: usize,
+    /// Modeled per-decision latency (slowest bank + vote stage).
+    modeled_latency: f64,
+    /// Modeled pipelined throughput (0 in batch-sequential mode).
+    modeled_pipe_throughput: f64,
+    /// Logical rows the banks evaluate / rows their artifacts store.
+    rows_total: u64,
+    rows_physical: u64,
+    /// Program identity advertised over `Frame::Health` and checked
+    /// against `Frame::BankBatch` stamps (the format is always
+    /// [`MAPPED_FORMAT`]): bank count and physical rows of the *whole*
+    /// program. Defaults to the locally served figures; a cluster
+    /// worker serving a placement subset overwrites them with the full
+    /// program's so every worker advertises one identity.
+    program_banks: usize,
+    program_rows_physical: u64,
+    /// Streaming pipelined execution (None = batch-sequential walk).
+    /// Per program: each tenant streams through its own bank stages,
+    /// so a swap never flushes another tenant's in-flight batches.
+    pipeline: Option<PipelineState>,
+}
+
+/// Construction recipe for pipelined coordinators, retained so
+/// programs loaded later get their own stage pipelines.
+struct PipeConfig {
+    backend: Arc<dyn MatchBackend + Send + Sync>,
+    depth: usize,
+}
+
+/// The serving coordinator. Owns the program registry (one
+/// [`ProgramRuntime`] per resident tenant, one active id) and the bank
+/// dispatch; single-threaded facade (the PJRT backend is `!Send`), with
+/// bank-level fan-out (and row-tile parallelism inside the backend) for
+/// `Send + Sync` backends, and an optional streaming stage pipeline per
+/// bank ([`Coordinator::with_banks_pipelined`]).
+///
+/// **Lifecycle semantics** (`load_program` / `activate_program`):
+/// admissions stamp `(program id, version)` at submit time and the
+/// batcher keys on that stamp, so a batch never mixes programs;
+/// activation flips one registry index and only re-routes *future*
+/// unpinned submits — in-flight batches finish on the slot they were
+/// admitted under, which reload/eviction cannot touch while requests
+/// are in flight.
+pub struct Coordinator {
+    programs: ProgramRegistry<ProgramRuntime>,
     params: DeviceParams,
     dispatch: BankDispatch,
     /// Bank fan-out pool — present only for parallel dispatch over more
     /// than one bank (used for batch execution in sequential mode and
-    /// for per-bank query encoding in both modes).
+    /// for per-bank query encoding in both modes). Sized for the widest
+    /// resident program.
     pool: Option<ThreadPool>,
+    /// Worker count the pool was built for (0 = no pool).
+    pool_banks: usize,
     batcher: Batcher,
-    /// Modeled per-decision latency (slowest bank + vote stage).
-    modeled_latency: f64,
+    /// Batch width, retained to warm later-loaded programs identically.
+    batch: usize,
     pub metrics: Metrics,
-    /// Streaming pipelined execution (None = batch-sequential walk).
-    pipeline: Option<PipelineState>,
-    /// Program identity advertised over `Frame::Health` (the format is
-    /// always [`MAPPED_FORMAT`]): bank count and physical rows of the
-    /// *whole program*. Defaults to the locally served figures; a
-    /// cluster worker serving a placement subset overwrites them with
-    /// the full program's ([`Coordinator::set_program_identity`]) so
-    /// the router compares every worker against one expected identity.
-    program_banks: usize,
-    program_rows_physical: u64,
+    /// Pipelined construction recipe (None = batch-sequential).
+    pipe: Option<PipeConfig>,
+    /// Global bank ids this process serves (cluster workers only);
+    /// applied to every later-loaded program so a worker's subset is
+    /// program-uniform.
+    subset: Option<Vec<usize>>,
     /// Tracing slot — empty until the socket server attaches a
     /// [`Tracer`] (`--trace-sample`). A shared `OnceLock` rather than a
     /// plain field so the pipeline stage threads (spawned at
     /// construction, before any attach can happen) observe the
     /// attachment too.
     tracer: Arc<OnceLock<Tracer>>,
+    /// Admission refusals (unknown pin, short feature vector) waiting
+    /// for the next poll — they flow out as typed error responses
+    /// through the same channel as served answers.
+    rejects: Vec<InferenceResponse>,
 }
 
 impl Coordinator {
@@ -282,55 +366,86 @@ impl Coordinator {
         Ok((runtimes, n_classes, modeled_latency))
     }
 
+    /// Build one program's registry payload: row accounting, runtimes,
+    /// class-space validation, modeled-latency roll-up, feature floor.
+    /// Shared by the constructors and [`Coordinator::load_program`].
+    fn build_entry(
+        backend: Option<&dyn MatchBackend>,
+        batch: usize,
+        banks: Vec<BankSpec<'_>>,
+        params: &DeviceParams,
+    ) -> Result<ProgramRuntime> {
+        // Row accounting before `build_runtimes` consumes the specs:
+        // logical rows the banks evaluate vs rows their artifact stores.
+        let rows_total: u64 = banks.iter().map(|s| s.lut.n_rows() as u64).sum();
+        let rows_physical: u64 = banks.iter().map(|s| s.rows_physical as u64).sum();
+        let (runtimes, n_classes, modeled_latency) =
+            Self::build_runtimes(backend, batch, banks, params)?;
+        let n_features = runtimes
+            .iter()
+            .flat_map(|b| b.features.iter().map(|&f| f + 1))
+            .max()
+            .unwrap_or(0);
+        Ok(ProgramRuntime {
+            bank_ids: (0..runtimes.len()).collect(),
+            program_banks: runtimes.len(),
+            program_rows_physical: rows_physical,
+            n_classes,
+            n_features,
+            modeled_latency,
+            modeled_pipe_throughput: 0.0,
+            rows_total,
+            rows_physical,
+            banks: runtimes,
+            pipeline: None,
+        })
+    }
+
     /// Build a coordinator over one-or-many banks (batch-sequential
-    /// execution: each released batch runs to completion).
+    /// execution: each released batch runs to completion). The program
+    /// is registered as [`DEFAULT_PROGRAM`] and active.
     pub fn with_banks(
         dispatch: BankDispatch,
         batch: usize,
         banks: Vec<BankSpec<'_>>,
         params: DeviceParams,
     ) -> Result<Coordinator> {
-        // Row accounting before `build_runtimes` consumes the specs:
-        // logical rows the banks evaluate vs rows their artifact stores.
-        let rows_total: u64 = banks.iter().map(|s| s.lut.n_rows() as u64).sum();
-        let rows_physical: u64 = banks.iter().map(|s| s.rows_physical as u64).sum();
-        let (runtimes, n_classes, modeled_latency) =
-            Self::build_runtimes(dispatch.backend(), batch, banks, &params)?;
+        let entry = Self::build_entry(dispatch.backend(), batch, banks, &params)?;
         // A remote dispatch must place exactly the program's banks —
         // a placement/program mismatch fails here, not mid-batch.
         if let BankDispatch::Remote(remote) = &dispatch {
             let placed = remote.lock().unwrap().n_banks();
             anyhow::ensure!(
-                placed == runtimes.len(),
+                placed == entry.banks.len(),
                 "remote dispatch places {placed} banks but the program has {}",
-                runtimes.len()
+                entry.banks.len()
             );
         }
         // Bank fan-out pool: one worker per bank (capped like the
         // backend pools), only when the dispatch allows concurrency and
         // there is more than one bank to overlap.
-        let pool = if dispatch.is_parallel() && runtimes.len() > 1 {
-            Some(ThreadPool::new(runtimes.len().min(16)))
+        let (pool, pool_banks) = if dispatch.is_parallel() && entry.banks.len() > 1 {
+            let n = entry.banks.len().min(16);
+            (Some(ThreadPool::new(n)), n)
         } else {
-            None
+            (None, 0)
         };
         let mut metrics = Metrics::new();
-        metrics.rows_total = rows_total;
-        metrics.rows_physical = rows_physical;
+        metrics.rows_total = entry.rows_total;
+        metrics.rows_physical = entry.rows_physical;
         Ok(Coordinator {
-            bank_ids: (0..runtimes.len()).collect(),
-            program_banks: runtimes.len(),
-            program_rows_physical: rows_physical,
-            banks: runtimes,
-            n_classes,
+            programs: ProgramRegistry::new(DEFAULT_MAX_PROGRAMS, DEFAULT_PROGRAM, entry),
             params,
             dispatch,
             pool,
+            pool_banks,
             batcher: Batcher::new(batch, Duration::from_millis(2)),
-            modeled_latency,
+            batch,
             metrics,
-            pipeline: None,
+            pipe: None,
+            subset: None,
             tracer: Arc::new(OnceLock::new()),
+            rejects: Vec::new(),
         })
     }
 
@@ -356,92 +471,109 @@ impl Coordinator {
         params: DeviceParams,
         depth: usize,
     ) -> Result<Coordinator> {
-        let rows_total: u64 = banks.iter().map(|s| s.lut.n_rows() as u64).sum();
-        let rows_physical: u64 = banks.iter().map(|s| s.rows_physical as u64).sum();
-        let (runtimes, n_classes, modeled_latency) =
-            Self::build_runtimes(Some(backend.as_ref()), batch, banks, &params)?;
-        let plans: Vec<Arc<ServingPlan>> = runtimes.iter().map(|r| Arc::clone(&r.plan)).collect();
+        let mut entry = Self::build_entry(Some(backend.as_ref()), batch, banks, &params)?;
         // The tracer slot is created *before* the stage threads spawn
         // and shared with them, so a tracer attached after construction
         // (the socket server attaches on its scheduler thread) reaches
         // the per-division stage spans.
         let tracer: Arc<OnceLock<Tracer>> = Arc::new(OnceLock::new());
-        let stream =
-            StreamingPipeline::with_tracer(plans, Arc::clone(&backend), depth, Arc::clone(&tracer));
+        Self::attach_pipeline(&mut entry, &backend, depth, &tracer);
         // The pool fans the per-bank query encoding out; the match work
         // itself is already parallel across banks (each bank's stage
         // threads run concurrently).
-        let pool = if runtimes.len() > 1 {
-            Some(ThreadPool::new(runtimes.len().min(16)))
+        let (pool, pool_banks) = if entry.banks.len() > 1 {
+            let n = entry.banks.len().min(16);
+            (Some(ThreadPool::new(n)), n)
         } else {
-            None
+            (None, 0)
         };
         let mut metrics = Metrics::new();
-        metrics.rows_total = rows_total;
-        metrics.rows_physical = rows_physical;
-        // Modeled pipelined throughput (f_max / II): the slowest bank
-        // bounds a forest, exactly like modeled latency.
-        metrics.modeled_pipe_throughput = runtimes
-            .iter()
-            .map(|r| r.plan.pipe_throughput())
-            .fold(f64::INFINITY, f64::min);
+        metrics.rows_total = entry.rows_total;
+        metrics.rows_physical = entry.rows_physical;
+        metrics.modeled_pipe_throughput = entry.modeled_pipe_throughput;
         Ok(Coordinator {
-            bank_ids: (0..runtimes.len()).collect(),
-            program_banks: runtimes.len(),
-            program_rows_physical: rows_physical,
-            banks: runtimes,
-            n_classes,
+            programs: ProgramRegistry::new(DEFAULT_MAX_PROGRAMS, DEFAULT_PROGRAM, entry),
             params,
-            dispatch: BankDispatch::Parallel(backend),
+            dispatch: BankDispatch::Parallel(Arc::clone(&backend)),
             pool,
+            pool_banks,
             batcher: Batcher::new(batch, Duration::from_millis(2)),
-            modeled_latency,
+            batch,
             metrics,
-            pipeline: Some(PipelineState {
-                stream,
-                pending: HashMap::new(),
-                next_seq: 0,
-                busy_since: None,
-            }),
+            pipe: Some(PipeConfig { backend, depth }),
+            subset: None,
             tracer,
+            rejects: Vec::new(),
         })
     }
 
-    /// The primary (bank 0) serving plan — the whole plan set for
-    /// single-tree programs; see [`Coordinator::bank_plans`] for all of
-    /// them.
-    pub fn plan(&self) -> &ServingPlan {
-        &self.banks[0].plan
+    /// Give one program its own live stage pipelines (a thread per
+    /// column division per bank) and its modeled pipelined throughput
+    /// (f_max / II — the slowest bank bounds a forest, exactly like
+    /// modeled latency).
+    fn attach_pipeline(
+        entry: &mut ProgramRuntime,
+        backend: &Arc<dyn MatchBackend + Send + Sync>,
+        depth: usize,
+        tracer: &Arc<OnceLock<Tracer>>,
+    ) {
+        let plans: Vec<Arc<ServingPlan>> =
+            entry.banks.iter().map(|r| Arc::clone(&r.plan)).collect();
+        let stream =
+            StreamingPipeline::with_tracer(plans, Arc::clone(backend), depth, Arc::clone(tracer));
+        entry.modeled_pipe_throughput = entry
+            .banks
+            .iter()
+            .map(|r| r.plan.pipe_throughput())
+            .fold(f64::INFINITY, f64::min);
+        entry.pipeline = Some(PipelineState {
+            stream,
+            pending: HashMap::new(),
+            next_seq: 0,
+            busy_since: None,
+        });
     }
 
-    /// Every bank's serving plan, in bank order.
+    /// The primary (bank 0) serving plan of the **active** program —
+    /// the whole plan set for single-tree programs; see
+    /// [`Coordinator::bank_plans`] for all of them.
+    pub fn plan(&self) -> &ServingPlan {
+        &self.programs.active_slot().runtime.banks[0].plan
+    }
+
+    /// Every bank's serving plan of the active program, in bank order.
     pub fn bank_plans(&self) -> impl Iterator<Item = &ServingPlan> {
-        self.banks.iter().map(|b| &*b.plan)
+        self.programs.active_slot().runtime.banks.iter().map(|b| &*b.plan)
     }
 
     /// Whether this coordinator executes through the streaming stage
     /// pipeline (Table VI "P" mode) rather than batch-at-a-time.
     pub fn pipelined(&self) -> bool {
-        self.pipeline.is_some()
+        self.pipe.is_some()
     }
 
-    /// Batches currently inside the stage pipelines (fed, not yet fully
-    /// collected); always 0 for batch-sequential coordinators and after
-    /// a draining `poll(true)`.
+    /// Batches currently inside the stage pipelines, summed over every
+    /// resident program (fed, not yet fully collected); always 0 for
+    /// batch-sequential coordinators and after a draining `poll(true)`.
     pub fn in_flight(&self) -> usize {
-        self.pipeline.as_ref().map_or(0, |s| s.pending.len())
+        self.programs
+            .slots()
+            .iter()
+            .map(|s| s.runtime.pipeline.as_ref().map_or(0, |p| p.pending.len()))
+            .sum()
     }
 
-    /// Number of CAM banks this coordinator serves.
+    /// Number of CAM banks the active program serves locally.
     pub fn n_banks(&self) -> usize {
-        self.banks.len()
+        self.programs.active_slot().runtime.banks.len()
     }
 
-    /// Global bank id of each locally served bank, ascending. Identity
-    /// (`0..n_banks`) unless [`Coordinator::set_bank_ids`] relabeled
-    /// the banks (cluster workers serving a placement subset).
+    /// Global bank id of each locally served bank of the active
+    /// program, ascending. Identity (`0..n_banks`) unless
+    /// [`Coordinator::set_bank_ids`] relabeled the banks (cluster
+    /// workers serving a placement subset).
     pub fn bank_ids(&self) -> &[usize] {
-        &self.bank_ids
+        &self.programs.active_slot().runtime.bank_ids
     }
 
     /// Relabel the locally served banks with their **global** ids (a
@@ -451,18 +583,24 @@ impl Coordinator {
     /// the router sums per-bank energies in global bank order, and an
     /// out-of-order subset would silently reorder that f64 sum.
     pub fn set_bank_ids(&mut self, ids: Vec<usize>) -> Result<()> {
-        anyhow::ensure!(
-            ids.len() == self.banks.len(),
-            "{} bank ids for {} banks",
-            ids.len(),
-            self.banks.len()
-        );
+        let n = self.programs.active_slot().runtime.banks.len();
+        anyhow::ensure!(ids.len() == n, "{} bank ids for {n} banks", ids.len());
         anyhow::ensure!(
             ids.windows(2).all(|w| w[0] < w[1]),
             "bank ids must be strictly ascending, got {ids:?}"
         );
-        self.bank_ids = ids;
+        // Remember the subset: every later-loaded program on this
+        // worker serves the same global banks.
+        self.subset = Some(ids.clone());
+        self.programs.active_slot_mut().runtime.bank_ids = ids;
         Ok(())
+    }
+
+    /// The global bank subset this process serves (`None` = the whole
+    /// program). Set by [`Coordinator::set_bank_ids`]; the admin plane
+    /// uses it to slice later-loaded artifacts to the same placement.
+    pub fn bank_subset(&self) -> Option<&[usize]> {
+        self.subset.as_deref()
     }
 
     /// Attach a tracer (idempotent — the first attach wins). The shared
@@ -481,7 +619,8 @@ impl Coordinator {
     /// so a router can detect a worker holding the wrong (or stale)
     /// program.
     pub fn identity(&self) -> (&'static str, usize, u64) {
-        (MAPPED_FORMAT, self.program_banks, self.program_rows_physical)
+        let entry = &self.programs.active_slot().runtime;
+        (MAPPED_FORMAT, entry.program_banks, entry.program_rows_physical)
     }
 
     /// Overwrite the advertised identity with whole-program figures (a
@@ -489,8 +628,9 @@ impl Coordinator {
     /// program it was built from, or every subset would look like a
     /// different program to the router).
     pub fn set_program_identity(&mut self, banks: usize, rows_physical: u64) {
-        self.program_banks = banks;
-        self.program_rows_physical = rows_physical;
+        let entry = &mut self.programs.active_slot_mut().runtime;
+        entry.program_banks = banks;
+        entry.program_rows_physical = rows_physical;
     }
 
     /// First sampled trace id in a batch: batch-level spans (dispatch,
@@ -522,9 +662,10 @@ impl Coordinator {
         }
     }
 
-    /// Modeled per-decision latency (slowest bank + vote stage).
+    /// Modeled per-decision latency of the active program (slowest bank
+    /// + vote stage).
     pub fn modeled_latency(&self) -> f64 {
-        self.modeled_latency
+        self.programs.active_slot().runtime.modeled_latency
     }
 
     /// Registry name of the backend driving this coordinator.
@@ -537,16 +678,25 @@ impl Coordinator {
         self.pool.is_some()
     }
 
-    /// Minimum feature-vector length a request must carry: the largest
-    /// original-feature index any bank projects, plus one. The socket
-    /// server validates incoming frames against this before admission
-    /// (a short vector would otherwise panic inside the per-bank
-    /// projection mid-batch).
+    /// Minimum feature-vector length a request for the **active**
+    /// program must carry: the largest original-feature index any bank
+    /// projects, plus one. Per-program arity is enforced exactly at
+    /// submit; the socket server pre-screens frames against
+    /// [`Coordinator::min_features`] (the floor across tenants) before
+    /// admission.
     pub fn n_features(&self) -> usize {
-        self.banks
+        self.programs.active_slot().runtime.n_features
+    }
+
+    /// The smallest feature floor across every resident program — the
+    /// most permissive admission screen that still refuses vectors no
+    /// tenant could serve.
+    pub fn min_features(&self) -> usize {
+        self.programs
+            .slots()
             .iter()
-            .flat_map(|b| b.features.iter().map(|&f| f + 1))
-            .max()
+            .map(|s| s.runtime.n_features)
+            .min()
             .unwrap_or(0)
     }
 
@@ -562,13 +712,159 @@ impl Coordinator {
         self.batcher.set_max_wait(max_wait);
     }
 
-    /// Enqueue one request. The queueing delay is *not* recorded here —
-    /// at submission the request has waited ~0; [`Coordinator::poll`]
-    /// records the real arrival → batch-dispatch delay when the batcher
-    /// releases the request.
+    /// Load (or reload) a program under `id`: build + warm its bank
+    /// runtimes exactly like the constructor did for the boot program,
+    /// attach per-program stage pipelines in pipelined mode, and insert
+    /// it into the registry (LRU-evicting an idle tenant when full —
+    /// never the active program or one with requests in flight).
+    /// Returns the stamped version. Serving of resident programs is
+    /// untouched: loading is activation-free.
+    ///
+    /// `program_banks` / `program_rows_physical` are the **whole**
+    /// program's identity figures (a cluster worker passes the full
+    /// program's even though `banks` is its placement subset).
+    pub fn load_program(
+        &mut self,
+        id: &str,
+        banks: Vec<BankSpec<'_>>,
+        program_banks: usize,
+        program_rows_physical: u64,
+    ) -> Result<u64> {
+        let mut entry = Self::build_entry(self.dispatch.backend(), self.batch, banks, &self.params)?;
+        if let Some(subset) = &self.subset {
+            anyhow::ensure!(
+                subset.len() == entry.banks.len(),
+                "this worker serves {} global banks but program {id:?} \
+                 was loaded with {} bank specs",
+                subset.len(),
+                entry.banks.len()
+            );
+            entry.bank_ids = subset.clone();
+        }
+        entry.program_banks = program_banks;
+        entry.program_rows_physical = program_rows_physical;
+        // A remote dispatch (cluster router) fans every program out
+        // over the same placement — bank counts must agree.
+        if let BankDispatch::Remote(remote) = &self.dispatch {
+            let placed = remote.lock().unwrap().n_banks();
+            anyhow::ensure!(
+                placed == entry.banks.len(),
+                "remote dispatch places {placed} banks but program {id:?} has {}",
+                entry.banks.len()
+            );
+        }
+        if let Some(pipe) = &self.pipe {
+            Self::attach_pipeline(&mut entry, &pipe.backend, pipe.depth, &self.tracer);
+        }
+        // Grow the bank fan-out pool if this tenant is wider than any
+        // resident program was.
+        let n = entry.banks.len().min(16);
+        if self.dispatch.is_parallel() && entry.banks.len() > 1 && n > self.pool_banks {
+            self.pool = Some(ThreadPool::new(n));
+            self.pool_banks = n;
+        }
+        self.programs.insert(id, entry)
+    }
+
+    /// Make `id` the target of all *future* unpinned admissions —
+    /// atomic at the admission point. Nothing drains: batches admitted
+    /// before the flip finish on the version stamped at their
+    /// admission. Returns the activated version.
+    pub fn activate_program(&mut self, id: &str) -> Result<u64> {
+        let version = self.programs.activate(id)?;
+        // Aggregate metrics carry the active program's row figures.
+        let entry = &self.programs.active_slot().runtime;
+        let (rows_total, rows_physical, pipe_tp) =
+            (entry.rows_total, entry.rows_physical, entry.modeled_pipe_throughput);
+        self.metrics.rows_total = rows_total;
+        self.metrics.rows_physical = rows_physical;
+        self.metrics.modeled_pipe_throughput = pipe_tp;
+        Ok(version)
+    }
+
+    /// The id unpinned traffic currently routes to.
+    pub fn active_program(&self) -> &str {
+        self.programs.active_id()
+    }
+
+    /// Every resident program (registry order).
+    pub fn program_list(&self) -> Vec<ProgramStatus> {
+        let active = self.programs.active_id().to_string();
+        self.programs
+            .slots()
+            .iter()
+            .map(|s| ProgramStatus {
+                id: s.id.clone(),
+                version: s.version,
+                active: s.id == active,
+                banks: s.runtime.program_banks,
+                rows_physical: s.runtime.program_rows_physical,
+                in_flight: s.in_flight(),
+            })
+            .collect()
+    }
+
+    /// Resident-program bound (LRU eviction horizon).
+    pub fn max_programs(&self) -> usize {
+        self.programs.cap()
+    }
+
+    /// Retune the resident-program bound (`serve --max-programs`).
+    pub fn set_max_programs(&mut self, cap: usize) {
+        self.programs.set_cap(cap);
+    }
+
+    /// Enqueue one request. Admission is where the lifecycle bites:
+    /// the request's pin (or the active id) resolves to a registry slot
+    /// *now*, the batch key stamps `(id, version)`, and the slot's
+    /// in-flight count pins it against reload/eviction until answered.
+    /// Refusals (unknown pin, short feature vector) become typed error
+    /// responses on the next poll — never a panic mid-batch.
+    ///
+    /// The queueing delay is *not* recorded here — at submission the
+    /// request has waited ~0; [`Coordinator::poll`] records the real
+    /// arrival → batch-dispatch delay when the batcher releases the
+    /// request.
     pub fn submit(&mut self, req: InferenceRequest) {
         self.metrics.record_request();
-        self.batcher.push(req);
+        let Some(idx) = self.programs.resolve(req.program.as_deref()) else {
+            let pin = req.program.clone().unwrap_or_default();
+            self.rejects.push(InferenceResponse {
+                id: req.id,
+                class: None,
+                modeled_latency: 0.0,
+                error: Some(format!(
+                    "unknown program {pin:?} (resident: {:?})",
+                    self.programs.ids()
+                )),
+                trace: req.trace,
+                program: pin,
+                version: 0,
+            });
+            return;
+        };
+        let (need, id, version) = {
+            let slot = self.programs.slot(idx);
+            (slot.runtime.n_features, slot.id.clone(), slot.version)
+        };
+        if req.features.len() < need {
+            self.rejects.push(InferenceResponse {
+                id: req.id,
+                class: None,
+                modeled_latency: 0.0,
+                error: Some(format!(
+                    "request {} carries {} features but program {id:?} needs at least {need}",
+                    req.id,
+                    req.features.len()
+                )),
+                trace: req.trace,
+                program: id,
+                version,
+            });
+            return;
+        }
+        self.programs.begin(idx, 1);
+        self.batcher.push(BatchKey::new(&id, version), req);
     }
 
     /// Run all due batches; returns responses (request order within batch
@@ -581,15 +877,49 @@ impl Coordinator {
     /// drained, so a forced flush answers everything submitted in both
     /// modes.
     pub fn poll(&mut self, force_flush: bool) -> Result<Vec<InferenceResponse>> {
+        // Admission refusals ride out with (ahead of) served answers.
+        let mut responses = std::mem::take(&mut self.rejects);
         let batches = self.batcher.take_due(Instant::now(), force_flush);
-        if self.pipeline.is_some() {
-            return self.poll_pipelined(batches, force_flush);
+        if self.pipe.is_some() {
+            responses.extend(self.poll_pipelined(batches, force_flush)?);
+            return Ok(responses);
         }
-        let mut responses = Vec::new();
-        for batch in batches {
-            responses.extend(self.run_batch(batch)?);
+        for (key, batch) in batches {
+            responses.extend(self.run_batch(&key, batch)?);
         }
         Ok(responses)
+    }
+
+    /// Slot index a stamped batch runs on. In-flight accounting makes a
+    /// miss unreachable (a stamped program cannot be reloaded or
+    /// evicted while requests are in flight) — still answered typed,
+    /// never unwrapped.
+    fn program_index(&self, key: &BatchKey) -> Option<usize> {
+        self.programs
+            .index_of(&key.program)
+            .filter(|&i| self.programs.slot(i).version == key.version)
+    }
+
+    /// Typed error responses for a whole batch, stamped with its
+    /// admission key.
+    fn batch_errors(
+        batch: &[InferenceRequest],
+        message: &str,
+        modeled_latency: f64,
+        key: &BatchKey,
+    ) -> Vec<InferenceResponse> {
+        batch
+            .iter()
+            .map(|r| InferenceResponse {
+                id: r.id,
+                class: None,
+                modeled_latency,
+                error: Some(message.to_string()),
+                trace: r.trace,
+                program: key.program.clone(),
+                version: key.version,
+            })
+            .collect()
     }
 
     /// Evaluate one bank for one encoded batch (shared by both dispatch
@@ -626,25 +956,28 @@ impl Coordinator {
     }
 
     /// Encode + pad one admitted batch to the artifact width, once per
-    /// bank. Fanned out over the bank pool when one exists (the
-    /// per-bank encodes are independent).
-    fn encode_banks(&self, batch: &[InferenceRequest], width: usize) -> Vec<Vec<Vec<bool>>> {
+    /// bank of the batch's program (`idx`). Fanned out over the bank
+    /// pool when one exists (the per-bank encodes are independent).
+    fn encode_banks(&self, idx: usize, batch: &[InferenceRequest], width: usize) -> Vec<Vec<Vec<bool>>> {
         let rows: Vec<&[f64]> = batch.iter().map(|r| r.features.as_slice()).collect();
+        let banks = &self.programs.slot(idx).runtime.banks;
         match &self.pool {
-            Some(pool) if self.banks.len() > 1 => {
-                let banks = &self.banks;
+            Some(pool) if banks.len() > 1 => {
                 let rows = &rows;
                 pool.scoped_map(banks.len(), |b| Self::encode_bank_rows(&banks[b], rows, width))
             }
-            _ => self
-                .banks
+            _ => banks
                 .iter()
                 .map(|b| Self::encode_bank_rows(b, &rows, width))
                 .collect(),
         }
     }
 
-    fn run_batch(&mut self, batch: Vec<InferenceRequest>) -> Result<Vec<InferenceResponse>> {
+    fn run_batch(
+        &mut self,
+        key: &BatchKey,
+        batch: Vec<InferenceRequest>,
+    ) -> Result<Vec<InferenceResponse>> {
         let width = self.batcher.batch_width();
         let real = batch.len();
         // The queue delay is measured here, at batch dispatch: this is
@@ -665,21 +998,48 @@ impl Coordinator {
             }
         }
 
+        // The admission stamp resolves to its slot — unreachable-miss
+        // guarded with a typed batch error, see `program_index`.
+        let Some(idx) = self.program_index(key) else {
+            self.programs.finish(&key.program, real as u64);
+            let message = format!(
+                "program {:?} version {} vanished mid-flight (resident: {:?})",
+                key.program,
+                key.version,
+                self.programs.ids()
+            );
+            return Ok(Self::batch_errors(&batch, &message, 0.0, key));
+        };
+
         // Remote dispatch (cluster router): the raw rows go over the
         // wire — each worker encodes them against its own copy of the
         // artifact — and a failed dispatch (bank unserveable after
         // failover) answers every request of the batch with a typed
         // error, exactly like the pipelined poisoned-batch path. It
         // must never `?` out of here: that would kill the serving loop
-        // over one lost worker.
+        // over one lost worker. Batches are stamped with the program's
+        // identity so a worker holding different bits refuses rather
+        // than silently answering.
         if let BankDispatch::Remote(remote) = &self.dispatch {
+            let (n_banks, modeled_latency, stamp) = {
+                let entry = &self.programs.slot(idx).runtime;
+                (
+                    entry.banks.len(),
+                    entry.modeled_latency,
+                    ProgramStamp {
+                        id: key.program.clone(),
+                        banks: entry.program_banks,
+                        rows_physical: entry.program_rows_physical,
+                    },
+                )
+            };
             let rows: Vec<Vec<f64>> = batch.iter().map(|r| r.features.clone()).collect();
             let t0 = Instant::now();
             let result = remote
                 .lock()
                 .unwrap()
-                .run_banks(&rows, rep)
-                .and_then(|o| Self::check_remote_outcomes(o, self.banks.len(), real));
+                .run_banks(&rows, rep, &stamp)
+                .and_then(|o| Self::check_remote_outcomes(o, n_banks, real));
             let wall = t0.elapsed();
             if let Some(tr) = tracer.as_ref() {
                 // One remote span for the whole fan-out: send the bank
@@ -694,20 +1054,11 @@ impl Coordinator {
                 );
             }
             return Ok(match result {
-                Ok(outcomes) => self.finish_batch(&batch, &outcomes, wall),
+                Ok(outcomes) => self.finish_batch(idx, &batch, &outcomes, wall),
                 Err(e) => {
                     self.metrics.stage_errors += 1;
-                    let message = format!("{e:#}");
-                    batch
-                        .iter()
-                        .map(|r| InferenceResponse {
-                            id: r.id,
-                            class: None,
-                            modeled_latency: self.modeled_latency,
-                            error: Some(message.clone()),
-                            trace: r.trace,
-                        })
-                        .collect()
+                    self.programs.finish(&key.program, real as u64);
+                    Self::batch_errors(&batch, &format!("{e:#}"), modeled_latency, key)
                 }
             });
         }
@@ -716,17 +1067,18 @@ impl Coordinator {
         // per-bank encode + pad (the launch itself is the bank-match
         // spans that follow).
         let enc0 = tracer.as_ref().map(|t| t.now_ns());
-        let bank_queries = self.encode_banks(&batch, width);
+        let bank_queries = self.encode_banks(idx, &batch, width);
         if let (Some(tr), Some(s)) = (tracer.as_ref(), enc0) {
             tr.record(rep, SpanKind::Dispatch, None, None, s, tr.now_ns().saturating_sub(s));
         }
 
         let t0 = Instant::now();
+        let entry = &self.programs.slot(idx).runtime;
         let outcomes: Vec<BatchOutcome> = match (&self.pool, &self.dispatch) {
             (Some(pool), BankDispatch::Parallel(backend)) => {
                 // Bank fan-out: banks are independent CAM arrays, the
                 // backend is shared (&self), scratch is per-bank.
-                let banks = &self.banks;
+                let banks = &entry.banks;
                 let params = &self.params;
                 let tr = tracer.as_ref();
                 let backend: &(dyn MatchBackend + Send + Sync) = backend.as_ref();
@@ -751,7 +1103,8 @@ impl Coordinator {
             _ => {
                 let backend = self.dispatch.backend().expect("local dispatch");
                 let tr = tracer.as_ref();
-                self.banks
+                entry
+                    .banks
                     .iter()
                     .enumerate()
                     .map(|(b, bank)| {
@@ -774,7 +1127,7 @@ impl Coordinator {
             }
         };
         let wall = t0.elapsed();
-        Ok(self.finish_batch(&batch, &outcomes, wall))
+        Ok(self.finish_batch(idx, &batch, &outcomes, wall))
     }
 
     /// Validate remote outcomes and convert them to the scheduler's
@@ -826,11 +1179,21 @@ impl Coordinator {
     /// energy sum in the same bank order.
     fn finish_batch(
         &mut self,
+        idx: usize,
         batch: &[InferenceRequest],
         outcomes: &[BatchOutcome],
         wall: Duration,
     ) -> Vec<InferenceResponse> {
         let real = batch.len();
+        let (n_classes, modeled_latency, id, version) = {
+            let slot = self.programs.slot(idx);
+            (
+                slot.runtime.n_classes,
+                slot.runtime.modeled_latency,
+                slot.id.clone(),
+                slot.version,
+            )
+        };
         let rep = Self::rep_trace(batch);
         let tracer = self.batch_tracer(rep).cloned();
         let vote0 = tracer.as_ref().map(|t| t.now_ns());
@@ -843,7 +1206,7 @@ impl Coordinator {
         for lane in 0..real {
             let c = vote_survivors(
                 outcomes.iter().map(|out| out.classes[lane]),
-                self.n_classes,
+                n_classes,
                 &mut votes,
             );
             if c.is_none() {
@@ -880,6 +1243,10 @@ impl Coordinator {
         for r in batch {
             self.metrics.record_latency(r.arrived.elapsed());
         }
+        // Per-program attribution + in-flight retirement: the batch is
+        // answered, its slot is unpinned.
+        self.metrics.record_program(&id, real as u64, modeled_energy);
+        self.programs.finish(&id, real as u64);
 
         batch
             .iter()
@@ -887,9 +1254,11 @@ impl Coordinator {
             .map(|(req, &class)| InferenceResponse {
                 id: req.id,
                 class,
-                modeled_latency: self.modeled_latency,
+                modeled_latency,
                 error: None,
                 trace: req.trace,
+                program: id.clone(),
+                version,
             })
             .collect()
     }
@@ -908,26 +1277,59 @@ impl Coordinator {
     /// router's representative trace id for the batch (0 = untraced) —
     /// the worker's bank-match spans are stamped with it so a scrape of
     /// the worker correlates with the router's remote span.
+    /// `program` names the tenant the batch belongs to (empty = the
+    /// worker's active program, the pre-lifecycle wire behavior);
+    /// `pbanks`/`prows` are the router's identity stamp for that
+    /// program (0/0 = unstamped legacy batch, accepted unchecked). A
+    /// worker holding different bits under that id — or not holding the
+    /// id at all — refuses with a typed error instead of answering from
+    /// the wrong program.
     pub fn run_bank_batch(
         &mut self,
+        program: &str,
+        pbanks: usize,
+        prows: u64,
         banks: &[usize],
         rows: &[Vec<f64>],
         trace: u64,
     ) -> Result<Vec<RemoteBankOutcome>> {
         anyhow::ensure!(!banks.is_empty(), "bank batch names no banks");
         anyhow::ensure!(!rows.is_empty(), "bank batch carries no rows");
+        let idx = if program.is_empty() {
+            self.programs.resolve(None).expect("active program")
+        } else {
+            self.programs.index_of(program).with_context(|| {
+                format!(
+                    "program {program:?} is not loaded on this worker (resident: {:?})",
+                    self.programs.ids()
+                )
+            })?
+        };
+        let resolved_id = self.programs.slot(idx).id.clone();
+        let entry = &self.programs.slot(idx).runtime;
+        if pbanks != 0 || prows != 0 {
+            anyhow::ensure!(
+                pbanks == entry.program_banks && prows == entry.program_rows_physical,
+                "program {resolved_id:?} identity mismatch: batch stamped \
+                 {pbanks} banks / {prows} physical rows, this worker holds \
+                 {} banks / {} rows",
+                entry.program_banks,
+                entry.program_rows_physical
+            );
+        }
         let locals: Vec<usize> = banks
             .iter()
             .map(|g| {
-                self.bank_ids
+                entry
+                    .bank_ids
                     .iter()
                     .position(|id| id == g)
                     .with_context(|| {
-                        format!("bank {g} is not served here (serving {:?})", self.bank_ids)
+                        format!("bank {g} is not served here (serving {:?})", entry.bank_ids)
                     })
             })
             .collect::<Result<_>>()?;
-        let need = self.n_features();
+        let need = entry.n_features;
         for (i, r) in rows.iter().enumerate() {
             anyhow::ensure!(
                 r.len() >= need,
@@ -942,13 +1344,13 @@ impl Coordinator {
         let t0 = Instant::now();
         let outcomes: Vec<BatchOutcome> = match (&self.pool, &self.dispatch) {
             (Some(pool), BankDispatch::Parallel(backend)) if locals.len() > 1 => {
-                let banks_rt = &self.banks;
+                let banks_rt = &entry.banks;
                 let params = &self.params;
                 let backend: &(dyn MatchBackend + Send + Sync) = backend.as_ref();
                 let locals = &locals;
                 let row_refs = &row_refs;
                 let tr = tracer.as_ref();
-                let bank_ids = &self.bank_ids;
+                let bank_ids = &entry.bank_ids;
                 pool.scoped_map(locals.len(), |k| {
                     let b = locals[k];
                     let s = tr.map(|t| t.now_ns());
@@ -981,14 +1383,14 @@ impl Coordinator {
                     .iter()
                     .map(|&b| {
                         let s = tr.map(|t| t.now_ns());
-                        let queries = Self::encode_bank_rows(&self.banks[b], &row_refs, real);
+                        let queries = Self::encode_bank_rows(&entry.banks[b], &row_refs, real);
                         let out =
-                            Self::run_bank(&self.banks[b], &self.params, backend, &queries, real);
+                            Self::run_bank(&entry.banks[b], &self.params, backend, &queries, real);
                         if let (Some(t), Some(s)) = (tr, s) {
                             t.record(
                                 trace,
                                 SpanKind::BankMatch,
-                                Some(self.bank_ids[b]),
+                                Some(entry.bank_ids[b]),
                                 None,
                                 s,
                                 t.now_ns().saturating_sub(s),
@@ -1000,6 +1402,7 @@ impl Coordinator {
             }
         };
         let wall = t0.elapsed();
+        let bank_ids = entry.bank_ids.clone();
 
         // Bank-granularity roll-ups (the vote-level figures live on the
         // router, which sees every bank).
@@ -1013,13 +1416,15 @@ impl Coordinator {
         self.metrics
             .record_batch(real, modeled_energy, active_rows, no_match, multi_match, wall);
         self.metrics.wall_total += wall.as_secs_f64();
+        self.metrics
+            .record_program(&resolved_id, real as u64, modeled_energy);
 
         // Stamp global ids on the way out (outcome.bank is the local
         // plan index here — a worker's bank 0 may be global bank 4).
         Ok(outcomes
             .into_iter()
             .map(|o| RemoteBankOutcome {
-                bank: self.bank_ids[o.bank],
+                bank: bank_ids[o.bank],
                 classes: o.classes,
                 modeled_energy: o.modeled_energy,
                 active_row_evals: o.active_row_evals,
@@ -1032,35 +1437,52 @@ impl Coordinator {
 
     // -------------------------------------------- pipelined execution
 
-    /// Pipelined poll: feed every due batch into the bank pipelines,
-    /// then collect whatever finished. With `drain`, block until the
+    /// Pipelined poll: feed every due batch into its program's bank
+    /// pipelines, then collect whatever finished — across *every*
+    /// resident program, so a pinned tenant's answers are never gated
+    /// on the active tenant's traffic. With `drain`, block until all
     /// pipelines are empty (end of stream / graceful shutdown).
     fn poll_pipelined(
         &mut self,
-        batches: Vec<Vec<InferenceRequest>>,
+        batches: Vec<(BatchKey, Vec<InferenceRequest>)>,
         drain: bool,
     ) -> Result<Vec<InferenceResponse>> {
-        for batch in batches {
-            self.feed_pipeline(batch)?;
-        }
         let mut responses = Vec::new();
+        for (key, batch) in batches {
+            self.feed_pipeline(&key, batch, &mut responses)?;
+        }
         // Non-blocking sweep of everything the stages finished.
-        while let Some(outcome) = self.try_next_outcome() {
-            self.absorb_outcome(outcome, &mut responses);
+        for idx in 0..self.programs.len() {
+            while let Some(outcome) = self.try_next_outcome(idx) {
+                self.absorb_outcome(idx, outcome, &mut responses);
+            }
         }
         if drain {
             // Stage threads are always making progress on in-flight
             // batches, so a bounded wait per outcome suffices; a
             // timeout can only mean a stage thread died.
-            while !self.pipeline.as_ref().expect("pipelined mode").pending.is_empty() {
+            loop {
+                let Some(idx) = (0..self.programs.len()).find(|&i| {
+                    self.programs
+                        .slot(i)
+                        .runtime
+                        .pipeline
+                        .as_ref()
+                        .map_or(false, |p| !p.pending.is_empty())
+                }) else {
+                    break;
+                };
                 let next = self
+                    .programs
+                    .slot(idx)
+                    .runtime
                     .pipeline
                     .as_ref()
                     .expect("pipelined mode")
                     .stream
                     .next_timeout(PIPELINE_DRAIN_TIMEOUT)?;
                 match next {
-                    Some(outcome) => self.absorb_outcome(outcome, &mut responses),
+                    Some(outcome) => self.absorb_outcome(idx, outcome, &mut responses),
                     None => anyhow::bail!(
                         "pipeline drain stalled with {} batches in flight",
                         self.in_flight()
@@ -1068,7 +1490,7 @@ impl Coordinator {
                 }
             }
         }
-        self.roll_busy_span();
+        self.roll_busy_spans();
         Ok(responses)
     }
 
@@ -1077,7 +1499,12 @@ impl Coordinator {
     /// backpressure path: the caller waits while the stages drain
     /// forward — in-flight work is bounded by channel depth × stages,
     /// never by offered load.
-    fn feed_pipeline(&mut self, batch: Vec<InferenceRequest>) -> Result<()> {
+    fn feed_pipeline(
+        &mut self,
+        key: &BatchKey,
+        batch: Vec<InferenceRequest>,
+        responses: &mut Vec<InferenceResponse>,
+    ) -> Result<()> {
         let width = self.batcher.batch_width();
         let real = batch.len();
         // Queue delay at batch dispatch, like the sequential path.
@@ -1093,13 +1520,32 @@ impl Coordinator {
                 tr.record(r.trace, SpanKind::Queue, None, None, start, now.saturating_sub(start));
             }
         }
+        // The admission stamp resolves to its slot — unreachable-miss
+        // guarded with a typed batch error, see `program_index`.
+        let Some(idx) = self.program_index(key) else {
+            self.programs.finish(&key.program, real as u64);
+            let message = format!(
+                "program {:?} version {} vanished mid-flight (resident: {:?})",
+                key.program,
+                key.version,
+                self.programs.ids()
+            );
+            responses.extend(Self::batch_errors(&batch, &message, 0.0, key));
+            return Ok(());
+        };
         // The dispatch span covers encode + feed: a blocking feed means
         // the pipeline applied backpressure, and that wait is honest
         // dispatch time.
         let enc0 = tracer.as_ref().map(|t| t.now_ns());
-        let bank_queries = self.encode_banks(&batch, width);
-        let n_banks = self.banks.len();
-        let state = self.pipeline.as_mut().expect("pipelined mode");
+        let bank_queries = self.encode_banks(idx, &batch, width);
+        let n_banks = self.programs.slot(idx).runtime.banks.len();
+        let state = self
+            .programs
+            .slot_mut(idx)
+            .runtime
+            .pipeline
+            .as_mut()
+            .expect("pipelined mode");
         let seq = state.next_seq;
         state.next_seq += 1;
         state.busy_since.get_or_insert_with(Instant::now);
@@ -1112,7 +1558,13 @@ impl Coordinator {
                 fed: Instant::now(),
             },
         );
-        let state = self.pipeline.as_ref().expect("pipelined mode");
+        let state = self
+            .programs
+            .slot(idx)
+            .runtime
+            .pipeline
+            .as_ref()
+            .expect("pipelined mode");
         for (b, queries) in bank_queries.into_iter().enumerate() {
             state.stream.feed_traced(b, seq, queries, real, rep)?;
         }
@@ -1124,11 +1576,22 @@ impl Coordinator {
 
     /// Record one bank outcome; when its batch is complete, vote, roll
     /// up the hardware cost, and materialize the responses.
-    fn absorb_outcome(&mut self, outcome: PipeOutcome, responses: &mut Vec<InferenceResponse>) {
+    fn absorb_outcome(
+        &mut self,
+        idx: usize,
+        outcome: PipeOutcome,
+        responses: &mut Vec<InferenceResponse>,
+    ) {
         let seq = outcome.seq;
         let bank = outcome.bank;
         let entry = {
-            let state = self.pipeline.as_mut().expect("pipelined mode");
+            let state = self
+                .programs
+                .slot_mut(idx)
+                .runtime
+                .pipeline
+                .as_mut()
+                .expect("pipelined mode");
             let entry = state
                 .pending
                 .get_mut(&seq)
@@ -1140,6 +1603,15 @@ impl Coordinator {
                 return;
             }
             state.pending.remove(&seq).expect("entry just seen")
+        };
+        let (n_classes, modeled_latency, id, version) = {
+            let slot = self.programs.slot(idx);
+            (
+                slot.runtime.n_classes,
+                slot.runtime.modeled_latency,
+                slot.id.clone(),
+                slot.version,
+            )
         };
         let residence = entry.fed.elapsed();
         let outcomes: Vec<PipeOutcome> = entry
@@ -1156,12 +1628,15 @@ impl Coordinator {
         if let Some(err) = outcomes.iter().find_map(|o| o.error.as_ref()) {
             let message = err.to_string();
             self.metrics.stage_errors += 1;
+            self.programs.finish(&id, real as u64);
             responses.extend(entry.reqs.iter().map(|r| InferenceResponse {
                 id: r.id,
                 class: None,
-                modeled_latency: self.modeled_latency,
+                modeled_latency,
                 error: Some(message.clone()),
                 trace: r.trace,
+                program: id.clone(),
+                version,
             }));
             return;
         }
@@ -1177,7 +1652,7 @@ impl Coordinator {
         for lane in 0..real {
             let c = vote_survivors(
                 outcomes.iter().map(|out| out.classes[lane]),
-                self.n_classes,
+                n_classes,
                 &mut votes,
             );
             if c.is_none() {
@@ -1210,40 +1685,51 @@ impl Coordinator {
         for r in &entry.reqs {
             self.metrics.record_latency(r.arrived.elapsed());
         }
+        self.metrics.record_program(&id, real as u64, modeled_energy);
+        self.programs.finish(&id, real as u64);
         responses.extend(entry.reqs.iter().zip(&classes).map(|(req, &class)| {
             InferenceResponse {
                 id: req.id,
                 class,
-                modeled_latency: self.modeled_latency,
+                modeled_latency,
                 error: None,
                 trace: req.trace,
+                program: id.clone(),
+                version,
             }
         }));
     }
 
-    /// One finished outcome, if any (scopes the pipeline borrow so the
-    /// caller can absorb with `&mut self`).
-    fn try_next_outcome(&self) -> Option<PipeOutcome> {
-        self.pipeline.as_ref().expect("pipelined mode").stream.try_next()
+    /// One finished outcome of program `idx`'s pipeline, if any (scopes
+    /// the pipeline borrow so the caller can absorb with `&mut self`).
+    fn try_next_outcome(&self, idx: usize) -> Option<PipeOutcome> {
+        self.programs.slot(idx).runtime.pipeline.as_ref()?.stream.try_next()
     }
 
-    /// Fold the elapsed slice of the current busy span into
+    /// Fold the elapsed slice of every program's current busy span into
     /// `Metrics::wall_total` (called at the end of every pipelined
     /// poll). While batches remain in flight the span marker advances
     /// to "now", so sustained load keeps `wall_throughput` current;
-    /// once the pipeline drains the marker clears and idle time stops
-    /// counting.
-    fn roll_busy_span(&mut self) {
-        let state = self.pipeline.as_mut().expect("pipelined mode");
-        if let Some(t0) = state.busy_since.as_mut() {
-            let now = Instant::now();
-            self.metrics.wall_total += now.duration_since(*t0).as_secs_f64();
-            if state.pending.is_empty() {
-                state.busy_since = None;
-            } else {
-                *t0 = now;
+    /// once a pipeline drains its marker clears and idle time stops
+    /// counting. (Tenants streaming simultaneously overlap in wall
+    /// time; the roll-up counts each program's busy span, matching the
+    /// single-tenant convention per program.)
+    fn roll_busy_spans(&mut self) {
+        let now = Instant::now();
+        let mut add = 0.0;
+        for slot in self.programs.slots_mut() {
+            if let Some(state) = slot.runtime.pipeline.as_mut() {
+                if let Some(t0) = state.busy_since.as_mut() {
+                    add += now.duration_since(*t0).as_secs_f64();
+                    if state.pending.is_empty() {
+                        state.busy_since = None;
+                    } else {
+                        *t0 = now;
+                    }
+                }
             }
         }
+        self.metrics.wall_total += add;
     }
 
     /// Convenience: synchronous classification of a whole test set in
@@ -1758,5 +2244,194 @@ mod tests {
         // Single-bank coordinators report the bank's latency unchanged.
         let (single, _, _) = build(EngineKind::Native, "iris", 16);
         assert_eq!(single.modeled_latency(), single.plan().timing.latency);
+    }
+
+    // ------------------------------------------------- lifecycle tests
+
+    /// A second, single-bank tenant (iris, 4 features — the forest
+    /// fixture's haberman rows have 3) loadable next to the boot
+    /// program. Returns its pieces plus its valid input rows.
+    fn iris_parts() -> (Lut, MappedArray, Vec<Vec<f64>>) {
+        let mut d = catalog::by_name("iris", 0xD72CA0).unwrap();
+        d.normalize();
+        let tree = train(&d.features, &d.labels, d.n_classes, &TrainParams::default());
+        let lut = compile(&tree);
+        let m = MappedArray::from_lut(&lut, 16, &DeviceParams::default(), &mut Prng::new(2));
+        (lut, m, d.features)
+    }
+
+    fn iris_spec<'a>(lut: &Lut, m: &'a MappedArray) -> Vec<BankSpec<'a>> {
+        vec![BankSpec {
+            features: (0..lut.encoders.len()).collect(),
+            rows_physical: lut.n_rows(),
+            lut: lut.clone(),
+            mapped: m,
+            vref: &m.vref,
+        }]
+    }
+
+    #[test]
+    fn load_activate_and_pin_programs() {
+        use crate::api::NativeBackend;
+        let (mut coord, forest, txs, _) =
+            build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+        assert_eq!(coord.active_program(), DEFAULT_PROGRAM);
+        assert_eq!(coord.program_list().len(), 1);
+
+        let (lut, m, rows) = iris_parts();
+        let v = coord
+            .load_program("iris", iris_spec(&lut, &m), 1, lut.n_rows() as u64)
+            .unwrap();
+        assert_eq!(v, 2, "boot program is version 1; first load stamps 2");
+
+        // Unpinned traffic still serves the boot program; a pin reaches
+        // the resident-but-inactive tenant.
+        coord.submit(InferenceRequest::new(0, txs[0].clone()));
+        coord.submit(InferenceRequest::new(1, rows[0].clone()).with_program(Some("iris".into())));
+        let mut resp = coord.poll(true).unwrap();
+        resp.sort_by_key(|r| r.id);
+        assert_eq!(resp.len(), 2);
+        assert!(resp.iter().all(|r| r.error.is_none()));
+        assert_eq!((resp[0].program.as_str(), resp[0].version), (DEFAULT_PROGRAM, 1));
+        assert_eq!(resp[0].class, Some(forest.predict(&txs[0])));
+        assert_eq!((resp[1].program.as_str(), resp[1].version), ("iris", 2));
+        assert!(resp[1].class.is_some());
+
+        // Per-program attribution: one decision each, energy > 0.
+        let usage = |c: &Coordinator, id: &str| {
+            c.metrics.per_program.iter().find(|u| u.id == id).cloned().unwrap()
+        };
+        assert_eq!(usage(&coord, DEFAULT_PROGRAM).decisions, 1);
+        assert_eq!(usage(&coord, "iris").decisions, 1);
+        assert!(usage(&coord, "iris").modeled_energy > 0.0);
+
+        // Activation flips only the routing of future unpinned submits.
+        coord.activate_program("iris").unwrap();
+        assert_eq!(coord.active_program(), "iris");
+        assert_eq!(coord.n_banks(), 1, "active-program accessors follow the flip");
+        coord.submit(InferenceRequest::new(2, rows[1].clone()));
+        let resp = coord.poll(true).unwrap();
+        assert_eq!((resp[0].program.as_str(), resp[0].version), ("iris", 2));
+        // The old tenant stays resident and pinnable after the swap.
+        coord.submit(
+            InferenceRequest::new(3, txs[0].clone()).with_program(Some(DEFAULT_PROGRAM.into())),
+        );
+        let resp = coord.poll(true).unwrap();
+        assert_eq!(resp[0].class, Some(forest.predict(&txs[0])));
+        let listed = coord.program_list();
+        assert_eq!(listed.len(), 2);
+        assert!(listed.iter().any(|p| p.id == "iris" && p.active && p.version == 2));
+        assert!(listed.iter().any(|p| p.id == DEFAULT_PROGRAM && !p.active && p.banks == 3));
+        assert!(listed.iter().all(|p| p.in_flight == 0), "everything drained");
+    }
+
+    #[test]
+    fn unknown_pin_and_short_features_answer_typed_errors() {
+        use crate::api::NativeBackend;
+        let (mut coord, _, txs, _) =
+            build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+        coord.submit(InferenceRequest::new(7, txs[0].clone()).with_program(Some("ghost".into())));
+        let resp = coord.poll(false).unwrap();
+        assert_eq!(resp.len(), 1, "refusals drain without any due batch");
+        assert_eq!(resp[0].id, 7);
+        assert!(resp[0].class.is_none());
+        let msg = resp[0].error.clone().unwrap();
+        assert!(msg.contains("ghost"), "refusal names the pin: {msg}");
+        // A vector too short for the pinned tenant (haberman rows carry
+        // 3 features; iris projects 4) is refused at admission, not
+        // panicked on mid-batch.
+        let (lut, m, _) = iris_parts();
+        coord
+            .load_program("iris", iris_spec(&lut, &m), 1, lut.n_rows() as u64)
+            .unwrap();
+        coord.submit(InferenceRequest::new(8, txs[0].clone()).with_program(Some("iris".into())));
+        let resp = coord.poll(false).unwrap();
+        assert_eq!(resp.len(), 1);
+        let msg = resp[0].error.clone().unwrap();
+        assert!(msg.contains("features"), "{msg}");
+        assert_eq!(resp[0].program, "iris");
+        // Nothing leaked into the batcher or the in-flight counts.
+        assert_eq!(coord.pending(), 0);
+        assert!(coord.program_list().iter().all(|p| p.in_flight == 0));
+    }
+
+    #[test]
+    fn reload_is_refused_while_admitted_requests_are_in_flight() {
+        use crate::api::NativeBackend;
+        let (mut coord, forest, txs, _) =
+            build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+        coord.set_batch_max_wait(Duration::from_secs(3600));
+        coord.submit(InferenceRequest::new(0, txs[0].clone()));
+        assert_eq!(coord.program_list()[0].in_flight, 1);
+        // The admitted request pins version 1 of the boot program: a
+        // reload now could run its batch on the wrong bits.
+        let (forest2, arrays2, _, _) = forest_parts();
+        let err = coord
+            .load_program(DEFAULT_PROGRAM, specs_of(&forest2, &arrays2), 3, 0)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("in flight"), "{err:#}");
+        // Drain; the answer carries the admission-time version.
+        coord.set_batch_max_wait(Duration::ZERO);
+        let resp = coord.poll(true).unwrap();
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].version, 1);
+        assert_eq!(resp[0].class, Some(forest.predict(&txs[0])));
+        // Now the reload lands with a bumped version and unpinned
+        // admissions stamp it.
+        let v = coord
+            .load_program(DEFAULT_PROGRAM, specs_of(&forest2, &arrays2), 3, 0)
+            .unwrap();
+        assert_eq!(v, 2);
+        coord.submit(InferenceRequest::new(1, txs[0].clone()));
+        let resp = coord.poll(true).unwrap();
+        assert_eq!(resp[0].version, 2);
+        assert_eq!(resp[0].class, Some(forest2.predict(&txs[0])));
+    }
+
+    #[test]
+    fn pipelined_registry_serves_both_tenants_with_isolated_pipelines() {
+        use crate::api::NativeBackend;
+        let (mut piped, txs) = build_forest_pipelined(2);
+        let (lut, m, rows) = iris_parts();
+        piped
+            .load_program("iris", iris_spec(&lut, &m), 1, lut.n_rows() as u64)
+            .unwrap();
+        // Reference classes from a fresh single-tenant coordinator.
+        let mut solo = Coordinator::with_backend(
+            Box::new(NativeBackend::new()),
+            16,
+            lut.clone(),
+            &m,
+            &m.vref,
+            DeviceParams::default(),
+        )
+        .unwrap();
+        let want_iris = solo.classify_all(&rows[..20].to_vec()).unwrap();
+        let (mut seq, _, _, _) =
+            build_forest(BankDispatch::Sequential(Box::new(NativeBackend::new())));
+        let want_forest = seq.classify_all(&txs).unwrap();
+        // Interleave pinned iris traffic with unpinned forest traffic.
+        for (i, x) in rows[..20].iter().enumerate() {
+            piped.submit(
+                InferenceRequest::new(1000 + i as u64, x.clone())
+                    .with_program(Some("iris".into())),
+            );
+            piped.submit(InferenceRequest::new(i as u64, txs[i % txs.len()].clone()));
+        }
+        let mut resp = piped.poll(true).unwrap();
+        assert_eq!(resp.len(), 40);
+        assert!(resp.iter().all(|r| r.error.is_none()));
+        resp.sort_by_key(|r| r.id);
+        for (i, want) in want_iris.iter().enumerate() {
+            let r = &resp[20 + i];
+            assert_eq!(r.id, 1000 + i as u64);
+            assert_eq!(r.program, "iris");
+            assert_eq!(r.class, *want, "pinned tenant must match solo serving");
+        }
+        for (i, r) in resp[..20].iter().enumerate() {
+            assert_eq!(r.program, DEFAULT_PROGRAM);
+            assert_eq!(r.class, want_forest[i % txs.len()]);
+        }
+        assert_eq!(piped.in_flight(), 0, "drain empties every tenant's pipeline");
     }
 }

@@ -7,9 +7,12 @@ use std::time::Duration;
 
 use thiserror::Error;
 
+use crate::config::json::Json;
 use crate::obs::Span;
 
-use super::protocol::{read_frame, write_frame, Frame, FrameError, MetricsSnapshot};
+use super::protocol::{
+    read_frame, write_frame, Frame, FrameError, MetricsSnapshot, ProgramInfo,
+};
 
 /// How long [`Client::metrics`] waits for the snapshot frame. The
 /// server may drop a metrics reply under extreme writer-channel
@@ -87,6 +90,19 @@ pub struct HealthInfo {
     pub rows_physical: u64,
 }
 
+/// What a classification answered with, including which program
+/// version served it (empty id / zero version from peers predating the
+/// program lifecycle).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassifyAnswer {
+    /// The winning class; `None` means no CAM bank matched.
+    pub class: Option<usize>,
+    /// Program id the request was served under.
+    pub program: String,
+    /// Registry version the request was admitted under.
+    pub pversion: u64,
+}
+
 /// A blocking request/response client over one TCP connection.
 ///
 /// `classify` performs one transparent reconnect-and-retry when the
@@ -158,16 +174,33 @@ impl Client {
 
     /// Classify one feature vector; `None` means no CAM bank matched.
     pub fn classify(&mut self, features: &[f64]) -> Result<Option<usize>, ClientError> {
-        match self.classify_once(features) {
+        self.classify_pinned(features, None).map(|a| a.class)
+    }
+
+    /// Classify against a specific loaded program (`Some(id)` pins the
+    /// request to that tenant; `None` follows the server's active
+    /// program). The answer carries the program id and registry version
+    /// the request was actually served under, so callers can audit
+    /// which side of a hot swap answered them.
+    pub fn classify_pinned(
+        &mut self,
+        features: &[f64],
+        program: Option<&str>,
+    ) -> Result<ClassifyAnswer, ClientError> {
+        match self.classify_once(features, program) {
             Err(e) if e.is_disconnect() => {
                 self.reconnect()?;
-                self.classify_once(features)
+                self.classify_once(features, program)
             }
             r => r,
         }
     }
 
-    fn classify_once(&mut self, features: &[f64]) -> Result<Option<usize>, ClientError> {
+    fn classify_once(
+        &mut self,
+        features: &[f64],
+        program: Option<&str>,
+    ) -> Result<ClassifyAnswer, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
         write_frame(
@@ -175,11 +208,24 @@ impl Client {
             &Frame::Request {
                 id,
                 features: features.to_vec(),
+                program: program.map(str::to_string),
             },
         )?;
         loop {
             match read_frame(&mut self.stream)? {
-                Frame::Response { id: rid, class, .. } if rid == id => return Ok(class),
+                Frame::Response {
+                    id: rid,
+                    class,
+                    program,
+                    pversion,
+                    ..
+                } if rid == id => {
+                    return Ok(ClassifyAnswer {
+                        class,
+                        program,
+                        pversion,
+                    })
+                }
                 // A stale response from a request this client abandoned
                 // (e.g. before a reconnect): skip it.
                 Frame::Response { .. } => continue,
@@ -224,6 +270,7 @@ impl Client {
                 | Ok(Frame::Shed { .. })
                 | Ok(Frame::BankOutcomes { .. })
                 | Ok(Frame::Health { .. })
+                | Ok(Frame::Programs { .. })
                 | Ok(Frame::ObsReport { .. }) => continue,
                 Ok(Frame::Error { id, message }) => {
                     return Err(ClientError::Server { id, message })
@@ -277,6 +324,7 @@ impl Client {
                 Ok(Frame::Response { .. })
                 | Ok(Frame::Shed { .. })
                 | Ok(Frame::BankOutcomes { .. })
+                | Ok(Frame::Programs { .. })
                 | Ok(Frame::ObsReport { .. }) => continue,
                 Ok(Frame::Error { id, message }) => {
                     return Err(ClientError::Server { id, message })
@@ -321,6 +369,72 @@ impl Client {
                 | Ok(Frame::Shed { .. })
                 | Ok(Frame::BankOutcomes { .. })
                 | Ok(Frame::Health { .. })
+                | Ok(Frame::Programs { .. })
+                | Ok(Frame::Metrics(_)) => continue,
+                Ok(Frame::Error { id, message }) => {
+                    return Err(ClientError::Server { id, message })
+                }
+                Ok(other) => return Err(ClientError::Unexpected(format!("{other:?}"))),
+            }
+        }
+    }
+
+    /// Upload a mapped-program artifact under `id`. The server verifies
+    /// the artifact before admitting it to the registry; a rejected or
+    /// corrupt artifact answers a typed [`ClientError::Server`] and the
+    /// registry is left untouched. On success the server replies with
+    /// its full program table. Bounded like [`Client::metrics`].
+    pub fn load_program(
+        &mut self,
+        id: &str,
+        artifact: &Json,
+    ) -> Result<Vec<ProgramInfo>, ClientError> {
+        self.admin(&Frame::LoadProgram {
+            id: id.to_string(),
+            artifact: artifact.clone(),
+        })
+    }
+
+    /// Make the loaded program `id` the one unpinned traffic routes to.
+    /// Atomic at the admission point: batches already admitted finish
+    /// on their original version. Replies with the program table.
+    pub fn activate_program(&mut self, id: &str) -> Result<Vec<ProgramInfo>, ClientError> {
+        self.admin(&Frame::ActivateProgram { id: id.to_string() })
+    }
+
+    /// List the server's resident programs (id, version, active flag,
+    /// shape, in-flight count).
+    pub fn programs(&mut self) -> Result<Vec<ProgramInfo>, ClientError> {
+        self.admin(&Frame::ListPrograms)
+    }
+
+    fn admin(&mut self, frame: &Frame) -> Result<Vec<ProgramInfo>, ClientError> {
+        self.stream.set_read_timeout(Some(METRICS_TIMEOUT))?;
+        let result = self.admin_inner(frame);
+        let _ = self.stream.set_read_timeout(None);
+        result
+    }
+
+    fn admin_inner(&mut self, frame: &Frame) -> Result<Vec<ProgramInfo>, ClientError> {
+        write_frame(&mut self.stream, frame)?;
+        loop {
+            match read_frame(&mut self.stream) {
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(ClientError::Timeout)
+                }
+                Err(e) => return Err(e.into()),
+                Ok(Frame::Programs { programs }) => return Ok(programs),
+                // Late answers to earlier traffic on this connection.
+                Ok(Frame::Response { .. })
+                | Ok(Frame::Shed { .. })
+                | Ok(Frame::BankOutcomes { .. })
+                | Ok(Frame::Health { .. })
+                | Ok(Frame::ObsReport { .. })
                 | Ok(Frame::Metrics(_)) => continue,
                 Ok(Frame::Error { id, message }) => {
                     return Err(ClientError::Server { id, message })
@@ -364,6 +478,7 @@ impl Client {
             &Frame::Request {
                 id,
                 features: features.to_vec(),
+                program: None,
             },
         )?;
         Ok(())

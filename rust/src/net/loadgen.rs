@@ -125,12 +125,36 @@ pub fn closed_loop_multi(
     clients: usize,
     total: usize,
 ) -> Result<LoadReport> {
+    closed_loop_multi_with_trigger(addrs, inputs, clients, total, 0, None)
+}
+
+/// [`closed_loop_multi`] with a one-shot mid-run trigger: whichever
+/// client lands the `trigger_at`-th answered request (completions, sheds
+/// and errors all count, so the trigger cannot starve under shedding)
+/// fires `trigger` exactly once, inline, before issuing its next
+/// request. Load keeps flowing on the other clients while the trigger
+/// runs — this is how `dt2cam loadgen --swap-at N` activates a second
+/// program in the middle of a measured run. `trigger_at == 0` or
+/// `trigger == None` disables the trigger.
+pub fn closed_loop_multi_with_trigger(
+    addrs: &[String],
+    inputs: &[Vec<f64>],
+    clients: usize,
+    total: usize,
+    trigger_at: usize,
+    trigger: Option<Box<dyn FnOnce() + Send>>,
+) -> Result<LoadReport> {
     anyhow::ensure!(!addrs.is_empty(), "closed_loop needs at least 1 address");
     anyhow::ensure!(clients >= 1, "closed_loop needs at least 1 client");
     anyhow::ensure!(!inputs.is_empty(), "closed_loop needs at least 1 input row");
     let t0 = Instant::now();
     let per = shares(total, clients);
+    let outcomes = std::sync::atomic::AtomicUsize::new(0);
+    let trigger: Mutex<Option<Box<dyn FnOnce() + Send>>> =
+        Mutex::new(if trigger_at > 0 { trigger } else { None });
     let results: Vec<Result<(usize, Vec<f64>, u64, u64)>> = std::thread::scope(|s| {
+        let outcomes = &outcomes;
+        let trigger = &trigger;
         let handles: Vec<_> = per
             .iter()
             .enumerate()
@@ -151,6 +175,15 @@ pub fn closed_loop_multi(
                             Ok(_) => samples.push(t.elapsed().as_secs_f64()),
                             Err(ClientError::Shed { .. }) => shed += 1,
                             Err(_) => errors += 1,
+                        }
+                        let done =
+                            outcomes.fetch_add(1, std::sync::atomic::Ordering::AcqRel) + 1;
+                        if trigger_at > 0 && done >= trigger_at {
+                            // take() makes the fire exactly-once even if
+                            // several clients cross the threshold at once.
+                            if let Some(f) = trigger.lock().unwrap().take() {
+                                f();
+                            }
                         }
                     }
                     Ok((target, samples, shed, errors))

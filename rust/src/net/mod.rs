@@ -28,6 +28,12 @@
 //! `dt2cam loadgen --connect ADDR --dataset NAME` on another; see
 //! `docs/API.md` §Serving over the wire and `examples/net_serve.rs`.
 //!
+//! An admin plane rides the same connection: [`Frame::LoadProgram`] /
+//! [`Frame::ActivateProgram`] / [`Frame::ListPrograms`] manage the
+//! coordinator's program registry (hot swap, multi-tenant pinning via
+//! the optional `program` field on [`Frame::Request`]); see
+//! `docs/API.md` §Model lifecycle.
+//!
 //! The same frames carry the cluster plane ([`crate::cluster`]): a
 //! router fans [`Frame::BankBatch`]s out to bank-sharded workers and
 //! joins their [`Frame::BankOutcomes`]; [`Frame::Health`] is the
@@ -39,10 +45,13 @@ pub mod loadgen;
 pub mod protocol;
 pub mod server;
 
-pub use client::{Client, ClientError, HealthInfo};
-pub use loadgen::{closed_loop, closed_loop_multi, open_loop, open_loop_multi, LoadReport};
+pub use client::{ClassifyAnswer, Client, ClientError, HealthInfo};
+pub use loadgen::{
+    closed_loop, closed_loop_multi, closed_loop_multi_with_trigger, open_loop, open_loop_multi,
+    LoadReport,
+};
 pub use protocol::{
-    encode_frame, read_frame, write_frame, Frame, FrameError, MetricsSnapshot, WorkerMetrics,
-    MAX_FRAME_LEN, PROTOCOL_VERSION,
+    encode_frame, read_frame, write_frame, Frame, FrameError, MetricsSnapshot, ProgramInfo,
+    WorkerMetrics, MAX_FRAME_LEN, PROTOCOL_VERSION,
 };
 pub use server::{Server, ServerConfig, ServerHandle, ServerReport};

@@ -40,6 +40,7 @@ use crate::api::serde::{
     usize_arr,
 };
 use crate::config::json::Json;
+use crate::coordinator::ProgramUsage;
 use crate::obs::{Histogram, Span};
 
 /// Wire protocol version carried by every frame.
@@ -69,6 +70,10 @@ const TYPE_HEALTH_REQUEST: u8 = 10;
 const TYPE_HEALTH: u8 = 11;
 const TYPE_OBS_SCRAPE: u8 = 12;
 const TYPE_OBS_REPORT: u8 = 13;
+const TYPE_LOAD_PROGRAM: u8 = 14;
+const TYPE_ACTIVATE_PROGRAM: u8 = 15;
+const TYPE_LIST_PROGRAMS: u8 = 16;
+const TYPE_PROGRAMS: u8 = 17;
 
 /// Most spans an [`Frame::ObsReport`] will carry, regardless of what
 /// the scraper asked for — keeps the report safely under
@@ -81,7 +86,15 @@ pub enum Frame {
     /// Client → server: classify one feature vector. `id` is
     /// client-scoped (the server routes responses back by it; distinct
     /// connections may reuse ids freely).
-    Request { id: u64, features: Vec<f64> },
+    Request {
+        id: u64,
+        features: Vec<f64>,
+        /// Tenant pin: route this request to the named resident
+        /// program instead of the active one (additive — omitted on
+        /// the wire when `None`, so pre-lifecycle clients are
+        /// byte-identical and always follow the active program).
+        program: Option<String>,
+    },
     /// Server → client: the answer to [`Frame::Request`] `id`.
     /// `class` is `None` when no CAM bank matched, `modeled_latency`
     /// the modeled hardware seconds per decision.
@@ -93,6 +106,14 @@ pub enum Frame {
         /// (`--trace-sample N`); `None` otherwise. Lets a client
         /// correlate its answer with the server's span dump.
         trace: Option<u64>,
+        /// Admission stamp: which program answered (additive — empty
+        /// from pre-lifecycle servers and omitted on the wire then).
+        program: String,
+        /// Admission stamp: that program's registry version (additive;
+        /// 0 = unstamped). Together with `program` this names exactly
+        /// which loaded artifact classified the row — the differential
+        /// harness replays against it bit-for-bit.
+        pversion: u64,
     },
     /// Server → client: request `id` was *not* admitted — the bounded
     /// admission queue is full. Explicit backpressure: the client
@@ -122,6 +143,17 @@ pub enum Frame {
         /// byte-identical). The worker stamps its bank-match spans with
         /// it.
         trace: u64,
+        /// Program id the batch was admitted under (additive; empty =
+        /// pre-lifecycle router, worker serves its active program).
+        program: String,
+        /// Whole-program bank count of that program (additive; 0 =
+        /// unstamped). A worker holding different program bits refuses
+        /// the batch instead of answering from the wrong tenant.
+        pbanks: usize,
+        /// Whole-program physical rows of that program (additive; 0 =
+        /// unstamped) — the same content fingerprint [`Frame::Health`]
+        /// advertises.
+        prows: u64,
     },
     /// Worker → router: per-bank outcomes for [`Frame::BankBatch`]
     /// `id`, ascending by global bank id, one entry per requested bank.
@@ -158,6 +190,67 @@ pub enum Frame {
     /// Server → client: Prometheus-style text exposition plus up to
     /// `spans_max` spans from the trace ring (oldest first).
     ObsReport { text: String, spans: Vec<Span> },
+    /// Client → server (admin): load the mapped-program `artifact`
+    /// (the JSON `dt2cam map` emits) into the registry under `id`
+    /// *without* activating it. The artifact passes the static
+    /// verifier (`analysis::gate_artifact`, deny mode) before it
+    /// touches the registry — a rejected artifact answers a typed
+    /// [`Frame::Error`] naming it and changes nothing. Success answers
+    /// [`Frame::Programs`].
+    LoadProgram { id: String, artifact: Json },
+    /// Client → server (admin): route all *unpinned* traffic to
+    /// resident program `id`. Atomic at the admission point — batches
+    /// admitted before the flip finish on the version they were
+    /// admitted under; no batch ever mixes programs. Success answers
+    /// [`Frame::Programs`].
+    ActivateProgram { id: String },
+    /// Client → server (admin): list resident programs.
+    ListPrograms,
+    /// Server → client: the registry contents (resident order).
+    Programs { programs: Vec<ProgramInfo> },
+}
+
+/// One resident program in a [`Frame::Programs`] listing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProgramInfo {
+    pub id: String,
+    /// Monotonic registry version, bumped on every (re)load. Response
+    /// stamps name this.
+    pub version: u64,
+    /// Whether unpinned traffic currently routes here.
+    pub active: bool,
+    /// Whole-program bank count.
+    pub banks: usize,
+    /// Whole-program physical rows.
+    pub rows_physical: u64,
+    /// Requests admitted against this program and not yet answered.
+    pub in_flight: u64,
+}
+
+impl ProgramInfo {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("version", json_u64(self.version)),
+            ("active", Json::Bool(self.active)),
+            ("banks", Json::num(self.banks as f64)),
+            ("rows_physical", json_u64(self.rows_physical)),
+            ("in_flight", json_u64(self.in_flight)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ProgramInfo> {
+        Ok(ProgramInfo {
+            id: get_str(j, "id")?,
+            version: get_u64(j, "version")?,
+            active: get(j, "active")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("field 'active' must be a boolean"))?,
+            banks: get_usize(j, "banks")?,
+            rows_physical: get_u64(j, "rows_physical")?,
+            in_flight: get_u64(j, "in_flight")?,
+        })
+    }
 }
 
 /// Typed framing/decoding errors. [`FrameError::is_fatal`] separates
@@ -259,6 +352,26 @@ pub struct MetricsSnapshot {
     /// Per-worker attribution when this snapshot was scraped from a
     /// cluster router; empty on a single-process server or worker.
     pub per_worker: Vec<WorkerMetrics>,
+    /// Per-program decision/energy attribution (multi-tenant serving).
+    /// Empty from pre-lifecycle servers; a single-program server
+    /// reports one entry.
+    pub per_program: Vec<ProgramUsage>,
+}
+
+fn program_usage_to_json(u: &ProgramUsage) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(u.id.clone())),
+        ("decisions", json_u64(u.decisions)),
+        ("modeled_energy", Json::num(u.modeled_energy)),
+    ])
+}
+
+fn program_usage_from_json(j: &Json) -> anyhow::Result<ProgramUsage> {
+    Ok(ProgramUsage {
+        id: get_str(j, "id")?,
+        decisions: get_u64(j, "decisions")?,
+        modeled_energy: get_f64(j, "modeled_energy")?,
+    })
 }
 
 /// One worker's contribution to a cluster-wide [`MetricsSnapshot`]:
@@ -352,6 +465,10 @@ impl MetricsSnapshot {
                 "per_worker",
                 Json::Arr(self.per_worker.iter().map(WorkerMetrics::to_json).collect()),
             ),
+            (
+                "per_program",
+                Json::Arr(self.per_program.iter().map(program_usage_to_json).collect()),
+            ),
         ])
     }
 
@@ -385,6 +502,14 @@ impl MetricsSnapshot {
             None | Some(Json::Null) => 0,
             Some(_) => get_u64(j, "dropped")?,
         };
+        // Absent on snapshots from pre-lifecycle servers.
+        let per_program = match j.get("per_program") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(_) => get_arr(j, "per_program")?
+                .iter()
+                .map(program_usage_from_json)
+                .collect::<anyhow::Result<_>>()?,
+        };
         Ok(MetricsSnapshot {
             requests: get_u64(j, "requests")?,
             decisions: get_u64(j, "decisions")?,
@@ -409,6 +534,7 @@ impl MetricsSnapshot {
             queue_hist: hist("queue_hist")?,
             batch_hist: hist("batch_hist")?,
             per_worker,
+            per_program,
         })
     }
 
@@ -447,6 +573,16 @@ impl MetricsSnapshot {
             out.latency_hist.merge(&p.latency_hist);
             out.queue_hist.merge(&p.queue_hist);
             out.batch_hist.merge(&p.batch_hist);
+            // Program attribution sums by id across workers.
+            for u in &p.per_program {
+                match out.per_program.iter_mut().find(|o| o.id == u.id) {
+                    Some(o) => {
+                        o.decisions += u.decisions;
+                        o.modeled_energy += u.modeled_energy;
+                    }
+                    None => out.per_program.push(u.clone()),
+                }
+            }
             let w = p.decisions as f64;
             out.energy_per_dec += w * p.energy_per_dec;
             weight += w;
@@ -470,10 +606,22 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        // Program attribution only shows once a second tenant exists,
+        // so single-program scrape output stays byte-stable.
+        let programs = if self.per_program.len() > 1 {
+            let parts: Vec<String> = self
+                .per_program
+                .iter()
+                .map(|u| format!("{}:{}", u.id, u.decisions))
+                .collect();
+            format!(" programs={}", parts.join(","))
+        } else {
+            String::new()
+        };
         format!(
             "requests={} decisions={} batches={} shed={} dropped={} conns={} e/dec={:.3} nJ \
              wall-throughput={:.0} dec/s lat(p50/p95/p99)={:.1}/{:.1}/{:.1} us \
-             no_match={} multi_match={} banks={}{rows}",
+             no_match={} multi_match={} banks={}{rows}{programs}",
             self.requests,
             self.decisions,
             self.batches,
@@ -560,15 +708,24 @@ fn outcome_from_json(j: &Json) -> anyhow::Result<RemoteBankOutcome> {
 
 fn frame_parts(frame: &Frame) -> (u8, Json) {
     match frame {
-        Frame::Request { id, features } => (
-            TYPE_REQUEST,
-            Json::obj(vec![("id", json_u64(*id)), ("features", json_f64s(features))]),
-        ),
+        Frame::Request {
+            id,
+            features,
+            program,
+        } => {
+            let mut fields = vec![("id", json_u64(*id)), ("features", json_f64s(features))];
+            if let Some(p) = program {
+                fields.push(("program", Json::str(p.clone())));
+            }
+            (TYPE_REQUEST, Json::obj(fields))
+        }
         Frame::Response {
             id,
             class,
             modeled_latency,
             trace,
+            program,
+            pversion,
         } => {
             let mut fields = vec![
                 ("id", json_u64(*id)),
@@ -577,6 +734,12 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
             ];
             if let Some(t) = trace {
                 fields.push(("trace", json_u64(*t)));
+            }
+            if !program.is_empty() {
+                fields.push(("program", Json::str(program.clone())));
+            }
+            if *pversion != 0 {
+                fields.push(("pversion", json_u64(*pversion)));
             }
             (TYPE_RESPONSE, Json::obj(fields))
         }
@@ -602,6 +765,9 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
             banks,
             rows,
             trace,
+            program,
+            pbanks,
+            prows,
         } => {
             let mut fields = vec![
                 ("id", json_u64(*id)),
@@ -610,6 +776,15 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
             ];
             if *trace != 0 {
                 fields.push(("trace", json_u64(*trace)));
+            }
+            if !program.is_empty() {
+                fields.push(("program", Json::str(program.clone())));
+            }
+            if *pbanks != 0 {
+                fields.push(("pbanks", Json::num(*pbanks as f64)));
+            }
+            if *prows != 0 {
+                fields.push(("prows", json_u64(*prows)));
             }
             (TYPE_BANK_BATCH, Json::obj(fields))
         }
@@ -653,6 +828,25 @@ fn frame_parts(frame: &Frame) -> (u8, Json) {
                 ("spans", Json::Arr(spans.iter().map(Span::to_json).collect())),
             ]),
         ),
+        Frame::LoadProgram { id, artifact } => (
+            TYPE_LOAD_PROGRAM,
+            Json::obj(vec![
+                ("id", Json::str(id.clone())),
+                ("artifact", artifact.clone()),
+            ]),
+        ),
+        Frame::ActivateProgram { id } => (
+            TYPE_ACTIVATE_PROGRAM,
+            Json::obj(vec![("id", Json::str(id.clone()))]),
+        ),
+        Frame::ListPrograms => (TYPE_LIST_PROGRAMS, Json::obj(vec![])),
+        Frame::Programs { programs } => (
+            TYPE_PROGRAMS,
+            Json::obj(vec![(
+                "programs",
+                Json::Arr(programs.iter().map(ProgramInfo::to_json).collect()),
+            )]),
+        ),
     }
 }
 
@@ -694,10 +888,18 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
     let text = std::str::from_utf8(payload).map_err(payload_err)?;
     let j = Json::parse(text).map_err(payload_err)?;
     match ty {
-        TYPE_REQUEST => Ok(Frame::Request {
-            id: get_u64(&j, "id").map_err(payload_err)?,
-            features: f64_arr(&j, "features").map_err(payload_err)?,
-        }),
+        TYPE_REQUEST => {
+            // Absent from pre-lifecycle clients — unpinned.
+            let program = match j.get("program") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(get_str(&j, "program").map_err(payload_err)?),
+            };
+            Ok(Frame::Request {
+                id: get_u64(&j, "id").map_err(payload_err)?,
+                features: f64_arr(&j, "features").map_err(payload_err)?,
+                program,
+            })
+        }
         TYPE_RESPONSE => {
             let class = match get(&j, "class").map_err(payload_err)? {
                 Json::Null => None,
@@ -711,11 +913,22 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
                 None | Some(Json::Null) => None,
                 Some(_) => Some(get_u64(&j, "trace").map_err(payload_err)?),
             };
+            // Admission stamps are absent from pre-lifecycle servers.
+            let program = match j.get("program") {
+                None | Some(Json::Null) => String::new(),
+                Some(_) => get_str(&j, "program").map_err(payload_err)?,
+            };
+            let pversion = match j.get("pversion") {
+                None | Some(Json::Null) => 0,
+                Some(_) => get_u64(&j, "pversion").map_err(payload_err)?,
+            };
             Ok(Frame::Response {
                 id: get_u64(&j, "id").map_err(payload_err)?,
                 class,
                 modeled_latency: get_f64(&j, "modeled_latency").map_err(payload_err)?,
                 trace,
+                program,
+                pversion,
             })
         }
         TYPE_SHED => Ok(Frame::Shed {
@@ -742,11 +955,27 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
                 None | Some(Json::Null) => 0,
                 Some(_) => get_u64(&j, "trace").map_err(payload_err)?,
             };
+            // Program stamps are absent from pre-lifecycle routers.
+            let program = match j.get("program") {
+                None | Some(Json::Null) => String::new(),
+                Some(_) => get_str(&j, "program").map_err(payload_err)?,
+            };
+            let pbanks = match j.get("pbanks") {
+                None | Some(Json::Null) => 0,
+                Some(_) => get_usize(&j, "pbanks").map_err(payload_err)?,
+            };
+            let prows = match j.get("prows") {
+                None | Some(Json::Null) => 0,
+                Some(_) => get_u64(&j, "prows").map_err(payload_err)?,
+            };
             Ok(Frame::BankBatch {
                 id: get_u64(&j, "id").map_err(payload_err)?,
                 banks: usize_arr(&j, "banks").map_err(payload_err)?,
                 rows: f64_rows(&j, "rows").map_err(payload_err)?,
                 trace,
+                program,
+                pbanks,
+                prows,
             })
         }
         TYPE_BANK_OUTCOMES => Ok(Frame::BankOutcomes {
@@ -796,6 +1025,22 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, FrameError> {
                 .map_err(payload_err)?
                 .iter()
                 .map(Span::from_json)
+                .collect::<anyhow::Result<_>>()
+                .map_err(payload_err)?,
+        }),
+        TYPE_LOAD_PROGRAM => Ok(Frame::LoadProgram {
+            id: get_str(&j, "id").map_err(payload_err)?,
+            artifact: get(&j, "artifact").map_err(payload_err)?.clone(),
+        }),
+        TYPE_ACTIVATE_PROGRAM => Ok(Frame::ActivateProgram {
+            id: get_str(&j, "id").map_err(payload_err)?,
+        }),
+        TYPE_LIST_PROGRAMS => Ok(Frame::ListPrograms),
+        TYPE_PROGRAMS => Ok(Frame::Programs {
+            programs: get_arr(&j, "programs")
+                .map_err(payload_err)?
+                .iter()
+                .map(ProgramInfo::from_json)
                 .collect::<anyhow::Result<_>>()
                 .map_err(payload_err)?,
         }),
@@ -893,18 +1138,28 @@ mod tests {
         roundtrip(Frame::Request {
             id: 7,
             features: vec![0.25, -1.5, 3.0],
+            program: None,
+        });
+        roundtrip(Frame::Request {
+            id: 7,
+            features: vec![0.25],
+            program: Some("canary".into()),
         });
         roundtrip(Frame::Response {
             id: 7,
             class: Some(2),
             modeled_latency: 1.25e-8,
             trace: None,
+            program: String::new(),
+            pversion: 0,
         });
         roundtrip(Frame::Response {
             id: 8,
             class: None,
             modeled_latency: 0.0,
             trace: Some(42),
+            program: "canary".into(),
+            pversion: 3,
         });
         roundtrip(Frame::Shed { id: 9 });
         roundtrip(Frame::Error {
@@ -943,6 +1198,7 @@ mod tests {
             queue_hist: Histogram::new(),
             batch_hist: Histogram::new(),
             per_worker: vec![],
+            per_program: vec![],
         }));
         roundtrip(Frame::Shutdown);
     }
@@ -954,12 +1210,18 @@ mod tests {
             banks: vec![0, 2, 4],
             rows: vec![vec![0.1, -2.5, 30.0], vec![1.0, 0.0, 0.5]],
             trace: 7,
+            program: "default".into(),
+            pbanks: 5,
+            prows: 217,
         });
         roundtrip(Frame::BankBatch {
             id: (1u64 << 53) + 3,
             banks: vec![1],
             rows: vec![vec![]],
             trace: 0,
+            program: String::new(),
+            pbanks: 0,
+            prows: 0,
         });
         roundtrip(Frame::BankOutcomes {
             id: 41,
@@ -1006,14 +1268,174 @@ mod tests {
         buf.extend_from_slice(payload);
         match read_frame(&mut &buf[..]).unwrap() {
             Frame::BankBatch {
-                id, banks, trace, ..
+                id,
+                banks,
+                trace,
+                program,
+                pbanks,
+                prows,
+                ..
             } => {
                 assert_eq!(id, 5);
                 assert_eq!(banks, vec![1]);
                 assert_eq!(trace, 0);
+                assert!(program.is_empty(), "unstamped batch must stay unstamped");
+                assert_eq!(pbanks, 0);
+                assert_eq!(prows, 0);
             }
             other => panic!("expected BankBatch, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn lifecycle_frames_roundtrip() {
+        roundtrip(Frame::LoadProgram {
+            id: "forest-b".into(),
+            artifact: Json::obj(vec![
+                ("format", Json::str("dt2cam-mapped-program")),
+                ("banks", Json::Arr(vec![])),
+            ]),
+        });
+        roundtrip(Frame::ActivateProgram {
+            id: "forest-b".into(),
+        });
+        roundtrip(Frame::ListPrograms);
+        roundtrip(Frame::Programs {
+            programs: vec![
+                ProgramInfo {
+                    id: "default".into(),
+                    version: 1,
+                    active: false,
+                    banks: 3,
+                    rows_physical: 57,
+                    in_flight: 2,
+                },
+                ProgramInfo {
+                    id: "forest-b".into(),
+                    version: 4,
+                    active: true,
+                    banks: 5,
+                    rows_physical: 91,
+                    in_flight: 0,
+                },
+            ],
+        });
+        roundtrip(Frame::Programs { programs: vec![] });
+    }
+
+    #[test]
+    fn old_request_and_response_frames_still_parse() {
+        // A pre-lifecycle client's Request (no program field) must
+        // decode as unpinned.
+        let payload = br#"{"id":9,"features":[1.5,2.5]}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((payload.len() + 2) as u32).to_be_bytes());
+        buf.push(PROTOCOL_VERSION);
+        buf.push(super::TYPE_REQUEST);
+        buf.extend_from_slice(payload);
+        match read_frame(&mut &buf[..]).unwrap() {
+            Frame::Request {
+                id,
+                features,
+                program,
+            } => {
+                assert_eq!(id, 9);
+                assert_eq!(features, vec![1.5, 2.5]);
+                assert_eq!(program, None);
+            }
+            other => panic!("expected Request, got {other:?}"),
+        }
+        // A pre-lifecycle server's Response (no admission stamp) must
+        // decode with empty stamps.
+        let payload = br#"{"id":9,"class":1,"modeled_latency":2.5e-8}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((payload.len() + 2) as u32).to_be_bytes());
+        buf.push(PROTOCOL_VERSION);
+        buf.push(super::TYPE_RESPONSE);
+        buf.extend_from_slice(payload);
+        match read_frame(&mut &buf[..]).unwrap() {
+            Frame::Response {
+                id,
+                class,
+                program,
+                pversion,
+                ..
+            } => {
+                assert_eq!(id, 9);
+                assert_eq!(class, Some(1));
+                assert!(program.is_empty());
+                assert_eq!(pversion, 0);
+            }
+            other => panic!("expected Response, got {other:?}"),
+        }
+        // An unpinned Request / unstamped Response encodes without the
+        // new keys at all — old servers and clients see the exact
+        // pre-lifecycle bytes.
+        let bytes = encode_frame(&Frame::Request {
+            id: 9,
+            features: vec![1.5],
+            program: None,
+        });
+        assert!(!String::from_utf8_lossy(&bytes).contains("program"));
+        let bytes = encode_frame(&Frame::Response {
+            id: 9,
+            class: None,
+            modeled_latency: 0.0,
+            trace: None,
+            program: String::new(),
+            pversion: 0,
+        });
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        assert!(!text.contains("program") && !text.contains("pversion"));
+    }
+
+    #[test]
+    fn per_program_rides_snapshots_and_merges_by_id() {
+        let snap = MetricsSnapshot {
+            decisions: 6,
+            per_program: vec![
+                ProgramUsage {
+                    id: "default".into(),
+                    decisions: 4,
+                    modeled_energy: 4e-9,
+                },
+                ProgramUsage {
+                    id: "canary".into(),
+                    decisions: 2,
+                    modeled_energy: 1e-9,
+                },
+            ],
+            ..Default::default()
+        };
+        roundtrip(Frame::Metrics(snap.clone()));
+        assert!(snap.summary_line().contains("programs=default:4,canary:2"));
+        // A pre-lifecycle peer omits the field entirely.
+        let mut fields = snap.to_json();
+        if let Json::Obj(pairs) = &mut fields {
+            pairs.retain(|(k, _)| k != "per_program");
+        }
+        let back = MetricsSnapshot::from_json(&fields).unwrap();
+        assert!(back.per_program.is_empty());
+        assert!(!back.summary_line().contains("programs="));
+        // Merge sums attribution by id across workers.
+        let other = MetricsSnapshot {
+            decisions: 3,
+            per_program: vec![ProgramUsage {
+                id: "canary".into(),
+                decisions: 3,
+                modeled_energy: 2e-9,
+            }],
+            ..Default::default()
+        };
+        let merged = MetricsSnapshot::merge(&[snap, other]);
+        assert_eq!(merged.per_program.len(), 2);
+        let canary = merged
+            .per_program
+            .iter()
+            .find(|u| u.id == "canary")
+            .unwrap();
+        assert_eq!(canary.decisions, 5);
+        assert!((canary.modeled_energy - 3e-9).abs() < 1e-20);
     }
 
     #[test]
@@ -1237,6 +1659,7 @@ mod tests {
         roundtrip(Frame::Request {
             id: (1u64 << 53) + 11,
             features: vec![1.0],
+            program: None,
         });
         roundtrip(Frame::Shed { id: u64::MAX });
     }

@@ -60,12 +60,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
+use crate::analysis::{gate_artifact, VerifyMode};
+use crate::api::program::MappedProgram;
+use crate::config::json::Json;
+use crate::coordinator::{
+    Coordinator, InferenceRequest, InferenceResponse, Metrics, DEFAULT_MAX_PROGRAMS,
+};
 use crate::obs::export::prometheus_text;
 use crate::obs::{SpanKind, Tracer};
 
 use super::protocol::{
-    read_frame, write_frame, Frame, MetricsSnapshot, WorkerMetrics, MAX_REPORT_SPANS,
+    read_frame, write_frame, Frame, MetricsSnapshot, ProgramInfo, WorkerMetrics, MAX_REPORT_SPANS,
 };
 
 /// Server tunables.
@@ -83,6 +88,10 @@ pub struct ServerConfig {
     /// default) — no tracer is built and the hot path pays one
     /// `Option` check per request.
     pub trace_sample: u64,
+    /// Resident-program bound of the coordinator's registry
+    /// (`serve --max-programs`): how many tenants `dt2cam load` may
+    /// keep loaded before LRU eviction of idle ones.
+    pub max_programs: usize,
 }
 
 impl Default for ServerConfig {
@@ -91,6 +100,7 @@ impl Default for ServerConfig {
             admission: 256,
             batch_max_wait: None,
             trace_sample: 0,
+            max_programs: DEFAULT_MAX_PROGRAMS,
         }
     }
 }
@@ -128,7 +138,23 @@ enum SchedMsg {
         rows: Vec<Vec<f64>>,
         /// The router batch's representative trace id (0 = untraced).
         trace: u64,
+        /// Program stamp (empty id = active program, unchecked
+        /// identity when the figures are 0 — legacy routers).
+        program: String,
+        pbanks: usize,
+        prows: u64,
     },
+    /// Admin: load a mapped-program artifact under `id` (no admission
+    /// slot — control plane, like a metrics scrape).
+    LoadProgram {
+        conn: u64,
+        id: String,
+        artifact: Json,
+    },
+    /// Admin: route unpinned traffic to resident program `id`.
+    ActivateProgram { conn: u64, id: String },
+    /// Admin: list resident programs.
+    ListPrograms { conn: u64 },
     /// Liveness/placement probe from connection `conn`.
     Health { conn: u64 },
     /// Observability scrape from connection `conn`: exposition text
@@ -263,6 +289,7 @@ impl Server {
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let sched_shared = Arc::clone(&shared);
         let batch_max_wait = config.batch_max_wait;
+        let max_programs = config.max_programs;
         let scheduler = std::thread::Builder::new()
             .name("dt2cam-net-scheduler".into())
             .spawn(move || -> Result<Metrics> {
@@ -276,6 +303,7 @@ impl Server {
                 if let Some(d) = batch_max_wait {
                     coord.set_batch_max_wait(d);
                 }
+                coord.set_max_programs(max_programs);
                 // Share the server's tracer with the coordinator (and,
                 // through its slot, with pipeline stage threads) so the
                 // whole serving path records into one span ring.
@@ -284,7 +312,7 @@ impl Server {
                 }
                 sched_shared
                     .min_features
-                    .store(coord.n_features(), Ordering::Release);
+                    .store(coord.min_features(), Ordering::Release);
                 let _ = ready_tx.send(Ok(()));
                 let result = serve_loop(&mut coord, &rx, &sched_shared);
                 close_all(&sched_shared);
@@ -428,7 +456,10 @@ fn serve_loop(coord: &mut Coordinator, rx: &Receiver<SchedMsg>, shared: &Shared)
                 msg @ (SchedMsg::BankBatch { .. }
                 | SchedMsg::Health { .. }
                 | SchedMsg::Metrics { .. }
-                | SchedMsg::ObsScrape { .. }) => {
+                | SchedMsg::ObsScrape { .. }
+                | SchedMsg::LoadProgram { .. }
+                | SchedMsg::ActivateProgram { .. }
+                | SchedMsg::ListPrograms { .. }) => {
                     let _ = handle(coord, shared, msg);
                 }
                 SchedMsg::Shutdown => {}
@@ -461,10 +492,15 @@ fn handle(coord: &mut Coordinator, shared: &Shared, msg: SchedMsg) -> bool {
             banks,
             rows,
             trace,
+            program,
+            pbanks,
+            prows,
         } => {
             // A failed bank batch answers typed — never tears down the
-            // scheduler (mirrors the per-request stage-error path).
-            let frame = match coord.run_bank_batch(&banks, &rows, trace) {
+            // scheduler (mirrors the per-request stage-error path). A
+            // program-identity mismatch lands here too: the worker
+            // refuses rather than answer from the wrong tenant.
+            let frame = match coord.run_bank_batch(&program, pbanks, prows, &banks, &rows, trace) {
                 Ok(outcomes) => Frame::BankOutcomes { id, outcomes },
                 Err(e) => {
                     coord.metrics.stage_errors += 1;
@@ -476,6 +512,37 @@ fn handle(coord: &mut Coordinator, shared: &Shared, msg: SchedMsg) -> bool {
             };
             shared.try_send_to(conn, frame);
             shared.release();
+            false
+        }
+        SchedMsg::LoadProgram { conn, id, artifact } => {
+            let frame = match load_artifact(coord, &id, &artifact) {
+                Ok(()) => programs_frame(coord),
+                Err(e) => Frame::Error {
+                    id: None,
+                    message: format!("loading program {id:?}: {e:#}"),
+                },
+            };
+            // The registry may have gained (or reloaded) a tenant —
+            // refresh the cross-tenant admission screen.
+            shared
+                .min_features
+                .store(coord.min_features(), Ordering::Release);
+            shared.try_send_to(conn, frame);
+            false
+        }
+        SchedMsg::ActivateProgram { conn, id } => {
+            let frame = match coord.activate_program(&id) {
+                Ok(_) => programs_frame(coord),
+                Err(e) => Frame::Error {
+                    id: None,
+                    message: format!("{e:#}"),
+                },
+            };
+            shared.try_send_to(conn, frame);
+            false
+        }
+        SchedMsg::ListPrograms { conn } => {
+            shared.try_send_to(conn, programs_frame(coord));
             false
         }
         SchedMsg::Health { conn } => {
@@ -520,6 +587,43 @@ fn handle(coord: &mut Coordinator, shared: &Shared, msg: SchedMsg) -> bool {
     }
 }
 
+/// Parse, verify, and load one mapped-program artifact into the
+/// coordinator's registry. Verification is the same static gate
+/// `serve` applies at boot, in **deny** mode: a corrupt or
+/// verifier-rejected artifact changes nothing and the error names it.
+/// On a cluster worker the artifact is sliced to the worker's placement
+/// subset while the registry keeps the whole program's identity.
+fn load_artifact(coord: &mut Coordinator, id: &str, artifact: &Json) -> Result<()> {
+    anyhow::ensure!(!id.is_empty(), "program id must be non-empty");
+    let mp = MappedProgram::from_json(artifact).context("parsing mapped-program artifact")?;
+    gate_artifact(&mp, &format!("program {id:?}"), VerifyMode::Deny)?;
+    let subset = coord.bank_subset().map(<[usize]>::to_vec);
+    let specs = match &subset {
+        Some(ids) => mp.bank_specs_for(ids)?,
+        None => mp.bank_specs(),
+    };
+    coord.load_program(id, specs, mp.n_banks(), mp.rows_physical())?;
+    Ok(())
+}
+
+/// The registry contents as the admin-plane reply frame.
+fn programs_frame(coord: &Coordinator) -> Frame {
+    Frame::Programs {
+        programs: coord
+            .program_list()
+            .into_iter()
+            .map(|p| ProgramInfo {
+                id: p.id,
+                version: p.version,
+                active: p.active,
+                banks: p.banks,
+                rows_physical: p.rows_physical,
+                in_flight: p.in_flight,
+            })
+            .collect(),
+    }
+}
+
 /// Route responses back to their connections by global id. A vanished
 /// connection drops its responses (the admission slot is still
 /// released).
@@ -553,6 +657,8 @@ fn route(shared: &Shared, responses: Vec<InferenceResponse>) {
                     class: r.class,
                     modeled_latency: r.modeled_latency,
                     trace: (r.trace != 0).then_some(r.trace),
+                    program: r.program,
+                    pversion: r.version,
                 },
             };
             // try_send, never block the scheduler on one connection. A
@@ -615,6 +721,7 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
         // view and attaches per-worker attribution; a plain server or
         // worker has no remote dispatch and reports itself unchanged.
         per_worker: Vec::new(),
+        per_program: m.per_program.clone(),
     };
     let Some(statuses) = coord.remote_status(true) else {
         return snap;
@@ -679,6 +786,10 @@ fn snapshot(coord: &Coordinator, shared: &Shared) -> MetricsSnapshot {
     merged.latency_p50 = merged.latency_hist.percentile(50.0) as f64 * 1e-9;
     merged.latency_p95 = merged.latency_hist.percentile(95.0) as f64 * 1e-9;
     merged.latency_p99 = merged.latency_hist.percentile(99.0) as f64 * 1e-9;
+    // Program attribution is request-plane: the router's own
+    // coordinator attributes every joined decision exactly, while the
+    // worker merge would count each decision once per worker it touched.
+    merged.per_program = snap.per_program.clone();
     merged.per_worker = workers;
     merged
 }
@@ -785,7 +896,11 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<WriterMsg>) {
 fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, shared: Arc<Shared>) {
     loop {
         match read_frame(&mut stream) {
-            Ok(Frame::Request { id, features }) => {
+            Ok(Frame::Request {
+                id,
+                features,
+                program,
+            }) => {
                 if shared.shutting_down.load(Ordering::Acquire) {
                     // The drain is running: refuse instead of admitting
                     // work the scheduler may never see.
@@ -842,9 +957,9 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
                 // Arrival is stamped here, at the socket — the queue
                 // delay the metrics see includes the admission hop.
                 if tx
-                    .send(SchedMsg::Request(InferenceRequest::traced(
-                        gid, features, trace,
-                    )))
+                    .send(SchedMsg::Request(
+                        InferenceRequest::traced(gid, features, trace).with_program(program),
+                    ))
                     .is_err()
                 {
                     shared.routes.lock().unwrap().remove(&gid);
@@ -872,6 +987,9 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
                 banks,
                 rows,
                 trace,
+                program,
+                pbanks,
+                prows,
             }) => {
                 if shared.shutting_down.load(Ordering::Acquire) {
                     shared.send_to(
@@ -898,10 +1016,31 @@ fn reader_loop(conn: u64, mut stream: TcpStream, tx: SyncSender<SchedMsg>, share
                         banks,
                         rows,
                         trace,
+                        program,
+                        pbanks,
+                        prows,
                     })
                     .is_err()
                 {
                     shared.release();
+                    break;
+                }
+            }
+            // Admin plane: control messages like a metrics scrape — no
+            // admission slot, answered by the scheduler in arrival
+            // order relative to this connection's other frames.
+            Ok(Frame::LoadProgram { id, artifact }) => {
+                if tx.send(SchedMsg::LoadProgram { conn, id, artifact }).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::ActivateProgram { id }) => {
+                if tx.send(SchedMsg::ActivateProgram { conn, id }).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::ListPrograms) => {
+                if tx.send(SchedMsg::ListPrograms { conn }).is_err() {
                     break;
                 }
             }

@@ -1,0 +1,412 @@
+//! Online-lifecycle integration tests (`dt2cam serve` admin plane):
+//! hot-swapping the active program **under concurrent load** must be
+//! invisible to clients except for the response stamps. Four
+//! closed-loop clients hammer a live socket server while a second
+//! 3-bank forest is loaded and activated mid-run; every request must be
+//! answered exactly once, with zero Shed/Error frames, and every
+//! response's class must be bit-identical to the in-process
+//! `classify_all` of whichever program version its admission stamp
+//! names. The same harness then runs behind the cluster router
+//! (bank-sharded workers swap too). Admin-plane negatives ride along:
+//! a corrupt or verifier-rejected artifact is refused with a typed
+//! error naming it and leaves the registry untouched, activating an
+//! unknown id is refused, and a full single-slot registry refuses a
+//! second tenant instead of evicting the active one.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use dt2cam::api::{BackendOptions, Dt2Cam, MappedProgram};
+use dt2cam::cart::ForestParams;
+use dt2cam::cluster::{spawn_router, spawn_worker, Placement};
+use dt2cam::config::EngineKind;
+use dt2cam::coordinator::DEFAULT_PROGRAM;
+use dt2cam::net::{
+    ClassifyAnswer, Client, ClientError, Server, ServerConfig, ServerHandle,
+};
+use dt2cam::tcam::params::DeviceParams;
+
+fn has_pjrt_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Two *different* 3-bank bagged forests on the same dataset and seed
+/// (haberman @S=16): identical test split and feature space, different
+/// bootstrap/feature-subset draws — so a response answered by the wrong
+/// program version shows up as a class mismatch, not a shape error.
+fn two_programs() -> (MappedProgram, MappedProgram, Vec<Vec<f64>>) {
+    let p = DeviceParams::default();
+    let fa = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.8,
+        max_features: 2,
+        ..Default::default()
+    };
+    let model_a = Dt2Cam::forest("haberman", &fa).unwrap();
+    let mapped_a = model_a.compile().map(16, &p);
+    let fb = ForestParams {
+        n_trees: 3,
+        sample_fraction: 0.6,
+        max_features: 1,
+        ..Default::default()
+    };
+    let model_b = Dt2Cam::forest("haberman", &fb).unwrap();
+    let mapped_b = model_b.compile().map(16, &p);
+    (mapped_a, mapped_b, model_a.test_x)
+}
+
+/// Drive `total` closed-loop requests from 4 concurrent clients against
+/// `addr` (request k carries input `k % inputs.len()`, striped across
+/// clients). The client thread that answers request number `swap_at`
+/// runs `swap` inline — mid-run, with the other three clients still
+/// sending — then keeps going. Every request must succeed: a Shed or
+/// Error frame anywhere fails the test, which *is* the
+/// "zero swap-attributable refusals" criterion. Returns every
+/// `(input index, answer)` observed.
+fn drive_with_swap(
+    addr: &str,
+    inputs: &[Vec<f64>],
+    total: usize,
+    swap_at: usize,
+    swap: impl FnOnce() + Send + 'static,
+) -> Vec<(usize, ClassifyAnswer)> {
+    let n_clients = 4;
+    let answered = AtomicUsize::new(0);
+    let trigger: Mutex<Option<Box<dyn FnOnce() + Send>>> =
+        Mutex::new(Some(Box::new(swap)));
+    std::thread::scope(|s| {
+        (0..n_clients)
+            .map(|c| {
+                let answered = &answered;
+                let trigger = &trigger;
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut out = Vec::new();
+                    let mut k = c;
+                    while k < total {
+                        let i = k % inputs.len();
+                        let ans = client.classify_pinned(&inputs[i], None).unwrap();
+                        out.push((i, ans));
+                        // Count *answered* requests (not sent ones) so
+                        // the swap provably lands after `swap_at` full
+                        // round trips — mid-run by construction.
+                        let done = answered.fetch_add(1, Ordering::AcqRel) + 1;
+                        if done >= swap_at {
+                            if let Some(f) = trigger.lock().unwrap().take() {
+                                f();
+                            }
+                        }
+                        k += n_clients;
+                    }
+                    out
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    })
+}
+
+/// The differential criterion: each answer's class must equal the
+/// in-process expectation of the program version its stamp names —
+/// version 1 = boot program (`DEFAULT_PROGRAM`), version 2 = the
+/// swapped-in tenant `"b"` — and the run must have observed both sides
+/// of the swap (otherwise the trigger never fired mid-run).
+fn check_differential(
+    answers: &[(usize, ClassifyAnswer)],
+    expected_a: &[Option<usize>],
+    expected_b: &[Option<usize>],
+    label: &str,
+) {
+    let (mut before, mut after) = (0usize, 0usize);
+    for (i, ans) in answers {
+        match ans.program.as_str() {
+            p if p == DEFAULT_PROGRAM => {
+                assert_eq!(ans.pversion, 1, "{label}: boot program version");
+                assert_eq!(
+                    ans.class, expected_a[*i],
+                    "{label}: input {i} answered under {p:?} v{}",
+                    ans.pversion
+                );
+                before += 1;
+            }
+            "b" => {
+                assert_eq!(ans.pversion, 2, "{label}: swapped program version");
+                assert_eq!(
+                    ans.class, expected_b[*i],
+                    "{label}: input {i} answered under \"b\" v{}",
+                    ans.pversion
+                );
+                after += 1;
+            }
+            other => panic!("{label}: unexpected program stamp {other:?}"),
+        }
+    }
+    assert!(before > 0, "{label}: no request was served before the swap");
+    assert!(after > 0, "{label}: no request was served after the swap");
+}
+
+#[test]
+fn hot_swap_under_load_is_differentially_exact_registry_wide() {
+    for engine in EngineKind::ALL {
+        if engine == EngineKind::Pjrt && !has_pjrt_artifacts() {
+            eprintln!("skipping pjrt: run `make artifacts`");
+            continue;
+        }
+        let (mapped_a, mapped_b, inputs) = two_programs();
+        let batch = 8;
+        let expected_a = mapped_a
+            .session(engine, batch)
+            .unwrap()
+            .classify_all(&inputs)
+            .unwrap();
+        let expected_b = mapped_b
+            .session(engine, batch)
+            .unwrap()
+            .classify_all(&inputs)
+            .unwrap();
+
+        let boot = mapped_a.clone();
+        let opts = BackendOptions::default();
+        let server = Server::spawn("127.0.0.1:0", ServerConfig::default(), move || {
+            Ok(boot.session_with(engine, batch, &opts)?.into_coordinator())
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+
+        let total = inputs.len() * 2;
+        let artifact = mapped_b.to_json();
+        let admin_addr = addr.clone();
+        let answers = drive_with_swap(&addr, &inputs, total, total / 3, move || {
+            // Load-then-activate over the wire, on a fresh connection —
+            // exactly what `dt2cam load` + `dt2cam activate` do.
+            let mut admin = Client::connect(&admin_addr).unwrap();
+            let listed = admin.load_program("b", &artifact).unwrap();
+            assert_eq!(listed.len(), 2, "load makes the tenant resident");
+            let listed = admin.activate_program("b").unwrap();
+            assert!(
+                listed.iter().any(|p| p.id == "b" && p.active && p.version == 2),
+                "activate flips the active id: {listed:?}"
+            );
+        });
+
+        // Exactly once: 4 clients × their stripes, every request
+        // answered (a lost or doubled response would change the count).
+        assert_eq!(answers.len(), total, "{}", engine.name());
+        check_differential(&answers, &expected_a, &expected_b, engine.name());
+
+        // Per-tenant attribution adds up over the wire.
+        let mut client = Client::connect(&addr).unwrap();
+        let snap = client.metrics().unwrap();
+        assert_eq!(snap.decisions, total as u64, "{}", engine.name());
+        assert_eq!(snap.shed, 0, "{}", engine.name());
+        let usage: u64 = snap.per_program.iter().map(|u| u.decisions).sum();
+        assert_eq!(usage, total as u64, "{}: per-program decisions roll up", engine.name());
+        assert!(
+            snap.per_program.iter().any(|u| u.id == "b" && u.decisions > 0),
+            "{}: swapped tenant shows usage: {:?}",
+            engine.name(),
+            snap.per_program
+        );
+        drop(client);
+
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.shed, 0, "{}", engine.name());
+        assert_eq!(report.dropped_responses, 0, "{}", engine.name());
+        assert_eq!(report.metrics.decisions, total as u64, "{}", engine.name());
+    }
+}
+
+#[test]
+fn hot_swap_under_load_behind_cluster_router() {
+    let engine = EngineKind::Native;
+    let batch = 8;
+    let (mapped_a, mapped_b, inputs) = two_programs();
+    let expected_a = mapped_a
+        .session(engine, batch)
+        .unwrap()
+        .classify_all(&inputs)
+        .unwrap();
+    let expected_b = mapped_b
+        .session(engine, batch)
+        .unwrap()
+        .classify_all(&inputs)
+        .unwrap();
+
+    // 3 single-bank workers + router (the integration_cluster idiom:
+    // shape the placement on fake names, then rebuild it with the real
+    // port-0 addresses).
+    let n_workers = 3;
+    let shape = Placement::round_robin(
+        3,
+        (0..n_workers).map(|i| format!("w{i}")).collect(),
+        0,
+    )
+    .unwrap();
+    let workers: Vec<ServerHandle> = (0..n_workers)
+        .map(|w| {
+            spawn_worker(
+                "127.0.0.1:0",
+                ServerConfig::default(),
+                mapped_a.clone(),
+                engine,
+                batch,
+                BackendOptions::default(),
+                shape.banks_of(w),
+            )
+            .unwrap()
+        })
+        .collect();
+    let worker_addrs: Vec<String> =
+        workers.iter().map(|w| w.local_addr().to_string()).collect();
+    let placement = Placement::round_robin(3, worker_addrs.clone(), 0).unwrap();
+    let router = spawn_router(
+        "127.0.0.1:0",
+        ServerConfig::default(),
+        mapped_a.clone(),
+        batch,
+        placement,
+    )
+    .unwrap();
+    let addr = router.local_addr().to_string();
+
+    let total = inputs.len() * 2;
+    let artifact = mapped_b.to_json();
+    let router_addr = addr.clone();
+    let answers = drive_with_swap(&addr, &inputs, total, total / 3, move || {
+        // Cluster swap order: load everywhere first (workers, then the
+        // router), activate the workers, and flip the router *last* —
+        // from the first router-side "b" admission on, every BankBatch
+        // names a program the workers already hold, so no batch can hit
+        // an identity refusal mid-swap.
+        let mut worker_admins: Vec<Client> = worker_addrs
+            .iter()
+            .map(|a| Client::connect(a).unwrap())
+            .collect();
+        for admin in &mut worker_admins {
+            admin.load_program("b", &artifact).unwrap();
+        }
+        let mut router_admin = Client::connect(&router_addr).unwrap();
+        router_admin.load_program("b", &artifact).unwrap();
+        for admin in &mut worker_admins {
+            admin.activate_program("b").unwrap();
+        }
+        let listed = router_admin.activate_program("b").unwrap();
+        assert!(
+            listed.iter().any(|p| p.id == "b" && p.active),
+            "router activates the swapped tenant: {listed:?}"
+        );
+    });
+
+    assert_eq!(answers.len(), total);
+    check_differential(&answers, &expected_a, &expected_b, "cluster");
+
+    let report = router.shutdown().unwrap();
+    assert_eq!(report.shed, 0, "router shed");
+    assert_eq!(report.dropped_responses, 0, "router dropped");
+    assert_eq!(report.metrics.decisions, total as u64);
+    for w in workers {
+        let wr = w.shutdown().unwrap();
+        assert_eq!(wr.dropped_responses, 0, "worker dropped");
+    }
+}
+
+/// Unwrap the typed-error arm of an admin call.
+fn server_error(r: Result<Vec<dt2cam::net::ProgramInfo>, ClientError>) -> String {
+    match r {
+        Err(ClientError::Server { message, .. }) => message,
+        other => panic!("expected a typed server error, got {other:?}"),
+    }
+}
+
+#[test]
+fn admin_negatives_answer_typed_and_leave_the_registry_untouched() {
+    let engine = EngineKind::Native;
+    let (mapped_a, mapped_b, _inputs) = two_programs();
+    let boot = mapped_a.clone();
+    let opts = BackendOptions::default();
+    let server = Server::spawn("127.0.0.1:0", ServerConfig::default(), move || {
+        Ok(boot.session_with(engine, 8, &opts)?.into_coordinator())
+    })
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+
+    // (a) Not an artifact at all: refused, error names the id.
+    let junk = dt2cam::config::Json::obj(vec![(
+        "hello",
+        dt2cam::config::Json::str("world".to_string()),
+    )]);
+    let msg = server_error(client.load_program("junk", &junk));
+    assert!(msg.contains("\"junk\""), "error names the id: {msg}");
+    assert!(
+        msg.contains("parsing mapped-program artifact"),
+        "error says why: {msg}"
+    );
+
+    // (b) Parses but fails the static verifier (one flipped row class
+    // breaks path↔row bijectivity): the verify-on-load Deny gate
+    // refuses it before it ever becomes resident.
+    let mut evil = mapped_b.clone();
+    let n = evil.program.banks[0].lut.n_classes;
+    let c = &mut evil.program.banks[0].lut.classes[0];
+    *c = (*c + 1) % n;
+    let msg = server_error(client.load_program("evil", &evil.to_json()));
+    assert!(msg.contains("\"evil\""), "error names the id: {msg}");
+    assert!(
+        msg.contains("failed static verification"),
+        "error names the gate: {msg}"
+    );
+
+    // (c) Activating something that was never loaded is refused and the
+    // refusal names both the ghost and the residents.
+    let msg = server_error(client.activate_program("ghost"));
+    assert!(
+        msg.contains("cannot activate unknown program") && msg.contains("\"ghost\""),
+        "{msg}"
+    );
+
+    // After all three refusals the registry is exactly the boot state.
+    let listed = client.programs().unwrap();
+    assert_eq!(listed.len(), 1);
+    assert_eq!(listed[0].id, DEFAULT_PROGRAM);
+    assert!(listed[0].active);
+    assert_eq!(listed[0].version, 1);
+
+    // And the untouched registry still serves.
+    let x = vec![0.5; 3];
+    let ans = client.classify_pinned(&x, None).unwrap();
+    assert_eq!(ans.program, DEFAULT_PROGRAM);
+    drop(client);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn single_slot_registry_refuses_a_second_tenant_instead_of_evicting_the_active_one() {
+    let engine = EngineKind::Native;
+    let (mapped_a, mapped_b, _inputs) = two_programs();
+    let boot = mapped_a.clone();
+    let opts = BackendOptions::default();
+    let cfg = ServerConfig {
+        max_programs: 1,
+        ..Default::default()
+    };
+    let server = Server::spawn("127.0.0.1:0", cfg, move || {
+        Ok(boot.session_with(engine, 8, &opts)?.into_coordinator())
+    })
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+
+    // The only resident is active; LRU may never evict it, so the load
+    // is refused with the typed full-registry error — not accepted, not
+    // a silent swap.
+    let msg = server_error(client.load_program("b", &mapped_b.to_json()));
+    assert!(msg.contains("program registry is full"), "{msg}");
+    assert!(msg.contains("\"b\""), "refusal names the rejected id: {msg}");
+
+    let listed = client.programs().unwrap();
+    assert_eq!(listed.len(), 1, "registry untouched: {listed:?}");
+    assert_eq!(listed[0].id, DEFAULT_PROGRAM);
+    drop(client);
+    server.shutdown().unwrap();
+}

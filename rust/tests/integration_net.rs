@@ -250,6 +250,7 @@ fn pipelined_graceful_shutdown_drains_batches_already_inside_the_pipeline() {
             &Frame::Request {
                 id,
                 features: inputs[id as usize].clone(),
+                program: None,
             },
         )
         .unwrap();
@@ -297,6 +298,7 @@ fn malformed_truncated_and_oversize_frames_get_typed_errors_and_the_connection_s
             &Frame::Request {
                 id: 7,
                 features: inputs[0].clone(),
+                program: None,
             },
         )
         .unwrap();
@@ -348,6 +350,7 @@ fn malformed_truncated_and_oversize_frames_get_typed_errors_and_the_connection_s
         &Frame::Request {
             id: 42,
             features: vec![0.5],
+            program: None,
         },
     )
     .unwrap();
@@ -416,6 +419,7 @@ fn admission_overflow_sheds_and_graceful_shutdown_drains_in_flight() {
             &Frame::Request {
                 id,
                 features: inputs[id as usize % inputs.len()].clone(),
+                program: None,
             },
         )
         .unwrap();

@@ -91,6 +91,7 @@ fn traced_sequential_serving_produces_the_full_span_chain_and_scrape() {
             &Frame::Request {
                 id: i as u64,
                 features: x.clone(),
+                program: None,
             },
         )
         .unwrap();
@@ -245,6 +246,7 @@ fn untraced_server_scrapes_counters_only_and_echoes_no_trace() {
         &Frame::Request {
             id: 0,
             features: inputs[0].clone(),
+            program: None,
         },
     )
     .unwrap();

@@ -8,7 +8,9 @@ use dt2cam::cluster::{spawn_router, spawn_worker, Placement};
 use dt2cam::compiler::compile;
 use dt2cam::config::EngineKind;
 use dt2cam::coordinator::scheduler::Scheduler;
-use dt2cam::coordinator::{BankSpec, Coordinator, ServingPlan};
+use dt2cam::coordinator::{
+    BankSpec, Coordinator, InferenceRequest, ServingPlan, DEFAULT_PROGRAM,
+};
 use dt2cam::net::{Client, ServerConfig};
 use dt2cam::opt::OptLevel;
 use dt2cam::synth::mapping::MappedArray;
@@ -494,6 +496,280 @@ fn one_survivor_property() {
             if survivors.len() != 1 {
                 return Err(format!("{} survivors for {x:?}", survivors.len()));
             }
+        }
+        Ok(())
+    });
+}
+
+/// The multi-tenant differential property: two seeded random forests
+/// loaded as two tenants of one registry coordinator, driven by
+/// *interleaved pinned* requests, must answer exactly as two solo
+/// single-program coordinators do — per-tenant classes **and** the
+/// per-tenant modeled-energy attribution bit-identical — on every
+/// pipeline-capable registry backend, in sequential and pipelined
+/// execution alike. The batcher keys batches by (program, version), so
+/// each tenant sees its own probe stream in its own order: any keying
+/// or attribution bug perturbs the f64 sums and fails the bit compare.
+#[test]
+fn two_tenant_registry_is_differentially_exact_per_tenant() {
+    let opts = BackendOptions::default();
+    let p = DeviceParams::default();
+    for kind in EngineKind::ALL {
+        if let Err(e) = registry::create_pipeline_backend(kind, &opts) {
+            assert!(
+                !registry::pipeline_capable(kind),
+                "constructor refused a pipeline-capable backend: {e:#}"
+            );
+            eprintln!("skipping {} in the tenant harness: {e:#}", kind.name());
+            continue;
+        }
+        property_r(
+            &format!("two tenants == two solos ({})", kind.name()),
+            3,
+            |g: &mut Gen| {
+                // One shared feature space so the same probes are valid
+                // rows for both tenants; two independent training draws
+                // so the tenants genuinely disagree.
+                let n = g.usize_in(40, 110);
+                let f = g.usize_in(2, 5);
+                let classes = g.usize_in(2, 4);
+                let xs = g.matrix(n, f);
+                let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+                let fp = ForestParams {
+                    n_trees: 3,
+                    sample_fraction: 0.8,
+                    max_features: 2.min(f),
+                    ..Default::default()
+                };
+                let forest_a = train_forest(&xs, &ys, classes, &fp, &mut Prng::new(g.u64()));
+                let forest_b = train_forest(&xs, &ys, classes, &fp, &mut Prng::new(g.u64()));
+                let s = g.pick(&[16usize, 32]);
+                let map_forest = |forest: &Forest, g: &mut Gen| -> Vec<MappedArray> {
+                    forest
+                        .trees
+                        .iter()
+                        .map(|t| {
+                            MappedArray::from_lut(&compile(t), s, &p, &mut Prng::new(g.u64()))
+                        })
+                        .collect()
+                };
+                let arrays_a = map_forest(&forest_a, g);
+                let arrays_b = map_forest(&forest_b, g);
+                let batch = g.pick(&[4usize, 8]);
+                let depth = g.pick(&[1usize, 2]);
+                let probes: Vec<Vec<f64>> = (0..g.usize_in(10, 30))
+                    .map(|_| (0..f).map(|_| g.f64_in(-0.1, 1.1)).collect())
+                    .collect();
+
+                // Solo expectations, one single-tenant coordinator each.
+                let solo = |forest: &Forest,
+                            arrays: &[MappedArray]|
+                 -> Result<(Vec<Option<usize>>, f64), String> {
+                    let dispatch = registry::create_bank_dispatch(kind, &opts)
+                        .map_err(|e| format!("{e:#}"))?;
+                    let mut c =
+                        Coordinator::with_banks(dispatch, batch, bank_specs(forest, arrays), p.clone())
+                            .map_err(|e| format!("{e:#}"))?;
+                    let classes = c.classify_all(&probes).map_err(|e| format!("{e:#}"))?;
+                    Ok((classes, c.metrics.modeled_energy))
+                };
+                let (want_a, energy_a) = solo(&forest_a, &arrays_a)?;
+                let (want_b, energy_b) = solo(&forest_b, &arrays_b)?;
+
+                // Drive one registry coordinator with the interleaved
+                // two-tenant stream and compare per tenant.
+                let check = |multi: &mut Coordinator, label: &str| -> Result<(), String> {
+                    multi
+                        .load_program("b", bank_specs(&forest_b, &arrays_b), forest_b.trees.len(), 0)
+                        .map_err(|e| format!("{e:#}"))?;
+                    for (i, x) in probes.iter().enumerate() {
+                        // Even ids unpinned (active tenant = boot
+                        // program A), odd ids pinned to "b".
+                        multi.submit(InferenceRequest::new(2 * i as u64, x.clone()));
+                        multi.submit(
+                            InferenceRequest::new(2 * i as u64 + 1, x.clone())
+                                .with_program(Some("b".into())),
+                        );
+                    }
+                    let mut resp = multi.poll(true).map_err(|e| format!("{e:#}"))?;
+                    if resp.len() != 2 * probes.len() {
+                        return Err(format!(
+                            "{label}: {} answers for {} requests",
+                            resp.len(),
+                            2 * probes.len()
+                        ));
+                    }
+                    resp.sort_by_key(|r| r.id);
+                    for (i, r) in resp.iter().enumerate() {
+                        if let Some(e) = &r.error {
+                            return Err(format!("{label}: request {} errored: {e}", r.id));
+                        }
+                        let (want, prog) = if i % 2 == 0 {
+                            (want_a[i / 2], DEFAULT_PROGRAM)
+                        } else {
+                            (want_b[i / 2], "b")
+                        };
+                        if r.program != prog || r.class != want {
+                            return Err(format!(
+                                "{label}: request {} answered {:?} under {:?}, solo says {want:?} under {prog:?}",
+                                r.id, r.class, r.program
+                            ));
+                        }
+                    }
+                    // Per-tenant energy attribution is the solo energy,
+                    // to the last bit.
+                    for (id, solo_energy, want_dec) in [
+                        (DEFAULT_PROGRAM, energy_a, probes.len() as u64),
+                        ("b", energy_b, probes.len() as u64),
+                    ] {
+                        let u = multi
+                            .metrics
+                            .per_program
+                            .iter()
+                            .find(|u| u.id == id)
+                            .ok_or_else(|| format!("{label}: no usage row for {id:?}"))?;
+                        if u.decisions != want_dec {
+                            return Err(format!(
+                                "{label}: {id:?} decisions {} != {want_dec}",
+                                u.decisions
+                            ));
+                        }
+                        if u.modeled_energy.to_bits() != solo_energy.to_bits() {
+                            return Err(format!(
+                                "{label}: {id:?} energy {} != solo {solo_energy}",
+                                u.modeled_energy
+                            ));
+                        }
+                    }
+                    Ok(())
+                };
+
+                let dispatch = registry::create_bank_dispatch(kind, &opts)
+                    .map_err(|e| format!("{e:#}"))?;
+                let mut seq =
+                    Coordinator::with_banks(dispatch, batch, bank_specs(&forest_a, &arrays_a), p.clone())
+                        .map_err(|e| format!("{e:#}"))?;
+                check(&mut seq, "sequential")?;
+
+                let backend = registry::create_pipeline_backend(kind, &opts)
+                    .map_err(|e| format!("{e:#}"))?;
+                let mut piped = Coordinator::with_banks_pipelined(
+                    backend,
+                    batch,
+                    bank_specs(&forest_a, &arrays_a),
+                    p.clone(),
+                    depth,
+                )
+                .map_err(|e| format!("{e:#}"))?;
+                check(&mut piped, "pipelined")?;
+                if piped.in_flight() != 0 {
+                    return Err(format!("{} batches left in flight", piped.in_flight()));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The registry's LRU bound is a *safety* bound: on random tenant
+/// churn it may only ever evict a resident that is neither active nor
+/// holding in-flight requests. An idle inactive tenant is evicted to
+/// make room; when every slot is active or in flight, the load is
+/// refused with the typed full-registry error and the registry is left
+/// exactly as it was.
+#[test]
+fn lru_eviction_never_touches_active_or_in_flight_tenants() {
+    use std::time::Duration;
+    let p = DeviceParams::default();
+    property_r("LRU evicts only idle inactive tenants", 6, |g: &mut Gen| {
+        let n = g.usize_in(40, 100);
+        let f = g.usize_in(2, 4);
+        let classes = g.usize_in(2, 4);
+        let xs = g.matrix(n, f);
+        let ys: Vec<usize> = (0..n).map(|_| g.usize_in(0, classes)).collect();
+        let fp = ForestParams {
+            n_trees: 2,
+            sample_fraction: 0.8,
+            max_features: 0,
+            ..Default::default()
+        };
+        let tenant = |g: &mut Gen| -> (Forest, Vec<MappedArray>) {
+            let forest = train_forest(&xs, &ys, classes, &fp, &mut Prng::new(g.u64()));
+            let arrays = forest
+                .trees
+                .iter()
+                .map(|t| MappedArray::from_lut(&compile(t), 16, &p, &mut Prng::new(g.u64())))
+                .collect();
+            (forest, arrays)
+        };
+        let (boot, boot_arrays) = tenant(g);
+        let (t1, t1_arrays) = tenant(g);
+        let (t2, t2_arrays) = tenant(g);
+        let (t3, t3_arrays) = tenant(g);
+
+        let mut coord = Coordinator::with_banks(
+            registry::create_bank_dispatch(EngineKind::Native, &BackendOptions::default())
+                .map_err(|e| format!("{e:#}"))?,
+            4,
+            bank_specs(&boot, &boot_arrays),
+            p.clone(),
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        coord.set_max_programs(2);
+
+        // Slot 2 of 2: t1 becomes resident next to the active boot
+        // program.
+        coord
+            .load_program("t1", bank_specs(&t1, &t1_arrays), 2, 0)
+            .map_err(|e| format!("{e:#}"))?;
+        // t1 is idle and inactive — loading t2 must evict it, never the
+        // active boot program.
+        coord
+            .load_program("t2", bank_specs(&t2, &t2_arrays), 2, 0)
+            .map_err(|e| format!("{e:#}"))?;
+        let ids: Vec<String> = coord.program_list().iter().map(|s| s.id.clone()).collect();
+        if !ids.contains(&DEFAULT_PROGRAM.to_string()) {
+            return Err(format!("LRU evicted the active program: {ids:?}"));
+        }
+        if ids.contains(&"t1".to_string()) || !ids.contains(&"t2".to_string()) {
+            return Err(format!("expected t1 evicted for t2: {ids:?}"));
+        }
+
+        // Pin a request in flight against t2 (held batch — the batcher
+        // won't release a partial batch for an hour) and try to load
+        // t3: both slots are now untouchable, so the load must be a
+        // typed refusal that leaves the registry unchanged.
+        coord.set_batch_max_wait(Duration::from_secs(3600));
+        let x: Vec<f64> = (0..f).map(|_| g.f64_in(0.0, 1.0)).collect();
+        coord.submit(InferenceRequest::new(0, x).with_program(Some("t2".into())));
+        let err = match coord.load_program("t3", bank_specs(&t3, &t3_arrays), 2, 0) {
+            Err(e) => format!("{e:#}"),
+            Ok(v) => return Err(format!("full registry accepted t3 as v{v}")),
+        };
+        if !err.contains("registry is full") {
+            return Err(format!("untyped refusal: {err}"));
+        }
+        let after: Vec<String> = coord.program_list().iter().map(|s| s.id.clone()).collect();
+        if after != ids {
+            return Err(format!("refused load mutated the registry: {ids:?} -> {after:?}"));
+        }
+
+        // Drain; t2 goes idle (still inactive), so the same load now
+        // lands by evicting it.
+        coord.set_batch_max_wait(Duration::ZERO);
+        let resp = coord.poll(true).map_err(|e| format!("{e:#}"))?;
+        if resp.len() != 1 || resp[0].error.is_some() {
+            return Err(format!("pinned request did not drain clean: {resp:?}"));
+        }
+        coord
+            .load_program("t3", bank_specs(&t3, &t3_arrays), 2, 0)
+            .map_err(|e| format!("{e:#}"))?;
+        let final_ids: Vec<String> =
+            coord.program_list().iter().map(|s| s.id.clone()).collect();
+        if !final_ids.contains(&"t3".to_string())
+            || !final_ids.contains(&DEFAULT_PROGRAM.to_string())
+        {
+            return Err(format!("expected t2 evicted for t3: {final_ids:?}"));
         }
         Ok(())
     });
